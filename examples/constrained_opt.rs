@@ -1,0 +1,59 @@
+//! Constrained optimization (paper §4.4): "less energy as possible, while
+//! inference time is faster than T" via binary search on the linear weight
+//! — needing only pair-wise cost-model accuracy.
+//!
+//! Run: `cargo run --release --example constrained_opt`
+
+use eadgo::cost::CostFunction;
+use eadgo::models::{self, ModelConfig};
+use eadgo::report::f3;
+use eadgo::search::{optimize, optimize_with_time_budget, OptimizerContext, SearchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig { batch: 1, resolution: 224, width_div: 1, classes: 1000 };
+    let graph = models::squeezenet::build(cfg);
+    let scfg = SearchConfig { max_dequeues: 120, ..Default::default() };
+
+    // Establish the two endpoints first (paper: "from Table 4 we know the
+    // lower bound of inference time ... and energy").
+    let mut ctx = OptimizerContext::offline_default();
+    let fastest = optimize(&graph, &mut ctx, &CostFunction::Time, &scfg)?;
+    let thriftiest = optimize(&graph, &mut ctx, &CostFunction::Energy, &scfg)?;
+    println!(
+        "endpoints: fastest {} ms / {} J; thriftiest {} ms / {} J",
+        f3(fastest.cost.time_ms),
+        f3(fastest.cost.energy_j),
+        f3(thriftiest.cost.time_ms),
+        f3(thriftiest.cost.energy_j)
+    );
+
+    // Budget halfway between the endpoints.
+    let budget = 0.5 * (fastest.cost.time_ms + thriftiest.cost.time_ms);
+    println!("\nconstraint: minimize energy s.t. time <= {} ms", f3(budget));
+    let r = optimize_with_time_budget(&graph, &mut ctx, budget, &scfg, 8)?;
+    assert!(r.feasible);
+    println!(
+        "solution at w={:.4}: time {} ms (budget {}), energy {} J/1k",
+        r.weight,
+        f3(r.result.cost.time_ms),
+        f3(budget),
+        f3(r.result.cost.energy_j)
+    );
+    println!("\nbinary-search trace:");
+    println!("  {:>8}  {:>10}  {:>12}", "w", "time_ms", "energy_j/1k");
+    for (w, t, e) in &r.trace {
+        let ok = if *t <= budget { "feasible" } else { "over budget" };
+        println!("  {w:>8.4}  {:>10}  {:>12}  {ok}", f3(*t), f3(*e));
+    }
+
+    // An infeasible budget degrades gracefully to the best-time solution.
+    let impossible = fastest.cost.time_ms * 0.5;
+    let r2 = optimize_with_time_budget(&graph, &mut ctx, impossible, &scfg, 4)?;
+    println!(
+        "\ninfeasible budget {} ms -> feasible={} (falls back to best-time: {} ms)",
+        f3(impossible),
+        r2.feasible,
+        f3(r2.result.cost.time_ms)
+    );
+    Ok(())
+}

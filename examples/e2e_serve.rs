@@ -1,0 +1,119 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//!   1. Build the quickstart CNN graph (L3 graph IR).
+//!   2. Profile it with *real measured wallclock* on this host (CpuProvider
+//!      — the paper's profiling step with a real device, not the sim).
+//!   3. Run the two-level energy-aware search on those real profiles.
+//!   4. Load the AOT JAX/Pallas artifacts (L1/L2, built by `make
+//!      artifacts`) into the PJRT runtime and serve a batch of inference
+//!      requests through the hybrid engine under BOTH the default and the
+//!      optimized algorithm assignment, verifying outputs agree and
+//!      reporting latency/throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_serve`
+
+use eadgo::algo::Assignment;
+use eadgo::cost::CostFunction;
+use eadgo::engine::pjrt::PjrtEngine;
+use eadgo::engine::ReferenceEngine;
+use eadgo::models::{self, ModelConfig};
+use eadgo::profiler::CpuProvider;
+use eadgo::report::f3;
+use eadgo::runtime::Runtime;
+use eadgo::search::{optimize, OptimizerContext, SearchConfig};
+use eadgo::tensor::Tensor;
+use eadgo::util::rng::Rng;
+use eadgo::util::stats::Summary;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args = eadgo::util::cli::Args::from_env(false);
+    let requests = args.get_usize("requests", 32)?;
+    let artifacts = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+
+    // --- L3: graph + real-measurement profiling + search ------------------
+    let cfg = ModelConfig { batch: 1, resolution: 32, width_div: 4, classes: 10 };
+    let graph = models::simple::build_cnn(cfg);
+    println!(
+        "[1/4] graph: quickstart CNN, {} nodes ({} runtime)",
+        graph.len(),
+        graph.runtime_node_count()
+    );
+
+    let mut ctx = OptimizerContext::new(
+        eadgo::subst::RuleSet::standard(),
+        eadgo::cost::CostDb::new(),
+        Box::new(CpuProvider::new(None)),
+    );
+    println!("[2/4] profiling every (node, algorithm) pair with real wallclock...");
+    let res = optimize(
+        &graph,
+        &mut ctx,
+        &CostFunction::Energy,
+        &SearchConfig { max_dequeues: 30, ..Default::default() },
+    )?;
+    println!(
+        "      optimizer: energy {} -> {} mJ-model-units ({:+.1}%), {} profiles measured",
+        f3(res.original.energy_j),
+        f3(res.cost.energy_j),
+        -100.0 * res.energy_savings(),
+        res.stats.profiled
+    );
+
+    // --- L1/L2: AOT artifacts through PJRT --------------------------------
+    if !Path::new(&artifacts).join("manifest.json").exists() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let mut rt = Runtime::cpu()?;
+    let n = rt.load_dir(&artifacts)?;
+    println!("[3/4] PJRT runtime: {} artifacts compiled on `{}`", n, rt.platform());
+
+    // --- serve -------------------------------------------------------------
+    let engine = PjrtEngine::new(&rt);
+    let reference = ReferenceEngine::new();
+    let default_a = Assignment::default_for(&graph, &ctx.reg);
+    let mut rng = Rng::seed_from(2026);
+
+    let mut run_batch = |label: &str, g: &eadgo::graph::Graph, a: &Assignment| -> anyhow::Result<Summary> {
+        // Plan once (constant folding + artifact-key resolution), serve many
+        // times — the §Perf serving-path optimization.
+        let prepared = engine.prepare(g, a)?;
+        let mut lat = Vec::with_capacity(requests);
+        let mut check_done = false;
+        for _ in 0..requests {
+            let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
+            let t0 = std::time::Instant::now();
+            let (out, stats) = engine.run_prepared(g, a, &prepared, std::slice::from_ref(&x))?;
+            lat.push(t0.elapsed().as_secs_f64());
+            if !check_done {
+                // verify against the pure-rust reference once per config
+                let want = reference.run(g, a, std::slice::from_ref(&x))?.outputs.remove(0);
+                eadgo::util::prop::assert_close(want.data(), out.outputs[0].data(), 1e-3, 1e-3)
+                    .map_err(|e| anyhow::anyhow!("hybrid/reference mismatch: {e}"))?;
+                println!(
+                    "      {label}: outputs verified vs reference ({} pjrt / {} fallback nodes)",
+                    stats.pjrt_nodes, stats.reference_nodes
+                );
+                check_done = true;
+            }
+        }
+        Ok(Summary::of(&lat))
+    };
+
+    println!("[4/4] serving {requests} requests per configuration...");
+    let s_default = run_batch("default-assignment", &graph, &default_a)?;
+    let s_opt = run_batch("optimized", &res.graph, &res.assignment)?;
+
+    println!("\n== serving report (batch=1, quickstart CNN, PJRT-hybrid engine) ==");
+    for (label, s) in [("default", &s_default), ("optimized", &s_opt)] {
+        println!(
+            "{label:<10} p50 {:>8} ms   p95 {:>8} ms   mean {:>8} ms   throughput {:>7.1} req/s",
+            f3(s.p50 * 1e3),
+            f3(s.p95 * 1e3),
+            f3(s.mean * 1e3),
+            1.0 / s.mean
+        );
+    }
+    println!("\ne2e OK: L3 search (real profiles) + L2/L1 AOT Pallas artifacts + PJRT serving");
+    Ok(())
+}

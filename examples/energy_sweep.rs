@@ -1,0 +1,46 @@
+//! Energy/time tradeoff sweep (the paper's Table 4 scenario, §4.4):
+//! sweep the linear weight w from pure-time to pure-energy and print the
+//! frontier, demonstrating "users are able to balance inference time and
+//! energy at their preference".
+//!
+//! Run: `cargo run --release --example energy_sweep [-- --model resnet]`
+
+use eadgo::cost::CostFunction;
+use eadgo::models::{self, ModelConfig};
+use eadgo::report::{f3, Table};
+use eadgo::search::{optimize, OptimizerContext, SearchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args = eadgo::util::cli::Args::from_env(false);
+    let model = args.get_or("model", "squeezenet").to_string();
+    let cfg = ModelConfig { batch: 1, resolution: 224, width_div: 1, classes: 1000 };
+    let graph = models::by_name(&model, cfg)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let scfg = SearchConfig { max_dequeues: 120, ..Default::default() };
+
+    let mut t = Table::new(
+        &format!("energy/time frontier — {model} (sim-V100)"),
+        &["w(energy)", "time_ms", "power_w", "energy_j/1k", "Δtime vs fastest", "Δenergy vs thriftiest"],
+    );
+    let mut rows = Vec::new();
+    for we in [0.0, 0.2, 0.4, 0.6, 0.8, 1.0] {
+        let mut ctx = OptimizerContext::offline_default();
+        let res = optimize(&graph, &mut ctx, &CostFunction::linear(we), &scfg)?;
+        rows.push((we, res.cost));
+        eprintln!("  w={we:.1} done ({} graphs expanded)", res.stats.expanded);
+    }
+    let t_min = rows.iter().map(|(_, c)| c.time_ms).fold(f64::INFINITY, f64::min);
+    let e_min = rows.iter().map(|(_, c)| c.energy_j).fold(f64::INFINITY, f64::min);
+    for (we, c) in &rows {
+        t.row(vec![
+            format!("{we:.1}"),
+            f3(c.time_ms),
+            f3(c.power_w()),
+            f3(c.energy_j),
+            format!("{:+.1}%", 100.0 * (c.time_ms / t_min - 1.0)),
+            format!("{:+.1}%", 100.0 * (c.energy_j / e_min - 1.0)),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

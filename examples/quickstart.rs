@@ -1,0 +1,58 @@
+//! Quickstart: optimize SqueezeNet for energy and print the savings —
+//! the 60-second tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use eadgo::cost::CostFunction;
+use eadgo::models::{self, ModelConfig};
+use eadgo::report::f3;
+use eadgo::search::{optimize, OptimizerContext, SearchConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A computation graph (nodes = operators, edges = tensors).
+    let cfg = ModelConfig { batch: 1, resolution: 224, width_div: 1, classes: 1000 };
+    let graph = models::squeezenet::build(cfg);
+    println!("SqueezeNet: {} nodes ({} runtime)", graph.len(), graph.runtime_node_count());
+
+    // 2. An optimizer context: algorithm registry + substitution rules +
+    //    cost database + the simulated-V100 measurement provider.
+    let mut ctx = OptimizerContext::offline_default();
+
+    // 3. Pick an objective (paper §3.2) and search (paper §3.3).
+    let objective = CostFunction::Energy;
+    let result = optimize(&graph, &mut ctx, &objective, &SearchConfig::default())?;
+
+    println!("\n              time(ms)  power(W)  energy(J/1k inf)");
+    println!(
+        "origin        {:>8}  {:>8}  {:>8}",
+        f3(result.original.time_ms),
+        f3(result.original.power_w()),
+        f3(result.original.energy_j)
+    );
+    println!(
+        "optimized     {:>8}  {:>8}  {:>8}",
+        f3(result.cost.time_ms),
+        f3(result.cost.power_w()),
+        f3(result.cost.energy_j)
+    );
+    println!(
+        "\nenergy saved: {:.1}%  (time {:+.1}%)",
+        100.0 * result.energy_savings(),
+        -100.0 * result.time_savings()
+    );
+    println!(
+        "search: expanded {} graphs, generated {}, deduped {}, {:.2}s",
+        result.stats.expanded, result.stats.generated, result.stats.deduped, result.stats.wall_s
+    );
+
+    // 4. The optimized graph + assignment are ready for the engine:
+    let changed = result
+        .assignment
+        .assigned_ids()
+        .filter(|id| {
+            result.graph.node(*id).op.mnemonic() == "conv2d"
+        })
+        .count();
+    println!("optimized graph has {changed} convolutions with tuned algorithm assignments");
+    Ok(())
+}

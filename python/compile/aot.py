@@ -1,0 +1,169 @@
+"""AOT compiler: lowers the L1/L2 JAX+Pallas computations to HLO **text**
+artifacts + manifest.json, consumed by the rust PJRT runtime.
+
+Run once via ``make artifacts``; never imported at inference time.
+
+Interchange format is HLO text, NOT ``lowered.compile()`` /
+``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, opset
+from .kernels import ref
+from .kernels.pallas_conv import conv_direct, conv_im2col, conv_winograd
+from .kernels.pallas_matmul import matmul as pallas_matmul
+
+
+def to_hlo_text(fn, example_args):
+    """Lower a jax-jittable fn to HLO text (return_tuple=True: the rust
+    side always untuples)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_args(shapes):
+    return [jax.ShapeDtypeStruct(tuple(s), jnp.float32) for s in shapes]
+
+
+def conv_fn(algo, spec: opset.ConvSpec):
+    stride, pad, bias = spec.stride, spec.pad, spec.bias
+
+    def fn(x, w, *rest):
+        b = rest[0] if bias else None
+        if algo == "direct":
+            y = conv_direct(x, w, bias=b, stride=stride, pad=pad)
+        elif algo == "im2col":
+            y = conv_im2col(x, w, bias=b, stride=stride, pad=pad)
+        elif algo == "winograd":
+            y = conv_winograd(x, w, bias=b, pad=pad)
+        elif algo == "1x1gemm":
+            y = model.conv_by_algo("1x1gemm", x, w, b, stride, pad)
+        else:
+            raise ValueError(algo)
+        return (y,)
+
+    return fn
+
+
+def simple_fn(spec: opset.SimpleSpec, algo: str):
+    m = spec.mnemonic
+    if m == "relu":
+        return lambda x: (ref.relu_ref(x),)
+    if m == "maxpool":
+        k, st, pd = spec.attrs["k"], spec.attrs["stride"], spec.attrs["pad"]
+        return lambda x: (ref.maxpool_ref(x, k, st, pd),)
+    if m == "avgpool":
+        k, st, pd = spec.attrs["k"], spec.attrs["stride"], spec.attrs["pad"]
+        return lambda x: (ref.avgpool_ref(x, k, st, pd),)
+    if m == "concat":
+        axis = spec.attrs.get("axis", 1)
+        return lambda *xs: (jnp.concatenate(xs, axis=axis),)
+    if m == "gavgpool":
+        return lambda x: (ref.global_avgpool_ref(x),)
+    if m == "flatten":
+        return lambda x: (x.reshape(x.shape[0], -1),)
+    if m == "matmul":
+        if algo == "gemm_blocked":
+            return lambda a, b: (pallas_matmul(a, b),)
+        return lambda a, b: (ref.matmul_ref(a, b),)
+    if m == "softmax":
+        return lambda x: (ref.softmax_ref(x),)
+    raise ValueError(f"no lowering for {m}")
+
+
+def build_artifacts(out_dir, batch=1, resolution=32, classes=10, verbose=True):
+    """Build the full artifact suite; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    counter = 0
+
+    def emit(key, fn, in_shapes, out_shapes, kernel):
+        nonlocal counter
+        fname = f"k{counter:03d}.hlo.txt"
+        counter += 1
+        text = to_hlo_text(fn, spec_args(in_shapes))
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "key": key,
+                "file": fname,
+                "inputs": [list(s) for s in in_shapes],
+                "outputs": [list(s) for s in out_shapes],
+                "kernel": kernel,
+            }
+        )
+        if verbose:
+            print(f"  {fname}  {key}")
+
+    convs, simples = opset.quickstart_opset(batch, resolution, classes)
+    for spec in convs:
+        sig = spec.signature()
+        in_shapes = [spec.x_shape, spec.w_shape] + ([(spec.w_shape[0],)] if spec.bias else [])
+        for algo in spec.algorithms():
+            emit(
+                f"{sig}::{algo}",
+                conv_fn(algo, spec),
+                in_shapes,
+                [spec.out_shape()],
+                f"pallas_{algo}",
+            )
+    for spec in simples:
+        sig = spec.signature()
+        for algo in spec.algorithms():
+            kernel = "pallas_matmul" if (spec.mnemonic, algo) == ("matmul", "gemm_blocked") else "jnp"
+            emit(f"{sig}::{algo}", simple_fn(spec, algo), spec.in_shapes, spec.out_shapes, kernel)
+
+    # Whole-model artifacts, one per conv algorithm (the L2 deliverable).
+    x_shape = (batch, 3, resolution, resolution)
+    w_shapes = [s for (_, s) in model.WEIGHT_SPECS]
+    for algo in ["im2col", "direct", "winograd"]:
+        fn = lambda x, *w, _a=algo: (model.forward(x, *w, algo=_a),)
+        emit(
+            f"model_fwd::{algo}",
+            fn,
+            [x_shape] + w_shapes,
+            [(batch, classes)],
+            f"pallas_{algo}+jnp",
+        )
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--resolution", type=int, default=32)
+    ap.add_argument("--classes", type=int, default=10)
+    args = ap.parse_args()
+    out_dir = args.out
+    # `--out path/model.hlo.txt` (legacy Makefile target) -> use its dir
+    if out_dir.endswith(".hlo.txt"):
+        out_dir = os.path.dirname(out_dir) or "."
+    manifest = build_artifacts(out_dir, args.batch, args.resolution, args.classes)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

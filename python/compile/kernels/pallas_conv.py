@@ -1,0 +1,296 @@
+"""Convolution algorithms as Pallas kernels — the paper's per-node
+"algorithms" (cuDNN analogues) implemented for real:
+
+- ``conv_direct``  — sliding-window accumulation (cuDNN IMPLICIT_GEMM-ish).
+- ``conv_im2col``  — Pallas im2col unfold + the tiled Pallas GEMM
+  (cuDNN GEMM): more memory traffic, better MXU utilization.
+- ``conv_winograd``— F(2x2, 3x3) transform-space convolution (cuDNN
+  WINOGRAD): 2.25x fewer multiplies; 3x3 stride-1 only.
+
+All kernels take NCHW activations and KCRS filters and are validated
+against ``ref.conv2d_ref`` by python/tests/test_kernels.py (hypothesis
+sweeps shapes, strides, and padding).
+
+TPU mapping notes (DESIGN.md §Hardware-Adaptation): the grid dimensions
+(n, k) tile the output across programs so each program's working set — one
+input image slab plus one filter — fits VMEM; the im2col path feeds dense
+128x128 MXU tiles via pallas_matmul. interpret=True throughout (CPU PJRT
+cannot execute Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pallas_matmul import matmul as pallas_matmul
+
+
+def _out_dim(h, r, s, p):
+    return (h + 2 * p - r) // s + 1
+
+
+def _epilogue(y, bias, residual, relu):
+    if bias is not None:
+        y = y + bias[None, :, None, None]
+    if residual is not None:
+        y = y + residual
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Direct convolution
+# ---------------------------------------------------------------------------
+
+
+def _direct_kernel(x_ref, w_ref, o_ref, *, rr, ss, sh, sw, oh, ow):
+    # x_ref: [1, C, Hp, Wp] (one image, pre-padded); w_ref: [1, C, R, S]
+    # (one filter); o_ref: [1, 1, OH, OW].
+    x = x_ref[0]  # [C, Hp, Wp]
+    w = w_ref[0]  # [C, R, S]
+    acc = jnp.zeros((oh, ow), dtype=jnp.float32)
+    for r in range(rr):
+        for s in range(ss):
+            # strided receptive-field slab for this tap: [C, OH, OW]
+            slab = x[:, r : r + (oh - 1) * sh + 1 : sh, s : s + (ow - 1) * sw + 1 : sw]
+            acc = acc + jnp.sum(slab * w[:, r, s][:, None, None], axis=0)
+    o_ref[0, 0] = acc
+
+
+def conv_direct(x, w, bias=None, stride=(1, 1), pad=(0, 0), residual=None, relu=False, interpret=True):
+    """Direct convolution; grid = (N, K), one output plane per program."""
+    n, c, h, wd = x.shape
+    k, c2, r, s = w.shape
+    assert c == c2
+    sh, sw = stride
+    ph, pw = pad
+    oh, ow = _out_dim(h, r, sh, ph), _out_dim(wd, s, sw, pw)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    hp, wp = h + 2 * ph, wd + 2 * pw
+
+    kernel = functools.partial(_direct_kernel, rr=r, ss=s, sh=sh, sw=sw, oh=oh, ow=ow)
+    y = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, k, oh, ow), jnp.float32),
+        grid=(n, k),
+        in_specs=[
+            pl.BlockSpec((1, c, hp, wp), lambda ni, ki: (ni, 0, 0, 0)),
+            pl.BlockSpec((1, c, r, s), lambda ni, ki: (ki, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, oh, ow), lambda ni, ki: (ni, ki, 0, 0)),
+        interpret=interpret,
+    )(xp, w)
+    return _epilogue(y, bias, residual, relu)
+
+
+# ---------------------------------------------------------------------------
+# im2col + GEMM convolution
+# ---------------------------------------------------------------------------
+
+
+def _im2col_kernel(x_ref, o_ref, *, c, rr, ss, sh, sw, oh, ow):
+    # x_ref: [1, C, Hp, Wp]; o_ref: [1, C*R*S, OH*OW]
+    x = x_ref[0]
+    for r in range(rr):
+        for s in range(ss):
+            slab = x[:, r : r + (oh - 1) * sh + 1 : sh, s : s + (ow - 1) * sw + 1 : sw]
+            # rows for tap (r, s) of every channel: row = (ci*R + r)*S + s
+            row0 = r * ss + s
+            o_ref[0, row0 :: rr * ss, :] = slab.reshape(c, oh * ow)
+
+
+def im2col(x, r, s, stride=(1, 1), pad=(0, 0), interpret=True):
+    """Pallas im2col: [N, C, H, W] -> [N, C*R*S, OH*OW]."""
+    n, c, h, wd = x.shape
+    sh, sw = stride
+    ph, pw = pad
+    oh, ow = _out_dim(h, r, sh, ph), _out_dim(wd, s, sw, pw)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    hp, wp = h + 2 * ph, wd + 2 * pw
+    kernel = functools.partial(_im2col_kernel, c=c, rr=r, ss=s, sh=sh, sw=sw, oh=oh, ow=ow)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, c * r * s, oh * ow), jnp.float32),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, c, hp, wp), lambda ni: (ni, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c * r * s, oh * ow), lambda ni: (ni, 0, 0)),
+        interpret=interpret,
+    )(xp)
+
+
+def conv_im2col(x, w, bias=None, stride=(1, 1), pad=(0, 0), residual=None, relu=False, interpret=True):
+    """im2col unfold (Pallas) + tiled GEMM (Pallas)."""
+    n = x.shape[0]
+    k, c, r, s = w.shape
+    oh = _out_dim(x.shape[2], r, stride[0], pad[0])
+    ow = _out_dim(x.shape[3], s, stride[1], pad[1])
+    cols = im2col(x, r, s, stride, pad, interpret=interpret)  # [N, CRS, OHOW]
+    wmat = w.reshape(k, c * r * s)
+    planes = [
+        pallas_matmul(wmat, cols[ni], interpret=interpret) for ni in range(n)
+    ]  # each [K, OH*OW]
+    y = jnp.stack(planes, axis=0).reshape(n, k, oh, ow)
+    return _epilogue(y, bias, residual, relu)
+
+
+# ---------------------------------------------------------------------------
+# Winograd F(2x2, 3x3)
+# ---------------------------------------------------------------------------
+
+
+def transform_filter(w):
+    """G g Gᵀ for all filters: [K, C, 3, 3] -> [K, C, 4, 4] (weight-space,
+    computed once at AOT time).
+
+    Written as unrolled scalar arithmetic instead of an einsum against a
+    dense constant G: xla_extension 0.5.1's HLO *text parser* silently
+    mis-parses dense f32 array constants (only scalar constants round-trip),
+    so AOT-path code must never embed matrix literals. See DESIGN.md
+    §Gotchas and python/tests/test_aot.py::test_no_dense_constants.
+    """
+    # t = G g  (rows):  [K, C, 3] each
+    g0, g1, g2 = w[:, :, 0, :], w[:, :, 1, :], w[:, :, 2, :]
+    trows = (g0, 0.5 * (g0 + g1 + g2), 0.5 * (g0 - g1 + g2), g2)
+    # u = t Gᵀ (columns): [K, C, 4] each row
+    rows = []
+    for t in trows:
+        a, b, c = t[..., 0], t[..., 1], t[..., 2]
+        rows.append(jnp.stack([a, 0.5 * (a + b + c), 0.5 * (a - b + c), c], axis=-1))
+    return jnp.stack(rows, axis=2)  # [K, C, 4, 4]
+
+
+def _winograd_kernel(x_ref, uf_ref, o_ref, *, c, k, ty, tx, oh, ow):
+    # x_ref: [1, C, Hp, Wp] padded so that Hp >= 2*ty + 2, Wp >= 2*tx + 2.
+    # uf_ref: [K, C, 4, 4] transformed filters. o_ref: [1, K, OH2, OW2]
+    # (OH2 = 2*ty, OW2 = 2*tx; wrapper slices to the true OH, OW).
+    x = x_ref[0]
+    uf = uf_ref[...]
+
+    # Gather the 16 strided slabs d[dy][dx]: [C, TY, TX].
+    d = [
+        [x[:, dy : dy + 2 * ty : 2, dx : dx + 2 * tx : 2] for dx in range(4)]
+        for dy in range(4)
+    ]
+    # Input transform u = Bᵀ d B (elementwise over [C, TY, TX]).
+    bt0 = [d[0][j] - d[2][j] for j in range(4)]
+    bt1 = [d[1][j] + d[2][j] for j in range(4)]
+    bt2 = [d[2][j] - d[1][j] for j in range(4)]
+    bt3 = [d[1][j] - d[3][j] for j in range(4)]
+    bt = [bt0, bt1, bt2, bt3]
+    u = [[None] * 4 for _ in range(4)]
+    for i in range(4):
+        u[i][0] = bt[i][0] - bt[i][2]
+        u[i][1] = bt[i][1] + bt[i][2]
+        u[i][2] = bt[i][2] - bt[i][1]
+        u[i][3] = bt[i][1] - bt[i][3]
+
+    # Elementwise multiply-accumulate over channels in transform space:
+    # m[k][i][j][TY,TX] = sum_c uf[k,c,i,j] * u[i][j][c]  — einsum per (i,j).
+    planes = []
+    for i in range(4):
+        for j in range(4):
+            # [K, TY, TX] = [K, C] x [C, TY, TX]
+            planes.append(jnp.einsum("kc,cyx->kyx", uf[:, :, i, j], u[i][j]))
+    m = [[planes[i * 4 + j] for j in range(4)] for i in range(4)]
+
+    # Output transform y = Aᵀ m A: [K, TY, TX] per output tap (2x2).
+    at0 = [m[0][j] + m[1][j] + m[2][j] for j in range(4)]
+    at1 = [m[1][j] - m[2][j] - m[3][j] for j in range(4)]
+    y00 = at0[0] + at0[1] + at0[2]
+    y01 = at0[1] - at0[2] - at0[3]
+    y10 = at1[0] + at1[1] + at1[2]
+    y11 = at1[1] - at1[2] - at1[3]
+
+    # Interleave 2x2 taps back into [K, 2*TY, 2*TX].
+    top = jnp.stack([y00, y01], axis=-1).reshape(k, ty, 2 * tx)
+    bot = jnp.stack([y10, y11], axis=-1).reshape(k, ty, 2 * tx)
+    out = jnp.stack([top, bot], axis=2).reshape(k, 2 * ty, 2 * tx)
+    o_ref[0] = out
+
+
+def conv_winograd(x, w, bias=None, pad=(1, 1), residual=None, relu=False, interpret=True):
+    """Winograd F(2x2,3x3); requires 3x3 filters, stride 1."""
+    n, c, h, wd = x.shape
+    k, c2, r, s = w.shape
+    assert (r, s) == (3, 3), "winograd requires 3x3"
+    assert c == c2
+    ph, pw = pad
+    oh, ow = _out_dim(h, 3, 1, ph), _out_dim(wd, 3, 1, pw)
+    ty, tx = (oh + 1) // 2, (ow + 1) // 2
+    # Pad so every 4x4 input tile is in-bounds: need 2*ty + 2 rows.
+    hp_need, wp_need = 2 * ty + 2, 2 * tx + 2
+    xp = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (0, 0),
+            (ph, max(0, hp_need - h - ph)),
+            (pw, max(0, wp_need - wd - pw)),
+        ),
+    )
+    uf = transform_filter(w)
+    kernel = functools.partial(_winograd_kernel, c=c, k=k, ty=ty, tx=tx, oh=oh, ow=ow)
+    y = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, k, 2 * ty, 2 * tx), jnp.float32),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, c, xp.shape[2], xp.shape[3]), lambda ni: (ni, 0, 0, 0)),
+            pl.BlockSpec((k, c, 4, 4), lambda ni: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k, 2 * ty, 2 * tx), lambda ni: (ni, 0, 0, 0)),
+        interpret=interpret,
+    )(xp, uf)
+    y = y[:, :, :oh, :ow]
+    return _epilogue(y, bias, residual, relu)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise convolution
+# ---------------------------------------------------------------------------
+
+
+def _dw_kernel(x_ref, w_ref, o_ref, *, rr, ss, sh, sw, oh, ow):
+    # x_ref: [1, 1, Hp, Wp] (one image, one channel, pre-padded);
+    # w_ref: [1, 1, R, S]; o_ref: [1, 1, OH, OW].
+    x = x_ref[0, 0]
+    w = w_ref[0, 0]
+    acc = jnp.zeros((oh, ow), dtype=jnp.float32)
+    for r in range(rr):
+        for s in range(ss):
+            slab = x[r : r + (oh - 1) * sh + 1 : sh, s : s + (ow - 1) * sw + 1 : sw]
+            acc = acc + slab * w[r, s]
+    o_ref[0, 0] = acc
+
+
+def dwconv_direct(x, w, bias=None, stride=(1, 1), pad=(0, 0), relu=False, interpret=True):
+    """Depthwise conv as a Pallas kernel; grid = (N, C), one plane per
+    program (each channel is independent — the MobileNet hot spot)."""
+    n, c, h, wd = x.shape
+    wc, mult, r, s = w.shape
+    assert wc == c and mult == 1, "depthwise weight must be [C,1,R,S]"
+    sh, sw = stride
+    ph, pw = pad
+    oh, ow = _out_dim(h, r, sh, ph), _out_dim(wd, s, sw, pw)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    hp, wp = h + 2 * ph, wd + 2 * pw
+    kernel = functools.partial(_dw_kernel, rr=r, ss=s, sh=sh, sw=sw, oh=oh, ow=ow)
+    y = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, c, oh, ow), jnp.float32),
+        grid=(n, c),
+        in_specs=[
+            pl.BlockSpec((1, 1, hp, wp), lambda ni, ci: (ni, ci, 0, 0)),
+            pl.BlockSpec((1, 1, r, s), lambda ni, ci: (ci, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, oh, ow), lambda ni, ci: (ni, ci, 0, 0)),
+        interpret=interpret,
+    )(xp, w)
+    if bias is not None:
+        y = y + bias[None, :, None, None]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y

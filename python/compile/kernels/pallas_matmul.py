@@ -1,0 +1,63 @@
+"""Tiled matmul as a Pallas kernel (the GEMM that backs `gemm_blocked` and
+the im2col convolution's contraction).
+
+TPU-idiomatic structure: the grid walks (M/tm, N/tn, K/tk) tiles, each
+program multiplies one (tm x tk) x (tk x tn) pair on the MXU and
+accumulates into the output tile resident in VMEM. Default tiles are
+128x128 (the MXU systolic array edge); callers with smaller operands get
+clipped tiles.
+
+Lowered with interpret=True — real-TPU Mosaic lowering is compile-only on
+this host (see DESIGN.md §Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_div(a, b):
+    return (a + b - 1) // b
+
+
+def matmul(a, b, tile_m=128, tile_n=128, tile_k=128, interpret=True):
+    """C[M,N] = A[M,K] @ B[K,N] via a tiled Pallas kernel.
+
+    Operands with dimensions that are not tile multiples are zero-padded to
+    the tile grid and the result sliced back — the standard TPU approach
+    (pad once in HBM, keep the MXU tiles dense).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul inner dim mismatch {k} vs {k2}"
+    tm = min(tile_m, m)
+    tn = min(tile_n, n)
+    tk = min(tile_k, k)
+    mp, np_, kp = _ceil_div(m, tm) * tm, _ceil_div(n, tn) * tn, _ceil_div(k, tk) * tk
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // tm, np_ // tn, kp // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]

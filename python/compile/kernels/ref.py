@@ -1,0 +1,131 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth every kernel in this package is validated
+against (pytest + hypothesis in python/tests/). They intentionally use
+only high-level jax.numpy / lax primitives.
+
+Layout conventions match the rust engine: NCHW activations, KCRS filters.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(x, w, bias=None, stride=(1, 1), pad=(0, 0), residual=None, relu=False):
+    """Direct 2-D convolution oracle.
+
+    x: [N, C, H, W]; w: [K, C, R, S]; bias: [K] or None.
+    residual: same shape as output, added pre-activation.
+    """
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=stride,
+        padding=[(pad[0], pad[0]), (pad[1], pad[1])],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    if bias is not None:
+        y = y + bias[None, :, None, None]
+    if residual is not None:
+        y = y + residual
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def dwconv2d_ref(x, w, bias=None, stride=(1, 1), pad=(0, 0), relu=False):
+    """Depthwise convolution oracle: x [N,C,H,W], w [C,1,R,S]."""
+    c = x.shape[1]
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=stride,
+        padding=[(pad[0], pad[0]), (pad[1], pad[1])],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c,
+    )
+    if bias is not None:
+        y = y + bias[None, :, None, None]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def matmul_ref(a, b):
+    """[M, K] @ [K, N] oracle."""
+    return jnp.matmul(a, b)
+
+
+def relu_ref(x):
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool_ref(x, k=(2, 2), stride=(2, 2), pad=(0, 0)):
+    """Max pooling oracle (padding cells are -inf, never selected)."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 1, k[0], k[1]),
+        window_strides=(1, 1, stride[0], stride[1]),
+        padding=((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])),
+    )
+
+
+def avgpool_ref(x, k=(3, 3), stride=(1, 1), pad=(1, 1)):
+    """Average pooling, divisor counts only in-bounds cells (matches the
+    rust engine and cuDNN's COUNT_EXCLUDE_PADDING)."""
+    ones = jnp.ones_like(x)
+    window = dict(
+        window_dimensions=(1, 1, k[0], k[1]),
+        window_strides=(1, 1, stride[0], stride[1]),
+        padding=((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])),
+    )
+    s = lax.reduce_window(x, 0.0, lax.add, **window)
+    n = lax.reduce_window(ones, 0.0, lax.add, **window)
+    return s / n
+
+
+def global_avgpool_ref(x):
+    return jnp.mean(x, axis=(2, 3), keepdims=True)
+
+
+def softmax_ref(x):
+    """Row-wise softmax over the last axis of a rank-2 tensor."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def im2col_ref(x, r, s, stride=(1, 1), pad=(0, 0)):
+    """Unfold patches: [N, C, H, W] -> [N, C*R*S, OH*OW] (matches the rust
+    tensor::conv::im2col layout per image)."""
+    n, c, h, w = x.shape
+    ph, pw = pad
+    sh, sw = stride
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    oh = (h + 2 * ph - r) // sh + 1
+    ow = (w + 2 * pw - s) // sw + 1
+    cols = []
+    for ry in range(r):
+        for sx in range(s):
+            patch = xp[:, :, ry : ry + oh * sh : sh, sx : sx + ow * sw : sw]
+            cols.append(patch.reshape(n, c, oh * ow))
+    stacked = jnp.stack(cols, axis=2)  # [N, C, R*S, OH*OW]
+    return stacked.reshape(n, c * r * s, oh * ow)
+
+
+def conv2d_im2col_ref(x, w, bias=None, stride=(1, 1), pad=(0, 0)):
+    """Convolution via im2col + matmul (same math as conv2d_ref)."""
+    n = x.shape[0]
+    k, c, r, s = w.shape
+    cols = im2col_ref(x, r, s, stride, pad)  # [N, C*R*S, OH*OW]
+    wmat = w.reshape(k, c * r * s)
+    y = jnp.einsum("kp,npq->nkq", wmat, cols)
+    h, wd = x.shape[2], x.shape[3]
+    oh = (h + 2 * pad[0] - r) // stride[0] + 1
+    ow = (wd + 2 * pad[1] - s) // stride[1] + 1
+    y = y.reshape(n, k, oh, ow)
+    if bias is not None:
+        y = y + bias[None, :, None, None]
+    return y

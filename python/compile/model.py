@@ -1,0 +1,95 @@
+"""L2: the quickstart CNN forward pass in JAX, composed from the L1 Pallas
+kernels. Lowered once by aot.py into a single whole-model artifact
+(``model_fwd``) whose weights are *call arguments* — the rust side feeds
+its deterministically-realized weights at execution time, so no RNG scheme
+needs to be shared across languages.
+
+Architecture (mirrors rust/src/models/simple.rs::build_cnn):
+    stem conv3x3(3->8)+relu
+    -> [branch 1x1(8->8)+relu || branch 3x3(8->8)+relu] -> concat
+    -> maxpool2x2 -> conv3x3(16->16)+relu -> GAP -> FC -> softmax
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.pallas_conv import conv_direct, conv_im2col, conv_winograd
+from .kernels.pallas_matmul import matmul as pallas_matmul
+
+#: (name, shape) of every weight, in call order after the input tensor.
+WEIGHT_SPECS = [
+    ("stem_w", (8, 3, 3, 3)),
+    ("stem_b", (8,)),
+    ("branch1x1_w", (8, 8, 1, 1)),
+    ("branch1x1_b", (8,)),
+    ("branch3x3_w", (8, 8, 3, 3)),
+    ("branch3x3_b", (8,)),
+    ("conv2_w", (16, 16, 3, 3)),
+    ("conv2_b", (16,)),
+    ("fc_w", (16, 10)),
+]
+
+
+def conv_by_algo(algo, x, w, bias, stride, pad):
+    """Dispatch to the Pallas kernel implementing `algo` (paper §3.1:
+    the algorithm assignment decides which implementation runs)."""
+    if algo == "direct":
+        return conv_direct(x, w, bias=bias, stride=stride, pad=pad)
+    if algo == "im2col":
+        return conv_im2col(x, w, bias=bias, stride=stride, pad=pad)
+    if algo == "winograd":
+        assert stride == (1, 1) and w.shape[2:] == (3, 3)
+        return conv_winograd(x, w, bias=bias, pad=pad)
+    if algo == "1x1gemm":
+        assert w.shape[2:] == (1, 1) and pad == (0, 0)
+        n, c, h, wd = x.shape
+        k = w.shape[0]
+        if stride != (1, 1):
+            x = x[:, :, :: stride[0], :: stride[1]]
+            n, c, h, wd = x.shape
+        wmat = w.reshape(k, c)
+        planes = [pallas_matmul(wmat, x[ni].reshape(c, h * wd)) for ni in range(n)]
+        y = jnp.stack(planes, axis=0).reshape(n, k, h, wd)
+        return y + bias[None, :, None, None] if bias is not None else y
+    raise ValueError(f"unknown conv algorithm {algo}")
+
+
+def forward(x, *weights, algo="im2col"):
+    """Quickstart CNN forward. `algo` selects the convolution kernel used
+    for every conv (the whole-model artifact is built per algorithm)."""
+    (stem_w, stem_b, b1_w, b1_b, b3_w, b3_b, c2_w, c2_b, fc_w) = weights
+    # For non-universally-applicable algorithms fall back per node the same
+    # way the rust registry would (winograd only on 3x3 s1; 1x1gemm on 1x1).
+    def conv(x, w, b, stride, pad):
+        a = algo
+        r, s = w.shape[2], w.shape[3]
+        if a == "winograd" and not ((r, s) == (3, 3) and stride == (1, 1)):
+            a = "im2col"
+        if a == "1x1gemm" and not ((r, s) == (1, 1) and pad == (0, 0)):
+            a = "im2col"
+        return conv_by_algo(a, x, w, b, stride, pad)
+
+    y = ref.relu_ref(conv(x, stem_w, stem_b, (1, 1), (1, 1)))
+    e1 = ref.relu_ref(conv(y, b1_w, b1_b, (1, 1), (0, 0)))
+    e3 = ref.relu_ref(conv(y, b3_w, b3_b, (1, 1), (1, 1)))
+    cat = jnp.concatenate([e1, e3], axis=1)
+    p = ref.maxpool_ref(cat, (2, 2), (2, 2), (0, 0))
+    c2 = ref.relu_ref(conv(p, c2_w, c2_b, (1, 1), (1, 1)))
+    gap = ref.global_avgpool_ref(c2)
+    flat = gap.reshape(gap.shape[0], -1)
+    logits = pallas_matmul(flat, fc_w)
+    return ref.softmax_ref(logits)
+
+
+def forward_ref(x, *weights):
+    """Same network through the pure-jnp oracles only (pytest ground truth)."""
+    (stem_w, stem_b, b1_w, b1_b, b3_w, b3_b, c2_w, c2_b, fc_w) = weights
+    y = ref.conv2d_ref(x, stem_w, stem_b, (1, 1), (1, 1), relu=True)
+    e1 = ref.conv2d_ref(y, b1_w, b1_b, (1, 1), (0, 0), relu=True)
+    e3 = ref.conv2d_ref(y, b3_w, b3_b, (1, 1), (1, 1), relu=True)
+    cat = jnp.concatenate([e1, e3], axis=1)
+    p = ref.maxpool_ref(cat, (2, 2), (2, 2), (0, 0))
+    c2 = ref.conv2d_ref(p, c2_w, c2_b, (1, 1), (1, 1), relu=True)
+    gap = ref.global_avgpool_ref(c2)
+    flat = gap.reshape(gap.shape[0], -1)
+    return ref.softmax_ref(ref.matmul_ref(flat, fc_w))

@@ -1,0 +1,154 @@
+"""The AOT operator set: which (node signature, algorithm) artifacts to
+build, keyed exactly the way the rust engine looks them up.
+
+``signature()`` mirrors ``rust/src/graph/op.rs::OpKind::signature`` — the
+two must stay in lock-step (python/tests/test_opset.py pins golden strings
+that the rust side pins too, in rust/tests/integration_runtime.rs).
+"""
+
+from dataclasses import dataclass, field
+
+
+def _shape_str(shape):
+    return "x".join(str(d) for d in shape)
+
+
+def conv2d_signature(x_shape, w_shape, stride, pad, act="none", bias=False, residual=False, extra_shapes=()):
+    """Mirror of OpKind::Conv2d signature()."""
+    parts = [
+        "conv2d",
+        f"st={stride[0]},{stride[1]}",
+        f"pad={pad[0]},{pad[1]}",
+        f"act={act}",
+        f"b={int(bias)}",
+        f"res={int(residual)}",
+        _shape_str(x_shape),
+        _shape_str(w_shape),
+    ]
+    parts.extend(_shape_str(s) for s in extra_shapes)
+    return ";".join(parts)
+
+
+def simple_signature(mnemonic, *shapes):
+    """Mirror of the attribute-free ops (relu, matmul, gavgpool, ...)."""
+    return ";".join([mnemonic] + [_shape_str(s) for s in shapes])
+
+
+def pool_signature(mnemonic, k, stride, pad, x_shape):
+    return ";".join(
+        [
+            mnemonic,
+            f"k={k[0]},{k[1]}",
+            f"st={stride[0]},{stride[1]}",
+            f"pad={pad[0]},{pad[1]}",
+            _shape_str(x_shape),
+        ]
+    )
+
+
+@dataclass
+class ConvSpec:
+    """One convolution configuration to compile, under every applicable
+    algorithm (the applicability rules mirror rust/src/algo)."""
+
+    name: str
+    x_shape: tuple
+    w_shape: tuple
+    stride: tuple = (1, 1)
+    pad: tuple = (0, 0)
+    bias: bool = True
+    act: str = "none"
+
+    def algorithms(self):
+        r, s = self.w_shape[2], self.w_shape[3]
+        algos = ["im2col", "direct"]
+        if (r, s) == (3, 3) and self.stride == (1, 1):
+            algos.append("winograd")
+        if (r, s) == (1, 1) and self.pad == (0, 0):
+            algos.append("1x1gemm")
+        return algos
+
+    def signature(self):
+        extra = ((self.w_shape[0],),) if self.bias else ()
+        return conv2d_signature(
+            self.x_shape,
+            self.w_shape,
+            self.stride,
+            self.pad,
+            act=self.act,
+            bias=self.bias,
+            extra_shapes=extra,
+        )
+
+    def out_shape(self):
+        n, c, h, w = self.x_shape
+        k, _, r, s = self.w_shape
+        oh = (h + 2 * self.pad[0] - r) // self.stride[0] + 1
+        ow = (w + 2 * self.pad[1] - s) // self.stride[1] + 1
+        return (n, k, oh, ow)
+
+
+@dataclass
+class SimpleSpec:
+    """An attribute-light op compiled from plain jnp (kernel='jnp')."""
+
+    name: str
+    mnemonic: str
+    in_shapes: tuple
+    out_shapes: tuple
+    attrs: dict = field(default_factory=dict)
+
+    def signature(self):
+        if self.mnemonic in ("maxpool", "avgpool"):
+            return pool_signature(
+                self.mnemonic,
+                self.attrs["k"],
+                self.attrs["stride"],
+                self.attrs["pad"],
+                self.in_shapes[0],
+            )
+        if self.mnemonic == "concat":
+            return concat_signature(self.in_shapes, self.attrs.get("axis", 1))
+        return simple_signature(self.mnemonic, *self.in_shapes)
+
+    def algorithms(self):
+        """Algorithm names this artifact serves (mirrors rust/src/algo)."""
+        if self.mnemonic == "matmul":
+            return ["gemm_blocked", "gemm_naive"]
+        return ["std"]
+
+
+def quickstart_opset(batch=1, resolution=32, classes=10):
+    """The operator suite of models::simple::build_cnn at its default scale:
+    every runtime node signature of the quickstart CNN, so the PJRT engine
+    can execute the whole model from artifacts."""
+    n, r = batch, resolution
+    r2 = r // 2
+    convs = [
+        ConvSpec("stem", (n, 3, r, r), (8, 3, 3, 3), (1, 1), (1, 1)),
+        ConvSpec("branch1x1", (n, 8, r, r), (8, 8, 1, 1), (1, 1), (0, 0)),
+        ConvSpec("branch3x3", (n, 8, r, r), (8, 8, 3, 3), (1, 1), (1, 1)),
+        ConvSpec("conv2", (n, 16, r2, r2), (16, 16, 3, 3), (1, 1), (1, 1)),
+    ]
+    simples = [
+        SimpleSpec("relu_8", "relu", ((n, 8, r, r),), ((n, 8, r, r),)),
+        SimpleSpec("relu_16", "relu", ((n, 16, r2, r2),), ((n, 16, r2, r2),)),
+        SimpleSpec(
+            "pool",
+            "maxpool",
+            ((n, 16, r, r),),
+            ((n, 16, r2, r2),),
+            {"k": (2, 2), "stride": (2, 2), "pad": (0, 0)},
+        ),
+        SimpleSpec("concat", "concat", ((n, 8, r, r), (n, 8, r, r)), ((n, 16, r, r),), {"axis": 1}),
+        SimpleSpec("gap", "gavgpool", ((n, 16, r2, r2),), ((n, 16, 1, 1),)),
+        SimpleSpec("flatten", "flatten", ((n, 16, 1, 1),), ((n, 16),)),
+        SimpleSpec("fc", "matmul", ((n, 16), (16, classes)), ((n, classes),)),
+        SimpleSpec("softmax", "softmax", ((n, classes),), ((n, classes),)),
+    ]
+    return convs, simples
+
+
+# Concat's signature includes the axis attribute; mirror it exactly.
+def concat_signature(shapes, axis=1):
+    return ";".join([f"concat;ax={axis}"] + [_shape_str(s) for s in shapes])

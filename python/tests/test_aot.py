@@ -1,0 +1,105 @@
+"""AOT pipeline tests: signature mirror (python <-> rust contract), HLO
+text generation, and manifest structure."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, opset
+
+
+def test_conv_signature_golden():
+    """Pinned against rust/src/graph/op.rs::signature — if this changes,
+    rust/tests/integration_runtime.rs::signature_contract breaks too."""
+    sig = opset.conv2d_signature(
+        (1, 3, 32, 32), (8, 3, 3, 3), (1, 1), (1, 1), act="none", bias=True,
+        extra_shapes=((8,),),
+    )
+    assert sig == "conv2d;st=1,1;pad=1,1;act=none;b=1;res=0;1x3x32x32;8x3x3x3;8"
+
+
+def test_simple_signatures_golden():
+    assert opset.simple_signature("relu", (1, 8, 32, 32)) == "relu;1x8x32x32"
+    assert opset.simple_signature("matmul", (1, 16), (16, 10)) == "matmul;1x16;16x10"
+    assert (
+        opset.pool_signature("maxpool", (2, 2), (2, 2), (0, 0), (1, 16, 32, 32))
+        == "maxpool;k=2,2;st=2,2;pad=0,0;1x16x32x32"
+    )
+    assert (
+        opset.concat_signature([(1, 8, 32, 32), (1, 8, 32, 32)], 1)
+        == "concat;ax=1;1x8x32x32;1x8x32x32"
+    )
+
+
+def test_conv_spec_applicability():
+    c3 = opset.ConvSpec("c", (1, 8, 16, 16), (8, 8, 3, 3), (1, 1), (1, 1))
+    assert "winograd" in c3.algorithms()
+    c3s2 = opset.ConvSpec("c", (1, 8, 16, 16), (8, 8, 3, 3), (2, 2), (1, 1))
+    assert "winograd" not in c3s2.algorithms()
+    c1 = opset.ConvSpec("c", (1, 8, 16, 16), (8, 8, 1, 1), (1, 1), (0, 0))
+    assert "1x1gemm" in c1.algorithms() and "winograd" not in c1.algorithms()
+
+
+def test_conv_spec_out_shape():
+    c = opset.ConvSpec("c", (1, 3, 32, 32), (8, 3, 3, 3), (2, 2), (1, 1))
+    assert c.out_shape() == (1, 8, 16, 16)
+
+
+def test_to_hlo_text_produces_parseable_module():
+    fn = lambda x: (jnp.maximum(x, 0.0),)
+    text = aot.to_hlo_text(fn, aot.spec_args([(2, 3)]))
+    assert "HloModule" in text
+    assert "ROOT" in text
+
+
+def test_build_artifacts_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    manifest = aot.build_artifacts(out, batch=1, resolution=8, classes=4, verbose=False)
+    assert manifest["version"] == 1
+    entries = manifest["artifacts"]
+    # 4 convs x (2..3 algos) + simples + 3 whole-model
+    assert len(entries) >= 20
+    keys = [e["key"] for e in entries]
+    assert len(keys) == len(set(keys)), "artifact keys must be unique"
+    assert any(k.startswith("model_fwd::") for k in keys)
+    # every listed file exists and is HLO text
+    for e in entries:
+        path = os.path.join(out, e["file"])
+        assert os.path.exists(path)
+        with open(path) as f:
+            assert "HloModule" in f.read(200)
+    # manifest file on disk round-trips
+    with open(os.path.join(out, "manifest.json")) as f:
+        assert json.load(f) == manifest
+
+
+def test_no_dense_constants_in_artifacts(tmp_path):
+    """Regression guard: xla_extension 0.5.1's HLO text parser silently
+    mis-parses dense (non-scalar) f32 array constants — a winograd filter
+    transform built from a constant G matrix came back as zeros. No emitted
+    artifact may contain a multi-element f32 constant literal."""
+    import re
+
+    out = str(tmp_path / "artifacts")
+    manifest = aot.build_artifacts(out, batch=1, resolution=8, classes=4, verbose=False)
+    # f32[4,3]{...} constant(...) with 2+ elements in the braces
+    dense = re.compile(r"constant\(\{.*,.*\}\)")
+    for e in manifest["artifacts"]:
+        with open(os.path.join(out, e["file"])) as f:
+            text = f.read()
+        for line in text.splitlines():
+            if "constant(" in line and dense.search(line):
+                # allow integer/index constants; flag floating dense ones
+                assert "f32[" not in line.split("=")[0], (
+                    f"{e['key']}: dense f32 constant would be mis-parsed by "
+                    f"xla_extension 0.5.1: {line.strip()[:120]}"
+                )
+
+
+def test_quickstart_opset_covers_model():
+    convs, simples = opset.quickstart_opset(1, 32, 10)
+    assert {c.name for c in convs} == {"stem", "branch1x1", "branch3x3", "conv2"}
+    mns = {s.mnemonic for s in simples}
+    assert {"relu", "maxpool", "concat", "gavgpool", "flatten", "matmul", "softmax"} <= mns

@@ -1,0 +1,206 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, strides, and padding — the CORE correctness
+signal for the kernels that back the paper's per-node "algorithms".
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.pallas_conv import (
+    conv_direct,
+    conv_im2col,
+    conv_winograd,
+    dwconv_direct,
+    im2col,
+)
+from compile.kernels.pallas_matmul import matmul as pallas_matmul
+
+RNG = np.random.default_rng(1234)
+
+
+def t(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), dtype=jnp.float32)
+
+
+def close(a, b, tol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+)
+def test_matmul_matches_ref(m, k, n):
+    a, b = t(m, k), t(k, n)
+    close(pallas_matmul(a, b), ref.matmul_ref(a, b))
+
+
+def test_matmul_tile_boundary_cases():
+    # shapes exactly at, below, and above the tile edge
+    for m, k, n in [(128, 128, 128), (127, 129, 1), (130, 1, 257)]:
+        a, b = t(m, k), t(k, n)
+        close(pallas_matmul(a, b, tile_m=128, tile_n=128, tile_k=128), ref.matmul_ref(a, b))
+
+
+def test_matmul_small_tiles():
+    a, b = t(17, 23), t(23, 9)
+    close(pallas_matmul(a, b, tile_m=8, tile_n=8, tile_k=8), ref.matmul_ref(a, b))
+
+
+# ---------------------------------------------------------------------------
+# convolutions
+# ---------------------------------------------------------------------------
+
+conv_shapes = st.tuples(
+    st.integers(1, 2),   # N
+    st.integers(1, 4),   # C
+    st.integers(5, 10),  # H
+    st.integers(5, 10),  # W
+    st.integers(1, 4),   # K
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    dims=conv_shapes,
+    r=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([(1, 1), (2, 2), (1, 2)]),
+    padded=st.booleans(),
+    bias=st.booleans(),
+)
+def test_conv_direct_matches_ref(dims, r, stride, padded, bias):
+    n, c, h, w, k = dims
+    pad = (r // 2, r // 2) if padded else (0, 0)
+    x, wt = t(n, c, h, w), t(k, c, r, r)
+    b = t(k) if bias else None
+    got = conv_direct(x, wt, bias=b, stride=stride, pad=pad)
+    want = ref.conv2d_ref(x, wt, bias=b, stride=stride, pad=pad)
+    close(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    dims=conv_shapes,
+    r=st.sampled_from([1, 3]),
+    stride=st.sampled_from([(1, 1), (2, 2)]),
+    padded=st.booleans(),
+)
+def test_conv_im2col_matches_ref(dims, r, stride, padded):
+    n, c, h, w, k = dims
+    pad = (r // 2, r // 2) if padded else (0, 0)
+    x, wt = t(n, c, h, w), t(k, c, r, r)
+    got = conv_im2col(x, wt, stride=stride, pad=pad)
+    want = ref.conv2d_ref(x, wt, stride=stride, pad=pad)
+    close(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims=conv_shapes, padded=st.booleans(), bias=st.booleans())
+def test_conv_winograd_matches_ref(dims, padded, bias):
+    n, c, h, w, k = dims
+    pad = (1, 1) if padded else (0, 0)
+    x, wt = t(n, c, h, w), t(k, c, 3, 3)
+    b = t(k) if bias else None
+    got = conv_winograd(x, wt, bias=b, pad=pad)
+    want = ref.conv2d_ref(x, wt, bias=b, stride=(1, 1), pad=pad)
+    close(got, want, tol=5e-4)
+
+
+def test_im2col_matches_ref_layout():
+    x = t(2, 3, 6, 7)
+    got = im2col(x, 3, 3, (1, 1), (1, 1))
+    want = ref.im2col_ref(x, 3, 3, (1, 1), (1, 1))
+    close(got, want)
+
+
+def test_conv_epilogues():
+    """bias + residual + relu fused epilogue matches the oracle."""
+    x, wt = t(1, 3, 6, 6), t(4, 3, 3, 3)
+    b = t(4)
+    res = t(1, 4, 6, 6)
+    for fn in (conv_direct, conv_im2col):
+        got = fn(x, wt, bias=b, stride=(1, 1), pad=(1, 1), residual=res, relu=True)
+        want = ref.conv2d_ref(x, wt, bias=b, stride=(1, 1), pad=(1, 1), residual=res, relu=True)
+        close(got, want)
+
+
+def test_winograd_rejects_non_3x3():
+    x, wt = t(1, 1, 6, 6), t(1, 1, 5, 5)
+    with pytest.raises(AssertionError):
+        conv_winograd(x, wt)
+
+
+def test_asymmetric_kernels_direct():
+    """1x7 / 7x1 factorized convs (Inception-B) through the direct kernel."""
+    x = t(1, 3, 9, 9)
+    for (r, s, pad) in [(1, 7, (0, 3)), (7, 1, (3, 0))]:
+        wt = t(2, 3, r, s)
+        got = conv_direct(x, wt, stride=(1, 1), pad=pad)
+        want = ref.conv2d_ref(x, wt, stride=(1, 1), pad=pad)
+        close(got, want)
+
+
+# ---------------------------------------------------------------------------
+# oracles' self-consistency
+# ---------------------------------------------------------------------------
+
+
+def test_im2col_ref_equals_conv():
+    x, wt = t(2, 3, 8, 8), t(4, 3, 3, 3)
+    close(
+        ref.conv2d_im2col_ref(x, wt, stride=(1, 1), pad=(1, 1)),
+        ref.conv2d_ref(x, wt, stride=(1, 1), pad=(1, 1)),
+    )
+
+
+def test_avgpool_excludes_padding():
+    x = jnp.ones((1, 1, 4, 4), dtype=jnp.float32) * 2.0
+    y = ref.avgpool_ref(x, (3, 3), (1, 1), (1, 1))
+    np.testing.assert_allclose(np.asarray(y), 2.0, rtol=1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    x = t(3, 7)
+    s = np.asarray(ref.softmax_ref(x)).sum(axis=-1)
+    np.testing.assert_allclose(s, 1.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# depthwise convolution
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    c=st.integers(1, 5),
+    h=st.integers(5, 10),
+    stride=st.sampled_from([(1, 1), (2, 2)]),
+    padded=st.booleans(),
+    bias=st.booleans(),
+)
+def test_dwconv_direct_matches_ref(n, c, h, stride, padded, bias):
+    pad = (1, 1) if padded else (0, 0)
+    x, wt = t(n, c, h, h), t(c, 1, 3, 3)
+    b = t(c) if bias else None
+    got = dwconv_direct(x, wt, bias=b, stride=stride, pad=pad)
+    want = ref.dwconv2d_ref(x, wt, bias=b, stride=stride, pad=pad)
+    close(got, want)
+
+
+def test_dwconv_relu_epilogue():
+    x, wt = t(1, 4, 6, 6), t(4, 1, 3, 3)
+    got = dwconv_direct(x, wt, stride=(1, 1), pad=(1, 1), relu=True)
+    want = ref.dwconv2d_ref(x, wt, stride=(1, 1), pad=(1, 1), relu=True)
+    close(got, want)

@@ -1,0 +1,47 @@
+"""L2 correctness: the quickstart CNN forward (Pallas-composed) vs the
+pure-oracle composition, for every conv algorithm variant."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+RNG = np.random.default_rng(99)
+
+
+def weights():
+    return [jnp.asarray(RNG.standard_normal(s) * 0.2, dtype=jnp.float32) for (_, s) in model.WEIGHT_SPECS]
+
+
+def test_weight_specs_shapes_consistent():
+    ws = weights()
+    assert len(ws) == 9
+    assert ws[0].shape == (8, 3, 3, 3)
+    assert ws[-1].shape == (16, 10)
+
+
+@pytest.mark.parametrize("algo", ["im2col", "direct", "winograd"])
+def test_forward_matches_ref(algo):
+    ws = weights()
+    x = jnp.asarray(RNG.standard_normal((1, 3, 16, 16)), dtype=jnp.float32)
+    got = model.forward(x, *ws, algo=algo)
+    want = model.forward_ref(x, *ws)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+def test_forward_is_distribution():
+    ws = weights()
+    x = jnp.asarray(RNG.standard_normal((2, 3, 16, 16)), dtype=jnp.float32)
+    y = np.asarray(model.forward_ref(x, *ws))
+    assert y.shape == (2, 10)
+    np.testing.assert_allclose(y.sum(axis=-1), 1.0, rtol=1e-5)
+    assert (y >= 0).all()
+
+
+def test_algorithms_agree_with_each_other():
+    ws = weights()
+    x = jnp.asarray(RNG.standard_normal((1, 3, 16, 16)), dtype=jnp.float32)
+    outs = [np.asarray(model.forward(x, *ws, algo=a)) for a in ["im2col", "direct", "winograd"]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-3, atol=1e-4)

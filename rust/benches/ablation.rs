@@ -1,0 +1,168 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!   1. α sweep — search breadth vs solution quality (paper §3.3: "as α
+//!      increases, the search algorithm explores a larger part").
+//!   2. inner distance d — d=1 vs d=2 for additive vs ratio objectives
+//!      (paper §4.1 uses d=1 for linear, d=2 otherwise).
+//!   3. rule-set leave-one-out — which substitution family pays.
+//!   4. MobileNet (depthwise extension, paper §5 future work).
+//! Run: `cargo bench --bench ablation [-- --quick]`
+
+use eadgo::cost::CostFunction;
+use eadgo::models::{self, ModelConfig};
+use eadgo::report::{f3, Table};
+use eadgo::search::{optimize, OptimizerContext, SearchConfig};
+use eadgo::subst::{rules, RuleSet};
+
+fn ctx() -> OptimizerContext {
+    OptimizerContext::offline_default()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = ModelConfig { batch: 1, resolution: 224, width_div: 1, classes: 1000 };
+    let budget = if quick { 40 } else { 200 };
+    let g = models::squeezenet::build(cfg);
+
+    // --- 1. alpha sweep ----------------------------------------------------
+    let mut t = Table::new(
+        "Ablation 1: alpha sweep (SqueezeNet, energy objective)",
+        &["alpha", "energy_j/1k", "graphs generated", "search_s"],
+    );
+    let mut prev_energy = f64::INFINITY;
+    for alpha in [1.0, 1.01, 1.05, 1.10] {
+        let mut c = ctx();
+        let res = optimize(
+            &g,
+            &mut c,
+            &CostFunction::Energy,
+            &SearchConfig { alpha, max_dequeues: budget, ..Default::default() },
+        )
+        .unwrap();
+        t.row(vec![
+            format!("{alpha:.2}"),
+            f3(res.cost.energy_j),
+            res.stats.generated.to_string(),
+            format!("{:.2}", res.stats.wall_s),
+        ]);
+        assert!(
+            res.cost.energy_j <= prev_energy * 1.001,
+            "larger alpha must not find worse solutions"
+        );
+        prev_energy = res.cost.energy_j;
+    }
+    println!("{}", t.render());
+
+    // --- 2. inner distance -------------------------------------------------
+    let mut t = Table::new(
+        "Ablation 2: inner-search distance (SqueezeNet)",
+        &["objective", "d", "objective value", "inner evals"],
+    );
+    for (obj, name) in [
+        (CostFunction::Energy, "energy"),
+        (CostFunction::Power, "power"),
+    ] {
+        let mut per_d = Vec::new();
+        for d in [1usize, 2] {
+            let mut c = ctx();
+            let res = optimize(
+                &g,
+                &mut c,
+                &obj,
+                &SearchConfig {
+                    inner_distance: Some(d),
+                    max_dequeues: budget / 2,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            t.row(vec![
+                name.to_string(),
+                d.to_string(),
+                format!("{:.4}", res.objective_value),
+                res.stats.inner_evals.to_string(),
+            ]);
+            per_d.push(res.objective_value);
+        }
+        // d=2 never worse; for the additive objective d=1 already optimal.
+        assert!(per_d[1] <= per_d[0] + 1e-9, "{name}: d=2 worse than d=1");
+        if matches!(obj, CostFunction::Energy) {
+            assert!(
+                (per_d[1] - per_d[0]).abs() <= 1e-6 * per_d[0].abs().max(1.0),
+                "additive objective: d=2 should not improve on d=1"
+            );
+        }
+    }
+    println!("{}", t.render());
+
+    // --- 3. rule-set leave-one-out ------------------------------------------
+    let families: Vec<(&str, RuleSet)> = vec![
+        ("all rules", RuleSet::standard()),
+        (
+            "no fusions",
+            RuleSet::with_rules(vec![
+                Box::new(rules::MergeParallelConvs),
+                Box::new(rules::EnlargeConvKernel),
+                Box::new(rules::SplitConcatElim),
+                Box::new(rules::ConcatSplitElim),
+            ]),
+        ),
+        (
+            "no merges",
+            RuleSet::with_rules(vec![
+                Box::new(rules::FuseConvRelu),
+                Box::new(rules::FuseDwConvRelu),
+                Box::new(rules::FuseAddRelu),
+                Box::new(rules::FuseConvBn),
+                Box::new(rules::FuseDwConvBn),
+                Box::new(rules::FuseConvResidual),
+            ]),
+        ),
+        ("no rules (inner only)", RuleSet::empty()),
+    ];
+    let mut t = Table::new(
+        "Ablation 3: rule families (SqueezeNet, energy objective)",
+        &["rule set", "energy_j/1k", "vs all rules"],
+    );
+    let mut all_energy = None;
+    for (name, rs) in families {
+        let mut c = OptimizerContext::new(
+            rs,
+            eadgo::cost::CostDb::new(),
+            Box::new(eadgo::profiler::SimV100Provider::new(7)),
+        );
+        let res = optimize(
+            &g,
+            &mut c,
+            &CostFunction::Energy,
+            &SearchConfig { max_dequeues: budget, ..Default::default() },
+        )
+        .unwrap();
+        let base = *all_energy.get_or_insert(res.cost.energy_j);
+        t.row(vec![
+            name.to_string(),
+            f3(res.cost.energy_j),
+            format!("{:+.1}%", 100.0 * (res.cost.energy_j / base - 1.0)),
+        ]);
+        assert!(res.cost.energy_j >= base * 0.999, "subset beats full rule set?");
+    }
+    println!("{}", t.render());
+
+    // --- 4. MobileNet (depthwise extension) ---------------------------------
+    let gm = models::mobilenet::build(cfg);
+    let mut c = ctx();
+    let res = optimize(
+        &gm,
+        &mut c,
+        &CostFunction::Energy,
+        &SearchConfig { max_dequeues: budget, ..Default::default() },
+    )
+    .unwrap();
+    println!(
+        "MobileNetV1 (depthwise): origin {} J -> optimized {} J ({:+.1}% energy, {:+.1}% time)\n",
+        f3(res.original.energy_j),
+        f3(res.cost.energy_j),
+        -100.0 * res.energy_savings(),
+        -100.0 * res.time_savings()
+    );
+    assert!(res.cost.energy_j < res.original.energy_j);
+}

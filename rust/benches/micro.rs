@@ -1,0 +1,76 @@
+//! Microbenchmarks of the optimizer hot paths (the §Perf targets):
+//! subgraph matching, inner-search evaluation, canonical hashing, cost
+//! table construction, and reference-engine node dispatch.
+//! Run: `cargo bench --bench micro [-- --quick]`
+
+use eadgo::algo::Assignment;
+use eadgo::cost::CostFunction;
+use eadgo::graph::canonical::graph_hash;
+use eadgo::models::{self, ModelConfig};
+use eadgo::search::{inner_search, OptimizerContext};
+use eadgo::subst::RuleSet;
+use eadgo::tensor::Tensor;
+use eadgo::util::bench::{black_box, BenchSuite};
+use eadgo::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("optimizer hot paths");
+    suite.banner();
+
+    let cfg = ModelConfig { batch: 1, resolution: 64, width_div: 2, classes: 10 };
+    let squeezenet = models::squeezenet::build(cfg);
+    let resnet = models::resnet::build(cfg);
+    let rules = RuleSet::standard();
+
+    suite.run("graph_hash/squeezenet", || black_box(graph_hash(&squeezenet)));
+    suite.run("graph_hash/resnet", || black_box(graph_hash(&resnet)));
+    suite.run("graph_clone_compact/resnet", || {
+        let mut g = resnet.clone();
+        g.compact();
+        black_box(g.len())
+    });
+    suite.run("infer_shapes/resnet", || black_box(resnet.infer_shapes().unwrap().len()));
+    suite.run("subst_neighbors/squeezenet", || black_box(rules.neighbors(&squeezenet).len()));
+    suite.run("subst_neighbors/resnet", || black_box(rules.neighbors(&resnet).len()));
+
+    // Cost table + inner search.
+    let mut ctx = OptimizerContext::offline_default();
+    let (table, _) = ctx.table_for(&squeezenet).unwrap();
+    let base = Assignment::default_for(&squeezenet, &ctx.reg);
+    suite.run("cost_table_build/squeezenet", || {
+        black_box(ctx.table_for(&squeezenet).unwrap().0)
+    });
+    suite.run("cost_eval_full/squeezenet", || black_box(table.eval(&base)));
+    suite.run("inner_search_d1_energy/squeezenet", || {
+        black_box(inner_search(&table, &CostFunction::Energy, 1, base.clone()).evals)
+    });
+    suite.run("inner_search_d2_power/squeezenet", || {
+        black_box(inner_search(&table, &CostFunction::Power, 2, base.clone()).evals)
+    });
+
+    // Engine execution (reference backend, small tensors).
+    let small = ModelConfig { batch: 1, resolution: 16, width_div: 8, classes: 10 };
+    let g = models::simple::build_cnn(small);
+    let reg = eadgo::algo::AlgorithmRegistry::new();
+    let a = Assignment::default_for(&g, &reg);
+    let eng = eadgo::engine::ReferenceEngine::new();
+    let plan = eng.plan(&g, &a).unwrap();
+    let mut rng = Rng::seed_from(1);
+    let x = Tensor::rand(&[1, 3, 16, 16], &mut rng, -1.0, 1.0);
+    suite.run("reference_engine/quickstart16", || {
+        black_box(eng.run_plan(&g, &a, &plan, std::slice::from_ref(&x)).unwrap().wall_s)
+    });
+
+    // Tensor kernels (the rust-side algorithm implementations).
+    let xi = Tensor::rand(&[1, 16, 32, 32], &mut rng, -1.0, 1.0);
+    let wi = Tensor::rand(&[16, 16, 3, 3], &mut rng, -0.5, 0.5);
+    suite.run("conv_direct/16x32x32", || {
+        black_box(eadgo::tensor::conv::conv2d_direct(&xi, &wi, None, (1, 1), (1, 1)))
+    });
+    suite.run("conv_im2col/16x32x32", || {
+        black_box(eadgo::tensor::conv::conv2d_im2col(&xi, &wi, None, (1, 1), (1, 1)))
+    });
+    suite.run("conv_winograd/16x32x32", || {
+        black_box(eadgo::tensor::winograd::conv2d_winograd(&xi, &wi, None, (1, 1)))
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate paper Table 1 (per-node algorithm costs) and measure
+//! the profiling throughput that backs it.
+//! Run: `cargo bench --bench table1 [-- --quick]`
+
+use eadgo::report::tables::{table1, ExperimentConfig};
+use eadgo::util::bench::BenchSuite;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { ExperimentConfig::quick() } else { ExperimentConfig::default() };
+
+    let (t, data) = table1(&cfg);
+    println!("{}", t.render());
+
+    // Shape assertions (the reproduction criterion from DESIGN.md).
+    let conv3 = &data.nodes[2].1;
+    let energy = |a: eadgo::algo::Algorithm| {
+        conv3.iter().find(|(al, _)| *al == a).map(|(_, c)| c.energy_j()).unwrap()
+    };
+    assert!(energy(eadgo::algo::Algorithm::ConvWinograd) < energy(eadgo::algo::Algorithm::ConvIm2col));
+    assert!(energy(eadgo::algo::Algorithm::ConvDirect) < energy(eadgo::algo::Algorithm::ConvIm2col));
+    println!("shape check OK: winograd & direct beat im2col on conv3 energy\n");
+
+    let mut suite = BenchSuite::new("table1 generation");
+    suite.banner();
+    suite.run("table1_full", || table1(&cfg));
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate paper Table 2 (cost-model accuracy on SqueezeNet) and
+//! report the accuracy metrics (MAPE + rank correlation).
+//! Run: `cargo bench --bench table2 [-- --quick]`
+
+use eadgo::report::tables::{table2, ExperimentConfig};
+use eadgo::util::bench::BenchSuite;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { ExperimentConfig::quick() } else { ExperimentConfig::default() };
+
+    let (t, data) = table2(&cfg);
+    println!("{}", t.render());
+    println!(
+        "model accuracy: time MAPE {:.1}%  power MAPE {:.1}%  energy MAPE {:.1}%  energy Kendall-tau {:.2}",
+        data.time_mape, data.power_mape, data.energy_mape, data.energy_tau
+    );
+    assert!(data.energy_mape < 15.0, "paper reports <=10% — ours must stay close");
+    assert!(data.energy_tau > 0.5, "cost model must preserve ordering");
+    println!("shape check OK: value error bounded, ordering preserved\n");
+
+    let mut suite = BenchSuite::new("table2 generation");
+    suite.banner();
+    suite.run("table2_full", || table2(&cfg));
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerate paper Table 3 (objectives × the three CNNs) — the
+//! headline result (24% energy savings on SqueezeNet vs MetaFlow-best-time
+//! with negligible performance impact).
+//! Run: `cargo bench --bench table3 [-- --quick]`
+
+use eadgo::report::tables::{table3, ExperimentConfig};
+use eadgo::util::bench::BenchSuite;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { ExperimentConfig::quick() } else { ExperimentConfig::default() };
+
+    let (t, data) = table3(&cfg);
+    println!("{}", t.render());
+
+    for model in ["squeezenet", "inception", "resnet"] {
+        let metaflow = data.get(model, "metaflow_best_time").unwrap().cost;
+        let best_energy = data.get(model, "best_energy").unwrap().cost;
+        let best_power = data.get(model, "best_power").unwrap().cost;
+        let best_time = data.get(model, "best_time").unwrap().cost;
+        let origin = data.get(model, "origin").unwrap().cost;
+        let save = 100.0 * (1.0 - best_energy.energy_j() / metaflow.energy_j());
+        println!(
+            "{model}: best_energy saves {save:.0}% energy vs metaflow-best-time; \
+             best_power {:.0}% less power than origin; best_time {:.0}% faster than metaflow",
+            100.0 * (1.0 - best_power.power_w / origin.power_w),
+            100.0 * (1.0 - best_time.time_ms / metaflow.time_ms),
+        );
+        assert!(best_energy.energy_j() < metaflow.energy_j(), "{model}: energy-aware must win");
+        assert!(best_power.power_w < origin.power_w, "{model}: power objective must cut power");
+        assert!(best_time.time_ms <= metaflow.time_ms * 1.01, "{model}: ours >= metaflow on time");
+    }
+    println!("shape check OK: Table 3 orderings hold on all three models\n");
+
+    let mut suite = BenchSuite::with_config(
+        "table3 generation",
+        eadgo::util::bench::BenchConfig { warmup_secs: 0.0, measure_secs: 0.1, min_iters: 1, max_iters: 1 },
+    );
+    suite.banner();
+    suite.run("table3_full", || table3(&cfg));
+}

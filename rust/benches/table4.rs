@@ -1,0 +1,30 @@
+//! Bench: regenerate paper Table 4 (time/energy tradeoff sweep on
+//! SqueezeNet) and check the sweep is a smooth frontier.
+//! Run: `cargo bench --bench table4 [-- --quick]`
+
+use eadgo::report::tables::{table4, ExperimentConfig};
+use eadgo::util::bench::BenchSuite;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { ExperimentConfig::quick() } else { ExperimentConfig::default() };
+
+    let (t, data) = table4(&cfg);
+    println!("{}", t.render());
+
+    // Endpoints bound the sweep (paper: "a smooth balance").
+    let first = &data.rows.first().unwrap().2; // best time
+    let last = &data.rows.last().unwrap().2; // best energy
+    for (label, _, c) in &data.rows {
+        assert!(c.time_ms >= first.time_ms * 0.98, "{label}: beats best_time?");
+        assert!(c.energy_j() >= last.energy_j() * 0.98, "{label}: beats best_energy?");
+    }
+    println!("shape check OK: endpoints bound the frontier\n");
+
+    let mut suite = BenchSuite::with_config(
+        "table4 generation",
+        eadgo::util::bench::BenchConfig { warmup_secs: 0.0, measure_secs: 0.1, min_iters: 1, max_iters: 1 },
+    );
+    suite.banner();
+    suite.run("table4_full", || table4(&cfg));
+}

@@ -1,0 +1,34 @@
+//! Bench: regenerate paper Table 5 (inner-search ablation on SqueezeNet,
+//! energy objective) and check the contribution ordering.
+//! Run: `cargo bench --bench table5 [-- --quick]`
+
+use eadgo::report::tables::{table5, ExperimentConfig};
+use eadgo::util::bench::BenchSuite;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { ExperimentConfig::quick() } else { ExperimentConfig::default() };
+
+    let (t, d) = table5(&cfg);
+    println!("{}", t.render());
+
+    assert!(d.outer_only.energy_j() < d.origin.energy_j(), "outer search must save energy");
+    assert!(d.inner_only.energy_j() < d.origin.energy_j(), "inner search must save energy");
+    assert!(
+        d.both.energy_j() <= d.outer_only.energy_j().min(d.inner_only.energy_j()) * 1.02,
+        "both levels must beat either alone"
+    );
+    println!(
+        "shape check OK: both(-{:.0}%) <= min(outer -{:.0}%, inner -{:.0}%) vs origin\n",
+        100.0 * (1.0 - d.both.energy_j() / d.origin.energy_j()),
+        100.0 * (1.0 - d.outer_only.energy_j() / d.origin.energy_j()),
+        100.0 * (1.0 - d.inner_only.energy_j() / d.origin.energy_j()),
+    );
+
+    let mut suite = BenchSuite::with_config(
+        "table5 generation",
+        eadgo::util::bench::BenchConfig { warmup_secs: 0.0, measure_secs: 0.1, min_iters: 1, max_iters: 1 },
+    );
+    suite.banner();
+    suite.run("table5_full", || table5(&cfg));
+}

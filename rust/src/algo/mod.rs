@@ -1,0 +1,328 @@
+//! Per-node **algorithms** and assignments (paper §3.1).
+//!
+//! "For a given node of a computation graph, there exist one or more
+//! implementations that can perform the computation of the operator. We
+//! call each implementation an *algorithm* of the node." — exactly cuDNN's
+//! multiple convolution kernels. Our concrete algorithm set:
+//!
+//! | Op | Algorithms | cuDNN analogue |
+//! |---|---|---|
+//! | Conv2d | `ConvIm2col` (A), `ConvDirect` (B), `ConvWinograd` (C, 3×3 s1 only), `Conv1x1Gemm` (1×1 only) | GEMM / IMPLICIT_GEMM / WINOGRAD / 1x1 specialization |
+//! | MatMul | `GemmBlocked`, `GemmNaive` | cuBLAS algo selection |
+//! | everything else | `Passthrough` | single-kernel ops |
+//!
+//! Applicability constraints mirror the paper's footnote 2: "Some cuDNN
+//! algorithms are not applicable to all convolution operators" (Table 1
+//! shows `-` for Winograd on conv1/conv2).
+
+use crate::graph::{Graph, NodeId, OpKind, TensorShape};
+
+/// An implementation choice for one node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Algorithm {
+    /// im2col + blocked GEMM: highest arithmetic throughput, extra memory
+    /// traffic (the unfolded patch matrix) — paper's "algorithm A" profile:
+    /// fast but power-hungry.
+    ConvIm2col,
+    /// Direct sliding window: no workspace, lower bandwidth pressure —
+    /// "algorithm B": often a bit slower but much lower power.
+    ConvDirect,
+    /// Winograd F(2×2,3×3): 2.25× multiply reduction — "algorithm C":
+    /// fastest *and* cheapest where applicable (3×3, stride 1).
+    ConvWinograd,
+    /// Pointwise 1×1 convolution as a pure GEMM.
+    Conv1x1Gemm,
+    /// Depthwise convolution, direct sliding window.
+    DwDirect,
+    /// Depthwise convolution, per-channel Winograd F(2×2,3×3).
+    DwWinograd,
+    /// Cache-blocked GEMM.
+    GemmBlocked,
+    /// Naive triple-loop GEMM.
+    GemmNaive,
+    /// The single implementation of ops that have only one.
+    Passthrough,
+}
+
+impl Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::ConvIm2col => "im2col",
+            Algorithm::ConvDirect => "direct",
+            Algorithm::ConvWinograd => "winograd",
+            Algorithm::Conv1x1Gemm => "1x1gemm",
+            Algorithm::DwDirect => "dw_direct",
+            Algorithm::DwWinograd => "dw_winograd",
+            Algorithm::GemmBlocked => "gemm_blocked",
+            Algorithm::GemmNaive => "gemm_naive",
+            Algorithm::Passthrough => "std",
+        }
+    }
+
+    /// Paper Table 1 letter for conv algorithms (reporting only).
+    pub fn letter(&self) -> &'static str {
+        match self {
+            Algorithm::ConvIm2col => "A",
+            Algorithm::ConvDirect => "B",
+            Algorithm::ConvWinograd => "C",
+            Algorithm::Conv1x1Gemm => "D",
+            _ => "-",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Algorithm> {
+        Some(match name {
+            "im2col" => Algorithm::ConvIm2col,
+            "direct" => Algorithm::ConvDirect,
+            "winograd" => Algorithm::ConvWinograd,
+            "1x1gemm" => Algorithm::Conv1x1Gemm,
+            "dw_direct" => Algorithm::DwDirect,
+            "dw_winograd" => Algorithm::DwWinograd,
+            "gemm_blocked" => Algorithm::GemmBlocked,
+            "gemm_naive" => Algorithm::GemmNaive,
+            "std" => Algorithm::Passthrough,
+            _ => return None,
+        })
+    }
+}
+
+/// The registry answering "which algorithms can run this node?" (the paper
+/// assumes "a method of knowing all algorithms of N" — provided by the
+/// engine/underlying library; this is that method).
+#[derive(Debug, Clone, Default)]
+pub struct AlgorithmRegistry;
+
+impl AlgorithmRegistry {
+    pub fn new() -> Self {
+        AlgorithmRegistry
+    }
+
+    /// All algorithms applicable to a node with the given op and input
+    /// shapes, in preference order (first = framework default).
+    pub fn applicable(&self, op: &OpKind, in_shapes: &[TensorShape]) -> Vec<Algorithm> {
+        match op {
+            OpKind::Conv2d { stride, .. } => {
+                let w = &in_shapes[1];
+                let (r, s) = (w[2], w[3]);
+                let mut algos = vec![Algorithm::ConvIm2col, Algorithm::ConvDirect];
+                if r == 3 && s == 3 && *stride == (1, 1) {
+                    algos.push(Algorithm::ConvWinograd);
+                }
+                if r == 1 && s == 1 {
+                    algos.push(Algorithm::Conv1x1Gemm);
+                }
+                algos
+            }
+            OpKind::DwConv2d { stride, .. } => {
+                let w = &in_shapes[1];
+                let mut algos = vec![Algorithm::DwDirect];
+                if (w[2], w[3]) == (3, 3) && *stride == (1, 1) {
+                    algos.push(Algorithm::DwWinograd);
+                }
+                algos
+            }
+            OpKind::MatMul => vec![Algorithm::GemmBlocked, Algorithm::GemmNaive],
+            _ => vec![Algorithm::Passthrough],
+        }
+    }
+
+    /// The framework-default algorithm (what "Origin" and "MetaFlow Best
+    /// Time" run with — no per-node tuning).
+    pub fn default_algorithm(&self, op: &OpKind, in_shapes: &[TensorShape]) -> Algorithm {
+        self.applicable(op, in_shapes)[0]
+    }
+}
+
+/// An algorithm assignment `A` for a graph: maps every runtime node to an
+/// algorithm (paper §3.1). Constant-space nodes (weights & folds) carry
+/// `None`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Assignment {
+    choices: Vec<Option<Algorithm>>,
+}
+
+impl Assignment {
+    /// The default assignment for a graph.
+    pub fn default_for(g: &Graph, reg: &AlgorithmRegistry) -> Assignment {
+        let shapes = g.infer_shapes().expect("assignment over invalid graph");
+        Assignment::default_for_with(g, &shapes, reg)
+    }
+
+    /// As [`Assignment::default_for`] but with pre-computed shapes — the
+    /// search hot path infers shapes once per candidate and reuses them.
+    pub fn default_for_with(
+        g: &Graph,
+        shapes: &[Vec<TensorShape>],
+        reg: &AlgorithmRegistry,
+    ) -> Assignment {
+        let mut choices = vec![None; g.len()];
+        for (id, node) in g.nodes() {
+            if node.op.is_constant_space() {
+                continue;
+            }
+            let in_shapes: Vec<TensorShape> = node
+                .inputs
+                .iter()
+                .map(|p| shapes[p.node.0][p.port].clone())
+                .collect();
+            choices[id.0] = Some(reg.default_algorithm(&node.op, &in_shapes));
+        }
+        Assignment { choices }
+    }
+
+    pub fn get(&self, id: NodeId) -> Option<Algorithm> {
+        self.choices.get(id.0).copied().flatten()
+    }
+
+    pub fn set(&mut self, id: NodeId, algo: Algorithm) {
+        assert!(self.choices[id.0].is_some(), "cannot assign to constant-space node");
+        self.choices[id.0] = Some(algo);
+    }
+
+    pub fn len(&self) -> usize {
+        self.choices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.choices.is_empty()
+    }
+
+    /// Ids of nodes that carry an algorithm (runtime nodes).
+    pub fn assigned_ids(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.choices
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.is_some())
+            .map(|(i, _)| NodeId(i))
+    }
+
+    /// Ids with more than one applicable algorithm — the inner search's
+    /// effective dimensions.
+    pub fn tunable_ids(&self, g: &Graph, reg: &AlgorithmRegistry) -> Vec<NodeId> {
+        let shapes = g.infer_shapes().expect("invalid graph");
+        self.assigned_ids()
+            .filter(|id| {
+                let node = g.node(*id);
+                let in_shapes: Vec<TensorShape> = node
+                    .inputs
+                    .iter()
+                    .map(|p| shapes[p.node.0][p.port].clone())
+                    .collect();
+                reg.applicable(&node.op, &in_shapes).len() > 1
+            })
+            .collect()
+    }
+
+    /// Paper §3.1: `distance(A1, A2)` = number of nodes mapped to different
+    /// algorithms. Only defined for assignments over the same graph.
+    pub fn distance(&self, other: &Assignment) -> usize {
+        assert_eq!(self.choices.len(), other.choices.len(), "assignments over different graphs");
+        self.choices
+            .iter()
+            .zip(&other.choices)
+            .filter(|(a, b)| a != b)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, Graph, OpKind, PortRef};
+
+    fn conv_op(stride: (usize, usize)) -> OpKind {
+        OpKind::Conv2d {
+            stride,
+            pad: (1, 1),
+            act: Activation::None,
+            has_bias: false,
+            has_residual: false,
+        }
+    }
+
+    #[test]
+    fn winograd_applicability_mirrors_table1() {
+        let reg = AlgorithmRegistry::new();
+        // 3x3 stride 1: A, B, C all applicable (like paper's conv3).
+        let a3 = reg.applicable(&conv_op((1, 1)), &[vec![1, 3, 8, 8], vec![4, 3, 3, 3]]);
+        assert!(a3.contains(&Algorithm::ConvWinograd));
+        // 3x3 stride 2: C not applicable (like conv1/conv2 showing "-").
+        let a2 = reg.applicable(&conv_op((2, 2)), &[vec![1, 3, 8, 8], vec![4, 3, 3, 3]]);
+        assert!(!a2.contains(&Algorithm::ConvWinograd));
+        // 1x1: gets the pointwise GEMM specialization.
+        let a1 = reg.applicable(&conv_op((1, 1)), &[vec![1, 3, 8, 8], vec![4, 3, 1, 1]]);
+        assert!(a1.contains(&Algorithm::Conv1x1Gemm));
+        assert!(!a1.contains(&Algorithm::ConvWinograd));
+    }
+
+    #[test]
+    fn default_is_first_applicable() {
+        let reg = AlgorithmRegistry::new();
+        assert_eq!(
+            reg.default_algorithm(&conv_op((1, 1)), &[vec![1, 3, 8, 8], vec![4, 3, 3, 3]]),
+            Algorithm::ConvIm2col
+        );
+        assert_eq!(reg.default_algorithm(&OpKind::Relu, &[vec![1, 3, 8, 8]]), Algorithm::Passthrough);
+    }
+
+    #[test]
+    fn assignment_default_and_distance() {
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+        let w = g.add1(OpKind::weight(vec![4, 3, 3, 3], 1), &[], "w");
+        let c = g.add1(conv_op((1, 1)), &[x, w], "c");
+        let r = g.add1(OpKind::Relu, &[c], "r");
+        g.outputs = vec![PortRef::of(r)];
+
+        let reg = AlgorithmRegistry::new();
+        let a0 = Assignment::default_for(&g, &reg);
+        assert_eq!(a0.get(c), Some(Algorithm::ConvIm2col));
+        assert_eq!(a0.get(w), None); // weights carry no algorithm
+        let mut a1 = a0.clone();
+        a1.set(c, Algorithm::ConvWinograd);
+        assert_eq!(a0.distance(&a1), 1);
+        assert_eq!(a0.distance(&a0), 0);
+    }
+
+    #[test]
+    fn tunable_ids_only_multi_algorithm_nodes() {
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+        let w = g.add1(OpKind::weight(vec![4, 3, 3, 3], 1), &[], "w");
+        let c = g.add1(conv_op((1, 1)), &[x, w], "c");
+        let r = g.add1(OpKind::Relu, &[c], "r");
+        g.outputs = vec![PortRef::of(r)];
+        let reg = AlgorithmRegistry::new();
+        let a = Assignment::default_for(&g, &reg);
+        let tunable = a.tunable_ids(&g, &reg);
+        assert_eq!(tunable, vec![c]); // relu/input have one algorithm
+    }
+
+    #[test]
+    #[should_panic(expected = "constant-space")]
+    fn cannot_assign_weight_node() {
+        let mut g = Graph::new();
+        let w = g.add1(OpKind::weight(vec![2, 2], 0), &[], "w");
+        let m = g.add1(OpKind::MatMul, &[w, w], "m");
+        g.outputs = vec![PortRef::of(m)];
+        let reg = AlgorithmRegistry::new();
+        let mut a = Assignment::default_for(&g, &reg);
+        a.set(w, Algorithm::Passthrough);
+    }
+
+    #[test]
+    fn algorithm_name_roundtrip() {
+        for a in [
+            Algorithm::ConvIm2col,
+            Algorithm::ConvDirect,
+            Algorithm::ConvWinograd,
+            Algorithm::Conv1x1Gemm,
+            Algorithm::GemmBlocked,
+            Algorithm::GemmNaive,
+            Algorithm::Passthrough,
+        ] {
+            assert_eq!(Algorithm::from_name(a.name()), Some(a));
+        }
+        assert_eq!(Algorithm::from_name("bogus"), None);
+    }
+}

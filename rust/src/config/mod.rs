@@ -1,0 +1,224 @@
+//! Run configuration: a JSON config file merged with CLI overrides — the
+//! "real config system" for the launcher (`eadgo` CLI).
+
+use crate::cost::CostFunction;
+use crate::models::ModelConfig;
+use crate::search::SearchConfig;
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+/// Everything an optimizer invocation needs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: String,
+    pub objective: String,
+    pub alpha: f64,
+    pub inner_distance: Option<usize>,
+    pub max_dequeues: usize,
+    pub seed: u64,
+    pub model_cfg: ModelConfig,
+    /// Profile database path (loaded if present, saved after runs).
+    pub db_path: PathBuf,
+    /// AOT artifacts directory.
+    pub artifacts_dir: PathBuf,
+    /// Cost provider: "sim" (V100 model) or "cpu" (real measurement).
+    pub provider: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "squeezenet".into(),
+            objective: "energy".into(),
+            alpha: 1.05,
+            inner_distance: None,
+            max_dequeues: 400,
+            seed: 7,
+            model_cfg: ModelConfig::default(),
+            db_path: PathBuf::from("profiles.json"),
+            artifacts_dir: PathBuf::from("artifacts"),
+            provider: "sim".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse the objective string: `time`, `energy`, `power`,
+    /// `linear:<w-on-energy>`, `product:<w>`, `power_energy:<w>`.
+    pub fn cost_function(&self) -> anyhow::Result<CostFunction> {
+        parse_objective(&self.objective)
+    }
+
+    pub fn search_config(&self) -> SearchConfig {
+        SearchConfig {
+            alpha: self.alpha,
+            inner_distance: self.inner_distance,
+            max_dequeues: self.max_dequeues,
+            ..Default::default()
+        }
+    }
+
+    /// Load from a JSON file; missing fields keep defaults.
+    pub fn load(path: &Path) -> anyhow::Result<RunConfig> {
+        let v = json::read_file(path)?;
+        let mut cfg = RunConfig::default();
+        if let Some(s) = v.get("model").and_then(Json::as_str) {
+            cfg.model = s.to_string();
+        }
+        if let Some(s) = v.get("objective").and_then(Json::as_str) {
+            cfg.objective = s.to_string();
+        }
+        if let Some(x) = v.get("alpha").and_then(Json::as_f64) {
+            cfg.alpha = x;
+        }
+        if let Some(x) = v.get("inner_distance").and_then(Json::as_usize) {
+            cfg.inner_distance = Some(x);
+        }
+        if let Some(x) = v.get("max_dequeues").and_then(Json::as_usize) {
+            cfg.max_dequeues = x;
+        }
+        if let Some(x) = v.get("seed").and_then(Json::as_f64) {
+            cfg.seed = x as u64;
+        }
+        if let Some(s) = v.get("db_path").and_then(Json::as_str) {
+            cfg.db_path = PathBuf::from(s);
+        }
+        if let Some(s) = v.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(s) = v.get("provider").and_then(Json::as_str) {
+            cfg.provider = s.to_string();
+        }
+        if let Some(m) = v.get("model_config") {
+            if let Some(x) = m.get("batch").and_then(Json::as_usize) {
+                cfg.model_cfg.batch = x;
+            }
+            if let Some(x) = m.get("resolution").and_then(Json::as_usize) {
+                cfg.model_cfg.resolution = x;
+            }
+            if let Some(x) = m.get("width_div").and_then(Json::as_usize) {
+                cfg.model_cfg.width_div = x;
+            }
+            if let Some(x) = m.get("classes").and_then(Json::as_usize) {
+                cfg.model_cfg.classes = x;
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Apply CLI overrides on top.
+    pub fn apply_args(&mut self, args: &crate::util::cli::Args) -> anyhow::Result<()> {
+        if let Some(m) = args.get("model") {
+            self.model = m.to_string();
+        }
+        if let Some(o) = args.get("objective") {
+            self.objective = o.to_string();
+        }
+        self.alpha = args.get_f64("alpha", self.alpha)?;
+        self.max_dequeues = args.get_usize("max-dequeues", self.max_dequeues)?;
+        self.seed = args.get_f64("seed", self.seed as f64)? as u64;
+        if let Some(d) = args.get("inner-distance") {
+            self.inner_distance = Some(
+                d.parse()
+                    .map_err(|_| anyhow::anyhow!("--inner-distance expects an integer"))?,
+            );
+        }
+        if let Some(p) = args.get("db") {
+            self.db_path = PathBuf::from(p);
+        }
+        if let Some(p) = args.get("artifacts") {
+            self.artifacts_dir = PathBuf::from(p);
+        }
+        if let Some(p) = args.get("provider") {
+            self.provider = p.to_string();
+        }
+        self.model_cfg.resolution = args.get_usize("resolution", self.model_cfg.resolution)?;
+        self.model_cfg.width_div = args.get_usize("width-div", self.model_cfg.width_div)?;
+        self.model_cfg.batch = args.get_usize("batch", self.model_cfg.batch)?;
+        Ok(())
+    }
+}
+
+/// Parse an objective spec string into a cost function.
+pub fn parse_objective(spec: &str) -> anyhow::Result<CostFunction> {
+    let (kind, arg) = match spec.split_once(':') {
+        Some((k, a)) => (k, Some(a)),
+        None => (spec, None),
+    };
+    let w = || -> anyhow::Result<f64> {
+        let a = arg.ok_or_else(|| anyhow::anyhow!("objective `{spec}` needs a weight, e.g. `{kind}:0.5`"))?;
+        let w: f64 = a.parse().map_err(|_| anyhow::anyhow!("bad weight `{a}`"))?;
+        anyhow::ensure!((0.0..=1.0).contains(&w), "weight must be in [0,1]");
+        Ok(w)
+    };
+    Ok(match kind {
+        "time" | "best_time" => CostFunction::Time,
+        "energy" | "best_energy" => CostFunction::Energy,
+        "power" | "best_power" => CostFunction::Power,
+        "linear" => CostFunction::linear(w()?),
+        "product" => CostFunction::Product { w: w()? },
+        "power_energy" => CostFunction::power_energy(w()?),
+        _ => anyhow::bail!(
+            "unknown objective `{spec}` (expected time|energy|power|linear:W|product:W|power_energy:W)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_parsing() {
+        assert!(matches!(parse_objective("time").unwrap(), CostFunction::Time));
+        assert!(matches!(parse_objective("energy").unwrap(), CostFunction::Energy));
+        assert!(matches!(parse_objective("power").unwrap(), CostFunction::Power));
+        assert!(matches!(
+            parse_objective("linear:0.3").unwrap(),
+            CostFunction::Linear { .. }
+        ));
+        assert!(parse_objective("linear").is_err());
+        assert!(parse_objective("linear:1.5").is_err());
+        assert!(parse_objective("bogus").is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("eadgo_cfg_test");
+        let path = dir.join("run.json");
+        let mut j = Json::obj();
+        j.set("model", "resnet")
+            .set("objective", "power_energy:0.5")
+            .set("alpha", 1.1)
+            .set("max_dequeues", 50usize)
+            .set("model_config", {
+                let mut m = Json::obj();
+                m.set("resolution", 16usize).set("width_div", 8usize);
+                m
+            });
+        json::write_file(&path, &j).unwrap();
+        let cfg = RunConfig::load(&path).unwrap();
+        assert_eq!(cfg.model, "resnet");
+        assert_eq!(cfg.alpha, 1.1);
+        assert_eq!(cfg.max_dequeues, 50);
+        assert_eq!(cfg.model_cfg.resolution, 16);
+        assert!(cfg.cost_function().is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut cfg = RunConfig::default();
+        let args = crate::util::cli::Args::parse(
+            &["optimize", "--model", "inception", "--alpha", "1.2", "--objective", "time"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+            true,
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.model, "inception");
+        assert_eq!(cfg.alpha, 1.2);
+        assert_eq!(cfg.objective, "time");
+    }
+}

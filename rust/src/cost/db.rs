@@ -1,0 +1,223 @@
+//! The profile database: (node signature, algorithm) → measured cost,
+//! persisted to JSON on disk (paper §3.2: "The measured values are stored
+//! in a database and persisted onto disk for future lookup"; §4.1: "After
+//! the first run, each later run finishes in a few minutes since most
+//! profile results ... have already been cached into database").
+
+use super::NodeCost;
+use crate::algo::Algorithm;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Where a profile came from — useful when mixing simulated and real
+/// measurements in one database.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Provenance(pub String);
+
+#[derive(Debug, Clone)]
+struct Entry {
+    cost: NodeCost,
+    provenance: String,
+}
+
+/// In-memory profile DB with JSON persistence.
+#[derive(Debug, Clone, Default)]
+pub struct CostDb {
+    // signature -> algorithm name -> entry
+    map: BTreeMap<String, BTreeMap<String, Entry>>,
+    /// Monotone counter of lookups that missed (profiling pressure metric).
+    misses: std::cell::Cell<u64>,
+}
+
+impl CostDb {
+    pub fn new() -> CostDb {
+        CostDb::default()
+    }
+
+    pub fn get(&self, sig: &str, algo: Algorithm) -> Option<NodeCost> {
+        let hit = self
+            .map
+            .get(sig)
+            .and_then(|algos| algos.get(algo.name()))
+            .map(|e| e.cost);
+        if hit.is_none() {
+            self.misses.set(self.misses.get() + 1);
+        }
+        hit
+    }
+
+    pub fn contains(&self, sig: &str, algo: Algorithm) -> bool {
+        self.map.get(sig).is_some_and(|a| a.contains_key(algo.name()))
+    }
+
+    pub fn insert(&mut self, sig: &str, algo: Algorithm, cost: NodeCost, provenance: &str) {
+        self.map
+            .entry(sig.to_string())
+            .or_default()
+            .insert(algo.name().to_string(), Entry { cost, provenance: provenance.to_string() });
+    }
+
+    /// Number of distinct signatures profiled.
+    pub fn num_signatures(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Total number of (signature, algorithm) entries.
+    pub fn num_entries(&self) -> usize {
+        self.map.values().map(BTreeMap::len).sum()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+
+    /// All entries of a signature (reporting / Table 1).
+    pub fn entries_for(&self, sig: &str) -> Vec<(Algorithm, NodeCost)> {
+        self.map
+            .get(sig)
+            .map(|algos| {
+                algos
+                    .iter()
+                    .filter_map(|(name, e)| Algorithm::from_name(name).map(|a| (a, e.cost)))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("version", 1i64);
+        let mut sigs = Json::obj();
+        for (sig, algos) in &self.map {
+            let mut a_obj = Json::obj();
+            for (name, e) in algos {
+                let mut rec = Json::obj();
+                rec.set("time_ms", e.cost.time_ms)
+                    .set("power_w", e.cost.power_w)
+                    .set("provenance", e.provenance.as_str());
+                a_obj.set(name, rec);
+            }
+            sigs.set(sig, a_obj);
+        }
+        root.set("profiles", sigs);
+        root
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<CostDb> {
+        let mut db = CostDb::new();
+        let profiles = v
+            .get("profiles")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("cost db missing `profiles`"))?;
+        for (sig, algos) in profiles {
+            let algos = algos
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("profiles[{sig}] not an object"))?;
+            for (name, rec) in algos {
+                let algo = Algorithm::from_name(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown algorithm `{name}` in db"))?;
+                let cost = NodeCost {
+                    time_ms: rec.req_f64("time_ms")?,
+                    power_w: rec.req_f64("power_w")?,
+                };
+                let prov = rec.get("provenance").and_then(Json::as_str).unwrap_or("unknown");
+                db.insert(sig, algo, cost, prov);
+            }
+        }
+        Ok(db)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        json::write_file(path, &self.to_json())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<CostDb> {
+        CostDb::from_json(&json::read_file(path)?)
+    }
+
+    /// Load if present, else empty (the first-run-is-slow behaviour).
+    pub fn load_or_default(path: &Path) -> CostDb {
+        if path.exists() {
+            CostDb::load(path).unwrap_or_default()
+        } else {
+            CostDb::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_contains() {
+        let mut db = CostDb::new();
+        let c = NodeCost { time_ms: 0.5, power_w: 100.0 };
+        db.insert("conv2d;x", Algorithm::ConvDirect, c, "sim-v100");
+        assert_eq!(db.get("conv2d;x", Algorithm::ConvDirect), Some(c));
+        assert!(db.contains("conv2d;x", Algorithm::ConvDirect));
+        assert!(!db.contains("conv2d;x", Algorithm::ConvIm2col));
+        assert_eq!(db.get("conv2d;y", Algorithm::ConvDirect), None);
+        assert_eq!(db.misses(), 1);
+        assert_eq!(db.num_signatures(), 1);
+        assert_eq!(db.num_entries(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut db = CostDb::new();
+        db.insert(
+            "conv2d;st=1,1;1x3x8x8;4x3x3x3",
+            Algorithm::ConvIm2col,
+            NodeCost { time_ms: 0.0195, power_w: 144.5 },
+            "sim-v100",
+        );
+        db.insert(
+            "conv2d;st=1,1;1x3x8x8;4x3x3x3",
+            Algorithm::ConvDirect,
+            NodeCost { time_ms: 0.0209, power_w: 84.0 },
+            "sim-v100",
+        );
+        db.insert("matmul;4x8;8x2", Algorithm::GemmBlocked, NodeCost { time_ms: 0.001, power_w: 60.0 }, "cpu");
+        let j = db.to_json();
+        let back = CostDb::from_json(&j).unwrap();
+        assert_eq!(back.num_entries(), 3);
+        assert_eq!(
+            back.get("conv2d;st=1,1;1x3x8x8;4x3x3x3", Algorithm::ConvDirect),
+            Some(NodeCost { time_ms: 0.0209, power_w: 84.0 })
+        );
+    }
+
+    #[test]
+    fn file_roundtrip_and_load_or_default() {
+        let dir = std::env::temp_dir().join("eadgo_costdb_test");
+        let path = dir.join("profiles.json");
+        std::fs::remove_file(&path).ok();
+        let empty = CostDb::load_or_default(&path);
+        assert_eq!(empty.num_entries(), 0);
+        let mut db = CostDb::new();
+        db.insert("relu;1x4x8x8", Algorithm::Passthrough, NodeCost { time_ms: 0.001, power_w: 45.0 }, "sim");
+        db.save(&path).unwrap();
+        let back = CostDb::load_or_default(&path);
+        assert_eq!(back.num_entries(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn entries_for_lists_all_algorithms() {
+        let mut db = CostDb::new();
+        db.insert("s", Algorithm::ConvIm2col, NodeCost { time_ms: 1.0, power_w: 100.0 }, "x");
+        db.insert("s", Algorithm::ConvWinograd, NodeCost { time_ms: 0.5, power_w: 90.0 }, "x");
+        let mut entries = db.entries_for("s");
+        entries.sort_by_key(|(a, _)| *a);
+        assert_eq!(entries.len(), 2);
+    }
+
+    #[test]
+    fn bad_json_rejected() {
+        assert!(CostDb::from_json(&Json::Null).is_err());
+        let parsed = crate::util::json::parse(r#"{"profiles": {"s": {"bogus_algo": {"time_ms": 1, "power_w": 2}}}}"#).unwrap();
+        assert!(CostDb::from_json(&parsed).is_err());
+    }
+}

@@ -1,0 +1,326 @@
+//! Cost model (paper §3.2): per-node profiles, additive graph costs, and
+//! user-selectable cost functions.
+//!
+//! ```text
+//! Energy(G,A) = Σ_n Energy(n, A(n))      Time(G,A) = Σ_n Time(n, A(n))
+//! Power(G,A)  = Energy(G,A) / Time(G,A)
+//! ```
+//!
+//! Profiles are keyed by node *signature* (operator + attributes + input
+//! shapes) so "nodes (even for different graphs) with the same parameters
+//! only need to be measured once. The measured values are stored in a
+//! database and persisted onto disk for future lookup."
+
+pub mod db;
+
+pub use db::CostDb;
+
+use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};
+use crate::graph::{Graph, NodeId};
+
+/// Measured cost of one (node-signature, algorithm) pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeCost {
+    /// Inference time, milliseconds.
+    pub time_ms: f64,
+    /// Average power, watts.
+    pub power_w: f64,
+}
+
+impl NodeCost {
+    /// Energy in J per 1000 inferences (= mJ per inference = ms × W).
+    pub fn energy_j(&self) -> f64 {
+        self.time_ms * self.power_w
+    }
+}
+
+/// Additive whole-graph cost under one assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct GraphCost {
+    pub time_ms: f64,
+    pub energy_j: f64,
+}
+
+impl GraphCost {
+    pub fn power_w(&self) -> f64 {
+        if self.time_ms > 0.0 {
+            self.energy_j / self.time_ms
+        } else {
+            0.0
+        }
+    }
+
+    pub fn add(&self, c: &NodeCost) -> GraphCost {
+        GraphCost { time_ms: self.time_ms + c.time_ms, energy_j: self.energy_j + c.energy_j() }
+    }
+}
+
+/// The user-facing optimization objective (paper §3.2 lists exactly these).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CostFunction {
+    /// Best inference time.
+    Time,
+    /// Best energy.
+    Energy,
+    /// Minimum average power (energy-to-time ratio).
+    Power,
+    /// `w·E/E₀ + (1-w)·T/T₀` — linear combination of *normalized* energy
+    /// and time (§4.4 normalizes "so that the weight w makes better
+    /// sense"). With norms of 1.0 it is the raw linear combination.
+    Linear { w: f64, t_norm: f64, e_norm: f64 },
+    /// `E^w · T^(1-w)` — the product form.
+    Product { w: f64 },
+    /// `w·P/P₀ + (1-w)·E/E₀` — Table 3's "0.5power+0.5energy" objective.
+    PowerEnergy { w: f64, p_norm: f64, e_norm: f64 },
+}
+
+impl CostFunction {
+    /// Linear combination with unit norms (call [`CostFunction::normalized`]
+    /// with the origin graph's cost before searching).
+    pub fn linear(w: f64) -> CostFunction {
+        assert!((0.0..=1.0).contains(&w), "weight must be in [0,1]");
+        CostFunction::Linear { w, t_norm: 1.0, e_norm: 1.0 }
+    }
+
+    pub fn power_energy(w: f64) -> CostFunction {
+        assert!((0.0..=1.0).contains(&w), "weight must be in [0,1]");
+        CostFunction::PowerEnergy { w, p_norm: 1.0, e_norm: 1.0 }
+    }
+
+    /// Rescale normalization constants to a baseline cost (typically the
+    /// origin graph under the default assignment).
+    pub fn normalized(self, baseline: &GraphCost) -> CostFunction {
+        match self {
+            CostFunction::Linear { w, .. } => CostFunction::Linear {
+                w,
+                t_norm: baseline.time_ms.max(1e-12),
+                e_norm: baseline.energy_j.max(1e-12),
+            },
+            CostFunction::PowerEnergy { w, .. } => CostFunction::PowerEnergy {
+                w,
+                p_norm: baseline.power_w().max(1e-12),
+                e_norm: baseline.energy_j.max(1e-12),
+            },
+            other => other,
+        }
+    }
+
+    pub fn eval(&self, gc: &GraphCost) -> f64 {
+        match self {
+            CostFunction::Time => gc.time_ms,
+            CostFunction::Energy => gc.energy_j,
+            CostFunction::Power => gc.power_w(),
+            CostFunction::Linear { w, t_norm, e_norm } => {
+                w * gc.energy_j / e_norm + (1.0 - w) * gc.time_ms / t_norm
+            }
+            CostFunction::Product { w } => {
+                gc.energy_j.max(1e-12).powf(*w) * gc.time_ms.max(1e-12).powf(1.0 - w)
+            }
+            CostFunction::PowerEnergy { w, p_norm, e_norm } => {
+                w * gc.power_w() / p_norm + (1.0 - w) * gc.energy_j / e_norm
+            }
+        }
+    }
+
+    /// Is the objective a per-node-separable (additive) function? The paper
+    /// §3.3: "for any cost function that is a linear combination of
+    /// inference time and energy, the inner search with d=1 is sufficient".
+    /// Power and Product are ratios/products of sums — not separable.
+    pub fn is_additive(&self) -> bool {
+        matches!(self, CostFunction::Time | CostFunction::Energy | CostFunction::Linear { .. })
+    }
+
+    /// The inner-search neighborhood distance the paper recommends (§4.1):
+    /// d=1 for linear combinations, d=2 otherwise.
+    pub fn recommended_inner_distance(&self) -> usize {
+        if self.is_additive() {
+            1
+        } else {
+            2
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            CostFunction::Time => "best_time".into(),
+            CostFunction::Energy => "best_energy".into(),
+            CostFunction::Power => "best_power".into(),
+            CostFunction::Linear { w, .. } => format!("{:.2}*energy+{:.2}*time", w, 1.0 - w),
+            CostFunction::Product { w } => format!("energy^{w:.2}*time^{:.2}", 1.0 - w),
+            CostFunction::PowerEnergy { w, .. } => {
+                format!("{:.2}*power+{:.2}*energy", w, 1.0 - w)
+            }
+        }
+    }
+}
+
+/// Per-graph cost lookup table: for every runtime node, the cost of each
+/// applicable algorithm, resolved once from the database. This is the inner
+/// search's working set — after `build`, cost evaluation never touches the
+/// DB or the graph again (hot-path optimization, see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct GraphCostTable {
+    /// entries[node] = applicable (algorithm, cost); empty for zero-cost nodes.
+    entries: Vec<Vec<(Algorithm, NodeCost)>>,
+}
+
+impl GraphCostTable {
+    /// Assemble from pre-resolved per-node entries (the optimizer's fused
+    /// profile+resolve path).
+    pub fn from_entries(entries: Vec<Vec<(Algorithm, NodeCost)>>) -> GraphCostTable {
+        GraphCostTable { entries }
+    }
+
+    /// Build from a profiled database. Errors if any (signature, algorithm)
+    /// pair is missing — run the profiler first.
+    pub fn build(g: &Graph, reg: &AlgorithmRegistry, db: &CostDb) -> anyhow::Result<GraphCostTable> {
+        let shapes = g
+            .infer_shapes()
+            .map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
+        GraphCostTable::build_with(g, &shapes, reg, db)
+    }
+
+    /// As [`GraphCostTable::build`] with pre-computed shapes (search hot path).
+    pub fn build_with(
+        g: &Graph,
+        shapes: &[Vec<crate::graph::TensorShape>],
+        reg: &AlgorithmRegistry,
+        db: &CostDb,
+    ) -> anyhow::Result<GraphCostTable> {
+        let mut entries = vec![Vec::new(); g.len()];
+        for (id, node) in g.nodes() {
+            if node.op.is_constant_space() || matches!(node.op, crate::graph::OpKind::Input { .. }) {
+                continue;
+            }
+            let in_shapes: Vec<_> = node
+                .inputs
+                .iter()
+                .map(|p| shapes[p.node.0][p.port].clone())
+                .collect();
+            let sig = node.op.signature(&in_shapes);
+            for algo in reg.applicable(&node.op, &in_shapes) {
+                let cost = db.get(&sig, algo).ok_or_else(|| {
+                    anyhow::anyhow!("cost db missing ({sig}, {}) — run the profiler", algo.name())
+                })?;
+                entries[id.0].push((algo, cost));
+            }
+        }
+        Ok(GraphCostTable { entries })
+    }
+
+    /// Additive cost of the graph under `a` (paper's cost model).
+    pub fn eval(&self, a: &Assignment) -> GraphCost {
+        let mut gc = GraphCost::default();
+        for (i, algos) in self.entries.iter().enumerate() {
+            if algos.is_empty() {
+                continue;
+            }
+            let chosen = a.get(NodeId(i)).expect("assignment missing runtime node");
+            let cost = algos
+                .iter()
+                .find(|(al, _)| *al == chosen)
+                .unwrap_or_else(|| panic!("algorithm {chosen:?} not applicable to node {i}"))
+                .1;
+            gc = gc.add(&cost);
+        }
+        gc
+    }
+
+    /// Cost options of one node (for the inner search).
+    pub fn node_options(&self, id: NodeId) -> &[(Algorithm, NodeCost)] {
+        &self.entries[id.0]
+    }
+
+    /// Nodes that actually carry cost choices.
+    pub fn costed_ids(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(i, _)| NodeId(i))
+    }
+
+    /// Incremental re-evaluation: `base` with node `id` switched from its
+    /// current algorithm to `new_algo`. O(#algorithms-of-node), not O(n).
+    pub fn eval_swap(
+        &self,
+        base: GraphCost,
+        a: &Assignment,
+        id: NodeId,
+        new_algo: Algorithm,
+    ) -> GraphCost {
+        let old_algo = a.get(id).expect("swap on non-runtime node");
+        let find = |al: Algorithm| {
+            self.entries[id.0]
+                .iter()
+                .find(|(x, _)| *x == al)
+                .expect("algorithm not applicable")
+                .1
+        };
+        let old = find(old_algo);
+        let new = find(new_algo);
+        GraphCost {
+            time_ms: base.time_ms - old.time_ms + new.time_ms,
+            energy_j: base.energy_j - old.energy_j() + new.energy_j(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_identity() {
+        let c = NodeCost { time_ms: 2.0, power_w: 50.0 };
+        assert_eq!(c.energy_j(), 100.0);
+    }
+
+    #[test]
+    fn graph_cost_accumulates() {
+        let gc = GraphCost::default()
+            .add(&NodeCost { time_ms: 1.0, power_w: 100.0 })
+            .add(&NodeCost { time_ms: 3.0, power_w: 50.0 });
+        assert_eq!(gc.time_ms, 4.0);
+        assert_eq!(gc.energy_j, 250.0);
+        assert!((gc.power_w() - 62.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_functions_evaluate() {
+        let gc = GraphCost { time_ms: 2.0, energy_j: 100.0 };
+        assert_eq!(CostFunction::Time.eval(&gc), 2.0);
+        assert_eq!(CostFunction::Energy.eval(&gc), 100.0);
+        assert_eq!(CostFunction::Power.eval(&gc), 50.0);
+        let lin = CostFunction::linear(0.5);
+        assert!((lin.eval(&gc) - (0.5 * 100.0 + 0.5 * 2.0)).abs() < 1e-12);
+        let prod = CostFunction::Product { w: 0.5 };
+        assert!((prod.eval(&gc) - (100.0f64.sqrt() * 2.0f64.sqrt())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn normalization_makes_baseline_unit_cost() {
+        let baseline = GraphCost { time_ms: 2.0, energy_j: 100.0 };
+        let lin = CostFunction::linear(0.3).normalized(&baseline);
+        assert!((lin.eval(&baseline) - 1.0).abs() < 1e-12);
+        let pe = CostFunction::power_energy(0.5).normalized(&baseline);
+        assert!((pe.eval(&baseline) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn additivity_classification() {
+        assert!(CostFunction::Time.is_additive());
+        assert!(CostFunction::Energy.is_additive());
+        assert!(CostFunction::linear(0.7).is_additive());
+        assert!(!CostFunction::Power.is_additive());
+        assert!(!CostFunction::Product { w: 0.5 }.is_additive());
+        assert_eq!(CostFunction::linear(0.7).recommended_inner_distance(), 1);
+        assert_eq!(CostFunction::Power.recommended_inner_distance(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "weight")]
+    fn linear_weight_range_checked() {
+        CostFunction::linear(1.5);
+    }
+}

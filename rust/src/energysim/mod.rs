@@ -1,0 +1,390 @@
+//! Energy/power simulator — the substitute for the paper's V100 + nvidia-smi
+//! measurement substrate (see DESIGN.md §Hardware-Adaptation).
+//!
+//! The model is a classic two-resource roofline with a utilization-driven
+//! power curve:
+//!
+//! ```text
+//! t_compute = flops  / (peak_flops * eff_c(algo))
+//! t_memory  = bytes  / (peak_bw    * eff_m(algo))
+//! time      = max(t_compute, t_memory) + launch_overhead
+//! P         = P_idle + (P_max - P_idle) * intensity(algo)
+//!                     * (0.7 * U_compute + 0.3 * U_memory)
+//! energy    = P * time
+//! ```
+//!
+//! where `U_compute = t_compute/time`, `U_memory = t_memory/time`. Because
+//! different algorithms execute *different work* (Winograd multiplies 2.25×
+//! fewer, im2col moves ~3× more bytes) and run the units at different
+//! intensities, the simulator reproduces the paper's Table-1 phenomenon:
+//! a slower algorithm can draw so much less power that it wins on energy —
+//! the signal the whole optimization exploits.
+//!
+//! "Measurement" adds a small deterministic, seed-hashed noise so that
+//! (a) repeated profiles are reproducible, and (b) the cost model's
+//! estimates differ from "actual" whole-graph runs the way Table 2 shows
+//! (actual time a few % higher: per-node dispatch overhead; actual power a
+//! few % lower: idle gaps between kernels).
+
+pub mod work;
+
+use crate::algo::Algorithm;
+use crate::graph::canonical::Fnv;
+pub use work::{node_work, Work};
+
+/// Static description of the simulated device.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Peak f32 throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Peak memory bandwidth, bytes/s.
+    pub peak_bw: f64,
+    /// Idle (base) board power, W.
+    pub idle_power: f64,
+    /// Board power limit (TDP), W.
+    pub max_power: f64,
+    /// Fixed per-kernel launch overhead, seconds.
+    pub launch_overhead_s: f64,
+    /// Per-node framework dispatch overhead in whole-graph runs, seconds
+    /// (MetaFlow-engine analogue; the reason "actual" time > estimated).
+    pub dispatch_overhead_s: f64,
+    /// Fraction of launch overhead hidden by pipelining in whole-graph runs.
+    pub launch_overlap: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA Tesla V100 (PCIe 16GB): 14 TFLOP/s fp32, 900 GB/s HBM2,
+    /// ~40 W idle, 250–300 W TDP. Overheads from published kernel-launch
+    /// microbenchmarks (~5 µs) plus a framework dispatch cost.
+    pub fn v100() -> GpuSpec {
+        GpuSpec {
+            name: "sim-v100".into(),
+            peak_flops: 14.0e12,
+            peak_bw: 900.0e9,
+            idle_power: 40.0,
+            max_power: 300.0,
+            launch_overhead_s: 5.0e-6,
+            dispatch_overhead_s: 2.2e-6,
+            launch_overlap: 0.35,
+        }
+    }
+
+    /// A single-core CPU-ish device, used when interpreting real PJRT
+    /// wallclock measurements (power model only; time is measured).
+    pub fn cpu_1core() -> GpuSpec {
+        GpuSpec {
+            name: "cpu-1core".into(),
+            peak_flops: 5.0e9,
+            peak_bw: 10.0e9,
+            idle_power: 10.0,
+            max_power: 35.0,
+            launch_overhead_s: 1.0e-6,
+            dispatch_overhead_s: 1.0e-6,
+            launch_overlap: 0.0,
+        }
+    }
+}
+
+/// Per-algorithm execution character: how efficiently it drives each
+/// resource, how it scales the nominal work, and how hot it runs the chip.
+/// Calibrated so the Table-1 inversions occur; see module docs.
+#[derive(Debug, Clone, Copy)]
+pub struct AlgoProfile {
+    /// Fraction of peak FLOP/s this algorithm achieves.
+    pub compute_eff: f64,
+    /// Fraction of peak bandwidth this algorithm achieves.
+    pub mem_eff: f64,
+    /// Multiplier on nominal FLOPs (Winograd < 1).
+    pub flops_factor: f64,
+    /// Multiplier on nominal bytes (im2col > 1: patch-matrix traffic).
+    pub bytes_factor: f64,
+    /// Power intensity: how hard the active units draw relative to TDP.
+    pub intensity: f64,
+    /// Occupancy knee, FLOPs: kernels smaller than this underutilize the
+    /// device (wave quantization / tiling inefficiency). Effective compute
+    /// efficiency is scaled by `f/(f + occ_flops)` — GEMM-style algorithms
+    /// amortize small problems better than direct loops, so the knee
+    /// differs per algorithm. This per-(algorithm, size) interaction is
+    /// what makes different nodes flip algorithms at different tradeoff
+    /// weights (the paper's smooth Table-4 frontier).
+    pub occ_flops: f64,
+}
+
+/// The calibrated profile table. The *relative* character mirrors cuDNN
+/// measurements on V100 (GEMM-based convs run hot and fast; direct convs
+/// run cool; Winograd does less arithmetic).
+pub fn algo_profile(algo: Algorithm) -> AlgoProfile {
+    match algo {
+        Algorithm::ConvIm2col => AlgoProfile {
+            compute_eff: 0.58,
+            mem_eff: 0.70,
+            flops_factor: 1.0,
+            bytes_factor: 3.2,
+            intensity: 1.00,
+            occ_flops: 1.5e6,
+        },
+        Algorithm::ConvDirect => AlgoProfile {
+            compute_eff: 0.42,
+            mem_eff: 0.55,
+            flops_factor: 1.0,
+            bytes_factor: 1.0,
+            intensity: 0.45,
+            occ_flops: 6.0e6,
+        },
+        Algorithm::ConvWinograd => AlgoProfile {
+            compute_eff: 0.48,
+            mem_eff: 0.60,
+            flops_factor: 1.0 / 2.25,
+            bytes_factor: 1.9,
+            intensity: 0.82,
+            occ_flops: 3.0e6,
+        },
+        Algorithm::Conv1x1Gemm => AlgoProfile {
+            compute_eff: 0.62,
+            mem_eff: 0.75,
+            flops_factor: 1.0,
+            bytes_factor: 1.0,
+            intensity: 0.90,
+            occ_flops: 1.0e6,
+        },
+        Algorithm::DwDirect => AlgoProfile {
+            // Depthwise is bandwidth-bound (no channel reduction): low
+            // compute efficiency, cool-running.
+            compute_eff: 0.20,
+            mem_eff: 0.60,
+            flops_factor: 1.0,
+            bytes_factor: 1.0,
+            intensity: 0.40,
+            occ_flops: 2.0e6,
+        },
+        Algorithm::DwWinograd => AlgoProfile {
+            compute_eff: 0.26,
+            mem_eff: 0.55,
+            flops_factor: 1.0 / 2.25,
+            bytes_factor: 1.6,
+            intensity: 0.55,
+            occ_flops: 3.0e6,
+        },
+        Algorithm::GemmBlocked => AlgoProfile {
+            compute_eff: 0.65,
+            mem_eff: 0.75,
+            flops_factor: 1.0,
+            bytes_factor: 1.0,
+            intensity: 0.95,
+            occ_flops: 1.0e6,
+        },
+        Algorithm::GemmNaive => AlgoProfile {
+            compute_eff: 0.18,
+            mem_eff: 0.40,
+            flops_factor: 1.0,
+            bytes_factor: 1.0,
+            intensity: 0.45,
+            occ_flops: 8.0e6,
+        },
+        Algorithm::Passthrough => AlgoProfile {
+            compute_eff: 0.25,
+            mem_eff: 0.65,
+            flops_factor: 1.0,
+            bytes_factor: 1.0,
+            intensity: 0.38,
+            occ_flops: 0.5e6,
+        },
+    }
+}
+
+/// Time/power/energy of one node under one algorithm.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimCost {
+    /// Inference time, milliseconds (paper's Time column).
+    pub time_ms: f64,
+    /// Average power, watts (paper's Power column).
+    pub power_w: f64,
+}
+
+impl SimCost {
+    /// Energy per 1000 inferences in joules — numerically equal to
+    /// `time_ms * power_w` (ms × W = mJ per inference = J per 1000).
+    pub fn energy_j(&self) -> f64 {
+        self.time_ms * self.power_w
+    }
+}
+
+/// The simulator: a [`GpuSpec`] plus a calibration seed driving the
+/// deterministic measurement noise.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    pub spec: GpuSpec,
+    pub seed: u64,
+    /// Measurement-noise amplitude (relative, e.g. 0.015 = ±1.5%).
+    pub noise: f64,
+}
+
+impl EnergyModel {
+    pub fn v100(seed: u64) -> EnergyModel {
+        EnergyModel { spec: GpuSpec::v100(), seed, noise: 0.015 }
+    }
+
+    /// Noise multiplier in [1-noise, 1+noise], deterministic per key.
+    fn jitter(&self, key: &str, salt: u64) -> f64 {
+        let mut h = Fnv::default();
+        h.write_u64(self.seed);
+        h.write(key.as_bytes());
+        h.write_u64(salt);
+        let unit = (h.finish() >> 11) as f64 / (1u64 << 53) as f64; // [0,1)
+        1.0 + self.noise * (2.0 * unit - 1.0)
+    }
+
+    /// Ideal (noise-free) roofline cost of executing `work` with `algo`.
+    pub fn ideal_cost(&self, w: &Work, algo: Algorithm) -> SimCost {
+        let p = algo_profile(algo);
+        let flops = w.flops * p.flops_factor;
+        let bytes = w.bytes * p.bytes_factor;
+        // Occupancy: small kernels underutilize the device, with a knee
+        // that depends on the algorithm's launch/tiling granularity.
+        let occ = if flops > 0.0 { (flops / (flops + p.occ_flops)).max(0.05) } else { 1.0 };
+        let t_c = flops / (self.spec.peak_flops * p.compute_eff * occ);
+        let t_m = bytes / (self.spec.peak_bw * p.mem_eff);
+        let t_busy = t_c.max(t_m);
+        let time = t_busy + self.spec.launch_overhead_s;
+        let u_c = if time > 0.0 { t_c / time } else { 0.0 };
+        let u_m = if time > 0.0 { t_m / time } else { 0.0 };
+        // Underoccupied kernels leave units idle: damp the draw by √occ.
+        let draw = (0.7 * u_c + 0.3 * u_m).min(1.0) * p.intensity * occ.sqrt();
+        let power = (self.spec.idle_power
+            + (self.spec.max_power - self.spec.idle_power) * draw)
+            .min(self.spec.max_power);
+        SimCost { time_ms: time * 1e3, power_w: power }
+    }
+
+    /// "Measured" per-node cost: roofline + deterministic measurement noise.
+    /// This is what the profiler writes into the cost database (the paper's
+    /// per-node nvidia-smi measurement step).
+    pub fn measured_cost(&self, sig: &str, w: &Work, algo: Algorithm) -> SimCost {
+        let ideal = self.ideal_cost(w, algo);
+        SimCost {
+            time_ms: ideal.time_ms * self.jitter(sig, 1),
+            power_w: ideal.power_w * self.jitter(sig, 2),
+        }
+    }
+
+    /// "Actual" whole-graph execution (the paper's Table-2 ACTUAL rows):
+    /// sums node busy times, partially hides launch overhead, adds framework
+    /// dispatch per node, and averages power *including the idle slack* —
+    /// so actual time lands a few percent above the additive estimate and
+    /// actual power a bit below it, with the same signs as the paper.
+    pub fn graph_run(&self, nodes: &[(String, Work, Algorithm)]) -> SimCost {
+        let mut sum_t = 0.0; // additive-estimate time (per-node measured)
+        let mut sum_e = 0.0; // additive-estimate energy
+        for (sig, w, algo) in nodes {
+            let c = self.measured_cost(sig, w, *algo);
+            sum_t += c.time_ms * 1e-3;
+            sum_e += c.power_w * c.time_ms * 1e-3;
+        }
+        // Per node: framework dispatch is paid in full, a fraction of the
+        // launch overhead (already inside each per-node time) is hidden by
+        // pipelining. Net per-node extra runs at idle power — so actual
+        // time lands a few % above the additive estimate and actual power
+        // a few % below it (the Table-2 signs).
+        let extra_per_node =
+            self.spec.dispatch_overhead_s - self.spec.launch_overhead_s * self.spec.launch_overlap;
+        let extra_s = nodes.len() as f64 * extra_per_node;
+        let total_s = sum_t + extra_s;
+        let energy_j = sum_e + extra_s.max(0.0) * self.spec.idle_power;
+        let jit = self.jitter("graph_run", nodes.len() as u64);
+        let time_ms = total_s * 1e3 * jit;
+        let power_w = if total_s > 0.0 { energy_j / total_s } else { 0.0 };
+        SimCost { time_ms, power_w: power_w * self.jitter("graph_power", nodes.len() as u64) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv_work() -> Work {
+        // 3x3 conv, 64->64 channels, 32x32 input, batch 1
+        Work {
+            flops: 2.0 * 64.0 * 64.0 * 9.0 * 32.0 * 32.0,
+            bytes: 4.0 * (64.0 * 32.0 * 32.0 * 2.0 + 64.0 * 64.0 * 9.0),
+        }
+    }
+
+    #[test]
+    fn direct_cooler_than_im2col() {
+        let m = EnergyModel::v100(7);
+        let a = m.ideal_cost(&conv_work(), Algorithm::ConvIm2col);
+        let b = m.ideal_cost(&conv_work(), Algorithm::ConvDirect);
+        assert!(b.power_w < a.power_w, "direct {} vs im2col {}", b.power_w, a.power_w);
+        assert!(b.time_ms > a.time_ms, "direct should be slower on compute-bound conv");
+    }
+
+    #[test]
+    fn table1_inversion_exists() {
+        // For a compute-heavy 3x3 conv, Winograd should win on both time and
+        // energy (paper conv3 / algorithm C), and direct should beat im2col
+        // on energy while losing on time (conv1 A vs B character).
+        let m = EnergyModel::v100(7);
+        let w = conv_work();
+        let a = m.ideal_cost(&w, Algorithm::ConvIm2col);
+        let b = m.ideal_cost(&w, Algorithm::ConvDirect);
+        let c = m.ideal_cost(&w, Algorithm::ConvWinograd);
+        assert!(c.time_ms < a.time_ms);
+        assert!(c.energy_j() < a.energy_j());
+        assert!(b.energy_j() < a.energy_j(), "B energy {} vs A {}", b.energy_j(), a.energy_j());
+    }
+
+    #[test]
+    fn power_within_board_limits() {
+        let m = EnergyModel::v100(1);
+        for algo in [
+            Algorithm::ConvIm2col,
+            Algorithm::ConvDirect,
+            Algorithm::ConvWinograd,
+            Algorithm::Passthrough,
+        ] {
+            let c = m.ideal_cost(&conv_work(), algo);
+            assert!(c.power_w >= m.spec.idle_power && c.power_w <= m.spec.max_power);
+        }
+    }
+
+    #[test]
+    fn measurement_noise_small_and_deterministic() {
+        let m = EnergyModel::v100(42);
+        let w = conv_work();
+        let x = m.measured_cost("sig", &w, Algorithm::ConvIm2col);
+        let y = m.measured_cost("sig", &w, Algorithm::ConvIm2col);
+        assert_eq!(x, y);
+        let ideal = m.ideal_cost(&w, Algorithm::ConvIm2col);
+        assert!((x.time_ms / ideal.time_ms - 1.0).abs() <= m.noise + 1e-9);
+    }
+
+    #[test]
+    fn graph_run_slower_than_sum_and_cooler() {
+        let m = EnergyModel::v100(3);
+        let nodes: Vec<(String, Work, Algorithm)> = (0..20)
+            .map(|i| (format!("n{i}"), conv_work(), Algorithm::ConvIm2col))
+            .collect();
+        let run = m.graph_run(&nodes);
+        let est_time: f64 = nodes
+            .iter()
+            .map(|(s, w, a)| m.measured_cost(s, w, *a).time_ms)
+            .sum();
+        let est_energy: f64 = nodes
+            .iter()
+            .map(|(s, w, a)| {
+                let c = m.measured_cost(s, w, *a);
+                c.energy_j()
+            })
+            .sum();
+        let est_power = est_energy / est_time;
+        assert!(run.time_ms > est_time * 0.97, "actual {} vs est {}", run.time_ms, est_time);
+        assert!(run.power_w < est_power * 1.03, "actual {} vs est {}", run.power_w, est_power);
+    }
+
+    #[test]
+    fn energy_is_time_times_power() {
+        let c = SimCost { time_ms: 0.0195, power_w: 144.5 };
+        assert!((c.energy_j() - 2.81775).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,185 @@
+//! Nominal work (FLOPs, bytes) of a node — the input to the roofline model.
+//!
+//! "Nominal" means the algorithm-independent work of the mathematical
+//! operator: direct-convolution FLOPs and minimal tensor traffic. Per-
+//! algorithm scaling (Winograd's multiply reduction, im2col's workspace
+//! traffic) is applied by [`super::algo_profile`].
+
+use crate::graph::{OpKind, TensorShape};
+
+/// FLOPs and bytes moved for one execution of a node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Work {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl Work {
+    pub const ZERO: Work = Work { flops: 0.0, bytes: 0.0 };
+
+    /// Arithmetic intensity, FLOP/byte.
+    pub fn intensity(&self) -> f64 {
+        if self.bytes > 0.0 {
+            self.flops / self.bytes
+        } else {
+            0.0
+        }
+    }
+}
+
+const F32: f64 = 4.0;
+
+fn numel(s: &TensorShape) -> f64 {
+    s.iter().product::<usize>() as f64
+}
+
+/// Nominal work of `op` given its input shapes and inferred output shapes.
+/// Constant-space ops (weights, folds) report zero: they never execute on
+/// the request path.
+pub fn node_work(op: &OpKind, in_shapes: &[TensorShape], out_shapes: &[TensorShape]) -> Work {
+    let in_bytes: f64 = in_shapes.iter().map(numel).sum::<f64>() * F32;
+    let out_bytes: f64 = out_shapes.iter().map(numel).sum::<f64>() * F32;
+    let touch = in_bytes + out_bytes;
+    match op {
+        OpKind::Input { .. } => Work::ZERO,
+        op if op.is_constant_space() => Work::ZERO,
+        OpKind::Conv2d { has_bias, has_residual, act, .. } => {
+            let w = &in_shapes[1];
+            let (k, c, r, s) = (w[0] as f64, w[1] as f64, w[2] as f64, w[3] as f64);
+            let out = &out_shapes[0];
+            let (n, oh, ow) = (out[0] as f64, out[2] as f64, out[3] as f64);
+            let mut flops = 2.0 * n * k * c * r * s * oh * ow;
+            let out_elems = n * k * oh * ow;
+            if *has_bias {
+                flops += out_elems;
+            }
+            if *has_residual {
+                flops += out_elems;
+            }
+            if !matches!(act, crate::graph::Activation::None) {
+                flops += out_elems;
+            }
+            Work { flops, bytes: touch }
+        }
+        OpKind::DwConv2d { has_bias, act, .. } => {
+            let w = &in_shapes[1];
+            let (r, ss) = (w[2] as f64, w[3] as f64);
+            let out = &out_shapes[0];
+            let (n, c, oh, ow) = (out[0] as f64, out[1] as f64, out[2] as f64, out[3] as f64);
+            let mut flops = 2.0 * n * c * r * ss * oh * ow;
+            let out_elems = n * c * oh * ow;
+            if *has_bias {
+                flops += out_elems;
+            }
+            if !matches!(act, crate::graph::Activation::None) {
+                flops += out_elems;
+            }
+            Work { flops, bytes: touch }
+        }
+        OpKind::MatMul => {
+            let (m, k) = (in_shapes[0][0] as f64, in_shapes[0][1] as f64);
+            let n = in_shapes[1][1] as f64;
+            Work { flops: 2.0 * m * k * n, bytes: touch }
+        }
+        OpKind::MaxPool { k, .. } | OpKind::AvgPool { k, .. } => {
+            let window = (k.0 * k.1) as f64;
+            Work { flops: numel(&out_shapes[0]) * window, bytes: touch }
+        }
+        OpKind::GlobalAvgPool => Work { flops: numel(&in_shapes[0]), bytes: touch },
+        OpKind::BatchNorm { .. } => Work { flops: 2.0 * numel(&in_shapes[0]), bytes: touch },
+        OpKind::Relu | OpKind::Sigmoid | OpKind::Add | OpKind::AddRelu | OpKind::Mul => {
+            Work { flops: numel(&out_shapes[0]), bytes: touch }
+        }
+        OpKind::Softmax => Work { flops: 4.0 * numel(&in_shapes[0]), bytes: touch },
+        // Pure data movement.
+        OpKind::Concat { .. } | OpKind::Split { .. } | OpKind::Flatten => {
+            Work { flops: 0.0, bytes: touch }
+        }
+        _ => Work { flops: 0.0, bytes: touch },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Activation;
+
+    #[test]
+    fn conv_flops_formula() {
+        let op = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (1, 1),
+            act: Activation::None,
+            has_bias: false,
+            has_residual: false,
+        };
+        let w = node_work(
+            &op,
+            &[vec![1, 64, 32, 32], vec![64, 64, 3, 3]],
+            &[vec![1, 64, 32, 32]],
+        );
+        let expect = 2.0 * 64.0 * 64.0 * 9.0 * 32.0 * 32.0;
+        assert!((w.flops - expect).abs() < 1.0);
+        assert!(w.bytes > 0.0);
+    }
+
+    #[test]
+    fn bias_act_residual_add_flops() {
+        let base = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (0, 0),
+            act: Activation::None,
+            has_bias: false,
+            has_residual: false,
+        };
+        let fused = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (0, 0),
+            act: Activation::Relu,
+            has_bias: true,
+            has_residual: true,
+        };
+        let ins_base = vec![vec![1, 8, 8, 8], vec![8, 8, 1, 1]];
+        let ins_fused = vec![
+            vec![1, 8, 8, 8],
+            vec![8, 8, 1, 1],
+            vec![8],
+            vec![1, 8, 8, 8],
+        ];
+        let outs = vec![vec![1, 8, 8, 8]];
+        let w0 = node_work(&base, &ins_base, &outs);
+        let w1 = node_work(&fused, &ins_fused, &outs);
+        let out_elems = 8.0 * 8.0 * 8.0;
+        assert!((w1.flops - w0.flops - 3.0 * out_elems).abs() < 1.0);
+    }
+
+    #[test]
+    fn weights_are_free() {
+        let op = OpKind::weight(vec![64, 64, 3, 3], 0);
+        assert_eq!(node_work(&op, &[], &[vec![64, 64, 3, 3]]), Work::ZERO);
+    }
+
+    #[test]
+    fn matmul_flops() {
+        let w = node_work(&OpKind::MatMul, &[vec![4, 8], vec![8, 16]], &[vec![4, 16]]);
+        assert!((w.flops - 2.0 * 4.0 * 8.0 * 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concat_is_pure_traffic() {
+        let w = node_work(
+            &OpKind::Concat { axis: 1 },
+            &[vec![1, 3, 4, 4], vec![1, 5, 4, 4]],
+            &[vec![1, 8, 4, 4]],
+        );
+        assert_eq!(w.flops, 0.0);
+        assert_eq!(w.bytes, 4.0 * (48.0 + 80.0 + 128.0));
+    }
+
+    #[test]
+    fn intensity_math() {
+        let w = Work { flops: 100.0, bytes: 50.0 };
+        assert_eq!(w.intensity(), 2.0);
+        assert_eq!(Work::ZERO.intensity(), 0.0);
+    }
+}

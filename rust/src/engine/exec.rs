@@ -1,0 +1,314 @@
+//! Single-node execution: dispatch an operator to its assigned algorithm's
+//! implementation. Shared by the reference engine, the substitution
+//! equivalence checker, and the CPU profiler.
+
+use crate::algo::Algorithm;
+use crate::graph::op::{eps_val, Activation, OpKind};
+use crate::tensor::{conv, ops, winograd, Tensor};
+
+/// Execute one node. `inputs` follow the op's port conventions; the result
+/// is one tensor per output port.
+pub fn execute_node(
+    op: &OpKind,
+    algo: Algorithm,
+    inputs: &[&Tensor],
+) -> anyhow::Result<Vec<Tensor>> {
+    let one = |t: Tensor| Ok(vec![t]);
+    match op {
+        OpKind::Input { .. } | OpKind::Weight { .. } => {
+            anyhow::bail!("{} nodes are sources, not executable", op.mnemonic())
+        }
+        OpKind::Conv2d { stride, pad, act, has_bias, has_residual } => {
+            let x = inputs[0];
+            let w = inputs[1];
+            let mut idx = 2;
+            let bias = if *has_bias {
+                idx += 1;
+                Some(inputs[idx - 1])
+            } else {
+                None
+            };
+            let residual = has_residual.then(|| inputs[idx]);
+            let mut y = match algo {
+                Algorithm::ConvDirect => conv::conv2d_direct(x, w, bias, *stride, *pad),
+                Algorithm::ConvIm2col => conv::conv2d_im2col(x, w, bias, *stride, *pad),
+                Algorithm::ConvWinograd => {
+                    let (_, _, r, s) = w.dims4();
+                    anyhow::ensure!(
+                        winograd::applicable(r, s, *stride),
+                        "winograd assigned to inapplicable conv ({r}x{s}, stride {stride:?})"
+                    );
+                    winograd::conv2d_winograd(x, w, bias, *pad)
+                }
+                Algorithm::Conv1x1Gemm => {
+                    let (_, _, r, s) = w.dims4();
+                    anyhow::ensure!(
+                        (r, s) == (1, 1) && *pad == (0, 0),
+                        "1x1gemm assigned to non-1x1/padded conv"
+                    );
+                    conv::conv2d_1x1_gemm(x, w, bias, *stride)
+                }
+                other => anyhow::bail!("algorithm {other:?} not valid for conv2d"),
+            };
+            if let Some(r) = residual {
+                y = ops::add(&y, r);
+            }
+            if *act == Activation::Relu {
+                y = ops::relu(&y);
+            }
+            one(y)
+        }
+        OpKind::DwConv2d { stride, pad, act, has_bias } => {
+            let x = inputs[0];
+            let w = inputs[1];
+            let bias = has_bias.then(|| inputs[2]);
+            let mut y = match algo {
+                Algorithm::DwDirect => {
+                    crate::tensor::depthwise::dwconv2d_direct(x, w, bias, *stride, *pad)
+                }
+                Algorithm::DwWinograd => {
+                    let (_, _, r, s) = w.dims4();
+                    anyhow::ensure!(
+                        r == 3 && s == 3 && *stride == (1, 1),
+                        "dw_winograd assigned to inapplicable depthwise conv"
+                    );
+                    crate::tensor::depthwise::dwconv2d_winograd(x, w, bias, *pad)
+                }
+                other => anyhow::bail!("algorithm {other:?} not valid for dwconv2d"),
+            };
+            if *act == Activation::Relu {
+                y = ops::relu(&y);
+            }
+            one(y)
+        }
+        OpKind::MatMul => {
+            let y = match algo {
+                Algorithm::GemmNaive => ops::matmul_naive(inputs[0], inputs[1]),
+                Algorithm::GemmBlocked => ops::matmul_blocked(inputs[0], inputs[1]),
+                other => anyhow::bail!("algorithm {other:?} not valid for matmul"),
+            };
+            one(y)
+        }
+        OpKind::Relu => one(ops::relu(inputs[0])),
+        OpKind::Sigmoid => one(ops::sigmoid(inputs[0])),
+        OpKind::Add => one(ops::add(inputs[0], inputs[1])),
+        OpKind::AddRelu => one(ops::relu(&ops::add(inputs[0], inputs[1]))),
+        OpKind::Mul => one(ops::mul(inputs[0], inputs[1])),
+        OpKind::MaxPool { k, stride, pad } => {
+            one(ops::maxpool_nchw(inputs[0], k.0, k.1, stride.0, stride.1, pad.0, pad.1))
+        }
+        OpKind::AvgPool { k, stride, pad } => {
+            one(ops::avgpool_nchw(inputs[0], k.0, k.1, stride.0, stride.1, pad.0, pad.1))
+        }
+        OpKind::GlobalAvgPool => one(ops::global_avgpool_nchw(inputs[0])),
+        OpKind::BatchNorm { eps } => one(ops::batchnorm_nchw(
+            inputs[0],
+            inputs[1],
+            inputs[2],
+            inputs[3],
+            inputs[4],
+            eps_val(*eps),
+        )),
+        OpKind::Concat { axis } => one(ops::concat_axis(inputs, *axis)),
+        OpKind::Split { axis, sizes } => Ok(ops::split_axis(inputs[0], *axis, sizes)),
+        OpKind::Flatten => one(ops::flatten(inputs[0])),
+        OpKind::Softmax => one(ops::softmax_rows(inputs[0])),
+        OpKind::FoldBnWeight { eps } => {
+            let (w, gamma, var) = (inputs[0], inputs[1], inputs[2]);
+            let (k, c, r, s) = w.dims4();
+            let mut out = w.clone();
+            let e = eps_val(*eps);
+            for ki in 0..k {
+                let scale = gamma.data()[ki] / (var.data()[ki] + e).sqrt();
+                let base = ki * c * r * s;
+                for v in &mut out.data_mut()[base..base + c * r * s] {
+                    *v *= scale;
+                }
+            }
+            one(out)
+        }
+        OpKind::FoldBnBias { eps, has_bias } => {
+            let (b0, rest) = if *has_bias {
+                (Some(inputs[0]), &inputs[1..])
+            } else {
+                (None, inputs)
+            };
+            let (gamma, beta, mean, var) = (rest[0], rest[1], rest[2], rest[3]);
+            let k = gamma.len();
+            let e = eps_val(*eps);
+            let mut out = vec![0.0f32; k];
+            for (ki, o) in out.iter_mut().enumerate() {
+                let scale = gamma.data()[ki] / (var.data()[ki] + e).sqrt();
+                let b = b0.map_or(0.0, |t| t.data()[ki]);
+                *o = (b - mean.data()[ki]) * scale + beta.data()[ki];
+            }
+            one(Tensor::new(vec![k], out))
+        }
+        OpKind::PadKernel { target } => {
+            let w = inputs[0];
+            let (k, c, r, s) = w.dims4();
+            let (tr, ts) = *target;
+            let (dr, ds) = ((tr - r) / 2, (ts - s) / 2);
+            let mut out = Tensor::zeros(&[k, c, tr, ts]);
+            for ki in 0..k {
+                for ci in 0..c {
+                    for ry in 0..r {
+                        for sx in 0..s {
+                            *out.at4_mut(ki, ci, ry + dr, sx + ds) = w.at4(ki, ci, ry, sx);
+                        }
+                    }
+                }
+            }
+            one(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::eps_bits;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn conv_algorithms_agree() {
+        let mut rng = Rng::seed_from(44);
+        let x = Tensor::rand(&[1, 3, 8, 8], &mut rng, -1.0, 1.0);
+        let w = Tensor::rand(&[4, 3, 3, 3], &mut rng, -0.5, 0.5);
+        let op = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (1, 1),
+            act: Activation::Relu,
+            has_bias: false,
+            has_residual: false,
+        };
+        let y_direct = execute_node(&op, Algorithm::ConvDirect, &[&x, &w]).unwrap();
+        let y_im2col = execute_node(&op, Algorithm::ConvIm2col, &[&x, &w]).unwrap();
+        let y_wino = execute_node(&op, Algorithm::ConvWinograd, &[&x, &w]).unwrap();
+        assert_close(y_direct[0].data(), y_im2col[0].data(), 1e-4, 1e-4).unwrap();
+        assert_close(y_direct[0].data(), y_wino[0].data(), 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn conv_residual_and_act_applied_in_order() {
+        // y = relu(conv(x) + res): check a negative pre-activation is clamped
+        let x = Tensor::full(&[1, 1, 2, 2], 1.0);
+        let w = Tensor::full(&[1, 1, 1, 1], -1.0);
+        let res = Tensor::full(&[1, 1, 2, 2], 0.5);
+        let op = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (0, 0),
+            act: Activation::Relu,
+            has_bias: false,
+            has_residual: true,
+        };
+        let y = execute_node(&op, Algorithm::ConvDirect, &[&x, &w, &res]).unwrap();
+        // conv = -1, + res = -0.5, relu -> 0
+        assert!(y[0].data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn winograd_rejected_when_inapplicable() {
+        let x = Tensor::zeros(&[1, 1, 8, 8]);
+        let w = Tensor::zeros(&[1, 1, 3, 3]);
+        let op = OpKind::Conv2d {
+            stride: (2, 2),
+            pad: (1, 1),
+            act: Activation::None,
+            has_bias: false,
+            has_residual: false,
+        };
+        assert!(execute_node(&op, Algorithm::ConvWinograd, &[&x, &w]).is_err());
+    }
+
+    #[test]
+    fn fold_bn_weight_matches_batchnorm() {
+        // conv(x, w') + b' must equal bn(conv(x, w)) — the FuseConvBn rule's
+        // semantic core, checked at the op level.
+        let mut rng = Rng::seed_from(45);
+        let x = Tensor::rand(&[1, 3, 6, 6], &mut rng, -1.0, 1.0);
+        let w = Tensor::rand(&[4, 3, 3, 3], &mut rng, -0.5, 0.5);
+        let gamma = Tensor::rand(&[4], &mut rng, 0.8, 1.2);
+        let beta = Tensor::rand(&[4], &mut rng, -0.1, 0.1);
+        let mean = Tensor::rand(&[4], &mut rng, -0.1, 0.1);
+        let var = Tensor::rand(&[4], &mut rng, 0.5, 1.5);
+        let eps = 1e-5f32;
+
+        let conv_op = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (1, 1),
+            act: Activation::None,
+            has_bias: false,
+            has_residual: false,
+        };
+        let y_conv = execute_node(&conv_op, Algorithm::ConvDirect, &[&x, &w]).unwrap();
+        let y_bn = ops::batchnorm_nchw(&y_conv[0], &gamma, &beta, &mean, &var, eps);
+
+        let wf = execute_node(
+            &OpKind::FoldBnWeight { eps: eps_bits(eps) },
+            Algorithm::Passthrough,
+            &[&w, &gamma, &var],
+        )
+        .unwrap();
+        let bf = execute_node(
+            &OpKind::FoldBnBias { eps: eps_bits(eps), has_bias: false },
+            Algorithm::Passthrough,
+            &[&gamma, &beta, &mean, &var],
+        )
+        .unwrap();
+        let fold_op = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (1, 1),
+            act: Activation::None,
+            has_bias: true,
+            has_residual: false,
+        };
+        let y_folded =
+            execute_node(&fold_op, Algorithm::ConvDirect, &[&x, &wf[0], &bf[0]]).unwrap();
+        assert_close(y_bn.data(), y_folded[0].data(), 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn pad_kernel_preserves_conv_semantics() {
+        // conv1x1(x, w) == conv3x3_pad1(x, pad(w))
+        let mut rng = Rng::seed_from(46);
+        let x = Tensor::rand(&[1, 3, 5, 5], &mut rng, -1.0, 1.0);
+        let w = Tensor::rand(&[2, 3, 1, 1], &mut rng, -0.5, 0.5);
+        let op1 = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (0, 0),
+            act: Activation::None,
+            has_bias: false,
+            has_residual: false,
+        };
+        let y1 = execute_node(&op1, Algorithm::ConvDirect, &[&x, &w]).unwrap();
+        let wp = execute_node(
+            &OpKind::PadKernel { target: (3, 3) },
+            Algorithm::Passthrough,
+            &[&w],
+        )
+        .unwrap();
+        let op3 = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (1, 1),
+            act: Activation::None,
+            has_bias: false,
+            has_residual: false,
+        };
+        let y3 = execute_node(&op3, Algorithm::ConvDirect, &[&x, &wp[0]]).unwrap();
+        assert_close(y1[0].data(), y3[0].data(), 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn split_produces_multiple_ports() {
+        let x = Tensor::new(vec![1, 4, 1, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let op = OpKind::Split { axis: 1, sizes: vec![1, 3] };
+        let outs = execute_node(&op, Algorithm::Passthrough, &[&x]).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].data(), &[1.0]);
+        assert_eq!(outs[1].data(), &[2.0, 3.0, 4.0]);
+    }
+
+    use crate::tensor::ops;
+}

@@ -1,0 +1,34 @@
+//! The inference engine: executes a `(Graph, Assignment)` pair.
+//!
+//! This substitutes for MetaFlow's built-in engine (the paper runs optimized
+//! graphs "on the MetaFlow's built-in inference engine"). Two backends:
+//!
+//! - [`reference`]: pure-rust execution through [`crate::tensor`], each node
+//!   dispatched to its *assigned algorithm* — the semantic ground truth used
+//!   to verify substitutions and to time algorithms on the host.
+//! - [`pjrt`]: per-node-signature AOT artifacts (JAX/Pallas-lowered HLO)
+//!   executed through the PJRT CPU client; falls back to reference for
+//!   signatures without an artifact.
+//!
+//! Weight tensors are realized deterministically from `(seed, kind)` by
+//! [`weights::realize`]; weight-space constant ops (BN folds, kernel pads,
+//! filter concats) are evaluated once at plan time by the same node
+//! executor, so the request path touches only runtime ops.
+
+pub mod exec;
+pub mod pjrt;
+pub mod reference;
+pub mod weights;
+
+pub use reference::ReferenceEngine;
+
+use crate::tensor::Tensor;
+
+/// Uniform result type for engine runs.
+#[derive(Debug)]
+pub struct RunOutput {
+    /// Graph output tensors, in `graph.outputs` order.
+    pub outputs: Vec<Tensor>,
+    /// Wallclock of the run (seconds), excluding plan/fold time.
+    pub wall_s: f64,
+}

@@ -1,0 +1,151 @@
+//! PJRT-backed engine: executes runtime nodes through AOT JAX/Pallas
+//! artifacts when one matches the node's `(signature, algorithm)` key, and
+//! falls back to the reference implementation otherwise.
+
+use super::exec::execute_node;
+use super::reference::ReferenceEngine;
+use super::RunOutput;
+use crate::algo::{Algorithm, Assignment};
+use crate::graph::{Graph, OpKind};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Execution statistics of a hybrid run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HybridStats {
+    /// Nodes executed through a PJRT artifact.
+    pub pjrt_nodes: usize,
+    /// Nodes executed through the reference fallback.
+    pub reference_nodes: usize,
+}
+
+/// A prepared hybrid execution plan: weights realized + constants folded
+/// (once), per-node artifact keys resolved (once). Serving reuses it across
+/// requests — the §Perf serving-path optimization.
+pub struct PjrtPlan {
+    plan: crate::engine::reference::Plan,
+    input_ids: Vec<crate::graph::NodeId>,
+    /// Per scheduled node: Some(artifact key) if the runtime has it.
+    keys: Vec<Option<String>>,
+}
+
+/// Engine dispatching per-node to PJRT artifacts with reference fallback.
+pub struct PjrtEngine<'rt> {
+    pub runtime: &'rt Runtime,
+    reference: ReferenceEngine,
+}
+
+impl<'rt> PjrtEngine<'rt> {
+    pub fn new(runtime: &'rt Runtime) -> PjrtEngine<'rt> {
+        PjrtEngine { runtime, reference: ReferenceEngine::new() }
+    }
+
+    /// Artifact key of a node: `<signature>::<algorithm>`.
+    pub fn node_key(sig: &str, algo: Algorithm) -> String {
+        format!("{sig}::{}", algo.name())
+    }
+
+    /// Build a reusable plan: fold constants, resolve artifact keys.
+    pub fn prepare(&self, g: &Graph, a: &Assignment) -> anyhow::Result<PjrtPlan> {
+        let plan = self.reference.plan(g, a)?;
+        let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!(e))?;
+        let input_ids: Vec<_> = g
+            .nodes()
+            .filter(|(_, n)| matches!(n.op, OpKind::Input { .. }))
+            .map(|(id, _)| id)
+            .collect();
+        let keys = plan
+            .schedule()
+            .iter()
+            .map(|id| {
+                let node = g.node(*id);
+                let in_shapes: Vec<_> = node
+                    .inputs
+                    .iter()
+                    .map(|p| shapes[p.node.0][p.port].clone())
+                    .collect();
+                let algo = a.get(*id).unwrap_or(Algorithm::Passthrough);
+                let key = Self::node_key(&node.op.signature(&in_shapes), algo);
+                self.runtime.has(&key).then_some(key)
+            })
+            .collect();
+        Ok(PjrtPlan { plan, input_ids, keys })
+    }
+
+    /// Execute a prepared plan on concrete inputs.
+    pub fn run_prepared(
+        &self,
+        g: &Graph,
+        a: &Assignment,
+        prepared: &PjrtPlan,
+        inputs: &[Tensor],
+    ) -> anyhow::Result<(RunOutput, HybridStats)> {
+        let t0 = Instant::now();
+        let mut stats = HybridStats::default();
+        let mut values: BTreeMap<(usize, usize), Tensor> = BTreeMap::new();
+        anyhow::ensure!(
+            inputs.len() == prepared.input_ids.len(),
+            "expected {} inputs, got {}",
+            prepared.input_ids.len(),
+            inputs.len()
+        );
+        for (id, t) in prepared.input_ids.iter().zip(inputs) {
+            values.insert((id.0, 0), t.clone());
+        }
+
+        // Weights are realized and the constant subgraph folded in the
+        // prepared plan; only the runtime schedule executes here.
+        for (slot, id) in prepared.plan.schedule().iter().enumerate() {
+            let node = g.node(*id);
+            let ins: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|p| {
+                    values
+                        .get(&(p.node.0, p.port))
+                        .or_else(|| prepared.plan.constant(p.node.0, p.port))
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("node {} input {:?} unavailable", id.0, p)
+                        })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outs = if let Some(key) = &prepared.keys[slot] {
+                stats.pjrt_nodes += 1;
+                self.runtime.execute(key, &ins)?
+            } else {
+                let algo = a.get(*id).unwrap_or(Algorithm::Passthrough);
+                stats.reference_nodes += 1;
+                execute_node(&node.op, algo, &ins)
+                    .map_err(|e| anyhow::anyhow!("node {} ({}): {e}", id.0, node.name))?
+            };
+            for (port, t) in outs.into_iter().enumerate() {
+                values.insert((id.0, port), t);
+            }
+        }
+
+        let outputs = g
+            .outputs
+            .iter()
+            .map(|p| {
+                values
+                    .get(&(p.node.0, p.port))
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("output {:?} not computed", p))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok((RunOutput { outputs, wall_s: t0.elapsed().as_secs_f64() }, stats))
+    }
+
+    /// One-shot convenience: prepare + run.
+    pub fn run(
+        &self,
+        g: &Graph,
+        a: &Assignment,
+        inputs: &[Tensor],
+    ) -> anyhow::Result<(RunOutput, HybridStats)> {
+        let prepared = self.prepare(g, a)?;
+        self.run_prepared(g, a, &prepared, inputs)
+    }
+}

@@ -1,0 +1,322 @@
+//! Reference engine: executes a `(Graph, Assignment)` through the pure-rust
+//! tensor ops, with plan-time constant folding of the weight subgraph.
+
+use super::exec::execute_node;
+use super::weights;
+use super::RunOutput;
+use crate::algo::{Algorithm, Assignment};
+use crate::graph::{Graph, NodeId, OpKind};
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// An execution plan: constant-folded weights + topological schedule of the
+/// runtime nodes. Build once, run many times.
+pub struct Plan {
+    /// Folded constants by (node, port).
+    constants: BTreeMap<(usize, usize), Tensor>,
+    /// Runtime schedule (topo order, constant-space nodes excluded).
+    schedule: Vec<NodeId>,
+    /// Input node ids, in graph order.
+    input_ids: Vec<NodeId>,
+    /// Reference count of each node's outputs (for memory reclamation).
+    uses: Vec<usize>,
+}
+
+impl Plan {
+    /// Constant-folded tensor at (node, port), if that node was folded.
+    pub fn constant(&self, node: usize, port: usize) -> Option<&Tensor> {
+        self.constants.get(&(node, port))
+    }
+
+    /// Runtime schedule (topo order over non-constant nodes).
+    pub fn schedule(&self) -> &[NodeId] {
+        &self.schedule
+    }
+}
+
+/// Pure-rust backend.
+#[derive(Debug, Default)]
+pub struct ReferenceEngine;
+
+impl ReferenceEngine {
+    pub fn new() -> ReferenceEngine {
+        ReferenceEngine
+    }
+
+    /// Build the execution plan: realize weights, fold the constant
+    /// subgraph (BN folds, kernel pads, filter concats), and schedule the
+    /// remaining runtime nodes.
+    pub fn plan(&self, g: &Graph, _a: &Assignment) -> anyhow::Result<Plan> {
+        g.validate().map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
+        let order = g.topo_order().map_err(|e| anyhow::anyhow!(e))?;
+        let mut constants: BTreeMap<(usize, usize), Tensor> = BTreeMap::new();
+        let mut is_const = vec![false; g.len()];
+        let mut schedule = Vec::new();
+        let mut input_ids = Vec::new();
+
+        for id in &order {
+            let node = g.node(*id);
+            match &node.op {
+                OpKind::Input { .. } => input_ids.push(*id),
+                OpKind::Weight { shape, seed, kind } => {
+                    constants.insert((id.0, 0), weights::realize(shape, *seed, *kind));
+                    is_const[id.0] = true;
+                }
+                op => {
+                    // A node is constant-foldable iff all inputs are constant.
+                    let all_const = node.inputs.iter().all(|p| is_const[p.node.0]);
+                    if all_const && op.is_constant_space() {
+                        let ins: Vec<&Tensor> = node
+                            .inputs
+                            .iter()
+                            .map(|p| &constants[&(p.node.0, p.port)])
+                            .collect();
+                        let outs = execute_node(op, Algorithm::Passthrough, &ins)?;
+                        for (port, t) in outs.into_iter().enumerate() {
+                            constants.insert((id.0, port), t);
+                        }
+                        is_const[id.0] = true;
+                    } else if all_const && matches!(op, OpKind::Concat { .. }) {
+                        // Weight-space concat (merging parallel conv filters)
+                        // is a runtime op kind used in constant context.
+                        let ins: Vec<&Tensor> = node
+                            .inputs
+                            .iter()
+                            .map(|p| &constants[&(p.node.0, p.port)])
+                            .collect();
+                        let outs = execute_node(op, Algorithm::Passthrough, &ins)?;
+                        for (port, t) in outs.into_iter().enumerate() {
+                            constants.insert((id.0, port), t);
+                        }
+                        is_const[id.0] = true;
+                    } else {
+                        schedule.push(*id);
+                    }
+                }
+            }
+        }
+
+        // Output-reference counting for tensor reclamation during runs.
+        let mut uses = vec![0usize; g.len()];
+        for (_, node) in g.nodes() {
+            for p in &node.inputs {
+                uses[p.node.0] += 1;
+            }
+        }
+        for out in &g.outputs {
+            uses[out.node.0] += usize::MAX / 2; // outputs never reclaimed
+        }
+
+        Ok(Plan { constants, schedule, input_ids, uses })
+    }
+
+    /// Execute a prepared plan on concrete inputs (one tensor per graph
+    /// `Input` node, in id order).
+    pub fn run_plan(
+        &self,
+        g: &Graph,
+        a: &Assignment,
+        plan: &Plan,
+        inputs: &[Tensor],
+    ) -> anyhow::Result<RunOutput> {
+        anyhow::ensure!(
+            inputs.len() == plan.input_ids.len(),
+            "expected {} inputs, got {}",
+            plan.input_ids.len(),
+            inputs.len()
+        );
+        let t0 = Instant::now();
+        let mut values: BTreeMap<(usize, usize), Tensor> = BTreeMap::new();
+        let mut remaining: Vec<usize> = plan.uses.clone();
+        for (id, t) in plan.input_ids.iter().zip(inputs) {
+            let expect = match &g.node(*id).op {
+                OpKind::Input { shape } => shape.clone(),
+                _ => unreachable!(),
+            };
+            anyhow::ensure!(
+                t.shape() == expect.as_slice(),
+                "input {} shape {:?} != declared {:?}",
+                id.0,
+                t.shape(),
+                expect
+            );
+            values.insert((id.0, 0), t.clone());
+        }
+        for id in &plan.schedule {
+            let node = g.node(*id);
+            let ins: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|p| {
+                    values
+                        .get(&(p.node.0, p.port))
+                        .or_else(|| plan.constants.get(&(p.node.0, p.port)))
+                        .expect("scheduled before input ready")
+                })
+                .collect();
+            let algo = a.get(*id).unwrap_or(Algorithm::Passthrough);
+            let outs = execute_node(&node.op, algo, &ins)
+                .map_err(|e| anyhow::anyhow!("node {} ({}): {e}", id.0, node.name))?;
+            for (port, t) in outs.into_iter().enumerate() {
+                values.insert((id.0, port), t);
+            }
+            // Reclaim tensors whose consumers have all run.
+            for p in &node.inputs {
+                let r = &mut remaining[p.node.0];
+                *r = r.saturating_sub(1);
+                if *r == 0 {
+                    let ports = g.node(p.node).op.num_outputs();
+                    for port in 0..ports {
+                        values.remove(&(p.node.0, port));
+                    }
+                }
+            }
+        }
+        let outputs = g
+            .outputs
+            .iter()
+            .map(|p| {
+                values
+                    .get(&(p.node.0, p.port))
+                    .or_else(|| plan.constants.get(&(p.node.0, p.port)))
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("output {:?} not computed", p))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(RunOutput { outputs, wall_s: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Plan + run in one call.
+    pub fn run(
+        &self,
+        g: &Graph,
+        a: &Assignment,
+        inputs: &[Tensor],
+    ) -> anyhow::Result<RunOutput> {
+        let plan = self.plan(g, a)?;
+        self.run_plan(g, a, &plan, inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::AlgorithmRegistry;
+    use crate::graph::op::eps_bits;
+    use crate::graph::{Activation, PortRef};
+    use crate::subst::RuleSet;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+
+    fn conv(act: Activation, bias: bool) -> OpKind {
+        OpKind::Conv2d { stride: (1, 1), pad: (1, 1), act, has_bias: bias, has_residual: false }
+    }
+
+    fn build_small_graph() -> Graph {
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+        let w1 = g.add1(OpKind::weight(vec![4, 3, 3, 3], 1), &[], "w1");
+        let c1 = g.add1(conv(Activation::None, false), &[x, w1], "c1");
+        let r1 = g.add1(OpKind::Relu, &[c1], "r1");
+        let gamma = g.add1(OpKind::weight_kind(vec![4], 2, crate::graph::op::WeightKind::Gamma), &[], "gamma");
+        let beta = g.add1(OpKind::weight_kind(vec![4], 3, crate::graph::op::WeightKind::Beta), &[], "beta");
+        let mean = g.add1(OpKind::weight_kind(vec![4], 4, crate::graph::op::WeightKind::Mean), &[], "mean");
+        let var = g.add1(OpKind::weight_kind(vec![4], 5, crate::graph::op::WeightKind::Var), &[], "var");
+        let bn = g.add1(OpKind::BatchNorm { eps: eps_bits(1e-5) }, &[r1, gamma, beta, mean, var], "bn");
+        let p = g.add1(OpKind::MaxPool { k: (2, 2), stride: (2, 2), pad: (0, 0) }, &[bn], "pool");
+        g.outputs = vec![PortRef::of(p)];
+        g.validate().unwrap();
+        g
+    }
+
+    #[test]
+    fn runs_and_produces_shapes() {
+        let g = build_small_graph();
+        let reg = AlgorithmRegistry::new();
+        let a = Assignment::default_for(&g, &reg);
+        let eng = ReferenceEngine::new();
+        let mut rng = Rng::seed_from(1);
+        let x = Tensor::rand(&[1, 3, 8, 8], &mut rng, -1.0, 1.0);
+        let out = eng.run(&g, &a, &[x]).unwrap();
+        assert_eq!(out.outputs.len(), 1);
+        assert_eq!(out.outputs[0].shape(), &[1, 4, 4, 4]);
+        assert!(out.outputs[0].all_finite());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let g = build_small_graph();
+        let reg = AlgorithmRegistry::new();
+        let a = Assignment::default_for(&g, &reg);
+        let eng = ReferenceEngine::new();
+        let mut rng = Rng::seed_from(2);
+        let x = Tensor::rand(&[1, 3, 8, 8], &mut rng, -1.0, 1.0);
+        let o1 = eng.run(&g, &a, &[x.clone()]).unwrap();
+        let o2 = eng.run(&g, &a, &[x]).unwrap();
+        assert_eq!(o1.outputs[0], o2.outputs[0]);
+    }
+
+    #[test]
+    fn algorithm_choice_does_not_change_semantics() {
+        let g = build_small_graph();
+        let reg = AlgorithmRegistry::new();
+        let a0 = Assignment::default_for(&g, &reg);
+        let mut a1 = a0.clone();
+        // switch the conv to every applicable algorithm and compare
+        let conv_id = g
+            .nodes()
+            .find(|(_, n)| matches!(n.op, OpKind::Conv2d { .. }))
+            .unwrap()
+            .0;
+        let eng = ReferenceEngine::new();
+        let mut rng = Rng::seed_from(3);
+        let x = Tensor::rand(&[1, 3, 8, 8], &mut rng, -1.0, 1.0);
+        let base = eng.run(&g, &a0, &[x.clone()]).unwrap();
+        for algo in [Algorithm::ConvDirect, Algorithm::ConvWinograd] {
+            a1.set(conv_id, algo);
+            let out = eng.run(&g, &a1, &[x.clone()]).unwrap();
+            assert_close(base.outputs[0].data(), out.outputs[0].data(), 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn substituted_graphs_equivalent_end_to_end() {
+        // Full-loop check: every neighbor produced by the rule set computes
+        // the same function as the original graph.
+        let g = build_small_graph();
+        let reg = AlgorithmRegistry::new();
+        let eng = ReferenceEngine::new();
+        let mut rng = Rng::seed_from(4);
+        let x = Tensor::rand(&[1, 3, 8, 8], &mut rng, -1.0, 1.0);
+        let base = eng.run(&g, &Assignment::default_for(&g, &reg), &[x.clone()]).unwrap();
+        let rs = RuleSet::standard();
+        let neighbors = rs.neighbors(&g);
+        assert!(!neighbors.is_empty(), "expected at least one substitution");
+        for (ng, rule) in neighbors {
+            let a = Assignment::default_for(&ng, &reg);
+            let out = eng.run(&ng, &a, &[x.clone()]).unwrap();
+            assert_close(base.outputs[0].data(), out.outputs[0].data(), 1e-3, 1e-3)
+                .unwrap_or_else(|e| panic!("rule {rule} broke equivalence: {e}"));
+        }
+    }
+
+    #[test]
+    fn wrong_input_shape_rejected() {
+        let g = build_small_graph();
+        let reg = AlgorithmRegistry::new();
+        let a = Assignment::default_for(&g, &reg);
+        let eng = ReferenceEngine::new();
+        let bad = Tensor::zeros(&[1, 3, 4, 4]);
+        assert!(eng.run(&g, &a, &[bad]).is_err());
+    }
+
+    #[test]
+    fn wrong_input_count_rejected() {
+        let g = build_small_graph();
+        let reg = AlgorithmRegistry::new();
+        let a = Assignment::default_for(&g, &reg);
+        let eng = ReferenceEngine::new();
+        assert!(eng.run(&g, &a, &[]).is_err());
+    }
+}

@@ -1,0 +1,74 @@
+//! Deterministic weight realization.
+//!
+//! Every `Weight { shape, seed, kind }` node materializes to the same tensor
+//! in every process and backend: tensor data is drawn from an Rng seeded by
+//! `seed`, with a distribution chosen by `kind` (a BN variance must be
+//! positive, a gamma near one, a filter He-scaled). The JAX side
+//! (`python/compile/model.py`) reproduces the same scheme so PJRT artifacts
+//! and the reference engine agree bit-for-bit on inputs.
+
+use crate::graph::op::WeightKind;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Materialize a weight tensor.
+pub fn realize(shape: &[usize], seed: u64, kind: WeightKind) -> Tensor {
+    let mut rng = Rng::seed_from(0xEAD6_0000_0000_0000 ^ seed);
+    match kind {
+        WeightKind::Filter => {
+            // He-uniform: limit = sqrt(6 / fan_in).
+            let fan_in: usize = match shape.len() {
+                4 => shape[1] * shape[2] * shape[3],
+                2 => shape[0],
+                _ => shape.iter().product::<usize>().max(1),
+            };
+            let limit = (6.0 / fan_in.max(1) as f32).sqrt();
+            Tensor::rand(shape, &mut rng, -limit, limit)
+        }
+        WeightKind::Bias | WeightKind::Beta | WeightKind::Mean => {
+            Tensor::rand(shape, &mut rng, -0.1, 0.1)
+        }
+        WeightKind::Gamma => Tensor::rand(shape, &mut rng, 0.8, 1.2),
+        WeightKind::Var => Tensor::rand(shape, &mut rng, 0.5, 1.5),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_calls() {
+        let a = realize(&[4, 3, 3, 3], 7, WeightKind::Filter);
+        let b = realize(&[4, 3, 3, 3], 7, WeightKind::Filter);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = realize(&[8], 1, WeightKind::Bias);
+        let b = realize(&[8], 2, WeightKind::Bias);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn var_strictly_positive() {
+        let v = realize(&[64], 99, WeightKind::Var);
+        assert!(v.data().iter().all(|&x| x >= 0.5 && x <= 1.5));
+    }
+
+    #[test]
+    fn gamma_near_one() {
+        let g = realize(&[64], 5, WeightKind::Gamma);
+        assert!(g.data().iter().all(|&x| (0.8..=1.2).contains(&x)));
+    }
+
+    #[test]
+    fn filter_he_scaled() {
+        let f = realize(&[16, 64, 3, 3], 3, WeightKind::Filter);
+        let limit = (6.0f32 / (64.0 * 9.0)).sqrt();
+        assert!(f.data().iter().all(|&x| x.abs() <= limit));
+        // and not degenerate
+        assert!(f.data().iter().any(|&x| x.abs() > limit * 0.5));
+    }
+}

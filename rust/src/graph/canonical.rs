@@ -1,0 +1,192 @@
+//! Canonical graph hashing for search-state deduplication.
+//!
+//! The outer search (paper Algorithm 1) enqueues every substitution product;
+//! without dedup the same graph is reachable along many substitution paths
+//! and the queue blows up. We hash each node from its operator signature and
+//! the hashes of its inputs (a Merkle hash over the DAG), then combine the
+//! output-port hashes. Isomorphic graphs — same computation, different node
+//! numbering — collide (by design); distinct computations collide only with
+//! ~2^-64 probability.
+
+use super::{Graph, OpKind};
+
+/// FNV-1a 64-bit, good enough and dependency-free.
+#[derive(Clone, Copy)]
+pub struct Fnv(pub u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+}
+
+impl Fnv {
+    #[inline]
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn op_structural_tag(op: &OpKind, h: &mut Fnv) {
+    h.write(op.mnemonic().as_bytes());
+    match op {
+        OpKind::Input { shape } | OpKind::Weight { shape, .. } => {
+            if let OpKind::Weight { seed, kind, .. } = op {
+                h.write_u64(*seed);
+                h.write(kind.tag().as_bytes());
+            }
+            for d in shape {
+                h.write_usize(*d);
+            }
+        }
+        OpKind::Conv2d { stride, pad, act, has_bias, has_residual } => {
+            h.write_usize(stride.0);
+            h.write_usize(stride.1);
+            h.write_usize(pad.0);
+            h.write_usize(pad.1);
+            h.write(act.tag().as_bytes());
+            h.write(&[*has_bias as u8, *has_residual as u8]);
+        }
+        OpKind::DwConv2d { stride, pad, act, has_bias } => {
+            h.write_usize(stride.0);
+            h.write_usize(stride.1);
+            h.write_usize(pad.0);
+            h.write_usize(pad.1);
+            h.write(act.tag().as_bytes());
+            h.write(&[*has_bias as u8]);
+        }
+        OpKind::MaxPool { k, stride, pad } | OpKind::AvgPool { k, stride, pad } => {
+            for v in [k.0, k.1, stride.0, stride.1, pad.0, pad.1] {
+                h.write_usize(v);
+            }
+        }
+        OpKind::BatchNorm { eps } | OpKind::FoldBnWeight { eps } => {
+            h.write_u64(*eps as u64);
+        }
+        OpKind::FoldBnBias { eps, has_bias } => {
+            h.write_u64(*eps as u64);
+            h.write(&[*has_bias as u8]);
+        }
+        OpKind::Concat { axis } => h.write_usize(*axis),
+        OpKind::Split { axis, sizes } => {
+            h.write_usize(*axis);
+            for s in sizes {
+                h.write_usize(*s);
+            }
+        }
+        OpKind::PadKernel { target } => {
+            h.write_usize(target.0);
+            h.write_usize(target.1);
+        }
+        _ => {}
+    }
+}
+
+/// Merkle-style canonical hash of the graph's computation.
+pub fn graph_hash(g: &Graph) -> u64 {
+    let order = match g.topo_order() {
+        Ok(o) => o,
+        Err(_) => return 0, // invalid graphs all hash to 0; callers validate separately
+    };
+    let mut node_hash = vec![0u64; g.len()];
+    for id in order {
+        let node = g.node(id);
+        let mut h = Fnv::default();
+        op_structural_tag(&node.op, &mut h);
+        for inp in &node.inputs {
+            h.write_u64(node_hash[inp.node.0]);
+            h.write_usize(inp.port);
+        }
+        node_hash[id.0] = h.finish();
+    }
+    let mut h = Fnv::default();
+    h.write(b"outputs");
+    for out in &g.outputs {
+        h.write_u64(node_hash[out.node.0]);
+        h.write_usize(out.port);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, Graph, OpKind, PortRef};
+
+    fn conv_graph(order_swapped: bool) -> Graph {
+        let mut g = Graph::new();
+        // Build with two different node insertion orders but identical structure.
+        if !order_swapped {
+            let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+            let w = g.add1(OpKind::weight(vec![4, 3, 3, 3], 7), &[], "w");
+            let c = g.add1(conv_op(), &[x, w], "c");
+            g.outputs = vec![PortRef::of(c)];
+        } else {
+            let w = g.add1(OpKind::weight(vec![4, 3, 3, 3], 7), &[], "w");
+            let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+            let c = g.add1(conv_op(), &[x, w], "c");
+            g.outputs = vec![PortRef::of(c)];
+        }
+        g
+    }
+
+    fn conv_op() -> OpKind {
+        OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (1, 1),
+            act: Activation::None,
+            has_bias: false,
+            has_residual: false,
+        }
+    }
+
+    #[test]
+    fn isomorphic_graphs_collide() {
+        assert_eq!(graph_hash(&conv_graph(false)), graph_hash(&conv_graph(true)));
+    }
+
+    #[test]
+    fn different_attrs_differ() {
+        let g1 = conv_graph(false);
+        let mut g2 = conv_graph(false);
+        if let OpKind::Conv2d { act, .. } = &mut g2.node_mut(crate::graph::NodeId(2)).op {
+            *act = Activation::Relu;
+        }
+        assert_ne!(graph_hash(&g1), graph_hash(&g2));
+    }
+
+    #[test]
+    fn different_weights_differ() {
+        let g1 = conv_graph(false);
+        let mut g2 = conv_graph(false);
+        if let OpKind::Weight { seed, .. } = &mut g2.node_mut(crate::graph::NodeId(1)).op {
+            *seed = 8;
+        }
+        assert_ne!(graph_hash(&g1), graph_hash(&g2));
+    }
+
+    #[test]
+    fn names_do_not_affect_hash() {
+        let g1 = conv_graph(false);
+        let mut g2 = conv_graph(false);
+        g2.node_mut(crate::graph::NodeId(2)).name = "renamed".into();
+        assert_eq!(graph_hash(&g1), graph_hash(&g2));
+    }
+}

@@ -1,0 +1,402 @@
+//! Computation-graph IR: nodes are operators, edges are tensors (paper §3.1).
+//!
+//! Graphs are immutable-ish DAGs over [`Node`]s identified by dense
+//! [`NodeId`]s. Substitutions clone the graph, rewrite, and call
+//! [`Graph::compact`]; search-state dedup uses [`canonical::graph_hash`].
+
+pub mod canonical;
+pub mod op;
+pub mod serde;
+
+pub use op::{Activation, OpKind};
+
+use std::collections::BTreeMap;
+
+/// Dense node index within a [`Graph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub usize);
+
+/// Reference to one output port of a node (Split has several ports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PortRef {
+    pub node: NodeId,
+    pub port: usize,
+}
+
+impl PortRef {
+    pub fn of(node: NodeId) -> PortRef {
+        PortRef { node, port: 0 }
+    }
+}
+
+/// A graph node: operator + input edges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub op: OpKind,
+    pub inputs: Vec<PortRef>,
+    /// Human-readable label (layer name); not semantically meaningful.
+    pub name: String,
+}
+
+/// A computation graph. `outputs` are the tensors the graph produces.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    nodes: Vec<Node>,
+    pub outputs: Vec<PortRef>,
+}
+
+/// A fully-qualified tensor shape (alias for readability).
+pub type TensorShape = Vec<usize>;
+
+impl Graph {
+    pub fn new() -> Graph {
+        Graph::default()
+    }
+
+    /// Append a node, returning its id. Shape validity is checked lazily by
+    /// [`Graph::validate`] / [`Graph::infer_shapes`].
+    pub fn add(&mut self, op: OpKind, inputs: Vec<PortRef>, name: &str) -> NodeId {
+        let id = NodeId(self.nodes.len());
+        self.nodes.push(Node { op, inputs, name: name.to_string() });
+        id
+    }
+
+    /// Convenience: add with single-port input ids.
+    pub fn add1(&mut self, op: OpKind, inputs: &[NodeId], name: &str) -> NodeId {
+        self.add(op, inputs.iter().map(|&n| PortRef::of(n)).collect(), name)
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id.0]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = NodeId> {
+        (0..self.nodes.len()).map(NodeId)
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = (NodeId, &Node)> {
+        self.nodes.iter().enumerate().map(|(i, n)| (NodeId(i), n))
+    }
+
+    /// Topological order (inputs before consumers). Errors on cycles.
+    pub fn topo_order(&self) -> Result<Vec<NodeId>, String> {
+        let n = self.nodes.len();
+        let mut indegree = vec![0usize; n];
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for inp in &node.inputs {
+                if inp.node.0 >= n {
+                    return Err(format!("node {i} references missing node {}", inp.node.0));
+                }
+                indegree[i] += 1;
+                consumers[inp.node.0].push(i);
+            }
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indegree[i] == 0).collect();
+        // Stable order: process lowest id first so topo order is deterministic.
+        queue.sort_unstable_by(|a, b| b.cmp(a));
+        let mut order = Vec::with_capacity(n);
+        while let Some(i) = queue.pop() {
+            order.push(NodeId(i));
+            for &c in &consumers[i] {
+                indegree[c] -= 1;
+                if indegree[c] == 0 {
+                    // keep deterministic ascending pop order
+                    let pos = queue.binary_search_by(|x| c.cmp(x)).unwrap_or_else(|p| p);
+                    queue.insert(pos, c);
+                }
+            }
+        }
+        if order.len() != n {
+            return Err("graph contains a cycle".into());
+        }
+        Ok(order)
+    }
+
+    /// Infer the output shapes of every node. Errors indicate an invalid graph.
+    pub fn infer_shapes(&self) -> Result<Vec<Vec<TensorShape>>, String> {
+        let order = self.topo_order()?;
+        let mut shapes: Vec<Option<Vec<TensorShape>>> = vec![None; self.nodes.len()];
+        for id in order {
+            let node = &self.nodes[id.0];
+            let mut in_shapes = Vec::with_capacity(node.inputs.len());
+            for inp in &node.inputs {
+                let src = shapes[inp.node.0]
+                    .as_ref()
+                    .ok_or_else(|| format!("node {} input not computed", id.0))?;
+                let shape = src.get(inp.port).ok_or_else(|| {
+                    format!(
+                        "node {} reads port {} of node {} which has {} ports",
+                        id.0,
+                        inp.port,
+                        inp.node.0,
+                        src.len()
+                    )
+                })?;
+                in_shapes.push(shape.clone());
+            }
+            let out = node
+                .op
+                .infer_shapes(&in_shapes)
+                .map_err(|e| format!("node {} ({}): {e}", id.0, node.name))?;
+            shapes[id.0] = Some(out);
+        }
+        Ok(shapes.into_iter().map(Option::unwrap).collect())
+    }
+
+    /// Full validation: DAG, ports in range, shapes consistent, outputs valid.
+    pub fn validate(&self) -> Result<(), String> {
+        let shapes = self.infer_shapes()?;
+        if self.outputs.is_empty() {
+            return Err("graph has no outputs".into());
+        }
+        for out in &self.outputs {
+            let ports = shapes
+                .get(out.node.0)
+                .ok_or_else(|| format!("output references missing node {}", out.node.0))?;
+            if out.port >= ports.len() {
+                return Err(format!("output references invalid port {} of node {}", out.port, out.node.0));
+            }
+        }
+        Ok(())
+    }
+
+    /// Signature of a node (for the cost database): op + attrs + input shapes.
+    pub fn node_signature(&self, id: NodeId, shapes: &[Vec<TensorShape>]) -> String {
+        let node = &self.nodes[id.0];
+        let in_shapes: Vec<TensorShape> = node
+            .inputs
+            .iter()
+            .map(|p| shapes[p.node.0][p.port].clone())
+            .collect();
+        node.op.signature(&in_shapes)
+    }
+
+    /// Drop nodes unreachable (backwards) from the outputs and remap ids.
+    /// Returns the old-id -> new-id map.
+    pub fn compact(&mut self) -> BTreeMap<NodeId, NodeId> {
+        let mut live = vec![false; self.nodes.len()];
+        let mut stack: Vec<usize> = self.outputs.iter().map(|p| p.node.0).collect();
+        while let Some(i) = stack.pop() {
+            if live[i] {
+                continue;
+            }
+            live[i] = true;
+            for inp in &self.nodes[i].inputs {
+                stack.push(inp.node.0);
+            }
+        }
+        let mut map = BTreeMap::new();
+        let mut new_nodes = Vec::with_capacity(self.nodes.len());
+        for (i, node) in self.nodes.drain(..).enumerate() {
+            if live[i] {
+                map.insert(NodeId(i), NodeId(new_nodes.len()));
+                new_nodes.push(node);
+            }
+        }
+        for node in &mut new_nodes {
+            for inp in &mut node.inputs {
+                inp.node = map[&inp.node];
+            }
+        }
+        for out in &mut self.outputs {
+            out.node = map[&out.node];
+        }
+        self.nodes = new_nodes;
+        map
+    }
+
+    /// Rewire every consumer of `from` (and graph outputs) to read `to`.
+    pub fn redirect(&mut self, from: PortRef, to: PortRef) {
+        for node in &mut self.nodes {
+            for inp in &mut node.inputs {
+                if *inp == from {
+                    *inp = to;
+                }
+            }
+        }
+        for out in &mut self.outputs {
+            if *out == from {
+                *out = to;
+            }
+        }
+    }
+
+    /// Consumers of each node port: map from PortRef to consuming node ids.
+    pub fn consumers(&self) -> BTreeMap<PortRef, Vec<NodeId>> {
+        let mut map: BTreeMap<PortRef, Vec<NodeId>> = BTreeMap::new();
+        for (i, node) in self.nodes.iter().enumerate() {
+            for inp in &node.inputs {
+                map.entry(*inp).or_default().push(NodeId(i));
+            }
+        }
+        map
+    }
+
+    /// Count of request-path (non-constant-space) nodes — the `n` in the
+    /// paper's search-complexity discussion.
+    pub fn runtime_node_count(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.op.is_constant_space()).count()
+    }
+
+    /// Pretty one-line-per-node dump for debugging and `eadgo show`.
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        for (i, node) in self.nodes.iter().enumerate() {
+            let ins: Vec<String> = node
+                .inputs
+                .iter()
+                .map(|p| {
+                    if p.port == 0 {
+                        format!("%{}", p.node.0)
+                    } else {
+                        format!("%{}.{}", p.node.0, p.port)
+                    }
+                })
+                .collect();
+            s.push_str(&format!(
+                "%{i} = {}({}) \"{}\"\n",
+                node.op.mnemonic(),
+                ins.join(", "),
+                node.name
+            ));
+        }
+        let outs: Vec<String> = self.outputs.iter().map(|p| format!("%{}.{}", p.node.0, p.port)).collect();
+        s.push_str(&format!("outputs: {}\n", outs.join(", ")));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Graph {
+        // input -> conv(w) -> relu -> output
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+        let w = g.add1(OpKind::weight(vec![4, 3, 3, 3], 1), &[], "w");
+        let c = g.add1(
+            OpKind::Conv2d {
+                stride: (1, 1),
+                pad: (1, 1),
+                act: Activation::None,
+                has_bias: false,
+                has_residual: false,
+            },
+            &[x, w],
+            "conv",
+        );
+        let r = g.add1(OpKind::Relu, &[c], "relu");
+        g.outputs = vec![PortRef::of(r)];
+        g
+    }
+
+    #[test]
+    fn topo_and_validate() {
+        let g = tiny_graph();
+        let order = g.topo_order().unwrap();
+        assert_eq!(order.len(), 4);
+        // conv (id 2) must come after both x (0) and w (1)
+        let pos = |id: usize| order.iter().position(|n| n.0 == id).unwrap();
+        assert!(pos(2) > pos(0) && pos(2) > pos(1));
+        assert!(pos(3) > pos(2));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn shapes_inferred() {
+        let g = tiny_graph();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[2], vec![vec![1, 4, 8, 8]]);
+        assert_eq!(shapes[3], vec![vec![1, 4, 8, 8]]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Graph::new();
+        let a = g.add(OpKind::Relu, vec![PortRef { node: NodeId(1), port: 0 }], "a");
+        let _b = g.add(OpKind::Relu, vec![PortRef::of(a)], "b");
+        assert!(g.topo_order().is_err());
+    }
+
+    #[test]
+    fn missing_input_node_detected() {
+        let mut g = Graph::new();
+        g.add(OpKind::Relu, vec![PortRef { node: NodeId(42), port: 0 }], "a");
+        assert!(g.topo_order().is_err());
+    }
+
+    #[test]
+    fn bad_port_detected() {
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: vec![1, 2, 4, 4] }, &[], "x");
+        // Relu has one output port; reading port 3 is invalid.
+        let r = g.add(OpKind::Relu, vec![PortRef { node: x, port: 3 }], "r");
+        g.outputs = vec![PortRef::of(r)];
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn compact_drops_dead_nodes() {
+        let mut g = tiny_graph();
+        // dead branch
+        let d = g.add1(OpKind::weight(vec![2, 2], 9), &[], "dead");
+        let _d2 = g.add1(OpKind::Relu, &[d], "dead2");
+        assert_eq!(g.len(), 6);
+        g.compact();
+        assert_eq!(g.len(), 4);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn redirect_rewires_consumers_and_outputs() {
+        let mut g = tiny_graph();
+        let conv = NodeId(2);
+        let relu = NodeId(3);
+        // redirect relu's consumers (the graph output) to conv directly
+        g.redirect(PortRef::of(relu), PortRef::of(conv));
+        assert_eq!(g.outputs[0], PortRef::of(conv));
+        g.compact();
+        assert_eq!(g.len(), 3); // relu dropped
+    }
+
+    #[test]
+    fn split_ports_validate() {
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: vec![1, 8, 4, 4] }, &[], "x");
+        let s = g.add1(OpKind::Split { axis: 1, sizes: vec![3, 5] }, &[x], "split");
+        let a = g.add(OpKind::Relu, vec![PortRef { node: s, port: 0 }], "a");
+        let b = g.add(OpKind::Relu, vec![PortRef { node: s, port: 1 }], "b");
+        g.outputs = vec![PortRef::of(a), PortRef::of(b)];
+        g.validate().unwrap();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[s.0], vec![vec![1, 3, 4, 4], vec![1, 5, 4, 4]]);
+    }
+
+    #[test]
+    fn runtime_node_count_excludes_weights() {
+        let g = tiny_graph();
+        assert_eq!(g.runtime_node_count(), 3); // input, conv, relu
+    }
+
+    #[test]
+    fn dump_contains_all_nodes() {
+        let g = tiny_graph();
+        let d = g.dump();
+        assert!(d.contains("conv2d"));
+        assert!(d.contains("outputs:"));
+    }
+}

@@ -1,0 +1,615 @@
+//! Operator kinds, attributes, shape inference, and cost-db signatures.
+//!
+//! Mirrors the paper's §3.1: "Each node is an operator (e.g., convolution,
+//! max pooling, add) and each edge is a tensor."
+//!
+//! Two families of operators:
+//! - **Runtime ops** executed on the request path (conv, pool, relu, ...).
+//! - **Weight-space constant ops** (`Concat` on weights, [`OpKind::FoldBnWeight`],
+//!   [`OpKind::PadKernel`], ...) introduced by substitutions that rewrite
+//!   parameters (e.g. folding batch-norm into conv weights). They depend
+//!   only on `Weight` leaves, so the engine constant-folds them at plan
+//!   time; they cost nothing at inference.
+
+use std::fmt;
+
+/// Activation fused into a producing op (cuDNN-style epilogue fusion).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    None,
+    Relu,
+}
+
+impl Activation {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Activation::None => "none",
+            Activation::Relu => "relu",
+        }
+    }
+}
+
+/// Semantic role of a constant weight tensor — determines the deterministic
+/// initialization distribution at realization time (e.g. a BN variance must
+/// be positive, a BN gamma near 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WeightKind {
+    /// Conv/matmul filter: He-uniform over fan-in.
+    Filter,
+    /// Additive bias: small uniform.
+    Bias,
+    /// BN scale: uniform near 1.
+    Gamma,
+    /// BN shift: small uniform.
+    Beta,
+    /// BN running mean: small uniform.
+    Mean,
+    /// BN running variance: uniform in [0.5, 1.5] (strictly positive).
+    Var,
+}
+
+impl WeightKind {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            WeightKind::Filter => "filter",
+            WeightKind::Bias => "bias",
+            WeightKind::Gamma => "gamma",
+            WeightKind::Beta => "beta",
+            WeightKind::Mean => "mean",
+            WeightKind::Var => "var",
+        }
+    }
+}
+
+/// The operator of a node, with all static attributes.
+///
+/// Input tensor conventions (by input port order):
+/// - `Conv2d`: `[x, w]` + optional bias `[K]` + optional residual (same
+///   shape as output, added pre-activation — ResNet fusion).
+/// - `BatchNorm`: `[x, gamma, beta, mean, var]`.
+/// - `FoldBnWeight`: `[w, gamma, var]` → `w * gamma/sqrt(var+eps)` per
+///   output channel.
+/// - `FoldBnBias`: `[gamma, beta, mean, var]` (+ leading `bias` input when
+///   `has_bias`) → `(bias - mean) * gamma/sqrt(var+eps) + beta`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Graph input placeholder.
+    Input { shape: Vec<usize> },
+    /// Constant weight tensor; contents generated deterministically from
+    /// `seed` with a `kind`-appropriate distribution.
+    Weight { shape: Vec<usize>, seed: u64, kind: WeightKind },
+    Conv2d {
+        stride: (usize, usize),
+        pad: (usize, usize),
+        act: Activation,
+        has_bias: bool,
+        has_residual: bool,
+    },
+    /// Depthwise convolution (channel multiplier 1): weight `[C, 1, R, S]`,
+    /// each channel convolved independently — the MobileNet building block
+    /// (paper §5 future work: "more types of DNNs").
+    DwConv2d {
+        stride: (usize, usize),
+        pad: (usize, usize),
+        act: Activation,
+        has_bias: bool,
+    },
+    MatMul,
+    Relu,
+    Sigmoid,
+    Add,
+    /// Fused residual-add + ReLU (produced by the AddRelu fusion rule).
+    AddRelu,
+    Mul,
+    MaxPool { k: (usize, usize), stride: (usize, usize), pad: (usize, usize) },
+    AvgPool { k: (usize, usize), stride: (usize, usize), pad: (usize, usize) },
+    GlobalAvgPool,
+    BatchNorm { eps: u32 },
+    /// Concatenate along `axis` (axis 1 = channels at runtime; axis 0 used
+    /// in weight space when merging parallel convolutions).
+    Concat { axis: usize },
+    /// Split along `axis` into parts of the given sizes; one output port per part.
+    Split { axis: usize, sizes: Vec<usize> },
+    Flatten,
+    Softmax,
+    // ---- weight-space constant ops ----
+    FoldBnWeight { eps: u32 },
+    FoldBnBias { eps: u32, has_bias: bool },
+    /// Zero-pad a conv kernel [K,C,r,s] spatially (centered) to `target`.
+    PadKernel { target: (usize, usize) },
+}
+
+/// f32 bits <-> attribute-safe epsilon (keeps OpKind Eq/Hash-able).
+pub fn eps_bits(eps: f32) -> u32 {
+    eps.to_bits()
+}
+pub fn eps_val(bits: u32) -> f32 {
+    f32::from_bits(bits)
+}
+
+impl OpKind {
+    /// Filter weight constructor (the overwhelmingly common case).
+    pub fn weight(shape: Vec<usize>, seed: u64) -> OpKind {
+        OpKind::Weight { shape, seed, kind: WeightKind::Filter }
+    }
+
+    /// Weight constructor with an explicit kind.
+    pub fn weight_kind(shape: Vec<usize>, seed: u64, kind: WeightKind) -> OpKind {
+        OpKind::Weight { shape, seed, kind }
+    }
+
+    /// Is this op removed from the request path by constant folding?
+    pub fn is_constant_space(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Weight { .. }
+                | OpKind::FoldBnWeight { .. }
+                | OpKind::FoldBnBias { .. }
+                | OpKind::PadKernel { .. }
+        )
+    }
+
+    /// Number of output ports.
+    pub fn num_outputs(&self) -> usize {
+        match self {
+            OpKind::Split { sizes, .. } => sizes.len(),
+            _ => 1,
+        }
+    }
+
+    /// Short stable mnemonic used in signatures and reports.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Input { .. } => "input",
+            OpKind::Weight { .. } => "weight",
+            OpKind::Conv2d { .. } => "conv2d",
+            OpKind::DwConv2d { .. } => "dwconv2d",
+            OpKind::MatMul => "matmul",
+            OpKind::Relu => "relu",
+            OpKind::Sigmoid => "sigmoid",
+            OpKind::Add => "add",
+            OpKind::AddRelu => "addrelu",
+            OpKind::Mul => "mul",
+            OpKind::MaxPool { .. } => "maxpool",
+            OpKind::AvgPool { .. } => "avgpool",
+            OpKind::GlobalAvgPool => "gavgpool",
+            OpKind::BatchNorm { .. } => "batchnorm",
+            OpKind::Concat { .. } => "concat",
+            OpKind::Split { .. } => "split",
+            OpKind::Flatten => "flatten",
+            OpKind::Softmax => "softmax",
+            OpKind::FoldBnWeight { .. } => "foldbnw",
+            OpKind::FoldBnBias { .. } => "foldbnb",
+            OpKind::PadKernel { .. } => "padkernel",
+        }
+    }
+
+    /// Infer output shapes from input shapes. Errors describe the mismatch —
+    /// they double as graph validation.
+    pub fn infer_shapes(&self, inputs: &[Vec<usize>]) -> Result<Vec<Vec<usize>>, String> {
+        let one = |s: Vec<usize>| Ok(vec![s]);
+        match self {
+            OpKind::Input { shape } => {
+                if inputs.is_empty() {
+                    one(shape.clone())
+                } else {
+                    Err("Input takes no inputs".into())
+                }
+            }
+            OpKind::Weight { shape, .. } => {
+                if inputs.is_empty() {
+                    one(shape.clone())
+                } else {
+                    Err("Weight takes no inputs".into())
+                }
+            }
+            OpKind::Conv2d { stride, pad, has_bias, has_residual, .. } => {
+                let expect = 2 + usize::from(*has_bias) + usize::from(*has_residual);
+                if inputs.len() != expect {
+                    return Err(format!("Conv2d expects {expect} inputs, got {}", inputs.len()));
+                }
+                let x = &inputs[0];
+                let w = &inputs[1];
+                if x.len() != 4 || w.len() != 4 {
+                    return Err(format!("Conv2d expects rank-4 x and w, got {x:?}, {w:?}"));
+                }
+                let (n, c, h, wid) = (x[0], x[1], x[2], x[3]);
+                let (k, wc, r, s) = (w[0], w[1], w[2], w[3]);
+                if c != wc {
+                    return Err(format!("Conv2d channels: input {c} vs weight {wc}"));
+                }
+                if h + 2 * pad.0 < r || wid + 2 * pad.1 < s {
+                    return Err(format!("Conv2d kernel {r}x{s} larger than padded input"));
+                }
+                let oh = (h + 2 * pad.0 - r) / stride.0 + 1;
+                let ow = (wid + 2 * pad.1 - s) / stride.1 + 1;
+                let mut idx = 2;
+                if *has_bias {
+                    if inputs[idx] != vec![k] {
+                        return Err(format!("Conv2d bias must be [{k}], got {:?}", inputs[idx]));
+                    }
+                    idx += 1;
+                }
+                if *has_residual && inputs[idx] != vec![n, k, oh, ow] {
+                    return Err(format!(
+                        "Conv2d residual must be [{n},{k},{oh},{ow}], got {:?}",
+                        inputs[idx]
+                    ));
+                }
+                one(vec![n, k, oh, ow])
+            }
+            OpKind::DwConv2d { stride, pad, has_bias, .. } => {
+                let expect = 2 + usize::from(*has_bias);
+                if inputs.len() != expect {
+                    return Err(format!("DwConv2d expects {expect} inputs, got {}", inputs.len()));
+                }
+                let x = &inputs[0];
+                let w = &inputs[1];
+                if x.len() != 4 || w.len() != 4 {
+                    return Err(format!("DwConv2d expects rank-4 x and w, got {x:?}, {w:?}"));
+                }
+                let (n, c, h, wid) = (x[0], x[1], x[2], x[3]);
+                let (wc, mult, r, s) = (w[0], w[1], w[2], w[3]);
+                if wc != c || mult != 1 {
+                    return Err(format!(
+                        "DwConv2d weight must be [{c},1,R,S], got {w:?}"
+                    ));
+                }
+                if h + 2 * pad.0 < r || wid + 2 * pad.1 < s {
+                    return Err(format!("DwConv2d kernel {r}x{s} larger than padded input"));
+                }
+                let oh = (h + 2 * pad.0 - r) / stride.0 + 1;
+                let ow = (wid + 2 * pad.1 - s) / stride.1 + 1;
+                if *has_bias && inputs[2] != vec![c] {
+                    return Err(format!("DwConv2d bias must be [{c}], got {:?}", inputs[2]));
+                }
+                one(vec![n, c, oh, ow])
+            }
+            OpKind::MatMul => {
+                if inputs.len() != 2 {
+                    return Err("MatMul expects 2 inputs".into());
+                }
+                let (a, b) = (&inputs[0], &inputs[1]);
+                if a.len() != 2 || b.len() != 2 || a[1] != b[0] {
+                    return Err(format!("MatMul shapes incompatible: {a:?} @ {b:?}"));
+                }
+                one(vec![a[0], b[1]])
+            }
+            OpKind::Relu | OpKind::Sigmoid | OpKind::Flatten | OpKind::Softmax => {
+                if inputs.len() != 1 {
+                    return Err(format!("{} expects 1 input", self.mnemonic()));
+                }
+                match self {
+                    OpKind::Flatten => {
+                        let x = &inputs[0];
+                        if x.len() < 2 {
+                            return Err("Flatten expects rank >= 2".into());
+                        }
+                        one(vec![x[0], x[1..].iter().product()])
+                    }
+                    OpKind::Softmax => {
+                        if inputs[0].len() != 2 {
+                            return Err("Softmax expects rank-2".into());
+                        }
+                        one(inputs[0].clone())
+                    }
+                    _ => one(inputs[0].clone()),
+                }
+            }
+            OpKind::Add | OpKind::AddRelu | OpKind::Mul => {
+                if inputs.len() != 2 || inputs[0] != inputs[1] {
+                    return Err(format!(
+                        "{} expects 2 same-shape inputs, got {inputs:?}",
+                        self.mnemonic()
+                    ));
+                }
+                one(inputs[0].clone())
+            }
+            OpKind::MaxPool { k, stride, pad } | OpKind::AvgPool { k, stride, pad } => {
+                if inputs.len() != 1 || inputs[0].len() != 4 {
+                    return Err("pool expects one rank-4 input".into());
+                }
+                let x = &inputs[0];
+                if x[2] + 2 * pad.0 < k.0 || x[3] + 2 * pad.1 < k.1 {
+                    return Err("pool kernel larger than padded input".into());
+                }
+                let oh = (x[2] + 2 * pad.0 - k.0) / stride.0 + 1;
+                let ow = (x[3] + 2 * pad.1 - k.1) / stride.1 + 1;
+                one(vec![x[0], x[1], oh, ow])
+            }
+            OpKind::GlobalAvgPool => {
+                if inputs.len() != 1 || inputs[0].len() != 4 {
+                    return Err("gavgpool expects one rank-4 input".into());
+                }
+                one(vec![inputs[0][0], inputs[0][1], 1, 1])
+            }
+            OpKind::BatchNorm { .. } => {
+                if inputs.len() != 5 {
+                    return Err("BatchNorm expects [x,gamma,beta,mean,var]".into());
+                }
+                let x = &inputs[0];
+                if x.len() != 4 {
+                    return Err("BatchNorm expects rank-4 x".into());
+                }
+                let c = x[1];
+                for (i, p) in inputs[1..].iter().enumerate() {
+                    if p != &vec![c] {
+                        return Err(format!("BatchNorm param {i} must be [{c}], got {p:?}"));
+                    }
+                }
+                one(x.clone())
+            }
+            OpKind::Concat { axis } => {
+                if inputs.is_empty() {
+                    return Err("Concat expects >= 1 input".into());
+                }
+                let rank = inputs[0].len();
+                if *axis >= rank {
+                    return Err(format!("Concat axis {axis} out of range for rank {rank}"));
+                }
+                let mut out = inputs[0].clone();
+                for x in &inputs[1..] {
+                    if x.len() != rank {
+                        return Err("Concat rank mismatch".into());
+                    }
+                    for (d, (a, b)) in out.iter().zip(x.iter()).enumerate() {
+                        if d != *axis && a != b {
+                            return Err(format!("Concat non-axis dim {d} mismatch: {a} vs {b}"));
+                        }
+                    }
+                    out[*axis] += x[*axis];
+                }
+                one(out)
+            }
+            OpKind::Split { axis, sizes } => {
+                if inputs.len() != 1 {
+                    return Err("Split expects 1 input".into());
+                }
+                let x = &inputs[0];
+                if *axis >= x.len() {
+                    return Err(format!("Split axis {axis} out of range"));
+                }
+                if sizes.iter().sum::<usize>() != x[*axis] {
+                    return Err(format!(
+                        "Split sizes {sizes:?} do not sum to dim {}",
+                        x[*axis]
+                    ));
+                }
+                Ok(sizes
+                    .iter()
+                    .map(|&sz| {
+                        let mut s = x.clone();
+                        s[*axis] = sz;
+                        s
+                    })
+                    .collect())
+            }
+            OpKind::FoldBnWeight { .. } => {
+                if inputs.len() != 3 {
+                    return Err("FoldBnWeight expects [w,gamma,var]".into());
+                }
+                let w = &inputs[0];
+                if w.len() != 4 {
+                    return Err("FoldBnWeight expects rank-4 w".into());
+                }
+                let k = w[0];
+                if inputs[1] != vec![k] || inputs[2] != vec![k] {
+                    return Err("FoldBnWeight params must be [K]".into());
+                }
+                one(w.clone())
+            }
+            OpKind::FoldBnBias { has_bias, .. } => {
+                let expect = 4 + usize::from(*has_bias);
+                if inputs.len() != expect {
+                    return Err(format!("FoldBnBias expects {expect} inputs"));
+                }
+                let k = inputs[0][0];
+                for p in inputs {
+                    if p != &vec![k] {
+                        return Err("FoldBnBias inputs must all be [K]".into());
+                    }
+                }
+                one(vec![k])
+            }
+            OpKind::PadKernel { target } => {
+                if inputs.len() != 1 || inputs[0].len() != 4 {
+                    return Err("PadKernel expects one rank-4 weight".into());
+                }
+                let w = &inputs[0];
+                if target.0 < w[2] || target.1 < w[3] {
+                    return Err("PadKernel target smaller than kernel".into());
+                }
+                if (target.0 - w[2]) % 2 != 0 || (target.1 - w[3]) % 2 != 0 {
+                    return Err("PadKernel padding must be symmetric".into());
+                }
+                one(vec![w[0], w[1], target.0, target.1])
+            }
+        }
+    }
+
+    /// Cost-database signature: identifies a node up to everything that
+    /// influences its cost (op, attributes, input shapes) — the paper's
+    /// "nodes with the same parameters only need to be measured once".
+    pub fn signature(&self, input_shapes: &[Vec<usize>]) -> String {
+        let mut s = String::with_capacity(64);
+        s.push_str(self.mnemonic());
+        match self {
+            OpKind::Conv2d { stride, pad, act, has_bias, has_residual } => {
+                s.push_str(&format!(
+                    ";st={},{};pad={},{};act={};b={};res={}",
+                    stride.0, stride.1, pad.0, pad.1, act.tag(), *has_bias as u8, *has_residual as u8
+                ));
+            }
+            OpKind::DwConv2d { stride, pad, act, has_bias } => {
+                s.push_str(&format!(
+                    ";st={},{};pad={},{};act={};b={}",
+                    stride.0, stride.1, pad.0, pad.1, act.tag(), *has_bias as u8
+                ));
+            }
+            OpKind::MaxPool { k, stride, pad } | OpKind::AvgPool { k, stride, pad } => {
+                s.push_str(&format!(
+                    ";k={},{};st={},{};pad={},{}",
+                    k.0, k.1, stride.0, stride.1, pad.0, pad.1
+                ));
+            }
+            OpKind::Concat { axis } => s.push_str(&format!(";ax={axis}")),
+            OpKind::Split { axis, sizes } => {
+                s.push_str(&format!(";ax={axis};sz="));
+                for (i, z) in sizes.iter().enumerate() {
+                    if i > 0 {
+                        s.push('/');
+                    }
+                    s.push_str(&z.to_string());
+                }
+            }
+            _ => {}
+        }
+        for shape in input_shapes {
+            s.push(';');
+            for (i, d) in shape.iter().enumerate() {
+                if i > 0 {
+                    s.push('x');
+                }
+                s.push_str(&d.to_string());
+            }
+        }
+        s
+    }
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.mnemonic())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_inference() {
+        let op = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (1, 1),
+            act: Activation::Relu,
+            has_bias: true,
+            has_residual: false,
+        };
+        let out = op
+            .infer_shapes(&[vec![2, 3, 32, 32], vec![16, 3, 3, 3], vec![16]])
+            .unwrap();
+        assert_eq!(out, vec![vec![2, 16, 32, 32]]);
+    }
+
+    #[test]
+    fn conv_channel_mismatch_rejected() {
+        let op = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (0, 0),
+            act: Activation::None,
+            has_bias: false,
+            has_residual: false,
+        };
+        assert!(op.infer_shapes(&[vec![1, 3, 8, 8], vec![4, 5, 3, 3]]).is_err());
+    }
+
+    #[test]
+    fn conv_residual_shape_checked() {
+        let op = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (1, 1),
+            act: Activation::Relu,
+            has_bias: false,
+            has_residual: true,
+        };
+        assert!(op
+            .infer_shapes(&[vec![1, 3, 8, 8], vec![4, 3, 3, 3], vec![1, 4, 8, 8]])
+            .is_ok());
+        assert!(op
+            .infer_shapes(&[vec![1, 3, 8, 8], vec![4, 3, 3, 3], vec![1, 4, 4, 4]])
+            .is_err());
+    }
+
+    #[test]
+    fn pool_shapes() {
+        let op = OpKind::MaxPool { k: (3, 3), stride: (2, 2), pad: (0, 0) };
+        assert_eq!(
+            op.infer_shapes(&[vec![1, 8, 15, 15]]).unwrap(),
+            vec![vec![1, 8, 7, 7]]
+        );
+    }
+
+    #[test]
+    fn concat_split_shapes() {
+        let cat = OpKind::Concat { axis: 1 };
+        assert_eq!(
+            cat.infer_shapes(&[vec![1, 3, 8, 8], vec![1, 5, 8, 8]]).unwrap(),
+            vec![vec![1, 8, 8, 8]]
+        );
+        let split = OpKind::Split { axis: 1, sizes: vec![3, 5] };
+        assert_eq!(
+            split.infer_shapes(&[vec![1, 8, 8, 8]]).unwrap(),
+            vec![vec![1, 3, 8, 8], vec![1, 5, 8, 8]]
+        );
+        assert!(split.infer_shapes(&[vec![1, 7, 8, 8]]).is_err());
+    }
+
+    #[test]
+    fn matmul_and_flatten() {
+        assert_eq!(
+            OpKind::MatMul.infer_shapes(&[vec![4, 8], vec![8, 3]]).unwrap(),
+            vec![vec![4, 3]]
+        );
+        assert!(OpKind::MatMul.infer_shapes(&[vec![4, 8], vec![7, 3]]).is_err());
+        assert_eq!(
+            OpKind::Flatten.infer_shapes(&[vec![2, 3, 4, 5]]).unwrap(),
+            vec![vec![2, 60]]
+        );
+    }
+
+    #[test]
+    fn weight_space_shapes() {
+        let f = OpKind::FoldBnWeight { eps: eps_bits(1e-5) };
+        assert_eq!(
+            f.infer_shapes(&[vec![4, 3, 3, 3], vec![4], vec![4]]).unwrap(),
+            vec![vec![4, 3, 3, 3]]
+        );
+        let p = OpKind::PadKernel { target: (3, 3) };
+        assert_eq!(
+            p.infer_shapes(&[vec![4, 3, 1, 1]]).unwrap(),
+            vec![vec![4, 3, 3, 3]]
+        );
+        assert!(p.infer_shapes(&[vec![4, 3, 2, 2]]).is_err()); // asymmetric
+    }
+
+    #[test]
+    fn signatures_stable_and_distinct() {
+        let op1 = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (1, 1),
+            act: Activation::Relu,
+            has_bias: true,
+            has_residual: false,
+        };
+        let op2 = OpKind::Conv2d {
+            stride: (2, 2),
+            pad: (1, 1),
+            act: Activation::Relu,
+            has_bias: true,
+            has_residual: false,
+        };
+        let shapes = vec![vec![1, 3, 32, 32], vec![8, 3, 3, 3], vec![8]];
+        let s1 = op1.signature(&shapes);
+        let s2 = op2.signature(&shapes);
+        assert_ne!(s1, s2);
+        assert_eq!(s1, op1.signature(&shapes));
+        assert!(s1.starts_with("conv2d;"));
+    }
+
+    #[test]
+    fn eps_roundtrip() {
+        let e = 1e-5f32;
+        assert_eq!(eps_val(eps_bits(e)), e);
+    }
+}

@@ -1,0 +1,377 @@
+//! Graph (+ assignment) JSON serialization: lets users define custom models
+//! without recompiling, and persists optimizer results ("optimize once,
+//! serve later" — `eadgo optimize --save-plan` / `eadgo run --plan`).
+
+use super::op::{Activation, OpKind, WeightKind};
+use super::{Graph, NodeId, PortRef};
+use crate::algo::{Algorithm, Assignment};
+use crate::util::json::{self, Json};
+use std::path::Path;
+
+fn pair_to_json(p: (usize, usize)) -> Json {
+    Json::Arr(vec![Json::Num(p.0 as f64), Json::Num(p.1 as f64)])
+}
+
+fn pair_from_json(v: &Json, what: &str) -> anyhow::Result<(usize, usize)> {
+    let a = v
+        .as_arr()
+        .filter(|a| a.len() == 2)
+        .ok_or_else(|| anyhow::anyhow!("{what}: expected [a, b]"))?;
+    Ok((
+        a[0].as_usize().ok_or_else(|| anyhow::anyhow!("{what}[0] not a number"))?,
+        a[1].as_usize().ok_or_else(|| anyhow::anyhow!("{what}[1] not a number"))?,
+    ))
+}
+
+fn shape_to_json(s: &[usize]) -> Json {
+    Json::Arr(s.iter().map(|&d| Json::Num(d as f64)).collect())
+}
+
+fn shape_from_json(v: &Json, what: &str) -> anyhow::Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{what} not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("{what} dim not a number")))
+        .collect()
+}
+
+fn act_from(tag: &str) -> anyhow::Result<Activation> {
+    match tag {
+        "none" => Ok(Activation::None),
+        "relu" => Ok(Activation::Relu),
+        other => anyhow::bail!("unknown activation `{other}`"),
+    }
+}
+
+fn wkind_from(tag: &str) -> anyhow::Result<WeightKind> {
+    Ok(match tag {
+        "filter" => WeightKind::Filter,
+        "bias" => WeightKind::Bias,
+        "gamma" => WeightKind::Gamma,
+        "beta" => WeightKind::Beta,
+        "mean" => WeightKind::Mean,
+        "var" => WeightKind::Var,
+        other => anyhow::bail!("unknown weight kind `{other}`"),
+    })
+}
+
+fn op_to_json(op: &OpKind) -> Json {
+    let mut o = Json::obj();
+    o.set("op", op.mnemonic());
+    match op {
+        OpKind::Input { shape } => {
+            o.set("shape", shape_to_json(shape));
+        }
+        OpKind::Weight { shape, seed, kind } => {
+            o.set("shape", shape_to_json(shape))
+                .set("seed", *seed as f64)
+                .set("kind", kind.tag());
+        }
+        OpKind::Conv2d { stride, pad, act, has_bias, has_residual } => {
+            o.set("stride", pair_to_json(*stride))
+                .set("pad", pair_to_json(*pad))
+                .set("act", act.tag())
+                .set("bias", *has_bias)
+                .set("residual", *has_residual);
+        }
+        OpKind::DwConv2d { stride, pad, act, has_bias } => {
+            o.set("stride", pair_to_json(*stride))
+                .set("pad", pair_to_json(*pad))
+                .set("act", act.tag())
+                .set("bias", *has_bias);
+        }
+        OpKind::MaxPool { k, stride, pad } | OpKind::AvgPool { k, stride, pad } => {
+            o.set("k", pair_to_json(*k))
+                .set("stride", pair_to_json(*stride))
+                .set("pad", pair_to_json(*pad));
+        }
+        OpKind::BatchNorm { eps } | OpKind::FoldBnWeight { eps } => {
+            o.set("eps_bits", *eps as f64);
+        }
+        OpKind::FoldBnBias { eps, has_bias } => {
+            o.set("eps_bits", *eps as f64).set("bias", *has_bias);
+        }
+        OpKind::Concat { axis } => {
+            o.set("axis", *axis);
+        }
+        OpKind::Split { axis, sizes } => {
+            o.set("axis", *axis).set("sizes", shape_to_json(sizes));
+        }
+        OpKind::PadKernel { target } => {
+            o.set("target", pair_to_json(*target));
+        }
+        _ => {}
+    }
+    o
+}
+
+fn op_from_json(v: &Json) -> anyhow::Result<OpKind> {
+    let op = v.req_str("op")?;
+    let pair = |key: &str| -> anyhow::Result<(usize, usize)> {
+        pair_from_json(v.get(key).unwrap_or(&Json::Null), key)
+    };
+    let flag = |key: &str| v.get(key).and_then(Json::as_bool).unwrap_or(false);
+    Ok(match op {
+        "input" => OpKind::Input { shape: shape_from_json(v.get("shape").unwrap_or(&Json::Null), "shape")? },
+        "weight" => OpKind::Weight {
+            shape: shape_from_json(v.get("shape").unwrap_or(&Json::Null), "shape")?,
+            seed: v.req_f64("seed")? as u64,
+            kind: wkind_from(v.get("kind").and_then(Json::as_str).unwrap_or("filter"))?,
+        },
+        "conv2d" => OpKind::Conv2d {
+            stride: pair("stride")?,
+            pad: pair("pad")?,
+            act: act_from(v.get("act").and_then(Json::as_str).unwrap_or("none"))?,
+            has_bias: flag("bias"),
+            has_residual: flag("residual"),
+        },
+        "dwconv2d" => OpKind::DwConv2d {
+            stride: pair("stride")?,
+            pad: pair("pad")?,
+            act: act_from(v.get("act").and_then(Json::as_str).unwrap_or("none"))?,
+            has_bias: flag("bias"),
+        },
+        "matmul" => OpKind::MatMul,
+        "relu" => OpKind::Relu,
+        "sigmoid" => OpKind::Sigmoid,
+        "add" => OpKind::Add,
+        "addrelu" => OpKind::AddRelu,
+        "mul" => OpKind::Mul,
+        "maxpool" => OpKind::MaxPool { k: pair("k")?, stride: pair("stride")?, pad: pair("pad")? },
+        "avgpool" => OpKind::AvgPool { k: pair("k")?, stride: pair("stride")?, pad: pair("pad")? },
+        "gavgpool" => OpKind::GlobalAvgPool,
+        "batchnorm" => OpKind::BatchNorm { eps: v.req_f64("eps_bits")? as u32 },
+        "concat" => OpKind::Concat {
+            axis: v.get("axis").and_then(Json::as_usize).unwrap_or(1),
+        },
+        "split" => OpKind::Split {
+            axis: v.get("axis").and_then(Json::as_usize).unwrap_or(1),
+            sizes: shape_from_json(v.get("sizes").unwrap_or(&Json::Null), "sizes")?,
+        },
+        "flatten" => OpKind::Flatten,
+        "softmax" => OpKind::Softmax,
+        "foldbnw" => OpKind::FoldBnWeight { eps: v.req_f64("eps_bits")? as u32 },
+        "foldbnb" => OpKind::FoldBnBias {
+            eps: v.req_f64("eps_bits")? as u32,
+            has_bias: flag("bias"),
+        },
+        "padkernel" => OpKind::PadKernel { target: pair("target")? },
+        other => anyhow::bail!("unknown op `{other}`"),
+    })
+}
+
+/// Serialize a graph to JSON.
+pub fn graph_to_json(g: &Graph) -> Json {
+    let mut root = Json::obj();
+    root.set("version", 1i64);
+    let nodes: Vec<Json> = g
+        .nodes()
+        .map(|(_, node)| {
+            let mut n = op_to_json(&node.op);
+            n.set("name", node.name.as_str());
+            n.set(
+                "inputs",
+                Json::Arr(
+                    node.inputs
+                        .iter()
+                        .map(|p| {
+                            Json::Arr(vec![Json::Num(p.node.0 as f64), Json::Num(p.port as f64)])
+                        })
+                        .collect(),
+                ),
+            );
+            n
+        })
+        .collect();
+    root.set("nodes", Json::Arr(nodes));
+    root.set(
+        "outputs",
+        Json::Arr(
+            g.outputs
+                .iter()
+                .map(|p| Json::Arr(vec![Json::Num(p.node.0 as f64), Json::Num(p.port as f64)]))
+                .collect(),
+        ),
+    );
+    root
+}
+
+/// Deserialize + validate a graph from JSON.
+pub fn graph_from_json(v: &Json) -> anyhow::Result<Graph> {
+    let mut g = Graph::new();
+    let nodes = v
+        .get("nodes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("graph json missing `nodes`"))?;
+    for (i, n) in nodes.iter().enumerate() {
+        let op = op_from_json(n).map_err(|e| anyhow::anyhow!("node {i}: {e}"))?;
+        let inputs = n
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("node {i} missing `inputs`"))?
+            .iter()
+            .map(|p| {
+                let (node, port) = pair_from_json(p, "input ref")?;
+                Ok(PortRef { node: NodeId(node), port })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let name = n.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+        g.add(op, inputs, &name);
+    }
+    let outputs = v
+        .get("outputs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("graph json missing `outputs`"))?;
+    g.outputs = outputs
+        .iter()
+        .map(|p| {
+            let (node, port) = pair_from_json(p, "output ref")?;
+            Ok(PortRef { node: NodeId(node), port })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    g.validate().map_err(|e| anyhow::anyhow!("loaded graph invalid: {e}"))?;
+    Ok(g)
+}
+
+/// Serialize an optimized plan: graph + per-node algorithm assignment.
+pub fn plan_to_json(g: &Graph, a: &Assignment) -> Json {
+    let mut root = graph_to_json(g);
+    let algos: Vec<Json> = g
+        .ids()
+        .map(|id| match a.get(id) {
+            Some(algo) => Json::Str(algo.name().to_string()),
+            None => Json::Null,
+        })
+        .collect();
+    root.set("assignment", Json::Arr(algos));
+    root
+}
+
+/// Load an optimized plan (graph + assignment).
+pub fn plan_from_json(v: &Json, reg: &crate::algo::AlgorithmRegistry) -> anyhow::Result<(Graph, Assignment)> {
+    let g = graph_from_json(v)?;
+    let mut a = Assignment::default_for(&g, reg);
+    if let Some(arr) = v.get("assignment").and_then(Json::as_arr) {
+        anyhow::ensure!(arr.len() == g.len(), "assignment length != node count");
+        for (i, entry) in arr.iter().enumerate() {
+            if let Some(name) = entry.as_str() {
+                let algo = Algorithm::from_name(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown algorithm `{name}`"))?;
+                a.set(NodeId(i), algo);
+            }
+        }
+    }
+    Ok((g, a))
+}
+
+/// File helpers.
+pub fn save_plan(path: &Path, g: &Graph, a: &Assignment) -> anyhow::Result<()> {
+    json::write_file(path, &plan_to_json(g, a))
+}
+
+pub fn load_plan(path: &Path, reg: &crate::algo::AlgorithmRegistry) -> anyhow::Result<(Graph, Assignment)> {
+    plan_from_json(&json::read_file(path)?, reg)
+}
+
+pub fn save_graph(path: &Path, g: &Graph) -> anyhow::Result<()> {
+    json::write_file(path, &graph_to_json(g))
+}
+
+pub fn load_graph(path: &Path) -> anyhow::Result<Graph> {
+    graph_from_json(&json::read_file(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::AlgorithmRegistry;
+    use crate::graph::canonical::graph_hash;
+    use crate::models::{self, ModelConfig};
+
+    fn tiny() -> ModelConfig {
+        ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 }
+    }
+
+    #[test]
+    fn all_zoo_models_roundtrip() {
+        for name in models::zoo_names() {
+            let g = models::by_name(name, tiny()).unwrap();
+            let j = graph_to_json(&g);
+            let back = graph_from_json(&j).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(graph_hash(&g), graph_hash(&back), "{name} hash changed");
+            assert_eq!(g.len(), back.len());
+        }
+    }
+
+    #[test]
+    fn plan_roundtrip_preserves_assignment() {
+        let g = models::simple::build_cnn(tiny());
+        let reg = AlgorithmRegistry::new();
+        let mut a = Assignment::default_for(&g, &reg);
+        // flip one conv to a non-default algorithm
+        let conv = g
+            .nodes()
+            .find(|(_, n)| matches!(n.op, OpKind::Conv2d { .. }))
+            .unwrap()
+            .0;
+        a.set(conv, Algorithm::ConvDirect);
+        let j = plan_to_json(&g, &a);
+        let (back_g, back_a) = plan_from_json(&j, &reg).unwrap();
+        assert_eq!(graph_hash(&g), graph_hash(&back_g));
+        assert_eq!(back_a.get(conv), Some(Algorithm::ConvDirect));
+        assert_eq!(a.distance(&back_a), 0);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("eadgo_serde_test");
+        let path = dir.join("plan.json");
+        let g = models::simple::build_cnn(tiny());
+        let reg = AlgorithmRegistry::new();
+        let a = Assignment::default_for(&g, &reg);
+        save_plan(&path, &g, &a).unwrap();
+        let (back, _) = load_plan(&path, &reg).unwrap();
+        assert_eq!(graph_hash(&g), graph_hash(&back));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn invalid_graphs_rejected() {
+        // missing nodes
+        assert!(graph_from_json(&crate::util::json::parse("{}").unwrap()).is_err());
+        // bad op
+        let bad = crate::util::json::parse(
+            r#"{"nodes": [{"op": "warp_drive", "inputs": []}], "outputs": [[0, 0]]}"#,
+        )
+        .unwrap();
+        assert!(graph_from_json(&bad).is_err());
+        // inconsistent shapes (conv without weight)
+        let bad2 = crate::util::json::parse(
+            r#"{"nodes": [
+                 {"op": "input", "shape": [1, 3, 8, 8], "inputs": []},
+                 {"op": "relu", "inputs": [[0, 0], [0, 0]]}
+               ],
+               "outputs": [[1, 0]]}"#,
+        )
+        .unwrap();
+        assert!(graph_from_json(&bad2).is_err());
+    }
+
+    #[test]
+    fn semantics_preserved_through_roundtrip() {
+        use crate::engine::ReferenceEngine;
+        use crate::tensor::Tensor;
+        use crate::util::rng::Rng;
+        let g = models::squeezenet::build(tiny());
+        let reg = AlgorithmRegistry::new();
+        let a = Assignment::default_for(&g, &reg);
+        let back = graph_from_json(&graph_to_json(&g)).unwrap();
+        let ab = Assignment::default_for(&back, &reg);
+        let mut rng = Rng::seed_from(8);
+        let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
+        let eng = ReferenceEngine::new();
+        let y1 = eng.run(&g, &a, std::slice::from_ref(&x)).unwrap().outputs.remove(0);
+        let y2 = eng.run(&back, &ab, std::slice::from_ref(&x)).unwrap().outputs.remove(0);
+        assert_eq!(y1, y2);
+    }
+}

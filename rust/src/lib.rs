@@ -1,0 +1,55 @@
+//! # EADGO — Energy-Aware DNN Graph Optimization
+//!
+//! Reproduction of *"Energy-Aware DNN Graph Optimization"* (Wang, Ge, Qiu —
+//! ReCoML @ MLSys 2020) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The optimizer searches the joint space of **equivalent computation
+//! graphs** (via graph substitutions) and **per-node algorithm assignments**
+//! (à la cuDNN's multiple convolution kernels) for the pair minimizing a
+//! user cost function over inference time, energy, and power.
+//!
+//! Layer map:
+//! - [`graph`], [`algo`], [`subst`], [`cost`], [`search`] — the paper's
+//!   contribution (L3 coordinator).
+//! - [`tensor`], [`energysim`], [`models`] — substrates the paper relied on
+//!   (MetaFlow engine, nvidia-smi, TF model import) rebuilt from scratch.
+//! - [`runtime`], [`engine`], [`profiler`] — PJRT execution of AOT-compiled
+//!   JAX/Pallas artifacts (L2/L1) and measurement.
+//! - [`util`] — offline substrates: JSON, PRNG, stats, CLI, bench harness,
+//!   property testing.
+//!
+//! Quickstart:
+//! ```no_run
+//! use eadgo::prelude::*;
+//! let g = eadgo::models::squeezenet::build(Default::default());
+//! let mut ctx = OptimizerContext::offline_default();
+//! let objective = CostFunction::linear(0.5); // 0.5*energy + 0.5*time
+//! let result = optimize(&g, &mut ctx, &objective, &SearchConfig::default()).unwrap();
+//! println!("energy saved: {:.1}%", 100.0 * result.energy_savings());
+//! ```
+
+pub mod algo;
+pub mod config;
+pub mod cost;
+pub mod energysim;
+pub mod engine;
+pub mod graph;
+pub mod models;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod search;
+pub mod serve;
+pub mod subst;
+pub mod tensor;
+pub mod util;
+
+/// Convenient re-exports of the public API surface.
+pub mod prelude {
+    pub use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};
+    pub use crate::cost::{CostDb, CostFunction, GraphCost, GraphCostTable, NodeCost};
+    pub use crate::energysim::{EnergyModel, GpuSpec};
+    pub use crate::graph::{Graph, Node, OpKind, TensorShape};
+    pub use crate::search::{optimize, OptimizeResult, OptimizerContext, SearchConfig};
+    pub use crate::subst::RuleSet;
+}

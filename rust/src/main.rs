@@ -1,0 +1,365 @@
+//! `eadgo` — the energy-aware DNN graph optimizer CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   optimize   Optimize a zoo model for an objective; print the result.
+//!   reproduce  Regenerate a paper table (--table 1..5, or `all`).
+//!   profile    Populate the profile database for a model.
+//!   constrain  Min-energy search under a time budget (binary search on w).
+//!   run        Execute a model through the engine (reference or PJRT).
+//!   show       Dump a model's computation graph.
+//!   zoo        List available models.
+
+use eadgo::algo::Assignment;
+use eadgo::config::RunConfig;
+use eadgo::cost::CostDb;
+use eadgo::models;
+use eadgo::profiler::{CpuProvider, SimV100Provider};
+use eadgo::report::tables::{self, ExperimentConfig};
+use eadgo::report::f3;
+use eadgo::runtime::Runtime;
+use eadgo::search::{optimize, optimize_with_time_budget, OptimizerContext};
+use eadgo::tensor::Tensor;
+use eadgo::util::cli::Args;
+use eadgo::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env(true);
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand.as_deref() {
+        Some("optimize") => cmd_optimize(args),
+        Some("reproduce") => cmd_reproduce(args),
+        Some("profile") => cmd_profile(args),
+        Some("constrain") => cmd_constrain(args),
+        Some("run") => cmd_run(args),
+        Some("serve") => cmd_serve(args),
+        Some("show") => cmd_show(args),
+        Some("zoo") => {
+            println!("available models: {}", models::zoo_names().join(", "));
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown subcommand `{other}`\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+eadgo — energy-aware DNN graph optimization (Wang, Ge, Qiu; ReCoML@MLSys'20 reproduction)
+
+USAGE: eadgo <subcommand> [--options]
+
+  optimize  --model M --objective (time|energy|power|linear:W|power_energy:W)
+            [--alpha 1.05] [--inner-distance D] [--max-dequeues N]
+            [--db profiles.json] [--provider sim|cpu] [--config run.json]
+  reproduce --table (1|2|3|4|5|all) [--quick] [--seed S]
+  profile   --model M [--provider sim|cpu] [--db profiles.json]
+  constrain --model M --time-budget MS [--probes 8]
+  run       --model M [--artifacts DIR] [--iters N]
+  serve     --model M [--plan plan.json] [--requests N] [--batch-max B]
+            [--rate HZ] [--artifacts DIR]
+  show      --model M
+  zoo
+
+  optimize accepts --save-plan out.json to persist the optimized
+  (graph, assignment); run/serve accept --plan to load it back.
+";
+
+fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn build_context(cfg: &RunConfig) -> anyhow::Result<OptimizerContext> {
+    let db = CostDb::load_or_default(&cfg.db_path);
+    let provider: Box<dyn eadgo::profiler::CostProvider> = match cfg.provider.as_str() {
+        "sim" => Box::new(SimV100Provider::new(cfg.seed)),
+        "cpu" => Box::new(CpuProvider::new(None)),
+        other => anyhow::bail!("unknown provider `{other}` (sim|cpu)"),
+    };
+    Ok(OptimizerContext::new(eadgo::subst::RuleSet::standard(), db, provider))
+}
+
+fn get_model(cfg: &RunConfig) -> anyhow::Result<eadgo::graph::Graph> {
+    models::by_name(&cfg.model, cfg.model_cfg)
+        .ok_or_else(|| anyhow::anyhow!("unknown model `{}` — try `eadgo zoo`", cfg.model))
+}
+
+fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let g0 = get_model(&cfg)?;
+    let objective = cfg.cost_function()?;
+    let mut ctx = build_context(&cfg)?;
+    println!(
+        "optimizing {} ({} nodes) for {} (alpha={}, provider={})",
+        cfg.model,
+        g0.runtime_node_count(),
+        objective.describe(),
+        cfg.alpha,
+        cfg.provider
+    );
+    let res = optimize(&g0, &mut ctx, &objective, &cfg.search_config())?;
+    println!(
+        "origin:    time {} ms  power {} W  energy {} J/1k",
+        f3(res.original.time_ms),
+        f3(res.original.power_w()),
+        f3(res.original.energy_j)
+    );
+    println!(
+        "optimized: time {} ms  power {} W  energy {} J/1k",
+        f3(res.cost.time_ms),
+        f3(res.cost.power_w()),
+        f3(res.cost.energy_j)
+    );
+    println!(
+        "objective improved {:.1}%  (energy {:+.1}%, time {:+.1}%)",
+        100.0 * res.objective_savings(),
+        -100.0 * res.energy_savings(),
+        -100.0 * res.time_savings(),
+    );
+    println!(
+        "search: {} graphs expanded, {} generated, {} deduped, {} profiles measured, {:.2}s",
+        res.stats.expanded,
+        res.stats.generated,
+        res.stats.deduped,
+        res.stats.profiled,
+        res.stats.wall_s
+    );
+    if !res.stats.rules_applied.is_empty() {
+        println!("rules enqueued:");
+        for (rule, n) in &res.stats.rules_applied {
+            println!("  {rule:<24} {n}");
+        }
+    }
+    if let Some(path) = args.get("save-plan") {
+        eadgo::graph::serde::save_plan(std::path::Path::new(path), &res.graph, &res.assignment)?;
+        println!("optimized plan saved to {path}");
+    }
+    ctx.db.save(&cfg.db_path)?;
+    println!("profile db saved to {} ({} entries)", cfg.db_path.display(), ctx.db.num_entries());
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> anyhow::Result<()> {
+    let which = args.get_or("table", "all");
+    let mut ecfg = if args.flag("quick") {
+        ExperimentConfig::quick()
+    } else {
+        ExperimentConfig::default()
+    };
+    ecfg.seed = args.get_f64("seed", ecfg.seed as f64)? as u64;
+    let run_one = |n: u32| -> anyhow::Result<String> {
+        Ok(match n {
+            1 => tables::table1(&ecfg).0.render(),
+            2 => tables::table2(&ecfg).0.render(),
+            3 => tables::table3(&ecfg).0.render(),
+            4 => tables::table4(&ecfg).0.render(),
+            5 => tables::table5(&ecfg).0.render(),
+            _ => anyhow::bail!("no table {n} in the paper (1-5)"),
+        })
+    };
+    if which == "all" {
+        for n in 1..=5 {
+            println!("{}", run_one(n)?);
+        }
+    } else {
+        let n: u32 = which.parse().map_err(|_| anyhow::anyhow!("--table expects 1..5 or all"))?;
+        println!("{}", run_one(n)?);
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let g = get_model(&cfg)?;
+    let mut ctx = build_context(&cfg)?;
+    let rep = eadgo::profiler::ensure_profiled(&g, &ctx.reg, &mut ctx.db, ctx.provider.as_mut())?;
+    println!(
+        "profiled {}: {} new measurements, {} cached, db now {} entries / {} signatures",
+        cfg.model,
+        rep.measured,
+        rep.cached,
+        ctx.db.num_entries(),
+        ctx.db.num_signatures()
+    );
+    ctx.db.save(&cfg.db_path)?;
+    println!("saved {}", cfg.db_path.display());
+    Ok(())
+}
+
+fn cmd_constrain(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let budget = args.get_f64("time-budget", f64::NAN)?;
+    anyhow::ensure!(budget.is_finite(), "--time-budget MS is required");
+    let probes = args.get_usize("probes", 8)?;
+    let g0 = get_model(&cfg)?;
+    let mut ctx = build_context(&cfg)?;
+    let r = optimize_with_time_budget(&g0, &mut ctx, budget, &cfg.search_config(), probes)?;
+    if !r.feasible {
+        println!(
+            "infeasible: best achievable time {} ms > budget {} ms (returning best-time solution)",
+            f3(r.result.cost.time_ms),
+            f3(budget)
+        );
+    } else {
+        println!(
+            "feasible at w={:.4}: time {} ms (budget {}), energy {} J/1k",
+            r.weight,
+            f3(r.result.cost.time_ms),
+            f3(budget),
+            f3(r.result.cost.energy_j)
+        );
+    }
+    println!("probe trace (w, time_ms, energy):");
+    for (w, t, e) in &r.trace {
+        println!("  w={w:.4}  t={}  e={}", f3(*t), f3(*e));
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let iters = args.get_usize("iters", 10)?;
+    let g = get_model(&cfg)?;
+    let reg = eadgo::algo::AlgorithmRegistry::new();
+    let a = Assignment::default_for(&g, &reg);
+    let mut rng = Rng::seed_from(cfg.seed);
+    let shape = vec![cfg.model_cfg.batch, 3, cfg.model_cfg.resolution, cfg.model_cfg.resolution];
+    let x = Tensor::rand(&shape, &mut rng, -1.0, 1.0);
+
+    let manifest_path = cfg.artifacts_dir.join("manifest.json");
+    if manifest_path.exists() {
+        let mut rt = Runtime::cpu()?;
+        let n = rt.load_dir(&cfg.artifacts_dir)?;
+        println!("loaded {n} artifacts on {}", rt.platform());
+        let engine = eadgo::engine::pjrt::PjrtEngine::new(&rt);
+        let mut total = 0.0;
+        let mut stats = Default::default();
+        for _ in 0..iters {
+            let (out, s) = engine.run(&g, &a, std::slice::from_ref(&x))?;
+            total += out.wall_s;
+            stats = s;
+        }
+        println!(
+            "pjrt-hybrid: {} ms/inference over {iters} iters ({} pjrt nodes, {} reference nodes)",
+            f3(total / iters as f64 * 1e3),
+            stats.pjrt_nodes,
+            stats.reference_nodes
+        );
+    } else {
+        println!("no artifacts at {} — reference engine only", manifest_path.display());
+        let engine = eadgo::engine::ReferenceEngine::new();
+        let plan = engine.plan(&g, &a)?;
+        let mut total = 0.0;
+        for _ in 0..iters {
+            let out = engine.run_plan(&g, &a, &plan, std::slice::from_ref(&x))?;
+            total += out.wall_s;
+        }
+        println!("reference: {} ms/inference over {iters} iters", f3(total / iters as f64 * 1e3));
+    }
+    Ok(())
+}
+
+fn cmd_show(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let g = get_model(&cfg)?;
+    print!("{}", g.dump());
+    println!(
+        "{} nodes ({} runtime), {} outputs",
+        g.len(),
+        g.runtime_node_count(),
+        g.outputs.len()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let reg = eadgo::algo::AlgorithmRegistry::new();
+    // Either a persisted optimized plan or a zoo model w/ default assignment.
+    let (g, a) = match args.get("plan") {
+        Some(path) => eadgo::graph::serde::load_plan(std::path::Path::new(path), &reg)?,
+        None => {
+            let g = get_model(&cfg)?;
+            let a = Assignment::default_for(&g, &reg);
+            (g, a)
+        }
+    };
+    let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!(e))?;
+    let input_shape = g
+        .nodes()
+        .find_map(|(id, n)| {
+            matches!(n.op, eadgo::graph::OpKind::Input { .. }).then(|| shapes[id.0][0].clone())
+        })
+        .ok_or_else(|| anyhow::anyhow!("graph has no input"))?;
+
+    let scfg = eadgo::serve::ServeConfig {
+        requests: args.get_usize("requests", 64)?,
+        batch_max: args.get_usize("batch-max", 4)?,
+        arrival_rate_hz: args.get_f64("rate", 500.0)?,
+        max_wait_s: args.get_f64("max-wait-ms", 2.0)? * 1e-3,
+        seed: cfg.seed,
+        input_shape,
+    };
+
+    let manifest_path = cfg.artifacts_dir.join("manifest.json");
+    let report = if manifest_path.exists() {
+        let mut rt = Runtime::cpu()?;
+        let n = rt.load_dir(&cfg.artifacts_dir)?;
+        println!("serving via PJRT-hybrid engine ({n} artifacts)");
+        let engine = eadgo::engine::pjrt::PjrtEngine::new(&rt);
+        let prepared = engine.prepare(&g, &a)?;
+        eadgo::serve::serve(&scfg, |batch| {
+            let mut outs = Vec::with_capacity(batch.len());
+            for x in batch {
+                let (o, _) = engine.run_prepared(&g, &a, &prepared, std::slice::from_ref(x))?;
+                outs.push(o.outputs.into_iter().next().unwrap());
+            }
+            Ok(outs)
+        })?
+    } else {
+        println!("serving via reference engine (no artifacts at {})", manifest_path.display());
+        let engine = eadgo::engine::ReferenceEngine::new();
+        let plan = engine.plan(&g, &a)?;
+        eadgo::serve::serve(&scfg, |batch| {
+            let mut outs = Vec::with_capacity(batch.len());
+            for x in batch {
+                let o = engine.run_plan(&g, &a, &plan, std::slice::from_ref(x))?;
+                outs.push(o.outputs.into_iter().next().unwrap());
+            }
+            Ok(outs)
+        })?
+    };
+
+    let lat = report.latency_summary();
+    println!(
+        "served {} requests in {} batches (mean batch {:.2})",
+        report.records.len(),
+        report.batches,
+        report.mean_batch_size()
+    );
+    println!(
+        "latency p50 {} ms  p95 {} ms  mean {} ms   throughput {:.1} req/s   engine busy {:.2}s",
+        f3(lat.p50 * 1e3),
+        f3(lat.p95 * 1e3),
+        f3(lat.mean * 1e3),
+        report.throughput_rps(),
+        report.busy_s
+    );
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Inception-v3 (Szegedy et al. 2016), width-scaled.
+//!
+//! Stem + 2 Inception-A blocks + reduction + 2 Inception-B blocks (with the
+//! 1×7/7×1 factorized convolutions) + classifier head. Each block is a
+//! multi-branch concat — the richest merge-substitution territory of the
+//! three evaluation models.
+
+use super::{Builder, ModelConfig};
+use crate::graph::{Graph, NodeId};
+
+/// Inception-A: 1x1 | 1x1→5x5 | 1x1→3x3→3x3 | avgpool→1x1, concat.
+fn block_a(b: &mut Builder, x: NodeId, cin: usize, cfg: &ModelConfig, tag: &str) -> (NodeId, usize) {
+    let b1 = b.conv_bn_relu(x, cin, cfg.ch(64), (1, 1), (1, 1), (0, 0), &format!("{tag}_b1"));
+
+    let b2a = b.conv_bn_relu(x, cin, cfg.ch(48), (1, 1), (1, 1), (0, 0), &format!("{tag}_b2a"));
+    let b2 = b.conv_bn_relu(b2a, cfg.ch(48), cfg.ch(64), (5, 5), (1, 1), (2, 2), &format!("{tag}_b2b"));
+
+    let b3a = b.conv_bn_relu(x, cin, cfg.ch(64), (1, 1), (1, 1), (0, 0), &format!("{tag}_b3a"));
+    let b3b = b.conv_bn_relu(b3a, cfg.ch(64), cfg.ch(96), (3, 3), (1, 1), (1, 1), &format!("{tag}_b3b"));
+    let b3 = b.conv_bn_relu(b3b, cfg.ch(96), cfg.ch(96), (3, 3), (1, 1), (1, 1), &format!("{tag}_b3c"));
+
+    let b4p = b.avgpool(x, 3, 1, 1, &format!("{tag}_b4pool"));
+    let b4 = b.conv_bn_relu(b4p, cin, cfg.ch(32), (1, 1), (1, 1), (0, 0), &format!("{tag}_b4"));
+
+    let cat = b.concat(&[b1, b2, b3, b4], &format!("{tag}_cat"));
+    (cat, cfg.ch(64) + cfg.ch(64) + cfg.ch(96) + cfg.ch(32))
+}
+
+/// Reduction-A: 3x3/2 | 1x1→3x3→3x3/2 | maxpool/2, concat.
+fn reduction_a(b: &mut Builder, x: NodeId, cin: usize, cfg: &ModelConfig, tag: &str) -> (NodeId, usize) {
+    let b1 = b.conv_bn_relu(x, cin, cfg.ch(384), (3, 3), (2, 2), (1, 1), &format!("{tag}_b1"));
+    let b2a = b.conv_bn_relu(x, cin, cfg.ch(64), (1, 1), (1, 1), (0, 0), &format!("{tag}_b2a"));
+    let b2b = b.conv_bn_relu(b2a, cfg.ch(64), cfg.ch(96), (3, 3), (1, 1), (1, 1), &format!("{tag}_b2b"));
+    let b2 = b.conv_bn_relu(b2b, cfg.ch(96), cfg.ch(96), (3, 3), (2, 2), (1, 1), &format!("{tag}_b2c"));
+    let b3 = b.maxpool(x, 3, 2, 1, &format!("{tag}_pool"));
+    let cat = b.concat(&[b1, b2, b3], &format!("{tag}_cat"));
+    (cat, cfg.ch(384) + cfg.ch(96) + cin)
+}
+
+/// Inception-B: 1x1 | 1x1→1x7→7x1 | avgpool→1x1, concat (factorized convs).
+fn block_b(b: &mut Builder, x: NodeId, cin: usize, cfg: &ModelConfig, tag: &str) -> (NodeId, usize) {
+    let c192 = cfg.ch(192);
+    let c128 = cfg.ch(128);
+    let b1 = b.conv_bn_relu(x, cin, c192, (1, 1), (1, 1), (0, 0), &format!("{tag}_b1"));
+
+    let b2a = b.conv_bn_relu(x, cin, c128, (1, 1), (1, 1), (0, 0), &format!("{tag}_b2a"));
+    let b2b = b.conv_bn_relu(b2a, c128, c128, (1, 7), (1, 1), (0, 3), &format!("{tag}_b2b"));
+    let b2 = b.conv_bn_relu(b2b, c128, c192, (7, 1), (1, 1), (3, 0), &format!("{tag}_b2c"));
+
+    let b3p = b.avgpool(x, 3, 1, 1, &format!("{tag}_b3pool"));
+    let b3 = b.conv_bn_relu(b3p, cin, c192, (1, 1), (1, 1), (0, 0), &format!("{tag}_b3"));
+
+    let cat = b.concat(&[b1, b2, b3], &format!("{tag}_cat"));
+    (cat, 3 * c192)
+}
+
+/// Build the scaled Inception-v3.
+pub fn build(cfg: ModelConfig) -> Graph {
+    let mut b = Builder::new(0x13);
+    let x = b.input(&[cfg.batch, 3, cfg.resolution, cfg.resolution]);
+
+    // Stem (compressed): conv3x3/2 + conv3x3 + maxpool.
+    let s1 = b.conv_bn_relu(x, 3, cfg.ch(32), (3, 3), (2, 2), (1, 1), "stem1");
+    let s2 = b.conv_bn_relu(s1, cfg.ch(32), cfg.ch(64), (3, 3), (1, 1), (1, 1), "stem2");
+    let p1 = b.maxpool(s2, 3, 2, 1, "stem_pool");
+
+    let (a1, ch_a1) = block_a(&mut b, p1, cfg.ch(64), &cfg, "mixed1");
+    let (a2, ch_a2) = block_a(&mut b, a1, ch_a1, &cfg, "mixed2");
+    let (r1, ch_r1) = reduction_a(&mut b, a2, ch_a2, &cfg, "reduce1");
+    let (b1, ch_b1) = block_b(&mut b, r1, ch_r1, &cfg, "mixed3");
+    let (b2, ch_b2) = block_b(&mut b, b1, ch_b1, &cfg, "mixed4");
+
+    let _ = ch_b1;
+    let head = b.classifier(b2, ch_b2, cfg.classes);
+    b.finish(&[head])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::subst::Rule;
+
+    #[test]
+    fn builds_and_validates() {
+        let g = build(ModelConfig::default());
+        g.validate().unwrap();
+        let convs = g
+            .nodes()
+            .filter(|(_, n)| matches!(n.op, crate::graph::OpKind::Conv2d { .. }))
+            .count();
+        assert!(convs >= 20, "got {convs} convs");
+        // every conv followed by bn: batchnorm count matches
+        let bns = g
+            .nodes()
+            .filter(|(_, n)| matches!(n.op, crate::graph::OpKind::BatchNorm { .. }))
+            .count();
+        assert_eq!(bns, convs);
+    }
+
+    #[test]
+    fn has_parallel_merge_sites() {
+        // Inception-A's b1 (1x1) and b2a (1x1) share the block input with
+        // identical attrs — MergeParallelConvs must find at least one pair.
+        let g = build(ModelConfig::default());
+        let products = crate::subst::rules::MergeParallelConvs
+            .apply_all(&g);
+        assert!(!products.is_empty());
+    }
+
+    #[test]
+    fn asymmetric_kernels_shape_check() {
+        let g = build(ModelConfig::default());
+        let shapes = g.infer_shapes().unwrap();
+        let out = g.outputs[0];
+        assert_eq!(shapes[out.node.0][out.port], vec![1, 10]);
+    }
+}

@@ -1,0 +1,118 @@
+//! MobileNetV1 (Howard et al. 2017), width-scaled — the paper's §5 future
+//! work ("evaluate our methods with more types of DNNs"): a depthwise-
+//! separable architecture whose energy profile differs sharply from the
+//! dense-conv zoo (depthwise layers are bandwidth-bound and cool).
+//!
+//! Block = depthwise 3×3 (+BN+ReLU) then pointwise 1×1 (+BN+ReLU).
+
+use super::{Builder, ModelConfig};
+use crate::graph::{Activation, Graph, NodeId, OpKind};
+
+impl Builder {
+    /// Depthwise conv (no activation; origin graphs keep ReLU separate).
+    pub fn dwconv(
+        &mut self,
+        x: NodeId,
+        c: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        pad: (usize, usize),
+        name: &str,
+    ) -> NodeId {
+        let w = self.weight(&[c, 1, kernel.0, kernel.1], &format!("{name}_w"));
+        self.g.add1(
+            OpKind::DwConv2d { stride, pad, act: Activation::None, has_bias: false },
+            &[x, w],
+            name,
+        )
+    }
+
+    /// dw3x3 → bn → relu (the MobileNet idiom, unfused in origin form).
+    pub fn dw_bn_relu(&mut self, x: NodeId, c: usize, stride: usize, name: &str) -> NodeId {
+        let d = self.dwconv(x, c, (3, 3), (stride, stride), (1, 1), name);
+        let b = self.batchnorm(d, c, &format!("{name}_bn"));
+        self.relu(b, &format!("{name}_relu"))
+    }
+}
+
+/// One depthwise-separable block: dw3x3(s)+bn+relu, pw1x1+bn+relu.
+fn ds_block(b: &mut Builder, x: NodeId, cin: usize, cout: usize, stride: usize, tag: &str) -> NodeId {
+    let dw = b.dw_bn_relu(x, cin, stride, &format!("{tag}_dw"));
+    b.conv_bn_relu(dw, cin, cout, (1, 1), (1, 1), (0, 0), &format!("{tag}_pw"))
+}
+
+/// Build the scaled MobileNetV1: stem conv + 13 depthwise-separable blocks.
+pub fn build(cfg: ModelConfig) -> Graph {
+    let mut b = Builder::new(0x3B);
+    let x = b.input(&[cfg.batch, 3, cfg.resolution, cfg.resolution]);
+    let stem_ch = cfg.ch(32);
+    let stem = b.conv_bn_relu(x, 3, stem_ch, (3, 3), (2, 2), (1, 1), "stem");
+
+    // (cout, stride) per published MobileNetV1 block sequence.
+    let blocks: [(usize, usize); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    let mut cur = stem;
+    let mut cin = stem_ch;
+    for (i, (cout, stride)) in blocks.into_iter().enumerate() {
+        let cout = cfg.ch(cout);
+        cur = ds_block(&mut b, cur, cin, cout, stride, &format!("b{i}"));
+        cin = cout;
+    }
+    let head = b.classifier(cur, cin, cfg.classes);
+    b.finish(&[head])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::subst::Rule;
+
+    #[test]
+    fn builds_and_validates() {
+        let g = build(ModelConfig::default());
+        g.validate().unwrap();
+        let dw = g
+            .nodes()
+            .filter(|(_, n)| matches!(n.op, OpKind::DwConv2d { .. }))
+            .count();
+        assert_eq!(dw, 13);
+        let pw = g
+            .nodes()
+            .filter(|(_, n)| matches!(n.op, OpKind::Conv2d { .. }))
+            .count();
+        assert_eq!(pw, 14); // stem + 13 pointwise
+    }
+
+    #[test]
+    fn dw_fusion_sites_exist() {
+        let g = build(ModelConfig::default());
+        assert_eq!(crate::subst::rules::FuseDwConvBn.apply_all(&g).len(), 13);
+        // relu fusion only fires after the BN is folded (bn sits between);
+        // chain: fold bn first, then relu fusion becomes available.
+        let folded = crate::subst::rules::FuseDwConvBn.apply_all(&g).remove(0);
+        let mut folded = folded;
+        folded.compact();
+        assert!(!crate::subst::rules::FuseDwConvRelu.apply_all(&folded).is_empty());
+    }
+
+    #[test]
+    fn output_shape() {
+        let g = build(ModelConfig::default());
+        let shapes = g.infer_shapes().unwrap();
+        let out = g.outputs[0];
+        assert_eq!(shapes[out.node.0][out.port], vec![1, 10]);
+    }
+}

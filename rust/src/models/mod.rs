@@ -1,0 +1,248 @@
+//! Model zoo: graph builders for the paper's three evaluation CNNs —
+//! SqueezeNet, Inception-v3, ResNet-50 — plus small test models.
+//!
+//! Topologies are faithful (fire modules, inception branches, bottleneck
+//! residual blocks); spatial and channel scales are reduced so a 1-core CPU
+//! host can profile and execute them (DESIGN.md §Hardware-Adaptation). The
+//! substitution opportunities the paper's optimizer exploits are purely
+//! topological and survive the scaling.
+
+pub mod inception;
+pub mod mobilenet;
+pub mod resnet;
+pub mod simple;
+pub mod squeezenet;
+pub mod vgg;
+
+use crate::graph::op::{eps_bits, WeightKind};
+use crate::graph::{Activation, Graph, NodeId, OpKind, PortRef};
+
+/// Uniform scale configuration for zoo models.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelConfig {
+    /// Batch size.
+    pub batch: usize,
+    /// Input spatial resolution (square).
+    pub resolution: usize,
+    /// Channel divisor vs the published architecture (4 = quarter width).
+    pub width_div: usize,
+    /// Classifier classes.
+    pub classes: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig { batch: 1, resolution: 32, width_div: 4, classes: 10 }
+    }
+}
+
+impl ModelConfig {
+    /// Scale a channel count, keeping at least 2.
+    pub fn ch(&self, full: usize) -> usize {
+        (full / self.width_div).max(2)
+    }
+}
+
+/// Incremental graph builder with an automatic weight-seed allocator —
+/// keeps zoo code terse and weights collision-free.
+pub struct Builder {
+    pub g: Graph,
+    next_seed: u64,
+}
+
+impl Builder {
+    pub fn new(model_tag: u64) -> Builder {
+        Builder { g: Graph::new(), next_seed: model_tag << 32 }
+    }
+
+    pub fn seed(&mut self) -> u64 {
+        self.next_seed += 1;
+        self.next_seed
+    }
+
+    pub fn input(&mut self, shape: &[usize]) -> NodeId {
+        self.g.add1(OpKind::Input { shape: shape.to_vec() }, &[], "input")
+    }
+
+    pub fn weight(&mut self, shape: &[usize], name: &str) -> NodeId {
+        let s = self.seed();
+        self.g.add1(OpKind::weight(shape.to_vec(), s), &[], name)
+    }
+
+    fn wkind(&mut self, shape: &[usize], kind: WeightKind, name: &str) -> NodeId {
+        let s = self.seed();
+        self.g.add1(OpKind::weight_kind(shape.to_vec(), s, kind), &[], name)
+    }
+
+    /// Plain convolution (no activation — "origin" graphs keep ReLU as a
+    /// separate node so the optimizer has fusion work to discover).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        &mut self,
+        x: NodeId,
+        cin: usize,
+        cout: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        pad: (usize, usize),
+        bias: bool,
+        name: &str,
+    ) -> NodeId {
+        let w = self.weight(&[cout, cin, kernel.0, kernel.1], &format!("{name}_w"));
+        let mut inputs = vec![x, w];
+        if bias {
+            let b = self.wkind(&[cout], WeightKind::Bias, &format!("{name}_b"));
+            inputs.push(b);
+        }
+        self.g.add1(
+            OpKind::Conv2d {
+                stride,
+                pad,
+                act: Activation::None,
+                has_bias: bias,
+                has_residual: false,
+            },
+            &inputs,
+            name,
+        )
+    }
+
+    pub fn relu(&mut self, x: NodeId, name: &str) -> NodeId {
+        self.g.add1(OpKind::Relu, &[x], name)
+    }
+
+    pub fn batchnorm(&mut self, x: NodeId, c: usize, name: &str) -> NodeId {
+        let gamma = self.wkind(&[c], WeightKind::Gamma, &format!("{name}_g"));
+        let beta = self.wkind(&[c], WeightKind::Beta, &format!("{name}_be"));
+        let mean = self.wkind(&[c], WeightKind::Mean, &format!("{name}_m"));
+        let var = self.wkind(&[c], WeightKind::Var, &format!("{name}_v"));
+        self.g.add1(
+            OpKind::BatchNorm { eps: eps_bits(1e-5) },
+            &[x, gamma, beta, mean, var],
+            name,
+        )
+    }
+
+    /// conv → bn → relu (the ResNet/Inception idiom, unfused in origin form).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_bn_relu(
+        &mut self,
+        x: NodeId,
+        cin: usize,
+        cout: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        pad: (usize, usize),
+        name: &str,
+    ) -> NodeId {
+        let c = self.conv(x, cin, cout, kernel, stride, pad, false, name);
+        let b = self.batchnorm(c, cout, &format!("{name}_bn"));
+        self.relu(b, &format!("{name}_relu"))
+    }
+
+    /// conv (bias) → relu (the SqueezeNet idiom).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_relu(
+        &mut self,
+        x: NodeId,
+        cin: usize,
+        cout: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        pad: (usize, usize),
+        name: &str,
+    ) -> NodeId {
+        let c = self.conv(x, cin, cout, kernel, stride, pad, true, name);
+        self.relu(c, &format!("{name}_relu"))
+    }
+
+    pub fn maxpool(&mut self, x: NodeId, k: usize, stride: usize, pad: usize, name: &str) -> NodeId {
+        self.g.add1(
+            OpKind::MaxPool { k: (k, k), stride: (stride, stride), pad: (pad, pad) },
+            &[x],
+            name,
+        )
+    }
+
+    pub fn avgpool(&mut self, x: NodeId, k: usize, stride: usize, pad: usize, name: &str) -> NodeId {
+        self.g.add1(
+            OpKind::AvgPool { k: (k, k), stride: (stride, stride), pad: (pad, pad) },
+            &[x],
+            name,
+        )
+    }
+
+    pub fn concat(&mut self, parts: &[NodeId], name: &str) -> NodeId {
+        self.g.add1(OpKind::Concat { axis: 1 }, parts, name)
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId, name: &str) -> NodeId {
+        self.g.add1(OpKind::Add, &[a, b], name)
+    }
+
+    pub fn global_avgpool(&mut self, x: NodeId, name: &str) -> NodeId {
+        self.g.add1(OpKind::GlobalAvgPool, &[x], name)
+    }
+
+    /// gap → flatten → matmul classifier head.
+    pub fn classifier(&mut self, x: NodeId, cin: usize, classes: usize) -> NodeId {
+        let gap = self.global_avgpool(x, "gap");
+        let flat = self.g.add1(OpKind::Flatten, &[gap], "flatten");
+        let w = self.weight(&[cin, classes], "fc_w");
+        let mm = self.g.add1(OpKind::MatMul, &[flat, w], "fc");
+        self.g.add1(OpKind::Softmax, &[mm], "softmax")
+    }
+
+    pub fn finish(mut self, outputs: &[NodeId]) -> Graph {
+        self.g.outputs = outputs.iter().map(|&n| PortRef::of(n)).collect();
+        self.g
+            .validate()
+            .unwrap_or_else(|e| panic!("model builder produced invalid graph: {e}"));
+        self.g
+    }
+}
+
+/// Catalog lookup used by the CLI and benches.
+pub fn by_name(name: &str, cfg: ModelConfig) -> Option<Graph> {
+    match name {
+        "squeezenet" => Some(squeezenet::build(cfg)),
+        "inception" | "inceptionv3" | "inception-v3" => Some(inception::build(cfg)),
+        "resnet" | "resnet50" | "resnet-50" => Some(resnet::build(cfg)),
+        "mobilenet" | "mobilenetv1" => Some(mobilenet::build(cfg)),
+        "vgg" | "vgg16" | "vgg-16" => Some(vgg::build(cfg)),
+        "simple" | "quickstart" => Some(simple::build_cnn(cfg)),
+        "mlp" => Some(simple::build_mlp(cfg)),
+        _ => None,
+    }
+}
+
+/// All zoo model names (reporting).
+pub fn zoo_names() -> &'static [&'static str] {
+    &["squeezenet", "inception", "resnet", "mobilenet", "vgg", "simple", "mlp"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_zoo_models_validate() {
+        for name in zoo_names() {
+            let g = by_name(name, ModelConfig::default()).unwrap();
+            g.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(g.runtime_node_count() > 3, "{name} too trivial");
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        assert!(by_name("nope", ModelConfig::default()).is_none());
+    }
+
+    #[test]
+    fn width_divisor_scales_channels() {
+        let cfg = ModelConfig { width_div: 8, ..Default::default() };
+        assert_eq!(cfg.ch(64), 8);
+        assert_eq!(cfg.ch(8), 2); // floor at 2
+    }
+}

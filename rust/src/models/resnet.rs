@@ -1,0 +1,112 @@
+//! ResNet-50 (He et al. 2016), width-scaled.
+//!
+//! Bottleneck residual blocks in four stages ([3,4,6,3] like the published
+//! 50-layer model), each block = 1×1 → 3×3 → 1×1 with BN after every conv
+//! and an additive skip. The conv+bn folds, residual-add fusions, and
+//! add+relu fusions are this model's substitution surface.
+
+use super::{Builder, ModelConfig};
+use crate::graph::{Graph, NodeId};
+
+/// Bottleneck block: in → [1x1 c, 3x3 c, 1x1 4c] + skip. `stride` applies to
+/// the 3x3 (and the projection shortcut when present).
+#[allow(clippy::too_many_arguments)]
+fn bottleneck(
+    b: &mut Builder,
+    x: NodeId,
+    cin: usize,
+    c: usize,
+    stride: usize,
+    tag: &str,
+) -> (NodeId, usize) {
+    let cout = 4 * c;
+    let c1 = b.conv(x, cin, c, (1, 1), (1, 1), (0, 0), false, &format!("{tag}_c1"));
+    let n1 = b.batchnorm(c1, c, &format!("{tag}_bn1"));
+    let r1 = b.relu(n1, &format!("{tag}_r1"));
+
+    let c2 = b.conv(r1, c, c, (3, 3), (stride, stride), (1, 1), false, &format!("{tag}_c2"));
+    let n2 = b.batchnorm(c2, c, &format!("{tag}_bn2"));
+    let r2 = b.relu(n2, &format!("{tag}_r2"));
+
+    let c3 = b.conv(r2, c, cout, (1, 1), (1, 1), (0, 0), false, &format!("{tag}_c3"));
+    let n3 = b.batchnorm(c3, cout, &format!("{tag}_bn3"));
+
+    // Shortcut: identity when shapes match, 1x1 projection otherwise.
+    let shortcut = if cin == cout && stride == 1 {
+        x
+    } else {
+        let sc = b.conv(x, cin, cout, (1, 1), (stride, stride), (0, 0), false, &format!("{tag}_proj"));
+        b.batchnorm(sc, cout, &format!("{tag}_projbn"))
+    };
+    let add = b.add(n3, shortcut, &format!("{tag}_add"));
+    let out = b.relu(add, &format!("{tag}_out"));
+    (out, cout)
+}
+
+/// Build the scaled ResNet-50.
+pub fn build(cfg: ModelConfig) -> Graph {
+    let mut b = Builder::new(0x50);
+    let x = b.input(&[cfg.batch, 3, cfg.resolution, cfg.resolution]);
+
+    // Stem: 7x7/2 conv + bn + relu + maxpool/2.
+    let stem_ch = cfg.ch(64);
+    let stem = b.conv_bn_relu(x, 3, stem_ch, (7, 7), (2, 2), (3, 3), "stem");
+    let p = b.maxpool(stem, 3, 2, 1, "stem_pool");
+
+    let stages: [(usize, usize, usize); 4] = [
+        (cfg.ch(64), 3, 1),  // stage 1: 3 blocks, stride 1
+        (cfg.ch(128), 4, 2), // stage 2
+        (cfg.ch(256), 6, 2), // stage 3
+        (cfg.ch(512), 3, 2), // stage 4
+    ];
+    let mut cur = p;
+    let mut cin = stem_ch;
+    for (si, (c, blocks, first_stride)) in stages.into_iter().enumerate() {
+        for bi in 0..blocks {
+            let stride = if bi == 0 { first_stride } else { 1 };
+            let (out, cout) = bottleneck(&mut b, cur, cin, c, stride, &format!("s{si}b{bi}"));
+            cur = out;
+            cin = cout;
+        }
+    }
+
+    let head = b.classifier(cur, cin, cfg.classes);
+    b.finish(&[head])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::subst::Rule;
+
+    #[test]
+    fn builds_and_validates() {
+        let g = build(ModelConfig::default());
+        g.validate().unwrap();
+        let convs = g
+            .nodes()
+            .filter(|(_, n)| matches!(n.op, crate::graph::OpKind::Conv2d { .. }))
+            .count();
+        // 16 blocks x 3 + 4 projections + stem = 53 (the "50" + shortcuts)
+        assert_eq!(convs, 53);
+    }
+
+    #[test]
+    fn output_shape() {
+        let g = build(ModelConfig::default());
+        let shapes = g.infer_shapes().unwrap();
+        let out = g.outputs[0];
+        assert_eq!(shapes[out.node.0][out.port], vec![1, 10]);
+    }
+
+    #[test]
+    fn residual_fusion_sites_exist() {
+        let g = build(ModelConfig::default());
+        // fuse_add_relu should find every block output
+        let products = crate::subst::rules::FuseAddRelu.apply_all(&g);
+        assert!(products.len() >= 16, "got {}", products.len());
+        // conv+bn folds available everywhere
+        let folds = crate::subst::rules::FuseConvBn.apply_all(&g);
+        assert!(folds.len() >= 50, "got {}", folds.len());
+    }
+}

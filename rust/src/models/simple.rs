@@ -1,0 +1,75 @@
+//! Small test models: a quickstart CNN (used by the end-to-end PJRT
+//! examples — its operator set matches the AOT artifact suite) and an MLP.
+
+use super::{Builder, ModelConfig};
+use crate::graph::Graph;
+
+/// The quickstart CNN: conv-relu → conv-relu (parallel pair) → concat →
+/// maxpool → conv-relu → GAP → fc. Small enough to execute everywhere,
+/// rich enough that every rule family fires.
+pub fn build_cnn(cfg: ModelConfig) -> Graph {
+    let mut b = Builder::new(0x05);
+    let x = b.input(&[cfg.batch, 3, cfg.resolution, cfg.resolution]);
+    let stem = b.conv_relu(x, 3, 8, (3, 3), (1, 1), (1, 1), "stem");
+    // parallel pair on the same input (merge + enlarge targets)
+    let e1 = b.conv_relu(stem, 8, 8, (1, 1), (1, 1), (0, 0), "branch1x1");
+    let e3 = b.conv_relu(stem, 8, 8, (3, 3), (1, 1), (1, 1), "branch3x3");
+    let cat = b.concat(&[e1, e3], "cat");
+    let pool = b.maxpool(cat, 2, 2, 0, "pool");
+    let c2 = b.conv_relu(pool, 16, 16, (3, 3), (1, 1), (1, 1), "conv2");
+    let head = b.classifier(c2, 16, cfg.classes);
+    b.finish(&[head])
+}
+
+/// A two-layer MLP on flattened input (exercises the MatMul algorithms).
+pub fn build_mlp(cfg: ModelConfig) -> Graph {
+    let mut b = Builder::new(0x0A);
+    let features = 3 * cfg.resolution * cfg.resolution;
+    let x = b.input(&[cfg.batch, 3, cfg.resolution, cfg.resolution]);
+    let flat = b.g.add1(crate::graph::OpKind::Flatten, &[x], "flatten");
+    let w1 = b.weight(&[features, 64], "w1");
+    let h = b.g.add1(crate::graph::OpKind::MatMul, &[flat, w1], "fc1");
+    let r = b.relu(h, "relu1");
+    let w2 = b.weight(&[64, cfg.classes], "w2");
+    let o = b.g.add1(crate::graph::OpKind::MatMul, &[r, w2], "fc2");
+    let sm = b.g.add1(crate::graph::OpKind::Softmax, &[o], "softmax");
+    b.finish(&[sm])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{AlgorithmRegistry, Assignment};
+    use crate::engine::ReferenceEngine;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cnn_runs_end_to_end() {
+        let cfg = ModelConfig { resolution: 16, ..Default::default() };
+        let g = build_cnn(cfg);
+        let reg = AlgorithmRegistry::new();
+        let a = Assignment::default_for(&g, &reg);
+        let eng = ReferenceEngine::new();
+        let mut rng = Rng::seed_from(1);
+        let x = Tensor::rand(&[1, 3, 16, 16], &mut rng, -1.0, 1.0);
+        let out = eng.run(&g, &a, &[x]).unwrap();
+        assert_eq!(out.outputs[0].shape(), &[1, 10]);
+        // softmax output sums to 1
+        let s: f32 = out.outputs[0].data().iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mlp_runs_end_to_end() {
+        let cfg = ModelConfig { resolution: 8, ..Default::default() };
+        let g = build_mlp(cfg);
+        let reg = AlgorithmRegistry::new();
+        let a = Assignment::default_for(&g, &reg);
+        let eng = ReferenceEngine::new();
+        let mut rng = Rng::seed_from(2);
+        let x = Tensor::rand(&[1, 3, 8, 8], &mut rng, -1.0, 1.0);
+        let out = eng.run(&g, &a, &[x]).unwrap();
+        assert_eq!(out.outputs[0].shape(), &[1, 10]);
+    }
+}

@@ -1,0 +1,93 @@
+//! SqueezeNet v1.1 (Iandola et al. 2016), width-scaled.
+//!
+//! Eight fire modules between a stem conv and a 1×1 classifier conv. Each
+//! fire module = squeeze 1×1 → (expand 1×1 ‖ expand 3×3) → channel concat:
+//! exactly the parallel-conv + enlargement substitution playground the
+//! paper's Table 3/4/5 exercise.
+
+use super::{Builder, ModelConfig};
+use crate::graph::{Graph, NodeId};
+
+/// One fire module. Returns the concat output and its channel count.
+fn fire(
+    b: &mut Builder,
+    x: NodeId,
+    cin: usize,
+    squeeze: usize,
+    expand: usize,
+    tag: &str,
+) -> (NodeId, usize) {
+    let sq = b.conv_relu(x, cin, squeeze, (1, 1), (1, 1), (0, 0), &format!("{tag}_squeeze"));
+    let e1 = b.conv_relu(sq, squeeze, expand, (1, 1), (1, 1), (0, 0), &format!("{tag}_exp1"));
+    let e3 = b.conv_relu(sq, squeeze, expand, (3, 3), (1, 1), (1, 1), &format!("{tag}_exp3"));
+    let cat = b.concat(&[e1, e3], &format!("{tag}_cat"));
+    (cat, 2 * expand)
+}
+
+/// Build SqueezeNet v1.1 at the given scale.
+pub fn build(cfg: ModelConfig) -> Graph {
+    let mut b = Builder::new(0x51);
+    let x = b.input(&[cfg.batch, 3, cfg.resolution, cfg.resolution]);
+
+    // Stem: conv3x3/2 + relu + maxpool3x3/2.
+    let c1_ch = cfg.ch(64);
+    let c1 = b.conv_relu(x, 3, c1_ch, (3, 3), (2, 2), (1, 1), "conv1");
+    let p1 = b.maxpool(c1, 3, 2, 0, "pool1");
+
+    // Fire 2-3 (v1.1: s16 e64), then pool.
+    let (f2, ch2) = fire(&mut b, p1, c1_ch, cfg.ch(16), cfg.ch(64), "fire2");
+    let (f3, ch3) = fire(&mut b, f2, ch2, cfg.ch(16), cfg.ch(64), "fire3");
+    let p3 = b.maxpool(f3, 3, 2, 0, "pool3");
+
+    // Fire 4-5 (s32 e128), then pool.
+    let (f4, ch4) = fire(&mut b, p3, ch3, cfg.ch(32), cfg.ch(128), "fire4");
+    let (f5, ch5) = fire(&mut b, f4, ch4, cfg.ch(32), cfg.ch(128), "fire5");
+    let p5 = b.maxpool(f5, 3, 2, 0, "pool5");
+
+    // Fire 6-9 (s48 e192, s64 e256).
+    let (f6, ch6) = fire(&mut b, p5, ch5, cfg.ch(48), cfg.ch(192), "fire6");
+    let (f7, ch7) = fire(&mut b, f6, ch6, cfg.ch(48), cfg.ch(192), "fire7");
+    let (f8, ch8) = fire(&mut b, f7, ch7, cfg.ch(64), cfg.ch(256), "fire8");
+    let (f9, ch9) = fire(&mut b, f8, ch8, cfg.ch(64), cfg.ch(256), "fire9");
+
+    // conv10 1x1 to classes + relu, then GAP + softmax head.
+    let c10 = b.conv_relu(f9, ch9, cfg.classes, (1, 1), (1, 1), (0, 0), "conv10");
+    let gap = b.global_avgpool(c10, "gap");
+    let flat = b.g.add1(crate::graph::OpKind::Flatten, &[gap], "flatten");
+    let sm = b.g.add1(crate::graph::OpKind::Softmax, &[flat], "softmax");
+    b.finish(&[sm])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_validates() {
+        let g = build(ModelConfig::default());
+        g.validate().unwrap();
+        // 8 fire modules x 3 convs + conv1 + conv10 = 26 convolutions.
+        let convs = g
+            .nodes()
+            .filter(|(_, n)| matches!(n.op, crate::graph::OpKind::Conv2d { .. }))
+            .count();
+        assert_eq!(convs, 26);
+    }
+
+    #[test]
+    fn output_is_class_distribution() {
+        let g = build(ModelConfig::default());
+        let shapes = g.infer_shapes().unwrap();
+        let out = g.outputs[0];
+        assert_eq!(shapes[out.node.0][out.port], vec![1, 10]);
+    }
+
+    #[test]
+    fn substitutions_available() {
+        let g = build(ModelConfig::default());
+        let rs = crate::subst::RuleSet::standard();
+        let n = rs.neighbors(&g);
+        // conv+relu fusions at minimum (26), plus enlargement sites.
+        assert!(n.len() >= 26, "only {} neighbors", n.len());
+    }
+}

@@ -1,0 +1,71 @@
+//! VGG-16 (Simonyan & Zisserman 2015), width-scaled — a plain stacked-conv
+//! architecture: no branches, no residuals, every conv 3×3 stride-1. The
+//! Winograd-friendliest model in the zoo (every conv admits algorithm C)
+//! and a useful contrast to the branchy models: the outer search has only
+//! fusion work here, so gains come almost entirely from the inner search.
+
+use super::{Builder, ModelConfig};
+use crate::graph::Graph;
+
+/// Build the scaled VGG-16 (13 conv layers + classifier head).
+pub fn build(cfg: ModelConfig) -> Graph {
+    let mut b = Builder::new(0x16);
+    let x = b.input(&[cfg.batch, 3, cfg.resolution, cfg.resolution]);
+
+    // (channels, convs-in-stage) per published VGG-16 configuration D.
+    let stages: [(usize, usize); 5] =
+        [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    let mut cur = x;
+    let mut cin = 3;
+    for (si, (ch, convs)) in stages.into_iter().enumerate() {
+        let cout = cfg.ch(ch);
+        for vi in 0..convs {
+            cur = b.conv_relu(cur, cin, cout, (3, 3), (1, 1), (1, 1), &format!("s{si}c{vi}"));
+            cin = cout;
+        }
+        cur = b.maxpool(cur, 2, 2, 0, &format!("s{si}pool"));
+    }
+    let head = b.classifier(cur, cin, cfg.classes);
+    b.finish(&[head])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};
+
+    #[test]
+    fn builds_and_validates() {
+        let g = build(ModelConfig::default());
+        g.validate().unwrap();
+        let convs = g
+            .nodes()
+            .filter(|(_, n)| matches!(n.op, crate::graph::OpKind::Conv2d { .. }))
+            .count();
+        assert_eq!(convs, 13);
+    }
+
+    #[test]
+    fn every_conv_admits_winograd() {
+        let g = build(ModelConfig::default());
+        let reg = AlgorithmRegistry::new();
+        let a = Assignment::default_for(&g, &reg);
+        let shapes = g.infer_shapes().unwrap();
+        for id in a.tunable_ids(&g, &reg) {
+            let node = g.node(id);
+            if !matches!(node.op, crate::graph::OpKind::Conv2d { .. }) {
+                continue;
+            }
+            let in_shapes: Vec<_> = node
+                .inputs
+                .iter()
+                .map(|p| shapes[p.node.0][p.port].clone())
+                .collect();
+            assert!(
+                reg.applicable(&node.op, &in_shapes).contains(&Algorithm::ConvWinograd),
+                "conv {} not winograd-eligible",
+                node.name
+            );
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (writer)
+//! and the rust runtime (reader). Lives at `artifacts/manifest.json`.
+
+use crate::util::json::{self, Json};
+use std::path::Path;
+
+/// One AOT artifact: an HLO-text file plus its I/O signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    /// Lookup key. Node kernels use `<node signature>::<algorithm>`;
+    /// whole-model artifacts use plain names (`model_fwd`).
+    pub key: String,
+    /// File name relative to the artifacts directory.
+    pub file: String,
+    /// Expected input tensor shapes, in call order.
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Produced output tensor shapes.
+    pub output_shapes: Vec<Vec<usize>>,
+    /// Which kernel implementation the artifact embeds ("pallas_direct",
+    /// "pallas_im2col", "pallas_winograd", "jnp", ...). Informational.
+    pub kernel: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn shapes_to_json(shapes: &[Vec<usize>]) -> Json {
+    Json::Arr(
+        shapes
+            .iter()
+            .map(|s| Json::Arr(s.iter().map(|&d| Json::Num(d as f64)).collect()))
+            .collect(),
+    )
+}
+
+fn shapes_from_json(v: &Json, what: &str) -> anyhow::Result<Vec<Vec<usize>>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{what} not an array"))?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{what} element not an array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("{what} dim not a number")))
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("version", 1i64);
+        root.set(
+            "artifacts",
+            Json::Arr(
+                self.entries
+                    .iter()
+                    .map(|e| {
+                        let mut o = Json::obj();
+                        o.set("key", e.key.as_str())
+                            .set("file", e.file.as_str())
+                            .set("inputs", shapes_to_json(&e.input_shapes))
+                            .set("outputs", shapes_to_json(&e.output_shapes))
+                            .set("kernel", e.kernel.as_str());
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        root
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Manifest> {
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing `artifacts`"))?;
+        let mut entries = Vec::with_capacity(arts.len());
+        for a in arts {
+            entries.push(ArtifactEntry {
+                key: a.req_str("key")?.to_string(),
+                file: a.req_str("file")?.to_string(),
+                input_shapes: shapes_from_json(
+                    a.get("inputs").unwrap_or(&Json::Null),
+                    "inputs",
+                )?,
+                output_shapes: shapes_from_json(
+                    a.get("outputs").unwrap_or(&Json::Null),
+                    "outputs",
+                )?,
+                kernel: a
+                    .get("kernel")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        Manifest::from_json(&json::read_file(path)?)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        json::write_file(path, &self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest {
+            entries: vec![ArtifactEntry {
+                key: "conv2d;st=1,1;pad=1,1;act=relu;b=0;res=0;1x3x8x8;4x3x3x3::direct".into(),
+                file: "conv_a0.hlo.txt".into(),
+                input_shapes: vec![vec![1, 3, 8, 8], vec![4, 3, 3, 3]],
+                output_shapes: vec![vec![1, 4, 8, 8]],
+                kernel: "pallas_direct".into(),
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = sample();
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.entries, m.entries);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("eadgo_manifest_test");
+        let path = dir.join("manifest.json");
+        sample().save(&path).unwrap();
+        let back = Manifest::load(&path).unwrap();
+        assert_eq!(back.entries.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        let j = crate::util::json::parse(r#"{"artifacts": [{"file": "x.hlo"}]}"#).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts (produced once by
+//! `python/compile/aot.py` from JAX/Pallas) and executes them on the PJRT
+//! CPU client. Python is never on this path — the artifacts directory is
+//! the entire interface.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactEntry, Manifest};
+
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client + a table of compiled executables keyed
+/// by artifact key (`<node signature>::<algorithm>` for node kernels,
+/// plain names like `model_fwd` for whole-model artifacts).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: BTreeMap<String, LoadedArtifact>,
+}
+
+impl Runtime {
+    /// Create a runtime on the PJRT CPU client with no artifacts loaded.
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, artifacts: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile every artifact listed in `dir/manifest.json`.
+    /// Returns the number of artifacts loaded.
+    pub fn load_dir(&mut self, dir: &Path) -> anyhow::Result<usize> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let mut n = 0;
+        for entry in manifest.entries {
+            self.load_entry(dir, entry)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Load + compile a single artifact.
+    pub fn load_entry(&mut self, dir: &Path, entry: ArtifactEntry) -> anyhow::Result<()> {
+        let path = dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", entry.key))?;
+        self.artifacts.insert(entry.key.clone(), LoadedArtifact { entry, exe });
+        Ok(())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.artifacts.contains_key(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(String::as_str)
+    }
+
+    pub fn entry(&self, key: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.get(key).map(|a| &a.entry)
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    /// Execute an artifact on f32 tensors. Inputs must match the manifest
+    /// shapes; outputs are returned in manifest order.
+    pub fn execute(&self, key: &str, inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        let art = self
+            .artifacts
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("no artifact `{key}` loaded"))?;
+        anyhow::ensure!(
+            inputs.len() == art.entry.input_shapes.len(),
+            "artifact `{key}` expects {} inputs, got {}",
+            art.entry.input_shapes.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, expect) in inputs.iter().zip(&art.entry.input_shapes) {
+            anyhow::ensure!(
+                t.shape() == expect.as_slice(),
+                "artifact `{key}` input shape {:?} != manifest {:?}",
+                t.shape(),
+                expect
+            );
+            literals.push(tensor_to_literal(t)?);
+        }
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing `{key}`: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of `{key}`: {e}"))?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result of `{key}`: {e}"))?;
+        anyhow::ensure!(
+            parts.len() == art.entry.output_shapes.len(),
+            "artifact `{key}` returned {} outputs, manifest says {}",
+            parts.len(),
+            art.entry.output_shapes.len()
+        );
+        parts
+            .into_iter()
+            .zip(&art.entry.output_shapes)
+            .map(|(lit, shape)| literal_to_tensor(&lit, shape))
+            .collect()
+    }
+}
+
+/// Convert a dense f32 tensor to an XLA literal with the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("literal reshape {:?}: {e}", t.shape()))
+}
+
+/// Convert an XLA literal back to a tensor, checking the element count.
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> anyhow::Result<Tensor> {
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))?;
+    anyhow::ensure!(
+        data.len() == shape.iter().product::<usize>(),
+        "literal has {} elements, shape {:?} wants {}",
+        data.len(),
+        shape,
+        shape.iter().product::<usize>()
+    );
+    Ok(Tensor::new(shape.to_vec(), data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit, &[2, 3]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_detected() {
+        let t = Tensor::new(vec![4], vec![1., 2., 3., 4.]);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert!(literal_to_tensor(&lit, &[5]).is_err());
+    }
+}

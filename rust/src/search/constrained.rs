@@ -1,0 +1,150 @@
+//! Constrained optimization via binary search on the linear weight `w`
+//! (paper §4.4): objectives like "least energy possible while inference
+//! time stays under 0.7 ms" are served by searching the weight of
+//! `w·E + (1-w)·T` — requiring only *pair-wise* accuracy from the cost
+//! model, which the paper argues is more robust than MetaFlow's
+//! value-accuracy-dependent approach.
+
+use super::outer::{OptimizerContext, SearchConfig};
+use super::{optimize, OptimizeResult};
+use crate::cost::CostFunction;
+use crate::graph::Graph;
+
+/// Result of a constrained search: the chosen weight and the per-step trace.
+pub struct ConstrainedResult {
+    pub result: OptimizeResult,
+    pub weight: f64,
+    /// (w, time_ms, energy_j) for every probe, in probe order.
+    pub trace: Vec<(f64, f64, f64)>,
+    /// Whether the time budget was satisfiable at all.
+    pub feasible: bool,
+}
+
+/// Minimize energy subject to `time_ms <= time_budget_ms`.
+///
+/// Larger `w` (weight on energy) yields lower energy but higher time, so we
+/// binary-search the largest feasible `w`. Falls back to the best-time
+/// solution when even `w = 0` misses the budget (infeasible).
+pub fn optimize_with_time_budget(
+    g0: &Graph,
+    ctx: &mut OptimizerContext,
+    time_budget_ms: f64,
+    cfg: &SearchConfig,
+    probes: usize,
+) -> anyhow::Result<ConstrainedResult> {
+    let mut trace = Vec::new();
+    let run = |w: f64, ctx: &mut OptimizerContext| -> anyhow::Result<OptimizeResult> {
+        let res = optimize(g0, ctx, &CostFunction::linear(w), cfg)?;
+        Ok(res)
+    };
+
+    // Feasibility check at w = 0 (pure time objective).
+    let fastest = run(0.0, ctx)?;
+    trace.push((0.0, fastest.cost.time_ms, fastest.cost.energy_j));
+    if fastest.cost.time_ms > time_budget_ms {
+        return Ok(ConstrainedResult { result: fastest, weight: 0.0, trace, feasible: false });
+    }
+
+    let mut lo = 0.0f64; // known feasible
+    let mut hi = 1.0f64; // possibly infeasible
+    let mut best = fastest;
+    let mut best_w = 0.0;
+
+    // Is w = 1 already feasible? Then it is optimal for energy.
+    let full = run(1.0, ctx)?;
+    trace.push((1.0, full.cost.time_ms, full.cost.energy_j));
+    if full.cost.time_ms <= time_budget_ms {
+        return Ok(ConstrainedResult { result: full, weight: 1.0, trace, feasible: true });
+    }
+
+    for _ in 0..probes {
+        let mid = 0.5 * (lo + hi);
+        let res = run(mid, ctx)?;
+        trace.push((mid, res.cost.time_ms, res.cost.energy_j));
+        if res.cost.time_ms <= time_budget_ms {
+            lo = mid;
+            if res.cost.energy_j < best.cost.energy_j {
+                best = res;
+                best_w = mid;
+            }
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(ConstrainedResult { result: best, weight: best_w, trace, feasible: true })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, OpKind, PortRef};
+
+    fn graph() -> Graph {
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: vec![1, 8, 16, 16] }, &[], "x");
+        let w1 = g.add1(OpKind::weight(vec![16, 8, 3, 3], 1), &[], "w1");
+        let c1 = g.add1(
+            OpKind::Conv2d {
+                stride: (1, 1),
+                pad: (1, 1),
+                act: Activation::Relu,
+                has_bias: false,
+                has_residual: false,
+            },
+            &[x, w1],
+            "c1",
+        );
+        let w2 = g.add1(OpKind::weight(vec![16, 16, 3, 3], 2), &[], "w2");
+        let c2 = g.add1(
+            OpKind::Conv2d {
+                stride: (1, 1),
+                pad: (1, 1),
+                act: Activation::Relu,
+                has_bias: false,
+                has_residual: false,
+            },
+            &[c1, w2],
+            "c2",
+        );
+        g.outputs = vec![PortRef::of(c2)];
+        g
+    }
+
+    #[test]
+    fn generous_budget_returns_best_energy() {
+        let g = graph();
+        let mut ctx = OptimizerContext::offline_default();
+        let r =
+            optimize_with_time_budget(&g, &mut ctx, 1e9, &SearchConfig::default(), 4).unwrap();
+        assert!(r.feasible);
+        assert_eq!(r.weight, 1.0);
+    }
+
+    #[test]
+    fn impossible_budget_reports_infeasible() {
+        let g = graph();
+        let mut ctx = OptimizerContext::offline_default();
+        let r =
+            optimize_with_time_budget(&g, &mut ctx, 1e-9, &SearchConfig::default(), 4).unwrap();
+        assert!(!r.feasible);
+    }
+
+    #[test]
+    fn budget_between_extremes_is_respected() {
+        let g = graph();
+        let mut ctx = OptimizerContext::offline_default();
+        // budget = halfway between best-time and best-energy times
+        let fast = optimize(&g, &mut ctx, &CostFunction::Time, &SearchConfig::default()).unwrap();
+        let slow =
+            optimize(&g, &mut ctx, &CostFunction::Energy, &SearchConfig::default()).unwrap();
+        if slow.cost.time_ms > fast.cost.time_ms {
+            let budget = 0.5 * (fast.cost.time_ms + slow.cost.time_ms);
+            let r = optimize_with_time_budget(&g, &mut ctx, budget, &SearchConfig::default(), 6)
+                .unwrap();
+            assert!(r.feasible);
+            assert!(r.result.cost.time_ms <= budget + 1e-9);
+            // and no more energy than the pure-time solution
+            assert!(r.result.cost.energy_j <= fast.cost.energy_j + 1e-9);
+        }
+    }
+}

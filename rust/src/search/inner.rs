@@ -1,0 +1,185 @@
+//! Inner search (paper Algorithm 2): optimize the algorithm assignment of a
+//! *fixed* graph by local search in the distance-`d` neighborhood.
+//!
+//! ```text
+//! 1: Let S be the set of all algorithm assignments of G
+//! 2: Pick A ∈ S arbitrarily.
+//! 3: repeat
+//! 4:   noChange = true
+//! 5:   for A' with distance(A', A) <= d:
+//! 6:     if Cost(G, A') < Cost(G, A): A = A'; noChange = false
+//! 7: until noChange
+//! ```
+//!
+//! d=1 is plain greedy; d=2 "allows one step of downgrade"; d >= #nodes is
+//! exhaustive. For additive objectives d=1 provably reaches the global
+//! optimum (the cost separates per node) — property-tested against
+//! exhaustive enumeration in `rust/tests/prop_invariants.rs`.
+
+use crate::algo::Assignment;
+use crate::cost::{CostFunction, GraphCost, GraphCostTable};
+use crate::graph::NodeId;
+use crate::util::rng::Rng;
+
+/// Outcome of an inner search.
+#[derive(Debug, Clone)]
+pub struct InnerResult {
+    pub assignment: Assignment,
+    pub cost: GraphCost,
+    /// Number of full neighborhood sweeps until convergence.
+    pub sweeps: usize,
+    /// Number of cost evaluations performed.
+    pub evals: u64,
+}
+
+/// Run Algorithm 2 from `start`.
+pub fn inner_search(
+    table: &GraphCostTable,
+    cf: &CostFunction,
+    d: usize,
+    start: Assignment,
+) -> InnerResult {
+    assert!(d >= 1, "inner distance must be >= 1");
+    let ids: Vec<NodeId> = table
+        .costed_ids()
+        .filter(|id| table.node_options(*id).len() > 1)
+        .collect();
+    let mut a = start;
+    let mut cost = table.eval(&a);
+    let mut value = cf.eval(&cost);
+    let mut sweeps = 0usize;
+    let mut evals = 0u64;
+
+    loop {
+        let mut changed = false;
+        sweeps += 1;
+
+        // distance-1 moves: change one node.
+        for &id in &ids {
+            let current = a.get(id).unwrap();
+            for &(algo, _) in table.node_options(id) {
+                if algo == current {
+                    continue;
+                }
+                let cand = table.eval_swap(cost, &a, id, algo);
+                evals += 1;
+                let v = cf.eval(&cand);
+                if v < value {
+                    a.set(id, algo);
+                    cost = cand;
+                    value = v;
+                    changed = true;
+                }
+            }
+        }
+
+        // distance-2 moves: change two nodes simultaneously (only useful for
+        // non-separable objectives like Power).
+        if d >= 2 {
+            for i in 0..ids.len() {
+                for j in (i + 1)..ids.len() {
+                    let (ni, nj) = (ids[i], ids[j]);
+                    let cur_i = a.get(ni).unwrap();
+                    let cur_j = a.get(nj).unwrap();
+                    for &(ai, _) in table.node_options(ni) {
+                        for &(aj, _) in table.node_options(nj) {
+                            if ai == cur_i && aj == cur_j {
+                                continue;
+                            }
+                            let c1 = table.eval_swap(cost, &a, ni, ai);
+                            // second swap relative to (a with ni=ai): the
+                            // incremental delta of nj is independent of ni.
+                            let cand = table.eval_swap(c1, &a, nj, aj);
+                            evals += 1;
+                            let v = cf.eval(&cand);
+                            if v < value {
+                                a.set(ni, ai);
+                                a.set(nj, aj);
+                                cost = cand;
+                                value = v;
+                                changed = true;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        if !changed {
+            break;
+        }
+        // Safety valve: local search over a finite lattice always terminates
+        // (strict improvement), but cap sweeps defensively.
+        if sweeps > 10_000 {
+            break;
+        }
+    }
+    InnerResult { assignment: a, cost, sweeps, evals }
+}
+
+/// Exhaustive assignment enumeration (ground truth for tests; exponential —
+/// guarded by `max_states`). Returns None if the space exceeds the cap.
+pub fn exhaustive_search(
+    table: &GraphCostTable,
+    cf: &CostFunction,
+    start: &Assignment,
+    max_states: u64,
+) -> Option<InnerResult> {
+    let ids: Vec<NodeId> = table
+        .costed_ids()
+        .filter(|id| table.node_options(*id).len() > 1)
+        .collect();
+    let mut total: u64 = 1;
+    for id in &ids {
+        total = total.checked_mul(table.node_options(*id).len() as u64)?;
+        if total > max_states {
+            return None;
+        }
+    }
+    let mut best = start.clone();
+    let mut best_cost = table.eval(&best);
+    let mut best_val = cf.eval(&best_cost);
+    let mut evals = 0u64;
+    let mut counters = vec![0usize; ids.len()];
+    let mut a = start.clone();
+    loop {
+        // materialize current counter state
+        for (slot, &id) in ids.iter().enumerate() {
+            a.set(id, table.node_options(id)[counters[slot]].0);
+        }
+        let cost = table.eval(&a);
+        evals += 1;
+        let v = cf.eval(&cost);
+        if v < best_val {
+            best = a.clone();
+            best_cost = cost;
+            best_val = v;
+        }
+        // increment odometer
+        let mut slot = 0;
+        loop {
+            if slot == ids.len() {
+                return Some(InnerResult { assignment: best, cost: best_cost, sweeps: 1, evals });
+            }
+            counters[slot] += 1;
+            if counters[slot] < table.node_options(ids[slot]).len() {
+                break;
+            }
+            counters[slot] = 0;
+            slot += 1;
+        }
+    }
+}
+
+/// A uniformly random assignment (the paper's "pick A arbitrarily" starting
+/// point; used by property tests to vary the start).
+pub fn random_assignment(table: &GraphCostTable, base: &Assignment, rng: &mut Rng) -> Assignment {
+    let mut a = base.clone();
+    for id in table.costed_ids() {
+        let options = table.node_options(id);
+        if options.len() > 1 {
+            a.set(id, options[rng.below(options.len())].0);
+        }
+    }
+    a
+}

@@ -1,0 +1,195 @@
+//! The two-level energy-aware search (paper §3.3) and the public
+//! `optimize` entry point.
+
+pub mod constrained;
+pub mod inner;
+pub mod outer;
+
+pub use constrained::{optimize_with_time_budget, ConstrainedResult};
+pub use inner::{exhaustive_search, inner_search, random_assignment, InnerResult};
+pub use outer::{outer_search, OptimizerContext, OuterResult, SearchConfig, SearchStats};
+
+use crate::algo::Assignment;
+use crate::cost::{CostFunction, GraphCost};
+use crate::graph::Graph;
+
+/// Outcome of a full optimization run, with the origin baseline attached
+/// for savings reporting.
+pub struct OptimizeResult {
+    pub graph: Graph,
+    pub assignment: Assignment,
+    /// Cost of the optimized (G, A) under the additive model.
+    pub cost: GraphCost,
+    /// Cost of the origin graph under the default assignment.
+    pub original: GraphCost,
+    pub objective_value: f64,
+    pub original_objective: f64,
+    /// Normalized objective actually used (after baseline normalization).
+    pub objective: CostFunction,
+    pub stats: SearchStats,
+}
+
+impl OptimizeResult {
+    /// Fractional savings on the objective (0.24 = 24% better).
+    pub fn objective_savings(&self) -> f64 {
+        if self.original_objective > 0.0 {
+            1.0 - self.objective_value / self.original_objective
+        } else {
+            0.0
+        }
+    }
+
+    pub fn energy_savings(&self) -> f64 {
+        1.0 - self.cost.energy_j / self.original.energy_j.max(1e-12)
+    }
+
+    pub fn time_savings(&self) -> f64 {
+        1.0 - self.cost.time_ms / self.original.time_ms.max(1e-12)
+    }
+}
+
+/// Optimize `g0` for `objective`: profiles as needed, normalizes the
+/// objective against the origin cost, then runs the two-level search.
+pub fn optimize(
+    g0: &Graph,
+    ctx: &mut OptimizerContext,
+    objective: &CostFunction,
+    cfg: &SearchConfig,
+) -> anyhow::Result<OptimizeResult> {
+    g0.validate().map_err(|e| anyhow::anyhow!("invalid input graph: {e}"))?;
+    // Baseline: origin graph, default assignment.
+    let (table0, _) = ctx.table_for(g0)?;
+    let default_a = Assignment::default_for(g0, &ctx.reg);
+    let original = table0.eval(&default_a);
+    let cf = objective.normalized(&original);
+    let original_objective = cf.eval(&original);
+
+    let result = outer_search(g0, ctx, &cf, cfg)?;
+    Ok(OptimizeResult {
+        graph: result.graph,
+        assignment: result.assignment,
+        cost: result.cost,
+        original,
+        objective_value: result.objective_value,
+        original_objective,
+        objective: cf,
+        stats: result.stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, OpKind, PortRef};
+
+    /// Two parallel convs + concat + relu: rich enough for both levels.
+    fn test_graph() -> Graph {
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: vec![1, 16, 64, 64] }, &[], "x");
+        let w1 = g.add1(OpKind::weight(vec![16, 16, 3, 3], 1), &[], "w1");
+        let w2 = g.add1(OpKind::weight(vec![16, 16, 3, 3], 2), &[], "w2");
+        let c1 = g.add1(
+            OpKind::Conv2d {
+                stride: (1, 1),
+                pad: (1, 1),
+                act: Activation::None,
+                has_bias: false,
+                has_residual: false,
+            },
+            &[x, w1],
+            "c1",
+        );
+        let c2 = g.add1(
+            OpKind::Conv2d {
+                stride: (1, 1),
+                pad: (1, 1),
+                act: Activation::None,
+                has_bias: false,
+                has_residual: false,
+            },
+            &[x, w2],
+            "c2",
+        );
+        let cat = g.add1(OpKind::Concat { axis: 1 }, &[c1, c2], "cat");
+        let r = g.add1(OpKind::Relu, &[cat], "relu");
+        g.outputs = vec![PortRef::of(r)];
+        g
+    }
+
+    #[test]
+    fn optimize_energy_beats_origin() {
+        let g = test_graph();
+        let mut ctx = OptimizerContext::offline_default();
+        let res = optimize(&g, &mut ctx, &CostFunction::Energy, &SearchConfig::default()).unwrap();
+        assert!(
+            res.cost.energy_j < res.original.energy_j,
+            "optimized {} vs origin {}",
+            res.cost.energy_j,
+            res.original.energy_j
+        );
+    }
+
+    #[test]
+    fn optimize_time_beats_origin() {
+        let g = test_graph();
+        let mut ctx = OptimizerContext::offline_default();
+        let res = optimize(&g, &mut ctx, &CostFunction::Time, &SearchConfig::default()).unwrap();
+        assert!(res.cost.time_ms <= res.original.time_ms);
+        assert!(res.objective_savings() >= 0.0);
+    }
+
+    #[test]
+    fn inner_only_vs_both_ablation() {
+        let g = test_graph();
+        let mut ctx = OptimizerContext::offline_default();
+        let both = optimize(&g, &mut ctx, &CostFunction::Energy, &SearchConfig::default()).unwrap();
+        let mut ctx2 = OptimizerContext::offline_default();
+        let inner_only = optimize(
+            &g,
+            &mut ctx2,
+            &CostFunction::Energy,
+            &SearchConfig { enable_outer: false, ..Default::default() },
+        )
+        .unwrap();
+        // Both-levels can never be worse than inner alone (it includes it).
+        assert!(both.cost.energy_j <= inner_only.cost.energy_j + 1e-9);
+    }
+
+    #[test]
+    fn disabled_everything_is_origin() {
+        let g = test_graph();
+        let mut ctx = OptimizerContext::offline_default();
+        let res = optimize(
+            &g,
+            &mut ctx,
+            &CostFunction::Energy,
+            &SearchConfig { enable_outer: false, enable_inner: false, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(res.cost, res.original);
+        assert!((res.objective_savings()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_one_is_greedy_and_terminates() {
+        let g = test_graph();
+        let mut ctx = OptimizerContext::offline_default();
+        let res = optimize(
+            &g,
+            &mut ctx,
+            &CostFunction::Energy,
+            &SearchConfig { alpha: 1.0, ..Default::default() },
+        )
+        .unwrap();
+        assert!(res.cost.energy_j <= res.original.energy_j);
+    }
+
+    #[test]
+    fn power_objective_trades_time() {
+        let g = test_graph();
+        let mut ctx = OptimizerContext::offline_default();
+        let res = optimize(&g, &mut ctx, &CostFunction::Power, &SearchConfig::default()).unwrap();
+        // minimum power should not exceed origin power
+        assert!(res.cost.power_w() <= res.original.power_w() + 1e-9);
+    }
+}

@@ -1,0 +1,249 @@
+//! Serving coordinator: a single-node request loop with Poisson arrivals,
+//! FIFO queueing, and dynamic batching — the L3 "thin driver" that puts the
+//! optimized `(G, A)` behind a request interface (`eadgo serve`).
+//!
+//! The loop is a discrete-event simulation driven by *real* service times:
+//! request arrivals follow a seeded Poisson process on a virtual clock,
+//! while every batch execution is a real engine call whose measured
+//! wallclock advances that clock. Latency percentiles therefore reflect
+//! genuine compute + queueing behaviour, reproducibly.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Serving-loop configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Total requests to serve.
+    pub requests: usize,
+    /// Maximum batch size the dispatcher may form.
+    pub batch_max: usize,
+    /// Mean arrival rate (requests/second) of the Poisson process.
+    pub arrival_rate_hz: f64,
+    /// How long the dispatcher waits to fill a batch once one request is
+    /// pending, seconds (0 = greedy: serve whatever is queued).
+    pub max_wait_s: f64,
+    /// RNG seed for arrivals and request payloads.
+    pub seed: u64,
+    /// Input tensor shape per request.
+    pub input_shape: Vec<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            requests: 64,
+            batch_max: 4,
+            arrival_rate_hz: 500.0,
+            max_wait_s: 0.002,
+            seed: 2026,
+            input_shape: vec![1, 3, 32, 32],
+        }
+    }
+}
+
+/// Per-request accounting (times on the virtual clock, seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct RequestRecord {
+    pub id: usize,
+    pub arrival_s: f64,
+    pub start_s: f64,
+    pub done_s: f64,
+    pub batch_size: usize,
+}
+
+impl RequestRecord {
+    pub fn latency_s(&self) -> f64 {
+        self.done_s - self.arrival_s
+    }
+
+    pub fn queue_delay_s(&self) -> f64 {
+        self.start_s - self.arrival_s
+    }
+}
+
+/// Aggregated serving report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub records: Vec<RequestRecord>,
+    /// Total virtual time from first arrival to last completion.
+    pub span_s: f64,
+    /// Real wallclock spent inside the engine.
+    pub busy_s: f64,
+    pub batches: usize,
+}
+
+impl ServeReport {
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.records.iter().map(RequestRecord::latency_s).collect::<Vec<_>>())
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.span_s > 0.0 {
+            self.records.len() as f64 / self.span_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches > 0 {
+            self.records.len() as f64 / self.batches as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run the serving loop. `exec_batch` performs one real inference batch
+/// (one tensor per request) and returns one output per request; its
+/// measured wallclock is the service time on the virtual clock.
+pub fn serve<F>(cfg: &ServeConfig, mut exec_batch: F) -> anyhow::Result<ServeReport>
+where
+    F: FnMut(&[Tensor]) -> anyhow::Result<Vec<Tensor>>,
+{
+    anyhow::ensure!(cfg.requests > 0, "requests must be > 0");
+    anyhow::ensure!(cfg.batch_max > 0, "batch_max must be > 0");
+    anyhow::ensure!(cfg.arrival_rate_hz > 0.0, "arrival rate must be > 0");
+
+    let mut rng = Rng::seed_from(cfg.seed);
+    // Poisson arrivals: exponential inter-arrival times.
+    let mut arrivals = Vec::with_capacity(cfg.requests);
+    let mut t = 0.0f64;
+    for _ in 0..cfg.requests {
+        t += -rng.f64().max(1e-12).ln() / cfg.arrival_rate_hz;
+        arrivals.push(t);
+    }
+
+    let mut records: Vec<RequestRecord> = Vec::with_capacity(cfg.requests);
+    let mut clock = 0.0f64;
+    let mut busy_s = 0.0f64;
+    let mut batches = 0usize;
+    let mut next = 0usize; // next unserved request index
+
+    while next < cfg.requests {
+        // Advance to the first pending arrival if idle.
+        clock = clock.max(arrivals[next]);
+        // Optional batching wait: let the window fill.
+        let deadline = clock + cfg.max_wait_s;
+        let mut end = next + 1;
+        while end < cfg.requests && end - next < cfg.batch_max && arrivals[end] <= deadline {
+            end += 1;
+        }
+        // If we waited for later arrivals, the batch starts at the later of
+        // (deadline reached, last included arrival).
+        if end - next > 1 {
+            clock = clock.max(arrivals[end - 1]);
+        }
+        let batch_ids: Vec<usize> = (next..end).collect();
+        let inputs: Vec<Tensor> = batch_ids
+            .iter()
+            .map(|_| Tensor::rand(&cfg.input_shape, &mut rng, -1.0, 1.0))
+            .collect();
+
+        let t0 = std::time::Instant::now();
+        let outputs = exec_batch(&inputs)?;
+        let service = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(
+            outputs.len() == inputs.len(),
+            "exec_batch returned {} outputs for {} requests",
+            outputs.len(),
+            inputs.len()
+        );
+        busy_s += service;
+        batches += 1;
+        let start = clock;
+        clock += service;
+        for &id in &batch_ids {
+            records.push(RequestRecord {
+                id,
+                arrival_s: arrivals[id],
+                start_s: start,
+                done_s: clock,
+                batch_size: batch_ids.len(),
+            });
+        }
+        next = end;
+    }
+
+    let first = arrivals.first().copied().unwrap_or(0.0);
+    Ok(ServeReport { span_s: clock - first, busy_s, batches, records })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_exec(inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        // trivial real work: elementwise relu per request
+        Ok(inputs.iter().map(crate::tensor::ops::relu).collect())
+    }
+
+    fn cfg(requests: usize, batch: usize) -> ServeConfig {
+        ServeConfig {
+            requests,
+            batch_max: batch,
+            arrival_rate_hz: 10_000.0,
+            max_wait_s: 0.001,
+            seed: 1,
+            input_shape: vec![1, 3, 8, 8],
+        }
+    }
+
+    #[test]
+    fn serves_all_requests_in_order() {
+        let report = serve(&cfg(50, 4), fast_exec).unwrap();
+        assert_eq!(report.records.len(), 50);
+        let ids: Vec<usize> = report.records.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn time_accounting_consistent() {
+        let report = serve(&cfg(40, 4), fast_exec).unwrap();
+        for r in &report.records {
+            assert!(r.start_s >= r.arrival_s - 1e-12, "start before arrival");
+            assert!(r.done_s > r.start_s, "done before start");
+            assert!(r.batch_size >= 1 && r.batch_size <= 4);
+        }
+        assert!(report.throughput_rps() > 0.0);
+        assert!(report.latency_summary().p95 >= report.latency_summary().p50);
+    }
+
+    #[test]
+    fn batching_kicks_in_under_load() {
+        // arrival rate far above service rate + generous window -> batches form
+        let report = serve(&cfg(64, 8), fast_exec).unwrap();
+        assert!(report.mean_batch_size() > 1.0, "mean batch {}", report.mean_batch_size());
+        assert!(report.batches < 64);
+    }
+
+    #[test]
+    fn batch_max_one_disables_batching() {
+        let report = serve(&cfg(30, 1), fast_exec).unwrap();
+        assert_eq!(report.batches, 30);
+        assert!(report.records.iter().all(|r| r.batch_size == 1));
+    }
+
+    #[test]
+    fn deterministic_arrivals() {
+        let a = serve(&cfg(20, 4), fast_exec).unwrap();
+        let b = serve(&cfg(20, 4), fast_exec).unwrap();
+        let arr_a: Vec<f64> = a.records.iter().map(|r| r.arrival_s).collect();
+        let arr_b: Vec<f64> = b.records.iter().map(|r| r.arrival_s).collect();
+        assert_eq!(arr_a, arr_b);
+    }
+
+    #[test]
+    fn exec_errors_propagate() {
+        let r = serve(&cfg(5, 2), |_| anyhow::bail!("backend down"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn output_arity_checked() {
+        let r = serve(&cfg(5, 2), |_| Ok(vec![]));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! Equivalent graph substitutions (paper §3.1).
+//!
+//! A substitution `S` takes a graph, transforms a matched subgraph by a
+//! rule, and produces one or more new graphs that are *equivalent*: for any
+//! input tensors they produce the same output tensors. The closure of a
+//! graph under a rule set is the paper's "equivalent graph space" that the
+//! outer search explores.
+//!
+//! Every rule here is verified for semantic equivalence two ways: unit
+//! tests on structure, and randomized end-to-end executions of
+//! (original, substituted) pairs through the reference engine (see
+//! `rust/tests/prop_invariants.rs`).
+
+pub mod rules;
+
+use crate::graph::Graph;
+
+/// One equivalent graph substitution `S_i`.
+pub trait Rule: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Apply the rule at every matching site, returning one new graph per
+    /// site (each graph = the rule applied at exactly one site, mirroring
+    /// MetaFlow's one-substitution-per-step search granularity).
+    fn apply_all(&self, g: &Graph) -> Vec<Graph>;
+}
+
+/// The standard rule set `{S_1..S_m}` handed to the optimizer.
+pub struct RuleSet {
+    rules: Vec<Box<dyn Rule>>,
+}
+
+impl RuleSet {
+    pub fn standard() -> RuleSet {
+        RuleSet {
+            rules: vec![
+                Box::new(rules::FuseConvRelu),
+                Box::new(rules::FuseDwConvRelu),
+                Box::new(rules::FuseAddRelu),
+                Box::new(rules::FuseConvBn),
+                Box::new(rules::FuseDwConvBn),
+                Box::new(rules::MergeParallelConvs),
+                Box::new(rules::EnlargeConvKernel),
+                Box::new(rules::SplitConcatElim),
+                Box::new(rules::ConcatSplitElim),
+                Box::new(rules::FuseConvResidual),
+            ],
+        }
+    }
+
+    pub fn empty() -> RuleSet {
+        RuleSet { rules: Vec::new() }
+    }
+
+    pub fn with_rules(rules: Vec<Box<dyn Rule>>) -> RuleSet {
+        RuleSet { rules }
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.rules.iter().map(|r| r.name()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// All one-substitution neighbors of `g`, compacted.
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): rule products are *not* validated
+    /// here in release builds — every rule is equivalence-verified by the
+    /// property suite, and the outer search validates each surviving
+    /// candidate exactly once (shape inference) after hash dedup, so
+    /// validating here would double the dominant cost of search expansion.
+    /// Debug builds still validate and panic loudly on any rule bug.
+    pub fn neighbors(&self, g: &Graph) -> Vec<(Graph, &'static str)> {
+        let mut out = Vec::new();
+        for rule in &self.rules {
+            for mut cand in rule.apply_all(g) {
+                cand.compact();
+                if cfg!(debug_assertions) {
+                    if let Err(e) = cand.validate() {
+                        panic!("rule {} produced invalid graph: {e:?}", rule.name());
+                    }
+                }
+                out.push((cand, rule.name()));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_ruleset_nonempty() {
+        let rs = RuleSet::standard();
+        assert!(rs.len() >= 6);
+        assert!(rs.names().contains(&"fuse_conv_relu"));
+    }
+}

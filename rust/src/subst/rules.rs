@@ -1,0 +1,822 @@
+//! The concrete substitution rules.
+//!
+//! Rules follow MetaFlow's catalogue adapted to our operator set:
+//! operator fusion (conv+relu, add+relu, conv+bn, conv+residual-add),
+//! parallel-convolution merging (the Inception/fire-module workhorse),
+//! kernel enlargement (1×1 → padded 3×3, an *enabling* substitution that
+//! costs FLOPs but unlocks merges), and split/concat cancellation.
+
+use super::Rule;
+use crate::graph::op::{Activation, OpKind};
+use crate::graph::{Graph, NodeId, PortRef, TensorShape};
+
+/// Shorthand for a Conv2d attribute bundle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct ConvAttrs {
+    pub stride: (usize, usize),
+    pub pad: (usize, usize),
+    pub act: Activation,
+    pub has_bias: bool,
+    pub has_residual: bool,
+}
+
+pub(crate) fn conv_attrs(op: &OpKind) -> Option<ConvAttrs> {
+    match op {
+        OpKind::Conv2d { stride, pad, act, has_bias, has_residual } => Some(ConvAttrs {
+            stride: *stride,
+            pad: *pad,
+            act: *act,
+            has_bias: *has_bias,
+            has_residual: *has_residual,
+        }),
+        _ => None,
+    }
+}
+
+fn conv_op(a: ConvAttrs) -> OpKind {
+    OpKind::Conv2d {
+        stride: a.stride,
+        pad: a.pad,
+        act: a.act,
+        has_bias: a.has_bias,
+        has_residual: a.has_residual,
+    }
+}
+
+/// How many consumers (including graph outputs) read port `p`?
+fn fanout(g: &Graph, p: PortRef) -> usize {
+    let mut n = 0;
+    for (_, node) in g.nodes() {
+        n += node.inputs.iter().filter(|i| **i == p).count();
+    }
+    n + g.outputs.iter().filter(|o| **o == p).count()
+}
+
+fn shapes_of(g: &Graph) -> Vec<Vec<TensorShape>> {
+    g.infer_shapes().expect("substitution over invalid graph")
+}
+
+// ---------------------------------------------------------------------------
+// Rule: Conv2d(act=None) followed by Relu  =>  Conv2d(act=Relu)
+// ---------------------------------------------------------------------------
+pub struct FuseConvRelu;
+
+impl Rule for FuseConvRelu {
+    fn name(&self) -> &'static str {
+        "fuse_conv_relu"
+    }
+
+    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+        let mut out = Vec::new();
+        for (relu_id, relu) in g.nodes() {
+            if relu.op != OpKind::Relu {
+                continue;
+            }
+            let conv_port = relu.inputs[0];
+            let conv = g.node(conv_port.node);
+            let Some(attrs) = conv_attrs(&conv.op) else { continue };
+            if attrs.act != Activation::None {
+                continue;
+            }
+            // The conv's output must feed only this relu, otherwise other
+            // consumers would observe pre-activation values.
+            if fanout(g, conv_port) != 1 {
+                continue;
+            }
+            let mut ng = g.clone();
+            ng.node_mut(conv_port.node).op =
+                conv_op(ConvAttrs { act: Activation::Relu, ..attrs });
+            ng.redirect(PortRef::of(relu_id), conv_port);
+            out.push(ng);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: DwConv2d(act=None) followed by Relu => DwConv2d(act=Relu)
+// ---------------------------------------------------------------------------
+pub struct FuseDwConvRelu;
+
+impl Rule for FuseDwConvRelu {
+    fn name(&self) -> &'static str {
+        "fuse_dwconv_relu"
+    }
+
+    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+        let mut out = Vec::new();
+        for (relu_id, relu) in g.nodes() {
+            if relu.op != OpKind::Relu {
+                continue;
+            }
+            let dw_port = relu.inputs[0];
+            let dw = g.node(dw_port.node);
+            let OpKind::DwConv2d { stride, pad, act, has_bias } = dw.op else { continue };
+            if act != Activation::None || fanout(g, dw_port) != 1 {
+                continue;
+            }
+            let mut ng = g.clone();
+            ng.node_mut(dw_port.node).op =
+                OpKind::DwConv2d { stride, pad, act: Activation::Relu, has_bias };
+            ng.redirect(PortRef::of(relu_id), dw_port);
+            out.push(ng);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: BatchNorm(DwConv2d(x, w[, b])) => DwConv2d with folded params.
+// Depthwise output channel k is produced by filter w[k,0,:,:], so the same
+// FoldBnWeight (per-out-channel scale) applies.
+// ---------------------------------------------------------------------------
+pub struct FuseDwConvBn;
+
+impl Rule for FuseDwConvBn {
+    fn name(&self) -> &'static str {
+        "fuse_dwconv_bn"
+    }
+
+    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+        let mut out = Vec::new();
+        for (bn_id, bn) in g.nodes() {
+            let OpKind::BatchNorm { eps } = bn.op else { continue };
+            let dw_port = bn.inputs[0];
+            let dw = g.node(dw_port.node);
+            let OpKind::DwConv2d { stride, pad, act, has_bias } = dw.op else { continue };
+            if act != Activation::None || fanout(g, dw_port) != 1 {
+                continue;
+            }
+            let (gamma, beta, mean, var) = (bn.inputs[1], bn.inputs[2], bn.inputs[3], bn.inputs[4]);
+            let w = dw.inputs[1];
+            let x = dw.inputs[0];
+            let bias = has_bias.then(|| dw.inputs[2]);
+
+            let mut ng = g.clone();
+            let wf = ng.add(
+                OpKind::FoldBnWeight { eps },
+                vec![w, gamma, var],
+                &format!("{}_wfold", dw.name),
+            );
+            let mut bias_inputs = vec![gamma, beta, mean, var];
+            if let Some(b) = bias {
+                bias_inputs.insert(0, b);
+            }
+            let bf = ng.add(
+                OpKind::FoldBnBias { eps, has_bias: bias.is_some() },
+                bias_inputs,
+                &format!("{}_bfold", dw.name),
+            );
+            let newdw = ng.add(
+                OpKind::DwConv2d { stride, pad, act, has_bias: true },
+                vec![x, PortRef::of(wf), PortRef::of(bf)],
+                &format!("{}_bnfold", dw.name),
+            );
+            ng.redirect(PortRef::of(bn_id), PortRef::of(newdw));
+            out.push(ng);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: Relu(Add(a, b)) => AddRelu(a, b)
+// ---------------------------------------------------------------------------
+pub struct FuseAddRelu;
+
+impl Rule for FuseAddRelu {
+    fn name(&self) -> &'static str {
+        "fuse_add_relu"
+    }
+
+    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+        let mut out = Vec::new();
+        for (relu_id, relu) in g.nodes() {
+            if relu.op != OpKind::Relu {
+                continue;
+            }
+            let add_port = relu.inputs[0];
+            let add = g.node(add_port.node);
+            if add.op != OpKind::Add || fanout(g, add_port) != 1 {
+                continue;
+            }
+            let mut ng = g.clone();
+            ng.node_mut(add_port.node).op = OpKind::AddRelu;
+            ng.redirect(PortRef::of(relu_id), add_port);
+            out.push(ng);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: BatchNorm(Conv2d(x, w[, b])) => Conv2d(x, w', b') with folded params
+// w'[k] = w[k] * gamma[k]/sqrt(var[k]+eps);  b' = (b - mean)*scale + beta
+// ---------------------------------------------------------------------------
+pub struct FuseConvBn;
+
+impl Rule for FuseConvBn {
+    fn name(&self) -> &'static str {
+        "fuse_conv_bn"
+    }
+
+    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+        let mut out = Vec::new();
+        for (bn_id, bn) in g.nodes() {
+            let OpKind::BatchNorm { eps } = bn.op else { continue };
+            let conv_port = bn.inputs[0];
+            let conv = g.node(conv_port.node);
+            let Some(attrs) = conv_attrs(&conv.op) else { continue };
+            // Fold is only valid when nothing intervenes: pre-activation,
+            // un-shared output, no fused residual (residual is added before
+            // BN would see it, changing semantics).
+            if attrs.act != Activation::None || attrs.has_residual || fanout(g, conv_port) != 1 {
+                continue;
+            }
+            let (gamma, beta, mean, var) = (bn.inputs[1], bn.inputs[2], bn.inputs[3], bn.inputs[4]);
+            let w = conv.inputs[1];
+            let x = conv.inputs[0];
+            let bias = attrs.has_bias.then(|| conv.inputs[2]);
+
+            let mut ng = g.clone();
+            let wf = ng.add(
+                OpKind::FoldBnWeight { eps },
+                vec![w, gamma, var],
+                &format!("{}_wfold", conv.name),
+            );
+            let mut bias_inputs = vec![gamma, beta, mean, var];
+            if let Some(b) = bias {
+                bias_inputs.insert(0, b);
+            }
+            let bf = ng.add(
+                OpKind::FoldBnBias { eps, has_bias: bias.is_some() },
+                bias_inputs,
+                &format!("{}_bfold", conv.name),
+            );
+            let newconv = ng.add(
+                conv_op(ConvAttrs { has_bias: true, ..attrs }),
+                vec![x, PortRef::of(wf), PortRef::of(bf)],
+                &format!("{}_bnfold", conv.name),
+            );
+            ng.redirect(PortRef::of(bn_id), PortRef::of(newconv));
+            out.push(ng);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: Add(Conv2d(x, w[, b]), r) => Conv2d(x, w[, b], residual=r)
+// (and symmetrically Add(r, Conv..)). cuDNN-style epilogue residual fusion.
+// ---------------------------------------------------------------------------
+pub struct FuseConvResidual;
+
+impl Rule for FuseConvResidual {
+    fn name(&self) -> &'static str {
+        "fuse_conv_residual"
+    }
+
+    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+        let mut out = Vec::new();
+        for (add_id, add) in g.nodes() {
+            let fused_relu = match add.op {
+                OpKind::Add => false,
+                OpKind::AddRelu => true,
+                _ => continue,
+            };
+            for (conv_slot, res_slot) in [(0usize, 1usize), (1, 0)] {
+                let conv_port = add.inputs[conv_slot];
+                let res_port = add.inputs[res_slot];
+                let conv = g.node(conv_port.node);
+                let Some(attrs) = conv_attrs(&conv.op) else { continue };
+                if attrs.has_residual || attrs.act != Activation::None || fanout(g, conv_port) != 1 {
+                    continue;
+                }
+                // The residual must not itself be the conv (degenerate).
+                if res_port == conv_port {
+                    continue;
+                }
+                let mut ng = g.clone();
+                let mut inputs = conv.inputs.clone();
+                inputs.push(res_port);
+                let act = if fused_relu { Activation::Relu } else { Activation::None };
+                let newconv = ng.add(
+                    conv_op(ConvAttrs { has_residual: true, act, ..attrs }),
+                    inputs,
+                    &format!("{}_res", conv.name),
+                );
+                ng.redirect(PortRef::of(add_id), PortRef::of(newconv));
+                out.push(ng);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: two parallel Conv2d on the same input with identical attrs and
+// kernel size => one Conv2d with concatenated filters + Split.
+// The Inception-branch / fire-module merge from MetaFlow.
+// ---------------------------------------------------------------------------
+pub struct MergeParallelConvs;
+
+impl Rule for MergeParallelConvs {
+    fn name(&self) -> &'static str {
+        "merge_parallel_convs"
+    }
+
+    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+        let shapes = shapes_of(g);
+        let convs: Vec<(NodeId, ConvAttrs)> = g
+            .nodes()
+            .filter_map(|(id, n)| conv_attrs(&n.op).map(|a| (id, a)))
+            .collect();
+        let mut out = Vec::new();
+        for i in 0..convs.len() {
+            for j in (i + 1)..convs.len() {
+                let (c1, a1) = convs[i];
+                let (c2, a2) = convs[j];
+                if a1 != a2 || a1.has_residual {
+                    continue;
+                }
+                let n1 = g.node(c1);
+                let n2 = g.node(c2);
+                if n1.inputs[0] != n2.inputs[0] {
+                    continue; // different input tensor
+                }
+                let w1 = n1.inputs[1];
+                let w2 = n2.inputs[1];
+                let ws1 = &shapes[w1.node.0][w1.port];
+                let ws2 = &shapes[w2.node.0][w2.port];
+                if ws1[2] != ws2[2] || ws1[3] != ws2[3] {
+                    continue; // kernel size mismatch (EnlargeConvKernel can fix)
+                }
+                let (k1, k2) = (ws1[0], ws2[0]);
+                let mut ng = g.clone();
+                let wcat = ng.add(
+                    OpKind::Concat { axis: 0 },
+                    vec![w1, w2],
+                    &format!("{}+{}_w", n1.name, n2.name),
+                );
+                let mut inputs = vec![n1.inputs[0], PortRef::of(wcat)];
+                if a1.has_bias {
+                    let bcat = ng.add(
+                        OpKind::Concat { axis: 0 },
+                        vec![n1.inputs[2], n2.inputs[2]],
+                        &format!("{}+{}_b", n1.name, n2.name),
+                    );
+                    inputs.push(PortRef::of(bcat));
+                }
+                let merged = ng.add(
+                    conv_op(a1),
+                    inputs,
+                    &format!("{}+{}", n1.name, n2.name),
+                );
+                let split = ng.add(
+                    OpKind::Split { axis: 1, sizes: vec![k1, k2] },
+                    vec![PortRef::of(merged)],
+                    &format!("{}+{}_split", n1.name, n2.name),
+                );
+                ng.redirect(PortRef::of(c1), PortRef { node: split, port: 0 });
+                ng.redirect(PortRef::of(c2), PortRef { node: split, port: 1 });
+                out.push(ng);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: 1x1 stride-1 pad-0 Conv2d => 3x3 pad-1 Conv2d with zero-padded
+// kernel. Pure enabler: costs FLOPs, unlocks MergeParallelConvs with 3x3
+// siblings (MetaFlow's kernel enlargement).
+// ---------------------------------------------------------------------------
+pub struct EnlargeConvKernel;
+
+impl Rule for EnlargeConvKernel {
+    fn name(&self) -> &'static str {
+        "enlarge_conv_kernel"
+    }
+
+    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+        let shapes = shapes_of(g);
+        let mut out = Vec::new();
+        for (id, node) in g.nodes() {
+            let Some(attrs) = conv_attrs(&node.op) else { continue };
+            if attrs.stride != (1, 1) || attrs.pad != (0, 0) {
+                continue;
+            }
+            let w = node.inputs[1];
+            let ws = &shapes[w.node.0][w.port];
+            if (ws[2], ws[3]) != (1, 1) {
+                continue;
+            }
+            // Only worth proposing when a 3x3 sibling shares our input —
+            // otherwise the product graph is strictly worse and just bloats
+            // the queue. (The outer search would still reject it; this is a
+            // search-space hygiene heuristic, same spirit as MetaFlow's.)
+            let x = node.inputs[0];
+            let has_3x3_sibling = g.nodes().any(|(sid, sn)| {
+                sid != id
+                    && conv_attrs(&sn.op).is_some_and(|sa| {
+                        sa.stride == (1, 1)
+                            && sn.inputs[0] == x
+                            && {
+                                let sw = sn.inputs[1];
+                                let sws = &shapes[sw.node.0][sw.port];
+                                (sws[2], sws[3]) == (3, 3)
+                            }
+                    })
+            });
+            if !has_3x3_sibling {
+                continue;
+            }
+            let mut ng = g.clone();
+            let padded = ng.add(
+                OpKind::PadKernel { target: (3, 3) },
+                vec![w],
+                &format!("{}_wpad", node.name),
+            );
+            let mut inputs = node.inputs.clone();
+            inputs[1] = PortRef::of(padded);
+            let enlarged = ng.add(
+                conv_op(ConvAttrs { pad: (1, 1), ..attrs }),
+                inputs,
+                &format!("{}_3x3", node.name),
+            );
+            ng.redirect(PortRef::of(id), PortRef::of(enlarged));
+            out.push(ng);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: Concat(Split(x).0, Split(x).1, ...) over all ports in order => x
+// ---------------------------------------------------------------------------
+pub struct SplitConcatElim;
+
+impl Rule for SplitConcatElim {
+    fn name(&self) -> &'static str {
+        "split_concat_elim"
+    }
+
+    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+        let mut out = Vec::new();
+        for (cat_id, cat) in g.nodes() {
+            let OpKind::Concat { axis } = cat.op else { continue };
+            if cat.inputs.is_empty() {
+                continue;
+            }
+            let split_id = cat.inputs[0].node;
+            let OpKind::Split { axis: s_axis, sizes } = &g.node(split_id).op else { continue };
+            if *s_axis != axis || cat.inputs.len() != sizes.len() {
+                continue;
+            }
+            let all_ports_in_order = cat
+                .inputs
+                .iter()
+                .enumerate()
+                .all(|(i, p)| p.node == split_id && p.port == i);
+            if !all_ports_in_order {
+                continue;
+            }
+            let x = g.node(split_id).inputs[0];
+            let mut ng = g.clone();
+            ng.redirect(PortRef::of(cat_id), x);
+            out.push(ng);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: Split(Concat(a, b, ...)) with matching sizes => identity rewiring
+// ---------------------------------------------------------------------------
+pub struct ConcatSplitElim;
+
+impl Rule for ConcatSplitElim {
+    fn name(&self) -> &'static str {
+        "concat_split_elim"
+    }
+
+    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+        let shapes = shapes_of(g);
+        let mut out = Vec::new();
+        for (split_id, split) in g.nodes() {
+            let OpKind::Split { axis, sizes } = &split.op else { continue };
+            let cat_port = split.inputs[0];
+            let cat = g.node(cat_port.node);
+            let OpKind::Concat { axis: c_axis } = cat.op else { continue };
+            if c_axis != *axis || cat.inputs.len() != sizes.len() {
+                continue;
+            }
+            let part_sizes: Vec<usize> = cat
+                .inputs
+                .iter()
+                .map(|p| shapes[p.node.0][p.port][*axis])
+                .collect();
+            if &part_sizes != sizes {
+                continue;
+            }
+            let mut ng = g.clone();
+            for (port, src) in cat.inputs.iter().enumerate() {
+                ng.redirect(PortRef { node: split_id, port }, *src);
+            }
+            out.push(ng);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::eps_bits;
+    use crate::subst::RuleSet;
+
+    fn conv2d(act: Activation, has_bias: bool) -> OpKind {
+        OpKind::Conv2d { stride: (1, 1), pad: (1, 1), act, has_bias, has_residual: false }
+    }
+
+    fn input(g: &mut Graph, shape: &[usize]) -> NodeId {
+        g.add1(OpKind::Input { shape: shape.to_vec() }, &[], "x")
+    }
+
+    fn weight(g: &mut Graph, shape: &[usize], seed: u64) -> NodeId {
+        g.add1(OpKind::weight(shape.to_vec(), seed), &[], "w")
+    }
+
+    #[test]
+    fn fuse_conv_relu_fires_once() {
+        let mut g = Graph::new();
+        let x = input(&mut g, &[1, 3, 8, 8]);
+        let w = weight(&mut g, &[4, 3, 3, 3], 1);
+        let c = g.add1(conv2d(Activation::None, false), &[x, w], "c");
+        let r = g.add1(OpKind::Relu, &[c], "r");
+        g.outputs = vec![PortRef::of(r)];
+
+        let products = FuseConvRelu.apply_all(&g);
+        assert_eq!(products.len(), 1);
+        let mut ng = products.into_iter().next().unwrap();
+        ng.compact();
+        ng.validate().unwrap();
+        assert_eq!(ng.runtime_node_count(), 2); // input + fused conv
+        let fused = ng
+            .nodes()
+            .find_map(|(_, n)| conv_attrs(&n.op))
+            .unwrap();
+        assert_eq!(fused.act, Activation::Relu);
+    }
+
+    #[test]
+    fn fuse_conv_relu_blocked_by_fanout() {
+        // conv output also consumed by a second relu: must not fuse.
+        let mut g = Graph::new();
+        let x = input(&mut g, &[1, 3, 8, 8]);
+        let w = weight(&mut g, &[4, 3, 3, 3], 1);
+        let c = g.add1(conv2d(Activation::None, false), &[x, w], "c");
+        let r1 = g.add1(OpKind::Relu, &[c], "r1");
+        let r2 = g.add1(OpKind::Sigmoid, &[c], "r2");
+        g.outputs = vec![PortRef::of(r1), PortRef::of(r2)];
+        assert!(FuseConvRelu.apply_all(&g).is_empty());
+    }
+
+    #[test]
+    fn fuse_conv_bn_folds_params() {
+        let mut g = Graph::new();
+        let x = input(&mut g, &[1, 3, 8, 8]);
+        let w = weight(&mut g, &[4, 3, 3, 3], 1);
+        let c = g.add1(conv2d(Activation::None, false), &[x, w], "c");
+        let gamma = weight(&mut g, &[4], 2);
+        let beta = weight(&mut g, &[4], 3);
+        let mean = weight(&mut g, &[4], 4);
+        let var = weight(&mut g, &[4], 5);
+        let bn = g.add1(
+            OpKind::BatchNorm { eps: eps_bits(1e-5) },
+            &[c, gamma, beta, mean, var],
+            "bn",
+        );
+        g.outputs = vec![PortRef::of(bn)];
+
+        let products = FuseConvBn.apply_all(&g);
+        assert_eq!(products.len(), 1);
+        let mut ng = products.into_iter().next().unwrap();
+        ng.compact();
+        ng.validate().unwrap();
+        // BatchNorm gone; FoldBn ops present; conv now has bias.
+        assert!(ng.nodes().all(|(_, n)| !matches!(n.op, OpKind::BatchNorm { .. })));
+        assert!(ng.nodes().any(|(_, n)| matches!(n.op, OpKind::FoldBnWeight { .. })));
+        let fused = ng.nodes().find_map(|(_, n)| conv_attrs(&n.op)).unwrap();
+        assert!(fused.has_bias);
+    }
+
+    #[test]
+    fn merge_parallel_convs_creates_split() {
+        let mut g = Graph::new();
+        let x = input(&mut g, &[1, 3, 8, 8]);
+        let w1 = weight(&mut g, &[4, 3, 3, 3], 1);
+        let w2 = weight(&mut g, &[6, 3, 3, 3], 2);
+        let c1 = g.add1(conv2d(Activation::Relu, false), &[x, w1], "c1");
+        let c2 = g.add1(conv2d(Activation::Relu, false), &[x, w2], "c2");
+        let cat = g.add1(OpKind::Concat { axis: 1 }, &[c1, c2], "cat");
+        g.outputs = vec![PortRef::of(cat)];
+
+        let products = MergeParallelConvs.apply_all(&g);
+        assert_eq!(products.len(), 1);
+        let mut ng = products.into_iter().next().unwrap();
+        ng.compact();
+        ng.validate().unwrap();
+        // one merged conv remains
+        let convs: Vec<_> = ng.nodes().filter(|(_, n)| conv_attrs(&n.op).is_some()).collect();
+        assert_eq!(convs.len(), 1);
+        assert!(ng.nodes().any(|(_, n)| matches!(n.op, OpKind::Split { .. })));
+        let shapes = ng.infer_shapes().unwrap();
+        // merged conv outputs 10 channels
+        let (cid, _) = convs[0];
+        assert_eq!(shapes[cid.0][0][1], 10);
+    }
+
+    #[test]
+    fn merge_requires_same_attrs() {
+        let mut g = Graph::new();
+        let x = input(&mut g, &[1, 3, 8, 8]);
+        let w1 = weight(&mut g, &[4, 3, 3, 3], 1);
+        let w2 = weight(&mut g, &[6, 3, 3, 3], 2);
+        let c1 = g.add1(conv2d(Activation::Relu, false), &[x, w1], "c1");
+        let c2 = g.add1(conv2d(Activation::None, false), &[x, w2], "c2"); // act differs
+        g.outputs = vec![PortRef::of(c1), PortRef::of(c2)];
+        assert!(MergeParallelConvs.apply_all(&g).is_empty());
+    }
+
+    #[test]
+    fn enlarge_fires_only_with_3x3_sibling() {
+        let mut g = Graph::new();
+        let x = input(&mut g, &[1, 3, 8, 8]);
+        let w1 = weight(&mut g, &[4, 3, 1, 1], 1);
+        let c1 = g.add1(
+            OpKind::Conv2d {
+                stride: (1, 1),
+                pad: (0, 0),
+                act: Activation::Relu,
+                has_bias: false,
+                has_residual: false,
+            },
+            &[x, w1],
+            "c1x1",
+        );
+        g.outputs = vec![PortRef::of(c1)];
+        // alone: no product
+        assert!(EnlargeConvKernel.apply_all(&g).is_empty());
+        // add a 3x3 sibling
+        let w2 = weight(&mut g, &[6, 3, 3, 3], 2);
+        let c2 = g.add1(conv2d(Activation::Relu, false), &[x, w2], "c3x3");
+        g.outputs = vec![PortRef::of(c1), PortRef::of(c2)];
+        let products = EnlargeConvKernel.apply_all(&g);
+        assert_eq!(products.len(), 1);
+        let mut ng = products.into_iter().next().unwrap();
+        ng.compact();
+        ng.validate().unwrap();
+        assert!(ng.nodes().any(|(_, n)| matches!(n.op, OpKind::PadKernel { .. })));
+        // enlarged conv output shape unchanged (8x8 spatial)
+        let shapes = ng.infer_shapes().unwrap();
+        for out in &ng.outputs {
+            assert_eq!(shapes[out.node.0][out.port][2], 8);
+        }
+    }
+
+    #[test]
+    fn split_concat_elim() {
+        let mut g = Graph::new();
+        let x = input(&mut g, &[1, 8, 4, 4]);
+        let s = g.add1(OpKind::Split { axis: 1, sizes: vec![3, 5] }, &[x], "s");
+        let cat = g.add(
+            OpKind::Concat { axis: 1 },
+            vec![PortRef { node: s, port: 0 }, PortRef { node: s, port: 1 }],
+            "cat",
+        );
+        let r = g.add1(OpKind::Relu, &[cat], "r");
+        g.outputs = vec![PortRef::of(r)];
+        let products = SplitConcatElim.apply_all(&g);
+        assert_eq!(products.len(), 1);
+        let mut ng = products.into_iter().next().unwrap();
+        ng.compact();
+        ng.validate().unwrap();
+        assert_eq!(ng.len(), 2); // input + relu
+    }
+
+    #[test]
+    fn split_concat_elim_requires_order() {
+        let mut g = Graph::new();
+        let x = input(&mut g, &[1, 8, 4, 4]);
+        let s = g.add1(OpKind::Split { axis: 1, sizes: vec![4, 4] }, &[x], "s");
+        // swapped order: NOT equivalent to x (channels permuted)
+        let cat = g.add(
+            OpKind::Concat { axis: 1 },
+            vec![PortRef { node: s, port: 1 }, PortRef { node: s, port: 0 }],
+            "cat",
+        );
+        g.outputs = vec![PortRef::of(cat)];
+        assert!(SplitConcatElim.apply_all(&g).is_empty());
+    }
+
+    #[test]
+    fn concat_split_elim_rewires_ports() {
+        let mut g = Graph::new();
+        let a = input(&mut g, &[1, 3, 4, 4]);
+        let b = g.add1(OpKind::Input { shape: vec![1, 5, 4, 4] }, &[], "b");
+        let cat = g.add1(OpKind::Concat { axis: 1 }, &[a, b], "cat");
+        let s = g.add1(OpKind::Split { axis: 1, sizes: vec![3, 5] }, &[cat], "s");
+        let r0 = g.add(OpKind::Relu, vec![PortRef { node: s, port: 0 }], "r0");
+        let r1 = g.add(OpKind::Relu, vec![PortRef { node: s, port: 1 }], "r1");
+        g.outputs = vec![PortRef::of(r0), PortRef::of(r1)];
+        let products = ConcatSplitElim.apply_all(&g);
+        assert_eq!(products.len(), 1);
+        let mut ng = products.into_iter().next().unwrap();
+        ng.compact();
+        ng.validate().unwrap();
+        // concat+split both dead now
+        assert_eq!(ng.len(), 4);
+    }
+
+    #[test]
+    fn fuse_conv_residual() {
+        let mut g = Graph::new();
+        let x = input(&mut g, &[1, 4, 8, 8]);
+        let w = weight(&mut g, &[4, 4, 3, 3], 1);
+        let c = g.add1(conv2d(Activation::None, false), &[x, w], "c");
+        let add = g.add1(OpKind::Add, &[c, x], "add");
+        let r = g.add1(OpKind::Relu, &[add], "r");
+        g.outputs = vec![PortRef::of(r)];
+        let products = FuseConvResidual.apply_all(&g);
+        assert_eq!(products.len(), 1);
+        let mut ng = products.into_iter().next().unwrap();
+        ng.compact();
+        ng.validate().unwrap();
+        let fused = ng.nodes().find_map(|(_, n)| conv_attrs(&n.op)).unwrap();
+        assert!(fused.has_residual);
+    }
+
+    #[test]
+    fn ruleset_neighbors_on_fire_like_block() {
+        // squeeze 1x1 -> two expand convs (1x1 and 3x3) -> concat: the
+        // SqueezeNet fire module. Several rules should fire.
+        let mut g = Graph::new();
+        let x = input(&mut g, &[1, 8, 8, 8]);
+        let ws = weight(&mut g, &[4, 8, 1, 1], 1);
+        let bs = weight(&mut g, &[4], 10);
+        let sq = g.add1(
+            OpKind::Conv2d {
+                stride: (1, 1),
+                pad: (0, 0),
+                act: Activation::Relu,
+                has_bias: true,
+                has_residual: false,
+            },
+            &[x, ws, bs],
+            "squeeze",
+        );
+        let we1 = weight(&mut g, &[8, 4, 1, 1], 2);
+        let be1 = weight(&mut g, &[8], 11);
+        let e1 = g.add1(
+            OpKind::Conv2d {
+                stride: (1, 1),
+                pad: (0, 0),
+                act: Activation::Relu,
+                has_bias: true,
+                has_residual: false,
+            },
+            &[sq, we1, be1],
+            "exp1x1",
+        );
+        let we3 = weight(&mut g, &[8, 4, 3, 3], 3);
+        let be3 = weight(&mut g, &[8], 12);
+        let e3 = g.add1(
+            OpKind::Conv2d {
+                stride: (1, 1),
+                pad: (1, 1),
+                act: Activation::Relu,
+                has_bias: true,
+                has_residual: false,
+            },
+            &[sq, we3, be3],
+            "exp3x3",
+        );
+        let cat = g.add1(OpKind::Concat { axis: 1 }, &[e1, e3], "cat");
+        g.outputs = vec![PortRef::of(cat)];
+        g.validate().unwrap();
+
+        let rs = RuleSet::standard();
+        let neighbors = rs.neighbors(&g);
+        // at least the enlarge rule fires (1x1 expand with a 3x3 sibling)
+        assert!(
+            neighbors.iter().any(|(_, name)| *name == "enlarge_conv_kernel"),
+            "neighbors: {:?}",
+            neighbors.iter().map(|(_, n)| *n).collect::<Vec<_>>()
+        );
+        // all neighbors validate
+        for (ng, _) in &neighbors {
+            ng.validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,296 @@
+//! Convolution algorithms: direct (ground truth) and im2col+GEMM.
+//!
+//! These correspond to the paper's per-node "algorithms" (cuDNN's
+//! IMPLICIT_GEMM vs GEMM vs WINOGRAD ...): semantically identical, very
+//! different compute/memory profiles. Winograd lives in
+//! [`super::winograd`].
+
+use super::ops::matmul_blocked;
+use super::Tensor;
+
+/// Output spatial size for a conv/pool dimension.
+pub fn out_dim(input: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    assert!(
+        input + 2 * pad >= kernel,
+        "conv output would be empty: in={input} k={kernel} pad={pad}"
+    );
+    (input + 2 * pad - kernel) / stride + 1
+}
+
+/// Direct convolution, NCHW input [N,C,H,W], weight [K,C,R,S], optional
+/// bias [K]. Sliding-window semantics, implemented as per-tap row "saxpy"
+/// so the inner loop is a contiguous slice walk instead of 4-d index math
+/// (≈10× over the naive 7-loop form on this host; see EXPERIMENTS.md §Perf.
+/// Semantics are pinned to the naive form by the tests below and the
+/// Pallas/ref cross-checks).
+pub fn conv2d_direct(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> Tensor {
+    let (n, c, h, wid) = x.dims4();
+    let (k, wc, r, s) = w.dims4();
+    assert_eq!(c, wc, "conv channel mismatch: input {c} vs weight {wc}");
+    let (sh, sw) = stride;
+    let (ph, pw) = pad;
+    let oh = out_dim(h, r, sh, ph);
+    let ow = out_dim(wid, s, sw, pw);
+    let mut out = Tensor::zeros(&[n, k, oh, ow]);
+    let xd = x.data();
+    let wd = w.data();
+    let od = out.data_mut();
+    for ni in 0..n {
+        for ki in 0..k {
+            let out_base = (ni * k + ki) * oh * ow;
+            if let Some(b) = bias {
+                let bv = b.data()[ki];
+                for v in &mut od[out_base..out_base + oh * ow] {
+                    *v = bv;
+                }
+            }
+            for ci in 0..c {
+                let x_base = (ni * c + ci) * h * wid;
+                let w_base = (ki * c + ci) * r * s;
+                for ry in 0..r {
+                    for sx in 0..s {
+                        let wv = wd[w_base + ry * s + sx];
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        // Valid output-row range for this tap:
+                        // 0 <= oy*sh + ry - ph < h
+                        let oy_lo = ph.saturating_sub(ry).div_ceil(sh);
+                        let oy_hi = if h + ph > ry { ((h + ph - ry - 1) / sh + 1).min(oh) } else { 0 };
+                        // Valid output-col range: 0 <= ox*sw + sx - pw < wid
+                        let ox_lo = pw.saturating_sub(sx).div_ceil(sw);
+                        let ox_hi = if wid + pw > sx { ((wid + pw - sx - 1) / sw + 1).min(ow) } else { 0 };
+                        if oy_lo >= oy_hi || ox_lo >= ox_hi {
+                            continue;
+                        }
+                        for oy in oy_lo..oy_hi {
+                            let iy = oy * sh + ry - ph;
+                            let xrow = x_base + iy * wid;
+                            let orow = out_base + oy * ow;
+                            if sw == 1 {
+                                let ix0 = ox_lo + sx - pw;
+                                let len = ox_hi - ox_lo;
+                                let xs = &xd[xrow + ix0..xrow + ix0 + len];
+                                let os = &mut od[orow + ox_lo..orow + ox_lo + len];
+                                for (o, &xv) in os.iter_mut().zip(xs) {
+                                    *o += wv * xv;
+                                }
+                            } else {
+                                for ox in ox_lo..ox_hi {
+                                    let ix = ox * sw + sx - pw;
+                                    od[orow + ox] += wv * xd[xrow + ix];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// im2col: unfold input patches into a [C*R*S, OH*OW] matrix (per image).
+pub fn im2col(
+    x: &Tensor,
+    n_idx: usize,
+    r: usize,
+    s: usize,
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> Tensor {
+    let (_, c, h, w) = x.dims4();
+    let (sh, sw) = stride;
+    let (ph, pw) = pad;
+    let oh = out_dim(h, r, sh, ph);
+    let ow = out_dim(w, s, sw, pw);
+    let rows = c * r * s;
+    let cols = oh * ow;
+    let mut out = vec![0.0f32; rows * cols];
+    for ci in 0..c {
+        for ry in 0..r {
+            for sx in 0..s {
+                let row = (ci * r + ry) * s + sx;
+                for oy in 0..oh {
+                    let iy = (oy * sh + ry) as isize - ph as isize;
+                    for ox in 0..ow {
+                        let ix = (ox * sw + sx) as isize - pw as isize;
+                        let v = if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                            0.0
+                        } else {
+                            x.at4(n_idx, ci, iy as usize, ix as usize)
+                        };
+                        out[row * cols + oy * ow + ox] = v;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![rows, cols], out)
+}
+
+/// im2col + GEMM convolution. Trades extra memory traffic (the unfolded
+/// patch matrix is R*S× the input) for a single large cache-friendly GEMM —
+/// typically faster for big channel counts, and with a very different
+/// power/energy profile than direct convolution (the Table 1 phenomenon).
+pub fn conv2d_im2col(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> Tensor {
+    let (n, c, h, wid) = x.dims4();
+    let (k, wc, r, s) = w.dims4();
+    assert_eq!(c, wc, "conv channel mismatch");
+    let oh = out_dim(h, r, stride.0, pad.0);
+    let ow = out_dim(wid, s, stride.1, pad.1);
+    // Weight as [K, C*R*S] (already contiguous in NCHW weight layout).
+    let wmat = w.clone().reshape(&[k, c * r * s]);
+    let mut out = Tensor::zeros(&[n, k, oh, ow]);
+    for ni in 0..n {
+        let cols = im2col(x, ni, r, s, stride, pad); // [C*R*S, OH*OW]
+        let prod = matmul_blocked(&wmat, &cols); // [K, OH*OW]
+        let dst_base = ni * k * oh * ow;
+        out.data_mut()[dst_base..dst_base + k * oh * ow].copy_from_slice(prod.data());
+        if let Some(b) = bias {
+            for ki in 0..k {
+                let bb = b.data()[ki];
+                let base = dst_base + ki * oh * ow;
+                for v in &mut out.data_mut()[base..base + oh * ow] {
+                    *v += bb;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 1x1 ("pointwise") convolution as a pure GEMM — the fastest path for the
+/// squeeze layers of SqueezeNet and inception branch reducers.
+pub fn conv2d_1x1_gemm(x: &Tensor, w: &Tensor, bias: Option<&Tensor>, stride: (usize, usize)) -> Tensor {
+    let (n, c, h, wid) = x.dims4();
+    let (k, wc, r, s) = w.dims4();
+    assert_eq!((r, s), (1, 1), "conv2d_1x1_gemm requires a 1x1 kernel");
+    assert_eq!(c, wc);
+    let (sh, sw) = stride;
+    if (sh, sw) == (1, 1) {
+        let wmat = w.clone().reshape(&[k, c]);
+        let mut out = Tensor::zeros(&[n, k, h, wid]);
+        let hw = h * wid;
+        for ni in 0..n {
+            // input channel-major slab [C, H*W] is contiguous in NCHW
+            let xin = Tensor::new(
+                vec![c, hw],
+                x.data()[ni * c * hw..(ni + 1) * c * hw].to_vec(),
+            );
+            let prod = matmul_blocked(&wmat, &xin);
+            let base = ni * k * hw;
+            out.data_mut()[base..base + k * hw].copy_from_slice(prod.data());
+        }
+        if let Some(b) = bias {
+            out = super::ops::bias_add_nchw(&out, b);
+        }
+        out
+    } else {
+        // Strided 1x1: subsample, then GEMM path on the smaller tensor.
+        let oh = out_dim(h, 1, sh, 0);
+        let ow = out_dim(wid, 1, sw, 0);
+        let mut sub = Tensor::zeros(&[n, c, oh, ow]);
+        for ni in 0..n {
+            for ci in 0..c {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        *sub.at4_mut(ni, ci, oy, ox) = x.at4(ni, ci, oy * sh, ox * sw);
+                    }
+                }
+            }
+        }
+        conv2d_1x1_gemm(&sub, w, bias, (1, 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn out_dim_formula() {
+        assert_eq!(out_dim(32, 3, 1, 1), 32);
+        assert_eq!(out_dim(32, 3, 2, 1), 16);
+        assert_eq!(out_dim(7, 7, 1, 0), 1);
+    }
+
+    #[test]
+    fn direct_identity_kernel() {
+        // 1x1 kernel of 1.0 on single channel = identity.
+        let mut rng = Rng::seed_from(5);
+        let x = Tensor::rand(&[1, 1, 4, 4], &mut rng, -1.0, 1.0);
+        let w = Tensor::new(vec![1, 1, 1, 1], vec![1.0]);
+        let y = conv2d_direct(&x, &w, None, (1, 1), (0, 0));
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn direct_known_3x3() {
+        // All-ones 3x3 input and kernel, pad 1: center output = 9, corner = 4.
+        let x = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let w = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let y = conv2d_direct(&x, &w, None, (1, 1), (1, 1));
+        assert_eq!(y.at4(0, 0, 1, 1), 9.0);
+        assert_eq!(y.at4(0, 0, 0, 0), 4.0);
+        assert_eq!(y.at4(0, 0, 0, 1), 6.0);
+    }
+
+    #[test]
+    fn direct_bias() {
+        let x = Tensor::zeros(&[1, 1, 2, 2]);
+        let w = Tensor::full(&[2, 1, 1, 1], 1.0);
+        let b = Tensor::new(vec![2], vec![0.5, -0.5]);
+        let y = conv2d_direct(&x, &w, Some(&b), (1, 1), (0, 0));
+        assert_eq!(y.at4(0, 0, 0, 0), 0.5);
+        assert_eq!(y.at4(0, 1, 1, 1), -0.5);
+    }
+
+    #[test]
+    fn im2col_matches_direct_across_shapes() {
+        let mut rng = Rng::seed_from(77);
+        for (n, c, h, w, k, r, s, st, pd) in [
+            (1, 1, 5, 5, 1, 3, 3, (1, 1), (1, 1)),
+            (2, 3, 8, 8, 4, 3, 3, (1, 1), (1, 1)),
+            (1, 4, 9, 7, 2, 5, 3, (2, 2), (2, 1)),
+            (1, 2, 6, 6, 3, 1, 1, (1, 1), (0, 0)),
+            (2, 3, 7, 7, 5, 3, 3, (2, 2), (0, 0)),
+        ] {
+            let x = Tensor::rand(&[n, c, h, w], &mut rng, -1.0, 1.0);
+            let wt = Tensor::rand(&[k, c, r, s], &mut rng, -0.5, 0.5);
+            let b = Tensor::rand(&[k], &mut rng, -0.1, 0.1);
+            let y0 = conv2d_direct(&x, &wt, Some(&b), st, pd);
+            let y1 = conv2d_im2col(&x, &wt, Some(&b), st, pd);
+            assert_eq!(y0.shape(), y1.shape());
+            assert_close(y0.data(), y1.data(), 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn gemm_1x1_matches_direct() {
+        let mut rng = Rng::seed_from(123);
+        for (stride,) in [((1usize, 1usize),), ((2, 2),)] {
+            let x = Tensor::rand(&[2, 6, 8, 8], &mut rng, -1.0, 1.0);
+            let w = Tensor::rand(&[4, 6, 1, 1], &mut rng, -0.5, 0.5);
+            let b = Tensor::rand(&[4], &mut rng, -0.1, 0.1);
+            let y0 = conv2d_direct(&x, &w, Some(&b), stride, (0, 0));
+            let y1 = conv2d_1x1_gemm(&x, &w, Some(&b), stride);
+            assert_eq!(y0.shape(), y1.shape());
+            assert_close(y0.data(), y1.data(), 1e-4, 1e-4).unwrap();
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Depthwise convolution algorithms (MobileNet's building block).
+//!
+//! Weight layout `[C, 1, R, S]`, channel multiplier 1. Two algorithms,
+//! mirroring the dense-conv situation: a direct sliding window and a
+//! per-channel Winograd F(2×2,3×3) (applicable 3×3 stride-1 only).
+
+use super::conv::out_dim;
+use super::winograd;
+use super::Tensor;
+
+/// Direct depthwise convolution (per-tap row-saxpy form, like
+/// [`super::conv::conv2d_direct`]).
+pub fn dwconv2d_direct(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> Tensor {
+    let (n, c, h, wid) = x.dims4();
+    let (wc, mult, r, s) = w.dims4();
+    assert_eq!(wc, c, "depthwise weight channel mismatch");
+    assert_eq!(mult, 1, "depthwise channel multiplier must be 1");
+    let (sh, sw) = stride;
+    let (ph, pw) = pad;
+    let oh = out_dim(h, r, sh, ph);
+    let ow = out_dim(wid, s, sw, pw);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    let xd = x.data();
+    let wd = w.data();
+    let od = out.data_mut();
+    for ni in 0..n {
+        for ci in 0..c {
+            let out_base = (ni * c + ci) * oh * ow;
+            if let Some(b) = bias {
+                let bv = b.data()[ci];
+                for v in &mut od[out_base..out_base + oh * ow] {
+                    *v = bv;
+                }
+            }
+            let x_base = (ni * c + ci) * h * wid;
+            let w_base = ci * r * s;
+            for ry in 0..r {
+                for sx in 0..s {
+                    let wv = wd[w_base + ry * s + sx];
+                    if wv == 0.0 {
+                        continue;
+                    }
+                    let oy_lo = ph.saturating_sub(ry).div_ceil(sh);
+                    let oy_hi = if h + ph > ry { ((h + ph - ry - 1) / sh + 1).min(oh) } else { 0 };
+                    let ox_lo = pw.saturating_sub(sx).div_ceil(sw);
+                    let ox_hi = if wid + pw > sx { ((wid + pw - sx - 1) / sw + 1).min(ow) } else { 0 };
+                    if oy_lo >= oy_hi || ox_lo >= ox_hi {
+                        continue;
+                    }
+                    for oy in oy_lo..oy_hi {
+                        let iy = oy * sh + ry - ph;
+                        let xrow = x_base + iy * wid;
+                        let orow = out_base + oy * ow;
+                        for ox in ox_lo..ox_hi {
+                            od[orow + ox] += wv * xd[xrow + ox * sw + sx - pw];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-channel Winograd F(2×2,3×3) depthwise conv: each channel is a
+/// single-channel dense conv, so the dense Winograd kernel applies
+/// channel-by-channel. Requires 3×3 stride-1.
+pub fn dwconv2d_winograd(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    pad: (usize, usize),
+) -> Tensor {
+    let (n, c, h, wid) = x.dims4();
+    let (wc, mult, r, s) = w.dims4();
+    assert_eq!(wc, c);
+    assert_eq!(mult, 1);
+    assert!(winograd::applicable(r, s, (1, 1)), "dw winograd requires 3x3 stride-1");
+    let oh = out_dim(h, 3, 1, pad.0);
+    let ow = out_dim(wid, 3, 1, pad.1);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    let hw = h * wid;
+    for ci in 0..c {
+        // Per-channel slabs as [N, 1, H, W] / [1, 1, 3, 3].
+        let mut xc = Tensor::zeros(&[n, 1, h, wid]);
+        for ni in 0..n {
+            xc.data_mut()[ni * hw..(ni + 1) * hw]
+                .copy_from_slice(&x.data()[(ni * c + ci) * hw..(ni * c + ci + 1) * hw]);
+        }
+        let wcst = Tensor::new(vec![1, 1, 3, 3], w.data()[ci * 9..(ci + 1) * 9].to_vec());
+        let bc = bias.map(|b| Tensor::new(vec![1], vec![b.data()[ci]]));
+        let yc = winograd::conv2d_winograd(&xc, &wcst, bc.as_ref(), pad);
+        let ohw = oh * ow;
+        for ni in 0..n {
+            out.data_mut()[(ni * c + ci) * ohw..(ni * c + ci + 1) * ohw]
+                .copy_from_slice(&yc.data()[ni * ohw..(ni + 1) * ohw]);
+        }
+    }
+    out
+}
+
+/// Ground-truth naive depthwise conv (tests only).
+#[cfg(test)]
+fn dwconv2d_naive(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> Tensor {
+    let (n, c, h, wid) = x.dims4();
+    let (_, _, r, s) = w.dims4();
+    let oh = out_dim(h, r, stride.0, pad.0);
+    let ow = out_dim(wid, s, stride.1, pad.1);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = bias.map_or(0.0, |b| b.data()[ci]);
+                    for ry in 0..r {
+                        for sx in 0..s {
+                            let iy = (oy * stride.0 + ry) as isize - pad.0 as isize;
+                            let ix = (ox * stride.1 + sx) as isize - pad.1 as isize;
+                            if iy < 0 || ix < 0 || iy >= h as isize || ix >= wid as isize {
+                                continue;
+                            }
+                            acc += x.at4(ni, ci, iy as usize, ix as usize)
+                                * w.at4(ci, 0, ry, sx);
+                        }
+                    }
+                    *out.at4_mut(ni, ci, oy, ox) = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn direct_matches_naive() {
+        let mut rng = Rng::seed_from(61);
+        for (n, c, h, w, r, st, pd) in [
+            (1, 3, 8, 8, 3, (1, 1), (1, 1)),
+            (2, 4, 9, 7, 3, (2, 2), (1, 1)),
+            (1, 2, 6, 6, 5, (1, 1), (2, 2)),
+            (1, 5, 8, 8, 3, (2, 2), (0, 0)),
+        ] {
+            let x = Tensor::rand(&[n, c, h, w], &mut rng, -1.0, 1.0);
+            let wt = Tensor::rand(&[c, 1, r, r], &mut rng, -0.5, 0.5);
+            let b = Tensor::rand(&[c], &mut rng, -0.1, 0.1);
+            let got = dwconv2d_direct(&x, &wt, Some(&b), st, pd);
+            let want = dwconv2d_naive(&x, &wt, Some(&b), st, pd);
+            assert_eq!(got.shape(), want.shape());
+            assert_close(got.data(), want.data(), 1e-5, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn winograd_matches_naive() {
+        let mut rng = Rng::seed_from(62);
+        for (h, w, pad) in [(8, 8, (1, 1)), (7, 9, (1, 1)), (6, 6, (0, 0))] {
+            let x = Tensor::rand(&[2, 3, h, w], &mut rng, -1.0, 1.0);
+            let wt = Tensor::rand(&[3, 1, 3, 3], &mut rng, -0.5, 0.5);
+            let b = Tensor::rand(&[3], &mut rng, -0.1, 0.1);
+            let got = dwconv2d_winograd(&x, &wt, Some(&b), pad);
+            let want = dwconv2d_naive(&x, &wt, Some(&b), (1, 1), pad);
+            assert_close(got.data(), want.data(), 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "multiplier")]
+    fn rejects_channel_multiplier() {
+        let x = Tensor::zeros(&[1, 2, 4, 4]);
+        let w = Tensor::zeros(&[2, 3, 3, 3]);
+        dwconv2d_direct(&x, &w, None, (1, 1), (1, 1));
+    }
+}

@@ -1,0 +1,180 @@
+//! Dense f32 tensor + reference CPU operator implementations.
+//!
+//! This is the substrate replacing MetaFlow's built-in inference engine: a
+//! small, obviously-correct executor used to (a) verify that graph
+//! substitutions preserve semantics, (b) serve as the `Reference` backend of
+//! [`crate::engine`], and (c) provide per-algorithm rust implementations
+//! (direct / im2col / Winograd convolution) whose wallclock differences feed
+//! the profiler when no PJRT artifact matches a node signature.
+//!
+//! Layout is NCHW throughout (matching the paper's cuDNN default).
+
+pub mod conv;
+pub mod depthwise;
+pub mod ops;
+pub mod winograd;
+
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// A dense, row-major f32 tensor of arbitrary rank.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], value: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![value; shape.iter().product()] }
+    }
+
+    /// Uniform random tensor in [lo, hi) — synthetic activations/weights.
+    pub fn rand(shape: &[usize], rng: &mut Rng, lo: f32, hi: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: rng.f32_vec(shape.iter().product(), lo, hi) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {shape:?} mismatch",
+            self.shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// NCHW accessor for 4-d tensors.
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 4);
+        let (_, cc, hh, ww) = self.dims4();
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    #[inline]
+    pub fn at4_mut(&mut self, n: usize, c: usize, h: usize, w: usize) -> &mut f32 {
+        debug_assert_eq!(self.rank(), 4);
+        let (_, cc, hh, ww) = self.dims4();
+        &mut self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    /// (N, C, H, W) of a rank-4 tensor.
+    pub fn dims4(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(self.rank(), 4, "dims4 on rank-{} tensor", self.rank());
+        (self.shape[0], self.shape[1], self.shape[2], self.shape[3])
+    }
+
+    /// (rows, cols) of a rank-2 tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.rank(), 2, "dims2 on rank-{} tensor", self.rank());
+        (self.shape[0], self.shape[1])
+    }
+
+    /// Maximum absolute difference against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in max_abs_diff");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Are all elements finite? (failure-injection tests poison tensors)
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(vec![1, 2, 2, 2], (0..8).map(|i| i as f32).collect());
+        assert_eq!(t.at4(0, 1, 1, 0), 6.0);
+        assert_eq!(t.dims4(), (1, 2, 2, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.shape(), &[3, 2]);
+    }
+
+    #[test]
+    fn rand_deterministic() {
+        let mut r1 = Rng::seed_from(1);
+        let mut r2 = Rng::seed_from(1);
+        let a = Tensor::rand(&[2, 3], &mut r1, -1.0, 1.0);
+        let b = Tensor::rand(&[2, 3], &mut r2, -1.0, 1.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::new(vec![3], vec![1.0, 2.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

@@ -1,0 +1,491 @@
+//! Reference implementations of the non-convolution operators: matmul,
+//! elementwise, pooling, batch-norm (inference), concat/split, softmax.
+//!
+//! Every function here is the semantic ground truth the substitution engine
+//! verifies against — keep them simple and obviously correct; the optimized
+//! paths live in the PJRT artifacts and the blocked matmul below.
+
+use super::Tensor;
+
+/// Dense matmul C[M,N] = A[M,K] @ B[K,N], naive triple loop (ground truth).
+pub fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2();
+    let (k2, n) = b.dims2();
+    assert_eq!(k, k2, "matmul inner-dim mismatch: {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        for p in 0..k {
+            let av = ad[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Cache-blocked matmul — the "fast GEMM" algorithm variant for MatMul
+/// nodes. Identical results to `matmul_naive` up to f32 reassociation.
+pub fn matmul_blocked(a: &Tensor, b: &Tensor) -> Tensor {
+    const BM: usize = 32;
+    const BN: usize = 64;
+    const BK: usize = 32;
+    let (m, k) = a.dims2();
+    let (k2, n) = b.dims2();
+    assert_eq!(k, k2, "matmul inner-dim mismatch: {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i0 in (0..m).step_by(BM) {
+        for p0 in (0..k).step_by(BK) {
+            for j0 in (0..n).step_by(BN) {
+                let imax = (i0 + BM).min(m);
+                let pmax = (p0 + BK).min(k);
+                let jmax = (j0 + BN).min(n);
+                for i in i0..imax {
+                    for p in p0..pmax {
+                        let av = ad[i * k + p];
+                        let brow = &bd[p * n + j0..p * n + jmax];
+                        let orow = &mut out[i * n + j0..i * n + jmax];
+                        for (o, bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// ReLU, elementwise.
+pub fn relu(x: &Tensor) -> Tensor {
+    Tensor::new(x.shape().to_vec(), x.data().iter().map(|v| v.max(0.0)).collect())
+}
+
+/// Sigmoid, elementwise.
+pub fn sigmoid(x: &Tensor) -> Tensor {
+    Tensor::new(
+        x.shape().to_vec(),
+        x.data().iter().map(|v| 1.0 / (1.0 + (-v).exp())).collect(),
+    )
+}
+
+/// Elementwise addition of same-shape tensors.
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape(), "add shape mismatch");
+    Tensor::new(
+        a.shape().to_vec(),
+        a.data().iter().zip(b.data()).map(|(x, y)| x + y).collect(),
+    )
+}
+
+/// Elementwise multiplication.
+pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape(), "mul shape mismatch");
+    Tensor::new(
+        a.shape().to_vec(),
+        a.data().iter().zip(b.data()).map(|(x, y)| x * y).collect(),
+    )
+}
+
+/// Add a per-channel bias [C] to an NCHW tensor.
+pub fn bias_add_nchw(x: &Tensor, bias: &Tensor) -> Tensor {
+    let (n, c, h, w) = x.dims4();
+    assert_eq!(bias.shape(), &[c], "bias shape mismatch");
+    let mut out = x.clone();
+    let hw = h * w;
+    for ni in 0..n {
+        for ci in 0..c {
+            let b = bias.data()[ci];
+            let base = (ni * c + ci) * hw;
+            for o in &mut out.data_mut()[base..base + hw] {
+                *o += b;
+            }
+        }
+    }
+    out
+}
+
+/// Batch normalization at inference time: y = gamma*(x-mean)/sqrt(var+eps)+beta.
+/// `params` are four [C] tensors: gamma, beta, mean, var.
+pub fn batchnorm_nchw(x: &Tensor, gamma: &Tensor, beta: &Tensor, mean: &Tensor, var: &Tensor, eps: f32) -> Tensor {
+    let (n, c, h, w) = x.dims4();
+    for t in [gamma, beta, mean, var] {
+        assert_eq!(t.shape(), &[c], "batchnorm param shape mismatch");
+    }
+    let mut out = x.clone();
+    let hw = h * w;
+    for ci in 0..c {
+        // Fold into scale & shift once per channel.
+        let scale = gamma.data()[ci] / (var.data()[ci] + eps).sqrt();
+        let shift = beta.data()[ci] - mean.data()[ci] * scale;
+        for ni in 0..n {
+            let base = (ni * c + ci) * hw;
+            for o in &mut out.data_mut()[base..base + hw] {
+                *o = *o * scale + shift;
+            }
+        }
+    }
+    out
+}
+
+/// Max pooling over NCHW with kernel (kh,kw), stride (sh,sw), padding (ph,pw).
+/// Padded cells are -inf (never selected).
+pub fn maxpool_nchw(x: &Tensor, kh: usize, kw: usize, sh: usize, sw: usize, ph: usize, pw: usize) -> Tensor {
+    pool_nchw(x, kh, kw, sh, sw, ph, pw, true)
+}
+
+/// Average pooling; divisor counts only in-bounds cells (cuDNN's
+/// `CUDNN_POOLING_AVERAGE_COUNT_EXCLUDE_PADDING`, TF "SAME" semantics).
+pub fn avgpool_nchw(x: &Tensor, kh: usize, kw: usize, sh: usize, sw: usize, ph: usize, pw: usize) -> Tensor {
+    pool_nchw(x, kh, kw, sh, sw, ph, pw, false)
+}
+
+fn pool_nchw(x: &Tensor, kh: usize, kw: usize, sh: usize, sw: usize, ph: usize, pw: usize, is_max: bool) -> Tensor {
+    let (n, c, h, w) = x.dims4();
+    let oh = (h + 2 * ph - kh) / sh + 1;
+    let ow = (w + 2 * pw - kw) / sw + 1;
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = if is_max { f32::NEG_INFINITY } else { 0.0 };
+                    let mut count = 0usize;
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = (oy * sh + ky) as isize - ph as isize;
+                            let ix = (ox * sw + kx) as isize - pw as isize;
+                            if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                                continue;
+                            }
+                            let v = x.at4(ni, ci, iy as usize, ix as usize);
+                            if is_max {
+                                acc = acc.max(v);
+                            } else {
+                                acc += v;
+                            }
+                            count += 1;
+                        }
+                    }
+                    *out.at4_mut(ni, ci, oy, ox) =
+                        if is_max { acc } else if count > 0 { acc / count as f32 } else { 0.0 };
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pooling: [N,C,H,W] -> [N,C,1,1].
+pub fn global_avgpool_nchw(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = x.dims4();
+    let mut out = Tensor::zeros(&[n, c, 1, 1]);
+    let hw = (h * w) as f32;
+    for ni in 0..n {
+        for ci in 0..c {
+            let mut acc = 0.0;
+            for hy in 0..h {
+                for wx in 0..w {
+                    acc += x.at4(ni, ci, hy, wx);
+                }
+            }
+            *out.at4_mut(ni, ci, 0, 0) = acc / hw;
+        }
+    }
+    out
+}
+
+/// Concatenate tensors of equal rank along an arbitrary axis.
+pub fn concat_axis(parts: &[&Tensor], axis: usize) -> Tensor {
+    assert!(!parts.is_empty());
+    let rank = parts[0].rank();
+    assert!(axis < rank, "concat axis {axis} out of range for rank {rank}");
+    let mut out_shape = parts[0].shape().to_vec();
+    for p in &parts[1..] {
+        assert_eq!(p.rank(), rank, "concat rank mismatch");
+        for d in 0..rank {
+            if d != axis {
+                assert_eq!(p.shape()[d], out_shape[d], "concat non-axis dim mismatch");
+            }
+        }
+        out_shape[axis] += p.shape()[axis];
+    }
+    // outer = product of dims before axis; inner = product after axis.
+    let outer: usize = out_shape[..axis].iter().product();
+    let inner: usize = out_shape[axis + 1..].iter().product();
+    let mut data = Vec::with_capacity(out_shape.iter().product());
+    for o in 0..outer {
+        for p in parts {
+            let pa = p.shape()[axis];
+            let chunk = pa * inner;
+            data.extend_from_slice(&p.data()[o * chunk..(o + 1) * chunk]);
+        }
+    }
+    Tensor::new(out_shape, data)
+}
+
+/// Split a tensor along an arbitrary axis into parts of the given sizes.
+pub fn split_axis(x: &Tensor, axis: usize, sizes: &[usize]) -> Vec<Tensor> {
+    let rank = x.rank();
+    assert!(axis < rank, "split axis {axis} out of range");
+    assert_eq!(sizes.iter().sum::<usize>(), x.shape()[axis], "split sizes mismatch");
+    let outer: usize = x.shape()[..axis].iter().product();
+    let inner: usize = x.shape()[axis + 1..].iter().product();
+    let total_axis = x.shape()[axis];
+    let mut outs = Vec::with_capacity(sizes.len());
+    let mut off = 0;
+    for &sz in sizes {
+        let mut shape = x.shape().to_vec();
+        shape[axis] = sz;
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for o in 0..outer {
+            let base = (o * total_axis + off) * inner;
+            data.extend_from_slice(&x.data()[base..base + sz * inner]);
+        }
+        outs.push(Tensor::new(shape, data));
+        off += sz;
+    }
+    outs
+}
+
+/// Concatenate along the channel axis (axis=1) of NCHW tensors.
+pub fn concat_channels(parts: &[&Tensor]) -> Tensor {
+    assert!(!parts.is_empty());
+    let (n, _, h, w) = parts[0].dims4();
+    let mut c_total = 0;
+    for p in parts {
+        let (pn, pc, phh, pww) = p.dims4();
+        assert_eq!((pn, phh, pww), (n, h, w), "concat non-channel dims must match");
+        c_total += pc;
+    }
+    let mut out = Tensor::zeros(&[n, c_total, h, w]);
+    let hw = h * w;
+    for ni in 0..n {
+        let mut c_off = 0;
+        for p in parts {
+            let pc = p.shape()[1];
+            for ci in 0..pc {
+                let src = &p.data()[(ni * pc + ci) * hw..(ni * pc + ci + 1) * hw];
+                let dst_base = (ni * c_total + c_off + ci) * hw;
+                out.data_mut()[dst_base..dst_base + hw].copy_from_slice(src);
+            }
+            c_off += pc;
+        }
+    }
+    out
+}
+
+/// Split along the channel axis into parts of the given channel counts.
+pub fn split_channels(x: &Tensor, channel_counts: &[usize]) -> Vec<Tensor> {
+    let (n, c, h, w) = x.dims4();
+    assert_eq!(channel_counts.iter().sum::<usize>(), c, "split channel sum mismatch");
+    let hw = h * w;
+    let mut outs = Vec::with_capacity(channel_counts.len());
+    let mut c_off = 0;
+    for &pc in channel_counts {
+        let mut part = Tensor::zeros(&[n, pc, h, w]);
+        for ni in 0..n {
+            for ci in 0..pc {
+                let src_base = (ni * c + c_off + ci) * hw;
+                let dst_base = (ni * pc + ci) * hw;
+                part.data_mut()[dst_base..dst_base + hw]
+                    .copy_from_slice(&x.data()[src_base..src_base + hw]);
+            }
+        }
+        outs.push(part);
+        c_off += pc;
+    }
+    outs
+}
+
+/// Row-wise softmax of a [N, K] tensor (classifier head).
+pub fn softmax_rows(x: &Tensor) -> Tensor {
+    let (n, k) = x.dims2();
+    let mut out = x.clone();
+    for i in 0..n {
+        let row = &mut out.data_mut()[i * k..(i + 1) * k];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+/// Flatten [N, C, H, W] -> [N, C*H*W] (for FC heads).
+pub fn flatten(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = x.dims4();
+    x.clone().reshape(&[n, c * h * w])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(matmul_naive(&a, &i), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul_naive(&a, &b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Rng::seed_from(42);
+        for (m, k, n) in [(1, 1, 1), (5, 7, 3), (33, 65, 70), (64, 64, 64)] {
+            let a = Tensor::rand(&[m, k], &mut rng, -1.0, 1.0);
+            let b = Tensor::rand(&[k, n], &mut rng, -1.0, 1.0);
+            let x = matmul_naive(&a, &b);
+            let y = matmul_blocked(&a, &b);
+            assert_close(x.data(), y.data(), 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let x = Tensor::new(vec![4], vec![-1.0, 0.0, 2.0, -0.5]);
+        assert_eq!(relu(&x).data(), &[0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn add_mul_elementwise() {
+        let a = Tensor::new(vec![3], vec![1., 2., 3.]);
+        let b = Tensor::new(vec![3], vec![4., 5., 6.]);
+        assert_eq!(add(&a, &b).data(), &[5., 7., 9.]);
+        assert_eq!(mul(&a, &b).data(), &[4., 10., 18.]);
+    }
+
+    #[test]
+    fn bias_add_per_channel() {
+        let x = Tensor::zeros(&[1, 2, 2, 2]);
+        let b = Tensor::new(vec![2], vec![1.0, -1.0]);
+        let y = bias_add_nchw(&x, &b);
+        assert_eq!(y.at4(0, 0, 1, 1), 1.0);
+        assert_eq!(y.at4(0, 1, 0, 0), -1.0);
+    }
+
+    #[test]
+    fn batchnorm_normalizes() {
+        let x = Tensor::new(vec![1, 1, 1, 2], vec![2.0, 4.0]);
+        let gamma = Tensor::new(vec![1], vec![1.0]);
+        let beta = Tensor::new(vec![1], vec![0.0]);
+        let mean = Tensor::new(vec![1], vec![3.0]);
+        let var = Tensor::new(vec![1], vec![1.0]);
+        let y = batchnorm_nchw(&x, &gamma, &beta, &mean, &var, 0.0);
+        assert_close(y.data(), &[-1.0, 1.0], 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn maxpool_2x2() {
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = maxpool_nchw(&x, 2, 2, 2, 2, 0, 0);
+        assert_eq!(y.shape(), &[1, 1, 1, 1]);
+        assert_eq!(y.data(), &[4.0]);
+    }
+
+    #[test]
+    fn maxpool_with_padding() {
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = maxpool_nchw(&x, 3, 3, 2, 2, 1, 1);
+        assert_eq!(y.shape(), &[1, 1, 1, 1]);
+        assert_eq!(y.data(), &[4.0]);
+    }
+
+    #[test]
+    fn avgpool_excludes_padding() {
+        let x = Tensor::full(&[1, 1, 2, 2], 2.0);
+        let y = avgpool_nchw(&x, 3, 3, 1, 1, 1, 1);
+        // every window averages only in-bounds 2.0s -> all outputs 2.0
+        assert!(y.data().iter().all(|&v| (v - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn global_avgpool() {
+        let x = Tensor::new(vec![1, 2, 1, 2], vec![1.0, 3.0, 10.0, 20.0]);
+        let y = global_avgpool_nchw(&x);
+        assert_eq!(y.shape(), &[1, 2, 1, 1]);
+        assert_close(y.data(), &[2.0, 15.0], 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn concat_axis_matches_channel_specialization() {
+        let mut rng = Rng::seed_from(21);
+        let a = Tensor::rand(&[2, 3, 4, 4], &mut rng, -1.0, 1.0);
+        let b = Tensor::rand(&[2, 5, 4, 4], &mut rng, -1.0, 1.0);
+        assert_eq!(concat_axis(&[&a, &b], 1), concat_channels(&[&a, &b]));
+    }
+
+    #[test]
+    fn concat_split_axis0_roundtrip() {
+        let mut rng = Rng::seed_from(22);
+        let a = Tensor::rand(&[4, 3, 3, 3], &mut rng, -1.0, 1.0);
+        let b = Tensor::rand(&[6, 3, 3, 3], &mut rng, -1.0, 1.0);
+        let cat = concat_axis(&[&a, &b], 0);
+        assert_eq!(cat.shape(), &[10, 3, 3, 3]);
+        let parts = split_axis(&cat, 0, &[4, 6]);
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn concat_split_rank1() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]);
+        let b = Tensor::new(vec![3], vec![3.0, 4.0, 5.0]);
+        let cat = concat_axis(&[&a, &b], 0);
+        assert_eq!(cat.data(), &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let parts = split_axis(&cat, 0, &[2, 3]);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn concat_split_roundtrip() {
+        let mut rng = Rng::seed_from(9);
+        let a = Tensor::rand(&[2, 3, 4, 4], &mut rng, -1.0, 1.0);
+        let b = Tensor::rand(&[2, 5, 4, 4], &mut rng, -1.0, 1.0);
+        let cat = concat_channels(&[&a, &b]);
+        assert_eq!(cat.shape(), &[2, 8, 4, 4]);
+        let parts = split_channels(&cat, &[3, 5]);
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let y = softmax_rows(&x);
+        for i in 0..2 {
+            let s: f32 = y.data()[i * 3..(i + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn flatten_shape() {
+        let x = Tensor::zeros(&[2, 3, 4, 5]);
+        assert_eq!(flatten(&x).shape(), &[2, 60]);
+    }
+}

@@ -1,0 +1,225 @@
+//! Winograd F(2×2, 3×3) convolution — the third convolution algorithm.
+//!
+//! Replaces the 9 multiplies of a direct 3×3 tap with 16 multiplies per
+//! 2×2 output tile (vs 36 direct): a 2.25× multiply reduction, at the cost
+//! of extra adds and transform memory. Applicability mirrors cuDNN's
+//! `CUDNN_CONVOLUTION_FWD_ALGO_WINOGRAD`: 3×3 kernel, stride 1 only —
+//! exactly the "algorithm C is not applicable to this operation" behaviour
+//! the paper's Table 1 shows.
+//!
+//! Transforms (Lavin & Gray 2016):
+//! ```text
+//! Y = Aᵀ [ (G g Gᵀ) ⊙ (Bᵀ d B) ] A
+//! Bᵀ = [1 0 -1 0; 0 1 1 0; 0 -1 1 0; 0 1 0 -1]
+//! G  = [1 0 0; ½ ½ ½; ½ -½ ½; 0 0 1]
+//! Aᵀ = [1 1 1 0; 0 1 -1 -1]
+//! ```
+
+use super::conv::out_dim;
+use super::Tensor;
+
+/// Is Winograd F(2,3) applicable to this conv configuration?
+pub fn applicable(r: usize, s: usize, stride: (usize, usize)) -> bool {
+    r == 3 && s == 3 && stride == (1, 1)
+}
+
+/// 4x4 input-tile transform: Bᵀ d B.
+#[inline]
+fn transform_input(d: &[[f32; 4]; 4]) -> [[f32; 4]; 4] {
+    // t = Bᵀ d  (rows combined)
+    let mut t = [[0.0f32; 4]; 4];
+    for j in 0..4 {
+        t[0][j] = d[0][j] - d[2][j];
+        t[1][j] = d[1][j] + d[2][j];
+        t[2][j] = d[2][j] - d[1][j];
+        t[3][j] = d[1][j] - d[3][j];
+    }
+    // u = t B (columns combined)
+    let mut u = [[0.0f32; 4]; 4];
+    for i in 0..4 {
+        u[i][0] = t[i][0] - t[i][2];
+        u[i][1] = t[i][1] + t[i][2];
+        u[i][2] = t[i][2] - t[i][1];
+        u[i][3] = t[i][1] - t[i][3];
+    }
+    u
+}
+
+/// 3x3 filter transform: G g Gᵀ -> 4x4.
+#[inline]
+fn transform_filter(g: &[[f32; 3]; 3]) -> [[f32; 4]; 4] {
+    // t = G g : 4x3
+    let mut t = [[0.0f32; 3]; 4];
+    for j in 0..3 {
+        t[0][j] = g[0][j];
+        t[1][j] = 0.5 * (g[0][j] + g[1][j] + g[2][j]);
+        t[2][j] = 0.5 * (g[0][j] - g[1][j] + g[2][j]);
+        t[3][j] = g[2][j];
+    }
+    // u = t Gᵀ : 4x4
+    let mut u = [[0.0f32; 4]; 4];
+    for i in 0..4 {
+        u[i][0] = t[i][0];
+        u[i][1] = 0.5 * (t[i][0] + t[i][1] + t[i][2]);
+        u[i][2] = 0.5 * (t[i][0] - t[i][1] + t[i][2]);
+        u[i][3] = t[i][2];
+    }
+    u
+}
+
+/// Output transform: Aᵀ m A -> 2x2.
+#[inline]
+fn transform_output(m: &[[f32; 4]; 4]) -> [[f32; 2]; 2] {
+    // t = Aᵀ m : 2x4
+    let mut t = [[0.0f32; 4]; 2];
+    for j in 0..4 {
+        t[0][j] = m[0][j] + m[1][j] + m[2][j];
+        t[1][j] = m[1][j] - m[2][j] - m[3][j];
+    }
+    // y = t A : 2x2
+    [
+        [t[0][0] + t[0][1] + t[0][2], t[0][1] - t[0][2] - t[0][3]],
+        [t[1][0] + t[1][1] + t[1][2], t[1][1] - t[1][2] - t[1][3]],
+    ]
+}
+
+/// Winograd F(2×2,3×3) convolution. Panics if `!applicable(r, s, stride)`.
+pub fn conv2d_winograd(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    pad: (usize, usize),
+) -> Tensor {
+    let (n, c, h, wid) = x.dims4();
+    let (k, wc, r, s) = w.dims4();
+    assert_eq!(c, wc, "conv channel mismatch");
+    assert!(applicable(r, s, (1, 1)), "winograd requires 3x3 stride-1");
+    let (ph, pw) = pad;
+    let oh = out_dim(h, 3, 1, ph);
+    let ow = out_dim(wid, 3, 1, pw);
+
+    // Pre-transform all filters: [K, C, 4, 4].
+    let mut uf = vec![[[0.0f32; 4]; 4]; k * c];
+    for ki in 0..k {
+        for ci in 0..c {
+            let mut g = [[0.0f32; 3]; 3];
+            for (ry, row) in g.iter_mut().enumerate() {
+                for (sx, v) in row.iter_mut().enumerate() {
+                    *v = w.at4(ki, ci, ry, sx);
+                }
+            }
+            uf[ki * c + ci] = transform_filter(&g);
+        }
+    }
+
+    let tiles_y = oh.div_ceil(2);
+    let tiles_x = ow.div_ceil(2);
+    let mut out = Tensor::zeros(&[n, k, oh, ow]);
+
+    for ni in 0..n {
+        for ty in 0..tiles_y {
+            for tx in 0..tiles_x {
+                // Gather the 4x4 input tile per channel (with padding), and
+                // transform once; reuse across all K filters.
+                let mut ud = vec![[[0.0f32; 4]; 4]; c];
+                for (ci, slot) in ud.iter_mut().enumerate() {
+                    let mut d = [[0.0f32; 4]; 4];
+                    for dy in 0..4 {
+                        let iy = (ty * 2 + dy) as isize - ph as isize;
+                        for dx in 0..4 {
+                            let ix = (tx * 2 + dx) as isize - pw as isize;
+                            d[dy][dx] = if iy < 0
+                                || ix < 0
+                                || iy >= h as isize
+                                || ix >= wid as isize
+                            {
+                                0.0
+                            } else {
+                                x.at4(ni, ci, iy as usize, ix as usize)
+                            };
+                        }
+                    }
+                    *slot = transform_input(&d);
+                }
+                for ki in 0..k {
+                    // Elementwise accumulate over channels in transform space.
+                    let mut m = [[0.0f32; 4]; 4];
+                    for ci in 0..c {
+                        let f = &uf[ki * c + ci];
+                        let dt = &ud[ci];
+                        for i in 0..4 {
+                            for j in 0..4 {
+                                m[i][j] += f[i][j] * dt[i][j];
+                            }
+                        }
+                    }
+                    let y = transform_output(&m);
+                    let b = bias.map_or(0.0, |t| t.data()[ki]);
+                    for dy in 0..2 {
+                        let oy = ty * 2 + dy;
+                        if oy >= oh {
+                            continue;
+                        }
+                        for dx in 0..2 {
+                            let ox = tx * 2 + dx;
+                            if ox >= ow {
+                                continue;
+                            }
+                            *out.at4_mut(ni, ki, oy, ox) = y[dy][dx] + b;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::conv::conv2d_direct;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn applicability_rules() {
+        assert!(applicable(3, 3, (1, 1)));
+        assert!(!applicable(3, 3, (2, 2)));
+        assert!(!applicable(1, 1, (1, 1)));
+        assert!(!applicable(5, 5, (1, 1)));
+    }
+
+    #[test]
+    fn winograd_matches_direct_even_sizes() {
+        let mut rng = Rng::seed_from(31);
+        let x = Tensor::rand(&[1, 2, 8, 8], &mut rng, -1.0, 1.0);
+        let w = Tensor::rand(&[3, 2, 3, 3], &mut rng, -0.5, 0.5);
+        let y0 = conv2d_direct(&x, &w, None, (1, 1), (1, 1));
+        let y1 = conv2d_winograd(&x, &w, None, (1, 1));
+        assert_eq!(y0.shape(), y1.shape());
+        assert_close(y0.data(), y1.data(), 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn winograd_matches_direct_odd_sizes_and_bias() {
+        let mut rng = Rng::seed_from(32);
+        for (h, w, pad) in [(7, 7, (1, 1)), (5, 9, (1, 1)), (6, 6, (0, 0)), (9, 5, (0, 0))] {
+            let x = Tensor::rand(&[2, 3, h, w], &mut rng, -1.0, 1.0);
+            let wt = Tensor::rand(&[4, 3, 3, 3], &mut rng, -0.5, 0.5);
+            let b = Tensor::rand(&[4], &mut rng, -0.2, 0.2);
+            let y0 = conv2d_direct(&x, &wt, Some(&b), (1, 1), pad);
+            let y1 = conv2d_winograd(&x, &wt, Some(&b), pad);
+            assert_eq!(y0.shape(), y1.shape());
+            assert_close(y0.data(), y1.data(), 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "winograd requires")]
+    fn winograd_rejects_5x5() {
+        let x = Tensor::zeros(&[1, 1, 8, 8]);
+        let w = Tensor::zeros(&[1, 1, 5, 5]);
+        conv2d_winograd(&x, &w, None, (2, 2));
+    }
+}

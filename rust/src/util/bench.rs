@@ -1,0 +1,160 @@
+//! Micro-benchmark harness — offline substitute for `criterion`.
+//!
+//! Provides warmup, adaptive iteration count, and summary statistics, plus a
+//! `BenchSuite` used by the `benches/tableN.rs` binaries (`cargo bench` runs
+//! them with `harness = false`).
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Configuration for one benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Seconds spent warming up (JIT-free rust, but caches/allocator warm).
+    pub warmup_secs: f64,
+    /// Target seconds of measurement.
+    pub measure_secs: f64,
+    /// Minimum number of measured iterations regardless of duration.
+    pub min_iters: usize,
+    /// Hard cap on iterations (protects very fast bodies).
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_secs: 0.2, measure_secs: 1.0, min_iters: 5, max_iters: 100_000 }
+    }
+}
+
+impl BenchConfig {
+    /// A fast profile for CI / `--quick` runs.
+    pub fn quick() -> BenchConfig {
+        BenchConfig { warmup_secs: 0.02, measure_secs: 0.1, min_iters: 3, max_iters: 10_000 }
+    }
+}
+
+/// Result of a benchmark: per-iteration wallclock summary (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    pub total_iters: usize,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean * 1e3
+    }
+}
+
+/// Measure `body` under `cfg`. The body's return value is black-boxed to
+/// keep the optimizer from deleting the work.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut body: impl FnMut() -> T) -> BenchResult {
+    // Warmup phase.
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < cfg.warmup_secs {
+        black_box(body());
+    }
+    // Estimate cost to pick an iteration count.
+    let t1 = Instant::now();
+    black_box(body());
+    let est = t1.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((cfg.measure_secs / est) as usize).clamp(cfg.min_iters, cfg.max_iters);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let it = Instant::now();
+        black_box(body());
+        samples.push(it.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&samples), total_iters: iters }
+}
+
+/// Identity function the optimizer cannot see through.
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// A named collection of benches with uniform reporting — what the
+/// `benches/*.rs` binaries build on.
+pub struct BenchSuite {
+    pub title: String,
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> BenchSuite {
+        // `cargo bench -- --quick` or EADGO_BENCH_QUICK=1 selects the fast profile.
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("EADGO_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+        let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+        BenchSuite { title: title.to_string(), cfg, results: Vec::new() }
+    }
+
+    pub fn with_config(title: &str, cfg: BenchConfig) -> BenchSuite {
+        BenchSuite { title: title.to_string(), cfg, results: Vec::new() }
+    }
+
+    pub fn config(&self) -> &BenchConfig {
+        &self.cfg
+    }
+
+    pub fn run<T>(&mut self, name: &str, body: impl FnMut() -> T) -> &BenchResult {
+        let r = bench(name, &self.cfg, body);
+        eprintln!(
+            "  {:<40} mean {:>10.4} ms   p50 {:>10.4} ms   p95 {:>10.4} ms   ({} iters)",
+            r.name,
+            r.summary.mean * 1e3,
+            r.summary.p50 * 1e3,
+            r.summary.p95 * 1e3,
+            r.total_iters
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn banner(&self) {
+        eprintln!("\n=== {} ===", self.title);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = BenchConfig { warmup_secs: 0.0, measure_secs: 0.01, min_iters: 3, max_iters: 50 };
+        let r = bench("spin", &cfg, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(r.summary.mean > 0.0);
+        assert!(r.total_iters >= 3);
+    }
+
+    #[test]
+    fn iteration_caps_respected() {
+        let cfg = BenchConfig { warmup_secs: 0.0, measure_secs: 10.0, min_iters: 1, max_iters: 7 };
+        let r = bench("fast", &cfg, || 1 + 1);
+        assert!(r.total_iters <= 7);
+    }
+
+    #[test]
+    fn suite_collects() {
+        let mut s =
+            BenchSuite::with_config("t", BenchConfig { warmup_secs: 0.0, measure_secs: 0.005, min_iters: 2, max_iters: 10 });
+        s.run("a", || 42);
+        s.run("b", || 43);
+        assert_eq!(s.results().len(), 2);
+    }
+}

@@ -1,0 +1,128 @@
+//! Tiny command-line parser — offline substitute for `clap`.
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands. Produces the usage text for `eadgo --help`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand (if any), named options, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw arg list (excluding argv[0]). The first non-`--` token is
+    /// treated as the subcommand when `with_subcommand` is set.
+    pub fn parse(raw: &[String], with_subcommand: bool) -> Args {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    args.opts.insert(rest.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else if with_subcommand && args.subcommand.is_none() {
+                args.subcommand = Some(tok.clone());
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn from_env(with_subcommand: bool) -> Args {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw, with_subcommand)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got `{s}`")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{s}`")),
+        }
+    }
+
+    /// All `--key value` options that were consumed (for logging).
+    pub fn options(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.opts.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str], sub: bool) -> Args {
+        Args::parse(&tokens.iter().map(|s| s.to_string()).collect::<Vec<_>>(), sub)
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["optimize", "--model", "squeezenet", "--w=0.5", "--verbose"], true);
+        assert_eq!(a.subcommand.as_deref(), Some("optimize"));
+        assert_eq!(a.get("model"), Some("squeezenet"));
+        assert_eq!(a.get_f64("w", 1.0).unwrap(), 0.5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["run", "a.json", "b.json"], true);
+        assert_eq!(a.positional, vec!["a.json", "b.json"]);
+    }
+
+    #[test]
+    fn no_subcommand_mode() {
+        let a = parse(&["a.json", "--n", "3"], false);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.positional, vec!["a.json"]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["bench", "--quick"], true);
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["x", "--w", "abc"], true);
+        assert!(a.get_f64("w", 1.0).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Offline substrates: the crates we would normally pull from crates.io
+//! (serde_json, rand, criterion, clap, proptest) rebuilt as small, focused
+//! modules so the whole project compiles from the vendored `xla` dependency
+//! set alone.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Monotonic wallclock helper: returns seconds elapsed while running `f`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}

@@ -1,0 +1,109 @@
+//! Property-based testing helper — offline substitute for `proptest`.
+//!
+//! `check(cases, |rng| ...)` runs a closure over many deterministic random
+//! seeds; on failure it reports the failing seed so the case can be replayed
+//! with `check_seed`. No shrinking (cases are built small on purpose), but
+//! failures are fully reproducible.
+
+use crate::util::rng::Rng;
+
+/// Default number of cases per property (override with EADGO_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("EADGO_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` for `cases` deterministic seeds. `prop` returns
+/// `Err(description)` (or panics) to signal failure.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xEAD60u64 ^ ((case as u64) << 16);
+        let mut rng = Rng::seed_from(seed);
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng))) {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "property `{name}` failed on case {case} (seed {seed:#x}): {msg}\n\
+                 replay: eadgo::util::prop::check_seed({seed:#x}, ...)"
+            ),
+            Err(p) => {
+                let msg = p
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<panic>".to_string());
+                panic!("property `{name}` panicked on case {case} (seed {seed:#x}): {msg}");
+            }
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn check_seed<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::seed_from(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replay of seed {seed:#x} failed: {msg}");
+    }
+}
+
+/// Assert two f32 slices are element-wise close; returns Err with the first
+/// offending index (the workhorse of tensor-equivalence property tests).
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!(
+                "mismatch at [{i}]: {x} vs {y} (|diff|={} > tol={tol}); lengths {}",
+                (x - y).abs(),
+                a.len()
+            ));
+        }
+        if x.is_nan() != y.is_nan() {
+            return Err(format!("NaN mismatch at [{i}]: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 10, |rng| {
+            count += 1;
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 5, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn close_check() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-5).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5, 1e-5).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-5, 1e-5).is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! Failure injection: corrupt persistence files, poisoned tensors, invalid
+//! assignments, and hostile manifests must produce errors, not wrong
+//! answers or panics.
+
+use eadgo::algo::{Algorithm, AlgorithmRegistry, Assignment};
+use eadgo::cost::CostDb;
+use eadgo::engine::ReferenceEngine;
+use eadgo::graph::{serde as gserde, Activation, Graph, OpKind, PortRef};
+use eadgo::models::{self, ModelConfig};
+use eadgo::runtime::Manifest;
+use eadgo::tensor::Tensor;
+use eadgo::util::rng::Rng;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("eadgo_failinj_{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn corrupt_cost_db_is_error_and_load_or_default_recovers() {
+    let dir = tmpdir("db");
+    let path = dir.join("profiles.json");
+    std::fs::write(&path, "{ not json at all").unwrap();
+    assert!(CostDb::load(&path).is_err());
+    // the CLI path degrades to an empty db rather than crashing
+    let db = CostDb::load_or_default(&path);
+    assert_eq!(db.num_entries(), 0);
+    // truncated-but-valid-json with wrong schema
+    std::fs::write(&path, r#"{"profiles": 42}"#).unwrap();
+    assert!(CostDb::load(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    let dir = tmpdir("manifest");
+    let path = dir.join("manifest.json");
+    for bad in [
+        "{",                                     // not json
+        r#"{"artifacts": "nope"}"#,              // wrong type
+        r#"{"artifacts": [{"key": "k"}]}"#,      // missing file
+        r#"{"artifacts": [{"file": "x.hlo"}]}"#, // missing key
+    ] {
+        std::fs::write(&path, bad).unwrap();
+        assert!(Manifest::load(&path).is_err(), "accepted: {bad}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_pointing_at_missing_files_fails_at_load() {
+    let dir = tmpdir("missingfile");
+    let m = Manifest {
+        entries: vec![eadgo::runtime::ArtifactEntry {
+            key: "ghost::std".into(),
+            file: "does_not_exist.hlo.txt".into(),
+            input_shapes: vec![vec![1]],
+            output_shapes: vec![vec![1]],
+            kernel: "jnp".into(),
+        }],
+    };
+    m.save(&dir.join("manifest.json")).unwrap();
+    let mut rt = eadgo::runtime::Runtime::cpu().unwrap();
+    assert!(rt.load_dir(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn nan_input_propagates_through_linear_ops() {
+    // Through a conv (no activation) a poisoned input must surface as NaN
+    // in the output — all_finite() is the detection hook. (ReLU layers
+    // mask NaN via f32::max — same as real frameworks — so the check is on
+    // the linear path.)
+    let mut g = Graph::new();
+    let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+    let w = g.add1(OpKind::weight(vec![4, 3, 3, 3], 1), &[], "w");
+    let c = g.add1(
+        OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (1, 1),
+            act: Activation::None,
+            has_bias: false,
+            has_residual: false,
+        },
+        &[x, w],
+        "c",
+    );
+    g.outputs = vec![PortRef::of(c)];
+    let reg = AlgorithmRegistry::new();
+    let a = Assignment::default_for(&g, &reg);
+    let mut xt = Tensor::zeros(&[1, 3, 8, 8]);
+    xt.data_mut()[0] = f32::NAN;
+    let out = ReferenceEngine::new().run(&g, &a, &[xt]).unwrap().outputs.remove(0);
+    assert!(!out.all_finite());
+}
+
+#[test]
+fn inapplicable_algorithm_assignment_is_runtime_error() {
+    // Assign winograd to a 1x1 conv: engine must refuse, not miscompute.
+    let mut g = Graph::new();
+    let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+    let w = g.add1(OpKind::weight(vec![4, 3, 1, 1], 1), &[], "w");
+    let c = g.add1(
+        OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (0, 0),
+            act: Activation::None,
+            has_bias: false,
+            has_residual: false,
+        },
+        &[x, w],
+        "c",
+    );
+    g.outputs = vec![PortRef::of(c)];
+    let reg = AlgorithmRegistry::new();
+    let mut a = Assignment::default_for(&g, &reg);
+    a.set(c, Algorithm::ConvWinograd);
+    let mut rng = Rng::seed_from(1);
+    let xt = Tensor::rand(&[1, 3, 8, 8], &mut rng, -1.0, 1.0);
+    assert!(ReferenceEngine::new().run(&g, &a, &[xt]).is_err());
+}
+
+#[test]
+fn corrupt_plan_files_rejected() {
+    let reg = AlgorithmRegistry::new();
+    let dir = tmpdir("plan");
+    let path = dir.join("plan.json");
+    // assignment array with wrong length
+    let g = models::simple::build_cnn(ModelConfig {
+        batch: 1,
+        resolution: 16,
+        width_div: 8,
+        classes: 10,
+    });
+    let mut j = gserde::graph_to_json(&g);
+    j.set("assignment", vec![0.0f64]); // wrong length, wrong type
+    eadgo::util::json::write_file(&path, &j).unwrap();
+    assert!(gserde::load_plan(&path, &reg).is_err());
+    // unknown algorithm name
+    let mut j2 = gserde::plan_to_json(&g, &Assignment::default_for(&g, &reg));
+    if let eadgo::util::json::Json::Obj(m) = &mut j2 {
+        if let Some(eadgo::util::json::Json::Arr(a)) = m.get_mut("assignment") {
+            // find first non-null slot and poison it
+            for slot in a.iter_mut() {
+                if !matches!(slot, eadgo::util::json::Json::Null) {
+                    *slot = eadgo::util::json::Json::Str("quantum_annealing".into());
+                    break;
+                }
+            }
+        }
+    }
+    eadgo::util::json::write_file(&path, &j2).unwrap();
+    assert!(gserde::load_plan(&path, &reg).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn graph_with_dangling_output_rejected_on_load() {
+    let j = eadgo::util::json::parse(
+        r#"{"nodes": [{"op": "input", "shape": [1, 3, 4, 4], "inputs": []}],
+            "outputs": [[7, 0]]}"#,
+    )
+    .unwrap();
+    assert!(gserde::graph_from_json(&j).is_err());
+}
+
+#[test]
+fn zero_size_serving_config_rejected() {
+    let bad = eadgo::serve::ServeConfig { requests: 0, ..Default::default() };
+    assert!(eadgo::serve::serve(&bad, |b| Ok(b.to_vec())).is_err());
+    let bad2 = eadgo::serve::ServeConfig { batch_max: 0, ..Default::default() };
+    assert!(eadgo::serve::serve(&bad2, |b| Ok(b.to_vec())).is_err());
+}
+
+#[test]
+fn cost_table_missing_profile_is_error() {
+    // GraphCostTable::build against an empty DB must name the gap.
+    let g = models::simple::build_cnn(ModelConfig {
+        batch: 1,
+        resolution: 16,
+        width_div: 8,
+        classes: 10,
+    });
+    let reg = AlgorithmRegistry::new();
+    let db = CostDb::new();
+    let err = eadgo::cost::GraphCostTable::build(&g, &reg, &db).unwrap_err();
+    assert!(err.to_string().contains("run the profiler"), "{err}");
+}

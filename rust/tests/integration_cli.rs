@@ -1,0 +1,156 @@
+//! End-to-end CLI tests: drive the `eadgo` binary the way a user would
+//! (optimize → save plan → serve; profile → warm cache; reproduce tables).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn eadgo() -> Command {
+    // target/release or target/debug depending on how tests were built
+    let mut path = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    path.push("target");
+    path.push(if cfg!(debug_assertions) { "debug" } else { "release" });
+    path.push("eadgo");
+    if !path.exists() {
+        // fall back to the release binary (built by `make build`)
+        path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target/release/eadgo");
+    }
+    Command::new(path)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("eadgo_cli_{name}"))
+}
+
+fn run_ok(cmd: &mut Command) -> String {
+    let out = cmd.output().expect("binary not found — run `cargo build --release` first");
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    let stderr = String::from_utf8_lossy(&out.stderr).to_string();
+    assert!(out.status.success(), "command failed:\nstdout: {stdout}\nstderr: {stderr}");
+    stdout
+}
+
+#[test]
+fn zoo_lists_models() {
+    let out = run_ok(eadgo().arg("zoo"));
+    for m in ["squeezenet", "inception", "resnet", "mobilenet", "vgg"] {
+        assert!(out.contains(m), "missing {m} in: {out}");
+    }
+}
+
+#[test]
+fn show_dumps_graph() {
+    let out = run_ok(eadgo().args(["show", "--model", "simple"]));
+    assert!(out.contains("conv2d"));
+    assert!(out.contains("outputs:"));
+}
+
+#[test]
+fn optimize_save_plan_then_serve() {
+    let dir = tmp("pipeline");
+    std::fs::create_dir_all(&dir).unwrap();
+    let plan = dir.join("plan.json");
+    let db = dir.join("db.json");
+    let out = run_ok(eadgo().args([
+        "optimize",
+        "--model",
+        "simple",
+        "--objective",
+        "energy",
+        "--max-dequeues",
+        "20",
+        "--save-plan",
+        plan.to_str().unwrap(),
+        "--db",
+        db.to_str().unwrap(),
+    ]));
+    assert!(out.contains("optimized:"), "{out}");
+    assert!(plan.exists());
+    assert!(db.exists());
+
+    // Serving from the saved plan (reference engine; point artifacts at a
+    // nonexistent dir so the test does not depend on `make artifacts`).
+    let out = run_ok(eadgo().args([
+        "serve",
+        "--plan",
+        plan.to_str().unwrap(),
+        "--requests",
+        "8",
+        "--batch-max",
+        "2",
+        "--artifacts",
+        dir.join("no_artifacts").to_str().unwrap(),
+        "--db",
+        db.to_str().unwrap(),
+    ]));
+    assert!(out.contains("served 8 requests"), "{out}");
+    assert!(out.contains("throughput"), "{out}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn profile_warm_cache_second_run() {
+    let dir = tmp("profile");
+    std::fs::create_dir_all(&dir).unwrap();
+    let db = dir.join("db.json");
+    let first = run_ok(eadgo().args([
+        "profile",
+        "--model",
+        "simple",
+        "--db",
+        db.to_str().unwrap(),
+    ]));
+    assert!(first.contains("new measurements"), "{first}");
+    // paper §4.1: "After the first run, each later run finishes [fast]
+    // since most profile results have already been cached"
+    let second = run_ok(eadgo().args([
+        "profile",
+        "--model",
+        "simple",
+        "--db",
+        db.to_str().unwrap(),
+    ]));
+    assert!(second.contains("0 new measurements"), "{second}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn reproduce_table1_prints_rows() {
+    let out = run_ok(eadgo().args(["reproduce", "--table", "1", "--quick"]));
+    assert!(out.contains("Table 1"));
+    assert!(out.contains("winograd"));
+    assert!(out.contains("conv3"));
+}
+
+#[test]
+fn constrain_reports_trace() {
+    let dir = tmp("constrain");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = run_ok(eadgo().args([
+        "constrain",
+        "--model",
+        "simple",
+        "--time-budget",
+        "1000000",
+        "--probes",
+        "2",
+        "--max-dequeues",
+        "10",
+        "--db",
+        dir.join("db.json").to_str().unwrap(),
+    ]));
+    assert!(out.contains("feasible"), "{out}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_subcommand_errors() {
+    let out = eadgo().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn unknown_model_errors() {
+    let out = eadgo().args(["show", "--model", "alexnet9000"]).output().unwrap();
+    assert!(!out.status.success());
+}

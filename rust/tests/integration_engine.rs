@@ -1,0 +1,167 @@
+//! Integration: engine backends. The PJRT-hybrid engine (AOT JAX/Pallas
+//! artifacts) must agree numerically with the pure-rust reference engine —
+//! the cross-language, cross-layer correctness seal of the architecture.
+//!
+//! Artifact-dependent tests are skipped (with a note) when
+//! `artifacts/manifest.json` has not been built yet (`make artifacts`).
+
+use eadgo::algo::{AlgorithmRegistry, Assignment};
+use eadgo::engine::pjrt::PjrtEngine;
+use eadgo::engine::ReferenceEngine;
+use eadgo::models::{self, ModelConfig};
+use eadgo::runtime::Runtime;
+use eadgo::tensor::Tensor;
+use eadgo::util::prop::assert_close;
+use eadgo::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping PJRT test");
+        None
+    }
+}
+
+/// The artifact suite is built for the quickstart CNN at resolution 32.
+fn quickstart_cfg() -> ModelConfig {
+    ModelConfig { batch: 1, resolution: 32, width_div: 4, classes: 10 }
+}
+
+#[test]
+fn runtime_loads_manifest() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    let n = rt.load_dir(&dir).unwrap();
+    assert!(n >= 20, "expected a full artifact suite, got {n}");
+    assert!(rt.keys().any(|k| k.starts_with("model_fwd::")));
+}
+
+#[test]
+fn pjrt_artifact_matches_reference_per_node() {
+    // Execute one conv artifact directly and compare against the rust
+    // reference implementation of the same algorithm.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_dir(&dir).unwrap();
+    let key = "conv2d;st=1,1;pad=1,1;act=none;b=1;res=0;1x3x32x32;8x3x3x3;8::direct";
+    assert!(rt.has(key), "missing artifact {key}");
+    let mut rng = Rng::seed_from(11);
+    let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
+    let w = Tensor::rand(&[8, 3, 3, 3], &mut rng, -0.5, 0.5);
+    let b = Tensor::rand(&[8], &mut rng, -0.1, 0.1);
+    let got = rt.execute(key, &[&x, &w, &b]).unwrap();
+    let want = eadgo::tensor::conv::conv2d_direct(&x, &w, Some(&b), (1, 1), (1, 1));
+    assert_eq!(got[0].shape(), want.shape());
+    assert_close(got[0].data(), want.data(), 1e-3, 1e-3).unwrap();
+}
+
+#[test]
+fn hybrid_engine_matches_reference_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = models::simple::build_cnn(quickstart_cfg());
+    let reg = AlgorithmRegistry::new();
+    let a = Assignment::default_for(&g, &reg);
+    let mut rng = Rng::seed_from(12);
+    let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
+
+    let ref_out = ReferenceEngine::new()
+        .run(&g, &a, std::slice::from_ref(&x))
+        .unwrap()
+        .outputs
+        .remove(0);
+
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_dir(&dir).unwrap();
+    let engine = PjrtEngine::new(&rt);
+    let (out, stats) = engine.run(&g, &a, std::slice::from_ref(&x)).unwrap();
+    assert!(
+        stats.pjrt_nodes >= 10,
+        "expected most nodes on PJRT, got {} pjrt / {} ref",
+        stats.pjrt_nodes,
+        stats.reference_nodes
+    );
+    assert_close(ref_out.data(), out.outputs[0].data(), 1e-3, 1e-3).unwrap();
+}
+
+#[test]
+fn hybrid_engine_respects_algorithm_assignment() {
+    // Switch convs to winograd where applicable: hybrid must still match.
+    let Some(dir) = artifacts_dir() else { return };
+    let g = models::simple::build_cnn(quickstart_cfg());
+    let reg = AlgorithmRegistry::new();
+    let mut a = Assignment::default_for(&g, &reg);
+    let shapes = g.infer_shapes().unwrap();
+    for id in a.tunable_ids(&g, &reg) {
+        let node = g.node(id);
+        let in_shapes: Vec<_> = node
+            .inputs
+            .iter()
+            .map(|p| shapes[p.node.0][p.port].clone())
+            .collect();
+        let algos = reg.applicable(&node.op, &in_shapes);
+        if algos.contains(&eadgo::algo::Algorithm::ConvWinograd) {
+            a.set(id, eadgo::algo::Algorithm::ConvWinograd);
+        }
+    }
+    let mut rng = Rng::seed_from(13);
+    let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
+    let ref_out = ReferenceEngine::new()
+        .run(&g, &a, std::slice::from_ref(&x))
+        .unwrap()
+        .outputs
+        .remove(0);
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_dir(&dir).unwrap();
+    let (out, _) = PjrtEngine::new(&rt).run(&g, &a, std::slice::from_ref(&x)).unwrap();
+    assert_close(ref_out.data(), out.outputs[0].data(), 1e-3, 1e-3).unwrap();
+}
+
+#[test]
+fn whole_model_artifact_matches_reference() {
+    // The L2 whole-model artifact (model_fwd::im2col) fed with the rust
+    // engine's realized weights must match the reference engine.
+    let Some(dir) = artifacts_dir() else { return };
+    let g = models::simple::build_cnn(quickstart_cfg());
+    let reg = AlgorithmRegistry::new();
+    let a = Assignment::default_for(&g, &reg);
+    let eng = ReferenceEngine::new();
+    let plan = eng.plan(&g, &a).unwrap();
+
+    // Gather weights in the python WEIGHT_SPECS order: stem_w, stem_b,
+    // b1_w, b1_b, b3_w, b3_b, c2_w, c2_b, fc_w — i.e. graph weight nodes
+    // in creation order.
+    let mut weights: Vec<Tensor> = Vec::new();
+    for (id, node) in g.nodes() {
+        if matches!(node.op, eadgo::graph::OpKind::Weight { .. }) {
+            weights.push(plan.constant(id.0, 0).unwrap().clone());
+        }
+    }
+    assert_eq!(weights.len(), 9, "quickstart CNN has 9 weight tensors");
+
+    let mut rng = Rng::seed_from(14);
+    let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
+    let ref_out = eng.run(&g, &a, std::slice::from_ref(&x)).unwrap().outputs.remove(0);
+
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_dir(&dir).unwrap();
+    let mut inputs: Vec<&Tensor> = vec![&x];
+    inputs.extend(weights.iter());
+    let got = rt.execute("model_fwd::im2col", &inputs).unwrap();
+    assert_eq!(got[0].shape(), &[1, 10]);
+    assert_close(ref_out.data(), got[0].data(), 1e-3, 1e-3).unwrap();
+}
+
+#[test]
+fn reference_engine_batched_inputs() {
+    let cfg = ModelConfig { batch: 4, resolution: 16, width_div: 8, classes: 10 };
+    let g = models::simple::build_cnn(cfg);
+    let reg = AlgorithmRegistry::new();
+    let a = Assignment::default_for(&g, &reg);
+    let mut rng = Rng::seed_from(15);
+    let x = Tensor::rand(&[4, 3, 16, 16], &mut rng, -1.0, 1.0);
+    let out = ReferenceEngine::new().run(&g, &a, &[x]).unwrap().outputs.remove(0);
+    assert_eq!(out.shape(), &[4, 10]);
+}

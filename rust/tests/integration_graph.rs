@@ -1,0 +1,144 @@
+//! Integration: model zoo graphs × substitution engine × reference engine.
+//! Every substitution product of every zoo model must compute the same
+//! function as the original graph (the paper's equivalence guarantee).
+
+use eadgo::algo::{AlgorithmRegistry, Assignment};
+use eadgo::engine::ReferenceEngine;
+use eadgo::graph::canonical::graph_hash;
+use eadgo::models::{self, ModelConfig};
+use eadgo::subst::RuleSet;
+use eadgo::tensor::Tensor;
+use eadgo::util::prop::assert_close;
+use eadgo::util::rng::Rng;
+
+fn tiny() -> ModelConfig {
+    ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 }
+}
+
+fn run_model(g: &eadgo::graph::Graph, x: &Tensor) -> Tensor {
+    let reg = AlgorithmRegistry::new();
+    let a = Assignment::default_for(g, &reg);
+    let eng = ReferenceEngine::new();
+    eng.run(g, &a, std::slice::from_ref(x)).expect("run failed").outputs.remove(0)
+}
+
+#[test]
+fn all_zoo_models_execute() {
+    let mut rng = Rng::seed_from(1);
+    for name in models::zoo_names() {
+        let g = models::by_name(name, tiny()).unwrap();
+        let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
+        let out = run_model(&g, &x);
+        assert_eq!(out.shape(), &[1, 10], "{name}");
+        assert!(out.all_finite(), "{name} produced non-finite output");
+    }
+}
+
+#[test]
+fn substitution_neighbors_preserve_semantics_quickstart() {
+    let g = models::simple::build_cnn(tiny());
+    let mut rng = Rng::seed_from(2);
+    let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
+    let base = run_model(&g, &x);
+    let rs = RuleSet::standard();
+    let neighbors = rs.neighbors(&g);
+    assert!(neighbors.len() >= 4, "expected several rewrites, got {}", neighbors.len());
+    for (ng, rule) in neighbors {
+        let out = run_model(&ng, &x);
+        assert_close(base.data(), out.data(), 1e-3, 1e-3)
+            .unwrap_or_else(|e| panic!("rule {rule} broke quickstart: {e}"));
+    }
+}
+
+#[test]
+fn substitution_neighbors_preserve_semantics_squeezenet() {
+    let g = models::squeezenet::build(tiny());
+    let mut rng = Rng::seed_from(3);
+    let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
+    let base = run_model(&g, &x);
+    let rs = RuleSet::standard();
+    for (ng, rule) in rs.neighbors(&g) {
+        let out = run_model(&ng, &x);
+        assert_close(base.data(), out.data(), 1e-3, 1e-3)
+            .unwrap_or_else(|e| panic!("rule {rule} broke squeezenet: {e}"));
+    }
+}
+
+#[test]
+fn two_step_substitution_chains_preserve_semantics() {
+    // Apply two rounds of rewrites (sampled) on resnet and recheck.
+    let g = models::resnet::build(tiny());
+    let mut rng = Rng::seed_from(4);
+    let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
+    let base = run_model(&g, &x);
+    let rs = RuleSet::standard();
+    let level1 = rs.neighbors(&g);
+    assert!(!level1.is_empty());
+    // sample a few level-1 products, expand each once more
+    for (g1, rule1) in level1.iter().take(3) {
+        let out1 = run_model(g1, &x);
+        assert_close(base.data(), out1.data(), 1e-3, 1e-3)
+            .unwrap_or_else(|e| panic!("rule {rule1}: {e}"));
+        for (g2, rule2) in rs.neighbors(g1).into_iter().take(2) {
+            let out2 = run_model(&g2, &x);
+            assert_close(base.data(), out2.data(), 1e-3, 1e-3)
+                .unwrap_or_else(|e| panic!("chain {rule1} -> {rule2}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn canonical_hash_distinguishes_zoo_models() {
+    let cfg = tiny();
+    let hashes: Vec<u64> = models::zoo_names()
+        .iter()
+        .map(|n| graph_hash(&models::by_name(n, cfg).unwrap()))
+        .collect();
+    let mut dedup = hashes.clone();
+    dedup.sort_unstable();
+    dedup.dedup();
+    assert_eq!(dedup.len(), hashes.len(), "distinct models must hash differently");
+}
+
+#[test]
+fn canonical_hash_stable_across_builds() {
+    let cfg = tiny();
+    let h1 = graph_hash(&models::squeezenet::build(cfg));
+    let h2 = graph_hash(&models::squeezenet::build(cfg));
+    assert_eq!(h1, h2);
+}
+
+#[test]
+fn algorithm_choice_invariance_on_squeezenet() {
+    // Flip every tunable node to each applicable algorithm in turn; outputs
+    // must not change (algorithms are implementations, not semantics).
+    let g = models::squeezenet::build(tiny());
+    let reg = AlgorithmRegistry::new();
+    let a0 = Assignment::default_for(&g, &reg);
+    let eng = ReferenceEngine::new();
+    let mut rng = Rng::seed_from(5);
+    let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
+    let base = eng.run(&g, &a0, std::slice::from_ref(&x)).unwrap().outputs.remove(0);
+    let shapes = g.infer_shapes().unwrap();
+    let mut flipped = 0;
+    for id in a0.tunable_ids(&g, &reg) {
+        let node = g.node(id);
+        let in_shapes: Vec<_> = node
+            .inputs
+            .iter()
+            .map(|p| shapes[p.node.0][p.port].clone())
+            .collect();
+        for algo in reg.applicable(&node.op, &in_shapes) {
+            let mut a = a0.clone();
+            a.set(id, algo);
+            let out = eng.run(&g, &a, std::slice::from_ref(&x)).unwrap().outputs.remove(0);
+            assert_close(base.data(), out.data(), 1e-3, 1e-3)
+                .unwrap_or_else(|e| panic!("node {} algo {:?}: {e}", id.0, algo));
+            flipped += 1;
+        }
+        if flipped > 30 {
+            break; // bounded runtime; coverage is already broad
+        }
+    }
+    assert!(flipped >= 10);
+}

@@ -1,0 +1,116 @@
+//! Integration: PJRT runtime plumbing + the python<->rust signature
+//! contract (golden strings pinned on both sides).
+
+use eadgo::graph::{Activation, OpKind};
+use eadgo::runtime::{literal_to_tensor, tensor_to_literal, Manifest, Runtime};
+use eadgo::tensor::Tensor;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping PJRT test");
+        None
+    }
+}
+
+/// Golden signature strings — python/tests/test_aot.py pins the identical
+/// strings from the python mirror (compile/opset.py). If either side
+/// changes, both tests break together.
+#[test]
+fn signature_contract() {
+    let conv = OpKind::Conv2d {
+        stride: (1, 1),
+        pad: (1, 1),
+        act: Activation::None,
+        has_bias: true,
+        has_residual: false,
+    };
+    let sig = conv.signature(&[vec![1, 3, 32, 32], vec![8, 3, 3, 3], vec![8]]);
+    assert_eq!(sig, "conv2d;st=1,1;pad=1,1;act=none;b=1;res=0;1x3x32x32;8x3x3x3;8");
+
+    assert_eq!(OpKind::Relu.signature(&[vec![1, 8, 32, 32]]), "relu;1x8x32x32");
+    assert_eq!(
+        OpKind::MatMul.signature(&[vec![1, 16], vec![16, 10]]),
+        "matmul;1x16;16x10"
+    );
+    let pool = OpKind::MaxPool { k: (2, 2), stride: (2, 2), pad: (0, 0) };
+    assert_eq!(pool.signature(&[vec![1, 16, 32, 32]]), "maxpool;k=2,2;st=2,2;pad=0,0;1x16x32x32");
+    let cat = OpKind::Concat { axis: 1 };
+    assert_eq!(
+        cat.signature(&[vec![1, 8, 32, 32], vec![1, 8, 32, 32]]),
+        "concat;ax=1;1x8x32x32;1x8x32x32"
+    );
+}
+
+#[test]
+fn manifest_parses_real_file() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir.join("manifest.json")).unwrap();
+    assert!(m.entries.len() >= 20);
+    for e in &m.entries {
+        assert!(!e.key.is_empty());
+        assert!(dir.join(&e.file).exists(), "artifact file {} missing", e.file);
+        assert!(!e.input_shapes.is_empty());
+        assert_eq!(e.output_shapes.len(), 1, "all our artifacts are single-output");
+    }
+    // keys unique
+    let mut keys: Vec<_> = m.entries.iter().map(|e| &e.key).collect();
+    keys.sort();
+    let n = keys.len();
+    keys.dedup();
+    assert_eq!(keys.len(), n);
+}
+
+#[test]
+fn runtime_rejects_wrong_shapes_and_unknown_keys() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_dir(&dir).unwrap();
+    let bad = Tensor::zeros(&[2, 2]);
+    assert!(rt.execute("no_such_key", &[&bad]).is_err());
+    let key = "relu;1x8x32x32::std";
+    assert!(rt.has(key));
+    assert!(rt.execute(key, &[&bad]).is_err(), "shape mismatch must be rejected");
+    assert!(rt.execute(key, &[]).is_err(), "arity mismatch must be rejected");
+}
+
+#[test]
+fn relu_artifact_computes_relu() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_dir(&dir).unwrap();
+    let mut x = Tensor::zeros(&[1, 8, 32, 32]);
+    x.data_mut()[0] = -5.0;
+    x.data_mut()[1] = 3.0;
+    let y = rt.execute("relu;1x8x32x32::std", &[&x]).unwrap();
+    assert_eq!(y[0].data()[0], 0.0);
+    assert_eq!(y[0].data()[1], 3.0);
+}
+
+#[test]
+fn matmul_artifacts_agree_with_each_other() {
+    // gemm_blocked (pallas) and gemm_naive (jnp) artifacts are equivalent.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_dir(&dir).unwrap();
+    let mut rng = eadgo::util::rng::Rng::seed_from(3);
+    let a = Tensor::rand(&[1, 16], &mut rng, -1.0, 1.0);
+    let b = Tensor::rand(&[16, 10], &mut rng, -1.0, 1.0);
+    let y1 = rt.execute("matmul;1x16;16x10::gemm_blocked", &[&a, &b]).unwrap();
+    let y2 = rt.execute("matmul;1x16;16x10::gemm_naive", &[&a, &b]).unwrap();
+    eadgo::util::prop::assert_close(y1[0].data(), y2[0].data(), 1e-4, 1e-4).unwrap();
+}
+
+#[test]
+fn literal_conversions_roundtrip_shapes() {
+    for shape in [vec![1usize], vec![2, 3], vec![1, 3, 4, 4]] {
+        let n: usize = shape.iter().product();
+        let t = Tensor::new(shape.clone(), (0..n).map(|i| i as f32).collect());
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit, &shape).unwrap();
+        assert_eq!(back, t);
+    }
+}

@@ -1,0 +1,341 @@
+//! Property-based invariants (randomized, deterministic seeds) over the
+//! core subsystems: graph hashing, substitution equivalence, the inner
+//! search's d=1 optimality for additive objectives, cost-model additivity,
+//! and JSON round-trips.
+
+use eadgo::algo::{AlgorithmRegistry, Assignment};
+use eadgo::cost::CostFunction;
+use eadgo::engine::ReferenceEngine;
+use eadgo::graph::canonical::graph_hash;
+use eadgo::graph::{Activation, Graph, NodeId, OpKind, PortRef};
+use eadgo::search::{exhaustive_search, inner_search, random_assignment, OptimizerContext};
+use eadgo::subst::RuleSet;
+use eadgo::tensor::Tensor;
+use eadgo::util::json::{self, Json};
+use eadgo::util::prop::{assert_close, check, default_cases};
+use eadgo::util::rng::Rng;
+
+/// Generate a random small valid CNN-ish graph: a chain of conv/pool/relu
+/// with an occasional parallel branch + concat.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let mut g = Graph::new();
+    let res = 8 + 2 * rng.below(4); // 8..14
+    let mut c = 1 + rng.below(3); // 1..3
+    let x = g.add1(OpKind::Input { shape: vec![1, c, res, res] }, &[], "x");
+    let mut cur = x;
+    let mut cur_res = res;
+    let depth = 1 + rng.below(3);
+    let mut seed = 100 + rng.below(1000) as u64;
+    for d in 0..depth {
+        match rng.below(4) {
+            0 | 1 => {
+                // conv (+ optional relu)
+                let k = 1 + rng.below(4);
+                let ksz = *rng.choose(&[1usize, 3]);
+                let pad = ksz / 2;
+                seed += 1;
+                let w = g.add1(OpKind::weight(vec![k, c, ksz, ksz], seed), &[], "w");
+                cur = g.add1(
+                    OpKind::Conv2d {
+                        stride: (1, 1),
+                        pad: (pad, pad),
+                        act: Activation::None,
+                        has_bias: false,
+                        has_residual: false,
+                    },
+                    &[cur, w],
+                    &format!("conv{d}"),
+                );
+                if rng.bool() {
+                    cur = g.add1(OpKind::Relu, &[cur], "relu");
+                }
+                c = k;
+            }
+            2 => {
+                // parallel 2-branch + concat
+                let k1 = 1 + rng.below(3);
+                let k2 = 1 + rng.below(3);
+                seed += 2;
+                let w1 = g.add1(OpKind::weight(vec![k1, c, 3, 3], seed - 1), &[], "w1");
+                let w2 = g.add1(OpKind::weight(vec![k2, c, 3, 3], seed), &[], "w2");
+                let conv_attrs = OpKind::Conv2d {
+                    stride: (1, 1),
+                    pad: (1, 1),
+                    act: Activation::Relu,
+                    has_bias: false,
+                    has_residual: false,
+                };
+                let c1 = g.add1(conv_attrs.clone(), &[cur, w1], "b1");
+                let c2 = g.add1(conv_attrs, &[cur, w2], "b2");
+                cur = g.add1(OpKind::Concat { axis: 1 }, &[c1, c2], "cat");
+                c = k1 + k2;
+            }
+            _ => {
+                if cur_res >= 4 {
+                    cur = g.add1(
+                        OpKind::MaxPool { k: (2, 2), stride: (2, 2), pad: (0, 0) },
+                        &[cur],
+                        "pool",
+                    );
+                    cur_res /= 2;
+                }
+            }
+        }
+    }
+    g.outputs = vec![PortRef::of(cur)];
+    g.validate().expect("generator produced invalid graph");
+    g
+}
+
+#[test]
+fn prop_substitutions_preserve_semantics() {
+    let rules = RuleSet::standard();
+    let eng = ReferenceEngine::new();
+    let reg = AlgorithmRegistry::new();
+    check("subst_equivalence", default_cases(), |rng| {
+        let g = random_graph(rng);
+        let shape = match &g.node(NodeId(0)).op {
+            OpKind::Input { shape } => shape.clone(),
+            _ => unreachable!(),
+        };
+        let x = Tensor::rand(&shape, rng, -1.0, 1.0);
+        let a = Assignment::default_for(&g, &reg);
+        let base = eng
+            .run(&g, &a, std::slice::from_ref(&x))
+            .map_err(|e| e.to_string())?
+            .outputs
+            .remove(0);
+        for (ng, rule) in rules.neighbors(&g) {
+            let na = Assignment::default_for(&ng, &reg);
+            let out = eng
+                .run(&ng, &na, std::slice::from_ref(&x))
+                .map_err(|e| format!("{rule}: {e}"))?
+                .outputs
+                .remove(0);
+            assert_close(base.data(), out.data(), 1e-3, 1e-3)
+                .map_err(|e| format!("{rule}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hash_invariant_under_dead_nodes_and_names() {
+    check("hash_invariance", default_cases(), |rng| {
+        let g = random_graph(rng);
+        let h0 = graph_hash(&g);
+        // renames don't matter
+        let mut g2 = g.clone();
+        for id in g2.ids().collect::<Vec<_>>() {
+            g2.node_mut(id).name = format!("renamed{}", id.0);
+        }
+        if graph_hash(&g2) != h0 {
+            return Err("rename changed hash".into());
+        }
+        // dead nodes don't matter after compact
+        let mut g3 = g.clone();
+        let d = g3.add1(OpKind::weight(vec![2, 2], 999), &[], "dead");
+        let _ = g3.add1(OpKind::Relu, &[d], "dead2");
+        g3.compact();
+        if graph_hash(&g3) != h0 {
+            return Err("dead code changed hash".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_inner_d1_optimal_for_additive() {
+    check("inner_d1_optimal", 24, |rng| {
+        let g = random_graph(rng);
+        let mut ctx = OptimizerContext::offline_default();
+        let (table, _) = ctx.table_for(&g).map_err(|e| e.to_string())?;
+        let base = Assignment::default_for(&g, &ctx.reg);
+        let w = rng.f64();
+        for cf in [CostFunction::Time, CostFunction::Energy, CostFunction::linear(w)] {
+            let start = random_assignment(&table, &base, rng);
+            let greedy = inner_search(&table, &cf, 1, start.clone());
+            let Some(exact) = exhaustive_search(&table, &cf, &base, 200_000) else {
+                return Ok(()); // space too large for ground truth; skip case
+            };
+            let gv = cf.eval(&greedy.cost);
+            let ev = cf.eval(&exact.cost);
+            if (gv - ev).abs() > 1e-9 * ev.max(1.0) {
+                return Err(format!("d=1 found {gv}, exhaustive {ev} ({})", cf.describe()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_inner_d2_never_worse_than_d1() {
+    check("inner_d2_dominates", 16, |rng| {
+        let g = random_graph(rng);
+        let mut ctx = OptimizerContext::offline_default();
+        let (table, _) = ctx.table_for(&g).map_err(|e| e.to_string())?;
+        let base = Assignment::default_for(&g, &ctx.reg);
+        for cf in [CostFunction::Power, CostFunction::Product { w: 0.5 }] {
+            let start = random_assignment(&table, &base, rng);
+            let d1 = inner_search(&table, &cf, 1, start.clone());
+            let d2 = inner_search(&table, &cf, 2, start);
+            if cf.eval(&d2.cost) > cf.eval(&d1.cost) + 1e-9 {
+                return Err(format!(
+                    "d=2 ({}) worse than d=1 ({}) for {}",
+                    cf.eval(&d2.cost),
+                    cf.eval(&d1.cost),
+                    cf.describe()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_table_swap_matches_full_eval() {
+    // eval_swap (the O(1) incremental used by the inner search hot path)
+    // must agree with a full re-evaluation.
+    check("eval_swap_consistent", 24, |rng| {
+        let g = random_graph(rng);
+        let mut ctx = OptimizerContext::offline_default();
+        let (table, _) = ctx.table_for(&g).map_err(|e| e.to_string())?;
+        let base = Assignment::default_for(&g, &ctx.reg);
+        let a = random_assignment(&table, &base, rng);
+        let full = table.eval(&a);
+        for id in table.costed_ids() {
+            for &(algo, _) in table.node_options(id) {
+                let inc = table.eval_swap(full, &a, id, algo);
+                let mut a2 = a.clone();
+                a2.set(id, algo);
+                let truth = table.eval(&a2);
+                if (inc.time_ms - truth.time_ms).abs() > 1e-9 * truth.time_ms.max(1.0)
+                    || (inc.energy_j - truth.energy_j).abs() > 1e-9 * truth.energy_j.max(1.0)
+                {
+                    return Err(format!("swap mismatch at node {}", id.0));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_additive_model_sums_node_costs() {
+    // Graph cost == sum over nodes for any assignment (paper §3.2).
+    check("cost_additivity", 24, |rng| {
+        let g = random_graph(rng);
+        let mut ctx = OptimizerContext::offline_default();
+        let (table, _) = ctx.table_for(&g).map_err(|e| e.to_string())?;
+        let base = Assignment::default_for(&g, &ctx.reg);
+        let a = random_assignment(&table, &base, rng);
+        let gc = table.eval(&a);
+        let mut t = 0.0;
+        let mut e = 0.0;
+        for id in table.costed_ids() {
+            let algo = a.get(id).unwrap();
+            let (_, c) = table
+                .node_options(id)
+                .iter()
+                .find(|(x, _)| *x == algo)
+                .copied()
+                .unwrap();
+            t += c.time_ms;
+            e += c.energy_j();
+        }
+        if (gc.time_ms - t).abs() > 1e-9 * t.max(1.0) || (gc.energy_j - e).abs() > 1e-9 * e.max(1.0)
+        {
+            return Err("additivity violated".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool()),
+            2 => Json::Num((rng.f64() * 2e6 - 1e6 * rng.f64()).round() / 128.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str((0..n).map(|_| *rng.choose(&['a', 'β', '"', '\\', '\n', 'z'])).collect())
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.below(4) {
+                    o.set(&format!("k{i}"), random_json(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    check("json_roundtrip", 200, |rng| {
+        let v = random_json(rng, 3);
+        for text in [v.to_string_compact(), v.to_string_pretty()] {
+            let back = json::parse(&text).map_err(|e| e.to_string())?;
+            if back != v {
+                return Err(format!("roundtrip mismatch: {text}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compact_preserves_semantics() {
+    let eng = ReferenceEngine::new();
+    let reg = AlgorithmRegistry::new();
+    check("compact_preserves", 24, |rng| {
+        let g = random_graph(rng);
+        let shape = match &g.node(NodeId(0)).op {
+            OpKind::Input { shape } => shape.clone(),
+            _ => unreachable!(),
+        };
+        let x = Tensor::rand(&shape, rng, -1.0, 1.0);
+        let a = Assignment::default_for(&g, &reg);
+        let base = eng
+            .run(&g, &a, std::slice::from_ref(&x))
+            .map_err(|e| e.to_string())?
+            .outputs
+            .remove(0);
+        // add dead nodes then compact
+        let mut g2 = g.clone();
+        let d = g2.add1(OpKind::weight(vec![3, 3], 777), &[], "dead");
+        let _ = g2.add1(OpKind::Relu, &[d], "dead_relu");
+        g2.compact();
+        let a2 = Assignment::default_for(&g2, &reg);
+        let out = eng
+            .run(&g2, &a2, std::slice::from_ref(&x))
+            .map_err(|e| e.to_string())?
+            .outputs
+            .remove(0);
+        assert_close(base.data(), out.data(), 1e-6, 1e-6)
+    });
+}
+
+#[test]
+fn prop_table_assignment_distance_metric() {
+    // distance() is a metric: d(a,a)=0, symmetric, triangle inequality.
+    check("distance_metric", 32, |rng| {
+        let g = random_graph(rng);
+        let mut ctx = OptimizerContext::offline_default();
+        let (table, _) = ctx.table_for(&g).map_err(|e| e.to_string())?;
+        let base = Assignment::default_for(&g, &ctx.reg);
+        let a = random_assignment(&table, &base, rng);
+        let b = random_assignment(&table, &base, rng);
+        let c = random_assignment(&table, &base, rng);
+        if a.distance(&a) != 0 {
+            return Err("d(a,a) != 0".into());
+        }
+        if a.distance(&b) != b.distance(&a) {
+            return Err("not symmetric".into());
+        }
+        if a.distance(&c) > a.distance(&b) + b.distance(&c) {
+            return Err("triangle inequality violated".into());
+        }
+        Ok(())
+    });
+}
