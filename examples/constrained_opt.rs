@@ -16,9 +16,9 @@ fn main() -> anyhow::Result<()> {
 
     // Establish the two endpoints first (paper: "from Table 4 we know the
     // lower bound of inference time ... and energy").
-    let mut ctx = OptimizerContext::offline_default();
-    let fastest = optimize(&graph, &mut ctx, &CostFunction::Time, &scfg)?;
-    let thriftiest = optimize(&graph, &mut ctx, &CostFunction::Energy, &scfg)?;
+    let ctx = OptimizerContext::offline_default();
+    let fastest = optimize(&graph, &ctx, &CostFunction::Time, &scfg)?;
+    let thriftiest = optimize(&graph, &ctx, &CostFunction::Energy, &scfg)?;
     println!(
         "endpoints: fastest {} ms / {} J; thriftiest {} ms / {} J",
         f3(fastest.cost.time_ms),
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     // Budget halfway between the endpoints.
     let budget = 0.5 * (fastest.cost.time_ms + thriftiest.cost.time_ms);
     println!("\nconstraint: minimize energy s.t. time <= {} ms", f3(budget));
-    let r = optimize_with_time_budget(&graph, &mut ctx, budget, &scfg, 8)?;
+    let r = optimize_with_time_budget(&graph, &ctx, budget, &scfg, 8)?;
     assert!(r.feasible);
     println!(
         "solution at w={:.4}: time {} ms (budget {}), energy {} J/1k",
@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
 
     // An infeasible budget degrades gracefully to the best-time solution.
     let impossible = fastest.cost.time_ms * 0.5;
-    let r2 = optimize_with_time_budget(&graph, &mut ctx, impossible, &scfg, 4)?;
+    let r2 = optimize_with_time_budget(&graph, &ctx, impossible, &scfg, 4)?;
     println!(
         "\ninfeasible budget {} ms -> feasible={} (falls back to best-time: {} ms)",
         f3(impossible),

@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
         graph.runtime_node_count()
     );
 
-    let mut ctx = OptimizerContext::new(
+    let ctx = OptimizerContext::new(
         eadgo::subst::RuleSet::standard(),
         eadgo::cost::CostDb::new(),
         Box::new(CpuProvider::new(None)),
@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     println!("[2/4] profiling every (node, algorithm) pair with real wallclock...");
     let res = optimize(
         &graph,
-        &mut ctx,
+        &ctx,
         &CostFunction::Energy,
         &SearchConfig { max_dequeues: 30, ..Default::default() },
     )?;
@@ -71,7 +71,7 @@ fn main() -> anyhow::Result<()> {
     // --- serve -------------------------------------------------------------
     let engine = PjrtEngine::new(&rt);
     let reference = ReferenceEngine::new();
-    let default_a = Assignment::default_for(&graph, &ctx.reg);
+    let default_a = Assignment::default_for(&graph, ctx.reg());
     let mut rng = Rng::seed_from(2026);
 
     let mut run_batch = |label: &str, g: &eadgo::graph::Graph, a: &Assignment| -> anyhow::Result<Summary> {

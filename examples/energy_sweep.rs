@@ -24,8 +24,8 @@ fn main() -> anyhow::Result<()> {
     );
     let mut rows = Vec::new();
     for we in [0.0, 0.2, 0.4, 0.6, 0.8, 1.0] {
-        let mut ctx = OptimizerContext::offline_default();
-        let res = optimize(&graph, &mut ctx, &CostFunction::linear(we), &scfg)?;
+        let ctx = OptimizerContext::offline_default();
+        let res = optimize(&graph, &ctx, &CostFunction::linear(we), &scfg)?;
         rows.push((we, res.cost));
         eprintln!("  w={we:.1} done ({} graphs expanded)", res.stats.expanded);
     }

@@ -14,13 +14,17 @@ fn main() -> anyhow::Result<()> {
     let graph = models::squeezenet::build(cfg);
     println!("SqueezeNet: {} nodes ({} runtime)", graph.len(), graph.runtime_node_count());
 
-    // 2. An optimizer context: algorithm registry + substitution rules +
-    //    cost database + the simulated-V100 measurement provider.
-    let mut ctx = OptimizerContext::offline_default();
+    // 2. An optimizer context: substitution rules + a shared thread-safe
+    //    cost oracle (algorithm registry, cost database, simulated-V100
+    //    measurement provider).
+    let ctx = OptimizerContext::offline_default();
 
-    // 3. Pick an objective (paper §3.2) and search (paper §3.3).
+    // 3. Pick an objective (paper §3.2) and search (paper §3.3). With
+    //    threads: 0 the outer search evaluates candidates on one worker
+    //    per core; the plan is bit-identical to a sequential run.
     let objective = CostFunction::Energy;
-    let result = optimize(&graph, &mut ctx, &objective, &SearchConfig::default())?;
+    let scfg = SearchConfig { threads: 0, ..Default::default() };
+    let result = optimize(&graph, &ctx, &objective, &scfg)?;
 
     println!("\n              time(ms)  power(W)  energy(J/1k inf)");
     println!(
@@ -41,8 +45,13 @@ fn main() -> anyhow::Result<()> {
         -100.0 * result.time_savings()
     );
     println!(
-        "search: expanded {} graphs, generated {}, deduped {}, {:.2}s",
-        result.stats.expanded, result.stats.generated, result.stats.deduped, result.stats.wall_s
+        "search: expanded {} graphs in {} waves ({} threads), generated {}, deduped {}, {:.2}s",
+        result.stats.expanded,
+        result.stats.waves,
+        result.stats.threads,
+        result.stats.generated,
+        result.stats.deduped,
+        result.stats.wall_s
     );
 
     // 4. The optimized graph + assignment are ready for the engine:

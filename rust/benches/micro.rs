@@ -33,10 +33,10 @@ fn main() {
     suite.run("subst_neighbors/squeezenet", || black_box(rules.neighbors(&squeezenet).len()));
     suite.run("subst_neighbors/resnet", || black_box(rules.neighbors(&resnet).len()));
 
-    // Cost table + inner search.
-    let mut ctx = OptimizerContext::offline_default();
+    // Cost table + inner search (through the shared cost oracle).
+    let ctx = OptimizerContext::offline_default();
     let (table, _) = ctx.table_for(&squeezenet).unwrap();
-    let base = Assignment::default_for(&squeezenet, &ctx.reg);
+    let base = Assignment::default_for(&squeezenet, ctx.reg());
     suite.run("cost_table_build/squeezenet", || {
         black_box(ctx.table_for(&squeezenet).unwrap().0)
     });

@@ -15,6 +15,10 @@ pub struct RunConfig {
     pub alpha: f64,
     pub inner_distance: Option<usize>,
     pub max_dequeues: usize,
+    /// Search worker threads (1 = sequential, 0 = one per core). With a
+    /// deterministic provider (sim) the optimized plan is identical for
+    /// every value; only wall-clock moves.
+    pub threads: usize,
     pub seed: u64,
     pub model_cfg: ModelConfig,
     /// Profile database path (loaded if present, saved after runs).
@@ -33,6 +37,7 @@ impl Default for RunConfig {
             alpha: 1.05,
             inner_distance: None,
             max_dequeues: 400,
+            threads: 1,
             seed: 7,
             model_cfg: ModelConfig::default(),
             db_path: PathBuf::from("profiles.json"),
@@ -54,6 +59,7 @@ impl RunConfig {
             alpha: self.alpha,
             inner_distance: self.inner_distance,
             max_dequeues: self.max_dequeues,
+            threads: self.threads,
             ..Default::default()
         }
     }
@@ -76,6 +82,9 @@ impl RunConfig {
         }
         if let Some(x) = v.get("max_dequeues").and_then(Json::as_usize) {
             cfg.max_dequeues = x;
+        }
+        if let Some(x) = v.get("threads").and_then(Json::as_usize) {
+            cfg.threads = x;
         }
         if let Some(x) = v.get("seed").and_then(Json::as_f64) {
             cfg.seed = x as u64;
@@ -116,6 +125,7 @@ impl RunConfig {
         }
         self.alpha = args.get_f64("alpha", self.alpha)?;
         self.max_dequeues = args.get_usize("max-dequeues", self.max_dequeues)?;
+        self.threads = args.get_usize("threads", self.threads)?;
         self.seed = args.get_f64("seed", self.seed as f64)? as u64;
         if let Some(d) = args.get("inner-distance") {
             self.inner_distance = Some(
@@ -210,7 +220,7 @@ mod tests {
     fn cli_overrides() {
         let mut cfg = RunConfig::default();
         let args = crate::util::cli::Args::parse(
-            &["optimize", "--model", "inception", "--alpha", "1.2", "--objective", "time"]
+            &["optimize", "--model", "inception", "--alpha", "1.2", "--objective", "time", "--threads", "4"]
                 .iter()
                 .map(|s| s.to_string())
                 .collect::<Vec<_>>(),
@@ -220,5 +230,6 @@ mod tests {
         assert_eq!(cfg.model, "inception");
         assert_eq!(cfg.alpha, 1.2);
         assert_eq!(cfg.objective, "time");
+        assert_eq!(cfg.threads, 4);
     }
 }

@@ -12,8 +12,10 @@
 //! database and persisted onto disk for future lookup."
 
 pub mod db;
+pub mod oracle;
 
 pub use db::CostDb;
+pub use oracle::{CostOracle, SigId, SigInterner};
 
 use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};
 use crate::graph::{Graph, NodeId};
@@ -158,16 +160,27 @@ impl CostFunction {
 /// applicable algorithm, resolved once from the database. This is the inner
 /// search's working set — after `build`, cost evaluation never touches the
 /// DB or the graph again (hot-path optimization, see EXPERIMENTS.md §Perf).
+///
+/// Entries are `Arc`-shared with the [`CostOracle`] resolve cache, so a
+/// cache hit during candidate evaluation is a pointer bump, not a copy of
+/// the options vector.
 #[derive(Debug, Clone)]
 pub struct GraphCostTable {
     /// entries[node] = applicable (algorithm, cost); empty for zero-cost nodes.
-    entries: Vec<Vec<(Algorithm, NodeCost)>>,
+    entries: Vec<std::sync::Arc<Vec<(Algorithm, NodeCost)>>>,
 }
 
 impl GraphCostTable {
-    /// Assemble from pre-resolved per-node entries (the optimizer's fused
-    /// profile+resolve path).
+    /// Assemble from pre-resolved per-node entries.
     pub fn from_entries(entries: Vec<Vec<(Algorithm, NodeCost)>>) -> GraphCostTable {
+        GraphCostTable { entries: entries.into_iter().map(std::sync::Arc::new).collect() }
+    }
+
+    /// Assemble from already-shared per-node entries (the cost oracle's
+    /// zero-copy path: nodes reference the resolve cache's own vectors).
+    pub fn from_shared(
+        entries: Vec<std::sync::Arc<Vec<(Algorithm, NodeCost)>>>,
+    ) -> GraphCostTable {
         GraphCostTable { entries }
     }
 
@@ -205,7 +218,7 @@ impl GraphCostTable {
                 entries[id.0].push((algo, cost));
             }
         }
-        Ok(GraphCostTable { entries })
+        Ok(GraphCostTable::from_entries(entries))
     }
 
     /// Additive cost of the graph under `a` (paper's cost model).

@@ -1,0 +1,391 @@
+//! The **cost oracle**: a concurrency-safe evaluation service answering
+//! "what does this node cost under each applicable algorithm?" for the
+//! search layers.
+//!
+//! This is the thread-safe half of what used to be the monolithic
+//! `OptimizerContext`: the profile database, the signature→options resolve
+//! cache, and the measurement provider, all behind interior mutability so
+//! the outer search can evaluate candidate graphs from many threads
+//! through a shared `&CostOracle`.
+//!
+//! Design:
+//! - Node signatures are **interned** (`String` → [`SigId`], a dense
+//!   `u32`) by a [`SigInterner`]. Candidate graphs within one search share
+//!   almost all signatures, so the hot path hashes a small integer instead
+//!   of re-hashing 60–120 byte strings.
+//! - The resolve cache (signature → `Arc<[(Algorithm, NodeCost)]>` options)
+//!   is **sharded** across `SHARDS` `RwLock`ed maps keyed by `SigId`, so
+//!   concurrent table builds contend only when two threads miss on
+//!   signatures in the same shard at the same time.
+//! - On a miss the owning shard's write lock is held across the measure,
+//!   which guarantees each `(signature, algorithm)` pair is measured
+//!   **exactly once** no matter how many threads race to it — the paper's
+//!   "nodes with the same parameters only need to be measured once"
+//!   invariant, now under parallelism.
+//! - The persistent [`CostDb`] sits behind a `Mutex` and is only touched
+//!   on resolve misses (first run) — steady-state lookups never reach it.
+
+use super::{CostDb, GraphCostTable, NodeCost};
+use crate::algo::{Algorithm, AlgorithmRegistry};
+use crate::graph::{Graph, OpKind, TensorShape};
+use crate::profiler::{CostProvider, ProfileReport};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Interned node-signature id. Dense, starting at 0, stable for the
+/// lifetime of the interner that issued it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SigId(pub u32);
+
+#[derive(Default)]
+struct InternerInner {
+    ids: HashMap<String, SigId>,
+    names: Vec<String>,
+}
+
+/// Thread-safe signature interner (`String` → [`SigId`]).
+#[derive(Default)]
+pub struct SigInterner {
+    inner: RwLock<InternerInner>,
+}
+
+impl SigInterner {
+    /// Intern `sig`, returning its stable id (read-lock fast path).
+    pub fn intern(&self, sig: &str) -> SigId {
+        if let Some(&id) = self.inner.read().unwrap().ids.get(sig) {
+            return id;
+        }
+        let mut w = self.inner.write().unwrap();
+        if let Some(&id) = w.ids.get(sig) {
+            return id;
+        }
+        let id = SigId(w.names.len() as u32);
+        w.names.push(sig.to_string());
+        w.ids.insert(sig.to_string(), id);
+        id
+    }
+
+    /// The string a [`SigId`] was interned from (diagnostics path).
+    pub fn resolve(&self, id: SigId) -> Option<String> {
+        self.inner.read().unwrap().names.get(id.0 as usize).cloned()
+    }
+
+    /// Number of distinct signatures interned so far.
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Resolve-cache shard count. A small power of two: enough to keep 8–16
+/// worker threads off each other's locks, small enough to stay cheap.
+const SHARDS: usize = 16;
+
+type ResolveShard = RwLock<HashMap<SigId, Arc<Vec<(Algorithm, NodeCost)>>>>;
+
+/// The thread-safe cost-evaluation layer shared by every search worker
+/// (and, downstream, the serving path). See the module docs for the
+/// locking design.
+pub struct CostOracle {
+    reg: AlgorithmRegistry,
+    interner: SigInterner,
+    shards: Vec<ResolveShard>,
+    db: Mutex<CostDb>,
+    provider: Box<dyn CostProvider>,
+    provider_name: String,
+    /// Total (signature, algorithm) pairs measured through this oracle.
+    profiled: AtomicU64,
+}
+
+impl CostOracle {
+    pub fn new(reg: AlgorithmRegistry, db: CostDb, provider: Box<dyn CostProvider>) -> CostOracle {
+        let provider_name = provider.provider_name();
+        CostOracle {
+            reg,
+            interner: SigInterner::default(),
+            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            db: Mutex::new(db),
+            provider,
+            provider_name,
+            profiled: AtomicU64::new(0),
+        }
+    }
+
+    /// Default oracle: simulated-V100 profiles (seed 7), empty database.
+    pub fn offline_default() -> CostOracle {
+        CostOracle::new(
+            AlgorithmRegistry::new(),
+            CostDb::new(),
+            Box::new(crate::profiler::SimV100Provider::new(7)),
+        )
+    }
+
+    /// The algorithm registry ("which algorithms can run this node?").
+    pub fn reg(&self) -> &AlgorithmRegistry {
+        &self.reg
+    }
+
+    /// The signature interner (exposed for stats and tests).
+    pub fn interner(&self) -> &SigInterner {
+        &self.interner
+    }
+
+    pub fn provider_name(&self) -> &str {
+        &self.provider_name
+    }
+
+    /// Total measurements performed through this oracle since creation.
+    pub fn profiled_total(&self) -> u64 {
+        self.profiled.load(Ordering::Relaxed)
+    }
+
+    /// Run `f` against the (locked) profile database.
+    pub fn with_db<R>(&self, f: impl FnOnce(&CostDb) -> R) -> R {
+        f(&self.db.lock().unwrap())
+    }
+
+    pub fn db_entries(&self) -> usize {
+        self.with_db(|db| db.num_entries())
+    }
+
+    pub fn db_signatures(&self) -> usize {
+        self.with_db(|db| db.num_signatures())
+    }
+
+    /// Persist the profile database (the paper's on-disk cache).
+    pub fn save_db(&self, path: &Path) -> anyhow::Result<()> {
+        self.db.lock().unwrap().save(path)
+    }
+
+    fn shard(&self, id: SigId) -> &ResolveShard {
+        &self.shards[id.0 as usize % SHARDS]
+    }
+
+    /// Resolve one node signature to its (algorithm, cost) options,
+    /// measuring through the provider on a true miss. Returns the options
+    /// and how many pairs were newly measured.
+    fn resolve(
+        &self,
+        sig: &str,
+        op: &OpKind,
+        in_shapes: &[TensorShape],
+        out_shapes: &[TensorShape],
+    ) -> (Arc<Vec<(Algorithm, NodeCost)>>, usize) {
+        let id = self.interner.intern(sig);
+        let shard = self.shard(id);
+        if let Some(v) = shard.read().unwrap().get(&id) {
+            return (v.clone(), 0);
+        }
+        // Miss: fill under the shard write lock so racing threads cannot
+        // measure the same signature twice (the loser blocks, re-checks,
+        // and takes the winner's entry).
+        let mut w = shard.write().unwrap();
+        if let Some(v) = w.get(&id) {
+            return (v.clone(), 0);
+        }
+        let mut options = Vec::new();
+        let mut measured = 0usize;
+        for algo in self.reg.applicable(op, in_shapes) {
+            let cached = self.db.lock().unwrap().get(sig, algo);
+            let cost = match cached {
+                Some(c) => c,
+                None => {
+                    let c = self.provider.measure(sig, op, in_shapes, out_shapes, algo);
+                    self.db.lock().unwrap().insert(sig, algo, c, &self.provider_name);
+                    measured += 1;
+                    c
+                }
+            };
+            options.push((algo, cost));
+        }
+        if measured > 0 {
+            self.profiled.fetch_add(measured as u64, Ordering::Relaxed);
+        }
+        let arc = Arc::new(options);
+        w.insert(id, arc.clone());
+        (arc, measured)
+    }
+
+    /// Profile `g` as needed and build its cost table. Shape inference is
+    /// the only fallible step (it doubles as candidate validation).
+    pub fn table_for(&self, g: &Graph) -> anyhow::Result<(GraphCostTable, usize)> {
+        let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
+        Ok(self.table_for_with(g, &shapes))
+    }
+
+    /// As [`CostOracle::table_for`] with pre-computed shapes (search hot
+    /// path: one inference per candidate, reused everywhere).
+    pub fn table_for_with(
+        &self,
+        g: &Graph,
+        shapes: &[Vec<TensorShape>],
+    ) -> (GraphCostTable, usize) {
+        // Zero-copy on cache hits: table entries share the resolve cache's
+        // own Arc'd vectors (one shared empty vec for zero-cost nodes).
+        let empty: Arc<Vec<(Algorithm, NodeCost)>> = Arc::new(Vec::new());
+        let mut entries = vec![empty; g.len()];
+        let mut measured = 0usize;
+        visit_costed_nodes(g, shapes, |id, node, in_shapes, sig| {
+            let (options, m) = self.resolve(sig, &node.op, in_shapes, &shapes[id.0]);
+            measured += m;
+            entries[id.0] = options;
+        });
+        (GraphCostTable::from_shared(entries), measured)
+    }
+
+    /// Ensure every (signature, algorithm) pair of `g` is profiled — the
+    /// `eadgo profile` subcommand's path through the oracle.
+    pub fn profile_graph(&self, g: &Graph) -> anyhow::Result<ProfileReport> {
+        let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
+        let mut report = ProfileReport::default();
+        visit_costed_nodes(g, &shapes, |id, node, in_shapes, sig| {
+            let (options, m) = self.resolve(sig, &node.op, in_shapes, &shapes[id.0]);
+            report.measured += m;
+            report.cached += options.len() - m;
+        });
+        Ok(report)
+    }
+
+    /// Price `(g, a)` from **already-available** profiles only (the DB,
+    /// which backs every resolve) — never triggers a measurement. Returns
+    /// `Ok(None)` when any assigned pair is unprofiled. This is the cheap
+    /// path for annotating a served plan: free when the oracle is warm
+    /// (after an optimize run or a loaded DB), a no-op when it is cold.
+    pub fn cached_cost(
+        &self,
+        g: &Graph,
+        a: &crate::algo::Assignment,
+    ) -> anyhow::Result<Option<super::GraphCost>> {
+        let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
+        let db = self.db.lock().unwrap();
+        let mut total = super::GraphCost::default();
+        let mut complete = true;
+        visit_costed_nodes(g, &shapes, |id, _node, _in_shapes, sig| {
+            if !complete {
+                return;
+            }
+            // A runtime node missing from the assignment means the plan
+            // does not match this graph — the estimate would silently
+            // undercount, so report it as unavailable instead.
+            let Some(algo) = a.get(id) else {
+                complete = false;
+                return;
+            };
+            match db.get(sig, algo) {
+                Some(c) => total = total.add(&c),
+                None => complete = false,
+            }
+        });
+        Ok(complete.then_some(total))
+    }
+}
+
+/// Shared iteration over the cost-bearing (runtime) nodes of a graph:
+/// skips constant-space and input nodes, gathers input shapes, builds the
+/// signature into a reused scratch buffer, and hands everything to `f`.
+/// Single home for the skip rules so the table builder, the profiler path,
+/// and the plan pricer cannot drift apart.
+fn visit_costed_nodes<F>(g: &Graph, shapes: &[Vec<TensorShape>], mut f: F)
+where
+    F: FnMut(crate::graph::NodeId, &crate::graph::Node, &[TensorShape], &str),
+{
+    let mut sig = String::with_capacity(96);
+    let mut in_shapes: Vec<TensorShape> = Vec::new();
+    for (id, node) in g.nodes() {
+        if node.op.is_constant_space() || matches!(node.op, OpKind::Input { .. }) {
+            continue;
+        }
+        in_shapes.clear();
+        in_shapes.extend(node.inputs.iter().map(|p| shapes[p.node.0][p.port].clone()));
+        sig.clear();
+        node.op.signature_into(&in_shapes, &mut sig);
+        f(id, node, &in_shapes, &sig);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, PortRef};
+
+    fn conv_graph() -> Graph {
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+        let w = g.add1(OpKind::weight(vec![4, 3, 3, 3], 1), &[], "w");
+        let c = g.add1(
+            OpKind::Conv2d {
+                stride: (1, 1),
+                pad: (1, 1),
+                act: Activation::Relu,
+                has_bias: false,
+                has_residual: false,
+            },
+            &[x, w],
+            "c",
+        );
+        g.outputs = vec![PortRef::of(c)];
+        g
+    }
+
+    #[test]
+    fn interner_is_stable_and_dedups() {
+        let i = SigInterner::default();
+        let a = i.intern("conv2d;x");
+        let b = i.intern("relu;y");
+        assert_ne!(a, b);
+        assert_eq!(i.intern("conv2d;x"), a);
+        assert_eq!(i.len(), 2);
+        assert_eq!(i.resolve(a).as_deref(), Some("conv2d;x"));
+        assert_eq!(i.resolve(SigId(99)), None);
+    }
+
+    #[test]
+    fn oracle_measures_each_signature_once() {
+        let oracle = CostOracle::offline_default();
+        let g = conv_graph();
+        let (_, m1) = oracle.table_for(&g).unwrap();
+        assert!(m1 > 0);
+        let (_, m2) = oracle.table_for(&g).unwrap();
+        assert_eq!(m2, 0, "second build must be fully cached");
+        assert_eq!(oracle.profiled_total(), m1 as u64);
+        assert!(oracle.db_entries() >= m1);
+    }
+
+    #[test]
+    fn concurrent_table_builds_agree_and_measure_once() {
+        let oracle = CostOracle::offline_default();
+        let g = conv_graph();
+        let tables: Vec<GraphCostTable> = std::thread::scope(|s| {
+            let handles: Vec<_> =
+                (0..8).map(|_| s.spawn(|| oracle.table_for(&g).unwrap().0)).collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let a = crate::algo::Assignment::default_for(&g, oracle.reg());
+        let costs: Vec<_> = tables.iter().map(|t| t.eval(&a)).collect();
+        for c in &costs[1..] {
+            assert_eq!(*c, costs[0], "racing builds must agree bit-for-bit");
+        }
+        // The conv signature resolves once no matter how many threads race.
+        let (_, again) = oracle.table_for(&g).unwrap();
+        assert_eq!(again, 0);
+        let single = CostOracle::offline_default();
+        let (_, expect) = single.table_for(&g).unwrap();
+        assert_eq!(oracle.profiled_total(), expect as u64);
+    }
+
+    #[test]
+    fn profile_graph_reports_warm_cache() {
+        let oracle = CostOracle::offline_default();
+        let g = conv_graph();
+        let r1 = oracle.profile_graph(&g).unwrap();
+        assert!(r1.measured > 0);
+        let r2 = oracle.profile_graph(&g).unwrap();
+        assert_eq!(r2.measured, 0);
+        assert_eq!(r1.measured + r1.cached, r2.cached);
+    }
+}

@@ -432,6 +432,15 @@ impl OpKind {
     /// "nodes with the same parameters only need to be measured once".
     pub fn signature(&self, input_shapes: &[Vec<usize>]) -> String {
         let mut s = String::with_capacity(64);
+        self.signature_into(input_shapes, &mut s);
+        s
+    }
+
+    /// As [`OpKind::signature`], appending into a caller-provided buffer.
+    /// The cost oracle's table builder reuses one scratch buffer per graph
+    /// and interns the result, so the hot path allocates no signature
+    /// strings after warmup.
+    pub fn signature_into(&self, input_shapes: &[Vec<usize>], s: &mut String) {
         s.push_str(self.mnemonic());
         match self {
             OpKind::Conv2d { stride, pad, act, has_bias, has_residual } => {
@@ -473,7 +482,6 @@ impl OpKind {
                 s.push_str(&d.to_string());
             }
         }
-        s
     }
 }
 

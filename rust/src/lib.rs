@@ -22,10 +22,17 @@
 //! ```no_run
 //! use eadgo::prelude::*;
 //! let g = eadgo::models::squeezenet::build(Default::default());
-//! let mut ctx = OptimizerContext::offline_default();
+//! // Rules + a shared, thread-safe cost oracle (registry, profile DB,
+//! // resolve cache, measurement provider).
+//! let ctx = OptimizerContext::offline_default();
 //! let objective = CostFunction::linear(0.5); // 0.5*energy + 0.5*time
-//! let result = optimize(&g, &mut ctx, &objective, &SearchConfig::default()).unwrap();
+//! // threads: 8 evaluates search candidates in parallel; with the
+//! // deterministic sim provider the returned plan is bit-identical to a
+//! // sequential run.
+//! let cfg = SearchConfig { threads: 8, ..Default::default() };
+//! let result = optimize(&g, &ctx, &objective, &cfg).unwrap();
 //! println!("energy saved: {:.1}%", 100.0 * result.energy_savings());
+//! println!("search took {:.2}s over {} waves", result.stats.wall_s, result.stats.waves);
 //! ```
 
 pub mod algo;
@@ -47,7 +54,9 @@ pub mod util;
 /// Convenient re-exports of the public API surface.
 pub mod prelude {
     pub use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};
-    pub use crate::cost::{CostDb, CostFunction, GraphCost, GraphCostTable, NodeCost};
+    pub use crate::cost::{
+        CostDb, CostFunction, CostOracle, GraphCost, GraphCostTable, NodeCost, SigId,
+    };
     pub use crate::energysim::{EnergyModel, GpuSpec};
     pub use crate::graph::{Graph, Node, OpKind, TensorShape};
     pub use crate::search::{optimize, OptimizeResult, OptimizerContext, SearchConfig};

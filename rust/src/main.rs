@@ -62,18 +62,24 @@ USAGE: eadgo <subcommand> [--options]
 
   optimize  --model M --objective (time|energy|power|linear:W|power_energy:W)
             [--alpha 1.05] [--inner-distance D] [--max-dequeues N]
-            [--db profiles.json] [--provider sim|cpu] [--config run.json]
+            [--threads T] [--db profiles.json] [--provider sim|cpu]
+            [--config run.json]
   reproduce --table (1|2|3|4|5|all) [--quick] [--seed S]
   profile   --model M [--provider sim|cpu] [--db profiles.json]
-  constrain --model M --time-budget MS [--probes 8]
+  constrain --model M --time-budget MS [--probes 8] [--threads T]
   run       --model M [--artifacts DIR] [--iters N]
-  serve     --model M [--plan plan.json] [--requests N] [--batch-max B]
-            [--rate HZ] [--artifacts DIR]
+  serve     --model M [--plan plan.json] [--optimize [OBJ]] [--requests N]
+            [--batch-max B] [--rate HZ] [--artifacts DIR] [--threads T]
   show      --model M
   zoo
 
-  optimize accepts --save-plan out.json to persist the optimized
-  (graph, assignment); run/serve accept --plan to load it back.
+  --threads T parallelizes candidate evaluation in the outer search
+  (T=0 means one worker per core); with the deterministic sim provider
+  the optimized plan is bit-identical for every T (cpu measurements are
+  noisy by nature). optimize accepts --save-plan out.json to persist the
+  optimized (graph, assignment); run/serve accept --plan to load it
+  back. serve --optimize runs the optimizer first and serves the
+  result, sharing one warm cost oracle across optimize and serve.
 ";
 
 fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
@@ -104,16 +110,18 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let g0 = get_model(&cfg)?;
     let objective = cfg.cost_function()?;
-    let mut ctx = build_context(&cfg)?;
+    let ctx = build_context(&cfg)?;
+    let scfg = cfg.search_config();
     println!(
-        "optimizing {} ({} nodes) for {} (alpha={}, provider={})",
+        "optimizing {} ({} nodes) for {} (alpha={}, provider={}, threads={})",
         cfg.model,
         g0.runtime_node_count(),
         objective.describe(),
         cfg.alpha,
-        cfg.provider
+        cfg.provider,
+        scfg.effective_threads()
     );
-    let res = optimize(&g0, &mut ctx, &objective, &cfg.search_config())?;
+    let res = optimize(&g0, &ctx, &objective, &scfg)?;
     println!(
         "origin:    time {} ms  power {} W  energy {} J/1k",
         f3(res.original.time_ms),
@@ -133,11 +141,13 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         -100.0 * res.time_savings(),
     );
     println!(
-        "search: {} graphs expanded, {} generated, {} deduped, {} profiles measured, {:.2}s",
+        "search: {} graphs expanded in {} waves, {} generated, {} deduped, {} profiles measured, {} threads, {:.2}s",
         res.stats.expanded,
+        res.stats.waves,
         res.stats.generated,
         res.stats.deduped,
         res.stats.profiled,
+        res.stats.threads,
         res.stats.wall_s
     );
     if !res.stats.rules_applied.is_empty() {
@@ -150,8 +160,12 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         eadgo::graph::serde::save_plan(std::path::Path::new(path), &res.graph, &res.assignment)?;
         println!("optimized plan saved to {path}");
     }
-    ctx.db.save(&cfg.db_path)?;
-    println!("profile db saved to {} ({} entries)", cfg.db_path.display(), ctx.db.num_entries());
+    ctx.oracle.save_db(&cfg.db_path)?;
+    println!(
+        "profile db saved to {} ({} entries)",
+        cfg.db_path.display(),
+        ctx.oracle.db_entries()
+    );
     Ok(())
 }
 
@@ -187,17 +201,17 @@ fn cmd_reproduce(args: &Args) -> anyhow::Result<()> {
 fn cmd_profile(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let g = get_model(&cfg)?;
-    let mut ctx = build_context(&cfg)?;
-    let rep = eadgo::profiler::ensure_profiled(&g, &ctx.reg, &mut ctx.db, ctx.provider.as_mut())?;
+    let ctx = build_context(&cfg)?;
+    let rep = ctx.oracle.profile_graph(&g)?;
     println!(
         "profiled {}: {} new measurements, {} cached, db now {} entries / {} signatures",
         cfg.model,
         rep.measured,
         rep.cached,
-        ctx.db.num_entries(),
-        ctx.db.num_signatures()
+        ctx.oracle.db_entries(),
+        ctx.oracle.db_signatures()
     );
-    ctx.db.save(&cfg.db_path)?;
+    ctx.oracle.save_db(&cfg.db_path)?;
     println!("saved {}", cfg.db_path.display());
     Ok(())
 }
@@ -208,8 +222,8 @@ fn cmd_constrain(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(budget.is_finite(), "--time-budget MS is required");
     let probes = args.get_usize("probes", 8)?;
     let g0 = get_model(&cfg)?;
-    let mut ctx = build_context(&cfg)?;
-    let r = optimize_with_time_budget(&g0, &mut ctx, budget, &cfg.search_config(), probes)?;
+    let ctx = build_context(&cfg)?;
+    let r = optimize_with_time_budget(&g0, &ctx, budget, &cfg.search_config(), probes)?;
     if !r.feasible {
         println!(
             "infeasible: best achievable time {} ms > budget {} ms (returning best-time solution)",
@@ -291,9 +305,36 @@ fn cmd_show(args: &Args) -> anyhow::Result<()> {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let reg = eadgo::algo::AlgorithmRegistry::new();
-    // Either a persisted optimized plan or a zoo model w/ default assignment.
+    // One context for the whole subcommand: when `--optimize` is set, the
+    // optimizer warms the oracle and the serving path reuses it — no
+    // re-profiling between optimize and serve.
+    let ctx = build_context(&cfg)?;
+    // Either a persisted optimized plan, an inline optimization, or a zoo
+    // model w/ default assignment.
     let (g, a) = match args.get("plan") {
         Some(path) => eadgo::graph::serde::load_plan(std::path::Path::new(path), &reg)?,
+        None if args.flag("optimize") || args.get("optimize").is_some() => {
+            let g0 = get_model(&cfg)?;
+            // `--optimize` uses the configured --objective; `--optimize OBJ`
+            // names the objective inline.
+            let objective = match args.get("optimize") {
+                Some(spec) => eadgo::config::parse_objective(spec)?,
+                None => cfg.cost_function()?,
+            };
+            println!(
+                "optimizing {} for {} before serving (threads={})",
+                cfg.model,
+                objective.describe(),
+                cfg.search_config().effective_threads()
+            );
+            let res = optimize(&g0, &ctx, &objective, &cfg.search_config())?;
+            println!(
+                "optimized: energy {:+.1}%, time {:+.1}% vs origin",
+                -100.0 * res.energy_savings(),
+                -100.0 * res.time_savings()
+            );
+            (res.graph, res.assignment)
+        }
         None => {
             let g = get_model(&cfg)?;
             let a = Assignment::default_for(&g, &reg);
@@ -324,7 +365,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         println!("serving via PJRT-hybrid engine ({n} artifacts)");
         let engine = eadgo::engine::pjrt::PjrtEngine::new(&rt);
         let prepared = engine.prepare(&g, &a)?;
-        eadgo::serve::serve(&scfg, |batch| {
+        eadgo::serve::serve_plan(&scfg, &ctx.oracle, &g, &a, |batch| {
             let mut outs = Vec::with_capacity(batch.len());
             for x in batch {
                 let (o, _) = engine.run_prepared(&g, &a, &prepared, std::slice::from_ref(x))?;
@@ -336,7 +377,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         println!("serving via reference engine (no artifacts at {})", manifest_path.display());
         let engine = eadgo::engine::ReferenceEngine::new();
         let plan = engine.plan(&g, &a)?;
-        eadgo::serve::serve(&scfg, |batch| {
+        eadgo::serve::serve_plan(&scfg, &ctx.oracle, &g, &a, |batch| {
             let mut outs = Vec::with_capacity(batch.len());
             for x in batch {
                 let o = engine.run_plan(&g, &a, &plan, std::slice::from_ref(x))?;
@@ -361,5 +402,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         report.throughput_rps(),
         report.busy_s
     );
+    if let Some(est) = report.plan_cost {
+        println!(
+            "oracle estimate for served plan: time {} ms  power {} W  energy {} J/1k",
+            f3(est.time_ms),
+            f3(est.power_w()),
+            f3(est.energy_j)
+        );
+    }
     Ok(())
 }

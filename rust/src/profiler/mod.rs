@@ -26,10 +26,14 @@ use crate::util::stats;
 use std::time::Instant;
 
 /// Anything that can produce a (time, power) profile for one node+algorithm.
-pub trait CostProvider {
+///
+/// Providers are shared by the parallel search workers through the
+/// [`crate::cost::CostOracle`], so they take `&self` (interior mutability
+/// for any internal state) and must be `Send + Sync`.
+pub trait CostProvider: Send + Sync {
     fn provider_name(&self) -> String;
     fn measure(
-        &mut self,
+        &self,
         sig: &str,
         op: &OpKind,
         in_shapes: &[TensorShape],
@@ -55,7 +59,7 @@ impl CostProvider for SimV100Provider {
     }
 
     fn measure(
-        &mut self,
+        &self,
         sig: &str,
         op: &OpKind,
         in_shapes: &[TensorShape],
@@ -76,7 +80,9 @@ pub struct CpuProvider<'rt> {
     pub power_model: EnergyModel,
     /// Measurement budget per (node, algorithm), seconds.
     pub budget_s: f64,
-    rng: Rng,
+    /// Input-synthesis RNG, behind a mutex: `measure` takes `&self` so the
+    /// provider can be shared by parallel search workers.
+    rng: std::sync::Mutex<Rng>,
 }
 
 impl<'rt> CpuProvider<'rt> {
@@ -89,7 +95,7 @@ impl<'rt> CpuProvider<'rt> {
                 noise: 0.0,
             },
             budget_s: 0.05,
-            rng: Rng::seed_from(0xC0FFEE),
+            rng: std::sync::Mutex::new(Rng::seed_from(0xC0FFEE)),
         }
     }
 
@@ -111,18 +117,18 @@ impl CostProvider for CpuProvider<'_> {
     }
 
     fn measure(
-        &mut self,
+        &self,
         sig: &str,
         op: &OpKind,
         in_shapes: &[TensorShape],
         out_shapes: &[TensorShape],
         algo: Algorithm,
     ) -> NodeCost {
-        // Synthesize inputs.
-        let inputs: Vec<Tensor> = in_shapes
-            .iter()
-            .map(|s| Tensor::rand(s, &mut self.rng, -1.0, 1.0))
-            .collect();
+        // Synthesize inputs (RNG locked only for synthesis, not timing).
+        let inputs: Vec<Tensor> = {
+            let mut rng = self.rng.lock().unwrap();
+            in_shapes.iter().map(|s| Tensor::rand(s, &mut rng, -1.0, 1.0)).collect()
+        };
         let input_refs: Vec<&Tensor> = inputs.iter().collect();
         let key = PjrtEngine::node_key(sig, algo);
         let use_pjrt = self.runtime.map(|rt| rt.has(&key)).unwrap_or(false);
@@ -169,11 +175,15 @@ pub struct ProfileReport {
 
 /// Ensure the database has a profile for every (signature, algorithm) pair
 /// appearing in `g`. Nodes with identical signatures are measured once.
+///
+/// Standalone (db + provider, no cache) variant for callers that do not
+/// hold a [`crate::cost::CostOracle`]; the optimizer and CLI go through
+/// [`crate::cost::CostOracle::profile_graph`] instead.
 pub fn ensure_profiled(
     g: &Graph,
     reg: &AlgorithmRegistry,
     db: &mut CostDb,
-    provider: &mut dyn CostProvider,
+    provider: &dyn CostProvider,
 ) -> anyhow::Result<ProfileReport> {
     let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!(e))?;
     ensure_profiled_with(g, &shapes, reg, db, provider)
@@ -185,7 +195,7 @@ pub fn ensure_profiled_with(
     shapes: &[Vec<TensorShape>],
     reg: &AlgorithmRegistry,
     db: &mut CostDb,
-    provider: &mut dyn CostProvider,
+    provider: &dyn CostProvider,
 ) -> anyhow::Result<ProfileReport> {
     let mut report = ProfileReport::default();
     let prov_name = provider.provider_name();
@@ -256,14 +266,14 @@ mod tests {
         let g = small_graph();
         let reg = AlgorithmRegistry::new();
         let mut db = CostDb::new();
-        let mut prov = SimV100Provider::new(7);
-        let rep = ensure_profiled(&g, &reg, &mut db, &mut prov).unwrap();
+        let prov = SimV100Provider::new(7);
+        let rep = ensure_profiled(&g, &reg, &mut db, &prov).unwrap();
         // conv has 3 algorithms (A, B, winograd) but the two convs share a
         // signature; add has 1 → 3 measured for conv + 1 add, 3 cached.
         assert_eq!(rep.measured, 4);
         assert_eq!(rep.cached, 3);
         // re-run: everything cached
-        let rep2 = ensure_profiled(&g, &reg, &mut db, &mut prov).unwrap();
+        let rep2 = ensure_profiled(&g, &reg, &mut db, &prov).unwrap();
         assert_eq!(rep2.measured, 0);
         assert_eq!(rep2.cached, 7);
     }
@@ -274,8 +284,8 @@ mod tests {
         let reg = AlgorithmRegistry::new();
         let mut db1 = CostDb::new();
         let mut db2 = CostDb::new();
-        ensure_profiled(&g, &reg, &mut db1, &mut SimV100Provider::new(7)).unwrap();
-        ensure_profiled(&g, &reg, &mut db2, &mut SimV100Provider::new(7)).unwrap();
+        ensure_profiled(&g, &reg, &mut db1, &SimV100Provider::new(7)).unwrap();
+        ensure_profiled(&g, &reg, &mut db2, &SimV100Provider::new(7)).unwrap();
         assert_eq!(db1.to_json().to_string_compact(), db2.to_json().to_string_compact());
     }
 
@@ -286,7 +296,7 @@ mod tests {
         let mut db = CostDb::new();
         let mut prov = CpuProvider::new(None);
         prov.budget_s = 0.005;
-        ensure_profiled(&g, &reg, &mut db, &mut prov).unwrap();
+        ensure_profiled(&g, &reg, &mut db, &prov).unwrap();
         let shapes = g.infer_shapes().unwrap();
         let sig = g.node_signature(crate::graph::NodeId(2), &shapes);
         let c = db.get(&sig, Algorithm::ConvDirect).unwrap();

@@ -184,13 +184,13 @@ pub struct Table2Data {
 
 pub fn table2(cfg: &ExperimentConfig) -> (Table, Table2Data) {
     let g0 = models::squeezenet::build(cfg.model_cfg);
-    let mut ctx = cfg.ctx();
+    let ctx = cfg.ctx();
     let model = cfg.model();
 
     // Collect 8 snapshots along the energy-objective search, like the
     // paper's "several graphs from the search process of SqueezeNet":
     // origin + progressively better (G, A) pairs.
-    let snapshots = search_snapshots(&g0, &mut ctx, &CostFunction::Energy, &cfg.search_config(), 8);
+    let snapshots = search_snapshots(&g0, &ctx, &CostFunction::Energy, &cfg.search_config(), 8);
 
     let mut t = Table::new(
         "Table 2: accuracy of cost model (SqueezeNet, sim-V100)",
@@ -237,12 +237,15 @@ pub fn table2(cfg: &ExperimentConfig) -> (Table, Table2Data) {
 /// improving order, like the paper's graph1..graph8.
 fn search_snapshots(
     g0: &Graph,
-    ctx: &mut OptimizerContext,
+    ctx: &OptimizerContext,
     objective: &CostFunction,
     cfg: &SearchConfig,
     n: usize,
 ) -> Vec<(Graph, Assignment)> {
-    let res = crate::search::outer_search(g0, ctx, objective, cfg).expect("search failed");
+    let baseline =
+        crate::search::evaluate_baseline(g0, &ctx.oracle).expect("baseline evaluation failed");
+    let res =
+        crate::search::outer_search(g0, ctx, objective, cfg, &baseline).expect("search failed");
     let traj = res.trajectory;
     if traj.len() <= n {
         return traj.into_iter().map(|(g, a, _)| (g, a)).collect();
@@ -306,10 +309,10 @@ pub fn table3(cfg: &ExperimentConfig) -> (Table, Table3Data) {
 
         // Origin: no optimization at all.
         {
-            let mut ctx = cfg.ctx();
+            let ctx = cfg.ctx();
             let res = optimize(
                 &g0,
-                &mut ctx,
+                &ctx,
                 &CostFunction::Time,
                 &SearchConfig { enable_outer: false, enable_inner: false, ..scfg.clone() },
             )
@@ -318,10 +321,10 @@ pub fn table3(cfg: &ExperimentConfig) -> (Table, Table3Data) {
         }
         // MetaFlow best time: outer search only, time objective, default algos.
         {
-            let mut ctx = cfg.ctx();
+            let ctx = cfg.ctx();
             let res = optimize(
                 &g0,
-                &mut ctx,
+                &ctx,
                 &CostFunction::Time,
                 &SearchConfig { enable_inner: false, ..scfg.clone() },
             )
@@ -335,8 +338,8 @@ pub fn table3(cfg: &ExperimentConfig) -> (Table, Table3Data) {
             ("best_power", CostFunction::Power),
             ("0.5power+0.5energy", CostFunction::power_energy(0.5)),
         ] {
-            let mut ctx = cfg.ctx();
-            let res = optimize(&g0, &mut ctx, &objective, &scfg).unwrap();
+            let ctx = cfg.ctx();
+            let res = optimize(&g0, &ctx, &objective, &scfg).unwrap();
             push(variant, &res.graph, &res.assignment, &mut data);
         }
     }
@@ -370,8 +373,8 @@ pub fn table4(cfg: &ExperimentConfig) -> (Table, Table4Data) {
         };
         // our CostFunction::linear takes weight on ENERGY
         let objective = CostFunction::linear(1.0 - wt);
-        let mut ctx = cfg.ctx();
-        let res: OptimizeResult = optimize(&g0, &mut ctx, &objective, &scfg).unwrap();
+        let ctx = cfg.ctx();
+        let res: OptimizeResult = optimize(&g0, &ctx, &objective, &scfg).unwrap();
         let c = measure_actual(&res.graph, &res.assignment, &model);
         t.row(vec![label.clone(), f3(c.time_ms), f3(c.power_w), f3(c.energy_j())]);
         data.rows.push((label, wt, c));
@@ -395,10 +398,10 @@ pub fn table5(cfg: &ExperimentConfig) -> (Table, Table5Data) {
     let model = cfg.model();
     let scfg = cfg.search_config();
     let run = |outer: bool, inner: bool| -> SimCost {
-        let mut ctx = cfg.ctx();
+        let ctx = cfg.ctx();
         let res = optimize(
             &g0,
-            &mut ctx,
+            &ctx,
             &CostFunction::Energy,
             &SearchConfig { enable_outer: outer, enable_inner: inner, ..scfg.clone() },
         )

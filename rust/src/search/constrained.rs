@@ -27,19 +27,18 @@ pub struct ConstrainedResult {
 /// solution when even `w = 0` misses the budget (infeasible).
 pub fn optimize_with_time_budget(
     g0: &Graph,
-    ctx: &mut OptimizerContext,
+    ctx: &OptimizerContext,
     time_budget_ms: f64,
     cfg: &SearchConfig,
     probes: usize,
 ) -> anyhow::Result<ConstrainedResult> {
     let mut trace = Vec::new();
-    let run = |w: f64, ctx: &mut OptimizerContext| -> anyhow::Result<OptimizeResult> {
-        let res = optimize(g0, ctx, &CostFunction::linear(w), cfg)?;
-        Ok(res)
+    let run = |w: f64| -> anyhow::Result<OptimizeResult> {
+        optimize(g0, ctx, &CostFunction::linear(w), cfg)
     };
 
     // Feasibility check at w = 0 (pure time objective).
-    let fastest = run(0.0, ctx)?;
+    let fastest = run(0.0)?;
     trace.push((0.0, fastest.cost.time_ms, fastest.cost.energy_j));
     if fastest.cost.time_ms > time_budget_ms {
         return Ok(ConstrainedResult { result: fastest, weight: 0.0, trace, feasible: false });
@@ -51,7 +50,7 @@ pub fn optimize_with_time_budget(
     let mut best_w = 0.0;
 
     // Is w = 1 already feasible? Then it is optimal for energy.
-    let full = run(1.0, ctx)?;
+    let full = run(1.0)?;
     trace.push((1.0, full.cost.time_ms, full.cost.energy_j));
     if full.cost.time_ms <= time_budget_ms {
         return Ok(ConstrainedResult { result: full, weight: 1.0, trace, feasible: true });
@@ -59,7 +58,7 @@ pub fn optimize_with_time_budget(
 
     for _ in 0..probes {
         let mid = 0.5 * (lo + hi);
-        let res = run(mid, ctx)?;
+        let res = run(mid)?;
         trace.push((mid, res.cost.time_ms, res.cost.energy_j));
         if res.cost.time_ms <= time_budget_ms {
             lo = mid;
@@ -113,9 +112,9 @@ mod tests {
     #[test]
     fn generous_budget_returns_best_energy() {
         let g = graph();
-        let mut ctx = OptimizerContext::offline_default();
+        let ctx = OptimizerContext::offline_default();
         let r =
-            optimize_with_time_budget(&g, &mut ctx, 1e9, &SearchConfig::default(), 4).unwrap();
+            optimize_with_time_budget(&g, &ctx, 1e9, &SearchConfig::default(), 4).unwrap();
         assert!(r.feasible);
         assert_eq!(r.weight, 1.0);
     }
@@ -123,23 +122,23 @@ mod tests {
     #[test]
     fn impossible_budget_reports_infeasible() {
         let g = graph();
-        let mut ctx = OptimizerContext::offline_default();
+        let ctx = OptimizerContext::offline_default();
         let r =
-            optimize_with_time_budget(&g, &mut ctx, 1e-9, &SearchConfig::default(), 4).unwrap();
+            optimize_with_time_budget(&g, &ctx, 1e-9, &SearchConfig::default(), 4).unwrap();
         assert!(!r.feasible);
     }
 
     #[test]
     fn budget_between_extremes_is_respected() {
         let g = graph();
-        let mut ctx = OptimizerContext::offline_default();
+        let ctx = OptimizerContext::offline_default();
         // budget = halfway between best-time and best-energy times
-        let fast = optimize(&g, &mut ctx, &CostFunction::Time, &SearchConfig::default()).unwrap();
+        let fast = optimize(&g, &ctx, &CostFunction::Time, &SearchConfig::default()).unwrap();
         let slow =
-            optimize(&g, &mut ctx, &CostFunction::Energy, &SearchConfig::default()).unwrap();
+            optimize(&g, &ctx, &CostFunction::Energy, &SearchConfig::default()).unwrap();
         if slow.cost.time_ms > fast.cost.time_ms {
             let budget = 0.5 * (fast.cost.time_ms + slow.cost.time_ms);
-            let r = optimize_with_time_budget(&g, &mut ctx, budget, &SearchConfig::default(), 6)
+            let r = optimize_with_time_budget(&g, &ctx, budget, &SearchConfig::default(), 6)
                 .unwrap();
             assert!(r.feasible);
             assert!(r.result.cost.time_ms <= budget + 1e-9);

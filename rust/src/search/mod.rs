@@ -7,7 +7,10 @@ pub mod outer;
 
 pub use constrained::{optimize_with_time_budget, ConstrainedResult};
 pub use inner::{exhaustive_search, inner_search, random_assignment, InnerResult};
-pub use outer::{outer_search, OptimizerContext, OuterResult, SearchConfig, SearchStats};
+pub use outer::{
+    evaluate_baseline, outer_search, Baseline, OptimizerContext, OuterResult, SearchConfig,
+    SearchStats,
+};
 
 use crate::algo::Assignment;
 use crate::cost::{CostFunction, GraphCost};
@@ -50,21 +53,25 @@ impl OptimizeResult {
 
 /// Optimize `g0` for `objective`: profiles as needed, normalizes the
 /// objective against the origin cost, then runs the two-level search.
+///
+/// The origin graph is profiled and evaluated exactly once (the
+/// [`Baseline`]); both the objective normalization here and the search's
+/// trajectory origin reuse it.
 pub fn optimize(
     g0: &Graph,
-    ctx: &mut OptimizerContext,
+    ctx: &OptimizerContext,
     objective: &CostFunction,
     cfg: &SearchConfig,
 ) -> anyhow::Result<OptimizeResult> {
     g0.validate().map_err(|e| anyhow::anyhow!("invalid input graph: {e}"))?;
-    // Baseline: origin graph, default assignment.
-    let (table0, _) = ctx.table_for(g0)?;
-    let default_a = Assignment::default_for(g0, &ctx.reg);
-    let original = table0.eval(&default_a);
+    // Baseline: origin graph, default assignment — evaluated once.
+    let baseline = evaluate_baseline(g0, &ctx.oracle)?;
+    let original = baseline.cost;
     let cf = objective.normalized(&original);
     let original_objective = cf.eval(&original);
 
-    let result = outer_search(g0, ctx, &cf, cfg)?;
+    let mut result = outer_search(g0, ctx, &cf, cfg, &baseline)?;
+    result.stats.profiled += baseline.profiled;
     Ok(OptimizeResult {
         graph: result.graph,
         assignment: result.assignment,
@@ -119,8 +126,8 @@ mod tests {
     #[test]
     fn optimize_energy_beats_origin() {
         let g = test_graph();
-        let mut ctx = OptimizerContext::offline_default();
-        let res = optimize(&g, &mut ctx, &CostFunction::Energy, &SearchConfig::default()).unwrap();
+        let ctx = OptimizerContext::offline_default();
+        let res = optimize(&g, &ctx, &CostFunction::Energy, &SearchConfig::default()).unwrap();
         assert!(
             res.cost.energy_j < res.original.energy_j,
             "optimized {} vs origin {}",
@@ -132,8 +139,8 @@ mod tests {
     #[test]
     fn optimize_time_beats_origin() {
         let g = test_graph();
-        let mut ctx = OptimizerContext::offline_default();
-        let res = optimize(&g, &mut ctx, &CostFunction::Time, &SearchConfig::default()).unwrap();
+        let ctx = OptimizerContext::offline_default();
+        let res = optimize(&g, &ctx, &CostFunction::Time, &SearchConfig::default()).unwrap();
         assert!(res.cost.time_ms <= res.original.time_ms);
         assert!(res.objective_savings() >= 0.0);
     }
@@ -141,12 +148,12 @@ mod tests {
     #[test]
     fn inner_only_vs_both_ablation() {
         let g = test_graph();
-        let mut ctx = OptimizerContext::offline_default();
-        let both = optimize(&g, &mut ctx, &CostFunction::Energy, &SearchConfig::default()).unwrap();
-        let mut ctx2 = OptimizerContext::offline_default();
+        let ctx = OptimizerContext::offline_default();
+        let both = optimize(&g, &ctx, &CostFunction::Energy, &SearchConfig::default()).unwrap();
+        let ctx2 = OptimizerContext::offline_default();
         let inner_only = optimize(
             &g,
-            &mut ctx2,
+            &ctx2,
             &CostFunction::Energy,
             &SearchConfig { enable_outer: false, ..Default::default() },
         )
@@ -158,10 +165,10 @@ mod tests {
     #[test]
     fn disabled_everything_is_origin() {
         let g = test_graph();
-        let mut ctx = OptimizerContext::offline_default();
+        let ctx = OptimizerContext::offline_default();
         let res = optimize(
             &g,
-            &mut ctx,
+            &ctx,
             &CostFunction::Energy,
             &SearchConfig { enable_outer: false, enable_inner: false, ..Default::default() },
         )
@@ -173,10 +180,10 @@ mod tests {
     #[test]
     fn alpha_one_is_greedy_and_terminates() {
         let g = test_graph();
-        let mut ctx = OptimizerContext::offline_default();
+        let ctx = OptimizerContext::offline_default();
         let res = optimize(
             &g,
-            &mut ctx,
+            &ctx,
             &CostFunction::Energy,
             &SearchConfig { alpha: 1.0, ..Default::default() },
         )
@@ -187,8 +194,8 @@ mod tests {
     #[test]
     fn power_objective_trades_time() {
         let g = test_graph();
-        let mut ctx = OptimizerContext::offline_default();
-        let res = optimize(&g, &mut ctx, &CostFunction::Power, &SearchConfig::default()).unwrap();
+        let ctx = OptimizerContext::offline_default();
+        let res = optimize(&g, &ctx, &CostFunction::Power, &SearchConfig::default()).unwrap();
         // minimum power should not exceed origin power
         assert!(res.cost.power_w() <= res.original.power_w() + 1e-9);
     }

@@ -8,6 +8,9 @@
 //! wallclock advances that clock. Latency percentiles therefore reflect
 //! genuine compute + queueing behaviour, reproducibly.
 
+use crate::algo::Assignment;
+use crate::cost::{CostOracle, GraphCost};
+use crate::graph::Graph;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -72,6 +75,9 @@ pub struct ServeReport {
     /// Real wallclock spent inside the engine.
     pub busy_s: f64,
     pub batches: usize,
+    /// The cost oracle's estimate for the served plan (per inference),
+    /// when serving went through [`serve_plan`] with a shared oracle.
+    pub plan_cost: Option<GraphCost>,
 }
 
 impl ServeReport {
@@ -168,7 +174,31 @@ where
     }
 
     let first = arrivals.first().copied().unwrap_or(0.0);
-    Ok(ServeReport { span_s: clock - first, busy_s, batches, records })
+    Ok(ServeReport { span_s: clock - first, busy_s, batches, records, plan_cost: None })
+}
+
+/// Serve an optimized `(graph, assignment)` plan, annotating the report
+/// with the shared [`CostOracle`]'s cost estimate for that plan.
+///
+/// This is the optimize→serve composition point: the caller hands in the
+/// *same* oracle the optimizer searched with (warm profile DB), so the
+/// estimate is exactly what the search minimized. Pricing uses only
+/// already-available profiles — a cold oracle yields `plan_cost: None`
+/// rather than blocking serving startup on measurements.
+pub fn serve_plan<F>(
+    cfg: &ServeConfig,
+    oracle: &CostOracle,
+    g: &Graph,
+    a: &Assignment,
+    exec_batch: F,
+) -> anyhow::Result<ServeReport>
+where
+    F: FnMut(&[Tensor]) -> anyhow::Result<Vec<Tensor>>,
+{
+    let plan_cost = oracle.cached_cost(g, a)?;
+    let mut report = serve(cfg, exec_batch)?;
+    report.plan_cost = plan_cost;
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -233,6 +263,31 @@ mod tests {
         let arr_a: Vec<f64> = a.records.iter().map(|r| r.arrival_s).collect();
         let arr_b: Vec<f64> = b.records.iter().map(|r| r.arrival_s).collect();
         assert_eq!(arr_a, arr_b);
+    }
+
+    #[test]
+    fn serve_plan_shares_oracle_estimate() {
+        use crate::graph::{OpKind, PortRef};
+        let oracle = crate::cost::CostOracle::offline_default();
+        let mut g = crate::graph::Graph::new();
+        let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+        let r = g.add1(OpKind::Relu, &[x], "r");
+        g.outputs = vec![PortRef::of(r)];
+        let a = crate::algo::Assignment::default_for(&g, oracle.reg());
+
+        // Cold oracle: serving must not trigger any profiling; no estimate.
+        let cold = serve_plan(&cfg(10, 2), &oracle, &g, &a, fast_exec).unwrap();
+        assert_eq!(cold.plan_cost, None);
+        assert_eq!(oracle.profiled_total(), 0);
+
+        // Warm the oracle (as `serve --optimize` or a loaded DB would).
+        oracle.table_for(&g).unwrap();
+        let before = oracle.profiled_total();
+        let report = serve_plan(&cfg(10, 2), &oracle, &g, &a, fast_exec).unwrap();
+        let est = report.plan_cost.expect("estimate attached once warm");
+        assert!(est.time_ms > 0.0 && est.energy_j > 0.0);
+        // Pricing the plan measured nothing new.
+        assert_eq!(oracle.profiled_total(), before);
     }
 
     #[test]

@@ -1,0 +1,88 @@
+//! Determinism contract of the optimizer (ISSUE 1 acceptance criteria):
+//!
+//! 1. Same model + seed + config → byte-identical `--save-plan` JSON
+//!    across repeated runs (fresh contexts each time).
+//! 2. Parallel candidate evaluation (`threads: 8`) returns a bit-identical
+//!    `(graph, assignment, cost)` to the sequential path (`threads: 1`)
+//!    on every zoo model.
+//!
+//! The batched-wave outer search guarantees this by popping the α-band
+//! frontier before evaluation and merging results in candidate sequence
+//! order, so thread scheduling can never reorder best/enqueue decisions.
+
+use eadgo::cost::CostFunction;
+use eadgo::graph::canonical::graph_hash;
+use eadgo::graph::serde::plan_to_json;
+use eadgo::models::{self, ModelConfig};
+use eadgo::search::{optimize, OptimizerContext, SearchConfig};
+
+fn model_cfg() -> ModelConfig {
+    // compute-bound scale (the sim provider is analytic; size is free),
+    // small search budget to keep the full zoo sweep fast.
+    ModelConfig { batch: 1, resolution: 64, width_div: 2, classes: 10 }
+}
+
+fn search_cfg(threads: usize) -> SearchConfig {
+    SearchConfig { max_dequeues: 16, threads, ..Default::default() }
+}
+
+/// One full optimization with a fresh context; returns everything the
+/// determinism contract covers, with costs as exact bit patterns.
+fn run(model: &str, objective: &CostFunction, threads: usize) -> (u64, String, u64, u64) {
+    let g = models::by_name(model, model_cfg()).unwrap_or_else(|| panic!("no model {model}"));
+    let ctx = OptimizerContext::offline_default();
+    let r = optimize(&g, &ctx, objective, &search_cfg(threads)).unwrap();
+    let plan_json = plan_to_json(&r.graph, &r.assignment).to_string_compact();
+    (graph_hash(&r.graph), plan_json, r.cost.time_ms.to_bits(), r.cost.energy_j.to_bits())
+}
+
+#[test]
+fn repeated_runs_produce_identical_plan_json() {
+    for objective in [CostFunction::Energy, CostFunction::linear(0.5)] {
+        let a = run("squeezenet", &objective, 1);
+        let b = run("squeezenet", &objective, 1);
+        assert_eq!(a, b, "sequential reruns diverged for {}", objective.describe());
+    }
+}
+
+#[test]
+fn parallel_equals_sequential_on_every_zoo_model() {
+    for model in models::zoo_names() {
+        let seq = run(model, &CostFunction::Energy, 1);
+        let par = run(model, &CostFunction::Energy, 8);
+        assert_eq!(
+            seq, par,
+            "{model}: threads=8 diverged from threads=1 (graph hash / plan JSON / cost bits)"
+        );
+    }
+}
+
+#[test]
+fn parallel_is_deterministic_across_repeats() {
+    // Not just equal to sequential: two threads=8 runs must also agree
+    // with each other (no dependence on thread scheduling).
+    let a = run("resnet", &CostFunction::Energy, 8);
+    let b = run("resnet", &CostFunction::Energy, 8);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn auto_threads_matches_sequential() {
+    // threads: 0 resolves to available parallelism; same contract.
+    let seq = run("inception", &CostFunction::Energy, 1);
+    let auto = run("inception", &CostFunction::Energy, 0);
+    assert_eq!(seq, auto);
+}
+
+#[test]
+fn search_stats_structure_is_thread_invariant() {
+    // Expansion/generation/dedup counts describe the search trajectory,
+    // which must not depend on the worker count.
+    let g = models::squeezenet::build(model_cfg());
+    let stats = |threads: usize| {
+        let ctx = OptimizerContext::offline_default();
+        let r = optimize(&g, &ctx, &CostFunction::Energy, &search_cfg(threads)).unwrap();
+        (r.stats.expanded, r.stats.generated, r.stats.deduped, r.stats.waves, r.stats.profiled)
+    };
+    assert_eq!(stats(1), stats(8));
+}

@@ -20,9 +20,9 @@ fn energy_objective_beats_time_objective_on_energy() {
     // The core claim: optimizing for energy yields less energy than
     // optimizing for time (Table 3's best_energy vs best_time columns).
     let g = models::squeezenet::build(cfg());
-    let mut ctx = OptimizerContext::offline_default();
-    let best_time = optimize(&g, &mut ctx, &CostFunction::Time, &quick_search()).unwrap();
-    let best_energy = optimize(&g, &mut ctx, &CostFunction::Energy, &quick_search()).unwrap();
+    let ctx = OptimizerContext::offline_default();
+    let best_time = optimize(&g, &ctx, &CostFunction::Time, &quick_search()).unwrap();
+    let best_energy = optimize(&g, &ctx, &CostFunction::Energy, &quick_search()).unwrap();
     assert!(best_energy.cost.energy_j <= best_time.cost.energy_j);
     assert!(best_time.cost.time_ms <= best_energy.cost.time_ms + 1e-9);
     // and both improve on origin
@@ -35,15 +35,15 @@ fn ours_beats_metaflow_baseline_on_energy() {
     // "our optimized graph consumes 24% less energy than MetaFlow
     // optimized" — assert ours-is-better, not the exact factor.
     let g = models::squeezenet::build(cfg());
-    let mut ctx = OptimizerContext::offline_default();
+    let ctx = OptimizerContext::offline_default();
     let metaflow = optimize(
         &g,
-        &mut ctx,
+        &ctx,
         &CostFunction::Time,
         &SearchConfig { enable_inner: false, ..quick_search() },
     )
     .unwrap();
-    let ours = optimize(&g, &mut ctx, &CostFunction::Energy, &quick_search()).unwrap();
+    let ours = optimize(&g, &ctx, &CostFunction::Energy, &quick_search()).unwrap();
     assert!(
         ours.cost.energy_j < metaflow.cost.energy_j,
         "ours {} vs metaflow {}",
@@ -56,9 +56,9 @@ fn ours_beats_metaflow_baseline_on_energy() {
 fn best_power_trades_time_for_power() {
     // Table 3: best_power draws much less power but takes longer.
     let g = models::squeezenet::build(cfg());
-    let mut ctx = OptimizerContext::offline_default();
-    let best_time = optimize(&g, &mut ctx, &CostFunction::Time, &quick_search()).unwrap();
-    let best_power = optimize(&g, &mut ctx, &CostFunction::Power, &quick_search()).unwrap();
+    let ctx = OptimizerContext::offline_default();
+    let best_time = optimize(&g, &ctx, &CostFunction::Time, &quick_search()).unwrap();
+    let best_power = optimize(&g, &ctx, &CostFunction::Power, &quick_search()).unwrap();
     assert!(best_power.cost.power_w() < best_time.cost.power_w());
     assert!(best_power.cost.time_ms >= best_time.cost.time_ms);
 }
@@ -71,8 +71,8 @@ fn linear_sweep_is_monotone_in_shape() {
     let mut times = Vec::new();
     let mut energies = Vec::new();
     for w_energy in [0.0, 0.5, 1.0] {
-        let mut ctx = OptimizerContext::offline_default();
-        let res = optimize(&g, &mut ctx, &CostFunction::linear(w_energy), &quick_search()).unwrap();
+        let ctx = OptimizerContext::offline_default();
+        let res = optimize(&g, &ctx, &CostFunction::linear(w_energy), &quick_search()).unwrap();
         times.push(res.cost.time_ms);
         energies.push(res.cost.energy_j);
     }
@@ -89,10 +89,10 @@ fn inner_search_d1_equals_exhaustive_for_linear_costs() {
         width_div: 8,
         classes: 10,
     });
-    let mut ctx = OptimizerContext::offline_default();
+    let ctx = OptimizerContext::offline_default();
     let (table, _) = ctx.table_for(&g).unwrap();
     for cf in [CostFunction::Time, CostFunction::Energy, CostFunction::linear(0.3)] {
-        let start = eadgo::algo::Assignment::default_for(&g, &ctx.reg);
+        let start = eadgo::algo::Assignment::default_for(&g, ctx.reg());
         let greedy = eadgo::search::inner_search(&table, &cf, 1, start.clone());
         let exact = eadgo::search::exhaustive_search(&table, &cf, &start, 2_000_000)
             .expect("space small enough");
@@ -150,8 +150,8 @@ fn table4_endpoints_bound_the_sweep() {
 fn search_is_deterministic() {
     let g = models::squeezenet::build(cfg());
     let run = || {
-        let mut ctx = OptimizerContext::offline_default();
-        let r = optimize(&g, &mut ctx, &CostFunction::Energy, &quick_search()).unwrap();
+        let ctx = OptimizerContext::offline_default();
+        let r = optimize(&g, &ctx, &CostFunction::Energy, &quick_search()).unwrap();
         (r.cost.time_ms, r.cost.energy_j, r.stats.expanded, r.stats.generated)
     };
     assert_eq!(run(), run());
@@ -161,10 +161,10 @@ fn search_is_deterministic() {
 fn alpha_widens_exploration() {
     let g = models::squeezenet::build(cfg());
     let explored = |alpha: f64| {
-        let mut ctx = OptimizerContext::offline_default();
+        let ctx = OptimizerContext::offline_default();
         let r = optimize(
             &g,
-            &mut ctx,
+            &ctx,
             &CostFunction::Energy,
             &SearchConfig { alpha, max_dequeues: 60, ..Default::default() },
         )

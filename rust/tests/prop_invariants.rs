@@ -148,9 +148,9 @@ fn prop_hash_invariant_under_dead_nodes_and_names() {
 fn prop_inner_d1_optimal_for_additive() {
     check("inner_d1_optimal", 24, |rng| {
         let g = random_graph(rng);
-        let mut ctx = OptimizerContext::offline_default();
+        let ctx = OptimizerContext::offline_default();
         let (table, _) = ctx.table_for(&g).map_err(|e| e.to_string())?;
-        let base = Assignment::default_for(&g, &ctx.reg);
+        let base = Assignment::default_for(&g, ctx.reg());
         let w = rng.f64();
         for cf in [CostFunction::Time, CostFunction::Energy, CostFunction::linear(w)] {
             let start = random_assignment(&table, &base, rng);
@@ -172,9 +172,9 @@ fn prop_inner_d1_optimal_for_additive() {
 fn prop_inner_d2_never_worse_than_d1() {
     check("inner_d2_dominates", 16, |rng| {
         let g = random_graph(rng);
-        let mut ctx = OptimizerContext::offline_default();
+        let ctx = OptimizerContext::offline_default();
         let (table, _) = ctx.table_for(&g).map_err(|e| e.to_string())?;
-        let base = Assignment::default_for(&g, &ctx.reg);
+        let base = Assignment::default_for(&g, ctx.reg());
         for cf in [CostFunction::Power, CostFunction::Product { w: 0.5 }] {
             let start = random_assignment(&table, &base, rng);
             let d1 = inner_search(&table, &cf, 1, start.clone());
@@ -198,9 +198,9 @@ fn prop_cost_table_swap_matches_full_eval() {
     // must agree with a full re-evaluation.
     check("eval_swap_consistent", 24, |rng| {
         let g = random_graph(rng);
-        let mut ctx = OptimizerContext::offline_default();
+        let ctx = OptimizerContext::offline_default();
         let (table, _) = ctx.table_for(&g).map_err(|e| e.to_string())?;
-        let base = Assignment::default_for(&g, &ctx.reg);
+        let base = Assignment::default_for(&g, ctx.reg());
         let a = random_assignment(&table, &base, rng);
         let full = table.eval(&a);
         for id in table.costed_ids() {
@@ -225,9 +225,9 @@ fn prop_additive_model_sums_node_costs() {
     // Graph cost == sum over nodes for any assignment (paper §3.2).
     check("cost_additivity", 24, |rng| {
         let g = random_graph(rng);
-        let mut ctx = OptimizerContext::offline_default();
+        let ctx = OptimizerContext::offline_default();
         let (table, _) = ctx.table_for(&g).map_err(|e| e.to_string())?;
-        let base = Assignment::default_for(&g, &ctx.reg);
+        let base = Assignment::default_for(&g, ctx.reg());
         let a = random_assignment(&table, &base, rng);
         let gc = table.eval(&a);
         let mut t = 0.0;
@@ -321,9 +321,9 @@ fn prop_table_assignment_distance_metric() {
     // distance() is a metric: d(a,a)=0, symmetric, triangle inequality.
     check("distance_metric", 32, |rng| {
         let g = random_graph(rng);
-        let mut ctx = OptimizerContext::offline_default();
+        let ctx = OptimizerContext::offline_default();
         let (table, _) = ctx.table_for(&g).map_err(|e| e.to_string())?;
-        let base = Assignment::default_for(&g, &ctx.reg);
+        let base = Assignment::default_for(&g, ctx.reg());
         let a = random_assignment(&table, &base, rng);
         let b = random_assignment(&table, &base, rng);
         let c = random_assignment(&table, &base, rng);

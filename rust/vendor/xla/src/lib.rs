@@ -1,0 +1,180 @@
+//! Offline stub of the `xla-rs` PJRT surface used by `eadgo::runtime`.
+//!
+//! The real crate links `libxla_extension` (a multi-GB native bundle) that
+//! is not present in this build environment, so the missing dependency is
+//! stubbed per the repo policy: host-side data plumbing ([`Literal`]) is
+//! fully functional, while device compilation/execution returns a clear
+//! "unavailable" error. Swap `rust/Cargo.toml`'s `xla` entry back to the
+//! real crate to run AOT artifacts through genuine PJRT.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type; displays like the real crate's error strings.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str =
+    "PJRT is unavailable: eadgo was built against the vendored xla stub (no libxla_extension)";
+
+/// Element types a [`Literal`] can be read back as. Only f32 is used.
+pub trait NativeType: Sized + Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+/// A host-side dense f32 array (optionally a tuple of arrays) with a shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Vec<f32>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// A rank-1 literal holding a copy of `data`.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: data.to_vec(), tuple: None }
+    }
+
+    /// The same data viewed under a new shape; errors on element-count
+    /// mismatch, like the real crate.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if self.tuple.is_some() {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        if want < 0 || want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch ({} vs {})",
+                self.dims,
+                dims,
+                self.data.len(),
+                want
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone(), tuple: None })
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Read the elements back out.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error("cannot to_vec a tuple literal".into()));
+        }
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple.ok_or_else(|| Error("literal is not a tuple".into()))
+    }
+}
+
+/// Parsed HLO module (stub: retains the artifact text only).
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO-text artifact. File errors are real; parsing is deferred
+    /// to compile time (which the stub does not support).
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        std::fs::read_to_string(path)
+            .map(|text| HloModuleProto { text })
+            .map_err(|e| Error(format!("{}: {e}", path.display())))
+    }
+}
+
+/// An XLA computation wrapping an HLO module (stub: empty handle).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A device buffer holding an execution result (stub: never constructed,
+/// since the stub cannot execute).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// A compiled executable (stub: never constructed).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// The PJRT client. Construction succeeds (so offline flows that merely
+/// probe for artifacts keep working); compilation reports unavailability.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_tuple().is_err());
+    }
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu-stub");
+        assert!(client.compile(&XlaComputation).is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(HloModuleProto::from_text_file("/no/such/file.hlo.txt").is_err());
+    }
+}
