@@ -7,24 +7,31 @@
 //!   4. MobileNet (depthwise extension, paper §5 future work).
 //!   5. parallel frontier — search wall-clock, threads=1 vs threads=8,
 //!      with bit-identical plans (the CostOracle/wave-expansion payoff).
-//! Run: `cargo bench --bench ablation [-- --quick]`
+//!   6. DVFS — off vs per-graph vs per-node frequency search (the (G,A,f)
+//!      extension; arXiv:1905.11012's sweet spot, PolyThrottle-style
+//!      budgeted refinement).
+//! Run: `cargo bench --bench ablation [-- --quick]` (or EADGO_BENCH_QUICK=1).
+//! Emits `BENCH_ablation.json` (dir override: EADGO_BENCH_OUT_DIR).
 
 use eadgo::cost::CostFunction;
 use eadgo::graph::canonical::graph_hash;
 use eadgo::models::{self, ModelConfig};
-use eadgo::report::{f3, Table};
-use eadgo::search::{optimize, OptimizerContext, SearchConfig};
+use eadgo::report::{describe_freqs, f3, Table};
+use eadgo::search::{optimize, DvfsMode, OptimizerContext, SearchConfig};
 use eadgo::subst::{rules, RuleSet};
+use eadgo::util::json::Json;
 
 fn ctx() -> OptimizerContext {
     OptimizerContext::offline_default()
 }
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = eadgo::util::bench::quick_requested();
     let cfg = ModelConfig { batch: 1, resolution: 224, width_div: 1, classes: 1000 };
     let budget = if quick { 40 } else { 200 };
     let g = models::squeezenet::build(cfg);
+    let mut payload = Json::obj();
+    payload.set("bench", "ablation").set("quick", quick);
 
     // --- 1. alpha sweep ----------------------------------------------------
     let mut t = Table::new(
@@ -32,6 +39,7 @@ fn main() {
         &["alpha", "energy_j/1k", "graphs generated", "search_s"],
     );
     let mut prev_energy = f64::INFINITY;
+    let mut alpha_json = Json::obj();
     for alpha in [1.0, 1.01, 1.05, 1.10] {
         let c = ctx();
         let res = optimize(
@@ -47,12 +55,14 @@ fn main() {
             res.stats.generated.to_string(),
             format!("{:.2}", res.stats.wall_s),
         ]);
+        alpha_json.set(&format!("energy_alpha_{alpha}"), res.cost.energy_j);
         assert!(
             res.cost.energy_j <= prev_energy * 1.001,
             "larger alpha must not find worse solutions"
         );
         prev_energy = res.cost.energy_j;
     }
+    payload.set("alpha_sweep", alpha_json);
     println!("{}", t.render());
 
     // --- 2. inner distance -------------------------------------------------
@@ -177,6 +187,7 @@ fn main() {
         "Ablation 5: parallel frontier (energy objective, alpha=1.05)",
         &["model", "threads", "search_s", "speedup", "energy_j/1k", "plan hash"],
     );
+    let mut frontier_json = Json::obj();
     for name in ["resnet", "inception"] {
         let g = models::by_name(name, cfg).unwrap();
         let run = |threads: usize| {
@@ -192,6 +203,10 @@ fn main() {
         };
         let (seq_s, seq_cost, seq_hash, seq_a) = run(1);
         let (par_s, par_cost, par_hash, par_a) = run(8);
+        frontier_json
+            .set(&format!("{name}_seq_s"), seq_s)
+            .set(&format!("{name}_par_s"), par_s)
+            .set(&format!("{name}_energy"), seq_cost.energy_j);
         for (threads, wall, cost, hash) in
             [(1usize, seq_s, seq_cost, seq_hash), (8usize, par_s, par_cost, par_hash)]
         {
@@ -218,5 +233,77 @@ fn main() {
             );
         }
     }
+    payload.set("parallel_frontier", frontier_json);
     println!("{}", t.render());
+
+    // --- 6. DVFS frequency axis ---------------------------------------------
+    // The (G, A, f) extension: per-graph locks one state per plan,
+    // per-node lets every node pick its own. Inner-only rows give the
+    // provable ordering (the joint per-node optimum dominates any uniform
+    // state, which dominates nominal-only); full-search rows show what the
+    // whole two-level search does with the extra axis.
+    let mut t = Table::new(
+        "Ablation 6: DVFS frequency axis (SqueezeNet, energy objective)",
+        &["dvfs", "search", "time_ms", "energy_j/1k", "plan freq"],
+    );
+    let mut dvfs_json = Json::obj();
+    let mut inner_energy: Vec<f64> = Vec::new();
+    for (label, dvfs) in [
+        ("off", DvfsMode::Off),
+        ("per-graph", DvfsMode::PerGraph),
+        ("per-node", DvfsMode::PerNode),
+    ] {
+        for (search, outer) in [("inner-only", false), ("full", true)] {
+            let c = ctx();
+            let res = optimize(
+                &g,
+                &c,
+                &CostFunction::Energy,
+                &SearchConfig {
+                    dvfs,
+                    enable_outer: outer,
+                    max_dequeues: budget / 2,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            t.row(vec![
+                label.to_string(),
+                search.to_string(),
+                f3(res.cost.time_ms),
+                f3(res.cost.energy_j),
+                describe_freqs(&res.assignment),
+            ]);
+            dvfs_json.set(&format!("energy_{label}_{search}"), res.cost.energy_j);
+            if !outer {
+                inner_energy.push(res.cost.energy_j);
+            }
+        }
+    }
+    println!("{}", t.render());
+    // Guaranteed ordering on the fixed origin graph: per-node ≤ per-graph
+    // ≤ off (larger option spaces, additive objective, d=1 optimal).
+    assert!(
+        inner_energy[1] <= inner_energy[0] + 1e-9,
+        "per-graph DVFS must not lose to nominal-only: {} vs {}",
+        inner_energy[1],
+        inner_energy[0]
+    );
+    assert!(
+        inner_energy[2] <= inner_energy[1] + 1e-9,
+        "per-node DVFS must dominate per-graph: {} vs {}",
+        inner_energy[2],
+        inner_energy[1]
+    );
+    println!(
+        "DVFS inner-only energy: off {} -> per-graph {} ({:+.1}%) -> per-node {} ({:+.1}%)\n",
+        f3(inner_energy[0]),
+        f3(inner_energy[1]),
+        100.0 * (inner_energy[1] / inner_energy[0] - 1.0),
+        f3(inner_energy[2]),
+        100.0 * (inner_energy[2] / inner_energy[0] - 1.0),
+    );
+    payload.set("dvfs", dvfs_json);
+
+    eadgo::util::bench::emit_bench_json("ablation", &payload).expect("bench payload write");
 }

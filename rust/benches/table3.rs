@@ -1,13 +1,15 @@
 //! Bench: regenerate paper Table 3 (objectives × the three CNNs) — the
 //! headline result (24% energy savings on SqueezeNet vs MetaFlow-best-time
-//! with negligible performance impact).
-//! Run: `cargo bench --bench table3 [-- --quick]`
+//! with negligible performance impact) plus the DVFS variants.
+//! Run: `cargo bench --bench table3 [-- --quick]` (or EADGO_BENCH_QUICK=1).
+//! Emits `BENCH_table3.json`.
 
 use eadgo::report::tables::{table3, ExperimentConfig};
 use eadgo::util::bench::BenchSuite;
+use eadgo::util::json::Json;
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = eadgo::util::bench::quick_requested();
     let cfg = if quick { ExperimentConfig::quick() } else { ExperimentConfig::default() };
 
     let (t, data) = table3(&cfg);
@@ -38,4 +40,12 @@ fn main() {
     );
     suite.banner();
     suite.run("table3_full", || table3(&cfg));
+
+    let mut payload = Json::obj();
+    payload.set("bench", "table3").set("quick", quick);
+    for row in &data.rows {
+        payload.set(&format!("{}_{}_energy", row.model, row.variant), row.cost.energy_j());
+    }
+    payload.set("timings", eadgo::util::bench::results_to_json(suite.results()));
+    eadgo::util::bench::emit_bench_json("table3", &payload).expect("bench payload write");
 }

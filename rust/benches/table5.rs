@@ -1,12 +1,14 @@
 //! Bench: regenerate paper Table 5 (inner-search ablation on SqueezeNet,
 //! energy objective) and check the contribution ordering.
-//! Run: `cargo bench --bench table5 [-- --quick]`
+//! Run: `cargo bench --bench table5 [-- --quick]` (or EADGO_BENCH_QUICK=1).
+//! Emits `BENCH_table5.json`.
 
 use eadgo::report::tables::{table5, ExperimentConfig};
 use eadgo::util::bench::BenchSuite;
+use eadgo::util::json::Json;
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = eadgo::util::bench::quick_requested();
     let cfg = if quick { ExperimentConfig::quick() } else { ExperimentConfig::default() };
 
     let (t, d) = table5(&cfg);
@@ -31,4 +33,15 @@ fn main() {
     );
     suite.banner();
     suite.run("table5_full", || table5(&cfg));
+
+    let mut payload = Json::obj();
+    payload
+        .set("bench", "table5")
+        .set("quick", quick)
+        .set("origin_energy", d.origin.energy_j())
+        .set("outer_only_energy", d.outer_only.energy_j())
+        .set("inner_only_energy", d.inner_only.energy_j())
+        .set("both_energy", d.both.energy_j())
+        .set("timings", eadgo::util::bench::results_to_json(suite.results()));
+    eadgo::util::bench::emit_bench_json("table5", &payload).expect("bench payload write");
 }

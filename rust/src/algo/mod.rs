@@ -15,6 +15,7 @@
 //! algorithms are not applicable to all convolution operators" (Table 1
 //! shows `-` for Winograd on conv1/conv2).
 
+use crate::energysim::FreqId;
 use crate::graph::{Graph, NodeId, OpKind, TensorShape};
 
 /// An implementation choice for one node.
@@ -135,10 +136,12 @@ impl AlgorithmRegistry {
 
 /// An algorithm assignment `A` for a graph: maps every runtime node to an
 /// algorithm (paper §3.1). Constant-space nodes (weights & folds) carry
-/// `None`.
+/// `None`. With DVFS enabled the plan also carries a per-node frequency
+/// state; `FreqId::NOMINAL` everywhere is the pre-DVFS plan.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Assignment {
     choices: Vec<Option<Algorithm>>,
+    freqs: Vec<FreqId>,
 }
 
 impl Assignment {
@@ -167,7 +170,8 @@ impl Assignment {
                 .collect();
             choices[id.0] = Some(reg.default_algorithm(&node.op, &in_shapes));
         }
-        Assignment { choices }
+        let freqs = vec![FreqId::NOMINAL; g.len()];
+        Assignment { choices, freqs }
     }
 
     pub fn get(&self, id: NodeId) -> Option<Algorithm> {
@@ -177,6 +181,56 @@ impl Assignment {
     pub fn set(&mut self, id: NodeId, algo: Algorithm) {
         assert!(self.choices[id.0].is_some(), "cannot assign to constant-space node");
         self.choices[id.0] = Some(algo);
+    }
+
+    /// The DVFS state a node runs at (`NOMINAL` unless a DVFS search or a
+    /// loaded plan set one).
+    pub fn freq(&self, id: NodeId) -> FreqId {
+        self.freqs.get(id.0).copied().unwrap_or(FreqId::NOMINAL)
+    }
+
+    pub fn set_freq(&mut self, id: NodeId, freq: FreqId) {
+        assert!(self.choices[id.0].is_some(), "cannot set frequency on constant-space node");
+        self.freqs[id.0] = freq;
+    }
+
+    /// Pin every runtime node to one DVFS state (`--dvfs per-graph` plans).
+    pub fn set_uniform_freq(&mut self, freq: FreqId) {
+        for i in 0..self.choices.len() {
+            if self.choices[i].is_some() {
+                self.freqs[i] = freq;
+            }
+        }
+    }
+
+    /// The single frequency every runtime node runs at, or `NOMINAL` when
+    /// the plan mixes states (per-node DVFS).
+    pub fn uniform_freq(&self) -> FreqId {
+        let mut uniform: Option<FreqId> = None;
+        for id in self.assigned_ids() {
+            let f = self.freq(id);
+            match uniform {
+                None => uniform = Some(f),
+                Some(u) if u != f => return FreqId::NOMINAL,
+                _ => {}
+            }
+        }
+        uniform.unwrap_or(FreqId::NOMINAL)
+    }
+
+    /// (frequency, node count) over runtime nodes, ascending by clock with
+    /// `NOMINAL` last — reporting helper for DVFS plans.
+    pub fn freq_histogram(&self) -> Vec<(FreqId, usize)> {
+        let mut counts: std::collections::BTreeMap<FreqId, usize> = Default::default();
+        for id in self.assigned_ids() {
+            *counts.entry(self.freq(id)).or_default() += 1;
+        }
+        let mut out: Vec<(FreqId, usize)> = counts.into_iter().collect();
+        // NOMINAL (0) sorts first by value; move it last for readability.
+        if out.first().is_some_and(|(f, _)| f.is_nominal()) {
+            out.rotate_left(1);
+        }
+        out
     }
 
     pub fn len(&self) -> usize {
@@ -213,13 +267,15 @@ impl Assignment {
             .collect()
     }
 
-    /// Paper §3.1: `distance(A1, A2)` = number of nodes mapped to different
-    /// algorithms. Only defined for assignments over the same graph.
+    /// Paper §3.1: `distance(A1, A2)` = number of nodes mapped differently
+    /// — with the DVFS axis, a node counts once when its (algorithm,
+    /// frequency) pair differs. Only defined over the same graph.
     pub fn distance(&self, other: &Assignment) -> usize {
         assert_eq!(self.choices.len(), other.choices.len(), "assignments over different graphs");
         self.choices
             .iter()
-            .zip(&other.choices)
+            .zip(&self.freqs)
+            .zip(other.choices.iter().zip(&other.freqs))
             .filter(|(a, b)| a != b)
             .count()
     }
@@ -308,6 +364,36 @@ mod tests {
         let reg = AlgorithmRegistry::new();
         let mut a = Assignment::default_for(&g, &reg);
         a.set(w, Algorithm::Passthrough);
+    }
+
+    #[test]
+    fn assignment_freq_axis_defaults_and_distance() {
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+        let w = g.add1(OpKind::weight(vec![4, 3, 3, 3], 1), &[], "w");
+        let c = g.add1(conv_op((1, 1)), &[x, w], "c");
+        let r = g.add1(OpKind::Relu, &[c], "r");
+        g.outputs = vec![PortRef::of(r)];
+        let reg = AlgorithmRegistry::new();
+        let a0 = Assignment::default_for(&g, &reg);
+        assert_eq!(a0.freq(c), FreqId::NOMINAL);
+        assert_eq!(a0.uniform_freq(), FreqId::NOMINAL);
+
+        // Same algorithm, different frequency = distance 1 (the DVFS axis
+        // is part of the plan identity).
+        let mut a1 = a0.clone();
+        a1.set_freq(c, FreqId(900));
+        assert_eq!(a0.distance(&a1), 1);
+        assert_ne!(a0, a1);
+        assert_eq!(a1.uniform_freq(), FreqId::NOMINAL, "mixed plan has no uniform state");
+
+        let mut a2 = a0.clone();
+        a2.set_uniform_freq(FreqId(705));
+        assert_eq!(a2.uniform_freq(), FreqId(705));
+        assert_eq!(a2.freq(w), FreqId::NOMINAL, "weights carry no frequency");
+        let hist = a1.freq_histogram();
+        assert_eq!(hist.last(), Some(&(FreqId::NOMINAL, a1.assigned_ids().count() - 1)));
+        assert!(hist.contains(&(FreqId(900), 1)));
     }
 
     #[test]

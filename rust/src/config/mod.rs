@@ -3,7 +3,7 @@
 
 use crate::cost::CostFunction;
 use crate::models::ModelConfig;
-use crate::search::SearchConfig;
+use crate::search::{DvfsMode, SearchConfig};
 use crate::util::json::{self, Json};
 use std::path::{Path, PathBuf};
 
@@ -19,6 +19,8 @@ pub struct RunConfig {
     /// deterministic provider (sim) the optimized plan is identical for
     /// every value; only wall-clock moves.
     pub threads: usize,
+    /// DVFS frequency search: off, per-graph, or per-node.
+    pub dvfs: DvfsMode,
     pub seed: u64,
     pub model_cfg: ModelConfig,
     /// Profile database path (loaded if present, saved after runs).
@@ -38,6 +40,7 @@ impl Default for RunConfig {
             inner_distance: None,
             max_dequeues: 400,
             threads: 1,
+            dvfs: DvfsMode::Off,
             seed: 7,
             model_cfg: ModelConfig::default(),
             db_path: PathBuf::from("profiles.json"),
@@ -60,6 +63,7 @@ impl RunConfig {
             inner_distance: self.inner_distance,
             max_dequeues: self.max_dequeues,
             threads: self.threads,
+            dvfs: self.dvfs,
             ..Default::default()
         }
     }
@@ -85,6 +89,9 @@ impl RunConfig {
         }
         if let Some(x) = v.get("threads").and_then(Json::as_usize) {
             cfg.threads = x;
+        }
+        if let Some(s) = v.get("dvfs").and_then(Json::as_str) {
+            cfg.dvfs = DvfsMode::parse(s)?;
         }
         if let Some(x) = v.get("seed").and_then(Json::as_f64) {
             cfg.seed = x as u64;
@@ -126,6 +133,9 @@ impl RunConfig {
         self.alpha = args.get_f64("alpha", self.alpha)?;
         self.max_dequeues = args.get_usize("max-dequeues", self.max_dequeues)?;
         self.threads = args.get_usize("threads", self.threads)?;
+        if let Some(s) = args.get("dvfs") {
+            self.dvfs = DvfsMode::parse(s)?;
+        }
         self.seed = args.get_f64("seed", self.seed as f64)? as u64;
         if let Some(d) = args.get("inner-distance") {
             self.inner_distance = Some(
@@ -219,11 +229,12 @@ mod tests {
     #[test]
     fn cli_overrides() {
         let mut cfg = RunConfig::default();
+        let raw = [
+            "optimize", "--model", "inception", "--alpha", "1.2", "--objective", "time",
+            "--threads", "4", "--dvfs", "per-graph",
+        ];
         let args = crate::util::cli::Args::parse(
-            &["optimize", "--model", "inception", "--alpha", "1.2", "--objective", "time", "--threads", "4"]
-                .iter()
-                .map(|s| s.to_string())
-                .collect::<Vec<_>>(),
+            &raw.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
             true,
         );
         cfg.apply_args(&args).unwrap();
@@ -231,5 +242,21 @@ mod tests {
         assert_eq!(cfg.alpha, 1.2);
         assert_eq!(cfg.objective, "time");
         assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.dvfs, DvfsMode::PerGraph);
+        assert_eq!(cfg.search_config().dvfs, DvfsMode::PerGraph);
+    }
+
+    #[test]
+    fn dvfs_parsing() {
+        assert_eq!(DvfsMode::parse("off").unwrap(), DvfsMode::Off);
+        assert_eq!(DvfsMode::parse("per-graph").unwrap(), DvfsMode::PerGraph);
+        assert_eq!(DvfsMode::parse("per_node").unwrap(), DvfsMode::PerNode);
+        assert!(DvfsMode::parse("turbo").is_err());
+        let mut cfg = RunConfig::default();
+        let args = crate::util::cli::Args::parse(
+            &["optimize", "--dvfs", "warp9"].iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+            true,
+        );
+        assert!(cfg.apply_args(&args).is_err(), "bad dvfs mode must be a CLI error");
     }
 }

@@ -1,14 +1,43 @@
-//! The profile database: (node signature, algorithm) → measured cost,
-//! persisted to JSON on disk (paper §3.2: "The measured values are stored
-//! in a database and persisted onto disk for future lookup"; §4.1: "After
-//! the first run, each later run finishes in a few minutes since most
-//! profile results ... have already been cached into database").
+//! The profile database: (node signature, algorithm, DVFS state) →
+//! measured cost, persisted to JSON on disk (paper §3.2: "The measured
+//! values are stored in a database and persisted onto disk for future
+//! lookup"; §4.1: "After the first run, each later run finishes in a few
+//! minutes since most profile results ... have already been cached into
+//! database").
+//!
+//! Frequency keying: a profile taken at the nominal clock is stored under
+//! the bare algorithm name (`"winograd"`), exactly as before the DVFS axis
+//! existed — old database files load unchanged and `--dvfs off` reads the
+//! same entries it always did. Non-nominal profiles get an `@f<MHz>`
+//! suffix (`"winograd@f900"`).
 
 use super::NodeCost;
 use crate::algo::Algorithm;
+use crate::energysim::FreqId;
 use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
 use std::path::Path;
+
+/// The database key of an (algorithm, frequency) pair.
+fn algo_key(algo: Algorithm, freq: FreqId) -> String {
+    if freq.is_nominal() {
+        algo.name().to_string()
+    } else {
+        format!("{}@f{}", algo.name(), freq.0)
+    }
+}
+
+/// Parse a database key back into (algorithm, frequency).
+fn parse_algo_key(key: &str) -> Option<(Algorithm, FreqId)> {
+    match key.split_once("@f") {
+        None => Algorithm::from_name(key).map(|a| (a, FreqId::NOMINAL)),
+        Some((name, mhz)) => {
+            let algo = Algorithm::from_name(name)?;
+            let mhz: u16 = mhz.parse().ok()?;
+            Some((algo, FreqId(mhz)))
+        }
+    }
+}
 
 /// Where a profile came from — useful when mixing simulated and real
 /// measurements in one database.
@@ -36,10 +65,15 @@ impl CostDb {
     }
 
     pub fn get(&self, sig: &str, algo: Algorithm) -> Option<NodeCost> {
+        self.get_at(sig, algo, FreqId::NOMINAL)
+    }
+
+    /// Lookup at a specific DVFS state (`NOMINAL` = the pre-DVFS entry).
+    pub fn get_at(&self, sig: &str, algo: Algorithm, freq: FreqId) -> Option<NodeCost> {
         let hit = self
             .map
             .get(sig)
-            .and_then(|algos| algos.get(algo.name()))
+            .and_then(|algos| algos.get(algo_key(algo, freq).as_str()))
             .map(|e| e.cost);
         if hit.is_none() {
             self.misses.set(self.misses.get() + 1);
@@ -48,14 +82,29 @@ impl CostDb {
     }
 
     pub fn contains(&self, sig: &str, algo: Algorithm) -> bool {
-        self.map.get(sig).is_some_and(|a| a.contains_key(algo.name()))
+        self.contains_at(sig, algo, FreqId::NOMINAL)
+    }
+
+    pub fn contains_at(&self, sig: &str, algo: Algorithm, freq: FreqId) -> bool {
+        self.map.get(sig).is_some_and(|a| a.contains_key(algo_key(algo, freq).as_str()))
     }
 
     pub fn insert(&mut self, sig: &str, algo: Algorithm, cost: NodeCost, provenance: &str) {
+        self.insert_at(sig, algo, FreqId::NOMINAL, cost, provenance)
+    }
+
+    pub fn insert_at(
+        &mut self,
+        sig: &str,
+        algo: Algorithm,
+        freq: FreqId,
+        cost: NodeCost,
+        provenance: &str,
+    ) {
         self.map
             .entry(sig.to_string())
             .or_default()
-            .insert(algo.name().to_string(), Entry { cost, provenance: provenance.to_string() });
+            .insert(algo_key(algo, freq), Entry { cost, provenance: provenance.to_string() });
     }
 
     /// Number of distinct signatures profiled.
@@ -72,14 +121,17 @@ impl CostDb {
         self.misses.get()
     }
 
-    /// All entries of a signature (reporting / Table 1).
+    /// All nominal-clock entries of a signature (reporting / Table 1).
     pub fn entries_for(&self, sig: &str) -> Vec<(Algorithm, NodeCost)> {
         self.map
             .get(sig)
             .map(|algos| {
                 algos
                     .iter()
-                    .filter_map(|(name, e)| Algorithm::from_name(name).map(|a| (a, e.cost)))
+                    .filter_map(|(key, e)| match parse_algo_key(key) {
+                        Some((a, f)) if f.is_nominal() => Some((a, e.cost)),
+                        _ => None,
+                    })
                     .collect()
             })
             .unwrap_or_default()
@@ -115,14 +167,14 @@ impl CostDb {
                 .as_obj()
                 .ok_or_else(|| anyhow::anyhow!("profiles[{sig}] not an object"))?;
             for (name, rec) in algos {
-                let algo = Algorithm::from_name(name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown algorithm `{name}` in db"))?;
+                let (algo, freq) = parse_algo_key(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown algorithm key `{name}` in db"))?;
                 let cost = NodeCost {
                     time_ms: rec.req_f64("time_ms")?,
                     power_w: rec.req_f64("power_w")?,
                 };
                 let prov = rec.get("provenance").and_then(Json::as_str).unwrap_or("unknown");
-                db.insert(sig, algo, cost, prov);
+                db.insert_at(sig, algo, freq, cost, prov);
             }
         }
         Ok(db)
@@ -212,6 +264,27 @@ mod tests {
         let mut entries = db.entries_for("s");
         entries.sort_by_key(|(a, _)| *a);
         assert_eq!(entries.len(), 2);
+    }
+
+    #[test]
+    fn freq_keys_are_separate_and_roundtrip() {
+        let mut db = CostDb::new();
+        let nom = NodeCost { time_ms: 1.0, power_w: 200.0 };
+        let low = NodeCost { time_ms: 1.5, power_w: 110.0 };
+        db.insert("conv2d;x", Algorithm::ConvWinograd, nom, "sim-v100");
+        db.insert_at("conv2d;x", Algorithm::ConvWinograd, FreqId(900), low, "sim-v100");
+        // Distinct entries per state; nominal stays under the bare name.
+        assert_eq!(db.get("conv2d;x", Algorithm::ConvWinograd), Some(nom));
+        assert_eq!(db.get_at("conv2d;x", Algorithm::ConvWinograd, FreqId(900)), Some(low));
+        assert_eq!(db.get_at("conv2d;x", Algorithm::ConvWinograd, FreqId(705)), None);
+        assert_eq!(db.num_entries(), 2);
+        // Table-1 listing remains nominal-only.
+        assert_eq!(db.entries_for("conv2d;x"), vec![(Algorithm::ConvWinograd, nom)]);
+        // JSON roundtrip preserves the frequency axis.
+        let back = CostDb::from_json(&db.to_json()).unwrap();
+        assert_eq!(back.get_at("conv2d;x", Algorithm::ConvWinograd, FreqId(900)), Some(low));
+        assert_eq!(back.get("conv2d;x", Algorithm::ConvWinograd), Some(nom));
+        assert!(back.contains_at("conv2d;x", Algorithm::ConvWinograd, FreqId(900)));
     }
 
     #[test]

@@ -18,7 +18,9 @@ pub use db::CostDb;
 pub use oracle::{CostOracle, SigId, SigInterner};
 
 use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};
+use crate::energysim::FreqId;
 use crate::graph::{Graph, NodeId};
+use std::sync::Arc;
 
 /// Measured cost of one (node-signature, algorithm) pair.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -41,6 +43,12 @@ impl NodeCost {
 pub struct GraphCost {
     pub time_ms: f64,
     pub energy_j: f64,
+    /// The DVFS state this cost was evaluated at, when the whole plan ran
+    /// at one: the chosen state of a `--dvfs per-graph` plan. `NOMINAL`
+    /// for pre-DVFS plans *and* for mixed per-node plans (whose true
+    /// per-node states live in the [`Assignment`]). Metadata only — never
+    /// read by the objective.
+    pub freq: FreqId,
 }
 
 impl GraphCost {
@@ -53,7 +61,11 @@ impl GraphCost {
     }
 
     pub fn add(&self, c: &NodeCost) -> GraphCost {
-        GraphCost { time_ms: self.time_ms + c.time_ms, energy_j: self.energy_j + c.energy_j() }
+        GraphCost {
+            time_ms: self.time_ms + c.time_ms,
+            energy_j: self.energy_j + c.energy_j(),
+            freq: self.freq,
+        }
     }
 }
 
@@ -156,31 +168,59 @@ impl CostFunction {
     }
 }
 
+/// One per-node frequency slab: the (algorithm, cost) options available at
+/// a single DVFS state, `Arc`-shared with the oracle's resolve cache.
+pub type FreqSlab = (FreqId, Arc<Vec<(Algorithm, NodeCost)>>);
+
 /// Per-graph cost lookup table: for every runtime node, the cost of each
-/// applicable algorithm, resolved once from the database. This is the inner
-/// search's working set — after `build`, cost evaluation never touches the
-/// DB or the graph again (hot-path optimization, see EXPERIMENTS.md §Perf).
+/// applicable (algorithm, frequency) pair, resolved once from the
+/// database. This is the inner search's working set — after `build`, cost
+/// evaluation never touches the DB or the graph again (hot-path
+/// optimization, see EXPERIMENTS.md §Perf).
 ///
-/// Entries are `Arc`-shared with the [`CostOracle`] resolve cache, so a
-/// cache hit during candidate evaluation is a pointer bump, not a copy of
-/// the options vector.
+/// Options are grouped into **frequency slabs** — one `(FreqId, options)`
+/// entry per resolved DVFS state, `NOMINAL` first, so a pre-DVFS table is
+/// exactly one nominal slab per node and the off-mode hot path is
+/// unchanged. Slabs are `Arc`-shared with the [`CostOracle`] resolve
+/// cache, so a cache hit during candidate evaluation is a pointer bump,
+/// not a copy of the options vector.
 #[derive(Debug, Clone)]
 pub struct GraphCostTable {
-    /// entries[node] = applicable (algorithm, cost); empty for zero-cost nodes.
-    entries: Vec<std::sync::Arc<Vec<(Algorithm, NodeCost)>>>,
+    /// entries[node] = frequency slabs; empty for zero-cost nodes.
+    entries: Vec<Vec<FreqSlab>>,
 }
 
 impl GraphCostTable {
-    /// Assemble from pre-resolved per-node entries.
+    /// Assemble from pre-resolved nominal-clock per-node entries.
     pub fn from_entries(entries: Vec<Vec<(Algorithm, NodeCost)>>) -> GraphCostTable {
-        GraphCostTable { entries: entries.into_iter().map(std::sync::Arc::new).collect() }
+        GraphCostTable {
+            entries: entries
+                .into_iter()
+                .map(|v| {
+                    if v.is_empty() {
+                        Vec::new()
+                    } else {
+                        vec![(FreqId::NOMINAL, Arc::new(v))]
+                    }
+                })
+                .collect(),
+        }
     }
 
-    /// Assemble from already-shared per-node entries (the cost oracle's
-    /// zero-copy path: nodes reference the resolve cache's own vectors).
-    pub fn from_shared(
-        entries: Vec<std::sync::Arc<Vec<(Algorithm, NodeCost)>>>,
-    ) -> GraphCostTable {
+    /// Assemble from already-shared nominal per-node entries (the cost
+    /// oracle's zero-copy path: nodes reference the resolve cache's own
+    /// vectors).
+    pub fn from_shared(entries: Vec<Arc<Vec<(Algorithm, NodeCost)>>>) -> GraphCostTable {
+        GraphCostTable {
+            entries: entries
+                .into_iter()
+                .map(|v| if v.is_empty() { Vec::new() } else { vec![(FreqId::NOMINAL, v)] })
+                .collect(),
+        }
+    }
+
+    /// Assemble from per-node frequency slabs (the DVFS-aware oracle path).
+    pub fn from_freq_slabs(entries: Vec<Vec<FreqSlab>>) -> GraphCostTable {
         GraphCostTable { entries }
     }
 
@@ -221,27 +261,70 @@ impl GraphCostTable {
         Ok(GraphCostTable::from_entries(entries))
     }
 
-    /// Additive cost of the graph under `a` (paper's cost model).
+    /// Additive cost of the graph under `a` (paper's cost model), each node
+    /// priced at its assigned (algorithm, frequency) pair.
     pub fn eval(&self, a: &Assignment) -> GraphCost {
         let mut gc = GraphCost::default();
-        for (i, algos) in self.entries.iter().enumerate() {
-            if algos.is_empty() {
+        for (i, slabs) in self.entries.iter().enumerate() {
+            if slabs.is_empty() {
                 continue;
             }
-            let chosen = a.get(NodeId(i)).expect("assignment missing runtime node");
-            let cost = algos
+            let id = NodeId(i);
+            let chosen = a.get(id).expect("assignment missing runtime node");
+            let cost = self
+                .options_at(id, a.freq(id))
                 .iter()
                 .find(|(al, _)| *al == chosen)
-                .unwrap_or_else(|| panic!("algorithm {chosen:?} not applicable to node {i}"))
+                .unwrap_or_else(|| {
+                    panic!("({chosen:?}, {}) not applicable to node {i}", a.freq(id).describe())
+                })
                 .1;
             gc = gc.add(&cost);
         }
+        gc.freq = a.uniform_freq();
         gc
     }
 
-    /// Cost options of one node (for the inner search).
+    /// Nominal-clock cost options of one node (the pre-DVFS view; empty
+    /// when the table was built at non-nominal states only).
     pub fn node_options(&self, id: NodeId) -> &[(Algorithm, NodeCost)] {
+        self.entries[id.0]
+            .iter()
+            .find(|(f, _)| f.is_nominal())
+            .map(|(_, v)| &v[..])
+            .unwrap_or(&[])
+    }
+
+    /// All frequency slabs of one node (`NOMINAL` first).
+    pub fn freq_options(&self, id: NodeId) -> &[FreqSlab] {
         &self.entries[id.0]
+    }
+
+    /// Cost options of one node at one DVFS state (empty if unresolved).
+    pub fn options_at(&self, id: NodeId, freq: FreqId) -> &[(Algorithm, NodeCost)] {
+        self.entries[id.0]
+            .iter()
+            .find(|(f, _)| *f == freq)
+            .map(|(_, v)| &v[..])
+            .unwrap_or(&[])
+    }
+
+    /// Total (algorithm, frequency) options of a node — the inner search's
+    /// per-node decision count.
+    pub fn option_count(&self, id: NodeId) -> usize {
+        self.entries[id.0].iter().map(|(_, v)| v.len()).sum()
+    }
+
+    /// The `k`-th (frequency, algorithm) option of a node, slab-major —
+    /// for random starts over the joint space.
+    pub fn option_nth(&self, id: NodeId, mut k: usize) -> (FreqId, Algorithm) {
+        for (f, slab) in &self.entries[id.0] {
+            if k < slab.len() {
+                return (*f, slab[k].0);
+            }
+            k -= slab.len();
+        }
+        panic!("option index out of range for node {}", id.0);
     }
 
     /// Nodes that actually carry cost choices.
@@ -254,27 +337,31 @@ impl GraphCostTable {
     }
 
     /// Incremental re-evaluation: `base` with node `id` switched from its
-    /// current algorithm to `new_algo`. O(#algorithms-of-node), not O(n).
+    /// current (algorithm, frequency) pair to `(new_algo, new_freq)`.
+    /// O(#options-of-node), not O(n).
     pub fn eval_swap(
         &self,
         base: GraphCost,
         a: &Assignment,
         id: NodeId,
         new_algo: Algorithm,
+        new_freq: FreqId,
     ) -> GraphCost {
         let old_algo = a.get(id).expect("swap on non-runtime node");
-        let find = |al: Algorithm| {
-            self.entries[id.0]
+        let old_freq = a.freq(id);
+        let find = |al: Algorithm, f: FreqId| {
+            self.options_at(id, f)
                 .iter()
                 .find(|(x, _)| *x == al)
-                .expect("algorithm not applicable")
+                .expect("(algorithm, frequency) not applicable")
                 .1
         };
-        let old = find(old_algo);
-        let new = find(new_algo);
+        let old = find(old_algo, old_freq);
+        let new = find(new_algo, new_freq);
         GraphCost {
             time_ms: base.time_ms - old.time_ms + new.time_ms,
             energy_j: base.energy_j - old.energy_j() + new.energy_j(),
+            freq: if new_freq == old_freq { base.freq } else { FreqId::NOMINAL },
         }
     }
 }
@@ -301,7 +388,7 @@ mod tests {
 
     #[test]
     fn cost_functions_evaluate() {
-        let gc = GraphCost { time_ms: 2.0, energy_j: 100.0 };
+        let gc = GraphCost { time_ms: 2.0, energy_j: 100.0, ..Default::default() };
         assert_eq!(CostFunction::Time.eval(&gc), 2.0);
         assert_eq!(CostFunction::Energy.eval(&gc), 100.0);
         assert_eq!(CostFunction::Power.eval(&gc), 50.0);
@@ -313,7 +400,7 @@ mod tests {
 
     #[test]
     fn normalization_makes_baseline_unit_cost() {
-        let baseline = GraphCost { time_ms: 2.0, energy_j: 100.0 };
+        let baseline = GraphCost { time_ms: 2.0, energy_j: 100.0, ..Default::default() };
         let lin = CostFunction::linear(0.3).normalized(&baseline);
         assert!((lin.eval(&baseline) - 1.0).abs() < 1e-12);
         let pe = CostFunction::power_energy(0.5).normalized(&baseline);

@@ -27,6 +27,7 @@
 
 use super::{CostDb, GraphCostTable, NodeCost};
 use crate::algo::{Algorithm, AlgorithmRegistry};
+use crate::energysim::FreqId;
 use crate::graph::{Graph, OpKind, TensorShape};
 use crate::profiler::{CostProvider, ProfileReport};
 use std::collections::HashMap;
@@ -86,11 +87,13 @@ impl SigInterner {
 /// worker threads off each other's locks, small enough to stay cheap.
 const SHARDS: usize = 16;
 
-type ResolveShard = RwLock<HashMap<SigId, Arc<Vec<(Algorithm, NodeCost)>>>>;
+type ResolveShard = RwLock<HashMap<(SigId, FreqId), Arc<Vec<(Algorithm, NodeCost)>>>>;
 
 /// The thread-safe cost-evaluation layer shared by every search worker
 /// (and, downstream, the serving path). See the module docs for the
-/// locking design.
+/// locking design. With the DVFS axis, the resolve cache is keyed by
+/// `(SigId, FreqId)` — each frequency state of a signature resolves (and
+/// measures) independently, exactly once.
 pub struct CostOracle {
     reg: AlgorithmRegistry,
     interner: SigInterner,
@@ -98,13 +101,24 @@ pub struct CostOracle {
     db: Mutex<CostDb>,
     provider: Box<dyn CostProvider>,
     provider_name: String,
-    /// Total (signature, algorithm) pairs measured through this oracle.
+    /// Non-nominal DVFS states the provider's device exposes, ascending by
+    /// clock (the nominal/max state is canonicalized to `FreqId::NOMINAL`
+    /// and therefore excluded). Empty = no DVFS support.
+    dvfs_freqs: Vec<FreqId>,
+    /// Total (signature, algorithm, frequency) tuples measured through
+    /// this oracle.
     profiled: AtomicU64,
 }
 
 impl CostOracle {
     pub fn new(reg: AlgorithmRegistry, db: CostDb, provider: Box<dyn CostProvider>) -> CostOracle {
         let provider_name = provider.provider_name();
+        let states = provider.freq_states();
+        let nominal = states.iter().map(|s| s.mhz).max().unwrap_or(0);
+        let mut dvfs_freqs: Vec<FreqId> =
+            states.iter().filter(|s| s.mhz < nominal).map(|s| FreqId(s.mhz)).collect();
+        dvfs_freqs.sort();
+        dvfs_freqs.dedup();
         CostOracle {
             reg,
             interner: SigInterner::default(),
@@ -112,6 +126,7 @@ impl CostOracle {
             db: Mutex::new(db),
             provider,
             provider_name,
+            dvfs_freqs,
             profiled: AtomicU64::new(0),
         }
     }
@@ -139,6 +154,13 @@ impl CostOracle {
         &self.provider_name
     }
 
+    /// The non-nominal DVFS states available for frequency search,
+    /// ascending by clock. Empty when the provider's device has no
+    /// frequency table (DVFS search then degenerates to nominal-only).
+    pub fn dvfs_freqs(&self) -> &[FreqId] {
+        &self.dvfs_freqs
+    }
+
     /// Total measurements performed through this oracle since creation.
     pub fn profiled_total(&self) -> u64 {
         self.profiled.load(Ordering::Relaxed)
@@ -162,41 +184,43 @@ impl CostOracle {
         self.db.lock().unwrap().save(path)
     }
 
-    fn shard(&self, id: SigId) -> &ResolveShard {
-        &self.shards[id.0 as usize % SHARDS]
+    fn shard(&self, id: SigId, freq: FreqId) -> &ResolveShard {
+        &self.shards[(id.0 as usize ^ freq.0 as usize) % SHARDS]
     }
 
-    /// Resolve one node signature to its (algorithm, cost) options,
-    /// measuring through the provider on a true miss. Returns the options
-    /// and how many pairs were newly measured.
+    /// Resolve one (node signature, frequency) to its (algorithm, cost)
+    /// options, measuring through the provider on a true miss. Returns the
+    /// options and how many pairs were newly measured.
     fn resolve(
         &self,
         sig: &str,
         op: &OpKind,
         in_shapes: &[TensorShape],
         out_shapes: &[TensorShape],
+        freq: FreqId,
     ) -> (Arc<Vec<(Algorithm, NodeCost)>>, usize) {
         let id = self.interner.intern(sig);
-        let shard = self.shard(id);
-        if let Some(v) = shard.read().unwrap().get(&id) {
+        let key = (id, freq);
+        let shard = self.shard(id, freq);
+        if let Some(v) = shard.read().unwrap().get(&key) {
             return (v.clone(), 0);
         }
         // Miss: fill under the shard write lock so racing threads cannot
         // measure the same signature twice (the loser blocks, re-checks,
         // and takes the winner's entry).
         let mut w = shard.write().unwrap();
-        if let Some(v) = w.get(&id) {
+        if let Some(v) = w.get(&key) {
             return (v.clone(), 0);
         }
         let mut options = Vec::new();
         let mut measured = 0usize;
         for algo in self.reg.applicable(op, in_shapes) {
-            let cached = self.db.lock().unwrap().get(sig, algo);
+            let cached = self.db.lock().unwrap().get_at(sig, algo, freq);
             let cost = match cached {
                 Some(c) => c,
                 None => {
-                    let c = self.provider.measure(sig, op, in_shapes, out_shapes, algo);
-                    self.db.lock().unwrap().insert(sig, algo, c, &self.provider_name);
+                    let c = self.provider.measure(sig, op, in_shapes, out_shapes, algo, freq);
+                    self.db.lock().unwrap().insert_at(sig, algo, freq, c, &self.provider_name);
                     measured += 1;
                     c
                 }
@@ -207,12 +231,13 @@ impl CostOracle {
             self.profiled.fetch_add(measured as u64, Ordering::Relaxed);
         }
         let arc = Arc::new(options);
-        w.insert(id, arc.clone());
+        w.insert(key, arc.clone());
         (arc, measured)
     }
 
-    /// Profile `g` as needed and build its cost table. Shape inference is
-    /// the only fallible step (it doubles as candidate validation).
+    /// Profile `g` as needed and build its nominal-clock cost table. Shape
+    /// inference is the only fallible step (it doubles as candidate
+    /// validation).
     pub fn table_for(&self, g: &Graph) -> anyhow::Result<(GraphCostTable, usize)> {
         let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
         Ok(self.table_for_with(g, &shapes))
@@ -225,26 +250,44 @@ impl CostOracle {
         g: &Graph,
         shapes: &[Vec<TensorShape>],
     ) -> (GraphCostTable, usize) {
-        // Zero-copy on cache hits: table entries share the resolve cache's
-        // own Arc'd vectors (one shared empty vec for zero-cost nodes).
-        let empty: Arc<Vec<(Algorithm, NodeCost)>> = Arc::new(Vec::new());
-        let mut entries = vec![empty; g.len()];
-        let mut measured = 0usize;
-        visit_costed_nodes(g, shapes, |id, node, in_shapes, sig| {
-            let (options, m) = self.resolve(sig, &node.op, in_shapes, &shapes[id.0]);
-            measured += m;
-            entries[id.0] = options;
-        });
-        (GraphCostTable::from_shared(entries), measured)
+        self.table_for_freqs(g, shapes, &[FreqId::NOMINAL])
     }
 
-    /// Ensure every (signature, algorithm) pair of `g` is profiled — the
-    /// `eadgo profile` subcommand's path through the oracle.
+    /// Build a cost table with one frequency slab per state in `freqs`
+    /// (each resolved — and measured on first touch — independently).
+    /// `&[FreqId::NOMINAL]` is exactly the pre-DVFS table.
+    pub fn table_for_freqs(
+        &self,
+        g: &Graph,
+        shapes: &[Vec<TensorShape>],
+        freqs: &[FreqId],
+    ) -> (GraphCostTable, usize) {
+        // Zero-copy on cache hits: table slabs share the resolve cache's
+        // own Arc'd vectors; zero-cost nodes carry no slabs.
+        let mut entries: Vec<Vec<crate::cost::FreqSlab>> = vec![Vec::new(); g.len()];
+        let mut measured = 0usize;
+        visit_costed_nodes(g, shapes, |id, node, in_shapes, sig| {
+            let mut slabs = Vec::with_capacity(freqs.len());
+            for &f in freqs {
+                let (options, m) = self.resolve(sig, &node.op, in_shapes, &shapes[id.0], f);
+                measured += m;
+                slabs.push((f, options));
+            }
+            entries[id.0] = slabs;
+        });
+        (GraphCostTable::from_freq_slabs(entries), measured)
+    }
+
+    /// Ensure every (signature, algorithm) pair of `g` is profiled at the
+    /// nominal clock — the `eadgo profile` subcommand's path through the
+    /// oracle. (DVFS states are profiled lazily by the search that needs
+    /// them; pre-warming all states would multiply first-run cost.)
     pub fn profile_graph(&self, g: &Graph) -> anyhow::Result<ProfileReport> {
         let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
         let mut report = ProfileReport::default();
         visit_costed_nodes(g, &shapes, |id, node, in_shapes, sig| {
-            let (options, m) = self.resolve(sig, &node.op, in_shapes, &shapes[id.0]);
+            let (options, m) =
+                self.resolve(sig, &node.op, in_shapes, &shapes[id.0], FreqId::NOMINAL);
             report.measured += m;
             report.cached += options.len() - m;
         });
@@ -276,11 +319,16 @@ impl CostOracle {
                 complete = false;
                 return;
             };
-            match db.get(sig, algo) {
+            // Priced at the plan's own DVFS state — a per-graph or
+            // per-node frequency plan is estimated at its chosen clocks.
+            match db.get_at(sig, algo, a.freq(id)) {
                 Some(c) => total = total.add(&c),
                 None => complete = false,
             }
         });
+        if complete {
+            total.freq = a.uniform_freq();
+        }
         Ok(complete.then_some(total))
     }
 }
@@ -376,6 +424,35 @@ mod tests {
         let single = CostOracle::offline_default();
         let (_, expect) = single.table_for(&g).unwrap();
         assert_eq!(oracle.profiled_total(), expect as u64);
+    }
+
+    #[test]
+    fn dvfs_states_resolve_independently_and_once() {
+        let oracle = CostOracle::offline_default();
+        // The sim-V100 exposes DVFS; the nominal/max state is canonicalized
+        // away, so every listed state is strictly below the max clock.
+        assert!(!oracle.dvfs_freqs().is_empty());
+        assert!(oracle.dvfs_freqs().iter().all(|f| !f.is_nominal() && f.0 < 1380));
+        let g = conv_graph();
+        let shapes = g.infer_shapes().unwrap();
+        let (t_nom, m_nom) = oracle.table_for_with(&g, &shapes);
+        assert!(m_nom > 0);
+        // A non-nominal state triggers its own measurements exactly once.
+        let low = oracle.dvfs_freqs()[0];
+        let (t_dvfs, m_low) = oracle.table_for_freqs(&g, &shapes, &[FreqId::NOMINAL, low]);
+        assert_eq!(m_low, m_nom, "each state profiles the same pair set");
+        let (_, again) = oracle.table_for_freqs(&g, &shapes, &[FreqId::NOMINAL, low]);
+        assert_eq!(again, 0, "second build must be fully cached");
+        // Both tables agree at the nominal clock (shared slabs).
+        let a = crate::algo::Assignment::default_for(&g, oracle.reg());
+        assert_eq!(t_nom.eval(&a), t_dvfs.eval(&a));
+        // And the low state is a genuinely different operating point
+        // (within measurement noise, never faster than nominal).
+        let mut a_low = a.clone();
+        a_low.set_uniform_freq(low);
+        let c_low = t_dvfs.eval(&a_low);
+        assert!(c_low.time_ms >= t_nom.eval(&a).time_ms * 0.96);
+        assert_eq!(c_low.freq, low);
     }
 
     #[test]

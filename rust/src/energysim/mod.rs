@@ -25,12 +25,66 @@
 //! estimates differ from "actual" whole-graph runs the way Table 2 shows
 //! (actual time a few % higher: per-node dispatch overhead; actual power a
 //! few % lower: idle gaps between kernels).
+//!
+//! ## DVFS (dynamic voltage and frequency scaling)
+//!
+//! Real GPUs expose a table of core-clock states, and frequency is the
+//! single largest energy knob ("The Impact of GPU DVFS on the Energy and
+//! Performance of Deep Learning", arXiv:1905.11012). The simulator models a
+//! state `f` with clock ratio `s = f/f_nom` and per-state voltage `V(f)`:
+//!
+//! ```text
+//! peak_flops(f) = peak_flops · s              (core-clock bound)
+//! peak_bw(f)    = peak_bw                     (memory clock is independent)
+//! P_dyn(f)      = P_dyn · s · (V(f)/V_nom)²   (CMOS dynamic power ~ f·V²)
+//! P(f)          = P_idle + P_dyn(f) · draw
+//! ```
+//!
+//! Because idle power is paid for the whole (longer) runtime while dynamic
+//! power shrinks with `s·V²`, energy per inference is minimized at a
+//! frequency *below* the maximum — the empirical "sweet spot" of
+//! arXiv:1905.11012 — and memory-bound nodes can be down-clocked with no
+//! latency cost at all (their `max(t_c, t_m)` is pinned by `t_m`). That
+//! per-node asymmetry is what the `--dvfs per-node` search exploits.
 
 pub mod work;
 
 use crate::algo::Algorithm;
 use crate::graph::canonical::Fnv;
 pub use work::{node_work, Work};
+
+/// A DVFS frequency state: the core clock in MHz and the voltage the board
+/// runs that clock at (the `V(f)` of the `f·V²` dynamic-power law).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FreqState {
+    pub mhz: u16,
+    pub volt: f64,
+}
+
+/// A frequency choice, identified by its core clock in MHz. The reserved
+/// value `FreqId::NOMINAL` (0 MHz) means "the device's nominal (maximum)
+/// clock" — the state every pre-DVFS profile and plan implicitly ran at,
+/// so `--dvfs off` is exactly the nominal-only search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct FreqId(pub u16);
+
+impl FreqId {
+    /// The device's nominal (maximum) clock — the pre-DVFS default.
+    pub const NOMINAL: FreqId = FreqId(0);
+
+    pub fn is_nominal(&self) -> bool {
+        self.0 == 0
+    }
+
+    /// Human-readable label ("nominal" or "900MHz").
+    pub fn describe(&self) -> String {
+        if self.is_nominal() {
+            "nominal".to_string()
+        } else {
+            format!("{}MHz", self.0)
+        }
+    }
+}
 
 /// Static description of the simulated device.
 #[derive(Debug, Clone)]
@@ -51,6 +105,10 @@ pub struct GpuSpec {
     pub dispatch_overhead_s: f64,
     /// Fraction of launch overhead hidden by pipelining in whole-graph runs.
     pub launch_overlap: f64,
+    /// DVFS states the device exposes, ascending by clock; the last entry
+    /// is the nominal (maximum) state. Empty = the device does not support
+    /// frequency scaling (only `FreqId::NOMINAL` is valid then).
+    pub freq_states: Vec<FreqState>,
 }
 
 impl GpuSpec {
@@ -67,6 +125,11 @@ impl GpuSpec {
             launch_overhead_s: 5.0e-6,
             dispatch_overhead_s: 2.2e-6,
             launch_overlap: 0.35,
+            // The V100 exposes 135–1380 MHz SM clocks in 7.5 MHz steps;
+            // coarsened to 7 levels (finer near the top, where the
+            // energy/latency trade is tightest). V(f) follows the board's
+            // roughly linear volt/clock curve between ~0.80 V and 1.05 V.
+            freq_states: v100_freq_curve(),
         }
     }
 
@@ -82,8 +145,50 @@ impl GpuSpec {
             launch_overhead_s: 1.0e-6,
             dispatch_overhead_s: 1.0e-6,
             launch_overlap: 0.0,
+            freq_states: Vec::new(),
         }
     }
+
+    /// Nominal (maximum) core clock in MHz; 0 when the device exposes no
+    /// frequency table.
+    pub fn nominal_mhz(&self) -> u16 {
+        self.freq_states.last().map(|s| s.mhz).unwrap_or(0)
+    }
+
+    /// Is `f` (by value or by being the max table entry) the nominal state?
+    pub fn is_nominal(&self, f: FreqId) -> bool {
+        f.is_nominal() || f.0 >= self.nominal_mhz()
+    }
+
+    /// Clock and dynamic-power scale factors of a frequency state:
+    /// `(s, s·(V(f)/V_nom)²)`. Nominal (and unknown) states scale by 1.
+    pub fn dvfs_scale(&self, f: FreqId) -> (f64, f64) {
+        if self.is_nominal(f) {
+            return (1.0, 1.0);
+        }
+        let Some(nom) = self.freq_states.last() else { return (1.0, 1.0) };
+        // Nearest table state at or below the requested clock (exact for
+        // table members; robust against off-table values).
+        let state = self
+            .freq_states
+            .iter()
+            .rev()
+            .find(|s| s.mhz <= f.0)
+            .unwrap_or(&self.freq_states[0]);
+        let s = state.mhz as f64 / nom.mhz as f64;
+        let v = state.volt / nom.volt;
+        (s, s * v * v)
+    }
+}
+
+/// The coarsened V100 DVFS table (see [`GpuSpec::v100`]).
+fn v100_freq_curve() -> Vec<FreqState> {
+    // V(f) ≈ 0.65 + 0.40 · f/f_nom — linear volt/clock curve, ~0.80 V at
+    // the lowest state, 1.05 V at the nominal 1380 MHz.
+    [510u16, 705, 900, 1095, 1230, 1327, 1380]
+        .iter()
+        .map(|&mhz| FreqState { mhz, volt: 0.65 + 0.40 * mhz as f64 / 1380.0 })
+        .collect()
 }
 
 /// Per-algorithm execution character: how efficiently it drives each
@@ -235,15 +340,27 @@ impl EnergyModel {
         1.0 + self.noise * (2.0 * unit - 1.0)
     }
 
-    /// Ideal (noise-free) roofline cost of executing `work` with `algo`.
+    /// Ideal (noise-free) roofline cost of executing `work` with `algo` at
+    /// the nominal clock.
     pub fn ideal_cost(&self, w: &Work, algo: Algorithm) -> SimCost {
+        self.ideal_cost_at(w, algo, FreqId::NOMINAL)
+    }
+
+    /// Ideal (noise-free) roofline cost at DVFS state `freq`: compute
+    /// throughput scales with the clock ratio `s`, memory bandwidth and
+    /// launch overhead do not, and the dynamic power term scales with
+    /// `s·V(f)²` (see the module docs). `FreqId::NOMINAL` reproduces the
+    /// pre-DVFS model bit-for-bit.
+    pub fn ideal_cost_at(&self, w: &Work, algo: Algorithm, freq: FreqId) -> SimCost {
+        let (s_clock, s_dyn) = self.spec.dvfs_scale(freq);
         let p = algo_profile(algo);
         let flops = w.flops * p.flops_factor;
         let bytes = w.bytes * p.bytes_factor;
         // Occupancy: small kernels underutilize the device, with a knee
         // that depends on the algorithm's launch/tiling granularity.
+        // (Occupancy is a tiling/geometry property — clock-independent.)
         let occ = if flops > 0.0 { (flops / (flops + p.occ_flops)).max(0.05) } else { 1.0 };
-        let t_c = flops / (self.spec.peak_flops * p.compute_eff * occ);
+        let t_c = flops / (self.spec.peak_flops * p.compute_eff * occ) / s_clock;
         let t_m = bytes / (self.spec.peak_bw * p.mem_eff);
         let t_busy = t_c.max(t_m);
         let time = t_busy + self.spec.launch_overhead_s;
@@ -252,7 +369,7 @@ impl EnergyModel {
         // Underoccupied kernels leave units idle: damp the draw by √occ.
         let draw = (0.7 * u_c + 0.3 * u_m).min(1.0) * p.intensity * occ.sqrt();
         let power = (self.spec.idle_power
-            + (self.spec.max_power - self.spec.idle_power) * draw)
+            + (self.spec.max_power - self.spec.idle_power) * draw * s_dyn)
             .min(self.spec.max_power);
         SimCost { time_ms: time * 1e3, power_w: power }
     }
@@ -261,10 +378,24 @@ impl EnergyModel {
     /// This is what the profiler writes into the cost database (the paper's
     /// per-node nvidia-smi measurement step).
     pub fn measured_cost(&self, sig: &str, w: &Work, algo: Algorithm) -> SimCost {
-        let ideal = self.ideal_cost(w, algo);
+        self.measured_cost_at(sig, w, algo, FreqId::NOMINAL)
+    }
+
+    /// As [`EnergyModel::measured_cost`] at a DVFS state. Nominal states
+    /// use the original jitter key, so pre-DVFS profiles are reproduced
+    /// bit-for-bit; each non-nominal state gets its own measurement noise.
+    pub fn measured_cost_at(&self, sig: &str, w: &Work, algo: Algorithm, freq: FreqId) -> SimCost {
+        let ideal = self.ideal_cost_at(w, algo, freq);
+        if self.spec.is_nominal(freq) {
+            return SimCost {
+                time_ms: ideal.time_ms * self.jitter(sig, 1),
+                power_w: ideal.power_w * self.jitter(sig, 2),
+            };
+        }
+        let key = format!("{sig}@f{}", freq.0);
         SimCost {
-            time_ms: ideal.time_ms * self.jitter(sig, 1),
-            power_w: ideal.power_w * self.jitter(sig, 2),
+            time_ms: ideal.time_ms * self.jitter(&key, 1),
+            power_w: ideal.power_w * self.jitter(&key, 2),
         }
     }
 
@@ -272,12 +403,13 @@ impl EnergyModel {
     /// sums node busy times, partially hides launch overhead, adds framework
     /// dispatch per node, and averages power *including the idle slack* —
     /// so actual time lands a few percent above the additive estimate and
-    /// actual power a bit below it, with the same signs as the paper.
-    pub fn graph_run(&self, nodes: &[(String, Work, Algorithm)]) -> SimCost {
+    /// actual power a bit below it, with the same signs as the paper. Each
+    /// node runs at its assigned DVFS state (all-`NOMINAL` = pre-DVFS run).
+    pub fn graph_run(&self, nodes: &[(String, Work, Algorithm, FreqId)]) -> SimCost {
         let mut sum_t = 0.0; // additive-estimate time (per-node measured)
         let mut sum_e = 0.0; // additive-estimate energy
-        for (sig, w, algo) in nodes {
-            let c = self.measured_cost(sig, w, *algo);
+        for (sig, w, algo, freq) in nodes {
+            let c = self.measured_cost_at(sig, w, *algo, *freq);
             sum_t += c.time_ms * 1e-3;
             sum_e += c.power_w * c.time_ms * 1e-3;
         }
@@ -362,18 +494,18 @@ mod tests {
     #[test]
     fn graph_run_slower_than_sum_and_cooler() {
         let m = EnergyModel::v100(3);
-        let nodes: Vec<(String, Work, Algorithm)> = (0..20)
-            .map(|i| (format!("n{i}"), conv_work(), Algorithm::ConvIm2col))
+        let nodes: Vec<(String, Work, Algorithm, FreqId)> = (0..20)
+            .map(|i| (format!("n{i}"), conv_work(), Algorithm::ConvIm2col, FreqId::NOMINAL))
             .collect();
         let run = m.graph_run(&nodes);
         let est_time: f64 = nodes
             .iter()
-            .map(|(s, w, a)| m.measured_cost(s, w, *a).time_ms)
+            .map(|(s, w, a, f)| m.measured_cost_at(s, w, *a, *f).time_ms)
             .sum();
         let est_energy: f64 = nodes
             .iter()
-            .map(|(s, w, a)| {
-                let c = m.measured_cost(s, w, *a);
+            .map(|(s, w, a, f)| {
+                let c = m.measured_cost_at(s, w, *a, *f);
                 c.energy_j()
             })
             .sum();
@@ -386,5 +518,95 @@ mod tests {
     fn energy_is_time_times_power() {
         let c = SimCost { time_ms: 0.0195, power_w: 144.5 };
         assert!((c.energy_j() - 2.81775).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nominal_freq_reproduces_pre_dvfs_costs_bitwise() {
+        let m = EnergyModel::v100(7);
+        let w = conv_work();
+        for algo in [Algorithm::ConvIm2col, Algorithm::ConvDirect, Algorithm::Passthrough] {
+            let a = m.ideal_cost(&w, algo);
+            let b = m.ideal_cost_at(&w, algo, FreqId::NOMINAL);
+            // The max table state IS the nominal state.
+            let c = m.ideal_cost_at(&w, algo, FreqId(m.spec.nominal_mhz()));
+            assert_eq!(a.time_ms.to_bits(), b.time_ms.to_bits());
+            assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
+            assert_eq!(a.time_ms.to_bits(), c.time_ms.to_bits());
+            let ma = m.measured_cost("s", &w, algo);
+            let mb = m.measured_cost_at("s", &w, algo, FreqId::NOMINAL);
+            assert_eq!(ma, mb);
+        }
+    }
+
+    #[test]
+    fn dvfs_monotone_in_frequency() {
+        // Time non-increasing and power non-decreasing as the clock rises
+        // (ideal model; the property test covers random work shapes).
+        let m = EnergyModel::v100(7);
+        let w = conv_work();
+        for algo in [Algorithm::ConvIm2col, Algorithm::ConvDirect, Algorithm::ConvWinograd] {
+            let mut prev: Option<SimCost> = None;
+            for st in &m.spec.freq_states {
+                let c = m.ideal_cost_at(&w, algo, FreqId(st.mhz));
+                if let Some(p) = prev {
+                    assert!(c.time_ms <= p.time_ms + 1e-12, "{algo:?}: time rose with clock");
+                    assert!(c.power_w >= p.power_w - 1e-12, "{algo:?}: power fell with clock");
+                }
+                prev = Some(c);
+            }
+        }
+    }
+
+    #[test]
+    fn dvfs_sweet_spot_below_max_frequency() {
+        // The arXiv:1905.11012 phenomenon: for a compute-bound conv the
+        // energy-optimal clock is strictly below the maximum but above the
+        // minimum (idle power punishes very low clocks).
+        let m = EnergyModel::v100(7);
+        let w = conv_work();
+        let energies: Vec<f64> = m
+            .spec
+            .freq_states
+            .iter()
+            .map(|st| m.ideal_cost_at(&w, Algorithm::ConvIm2col, FreqId(st.mhz)).energy_j())
+            .collect();
+        let best = energies
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(best > 0, "lowest clock should not be energy-optimal (idle power)");
+        assert!(best < energies.len() - 1, "max clock should not be energy-optimal");
+    }
+
+    #[test]
+    fn memory_bound_work_downclocks_for_free() {
+        // Bandwidth-bound work: time pinned by t_m, so a lower clock costs
+        // no (ideal) time but strictly less power → strictly less energy.
+        let m = EnergyModel::v100(7);
+        let w = Work { flops: 1.0e5, bytes: 64.0e6 }; // ~0.0016 flop/byte
+        let lo = FreqId(m.spec.freq_states[2].mhz); // 900 MHz
+        let a = m.ideal_cost_at(&w, Algorithm::Passthrough, lo);
+        let b = m.ideal_cost(&w, Algorithm::Passthrough);
+        assert_eq!(a.time_ms.to_bits(), b.time_ms.to_bits(), "memory-bound time must not move");
+        assert!(a.power_w < b.power_w, "downclocked power {} vs nominal {}", a.power_w, b.power_w);
+        assert!(a.energy_j() < b.energy_j());
+    }
+
+    #[test]
+    fn freq_id_describe_and_scale() {
+        assert_eq!(FreqId::NOMINAL.describe(), "nominal");
+        assert_eq!(FreqId(900).describe(), "900MHz");
+        let spec = GpuSpec::v100();
+        assert_eq!(spec.nominal_mhz(), 1380);
+        assert_eq!(spec.dvfs_scale(FreqId::NOMINAL), (1.0, 1.0));
+        assert_eq!(spec.dvfs_scale(FreqId(1380)), (1.0, 1.0));
+        let (s, d) = spec.dvfs_scale(FreqId(900));
+        assert!((s - 900.0 / 1380.0).abs() < 1e-12);
+        assert!(d < s, "voltage drop makes dynamic power fall faster than clock");
+        // CPU spec has no table: everything is nominal.
+        let cpu = GpuSpec::cpu_1core();
+        assert_eq!(cpu.dvfs_scale(FreqId(900)), (1.0, 1.0));
     }
 }

@@ -233,7 +233,9 @@ pub fn graph_from_json(v: &Json) -> anyhow::Result<Graph> {
     Ok(g)
 }
 
-/// Serialize an optimized plan: graph + per-node algorithm assignment.
+/// Serialize an optimized plan: graph + per-node algorithm assignment +
+/// (when any node runs off the nominal clock) per-node DVFS states. Plans
+/// without a frequency axis serialize byte-identically to pre-DVFS plans.
 pub fn plan_to_json(g: &Graph, a: &Assignment) -> Json {
     let mut root = graph_to_json(g);
     let algos: Vec<Json> = g
@@ -244,10 +246,17 @@ pub fn plan_to_json(g: &Graph, a: &Assignment) -> Json {
         })
         .collect();
     root.set("assignment", Json::Arr(algos));
+    if g.ids().any(|id| !a.freq(id).is_nominal()) {
+        let freqs: Vec<Json> = g
+            .ids()
+            .map(|id| Json::Num(a.freq(id).0 as f64))
+            .collect();
+        root.set("freq_mhz", Json::Arr(freqs));
+    }
     root
 }
 
-/// Load an optimized plan (graph + assignment).
+/// Load an optimized plan (graph + assignment + optional DVFS states).
 pub fn plan_from_json(v: &Json, reg: &crate::algo::AlgorithmRegistry) -> anyhow::Result<(Graph, Assignment)> {
     let g = graph_from_json(v)?;
     let mut a = Assignment::default_for(&g, reg);
@@ -258,6 +267,18 @@ pub fn plan_from_json(v: &Json, reg: &crate::algo::AlgorithmRegistry) -> anyhow:
                 let algo = Algorithm::from_name(name)
                     .ok_or_else(|| anyhow::anyhow!("unknown algorithm `{name}`"))?;
                 a.set(NodeId(i), algo);
+            }
+        }
+    }
+    if let Some(arr) = v.get("freq_mhz").and_then(Json::as_arr) {
+        anyhow::ensure!(arr.len() == g.len(), "freq_mhz length != node count");
+        for (i, entry) in arr.iter().enumerate() {
+            let mhz = entry
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("freq_mhz[{i}] not a number"))?;
+            anyhow::ensure!(mhz <= u16::MAX as usize, "freq_mhz[{i}] out of range");
+            if mhz > 0 && a.get(NodeId(i)).is_some() {
+                a.set_freq(NodeId(i), crate::energysim::FreqId(mhz as u16));
             }
         }
     }
@@ -320,6 +341,33 @@ mod tests {
         assert_eq!(graph_hash(&g), graph_hash(&back_g));
         assert_eq!(back_a.get(conv), Some(Algorithm::ConvDirect));
         assert_eq!(a.distance(&back_a), 0);
+    }
+
+    #[test]
+    fn dvfs_plan_roundtrips_and_off_plans_stay_pre_dvfs() {
+        use crate::energysim::FreqId;
+        let g = models::simple::build_cnn(tiny());
+        let reg = AlgorithmRegistry::new();
+        let a = Assignment::default_for(&g, &reg);
+        // All-nominal plan: no frequency key — byte-identical to a plan
+        // written before the DVFS axis existed.
+        let j = plan_to_json(&g, &a);
+        assert!(j.get("freq_mhz").is_none());
+
+        // Mixed per-node plan roundtrips exactly.
+        let mut a2 = a.clone();
+        let conv = g
+            .nodes()
+            .find(|(_, n)| matches!(n.op, OpKind::Conv2d { .. }))
+            .unwrap()
+            .0;
+        a2.set_freq(conv, FreqId(900));
+        let j2 = plan_to_json(&g, &a2);
+        assert!(j2.get("freq_mhz").is_some());
+        let (back_g, back_a) = plan_from_json(&j2, &reg).unwrap();
+        assert_eq!(graph_hash(&g), graph_hash(&back_g));
+        assert_eq!(back_a.freq(conv), FreqId(900));
+        assert_eq!(a2.distance(&back_a), 0);
     }
 
     #[test]

@@ -34,6 +34,25 @@
 //! println!("energy saved: {:.1}%", 100.0 * result.energy_savings());
 //! println!("search took {:.2}s over {} waves", result.stats.wall_s, result.stats.waves);
 //! ```
+//!
+//! DVFS: add the GPU core clock as a third search dimension — the joint
+//! `(graph, algorithm, frequency)` optimization (`eadgo optimize --dvfs
+//! per-graph` on the CLI). `PerGraph` locks one frequency state per plan;
+//! `PerNode` lets every node pick its own state jointly with its
+//! algorithm, so memory-bound nodes down-clock essentially for free:
+//! ```no_run
+//! use eadgo::prelude::*;
+//! use eadgo::search::DvfsMode;
+//! let g = eadgo::models::squeezenet::build(Default::default());
+//! let ctx = OptimizerContext::offline_default();
+//! let cfg = SearchConfig { dvfs: DvfsMode::PerGraph, ..Default::default() };
+//! let result = optimize(&g, &ctx, &CostFunction::Energy, &cfg).unwrap();
+//! println!(
+//!     "energy saved: {:.1}% at {}",
+//!     100.0 * result.energy_savings(),
+//!     eadgo::report::describe_freqs(&result.assignment)
+//! );
+//! ```
 
 pub mod algo;
 pub mod config;
@@ -57,8 +76,10 @@ pub mod prelude {
     pub use crate::cost::{
         CostDb, CostFunction, CostOracle, GraphCost, GraphCostTable, NodeCost, SigId,
     };
-    pub use crate::energysim::{EnergyModel, GpuSpec};
+    pub use crate::energysim::{EnergyModel, FreqId, FreqState, GpuSpec};
     pub use crate::graph::{Graph, Node, OpKind, TensorShape};
-    pub use crate::search::{optimize, OptimizeResult, OptimizerContext, SearchConfig};
+    pub use crate::search::{
+        optimize, DvfsMode, OptimizeResult, OptimizerContext, SearchConfig,
+    };
     pub use crate::subst::RuleSet;
 }

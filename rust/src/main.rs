@@ -35,6 +35,7 @@ fn main() {
 }
 
 fn run(args: &Args) -> anyhow::Result<()> {
+    validate_args(args)?;
     match args.subcommand.as_deref() {
         Some("optimize") => cmd_optimize(args),
         Some("reproduce") => cmd_reproduce(args),
@@ -55,6 +56,49 @@ fn run(args: &Args) -> anyhow::Result<()> {
     }
 }
 
+/// Options shared by every model-driven subcommand (RunConfig overrides).
+const COMMON_OPTS: &[&str] = &[
+    "model",
+    "objective",
+    "alpha",
+    "inner-distance",
+    "max-dequeues",
+    "threads",
+    "dvfs",
+    "seed",
+    "db",
+    "artifacts",
+    "provider",
+    "resolution",
+    "width-div",
+    "batch",
+    "config",
+];
+
+/// Reject mistyped flags up front so the user gets the usage text back
+/// instead of a silently-ignored option (or a panic downstream).
+fn validate_args(args: &Args) -> anyhow::Result<()> {
+    let extra: &[&str] = match args.subcommand.as_deref() {
+        Some("optimize") => &["save-plan"],
+        Some("reproduce") => {
+            return args
+                .require_known(&["table", "quick", "seed"])
+                .map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"));
+        }
+        Some("profile") | Some("show") => &[],
+        Some("constrain") => &["time-budget", "probes"],
+        Some("run") => &["iters", "plan"],
+        Some("serve") => &["plan", "optimize", "requests", "batch-max", "rate", "max-wait-ms"],
+        Some("zoo") => {
+            return args.require_known(&[]).map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"));
+        }
+        _ => return Ok(()), // unknown subcommand / bare call handled in run()
+    };
+    let mut allowed: Vec<&str> = COMMON_OPTS.to_vec();
+    allowed.extend_from_slice(extra);
+    args.require_known(&allowed).map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"))
+}
+
 const USAGE: &str = "\
 eadgo — energy-aware DNN graph optimization (Wang, Ge, Qiu; ReCoML@MLSys'20 reproduction)
 
@@ -62,11 +106,12 @@ USAGE: eadgo <subcommand> [--options]
 
   optimize  --model M --objective (time|energy|power|linear:W|power_energy:W)
             [--alpha 1.05] [--inner-distance D] [--max-dequeues N]
-            [--threads T] [--db profiles.json] [--provider sim|cpu]
-            [--config run.json]
+            [--threads T] [--dvfs off|per-graph|per-node]
+            [--db profiles.json] [--provider sim|cpu] [--config run.json]
   reproduce --table (1|2|3|4|5|all) [--quick] [--seed S]
   profile   --model M [--provider sim|cpu] [--db profiles.json]
   constrain --model M --time-budget MS [--probes 8] [--threads T]
+            [--dvfs off|per-graph|per-node]
   run       --model M [--artifacts DIR] [--iters N]
   serve     --model M [--plan plan.json] [--optimize [OBJ]] [--requests N]
             [--batch-max B] [--rate HZ] [--artifacts DIR] [--threads T]
@@ -76,10 +121,15 @@ USAGE: eadgo <subcommand> [--options]
   --threads T parallelizes candidate evaluation in the outer search
   (T=0 means one worker per core); with the deterministic sim provider
   the optimized plan is bit-identical for every T (cpu measurements are
-  noisy by nature). optimize accepts --save-plan out.json to persist the
-  optimized (graph, assignment); run/serve accept --plan to load it
-  back. serve --optimize runs the optimizer first and serves the
-  result, sharing one warm cost oracle across optimize and serve.
+  noisy by nature). --dvfs adds the GPU core clock to the search space:
+  per-graph locks one frequency state for the whole plan, per-node lets
+  every node pick its own state jointly with its algorithm (memory-bound
+  nodes down-clock for free). constrain uses frequency as the cheapest
+  lever when the time budget binds. optimize accepts --save-plan
+  out.json to persist the optimized (graph, assignment, frequencies);
+  run/serve accept --plan to load it back. serve --optimize runs the
+  optimizer first and serves the result, sharing one warm cost oracle
+  across optimize and serve.
 ";
 
 fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
@@ -113,13 +163,14 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     let ctx = build_context(&cfg)?;
     let scfg = cfg.search_config();
     println!(
-        "optimizing {} ({} nodes) for {} (alpha={}, provider={}, threads={})",
+        "optimizing {} ({} nodes) for {} (alpha={}, provider={}, threads={}, dvfs={})",
         cfg.model,
         g0.runtime_node_count(),
         objective.describe(),
         cfg.alpha,
         cfg.provider,
-        scfg.effective_threads()
+        scfg.effective_threads(),
+        scfg.dvfs.describe()
     );
     let res = optimize(&g0, &ctx, &objective, &scfg)?;
     println!(
@@ -140,6 +191,9 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         -100.0 * res.energy_savings(),
         -100.0 * res.time_savings(),
     );
+    if !matches!(scfg.dvfs, eadgo::search::DvfsMode::Off) {
+        println!("plan frequency: {}", eadgo::report::describe_freqs(&res.assignment));
+    }
     println!(
         "search: {} graphs expanded in {} waves, {} generated, {} deduped, {} profiles measured, {} threads, {:.2}s",
         res.stats.expanded,
@@ -238,6 +292,9 @@ fn cmd_constrain(args: &Args) -> anyhow::Result<()> {
             f3(budget),
             f3(r.result.cost.energy_j)
         );
+        if !matches!(cfg.dvfs, eadgo::search::DvfsMode::Off) {
+            println!("plan frequency: {}", eadgo::report::describe_freqs(&r.result.assignment));
+        }
     }
     println!("probe trace (w, time_ms, energy):");
     for (w, t, e) in &r.trace {
@@ -249,11 +306,24 @@ fn cmd_constrain(args: &Args) -> anyhow::Result<()> {
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let iters = args.get_usize("iters", 10)?;
-    let g = get_model(&cfg)?;
     let reg = eadgo::algo::AlgorithmRegistry::new();
-    let a = Assignment::default_for(&g, &reg);
+    // Either a persisted optimized plan or a zoo model with defaults.
+    let (g, a) = match args.get("plan") {
+        Some(path) => eadgo::graph::serde::load_plan(std::path::Path::new(path), &reg)?,
+        None => {
+            let g = get_model(&cfg)?;
+            let a = Assignment::default_for(&g, &reg);
+            (g, a)
+        }
+    };
     let mut rng = Rng::seed_from(cfg.seed);
-    let shape = vec![cfg.model_cfg.batch, 3, cfg.model_cfg.resolution, cfg.model_cfg.resolution];
+    let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!(e))?;
+    let shape = g
+        .nodes()
+        .find_map(|(id, n)| {
+            matches!(n.op, eadgo::graph::OpKind::Input { .. }).then(|| shapes[id.0][0].clone())
+        })
+        .ok_or_else(|| anyhow::anyhow!("graph has no input"))?;
     let x = Tensor::rand(&shape, &mut rng, -1.0, 1.0);
 
     let manifest_path = cfg.artifacts_dir.join("manifest.json");
@@ -369,7 +439,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             let mut outs = Vec::with_capacity(batch.len());
             for x in batch {
                 let (o, _) = engine.run_prepared(&g, &a, &prepared, std::slice::from_ref(x))?;
-                outs.push(o.outputs.into_iter().next().unwrap());
+                let y = o
+                    .outputs
+                    .into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("engine returned no outputs"))?;
+                outs.push(y);
             }
             Ok(outs)
         })?
@@ -381,7 +456,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             let mut outs = Vec::with_capacity(batch.len());
             for x in batch {
                 let o = engine.run_plan(&g, &a, &plan, std::slice::from_ref(x))?;
-                outs.push(o.outputs.into_iter().next().unwrap());
+                let y = o
+                    .outputs
+                    .into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("engine returned no outputs"))?;
+                outs.push(y);
             }
             Ok(outs)
         })?
@@ -403,11 +483,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         report.busy_s
     );
     if let Some(est) = report.plan_cost {
+        // est.energy_j is J per 1000 inferences — numerically mJ/request.
         println!(
-            "oracle estimate for served plan: time {} ms  power {} W  energy {} J/1k",
+            "oracle estimate for served plan: time {} ms  power {} W  energy/request {} mJ at {}",
             f3(est.time_ms),
             f3(est.power_w()),
-            f3(est.energy_j)
+            f3(est.energy_j),
+            eadgo::report::describe_freqs(&a)
         );
     }
     Ok(())

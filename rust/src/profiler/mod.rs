@@ -15,7 +15,7 @@
 
 use crate::algo::{Algorithm, AlgorithmRegistry};
 use crate::cost::{CostDb, NodeCost};
-use crate::energysim::{node_work, EnergyModel, Work};
+use crate::energysim::{node_work, EnergyModel, FreqId, FreqState, Work};
 use crate::engine::exec::execute_node;
 use crate::engine::pjrt::PjrtEngine;
 use crate::graph::{Graph, OpKind, TensorShape};
@@ -32,6 +32,14 @@ use std::time::Instant;
 /// for any internal state) and must be `Send + Sync`.
 pub trait CostProvider: Send + Sync {
     fn provider_name(&self) -> String;
+
+    /// The DVFS states the measured device exposes (ascending; last =
+    /// nominal). Default: none — the device runs one fixed clock and only
+    /// `FreqId::NOMINAL` measurements are meaningful.
+    fn freq_states(&self) -> Vec<FreqState> {
+        Vec::new()
+    }
+
     fn measure(
         &self,
         sig: &str,
@@ -39,6 +47,7 @@ pub trait CostProvider: Send + Sync {
         in_shapes: &[TensorShape],
         out_shapes: &[TensorShape],
         algo: Algorithm,
+        freq: FreqId,
     ) -> NodeCost;
 }
 
@@ -58,6 +67,10 @@ impl CostProvider for SimV100Provider {
         self.model.spec.name.clone()
     }
 
+    fn freq_states(&self) -> Vec<FreqState> {
+        self.model.spec.freq_states.clone()
+    }
+
     fn measure(
         &self,
         sig: &str,
@@ -65,9 +78,10 @@ impl CostProvider for SimV100Provider {
         in_shapes: &[TensorShape],
         out_shapes: &[TensorShape],
         algo: Algorithm,
+        freq: FreqId,
     ) -> NodeCost {
         let w = node_work(op, in_shapes, out_shapes);
-        let c = self.model.measured_cost(sig, &w, algo);
+        let c = self.model.measured_cost_at(sig, &w, algo, freq);
         NodeCost { time_ms: c.time_ms, power_w: c.power_w }
     }
 }
@@ -116,6 +130,9 @@ impl CostProvider for CpuProvider<'_> {
         format!("cpu-measured({})", if self.runtime.is_some() { "pjrt+ref" } else { "ref" })
     }
 
+    // No freq_states override: the CPU host runs one fixed clock, so the
+    // oracle only ever asks for `FreqId::NOMINAL` and DVFS search modes
+    // degenerate to the nominal-only search.
     fn measure(
         &self,
         sig: &str,
@@ -123,6 +140,7 @@ impl CostProvider for CpuProvider<'_> {
         in_shapes: &[TensorShape],
         out_shapes: &[TensorShape],
         algo: Algorithm,
+        _freq: FreqId,
     ) -> NodeCost {
         // Synthesize inputs (RNG locked only for synthesis, not timing).
         let inputs: Vec<Tensor> = {
@@ -215,7 +233,8 @@ pub fn ensure_profiled_with(
                 report.cached += 1;
                 continue;
             }
-            let cost = provider.measure(&sig, &node.op, &in_shapes, out_shapes, algo);
+            let cost =
+                provider.measure(&sig, &node.op, &in_shapes, out_shapes, algo, FreqId::NOMINAL);
             db.insert(&sig, algo, cost, &prov_name);
             report.measured += 1;
         }

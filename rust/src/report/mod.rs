@@ -56,6 +56,21 @@ impl Table {
     }
 }
 
+/// Human-readable DVFS summary of a plan: "nominal", "900MHz", or a
+/// mixed-state histogram like "510MHz×2 900MHz×5 nominal×9".
+pub fn describe_freqs(a: &crate::algo::Assignment) -> String {
+    let hist = a.freq_histogram();
+    match hist.len() {
+        0 => "nominal".to_string(),
+        1 => hist[0].0.describe(),
+        _ => hist
+            .iter()
+            .map(|(f, n)| format!("{}×{n}", f.describe()))
+            .collect::<Vec<_>>()
+            .join(" "),
+    }
+}
+
 /// 3-significant-digit formatting matching the paper's tables.
 pub fn f3(x: f64) -> String {
     if !x.is_finite() {

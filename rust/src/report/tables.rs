@@ -4,13 +4,13 @@
 //! numbers so benches and tests can assert on the *shape* of the results
 //! (who wins, by what factor) rather than string output.
 
-use super::{f3, Table};
+use super::{describe_freqs, f3, Table};
 use crate::algo::{Algorithm, Assignment};
 use crate::cost::{CostFunction, GraphCost};
-use crate::energysim::{node_work, EnergyModel, SimCost, Work};
+use crate::energysim::{node_work, EnergyModel, FreqId, SimCost, Work};
 use crate::graph::{Graph, OpKind};
 use crate::models::{self, ModelConfig};
-use crate::search::{optimize, OptimizeResult, OptimizerContext, SearchConfig};
+use crate::search::{optimize, DvfsMode, OptimizeResult, OptimizerContext, SearchConfig};
 
 /// Experiment-wide knobs.
 #[derive(Debug, Clone, Copy)]
@@ -73,9 +73,10 @@ impl ExperimentConfig {
 
 /// "Actually measure" a (G, A) on the simulated device: whole-graph run with
 /// dispatch overheads + idle gaps (the paper's nvidia-smi measurement step).
+/// Each node executes at its plan frequency (all-nominal for DVFS-off plans).
 pub fn measure_actual(g: &Graph, a: &Assignment, model: &EnergyModel) -> SimCost {
     let shapes = g.infer_shapes().expect("invalid graph");
-    let mut nodes: Vec<(String, Work, Algorithm)> = Vec::new();
+    let mut nodes: Vec<(String, Work, Algorithm, FreqId)> = Vec::new();
     for (id, node) in g.nodes() {
         if node.op.is_constant_space() || matches!(node.op, OpKind::Input { .. }) {
             continue;
@@ -87,7 +88,7 @@ pub fn measure_actual(g: &Graph, a: &Assignment, model: &EnergyModel) -> SimCost
             .collect();
         let sig = node.op.signature(&in_shapes);
         let w = node_work(&node.op, &in_shapes, &shapes[id.0]);
-        nodes.push((sig, w, a.get(id).unwrap_or(Algorithm::Passthrough)));
+        nodes.push((sig, w, a.get(id).unwrap_or(Algorithm::Passthrough), a.freq(id)));
     }
     model.graph_run(&nodes)
 }
@@ -283,7 +284,7 @@ impl Table3Data {
 pub fn table3(cfg: &ExperimentConfig) -> (Table, Table3Data) {
     let mut t = Table::new(
         "Table 3: various goals on 3 CNN graphs (sim-V100)",
-        &["model", "variant", "time_ms", "power_w", "energy_j/1k"],
+        &["model", "variant", "time_ms", "power_w", "energy_j/1k", "freq"],
     );
     let mut data = Table3Data { rows: Vec::new() };
     let model = cfg.model();
@@ -299,6 +300,7 @@ pub fn table3(cfg: &ExperimentConfig) -> (Table, Table3Data) {
                 f3(c.time_ms),
                 f3(c.power_w),
                 f3(c.energy_j()),
+                describe_freqs(a),
             ]);
             data.rows.push(Table3Row {
                 model: name.to_string(),
@@ -342,6 +344,22 @@ pub fn table3(cfg: &ExperimentConfig) -> (Table, Table3Data) {
             let res = optimize(&g0, &ctx, &objective, &scfg).unwrap();
             push(variant, &res.graph, &res.assignment, &mut data);
         }
+        // Ours + the DVFS frequency axis (beyond the paper: the joint
+        // (G, A, f) search of arXiv:1905.11012 / PolyThrottle).
+        for (variant, dvfs) in [
+            ("best_energy@per-graph", DvfsMode::PerGraph),
+            ("best_energy@per-node", DvfsMode::PerNode),
+        ] {
+            let ctx = cfg.ctx();
+            let res = optimize(
+                &g0,
+                &ctx,
+                &CostFunction::Energy,
+                &SearchConfig { dvfs, ..scfg.clone() },
+            )
+            .unwrap();
+            push(variant, &res.graph, &res.assignment, &mut data);
+        }
     }
     (t, data)
 }
@@ -361,7 +379,7 @@ pub fn table4(cfg: &ExperimentConfig) -> (Table, Table4Data) {
     let scfg = cfg.search_config();
     let mut t = Table::new(
         "Table 4: balance between time and energy (SqueezeNet, sim-V100)",
-        &["objective", "time_ms", "power_w", "energy_j/1k"],
+        &["objective", "time_ms", "power_w", "energy_j/1k", "freq"],
     );
     let mut data = Table4Data { rows: Vec::new() };
     // paper sweeps w (weight on TIME) from 1 to 0
@@ -376,7 +394,13 @@ pub fn table4(cfg: &ExperimentConfig) -> (Table, Table4Data) {
         let ctx = cfg.ctx();
         let res: OptimizeResult = optimize(&g0, &ctx, &objective, &scfg).unwrap();
         let c = measure_actual(&res.graph, &res.assignment, &model);
-        t.row(vec![label.clone(), f3(c.time_ms), f3(c.power_w), f3(c.energy_j())]);
+        t.row(vec![
+            label.clone(),
+            f3(c.time_ms),
+            f3(c.power_w),
+            f3(c.energy_j()),
+            describe_freqs(&res.assignment),
+        ]);
         data.rows.push((label, wt, c));
     }
     (t, data)

@@ -4,10 +4,18 @@
 //! `w·E + (1-w)·T` — requiring only *pair-wise* accuracy from the cost
 //! model, which the paper argues is more robust than MetaFlow's
 //! value-accuracy-dependent approach.
+//!
+//! With DVFS enabled, a final **frequency refinement** pass treats the
+//! clock as the cheapest lever once the budget binds (PolyThrottle,
+//! arXiv:2310.19991): the searched plan's algorithms are frozen and only
+//! its frequency states move — down wherever the latency headroom allows
+//! (free energy on memory-bound nodes), never past the budget.
 
-use super::outer::{OptimizerContext, SearchConfig};
+use super::outer::{DvfsMode, OptimizerContext, SearchConfig};
 use super::{optimize, OptimizeResult};
-use crate::cost::CostFunction;
+use crate::algo::Assignment;
+use crate::cost::{CostFunction, CostOracle, GraphCost};
+use crate::energysim::FreqId;
 use crate::graph::Graph;
 
 /// Result of a constrained search: the chosen weight and the per-step trace.
@@ -24,7 +32,9 @@ pub struct ConstrainedResult {
 ///
 /// Larger `w` (weight on energy) yields lower energy but higher time, so we
 /// binary-search the largest feasible `w`. Falls back to the best-time
-/// solution when even `w = 0` misses the budget (infeasible).
+/// solution when even `w = 0` misses the budget (infeasible). With DVFS
+/// enabled the feasible winner gets a final frequency-refinement pass
+/// (see [`refine_frequency_to_budget`]).
 pub fn optimize_with_time_budget(
     g0: &Graph,
     ctx: &OptimizerContext,
@@ -53,7 +63,7 @@ pub fn optimize_with_time_budget(
     let full = run(1.0)?;
     trace.push((1.0, full.cost.time_ms, full.cost.energy_j));
     if full.cost.time_ms <= time_budget_ms {
-        return Ok(ConstrainedResult { result: full, weight: 1.0, trace, feasible: true });
+        return finish_constrained(ctx, cfg, time_budget_ms, full, 1.0, trace, None);
     }
 
     for _ in 0..probes {
@@ -70,7 +80,178 @@ pub fn optimize_with_time_budget(
             hi = mid;
         }
     }
-    Ok(ConstrainedResult { result: best, weight: best_w, trace, feasible: true })
+    finish_constrained(ctx, cfg, time_budget_ms, best, best_w, trace, Some(&full))
+}
+
+/// Final step of every feasible outcome: frequency refinement of the
+/// winning plan, plus — when the energy-extreme (w=1) plan overshot the
+/// budget — an attempt to pull *that* plan back inside it by raising
+/// clocks (frequency as the cheapest lever when the budget binds, instead
+/// of giving the low-energy algorithms up entirely).
+#[allow(clippy::too_many_arguments)]
+fn finish_constrained(
+    ctx: &OptimizerContext,
+    cfg: &SearchConfig,
+    time_budget_ms: f64,
+    mut result: OptimizeResult,
+    weight: f64,
+    trace: Vec<(f64, f64, f64)>,
+    energy_extreme: Option<&OptimizeResult>,
+) -> anyhow::Result<ConstrainedResult> {
+    fn adopt(
+        a: Assignment,
+        c: GraphCost,
+        result: &mut OptimizeResult,
+        graph: Option<&Graph>,
+        time_budget_ms: f64,
+    ) {
+        if c.time_ms <= time_budget_ms && c.energy_j < result.cost.energy_j {
+            if let Some(g) = graph {
+                result.graph = g.clone();
+            }
+            result.assignment = a;
+            result.cost = c;
+            result.objective_value = result.objective.eval(&c);
+        }
+    }
+    if let Some(extreme) = energy_extreme {
+        if let Some((a, c)) = refine_frequency_to_budget(
+            &ctx.oracle,
+            &extreme.graph,
+            &extreme.assignment,
+            time_budget_ms,
+            cfg.dvfs,
+        )? {
+            adopt(a, c, &mut result, Some(&extreme.graph), time_budget_ms);
+        }
+    }
+    if let Some((a, c)) = refine_frequency_to_budget(
+        &ctx.oracle,
+        &result.graph,
+        &result.assignment,
+        time_budget_ms,
+        cfg.dvfs,
+    )? {
+        adopt(a, c, &mut result, None, time_budget_ms);
+    }
+    Ok(ConstrainedResult { result, weight, trace, feasible: true })
+}
+
+/// DVFS refinement of a plan against a latency budget: keep the algorithm
+/// assignment frozen and move only frequency states — "frequency as the
+/// cheapest lever".
+///
+/// - `PerGraph`: try every uniform state and keep the lowest-energy
+///   feasible one.
+/// - `PerNode`: two greedy phases. If the plan overshoots the budget,
+///   first *raise* clocks — each step takes the move with the best
+///   time-saved-per-energy-added ratio — until the plan fits (or no move
+///   saves time). Then *lower* clocks — each node takes the energy-minimal
+///   state whose incremental cost keeps the plan inside the budget
+///   (memory-bound nodes down-clock for free) — until a fixpoint.
+///
+/// Returns `None` when DVFS is off, the device has no states, or no
+/// frequency moves can make the plan feasible; otherwise the refined
+/// (assignment, cost). Deterministic: nodes in id order, states in table
+/// order, strict-improvement acceptance.
+pub fn refine_frequency_to_budget(
+    oracle: &CostOracle,
+    g: &Graph,
+    a: &Assignment,
+    time_budget_ms: f64,
+    mode: DvfsMode,
+) -> anyhow::Result<Option<(Assignment, GraphCost)>> {
+    let freqs = oracle.dvfs_freqs();
+    if mode == DvfsMode::Off || freqs.is_empty() {
+        return Ok(None);
+    }
+    let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
+    let mut all = Vec::with_capacity(freqs.len() + 1);
+    all.push(FreqId::NOMINAL);
+    all.extend_from_slice(freqs);
+    let (table, _) = oracle.table_for_freqs(g, &shapes, &all);
+
+    match mode {
+        DvfsMode::PerGraph => {
+            let mut best: Option<(Assignment, GraphCost)> = None;
+            for &f in &all {
+                let mut af = a.clone();
+                af.set_uniform_freq(f);
+                let c = table.eval(&af);
+                if c.time_ms <= time_budget_ms
+                    && best.as_ref().is_none_or(|(_, b)| c.energy_j < b.energy_j)
+                {
+                    best = Some((af, c));
+                }
+            }
+            Ok(best)
+        }
+        DvfsMode::PerNode => {
+            let mut af = a.clone();
+            let mut cost = table.eval(&af);
+            // Phase 1 — budget binds: raise clocks, cheapest energy per
+            // millisecond saved first, until the plan fits.
+            while cost.time_ms > time_budget_ms {
+                let mut best_move: Option<(crate::graph::NodeId, FreqId, GraphCost, f64)> = None;
+                for id in table.costed_ids() {
+                    let algo = af.get(id).expect("costed node unassigned");
+                    let cur_f = af.freq(id);
+                    for (f, slab) in table.freq_options(id) {
+                        if *f == cur_f || !slab.iter().any(|(al, _)| *al == algo) {
+                            continue;
+                        }
+                        let cand = table.eval_swap(cost, &af, id, algo, *f);
+                        let saved = cost.time_ms - cand.time_ms;
+                        if saved <= 0.0 {
+                            continue;
+                        }
+                        let ratio = (cand.energy_j - cost.energy_j) / saved;
+                        if best_move.as_ref().is_none_or(|(_, _, _, r)| ratio < *r) {
+                            best_move = Some((id, *f, cand, ratio));
+                        }
+                    }
+                }
+                let Some((id, f, c, _)) = best_move else {
+                    return Ok(None); // no frequency move saves time: stuck over budget
+                };
+                af.set_freq(id, f);
+                cost = c;
+            }
+            // Phase 2 — headroom: lower clocks for energy, never past the
+            // budget, until a fixpoint.
+            loop {
+                let mut changed = false;
+                for id in table.costed_ids() {
+                    let algo = af.get(id).expect("costed node unassigned");
+                    let cur_f = af.freq(id);
+                    let mut best_move: Option<(FreqId, GraphCost)> = None;
+                    for (f, slab) in table.freq_options(id) {
+                        if *f == cur_f || !slab.iter().any(|(al, _)| *al == algo) {
+                            continue;
+                        }
+                        let cand = table.eval_swap(cost, &af, id, algo, *f);
+                        let target = best_move.as_ref().map_or(cost.energy_j, |(_, b)| b.energy_j);
+                        if cand.time_ms <= time_budget_ms && cand.energy_j < target {
+                            best_move = Some((*f, cand));
+                        }
+                    }
+                    if let Some((f, c)) = best_move {
+                        af.set_freq(id, f);
+                        cost = c;
+                        changed = true;
+                    }
+                }
+                if !changed {
+                    break;
+                }
+            }
+            // eval_swap chains leave the uniform-state metadata stale;
+            // restamp it from the final plan.
+            cost.freq = af.uniform_freq();
+            Ok(Some((af, cost)))
+        }
+        DvfsMode::Off => unreachable!("handled above"),
+    }
 }
 
 #[cfg(test)]
@@ -126,6 +307,31 @@ mod tests {
         let r =
             optimize_with_time_budget(&g, &ctx, 1e-9, &SearchConfig::default(), 4).unwrap();
         assert!(!r.feasible);
+    }
+
+    #[test]
+    fn refine_raises_clocks_when_budget_binds() {
+        // An infeasible all-slow plan must be pulled back inside the
+        // budget by raising clocks (phase 1), not discarded.
+        let g = graph();
+        let ctx = OptimizerContext::offline_default();
+        let (table, _) = ctx.table_for(&g).unwrap();
+        let a = Assignment::default_for(&g, ctx.reg());
+        let nominal = table.eval(&a);
+        let mut slow = a.clone();
+        slow.set_uniform_freq(FreqId(510));
+        let budget = nominal.time_ms * 1.001;
+        let (ra, rc) =
+            refine_frequency_to_budget(&ctx.oracle, &g, &slow, budget, DvfsMode::PerNode)
+                .unwrap()
+                .expect("raising clocks to nominal always fits this budget");
+        assert!(rc.time_ms <= budget + 1e-12, "refined {} vs budget {budget}", rc.time_ms);
+        // The refined plan must have raised at least one node's clock.
+        assert!(ra.freq_histogram() != slow.freq_histogram());
+        // Off mode (or a DVFS-less device) refuses to refine.
+        assert!(refine_frequency_to_budget(&ctx.oracle, &g, &slow, budget, DvfsMode::Off)
+            .unwrap()
+            .is_none());
     }
 
     #[test]

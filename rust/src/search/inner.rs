@@ -15,9 +15,18 @@
 //! exhaustive. For additive objectives d=1 provably reaches the global
 //! optimum (the cost separates per node) — property-tested against
 //! exhaustive enumeration in `rust/tests/prop_invariants.rs`.
+//!
+//! With the DVFS axis, a per-node choice is an (algorithm, frequency)
+//! pair: the moves below enumerate every pair across the table's frequency
+//! slabs. The optimality argument is unchanged — the objective stays
+//! separable per node, the per-node option set merely grows — so d=1 is
+//! still globally optimal for additive objectives over the joint space. A
+//! table built at the nominal clock only (one slab per node) makes this
+//! bit-identical to the pre-DVFS search.
 
 use crate::algo::Assignment;
 use crate::cost::{CostFunction, GraphCost, GraphCostTable};
+use crate::energysim::FreqId;
 use crate::graph::NodeId;
 use crate::util::rng::Rng;
 
@@ -42,7 +51,7 @@ pub fn inner_search(
     assert!(d >= 1, "inner distance must be >= 1");
     let ids: Vec<NodeId> = table
         .costed_ids()
-        .filter(|id| table.node_options(*id).len() > 1)
+        .filter(|id| table.option_count(*id) > 1)
         .collect();
     let mut a = start;
     let mut cost = table.eval(&a);
@@ -54,21 +63,25 @@ pub fn inner_search(
         let mut changed = false;
         sweeps += 1;
 
-        // distance-1 moves: change one node.
+        // distance-1 moves: change one node's (algorithm, frequency) pair.
         for &id in &ids {
             let current = a.get(id).unwrap();
-            for &(algo, _) in table.node_options(id) {
-                if algo == current {
-                    continue;
-                }
-                let cand = table.eval_swap(cost, &a, id, algo);
-                evals += 1;
-                let v = cf.eval(&cand);
-                if v < value {
-                    a.set(id, algo);
-                    cost = cand;
-                    value = v;
-                    changed = true;
+            let current_f = a.freq(id);
+            for (f, slab) in table.freq_options(id) {
+                for &(algo, _) in slab.iter() {
+                    if algo == current && *f == current_f {
+                        continue;
+                    }
+                    let cand = table.eval_swap(cost, &a, id, algo, *f);
+                    evals += 1;
+                    let v = cf.eval(&cand);
+                    if v < value {
+                        a.set(id, algo);
+                        a.set_freq(id, *f);
+                        cost = cand;
+                        value = v;
+                        changed = true;
+                    }
                 }
             }
         }
@@ -80,24 +93,34 @@ pub fn inner_search(
                 for j in (i + 1)..ids.len() {
                     let (ni, nj) = (ids[i], ids[j]);
                     let cur_i = a.get(ni).unwrap();
+                    let cur_fi = a.freq(ni);
                     let cur_j = a.get(nj).unwrap();
-                    for &(ai, _) in table.node_options(ni) {
-                        for &(aj, _) in table.node_options(nj) {
-                            if ai == cur_i && aj == cur_j {
-                                continue;
-                            }
-                            let c1 = table.eval_swap(cost, &a, ni, ai);
-                            // second swap relative to (a with ni=ai): the
-                            // incremental delta of nj is independent of ni.
-                            let cand = table.eval_swap(c1, &a, nj, aj);
-                            evals += 1;
-                            let v = cf.eval(&cand);
-                            if v < value {
-                                a.set(ni, ai);
-                                a.set(nj, aj);
-                                cost = cand;
-                                value = v;
-                                changed = true;
+                    let cur_fj = a.freq(nj);
+                    for (fi, slab_i) in table.freq_options(ni) {
+                        for &(ai, _) in slab_i.iter() {
+                            for (fj, slab_j) in table.freq_options(nj) {
+                                for &(aj, _) in slab_j.iter() {
+                                    if ai == cur_i && *fi == cur_fi && aj == cur_j && *fj == cur_fj
+                                    {
+                                        continue;
+                                    }
+                                    let c1 = table.eval_swap(cost, &a, ni, ai, *fi);
+                                    // second swap relative to (a with ni=ai):
+                                    // the incremental delta of nj is
+                                    // independent of ni.
+                                    let cand = table.eval_swap(c1, &a, nj, aj, *fj);
+                                    evals += 1;
+                                    let v = cf.eval(&cand);
+                                    if v < value {
+                                        a.set(ni, ai);
+                                        a.set_freq(ni, *fi);
+                                        a.set(nj, aj);
+                                        a.set_freq(nj, *fj);
+                                        cost = cand;
+                                        value = v;
+                                        changed = true;
+                                    }
+                                }
                             }
                         }
                     }
@@ -117,8 +140,9 @@ pub fn inner_search(
     InnerResult { assignment: a, cost, sweeps, evals }
 }
 
-/// Exhaustive assignment enumeration (ground truth for tests; exponential —
-/// guarded by `max_states`). Returns None if the space exceeds the cap.
+/// Exhaustive (algorithm, frequency) enumeration (ground truth for tests;
+/// exponential — guarded by `max_states`). Returns None if the space
+/// exceeds the cap.
 pub fn exhaustive_search(
     table: &GraphCostTable,
     cf: &CostFunction,
@@ -127,11 +151,11 @@ pub fn exhaustive_search(
 ) -> Option<InnerResult> {
     let ids: Vec<NodeId> = table
         .costed_ids()
-        .filter(|id| table.node_options(*id).len() > 1)
+        .filter(|id| table.option_count(*id) > 1)
         .collect();
     let mut total: u64 = 1;
     for id in &ids {
-        total = total.checked_mul(table.node_options(*id).len() as u64)?;
+        total = total.checked_mul(table.option_count(*id) as u64)?;
         if total > max_states {
             return None;
         }
@@ -145,7 +169,9 @@ pub fn exhaustive_search(
     loop {
         // materialize current counter state
         for (slot, &id) in ids.iter().enumerate() {
-            a.set(id, table.node_options(id)[counters[slot]].0);
+            let (f, algo) = table.option_nth(id, counters[slot]);
+            a.set(id, algo);
+            a.set_freq(id, f);
         }
         let cost = table.eval(&a);
         evals += 1;
@@ -162,7 +188,7 @@ pub fn exhaustive_search(
                 return Some(InnerResult { assignment: best, cost: best_cost, sweeps: 1, evals });
             }
             counters[slot] += 1;
-            if counters[slot] < table.node_options(ids[slot]).len() {
+            if counters[slot] < table.option_count(ids[slot]) {
                 break;
             }
             counters[slot] = 0;
@@ -171,15 +197,26 @@ pub fn exhaustive_search(
     }
 }
 
-/// A uniformly random assignment (the paper's "pick A arbitrarily" starting
-/// point; used by property tests to vary the start).
+/// A uniformly random assignment over the joint (algorithm, frequency)
+/// space (the paper's "pick A arbitrarily" starting point; used by
+/// property tests to vary the start).
 pub fn random_assignment(table: &GraphCostTable, base: &Assignment, rng: &mut Rng) -> Assignment {
     let mut a = base.clone();
     for id in table.costed_ids() {
-        let options = table.node_options(id);
-        if options.len() > 1 {
-            a.set(id, options[rng.below(options.len())].0);
+        let n = table.option_count(id);
+        if n > 1 {
+            let (f, algo) = table.option_nth(id, rng.below(n));
+            a.set(id, algo);
+            a.set_freq(id, f);
         }
     }
+    a
+}
+
+/// Pin a start assignment's frequency axis, leaving algorithms untouched —
+/// the per-graph DVFS search's way of seeding one uniform state.
+pub fn pinned_freq_start(base: &Assignment, freq: FreqId) -> Assignment {
+    let mut a = base.clone();
+    a.set_uniform_freq(freq);
     a
 }

@@ -5,11 +5,11 @@ pub mod constrained;
 pub mod inner;
 pub mod outer;
 
-pub use constrained::{optimize_with_time_budget, ConstrainedResult};
+pub use constrained::{optimize_with_time_budget, refine_frequency_to_budget, ConstrainedResult};
 pub use inner::{exhaustive_search, inner_search, random_assignment, InnerResult};
 pub use outer::{
-    evaluate_baseline, outer_search, Baseline, OptimizerContext, OuterResult, SearchConfig,
-    SearchStats,
+    evaluate_baseline, outer_search, Baseline, DvfsMode, OptimizerContext, OuterResult,
+    SearchConfig, SearchStats,
 };
 
 use crate::algo::Assignment;

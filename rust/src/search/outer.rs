@@ -34,9 +34,10 @@
 //! noisy) — `threads: 8` is then purely a wall-clock optimization (see
 //! `rust/tests/determinism.rs`).
 
-use super::inner::{inner_search, InnerResult};
+use super::inner::{inner_search, pinned_freq_start, InnerResult};
 use crate::algo::Assignment;
 use crate::cost::{CostFunction, CostOracle, GraphCost, GraphCostTable};
+use crate::energysim::FreqId;
 use crate::graph::canonical::graph_hash;
 use crate::graph::Graph;
 use crate::subst::RuleSet;
@@ -44,6 +45,40 @@ use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex};
+
+/// How the search treats the DVFS frequency axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DvfsMode {
+    /// Nominal clock only — bit-identical to the pre-DVFS search.
+    #[default]
+    Off,
+    /// One frequency state per candidate graph: every state is evaluated
+    /// with a full inner search and the best (graph, A, f) wins. Models
+    /// application-level `nvidia-smi -lgc` style locking.
+    PerGraph,
+    /// Frequency is a per-node decision, optimized jointly with the
+    /// algorithm by the inner search (kernel-launch granularity DVFS).
+    PerNode,
+}
+
+impl DvfsMode {
+    pub fn parse(spec: &str) -> anyhow::Result<DvfsMode> {
+        Ok(match spec {
+            "off" => DvfsMode::Off,
+            "per-graph" | "per_graph" => DvfsMode::PerGraph,
+            "per-node" | "per_node" => DvfsMode::PerNode,
+            other => anyhow::bail!("unknown dvfs mode `{other}` (off|per-graph|per-node)"),
+        })
+    }
+
+    pub fn describe(&self) -> &'static str {
+        match self {
+            DvfsMode::Off => "off",
+            DvfsMode::PerGraph => "per-graph",
+            DvfsMode::PerNode => "per-node",
+        }
+    }
+}
 
 /// Tuning knobs of the optimizer.
 #[derive(Debug, Clone)]
@@ -64,6 +99,8 @@ pub struct SearchConfig {
     /// (the default sim) the optimized plan is bit-identical for every
     /// value; only wall-clock changes.
     pub threads: usize,
+    /// DVFS frequency axis: off, one state per graph, or per node.
+    pub dvfs: DvfsMode,
 }
 
 impl Default for SearchConfig {
@@ -75,6 +112,7 @@ impl Default for SearchConfig {
             enable_inner: true,
             max_dequeues: 2_000,
             threads: 1,
+            dvfs: DvfsMode::Off,
         }
     }
 }
@@ -132,7 +170,8 @@ struct QueueEntry {
     seq: usize, // FIFO tiebreak for equal costs (determinism)
     graph: Graph,
     /// Kept for Algorithm-1 fidelity (the paper enqueues (G, A) pairs);
-    /// expansion re-derives A' per candidate so it is not read here.
+    /// expansion re-derives A' — including its frequency states — per
+    /// candidate, so it is not read here.
     #[allow(dead_code)]
     assignment: Assignment,
 }
@@ -232,6 +271,9 @@ pub fn evaluate_baseline(g0: &Graph, oracle: &CostOracle) -> anyhow::Result<Base
 
 /// Evaluate one candidate graph: validate (shape inference, once), profile
 /// missing signatures, inner-search (or default assignment when disabled).
+/// With DVFS enabled the frequency axis is optimized here too — per-graph
+/// by trying every state, per-node by handing the inner search the joint
+/// (algorithm, frequency) option space.
 fn evaluate_candidate(
     g: &Graph,
     oracle: &CostOracle,
@@ -241,10 +283,46 @@ fn evaluate_candidate(
     // Single shape inference per candidate — this IS the validation, and
     // the profile/table/assignment steps below all reuse it (§Perf).
     let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!("invalid candidate: {e}"))?;
-    let (table, profiled) = oracle.table_for_with(g, &shapes);
-    let start = Assignment::default_for_with(g, &shapes, oracle.reg());
-    let inner = run_inner(&table, start, cf, cfg);
-    Ok((inner, profiled))
+    let freqs = oracle.dvfs_freqs();
+    if cfg.dvfs == DvfsMode::Off || freqs.is_empty() {
+        let (table, profiled) = oracle.table_for_with(g, &shapes);
+        let start = Assignment::default_for_with(g, &shapes, oracle.reg());
+        let inner = run_inner(&table, start, cf, cfg);
+        return Ok((inner, profiled));
+    }
+    match cfg.dvfs {
+        DvfsMode::PerGraph => {
+            // One full inner search per state; NOMINAL goes first so ties
+            // resolve to the nominal clock (and the off-mode plan).
+            let base = Assignment::default_for_with(g, &shapes, oracle.reg());
+            let mut profiled = 0usize;
+            let mut extra_evals = 0u64;
+            let mut best: Option<(f64, InnerResult)> = None;
+            for f in std::iter::once(FreqId::NOMINAL).chain(freqs.iter().copied()) {
+                let (table, p) = oracle.table_for_freqs(g, &shapes, &[f]);
+                profiled += p;
+                let inner = run_inner(&table, pinned_freq_start(&base, f), cf, cfg);
+                extra_evals += inner.evals;
+                let v = cf.eval(&inner.cost);
+                if best.as_ref().is_none_or(|(bv, _)| v < *bv) {
+                    best = Some((v, inner));
+                }
+            }
+            let (_, mut inner) = best.expect("at least the nominal state evaluated");
+            inner.evals = extra_evals;
+            Ok((inner, profiled))
+        }
+        DvfsMode::PerNode => {
+            let mut all = Vec::with_capacity(freqs.len() + 1);
+            all.push(FreqId::NOMINAL);
+            all.extend_from_slice(freqs);
+            let (table, profiled) = oracle.table_for_freqs(g, &shapes, &all);
+            let start = Assignment::default_for_with(g, &shapes, oracle.reg());
+            let inner = run_inner(&table, start, cf, cfg);
+            Ok((inner, profiled))
+        }
+        DvfsMode::Off => unreachable!("handled above"),
+    }
 }
 
 fn run_inner(
@@ -263,6 +341,32 @@ fn run_inner(
 }
 
 type EvalOutcome = anyhow::Result<(InnerResult, usize)>;
+
+/// The frequency component of the candidate dedup identity: a hash of the
+/// search's DVFS mode and frequency domain. Mixing it into the visited-set
+/// key means a graph seen under one frequency search space can never be
+/// conflated with the same graph under another. It is deliberately NOT
+/// per-parent-state: candidate evaluation is frequency-context-free (each
+/// candidate re-derives its own best states from scratch), so within one
+/// run the component is constant and every graph is evaluated exactly
+/// once. In `--dvfs off` the keying is a bijection of the pre-DVFS one,
+/// so dedup decisions are bit-for-bit unchanged.
+fn freq_domain_hash(cfg: &SearchConfig, oracle: &CostOracle) -> u64 {
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mix = |h: u64, x: u64| (h ^ x).wrapping_mul(FNV_PRIME);
+    let mode = match cfg.dvfs {
+        DvfsMode::Off => 0u64,
+        DvfsMode::PerGraph => 1,
+        DvfsMode::PerNode => 2,
+    };
+    let mut h = mix(0xCBF2_9CE4_8422_2325, mode);
+    if cfg.dvfs != DvfsMode::Off {
+        for f in oracle.dvfs_freqs() {
+            h = mix(h, f.0 as u64);
+        }
+    }
+    h
+}
 
 /// Evaluate a wave of candidates, in parallel when `workers > 1`. The
 /// returned vector is index-aligned with `cands` regardless of which
@@ -315,8 +419,16 @@ pub fn outer_search(
     let mut rule_counts: std::collections::BTreeMap<String, usize> = Default::default();
 
     // Inner search on the origin reuses the baseline table: no second
-    // profile/table pass for g0.
-    let inner0 = run_inner(&baseline.table, baseline.assignment.clone(), cf, cfg);
+    // profile/table pass for g0. With DVFS enabled the origin gets the
+    // full frequency-aware evaluation instead, so the untransformed graph
+    // competes on the same (G, A, f) footing as every candidate.
+    let inner0 = if cfg.dvfs == DvfsMode::Off || oracle.dvfs_freqs().is_empty() {
+        run_inner(&baseline.table, baseline.assignment.clone(), cf, cfg)
+    } else {
+        let (inner, profiled) = evaluate_candidate(g0, oracle, cf, cfg)?;
+        stats.profiled += profiled;
+        inner
+    };
     stats.inner_evals += inner0.evals;
 
     let mut best_graph = g0.clone();
@@ -331,8 +443,9 @@ pub fn outer_search(
     }
 
     if cfg.enable_outer && !ctx.rules.is_empty() {
+        let freq_domain = freq_domain_hash(cfg, oracle);
         let mut seen: HashSet<u64> = HashSet::new();
-        seen.insert(graph_hash(g0));
+        seen.insert(graph_hash(g0) ^ freq_domain);
         let mut queue: BinaryHeap<QueueEntry> = BinaryHeap::new();
         let mut seq = 0usize;
         queue.push(QueueEntry {
@@ -364,12 +477,13 @@ pub fn outer_search(
             stats.waves += 1;
 
             // --- Generate all substitution neighbors, dedup by canonical
-            // hash (sequential: order defines candidate sequence numbers).
+            // hash + frequency domain (sequential: order defines candidate
+            // sequence numbers).
             let mut cands: Vec<(Graph, &'static str)> = Vec::new();
             for entry in &wave {
                 for (cand, rule_name) in ctx.rules.neighbors(&entry.graph) {
                     stats.generated += 1;
-                    if !seen.insert(graph_hash(&cand)) {
+                    if !seen.insert(graph_hash(&cand) ^ freq_domain) {
                         stats.deduped += 1;
                         continue;
                     }

@@ -76,6 +76,35 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Write a bench payload to `BENCH_<name>.json` (in `EADGO_BENCH_OUT_DIR`,
+/// default the working directory) so CI can upload the per-PR perf
+/// trajectory as a workflow artifact. Returns the path written.
+pub fn emit_bench_json(
+    name: &str,
+    payload: &crate::util::json::Json,
+) -> anyhow::Result<std::path::PathBuf> {
+    let dir = std::env::var("EADGO_BENCH_OUT_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{name}.json"));
+    crate::util::json::write_file(&path, payload)?;
+    eprintln!("bench payload written to {}", path.display());
+    Ok(path)
+}
+
+/// Serialize a [`BenchResult`] list for [`emit_bench_json`].
+pub fn results_to_json(results: &[BenchResult]) -> crate::util::json::Json {
+    let mut arr = Vec::with_capacity(results.len());
+    for r in results {
+        let mut o = crate::util::json::Json::obj();
+        o.set("name", r.name.as_str())
+            .set("mean_ms", r.summary.mean * 1e3)
+            .set("p50_ms", r.summary.p50 * 1e3)
+            .set("p95_ms", r.summary.p95 * 1e3)
+            .set("iters", r.total_iters as f64);
+        arr.push(o);
+    }
+    crate::util::json::Json::Arr(arr)
+}
+
 /// A named collection of benches with uniform reporting — what the
 /// `benches/*.rs` binaries build on.
 pub struct BenchSuite {
@@ -84,12 +113,16 @@ pub struct BenchSuite {
     results: Vec<BenchResult>,
 }
 
+/// Was the fast bench profile requested? `cargo bench -- --quick` or
+/// `EADGO_BENCH_QUICK=1` (the CI bench-smoke job sets the latter).
+pub fn quick_requested() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("EADGO_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
 impl BenchSuite {
     pub fn new(title: &str) -> BenchSuite {
-        // `cargo bench -- --quick` or EADGO_BENCH_QUICK=1 selects the fast profile.
-        let quick = std::env::args().any(|a| a == "--quick")
-            || std::env::var("EADGO_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
-        let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+        let cfg = if quick_requested() { BenchConfig::quick() } else { BenchConfig::default() };
         BenchSuite { title: title.to_string(), cfg, results: Vec::new() }
     }
 

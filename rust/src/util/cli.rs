@@ -80,6 +80,48 @@ impl Args {
     pub fn options(&self) -> impl Iterator<Item = (&str, &str)> {
         self.opts.iter().map(|(k, v)| (k.as_str(), v.as_str()))
     }
+
+    /// Reject any option or flag not in `allowed` — mistyped flags become
+    /// a clean `anyhow` error (with a nearest-match hint) instead of being
+    /// silently ignored. A name is checked regardless of whether it parsed
+    /// as `--key value` or a bare `--flag`.
+    pub fn require_known(&self, allowed: &[&str]) -> anyhow::Result<()> {
+        let check = |name: &str| -> anyhow::Result<()> {
+            if allowed.contains(&name) {
+                return Ok(());
+            }
+            let hint = allowed
+                .iter()
+                .filter(|k| edit_distance(name, k) <= 2)
+                .min_by_key(|k| edit_distance(name, k))
+                .map(|k| format!(" (did you mean `--{k}`?)"))
+                .unwrap_or_default();
+            anyhow::bail!("unknown option `--{name}`{hint}")
+        };
+        for (k, _) in self.opts.iter() {
+            check(k)?;
+        }
+        for f in &self.flags {
+            check(f)?;
+        }
+        Ok(())
+    }
+}
+
+/// Levenshtein distance, for the did-you-mean hint (tiny inputs only).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut row = vec![i + 1];
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            row.push(sub.min(prev[j + 1] + 1).min(row[j] + 1));
+        }
+        prev = row;
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -124,5 +166,26 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse(&["x", "--w", "abc"], true);
         assert!(a.get_f64("w", 1.0).is_err());
+    }
+
+    #[test]
+    fn unknown_options_rejected_with_hint() {
+        let a = parse(&["optimize", "--modell", "vgg", "--quick"], true);
+        let err = a.require_known(&["model", "quick"]).unwrap_err().to_string();
+        assert!(err.contains("--modell"), "{err}");
+        assert!(err.contains("did you mean `--model`"), "{err}");
+        assert!(a.require_known(&["modell", "quick"]).is_ok());
+        // flags are checked too
+        let b = parse(&["x", "--quik"], true);
+        assert!(b.require_known(&["quick"]).is_err());
+        assert!(b.require_known(&["quik"]).is_ok());
+    }
+
+    #[test]
+    fn edit_distance_sane() {
+        assert_eq!(edit_distance("model", "model"), 0);
+        assert_eq!(edit_distance("modell", "model"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 }

@@ -1,20 +1,25 @@
-//! Determinism contract of the optimizer (ISSUE 1 acceptance criteria):
+//! Determinism contract of the optimizer (ISSUE 1 acceptance criteria,
+//! extended with the ISSUE 2 DVFS axis):
 //!
 //! 1. Same model + seed + config → byte-identical `--save-plan` JSON
 //!    across repeated runs (fresh contexts each time).
-//! 2. Parallel candidate evaluation (`threads: 8`) returns a bit-identical
+//! 2. Parallel candidate evaluation returns a bit-identical
 //!    `(graph, assignment, cost)` to the sequential path (`threads: 1`)
-//!    on every zoo model.
+//!    on every zoo model — with and without the DVFS frequency axis.
 //!
 //! The batched-wave outer search guarantees this by popping the α-band
 //! frontier before evaluation and merging results in candidate sequence
 //! order, so thread scheduling can never reorder best/enqueue decisions.
+//!
+//! CI runs this suite as a matrix over `EADGO_TEST_THREADS` (1/4/8) to
+//! catch merge-order regressions that one fixed worker count can miss;
+//! unset, the parallel runs use 8 workers.
 
 use eadgo::cost::CostFunction;
 use eadgo::graph::canonical::graph_hash;
 use eadgo::graph::serde::plan_to_json;
 use eadgo::models::{self, ModelConfig};
-use eadgo::search::{optimize, OptimizerContext, SearchConfig};
+use eadgo::search::{optimize, DvfsMode, OptimizerContext, SearchConfig};
 
 fn model_cfg() -> ModelConfig {
     // compute-bound scale (the sim provider is analytic; size is free),
@@ -22,16 +27,31 @@ fn model_cfg() -> ModelConfig {
     ModelConfig { batch: 1, resolution: 64, width_div: 2, classes: 10 }
 }
 
-fn search_cfg(threads: usize) -> SearchConfig {
-    SearchConfig { max_dequeues: 16, threads, ..Default::default() }
+/// Worker count of the "parallel" runs — the CI determinism matrix sets
+/// EADGO_TEST_THREADS to 1, 4, and 8.
+fn par_threads() -> usize {
+    std::env::var("EADGO_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8)
+}
+
+fn search_cfg(threads: usize, dvfs: DvfsMode) -> SearchConfig {
+    SearchConfig { max_dequeues: 16, threads, dvfs, ..Default::default() }
 }
 
 /// One full optimization with a fresh context; returns everything the
-/// determinism contract covers, with costs as exact bit patterns.
-fn run(model: &str, objective: &CostFunction, threads: usize) -> (u64, String, u64, u64) {
+/// determinism contract covers, with costs as exact bit patterns. The
+/// plan JSON includes the per-node frequency states when DVFS is on.
+fn run(
+    model: &str,
+    objective: &CostFunction,
+    threads: usize,
+    dvfs: DvfsMode,
+) -> (u64, String, u64, u64) {
     let g = models::by_name(model, model_cfg()).unwrap_or_else(|| panic!("no model {model}"));
     let ctx = OptimizerContext::offline_default();
-    let r = optimize(&g, &ctx, objective, &search_cfg(threads)).unwrap();
+    let r = optimize(&g, &ctx, objective, &search_cfg(threads, dvfs)).unwrap();
     let plan_json = plan_to_json(&r.graph, &r.assignment).to_string_compact();
     (graph_hash(&r.graph), plan_json, r.cost.time_ms.to_bits(), r.cost.energy_j.to_bits())
 }
@@ -39,8 +59,8 @@ fn run(model: &str, objective: &CostFunction, threads: usize) -> (u64, String, u
 #[test]
 fn repeated_runs_produce_identical_plan_json() {
     for objective in [CostFunction::Energy, CostFunction::linear(0.5)] {
-        let a = run("squeezenet", &objective, 1);
-        let b = run("squeezenet", &objective, 1);
+        let a = run("squeezenet", &objective, 1, DvfsMode::Off);
+        let b = run("squeezenet", &objective, 1, DvfsMode::Off);
         assert_eq!(a, b, "sequential reruns diverged for {}", objective.describe());
     }
 }
@@ -48,41 +68,73 @@ fn repeated_runs_produce_identical_plan_json() {
 #[test]
 fn parallel_equals_sequential_on_every_zoo_model() {
     for model in models::zoo_names() {
-        let seq = run(model, &CostFunction::Energy, 1);
-        let par = run(model, &CostFunction::Energy, 8);
+        let seq = run(model, &CostFunction::Energy, 1, DvfsMode::Off);
+        let par = run(model, &CostFunction::Energy, par_threads(), DvfsMode::Off);
         assert_eq!(
             seq, par,
-            "{model}: threads=8 diverged from threads=1 (graph hash / plan JSON / cost bits)"
+            "{model}: threads={} diverged from threads=1 (graph hash / plan JSON / cost bits)",
+            par_threads()
         );
     }
 }
 
 #[test]
 fn parallel_is_deterministic_across_repeats() {
-    // Not just equal to sequential: two threads=8 runs must also agree
+    // Not just equal to sequential: two parallel runs must also agree
     // with each other (no dependence on thread scheduling).
-    let a = run("resnet", &CostFunction::Energy, 8);
-    let b = run("resnet", &CostFunction::Energy, 8);
+    let a = run("resnet", &CostFunction::Energy, par_threads(), DvfsMode::Off);
+    let b = run("resnet", &CostFunction::Energy, par_threads(), DvfsMode::Off);
     assert_eq!(a, b);
 }
 
 #[test]
 fn auto_threads_matches_sequential() {
     // threads: 0 resolves to available parallelism; same contract.
-    let seq = run("inception", &CostFunction::Energy, 1);
-    let auto = run("inception", &CostFunction::Energy, 0);
+    let seq = run("inception", &CostFunction::Energy, 1, DvfsMode::Off);
+    let auto = run("inception", &CostFunction::Energy, 0, DvfsMode::Off);
     assert_eq!(seq, auto);
+}
+
+#[test]
+fn dvfs_plans_bit_identical_across_thread_counts() {
+    // The new search axis must not leak thread scheduling into the plan:
+    // per-graph and per-node frequency choices are made inside candidate
+    // evaluation and merged in sequence order like everything else.
+    for dvfs in [DvfsMode::PerGraph, DvfsMode::PerNode] {
+        for model in ["squeezenet", "resnet"] {
+            let seq = run(model, &CostFunction::Energy, 1, dvfs);
+            let par = run(model, &CostFunction::Energy, par_threads(), dvfs);
+            assert_eq!(
+                seq,
+                par,
+                "{model}/dvfs={}: threads={} diverged from threads=1",
+                dvfs.describe(),
+                par_threads()
+            );
+        }
+    }
+}
+
+#[test]
+fn dvfs_linear_objective_deterministic() {
+    // Frequency ties under a mixed objective must resolve identically
+    // regardless of worker count (NOMINAL-first tie-break).
+    let obj = CostFunction::linear(0.5);
+    let seq = run("inception", &obj, 1, DvfsMode::PerGraph);
+    let par = run("inception", &obj, par_threads(), DvfsMode::PerGraph);
+    assert_eq!(seq, par);
 }
 
 #[test]
 fn search_stats_structure_is_thread_invariant() {
     // Expansion/generation/dedup counts describe the search trajectory,
-    // which must not depend on the worker count.
+    // which must not depend on the worker count — including with DVFS.
     let g = models::squeezenet::build(model_cfg());
-    let stats = |threads: usize| {
+    let stats = |threads: usize, dvfs: DvfsMode| {
         let ctx = OptimizerContext::offline_default();
-        let r = optimize(&g, &ctx, &CostFunction::Energy, &search_cfg(threads)).unwrap();
+        let r = optimize(&g, &ctx, &CostFunction::Energy, &search_cfg(threads, dvfs)).unwrap();
         (r.stats.expanded, r.stats.generated, r.stats.deduped, r.stats.waves, r.stats.profiled)
     };
-    assert_eq!(stats(1), stats(8));
+    assert_eq!(stats(1, DvfsMode::Off), stats(par_threads(), DvfsMode::Off));
+    assert_eq!(stats(1, DvfsMode::PerNode), stats(par_threads(), DvfsMode::PerNode));
 }

@@ -150,6 +150,42 @@ fn unknown_subcommand_errors() {
 }
 
 #[test]
+fn mistyped_flag_prints_usage_not_backtrace() {
+    let out = eadgo().args(["optimize", "--modell", "simple"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown option `--modell`"), "{err}");
+    assert!(err.contains("did you mean `--model`"), "{err}");
+    assert!(err.contains("USAGE"), "usage text missing: {err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn optimize_with_dvfs_reports_plan_frequency() {
+    let dir = tmp("dvfs");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = run_ok(eadgo().args([
+        "optimize",
+        "--model",
+        "simple",
+        "--objective",
+        "energy",
+        "--dvfs",
+        "per-graph",
+        "--max-dequeues",
+        "10",
+        "--db",
+        dir.join("db.json").to_str().unwrap(),
+    ]));
+    assert!(out.contains("dvfs=per-graph"), "{out}");
+    assert!(out.contains("plan frequency:"), "{out}");
+    let bad = eadgo().args(["optimize", "--model", "simple", "--dvfs", "warp9"]).output().unwrap();
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("unknown dvfs mode"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn unknown_model_errors() {
     let out = eadgo().args(["show", "--model", "alexnet9000"]).output().unwrap();
     assert!(!out.status.success());

@@ -195,24 +195,31 @@ fn prop_inner_d2_never_worse_than_d1() {
 #[test]
 fn prop_cost_table_swap_matches_full_eval() {
     // eval_swap (the O(1) incremental used by the inner search hot path)
-    // must agree with a full re-evaluation.
+    // must agree with a full re-evaluation — across every (algorithm,
+    // frequency) option, not just the nominal slab.
     check("eval_swap_consistent", 24, |rng| {
         let g = random_graph(rng);
-        let ctx = OptimizerContext::offline_default();
-        let (table, _) = ctx.table_for(&g).map_err(|e| e.to_string())?;
-        let base = Assignment::default_for(&g, ctx.reg());
+        let oracle = eadgo::cost::CostOracle::offline_default();
+        let shapes = g.infer_shapes().map_err(|e| e.to_string())?;
+        let mut freqs = vec![eadgo::energysim::FreqId::NOMINAL];
+        freqs.extend_from_slice(oracle.dvfs_freqs());
+        let (table, _) = oracle.table_for_freqs(&g, &shapes, &freqs);
+        let base = Assignment::default_for(&g, oracle.reg());
         let a = random_assignment(&table, &base, rng);
         let full = table.eval(&a);
         for id in table.costed_ids() {
-            for &(algo, _) in table.node_options(id) {
-                let inc = table.eval_swap(full, &a, id, algo);
-                let mut a2 = a.clone();
-                a2.set(id, algo);
-                let truth = table.eval(&a2);
-                if (inc.time_ms - truth.time_ms).abs() > 1e-9 * truth.time_ms.max(1.0)
-                    || (inc.energy_j - truth.energy_j).abs() > 1e-9 * truth.energy_j.max(1.0)
-                {
-                    return Err(format!("swap mismatch at node {}", id.0));
+            for (f, slab) in table.freq_options(id) {
+                for &(algo, _) in slab.iter() {
+                    let inc = table.eval_swap(full, &a, id, algo, *f);
+                    let mut a2 = a.clone();
+                    a2.set(id, algo);
+                    a2.set_freq(id, *f);
+                    let truth = table.eval(&a2);
+                    if (inc.time_ms - truth.time_ms).abs() > 1e-9 * truth.time_ms.max(1.0)
+                        || (inc.energy_j - truth.energy_j).abs() > 1e-9 * truth.energy_j.max(1.0)
+                    {
+                        return Err(format!("swap mismatch at node {}", id.0));
+                    }
                 }
             }
         }
@@ -314,6 +321,127 @@ fn prop_compact_preserves_semantics() {
             .remove(0);
         assert_close(base.data(), out.data(), 1e-6, 1e-6)
     });
+}
+
+#[test]
+fn prop_freq_monotonicity() {
+    // DVFS invariant (ideal model): raising the core clock never slows a
+    // node down (time non-increasing in f) and never lowers its draw
+    // (power non-decreasing in f) — for random work shapes across every
+    // algorithm profile.
+    use eadgo::algo::Algorithm;
+    use eadgo::energysim::{EnergyModel, FreqId, Work};
+    let algos = [
+        Algorithm::ConvIm2col,
+        Algorithm::ConvDirect,
+        Algorithm::ConvWinograd,
+        Algorithm::Conv1x1Gemm,
+        Algorithm::DwDirect,
+        Algorithm::DwWinograd,
+        Algorithm::GemmBlocked,
+        Algorithm::GemmNaive,
+        Algorithm::Passthrough,
+    ];
+    check("freq_monotonicity", default_cases(), |rng| {
+        let m = EnergyModel::v100(7 + rng.below(1000) as u64);
+        // Spread work across regimes: tiny (launch-bound) to huge
+        // (compute-bound), with random arithmetic intensity.
+        let flops = 10f64.powf(3.0 + 7.0 * rng.f64());
+        let bytes = 10f64.powf(3.0 + 5.0 * rng.f64());
+        let w = Work { flops, bytes };
+        let algo = *rng.choose(&algos);
+        let mut prev: Option<(f64, f64)> = None;
+        for st in &m.spec.freq_states {
+            let c = m.ideal_cost_at(&w, algo, FreqId(st.mhz));
+            if let Some((pt, pp)) = prev {
+                if c.time_ms > pt * (1.0 + 1e-12) {
+                    return Err(format!("{algo:?}: time rose with clock ({pt} -> {})", c.time_ms));
+                }
+                if c.power_w < pp * (1.0 - 1e-12) {
+                    return Err(format!("{algo:?}: power fell with clock ({pp} -> {})", c.power_w));
+                }
+            }
+            prev = Some((c.time_ms, c.power_w));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_inner_d1_optimal_over_joint_freq_space() {
+    // The paper's d=1 optimality claim survives the DVFS extension: the
+    // objective stays separable per node, so greedy over the joint
+    // (algorithm, frequency) option space still matches exhaustive
+    // enumeration for additive objectives.
+    check("inner_d1_optimal_dvfs", 10, |rng| {
+        let g = random_graph(rng);
+        let oracle = eadgo::cost::CostOracle::offline_default();
+        let shapes = g.infer_shapes().map_err(|e| e.to_string())?;
+        // Two non-nominal states keep the exhaustive space tractable.
+        let freqs = vec![
+            eadgo::energysim::FreqId::NOMINAL,
+            oracle.dvfs_freqs()[0],
+            *oracle.dvfs_freqs().last().unwrap(),
+        ];
+        let (table, _) = oracle.table_for_freqs(&g, &shapes, &freqs);
+        let base = Assignment::default_for(&g, oracle.reg());
+        let w = rng.f64();
+        for cf in [CostFunction::Energy, CostFunction::linear(w)] {
+            let start = random_assignment(&table, &base, rng);
+            let greedy = inner_search(&table, &cf, 1, start.clone());
+            let Some(exact) = exhaustive_search(&table, &cf, &base, 200_000) else {
+                return Ok(()); // space too large for ground truth; skip case
+            };
+            let gv = cf.eval(&greedy.cost);
+            let ev = cf.eval(&exact.cost);
+            if (gv - ev).abs() > 1e-9 * ev.max(1.0) {
+                return Err(format!("joint d=1 found {gv}, exhaustive {ev} ({})", cf.describe()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dvfs_off_reproduces_pre_dvfs_plans_bit_for_bit() {
+    // The PR-1 regression contract: `--dvfs off` must run the exact
+    // pre-DVFS search. Two independent witnesses:
+    // (a) a DVFS-mode search against a device WITHOUT frequency states
+    //     degenerates to the off-mode search, bit for bit;
+    // (b) the off-mode plan JSON carries no frequency axis at all, so the
+    //     emitted bytes are exactly what PR 1 wrote.
+    use eadgo::cost::CostFunction;
+    use eadgo::graph::serde::plan_to_json;
+    use eadgo::models::{self, ModelConfig};
+    use eadgo::search::{optimize, DvfsMode, SearchConfig};
+
+    let mcfg = ModelConfig { batch: 1, resolution: 64, width_div: 2, classes: 10 };
+    let g = models::squeezenet::build(mcfg);
+    let run = |dvfs: DvfsMode, strip_freq_table: bool| {
+        let mut provider = eadgo::profiler::SimV100Provider::new(7);
+        if strip_freq_table {
+            provider.model.spec.freq_states.clear();
+        }
+        let ctx = OptimizerContext::new(
+            RuleSet::standard(),
+            eadgo::cost::CostDb::new(),
+            Box::new(provider),
+        );
+        let cfg = SearchConfig { max_dequeues: 16, dvfs, ..Default::default() };
+        let r = optimize(&g, &ctx, &CostFunction::Energy, &cfg).unwrap();
+        (
+            plan_to_json(&r.graph, &r.assignment).to_string_compact(),
+            r.cost.time_ms.to_bits(),
+            r.cost.energy_j.to_bits(),
+        )
+    };
+
+    let off = run(DvfsMode::Off, false);
+    for dvfs in [DvfsMode::PerGraph, DvfsMode::PerNode] {
+        let no_table = run(dvfs, true);
+        assert_eq!(off, no_table, "DVFS machinery at nominal-only must be a bit-exact no-op");
+    }
+    assert!(!off.0.contains("freq_mhz"), "off-mode plan JSON must stay pre-DVFS");
 }
 
 #[test]
