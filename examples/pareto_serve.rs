@@ -1,0 +1,103 @@
+//! Pareto plan frontiers end-to-end: enumerate, persist, reload, and serve
+//! adaptively under two load regimes.
+//!
+//!   1. Enumerate an N-point (latency, energy) frontier for SqueezeNet by
+//!      sweeping the energy weight through the two-level search.
+//!   2. Persist it as a versioned frontier manifest and reload it (the
+//!      `optimize --save-frontier` / `serve --frontier` round-trip).
+//!   3. Serve the frontier through the reference engine with the
+//!      load-adaptive `FrontierController`: under light traffic it parks
+//!      on the energy-optimal plan; under heavy traffic it escalates to
+//!      the latency-optimal plan, and the report logs every switch.
+//!
+//! Run: `cargo run --release --example pareto_serve [-- --points 4 --requests 96]`
+
+use eadgo::engine::ReferenceEngine;
+use eadgo::models::{self, ModelConfig};
+use eadgo::report::f3;
+use eadgo::report::tables::frontier_table;
+use eadgo::search::{optimize_frontier, OptimizerContext, SearchConfig};
+use eadgo::serve::{serve_frontier, AdaptiveConfig, ServeConfig};
+use eadgo::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let args = eadgo::util::cli::Args::from_env(false);
+    args.require_known(&["points", "requests"])?;
+    let n = args.get_usize("points", 4)?;
+    let requests = args.get_usize("requests", 96)?;
+
+    // --- 1. enumerate the frontier ----------------------------------------
+    let mcfg = ModelConfig { batch: 1, resolution: 64, width_div: 2, classes: 10 };
+    let g = models::squeezenet::build(mcfg);
+    let ctx = OptimizerContext::offline_default();
+    let scfg = SearchConfig { max_dequeues: 60, ..Default::default() };
+    println!("[1/3] enumerating a {n}-point pareto frontier (squeezenet, sim-V100)...");
+    let res = optimize_frontier(&g, &ctx, &scfg, n)?;
+    print!("{}", frontier_table(&res.frontier, Some(&res.original)).render());
+
+    // --- 2. persist + reload ----------------------------------------------
+    let dir = std::env::temp_dir().join("eadgo_pareto_serve");
+    let path = dir.join("plans.json");
+    eadgo::runtime::manifest::save_frontier(&path, &res.frontier)?;
+    let reg = eadgo::algo::AlgorithmRegistry::new();
+    let frontier = eadgo::runtime::manifest::load_frontier(&path, &reg)?;
+    println!("[2/3] frontier manifest round-trip: {} plans via {}", frontier.len(), path.display());
+
+    // --- 3. adaptive serving under light vs heavy load ---------------------
+    let engine = ReferenceEngine::new();
+    let points = frontier.points();
+    let plans = points
+        .iter()
+        .map(|p| engine.plan(&p.graph, &p.assignment))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let costs = frontier.costs();
+    let mut exec = |idx: usize, batch: &[Tensor]| -> anyhow::Result<Vec<Tensor>> {
+        let p = &points[idx];
+        let mut outs = Vec::with_capacity(batch.len());
+        for x in batch {
+            let o = engine.run_plan(&p.graph, &p.assignment, &plans[idx], std::slice::from_ref(x))?;
+            outs.push(
+                o.outputs
+                    .into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("engine returned no outputs"))?,
+            );
+        }
+        Ok(outs)
+    };
+
+    println!("[3/3] serving {requests} requests per load regime...\n");
+    for (label, rate) in [("light load, 50 req/s", 50.0), ("heavy load, 20k req/s", 20_000.0)] {
+        let serve_cfg = ServeConfig {
+            requests,
+            batch_max: 4,
+            arrival_rate_hz: rate,
+            max_wait_s: 0.002,
+            seed: 2026,
+            input_shape: vec![1, 3, 64, 64],
+        };
+        let report = serve_frontier(&serve_cfg, &costs, &AdaptiveConfig::default(), &mut exec)?;
+        let lat = report.latency_summary();
+        println!("== {label} ==");
+        println!(
+            "   p50 {} ms  p99 {} ms   {} switch(es)   plans {}",
+            f3(lat.p50 * 1e3),
+            f3(lat.p99 * 1e3),
+            report.switches.len(),
+            report.plan_distribution()
+        );
+        if let Some(e) = report.energy_mj_per_request {
+            println!("   oracle-estimated energy/request: {} mJ", f3(e));
+        }
+        for s in &report.switches {
+            println!(
+                "   switch t={:.4}s  p{} -> p{}  (queue {}, rate {:.0} req/s)",
+                s.at_s, s.from, s.to, s.queue_depth, s.rate_hz
+            );
+        }
+        println!();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    println!("pareto_serve OK: frontier enumerated, persisted, served adaptively");
+    Ok(())
+}

@@ -10,16 +10,23 @@
 //!   6. DVFS — off vs per-graph vs per-node frequency search (the (G,A,f)
 //!      extension; arXiv:1905.11012's sweet spot, PolyThrottle-style
 //!      budgeted refinement).
+//!   7. Pareto frontier + load-adaptive serving — fixed latency-optimal
+//!      plan vs the FrontierController across the frontier, at low and
+//!      high request rates (energy/request and steady-state p99).
 //! Run: `cargo bench --bench ablation [-- --quick]` (or EADGO_BENCH_QUICK=1).
 //! Emits `BENCH_ablation.json` (dir override: EADGO_BENCH_OUT_DIR).
 
-use eadgo::cost::CostFunction;
+use eadgo::cost::{CostFunction, GraphCost};
 use eadgo::graph::canonical::graph_hash;
 use eadgo::models::{self, ModelConfig};
+use eadgo::report::tables::frontier_table;
 use eadgo::report::{describe_freqs, f3, Table};
-use eadgo::search::{optimize, DvfsMode, OptimizerContext, SearchConfig};
+use eadgo::search::{optimize, optimize_frontier, DvfsMode, OptimizerContext, SearchConfig};
+use eadgo::serve::{serve_frontier, AdaptiveConfig, ServeConfig, ServeReport};
 use eadgo::subst::{rules, RuleSet};
+use eadgo::tensor::Tensor;
 use eadgo::util::json::Json;
+use eadgo::util::stats::percentile_sorted;
 
 fn ctx() -> OptimizerContext {
     OptimizerContext::offline_default()
@@ -304,6 +311,148 @@ fn main() {
         100.0 * (inner_energy[2] / inner_energy[0] - 1.0),
     );
     payload.set("dvfs", dvfs_json);
+
+    // --- 7. pareto frontier + load-adaptive serving --------------------------
+    // Enumerate a (latency, energy) frontier for SqueezeNet, then compare
+    // fixed latency-optimal serving against the adaptive FrontierController
+    // at a low and a high request rate. Batch execution busy-spins 0.1 ms of
+    // real time per oracle-estimated sim-millisecond, so utilization on the
+    // serving loop's virtual clock is consistent with the estimates and the
+    // comparison is host-speed independent to first order.
+    let c = ctx();
+    let fres = optimize_frontier(
+        &g,
+        &c,
+        &SearchConfig { max_dequeues: budget / 2, ..Default::default() },
+        if quick { 3 } else { 5 },
+    )
+    .unwrap();
+    let frontier = &fres.frontier;
+    assert!(frontier.len() >= 2, "squeezenet must yield a >=2-point frontier");
+    for (i, a) in frontier.points().iter().enumerate() {
+        for (j, b) in frontier.points().iter().enumerate() {
+            assert!(i == j || !a.dominates(b), "frontier point {i} dominates {j}");
+        }
+    }
+    print!("{}", frontier_table(frontier, Some(&fres.original)).render());
+    let costs = frontier.costs();
+    const SPIN_S_PER_SIM_MS: f64 = 1e-4;
+    let serve_at = |plan_costs: &[GraphCost], rate_hz: f64, requests: usize| -> ServeReport {
+        let scfg = ServeConfig {
+            requests,
+            batch_max: 4,
+            arrival_rate_hz: rate_hz,
+            max_wait_s: 0.002,
+            seed: 2026,
+            input_shape: vec![1, 3, 8, 8],
+        };
+        let pc: Vec<GraphCost> = plan_costs.to_vec();
+        serve_frontier(&scfg, plan_costs, &AdaptiveConfig::default(), move |idx, batch: &[Tensor]| {
+            let target = SPIN_S_PER_SIM_MS * pc[idx].time_ms * batch.len() as f64;
+            let t0 = std::time::Instant::now();
+            while t0.elapsed().as_secs_f64() < target {}
+            Ok(batch.to_vec())
+        })
+        .unwrap()
+    };
+    // p99 over the steady-state tail (first half dropped): the adaptive
+    // controller legitimately starts on the energy plan, escalates, then
+    // drains the warmup backlog with the latency plan's spare capacity —
+    // raw p99 includes that transient by design, steady-state p99 is the
+    // apples-to-apples SLO comparison.
+    let steady_p99 = |r: &ServeReport| -> f64 {
+        let skip = r.records.len() / 2;
+        let mut lat: Vec<f64> = r.records[skip..].iter().map(|x| x.latency_s()).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_sorted(&lat, 99.0)
+    };
+    let requests = if quick { 240 } else { 480 };
+    let svc_lat_s = SPIN_S_PER_SIM_MS * costs[0].time_ms;
+    let svc_energy_s = SPIN_S_PER_SIM_MS * costs[costs.len() - 1].time_ms;
+    let low_rate = 0.05 / svc_energy_s; // utilization 5% even on the energy plan
+    // Utilization 90% on the latency plan — which makes every slower plan
+    // exceed the controller's high-util threshold (0.9 · t_i/t_0 > 0.85
+    // for all i > 0), so the adaptive run provably converges to plan 0.
+    let high_rate = 0.9 / svc_lat_s;
+    let fixed_latency = &costs[..1]; // single-point frontier = fixed plan
+    let mut t = Table::new(
+        "Ablation 7: fixed latency-optimal vs adaptive frontier serving (SqueezeNet)",
+        &["rate", "serving", "energy mJ/req", "p99 ms", "steady p99 ms", "switches", "plans used"],
+    );
+    let mut serve_json = Json::obj();
+    let row = |label: &str, rate: f64, r: &ServeReport, t: &mut Table, json: &mut Json| {
+        let e = r.energy_mj_per_request.expect("oracle estimates present");
+        t.row(vec![
+            format!("{rate:.0}/s"),
+            label.to_string(),
+            f3(e),
+            f3(r.latency_summary().p99 * 1e3),
+            f3(steady_p99(r) * 1e3),
+            r.switches.len().to_string(),
+            r.plan_distribution(),
+        ]);
+        json.set(&format!("{label}_{rate:.0}_energy_mj"), e)
+            .set(&format!("{label}_{rate:.0}_steady_p99_s"), steady_p99(r));
+    };
+
+    let fixed_low = serve_at(fixed_latency, low_rate, requests);
+    let adapt_low = serve_at(&costs, low_rate, requests);
+    let fixed_high = serve_at(fixed_latency, high_rate, requests);
+    let adapt_high = serve_at(&costs, high_rate, requests);
+    row("fixed-latency", low_rate, &fixed_low, &mut t, &mut serve_json);
+    row("adaptive", low_rate, &adapt_low, &mut t, &mut serve_json);
+    row("fixed-latency", high_rate, &fixed_high, &mut t, &mut serve_json);
+    row("adaptive", high_rate, &adapt_high, &mut t, &mut serve_json);
+    println!("{}", t.render());
+
+    // Low rate: adaptive serves the energy-optimal plan and must beat the
+    // fixed latency-optimal plan on energy/request.
+    let e_fixed = fixed_low.energy_mj_per_request.unwrap();
+    let e_adapt = adapt_low.energy_mj_per_request.unwrap();
+    assert!(
+        e_adapt < e_fixed * 0.999,
+        "adaptive must save energy at low rate: {e_adapt} vs {e_fixed}"
+    );
+    // High rate: the controller must leave the energy plan, and its
+    // steady-state p99 must track the fixed latency-optimal plan.
+    assert!(
+        adapt_high.records.last().unwrap().plan < costs.len() - 1,
+        "adaptive must escalate off the energy plan under load"
+    );
+    let p99_fixed = steady_p99(&fixed_high);
+    let p99_adapt = steady_p99(&adapt_high);
+    // The p99 bound compares two wallclock-measured busy-spin runs; a
+    // scheduler preemption on a noisy host inflates one run's service
+    // times far past the spin targets and would fail the bound for
+    // reasons unrelated to the controller. Detect that by comparing
+    // measured engine-busy time against the spin budget and downgrade
+    // the assert to a note (mirrors the section-5 no-speedup note).
+    let spin_budget = |r: &ServeReport, pc: &[GraphCost]| -> f64 {
+        r.records.iter().map(|x| SPIN_S_PER_SIM_MS * pc[x.plan].time_ms).sum()
+    };
+    let quiet_host = fixed_high.busy_s <= spin_budget(&fixed_high, fixed_latency) * 1.3
+        && adapt_high.busy_s <= spin_budget(&adapt_high, &costs) * 1.3;
+    if quiet_host {
+        assert!(
+            p99_adapt <= p99_fixed * 1.5 + 1e-6,
+            "adaptive steady-state p99 {p99_adapt} too far above fixed {p99_fixed}"
+        );
+    } else {
+        eprintln!(
+            "NOTE: host preemption detected (busy time >130% of spin budget) — \
+             skipping the steady-state p99 bound ({p99_adapt} vs {p99_fixed})"
+        );
+    }
+    println!(
+        "adaptive serving: energy/request {} -> {} mJ at low rate ({:+.1}%), steady p99 {} vs {} ms at high rate\n",
+        f3(e_fixed),
+        f3(e_adapt),
+        100.0 * (e_adapt / e_fixed - 1.0),
+        f3(p99_adapt * 1e3),
+        f3(p99_fixed * 1e3),
+    );
+    serve_json.set("frontier_points", frontier.len());
+    payload.set("adaptive_serving", serve_json);
 
     eadgo::util::bench::emit_bench_json("ablation", &payload).expect("bench payload write");
 }

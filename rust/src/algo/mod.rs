@@ -46,6 +46,7 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// Stable serialization name (plan files, profile DB keys).
     pub fn name(&self) -> &'static str {
         match self {
             Algorithm::ConvIm2col => "im2col",
@@ -71,6 +72,7 @@ impl Algorithm {
         }
     }
 
+    /// Inverse of [`Algorithm::name`].
     pub fn from_name(name: &str) -> Option<Algorithm> {
         Some(match name {
             "im2col" => Algorithm::ConvIm2col,
@@ -94,6 +96,7 @@ impl Algorithm {
 pub struct AlgorithmRegistry;
 
 impl AlgorithmRegistry {
+    /// The (stateless) registry.
     pub fn new() -> Self {
         AlgorithmRegistry
     }
@@ -174,10 +177,12 @@ impl Assignment {
         Assignment { choices, freqs }
     }
 
+    /// The algorithm assigned to a node (`None` for constant-space nodes).
     pub fn get(&self, id: NodeId) -> Option<Algorithm> {
         self.choices.get(id.0).copied().flatten()
     }
 
+    /// Assign a node's algorithm. Panics on constant-space nodes.
     pub fn set(&mut self, id: NodeId, algo: Algorithm) {
         assert!(self.choices[id.0].is_some(), "cannot assign to constant-space node");
         self.choices[id.0] = Some(algo);
@@ -189,6 +194,7 @@ impl Assignment {
         self.freqs.get(id.0).copied().unwrap_or(FreqId::NOMINAL)
     }
 
+    /// Set a node's DVFS state. Panics on constant-space nodes.
     pub fn set_freq(&mut self, id: NodeId, freq: FreqId) {
         assert!(self.choices[id.0].is_some(), "cannot set frequency on constant-space node");
         self.freqs[id.0] = freq;
@@ -233,10 +239,12 @@ impl Assignment {
         out
     }
 
+    /// Total node slots (equals the graph's node count).
     pub fn len(&self) -> usize {
         self.choices.len()
     }
 
+    /// Whether the assignment covers no nodes.
     pub fn is_empty(&self) -> bool {
         self.choices.is_empty()
     }

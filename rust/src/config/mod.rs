@@ -10,10 +10,15 @@ use std::path::{Path, PathBuf};
 /// Everything an optimizer invocation needs.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// Zoo model name (see `eadgo zoo`).
     pub model: String,
+    /// Objective spec (`energy`, `linear:0.5`, ...; see [`parse_objective`]).
     pub objective: String,
+    /// Outer-search relaxation factor.
     pub alpha: f64,
+    /// Inner-search distance override (`None` = paper recommendation).
     pub inner_distance: Option<usize>,
+    /// Hard cap on dequeued outer-search states.
     pub max_dequeues: usize,
     /// Search worker threads (1 = sequential, 0 = one per core). With a
     /// deterministic provider (sim) the optimized plan is identical for
@@ -21,7 +26,9 @@ pub struct RunConfig {
     pub threads: usize,
     /// DVFS frequency search: off, per-graph, or per-node.
     pub dvfs: DvfsMode,
+    /// Seed for providers and synthetic inputs.
     pub seed: u64,
+    /// Model scale configuration.
     pub model_cfg: ModelConfig,
     /// Profile database path (loaded if present, saved after runs).
     pub db_path: PathBuf,
@@ -57,6 +64,7 @@ impl RunConfig {
         parse_objective(&self.objective)
     }
 
+    /// Expand into a full [`SearchConfig`].
     pub fn search_config(&self) -> SearchConfig {
         SearchConfig {
             alpha: self.alpha,

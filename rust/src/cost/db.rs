@@ -60,10 +60,12 @@ pub struct CostDb {
 }
 
 impl CostDb {
+    /// An empty database.
     pub fn new() -> CostDb {
         CostDb::default()
     }
 
+    /// Lookup at the nominal clock (the pre-DVFS entry).
     pub fn get(&self, sig: &str, algo: Algorithm) -> Option<NodeCost> {
         self.get_at(sig, algo, FreqId::NOMINAL)
     }
@@ -81,18 +83,22 @@ impl CostDb {
         hit
     }
 
+    /// Whether a nominal-clock profile exists for the pair.
     pub fn contains(&self, sig: &str, algo: Algorithm) -> bool {
         self.contains_at(sig, algo, FreqId::NOMINAL)
     }
 
+    /// Whether a profile exists for the pair at a specific DVFS state.
     pub fn contains_at(&self, sig: &str, algo: Algorithm, freq: FreqId) -> bool {
         self.map.get(sig).is_some_and(|a| a.contains_key(algo_key(algo, freq).as_str()))
     }
 
+    /// Insert a nominal-clock profile.
     pub fn insert(&mut self, sig: &str, algo: Algorithm, cost: NodeCost, provenance: &str) {
         self.insert_at(sig, algo, FreqId::NOMINAL, cost, provenance)
     }
 
+    /// Insert a profile at a specific DVFS state.
     pub fn insert_at(
         &mut self,
         sig: &str,
@@ -117,6 +123,7 @@ impl CostDb {
         self.map.values().map(BTreeMap::len).sum()
     }
 
+    /// Lookups that missed since creation (profiling pressure metric).
     pub fn misses(&self) -> u64 {
         self.misses.get()
     }
@@ -137,6 +144,7 @@ impl CostDb {
             .unwrap_or_default()
     }
 
+    /// Serialize the whole database (versioned, deterministic order).
     pub fn to_json(&self) -> Json {
         let mut root = Json::obj();
         root.set("version", 1i64);
@@ -156,6 +164,7 @@ impl CostDb {
         root
     }
 
+    /// Parse a database document, validating every entry.
     pub fn from_json(v: &Json) -> anyhow::Result<CostDb> {
         let mut db = CostDb::new();
         let profiles = v
@@ -180,10 +189,12 @@ impl CostDb {
         Ok(db)
     }
 
+    /// Serialize + write to `path`.
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
         json::write_file(path, &self.to_json())
     }
 
+    /// Read + parse from `path`.
     pub fn load(path: &Path) -> anyhow::Result<CostDb> {
         CostDb::from_json(&json::read_file(path)?)
     }

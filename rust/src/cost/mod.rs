@@ -11,7 +11,9 @@
 //! only need to be measured once. The measured values are stored in a
 //! database and persisted onto disk for future lookup."
 
+/// The persisted profile database.
 pub mod db;
+/// The thread-safe cost oracle (resolve cache + interner + provider).
 pub mod oracle;
 
 pub use db::CostDb;
@@ -41,7 +43,9 @@ impl NodeCost {
 /// Additive whole-graph cost under one assignment.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct GraphCost {
+    /// Inference time, milliseconds.
     pub time_ms: f64,
+    /// Energy in J per 1000 inferences (= mJ per inference).
     pub energy_j: f64,
     /// The DVFS state this cost was evaluated at, when the whole plan ran
     /// at one: the chosen state of a `--dvfs per-graph` plan. `NOMINAL`
@@ -52,6 +56,7 @@ pub struct GraphCost {
 }
 
 impl GraphCost {
+    /// Average power in watts (energy-to-time ratio).
     pub fn power_w(&self) -> f64 {
         if self.time_ms > 0.0 {
             self.energy_j / self.time_ms
@@ -60,6 +65,7 @@ impl GraphCost {
         }
     }
 
+    /// Accumulate one node's cost (the paper's additive model).
     pub fn add(&self, c: &NodeCost) -> GraphCost {
         GraphCost {
             time_ms: self.time_ms + c.time_ms,
@@ -81,11 +87,28 @@ pub enum CostFunction {
     /// `w·E/E₀ + (1-w)·T/T₀` — linear combination of *normalized* energy
     /// and time (§4.4 normalizes "so that the weight w makes better
     /// sense"). With norms of 1.0 it is the raw linear combination.
-    Linear { w: f64, t_norm: f64, e_norm: f64 },
+    Linear {
+        /// Weight on energy (1-w goes to time).
+        w: f64,
+        /// Time normalization constant T₀.
+        t_norm: f64,
+        /// Energy normalization constant E₀.
+        e_norm: f64,
+    },
     /// `E^w · T^(1-w)` — the product form.
-    Product { w: f64 },
+    Product {
+        /// Exponent on energy (1-w goes to time).
+        w: f64,
+    },
     /// `w·P/P₀ + (1-w)·E/E₀` — Table 3's "0.5power+0.5energy" objective.
-    PowerEnergy { w: f64, p_norm: f64, e_norm: f64 },
+    PowerEnergy {
+        /// Weight on power (1-w goes to energy).
+        w: f64,
+        /// Power normalization constant P₀.
+        p_norm: f64,
+        /// Energy normalization constant E₀.
+        e_norm: f64,
+    },
 }
 
 impl CostFunction {
@@ -96,6 +119,7 @@ impl CostFunction {
         CostFunction::Linear { w, t_norm: 1.0, e_norm: 1.0 }
     }
 
+    /// Power/energy combination with unit norms (normalize before use).
     pub fn power_energy(w: f64) -> CostFunction {
         assert!((0.0..=1.0).contains(&w), "weight must be in [0,1]");
         CostFunction::PowerEnergy { w, p_norm: 1.0, e_norm: 1.0 }
@@ -119,6 +143,7 @@ impl CostFunction {
         }
     }
 
+    /// Evaluate the objective on a graph cost (lower is better).
     pub fn eval(&self, gc: &GraphCost) -> f64 {
         match self {
             CostFunction::Time => gc.time_ms,
@@ -154,6 +179,7 @@ impl CostFunction {
         }
     }
 
+    /// Human-readable objective label (CLI/report output).
     pub fn describe(&self) -> String {
         match self {
             CostFunction::Time => "best_time".into(),

@@ -78,6 +78,7 @@ impl SigInterner {
         self.inner.read().unwrap().names.len()
     }
 
+    /// Whether no signatures have been interned.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -111,6 +112,7 @@ pub struct CostOracle {
 }
 
 impl CostOracle {
+    /// Build an oracle from registry + profile DB + measurement provider.
     pub fn new(reg: AlgorithmRegistry, db: CostDb, provider: Box<dyn CostProvider>) -> CostOracle {
         let provider_name = provider.provider_name();
         let states = provider.freq_states();
@@ -150,6 +152,7 @@ impl CostOracle {
         &self.interner
     }
 
+    /// The measurement provider's name (provenance).
     pub fn provider_name(&self) -> &str {
         &self.provider_name
     }
@@ -171,10 +174,12 @@ impl CostOracle {
         f(&self.db.lock().unwrap())
     }
 
+    /// Total (signature, algorithm, frequency) entries in the DB.
     pub fn db_entries(&self) -> usize {
         self.with_db(|db| db.num_entries())
     }
 
+    /// Distinct signatures in the DB.
     pub fn db_signatures(&self) -> usize {
         self.with_db(|db| db.num_signatures())
     }

@@ -47,6 +47,7 @@
 //! latency cost at all (their `max(t_c, t_m)` is pinned by `t_m`). That
 //! per-node asymmetry is what the `--dvfs per-node` search exploits.
 
+/// Nominal work (FLOPs, bytes) per operator.
 pub mod work;
 
 use crate::algo::Algorithm;
@@ -57,7 +58,9 @@ pub use work::{node_work, Work};
 /// runs that clock at (the `V(f)` of the `f·V²` dynamic-power law).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FreqState {
+    /// Core clock, MHz.
     pub mhz: u16,
+    /// Board voltage at this clock, volts.
     pub volt: f64,
 }
 
@@ -72,6 +75,7 @@ impl FreqId {
     /// The device's nominal (maximum) clock — the pre-DVFS default.
     pub const NOMINAL: FreqId = FreqId(0);
 
+    /// Whether this is the nominal (maximum) clock.
     pub fn is_nominal(&self) -> bool {
         self.0 == 0
     }
@@ -89,6 +93,7 @@ impl FreqId {
 /// Static description of the simulated device.
 #[derive(Debug, Clone)]
 pub struct GpuSpec {
+    /// Device name, recorded as measurement provenance.
     pub name: String,
     /// Peak f32 throughput, FLOP/s.
     pub peak_flops: f64,
@@ -319,13 +324,16 @@ impl SimCost {
 /// deterministic measurement noise.
 #[derive(Debug, Clone)]
 pub struct EnergyModel {
+    /// Static device description (roofline peaks, power, DVFS table).
     pub spec: GpuSpec,
+    /// Calibration seed driving the deterministic measurement noise.
     pub seed: u64,
     /// Measurement-noise amplitude (relative, e.g. 0.015 = ±1.5%).
     pub noise: f64,
 }
 
 impl EnergyModel {
+    /// The simulated V100 with ±1.5% seed-hashed measurement noise.
     pub fn v100(seed: u64) -> EnergyModel {
         EnergyModel { spec: GpuSpec::v100(), seed, noise: 0.015 }
     }

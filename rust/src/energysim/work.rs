@@ -10,11 +10,14 @@ use crate::graph::{OpKind, TensorShape};
 /// FLOPs and bytes moved for one execution of a node.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Work {
+    /// Floating-point operations per execution.
     pub flops: f64,
+    /// Bytes moved per execution (inputs + outputs, f32).
     pub bytes: f64,
 }
 
 impl Work {
+    /// No work (constant-space and input nodes).
     pub const ZERO: Work = Work { flops: 0.0, bytes: 0.0 };
 
     /// Arithmetic intensity, FLOP/byte.

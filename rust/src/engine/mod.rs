@@ -15,9 +15,13 @@
 //! filter concats) are evaluated once at plan time by the same node
 //! executor, so the request path touches only runtime ops.
 
+/// Single-node execution: dispatch an op to its assigned algorithm.
 pub mod exec;
+/// PJRT-hybrid engine (AOT artifacts with reference fallback).
 pub mod pjrt;
+/// Pure-rust reference engine (semantic ground truth).
 pub mod reference;
+/// Deterministic weight realization from `(seed, kind)`.
 pub mod weights;
 
 pub use reference::ReferenceEngine;

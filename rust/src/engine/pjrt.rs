@@ -33,11 +33,13 @@ pub struct PjrtPlan {
 
 /// Engine dispatching per-node to PJRT artifacts with reference fallback.
 pub struct PjrtEngine<'rt> {
+    /// The loaded-artifact runtime backing PJRT dispatch.
     pub runtime: &'rt Runtime,
     reference: ReferenceEngine,
 }
 
 impl<'rt> PjrtEngine<'rt> {
+    /// Build an engine over a (possibly empty) loaded runtime.
     pub fn new(runtime: &'rt Runtime) -> PjrtEngine<'rt> {
         PjrtEngine { runtime, reference: ReferenceEngine::new() }
     }

@@ -40,6 +40,7 @@ impl Plan {
 pub struct ReferenceEngine;
 
 impl ReferenceEngine {
+    /// The (stateless) reference engine.
     pub fn new() -> ReferenceEngine {
         ReferenceEngine
     }

@@ -21,6 +21,7 @@ impl Default for Fnv {
 }
 
 impl Fnv {
+    /// Absorb raw bytes.
     #[inline]
     pub fn write(&mut self, bytes: &[u8]) {
         for &b in bytes {
@@ -29,16 +30,19 @@ impl Fnv {
         }
     }
 
+    /// Absorb a `u64` (little-endian).
     #[inline]
     pub fn write_u64(&mut self, v: u64) {
         self.write(&v.to_le_bytes());
     }
 
+    /// Absorb a `usize` (as `u64`).
     #[inline]
     pub fn write_usize(&mut self, v: usize) {
         self.write_u64(v as u64);
     }
 
+    /// The accumulated hash value.
     pub fn finish(&self) -> u64 {
         self.0
     }

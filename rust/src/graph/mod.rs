@@ -4,8 +4,11 @@
 //! [`NodeId`]s. Substitutions clone the graph, rewrite, and call
 //! [`Graph::compact`]; search-state dedup uses [`canonical::graph_hash`].
 
+/// Canonical graph hashing (isomorphism-robust dedup key).
 pub mod canonical;
+/// Operator kinds, attributes, signatures, and shape inference.
 pub mod op;
+/// Graph + plan (de)serialization to JSON.
 pub mod serde;
 
 pub use op::{Activation, OpKind};
@@ -19,11 +22,14 @@ pub struct NodeId(pub usize);
 /// Reference to one output port of a node (Split has several ports).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct PortRef {
+    /// The producing node.
     pub node: NodeId,
+    /// Which of its output ports (0 for single-output ops).
     pub port: usize,
 }
 
 impl PortRef {
+    /// Port 0 of `node` — the common single-output case.
     pub fn of(node: NodeId) -> PortRef {
         PortRef { node, port: 0 }
     }
@@ -32,7 +38,9 @@ impl PortRef {
 /// A graph node: operator + input edges.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Node {
+    /// The operator this node computes.
     pub op: OpKind,
+    /// Input edges, in operator argument order.
     pub inputs: Vec<PortRef>,
     /// Human-readable label (layer name); not semantically meaningful.
     pub name: String,
@@ -42,6 +50,7 @@ pub struct Node {
 #[derive(Debug, Clone, Default)]
 pub struct Graph {
     nodes: Vec<Node>,
+    /// The tensors the graph produces, in output order.
     pub outputs: Vec<PortRef>,
 }
 
@@ -49,6 +58,7 @@ pub struct Graph {
 pub type TensorShape = Vec<usize>;
 
 impl Graph {
+    /// An empty graph.
     pub fn new() -> Graph {
         Graph::default()
     }
@@ -66,26 +76,32 @@ impl Graph {
         self.add(op, inputs.iter().map(|&n| PortRef::of(n)).collect(), name)
     }
 
+    /// The node with the given id. Panics when out of range.
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id.0]
     }
 
+    /// Mutable access to one node (substitution rewrites).
     pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
         &mut self.nodes[id.0]
     }
 
+    /// Total node count (including constant-space nodes).
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Whether the graph holds no nodes.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
 
+    /// All node ids, ascending.
     pub fn ids(&self) -> impl Iterator<Item = NodeId> {
         (0..self.nodes.len()).map(NodeId)
     }
 
+    /// All `(id, node)` pairs, ascending by id.
     pub fn nodes(&self) -> impl Iterator<Item = (NodeId, &Node)> {
         self.nodes.iter().enumerate().map(|(i, n)| (NodeId(i), n))
     }

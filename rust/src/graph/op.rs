@@ -16,11 +16,14 @@ use std::fmt;
 /// Activation fused into a producing op (cuDNN-style epilogue fusion).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Activation {
+    /// No epilogue activation.
     None,
+    /// Fused rectified linear unit.
     Relu,
 }
 
 impl Activation {
+    /// Stable serialization tag.
     pub fn tag(&self) -> &'static str {
         match self {
             Activation::None => "none",
@@ -49,6 +52,7 @@ pub enum WeightKind {
 }
 
 impl WeightKind {
+    /// Stable serialization tag.
     pub fn tag(&self) -> &'static str {
         match self {
             WeightKind::Filter => "filter",
@@ -74,55 +78,125 @@ impl WeightKind {
 #[derive(Debug, Clone, PartialEq)]
 pub enum OpKind {
     /// Graph input placeholder.
-    Input { shape: Vec<usize> },
+    Input {
+        /// Shape of the fed tensor.
+        shape: Vec<usize>,
+    },
     /// Constant weight tensor; contents generated deterministically from
     /// `seed` with a `kind`-appropriate distribution.
-    Weight { shape: Vec<usize>, seed: u64, kind: WeightKind },
+    Weight {
+        /// Shape of the constant tensor.
+        shape: Vec<usize>,
+        /// Deterministic realization seed.
+        seed: u64,
+        /// Semantic role (drives the init distribution).
+        kind: WeightKind,
+    },
+    /// 2-D convolution with optional fused bias/activation/residual.
     Conv2d {
+        /// Spatial stride (h, w).
         stride: (usize, usize),
+        /// Zero padding (h, w).
         pad: (usize, usize),
+        /// Fused epilogue activation.
         act: Activation,
+        /// Whether a bias input follows the weight.
         has_bias: bool,
+        /// Whether a residual input is added pre-activation.
         has_residual: bool,
     },
     /// Depthwise convolution (channel multiplier 1): weight `[C, 1, R, S]`,
     /// each channel convolved independently — the MobileNet building block
     /// (paper §5 future work: "more types of DNNs").
     DwConv2d {
+        /// Spatial stride (h, w).
         stride: (usize, usize),
+        /// Zero padding (h, w).
         pad: (usize, usize),
+        /// Fused epilogue activation.
         act: Activation,
+        /// Whether a bias input follows the weight.
         has_bias: bool,
     },
+    /// Dense matrix multiply (classifier head).
     MatMul,
+    /// Elementwise rectified linear unit.
     Relu,
+    /// Elementwise logistic sigmoid.
     Sigmoid,
+    /// Elementwise addition (residual connections).
     Add,
     /// Fused residual-add + ReLU (produced by the AddRelu fusion rule).
     AddRelu,
+    /// Elementwise multiplication.
     Mul,
-    MaxPool { k: (usize, usize), stride: (usize, usize), pad: (usize, usize) },
-    AvgPool { k: (usize, usize), stride: (usize, usize), pad: (usize, usize) },
+    /// Max pooling over `k`-sized windows.
+    MaxPool {
+        /// Window size (h, w).
+        k: (usize, usize),
+        /// Spatial stride (h, w).
+        stride: (usize, usize),
+        /// Zero padding (h, w).
+        pad: (usize, usize),
+    },
+    /// Average pooling over `k`-sized windows.
+    AvgPool {
+        /// Window size (h, w).
+        k: (usize, usize),
+        /// Spatial stride (h, w).
+        stride: (usize, usize),
+        /// Zero padding (h, w).
+        pad: (usize, usize),
+    },
+    /// Global spatial average pooling to `[N, C, 1, 1]`.
     GlobalAvgPool,
-    BatchNorm { eps: u32 },
+    /// Batch normalization (inference form, running statistics).
+    BatchNorm {
+        /// Stability epsilon as f32 bits (see [`eps_bits`]).
+        eps: u32,
+    },
     /// Concatenate along `axis` (axis 1 = channels at runtime; axis 0 used
     /// in weight space when merging parallel convolutions).
-    Concat { axis: usize },
+    Concat {
+        /// Concatenation axis.
+        axis: usize,
+    },
     /// Split along `axis` into parts of the given sizes; one output port per part.
-    Split { axis: usize, sizes: Vec<usize> },
+    Split {
+        /// Split axis.
+        axis: usize,
+        /// Size of each part along the axis.
+        sizes: Vec<usize>,
+    },
+    /// Collapse trailing dimensions to `[N, C*H*W]`.
     Flatten,
+    /// Softmax over the last dimension.
     Softmax,
     // ---- weight-space constant ops ----
-    FoldBnWeight { eps: u32 },
-    FoldBnBias { eps: u32, has_bias: bool },
+    /// Fold BN scale into a conv filter: `w * gamma/sqrt(var+eps)`.
+    FoldBnWeight {
+        /// Stability epsilon as f32 bits (see [`eps_bits`]).
+        eps: u32,
+    },
+    /// Fold BN shift into a conv bias: `(b - mean)*gamma/sqrt(var+eps) + beta`.
+    FoldBnBias {
+        /// Stability epsilon as f32 bits (see [`eps_bits`]).
+        eps: u32,
+        /// Whether a conv bias input leads the BN parameters.
+        has_bias: bool,
+    },
     /// Zero-pad a conv kernel [K,C,r,s] spatially (centered) to `target`.
-    PadKernel { target: (usize, usize) },
+    PadKernel {
+        /// Target spatial kernel size (r, s).
+        target: (usize, usize),
+    },
 }
 
 /// f32 bits <-> attribute-safe epsilon (keeps OpKind Eq/Hash-able).
 pub fn eps_bits(eps: f32) -> u32 {
     eps.to_bits()
 }
+/// Inverse of [`eps_bits`]: recover the f32 epsilon from its stored bits.
 pub fn eps_val(bits: u32) -> f32 {
     f32::from_bits(bits)
 }

@@ -285,19 +285,22 @@ pub fn plan_from_json(v: &Json, reg: &crate::algo::AlgorithmRegistry) -> anyhow:
     Ok((g, a))
 }
 
-/// File helpers.
+/// Serialize + write a plan file (see [`plan_to_json`]).
 pub fn save_plan(path: &Path, g: &Graph, a: &Assignment) -> anyhow::Result<()> {
     json::write_file(path, &plan_to_json(g, a))
 }
 
+/// Read + parse a plan file (see [`plan_from_json`]).
 pub fn load_plan(path: &Path, reg: &crate::algo::AlgorithmRegistry) -> anyhow::Result<(Graph, Assignment)> {
     plan_from_json(&json::read_file(path)?, reg)
 }
 
+/// Serialize + write a bare graph file.
 pub fn save_graph(path: &Path, g: &Graph) -> anyhow::Result<()> {
     json::write_file(path, &graph_to_json(g))
 }
 
+/// Read + parse a bare graph file.
 pub fn load_graph(path: &Path) -> anyhow::Result<Graph> {
     graph_from_json(&json::read_file(path)?)
 }

@@ -15,24 +15,37 @@
 //!   (MetaFlow engine, nvidia-smi, TF model import) rebuilt from scratch.
 //! - [`runtime`], [`engine`], [`profiler`] — PJRT execution of AOT-compiled
 //!   JAX/Pallas artifacts (L2/L1) and measurement.
+//! - [`serve`], [`report`], [`config`] — serving loop (fixed-plan and
+//!   load-adaptive), paper tables, run configuration.
 //! - [`util`] — offline substrates: JSON, PRNG, stats, CLI, bench harness,
 //!   property testing.
 //!
-//! Quickstart:
-//! ```no_run
+//! Quickstart (runs in a few hundred milliseconds on the analytic sim
+//! provider — this doctest executes for real):
+//! ```
 //! use eadgo::prelude::*;
 //! let g = eadgo::models::squeezenet::build(Default::default());
 //! // Rules + a shared, thread-safe cost oracle (registry, profile DB,
 //! // resolve cache, measurement provider).
 //! let ctx = OptimizerContext::offline_default();
 //! let objective = CostFunction::linear(0.5); // 0.5*energy + 0.5*time
-//! // threads: 8 evaluates search candidates in parallel; with the
-//! // deterministic sim provider the returned plan is bit-identical to a
-//! // sequential run.
-//! let cfg = SearchConfig { threads: 8, ..Default::default() };
+//! let cfg = SearchConfig { max_dequeues: 20, ..Default::default() };
 //! let result = optimize(&g, &ctx, &objective, &cfg).unwrap();
+//! assert!(result.objective_value <= result.original_objective);
 //! println!("energy saved: {:.1}%", 100.0 * result.energy_savings());
 //! println!("search took {:.2}s over {} waves", result.stats.wall_s, result.stats.waves);
+//! ```
+//!
+//! Parallel search: `threads: 8` evaluates candidates concurrently over the
+//! shared oracle; with the deterministic sim provider the returned plan is
+//! bit-identical to a sequential run (see `rust/tests/determinism.rs`):
+//! ```no_run
+//! use eadgo::prelude::*;
+//! let g = eadgo::models::squeezenet::build(Default::default());
+//! let ctx = OptimizerContext::offline_default();
+//! let cfg = SearchConfig { threads: 8, ..Default::default() };
+//! let result = optimize(&g, &ctx, &CostFunction::Energy, &cfg).unwrap();
+//! println!("energy saved: {:.1}%", 100.0 * result.energy_savings());
 //! ```
 //!
 //! DVFS: add the GPU core clock as a third search dimension — the joint
@@ -53,21 +66,59 @@
 //!     eadgo::report::describe_freqs(&result.assignment)
 //! );
 //! ```
+//!
+//! Pareto frontiers: [`search::optimize_frontier`] returns the whole
+//! (latency, energy) trade-off as a dominance-pruned [`search::PlanFrontier`]
+//! instead of a single plan, and [`serve::serve_frontier`] serves it
+//! load-adaptively — energy-optimal plan under light traffic,
+//! latency-optimal under pressure (`eadgo optimize --frontier N`,
+//! `eadgo serve --frontier plans.json --adaptive`):
+//! ```
+//! use eadgo::prelude::*;
+//! let g = eadgo::models::squeezenet::build(Default::default());
+//! let ctx = OptimizerContext::offline_default();
+//! let cfg = SearchConfig { max_dequeues: 20, ..Default::default() };
+//! let res = optimize_frontier(&g, &ctx, &cfg, 3).unwrap();
+//! // Fastest-first, mutually non-dominated:
+//! for pair in res.frontier.points().windows(2) {
+//!     assert!(pair[0].cost.time_ms < pair[1].cost.time_ms);
+//!     assert!(pair[0].cost.energy_j > pair[1].cost.energy_j);
+//! }
+//! ```
 
+#![warn(missing_docs)]
+
+/// Per-node algorithms, applicability registry, and assignments `A`.
 pub mod algo;
+/// Run configuration: JSON config files merged with CLI overrides.
 pub mod config;
+/// Cost model: node/graph costs, cost functions, profile DB, cost oracle.
 pub mod cost;
+/// Simulated V100 energy/power model (with DVFS states) behind profiling.
 pub mod energysim;
+/// Graph executors: pure-rust reference and PJRT-hybrid engines.
 pub mod engine;
+/// Graph IR: operators, shape inference, canonical hashing, serialization.
 pub mod graph;
+/// Model zoo: SqueezeNet, Inception, ResNet, MobileNet, VGG, test models.
 pub mod models;
+/// Cost providers: analytic sim-V100 and real CPU wallclock measurement.
 pub mod profiler;
+/// Report formatting and paper-table generators (Tables 1–5, frontiers).
 pub mod report;
+/// PJRT artifact runtime and persisted manifests (artifacts, frontiers).
 pub mod runtime;
+/// Two-level search: outer (graphs), inner (algorithms), constrained,
+/// Pareto frontier enumeration.
 pub mod search;
+/// Serving loop: Poisson arrivals, dynamic batching, adaptive frontier
+/// control.
 pub mod serve;
+/// Equivalent graph substitutions `S_i` (fusions, merges, eliminations).
 pub mod subst;
+/// Dense f32 tensors and the kernels behind the reference engine.
 pub mod tensor;
+/// Offline substrates: JSON, RNG, stats, CLI, bench harness, prop tests.
 pub mod util;
 
 /// Convenient re-exports of the public API surface.
@@ -79,7 +130,9 @@ pub mod prelude {
     pub use crate::energysim::{EnergyModel, FreqId, FreqState, GpuSpec};
     pub use crate::graph::{Graph, Node, OpKind, TensorShape};
     pub use crate::search::{
-        optimize, DvfsMode, OptimizeResult, OptimizerContext, SearchConfig,
+        optimize, optimize_frontier, DvfsMode, OptimizeResult, OptimizerContext, PlanFrontier,
+        PlanPoint, SearchConfig,
     };
+    pub use crate::serve::{AdaptiveConfig, FrontierController, ServeConfig, ServeReport};
     pub use crate::subst::RuleSet;
 }

@@ -17,7 +17,9 @@ use eadgo::profiler::{CpuProvider, SimV100Provider};
 use eadgo::report::tables::{self, ExperimentConfig};
 use eadgo::report::f3;
 use eadgo::runtime::Runtime;
-use eadgo::search::{optimize, optimize_with_time_budget, OptimizerContext};
+use eadgo::search::{
+    optimize, optimize_with_time_budget, OptimizerContext, PlanFrontier, PlanPoint,
+};
 use eadgo::tensor::Tensor;
 use eadgo::util::cli::Args;
 use eadgo::util::rng::Rng;
@@ -79,7 +81,7 @@ const COMMON_OPTS: &[&str] = &[
 /// instead of a silently-ignored option (or a panic downstream).
 fn validate_args(args: &Args) -> anyhow::Result<()> {
     let extra: &[&str] = match args.subcommand.as_deref() {
-        Some("optimize") => &["save-plan"],
+        Some("optimize") => &["save-plan", "frontier", "save-frontier"],
         Some("reproduce") => {
             return args
                 .require_known(&["table", "quick", "seed"])
@@ -88,7 +90,16 @@ fn validate_args(args: &Args) -> anyhow::Result<()> {
         Some("profile") | Some("show") => &[],
         Some("constrain") => &["time-budget", "probes"],
         Some("run") => &["iters", "plan"],
-        Some("serve") => &["plan", "optimize", "requests", "batch-max", "rate", "max-wait-ms"],
+        Some("serve") => &[
+            "plan",
+            "optimize",
+            "requests",
+            "batch-max",
+            "rate",
+            "max-wait-ms",
+            "frontier",
+            "adaptive",
+        ],
         Some("zoo") => {
             return args.require_known(&[]).map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"));
         }
@@ -107,13 +118,15 @@ USAGE: eadgo <subcommand> [--options]
   optimize  --model M --objective (time|energy|power|linear:W|power_energy:W)
             [--alpha 1.05] [--inner-distance D] [--max-dequeues N]
             [--threads T] [--dvfs off|per-graph|per-node]
+            [--frontier N] [--save-frontier plans.json]
             [--db profiles.json] [--provider sim|cpu] [--config run.json]
   reproduce --table (1|2|3|4|5|all) [--quick] [--seed S]
   profile   --model M [--provider sim|cpu] [--db profiles.json]
   constrain --model M --time-budget MS [--probes 8] [--threads T]
             [--dvfs off|per-graph|per-node]
   run       --model M [--artifacts DIR] [--iters N]
-  serve     --model M [--plan plan.json] [--optimize [OBJ]] [--requests N]
+  serve     --model M [--plan plan.json] [--frontier plans.json]
+            [--adaptive] [--optimize [OBJ]] [--requests N]
             [--batch-max B] [--rate HZ] [--artifacts DIR] [--threads T]
   show      --model M
   zoo
@@ -130,6 +143,16 @@ USAGE: eadgo <subcommand> [--options]
   run/serve accept --plan to load it back. serve --optimize runs the
   optimizer first and serves the result, sharing one warm cost oracle
   across optimize and serve.
+
+  optimize --frontier N enumerates an N-point pareto frontier over
+  (latency, energy) instead of a single plan — sweep the energy weight,
+  prune dominated candidates — and --save-frontier persists it
+  (versioned JSON; a --save-plan file loads as a 1-point frontier).
+  serve --frontier plans.json serves its energy-optimal plan; add
+  --adaptive to let a controller watch the live request rate and queue
+  depth and switch the active plan across the frontier (energy-optimal
+  under light load, latency-optimal under pressure, with hysteresis).
+  serve --optimize --adaptive builds a 4-point frontier inline.
 ";
 
 fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
@@ -162,6 +185,34 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     let objective = cfg.cost_function()?;
     let ctx = build_context(&cfg)?;
     let scfg = cfg.search_config();
+    anyhow::ensure!(
+        !args.flag("frontier"),
+        "--frontier expects a point count, e.g. `--frontier 5`"
+    );
+    anyhow::ensure!(
+        !args.flag("save-frontier"),
+        "--save-frontier expects a path, e.g. `--save-frontier plans.json`"
+    );
+    if let Some(nspec) = args.get("frontier") {
+        // Refuse combinations we would otherwise silently ignore (the
+        // strict-flag policy: no option is accepted and then dropped).
+        anyhow::ensure!(
+            args.get("save-plan").is_none(),
+            "--frontier produces a plan set; use --save-frontier, not --save-plan"
+        );
+        anyhow::ensure!(
+            args.get("objective").is_none(),
+            "--frontier sweeps the whole energy/time weight range; drop --objective"
+        );
+        let n: usize = nspec
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--frontier expects a point count, got `{nspec}`"))?;
+        return cmd_optimize_frontier(args, &cfg, &g0, &ctx, &scfg, n);
+    }
+    anyhow::ensure!(
+        args.get("save-frontier").is_none(),
+        "--save-frontier requires --frontier N"
+    );
     println!(
         "optimizing {} ({} nodes) for {} (alpha={}, provider={}, threads={}, dvfs={})",
         cfg.model,
@@ -213,6 +264,51 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("save-plan") {
         eadgo::graph::serde::save_plan(std::path::Path::new(path), &res.graph, &res.assignment)?;
         println!("optimized plan saved to {path}");
+    }
+    ctx.oracle.save_db(&cfg.db_path)?;
+    println!(
+        "profile db saved to {} ({} entries)",
+        cfg.db_path.display(),
+        ctx.oracle.db_entries()
+    );
+    Ok(())
+}
+
+/// `optimize --frontier N`: enumerate a pareto frontier instead of a
+/// single plan (the --objective flag is ignored — the sweep covers the
+/// whole energy/time weight range).
+fn cmd_optimize_frontier(
+    args: &Args,
+    cfg: &RunConfig,
+    g0: &eadgo::graph::Graph,
+    ctx: &OptimizerContext,
+    scfg: &eadgo::search::SearchConfig,
+    n: usize,
+) -> anyhow::Result<()> {
+    println!(
+        "enumerating a {n}-point pareto frontier for {} ({} nodes; alpha={}, provider={}, threads={}, dvfs={})",
+        cfg.model,
+        g0.runtime_node_count(),
+        cfg.alpha,
+        cfg.provider,
+        scfg.effective_threads(),
+        scfg.dvfs.describe()
+    );
+    let res = eadgo::search::optimize_frontier(g0, ctx, scfg, n)?;
+    print!("{}", tables::frontier_table(&res.frontier, Some(&res.original)).render());
+    println!("probes:");
+    for p in &res.probes {
+        println!(
+            "  w_energy={:.2}  time {} ms  energy {} J/1k  search {:.2}s",
+            p.weight,
+            f3(p.cost.time_ms),
+            f3(p.cost.energy_j),
+            p.wall_s
+        );
+    }
+    if let Some(path) = args.get("save-frontier") {
+        eadgo::runtime::manifest::save_frontier(std::path::Path::new(path), &res.frontier)?;
+        println!("frontier ({} plans) saved to {path}", res.frontier.len());
     }
     ctx.oracle.save_db(&cfg.db_path)?;
     println!(
@@ -372,6 +468,100 @@ fn cmd_show(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Resolve what `serve` should put behind the request loop: a frontier of
+/// one or more plans (single-plan sources load as a one-point frontier).
+fn serve_frontier_source(
+    args: &Args,
+    cfg: &RunConfig,
+    ctx: &OptimizerContext,
+    reg: &eadgo::algo::AlgorithmRegistry,
+) -> anyhow::Result<PlanFrontier> {
+    // The strict-flag policy again: a mis-shaped flag must error, not be
+    // silently reinterpreted.
+    anyhow::ensure!(
+        args.get("adaptive").is_none(),
+        "--adaptive is a bare flag and takes no value"
+    );
+    anyhow::ensure!(
+        !args.flag("frontier"),
+        "--frontier expects a path, e.g. `--frontier plans.json`"
+    );
+    let adaptive = args.flag("adaptive");
+    let want_optimize = args.flag("optimize") || args.get("optimize").is_some();
+    let single = |g: eadgo::graph::Graph, a: Assignment| -> anyhow::Result<PlanFrontier> {
+        let cost = ctx.oracle.cached_cost(&g, &a)?.unwrap_or_default();
+        Ok(PlanFrontier::from_points(vec![PlanPoint {
+            graph: g,
+            assignment: a,
+            cost,
+            weight: 1.0,
+        }]))
+    };
+    if let Some(path) = args.get("frontier") {
+        // Refuse plan sources we would otherwise silently ignore.
+        anyhow::ensure!(
+            args.get("plan").is_none(),
+            "--frontier and --plan are mutually exclusive plan sources"
+        );
+        anyhow::ensure!(!want_optimize, "--frontier serves saved plans; drop --optimize");
+        let f = eadgo::runtime::manifest::load_frontier(std::path::Path::new(path), reg)?;
+        println!("loaded {}-point frontier from {path}", f.len());
+        return Ok(f);
+    }
+    if let Some(path) = args.get("plan") {
+        anyhow::ensure!(
+            !adaptive,
+            "serve --adaptive needs a frontier: use --frontier plans.json or --optimize"
+        );
+        anyhow::ensure!(!want_optimize, "--plan and --optimize are mutually exclusive");
+        let (g, a) = eadgo::graph::serde::load_plan(std::path::Path::new(path), reg)?;
+        return single(g, a);
+    }
+    if want_optimize {
+        let g0 = get_model(cfg)?;
+        if adaptive {
+            anyhow::ensure!(
+                args.get("objective").is_none(),
+                "--optimize --adaptive sweeps the whole energy/time weight range; drop --objective"
+            );
+            println!(
+                "optimizing a 4-point pareto frontier of {} before serving (threads={})",
+                cfg.model,
+                cfg.search_config().effective_threads()
+            );
+            let res = eadgo::search::optimize_frontier(&g0, ctx, &cfg.search_config(), 4)?;
+            print!("{}", tables::frontier_table(&res.frontier, Some(&res.original)).render());
+            return Ok(res.frontier);
+        }
+        // `--optimize` uses the configured --objective; `--optimize OBJ`
+        // names the objective inline.
+        let objective = match args.get("optimize") {
+            Some(spec) => eadgo::config::parse_objective(spec)?,
+            None => cfg.cost_function()?,
+        };
+        println!(
+            "optimizing {} for {} before serving (threads={})",
+            cfg.model,
+            objective.describe(),
+            cfg.search_config().effective_threads()
+        );
+        let res = optimize(&g0, ctx, &objective, &cfg.search_config())?;
+        println!(
+            "optimized: energy {:+.1}%, time {:+.1}% vs origin",
+            -100.0 * res.energy_savings(),
+            -100.0 * res.time_savings()
+        );
+        return single(res.graph, res.assignment);
+    }
+    anyhow::ensure!(
+        !adaptive,
+        "serve --adaptive needs a frontier: use --frontier plans.json or --optimize"
+    );
+    let g = get_model(cfg)?;
+    let a = Assignment::default_for(&g, reg);
+    single(g, a)
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let reg = eadgo::algo::AlgorithmRegistry::new();
@@ -379,40 +569,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // optimizer warms the oracle and the serving path reuses it — no
     // re-profiling between optimize and serve.
     let ctx = build_context(&cfg)?;
-    // Either a persisted optimized plan, an inline optimization, or a zoo
-    // model w/ default assignment.
-    let (g, a) = match args.get("plan") {
-        Some(path) => eadgo::graph::serde::load_plan(std::path::Path::new(path), &reg)?,
-        None if args.flag("optimize") || args.get("optimize").is_some() => {
-            let g0 = get_model(&cfg)?;
-            // `--optimize` uses the configured --objective; `--optimize OBJ`
-            // names the objective inline.
-            let objective = match args.get("optimize") {
-                Some(spec) => eadgo::config::parse_objective(spec)?,
-                None => cfg.cost_function()?,
-            };
-            println!(
-                "optimizing {} for {} before serving (threads={})",
-                cfg.model,
-                objective.describe(),
-                cfg.search_config().effective_threads()
-            );
-            let res = optimize(&g0, &ctx, &objective, &cfg.search_config())?;
-            println!(
-                "optimized: energy {:+.1}%, time {:+.1}% vs origin",
-                -100.0 * res.energy_savings(),
-                -100.0 * res.time_savings()
-            );
-            (res.graph, res.assignment)
-        }
-        None => {
-            let g = get_model(&cfg)?;
-            let a = Assignment::default_for(&g, &reg);
-            (g, a)
-        }
+    let adaptive = args.flag("adaptive");
+    let frontier = serve_frontier_source(args, &cfg, &ctx, &reg)?;
+    anyhow::ensure!(!frontier.is_empty(), "no plan to serve");
+    if adaptive && frontier.len() == 1 {
+        println!("note: single-plan frontier — adaptive serving degenerates to fixed-plan");
+    }
+    // Adaptive mode serves the whole frontier; fixed mode serves its
+    // energy-optimal plan (for single-plan sources that IS the plan).
+    let points: Vec<&PlanPoint> = if adaptive {
+        frontier.points().iter().collect()
+    } else {
+        vec![frontier.energy_optimal()]
     };
-    let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!(e))?;
-    let input_shape = g
+    let costs: Vec<eadgo::cost::GraphCost> = points.iter().map(|p| p.cost).collect();
+
+    let g0 = &points[0].graph;
+    let shapes = g0.infer_shapes().map_err(|e| anyhow::anyhow!(e))?;
+    let input_shape = g0
         .nodes()
         .find_map(|(id, n)| {
             matches!(n.op, eadgo::graph::OpKind::Input { .. }).then(|| shapes[id.0][0].clone())
@@ -427,6 +601,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         seed: cfg.seed,
         input_shape,
     };
+    let policy = eadgo::serve::AdaptiveConfig::default();
+    let use_controller = adaptive && points.len() > 1;
 
     let manifest_path = cfg.artifacts_dir.join("manifest.json");
     let report = if manifest_path.exists() {
@@ -434,11 +610,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let n = rt.load_dir(&cfg.artifacts_dir)?;
         println!("serving via PJRT-hybrid engine ({n} artifacts)");
         let engine = eadgo::engine::pjrt::PjrtEngine::new(&rt);
-        let prepared = engine.prepare(&g, &a)?;
-        eadgo::serve::serve_plan(&scfg, &ctx.oracle, &g, &a, |batch| {
+        let prepared = points
+            .iter()
+            .map(|p| engine.prepare(&p.graph, &p.assignment))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let exec = |idx: usize, batch: &[Tensor]| -> anyhow::Result<Vec<Tensor>> {
+            let p = points[idx];
             let mut outs = Vec::with_capacity(batch.len());
             for x in batch {
-                let (o, _) = engine.run_prepared(&g, &a, &prepared, std::slice::from_ref(x))?;
+                let xs = std::slice::from_ref(x);
+                let (o, _) = engine.run_prepared(&p.graph, &p.assignment, &prepared[idx], xs)?;
                 let y = o
                     .outputs
                     .into_iter()
@@ -447,15 +628,28 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 outs.push(y);
             }
             Ok(outs)
-        })?
+        };
+        if use_controller {
+            eadgo::serve::serve_frontier(&scfg, &costs, &policy, exec)?
+        } else {
+            let p = points[0];
+            eadgo::serve::serve_plan(&scfg, &ctx.oracle, &p.graph, &p.assignment, |batch| {
+                exec(0, batch)
+            })?
+        }
     } else {
         println!("serving via reference engine (no artifacts at {})", manifest_path.display());
         let engine = eadgo::engine::ReferenceEngine::new();
-        let plan = engine.plan(&g, &a)?;
-        eadgo::serve::serve_plan(&scfg, &ctx.oracle, &g, &a, |batch| {
+        let plans = points
+            .iter()
+            .map(|p| engine.plan(&p.graph, &p.assignment))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let exec = |idx: usize, batch: &[Tensor]| -> anyhow::Result<Vec<Tensor>> {
+            let p = points[idx];
             let mut outs = Vec::with_capacity(batch.len());
             for x in batch {
-                let o = engine.run_plan(&g, &a, &plan, std::slice::from_ref(x))?;
+                let xs = std::slice::from_ref(x);
+                let o = engine.run_plan(&p.graph, &p.assignment, &plans[idx], xs)?;
                 let y = o
                     .outputs
                     .into_iter()
@@ -464,7 +658,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 outs.push(y);
             }
             Ok(outs)
-        })?
+        };
+        if use_controller {
+            eadgo::serve::serve_frontier(&scfg, &costs, &policy, exec)?
+        } else {
+            let p = points[0];
+            eadgo::serve::serve_plan(&scfg, &ctx.oracle, &p.graph, &p.assignment, |batch| {
+                exec(0, batch)
+            })?
+        }
     };
 
     let lat = report.latency_summary();
@@ -475,9 +677,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         report.mean_batch_size()
     );
     println!(
-        "latency p50 {} ms  p95 {} ms  mean {} ms   throughput {:.1} req/s   engine busy {:.2}s",
+        "latency p50 {} ms  p95 {} ms  p99 {} ms  mean {} ms   throughput {:.1} req/s   engine busy {:.2}s",
         f3(lat.p50 * 1e3),
         f3(lat.p95 * 1e3),
+        f3(lat.p99 * 1e3),
         f3(lat.mean * 1e3),
         report.throughput_rps(),
         report.busy_s
@@ -489,8 +692,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             f3(est.time_ms),
             f3(est.power_w()),
             f3(est.energy_j),
-            eadgo::report::describe_freqs(&a)
+            eadgo::report::describe_freqs(&points[0].assignment)
         );
+    }
+    if use_controller {
+        println!(
+            "adaptive controller: {} plan switch(es), request distribution {}",
+            report.switches.len(),
+            report.plan_distribution()
+        );
+        for s in &report.switches {
+            println!(
+                "  t={:.4}s  p{} -> p{}  (queue {}, rate {:.0} req/s)",
+                s.at_s, s.from, s.to, s.queue_depth, s.rate_hz
+            );
+        }
+        if let Some(e) = report.energy_mj_per_request {
+            println!("oracle-estimated energy/request served: {} mJ", f3(e));
+        }
     }
     Ok(())
 }

@@ -7,11 +7,17 @@
 //! substitution opportunities the paper's optimizer exploits are purely
 //! topological and survive the scaling.
 
+/// Inception-v3 (branch-and-concat modules).
 pub mod inception;
+/// MobileNetV1 (depthwise-separable convolutions).
 pub mod mobilenet;
+/// ResNet-50 (bottleneck residual blocks).
 pub mod resnet;
+/// Small test models: quickstart CNN and MLP.
 pub mod simple;
+/// SqueezeNet (fire modules).
 pub mod squeezenet;
+/// VGG-16 (plain conv stacks).
 pub mod vgg;
 
 use crate::graph::op::{eps_bits, WeightKind};
@@ -46,24 +52,29 @@ impl ModelConfig {
 /// Incremental graph builder with an automatic weight-seed allocator —
 /// keeps zoo code terse and weights collision-free.
 pub struct Builder {
+    /// The graph under construction.
     pub g: Graph,
     next_seed: u64,
 }
 
 impl Builder {
+    /// Start a model; `model_tag` namespaces its weight seeds.
     pub fn new(model_tag: u64) -> Builder {
         Builder { g: Graph::new(), next_seed: model_tag << 32 }
     }
 
+    /// Allocate the next weight seed.
     pub fn seed(&mut self) -> u64 {
         self.next_seed += 1;
         self.next_seed
     }
 
+    /// Add the graph input placeholder.
     pub fn input(&mut self, shape: &[usize]) -> NodeId {
         self.g.add1(OpKind::Input { shape: shape.to_vec() }, &[], "input")
     }
 
+    /// Add a filter weight with an auto-allocated seed.
     pub fn weight(&mut self, shape: &[usize], name: &str) -> NodeId {
         let s = self.seed();
         self.g.add1(OpKind::weight(shape.to_vec(), s), &[], name)
@@ -107,10 +118,12 @@ impl Builder {
         )
     }
 
+    /// Add a standalone ReLU.
     pub fn relu(&mut self, x: NodeId, name: &str) -> NodeId {
         self.g.add1(OpKind::Relu, &[x], name)
     }
 
+    /// Add a BatchNorm with its four parameter tensors.
     pub fn batchnorm(&mut self, x: NodeId, c: usize, name: &str) -> NodeId {
         let gamma = self.wkind(&[c], WeightKind::Gamma, &format!("{name}_g"));
         let beta = self.wkind(&[c], WeightKind::Beta, &format!("{name}_be"));
@@ -156,6 +169,7 @@ impl Builder {
         self.relu(c, &format!("{name}_relu"))
     }
 
+    /// Add a square max pooling.
     pub fn maxpool(&mut self, x: NodeId, k: usize, stride: usize, pad: usize, name: &str) -> NodeId {
         self.g.add1(
             OpKind::MaxPool { k: (k, k), stride: (stride, stride), pad: (pad, pad) },
@@ -164,6 +178,7 @@ impl Builder {
         )
     }
 
+    /// Add a square average pooling.
     pub fn avgpool(&mut self, x: NodeId, k: usize, stride: usize, pad: usize, name: &str) -> NodeId {
         self.g.add1(
             OpKind::AvgPool { k: (k, k), stride: (stride, stride), pad: (pad, pad) },
@@ -172,14 +187,17 @@ impl Builder {
         )
     }
 
+    /// Add a channel-axis concat.
     pub fn concat(&mut self, parts: &[NodeId], name: &str) -> NodeId {
         self.g.add1(OpKind::Concat { axis: 1 }, parts, name)
     }
 
+    /// Add an elementwise addition (residual join).
     pub fn add(&mut self, a: NodeId, b: NodeId, name: &str) -> NodeId {
         self.g.add1(OpKind::Add, &[a, b], name)
     }
 
+    /// Add a global average pooling.
     pub fn global_avgpool(&mut self, x: NodeId, name: &str) -> NodeId {
         self.g.add1(OpKind::GlobalAvgPool, &[x], name)
     }
@@ -193,6 +211,7 @@ impl Builder {
         self.g.add1(OpKind::Softmax, &[mm], "softmax")
     }
 
+    /// Set the outputs, validate, and return the finished graph.
     pub fn finish(mut self, outputs: &[NodeId]) -> Graph {
         self.g.outputs = outputs.iter().map(|&n| PortRef::of(n)).collect();
         self.g

@@ -31,6 +31,7 @@ use std::time::Instant;
 /// [`crate::cost::CostOracle`], so they take `&self` (interior mutability
 /// for any internal state) and must be `Send + Sync`.
 pub trait CostProvider: Send + Sync {
+    /// Human-readable provider name, recorded as measurement provenance.
     fn provider_name(&self) -> String;
 
     /// The DVFS states the measured device exposes (ascending; last =
@@ -40,6 +41,7 @@ pub trait CostProvider: Send + Sync {
         Vec::new()
     }
 
+    /// Measure one `(signature, algorithm)` pair at the given DVFS state.
     fn measure(
         &self,
         sig: &str,
@@ -53,10 +55,12 @@ pub trait CostProvider: Send + Sync {
 
 /// Simulated V100 provider (the default).
 pub struct SimV100Provider {
+    /// The analytic device model backing every measurement.
     pub model: EnergyModel,
 }
 
 impl SimV100Provider {
+    /// Build a provider whose measurement noise is derived from `seed`.
     pub fn new(seed: u64) -> SimV100Provider {
         SimV100Provider { model: EnergyModel::v100(seed) }
     }
@@ -90,7 +94,10 @@ impl CostProvider for SimV100Provider {
 /// host (PJRT artifact when loaded, reference op otherwise) and models power
 /// from achieved utilization.
 pub struct CpuProvider<'rt> {
+    /// PJRT runtime to time compiled artifacts through (reference-op
+    /// fallback when `None` or the artifact is missing).
     pub runtime: Option<&'rt Runtime>,
+    /// Device model used to translate measured utilization into power.
     pub power_model: EnergyModel,
     /// Measurement budget per (node, algorithm), seconds.
     pub budget_s: f64,
@@ -100,6 +107,8 @@ pub struct CpuProvider<'rt> {
 }
 
 impl<'rt> CpuProvider<'rt> {
+    /// Build a provider measuring on this host (PJRT-hybrid when a loaded
+    /// runtime is supplied).
     pub fn new(runtime: Option<&'rt Runtime>) -> CpuProvider<'rt> {
         CpuProvider {
             runtime,

@@ -1,5 +1,6 @@
 //! Report formatting + the paper-table generators (Tables 1–5).
 
+/// Paper-table generators (Tables 1-5) and the frontier table.
 pub mod tables;
 
 use std::fmt::Write as _;
@@ -7,12 +8,16 @@ use std::fmt::Write as _;
 /// A simple aligned text table, paper style.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Table title, rendered in the `=== title ===` banner.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows (each the same arity as `headers`).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given title and columns.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -21,11 +26,13 @@ impl Table {
         }
     }
 
+    /// Append a row. Panics on arity mismatch.
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);
     }
 
+    /// Render as aligned plain text.
     pub fn render(&self) -> String {
         let ncols = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();

@@ -10,19 +10,27 @@ use crate::cost::{CostFunction, GraphCost};
 use crate::energysim::{node_work, EnergyModel, FreqId, SimCost, Work};
 use crate::graph::{Graph, OpKind};
 use crate::models::{self, ModelConfig};
-use crate::search::{optimize, DvfsMode, OptimizeResult, OptimizerContext, SearchConfig};
+use crate::search::{
+    optimize, DvfsMode, OptimizeResult, OptimizerContext, PlanFrontier, SearchConfig,
+};
 
 /// Experiment-wide knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct ExperimentConfig {
+    /// Seed for the sim provider and measurement noise.
     pub seed: u64,
+    /// Model scale used across every table.
     pub model_cfg: ModelConfig,
+    /// Search budget knobs.
     pub search: SearchKnobs,
 }
 
+/// The search-budget subset of [`ExperimentConfig`].
 #[derive(Debug, Clone, Copy)]
 pub struct SearchKnobs {
+    /// Relaxation factor of the outer search.
     pub alpha: f64,
+    /// Hard cap on dequeued states.
     pub max_dequeues: usize,
 }
 
@@ -50,6 +58,7 @@ impl ExperimentConfig {
         }
     }
 
+    /// Expand into a full [`SearchConfig`].
     pub fn search_config(&self) -> SearchConfig {
         SearchConfig {
             alpha: self.search.alpha,
@@ -103,6 +112,7 @@ pub struct Table1Data {
     pub nodes: Vec<(String, Vec<(Algorithm, SimCost)>)>,
 }
 
+/// Table 1: per-node costs under each applicable algorithm.
 pub fn table1(cfg: &ExperimentConfig) -> (Table, Table1Data) {
     let model = cfg.model();
     // Three convolution configurations mirroring the paper's: conv1 is
@@ -172,17 +182,22 @@ fn conv_op(stride: (usize, usize), pad: (usize, usize)) -> OpKind {
 // Table 2 — accuracy of the cost model (SqueezeNet)
 // ---------------------------------------------------------------------------
 
+/// Raw Table-2 data: estimated vs actual costs along a search trajectory.
 pub struct Table2Data {
     /// Per graph: (estimated, actual).
     pub graphs: Vec<(GraphCost, SimCost)>,
+    /// Mean absolute percentage error of the time estimates.
     pub time_mape: f64,
+    /// Mean absolute percentage error of the power estimates.
     pub power_mape: f64,
+    /// Mean absolute percentage error of the energy estimates.
     pub energy_mape: f64,
     /// Kendall rank correlation on energy (order preservation, the paper's
     /// headline claim for the cost model).
     pub energy_tau: f64,
 }
 
+/// Table 2: accuracy of the cost model on SqueezeNet search snapshots.
 pub fn table2(cfg: &ExperimentConfig) -> (Table, Table2Data) {
     let g0 = models::squeezenet::build(cfg.model_cfg);
     let ctx = cfg.ctx();
@@ -264,23 +279,31 @@ fn search_snapshots(
 // Table 3 — various goals on 3 CNN graphs
 // ---------------------------------------------------------------------------
 
+/// One (model, variant) measurement of Table 3.
 #[derive(Debug, Clone)]
 pub struct Table3Row {
+    /// Model name.
     pub model: String,
+    /// Optimization variant label.
     pub variant: String,
+    /// Simulated whole-graph measurement of the variant's plan.
     pub cost: SimCost,
 }
 
+/// Raw Table-3 data: every (model, variant) measurement.
 pub struct Table3Data {
+    /// All rows, table order.
     pub rows: Vec<Table3Row>,
 }
 
 impl Table3Data {
+    /// Look up one (model, variant) row.
     pub fn get(&self, model: &str, variant: &str) -> Option<&Table3Row> {
         self.rows.iter().find(|r| r.model == model && r.variant == variant)
     }
 }
 
+/// Table 3: various optimization goals on three CNN graphs.
 pub fn table3(cfg: &ExperimentConfig) -> (Table, Table3Data) {
     let mut t = Table::new(
         "Table 3: various goals on 3 CNN graphs (sim-V100)",
@@ -368,11 +391,13 @@ pub fn table3(cfg: &ExperimentConfig) -> (Table, Table3Data) {
 // Table 4 — balance between time and energy (SqueezeNet)
 // ---------------------------------------------------------------------------
 
+/// Raw Table-4 data: the time/energy balance sweep.
 pub struct Table4Data {
     /// (label, weight-on-time, cost)
     pub rows: Vec<(String, f64, SimCost)>,
 }
 
+/// Table 4: balance between time and energy on SqueezeNet.
 pub fn table4(cfg: &ExperimentConfig) -> (Table, Table4Data) {
     let g0 = models::squeezenet::build(cfg.model_cfg);
     let model = cfg.model();
@@ -407,16 +432,70 @@ pub fn table4(cfg: &ExperimentConfig) -> (Table, Table4Data) {
 }
 
 // ---------------------------------------------------------------------------
+// Pareto plan frontiers (beyond the paper: the serve-time trade-off)
+// ---------------------------------------------------------------------------
+
+/// Render a [`PlanFrontier`] as an aligned table: one row per plan,
+/// fastest-first, with the probe weight, the oracle cost columns, the DVFS
+/// summary, and the plan's role on the frontier. Pass the origin cost to
+/// append an `origin` reference row.
+pub fn frontier_table(f: &PlanFrontier, original: Option<&GraphCost>) -> Table {
+    let mut t = Table::new(
+        "Pareto plan frontier (latency vs energy, fastest-first)",
+        &["plan", "w_energy", "time_ms", "power_w", "energy_j/1k", "freq", "role"],
+    );
+    let n = f.len();
+    for (i, p) in f.points().iter().enumerate() {
+        let role = if n == 1 {
+            "only"
+        } else if i == 0 {
+            "latency-optimal"
+        } else if i + 1 == n {
+            "energy-optimal"
+        } else {
+            "balance"
+        };
+        t.row(vec![
+            format!("p{i}"),
+            format!("{:.2}", p.weight),
+            f3(p.cost.time_ms),
+            f3(p.cost.power_w()),
+            f3(p.cost.energy_j),
+            describe_freqs(&p.assignment),
+            role.to_string(),
+        ]);
+    }
+    if let Some(o) = original {
+        t.row(vec![
+            "origin".to_string(),
+            "-".to_string(),
+            f3(o.time_ms),
+            f3(o.power_w()),
+            f3(o.energy_j),
+            "nominal".to_string(),
+            "unoptimized".to_string(),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
 // Table 5 — contribution of the inner search (SqueezeNet, energy objective)
 // ---------------------------------------------------------------------------
 
+/// Raw Table-5 data: the two-level ablation.
 pub struct Table5Data {
+    /// No optimization at all.
     pub origin: SimCost,
+    /// Outer (graph) search only.
     pub outer_only: SimCost,
+    /// Inner (algorithm) search only.
     pub inner_only: SimCost,
+    /// Both levels.
     pub both: SimCost,
 }
 
+/// Table 5: contribution of the inner search on SqueezeNet.
 pub fn table5(cfg: &ExperimentConfig) -> (Table, Table5Data) {
     let g0 = models::squeezenet::build(cfg.model_cfg);
     let model = cfg.model();
@@ -487,6 +566,34 @@ mod tests {
         // conv1/conv2: winograd not applicable
         assert!(data.nodes[0].1.iter().all(|(al, _)| *al != Algorithm::ConvWinograd));
         assert!(data.nodes[1].1.iter().all(|(al, _)| *al != Algorithm::ConvWinograd));
+    }
+
+    #[test]
+    fn frontier_table_renders() {
+        use crate::energysim::FreqId;
+        use crate::search::PlanPoint;
+        let mcfg = ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 };
+        let g = models::simple::build_cnn(mcfg);
+        let a = Assignment::default_for(&g, &crate::algo::AlgorithmRegistry::new());
+        let f = PlanFrontier::from_points(vec![
+            PlanPoint {
+                graph: g.clone(),
+                assignment: a.clone(),
+                cost: GraphCost { time_ms: 1.0, energy_j: 200.0, freq: FreqId::NOMINAL },
+                weight: 0.0,
+            },
+            PlanPoint {
+                graph: g,
+                assignment: a,
+                cost: GraphCost { time_ms: 2.0, energy_j: 100.0, freq: FreqId::NOMINAL },
+                weight: 1.0,
+            },
+        ]);
+        let origin = GraphCost { time_ms: 3.0, energy_j: 400.0, freq: FreqId::NOMINAL };
+        let r = frontier_table(&f, Some(&origin)).render();
+        assert!(r.contains("latency-optimal"), "{r}");
+        assert!(r.contains("energy-optimal"), "{r}");
+        assert!(r.contains("origin"), "{r}");
     }
 
     #[test]

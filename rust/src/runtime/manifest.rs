@@ -1,6 +1,20 @@
-//! Artifact manifest: the contract between `python/compile/aot.py` (writer)
-//! and the rust runtime (reader). Lives at `artifacts/manifest.json`.
+//! Persisted runtime contracts: the AOT **artifact manifest** (written by
+//! `python/compile/aot.py`, read by the rust runtime, lives at
+//! `artifacts/manifest.json`) and the **plan-frontier manifest** (written
+//! by `eadgo optimize --frontier N --save-frontier`, read back by
+//! `eadgo serve --frontier`).
+//!
+//! Frontier files are versioned JSON and backward-compatible both ways: a
+//! pre-frontier single-plan file (the `--save-plan` format) loads as a
+//! one-point frontier, and each entry of a frontier file embeds a complete
+//! single-plan document.
 
+use crate::algo::{AlgorithmRegistry, Assignment};
+use crate::cost::GraphCost;
+use crate::energysim::FreqId;
+use crate::graph::serde::{plan_from_json, plan_to_json};
+use crate::graph::Graph;
+use crate::search::{PlanFrontier, PlanPoint};
 use crate::util::json::{self, Json};
 use std::path::Path;
 
@@ -24,6 +38,7 @@ pub struct ArtifactEntry {
 /// The parsed manifest.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
+    /// All artifacts listed by the manifest, file order.
     pub entries: Vec<ArtifactEntry>,
 }
 
@@ -51,6 +66,7 @@ fn shapes_from_json(v: &Json, what: &str) -> anyhow::Result<Vec<Vec<usize>>> {
 }
 
 impl Manifest {
+    /// Serialize the manifest (versioned object with an `artifacts` array).
     pub fn to_json(&self) -> Json {
         let mut root = Json::obj();
         root.set("version", 1i64);
@@ -74,6 +90,7 @@ impl Manifest {
         root
     }
 
+    /// Parse a manifest document, validating required fields.
     pub fn from_json(v: &Json) -> anyhow::Result<Manifest> {
         let arts = v
             .get("artifacts")
@@ -102,13 +119,109 @@ impl Manifest {
         Ok(Manifest { entries })
     }
 
+    /// Read + parse a manifest file.
     pub fn load(path: &Path) -> anyhow::Result<Manifest> {
         Manifest::from_json(&json::read_file(path)?)
     }
 
+    /// Serialize + write the manifest to `path`.
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
         json::write_file(path, &self.to_json())
     }
+}
+
+// ---------------------------------------------------------------------------
+// Plan-frontier persistence
+// ---------------------------------------------------------------------------
+
+/// Current frontier-manifest format version.
+const FRONTIER_VERSION: i64 = 2;
+
+fn cost_to_json(c: &GraphCost) -> Json {
+    let mut o = Json::obj();
+    o.set("time_ms", c.time_ms).set("energy_j", c.energy_j).set("freq_mhz", c.freq.0 as i64);
+    o
+}
+
+fn cost_from_json(v: &Json) -> anyhow::Result<GraphCost> {
+    let mhz = v.get("freq_mhz").and_then(Json::as_usize).unwrap_or(0);
+    anyhow::ensure!(mhz <= u16::MAX as usize, "cost freq_mhz out of range");
+    Ok(GraphCost {
+        time_ms: v.req_f64("time_ms")?,
+        energy_j: v.req_f64("energy_j")?,
+        freq: FreqId(mhz as u16),
+    })
+}
+
+/// Serialize a [`PlanFrontier`] as a versioned frontier manifest: every
+/// entry is a complete single-plan document (the `--save-plan` format)
+/// plus its probe weight and oracle cost estimate.
+pub fn frontier_to_json(f: &PlanFrontier) -> Json {
+    let mut root = Json::obj();
+    root.set("version", FRONTIER_VERSION).set("kind", "plan_frontier");
+    root.set(
+        "plans",
+        Json::Arr(
+            f.points()
+                .iter()
+                .map(|p| {
+                    let mut o = plan_to_json(&p.graph, &p.assignment);
+                    o.set("weight", p.weight).set("cost", cost_to_json(&p.cost));
+                    o
+                })
+                .collect(),
+        ),
+    );
+    root
+}
+
+/// Parse a frontier manifest — or, backward-compatibly, a pre-frontier
+/// single-plan document, which loads as a one-point frontier (with a zero
+/// cost estimate when the file carries none).
+pub fn frontier_from_json(v: &Json, reg: &AlgorithmRegistry) -> anyhow::Result<PlanFrontier> {
+    let (entries, legacy): (Vec<&Json>, bool) = match v.get("plans") {
+        Some(plans) => {
+            // A present-but-malformed `plans` is a broken v2 manifest —
+            // reject it rather than mis-parsing it as a legacy plan.
+            let plans = plans
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("frontier manifest `plans` is not an array"))?;
+            anyhow::ensure!(!plans.is_empty(), "frontier manifest holds no plans");
+            (plans.iter().collect(), false)
+        }
+        // Legacy single-plan file: the document itself is the one entry.
+        None => (vec![v], true),
+    };
+    let mut points = Vec::with_capacity(entries.len());
+    for (i, e) in entries.into_iter().enumerate() {
+        let (graph, assignment): (Graph, Assignment) =
+            plan_from_json(e, reg).map_err(|err| anyhow::anyhow!("frontier plan {i}: {err}"))?;
+        let cost = match e.get("cost") {
+            Some(c) => {
+                cost_from_json(c).map_err(|err| anyhow::anyhow!("frontier plan {i}: {err}"))?
+            }
+            // Only a legacy single-plan document may omit the estimate: a
+            // one-point frontier never needs it. Zero-cost entries in a
+            // multi-plan manifest would be collapsed by the dominance
+            // prune, silently shrinking the frontier — reject instead.
+            None if legacy => GraphCost::default(),
+            None => anyhow::bail!("frontier plan {i} missing `cost`"),
+        };
+        let weight = e.get("weight").and_then(Json::as_f64).unwrap_or(1.0);
+        points.push(PlanPoint { graph, assignment, cost, weight });
+    }
+    Ok(PlanFrontier::from_points(points))
+}
+
+/// Persist a frontier to `path` (versioned JSON, see [`frontier_to_json`]).
+pub fn save_frontier(path: &Path, f: &PlanFrontier) -> anyhow::Result<()> {
+    json::write_file(path, &frontier_to_json(f))
+}
+
+/// Load a frontier from `path`; single-plan files load as a one-point
+/// frontier (see [`frontier_from_json`]).
+pub fn load_frontier(path: &Path, reg: &AlgorithmRegistry) -> anyhow::Result<PlanFrontier> {
+    frontier_from_json(&json::read_file(path)?, reg)
 }
 
 #[cfg(test)]
@@ -148,5 +261,103 @@ mod tests {
     fn missing_fields_rejected() {
         let j = crate::util::json::parse(r#"{"artifacts": [{"file": "x.hlo"}]}"#).unwrap();
         assert!(Manifest::from_json(&j).is_err());
+    }
+
+    fn tiny_frontier() -> PlanFrontier {
+        use crate::models::{self, ModelConfig};
+        let cfg = ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 };
+        let reg = AlgorithmRegistry::new();
+        let g = models::simple::build_cnn(cfg);
+        let fast = Assignment::default_for(&g, &reg);
+        let mut slow = fast.clone();
+        slow.set_uniform_freq(FreqId(900));
+        PlanFrontier::from_points(vec![
+            PlanPoint {
+                graph: g.clone(),
+                assignment: fast,
+                cost: GraphCost { time_ms: 1.0, energy_j: 250.0, freq: FreqId::NOMINAL },
+                weight: 0.0,
+            },
+            PlanPoint {
+                graph: g,
+                assignment: slow,
+                cost: GraphCost { time_ms: 2.5, energy_j: 125.0, freq: FreqId(900) },
+                weight: 1.0,
+            },
+        ])
+    }
+
+    #[test]
+    fn frontier_roundtrip_preserves_every_plan() {
+        use crate::graph::canonical::graph_hash;
+        let f = tiny_frontier();
+        assert_eq!(f.len(), 2);
+        let reg = AlgorithmRegistry::new();
+        let back = frontier_from_json(&frontier_to_json(&f), &reg).unwrap();
+        assert_eq!(back.len(), f.len());
+        for (a, b) in f.points().iter().zip(back.points()) {
+            assert_eq!(graph_hash(&a.graph), graph_hash(&b.graph));
+            assert_eq!(a.assignment.distance(&b.assignment), 0);
+            assert_eq!(a.cost.time_ms.to_bits(), b.cost.time_ms.to_bits());
+            assert_eq!(a.cost.energy_j.to_bits(), b.cost.energy_j.to_bits());
+            assert_eq!(a.cost.freq, b.cost.freq);
+            assert_eq!(a.weight.to_bits(), b.weight.to_bits());
+        }
+    }
+
+    #[test]
+    fn frontier_file_roundtrip_and_legacy_plan_fallback() {
+        use crate::models::{self, ModelConfig};
+        let dir = std::env::temp_dir().join("eadgo_frontier_manifest_test");
+        let reg = AlgorithmRegistry::new();
+
+        let path = dir.join("frontier.json");
+        let f = tiny_frontier();
+        save_frontier(&path, &f).unwrap();
+        let back = load_frontier(&path, &reg).unwrap();
+        assert_eq!(back.len(), 2);
+
+        // A pre-frontier single-plan file loads as a one-point frontier.
+        let cfg = ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 };
+        let g = models::simple::build_cnn(cfg);
+        let a = Assignment::default_for(&g, &reg);
+        let legacy = dir.join("plan.json");
+        crate::graph::serde::save_plan(&legacy, &g, &a).unwrap();
+        let one = load_frontier(&legacy, &reg).unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one.points()[0].assignment.distance(&a), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_frontier_manifest_rejected() {
+        let j = crate::util::json::parse(r#"{"version": 2, "plans": []}"#).unwrap();
+        assert!(frontier_from_json(&j, &AlgorithmRegistry::new()).is_err());
+    }
+
+    #[test]
+    fn v2_entry_without_cost_rejected() {
+        // Build a v2 manifest whose entries lack the `cost` field (e.g.
+        // hand-assembled from --save-plan files): must error, not load
+        // zero-cost plans that the dominance prune would then collapse.
+        use crate::models::{self, ModelConfig};
+        let cfg = ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 };
+        let g = models::simple::build_cnn(cfg);
+        let a = Assignment::default_for(&g, &AlgorithmRegistry::new());
+        let plan = crate::graph::serde::plan_to_json(&g, &a);
+        let mut root = crate::util::json::Json::obj();
+        root.set("version", 2i64);
+        root.set("plans", crate::util::json::Json::Arr(vec![plan.clone(), plan]));
+        let err = frontier_from_json(&root, &AlgorithmRegistry::new()).unwrap_err().to_string();
+        assert!(err.contains("missing `cost`"), "{err}");
+    }
+
+    #[test]
+    fn malformed_plans_key_rejected_not_misparsed() {
+        // A present-but-non-array `plans` is a broken v2 manifest, not a
+        // legacy single-plan file.
+        let j = crate::util::json::parse(r#"{"version": 2, "plans": {"oops": 1}}"#).unwrap();
+        let err = frontier_from_json(&j, &AlgorithmRegistry::new()).unwrap_err().to_string();
+        assert!(err.contains("not an array"), "{err}");
     }
 }

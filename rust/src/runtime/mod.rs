@@ -8,6 +8,7 @@
 //! 0.5.1 rejects; the text parser reassigns ids (see
 //! /opt/xla-example/README.md and DESIGN.md).
 
+/// Persisted manifests: AOT artifacts and plan frontiers.
 pub mod manifest;
 
 pub use manifest::{ArtifactEntry, Manifest};
@@ -18,6 +19,7 @@ use std::path::Path;
 
 /// A compiled artifact ready to execute.
 pub struct LoadedArtifact {
+    /// The manifest entry this executable was compiled from.
     pub entry: ArtifactEntry,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -38,6 +40,7 @@ impl Runtime {
         Ok(Runtime { client, artifacts: BTreeMap::new() })
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -68,22 +71,27 @@ impl Runtime {
         Ok(())
     }
 
+    /// Whether an artifact with this key is loaded.
     pub fn has(&self, key: &str) -> bool {
         self.artifacts.contains_key(key)
     }
 
+    /// All loaded artifact keys, sorted.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.artifacts.keys().map(String::as_str)
     }
 
+    /// The manifest entry of a loaded artifact.
     pub fn entry(&self, key: &str) -> Option<&ArtifactEntry> {
         self.artifacts.get(key).map(|a| &a.entry)
     }
 
+    /// Number of loaded artifacts.
     pub fn len(&self) -> usize {
         self.artifacts.len()
     }
 
+    /// Whether no artifacts are loaded.
     pub fn is_empty(&self) -> bool {
         self.artifacts.is_empty()
     }

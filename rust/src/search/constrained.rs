@@ -20,7 +20,9 @@ use crate::graph::Graph;
 
 /// Result of a constrained search: the chosen weight and the per-step trace.
 pub struct ConstrainedResult {
+    /// The winning (feasible, or best-time fallback) optimization result.
     pub result: OptimizeResult,
+    /// The linear weight on energy that produced the winner.
     pub weight: f64,
     /// (w, time_ms, energy_j) for every probe, in probe order.
     pub trace: Vec<(f64, f64, f64)>,

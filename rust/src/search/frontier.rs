@@ -1,0 +1,331 @@
+//! Pareto **plan frontiers**: instead of one plan per objective, enumerate
+//! the set of mutually non-dominated `(graph, assignment, frequency)` plans
+//! over the (latency, energy) plane.
+//!
+//! The paper frames the user choice as "optimize energy consumption *or
+//! balance* between energy and inference performance" — but the trade-off
+//! is a genuine frontier, not a point (the GPU-DVFS study of
+//! arXiv:1905.11012 maps it empirically, and PolyThrottle shows the best
+//! operating point shifts with load). This module exposes that frontier:
+//!
+//! - [`optimize_frontier`] sweeps the energy/performance weight of the
+//!   linear objective across `n` probes, reusing the α-band wave machinery
+//!   of [`outer_search`] per probe (the shared [`CostOracle`] makes repeat
+//!   probes nearly profile-free), and harvests every probe's best-so-far
+//!   trajectory as frontier candidates.
+//! - [`PlanFrontier`] holds the dominance-pruned result: plans sorted
+//!   fastest-first, with strictly increasing time and strictly decreasing
+//!   energy — no point dominates another, by construction.
+//!
+//! Downstream, `runtime::manifest` persists frontiers to versioned JSON and
+//! `serve::FrontierController` switches the active plan across the frontier
+//! at serve time as the live request rate moves (`eadgo serve --frontier
+//! plans.json --adaptive`).
+//!
+//! [`CostOracle`]: crate::cost::CostOracle
+
+use super::outer::{evaluate_baseline, outer_search, OptimizerContext, SearchConfig};
+use crate::algo::Assignment;
+use crate::cost::{CostFunction, GraphCost};
+use crate::graph::Graph;
+use std::cmp::Ordering;
+
+/// One plan on a Pareto frontier: a full `(graph, assignment)` pair (the
+/// assignment carries any DVFS states) plus its estimated cost and the
+/// objective weight of the probe that discovered it.
+#[derive(Debug, Clone)]
+pub struct PlanPoint {
+    /// The optimized computation graph.
+    pub graph: Graph,
+    /// The per-node algorithm (and DVFS state) assignment.
+    pub assignment: Assignment,
+    /// The cost oracle's estimate for this plan.
+    pub cost: GraphCost,
+    /// Weight on energy (`w` of `w·E/E₀ + (1-w)·T/T₀`) of the probe that
+    /// produced the point: 0 = pure time, 1 = pure energy.
+    pub weight: f64,
+}
+
+impl PlanPoint {
+    /// Pareto dominance over (latency, energy): `self` dominates `other`
+    /// when it is no worse on both axes and strictly better on at least
+    /// one.
+    pub fn dominates(&self, other: &PlanPoint) -> bool {
+        self.cost.time_ms <= other.cost.time_ms
+            && self.cost.energy_j <= other.cost.energy_j
+            && (self.cost.time_ms < other.cost.time_ms
+                || self.cost.energy_j < other.cost.energy_j)
+    }
+}
+
+/// A dominance-pruned Pareto set of plans, sorted fastest-first: strictly
+/// increasing `time_ms`, strictly decreasing `energy_j`. Index 0 is the
+/// latency-optimal plan, the last index the energy-optimal plan.
+#[derive(Debug, Clone, Default)]
+pub struct PlanFrontier {
+    points: Vec<PlanPoint>,
+}
+
+impl PlanFrontier {
+    /// Build a frontier from arbitrary candidate points: dominated points
+    /// (and exact duplicates of an earlier point's cost) are dropped, the
+    /// survivors sorted fastest-first. Deterministic: ties keep the
+    /// earliest candidate.
+    pub fn from_points(mut points: Vec<PlanPoint>) -> PlanFrontier {
+        points.sort_by(|a, b| {
+            a.cost
+                .time_ms
+                .partial_cmp(&b.cost.time_ms)
+                .unwrap_or(Ordering::Equal)
+                .then(
+                    a.cost
+                        .energy_j
+                        .partial_cmp(&b.cost.energy_j)
+                        .unwrap_or(Ordering::Equal),
+                )
+        });
+        // After the (time asc, energy asc) stable sort, a point is on the
+        // frontier iff its energy is strictly below every kept predecessor
+        // — checking the last kept suffices because kept energies are
+        // strictly decreasing.
+        let mut kept: Vec<PlanPoint> = Vec::new();
+        for p in points {
+            if kept.last().is_some_and(|k| p.cost.energy_j >= k.cost.energy_j) {
+                continue;
+            }
+            kept.push(p);
+        }
+        PlanFrontier { points: kept }
+    }
+
+    /// The frontier's plans, fastest-first.
+    pub fn points(&self) -> &[PlanPoint] {
+        &self.points
+    }
+
+    /// Number of plans on the frontier.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Whether the frontier holds no plans.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The fastest plan (lowest `time_ms`). Panics on an empty frontier.
+    pub fn latency_optimal(&self) -> &PlanPoint {
+        self.points.first().expect("empty frontier")
+    }
+
+    /// The cheapest plan (lowest `energy_j`). Panics on an empty frontier.
+    pub fn energy_optimal(&self) -> &PlanPoint {
+        self.points.last().expect("empty frontier")
+    }
+
+    /// The estimated cost of every plan, frontier order.
+    pub fn costs(&self) -> Vec<GraphCost> {
+        self.points.iter().map(|p| p.cost).collect()
+    }
+
+    /// Thin the frontier to at most `n` points, always keeping both
+    /// extremes and sampling evenly in between (deterministic).
+    pub fn thin_to(&mut self, n: usize) {
+        if n == 0 || self.points.len() <= n {
+            return;
+        }
+        if n == 1 {
+            // Degenerate request: keep the energy-optimal extreme.
+            self.points = vec![self.points.pop().expect("non-empty")];
+            return;
+        }
+        let len = self.points.len();
+        let mut out = Vec::with_capacity(n);
+        for (i, p) in std::mem::take(&mut self.points).into_iter().enumerate() {
+            let wanted = (0..n).any(|k| k * (len - 1) / (n - 1) == i);
+            if wanted {
+                out.push(p);
+            }
+        }
+        self.points = out;
+    }
+}
+
+/// One weight probe of a frontier enumeration (for reporting/ablation).
+#[derive(Debug, Clone, Copy)]
+pub struct FrontierProbe {
+    /// Weight on energy of the probe objective.
+    pub weight: f64,
+    /// Cost of the probe's winning plan.
+    pub cost: GraphCost,
+    /// Search wallclock of the probe, seconds.
+    pub wall_s: f64,
+}
+
+/// Outcome of [`optimize_frontier`].
+pub struct FrontierResult {
+    /// The dominance-pruned Pareto set (at most `n` plans).
+    pub frontier: PlanFrontier,
+    /// Cost of the origin graph under the default assignment.
+    pub original: GraphCost,
+    /// Per-probe trace, in probe order.
+    pub probes: Vec<FrontierProbe>,
+}
+
+/// Enumerate an (at most) `n`-point Pareto frontier over (latency, energy)
+/// for `g0`.
+///
+/// Sweeps the energy weight `w` of the linear objective over `n` evenly
+/// spaced probes from 0 (pure time) to 1 (pure energy); every probe runs
+/// the full two-level α-band search ([`outer_search`]) against the shared
+/// cost oracle, so signatures profile once across the whole sweep. Each
+/// probe contributes its winning plan *and* its best-so-far trajectory as
+/// candidates; the dominance prune then keeps the non-dominated set,
+/// thinned to `n` evenly spaced points when richer.
+///
+/// `n == 1` is exactly today's single-plan energy optimization: the result
+/// is bit-identical to `optimize(g0, ctx, &CostFunction::Energy, cfg)`
+/// (property-tested in `rust/tests/frontier.rs`).
+pub fn optimize_frontier(
+    g0: &Graph,
+    ctx: &OptimizerContext,
+    cfg: &SearchConfig,
+    n: usize,
+) -> anyhow::Result<FrontierResult> {
+    anyhow::ensure!(n >= 1, "frontier size must be >= 1");
+    g0.validate().map_err(|e| anyhow::anyhow!("invalid input graph: {e}"))?;
+    if n == 1 {
+        let res = super::optimize(g0, ctx, &CostFunction::Energy, cfg)?;
+        let point = PlanPoint {
+            graph: res.graph,
+            assignment: res.assignment,
+            cost: res.cost,
+            weight: 1.0,
+        };
+        return Ok(FrontierResult {
+            frontier: PlanFrontier::from_points(vec![point]),
+            original: res.original,
+            probes: vec![FrontierProbe {
+                weight: 1.0,
+                cost: res.cost,
+                wall_s: res.stats.wall_s,
+            }],
+        });
+    }
+
+    let mut candidates: Vec<PlanPoint> = Vec::new();
+    let mut probes: Vec<FrontierProbe> = Vec::with_capacity(n);
+    let mut original: Option<GraphCost> = None;
+    for i in 0..n {
+        let w = i as f64 / (n - 1) as f64;
+        // Same pipeline as `optimize`: evaluate the baseline once per
+        // probe (fully cached after the first), normalize, search.
+        let baseline = evaluate_baseline(g0, &ctx.oracle)?;
+        let cf = CostFunction::linear(w).normalized(&baseline.cost);
+        let res = outer_search(g0, ctx, &cf, cfg, &baseline)?;
+        original.get_or_insert(baseline.cost);
+        probes.push(FrontierProbe { weight: w, cost: res.cost, wall_s: res.stats.wall_s });
+        // Harvest the probe's whole improvement trajectory — intermediate
+        // plans a pure-w probe walked through are often non-dominated
+        // points of their own.
+        for (g, a, c) in res.trajectory {
+            candidates.push(PlanPoint { graph: g, assignment: a, cost: c, weight: w });
+        }
+        candidates.push(PlanPoint {
+            graph: res.graph,
+            assignment: res.assignment,
+            cost: res.cost,
+            weight: w,
+        });
+    }
+    let mut frontier = PlanFrontier::from_points(candidates);
+    frontier.thin_to(n);
+    Ok(FrontierResult {
+        frontier,
+        original: original.expect("at least one probe ran"),
+        probes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energysim::FreqId;
+
+    fn point(time_ms: f64, energy_j: f64) -> PlanPoint {
+        let reg = crate::algo::AlgorithmRegistry::new();
+        PlanPoint {
+            graph: Graph::new(),
+            assignment: Assignment::default_for(&Graph::new(), &reg),
+            cost: GraphCost { time_ms, energy_j, freq: FreqId::NOMINAL },
+            weight: 0.5,
+        }
+    }
+
+    #[test]
+    fn pruning_keeps_only_nondominated() {
+        let f = PlanFrontier::from_points(vec![
+            point(2.0, 50.0),
+            point(1.0, 100.0),
+            point(1.5, 120.0), // dominated by (1.0, 100)
+            point(3.0, 40.0),
+            point(2.5, 60.0), // dominated by (2.0, 50)
+        ]);
+        let costs: Vec<(f64, f64)> =
+            f.points().iter().map(|p| (p.cost.time_ms, p.cost.energy_j)).collect();
+        assert_eq!(costs, vec![(1.0, 100.0), (2.0, 50.0), (3.0, 40.0)]);
+        for (i, a) in f.points().iter().enumerate() {
+            for (j, b) in f.points().iter().enumerate() {
+                if i != j {
+                    assert!(!a.dominates(b), "point {i} dominates {j}");
+                }
+            }
+        }
+        assert_eq!(f.latency_optimal().cost.time_ms, 1.0);
+        assert_eq!(f.energy_optimal().cost.energy_j, 40.0);
+    }
+
+    #[test]
+    fn duplicate_costs_collapse() {
+        let f = PlanFrontier::from_points(vec![point(1.0, 10.0), point(1.0, 10.0)]);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn equal_time_keeps_lower_energy() {
+        let f = PlanFrontier::from_points(vec![point(1.0, 20.0), point(1.0, 10.0)]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.points()[0].cost.energy_j, 10.0);
+    }
+
+    #[test]
+    fn thinning_keeps_extremes() {
+        let mut f = PlanFrontier::from_points(
+            (0..10).map(|i| point(1.0 + i as f64, 100.0 - 5.0 * i as f64)).collect(),
+        );
+        f.thin_to(4);
+        assert_eq!(f.len(), 4);
+        assert_eq!(f.latency_optimal().cost.time_ms, 1.0);
+        assert_eq!(f.energy_optimal().cost.time_ms, 10.0);
+        // still sorted and dominance-free
+        for w in f.points().windows(2) {
+            assert!(w[0].cost.time_ms < w[1].cost.time_ms);
+            assert!(w[0].cost.energy_j > w[1].cost.energy_j);
+        }
+    }
+
+    #[test]
+    fn thin_to_one_keeps_energy_optimal() {
+        let mut f = PlanFrontier::from_points(vec![point(1.0, 100.0), point(2.0, 50.0)]);
+        f.thin_to(1);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.points()[0].cost.energy_j, 50.0);
+    }
+
+    #[test]
+    fn empty_frontier_is_fine() {
+        let f = PlanFrontier::from_points(Vec::new());
+        assert!(f.is_empty());
+        assert_eq!(f.len(), 0);
+    }
+}

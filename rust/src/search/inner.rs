@@ -33,7 +33,9 @@ use crate::util::rng::Rng;
 /// Outcome of an inner search.
 #[derive(Debug, Clone)]
 pub struct InnerResult {
+    /// The optimized per-node (algorithm, frequency) assignment.
     pub assignment: Assignment,
+    /// Cost of the graph under that assignment.
     pub cost: GraphCost,
     /// Number of full neighborhood sweeps until convergence.
     pub sweeps: usize,

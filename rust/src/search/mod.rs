@@ -1,11 +1,17 @@
 //! The two-level energy-aware search (paper §3.3) and the public
 //! `optimize` entry point.
 
+/// Constrained optimization (binary search on the linear weight, §4.4).
 pub mod constrained;
+/// Pareto plan-frontier enumeration over (latency, energy).
+pub mod frontier;
+/// Inner search: algorithm assignment of a fixed graph (Algorithm 2).
 pub mod inner;
+/// Outer search: α-relaxed backtracking over equivalent graphs (Algorithm 1).
 pub mod outer;
 
 pub use constrained::{optimize_with_time_budget, refine_frequency_to_budget, ConstrainedResult};
+pub use frontier::{optimize_frontier, FrontierProbe, FrontierResult, PlanFrontier, PlanPoint};
 pub use inner::{exhaustive_search, inner_search, random_assignment, InnerResult};
 pub use outer::{
     evaluate_baseline, outer_search, Baseline, DvfsMode, OptimizerContext, OuterResult,
@@ -19,16 +25,21 @@ use crate::graph::Graph;
 /// Outcome of a full optimization run, with the origin baseline attached
 /// for savings reporting.
 pub struct OptimizeResult {
+    /// The optimized computation graph.
     pub graph: Graph,
+    /// The optimized per-node algorithm (and DVFS state) assignment.
     pub assignment: Assignment,
     /// Cost of the optimized (G, A) under the additive model.
     pub cost: GraphCost,
     /// Cost of the origin graph under the default assignment.
     pub original: GraphCost,
+    /// Objective value of the optimized plan.
     pub objective_value: f64,
+    /// Objective value of the origin plan.
     pub original_objective: f64,
     /// Normalized objective actually used (after baseline normalization).
     pub objective: CostFunction,
+    /// Search statistics (expansions, waves, profiles, wallclock).
     pub stats: SearchStats,
 }
 
@@ -42,10 +53,12 @@ impl OptimizeResult {
         }
     }
 
+    /// Fractional energy savings versus the origin plan.
     pub fn energy_savings(&self) -> f64 {
         1.0 - self.cost.energy_j / self.original.energy_j.max(1e-12)
     }
 
+    /// Fractional inference-time savings versus the origin plan.
     pub fn time_savings(&self) -> f64 {
         1.0 - self.cost.time_ms / self.original.time_ms.max(1e-12)
     }

@@ -62,6 +62,7 @@ pub enum DvfsMode {
 }
 
 impl DvfsMode {
+    /// Parse a CLI/config spec (`off`, `per-graph`, `per-node`).
     pub fn parse(spec: &str) -> anyhow::Result<DvfsMode> {
         Ok(match spec {
             "off" => DvfsMode::Off,
@@ -71,6 +72,7 @@ impl DvfsMode {
         })
     }
 
+    /// Stable display name (inverse of [`DvfsMode::parse`]).
     pub fn describe(&self) -> &'static str {
         match self {
             DvfsMode::Off => "off",
@@ -153,10 +155,15 @@ pub struct SearchStats {
 
 /// Result of `outer_search`.
 pub struct OuterResult {
+    /// The best graph found.
     pub graph: Graph,
+    /// Its optimized per-node assignment.
     pub assignment: Assignment,
+    /// Cost of the best (graph, assignment) pair.
     pub cost: GraphCost,
+    /// Objective value of the best pair.
     pub objective_value: f64,
+    /// Search statistics.
     pub stats: SearchStats,
     /// Best-so-far trajectory: every (G, A, cost) at which the incumbent
     /// improved, in discovery order (origin first). Capped at 64 entries.
@@ -206,7 +213,9 @@ impl Ord for QueueEntry {
 /// The oracle is an `Arc` so one warm cache can back optimize → serve →
 /// re-optimize flows without re-profiling; clone the handle freely.
 pub struct OptimizerContext {
+    /// The substitution rule set defining the equivalent-graph space.
     pub rules: RuleSet,
+    /// The shared thread-safe cost-evaluation service.
     pub oracle: Arc<CostOracle>,
 }
 
@@ -220,6 +229,7 @@ impl OptimizerContext {
         )
     }
 
+    /// Build a context from rules + profile DB + measurement provider.
     pub fn new(
         rules: RuleSet,
         db: crate::cost::CostDb,
@@ -251,6 +261,7 @@ impl OptimizerContext {
 /// once and reused by both `optimize` (objective normalization) and
 /// `outer_search` (trajectory origin, inner-search start).
 pub struct Baseline {
+    /// The origin graph's cost table.
     pub table: GraphCostTable,
     /// The framework-default assignment for the origin graph.
     pub assignment: Assignment,

@@ -1,0 +1,336 @@
+//! Load-adaptive frontier control: pick which Pareto-frontier plan serves
+//! the next batch, based on the **live** request rate and queue depth.
+//!
+//! The policy follows PolyThrottle's observation that the energy-optimal
+//! operating point shifts with load: under light traffic the controller
+//! parks on the energy-optimal plan (rightmost frontier point), and as
+//! estimated utilization `ρ = rate × service_time` climbs past
+//! [`AdaptiveConfig::high_util`] — or the queue spikes past
+//! [`AdaptiveConfig::panic_queue`] — it steps toward the latency-optimal
+//! plan (index 0). It steps back toward the energy end only when the
+//! *slower neighbor* could absorb the current rate with margin
+//! ([`AdaptiveConfig::low_util`]) and the queue is drained. The asymmetric
+//! thresholds plus a minimum dwell time between steps are the hysteresis
+//! that keeps the controller from thrashing between plans.
+//!
+//! Utilization is computed from **measured** per-request service times
+//! (EWMA per plan, on the serving loop's virtual clock); a plan never yet
+//! executed is estimated by scaling a measured neighbor's service time by
+//! the cost oracle's time ratio — exactly the pair-wise relative accuracy
+//! the paper argues the cost model provides.
+
+use crate::cost::GraphCost;
+
+/// Tuning knobs of the [`FrontierController`].
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// Step toward the latency-optimal plan when the active plan's
+    /// estimated utilization exceeds this.
+    pub high_util: f64,
+    /// Step toward the energy-optimal plan only when the *slower
+    /// neighbor's* estimated utilization stays below this (must be <
+    /// `high_util` for hysteresis).
+    pub low_util: f64,
+    /// Queue depth that forces an immediate jump to the latency-optimal
+    /// plan, bypassing the dwell timer (overload escape hatch).
+    pub panic_queue: usize,
+    /// Minimum virtual seconds between plan switches (hysteresis dwell).
+    pub min_dwell_s: f64,
+    /// EWMA smoothing factor for rate/service estimates, in (0, 1];
+    /// larger = more reactive.
+    pub ewma: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            high_util: 0.85,
+            low_util: 0.55,
+            panic_queue: 12,
+            min_dwell_s: 0.02,
+            ewma: 0.3,
+        }
+    }
+}
+
+/// One plan switch taken by the controller (recorded in
+/// [`ServeReport::switches`](crate::serve::ServeReport::switches)).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanSwitchEvent {
+    /// Virtual time of the switch, seconds.
+    pub at_s: f64,
+    /// Frontier index served before the switch.
+    pub from: usize,
+    /// Frontier index served after the switch.
+    pub to: usize,
+    /// Queue depth observed at the decision.
+    pub queue_depth: usize,
+    /// Estimated arrival rate at the decision, requests/second.
+    pub rate_hz: f64,
+}
+
+/// Watches the live request stream and selects the active plan on a
+/// [`PlanFrontier`](crate::search::PlanFrontier), fastest-first indexed:
+/// index 0 = latency-optimal, last = energy-optimal. Starts on the
+/// energy-optimal plan (the right choice under no load) and moves along
+/// the frontier as pressure changes; see the module docs for the policy.
+#[derive(Debug)]
+pub struct FrontierController {
+    /// Oracle cost estimates per frontier plan, fastest-first.
+    est: Vec<GraphCost>,
+    cfg: AdaptiveConfig,
+    active: usize,
+    last_switch_s: f64,
+    /// EWMA inter-arrival time (seconds) and the last arrival seen.
+    ia_ewma_s: Option<f64>,
+    last_arrival_s: Option<f64>,
+    /// EWMA measured per-request service time per plan (virtual seconds).
+    svc_ewma_s: Vec<Option<f64>>,
+    switches: Vec<PlanSwitchEvent>,
+}
+
+impl FrontierController {
+    /// Build a controller over `plan_costs` (fastest-first, as returned by
+    /// [`PlanFrontier::costs`](crate::search::PlanFrontier::costs)).
+    /// Panics if `plan_costs` is empty.
+    pub fn new(plan_costs: Vec<GraphCost>, cfg: AdaptiveConfig) -> FrontierController {
+        assert!(!plan_costs.is_empty(), "controller needs at least one plan");
+        let n = plan_costs.len();
+        FrontierController {
+            est: plan_costs,
+            cfg,
+            active: n - 1,
+            last_switch_s: f64::NEG_INFINITY,
+            ia_ewma_s: None,
+            last_arrival_s: None,
+            svc_ewma_s: vec![None; n],
+            switches: Vec::new(),
+        }
+    }
+
+    /// The currently active frontier index.
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    /// Estimated live arrival rate, requests/second (0 until two arrivals
+    /// have been observed).
+    pub fn rate_hz(&self) -> f64 {
+        match self.ia_ewma_s {
+            Some(ia) if ia > 0.0 => 1.0 / ia,
+            _ => 0.0,
+        }
+    }
+
+    /// Plan switches taken so far, in decision order.
+    pub fn switches(&self) -> &[PlanSwitchEvent] {
+        &self.switches
+    }
+
+    /// Consume the controller, returning its switch log.
+    pub fn into_switches(self) -> Vec<PlanSwitchEvent> {
+        self.switches
+    }
+
+    /// Feed one request arrival (virtual timestamp, seconds). Arrivals
+    /// must be fed in nondecreasing time order.
+    pub fn observe_arrival(&mut self, at_s: f64) {
+        if let Some(prev) = self.last_arrival_s {
+            let ia = (at_s - prev).max(0.0);
+            self.ia_ewma_s = Some(match self.ia_ewma_s {
+                Some(e) => self.cfg.ewma * ia + (1.0 - self.cfg.ewma) * e,
+                None => ia,
+            });
+        }
+        self.last_arrival_s = Some(at_s);
+    }
+
+    /// Feed one measured batch execution: the plan that served it and the
+    /// per-request service time (batch wallclock / batch size).
+    pub fn observe_service(&mut self, plan: usize, per_request_s: f64) {
+        let slot = &mut self.svc_ewma_s[plan];
+        *slot = Some(match *slot {
+            Some(e) => self.cfg.ewma * per_request_s + (1.0 - self.cfg.ewma) * e,
+            None => per_request_s,
+        });
+    }
+
+    /// Estimated per-request service time of `plan`: measured EWMA when
+    /// available, else the nearest measured plan scaled by the oracle's
+    /// time ratio (pair-wise relative accuracy), else unknown.
+    fn service_s(&self, plan: usize) -> Option<f64> {
+        if let Some(s) = self.svc_ewma_s[plan] {
+            return Some(s);
+        }
+        let nearest = (0..self.est.len())
+            .filter(|&q| self.svc_ewma_s[q].is_some())
+            .min_by_key(|&q| (q.abs_diff(plan), q))?;
+        let measured = self.svc_ewma_s[nearest]?;
+        let ref_ms = self.est[nearest].time_ms;
+        if ref_ms <= 0.0 || self.est[plan].time_ms <= 0.0 {
+            return Some(measured);
+        }
+        Some(measured * self.est[plan].time_ms / ref_ms)
+    }
+
+    /// Estimated utilization `ρ = rate × service` of `plan` (None until
+    /// both a rate and a service estimate exist).
+    fn util(&self, rate_hz: f64, plan: usize) -> Option<f64> {
+        if rate_hz <= 0.0 {
+            return None;
+        }
+        self.service_s(plan).map(|s| rate_hz * s)
+    }
+
+    /// Decide which plan serves the next batch, given the virtual clock
+    /// and the queue depth at the decision point. May record a switch.
+    pub fn decide(&mut self, now_s: f64, queue_depth: usize) -> usize {
+        if self.est.len() <= 1 {
+            return self.active;
+        }
+        let rate = self.rate_hz();
+        let util_active = self.util(rate, self.active);
+        let util_slower = if self.active + 1 < self.est.len() {
+            self.util(rate, self.active + 1)
+        } else {
+            None
+        };
+        let dwell_ok = now_s - self.last_switch_s >= self.cfg.min_dwell_s;
+        if queue_depth >= self.cfg.panic_queue && self.active > 0 {
+            // Overload escape hatch: jump straight to the latency-optimal
+            // plan, dwell timer notwithstanding.
+            self.switch(0, now_s, queue_depth, rate);
+        } else if dwell_ok
+            && self.active > 0
+            && util_active.is_some_and(|u| u > self.cfg.high_util)
+        {
+            self.switch(self.active - 1, now_s, queue_depth, rate);
+        } else if dwell_ok
+            && queue_depth <= 1
+            && util_slower.is_some_and(|u| u < self.cfg.low_util)
+        {
+            self.switch(self.active + 1, now_s, queue_depth, rate);
+        }
+        self.active
+    }
+
+    fn switch(&mut self, to: usize, now_s: f64, queue_depth: usize, rate_hz: f64) {
+        self.switches.push(PlanSwitchEvent {
+            at_s: now_s,
+            from: self.active,
+            to,
+            queue_depth,
+            rate_hz,
+        });
+        self.active = to;
+        self.last_switch_s = now_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energysim::FreqId;
+
+    fn cost(time_ms: f64, energy_j: f64) -> GraphCost {
+        GraphCost { time_ms, energy_j, freq: FreqId::NOMINAL }
+    }
+
+    /// A 3-point frontier: fast/hungry, middle, slow/frugal.
+    fn frontier() -> Vec<GraphCost> {
+        vec![cost(1.0, 300.0), cost(2.0, 200.0), cost(4.0, 100.0)]
+    }
+
+    #[test]
+    fn starts_energy_optimal() {
+        let c = FrontierController::new(frontier(), AdaptiveConfig::default());
+        assert_eq!(c.active(), 2);
+        assert_eq!(c.rate_hz(), 0.0);
+    }
+
+    #[test]
+    fn light_load_stays_on_energy_plan() {
+        let mut c = FrontierController::new(frontier(), AdaptiveConfig::default());
+        // 10 req/s against a 4 ms plan: utilization 0.04.
+        let mut t = 0.0;
+        for _ in 0..50 {
+            c.observe_arrival(t);
+            t += 0.1;
+            c.observe_service(c.active(), 0.004);
+            assert_eq!(c.decide(t, 0), 2);
+        }
+        assert!(c.switches().is_empty());
+    }
+
+    #[test]
+    fn overload_steps_toward_latency_plan() {
+        let mut c = FrontierController::new(frontier(), AdaptiveConfig::default());
+        // 600 req/s against a 4 ms plan: utilization 2.4 — must step down.
+        let mut t = 0.0;
+        for _ in 0..200 {
+            c.observe_arrival(t);
+            t += 1.0 / 600.0;
+            c.observe_service(c.active(), 0.004 * frontier()[c.active()].time_ms / 4.0);
+            c.decide(t, 2);
+        }
+        assert_eq!(c.active(), 0, "controller must reach the latency plan");
+        assert!(!c.switches().is_empty());
+        for w in c.switches().windows(2) {
+            assert!(w[1].at_s - w[0].at_s >= AdaptiveConfig::default().min_dwell_s - 1e-12);
+        }
+    }
+
+    #[test]
+    fn panic_queue_jumps_to_latency_plan() {
+        let mut c = FrontierController::new(frontier(), AdaptiveConfig::default());
+        c.observe_arrival(0.0);
+        c.observe_arrival(0.001);
+        assert_eq!(c.decide(0.001, 50), 0, "deep queue jumps to index 0");
+        assert_eq!(c.switches().len(), 1);
+        assert_eq!(c.switches()[0].from, 2);
+        assert_eq!(c.switches()[0].to, 0);
+    }
+
+    #[test]
+    fn recovers_to_energy_plan_with_hysteresis() {
+        let cfg = AdaptiveConfig::default();
+        let mut c = FrontierController::new(frontier(), cfg.clone());
+        // Burst pushes it to the latency plan...
+        c.observe_arrival(0.0);
+        c.observe_arrival(0.0005);
+        c.decide(0.0005, 50);
+        assert_eq!(c.active(), 0);
+        // ...then a long quiet stretch at 10 req/s brings it back, one
+        // dwell-separated step at a time.
+        let mut t = 0.1;
+        for _ in 0..100 {
+            c.observe_arrival(t);
+            t += 0.1;
+            c.observe_service(c.active(), 0.001 * frontier()[c.active()].time_ms);
+            c.decide(t, 0);
+        }
+        assert_eq!(c.active(), 2, "quiet traffic must drift back to the energy plan");
+        // Hysteresis: never more than one switch inside a dwell window.
+        for w in c.switches().windows(2) {
+            assert!(w[1].at_s - w[0].at_s >= cfg.min_dwell_s - 1e-12);
+        }
+    }
+
+    #[test]
+    fn unmeasured_plan_scales_from_neighbor() {
+        let mut c = FrontierController::new(frontier(), AdaptiveConfig::default());
+        c.observe_service(2, 0.004);
+        // Plan 0 never ran: estimate = 0.004 * (1.0 / 4.0).
+        let s = c.service_s(0).unwrap();
+        assert!((s - 0.001).abs() < 1e-12, "{s}");
+    }
+
+    #[test]
+    fn single_plan_never_switches() {
+        let mut c = FrontierController::new(vec![cost(1.0, 1.0)], AdaptiveConfig::default());
+        c.observe_arrival(0.0);
+        c.observe_arrival(0.0001);
+        assert_eq!(c.decide(0.001, 1000), 0);
+        assert!(c.switches().is_empty());
+    }
+}

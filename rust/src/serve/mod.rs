@@ -7,6 +7,23 @@
 //! while every batch execution is a real engine call whose measured
 //! wallclock advances that clock. Latency percentiles therefore reflect
 //! genuine compute + queueing behaviour, reproducibly.
+//!
+//! Three entry points, least to most capable:
+//! - [`serve`] — one plan, one `exec_batch` closure.
+//! - [`serve_plan`] — one plan, annotated with the shared
+//!   [`CostOracle`]'s cost estimate for it.
+//! - [`serve_frontier`] — a whole Pareto [`PlanFrontier`] of plans behind
+//!   one loop: a [`FrontierController`] watches the live request rate and
+//!   queue depth and switches the active plan (energy-optimal under light
+//!   load, latency-optimal under pressure, with hysteresis), recording
+//!   every switch in [`ServeReport::switches`].
+//!
+//! [`PlanFrontier`]: crate::search::PlanFrontier
+
+/// Load-adaptive plan selection over a Pareto frontier.
+pub mod controller;
+
+pub use controller::{AdaptiveConfig, FrontierController, PlanSwitchEvent};
 
 use crate::algo::Assignment;
 use crate::cost::{CostOracle, GraphCost};
@@ -49,18 +66,28 @@ impl Default for ServeConfig {
 /// Per-request accounting (times on the virtual clock, seconds).
 #[derive(Debug, Clone, Copy)]
 pub struct RequestRecord {
+    /// Request index in arrival order.
     pub id: usize,
+    /// Arrival time on the virtual clock.
     pub arrival_s: f64,
+    /// When the batch containing this request started executing.
     pub start_s: f64,
+    /// When the batch completed.
     pub done_s: f64,
+    /// Size of the batch that served this request.
     pub batch_size: usize,
+    /// Frontier index of the plan that served this request (0 for
+    /// single-plan serving).
+    pub plan: usize,
 }
 
 impl RequestRecord {
+    /// End-to-end latency: completion minus arrival.
     pub fn latency_s(&self) -> f64 {
         self.done_s - self.arrival_s
     }
 
+    /// Time spent queued before execution started.
     pub fn queue_delay_s(&self) -> f64 {
         self.start_s - self.arrival_s
     }
@@ -69,22 +96,34 @@ impl RequestRecord {
 /// Aggregated serving report.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Per-request accounting, in arrival order.
     pub records: Vec<RequestRecord>,
     /// Total virtual time from first arrival to last completion.
     pub span_s: f64,
     /// Real wallclock spent inside the engine.
     pub busy_s: f64,
+    /// Number of batches executed.
     pub batches: usize,
     /// The cost oracle's estimate for the served plan (per inference),
     /// when serving went through [`serve_plan`] with a shared oracle.
     pub plan_cost: Option<GraphCost>,
+    /// Plan switches taken by the [`FrontierController`] (empty for
+    /// fixed-plan serving).
+    pub switches: Vec<PlanSwitchEvent>,
+    /// Oracle-estimated energy per request in mJ, averaged over the plans
+    /// that actually served each request (`None` when no estimate is
+    /// available).
+    pub energy_mj_per_request: Option<f64>,
 }
 
 impl ServeReport {
+    /// Latency summary (p50/p95/p99/mean) over all requests.
     pub fn latency_summary(&self) -> Summary {
         Summary::of(&self.records.iter().map(RequestRecord::latency_s).collect::<Vec<_>>())
     }
 
+    /// Served throughput over the serving span (first arrival to last
+    /// completion), requests/second.
     pub fn throughput_rps(&self) -> f64 {
         if self.span_s > 0.0 {
             self.records.len() as f64 / self.span_s
@@ -93,6 +132,7 @@ impl ServeReport {
         }
     }
 
+    /// Average formed batch size.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches > 0 {
             self.records.len() as f64 / self.batches as f64
@@ -100,14 +140,40 @@ impl ServeReport {
             0.0
         }
     }
+
+    /// Requests served per frontier plan index (length = max plan + 1).
+    pub fn plan_histogram(&self) -> Vec<usize> {
+        let n = self.records.iter().map(|r| r.plan + 1).max().unwrap_or(0);
+        let mut counts = vec![0usize; n];
+        for r in &self.records {
+            counts[r.plan] += 1;
+        }
+        counts
+    }
+
+    /// Human-readable plan distribution, e.g. `"p0×12 p2×52"` (plans that
+    /// served no request are omitted).
+    pub fn plan_distribution(&self) -> String {
+        self.plan_histogram()
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| **n > 0)
+            .map(|(i, n)| format!("p{i}×{n}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
 }
 
-/// Run the serving loop. `exec_batch` performs one real inference batch
-/// (one tensor per request) and returns one output per request; its
-/// measured wallclock is the service time on the virtual clock.
-pub fn serve<F>(cfg: &ServeConfig, mut exec_batch: F) -> anyhow::Result<ServeReport>
+/// The shared serving loop behind [`serve`] and [`serve_frontier`]: with
+/// no controller every batch runs plan 0 and the behaviour (and RNG
+/// stream) is bit-identical to the pre-frontier loop.
+fn run_loop<F>(
+    cfg: &ServeConfig,
+    mut controller: Option<&mut FrontierController>,
+    mut exec: F,
+) -> anyhow::Result<ServeReport>
 where
-    F: FnMut(&[Tensor]) -> anyhow::Result<Vec<Tensor>>,
+    F: FnMut(usize, &[Tensor]) -> anyhow::Result<Vec<Tensor>>,
 {
     anyhow::ensure!(cfg.requests > 0, "requests must be > 0");
     anyhow::ensure!(cfg.batch_max > 0, "batch_max must be > 0");
@@ -131,6 +197,18 @@ where
     while next < cfg.requests {
         // Advance to the first pending arrival if idle.
         clock = clock.max(arrivals[next]);
+        // The controller decides on the live queue depth at this instant:
+        // every request that has arrived but not been served.
+        let plan = match controller.as_mut() {
+            Some(c) => {
+                let mut depth = 1usize;
+                while next + depth < cfg.requests && arrivals[next + depth] <= clock {
+                    depth += 1;
+                }
+                c.decide(clock, depth)
+            }
+            None => 0,
+        };
         // Optional batching wait: let the window fill.
         let deadline = clock + cfg.max_wait_s;
         let mut end = next + 1;
@@ -143,13 +221,18 @@ where
             clock = clock.max(arrivals[end - 1]);
         }
         let batch_ids: Vec<usize> = (next..end).collect();
+        if let Some(c) = controller.as_mut() {
+            for &id in &batch_ids {
+                c.observe_arrival(arrivals[id]);
+            }
+        }
         let inputs: Vec<Tensor> = batch_ids
             .iter()
             .map(|_| Tensor::rand(&cfg.input_shape, &mut rng, -1.0, 1.0))
             .collect();
 
         let t0 = std::time::Instant::now();
-        let outputs = exec_batch(&inputs)?;
+        let outputs = exec(plan, &inputs)?;
         let service = t0.elapsed().as_secs_f64();
         anyhow::ensure!(
             outputs.len() == inputs.len(),
@@ -159,6 +242,9 @@ where
         );
         busy_s += service;
         batches += 1;
+        if let Some(c) = controller.as_mut() {
+            c.observe_service(plan, service / inputs.len() as f64);
+        }
         let start = clock;
         clock += service;
         for &id in &batch_ids {
@@ -168,13 +254,32 @@ where
                 start_s: start,
                 done_s: clock,
                 batch_size: batch_ids.len(),
+                plan,
             });
         }
         next = end;
     }
 
     let first = arrivals.first().copied().unwrap_or(0.0);
-    Ok(ServeReport { span_s: clock - first, busy_s, batches, records, plan_cost: None })
+    Ok(ServeReport {
+        span_s: clock - first,
+        busy_s,
+        batches,
+        records,
+        plan_cost: None,
+        switches: Vec::new(),
+        energy_mj_per_request: None,
+    })
+}
+
+/// Run the serving loop. `exec_batch` performs one real inference batch
+/// (one tensor per request) and returns one output per request; its
+/// measured wallclock is the service time on the virtual clock.
+pub fn serve<F>(cfg: &ServeConfig, mut exec_batch: F) -> anyhow::Result<ServeReport>
+where
+    F: FnMut(&[Tensor]) -> anyhow::Result<Vec<Tensor>>,
+{
+    run_loop(cfg, None, |_, batch| exec_batch(batch))
 }
 
 /// Serve an optimized `(graph, assignment)` plan, annotating the report
@@ -185,6 +290,30 @@ where
 /// estimate is exactly what the search minimized. Pricing uses only
 /// already-available profiles — a cold oracle yields `plan_cost: None`
 /// rather than blocking serving startup on measurements.
+///
+/// ```
+/// use eadgo::algo::Assignment;
+/// use eadgo::cost::CostOracle;
+/// use eadgo::graph::{Graph, OpKind, PortRef};
+/// use eadgo::serve::{serve_plan, ServeConfig};
+///
+/// let oracle = CostOracle::offline_default();
+/// let mut g = Graph::new();
+/// let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+/// let r = g.add1(OpKind::Relu, &[x], "r");
+/// g.outputs = vec![PortRef::of(r)];
+/// let a = Assignment::default_for(&g, oracle.reg());
+/// oracle.table_for(&g).unwrap(); // warm profiles => estimate attached
+///
+/// let cfg = ServeConfig { requests: 8, input_shape: vec![1, 3, 8, 8], ..Default::default() };
+/// let report = serve_plan(&cfg, &oracle, &g, &a, |batch| {
+///     Ok(batch.iter().map(eadgo::tensor::ops::relu).collect())
+/// })
+/// .unwrap();
+/// assert_eq!(report.records.len(), 8);
+/// let est = report.plan_cost.expect("oracle is warm");
+/// assert_eq!(report.energy_mj_per_request, Some(est.energy_j));
+/// ```
 pub fn serve_plan<F>(
     cfg: &ServeConfig,
     oracle: &CostOracle,
@@ -198,12 +327,41 @@ where
     let plan_cost = oracle.cached_cost(g, a)?;
     let mut report = serve(cfg, exec_batch)?;
     report.plan_cost = plan_cost;
+    report.energy_mj_per_request = plan_cost.map(|c| c.energy_j);
+    Ok(report)
+}
+
+/// Serve a Pareto frontier of plans adaptively: a [`FrontierController`]
+/// built over `plan_costs` (fastest-first, as returned by
+/// [`PlanFrontier::costs`](crate::search::PlanFrontier::costs)) picks the
+/// active plan per batch; `exec` executes one batch under the given
+/// frontier index. The report records per-request plans, every switch
+/// event, and — when every plan has a positive energy estimate — the
+/// oracle-estimated energy per request actually spent.
+pub fn serve_frontier<F>(
+    cfg: &ServeConfig,
+    plan_costs: &[GraphCost],
+    policy: &AdaptiveConfig,
+    exec: F,
+) -> anyhow::Result<ServeReport>
+where
+    F: FnMut(usize, &[Tensor]) -> anyhow::Result<Vec<Tensor>>,
+{
+    anyhow::ensure!(!plan_costs.is_empty(), "serve_frontier needs at least one plan");
+    let mut controller = FrontierController::new(plan_costs.to_vec(), policy.clone());
+    let mut report = run_loop(cfg, Some(&mut controller), exec)?;
+    report.switches = controller.into_switches();
+    if plan_costs.iter().all(|c| c.energy_j > 0.0) && !report.records.is_empty() {
+        let total: f64 = report.records.iter().map(|r| plan_costs[r.plan].energy_j).sum();
+        report.energy_mj_per_request = Some(total / report.records.len() as f64);
+    }
     Ok(report)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::energysim::FreqId;
 
     fn fast_exec(inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
         // trivial real work: elementwise relu per request
@@ -227,6 +385,8 @@ mod tests {
         assert_eq!(report.records.len(), 50);
         let ids: Vec<usize> = report.records.iter().map(|r| r.id).collect();
         assert_eq!(ids, (0..50).collect::<Vec<_>>());
+        assert!(report.records.iter().all(|r| r.plan == 0));
+        assert!(report.switches.is_empty());
     }
 
     #[test]
@@ -239,6 +399,7 @@ mod tests {
         }
         assert!(report.throughput_rps() > 0.0);
         assert!(report.latency_summary().p95 >= report.latency_summary().p50);
+        assert!(report.latency_summary().p99 >= report.latency_summary().p95);
     }
 
     #[test]
@@ -278,6 +439,7 @@ mod tests {
         // Cold oracle: serving must not trigger any profiling; no estimate.
         let cold = serve_plan(&cfg(10, 2), &oracle, &g, &a, fast_exec).unwrap();
         assert_eq!(cold.plan_cost, None);
+        assert_eq!(cold.energy_mj_per_request, None);
         assert_eq!(oracle.profiled_total(), 0);
 
         // Warm the oracle (as `serve --optimize` or a loaded DB would).
@@ -286,6 +448,7 @@ mod tests {
         let report = serve_plan(&cfg(10, 2), &oracle, &g, &a, fast_exec).unwrap();
         let est = report.plan_cost.expect("estimate attached once warm");
         assert!(est.time_ms > 0.0 && est.energy_j > 0.0);
+        assert_eq!(report.energy_mj_per_request, Some(est.energy_j));
         // Pricing the plan measured nothing new.
         assert_eq!(oracle.profiled_total(), before);
     }
@@ -300,5 +463,98 @@ mod tests {
     fn output_arity_checked() {
         let r = serve(&cfg(5, 2), |_| Ok(vec![]));
         assert!(r.is_err());
+    }
+
+    fn frontier_costs() -> Vec<GraphCost> {
+        vec![
+            GraphCost { time_ms: 1.0, energy_j: 300.0, freq: FreqId::NOMINAL },
+            GraphCost { time_ms: 2.0, energy_j: 180.0, freq: FreqId::NOMINAL },
+            GraphCost { time_ms: 4.0, energy_j: 100.0, freq: FreqId::NOMINAL },
+        ]
+    }
+
+    #[test]
+    fn adaptive_light_load_serves_energy_plan() {
+        // 50 req/s against sub-millisecond service: utilization ~0 — the
+        // controller must park on the energy-optimal plan (index 2).
+        let cfg = ServeConfig { arrival_rate_hz: 50.0, ..cfg(32, 4) };
+        let report = serve_frontier(
+            &cfg,
+            &frontier_costs(),
+            &AdaptiveConfig::default(),
+            |_, batch| fast_exec(batch),
+        )
+        .unwrap();
+        assert!(report.records.iter().all(|r| r.plan == 2), "{:?}", report.plan_histogram());
+        assert!(report.switches.is_empty());
+        assert_eq!(report.energy_mj_per_request, Some(100.0));
+    }
+
+    #[test]
+    fn adaptive_overload_switches_toward_latency_plan() {
+        // Execution busy-spins 100µs per request per estimated sim-ms, so
+        // at 10k req/s every plan but the fastest is overloaded (util ≥ 2):
+        // the queue spikes past the panic threshold within a batch or two
+        // and the controller must abandon the energy plan.
+        let costs = frontier_costs();
+        let report = serve_frontier(
+            &cfg(96, 4),
+            &costs,
+            &AdaptiveConfig::default(),
+            |plan, batch| {
+                let per_req = 100e-6 * costs[plan].time_ms;
+                let t0 = std::time::Instant::now();
+                while t0.elapsed().as_secs_f64() < per_req * batch.len() as f64 {}
+                Ok(batch.to_vec())
+            },
+        )
+        .unwrap();
+        assert!(!report.switches.is_empty(), "overload must trigger switches");
+        assert_eq!(report.records.last().unwrap().plan, 0, "{:?}", report.plan_histogram());
+        // Energy accounting reflects the mix of plans actually used: the
+        // first batch always runs the energy plan (100 mJ), the overloaded
+        // tail the latency plan (300 mJ).
+        let e = report.energy_mj_per_request.unwrap();
+        assert!(e > 100.0 && e < 300.0, "expected a plan mix, got {e}");
+        // Switch log is consistent with the per-record plans.
+        for w in report.switches.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s);
+            assert_eq!(w[1].from, w[0].to);
+        }
+    }
+
+    #[test]
+    fn single_point_frontier_acts_like_fixed_plan() {
+        let costs = vec![GraphCost { time_ms: 1.0, energy_j: 42.0, freq: FreqId::NOMINAL }];
+        let report = serve_frontier(
+            &cfg(20, 4),
+            &costs,
+            &AdaptiveConfig::default(),
+            |plan, batch| {
+                assert_eq!(plan, 0);
+                fast_exec(batch)
+            },
+        )
+        .unwrap();
+        assert!(report.switches.is_empty());
+        assert_eq!(report.energy_mj_per_request, Some(42.0));
+        assert_eq!(report.plan_histogram(), vec![20]);
+    }
+
+    #[test]
+    fn frontier_loop_matches_plain_serve_arrivals() {
+        // The generalized loop must not perturb the RNG stream: arrivals
+        // (and thus records) line up with plain `serve` under any plan mix.
+        let a = serve(&cfg(24, 4), fast_exec).unwrap();
+        let b = serve_frontier(
+            &cfg(24, 4),
+            &frontier_costs(),
+            &AdaptiveConfig::default(),
+            |_, batch| fast_exec(batch),
+        )
+        .unwrap();
+        let arr_a: Vec<f64> = a.records.iter().map(|r| r.arrival_s).collect();
+        let arr_b: Vec<f64> = b.records.iter().map(|r| r.arrival_s).collect();
+        assert_eq!(arr_a, arr_b);
     }
 }

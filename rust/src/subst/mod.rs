@@ -11,12 +11,14 @@
 //! (original, substituted) pairs through the reference engine (see
 //! `rust/tests/prop_invariants.rs`).
 
+/// The concrete substitution rules (fusions, merges, eliminations).
 pub mod rules;
 
 use crate::graph::Graph;
 
 /// One equivalent graph substitution `S_i`.
 pub trait Rule: Send + Sync {
+    /// Stable rule name (reporting and rule-set ablations).
     fn name(&self) -> &'static str;
 
     /// Apply the rule at every matching site, returning one new graph per
@@ -31,6 +33,7 @@ pub struct RuleSet {
 }
 
 impl RuleSet {
+    /// The full rule set used by the paper reproduction.
     pub fn standard() -> RuleSet {
         RuleSet {
             rules: vec![
@@ -48,22 +51,27 @@ impl RuleSet {
         }
     }
 
+    /// No rules: the outer search degenerates to the inner search.
     pub fn empty() -> RuleSet {
         RuleSet { rules: Vec::new() }
     }
 
+    /// A custom rule subset (leave-one-out ablations).
     pub fn with_rules(rules: Vec<Box<dyn Rule>>) -> RuleSet {
         RuleSet { rules }
     }
 
+    /// The names of all rules, registration order.
     pub fn names(&self) -> Vec<&'static str> {
         self.rules.iter().map(|r| r.name()).collect()
     }
 
+    /// Number of rules in the set.
     pub fn len(&self) -> usize {
         self.rules.len()
     }
 
+    /// Whether the set holds no rules.
     pub fn is_empty(&self) -> bool {
         self.rules.is_empty()
     }

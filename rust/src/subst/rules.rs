@@ -59,6 +59,7 @@ fn shapes_of(g: &Graph) -> Vec<Vec<TensorShape>> {
 // ---------------------------------------------------------------------------
 // Rule: Conv2d(act=None) followed by Relu  =>  Conv2d(act=Relu)
 // ---------------------------------------------------------------------------
+/// Fuse `Conv2d(act=None) -> Relu` into `Conv2d(act=Relu)`.
 pub struct FuseConvRelu;
 
 impl Rule for FuseConvRelu {
@@ -96,6 +97,7 @@ impl Rule for FuseConvRelu {
 // ---------------------------------------------------------------------------
 // Rule: DwConv2d(act=None) followed by Relu => DwConv2d(act=Relu)
 // ---------------------------------------------------------------------------
+/// Fuse `DwConv2d(act=None) -> Relu` into `DwConv2d(act=Relu)`.
 pub struct FuseDwConvRelu;
 
 impl Rule for FuseDwConvRelu {
@@ -130,6 +132,7 @@ impl Rule for FuseDwConvRelu {
 // Depthwise output channel k is produced by filter w[k,0,:,:], so the same
 // FoldBnWeight (per-out-channel scale) applies.
 // ---------------------------------------------------------------------------
+/// Fold a BatchNorm following a depthwise conv into its weights.
 pub struct FuseDwConvBn;
 
 impl Rule for FuseDwConvBn {
@@ -182,6 +185,7 @@ impl Rule for FuseDwConvBn {
 // ---------------------------------------------------------------------------
 // Rule: Relu(Add(a, b)) => AddRelu(a, b)
 // ---------------------------------------------------------------------------
+/// Fuse `Add -> Relu` into the fused `AddRelu` operator.
 pub struct FuseAddRelu;
 
 impl Rule for FuseAddRelu {
@@ -213,6 +217,7 @@ impl Rule for FuseAddRelu {
 // Rule: BatchNorm(Conv2d(x, w[, b])) => Conv2d(x, w', b') with folded params
 // w'[k] = w[k] * gamma[k]/sqrt(var[k]+eps);  b' = (b - mean)*scale + beta
 // ---------------------------------------------------------------------------
+/// Fold a BatchNorm following a conv into its weights and bias.
 pub struct FuseConvBn;
 
 impl Rule for FuseConvBn {
@@ -269,6 +274,7 @@ impl Rule for FuseConvBn {
 // Rule: Add(Conv2d(x, w[, b]), r) => Conv2d(x, w[, b], residual=r)
 // (and symmetrically Add(r, Conv..)). cuDNN-style epilogue residual fusion.
 // ---------------------------------------------------------------------------
+/// Fuse a residual `Add` into the producing conv (ResNet idiom).
 pub struct FuseConvResidual;
 
 impl Rule for FuseConvResidual {
@@ -318,6 +324,7 @@ impl Rule for FuseConvResidual {
 // kernel size => one Conv2d with concatenated filters + Split.
 // The Inception-branch / fire-module merge from MetaFlow.
 // ---------------------------------------------------------------------------
+/// Merge parallel same-shape convs sharing an input into one wider conv.
 pub struct MergeParallelConvs;
 
 impl Rule for MergeParallelConvs {
@@ -391,6 +398,7 @@ impl Rule for MergeParallelConvs {
 // kernel. Pure enabler: costs FLOPs, unlocks MergeParallelConvs with 3x3
 // siblings (MetaFlow's kernel enlargement).
 // ---------------------------------------------------------------------------
+/// Enlarge a 1x1 conv to a zero-padded 3x3 (enabling substitution).
 pub struct EnlargeConvKernel;
 
 impl Rule for EnlargeConvKernel {
@@ -454,6 +462,7 @@ impl Rule for EnlargeConvKernel {
 // ---------------------------------------------------------------------------
 // Rule: Concat(Split(x).0, Split(x).1, ...) over all ports in order => x
 // ---------------------------------------------------------------------------
+/// Cancel a `Split` whose parts are immediately re-`Concat`ed.
 pub struct SplitConcatElim;
 
 impl Rule for SplitConcatElim {
@@ -493,6 +502,7 @@ impl Rule for SplitConcatElim {
 // ---------------------------------------------------------------------------
 // Rule: Split(Concat(a, b, ...)) with matching sizes => identity rewiring
 // ---------------------------------------------------------------------------
+/// Cancel a `Concat` immediately re-`Split` at the same sizes.
 pub struct ConcatSplitElim;
 
 impl Rule for ConcatSplitElim {

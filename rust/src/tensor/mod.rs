@@ -9,9 +9,13 @@
 //!
 //! Layout is NCHW throughout (matching the paper's cuDNN default).
 
+/// Dense 2-D convolution: direct, im2col, and 1x1-GEMM algorithms.
 pub mod conv;
+/// Depthwise convolution algorithms.
 pub mod depthwise;
+/// Elementwise/pooling/normalization reference ops.
 pub mod ops;
+/// Winograd F(2x2, 3x3) convolution.
 pub mod winograd;
 
 use crate::util::rng::Rng;
@@ -31,6 +35,7 @@ impl fmt::Debug for Tensor {
 }
 
 impl Tensor {
+    /// Build from a shape and matching data. Panics on length mismatch.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -41,10 +46,12 @@ impl Tensor {
         Tensor { shape, data }
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
 
+    /// Constant-filled tensor of the given shape.
     pub fn full(shape: &[usize], value: f32) -> Tensor {
         Tensor { shape: shape.to_vec(), data: vec![value; shape.iter().product()] }
     }
@@ -54,30 +61,37 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), data: rng.f32_vec(shape.iter().product(), lo, hi) }
     }
 
+    /// The tensor's shape.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Row-major element slice.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable row-major element slice.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume the tensor, returning its elements.
     pub fn into_data(self) -> Vec<f32> {
         self.data
     }
@@ -102,6 +116,7 @@ impl Tensor {
         self.data[((n * cc + c) * hh + h) * ww + w]
     }
 
+    /// Mutable NCHW accessor for 4-d tensors.
     #[inline]
     pub fn at4_mut(&mut self, n: usize, c: usize, h: usize, w: usize) -> &mut f32 {
         debug_assert_eq!(self.rank(), 4);

@@ -36,12 +36,16 @@ impl BenchConfig {
 /// Result of a benchmark: per-iteration wallclock summary (seconds).
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Per-iteration wallclock summary, seconds.
     pub summary: Summary,
+    /// Iterations measured.
     pub total_iters: usize,
 }
 
 impl BenchResult {
+    /// Mean iteration time in milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.summary.mean * 1e3
     }
@@ -108,6 +112,7 @@ pub fn results_to_json(results: &[BenchResult]) -> crate::util::json::Json {
 /// A named collection of benches with uniform reporting — what the
 /// `benches/*.rs` binaries build on.
 pub struct BenchSuite {
+    /// Suite title, printed by [`BenchSuite::banner`].
     pub title: String,
     cfg: BenchConfig,
     results: Vec<BenchResult>,
@@ -121,19 +126,23 @@ pub fn quick_requested() -> bool {
 }
 
 impl BenchSuite {
+    /// A suite using the default (or `--quick`) config.
     pub fn new(title: &str) -> BenchSuite {
         let cfg = if quick_requested() { BenchConfig::quick() } else { BenchConfig::default() };
         BenchSuite { title: title.to_string(), cfg, results: Vec::new() }
     }
 
+    /// A suite with an explicit config.
     pub fn with_config(title: &str, cfg: BenchConfig) -> BenchSuite {
         BenchSuite { title: title.to_string(), cfg, results: Vec::new() }
     }
 
+    /// The measurement config in effect.
     pub fn config(&self) -> &BenchConfig {
         &self.cfg
     }
 
+    /// Measure one body, print a summary line, and record the result.
     pub fn run<T>(&mut self, name: &str, body: impl FnMut() -> T) -> &BenchResult {
         let r = bench(name, &self.cfg, body);
         eprintln!(
@@ -148,10 +157,12 @@ impl BenchSuite {
         self.results.last().unwrap()
     }
 
+    /// All results recorded so far.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
 
+    /// Print the suite banner.
     pub fn banner(&self) {
         eprintln!("\n=== {} ===", self.title);
     }

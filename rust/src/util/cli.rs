@@ -8,9 +8,11 @@ use std::collections::BTreeMap;
 /// Parsed arguments: subcommand (if any), named options, positionals.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// The subcommand token, when parsed with `with_subcommand`.
     pub subcommand: Option<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Positional (non-option) arguments, in order.
     pub positional: Vec<String>,
 }
 
@@ -41,23 +43,28 @@ impl Args {
         args
     }
 
+    /// Parse the process arguments (excluding argv[0]).
     pub fn from_env(with_subcommand: bool) -> Args {
         let raw: Vec<String> = std::env::args().skip(1).collect();
         Args::parse(&raw, with_subcommand)
     }
 
+    /// Was the bare flag `--name` given?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name value` / `--name=value`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(String::as_str)
     }
 
+    /// As [`Args::get`] with a default.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Parse `--name` as f64 (default when absent, error on junk).
     pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -67,6 +74,7 @@ impl Args {
         }
     }
 
+    /// Parse `--name` as usize (default when absent, error on junk).
     pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
         match self.get(name) {
             None => Ok(default),

@@ -15,15 +15,22 @@ use std::fmt;
 /// important for reproducible profile-DB files and golden tests.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (stored as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// An empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
@@ -39,6 +46,7 @@ impl Json {
         self
     }
 
+    /// Object field lookup (`None` on non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -46,6 +54,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -53,14 +62,17 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to i64.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|f| f as i64)
     }
 
+    /// The numeric value as usize (negative numbers yield `None`).
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|f| if f >= 0.0 { Some(f as usize) } else { None })
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -68,6 +80,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -75,6 +88,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -82,6 +96,7 @@ impl Json {
         }
     }
 
+    /// The key-value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -97,6 +112,7 @@ impl Json {
             .ok_or_else(|| JsonError::new(format!("missing/invalid number field `{key}`")))
     }
 
+    /// As [`Json::req_f64`] for string fields.
     pub fn req_str(&self, key: &str) -> Result<&str, JsonError> {
         self.get(key)
             .and_then(Json::as_str)
@@ -269,7 +285,9 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
 /// Parse error with byte offset for debuggability.
 #[derive(Debug, Clone)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset in the input (0 for semantic errors).
     pub offset: usize,
 }
 

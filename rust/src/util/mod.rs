@@ -3,11 +3,17 @@
 //! modules so the whole project compiles from the vendored `xla` dependency
 //! set alone.
 
+/// Micro-benchmark harness (criterion substitute).
 pub mod bench;
+/// Tiny command-line parser (clap substitute).
 pub mod cli;
+/// Minimal JSON value, parser, and writer (serde_json substitute).
 pub mod json;
+/// Property-based testing helper (proptest substitute).
 pub mod prop;
+/// Deterministic PRNG (rand substitute).
 pub mod rng;
+/// Summary statistics, percentiles, regression, rank correlation.
 pub mod stats;
 
 /// Monotonic wallclock helper: returns seconds elapsed while running `f`.

@@ -19,6 +19,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed the generator (SplitMix64 state expansion).
     pub fn seed_from(seed: u64) -> Rng {
         let mut sm = seed;
         Rng {
@@ -31,6 +32,7 @@ impl Rng {
         }
     }
 
+    /// The next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;
@@ -73,6 +75,7 @@ impl Rng {
         lo + self.below((hi - lo + 1) as usize) as i64
     }
 
+    /// A fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.next_u64() & 1 == 1
     }

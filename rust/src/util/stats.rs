@@ -4,16 +4,26 @@
 /// Summary of a sample of measurements (e.g. per-iteration wallclock).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation (n-1 denominator).
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median (linear-interpolated 50th percentile).
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile (the serving-latency SLO quantile).
+    pub p99: f64,
 }
 
 impl Summary {
+    /// Summarize a non-empty sample. Panics on an empty slice.
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "Summary::of(empty)");
         let n = samples.len();
@@ -33,6 +43,7 @@ impl Summary {
             max: sorted[n - 1],
             p50: percentile_sorted(&sorted, 50.0),
             p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
         }
     }
 
@@ -161,6 +172,15 @@ mod tests {
         let s = Summary::of(&[7.0]);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.p95, 7.0);
+        assert_eq!(s.p99, 7.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let samples: Vec<f64> = (0..200).map(|i| i as f64).collect();
+        let s = Summary::of(&samples);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!((s.p99 - 197.01).abs() < 1e-9, "{}", s.p99);
     }
 
     #[test]

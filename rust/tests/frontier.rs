@@ -1,0 +1,167 @@
+//! Frontier invariants (ISSUE 3): no returned point dominates another, a
+//! 1-point frontier is bit-identical to the single-plan optimizer output,
+//! and the frontier manifest round-trips every plan exactly.
+
+use eadgo::cost::{CostFunction, GraphCost};
+use eadgo::energysim::FreqId;
+use eadgo::graph::canonical::graph_hash;
+use eadgo::models::{self, ModelConfig};
+use eadgo::search::{
+    optimize, optimize_frontier, OptimizerContext, PlanFrontier, PlanPoint, SearchConfig,
+};
+use eadgo::util::prop::{check, default_cases};
+
+fn tiny() -> ModelConfig {
+    ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 }
+}
+
+fn scfg() -> SearchConfig {
+    SearchConfig { max_dequeues: 30, ..Default::default() }
+}
+
+/// Assert the structural frontier invariant: fastest-first, strictly
+/// increasing time, strictly decreasing energy, pairwise non-dominated.
+fn assert_frontier_invariants(f: &PlanFrontier) {
+    for w in f.points().windows(2) {
+        assert!(w[0].cost.time_ms < w[1].cost.time_ms, "time not strictly increasing");
+        assert!(w[0].cost.energy_j > w[1].cost.energy_j, "energy not strictly decreasing");
+    }
+    for (i, a) in f.points().iter().enumerate() {
+        for (j, b) in f.points().iter().enumerate() {
+            assert!(i == j || !a.dominates(b), "frontier point {i} dominates point {j}");
+        }
+    }
+}
+
+#[test]
+fn frontier_points_are_mutually_nondominated() {
+    let g = models::squeezenet::build(tiny());
+    let ctx = OptimizerContext::offline_default();
+    let res = optimize_frontier(&g, &ctx, &scfg(), 5).unwrap();
+    assert!(!res.frontier.is_empty());
+    assert!(res.frontier.len() <= 5);
+    assert_frontier_invariants(&res.frontier);
+    assert_eq!(res.probes.len(), 5);
+    // The extremes come from the pure-objective probes: nothing on the
+    // frontier may beat the w=1 probe on energy or the w=0 probe on time.
+    let e_probe = res.probes.last().unwrap().cost.energy_j;
+    let t_probe = res.probes.first().unwrap().cost.time_ms;
+    assert!(res.frontier.energy_optimal().cost.energy_j <= e_probe + 1e-9);
+    assert!(res.frontier.latency_optimal().cost.time_ms <= t_probe + 1e-9);
+}
+
+#[test]
+fn resnet_frontier_has_at_least_two_points() {
+    // The acceptance shape of `optimize --frontier 5` on resnet: a ≥2-point
+    // dominance-free frontier (reduced resolution keeps the test fast; the
+    // algorithm trade-offs that create the frontier are scale-independent).
+    let mcfg = ModelConfig { batch: 1, resolution: 64, width_div: 4, classes: 10 };
+    let g = models::by_name("resnet", mcfg).unwrap();
+    let ctx = OptimizerContext::offline_default();
+    let res = optimize_frontier(&g, &ctx, &scfg(), 5).unwrap();
+    let n = res.frontier.len();
+    assert!(n >= 2, "resnet frontier collapsed to {n} point(s)");
+    assert_frontier_invariants(&res.frontier);
+    // Every frontier plan must beat the origin on at least one axis.
+    for p in res.frontier.points() {
+        assert!(
+            p.cost.time_ms <= res.original.time_ms + 1e-9
+                || p.cost.energy_j <= res.original.energy_j + 1e-9
+        );
+    }
+}
+
+#[test]
+fn one_point_frontier_bit_identical_to_single_plan_optimize() {
+    let g = models::squeezenet::build(tiny());
+    let fres = optimize_frontier(&g, &OptimizerContext::offline_default(), &scfg(), 1).unwrap();
+    assert_eq!(fres.frontier.len(), 1);
+    let point = &fres.frontier.points()[0];
+    let single =
+        optimize(&g, &OptimizerContext::offline_default(), &CostFunction::Energy, &scfg()).unwrap();
+    assert_eq!(graph_hash(&point.graph), graph_hash(&single.graph));
+    assert_eq!(point.assignment, single.assignment);
+    assert_eq!(point.cost.time_ms.to_bits(), single.cost.time_ms.to_bits());
+    assert_eq!(point.cost.energy_j.to_bits(), single.cost.energy_j.to_bits());
+    assert_eq!(fres.original.energy_j.to_bits(), single.original.energy_j.to_bits());
+}
+
+#[test]
+fn manifest_roundtrip_preserves_every_plan() {
+    let g = models::squeezenet::build(tiny());
+    let ctx = OptimizerContext::offline_default();
+    let res = optimize_frontier(&g, &ctx, &scfg(), 4).unwrap();
+    let dir = std::env::temp_dir().join("eadgo_frontier_it_test");
+    let path = dir.join("plans.json");
+    eadgo::runtime::manifest::save_frontier(&path, &res.frontier).unwrap();
+    let reg = eadgo::algo::AlgorithmRegistry::new();
+    let back = eadgo::runtime::manifest::load_frontier(&path, &reg).unwrap();
+    assert_eq!(back.len(), res.frontier.len());
+    for (a, b) in res.frontier.points().iter().zip(back.points()) {
+        assert_eq!(graph_hash(&a.graph), graph_hash(&b.graph), "graph changed");
+        assert_eq!(a.assignment.distance(&b.assignment), 0, "assignment changed");
+        assert_eq!(a.cost.time_ms.to_bits(), b.cost.time_ms.to_bits(), "time changed");
+        assert_eq!(a.cost.energy_j.to_bits(), b.cost.energy_j.to_bits(), "energy changed");
+        assert_eq!(a.cost.freq, b.cost.freq, "frequency changed");
+        assert_eq!(a.weight.to_bits(), b.weight.to_bits(), "weight changed");
+    }
+    assert_frontier_invariants(&back);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn legacy_single_plan_file_loads_as_one_point_frontier() {
+    let reg = eadgo::algo::AlgorithmRegistry::new();
+    let g = models::simple::build_cnn(tiny());
+    let a = eadgo::algo::Assignment::default_for(&g, &reg);
+    let dir = std::env::temp_dir().join("eadgo_frontier_legacy_test");
+    let path = dir.join("plan.json");
+    eadgo::graph::serde::save_plan(&path, &g, &a).unwrap();
+    let f = eadgo::runtime::manifest::load_frontier(&path, &reg).unwrap();
+    assert_eq!(f.len(), 1);
+    assert_eq!(graph_hash(&f.points()[0].graph), graph_hash(&g));
+    assert_eq!(f.points()[0].assignment.distance(&a), 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prop_pruning_is_sound_and_complete() {
+    // For random candidate clouds: every kept point is non-dominated, and
+    // every dropped point is dominated by (or cost-identical to) a kept one.
+    let g = models::simple::build_cnn(tiny());
+    let reg = eadgo::algo::AlgorithmRegistry::new();
+    let a = eadgo::algo::Assignment::default_for(&g, &reg);
+    check("frontier_pruning", default_cases(), |rng| {
+        let n = 2 + rng.below(20);
+        let cloud: Vec<PlanPoint> = (0..n)
+            .map(|_| PlanPoint {
+                graph: g.clone(),
+                assignment: a.clone(),
+                cost: GraphCost {
+                    time_ms: 1.0 + rng.f64() * 9.0,
+                    energy_j: 10.0 + rng.f64() * 90.0,
+                    freq: FreqId::NOMINAL,
+                },
+                weight: rng.f64(),
+            })
+            .collect();
+        let f = PlanFrontier::from_points(cloud.clone());
+        if f.is_empty() {
+            return Err("pruned a non-empty cloud to nothing".to_string());
+        }
+        assert_frontier_invariants(&f);
+        for (i, p) in cloud.iter().enumerate() {
+            let covered = f.points().iter().any(|k| {
+                k.dominates(p)
+                    || (k.cost.time_ms == p.cost.time_ms && k.cost.energy_j == p.cost.energy_j)
+            });
+            if !covered {
+                return Err(format!(
+                    "candidate {i} ({}, {}) neither kept nor dominated",
+                    p.cost.time_ms, p.cost.energy_j
+                ));
+            }
+        }
+        Ok(())
+    });
+}

@@ -190,3 +190,54 @@ fn unknown_model_errors() {
     let out = eadgo().args(["show", "--model", "alexnet9000"]).output().unwrap();
     assert!(!out.status.success());
 }
+
+#[test]
+fn optimize_frontier_then_serve_adaptive() {
+    let dir = tmp("frontier");
+    std::fs::create_dir_all(&dir).unwrap();
+    let plans = dir.join("plans.json");
+    let db = dir.join("db.json");
+    let out = run_ok(eadgo().args([
+        "optimize",
+        "--model",
+        "simple",
+        "--frontier",
+        "3",
+        "--max-dequeues",
+        "20",
+        "--save-frontier",
+        plans.to_str().unwrap(),
+        "--db",
+        db.to_str().unwrap(),
+    ]));
+    assert!(out.contains("Pareto plan frontier"), "{out}");
+    assert!(out.contains("frontier ("), "{out}");
+    assert!(plans.exists());
+
+    let out = run_ok(eadgo().args([
+        "serve",
+        "--frontier",
+        plans.to_str().unwrap(),
+        "--adaptive",
+        "--requests",
+        "8",
+        "--batch-max",
+        "2",
+        "--artifacts",
+        dir.join("no_artifacts").to_str().unwrap(),
+        "--db",
+        db.to_str().unwrap(),
+    ]));
+    assert!(out.contains("served 8 requests"), "{out}");
+    // Single- or multi-point frontier alike, the loaded count is reported.
+    assert!(out.contains("-point frontier"), "{out}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_adaptive_without_frontier_errors() {
+    let out = eadgo().args(["serve", "--model", "simple", "--adaptive"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--adaptive needs a frontier"), "{err}");
+}
