@@ -13,6 +13,9 @@
 //!   7. Pareto frontier + load-adaptive serving — fixed latency-optimal
 //!      plan vs the FrontierController across the frontier, at low and
 //!      high request rates (energy/request and steady-state p99).
+//!   8. substitution engine — candidate-evaluation throughput
+//!      (candidates/sec) of the RewriteSite delta engine vs the legacy
+//!      full-rebuild path, with bit-identical plans asserted.
 //! Run: `cargo bench --bench ablation [-- --quick]` (or EADGO_BENCH_QUICK=1).
 //! Emits `BENCH_ablation.json` (dir override: EADGO_BENCH_OUT_DIR).
 
@@ -453,6 +456,82 @@ fn main() {
     );
     serve_json.set("frontier_points", frontier.len());
     payload.set("adaptive_serving", serve_json);
+
+    // --- 8. substitution engine: delta evaluation vs full rebuild -----------
+    // The ISSUE-4 refactor claim: evaluating candidates through RewriteSite
+    // deltas (carry-over cost tables, incremental hashing, lazy
+    // materialization) raises wave throughput while choosing bit-identical
+    // plans. `delta_eval: false` runs the legacy full-rebuild path.
+    let run_engine = |delta_eval: bool| {
+        let c = ctx();
+        let res = optimize(
+            &g,
+            &c,
+            &CostFunction::Energy,
+            &SearchConfig { max_dequeues: budget, delta_eval, ..Default::default() },
+        )
+        .unwrap();
+        let builds = c.oracle.table_build_stats();
+        (res, builds)
+    };
+    let (full_res, full_builds) = run_engine(false);
+    let (delta_res, delta_builds) = run_engine(true);
+    assert_eq!(
+        graph_hash(&full_res.graph),
+        graph_hash(&delta_res.graph),
+        "delta engine chose a different plan graph"
+    );
+    assert_eq!(full_res.assignment, delta_res.assignment, "delta engine assignment differs");
+    assert_eq!(
+        full_res.cost.energy_j.to_bits(),
+        delta_res.cost.energy_j.to_bits(),
+        "delta engine cost differs"
+    );
+    // Instrumentation: the delta run must not rebuild full tables per
+    // candidate (only baseline + one per expanded wave entry), while the
+    // legacy run rebuilds one per candidate.
+    assert_eq!(delta_builds.delta_tables as usize, delta_res.stats.evaluated);
+    assert!(delta_builds.full_tables as usize <= 1 + delta_res.stats.expanded);
+    assert_eq!(full_builds.delta_tables, 0);
+    assert!(full_builds.full_tables as usize >= full_res.stats.evaluated);
+    let cps_full = full_res.stats.candidates_per_sec();
+    let cps_delta = delta_res.stats.candidates_per_sec();
+    let mut t = Table::new(
+        "Ablation 8: substitution engine (SqueezeNet, energy objective)",
+        &["engine", "candidates", "cand/s", "search_s", "full tables", "delta tables"],
+    );
+    for (label, res, builds, cps) in [
+        ("full-rebuild", &full_res, &full_builds, cps_full),
+        ("delta", &delta_res, &delta_builds, cps_delta),
+    ] {
+        t.row(vec![
+            label.to_string(),
+            res.stats.evaluated.to_string(),
+            format!("{cps:.0}"),
+            format!("{:.3}", res.stats.wall_s),
+            builds.full_tables.to_string(),
+            builds.delta_tables.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    print!("{}", eadgo::report::tables::rule_stats_table(&delta_res.stats).render());
+    let speedup = cps_delta / cps_full.max(1e-9);
+    println!(
+        "substitution engine throughput: full-rebuild {cps_full:.0} -> delta {cps_delta:.0} candidates/sec ({speedup:.2}x)\n"
+    );
+    if speedup < 1.0 {
+        eprintln!(
+            "NOTE: no delta-engine speedup on this host ({cps_delta:.0} vs {cps_full:.0} cand/s) \
+             — expected under heavy host noise; plans are still bit-identical"
+        );
+    }
+    let mut engine_json = Json::obj();
+    engine_json
+        .set("candidates_per_sec_full", cps_full)
+        .set("candidates_per_sec_delta", cps_delta)
+        .set("speedup", speedup)
+        .set("candidates", delta_res.stats.evaluated as f64);
+    payload.set("subst_engine", engine_json);
 
     eadgo::util::bench::emit_bench_json("ablation", &payload).expect("bench payload write");
 }

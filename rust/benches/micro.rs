@@ -30,8 +30,34 @@ fn main() {
         black_box(g.len())
     });
     suite.run("infer_shapes/resnet", || black_box(resnet.infer_shapes().unwrap().len()));
-    suite.run("subst_neighbors/squeezenet", || black_box(rules.neighbors(&squeezenet).len()));
-    suite.run("subst_neighbors/resnet", || black_box(rules.neighbors(&resnet).len()));
+    suite.run("subst_neighbors/squeezenet", || {
+        black_box(rules.neighbors(&squeezenet).unwrap().len())
+    });
+    suite.run("subst_neighbors/resnet", || black_box(rules.neighbors(&resnet).unwrap().len()));
+    // Match phase alone (no materialization): the delta engine's hot path.
+    suite.run("subst_find_sites/squeezenet", || {
+        black_box(rules.find_sites(&squeezenet).unwrap().len())
+    });
+    suite.run("subst_find_sites/resnet", || black_box(rules.find_sites(&resnet).unwrap().len()));
+    // Site -> delta -> incremental hash (what dedup costs per candidate).
+    let sq_shapes = squeezenet.infer_shapes().unwrap();
+    let sq_hashes = eadgo::graph::canonical::node_hashes(&squeezenet).unwrap();
+    let sq_consumers = squeezenet.consumers();
+    suite.run("delta_hash_all_sites/squeezenet", || {
+        let cx = eadgo::subst::MatchContext::with_shapes(&squeezenet, &sq_shapes);
+        let mut acc = 0u64;
+        for site in rules.sites(&squeezenet, &cx) {
+            let view = eadgo::graph::DeltaView::new(
+                &squeezenet,
+                &sq_shapes,
+                site.delta(&squeezenet),
+                Some(&sq_consumers),
+            )
+            .unwrap();
+            acc ^= eadgo::graph::canonical::delta_hash(&view, &sq_hashes);
+        }
+        black_box(acc)
+    });
 
     // Cost table + inner search (through the shared cost oracle).
     let ctx = OptimizerContext::offline_default();

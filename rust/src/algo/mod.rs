@@ -148,6 +148,13 @@ pub struct Assignment {
 }
 
 impl Assignment {
+    /// Assemble an assignment from raw parts — the cost oracle's delta
+    /// evaluation path builds candidate defaults by carrying unchanged
+    /// choices over from the parent plan instead of re-deriving them.
+    pub(crate) fn from_parts(choices: Vec<Option<Algorithm>>, freqs: Vec<FreqId>) -> Assignment {
+        Assignment { choices, freqs }
+    }
+
     /// The default assignment for a graph.
     pub fn default_for(g: &Graph, reg: &AlgorithmRegistry) -> Assignment {
         let shapes = g.infer_shapes().expect("assignment over invalid graph");

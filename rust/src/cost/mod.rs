@@ -17,7 +17,7 @@ pub mod db;
 pub mod oracle;
 
 pub use db::CostDb;
-pub use oracle::{CostOracle, SigId, SigInterner};
+pub use oracle::{CostOracle, DeltaBase, SigId, SigInterner, TableBuildStats};
 
 use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};
 use crate::energysim::FreqId;
@@ -351,6 +351,21 @@ impl GraphCostTable {
             k -= slab.len();
         }
         panic!("option index out of range for node {}", id.0);
+    }
+
+    /// A copy of the table restricted to one frequency slab per node —
+    /// the per-state view the per-graph DVFS search evaluates (cheap:
+    /// slabs are `Arc`-shared, so this clones pointers, not options).
+    /// Nodes without a slab at `freq` end up empty, exactly like a table
+    /// built at `&[freq]` directly.
+    pub fn restrict_to_freq(&self, freq: FreqId) -> GraphCostTable {
+        GraphCostTable {
+            entries: self
+                .entries
+                .iter()
+                .map(|slabs| slabs.iter().filter(|(f, _)| *f == freq).cloned().collect())
+                .collect(),
+        }
     }
 
     /// Nodes that actually carry cost choices.

@@ -26,9 +26,9 @@
 //!   on resolve misses (first run) — steady-state lookups never reach it.
 
 use super::{CostDb, GraphCostTable, NodeCost};
-use crate::algo::{Algorithm, AlgorithmRegistry};
+use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};
 use crate::energysim::FreqId;
-use crate::graph::{Graph, OpKind, TensorShape};
+use crate::graph::{DeltaView, Graph, NodeId, OpKind, TensorShape};
 use crate::profiler::{CostProvider, ProfileReport};
 use std::collections::HashMap;
 use std::path::Path;
@@ -109,6 +109,45 @@ pub struct CostOracle {
     /// Total (signature, algorithm, frequency) tuples measured through
     /// this oracle.
     profiled: AtomicU64,
+    /// Full cost-table builds (one per baseline / expanded wave entry).
+    full_tables: AtomicU64,
+    /// Delta cost-table builds (one per evaluated candidate).
+    delta_tables: AtomicU64,
+    /// Candidate-table rows carried over from the parent table untouched.
+    carried_rows: AtomicU64,
+    /// Candidate-table rows re-resolved because the delta touched them.
+    resolved_rows: AtomicU64,
+}
+
+/// Cost-table construction counters — instrumentation proving the search
+/// takes the delta path (candidate evaluation must not rebuild full
+/// [`GraphCostTable`]s; asserted by `rust/tests/delta_engine.rs` and the
+/// ablation bench).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TableBuildStats {
+    /// Full table builds since oracle creation.
+    pub full_tables: u64,
+    /// Delta (carry-over) table builds since oracle creation.
+    pub delta_tables: u64,
+    /// Rows carried over from a parent table without re-resolving.
+    pub carried_rows: u64,
+    /// Rows re-resolved because the delta touched the node.
+    pub resolved_rows: u64,
+}
+
+/// The base-graph artifacts a candidate delta evaluates against: the
+/// parent's graph, shape table, cost table (built at the search's full
+/// frequency set), and default assignment — computed once per expanded
+/// wave entry and shared by all of its candidate sites.
+pub struct DeltaBase<'a> {
+    /// The parent graph the delta applies to.
+    pub graph: &'a Graph,
+    /// The parent's full shape table.
+    pub shapes: &'a [Vec<TensorShape>],
+    /// The parent's cost table at the search's frequency set.
+    pub table: &'a GraphCostTable,
+    /// The parent's framework-default assignment.
+    pub assignment: &'a Assignment,
 }
 
 impl CostOracle {
@@ -130,6 +169,10 @@ impl CostOracle {
             provider_name,
             dvfs_freqs,
             profiled: AtomicU64::new(0),
+            full_tables: AtomicU64::new(0),
+            delta_tables: AtomicU64::new(0),
+            carried_rows: AtomicU64::new(0),
+            resolved_rows: AtomicU64::new(0),
         }
     }
 
@@ -167,6 +210,17 @@ impl CostOracle {
     /// Total measurements performed through this oracle since creation.
     pub fn profiled_total(&self) -> u64 {
         self.profiled.load(Ordering::Relaxed)
+    }
+
+    /// Cost-table construction counters (full vs delta builds, carried vs
+    /// re-resolved rows) since oracle creation.
+    pub fn table_build_stats(&self) -> TableBuildStats {
+        TableBuildStats {
+            full_tables: self.full_tables.load(Ordering::Relaxed),
+            delta_tables: self.delta_tables.load(Ordering::Relaxed),
+            carried_rows: self.carried_rows.load(Ordering::Relaxed),
+            resolved_rows: self.resolved_rows.load(Ordering::Relaxed),
+        }
     }
 
     /// Run `f` against the (locked) profile database.
@@ -269,6 +323,7 @@ impl CostOracle {
     ) -> (GraphCostTable, usize) {
         // Zero-copy on cache hits: table slabs share the resolve cache's
         // own Arc'd vectors; zero-cost nodes carry no slabs.
+        self.full_tables.fetch_add(1, Ordering::Relaxed);
         let mut entries: Vec<Vec<crate::cost::FreqSlab>> = vec![Vec::new(); g.len()];
         let mut measured = 0usize;
         visit_costed_nodes(g, shapes, |id, node, in_shapes, sig| {
@@ -281,6 +336,117 @@ impl CostOracle {
             entries[id.0] = slabs;
         });
         (GraphCostTable::from_freq_slabs(entries), measured)
+    }
+
+    /// Build a **candidate** cost table and default assignment for
+    /// `base + delta` without walking the whole graph: rows of nodes the
+    /// delta did not touch are carried over from the parent table (an
+    /// `Arc` clone per frequency slab — no signature building, interner
+    /// traffic, or lock acquisition), and only the delta's dirty nodes
+    /// (ops replaced, nodes added, inputs reshaped) resolve through the
+    /// cache/provider. The additive cost model makes the carry-over exact:
+    /// an untouched node's cost rows are identical at every DVFS state.
+    ///
+    /// Rows are emitted in the view's compaction order, and carried rows
+    /// are the very same `Arc`s a full build would fetch from the resolve
+    /// cache, so the resulting table is **bit-identical** to
+    /// [`CostOracle::table_for_freqs`] on the materialized product
+    /// (property-tested in `rust/tests/delta_engine.rs`) — candidate
+    /// evaluation through it reproduces full-rebuild plans exactly.
+    ///
+    /// Returns `(table, default_assignment, newly_measured_pairs)`.
+    pub fn delta_table_for_freqs(
+        &self,
+        base: &DeltaBase<'_>,
+        view: &DeltaView<'_>,
+        freqs: &[FreqId],
+    ) -> (GraphCostTable, Assignment, usize) {
+        self.delta_tables.fetch_add(1, Ordering::Relaxed);
+        let n_base = base.graph.len();
+        let live = view.compact_order();
+        let mut entries: Vec<Vec<crate::cost::FreqSlab>> = Vec::with_capacity(live.len());
+        let mut choices: Vec<Option<Algorithm>> = Vec::with_capacity(live.len());
+        let mut measured = 0usize;
+        let mut carried = 0u64;
+        let mut resolved = 0u64;
+        let mut sig = String::with_capacity(96);
+        for &i in live {
+            let op = view.op(i);
+            if op.is_constant_space() {
+                entries.push(Vec::new());
+                choices.push(None);
+                continue;
+            }
+            let is_input = matches!(op, OpKind::Input { .. });
+            if i < n_base && !view.is_sig_dirty(i) {
+                // Carry-over: same op, same input shapes — the signature
+                // is unchanged, so the parent's rows (and its default
+                // algorithm) are exactly what a fresh resolve would find.
+                let old = NodeId(i);
+                if is_input {
+                    entries.push(Vec::new());
+                    choices.push(base.assignment.get(old));
+                    carried += 1;
+                    continue;
+                }
+                let base_slabs = base.table.freq_options(old);
+                let mut slabs = Vec::with_capacity(freqs.len());
+                let mut fell_back = false;
+                for &f in freqs {
+                    match base_slabs.iter().find(|(bf, _)| *bf == f) {
+                        Some(slab) => slabs.push(slab.clone()),
+                        None => {
+                            // Parent table missing this state (cannot
+                            // happen while parent tables and candidate
+                            // requests share `search_freqs`) — fall back
+                            // to a resolve, counted as such.
+                            fell_back = true;
+                            let in_shapes = view.in_shapes(i);
+                            sig.clear();
+                            op.signature_into(&in_shapes, &mut sig);
+                            let (options, m) =
+                                self.resolve(&sig, op, &in_shapes, view.out_shapes(i), f);
+                            measured += m;
+                            slabs.push((f, options));
+                        }
+                    }
+                }
+                entries.push(slabs);
+                choices.push(base.assignment.get(old));
+                if fell_back {
+                    resolved += 1;
+                } else {
+                    carried += 1;
+                }
+                continue;
+            }
+            // Dirty node: resolve at every requested state, exactly as a
+            // full build would.
+            let in_shapes = view.in_shapes(i);
+            if is_input {
+                entries.push(Vec::new());
+            } else {
+                sig.clear();
+                op.signature_into(&in_shapes, &mut sig);
+                let mut slabs = Vec::with_capacity(freqs.len());
+                for &f in freqs {
+                    let (options, m) = self.resolve(&sig, op, &in_shapes, view.out_shapes(i), f);
+                    measured += m;
+                    slabs.push((f, options));
+                }
+                entries.push(slabs);
+            }
+            choices.push(Some(self.reg.default_algorithm(op, &in_shapes)));
+            resolved += 1;
+        }
+        self.carried_rows.fetch_add(carried, Ordering::Relaxed);
+        self.resolved_rows.fetch_add(resolved, Ordering::Relaxed);
+        let freqs_default = vec![FreqId::NOMINAL; live.len()];
+        (
+            GraphCostTable::from_freq_slabs(entries),
+            Assignment::from_parts(choices, freqs_default),
+            measured,
+        )
     }
 
     /// Ensure every (signature, algorithm) pair of `g` is profiled at the

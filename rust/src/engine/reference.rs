@@ -292,7 +292,7 @@ mod tests {
         let x = Tensor::rand(&[1, 3, 8, 8], &mut rng, -1.0, 1.0);
         let base = eng.run(&g, &Assignment::default_for(&g, &reg), &[x.clone()]).unwrap();
         let rs = RuleSet::standard();
-        let neighbors = rs.neighbors(&g);
+        let neighbors = rs.neighbors(&g).unwrap();
         assert!(!neighbors.is_empty(), "expected at least one substitution");
         for (ng, rule) in neighbors {
             let a = Assignment::default_for(&ng, &reg);

@@ -103,12 +103,12 @@ fn op_structural_tag(op: &OpKind, h: &mut Fnv) {
     }
 }
 
-/// Merkle-style canonical hash of the graph's computation.
-pub fn graph_hash(g: &Graph) -> u64 {
-    let order = match g.topo_order() {
-        Ok(o) => o,
-        Err(_) => return 0, // invalid graphs all hash to 0; callers validate separately
-    };
+/// Per-node Merkle hashes of a graph's computation (each node hashed from
+/// its operator tag, input hashes, and input ports). `None` when the graph
+/// is cyclic. The outer search caches these per expanded graph so every
+/// candidate delta can rehash only its changed cone ([`delta_hash`]).
+pub fn node_hashes(g: &Graph) -> Option<Vec<u64>> {
+    let order = g.topo_order().ok()?;
     let mut node_hash = vec![0u64; g.len()];
     for id in order {
         let node = g.node(id);
@@ -120,11 +120,55 @@ pub fn graph_hash(g: &Graph) -> u64 {
         }
         node_hash[id.0] = h.finish();
     }
+    Some(node_hash)
+}
+
+/// Merkle-style canonical hash of the graph's computation.
+pub fn graph_hash(g: &Graph) -> u64 {
+    // invalid graphs all hash to 0; callers validate separately
+    let Some(node_hash) = node_hashes(g) else { return 0 };
     let mut h = Fnv::default();
     h.write(b"outputs");
     for out in &g.outputs {
         h.write_u64(node_hash[out.node.0]);
         h.write_usize(out.port);
+    }
+    h.finish()
+}
+
+/// Canonical hash of a candidate `base + delta` **without materializing
+/// it**: nodes outside the delta's changed cone reuse `base_hashes` (the
+/// base graph's [`node_hashes`]); only structurally changed nodes and
+/// their transitive consumers rehash. Because the hash is a Merkle hash
+/// over the DAG and dead nodes never feed the outputs, the result is
+/// bit-identical to `graph_hash` of the materialized, compacted product
+/// (property-tested in `rust/tests/delta_engine.rs`).
+pub fn delta_hash(view: &crate::graph::DeltaView<'_>, base_hashes: &[u64]) -> u64 {
+    let m = view.node_count();
+    let mut hash = vec![0u64; m];
+    let mut dirty = vec![false; m];
+    for &i in view.topo_order() {
+        let needs =
+            view.is_changed(i) || view.inputs(i).iter().any(|p| dirty[p.node.0]);
+        if !needs {
+            continue;
+        }
+        let mut h = Fnv::default();
+        op_structural_tag(view.op(i), &mut h);
+        for p in view.inputs(i) {
+            let ph = if dirty[p.node.0] { hash[p.node.0] } else { base_hashes[p.node.0] };
+            h.write_u64(ph);
+            h.write_usize(p.port);
+        }
+        hash[i] = h.finish();
+        dirty[i] = true;
+    }
+    let mut h = Fnv::default();
+    h.write(b"outputs");
+    for p in view.outputs() {
+        let ph = if dirty[p.node.0] { hash[p.node.0] } else { base_hashes[p.node.0] };
+        h.write_u64(ph);
+        h.write_usize(p.port);
     }
     h.finish()
 }
@@ -184,6 +228,30 @@ mod tests {
             *seed = 8;
         }
         assert_ne!(graph_hash(&g1), graph_hash(&g2));
+    }
+
+    #[test]
+    fn delta_hash_matches_full_rehash() {
+        use crate::graph::{DeltaBuilder, DeltaView, NodeId};
+        let g = conv_graph(false);
+        let shapes = g.infer_shapes().unwrap();
+        let base_hashes = node_hashes(&g).unwrap();
+        // Fuse an activation into the conv and retarget the output.
+        let mut b = DeltaBuilder::new(&g);
+        if let OpKind::Conv2d { stride, pad, has_bias, has_residual, .. } =
+            g.node(NodeId(2)).op
+        {
+            b.replace_op(
+                NodeId(2),
+                OpKind::Conv2d { stride, pad, act: Activation::Relu, has_bias, has_residual },
+            );
+        }
+        let d = b.finish();
+        let view = DeltaView::new(&g, &shapes, d.clone(), None).unwrap();
+        let mut full = g.apply_delta(&d);
+        full.compact();
+        assert_eq!(delta_hash(&view, &base_hashes), graph_hash(&full));
+        assert_ne!(delta_hash(&view, &base_hashes), graph_hash(&g));
     }
 
     #[test]

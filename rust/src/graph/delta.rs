@@ -1,0 +1,611 @@
+//! Graph **deltas**: the difference between a graph and one substitution
+//! product, plus the incremental machinery the search layers use to
+//! evaluate a candidate without materializing it.
+//!
+//! A substitution rule no longer clones the whole graph. Matching yields a
+//! [`crate::subst::RewriteSite`]; the site expands into a [`GraphDelta`] —
+//! the exact edit script the legacy rule code used to perform on a clone:
+//! in-place operator replacements, appended nodes, and port redirections,
+//! replayed in that fixed order. [`Graph::apply_delta`] materializes the
+//! product (bit-identical to the historical clone-and-rewrite path);
+//! [`DeltaView`] exposes the product *virtually* — node ops, rewired
+//! inputs, liveness, compaction order, and **incrementally inferred
+//! shapes** — so the cost and hashing layers can price and dedup a
+//! candidate while touching only the nodes the delta actually changed.
+
+use super::{Graph, Node, NodeId, OpKind, PortRef, TensorShape};
+use std::collections::BTreeMap;
+
+/// Post-redirect inputs of candidate node `i` (shared by the builder pass
+/// and the accessors so the two can never disagree).
+fn view_inputs<'a>(
+    i: usize,
+    n_base: usize,
+    remapped: &'a [Option<Vec<PortRef>>],
+    delta: &'a GraphDelta,
+    base: &'a Graph,
+) -> &'a [PortRef] {
+    if let Some(v) = &remapped[i] {
+        v
+    } else if i >= n_base {
+        &delta.add_nodes[i - n_base].inputs
+    } else {
+        &base.node(NodeId(i)).inputs
+    }
+}
+
+/// The candidate's operator at node `i` (last replacement wins, matching
+/// sequential replay order).
+fn view_op<'a>(i: usize, n_base: usize, delta: &'a GraphDelta, base: &'a Graph) -> &'a OpKind {
+    if i >= n_base {
+        return &delta.add_nodes[i - n_base].op;
+    }
+    if let Some((_, op)) = delta.replace_ops.iter().rev().find(|(id, _)| id.0 == i) {
+        return op;
+    }
+    &base.node(NodeId(i)).op
+}
+
+/// Output shapes of candidate node `i` given the sparse recompute table.
+fn view_shapes<'a>(
+    i: usize,
+    shapes: &'a [Option<Vec<TensorShape>>],
+    base_shapes: &'a [Vec<TensorShape>],
+) -> &'a [TensorShape] {
+    match &shapes[i] {
+        Some(v) => v,
+        None => &base_shapes[i],
+    }
+}
+
+/// The edit script turning a base graph into one substitution product.
+///
+/// Applied in three fixed phases (replacements, additions, redirections),
+/// which is exactly the order every rule historically edited its clone in,
+/// so `base.apply_delta(&delta)` reproduces the legacy product verbatim —
+/// node order, names, and all.
+#[derive(Debug, Clone, Default)]
+pub struct GraphDelta {
+    /// In-place operator replacements on base nodes, applied first.
+    pub replace_ops: Vec<(NodeId, OpKind)>,
+    /// Nodes appended after the base graph's nodes, in order. Inputs may
+    /// reference base nodes or previously added nodes.
+    pub add_nodes: Vec<Node>,
+    /// Port redirections `(from, to)` applied last, in order, to every
+    /// node input (including added nodes) and to the graph outputs.
+    pub redirects: Vec<(PortRef, PortRef)>,
+}
+
+impl GraphDelta {
+    /// Whether the delta performs no edits at all.
+    pub fn is_empty(&self) -> bool {
+        self.replace_ops.is_empty() && self.add_nodes.is_empty() && self.redirects.is_empty()
+    }
+
+    /// Map one port through the redirection chain, in order — the
+    /// pure-function equivalent of replaying [`Graph::redirect`] calls.
+    pub fn map_port(&self, mut p: PortRef) -> PortRef {
+        for (from, to) in &self.redirects {
+            if p == *from {
+                p = *to;
+            }
+        }
+        p
+    }
+}
+
+/// Incremental [`GraphDelta`] construction with the same call shape the
+/// rules used against a cloned graph (`replace_op`/`add`/`redirect`).
+pub struct DeltaBuilder {
+    next: usize,
+    delta: GraphDelta,
+}
+
+impl DeltaBuilder {
+    /// Start a delta over `base` (new node ids continue after its last).
+    pub fn new(base: &Graph) -> DeltaBuilder {
+        DeltaBuilder { next: base.len(), delta: GraphDelta::default() }
+    }
+
+    /// Replace the operator of an existing base node.
+    pub fn replace_op(&mut self, id: NodeId, op: OpKind) {
+        self.delta.replace_ops.push((id, op));
+    }
+
+    /// Append a node, returning the id it will hold in the product.
+    pub fn add(&mut self, op: OpKind, inputs: Vec<PortRef>, name: &str) -> NodeId {
+        let id = NodeId(self.next);
+        self.next += 1;
+        self.delta.add_nodes.push(Node { op, inputs, name: name.to_string() });
+        id
+    }
+
+    /// Rewire every consumer of `from` (and graph outputs) to read `to`.
+    pub fn redirect(&mut self, from: PortRef, to: PortRef) {
+        self.delta.redirects.push((from, to));
+    }
+
+    /// Finish, yielding the delta.
+    pub fn finish(self) -> GraphDelta {
+        self.delta
+    }
+}
+
+impl Graph {
+    /// Materialize a delta into a full product graph: clone, replay the
+    /// three edit phases. The caller compacts (mirroring the historical
+    /// `RuleSet::neighbors` flow). Bit-identical to the legacy
+    /// clone-and-rewrite rule implementations.
+    pub fn apply_delta(&self, d: &GraphDelta) -> Graph {
+        let mut g = self.clone();
+        for (id, op) in &d.replace_ops {
+            g.node_mut(*id).op = op.clone();
+        }
+        for n in &d.add_nodes {
+            g.add(n.op.clone(), n.inputs.clone(), &n.name);
+        }
+        for (from, to) in &d.redirects {
+            g.redirect(*from, *to);
+        }
+        g
+    }
+}
+
+/// A virtual view of `base + delta`: the candidate graph as the search
+/// sees it, without materializing nodes.
+///
+/// Construction performs **incremental shape inference**: only nodes whose
+/// operator, inputs, or upstream shapes changed are re-inferred (and
+/// validated); every other node borrows the base graph's shapes. The view
+/// also computes the candidate's live set and compaction order — identical
+/// to what [`Graph::compact`] would produce on the materialized product —
+/// so per-node results (cost tables, assignments) are indexed exactly like
+/// the compacted graph the winner eventually materializes into.
+pub struct DeltaView<'g> {
+    base: &'g Graph,
+    base_shapes: &'g [Vec<TensorShape>],
+    delta: GraphDelta,
+    n_base: usize,
+    /// Post-redirect inputs for nodes whose inputs changed; `None` = the
+    /// node's raw inputs are unchanged.
+    remapped: Vec<Option<Vec<PortRef>>>,
+    /// Candidate outputs (base outputs mapped through the redirects).
+    outputs: Vec<PortRef>,
+    /// Live (reachable-from-outputs) flags per candidate node.
+    live: Vec<bool>,
+    /// Live node indices ascending — the candidate's compaction order:
+    /// `order[j]` is the view index of compacted node `j`.
+    order: Vec<usize>,
+    /// Old index -> compacted id (only meaningful for live nodes).
+    compact_ids: Vec<usize>,
+    /// Live node indices in topological order (producers first).
+    topo: Vec<usize>,
+    /// Structural change per node: op replaced, node added, or inputs
+    /// rewired. Seeds both re-costing and incremental rehashing.
+    changed: Vec<bool>,
+    /// Whether the node's cost signature must be re-resolved (structural
+    /// change or an input shape differing from the base).
+    sig_dirty: Vec<bool>,
+    /// Recomputed output shapes for dirty nodes; `None` = base shapes.
+    shapes: Vec<Option<Vec<TensorShape>>>,
+}
+
+impl<'g> DeltaView<'g> {
+    /// Build the view. `base_shapes` is the base graph's full shape table
+    /// (one inference per parent, shared across all its candidate sites);
+    /// `consumers` is the base graph's consumer map, likewise shared.
+    /// Errors indicate an invalid delta (bad references, cycles, or shape
+    /// inference failures on the touched nodes).
+    pub fn new(
+        base: &'g Graph,
+        base_shapes: &'g [Vec<TensorShape>],
+        delta: GraphDelta,
+        consumers: Option<&BTreeMap<PortRef, Vec<NodeId>>>,
+    ) -> anyhow::Result<DeltaView<'g>> {
+        let n = base.len();
+        let m = n + delta.add_nodes.len();
+        anyhow::ensure!(base_shapes.len() == n, "base shape table does not match the base graph");
+        for (id, _) in &delta.replace_ops {
+            anyhow::ensure!(id.0 < n, "delta replaces missing node {}", id.0);
+        }
+        for (k, node) in delta.add_nodes.iter().enumerate() {
+            for p in &node.inputs {
+                anyhow::ensure!(
+                    p.node.0 < n + k,
+                    "added node {k} reads node {} before it exists",
+                    p.node.0
+                );
+            }
+        }
+        for (from, to) in &delta.redirects {
+            anyhow::ensure!(
+                from.node.0 < m && to.node.0 < m,
+                "delta redirect references a missing node"
+            );
+        }
+
+        // Which nodes see different inputs after the redirects? Base nodes
+        // come from the (shared) consumer map of each redirect source;
+        // added nodes are few enough to check directly.
+        let mut remapped: Vec<Option<Vec<PortRef>>> = vec![None; m];
+        if !delta.redirects.is_empty() {
+            let owned;
+            let consumers = match consumers {
+                Some(c) => c,
+                None => {
+                    owned = base.consumers();
+                    &owned
+                }
+            };
+            let mut affected: Vec<usize> = Vec::new();
+            for (from, _) in &delta.redirects {
+                if let Some(v) = consumers.get(from) {
+                    affected.extend(v.iter().map(|id| id.0));
+                }
+            }
+            for (k, node) in delta.add_nodes.iter().enumerate() {
+                if node.inputs.iter().any(|p| delta.redirects.iter().any(|(f, _)| p == f)) {
+                    affected.push(n + k);
+                }
+            }
+            affected.sort_unstable();
+            affected.dedup();
+            for i in affected {
+                let raw: &[PortRef] =
+                    if i >= n { &delta.add_nodes[i - n].inputs } else { &base.node(NodeId(i)).inputs };
+                let mapped: Vec<PortRef> = raw.iter().map(|&p| delta.map_port(p)).collect();
+                if mapped != raw {
+                    remapped[i] = Some(mapped);
+                }
+            }
+        }
+        let outputs: Vec<PortRef> = base.outputs.iter().map(|&p| delta.map_port(p)).collect();
+
+        // Liveness: reachable backwards from the candidate outputs.
+        let mut live = vec![false; m];
+        let mut stack: Vec<usize> = outputs.iter().map(|p| p.node.0).collect();
+        while let Some(i) = stack.pop() {
+            if live[i] {
+                continue;
+            }
+            live[i] = true;
+            for p in view_inputs(i, n, &remapped, &delta, base) {
+                stack.push(p.node.0);
+            }
+        }
+        let order: Vec<usize> = (0..m).filter(|&i| live[i]).collect();
+        let mut compact_ids = vec![usize::MAX; m];
+        for (j, &i) in order.iter().enumerate() {
+            compact_ids[i] = j;
+        }
+
+        // Deterministic topological order over the live subgraph (same
+        // lowest-id-first discipline as `Graph::topo_order`).
+        let mut indegree = vec![0usize; m];
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); m];
+        for &i in &order {
+            for p in view_inputs(i, n, &remapped, &delta, base) {
+                indegree[i] += 1;
+                adj[p.node.0].push(i);
+            }
+        }
+        let mut queue: Vec<usize> = order.iter().copied().filter(|&i| indegree[i] == 0).collect();
+        queue.sort_unstable_by(|a, b| b.cmp(a));
+        let mut topo = Vec::with_capacity(order.len());
+        while let Some(i) = queue.pop() {
+            topo.push(i);
+            for &c in &adj[i] {
+                indegree[c] -= 1;
+                if indegree[c] == 0 {
+                    let pos = queue.binary_search_by(|x| c.cmp(x)).unwrap_or_else(|p| p);
+                    queue.insert(pos, c);
+                }
+            }
+        }
+        anyhow::ensure!(topo.len() == order.len(), "delta product contains a cycle");
+
+        // Structural change seeds.
+        let mut changed = vec![false; m];
+        for (id, _) in &delta.replace_ops {
+            changed[id.0] = true;
+        }
+        for c in changed.iter_mut().skip(n) {
+            *c = true; // added nodes
+        }
+        for (c, r) in changed.iter_mut().zip(&remapped) {
+            *c |= r.is_some();
+        }
+
+        // Incremental shape inference over the live subgraph: recompute a
+        // node iff it changed structurally or an input shape moved; stop
+        // propagating as soon as recomputed shapes match the base again
+        // (for semantics-preserving rules that is immediately).
+        let mut shapes: Vec<Option<Vec<TensorShape>>> = vec![None; m];
+        let mut sig_dirty = vec![false; m];
+        let mut out_changed = vec![false; m];
+        for &i in &topo {
+            let mut recompute = changed[i];
+            if !recompute {
+                // Unchanged node: only re-infer when a producer's shape at
+                // the consumed port actually differs from the base.
+                for p in view_inputs(i, n, &remapped, &delta, base) {
+                    if !out_changed[p.node.0] {
+                        continue;
+                    }
+                    let now = view_shapes(p.node.0, &shapes, base_shapes).get(p.port);
+                    let before = base_shapes[p.node.0].get(p.port);
+                    if now != before {
+                        recompute = true;
+                        break;
+                    }
+                }
+            }
+            if !recompute {
+                continue;
+            }
+            let ports = view_inputs(i, n, &remapped, &delta, base);
+            let mut in_shapes: Vec<TensorShape> = Vec::with_capacity(ports.len());
+            for p in ports {
+                let s = view_shapes(p.node.0, &shapes, base_shapes).get(p.port).cloned();
+                let s = s.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "delta node {i} reads invalid port {} of node {}",
+                        p.port,
+                        p.node.0
+                    )
+                })?;
+                in_shapes.push(s);
+            }
+            let outs = view_op(i, n, &delta, base)
+                .infer_shapes(&in_shapes)
+                .map_err(|e| anyhow::anyhow!("delta node {i}: {e}"))?;
+            sig_dirty[i] = true;
+            out_changed[i] = i >= n || outs != base_shapes[i];
+            shapes[i] = Some(outs);
+        }
+        // Output ports must exist on their (possibly reshaped) producers.
+        for p in &outputs {
+            anyhow::ensure!(
+                p.port < view_shapes(p.node.0, &shapes, base_shapes).len(),
+                "delta output references invalid port {} of node {}",
+                p.port,
+                p.node.0
+            );
+        }
+
+        Ok(DeltaView {
+            base,
+            base_shapes,
+            delta,
+            n_base: n,
+            remapped,
+            outputs,
+            live,
+            order,
+            compact_ids,
+            topo,
+            changed,
+            sig_dirty,
+            shapes,
+        })
+    }
+
+    /// The base graph the delta applies to.
+    pub fn base(&self) -> &Graph {
+        self.base
+    }
+
+    /// The delta itself (for materialization via [`Graph::apply_delta`]).
+    pub fn delta(&self) -> &GraphDelta {
+        &self.delta
+    }
+
+    /// Total candidate node count (base nodes + added, including dead).
+    pub fn node_count(&self) -> usize {
+        self.n_base + self.delta.add_nodes.len()
+    }
+
+    /// Number of live nodes — the materialized product's `len()` after
+    /// compaction.
+    pub fn live_count(&self) -> usize {
+        self.order.len()
+    }
+
+    /// Whether candidate node `i` survives compaction.
+    pub fn is_live(&self, i: usize) -> bool {
+        self.live[i]
+    }
+
+    /// Live view indices ascending — index `j` holds the view index of
+    /// compacted node `j` (the same renumbering [`Graph::compact`] does).
+    pub fn compact_order(&self) -> &[usize] {
+        &self.order
+    }
+
+    /// The compacted id a live view index maps to.
+    pub fn compact_id(&self, i: usize) -> Option<NodeId> {
+        self.live[i].then(|| NodeId(self.compact_ids[i]))
+    }
+
+    /// Live view indices in topological order (producers first).
+    pub fn topo_order(&self) -> &[usize] {
+        &self.topo
+    }
+
+    /// The candidate's operator at view index `i`.
+    pub fn op(&self, i: usize) -> &OpKind {
+        view_op(i, self.n_base, &self.delta, self.base)
+    }
+
+    /// The candidate's (post-redirect) inputs at view index `i`.
+    pub fn inputs(&self, i: usize) -> &[PortRef] {
+        view_inputs(i, self.n_base, &self.remapped, &self.delta, self.base)
+    }
+
+    /// The candidate's outputs (base outputs mapped through redirects).
+    pub fn outputs(&self) -> &[PortRef] {
+        &self.outputs
+    }
+
+    /// Whether node `i` changed structurally (op replaced, added, or
+    /// inputs rewired) — the seed set for incremental rehash/recost.
+    pub fn is_changed(&self, i: usize) -> bool {
+        self.changed[i]
+    }
+
+    /// Whether node `i`'s cost signature must be re-resolved (structural
+    /// change or input shapes moved). Everything else carries its cost
+    /// rows over from the base table untouched.
+    pub fn is_sig_dirty(&self, i: usize) -> bool {
+        self.sig_dirty[i]
+    }
+
+    /// Output shapes of node `i` (recomputed when dirty, borrowed from
+    /// the base otherwise).
+    pub fn out_shapes(&self, i: usize) -> &[TensorShape] {
+        view_shapes(i, &self.shapes, self.base_shapes)
+    }
+
+    /// Input shapes of node `i`, cloned (ports validated at build time).
+    pub fn in_shapes(&self, i: usize) -> Vec<TensorShape> {
+        self.inputs(i).iter().map(|p| self.out_shapes(p.node.0)[p.port].clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Activation;
+
+    fn conv_graph() -> Graph {
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+        let w = g.add1(OpKind::weight(vec![4, 3, 3, 3], 1), &[], "w");
+        let c = g.add1(
+            OpKind::Conv2d {
+                stride: (1, 1),
+                pad: (1, 1),
+                act: Activation::None,
+                has_bias: false,
+                has_residual: false,
+            },
+            &[x, w],
+            "conv",
+        );
+        let r = g.add1(OpKind::Relu, &[c], "relu");
+        g.outputs = vec![PortRef::of(r)];
+        g
+    }
+
+    #[test]
+    fn apply_delta_replays_edits_in_order() {
+        let g = conv_graph();
+        let mut b = DeltaBuilder::new(&g);
+        b.replace_op(
+            NodeId(2),
+            OpKind::Conv2d {
+                stride: (1, 1),
+                pad: (1, 1),
+                act: Activation::Relu,
+                has_bias: false,
+                has_residual: false,
+            },
+        );
+        b.redirect(PortRef::of(NodeId(3)), PortRef::of(NodeId(2)));
+        let d = b.finish();
+        let mut ng = g.apply_delta(&d);
+        ng.compact();
+        ng.validate().unwrap();
+        assert_eq!(ng.len(), 3); // relu fused away
+        assert_eq!(ng.outputs, vec![PortRef::of(NodeId(2))]);
+    }
+
+    #[test]
+    fn view_tracks_liveness_and_dirty_set() {
+        let g = conv_graph();
+        let shapes = g.infer_shapes().unwrap();
+        let mut b = DeltaBuilder::new(&g);
+        b.replace_op(
+            NodeId(2),
+            OpKind::Conv2d {
+                stride: (1, 1),
+                pad: (1, 1),
+                act: Activation::Relu,
+                has_bias: false,
+                has_residual: false,
+            },
+        );
+        b.redirect(PortRef::of(NodeId(3)), PortRef::of(NodeId(2)));
+        let view = DeltaView::new(&g, &shapes, b.finish(), None).unwrap();
+        assert_eq!(view.node_count(), 4);
+        assert_eq!(view.live_count(), 3); // relu dead
+        assert!(!view.is_live(3));
+        assert!(view.is_sig_dirty(2)); // conv op changed
+        assert!(!view.is_sig_dirty(0));
+        assert!(!view.is_sig_dirty(1));
+        // shapes of the untouched nodes are borrowed from the base
+        assert_eq!(view.out_shapes(0), &shapes[0][..]);
+        // compact order is ascending live indices
+        assert_eq!(view.compact_order(), &[0, 1, 2]);
+        assert_eq!(view.compact_id(2), Some(NodeId(2)));
+        assert_eq!(view.compact_id(3), None);
+    }
+
+    #[test]
+    fn view_adds_nodes_and_maps_added_inputs() {
+        let g = conv_graph();
+        let shapes = g.infer_shapes().unwrap();
+        let mut b = DeltaBuilder::new(&g);
+        let s = b.add(OpKind::Sigmoid, vec![PortRef::of(NodeId(3))], "sig");
+        b.redirect(PortRef::of(NodeId(3)), PortRef::of(s));
+        // The redirect must NOT rewire the added sigmoid's own input onto
+        // itself-via-chain: legacy `redirect` rewrites it too, creating a
+        // self-loop — the view must report the cycle, exactly like the
+        // materialized product would fail validation.
+        let view = DeltaView::new(&g, &shapes, b.finish(), None);
+        assert!(view.is_err(), "self-referential product must be rejected");
+    }
+
+    #[test]
+    fn view_matches_materialized_product() {
+        let g = conv_graph();
+        let shapes = g.infer_shapes().unwrap();
+        // Append a sigmoid head AFTER the relu (no redirect of its input).
+        let mut b = DeltaBuilder::new(&g);
+        let s = b.add(OpKind::Sigmoid, vec![PortRef::of(NodeId(2))], "sig");
+        b.redirect(PortRef::of(NodeId(3)), PortRef::of(s));
+        let d = b.finish();
+        // The relu consumed conv port 0; sigmoid reads the conv directly,
+        // so only the output is redirected and no cycle forms.
+        let view = DeltaView::new(&g, &shapes, d.clone(), None).unwrap();
+        let mut full = g.apply_delta(&d);
+        full.compact();
+        full.validate().unwrap();
+        assert_eq!(full.len(), view.live_count());
+        for (j, &i) in view.compact_order().iter().enumerate() {
+            assert_eq!(&full.node(NodeId(j)).op, view.op(i));
+            let mapped: Vec<PortRef> = view
+                .inputs(i)
+                .iter()
+                .map(|p| PortRef { node: view.compact_id(p.node.0).unwrap(), port: p.port })
+                .collect();
+            assert_eq!(full.node(NodeId(j)).inputs, mapped);
+        }
+        let fshapes = full.infer_shapes().unwrap();
+        for (j, &i) in view.compact_order().iter().enumerate() {
+            assert_eq!(&fshapes[j][..], view.out_shapes(i));
+        }
+    }
+
+    #[test]
+    fn bad_delta_references_rejected() {
+        let g = conv_graph();
+        let shapes = g.infer_shapes().unwrap();
+        let d = GraphDelta {
+            replace_ops: vec![(NodeId(99), OpKind::Relu)],
+            add_nodes: Vec::new(),
+            redirects: Vec::new(),
+        };
+        assert!(DeltaView::new(&g, &shapes, d, None).is_err());
+    }
+}

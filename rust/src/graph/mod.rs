@@ -1,16 +1,22 @@
 //! Computation-graph IR: nodes are operators, edges are tensors (paper §3.1).
 //!
 //! Graphs are immutable-ish DAGs over [`Node`]s identified by dense
-//! [`NodeId`]s. Substitutions clone the graph, rewrite, and call
-//! [`Graph::compact`]; search-state dedup uses [`canonical::graph_hash`].
+//! [`NodeId`]s. Substitutions describe themselves as [`GraphDelta`] edit
+//! scripts; winners materialize via [`Graph::apply_delta`] +
+//! [`Graph::compact`], while candidate screening works on the incremental
+//! [`DeltaView`]. Search-state dedup uses [`canonical::graph_hash`] (full)
+//! or [`canonical::delta_hash`] (incremental).
 
 /// Canonical graph hashing (isomorphism-robust dedup key).
 pub mod canonical;
+/// Graph deltas: substitution edit scripts + the incremental product view.
+pub mod delta;
 /// Operator kinds, attributes, signatures, and shape inference.
 pub mod op;
 /// Graph + plan (de)serialization to JSON.
 pub mod serde;
 
+pub use delta::{DeltaBuilder, DeltaView, GraphDelta};
 pub use op::{Activation, OpKind};
 
 use std::collections::BTreeMap;

@@ -114,7 +114,9 @@ pub mod search;
 /// Serving loop: Poisson arrivals, dynamic batching, adaptive frontier
 /// control.
 pub mod serve;
-/// Equivalent graph substitutions `S_i` (fusions, merges, eliminations).
+/// Equivalent graph substitutions `S_i` (fusions, merges, eliminations)
+/// as a two-phase delta engine (`find_sites` → `RewriteSite` →
+/// `GraphDelta`).
 pub mod subst;
 /// Dense f32 tensors and the kernels behind the reference engine.
 pub mod tensor;

@@ -246,20 +246,18 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         println!("plan frequency: {}", eadgo::report::describe_freqs(&res.assignment));
     }
     println!(
-        "search: {} graphs expanded in {} waves, {} generated, {} deduped, {} profiles measured, {} threads, {:.2}s",
+        "search: {} graphs expanded in {} waves, {} generated, {} deduped, {} profiles measured, {} threads, {:.2}s ({:.0} candidates/sec)",
         res.stats.expanded,
         res.stats.waves,
         res.stats.generated,
         res.stats.deduped,
         res.stats.profiled,
         res.stats.threads,
-        res.stats.wall_s
+        res.stats.wall_s,
+        res.stats.candidates_per_sec()
     );
-    if !res.stats.rules_applied.is_empty() {
-        println!("rules enqueued:");
-        for (rule, n) in &res.stats.rules_applied {
-            println!("  {rule:<24} {n}");
-        }
+    if !res.stats.rule_stats.is_empty() {
+        print!("{}", tables::rule_stats_table(&res.stats).render());
     }
     if let Some(path) = args.get("save-plan") {
         eadgo::graph::serde::save_plan(std::path::Path::new(path), &res.graph, &res.assignment)?;

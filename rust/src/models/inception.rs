@@ -103,7 +103,8 @@ mod tests {
         // identical attrs — MergeParallelConvs must find at least one pair.
         let g = build(ModelConfig::default());
         let products = crate::subst::rules::MergeParallelConvs
-            .apply_all(&g);
+            .apply_all(&g)
+            .unwrap();
         assert!(!products.is_empty());
     }
 

@@ -86,7 +86,7 @@ mod tests {
     fn substitutions_available() {
         let g = build(ModelConfig::default());
         let rs = crate::subst::RuleSet::standard();
-        let n = rs.neighbors(&g);
+        let n = rs.neighbors(&g).unwrap();
         // conv+relu fusions at minimum (26), plus enlargement sites.
         assert!(n.len() >= 26, "only {} neighbors", n.len());
     }

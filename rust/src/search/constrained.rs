@@ -10,6 +10,12 @@
 //! arXiv:2310.19991): the searched plan's algorithms are frozen and only
 //! its frequency states move — down wherever the latency headroom allows
 //! (free energy on memory-bound nodes), never past the budget.
+//!
+//! Every probe here runs the full two-level search and therefore inherits
+//! the outer search's delta candidate evaluation (`SearchConfig::
+//! delta_eval`): the repeated probes of the binary search re-walk largely
+//! overlapping graph neighborhoods, which is exactly where carry-over
+//! cost tables and incremental hashing pay off most.
 
 use super::outer::{DvfsMode, OptimizerContext, SearchConfig};
 use super::{optimize, OptimizeResult};

@@ -186,6 +186,13 @@ pub struct FrontierResult {
 /// `n == 1` is exactly today's single-plan energy optimization: the result
 /// is bit-identical to `optimize(g0, ctx, &CostFunction::Energy, cfg)`
 /// (property-tested in `rust/tests/frontier.rs`).
+///
+/// Every probe inherits the outer search's delta candidate evaluation
+/// (`SearchConfig::delta_eval`): probes 2..N re-walk largely overlapping
+/// graph neighborhoods, so carry-over cost tables and incremental hashing
+/// compound across the sweep. The frontier is engine-invariant — every
+/// point byte-identical between the delta and legacy full-rebuild paths
+/// (`rust/tests/determinism.rs`).
 pub fn optimize_frontier(
     g0: &Graph,
     ctx: &OptimizerContext,

@@ -23,6 +23,13 @@
 //! still globally optimal for additive objectives over the joint space. A
 //! table built at the nominal clock only (one slab per node) makes this
 //! bit-identical to the pre-DVFS search.
+//!
+//! The inner search is agnostic to how its table was built: the outer
+//! search's delta engine assembles candidate tables by carrying untouched
+//! rows over from the parent (`CostOracle::delta_table_for_freqs`), and
+//! because carried rows are the very `Arc`s a full rebuild would fetch —
+//! in the same compaction order — the local search here walks identical
+//! numbers and returns bit-identical assignments either way.
 
 use crate::algo::Assignment;
 use crate::cost::{CostFunction, GraphCost, GraphCostTable};

@@ -15,7 +15,7 @@ pub use frontier::{optimize_frontier, FrontierProbe, FrontierResult, PlanFrontie
 pub use inner::{exhaustive_search, inner_search, random_assignment, InnerResult};
 pub use outer::{
     evaluate_baseline, outer_search, Baseline, DvfsMode, OptimizerContext, OuterResult,
-    SearchConfig, SearchStats,
+    RuleStat, SearchConfig, SearchStats,
 };
 
 use crate::algo::Assignment;

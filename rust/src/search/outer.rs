@@ -21,8 +21,8 @@
 //!
 //! Candidate evaluation (profile → cost table → inner search) is the whole
 //! cost of Algorithm 1, so the loop is organized around **waves**: pop
-//! every queue entry currently inside the α-band, generate all their
-//! substitution neighbors, dedup by canonical hash, then evaluate the
+//! every queue entry currently inside the α-band, find all their rewrite
+//! sites, dedup by (incremental) canonical hash, then evaluate the
 //! surviving candidates **in parallel** (`SearchConfig::threads` workers
 //! over the shared [`CostOracle`]) and merge the results in candidate
 //! sequence order. Because evaluation of one candidate is independent of
@@ -33,16 +33,40 @@
 //! provider is; real-wallclock `CpuProvider` measurements are inherently
 //! noisy) — `threads: 8` is then purely a wall-clock optimization (see
 //! `rust/tests/determinism.rs`).
+//!
+//! ## Delta candidate evaluation
+//!
+//! With `SearchConfig::delta_eval` (the default), candidates are never
+//! materialized up front. Each wave entry computes its shape table, Merkle
+//! node hashes, consumer map, cost table, and default assignment **once**;
+//! every rewrite site then expands to a [`GraphDelta`] evaluated through:
+//!
+//! - [`crate::graph::canonical::delta_hash`] — dedup without
+//!   re-canonicalizing the whole product;
+//! - [`crate::graph::DeltaView`] — incremental shape inference (only the
+//!   delta's cone re-infers; this doubles as candidate validation);
+//! - [`CostOracle::delta_table_for_freqs`] — cost rows of untouched nodes
+//!   carry over from the parent table across all DVFS frequency slabs;
+//!   only touched nodes re-resolve.
+//!
+//! Full graphs materialize (apply_delta + compact) only for candidates
+//! that improve the incumbent or enter the queue. Because carried rows are
+//! the same `Arc`s a full rebuild would fetch and evaluation order is
+//! unchanged, plans are **bit-identical** to the legacy full-rebuild path
+//! (`delta_eval: false`, kept as the reference for A/B benches and the
+//! determinism suite).
+//!
+//! [`GraphDelta`]: crate::graph::GraphDelta
 
 use super::inner::{inner_search, pinned_freq_start, InnerResult};
 use crate::algo::Assignment;
-use crate::cost::{CostFunction, CostOracle, GraphCost, GraphCostTable};
+use crate::cost::{CostFunction, CostOracle, DeltaBase, GraphCost, GraphCostTable};
 use crate::energysim::FreqId;
-use crate::graph::canonical::graph_hash;
-use crate::graph::Graph;
+use crate::graph::canonical::{delta_hash, graph_hash, node_hashes};
+use crate::graph::{DeltaView, Graph};
 use crate::subst::RuleSet;
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashSet};
+use std::collections::{BinaryHeap, BTreeMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex};
 
@@ -103,6 +127,14 @@ pub struct SearchConfig {
     pub threads: usize,
     /// DVFS frequency axis: off, one state per graph, or per node.
     pub dvfs: DvfsMode,
+    /// Evaluate candidates through the incremental delta engine (`true`,
+    /// the default): carry-over cost tables, incremental hash/shape
+    /// updates, and materialization only for wave winners. `false` forces
+    /// the legacy full-rebuild path (materialize + full table per
+    /// candidate) — kept as the reference implementation for A/B
+    /// throughput benches and bit-identity tests; plans are identical
+    /// either way.
+    pub delta_eval: bool,
 }
 
 impl Default for SearchConfig {
@@ -115,6 +147,7 @@ impl Default for SearchConfig {
             max_dequeues: 2_000,
             threads: 1,
             dvfs: DvfsMode::Off,
+            delta_eval: true,
         }
     }
 }
@@ -130,19 +163,37 @@ impl SearchConfig {
     }
 }
 
+/// Per-rule statistics of one search run (reporting / ablations).
+#[derive(Debug, Clone, Default)]
+pub struct RuleStat {
+    /// Rule name.
+    pub name: String,
+    /// Rewrite sites the rule matched across all waves (pre-dedup).
+    pub sites: usize,
+    /// Deltas accepted into the queue (inside the α-band post-eval).
+    pub enqueued: usize,
+    /// Net objective improvement attributed to the rule: the sum of
+    /// incumbent-objective drops caused by its candidates (normalized
+    /// objective units — under default normalization, 0.05 means the
+    /// rule's wins cut 5% of the origin objective).
+    pub objective_gain: f64,
+}
+
 /// Search statistics for reporting and ablations.
 #[derive(Debug, Clone, Default)]
 pub struct SearchStats {
     /// Graphs dequeued and expanded.
     pub expanded: usize,
-    /// Candidate graphs generated by substitutions.
+    /// Candidate rewrite sites generated by substitutions.
     pub generated: usize,
     /// Candidates skipped because an isomorphic graph was already seen.
     pub deduped: usize,
+    /// Candidates actually cost-evaluated (generated − deduped).
+    pub evaluated: usize,
     /// Inner-search cost evaluations.
     pub inner_evals: u64,
-    /// Rule-name → number of times its product was enqueued.
-    pub rules_applied: Vec<(String, usize)>,
+    /// Per-rule site/accept/improvement statistics, sorted by rule name.
+    pub rule_stats: Vec<RuleStat>,
     /// Total profile measurements triggered by new signatures.
     pub profiled: usize,
     /// Frontier waves expanded (each wave = one parallel evaluation batch).
@@ -151,6 +202,18 @@ pub struct SearchStats {
     pub threads: usize,
     /// Search wallclock, seconds.
     pub wall_s: f64,
+}
+
+impl SearchStats {
+    /// Candidate-evaluation throughput of the search (candidates/sec) —
+    /// the wave-expansion figure of merit the delta engine optimizes.
+    pub fn candidates_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.evaluated as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Result of `outer_search`.
@@ -280,11 +343,13 @@ pub fn evaluate_baseline(g0: &Graph, oracle: &CostOracle) -> anyhow::Result<Base
     Ok(Baseline { table, assignment, cost, profiled })
 }
 
-/// Evaluate one candidate graph: validate (shape inference, once), profile
-/// missing signatures, inner-search (or default assignment when disabled).
-/// With DVFS enabled the frequency axis is optimized here too — per-graph
-/// by trying every state, per-node by handing the inner search the joint
-/// (algorithm, frequency) option space.
+/// Evaluate one **materialized** candidate graph: validate (shape
+/// inference, once), profile missing signatures, inner-search (or default
+/// assignment when disabled). With DVFS enabled the frequency axis is
+/// optimized here too — per-graph by trying every state, per-node by
+/// handing the inner search the joint (algorithm, frequency) option
+/// space. This is the legacy full-rebuild path, used for the origin graph
+/// and for `delta_eval: false` runs.
 fn evaluate_candidate(
     g: &Graph,
     oracle: &CostOracle,
@@ -307,26 +372,16 @@ fn evaluate_candidate(
             // resolve to the nominal clock (and the off-mode plan).
             let base = Assignment::default_for_with(g, &shapes, oracle.reg());
             let mut profiled = 0usize;
-            let mut extra_evals = 0u64;
-            let mut best: Option<(f64, InnerResult)> = None;
-            for f in std::iter::once(FreqId::NOMINAL).chain(freqs.iter().copied()) {
+            let states = std::iter::once(FreqId::NOMINAL).chain(freqs.iter().copied()).map(|f| {
                 let (table, p) = oracle.table_for_freqs(g, &shapes, &[f]);
                 profiled += p;
-                let inner = run_inner(&table, pinned_freq_start(&base, f), cf, cfg);
-                extra_evals += inner.evals;
-                let v = cf.eval(&inner.cost);
-                if best.as_ref().is_none_or(|(bv, _)| v < *bv) {
-                    best = Some((v, inner));
-                }
-            }
-            let (_, mut inner) = best.expect("at least the nominal state evaluated");
-            inner.evals = extra_evals;
+                (f, table)
+            });
+            let inner = best_state_inner(states, &base, cf, cfg);
             Ok((inner, profiled))
         }
         DvfsMode::PerNode => {
-            let mut all = Vec::with_capacity(freqs.len() + 1);
-            all.push(FreqId::NOMINAL);
-            all.extend_from_slice(freqs);
+            let all = search_freqs(cfg.dvfs, oracle);
             let (table, profiled) = oracle.table_for_freqs(g, &shapes, &all);
             let start = Assignment::default_for_with(g, &shapes, oracle.reg());
             let inner = run_inner(&table, start, cf, cfg);
@@ -334,6 +389,71 @@ fn evaluate_candidate(
         }
         DvfsMode::Off => unreachable!("handled above"),
     }
+}
+
+/// Evaluate one candidate **delta** against its parent's cached artifacts
+/// — the incremental twin of [`evaluate_candidate`]. The candidate's cost
+/// table carries untouched rows over from the parent across every DVFS
+/// frequency slab; inner search then runs over the same rows, in the same
+/// order, with the same start assignment a full rebuild would produce, so
+/// the result is bit-identical.
+fn evaluate_candidate_delta(
+    base: &DeltaBase<'_>,
+    view: &DeltaView<'_>,
+    oracle: &CostOracle,
+    cf: &CostFunction,
+    cfg: &SearchConfig,
+) -> anyhow::Result<(InnerResult, usize)> {
+    let freqs = oracle.dvfs_freqs();
+    if cfg.dvfs == DvfsMode::Off || freqs.is_empty() {
+        let (table, start, profiled) =
+            oracle.delta_table_for_freqs(base, view, &[FreqId::NOMINAL]);
+        return Ok((run_inner(&table, start, cf, cfg), profiled));
+    }
+    let all = search_freqs(cfg.dvfs, oracle);
+    match cfg.dvfs {
+        DvfsMode::PerGraph => {
+            // Resolve the candidate's dirty rows at every state once; the
+            // per-state tables the legacy path built are recovered by
+            // restricting the slabs (Arc clones — same rows, same order).
+            let (table, start, profiled) = oracle.delta_table_for_freqs(base, view, &all);
+            let states = all.iter().map(|&f| (f, table.restrict_to_freq(f)));
+            let inner = best_state_inner(states, &start, cf, cfg);
+            Ok((inner, profiled))
+        }
+        DvfsMode::PerNode => {
+            let (table, start, profiled) = oracle.delta_table_for_freqs(base, view, &all);
+            Ok((run_inner(&table, start, cf, cfg), profiled))
+        }
+        DvfsMode::Off => unreachable!("handled above"),
+    }
+}
+
+/// Per-graph DVFS evaluation core: one pinned inner search per frequency
+/// state — NOMINAL first, so objective ties resolve to the nominal clock
+/// (and the off-mode plan) — keeping the best result and summing the eval
+/// counts across states. Shared by the full-rebuild and delta candidate
+/// paths so the tie-breaking contract (and with it the engines'
+/// bit-identity, `rust/tests/determinism.rs`) cannot drift apart.
+fn best_state_inner(
+    states: impl Iterator<Item = (FreqId, GraphCostTable)>,
+    start: &Assignment,
+    cf: &CostFunction,
+    cfg: &SearchConfig,
+) -> InnerResult {
+    let mut extra_evals = 0u64;
+    let mut best: Option<(f64, InnerResult)> = None;
+    for (f, table) in states {
+        let inner = run_inner(&table, pinned_freq_start(start, f), cf, cfg);
+        extra_evals += inner.evals;
+        let v = cf.eval(&inner.cost);
+        if best.as_ref().is_none_or(|(bv, _)| v < *bv) {
+            best = Some((v, inner));
+        }
+    }
+    let (_, mut inner) = best.expect("at least the nominal state evaluated");
+    inner.evals = extra_evals;
+    inner
 }
 
 fn run_inner(
@@ -352,6 +472,19 @@ fn run_inner(
 }
 
 type EvalOutcome = anyhow::Result<(InnerResult, usize)>;
+
+/// The search's DVFS frequency set: the nominal clock, plus every device
+/// state when the frequency axis is on. One home for the list — parent
+/// carry-over tables, candidate delta evaluation, and the legacy rebuild
+/// path must all build at the same set, or the oracle's carry-over would
+/// silently fall back to per-row re-resolves.
+fn search_freqs(dvfs: DvfsMode, oracle: &CostOracle) -> Vec<FreqId> {
+    let mut freqs = vec![FreqId::NOMINAL];
+    if dvfs != DvfsMode::Off {
+        freqs.extend_from_slice(oracle.dvfs_freqs());
+    }
+    freqs
+}
 
 /// The frequency component of the candidate dedup identity: a hash of the
 /// search's DVFS mode and frequency domain. Mixing it into the visited-set
@@ -379,20 +512,16 @@ fn freq_domain_hash(cfg: &SearchConfig, oracle: &CostOracle) -> u64 {
     h
 }
 
-/// Evaluate a wave of candidates, in parallel when `workers > 1`. The
-/// returned vector is index-aligned with `cands` regardless of which
-/// worker evaluated which candidate.
-fn evaluate_wave(
-    cands: &[(Graph, &'static str)],
-    oracle: &CostOracle,
-    cf: &CostFunction,
-    cfg: &SearchConfig,
-    workers: usize,
-) -> Vec<EvalOutcome> {
-    if workers <= 1 || cands.len() <= 1 {
-        return cands.iter().map(|(g, _)| evaluate_candidate(g, oracle, cf, cfg)).collect();
+/// Run `eval(i)` for `i in 0..n`, in parallel when `workers > 1`. The
+/// returned vector is index-aligned regardless of which worker evaluated
+/// which index.
+fn run_parallel<F>(n: usize, workers: usize, eval: F) -> Vec<EvalOutcome>
+where
+    F: Fn(usize) -> EvalOutcome + Sync,
+{
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(eval).collect();
     }
-    let n = cands.len();
     let slots: Vec<Mutex<Option<EvalOutcome>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
@@ -402,7 +531,7 @@ fn evaluate_wave(
                 if i >= n {
                     break;
                 }
-                let outcome = evaluate_candidate(&cands[i].0, oracle, cf, cfg);
+                let outcome = eval(i);
                 *slots[i].lock().unwrap() = Some(outcome);
             });
         }
@@ -427,7 +556,8 @@ pub fn outer_search(
     let oracle = &*ctx.oracle;
     let workers = cfg.effective_threads().max(1);
     let mut stats = SearchStats { threads: workers, ..Default::default() };
-    let mut rule_counts: std::collections::BTreeMap<String, usize> = Default::default();
+    // (sites, enqueued, objective gain) per rule, name-ordered.
+    let mut rule_acc: BTreeMap<&'static str, (usize, usize, f64)> = BTreeMap::new();
 
     // Inner search on the origin reuses the baseline table: no second
     // profile/table pass for g0. With DVFS enabled the origin gets the
@@ -455,6 +585,14 @@ pub fn outer_search(
 
     if cfg.enable_outer && !ctx.rules.is_empty() {
         let freq_domain = freq_domain_hash(cfg, oracle);
+        // The frequency set candidate tables are built at (and parent
+        // tables carry over across): nominal-only unless DVFS is on.
+        let mode_freqs = search_freqs(cfg.dvfs, oracle);
+        // Wave 1 holds exactly the origin, whose carry-over base (table +
+        // default assignment) the Baseline already built when the
+        // frequency sets coincide — seed it instead of rebuilding.
+        let mut origin_base = (cfg.delta_eval && mode_freqs.len() == 1)
+            .then(|| (baseline.table.clone(), baseline.assignment.clone()));
         let mut seen: HashSet<u64> = HashSet::new();
         seen.insert(graph_hash(g0) ^ freq_domain);
         let mut queue: BinaryHeap<QueueEntry> = BinaryHeap::new();
@@ -487,18 +625,98 @@ pub fn outer_search(
             }
             stats.waves += 1;
 
-            // --- Generate all substitution neighbors, dedup by canonical
+            // --- Per-entry expansion artifacts, computed once and shared
+            // by every candidate site of that entry: shape table, Merkle
+            // node hashes, consumer map, and (delta mode) the parent cost
+            // table + default assignment the carry-over reads from.
+            let mut entry_shapes = Vec::with_capacity(wave.len());
+            for entry in &wave {
+                let shapes = entry
+                    .graph
+                    .infer_shapes()
+                    .map_err(|e| anyhow::anyhow!("invalid graph in queue: {e}"))?;
+                entry_shapes.push(shapes);
+            }
+            // Parent cost tables + default assignments (the delta
+            // carry-over sources), built lazily when an entry's first
+            // candidate survives dedup — an entry whose sites are all
+            // already seen never pays a table walk.
+            let mut entry_cost: Vec<Option<(GraphCostTable, Assignment)>> =
+                (0..wave.len()).map(|_| None).collect();
+
+            // --- Find all rewrite sites, dedup by incremental canonical
             // hash + frequency domain (sequential: order defines candidate
             // sequence numbers).
-            let mut cands: Vec<(Graph, &'static str)> = Vec::new();
-            for entry in &wave {
-                for (cand, rule_name) in ctx.rules.neighbors(&entry.graph) {
+            struct PendingCand<'a> {
+                parent: usize,
+                rule: &'static str,
+                view: DeltaView<'a>,
+                graph: Option<Graph>,
+            }
+            let mut cands: Vec<PendingCand<'_>> = Vec::new();
+            for (pi, entry) in wave.iter().enumerate() {
+                let g = &entry.graph;
+                let shapes = &entry_shapes[pi];
+                let hashes = node_hashes(g)
+                    .ok_or_else(|| anyhow::anyhow!("cyclic graph in queue"))?;
+                let consumers = g.consumers();
+                let cx =
+                    crate::subst::MatchContext::with_shapes_and_consumers(g, shapes, &consumers);
+                for site in ctx.rules.sites(g, &cx) {
                     stats.generated += 1;
-                    if !seen.insert(graph_hash(&cand) ^ freq_domain) {
+                    rule_acc.entry(site.rule_name()).or_default().0 += 1;
+                    let delta = site.delta(g);
+                    // The view is built before dedup because delta_hash
+                    // needs its remapping/liveness/topo either way; the
+                    // only pre-dedup work a duplicate wastes is the shape
+                    // pass, which touches the delta's dirty cone only (a
+                    // handful of nodes), not the graph.
+                    let view = DeltaView::new(g, shapes, delta, Some(&consumers))?;
+                    let h = delta_hash(&view, &hashes);
+                    if !seen.insert(h ^ freq_domain) {
                         stats.deduped += 1;
                         continue;
                     }
-                    cands.push((cand, rule_name));
+                    if cfg.delta_eval && entry_cost[pi].is_none() {
+                        // Wave 1's single entry is the origin clone.
+                        if stats.waves == 1 && origin_base.is_some() {
+                            entry_cost[pi] = origin_base.take();
+                        } else {
+                            let (table, p) = oracle.table_for_freqs(g, shapes, &mode_freqs);
+                            stats.profiled += p;
+                            let a = Assignment::default_for_with(g, shapes, oracle.reg());
+                            entry_cost[pi] = Some((table, a));
+                        }
+                    }
+                    // Materialize up front only for the legacy full-rebuild
+                    // path; debug builds cross-check the incremental
+                    // artifacts but drop the graph again in delta mode, so
+                    // the lazy merge-phase materialization stays covered by
+                    // the (debug) test suite.
+                    let mut graph = None;
+                    if cfg!(debug_assertions) || !cfg.delta_eval {
+                        let mut mg = g.apply_delta(view.delta());
+                        mg.compact();
+                        if cfg!(debug_assertions) {
+                            if let Err(e) = mg.validate() {
+                                panic!(
+                                    "rule {} produced invalid graph: {e:?}",
+                                    site.rule_name()
+                                );
+                            }
+                            debug_assert_eq!(
+                                h,
+                                graph_hash(&mg),
+                                "incremental hash diverged for rule {}",
+                                site.rule_name()
+                            );
+                            debug_assert_eq!(mg.len(), view.live_count());
+                        }
+                        if !cfg.delta_eval {
+                            graph = Some(mg);
+                        }
+                    }
+                    cands.push(PendingCand { parent: pi, rule: site.rule_name(), view, graph });
                 }
             }
             if cands.is_empty() {
@@ -508,28 +726,59 @@ pub fn outer_search(
             // --- Evaluate the wave (parallel), then merge in sequence
             // order so parallel and sequential runs take identical
             // best/enqueue decisions.
-            let outcomes = evaluate_wave(&cands, oracle, cf, cfg, workers);
-            for ((cand, rule_name), outcome) in cands.into_iter().zip(outcomes) {
+            let outcomes = run_parallel(cands.len(), workers, |i| {
+                let c = &cands[i];
+                if cfg.delta_eval {
+                    let (table, assignment) =
+                        entry_cost[c.parent].as_ref().expect("delta mode builds entry bases");
+                    let base = DeltaBase {
+                        graph: &wave[c.parent].graph,
+                        shapes: &entry_shapes[c.parent],
+                        table,
+                        assignment,
+                    };
+                    evaluate_candidate_delta(&base, &c.view, oracle, cf, cfg)
+                } else {
+                    let g = c.graph.as_ref().expect("full mode materializes up front");
+                    evaluate_candidate(g, oracle, cf, cfg)
+                }
+            });
+            // Lazy materialization: a candidate becomes a real graph at
+            // most once, and only when it wins or enqueues.
+            let materialize = |cached: &mut Option<Graph>, c: &PendingCand<'_>| {
+                if cached.is_none() {
+                    let mut mg = wave[c.parent].graph.apply_delta(c.view.delta());
+                    mg.compact();
+                    *cached = Some(mg);
+                }
+            };
+            for (ci, outcome) in outcomes.into_iter().enumerate() {
                 let (inner, profiled) = outcome?;
+                stats.evaluated += 1;
                 stats.profiled += profiled;
                 stats.inner_evals += inner.evals;
                 let value = cf.eval(&inner.cost);
+                let mut cached: Option<Graph> = cands[ci].graph.take();
                 if value < best_value {
+                    materialize(&mut cached, &cands[ci]);
+                    let g = cached.as_ref().expect("materialized above");
+                    rule_acc.entry(cands[ci].rule).or_default().2 += best_value - value;
                     best_value = value;
                     best_cost = inner.cost;
-                    best_graph = cand.clone();
+                    best_graph = g.clone();
                     best_assignment = inner.assignment.clone();
                     if trajectory.len() < 64 {
-                        trajectory.push((cand.clone(), inner.assignment.clone(), inner.cost));
+                        trajectory.push((g.clone(), inner.assignment.clone(), inner.cost));
                     }
                 }
                 if value < cfg.alpha * best_value {
-                    *rule_counts.entry(rule_name.to_string()).or_default() += 1;
+                    materialize(&mut cached, &cands[ci]);
+                    rule_acc.entry(cands[ci].rule).or_default().1 += 1;
                     seq += 1;
                     queue.push(QueueEntry {
                         value,
                         seq,
-                        graph: cand,
+                        graph: cached.take().expect("materialized above"),
                         assignment: inner.assignment,
                     });
                 }
@@ -537,7 +786,15 @@ pub fn outer_search(
         }
     }
 
-    stats.rules_applied = rule_counts.into_iter().collect();
+    stats.rule_stats = rule_acc
+        .into_iter()
+        .map(|(name, (sites, enqueued, objective_gain))| RuleStat {
+            name: name.to_string(),
+            sites,
+            enqueued,
+            objective_gain,
+        })
+        .collect();
     stats.wall_s = t_start.elapsed().as_secs_f64();
     Ok(OuterResult {
         graph: best_graph,

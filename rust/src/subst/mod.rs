@@ -1,4 +1,5 @@
-//! Equivalent graph substitutions (paper §3.1).
+//! Equivalent graph substitutions (paper §3.1) — the **two-phase delta
+//! engine**.
 //!
 //! A substitution `S` takes a graph, transforms a matched subgraph by a
 //! rule, and produces one or more new graphs that are *equivalent*: for any
@@ -6,25 +7,144 @@
 //! graph under a rule set is the paper's "equivalent graph space" that the
 //! outer search explores.
 //!
+//! Rules run in two phases:
+//!
+//! 1. **Match** — [`Rule::find_sites`] scans the graph once (against a
+//!    shared [`MatchContext`] carrying precomputed shapes and a fanout
+//!    map) and returns every [`RewriteSite`]: a matched anchor plus the
+//!    rule data needed to rewrite it.
+//! 2. **Expand** — [`RewriteSite::delta`] turns a site into a
+//!    [`GraphDelta`] (nodes replaced/added, ports rewired). The search
+//!    evaluates the delta incrementally (cost carry-over, incremental
+//!    hash) and only materializes a full graph — via
+//!    [`Graph::apply_delta`] — for wave winners.
+//!
 //! Every rule here is verified for semantic equivalence two ways: unit
 //! tests on structure, and randomized end-to-end executions of
 //! (original, substituted) pairs through the reference engine (see
-//! `rust/tests/prop_invariants.rs`).
+//! `rust/tests/prop_invariants.rs`); the delta artifacts are additionally
+//! property-checked against full rebuilds in `rust/tests/delta_engine.rs`.
 
 /// The concrete substitution rules (fusions, merges, eliminations).
 pub mod rules;
 
-use crate::graph::Graph;
+use crate::graph::{Graph, GraphDelta, NodeId, PortRef, TensorShape};
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+
+/// Precomputed per-graph match context shared by every rule: the full
+/// shape table and a port-fanout map, each computed **once per graph**
+/// instead of once per rule query (the historical `fanout()` helper
+/// rescanned all nodes × edges per call — a hidden O(n²) per rule).
+pub struct MatchContext<'g> {
+    shapes: Cow<'g, [Vec<TensorShape>]>,
+    fanout: BTreeMap<PortRef, usize>,
+}
+
+fn fanout_map(g: &Graph) -> BTreeMap<PortRef, usize> {
+    let mut map: BTreeMap<PortRef, usize> = BTreeMap::new();
+    for (_, node) in g.nodes() {
+        for inp in &node.inputs {
+            *map.entry(*inp).or_default() += 1;
+        }
+    }
+    for out in &g.outputs {
+        *map.entry(*out).or_default() += 1;
+    }
+    map
+}
+
+impl<'g> MatchContext<'g> {
+    /// Build a context, inferring shapes. Errors (instead of panicking,
+    /// as the old `shapes_of` helper did) when the graph is invalid — a
+    /// bad model file now reports cleanly through the CLI.
+    pub fn new(g: &Graph) -> anyhow::Result<MatchContext<'static>> {
+        let shapes = g
+            .infer_shapes()
+            .map_err(|e| anyhow::anyhow!("substitution over invalid graph: {e}"))?;
+        Ok(MatchContext { shapes: Cow::Owned(shapes), fanout: fanout_map(g) })
+    }
+
+    /// Build a context around an already-inferred shape table (the search
+    /// hot path: one inference per expanded graph, reused everywhere).
+    pub fn with_shapes(g: &Graph, shapes: &'g [Vec<TensorShape>]) -> MatchContext<'g> {
+        MatchContext { shapes: Cow::Borrowed(shapes), fanout: fanout_map(g) }
+    }
+
+    /// As [`MatchContext::with_shapes`], deriving the fanout map from an
+    /// already-built consumer map (the outer search shares one per wave
+    /// entry with its delta views) instead of rescanning every edge.
+    /// `consumers` must be `g.consumers()` — it records one entry per
+    /// input occurrence, so its lengths plus the output multiplicities
+    /// are exactly the [`MatchContext::fanout`] counts.
+    pub fn with_shapes_and_consumers(
+        g: &Graph,
+        shapes: &'g [Vec<TensorShape>],
+        consumers: &BTreeMap<PortRef, Vec<NodeId>>,
+    ) -> MatchContext<'g> {
+        let mut fanout: BTreeMap<PortRef, usize> =
+            consumers.iter().map(|(p, v)| (*p, v.len())).collect();
+        for out in &g.outputs {
+            *fanout.entry(*out).or_default() += 1;
+        }
+        MatchContext { shapes: Cow::Borrowed(shapes), fanout }
+    }
+
+    /// The graph's full shape table.
+    pub fn shapes(&self) -> &[Vec<TensorShape>] {
+        &self.shapes
+    }
+
+    /// How many consumers (including graph outputs, counting multiplicity)
+    /// read port `p`? O(log n) lookup against the precomputed map.
+    pub fn fanout(&self, p: PortRef) -> usize {
+        self.fanout.get(&p).copied().unwrap_or(0)
+    }
+}
+
+/// One matched rewrite opportunity: the anchor node the rule fired on plus
+/// the precomputed data needed to expand it into a [`GraphDelta`].
+pub struct RewriteSite {
+    pub(crate) rule: &'static str,
+    pub(crate) anchor: NodeId,
+    pub(crate) kind: rules::SiteKind,
+}
+
+impl RewriteSite {
+    /// Name of the rule that matched.
+    pub fn rule_name(&self) -> &'static str {
+        self.rule
+    }
+
+    /// The matched anchor node (the consumer being rewritten).
+    pub fn anchor(&self) -> NodeId {
+        self.anchor
+    }
+
+    /// Expand the site into the delta that performs the rewrite. `g` must
+    /// be the same graph the site was found on.
+    pub fn delta(&self, g: &Graph) -> GraphDelta {
+        self.kind.build(g)
+    }
+}
 
 /// One equivalent graph substitution `S_i`.
 pub trait Rule: Send + Sync {
     /// Stable rule name (reporting and rule-set ablations).
     fn name(&self) -> &'static str;
 
-    /// Apply the rule at every matching site, returning one new graph per
-    /// site (each graph = the rule applied at exactly one site, mirroring
-    /// MetaFlow's one-substitution-per-step search granularity).
-    fn apply_all(&self, g: &Graph) -> Vec<Graph>;
+    /// Find every site the rule matches (each site = the rule applied at
+    /// exactly one place, mirroring MetaFlow's one-substitution-per-step
+    /// search granularity), in deterministic anchor order.
+    fn find_sites(&self, g: &Graph, cx: &MatchContext) -> Vec<RewriteSite>;
+
+    /// Apply the rule at every matching site, returning one (uncompacted)
+    /// product graph per site — the historical whole-graph API, now a
+    /// materializing wrapper over `find_sites` + [`Graph::apply_delta`].
+    fn apply_all(&self, g: &Graph) -> anyhow::Result<Vec<Graph>> {
+        let cx = MatchContext::new(g)?;
+        Ok(self.find_sites(g, &cx).iter().map(|s| g.apply_delta(&s.delta(g))).collect())
+    }
 }
 
 /// The standard rule set `{S_1..S_m}` handed to the optimizer.
@@ -76,28 +196,45 @@ impl RuleSet {
         self.rules.is_empty()
     }
 
-    /// All one-substitution neighbors of `g`, compacted.
+    /// All rewrite sites of every rule on `g`, in (rule registration,
+    /// anchor) order — the candidate order the outer search evaluates in.
+    pub fn sites(&self, g: &Graph, cx: &MatchContext) -> Vec<RewriteSite> {
+        let mut out = Vec::new();
+        for rule in &self.rules {
+            out.extend(rule.find_sites(g, cx));
+        }
+        out
+    }
+
+    /// As [`RuleSet::sites`], building the [`MatchContext`] internally.
+    pub fn find_sites(&self, g: &Graph) -> anyhow::Result<Vec<RewriteSite>> {
+        let cx = MatchContext::new(g)?;
+        Ok(self.sites(g, &cx))
+    }
+
+    /// All one-substitution neighbors of `g`, compacted — the materialized
+    /// view of [`RuleSet::sites`].
     ///
     /// Perf note (EXPERIMENTS.md §Perf): rule products are *not* validated
     /// here in release builds — every rule is equivalence-verified by the
     /// property suite, and the outer search validates each surviving
-    /// candidate exactly once (shape inference) after hash dedup, so
-    /// validating here would double the dominant cost of search expansion.
-    /// Debug builds still validate and panic loudly on any rule bug.
-    pub fn neighbors(&self, g: &Graph) -> Vec<(Graph, &'static str)> {
+    /// candidate exactly once (incremental shape inference on the delta)
+    /// after hash dedup, so validating here would double the dominant cost
+    /// of search expansion. Debug builds still validate and panic loudly
+    /// on any rule bug.
+    pub fn neighbors(&self, g: &Graph) -> anyhow::Result<Vec<(Graph, &'static str)>> {
         let mut out = Vec::new();
-        for rule in &self.rules {
-            for mut cand in rule.apply_all(g) {
-                cand.compact();
-                if cfg!(debug_assertions) {
-                    if let Err(e) = cand.validate() {
-                        panic!("rule {} produced invalid graph: {e:?}", rule.name());
-                    }
+        for site in self.find_sites(g)? {
+            let mut cand = g.apply_delta(&site.delta(g));
+            cand.compact();
+            if cfg!(debug_assertions) {
+                if let Err(e) = cand.validate() {
+                    panic!("rule {} produced invalid graph: {e:?}", site.rule_name());
                 }
-                out.push((cand, rule.name()));
             }
+            out.push((cand, site.rule_name()));
         }
-        out
+        Ok(out)
     }
 }
 
@@ -110,5 +247,16 @@ mod tests {
         let rs = RuleSet::standard();
         assert!(rs.len() >= 6);
         assert!(rs.names().contains(&"fuse_conv_relu"));
+    }
+
+    #[test]
+    fn match_context_rejects_invalid_graph() {
+        let mut g = Graph::new();
+        // Relu with no input: shape inference fails.
+        g.add(crate::graph::OpKind::Relu, Vec::new(), "r");
+        g.outputs = vec![PortRef::of(NodeId(0))];
+        let err = MatchContext::new(&g).unwrap_err().to_string();
+        assert!(err.contains("substitution over invalid graph"), "{err}");
+        assert!(RuleSet::standard().neighbors(&g).is_err());
     }
 }

@@ -5,10 +5,19 @@
 //! parallel-convolution merging (the Inception/fire-module workhorse),
 //! kernel enlargement (1×1 → padded 3×3, an *enabling* substitution that
 //! costs FLOPs but unlocks merges), and split/concat cancellation.
+//!
+//! Each rule implements [`Rule::find_sites`] (match phase — read-only
+//! scan against the shared [`MatchContext`]) and contributes a
+//! [`SiteKind`] variant whose `build` method expands the matched site
+//! into a [`GraphDelta`] (rewrite phase). The delta replays the exact
+//! edit sequence the historical clone-and-rewrite implementations
+//! performed, so materialized products are bit-identical to the old
+//! engine's.
 
-use super::Rule;
+use super::{MatchContext, RewriteSite, Rule};
+use crate::graph::delta::DeltaBuilder;
 use crate::graph::op::{Activation, OpKind};
-use crate::graph::{Graph, NodeId, PortRef, TensorShape};
+use crate::graph::{Graph, GraphDelta, NodeId, PortRef};
 
 /// Shorthand for a Conv2d attribute bundle.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -43,17 +52,186 @@ fn conv_op(a: ConvAttrs) -> OpKind {
     }
 }
 
-/// How many consumers (including graph outputs) read port `p`?
-fn fanout(g: &Graph, p: PortRef) -> usize {
-    let mut n = 0;
-    for (_, node) in g.nodes() {
-        n += node.inputs.iter().filter(|i| **i == p).count();
-    }
-    n + g.outputs.iter().filter(|o| **o == p).count()
+/// Precomputed match data of one [`RewriteSite`], one variant per rule.
+/// `build` expands it into the delta performing the rewrite.
+pub(crate) enum SiteKind {
+    /// `Conv2d(act=None) -> Relu` ⇒ `Conv2d(act=Relu)`.
+    ConvRelu { conv: PortRef, relu: NodeId, attrs: ConvAttrs },
+    /// `DwConv2d(act=None) -> Relu` ⇒ `DwConv2d(act=Relu)`.
+    DwConvRelu { dw: PortRef, relu: NodeId },
+    /// `Relu(Add(a, b))` ⇒ `AddRelu(a, b)`.
+    AddRelu { add: PortRef, relu: NodeId },
+    /// `BatchNorm(Conv2d(..))` ⇒ conv with folded parameters.
+    ConvBn { bn: NodeId, conv: PortRef, attrs: ConvAttrs },
+    /// `BatchNorm(DwConv2d(..))` ⇒ depthwise conv with folded parameters.
+    DwConvBn { bn: NodeId, dw: PortRef },
+    /// `Add(Conv2d(..), r)` ⇒ conv with fused residual input.
+    ConvResidual { add: NodeId, conv: PortRef, res: PortRef, attrs: ConvAttrs, fused_relu: bool },
+    /// Two parallel convs on one input ⇒ one wide conv + `Split`.
+    MergeConvs { c1: NodeId, c2: NodeId, attrs: ConvAttrs, k1: usize, k2: usize },
+    /// 1×1 conv ⇒ zero-padded 3×3 (enabling substitution).
+    Enlarge { conv: NodeId, attrs: ConvAttrs },
+    /// `Concat(Split(x).*)` in order ⇒ `x`.
+    SplitConcat { cat: NodeId, x: PortRef },
+    /// `Split(Concat(..))` at matching sizes ⇒ identity rewiring.
+    ConcatSplit { split: NodeId },
 }
 
-fn shapes_of(g: &Graph) -> Vec<Vec<TensorShape>> {
-    g.infer_shapes().expect("substitution over invalid graph")
+/// The shared BN-fold edit script of `ConvBn`/`DwConvBn`: fold the BN
+/// parameters into weight/bias constants, emit the rewritten producer
+/// (`make_op` supplies the fused conv/depthwise operator with
+/// `has_bias: true`), and redirect the BN's consumers onto it. One home
+/// for the sequence keeps the two rules byte-equivalent by construction.
+fn build_bn_fold(
+    b: &mut DeltaBuilder,
+    g: &Graph,
+    bn: NodeId,
+    producer: NodeId,
+    bias: Option<PortRef>,
+    make_op: impl FnOnce() -> OpKind,
+) {
+    let bn_node = g.node(bn);
+    let &OpKind::BatchNorm { eps } = &bn_node.op else {
+        unreachable!("BN-fold site over a non-BatchNorm node")
+    };
+    let (gamma, beta, mean, var) =
+        (bn_node.inputs[1], bn_node.inputs[2], bn_node.inputs[3], bn_node.inputs[4]);
+    let p = g.node(producer);
+    let w = p.inputs[1];
+    let x = p.inputs[0];
+    let wf = b.add(
+        OpKind::FoldBnWeight { eps },
+        vec![w, gamma, var],
+        &format!("{}_wfold", p.name),
+    );
+    let mut bias_inputs = vec![gamma, beta, mean, var];
+    if let Some(bp) = bias {
+        bias_inputs.insert(0, bp);
+    }
+    let bf = b.add(
+        OpKind::FoldBnBias { eps, has_bias: bias.is_some() },
+        bias_inputs,
+        &format!("{}_bfold", p.name),
+    );
+    let newp = b.add(
+        make_op(),
+        vec![x, PortRef::of(wf), PortRef::of(bf)],
+        &format!("{}_bnfold", p.name),
+    );
+    b.redirect(PortRef::of(bn), PortRef::of(newp));
+}
+
+impl SiteKind {
+    /// Expand the matched site into its rewrite delta. `g` must be the
+    /// graph the site was found on.
+    pub(crate) fn build(&self, g: &Graph) -> GraphDelta {
+        let mut b = DeltaBuilder::new(g);
+        match *self {
+            SiteKind::ConvRelu { conv, relu, attrs } => {
+                b.replace_op(conv.node, conv_op(ConvAttrs { act: Activation::Relu, ..attrs }));
+                b.redirect(PortRef::of(relu), conv);
+            }
+            SiteKind::DwConvRelu { dw, relu } => {
+                let &OpKind::DwConv2d { stride, pad, has_bias, .. } = &g.node(dw.node).op else {
+                    unreachable!("DwConvRelu site over a non-depthwise node")
+                };
+                b.replace_op(
+                    dw.node,
+                    OpKind::DwConv2d { stride, pad, act: Activation::Relu, has_bias },
+                );
+                b.redirect(PortRef::of(relu), dw);
+            }
+            SiteKind::AddRelu { add, relu } => {
+                b.replace_op(add.node, OpKind::AddRelu);
+                b.redirect(PortRef::of(relu), add);
+            }
+            SiteKind::ConvBn { bn, conv, attrs } => {
+                let bias = attrs.has_bias.then(|| g.node(conv.node).inputs[2]);
+                build_bn_fold(&mut b, g, bn, conv.node, bias, || {
+                    conv_op(ConvAttrs { has_bias: true, ..attrs })
+                });
+            }
+            SiteKind::DwConvBn { bn, dw } => {
+                let dw_node = g.node(dw.node);
+                let &OpKind::DwConv2d { stride, pad, act, has_bias } = &dw_node.op else {
+                    unreachable!("DwConvBn site over a non-depthwise node")
+                };
+                let bias = has_bias.then(|| dw_node.inputs[2]);
+                build_bn_fold(&mut b, g, bn, dw.node, bias, || OpKind::DwConv2d {
+                    stride,
+                    pad,
+                    act,
+                    has_bias: true,
+                });
+            }
+            SiteKind::ConvResidual { add, conv, res, attrs, fused_relu } => {
+                let conv_node = g.node(conv.node);
+                let mut inputs = conv_node.inputs.clone();
+                inputs.push(res);
+                let act = if fused_relu { Activation::Relu } else { Activation::None };
+                let newconv = b.add(
+                    conv_op(ConvAttrs { has_residual: true, act, ..attrs }),
+                    inputs,
+                    &format!("{}_res", conv_node.name),
+                );
+                b.redirect(PortRef::of(add), PortRef::of(newconv));
+            }
+            SiteKind::MergeConvs { c1, c2, attrs, k1, k2 } => {
+                let n1 = g.node(c1);
+                let n2 = g.node(c2);
+                let (w1, w2) = (n1.inputs[1], n2.inputs[1]);
+                let wcat = b.add(
+                    OpKind::Concat { axis: 0 },
+                    vec![w1, w2],
+                    &format!("{}+{}_w", n1.name, n2.name),
+                );
+                let mut inputs = vec![n1.inputs[0], PortRef::of(wcat)];
+                if attrs.has_bias {
+                    let bcat = b.add(
+                        OpKind::Concat { axis: 0 },
+                        vec![n1.inputs[2], n2.inputs[2]],
+                        &format!("{}+{}_b", n1.name, n2.name),
+                    );
+                    inputs.push(PortRef::of(bcat));
+                }
+                let merged = b.add(conv_op(attrs), inputs, &format!("{}+{}", n1.name, n2.name));
+                let split = b.add(
+                    OpKind::Split { axis: 1, sizes: vec![k1, k2] },
+                    vec![PortRef::of(merged)],
+                    &format!("{}+{}_split", n1.name, n2.name),
+                );
+                b.redirect(PortRef::of(c1), PortRef { node: split, port: 0 });
+                b.redirect(PortRef::of(c2), PortRef { node: split, port: 1 });
+            }
+            SiteKind::Enlarge { conv, attrs } => {
+                let node = g.node(conv);
+                let w = node.inputs[1];
+                let padded = b.add(
+                    OpKind::PadKernel { target: (3, 3) },
+                    vec![w],
+                    &format!("{}_wpad", node.name),
+                );
+                let mut inputs = node.inputs.clone();
+                inputs[1] = PortRef::of(padded);
+                let enlarged = b.add(
+                    conv_op(ConvAttrs { pad: (1, 1), ..attrs }),
+                    inputs,
+                    &format!("{}_3x3", node.name),
+                );
+                b.redirect(PortRef::of(conv), PortRef::of(enlarged));
+            }
+            SiteKind::SplitConcat { cat, x } => {
+                b.redirect(PortRef::of(cat), x);
+            }
+            SiteKind::ConcatSplit { split } => {
+                let cat = g.node(g.node(split).inputs[0].node);
+                for (port, src) in cat.inputs.iter().enumerate() {
+                    b.redirect(PortRef { node: split, port }, *src);
+                }
+            }
+        }
+        b.finish()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -67,7 +245,7 @@ impl Rule for FuseConvRelu {
         "fuse_conv_relu"
     }
 
-    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+    fn find_sites(&self, g: &Graph, cx: &MatchContext) -> Vec<RewriteSite> {
         let mut out = Vec::new();
         for (relu_id, relu) in g.nodes() {
             if relu.op != OpKind::Relu {
@@ -81,14 +259,14 @@ impl Rule for FuseConvRelu {
             }
             // The conv's output must feed only this relu, otherwise other
             // consumers would observe pre-activation values.
-            if fanout(g, conv_port) != 1 {
+            if cx.fanout(conv_port) != 1 {
                 continue;
             }
-            let mut ng = g.clone();
-            ng.node_mut(conv_port.node).op =
-                conv_op(ConvAttrs { act: Activation::Relu, ..attrs });
-            ng.redirect(PortRef::of(relu_id), conv_port);
-            out.push(ng);
+            out.push(RewriteSite {
+                rule: self.name(),
+                anchor: relu_id,
+                kind: SiteKind::ConvRelu { conv: conv_port, relu: relu_id, attrs },
+            });
         }
         out
     }
@@ -105,7 +283,7 @@ impl Rule for FuseDwConvRelu {
         "fuse_dwconv_relu"
     }
 
-    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+    fn find_sites(&self, g: &Graph, cx: &MatchContext) -> Vec<RewriteSite> {
         let mut out = Vec::new();
         for (relu_id, relu) in g.nodes() {
             if relu.op != OpKind::Relu {
@@ -113,15 +291,15 @@ impl Rule for FuseDwConvRelu {
             }
             let dw_port = relu.inputs[0];
             let dw = g.node(dw_port.node);
-            let OpKind::DwConv2d { stride, pad, act, has_bias } = dw.op else { continue };
-            if act != Activation::None || fanout(g, dw_port) != 1 {
+            let OpKind::DwConv2d { act, .. } = dw.op else { continue };
+            if act != Activation::None || cx.fanout(dw_port) != 1 {
                 continue;
             }
-            let mut ng = g.clone();
-            ng.node_mut(dw_port.node).op =
-                OpKind::DwConv2d { stride, pad, act: Activation::Relu, has_bias };
-            ng.redirect(PortRef::of(relu_id), dw_port);
-            out.push(ng);
+            out.push(RewriteSite {
+                rule: self.name(),
+                anchor: relu_id,
+                kind: SiteKind::DwConvRelu { dw: dw_port, relu: relu_id },
+            });
         }
         out
     }
@@ -140,43 +318,21 @@ impl Rule for FuseDwConvBn {
         "fuse_dwconv_bn"
     }
 
-    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+    fn find_sites(&self, g: &Graph, cx: &MatchContext) -> Vec<RewriteSite> {
         let mut out = Vec::new();
         for (bn_id, bn) in g.nodes() {
-            let OpKind::BatchNorm { eps } = bn.op else { continue };
+            let OpKind::BatchNorm { .. } = bn.op else { continue };
             let dw_port = bn.inputs[0];
             let dw = g.node(dw_port.node);
-            let OpKind::DwConv2d { stride, pad, act, has_bias } = dw.op else { continue };
-            if act != Activation::None || fanout(g, dw_port) != 1 {
+            let OpKind::DwConv2d { act, .. } = dw.op else { continue };
+            if act != Activation::None || cx.fanout(dw_port) != 1 {
                 continue;
             }
-            let (gamma, beta, mean, var) = (bn.inputs[1], bn.inputs[2], bn.inputs[3], bn.inputs[4]);
-            let w = dw.inputs[1];
-            let x = dw.inputs[0];
-            let bias = has_bias.then(|| dw.inputs[2]);
-
-            let mut ng = g.clone();
-            let wf = ng.add(
-                OpKind::FoldBnWeight { eps },
-                vec![w, gamma, var],
-                &format!("{}_wfold", dw.name),
-            );
-            let mut bias_inputs = vec![gamma, beta, mean, var];
-            if let Some(b) = bias {
-                bias_inputs.insert(0, b);
-            }
-            let bf = ng.add(
-                OpKind::FoldBnBias { eps, has_bias: bias.is_some() },
-                bias_inputs,
-                &format!("{}_bfold", dw.name),
-            );
-            let newdw = ng.add(
-                OpKind::DwConv2d { stride, pad, act, has_bias: true },
-                vec![x, PortRef::of(wf), PortRef::of(bf)],
-                &format!("{}_bnfold", dw.name),
-            );
-            ng.redirect(PortRef::of(bn_id), PortRef::of(newdw));
-            out.push(ng);
+            out.push(RewriteSite {
+                rule: self.name(),
+                anchor: bn_id,
+                kind: SiteKind::DwConvBn { bn: bn_id, dw: dw_port },
+            });
         }
         out
     }
@@ -193,7 +349,7 @@ impl Rule for FuseAddRelu {
         "fuse_add_relu"
     }
 
-    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+    fn find_sites(&self, g: &Graph, cx: &MatchContext) -> Vec<RewriteSite> {
         let mut out = Vec::new();
         for (relu_id, relu) in g.nodes() {
             if relu.op != OpKind::Relu {
@@ -201,13 +357,14 @@ impl Rule for FuseAddRelu {
             }
             let add_port = relu.inputs[0];
             let add = g.node(add_port.node);
-            if add.op != OpKind::Add || fanout(g, add_port) != 1 {
+            if add.op != OpKind::Add || cx.fanout(add_port) != 1 {
                 continue;
             }
-            let mut ng = g.clone();
-            ng.node_mut(add_port.node).op = OpKind::AddRelu;
-            ng.redirect(PortRef::of(relu_id), add_port);
-            out.push(ng);
+            out.push(RewriteSite {
+                rule: self.name(),
+                anchor: relu_id,
+                kind: SiteKind::AddRelu { add: add_port, relu: relu_id },
+            });
         }
         out
     }
@@ -225,46 +382,27 @@ impl Rule for FuseConvBn {
         "fuse_conv_bn"
     }
 
-    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+    fn find_sites(&self, g: &Graph, cx: &MatchContext) -> Vec<RewriteSite> {
         let mut out = Vec::new();
         for (bn_id, bn) in g.nodes() {
-            let OpKind::BatchNorm { eps } = bn.op else { continue };
+            let OpKind::BatchNorm { .. } = bn.op else { continue };
             let conv_port = bn.inputs[0];
             let conv = g.node(conv_port.node);
             let Some(attrs) = conv_attrs(&conv.op) else { continue };
             // Fold is only valid when nothing intervenes: pre-activation,
             // un-shared output, no fused residual (residual is added before
             // BN would see it, changing semantics).
-            if attrs.act != Activation::None || attrs.has_residual || fanout(g, conv_port) != 1 {
+            if attrs.act != Activation::None
+                || attrs.has_residual
+                || cx.fanout(conv_port) != 1
+            {
                 continue;
             }
-            let (gamma, beta, mean, var) = (bn.inputs[1], bn.inputs[2], bn.inputs[3], bn.inputs[4]);
-            let w = conv.inputs[1];
-            let x = conv.inputs[0];
-            let bias = attrs.has_bias.then(|| conv.inputs[2]);
-
-            let mut ng = g.clone();
-            let wf = ng.add(
-                OpKind::FoldBnWeight { eps },
-                vec![w, gamma, var],
-                &format!("{}_wfold", conv.name),
-            );
-            let mut bias_inputs = vec![gamma, beta, mean, var];
-            if let Some(b) = bias {
-                bias_inputs.insert(0, b);
-            }
-            let bf = ng.add(
-                OpKind::FoldBnBias { eps, has_bias: bias.is_some() },
-                bias_inputs,
-                &format!("{}_bfold", conv.name),
-            );
-            let newconv = ng.add(
-                conv_op(ConvAttrs { has_bias: true, ..attrs }),
-                vec![x, PortRef::of(wf), PortRef::of(bf)],
-                &format!("{}_bnfold", conv.name),
-            );
-            ng.redirect(PortRef::of(bn_id), PortRef::of(newconv));
-            out.push(ng);
+            out.push(RewriteSite {
+                rule: self.name(),
+                anchor: bn_id,
+                kind: SiteKind::ConvBn { bn: bn_id, conv: conv_port, attrs },
+            });
         }
         out
     }
@@ -282,7 +420,7 @@ impl Rule for FuseConvResidual {
         "fuse_conv_residual"
     }
 
-    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+    fn find_sites(&self, g: &Graph, cx: &MatchContext) -> Vec<RewriteSite> {
         let mut out = Vec::new();
         for (add_id, add) in g.nodes() {
             let fused_relu = match add.op {
@@ -295,24 +433,27 @@ impl Rule for FuseConvResidual {
                 let res_port = add.inputs[res_slot];
                 let conv = g.node(conv_port.node);
                 let Some(attrs) = conv_attrs(&conv.op) else { continue };
-                if attrs.has_residual || attrs.act != Activation::None || fanout(g, conv_port) != 1 {
+                if attrs.has_residual
+                    || attrs.act != Activation::None
+                    || cx.fanout(conv_port) != 1
+                {
                     continue;
                 }
                 // The residual must not itself be the conv (degenerate).
                 if res_port == conv_port {
                     continue;
                 }
-                let mut ng = g.clone();
-                let mut inputs = conv.inputs.clone();
-                inputs.push(res_port);
-                let act = if fused_relu { Activation::Relu } else { Activation::None };
-                let newconv = ng.add(
-                    conv_op(ConvAttrs { has_residual: true, act, ..attrs }),
-                    inputs,
-                    &format!("{}_res", conv.name),
-                );
-                ng.redirect(PortRef::of(add_id), PortRef::of(newconv));
-                out.push(ng);
+                out.push(RewriteSite {
+                    rule: self.name(),
+                    anchor: add_id,
+                    kind: SiteKind::ConvResidual {
+                        add: add_id,
+                        conv: conv_port,
+                        res: res_port,
+                        attrs,
+                        fused_relu,
+                    },
+                });
             }
         }
         out
@@ -332,8 +473,8 @@ impl Rule for MergeParallelConvs {
         "merge_parallel_convs"
     }
 
-    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
-        let shapes = shapes_of(g);
+    fn find_sites(&self, g: &Graph, cx: &MatchContext) -> Vec<RewriteSite> {
+        let shapes = cx.shapes();
         let convs: Vec<(NodeId, ConvAttrs)> = g
             .nodes()
             .filter_map(|(id, n)| conv_attrs(&n.op).map(|a| (id, a)))
@@ -359,34 +500,11 @@ impl Rule for MergeParallelConvs {
                     continue; // kernel size mismatch (EnlargeConvKernel can fix)
                 }
                 let (k1, k2) = (ws1[0], ws2[0]);
-                let mut ng = g.clone();
-                let wcat = ng.add(
-                    OpKind::Concat { axis: 0 },
-                    vec![w1, w2],
-                    &format!("{}+{}_w", n1.name, n2.name),
-                );
-                let mut inputs = vec![n1.inputs[0], PortRef::of(wcat)];
-                if a1.has_bias {
-                    let bcat = ng.add(
-                        OpKind::Concat { axis: 0 },
-                        vec![n1.inputs[2], n2.inputs[2]],
-                        &format!("{}+{}_b", n1.name, n2.name),
-                    );
-                    inputs.push(PortRef::of(bcat));
-                }
-                let merged = ng.add(
-                    conv_op(a1),
-                    inputs,
-                    &format!("{}+{}", n1.name, n2.name),
-                );
-                let split = ng.add(
-                    OpKind::Split { axis: 1, sizes: vec![k1, k2] },
-                    vec![PortRef::of(merged)],
-                    &format!("{}+{}_split", n1.name, n2.name),
-                );
-                ng.redirect(PortRef::of(c1), PortRef { node: split, port: 0 });
-                ng.redirect(PortRef::of(c2), PortRef { node: split, port: 1 });
-                out.push(ng);
+                out.push(RewriteSite {
+                    rule: self.name(),
+                    anchor: c1,
+                    kind: SiteKind::MergeConvs { c1, c2, attrs: a1, k1, k2 },
+                });
             }
         }
         out
@@ -406,8 +524,8 @@ impl Rule for EnlargeConvKernel {
         "enlarge_conv_kernel"
     }
 
-    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
-        let shapes = shapes_of(g);
+    fn find_sites(&self, g: &Graph, cx: &MatchContext) -> Vec<RewriteSite> {
+        let shapes = cx.shapes();
         let mut out = Vec::new();
         for (id, node) in g.nodes() {
             let Some(attrs) = conv_attrs(&node.op) else { continue };
@@ -439,21 +557,11 @@ impl Rule for EnlargeConvKernel {
             if !has_3x3_sibling {
                 continue;
             }
-            let mut ng = g.clone();
-            let padded = ng.add(
-                OpKind::PadKernel { target: (3, 3) },
-                vec![w],
-                &format!("{}_wpad", node.name),
-            );
-            let mut inputs = node.inputs.clone();
-            inputs[1] = PortRef::of(padded);
-            let enlarged = ng.add(
-                conv_op(ConvAttrs { pad: (1, 1), ..attrs }),
-                inputs,
-                &format!("{}_3x3", node.name),
-            );
-            ng.redirect(PortRef::of(id), PortRef::of(enlarged));
-            out.push(ng);
+            out.push(RewriteSite {
+                rule: self.name(),
+                anchor: id,
+                kind: SiteKind::Enlarge { conv: id, attrs },
+            });
         }
         out
     }
@@ -470,7 +578,7 @@ impl Rule for SplitConcatElim {
         "split_concat_elim"
     }
 
-    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
+    fn find_sites(&self, g: &Graph, _cx: &MatchContext) -> Vec<RewriteSite> {
         let mut out = Vec::new();
         for (cat_id, cat) in g.nodes() {
             let OpKind::Concat { axis } = cat.op else { continue };
@@ -491,9 +599,11 @@ impl Rule for SplitConcatElim {
                 continue;
             }
             let x = g.node(split_id).inputs[0];
-            let mut ng = g.clone();
-            ng.redirect(PortRef::of(cat_id), x);
-            out.push(ng);
+            out.push(RewriteSite {
+                rule: self.name(),
+                anchor: cat_id,
+                kind: SiteKind::SplitConcat { cat: cat_id, x },
+            });
         }
         out
     }
@@ -510,8 +620,8 @@ impl Rule for ConcatSplitElim {
         "concat_split_elim"
     }
 
-    fn apply_all(&self, g: &Graph) -> Vec<Graph> {
-        let shapes = shapes_of(g);
+    fn find_sites(&self, g: &Graph, cx: &MatchContext) -> Vec<RewriteSite> {
+        let shapes = cx.shapes();
         let mut out = Vec::new();
         for (split_id, split) in g.nodes() {
             let OpKind::Split { axis, sizes } = &split.op else { continue };
@@ -529,11 +639,11 @@ impl Rule for ConcatSplitElim {
             if &part_sizes != sizes {
                 continue;
             }
-            let mut ng = g.clone();
-            for (port, src) in cat.inputs.iter().enumerate() {
-                ng.redirect(PortRef { node: split_id, port }, *src);
-            }
-            out.push(ng);
+            out.push(RewriteSite {
+                rule: self.name(),
+                anchor: split_id,
+                kind: SiteKind::ConcatSplit { split: split_id },
+            });
         }
         out
     }
@@ -566,7 +676,11 @@ mod tests {
         let r = g.add1(OpKind::Relu, &[c], "r");
         g.outputs = vec![PortRef::of(r)];
 
-        let products = FuseConvRelu.apply_all(&g);
+        let sites = FuseConvRelu.find_sites(&g, &MatchContext::new(&g).unwrap());
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0].anchor(), r);
+        assert_eq!(sites[0].rule_name(), "fuse_conv_relu");
+        let products = FuseConvRelu.apply_all(&g).unwrap();
         assert_eq!(products.len(), 1);
         let mut ng = products.into_iter().next().unwrap();
         ng.compact();
@@ -589,7 +703,7 @@ mod tests {
         let r1 = g.add1(OpKind::Relu, &[c], "r1");
         let r2 = g.add1(OpKind::Sigmoid, &[c], "r2");
         g.outputs = vec![PortRef::of(r1), PortRef::of(r2)];
-        assert!(FuseConvRelu.apply_all(&g).is_empty());
+        assert!(FuseConvRelu.apply_all(&g).unwrap().is_empty());
     }
 
     #[test]
@@ -609,7 +723,7 @@ mod tests {
         );
         g.outputs = vec![PortRef::of(bn)];
 
-        let products = FuseConvBn.apply_all(&g);
+        let products = FuseConvBn.apply_all(&g).unwrap();
         assert_eq!(products.len(), 1);
         let mut ng = products.into_iter().next().unwrap();
         ng.compact();
@@ -632,7 +746,7 @@ mod tests {
         let cat = g.add1(OpKind::Concat { axis: 1 }, &[c1, c2], "cat");
         g.outputs = vec![PortRef::of(cat)];
 
-        let products = MergeParallelConvs.apply_all(&g);
+        let products = MergeParallelConvs.apply_all(&g).unwrap();
         assert_eq!(products.len(), 1);
         let mut ng = products.into_iter().next().unwrap();
         ng.compact();
@@ -656,7 +770,7 @@ mod tests {
         let c1 = g.add1(conv2d(Activation::Relu, false), &[x, w1], "c1");
         let c2 = g.add1(conv2d(Activation::None, false), &[x, w2], "c2"); // act differs
         g.outputs = vec![PortRef::of(c1), PortRef::of(c2)];
-        assert!(MergeParallelConvs.apply_all(&g).is_empty());
+        assert!(MergeParallelConvs.apply_all(&g).unwrap().is_empty());
     }
 
     #[test]
@@ -677,12 +791,12 @@ mod tests {
         );
         g.outputs = vec![PortRef::of(c1)];
         // alone: no product
-        assert!(EnlargeConvKernel.apply_all(&g).is_empty());
+        assert!(EnlargeConvKernel.apply_all(&g).unwrap().is_empty());
         // add a 3x3 sibling
         let w2 = weight(&mut g, &[6, 3, 3, 3], 2);
         let c2 = g.add1(conv2d(Activation::Relu, false), &[x, w2], "c3x3");
         g.outputs = vec![PortRef::of(c1), PortRef::of(c2)];
-        let products = EnlargeConvKernel.apply_all(&g);
+        let products = EnlargeConvKernel.apply_all(&g).unwrap();
         assert_eq!(products.len(), 1);
         let mut ng = products.into_iter().next().unwrap();
         ng.compact();
@@ -707,7 +821,7 @@ mod tests {
         );
         let r = g.add1(OpKind::Relu, &[cat], "r");
         g.outputs = vec![PortRef::of(r)];
-        let products = SplitConcatElim.apply_all(&g);
+        let products = SplitConcatElim.apply_all(&g).unwrap();
         assert_eq!(products.len(), 1);
         let mut ng = products.into_iter().next().unwrap();
         ng.compact();
@@ -727,7 +841,7 @@ mod tests {
             "cat",
         );
         g.outputs = vec![PortRef::of(cat)];
-        assert!(SplitConcatElim.apply_all(&g).is_empty());
+        assert!(SplitConcatElim.apply_all(&g).unwrap().is_empty());
     }
 
     #[test]
@@ -740,7 +854,7 @@ mod tests {
         let r0 = g.add(OpKind::Relu, vec![PortRef { node: s, port: 0 }], "r0");
         let r1 = g.add(OpKind::Relu, vec![PortRef { node: s, port: 1 }], "r1");
         g.outputs = vec![PortRef::of(r0), PortRef::of(r1)];
-        let products = ConcatSplitElim.apply_all(&g);
+        let products = ConcatSplitElim.apply_all(&g).unwrap();
         assert_eq!(products.len(), 1);
         let mut ng = products.into_iter().next().unwrap();
         ng.compact();
@@ -758,7 +872,7 @@ mod tests {
         let add = g.add1(OpKind::Add, &[c, x], "add");
         let r = g.add1(OpKind::Relu, &[add], "r");
         g.outputs = vec![PortRef::of(r)];
-        let products = FuseConvResidual.apply_all(&g);
+        let products = FuseConvResidual.apply_all(&g).unwrap();
         assert_eq!(products.len(), 1);
         let mut ng = products.into_iter().next().unwrap();
         ng.compact();
@@ -817,7 +931,7 @@ mod tests {
         g.validate().unwrap();
 
         let rs = RuleSet::standard();
-        let neighbors = rs.neighbors(&g);
+        let neighbors = rs.neighbors(&g).unwrap();
         // at least the enlarge rule fires (1x1 expand with a 3x3 sibling)
         assert!(
             neighbors.iter().any(|(_, name)| *name == "enlarge_conv_kernel"),

@@ -1,0 +1,306 @@
+//! Property suite for the delta substitution engine (ISSUE 4): for every
+//! rule and random model, the incremental artifacts the search consumes —
+//! `DeltaView` shapes, `delta_hash`, carry-over cost tables, carried
+//! default assignments — must equal a full rebuild of the materialized
+//! product, bit for bit, at every DVFS frequency state. A separate test
+//! asserts (via the oracle's build counters) that the search actually
+//! takes the delta path instead of rebuilding full `GraphCostTable`s per
+//! candidate.
+
+use eadgo::algo::Assignment;
+use eadgo::cost::{CostFunction, CostOracle, DeltaBase};
+use eadgo::energysim::FreqId;
+use eadgo::graph::canonical::{delta_hash, graph_hash, node_hashes};
+use eadgo::graph::{Activation, DeltaView, Graph, NodeId, OpKind, PortRef};
+use eadgo::search::{inner_search, optimize, OptimizerContext, SearchConfig};
+use eadgo::subst::{MatchContext, RuleSet};
+use eadgo::util::prop::check;
+use eadgo::util::rng::Rng;
+
+/// Generate a random small valid CNN-ish graph: a chain of conv/pool/relu
+/// with an occasional parallel branch + concat (and a BN/add tail often
+/// enough to reach the fold/residual rules).
+fn random_graph(rng: &mut Rng) -> Graph {
+    let mut g = Graph::new();
+    let res = 8 + 2 * rng.below(4); // 8..14
+    let mut c = 1 + rng.below(3); // 1..3
+    let x = g.add1(OpKind::Input { shape: vec![1, c, res, res] }, &[], "x");
+    let mut cur = x;
+    let mut cur_res = res;
+    let depth = 1 + rng.below(3);
+    let mut seed = 100 + rng.below(1000) as u64;
+    for d in 0..depth {
+        match rng.below(5) {
+            0 | 1 => {
+                // conv (+ optional relu or batchnorm)
+                let k = 1 + rng.below(4);
+                let ksz = *rng.choose(&[1usize, 3]);
+                let pad = ksz / 2;
+                seed += 1;
+                let w = g.add1(OpKind::weight(vec![k, c, ksz, ksz], seed), &[], "w");
+                cur = g.add1(
+                    OpKind::Conv2d {
+                        stride: (1, 1),
+                        pad: (pad, pad),
+                        act: Activation::None,
+                        has_bias: false,
+                        has_residual: false,
+                    },
+                    &[cur, w],
+                    &format!("conv{d}"),
+                );
+                c = k;
+                match rng.below(3) {
+                    0 => cur = g.add1(OpKind::Relu, &[cur], "relu"),
+                    1 => {
+                        use eadgo::graph::op::eps_bits;
+                        use eadgo::graph::op::WeightKind;
+                        seed += 4;
+                        let gamma =
+                            g.add1(OpKind::weight_kind(vec![c], seed, WeightKind::Gamma), &[], "g");
+                        let beta = g
+                            .add1(OpKind::weight_kind(vec![c], seed + 1, WeightKind::Beta), &[], "b");
+                        let mean = g
+                            .add1(OpKind::weight_kind(vec![c], seed + 2, WeightKind::Mean), &[], "m");
+                        let var =
+                            g.add1(OpKind::weight_kind(vec![c], seed + 3, WeightKind::Var), &[], "v");
+                        cur = g.add1(
+                            OpKind::BatchNorm { eps: eps_bits(1e-5) },
+                            &[cur, gamma, beta, mean, var],
+                            "bn",
+                        );
+                    }
+                    _ => {}
+                }
+            }
+            2 => {
+                // parallel 2-branch + concat
+                let k1 = 1 + rng.below(3);
+                let k2 = 1 + rng.below(3);
+                seed += 2;
+                let w1 = g.add1(OpKind::weight(vec![k1, c, 3, 3], seed - 1), &[], "w1");
+                let w2 = g.add1(OpKind::weight(vec![k2, c, 3, 3], seed), &[], "w2");
+                let conv_attrs = OpKind::Conv2d {
+                    stride: (1, 1),
+                    pad: (1, 1),
+                    act: Activation::Relu,
+                    has_bias: false,
+                    has_residual: false,
+                };
+                let c1 = g.add1(conv_attrs.clone(), &[cur, w1], "b1");
+                let c2 = g.add1(conv_attrs, &[cur, w2], "b2");
+                cur = g.add1(OpKind::Concat { axis: 1 }, &[c1, c2], "cat");
+                c = k1 + k2;
+            }
+            3 => {
+                // residual: conv with same channel count + add (+ relu)
+                seed += 1;
+                let w = g.add1(OpKind::weight(vec![c, c, 3, 3], seed), &[], "wres");
+                let cv = g.add1(
+                    OpKind::Conv2d {
+                        stride: (1, 1),
+                        pad: (1, 1),
+                        act: Activation::None,
+                        has_bias: false,
+                        has_residual: false,
+                    },
+                    &[cur, w],
+                    &format!("resconv{d}"),
+                );
+                let add = g.add1(OpKind::Add, &[cv, cur], "add");
+                cur = if rng.bool() { g.add1(OpKind::Relu, &[add], "addrelu") } else { add };
+            }
+            _ => {
+                if cur_res >= 4 {
+                    cur = g.add1(
+                        OpKind::MaxPool { k: (2, 2), stride: (2, 2), pad: (0, 0) },
+                        &[cur],
+                        "pool",
+                    );
+                    cur_res /= 2;
+                }
+            }
+        }
+    }
+    g.outputs = vec![PortRef::of(cur)];
+    g.validate().expect("generator produced invalid graph");
+    g
+}
+
+fn bits(c: &eadgo::cost::GraphCost) -> (u64, u64) {
+    (c.time_ms.to_bits(), c.energy_j.to_bits())
+}
+
+#[test]
+fn prop_delta_artifacts_match_full_rebuild() {
+    check("delta_matches_full", 24, |rng| {
+        let g = random_graph(rng);
+        let shapes = g.infer_shapes().map_err(|e| e.to_string())?;
+        let hashes = node_hashes(&g).ok_or("base graph cyclic?")?;
+        let consumers = g.consumers();
+        let cx = MatchContext::with_shapes(&g, &shapes);
+        let oracle = CostOracle::offline_default();
+        let mut freqs = vec![FreqId::NOMINAL];
+        freqs.extend_from_slice(oracle.dvfs_freqs());
+        let (base_table, _) = oracle.table_for_freqs(&g, &shapes, &freqs);
+        let base_a = Assignment::default_for(&g, oracle.reg());
+
+        for site in RuleSet::standard().sites(&g, &cx) {
+            let rule = site.rule_name();
+            let delta = site.delta(&g);
+            let view = DeltaView::new(&g, &shapes, delta, Some(&consumers))
+                .map_err(|e| format!("{rule}: view failed: {e}"))?;
+
+            // --- node-set / edge equality vs the materialized product ---
+            let mut full = g.apply_delta(view.delta());
+            full.compact();
+            full.validate().map_err(|e| format!("{rule}: invalid product: {e}"))?;
+            if full.len() != view.live_count() {
+                return Err(format!(
+                    "{rule}: live count {} vs materialized {}",
+                    view.live_count(),
+                    full.len()
+                ));
+            }
+            for (j, &i) in view.compact_order().iter().enumerate() {
+                let node = full.node(NodeId(j));
+                if &node.op != view.op(i) {
+                    return Err(format!("{rule}: op mismatch at node {j}"));
+                }
+                let mapped: Vec<PortRef> = view
+                    .inputs(i)
+                    .iter()
+                    .map(|p| PortRef {
+                        node: view.compact_id(p.node.0).expect("live input"),
+                        port: p.port,
+                    })
+                    .collect();
+                if node.inputs != mapped {
+                    return Err(format!("{rule}: edge mismatch at node {j}"));
+                }
+            }
+
+            // --- canonical hash: incremental == full ---
+            if delta_hash(&view, &hashes) != graph_hash(&full) {
+                return Err(format!("{rule}: delta_hash diverged from graph_hash"));
+            }
+
+            // --- shapes: incremental == full inference ---
+            let fshapes = full.infer_shapes().map_err(|e| e.to_string())?;
+            for (j, &i) in view.compact_order().iter().enumerate() {
+                if fshapes[j][..] != *view.out_shapes(i) {
+                    return Err(format!("{rule}: shape mismatch at node {j}"));
+                }
+            }
+
+            // --- cost: carry-over table == fresh full table, every state ---
+            let base = DeltaBase {
+                graph: &g,
+                shapes: &shapes,
+                table: &base_table,
+                assignment: &base_a,
+            };
+            let (dt, da, _) = oracle.delta_table_for_freqs(&base, &view, &freqs);
+            let (ft, _) = oracle.table_for_freqs(&full, &fshapes, &freqs);
+            let fa = Assignment::default_for_with(&full, &fshapes, oracle.reg());
+            if da != fa {
+                return Err(format!("{rule}: carried default assignment diverged"));
+            }
+            let d_ids: Vec<NodeId> = dt.costed_ids().collect();
+            let f_ids: Vec<NodeId> = ft.costed_ids().collect();
+            if d_ids != f_ids {
+                return Err(format!("{rule}: costed node sets diverged"));
+            }
+            for id in f_ids {
+                let ds = dt.freq_options(id);
+                let fs = ft.freq_options(id);
+                if ds.len() != fs.len() {
+                    return Err(format!("{rule}: slab count mismatch at node {}", id.0));
+                }
+                for ((df, dopts), (ff, fopts)) in ds.iter().zip(fs.iter()) {
+                    if df != ff || dopts.len() != fopts.len() {
+                        return Err(format!("{rule}: slab mismatch at node {}", id.0));
+                    }
+                    for ((dal, dc), (fal, fc)) in dopts.iter().zip(fopts.iter()) {
+                        if dal != fal
+                            || dc.time_ms.to_bits() != fc.time_ms.to_bits()
+                            || dc.power_w.to_bits() != fc.power_w.to_bits()
+                        {
+                            return Err(format!("{rule}: row bits differ at node {}", id.0));
+                        }
+                    }
+                }
+            }
+            // delta_cost == full re-costing at every DVFS frequency state
+            if bits(&dt.eval(&da)) != bits(&ft.eval(&fa)) {
+                return Err(format!("{rule}: default-assignment cost bits differ"));
+            }
+            for &f in &freqs {
+                let mut u = fa.clone();
+                u.set_uniform_freq(f);
+                if bits(&dt.eval(&u)) != bits(&ft.eval(&u)) {
+                    return Err(format!("{rule}: cost bits differ at {}", f.describe()));
+                }
+            }
+            // ...and the inner search walks identical numbers.
+            let di = inner_search(&dt, &CostFunction::Energy, 1, da.clone());
+            let fi = inner_search(&ft, &CostFunction::Energy, 1, fa.clone());
+            if di.assignment != fi.assignment || bits(&di.cost) != bits(&fi.cost) {
+                return Err(format!("{rule}: inner search diverged on delta table"));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn model_cfg() -> eadgo::models::ModelConfig {
+    eadgo::models::ModelConfig { batch: 1, resolution: 64, width_div: 2, classes: 10 }
+}
+
+#[test]
+fn search_candidates_use_delta_tables_not_full_rebuilds() {
+    // The acceptance criterion's instrumentation assert: per-wave
+    // candidate evaluation must go through delta (carry-over) tables —
+    // full table builds happen only for the baseline and once per
+    // expanded wave entry, never per candidate.
+    let g = eadgo::models::squeezenet::build(model_cfg());
+    let ctx = OptimizerContext::offline_default();
+    let cfg = SearchConfig { max_dequeues: 12, ..Default::default() };
+    let res = optimize(&g, &ctx, &CostFunction::Energy, &cfg).unwrap();
+    let st = ctx.oracle.table_build_stats();
+    assert!(res.stats.evaluated > 0, "search evaluated no candidates");
+    assert_eq!(
+        st.delta_tables as usize, res.stats.evaluated,
+        "every evaluated candidate must use exactly one delta table build"
+    );
+    assert!(
+        st.full_tables as usize <= 1 + res.stats.expanded,
+        "full rebuilds ({}) must be bounded by baseline + expanded entries ({})",
+        st.full_tables,
+        1 + res.stats.expanded
+    );
+    assert!(
+        st.carried_rows > st.resolved_rows,
+        "carry-over must dominate re-resolves ({} vs {})",
+        st.carried_rows,
+        st.resolved_rows
+    );
+    // Per-rule statistics are populated and consistent.
+    let sites: usize = res.stats.rule_stats.iter().map(|r| r.sites).sum();
+    assert_eq!(sites, res.stats.generated);
+    assert!(res.stats.rule_stats.iter().all(|r| r.enqueued <= r.sites));
+}
+
+#[test]
+fn legacy_engine_counts_zero_delta_builds() {
+    let g = eadgo::models::squeezenet::build(model_cfg());
+    let ctx = OptimizerContext::offline_default();
+    let cfg = SearchConfig { max_dequeues: 12, delta_eval: false, ..Default::default() };
+    let res = optimize(&g, &ctx, &CostFunction::Energy, &cfg).unwrap();
+    let st = ctx.oracle.table_build_stats();
+    assert_eq!(st.delta_tables, 0);
+    assert!(
+        st.full_tables as usize >= res.stats.evaluated,
+        "legacy path rebuilds a full table per candidate"
+    );
+}

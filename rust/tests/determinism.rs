@@ -14,6 +14,13 @@
 //! CI runs this suite as a matrix over `EADGO_TEST_THREADS` (1/4/8) to
 //! catch merge-order regressions that one fixed worker count can miss;
 //! unset, the parallel runs use 8 workers.
+//!
+//! ISSUE 4 extends the contract to the delta substitution engine:
+//! candidate evaluation through `RewriteSite` deltas (`delta_eval: true`,
+//! the default) must reproduce the legacy full-rebuild path
+//! (`delta_eval: false`) bit for bit — for `optimize` across the zoo and
+//! DVFS modes, and for every point of an `optimize --frontier` Pareto
+//! set.
 
 use eadgo::cost::CostFunction;
 use eadgo::graph::canonical::graph_hash;
@@ -49,9 +56,23 @@ fn run(
     threads: usize,
     dvfs: DvfsMode,
 ) -> (u64, String, u64, u64) {
+    run_with_engine(model, objective, threads, dvfs, true)
+}
+
+/// As [`run`], selecting the candidate-evaluation engine: `delta_eval =
+/// true` is the incremental delta path, `false` the legacy full-rebuild
+/// path kept as the reference implementation.
+fn run_with_engine(
+    model: &str,
+    objective: &CostFunction,
+    threads: usize,
+    dvfs: DvfsMode,
+    delta_eval: bool,
+) -> (u64, String, u64, u64) {
     let g = models::by_name(model, model_cfg()).unwrap_or_else(|| panic!("no model {model}"));
     let ctx = OptimizerContext::offline_default();
-    let r = optimize(&g, &ctx, objective, &search_cfg(threads, dvfs)).unwrap();
+    let cfg = SearchConfig { delta_eval, ..search_cfg(threads, dvfs) };
+    let r = optimize(&g, &ctx, objective, &cfg).unwrap();
     let plan_json = plan_to_json(&r.graph, &r.assignment).to_string_compact();
     (graph_hash(&r.graph), plan_json, r.cost.time_ms.to_bits(), r.cost.energy_j.to_bits())
 }
@@ -123,6 +144,63 @@ fn dvfs_linear_objective_deterministic() {
     let seq = run("inception", &obj, 1, DvfsMode::PerGraph);
     let par = run("inception", &obj, par_threads(), DvfsMode::PerGraph);
     assert_eq!(seq, par);
+}
+
+#[test]
+fn delta_engine_reproduces_full_rebuild_plans_bit_for_bit() {
+    // The substitution-engine refactor contract: candidate evaluation
+    // through RewriteSite deltas (incremental hash, carry-over cost
+    // tables, lazy materialization) must choose the exact plan the legacy
+    // full-rebuild path chooses — same graph bytes, same assignment, same
+    // cost bits — on every zoo model.
+    for model in models::zoo_names() {
+        let delta = run_with_engine(model, &CostFunction::Energy, 1, DvfsMode::Off, true);
+        let full = run_with_engine(model, &CostFunction::Energy, 1, DvfsMode::Off, false);
+        assert_eq!(delta, full, "{model}: delta engine diverged from full rebuild");
+    }
+    // And across the DVFS modes (per-state restriction + joint tables).
+    for dvfs in [DvfsMode::PerGraph, DvfsMode::PerNode] {
+        for model in ["squeezenet", "resnet"] {
+            let delta = run_with_engine(model, &CostFunction::Energy, 1, dvfs, true);
+            let full = run_with_engine(model, &CostFunction::Energy, 1, dvfs, false);
+            assert_eq!(
+                delta,
+                full,
+                "{model}/dvfs={}: delta engine diverged from full rebuild",
+                dvfs.describe()
+            );
+        }
+    }
+    // Mixed objective (normalized linear) exercises the α-band with
+    // non-trivial tie structure.
+    let delta = run_with_engine("inception", &CostFunction::linear(0.5), 1, DvfsMode::Off, true);
+    let full = run_with_engine("inception", &CostFunction::linear(0.5), 1, DvfsMode::Off, false);
+    assert_eq!(delta, full);
+}
+
+#[test]
+fn frontier_plans_identical_across_engines() {
+    // `optimize --frontier` must also be engine-invariant: every point of
+    // the Pareto set byte-identical between delta and full evaluation.
+    use eadgo::search::optimize_frontier;
+    let run = |delta_eval: bool| -> Vec<(String, u64, u64)> {
+        let g = models::squeezenet::build(model_cfg());
+        let ctx = OptimizerContext::offline_default();
+        let cfg = SearchConfig { max_dequeues: 16, delta_eval, ..Default::default() };
+        let r = optimize_frontier(&g, &ctx, &cfg, 3).unwrap();
+        r.frontier
+            .points()
+            .iter()
+            .map(|p| {
+                (
+                    plan_to_json(&p.graph, &p.assignment).to_string_compact(),
+                    p.cost.time_ms.to_bits(),
+                    p.cost.energy_j.to_bits(),
+                )
+            })
+            .collect()
+    };
+    assert_eq!(run(true), run(false), "frontier points diverged between engines");
 }
 
 #[test]

@@ -41,7 +41,7 @@ fn substitution_neighbors_preserve_semantics_quickstart() {
     let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
     let base = run_model(&g, &x);
     let rs = RuleSet::standard();
-    let neighbors = rs.neighbors(&g);
+    let neighbors = rs.neighbors(&g).unwrap();
     assert!(neighbors.len() >= 4, "expected several rewrites, got {}", neighbors.len());
     for (ng, rule) in neighbors {
         let out = run_model(&ng, &x);
@@ -57,7 +57,7 @@ fn substitution_neighbors_preserve_semantics_squeezenet() {
     let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
     let base = run_model(&g, &x);
     let rs = RuleSet::standard();
-    for (ng, rule) in rs.neighbors(&g) {
+    for (ng, rule) in rs.neighbors(&g).unwrap() {
         let out = run_model(&ng, &x);
         assert_close(base.data(), out.data(), 1e-3, 1e-3)
             .unwrap_or_else(|e| panic!("rule {rule} broke squeezenet: {e}"));
@@ -72,14 +72,14 @@ fn two_step_substitution_chains_preserve_semantics() {
     let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
     let base = run_model(&g, &x);
     let rs = RuleSet::standard();
-    let level1 = rs.neighbors(&g);
+    let level1 = rs.neighbors(&g).unwrap();
     assert!(!level1.is_empty());
     // sample a few level-1 products, expand each once more
     for (g1, rule1) in level1.iter().take(3) {
         let out1 = run_model(g1, &x);
         assert_close(base.data(), out1.data(), 1e-3, 1e-3)
             .unwrap_or_else(|e| panic!("rule {rule1}: {e}"));
-        for (g2, rule2) in rs.neighbors(g1).into_iter().take(2) {
+        for (g2, rule2) in rs.neighbors(g1).unwrap().into_iter().take(2) {
             let out2 = run_model(&g2, &x);
             assert_close(base.data(), out2.data(), 1e-3, 1e-3)
                 .unwrap_or_else(|e| panic!("chain {rule1} -> {rule2}: {e}"));

@@ -105,7 +105,7 @@ fn prop_substitutions_preserve_semantics() {
             .map_err(|e| e.to_string())?
             .outputs
             .remove(0);
-        for (ng, rule) in rules.neighbors(&g) {
+        for (ng, rule) in rules.neighbors(&g).map_err(|e| e.to_string())? {
             let na = Assignment::default_for(&ng, &reg);
             let out = eng
                 .run(&ng, &na, std::slice::from_ref(&x))
