@@ -67,11 +67,83 @@ fn main() {
         black_box(ctx.table_for(&squeezenet).unwrap().0)
     });
     suite.run("cost_eval_full/squeezenet", || black_box(table.eval(&base)));
+    // Indexed-slab swap lookups (the former linear `find` hot path).
+    let swap_cost = table.eval(&base);
+    let swap_ids: Vec<_> = table.costed_ids().filter(|id| table.option_count(*id) > 1).collect();
+    suite.run("cost_eval_swap_sweep/squeezenet", || {
+        let mut acc = 0.0f64;
+        for &id in &swap_ids {
+            for (f, slab) in table.freq_options(id) {
+                for &(algo, _) in slab.iter() {
+                    acc += table.eval_swap(swap_cost, &base, id, algo, *f).unwrap().energy_j;
+                }
+            }
+        }
+        black_box(acc)
+    });
     suite.run("inner_search_d1_energy/squeezenet", || {
-        black_box(inner_search(&table, &CostFunction::Energy, 1, base.clone()).evals)
+        black_box(inner_search(&table, &CostFunction::Energy, 1, base.clone()).unwrap().evals)
     });
     suite.run("inner_search_d2_power/squeezenet", || {
-        black_box(inner_search(&table, &CostFunction::Power, 2, base.clone()).evals)
+        black_box(inner_search(&table, &CostFunction::Power, 2, base.clone()).unwrap().evals)
+    });
+
+    // Warm vs cold incremental inner search on a real candidate delta:
+    // the cold run re-derives every node; the warm run re-optimizes only
+    // the delta's dirty cone from the parent's converged plan.
+    let oracle: &eadgo::cost::CostOracle = &ctx.oracle;
+    let conv = inner_search(&table, &CostFunction::Energy, 1, base.clone()).unwrap();
+    let cx = eadgo::subst::MatchContext::with_shapes_and_consumers(
+        &squeezenet,
+        &sq_shapes,
+        &sq_consumers,
+    );
+    let site = rules
+        .sites(&squeezenet, &cx)
+        .into_iter()
+        .next()
+        .expect("squeezenet exposes rewrite sites");
+    let view = eadgo::graph::DeltaView::new(
+        &squeezenet,
+        &sq_shapes,
+        site.delta(&squeezenet),
+        Some(&sq_consumers),
+    )
+    .unwrap();
+    let dbase = eadgo::cost::DeltaBase {
+        graph: &squeezenet,
+        shapes: &sq_shapes,
+        table: &table,
+        assignment: &base,
+        converged: Some(&conv.assignment),
+    };
+    let cand = oracle.delta_table_for_freqs(&dbase, &view, &[eadgo::energysim::FreqId::NOMINAL]);
+    let warm = cand.warm.clone().expect("converged supplied");
+    suite.run("inner_search_cold/candidate", || {
+        black_box(
+            eadgo::search::inner_search_incremental(
+                &cand.table,
+                &CostFunction::Energy,
+                cand.assignment.clone(),
+                None,
+                None,
+            )
+            .unwrap()
+            .swept,
+        )
+    });
+    suite.run("inner_search_warm_dirty/candidate", || {
+        black_box(
+            eadgo::search::inner_search_incremental(
+                &cand.table,
+                &CostFunction::Energy,
+                warm.clone(),
+                Some(&cand.dirty),
+                Some(oracle),
+            )
+            .unwrap()
+            .swept,
+        )
     });
 
     // Engine execution (reference backend, small tensors).

@@ -46,6 +46,27 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// Number of distinct algorithm variants — the bound of
+    /// [`Algorithm::ordinal`], used to size dense per-algorithm lookup
+    /// tables (the cost table's indexed slabs).
+    pub const COUNT: usize = 9;
+
+    /// Dense ordinal of the variant in declaration order (`0..COUNT`) —
+    /// the key of the cost table's O(1) algorithm→option index.
+    pub fn ordinal(&self) -> usize {
+        match self {
+            Algorithm::ConvIm2col => 0,
+            Algorithm::ConvDirect => 1,
+            Algorithm::ConvWinograd => 2,
+            Algorithm::Conv1x1Gemm => 3,
+            Algorithm::DwDirect => 4,
+            Algorithm::DwWinograd => 5,
+            Algorithm::GemmBlocked => 6,
+            Algorithm::GemmNaive => 7,
+            Algorithm::Passthrough => 8,
+        }
+    }
+
     /// Stable serialization name (plan files, profile DB keys).
     pub fn name(&self) -> &'static str {
         match self {
@@ -409,6 +430,29 @@ mod tests {
         let hist = a1.freq_histogram();
         assert_eq!(hist.last(), Some(&(FreqId::NOMINAL, a1.assigned_ids().count() - 1)));
         assert!(hist.contains(&(FreqId(900), 1)));
+    }
+
+    #[test]
+    fn ordinals_are_dense_and_unique() {
+        let all = [
+            Algorithm::ConvIm2col,
+            Algorithm::ConvDirect,
+            Algorithm::ConvWinograd,
+            Algorithm::Conv1x1Gemm,
+            Algorithm::DwDirect,
+            Algorithm::DwWinograd,
+            Algorithm::GemmBlocked,
+            Algorithm::GemmNaive,
+            Algorithm::Passthrough,
+        ];
+        assert_eq!(all.len(), Algorithm::COUNT);
+        let mut seen = [false; Algorithm::COUNT];
+        for a in all {
+            let o = a.ordinal();
+            assert!(o < Algorithm::COUNT);
+            assert!(!seen[o], "duplicate ordinal {o}");
+            seen[o] = true;
+        }
     }
 
     #[test]

@@ -26,6 +26,10 @@ pub struct RunConfig {
     pub threads: usize,
     /// DVFS frequency search: off, per-graph, or per-node.
     pub dvfs: DvfsMode,
+    /// Incremental inner search (warm starts + argmin memo); `false`
+    /// forces the cold full re-derivation reference. Plans are
+    /// bit-identical either way for additive objectives.
+    pub incremental_inner: bool,
     /// Seed for providers and synthetic inputs.
     pub seed: u64,
     /// Model scale configuration.
@@ -48,6 +52,7 @@ impl Default for RunConfig {
             max_dequeues: 400,
             threads: 1,
             dvfs: DvfsMode::Off,
+            incremental_inner: true,
             seed: 7,
             model_cfg: ModelConfig::default(),
             db_path: PathBuf::from("profiles.json"),
@@ -72,6 +77,7 @@ impl RunConfig {
             max_dequeues: self.max_dequeues,
             threads: self.threads,
             dvfs: self.dvfs,
+            incremental_inner: self.incremental_inner,
             ..Default::default()
         }
     }
@@ -100,6 +106,9 @@ impl RunConfig {
         }
         if let Some(s) = v.get("dvfs").and_then(Json::as_str) {
             cfg.dvfs = DvfsMode::parse(s)?;
+        }
+        if let Some(b) = v.get("incremental_inner").and_then(Json::as_bool) {
+            cfg.incremental_inner = b;
         }
         if let Some(x) = v.get("seed").and_then(Json::as_f64) {
             cfg.seed = x as u64;
@@ -143,6 +152,13 @@ impl RunConfig {
         self.threads = args.get_usize("threads", self.threads)?;
         if let Some(s) = args.get("dvfs") {
             self.dvfs = DvfsMode::parse(s)?;
+        }
+        if let Some(s) = args.get("incremental-inner") {
+            self.incremental_inner = match s {
+                "on" | "true" | "1" => true,
+                "off" | "false" | "0" => false,
+                other => anyhow::bail!("--incremental-inner expects on|off, got `{other}`"),
+            };
         }
         self.seed = args.get_f64("seed", self.seed as f64)? as u64;
         if let Some(d) = args.get("inner-distance") {

@@ -17,7 +17,9 @@ pub mod db;
 pub mod oracle;
 
 pub use db::CostDb;
-pub use oracle::{CostOracle, DeltaBase, SigId, SigInterner, TableBuildStats};
+pub use oracle::{
+    ArgminStats, CandidateTable, CostOracle, DeltaBase, SigId, SigInterner, TableBuildStats,
+};
 
 use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};
 use crate::energysim::FreqId;
@@ -179,6 +181,45 @@ impl CostFunction {
         }
     }
 
+    /// The additive objective's contribution of a single node priced at
+    /// `c` — defined exactly for the separable objectives
+    /// ([`CostFunction::is_additive`]): comparing two options of one node
+    /// by `node_value` is equivalent (in exact arithmetic) to comparing
+    /// the whole-graph objective with that node swapped, which is what
+    /// makes the per-row argmin context-free and memoizable.
+    ///
+    /// # Panics
+    /// On non-additive objectives (`Power`, `Product`, `PowerEnergy`) —
+    /// their per-node contribution is not defined.
+    pub fn node_value(&self, c: &NodeCost) -> f64 {
+        match self {
+            CostFunction::Time => c.time_ms,
+            CostFunction::Energy => c.energy_j(),
+            CostFunction::Linear { w, t_norm, e_norm } => {
+                w * c.energy_j() / e_norm + (1.0 - w) * c.time_ms / t_norm
+            }
+            other => panic!("node_value on non-additive objective {}", other.describe()),
+        }
+    }
+
+    /// A hashable identity of an additive objective — the cost-function
+    /// half of the per-row argmin memo key ([`CostOracle::argmin_for`]).
+    /// `None` for non-additive objectives (their per-node optimum is not
+    /// context-free, so it cannot be memoized per row).
+    pub fn additive_key(&self) -> Option<AdditiveKey> {
+        match self {
+            CostFunction::Time => Some(AdditiveKey { kind: 0, a: 0, b: 0, c: 0 }),
+            CostFunction::Energy => Some(AdditiveKey { kind: 1, a: 0, b: 0, c: 0 }),
+            CostFunction::Linear { w, t_norm, e_norm } => Some(AdditiveKey {
+                kind: 2,
+                a: w.to_bits(),
+                b: t_norm.to_bits(),
+                c: e_norm.to_bits(),
+            }),
+            _ => None,
+        }
+    }
+
     /// Human-readable objective label (CLI/report output).
     pub fn describe(&self) -> String {
         match self {
@@ -194,9 +235,44 @@ impl CostFunction {
     }
 }
 
+/// A hashable identity of an additive [`CostFunction`] (discriminant plus
+/// the exact bit patterns of its parameters). Built by
+/// [`CostFunction::additive_key`]; two objectives with equal keys evaluate
+/// every node cost to identical bits, so argmin memo entries keyed by it
+/// are exact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AdditiveKey {
+    kind: u8,
+    a: u64,
+    b: u64,
+    c: u64,
+}
+
 /// One per-node frequency slab: the (algorithm, cost) options available at
 /// a single DVFS state, `Arc`-shared with the oracle's resolve cache.
 pub type FreqSlab = (FreqId, Arc<Vec<(Algorithm, NodeCost)>>);
+
+/// Sentinel for "no entry" in the dense slab/option indices.
+const NO_SLOT: u8 = u8::MAX;
+
+/// Dense per-node lookup into the frequency slabs: O(1) option resolution
+/// for the inner search's `eval`/`eval_swap` hot path, replacing the
+/// former linear `find` over `options_at`.
+#[derive(Debug, Clone, Default)]
+struct NodeSlabIndex {
+    /// `algo_slot[Algorithm::ordinal]` = option position inside each slab
+    /// (`NO_SLOT` = algorithm not applicable). Valid only when `uniform`.
+    algo_slot: [u8; Algorithm::COUNT],
+    /// `slab_of[dense frequency id]` = slab position (`NO_SLOT` = state
+    /// unresolved for this node). Dense ids index the table's
+    /// `freq_universe`.
+    slab_of: Vec<u8>,
+    /// Whether every slab of the node lists the same algorithms in the
+    /// same order (always true for oracle-built tables — `resolve` walks
+    /// `AlgorithmRegistry::applicable` deterministically per signature).
+    /// When false, lookups fall back to a linear scan of the slab.
+    uniform: bool,
+}
 
 /// Per-graph cost lookup table: for every runtime node, the cost of each
 /// applicable (algorithm, frequency) pair, resolved once from the
@@ -214,13 +290,59 @@ pub type FreqSlab = (FreqId, Arc<Vec<(Algorithm, NodeCost)>>);
 pub struct GraphCostTable {
     /// entries[node] = frequency slabs; empty for zero-cost nodes.
     entries: Vec<Vec<FreqSlab>>,
+    /// Distinct frequencies across the table, ascending (`NOMINAL` = 0
+    /// sorts first) — the key space of each node's `slab_of` index.
+    freq_universe: Vec<FreqId>,
+    /// Dense per-node (algorithm → option, frequency → slab) indices,
+    /// built once at construction.
+    index: Vec<NodeSlabIndex>,
+}
+
+/// Build the dense per-node indices for a slab table (one pass).
+fn build_slab_index(entries: &[Vec<FreqSlab>]) -> (Vec<FreqId>, Vec<NodeSlabIndex>) {
+    let mut universe: Vec<FreqId> =
+        entries.iter().flat_map(|slabs| slabs.iter().map(|(f, _)| *f)).collect();
+    universe.sort_unstable();
+    universe.dedup();
+    let index = entries
+        .iter()
+        .map(|slabs| {
+            let mut ni = NodeSlabIndex {
+                algo_slot: [NO_SLOT; Algorithm::COUNT],
+                slab_of: vec![NO_SLOT; universe.len()],
+                uniform: true,
+            };
+            for (si, (f, _)) in slabs.iter().enumerate() {
+                let fi = universe.binary_search(f).expect("slab freq in universe");
+                // First slab at a frequency wins, matching the linear
+                // `find` the index replaces.
+                if si < NO_SLOT as usize && ni.slab_of[fi] == NO_SLOT {
+                    ni.slab_of[fi] = si as u8;
+                }
+            }
+            if let Some((_, first)) = slabs.first() {
+                ni.uniform = first.len() < NO_SLOT as usize
+                    && slabs[1..].iter().all(|(_, slab)| {
+                        slab.len() == first.len()
+                            && slab.iter().zip(first.iter()).all(|((a, _), (b, _))| a == b)
+                    });
+                if ni.uniform {
+                    for (oi, (algo, _)) in first.iter().enumerate() {
+                        ni.algo_slot[algo.ordinal()] = oi as u8;
+                    }
+                }
+            }
+            ni
+        })
+        .collect();
+    (universe, index)
 }
 
 impl GraphCostTable {
     /// Assemble from pre-resolved nominal-clock per-node entries.
     pub fn from_entries(entries: Vec<Vec<(Algorithm, NodeCost)>>) -> GraphCostTable {
-        GraphCostTable {
-            entries: entries
+        GraphCostTable::from_freq_slabs(
+            entries
                 .into_iter()
                 .map(|v| {
                     if v.is_empty() {
@@ -230,24 +352,27 @@ impl GraphCostTable {
                     }
                 })
                 .collect(),
-        }
+        )
     }
 
     /// Assemble from already-shared nominal per-node entries (the cost
     /// oracle's zero-copy path: nodes reference the resolve cache's own
     /// vectors).
     pub fn from_shared(entries: Vec<Arc<Vec<(Algorithm, NodeCost)>>>) -> GraphCostTable {
-        GraphCostTable {
-            entries: entries
+        GraphCostTable::from_freq_slabs(
+            entries
                 .into_iter()
                 .map(|v| if v.is_empty() { Vec::new() } else { vec![(FreqId::NOMINAL, v)] })
                 .collect(),
-        }
+        )
     }
 
-    /// Assemble from per-node frequency slabs (the DVFS-aware oracle path).
+    /// Assemble from per-node frequency slabs (the DVFS-aware oracle
+    /// path). Builds the dense (algorithm → option, frequency → slab)
+    /// indices the hot-path lookups use.
     pub fn from_freq_slabs(entries: Vec<Vec<FreqSlab>>) -> GraphCostTable {
-        GraphCostTable { entries }
+        let (freq_universe, index) = build_slab_index(&entries);
+        GraphCostTable { entries, freq_universe, index }
     }
 
     /// Build from a profiled database. Errors if any (signature, algorithm)
@@ -287,6 +412,30 @@ impl GraphCostTable {
         Ok(GraphCostTable::from_entries(entries))
     }
 
+    /// O(1) cost lookup of one node's (algorithm, frequency) option
+    /// through the dense slab index. `None` when the state is unresolved
+    /// or the algorithm not applicable.
+    pub fn option_cost(&self, id: NodeId, algo: Algorithm, freq: FreqId) -> Option<NodeCost> {
+        let ni = &self.index[id.0];
+        let fi = self.freq_universe.binary_search(&freq).ok()?;
+        let si = *ni.slab_of.get(fi)?;
+        if si == NO_SLOT {
+            return None;
+        }
+        let slab = &self.entries[id.0][si as usize].1;
+        if ni.uniform {
+            let oi = ni.algo_slot[algo.ordinal()];
+            if oi == NO_SLOT {
+                return None;
+            }
+            let (found, cost) = slab[oi as usize];
+            debug_assert_eq!(found, algo, "slab index out of sync");
+            Some(cost)
+        } else {
+            slab.iter().find(|(al, _)| *al == algo).map(|(_, c)| *c)
+        }
+    }
+
     /// Additive cost of the graph under `a` (paper's cost model), each node
     /// priced at its assigned (algorithm, frequency) pair.
     pub fn eval(&self, a: &Assignment) -> GraphCost {
@@ -297,14 +446,9 @@ impl GraphCostTable {
             }
             let id = NodeId(i);
             let chosen = a.get(id).expect("assignment missing runtime node");
-            let cost = self
-                .options_at(id, a.freq(id))
-                .iter()
-                .find(|(al, _)| *al == chosen)
-                .unwrap_or_else(|| {
-                    panic!("({chosen:?}, {}) not applicable to node {i}", a.freq(id).describe())
-                })
-                .1;
+            let cost = self.option_cost(id, chosen, a.freq(id)).unwrap_or_else(|| {
+                panic!("({chosen:?}, {}) not applicable to node {i}", a.freq(id).describe())
+            });
             gc = gc.add(&cost);
         }
         gc.freq = a.uniform_freq();
@@ -359,13 +503,44 @@ impl GraphCostTable {
     /// Nodes without a slab at `freq` end up empty, exactly like a table
     /// built at `&[freq]` directly.
     pub fn restrict_to_freq(&self, freq: FreqId) -> GraphCostTable {
-        GraphCostTable {
-            entries: self
-                .entries
+        GraphCostTable::from_freq_slabs(
+            self.entries
                 .iter()
                 .map(|slabs| slabs.iter().filter(|(f, _)| *f == freq).cloned().collect())
                 .collect(),
+        )
+    }
+
+    /// Canonical per-node argmin for an **additive** objective: scan the
+    /// node's options slab-major (slabs in table order, options in slab
+    /// order) keeping a strict running minimum of
+    /// [`CostFunction::node_value`] — the *first* option attaining the
+    /// minimum wins. Returns the chosen (frequency, algorithm) and the
+    /// number of options scanned.
+    ///
+    /// This is exactly the choice the reference cold sweep converges to
+    /// from the framework-default start (the default is the first option
+    /// of the first slab, and the sweep only accepts strict
+    /// improvements), which is what makes warm-started and memoized
+    /// searches bit-identical to it. The result is independent of any
+    /// starting assignment.
+    ///
+    /// # Panics
+    /// On non-additive objectives, and on nodes with no options.
+    pub fn scan_argmin(&self, id: NodeId, cf: &CostFunction) -> (FreqId, Algorithm, u64) {
+        let mut best: Option<(f64, FreqId, Algorithm)> = None;
+        let mut scanned = 0u64;
+        for (f, slab) in &self.entries[id.0] {
+            for &(algo, cost) in slab.iter() {
+                scanned += 1;
+                let v = cf.node_value(&cost);
+                if best.as_ref().is_none_or(|(bv, _, _)| v < *bv) {
+                    best = Some((v, *f, algo));
+                }
+            }
         }
+        let (_, f, algo) = best.unwrap_or_else(|| panic!("argmin over optionless node {}", id.0));
+        (f, algo, scanned)
     }
 
     /// Nodes that actually carry cost choices.
@@ -379,7 +554,11 @@ impl GraphCostTable {
 
     /// Incremental re-evaluation: `base` with node `id` switched from its
     /// current (algorithm, frequency) pair to `(new_algo, new_freq)`.
-    /// O(#options-of-node), not O(n).
+    /// O(1) through the dense slab index, not O(#options) or O(n).
+    ///
+    /// Errors (propagated, per the no-panics-on-the-candidate-path
+    /// policy) when the node carries no assignment or either pair is not
+    /// applicable at the requested state.
     pub fn eval_swap(
         &self,
         base: GraphCost,
@@ -387,23 +566,28 @@ impl GraphCostTable {
         id: NodeId,
         new_algo: Algorithm,
         new_freq: FreqId,
-    ) -> GraphCost {
-        let old_algo = a.get(id).expect("swap on non-runtime node");
+    ) -> anyhow::Result<GraphCost> {
+        let old_algo = a
+            .get(id)
+            .ok_or_else(|| anyhow::anyhow!("swap on non-runtime node {}", id.0))?;
         let old_freq = a.freq(id);
         let find = |al: Algorithm, f: FreqId| {
-            self.options_at(id, f)
-                .iter()
-                .find(|(x, _)| *x == al)
-                .expect("(algorithm, frequency) not applicable")
-                .1
+            self.option_cost(id, al, f).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "({}, {}) not applicable to node {}",
+                    al.name(),
+                    f.describe(),
+                    id.0
+                )
+            })
         };
-        let old = find(old_algo, old_freq);
-        let new = find(new_algo, new_freq);
-        GraphCost {
+        let old = find(old_algo, old_freq)?;
+        let new = find(new_algo, new_freq)?;
+        Ok(GraphCost {
             time_ms: base.time_ms - old.time_ms + new.time_ms,
             energy_j: base.energy_j - old.energy_j() + new.energy_j(),
             freq: if new_freq == old_freq { base.freq } else { FreqId::NOMINAL },
-        }
+        })
     }
 }
 
@@ -463,5 +647,92 @@ mod tests {
     #[should_panic(expected = "weight")]
     fn linear_weight_range_checked() {
         CostFunction::linear(1.5);
+    }
+
+    fn two_node_table() -> GraphCostTable {
+        GraphCostTable::from_entries(vec![
+            vec![
+                (Algorithm::ConvIm2col, NodeCost { time_ms: 1.0, power_w: 100.0 }),
+                (Algorithm::ConvDirect, NodeCost { time_ms: 2.0, power_w: 30.0 }),
+            ],
+            Vec::new(),
+            vec![(Algorithm::Passthrough, NodeCost { time_ms: 0.5, power_w: 10.0 })],
+        ])
+    }
+
+    #[test]
+    fn indexed_option_lookup_matches_linear_find() {
+        let t = two_node_table();
+        for id in t.costed_ids() {
+            for (f, slab) in t.freq_options(id) {
+                for &(algo, cost) in slab.iter() {
+                    let found = t.option_cost(id, algo, *f).unwrap();
+                    assert_eq!(found.time_ms.to_bits(), cost.time_ms.to_bits());
+                    assert_eq!(found.power_w.to_bits(), cost.power_w.to_bits());
+                }
+            }
+        }
+        // Misses: inapplicable algorithm, unresolved state.
+        assert!(t.option_cost(NodeId(0), Algorithm::GemmNaive, FreqId::NOMINAL).is_none());
+        assert!(t.option_cost(NodeId(0), Algorithm::ConvIm2col, FreqId(510)).is_none());
+    }
+
+    #[test]
+    fn eval_swap_errors_instead_of_panicking() {
+        let t = two_node_table();
+        let entries = vec![
+            Some(Algorithm::ConvIm2col),
+            None,
+            Some(Algorithm::Passthrough),
+        ];
+        let a = Assignment::from_parts(entries, vec![FreqId::NOMINAL; 3]);
+        let base = t.eval(&a);
+        // Valid swap works.
+        let swapped = t.eval_swap(base, &a, NodeId(0), Algorithm::ConvDirect, FreqId::NOMINAL);
+        assert!(swapped.is_ok());
+        assert!((swapped.unwrap().time_ms - (base.time_ms + 1.0)).abs() < 1e-12);
+        // Swap on a non-runtime node and to an inapplicable pair error.
+        assert!(t.eval_swap(base, &a, NodeId(1), Algorithm::ConvDirect, FreqId::NOMINAL).is_err());
+        assert!(t.eval_swap(base, &a, NodeId(0), Algorithm::GemmNaive, FreqId::NOMINAL).is_err());
+        assert!(t.eval_swap(base, &a, NodeId(0), Algorithm::ConvDirect, FreqId(900)).is_err());
+    }
+
+    #[test]
+    fn scan_argmin_is_first_strict_minimum() {
+        let t = two_node_table();
+        // Energy: im2col = 1*100 = 100, direct = 2*30 = 60 -> direct.
+        let (f, algo, scanned) = t.scan_argmin(NodeId(0), &CostFunction::Energy);
+        assert_eq!((f, algo, scanned), (FreqId::NOMINAL, Algorithm::ConvDirect, 2));
+        // Time: im2col (1.0) wins and, being first, survives ties.
+        let (_, algo, _) = t.scan_argmin(NodeId(0), &CostFunction::Time);
+        assert_eq!(algo, Algorithm::ConvIm2col);
+    }
+
+    #[test]
+    fn additive_keys_identify_objectives_exactly() {
+        assert_eq!(CostFunction::Time.additive_key(), CostFunction::Time.additive_key());
+        assert_ne!(CostFunction::Time.additive_key(), CostFunction::Energy.additive_key());
+        assert_ne!(
+            CostFunction::linear(0.5).additive_key(),
+            CostFunction::linear(0.25).additive_key()
+        );
+        let b = GraphCost { time_ms: 2.0, energy_j: 10.0, ..Default::default() };
+        assert_ne!(
+            CostFunction::linear(0.5).additive_key(),
+            CostFunction::linear(0.5).normalized(&b).additive_key(),
+            "normalization is part of the objective identity"
+        );
+        assert_eq!(CostFunction::Power.additive_key(), None);
+        assert_eq!(CostFunction::Product { w: 0.5 }.additive_key(), None);
+    }
+
+    #[test]
+    fn node_value_orders_like_whole_graph_swap() {
+        let a = NodeCost { time_ms: 1.0, power_w: 100.0 };
+        let b = NodeCost { time_ms: 2.0, power_w: 30.0 };
+        assert!(CostFunction::Time.node_value(&a) < CostFunction::Time.node_value(&b));
+        assert!(CostFunction::Energy.node_value(&b) < CostFunction::Energy.node_value(&a));
+        let lin = CostFunction::Linear { w: 0.5, t_norm: 1.0, e_norm: 1.0 };
+        assert!((lin.node_value(&a) - (0.5 * 100.0 + 0.5 * 1.0)).abs() < 1e-12);
     }
 }

@@ -25,7 +25,7 @@
 //! - The persistent [`CostDb`] sits behind a `Mutex` and is only touched
 //!   on resolve misses (first run) — steady-state lookups never reach it.
 
-use super::{CostDb, GraphCostTable, NodeCost};
+use super::{AdditiveKey, CostDb, CostFunction, GraphCostTable, NodeCost};
 use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};
 use crate::energysim::FreqId;
 use crate::graph::{DeltaView, Graph, NodeId, OpKind, TensorShape};
@@ -90,6 +90,53 @@ const SHARDS: usize = 16;
 
 type ResolveShard = RwLock<HashMap<(SigId, FreqId), Arc<Vec<(Algorithm, NodeCost)>>>>;
 
+/// Most frequency slabs a memoized row set can hold: the nominal clock
+/// plus the sim-V100's seven DVFS states fit; nodes with more slabs
+/// (exotic providers) simply scan instead of memoizing.
+const MAX_MEMO_SLABS: usize = 8;
+
+/// Key of one per-row argmin memo entry: the additive objective's exact
+/// identity plus the node's row identity — its `(freq, slab Arc pointer)`
+/// pairs in table order, inlined into a fixed array so building a key
+/// never allocates (memo hits stay allocation-free on the hot path).
+/// Pointer keying is sound because every slab of an oracle-built table is
+/// an `Arc` shared with the resolve cache, which never evicts — the
+/// pointee outlives every memo entry. Unused tail slots stay `(0, 0)`
+/// (no real row has a null allocation), and `len` disambiguates anyway.
+#[derive(PartialEq, Eq, Hash)]
+struct ArgminKey {
+    cf: AdditiveKey,
+    len: u8,
+    rows: [(u16, usize); MAX_MEMO_SLABS],
+}
+
+type ArgminShard = RwLock<HashMap<ArgminKey, (FreqId, Algorithm)>>;
+
+/// Per-row argmin memo counters ([`CostOracle::argmin_stats`]): hit rate
+/// instrumentation for the incremental inner search. Totals are
+/// deterministic for a fixed workload (misses fill exactly once per
+/// distinct key); the hit/miss *attribution* to individual candidates can
+/// shift under parallel evaluation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArgminStats {
+    /// Lookups answered from the memo (no option scan).
+    pub hits: u64,
+    /// Lookups that scanned the row's options and filled the memo.
+    pub misses: u64,
+}
+
+impl ArgminStats {
+    /// Fraction of lookups served without scanning (0 when none ran).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total > 0 {
+            self.hits as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+}
+
 /// The thread-safe cost-evaluation layer shared by every search worker
 /// (and, downstream, the serving path). See the module docs for the
 /// locking design. With the DVFS axis, the resolve cache is keyed by
@@ -117,6 +164,13 @@ pub struct CostOracle {
     carried_rows: AtomicU64,
     /// Candidate-table rows re-resolved because the delta touched them.
     resolved_rows: AtomicU64,
+    /// Per-row argmin memo for additive objectives, sharded like the
+    /// resolve cache (see [`ArgminKey`] for why pointer keying is sound).
+    argmin_shards: Vec<ArgminShard>,
+    /// Argmin memo lookups answered without scanning.
+    argmin_hits: AtomicU64,
+    /// Argmin memo lookups that scanned and filled an entry.
+    argmin_misses: AtomicU64,
 }
 
 /// Cost-table construction counters — instrumentation proving the search
@@ -148,6 +202,33 @@ pub struct DeltaBase<'a> {
     pub table: &'a GraphCostTable,
     /// The parent's framework-default assignment.
     pub assignment: &'a Assignment,
+    /// The parent's *converged* inner-search plan, when the caller has
+    /// one — the warm start the incremental inner search remaps across
+    /// compaction (`None` disables warm starts for this base).
+    pub converged: Option<&'a Assignment>,
+}
+
+/// Everything [`CostOracle::delta_table_for_freqs`] derives for one
+/// candidate: the carry-over cost table, the carried default assignment,
+/// the remapped warm start, the dirty cone in compacted ids, and the
+/// profile count.
+pub struct CandidateTable {
+    /// The candidate's cost table (untouched rows carried from the
+    /// parent, dirty rows re-resolved), in compaction order.
+    pub table: GraphCostTable,
+    /// The candidate's framework-default assignment (unchanged choices
+    /// carried from the parent's defaults).
+    pub assignment: Assignment,
+    /// The parent's converged plan remapped across compaction (dirty and
+    /// added nodes fall back to their defaults at the nominal clock).
+    /// `None` when the base supplied no converged plan.
+    pub warm: Option<Assignment>,
+    /// Compacted ids of nodes whose rows were re-resolved (the delta's
+    /// dirty cone, ascending) — the only nodes an additive warm-started
+    /// inner search must re-optimize.
+    pub dirty: Vec<NodeId>,
+    /// Newly measured (signature, algorithm, frequency) pairs.
+    pub measured: usize,
 }
 
 impl CostOracle {
@@ -173,6 +254,9 @@ impl CostOracle {
             delta_tables: AtomicU64::new(0),
             carried_rows: AtomicU64::new(0),
             resolved_rows: AtomicU64::new(0),
+            argmin_shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            argmin_hits: AtomicU64::new(0),
+            argmin_misses: AtomicU64::new(0),
         }
     }
 
@@ -221,6 +305,70 @@ impl CostOracle {
             carried_rows: self.carried_rows.load(Ordering::Relaxed),
             resolved_rows: self.resolved_rows.load(Ordering::Relaxed),
         }
+    }
+
+    /// Per-row argmin memo counters since oracle creation.
+    pub fn argmin_stats(&self) -> ArgminStats {
+        ArgminStats {
+            hits: self.argmin_hits.load(Ordering::Relaxed),
+            misses: self.argmin_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Memoized per-row argmin of one node under an **additive**
+    /// objective: the best (frequency, algorithm) of a node depends only
+    /// on its shared rows and the objective, so the answer is cached
+    /// keyed by ([`AdditiveKey`], row identity) — carried rows across
+    /// thousands of candidates (and all frontier probes at the same
+    /// weight) never re-scan their option lists. Returns the chosen pair
+    /// plus the options scanned (0 on a memo hit); `None` when `cf` is
+    /// not additive.
+    ///
+    /// **Soundness**: `table` must have been built by this oracle
+    /// (`table_for*` / `delta_table_for_freqs` / `restrict_to_freq` of
+    /// such a table) so its slabs are `Arc`s pinned by the resolve cache
+    /// — that is what makes pointer identity a stable key. The fill
+    /// happens under the shard write lock, so each distinct row scans
+    /// exactly once.
+    pub fn argmin_for(
+        &self,
+        table: &GraphCostTable,
+        id: NodeId,
+        cf: &CostFunction,
+    ) -> Option<(FreqId, Algorithm, u64)> {
+        let cf_key = cf.additive_key()?;
+        let slabs = table.freq_options(id);
+        if slabs.len() > MAX_MEMO_SLABS {
+            // Row set too wide to inline — scan without memoizing (still
+            // correct, just uncached; counted as a miss).
+            let (f, algo, scanned) = table.scan_argmin(id, cf);
+            self.argmin_misses.fetch_add(1, Ordering::Relaxed);
+            return Some((f, algo, scanned));
+        }
+        let mut rows = [(0u16, 0usize); MAX_MEMO_SLABS];
+        for (k, (f, slab)) in slabs.iter().enumerate() {
+            rows[k] = (f.0, Arc::as_ptr(slab) as *const () as usize);
+        }
+        let key = ArgminKey { cf: cf_key, len: slabs.len() as u8, rows };
+        // Shard by the first row's allocation address (dropping alignment
+        // zero bits) — free, unlike an extra whole-key hash on the
+        // memo-hit fast path; the map hashes the key exactly once
+        // internally.
+        let shard_ix = ((rows[0].1 >> 4) ^ rows[0].0 as usize) % SHARDS;
+        let shard = &self.argmin_shards[shard_ix];
+        if let Some(&(f, algo)) = shard.read().unwrap().get(&key) {
+            self.argmin_hits.fetch_add(1, Ordering::Relaxed);
+            return Some((f, algo, 0));
+        }
+        let mut w = shard.write().unwrap();
+        if let Some(&(f, algo)) = w.get(&key) {
+            self.argmin_hits.fetch_add(1, Ordering::Relaxed);
+            return Some((f, algo, 0));
+        }
+        let (f, algo, scanned) = table.scan_argmin(id, cf);
+        w.insert(key, (f, algo));
+        self.argmin_misses.fetch_add(1, Ordering::Relaxed);
+        Some((f, algo, scanned))
     }
 
     /// Run `f` against the (locked) profile database.
@@ -354,27 +502,48 @@ impl CostOracle {
     /// (property-tested in `rust/tests/delta_engine.rs`) — candidate
     /// evaluation through it reproduces full-rebuild plans exactly.
     ///
-    /// Returns `(table, default_assignment, newly_measured_pairs)`.
+    /// When the base carries the parent's **converged** plan
+    /// (`DeltaBase::converged`), the result also holds it remapped across
+    /// compaction (`CandidateTable::warm`) together with the dirty cone
+    /// in compacted ids (`CandidateTable::dirty`) — everything the
+    /// incremental inner search needs to re-optimize only what the delta
+    /// touched.
     pub fn delta_table_for_freqs(
         &self,
         base: &DeltaBase<'_>,
         view: &DeltaView<'_>,
         freqs: &[FreqId],
-    ) -> (GraphCostTable, Assignment, usize) {
+    ) -> CandidateTable {
         self.delta_tables.fetch_add(1, Ordering::Relaxed);
         let n_base = base.graph.len();
         let live = view.compact_order();
         let mut entries: Vec<Vec<crate::cost::FreqSlab>> = Vec::with_capacity(live.len());
         let mut choices: Vec<Option<Algorithm>> = Vec::with_capacity(live.len());
+        let mut warm_parts: Option<(Vec<Option<Algorithm>>, Vec<FreqId>)> = base
+            .converged
+            .map(|_| (Vec::with_capacity(live.len()), Vec::with_capacity(live.len())));
+        let mut dirty: Vec<NodeId> = Vec::new();
         let mut measured = 0usize;
         let mut carried = 0u64;
         let mut resolved = 0u64;
         let mut sig = String::with_capacity(96);
-        for &i in live {
+        // Warm slot for dirty/added nodes: the framework default at the
+        // nominal clock — exactly what a cold full rebuild starts at.
+        fn warm_default(
+            warm_parts: &mut Option<(Vec<Option<Algorithm>>, Vec<FreqId>)>,
+            choice: Option<Algorithm>,
+        ) {
+            if let Some((wc, wf)) = warm_parts {
+                wc.push(choice);
+                wf.push(FreqId::NOMINAL);
+            }
+        }
+        for (j, &i) in live.iter().enumerate() {
             let op = view.op(i);
             if op.is_constant_space() {
                 entries.push(Vec::new());
                 choices.push(None);
+                warm_default(&mut warm_parts, None);
                 continue;
             }
             let is_input = matches!(op, OpKind::Input { .. });
@@ -382,10 +551,18 @@ impl CostOracle {
                 // Carry-over: same op, same input shapes — the signature
                 // is unchanged, so the parent's rows (and its default
                 // algorithm) are exactly what a fresh resolve would find.
+                // The parent's converged choice carries over for the same
+                // reason: its rows (hence its per-row argmin) are
+                // unchanged.
                 let old = NodeId(i);
                 if is_input {
                     entries.push(Vec::new());
                     choices.push(base.assignment.get(old));
+                    if let Some((wc, wf)) = &mut warm_parts {
+                        let conv = base.converged.expect("warm_parts implies converged");
+                        wc.push(conv.get(old));
+                        wf.push(conv.freq(old));
+                    }
                     carried += 1;
                     continue;
                 }
@@ -414,8 +591,19 @@ impl CostOracle {
                 entries.push(slabs);
                 choices.push(base.assignment.get(old));
                 if fell_back {
+                    // The option set differs from the parent's, so its
+                    // converged choice is no longer the row argmin — the
+                    // node joins the dirty cone and restarts from the
+                    // default.
+                    warm_default(&mut warm_parts, base.assignment.get(old));
+                    dirty.push(NodeId(j));
                     resolved += 1;
                 } else {
+                    if let Some((wc, wf)) = &mut warm_parts {
+                        let conv = base.converged.expect("warm_parts implies converged");
+                        wc.push(conv.get(old));
+                        wf.push(conv.freq(old));
+                    }
                     carried += 1;
                 }
                 continue;
@@ -436,17 +624,22 @@ impl CostOracle {
                 }
                 entries.push(slabs);
             }
-            choices.push(Some(self.reg.default_algorithm(op, &in_shapes)));
+            let choice = Some(self.reg.default_algorithm(op, &in_shapes));
+            choices.push(choice);
+            warm_default(&mut warm_parts, choice);
+            dirty.push(NodeId(j));
             resolved += 1;
         }
         self.carried_rows.fetch_add(carried, Ordering::Relaxed);
         self.resolved_rows.fetch_add(resolved, Ordering::Relaxed);
         let freqs_default = vec![FreqId::NOMINAL; live.len()];
-        (
-            GraphCostTable::from_freq_slabs(entries),
-            Assignment::from_parts(choices, freqs_default),
+        CandidateTable {
+            table: GraphCostTable::from_freq_slabs(entries),
+            assignment: Assignment::from_parts(choices, freqs_default),
+            warm: warm_parts.map(|(wc, wf)| Assignment::from_parts(wc, wf)),
+            dirty,
             measured,
-        )
+        }
     }
 
     /// Ensure every (signature, algorithm) pair of `g` is profiled at the
@@ -624,6 +817,37 @@ mod tests {
         let c_low = t_dvfs.eval(&a_low);
         assert!(c_low.time_ms >= t_nom.eval(&a).time_ms * 0.96);
         assert_eq!(c_low.freq, low);
+    }
+
+    #[test]
+    fn argmin_memo_hits_on_shared_rows_and_keys_objectives_apart() {
+        use crate::cost::CostFunction;
+        let oracle = CostOracle::offline_default();
+        let g = conv_graph();
+        let shapes = g.infer_shapes().unwrap();
+        let (t1, _) = oracle.table_for_with(&g, &shapes);
+        let conv = crate::graph::NodeId(2);
+        let cf = CostFunction::Energy;
+        let (f1, a1, scanned) = oracle.argmin_for(&t1, conv, &cf).unwrap();
+        assert!(scanned > 0, "first lookup scans");
+        // A second table over the same graph shares the resolve cache's
+        // Arcs, so the lookup is a memo hit (0 options scanned).
+        let (t2, m) = oracle.table_for_with(&g, &shapes);
+        assert_eq!(m, 0);
+        let (f2, a2, rescanned) = oracle.argmin_for(&t2, conv, &cf).unwrap();
+        assert_eq!((f1, a1), (f2, a2));
+        assert_eq!(rescanned, 0, "shared rows must not re-scan");
+        let st = oracle.argmin_stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+        // The memo answer is the canonical scan.
+        assert_eq!(t1.scan_argmin(conv, &cf).0, f1);
+        assert_eq!(t1.scan_argmin(conv, &cf).1, a1);
+        // A different additive objective is a different key (miss), and a
+        // non-additive objective has no key at all.
+        let (_, _, s3) = oracle.argmin_for(&t1, conv, &CostFunction::Time).unwrap();
+        assert!(s3 > 0);
+        assert!(oracle.argmin_for(&t1, conv, &CostFunction::Power).is_none());
     }
 
     #[test]

@@ -460,6 +460,16 @@ impl<'g> DeltaView<'g> {
         self.sig_dirty[i]
     }
 
+    /// The delta's **dirty cone** as the cost layer sees it: live view
+    /// indices (ascending — compaction order) whose cost signature must
+    /// re-resolve. Everything outside this set carries its rows — and,
+    /// downstream, its converged per-row argmin — over from the base
+    /// unchanged, which is what lets the incremental inner search
+    /// re-optimize only these nodes.
+    pub fn sig_dirty_live(&self) -> impl Iterator<Item = usize> + '_ {
+        self.order.iter().copied().filter(|&i| self.sig_dirty[i])
+    }
+
     /// Output shapes of node `i` (recomputed when dirty, borrowed from
     /// the base otherwise).
     pub fn out_shapes(&self, i: usize) -> &[TensorShape] {
@@ -543,6 +553,8 @@ mod tests {
         assert!(view.is_sig_dirty(2)); // conv op changed
         assert!(!view.is_sig_dirty(0));
         assert!(!view.is_sig_dirty(1));
+        // The dirty cone is exactly the live sig-dirty set, ascending.
+        assert_eq!(view.sig_dirty_live().collect::<Vec<_>>(), vec![2]);
         // shapes of the untouched nodes are borrowed from the base
         assert_eq!(view.out_shapes(0), &shapes[0][..]);
         // compact order is ascending live indices

@@ -67,6 +67,7 @@ const COMMON_OPTS: &[&str] = &[
     "max-dequeues",
     "threads",
     "dvfs",
+    "incremental-inner",
     "seed",
     "db",
     "artifacts",
@@ -118,8 +119,9 @@ USAGE: eadgo <subcommand> [--options]
   optimize  --model M --objective (time|energy|power|linear:W|power_energy:W)
             [--alpha 1.05] [--inner-distance D] [--max-dequeues N]
             [--threads T] [--dvfs off|per-graph|per-node]
-            [--frontier N] [--save-frontier plans.json]
-            [--db profiles.json] [--provider sim|cpu] [--config run.json]
+            [--incremental-inner on|off] [--frontier N]
+            [--save-frontier plans.json] [--db profiles.json]
+            [--provider sim|cpu] [--config run.json]
   reproduce --table (1|2|3|4|5|all) [--quick] [--seed S]
   profile   --model M [--provider sim|cpu] [--db profiles.json]
   constrain --model M --time-budget MS [--probes 8] [--threads T]
@@ -143,6 +145,12 @@ USAGE: eadgo <subcommand> [--options]
   run/serve accept --plan to load it back. serve --optimize runs the
   optimizer first and serves the result, sharing one warm cost oracle
   across optimize and serve.
+
+  --incremental-inner off disables the warm-start/memoized inner-search
+  engine and re-derives every node's (algorithm, frequency) choice cold
+  — the A/B reference; plans are bit-identical either way for additive
+  objectives. optimize prints the inner-search economy (warm vs cold
+  starts, dirty vs total nodes swept, argmin cache hit rate).
 
   optimize --frontier N enumerates an N-point pareto frontier over
   (latency, energy) instead of a single plan — sweep the energy weight,
@@ -259,6 +267,7 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     if !res.stats.rule_stats.is_empty() {
         print!("{}", tables::rule_stats_table(&res.stats).render());
     }
+    print!("{}", tables::inner_stats_table(&res.stats).render());
     if let Some(path) = args.get("save-plan") {
         eadgo::graph::serde::save_plan(std::path::Path::new(path), &res.graph, &res.assignment)?;
         println!("optimized plan saved to {path}");

@@ -504,6 +504,41 @@ pub fn rule_stats_table(stats: &SearchStats) -> Table {
     t
 }
 
+/// Render a search run's inner-search economy: warm vs cold starts,
+/// dirty-cone vs total node decisions, and the per-row argmin memo hit
+/// rate — the instrumentation behind the incremental inner search
+/// (`SearchConfig::incremental_inner`). Wired into `eadgo optimize`
+/// output and the ablation bench alongside [`rule_stats_table`].
+pub fn inner_stats_table(stats: &SearchStats) -> Table {
+    let mut t = Table::new(
+        "Inner-search economy (warm starts / dirty-cone sweeps / argmin memo)",
+        &["metric", "value", "share"],
+    );
+    let starts = stats.inner_warm + stats.inner_cold;
+    t.row(vec![
+        "warm starts".into(),
+        stats.inner_warm.to_string(),
+        if starts > 0 {
+            format!("{:.1}%", 100.0 * stats.inner_warm as f64 / starts as f64)
+        } else {
+            "-".into()
+        },
+    ]);
+    t.row(vec!["cold starts".into(), stats.inner_cold.to_string(), "-".into()]);
+    t.row(vec![
+        "nodes re-derived".into(),
+        format!("{}/{}", stats.inner_swept, stats.inner_nodes),
+        format!("carry rate {:.1}%", 100.0 * stats.inner_carry_rate()),
+    ]);
+    t.row(vec![
+        "argmin memo".into(),
+        format!("{} hits / {} misses", stats.argmin_hits, stats.argmin_misses),
+        format!("hit rate {:.1}%", 100.0 * stats.argmin_hit_rate()),
+    ]);
+    t.row(vec!["option evaluations".into(), stats.inner_evals.to_string(), "-".into()]);
+    t
+}
+
 // ---------------------------------------------------------------------------
 // Table 5 — contribution of the inner search (SqueezeNet, energy objective)
 // ---------------------------------------------------------------------------

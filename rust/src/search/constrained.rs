@@ -208,7 +208,7 @@ pub fn refine_frequency_to_budget(
                         if *f == cur_f || !slab.iter().any(|(al, _)| *al == algo) {
                             continue;
                         }
-                        let cand = table.eval_swap(cost, &af, id, algo, *f);
+                        let cand = table.eval_swap(cost, &af, id, algo, *f)?;
                         let saved = cost.time_ms - cand.time_ms;
                         if saved <= 0.0 {
                             continue;
@@ -237,7 +237,7 @@ pub fn refine_frequency_to_budget(
                         if *f == cur_f || !slab.iter().any(|(al, _)| *al == algo) {
                             continue;
                         }
-                        let cand = table.eval_swap(cost, &af, id, algo, *f);
+                        let cand = table.eval_swap(cost, &af, id, algo, *f)?;
                         let target = best_move.as_ref().map_or(cost.energy_j, |(_, b)| b.energy_j);
                         if cand.time_ms <= time_budget_ms && cand.energy_j < target {
                             best_move = Some((*f, cand));

@@ -27,6 +27,7 @@
 use super::outer::{evaluate_baseline, outer_search, OptimizerContext, SearchConfig};
 use crate::algo::Assignment;
 use crate::cost::{CostFunction, GraphCost};
+use crate::graph::canonical::graph_hash;
 use crate::graph::Graph;
 use std::cmp::Ordering;
 
@@ -220,17 +221,37 @@ pub fn optimize_frontier(
         });
     }
 
+    let h0 = graph_hash(g0);
     let mut candidates: Vec<PlanPoint> = Vec::new();
     let mut probes: Vec<FrontierProbe> = Vec::with_capacity(n);
     let mut original: Option<GraphCost> = None;
+    // Probes 2..N warm-start their origin inner search from the previous
+    // probe's origin plan (the adjacent weight's converged assignment).
+    // For the linear probe objective the separable search is
+    // start-independent, so this is result-neutral by construction — it
+    // attributes the origin runs as warm in the economy counters and
+    // seeds the basin for any future non-additive probe objective.
+    let mut prev_origin: Option<Assignment> = None;
     for i in 0..n {
         let w = i as f64 / (n - 1) as f64;
         // Same pipeline as `optimize`: evaluate the baseline once per
         // probe (fully cached after the first), normalize, search.
-        let baseline = evaluate_baseline(g0, &ctx.oracle)?;
+        let mut baseline = evaluate_baseline(g0, &ctx.oracle)?;
+        baseline.warm_hint = prev_origin.take();
         let cf = CostFunction::linear(w).normalized(&baseline.cost);
         let res = outer_search(g0, ctx, &cf, cfg, &baseline)?;
         original.get_or_insert(baseline.cost);
+        // The probe's origin plan: only the first two trajectory entries
+        // can be g0 (entry 0 is the default plan, entry 1 — when present
+        // — the origin's converged inner search; later entries are
+        // deduped candidates, never g0), so at most two hashes here.
+        prev_origin = res
+            .trajectory
+            .iter()
+            .take(2)
+            .rev()
+            .find(|(g, _, _)| graph_hash(g) == h0)
+            .map(|(_, a, _)| a.clone());
         probes.push(FrontierProbe { weight: w, cost: res.cost, wall_s: res.stats.wall_s });
         // Harvest the probe's whole improvement trajectory — intermediate
         // plans a pure-w probe walked through are often non-dominated

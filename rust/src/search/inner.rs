@@ -17,22 +17,50 @@
 //! exhaustive enumeration in `rust/tests/prop_invariants.rs`.
 //!
 //! With the DVFS axis, a per-node choice is an (algorithm, frequency)
-//! pair: the moves below enumerate every pair across the table's frequency
+//! pair: the searches below cover every pair across the table's frequency
 //! slabs. The optimality argument is unchanged — the objective stays
 //! separable per node, the per-node option set merely grows — so d=1 is
 //! still globally optimal for additive objectives over the joint space. A
 //! table built at the nominal clock only (one slab per node) makes this
 //! bit-identical to the pre-DVFS search.
 //!
+//! ## The separable (additive) fast path
+//!
+//! For additive objectives the best (algorithm, frequency) of a node is a
+//! pure function of its option rows and the objective — independent of
+//! every other node and of the starting assignment. The search therefore
+//! doesn't sweep at all: each node takes its **canonical per-row argmin**
+//! ([`GraphCostTable::scan_argmin`] — first option attaining the strict
+//! minimum, in slab-major scan order), and the final cost is one
+//! [`GraphCostTable::eval`] over the result. Three compounding economies
+//! ride on this, all bit-identical to the cold reference
+//! (`SearchConfig::incremental_inner = false` re-derives every node,
+//! memo-free, through the same canonical scan):
+//!
+//! - **Warm starts** ([`inner_search_incremental`] with a dirty scope):
+//!   a candidate delta's untouched nodes share their rows with the parent
+//!   table, so the parent's converged choice *is* their argmin — only the
+//!   delta's dirty cone re-derives.
+//! - **Per-row argmin memoization** ([`crate::cost::CostOracle::argmin_for`]):
+//!   re-derived rows that were ever scanned under the same objective
+//!   anywhere in the search answer from the memo without touching their
+//!   option lists.
+//! - **Indexed slabs**: the `eval`/`eval_swap` option lookups behind both
+//!   paths resolve through dense per-node (algorithm, frequency) indices
+//!   instead of linear scans.
+//!
+//! Non-additive objectives (`Power`, `Product`, d≥2) keep the literal
+//! sweep of Algorithm 2 ([`inner_search`]'s general path).
+//!
 //! The inner search is agnostic to how its table was built: the outer
 //! search's delta engine assembles candidate tables by carrying untouched
 //! rows over from the parent (`CostOracle::delta_table_for_freqs`), and
 //! because carried rows are the very `Arc`s a full rebuild would fetch —
-//! in the same compaction order — the local search here walks identical
-//! numbers and returns bit-identical assignments either way.
+//! in the same compaction order — the search here walks identical numbers
+//! and returns bit-identical assignments either way.
 
 use crate::algo::Assignment;
-use crate::cost::{CostFunction, GraphCost, GraphCostTable};
+use crate::cost::{CostFunction, CostOracle, GraphCost, GraphCostTable};
 use crate::energysim::FreqId;
 use crate::graph::NodeId;
 use crate::util::rng::Rng;
@@ -44,20 +72,49 @@ pub struct InnerResult {
     pub assignment: Assignment,
     /// Cost of the graph under that assignment.
     pub cost: GraphCost,
-    /// Number of full neighborhood sweeps until convergence.
+    /// Number of full neighborhood sweeps until convergence (1 for the
+    /// separable fast path, which needs none).
     pub sweeps: usize,
-    /// Number of cost evaluations performed.
+    /// Number of per-option cost evaluations performed. Memoized argmin
+    /// hits and warm-carried nodes cost zero.
     pub evals: u64,
+    /// Whether the search started from a parent's converged plan (warm)
+    /// rather than a cold default/arbitrary start.
+    pub warm: bool,
+    /// Tunable nodes (more than one option) visible to this search.
+    pub nodes: u64,
+    /// Tunable nodes whose choice was actually re-derived (scanned or
+    /// answered by the argmin memo). A warm dirty-scoped search sweeps
+    /// only the dirty cone, so `swept << nodes`.
+    pub swept: u64,
 }
 
 /// Run Algorithm 2 from `start`.
+///
+/// Additive objectives take the separable fast path: canonical per-row
+/// argmin over every node — globally optimal and **start-independent**
+/// (`start` only seeds nodes the search does not touch). In exact
+/// arithmetic this is precisely what the general sweep converges to from
+/// the framework-default start; the per-node comparison is strictly more
+/// accurate than the legacy whole-graph swap comparison near float ties
+/// (a tiny per-node difference can round away inside a large graph
+/// total), and ties from non-default starts resolve to the first
+/// scan-order option rather than the start. Non-additive objectives run
+/// the literal distance-`d` sweep from `start`. Errors on `d == 0` and
+/// on swaps over invalid (node, algorithm, frequency) combinations
+/// (propagated, never panicking, on the candidate-evaluation path).
 pub fn inner_search(
     table: &GraphCostTable,
     cf: &CostFunction,
     d: usize,
     start: Assignment,
-) -> InnerResult {
-    assert!(d >= 1, "inner distance must be >= 1");
+) -> anyhow::Result<InnerResult> {
+    anyhow::ensure!(d >= 1, "inner distance must be >= 1 (got {d})");
+    if cf.is_additive() {
+        // d is irrelevant: per-node argmin subsumes any neighborhood
+        // radius for a separable objective.
+        return inner_search_incremental(table, cf, start, None, None);
+    }
     let ids: Vec<NodeId> = table
         .costed_ids()
         .filter(|id| table.option_count(*id) > 1)
@@ -81,7 +138,7 @@ pub fn inner_search(
                     if algo == current && *f == current_f {
                         continue;
                     }
-                    let cand = table.eval_swap(cost, &a, id, algo, *f);
+                    let cand = table.eval_swap(cost, &a, id, algo, *f)?;
                     evals += 1;
                     let v = cf.eval(&cand);
                     if v < value {
@@ -113,11 +170,11 @@ pub fn inner_search(
                                     {
                                         continue;
                                     }
-                                    let c1 = table.eval_swap(cost, &a, ni, ai, *fi);
+                                    let c1 = table.eval_swap(cost, &a, ni, ai, *fi)?;
                                     // second swap relative to (a with ni=ai):
                                     // the incremental delta of nj is
                                     // independent of ni.
-                                    let cand = table.eval_swap(c1, &a, nj, aj, *fj);
+                                    let cand = table.eval_swap(c1, &a, nj, aj, *fj)?;
                                     evals += 1;
                                     let v = cf.eval(&cand);
                                     if v < value {
@@ -146,7 +203,76 @@ pub fn inner_search(
             break;
         }
     }
-    InnerResult { assignment: a, cost, sweeps, evals }
+    let n = ids.len() as u64;
+    Ok(InnerResult { assignment: a, cost, sweeps, evals, warm: false, nodes: n, swept: n })
+}
+
+/// The separable (additive-objective) inner search, with the incremental
+/// economies of the warm-start engine:
+///
+/// - `dirty: None` — **cold**: every tunable node takes its canonical
+///   per-row argmin (globally optimal; the `incremental_inner = false`
+///   reference when `memo` is also `None`).
+/// - `dirty: Some(ids)` — **warm**: `start` must be a converged plan
+///   remapped from the parent (`CandidateTable::warm`); only the listed
+///   (compacted, ascending) nodes re-derive, every other node keeps the
+///   parent's choice — which *is* its argmin, because its rows carried
+///   over unchanged.
+/// - `memo: Some(oracle)` routes re-derivations through the oracle's
+///   per-row argmin memo, so shared rows scan at most once per objective
+///   across the whole search (and across frontier probes at one weight).
+///
+/// All four combinations return bit-identical results (asserted by
+/// `rust/tests/inner_incremental.rs`); they differ only in how much work
+/// `evals`/`swept` record. Errors when `cf` is not additive.
+pub fn inner_search_incremental(
+    table: &GraphCostTable,
+    cf: &CostFunction,
+    start: Assignment,
+    dirty: Option<&[NodeId]>,
+    memo: Option<&CostOracle>,
+) -> anyhow::Result<InnerResult> {
+    anyhow::ensure!(
+        cf.is_additive(),
+        "separable inner search requires an additive objective (got {})",
+        cf.describe()
+    );
+    let mut a = start;
+    let mut evals = 0u64;
+    let mut nodes = 0u64;
+    let mut swept = 0u64;
+    for id in table.costed_ids() {
+        if table.option_count(id) <= 1 {
+            continue;
+        }
+        nodes += 1;
+        if let Some(dirty) = dirty {
+            // Untouched node: the warm start already holds its argmin.
+            if dirty.binary_search(&id).is_err() {
+                continue;
+            }
+        }
+        swept += 1;
+        let (f, algo, scanned) = match memo {
+            Some(oracle) => oracle
+                .argmin_for(table, id, cf)
+                .expect("additive objective has an argmin key"),
+            None => table.scan_argmin(id, cf),
+        };
+        evals += scanned;
+        a.set(id, algo);
+        a.set_freq(id, f);
+    }
+    let cost = table.eval(&a);
+    Ok(InnerResult {
+        assignment: a,
+        cost,
+        sweeps: 1,
+        evals,
+        warm: dirty.is_some(),
+        nodes,
+        swept,
+    })
 }
 
 /// Exhaustive (algorithm, frequency) enumeration (ground truth for tests;
@@ -194,7 +320,16 @@ pub fn exhaustive_search(
         let mut slot = 0;
         loop {
             if slot == ids.len() {
-                return Some(InnerResult { assignment: best, cost: best_cost, sweeps: 1, evals });
+                let n = ids.len() as u64;
+                return Some(InnerResult {
+                    assignment: best,
+                    cost: best_cost,
+                    sweeps: 1,
+                    evals,
+                    warm: false,
+                    nodes: n,
+                    swept: n,
+                });
             }
             counters[slot] += 1;
             if counters[slot] < table.option_count(ids[slot]) {

@@ -12,7 +12,9 @@ pub mod outer;
 
 pub use constrained::{optimize_with_time_budget, refine_frequency_to_budget, ConstrainedResult};
 pub use frontier::{optimize_frontier, FrontierProbe, FrontierResult, PlanFrontier, PlanPoint};
-pub use inner::{exhaustive_search, inner_search, random_assignment, InnerResult};
+pub use inner::{
+    exhaustive_search, inner_search, inner_search_incremental, random_assignment, InnerResult,
+};
 pub use outer::{
     evaluate_baseline, outer_search, Baseline, DvfsMode, OptimizerContext, OuterResult,
     RuleStat, SearchConfig, SearchStats,

@@ -58,7 +58,7 @@
 //!
 //! [`GraphDelta`]: crate::graph::GraphDelta
 
-use super::inner::{inner_search, pinned_freq_start, InnerResult};
+use super::inner::{inner_search, inner_search_incremental, pinned_freq_start, InnerResult};
 use crate::algo::Assignment;
 use crate::cost::{CostFunction, CostOracle, DeltaBase, GraphCost, GraphCostTable};
 use crate::energysim::FreqId;
@@ -132,9 +132,24 @@ pub struct SearchConfig {
     /// updates, and materialization only for wave winners. `false` forces
     /// the legacy full-rebuild path (materialize + full table per
     /// candidate) — kept as the reference implementation for A/B
-    /// throughput benches and bit-identity tests; plans are identical
-    /// either way.
+    /// throughput benches and bit-identity tests. Plans are identical
+    /// either way for additive objectives (always) and for every
+    /// objective when `incremental_inner` is off; a non-additive
+    /// objective with `incremental_inner` on warm-starts its sweeps only
+    /// on the delta engine, which may converge to a different (equally
+    /// local-optimal) plan — set `incremental_inner: false` for a strict
+    /// engine A/B there.
     pub delta_eval: bool,
+    /// Run the inner search incrementally (`true`, the default): warm
+    /// starts from the parent's converged plan with dirty-cone-only
+    /// re-optimization, and per-row argmin memoization in the oracle —
+    /// both exact for additive objectives, so plans are **bit-identical**
+    /// to `false`, which re-derives every node memo-free through the same
+    /// canonical per-row argmin (the A/B reference, same contract as
+    /// `delta_eval`). For non-additive objectives `true` warm-starts the
+    /// full sweep from the parent's plan (a different — typically better —
+    /// local-search basin than the cold default start).
+    pub incremental_inner: bool,
 }
 
 impl Default for SearchConfig {
@@ -148,6 +163,7 @@ impl Default for SearchConfig {
             threads: 1,
             dvfs: DvfsMode::Off,
             delta_eval: true,
+            incremental_inner: true,
         }
     }
 }
@@ -202,6 +218,20 @@ pub struct SearchStats {
     pub threads: usize,
     /// Search wallclock, seconds.
     pub wall_s: f64,
+    /// Inner searches warm-started from a converged parent plan.
+    pub inner_warm: u64,
+    /// Inner searches cold-started from a default/arbitrary assignment.
+    pub inner_cold: u64,
+    /// Tunable nodes visible to all inner searches (sum over runs).
+    pub inner_nodes: u64,
+    /// Tunable nodes actually re-derived by inner searches — warm starts
+    /// sweep only the delta's dirty cone, so this stays far below
+    /// `inner_nodes` under additive objectives.
+    pub inner_swept: u64,
+    /// Per-row argmin memo hits during this run (additive objectives).
+    pub argmin_hits: u64,
+    /// Per-row argmin memo misses (option-list scans) during this run.
+    pub argmin_misses: u64,
 }
 
 impl SearchStats {
@@ -213,6 +243,38 @@ impl SearchStats {
         } else {
             0.0
         }
+    }
+
+    /// Fraction of inner-search node decisions answered without
+    /// re-deriving (1 − swept/nodes); 0 when nothing ran.
+    pub fn inner_carry_rate(&self) -> f64 {
+        if self.inner_nodes > 0 {
+            1.0 - self.inner_swept as f64 / self.inner_nodes as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Argmin memo hit rate of this run (hits / lookups; 0 when none).
+    pub fn argmin_hit_rate(&self) -> f64 {
+        let total = self.argmin_hits + self.argmin_misses;
+        if total > 0 {
+            self.argmin_hits as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Fold one inner-search outcome into the economy counters.
+    fn add_inner(&mut self, r: &InnerResult) {
+        self.inner_evals += r.evals;
+        if r.warm {
+            self.inner_warm += 1;
+        } else {
+            self.inner_cold += 1;
+        }
+        self.inner_nodes += r.nodes;
+        self.inner_swept += r.swept;
     }
 }
 
@@ -239,10 +301,9 @@ struct QueueEntry {
     value: f64,
     seq: usize, // FIFO tiebreak for equal costs (determinism)
     graph: Graph,
-    /// Kept for Algorithm-1 fidelity (the paper enqueues (G, A) pairs);
-    /// expansion re-derives A' — including its frequency states — per
-    /// candidate, so it is not read here.
-    #[allow(dead_code)]
+    /// The entry's converged inner-search plan (the paper enqueues (G, A)
+    /// pairs) — the warm start its candidate deltas remap across
+    /// compaction and re-optimize only on the dirty cone.
     assignment: Assignment,
 }
 
@@ -332,6 +393,12 @@ pub struct Baseline {
     pub cost: GraphCost,
     /// Profile measurements triggered while building the table.
     pub profiled: usize,
+    /// Optional warm start for the origin's inner search: a converged
+    /// plan for the *same* graph from a related run — frontier probes
+    /// 2..N seed the previous probe's origin plan here. Exact for
+    /// additive objectives (the separable search is start-independent);
+    /// only used on the nominal-clock path.
+    pub warm_hint: Option<Assignment>,
 }
 
 /// Evaluate the origin graph once (profile + table + default assignment).
@@ -340,7 +407,7 @@ pub fn evaluate_baseline(g0: &Graph, oracle: &CostOracle) -> anyhow::Result<Base
     let (table, profiled) = oracle.table_for_with(g0, &shapes);
     let assignment = Assignment::default_for_with(g0, &shapes, oracle.reg());
     let cost = table.eval(&assignment);
-    Ok(Baseline { table, assignment, cost, profiled })
+    Ok(Baseline { table, assignment, cost, profiled, warm_hint: None })
 }
 
 /// Evaluate one **materialized** candidate graph: validate (shape
@@ -363,7 +430,7 @@ fn evaluate_candidate(
     if cfg.dvfs == DvfsMode::Off || freqs.is_empty() {
         let (table, profiled) = oracle.table_for_with(g, &shapes);
         let start = Assignment::default_for_with(g, &shapes, oracle.reg());
-        let inner = run_inner(&table, start, cf, cfg);
+        let inner = run_inner(&table, start, cf, cfg, oracle, None)?;
         return Ok((inner, profiled));
     }
     match cfg.dvfs {
@@ -377,14 +444,14 @@ fn evaluate_candidate(
                 profiled += p;
                 (f, table)
             });
-            let inner = best_state_inner(states, &base, cf, cfg);
+            let inner = best_state_inner(states, &base, cf, cfg, oracle)?;
             Ok((inner, profiled))
         }
         DvfsMode::PerNode => {
             let all = search_freqs(cfg.dvfs, oracle);
             let (table, profiled) = oracle.table_for_freqs(g, &shapes, &all);
             let start = Assignment::default_for_with(g, &shapes, oracle.reg());
-            let inner = run_inner(&table, start, cf, cfg);
+            let inner = run_inner(&table, start, cf, cfg, oracle, None)?;
             Ok((inner, profiled))
         }
         DvfsMode::Off => unreachable!("handled above"),
@@ -394,9 +461,12 @@ fn evaluate_candidate(
 /// Evaluate one candidate **delta** against its parent's cached artifacts
 /// — the incremental twin of [`evaluate_candidate`]. The candidate's cost
 /// table carries untouched rows over from the parent across every DVFS
-/// frequency slab; inner search then runs over the same rows, in the same
-/// order, with the same start assignment a full rebuild would produce, so
-/// the result is bit-identical.
+/// frequency slab; the inner search then warm-starts from the parent's
+/// converged plan (remapped across compaction) and, for additive
+/// objectives, re-optimizes **only the dirty cone** — every carried
+/// node's choice is already its per-row argmin. Bit-identical to the cold
+/// full re-derivation (`incremental_inner: false`) and to the legacy
+/// full-rebuild engine.
 fn evaluate_candidate_delta(
     base: &DeltaBase<'_>,
     view: &DeltaView<'_>,
@@ -406,9 +476,10 @@ fn evaluate_candidate_delta(
 ) -> anyhow::Result<(InnerResult, usize)> {
     let freqs = oracle.dvfs_freqs();
     if cfg.dvfs == DvfsMode::Off || freqs.is_empty() {
-        let (table, start, profiled) =
-            oracle.delta_table_for_freqs(base, view, &[FreqId::NOMINAL]);
-        return Ok((run_inner(&table, start, cf, cfg), profiled));
+        let cand = oracle.delta_table_for_freqs(base, view, &[FreqId::NOMINAL]);
+        let warm = cand.warm.as_ref().map(|w| (w, &cand.dirty[..]));
+        let inner = run_inner(&cand.table, cand.assignment, cf, cfg, oracle, warm)?;
+        return Ok((inner, cand.measured));
     }
     let all = search_freqs(cfg.dvfs, oracle);
     match cfg.dvfs {
@@ -416,14 +487,22 @@ fn evaluate_candidate_delta(
             // Resolve the candidate's dirty rows at every state once; the
             // per-state tables the legacy path built are recovered by
             // restricting the slabs (Arc clones — same rows, same order).
-            let (table, start, profiled) = oracle.delta_table_for_freqs(base, view, &all);
-            let states = all.iter().map(|&f| (f, table.restrict_to_freq(f)));
-            let inner = best_state_inner(states, &start, cf, cfg);
-            Ok((inner, profiled))
+            // No warm start here (drop `converged` so the remap is never
+            // built): the parent's converged plan is pinned to its own
+            // winning state, but the per-state searches answer from the
+            // argmin memo (carried restricted rows are shared Arcs), so
+            // carried nodes still never re-scan.
+            let base = DeltaBase { converged: None, ..*base };
+            let cand = oracle.delta_table_for_freqs(&base, view, &all);
+            let states = all.iter().map(|&f| (f, cand.table.restrict_to_freq(f)));
+            let inner = best_state_inner(states, &cand.assignment, cf, cfg, oracle)?;
+            Ok((inner, cand.measured))
         }
         DvfsMode::PerNode => {
-            let (table, start, profiled) = oracle.delta_table_for_freqs(base, view, &all);
-            Ok((run_inner(&table, start, cf, cfg), profiled))
+            let cand = oracle.delta_table_for_freqs(base, view, &all);
+            let warm = cand.warm.as_ref().map(|w| (w, &cand.dirty[..]));
+            let inner = run_inner(&cand.table, cand.assignment, cf, cfg, oracle, warm)?;
+            Ok((inner, cand.measured))
         }
         DvfsMode::Off => unreachable!("handled above"),
     }
@@ -431,43 +510,87 @@ fn evaluate_candidate_delta(
 
 /// Per-graph DVFS evaluation core: one pinned inner search per frequency
 /// state — NOMINAL first, so objective ties resolve to the nominal clock
-/// (and the off-mode plan) — keeping the best result and summing the eval
-/// counts across states. Shared by the full-rebuild and delta candidate
-/// paths so the tie-breaking contract (and with it the engines'
+/// (and the off-mode plan) — keeping the best result and summing the
+/// economy counters across states. Shared by the full-rebuild and delta
+/// candidate paths so the tie-breaking contract (and with it the engines'
 /// bit-identity, `rust/tests/determinism.rs`) cannot drift apart.
 fn best_state_inner(
     states: impl Iterator<Item = (FreqId, GraphCostTable)>,
     start: &Assignment,
     cf: &CostFunction,
     cfg: &SearchConfig,
-) -> InnerResult {
+    oracle: &CostOracle,
+) -> anyhow::Result<InnerResult> {
     let mut extra_evals = 0u64;
+    let mut extra_nodes = 0u64;
+    let mut extra_swept = 0u64;
     let mut best: Option<(f64, InnerResult)> = None;
     for (f, table) in states {
-        let inner = run_inner(&table, pinned_freq_start(start, f), cf, cfg);
+        let inner = run_inner(&table, pinned_freq_start(start, f), cf, cfg, oracle, None)?;
         extra_evals += inner.evals;
+        extra_nodes += inner.nodes;
+        extra_swept += inner.swept;
         let v = cf.eval(&inner.cost);
         if best.as_ref().is_none_or(|(bv, _)| v < *bv) {
             best = Some((v, inner));
         }
     }
-    let (_, mut inner) = best.expect("at least the nominal state evaluated");
+    let (_, mut inner) = best.ok_or_else(|| anyhow::anyhow!("no frequency state evaluated"))?;
     inner.evals = extra_evals;
-    inner
+    inner.nodes = extra_nodes;
+    inner.swept = extra_swept;
+    Ok(inner)
 }
 
+/// Warm-start context for one inner search: the parent's converged plan
+/// remapped onto the candidate, plus the candidate's dirty cone in
+/// compacted ids (the only nodes an additive search must re-derive).
+type Warm<'a> = (&'a Assignment, &'a [NodeId]);
+
+/// One inner search with the configured engine: the separable fast path
+/// for additive objectives (warm/dirty-scoped + memoized when
+/// `incremental_inner`, cold canonical re-derivation otherwise — both
+/// bit-identical), the literal Algorithm-2 sweep for non-additive ones
+/// (warm-started from the parent's plan when incremental).
 fn run_inner(
     table: &GraphCostTable,
     start: Assignment,
     cf: &CostFunction,
     cfg: &SearchConfig,
-) -> InnerResult {
-    if cfg.enable_inner {
-        let d = cfg.inner_distance.unwrap_or_else(|| cf.recommended_inner_distance());
-        inner_search(table, cf, d, start)
-    } else {
+    oracle: &CostOracle,
+    warm: Option<Warm<'_>>,
+) -> anyhow::Result<InnerResult> {
+    if !cfg.enable_inner {
         let cost = table.eval(&start);
-        InnerResult { assignment: start, cost, sweeps: 0, evals: 0 }
+        return Ok(InnerResult {
+            assignment: start,
+            cost,
+            sweeps: 0,
+            evals: 0,
+            warm: false,
+            nodes: 0,
+            swept: 0,
+        });
+    }
+    if cf.is_additive() {
+        let memo = cfg.incremental_inner.then_some(oracle);
+        if cfg.incremental_inner {
+            if let Some((plan, dirty)) = warm {
+                return inner_search_incremental(table, cf, plan.clone(), Some(dirty), memo);
+            }
+        }
+        return inner_search_incremental(table, cf, start, None, memo);
+    }
+    let d = cfg.inner_distance.unwrap_or_else(|| cf.recommended_inner_distance());
+    match warm {
+        Some((plan, _)) if cfg.incremental_inner => {
+            // Non-additive: full sweep, but from the parent's converged
+            // plan — a warmer basin than the cold default.
+            let mut r = inner_search(table, cf, d, plan.clone())?;
+            r.warm = true;
+            Ok(r)
+        }
+        _ => inner_search(table, cf, d, start),
     }
 }
 
@@ -556,21 +679,36 @@ pub fn outer_search(
     let oracle = &*ctx.oracle;
     let workers = cfg.effective_threads().max(1);
     let mut stats = SearchStats { threads: workers, ..Default::default() };
+    let argmin0 = oracle.argmin_stats();
     // (sites, enqueued, objective gain) per rule, name-ordered.
     let mut rule_acc: BTreeMap<&'static str, (usize, usize, f64)> = BTreeMap::new();
 
     // Inner search on the origin reuses the baseline table: no second
     // profile/table pass for g0. With DVFS enabled the origin gets the
     // full frequency-aware evaluation instead, so the untransformed graph
-    // competes on the same (G, A, f) footing as every candidate.
+    // competes on the same (G, A, f) footing as every candidate. A
+    // frontier probe's warm hint (the previous probe's origin plan) seeds
+    // the start — result-neutral for additive objectives, but it lets the
+    // economy counters attribute the origin run correctly.
     let inner0 = if cfg.dvfs == DvfsMode::Off || oracle.dvfs_freqs().is_empty() {
-        run_inner(&baseline.table, baseline.assignment.clone(), cf, cfg)
+        // The hint only applies when an incremental inner search will
+        // actually run — with the inner search disabled the start IS the
+        // plan, and a hint would leak the previous probe's choices into
+        // it (breaking the incremental on/off bit-identity contract).
+        let use_hint = cfg.incremental_inner && cfg.enable_inner;
+        let start = match (&baseline.warm_hint, use_hint) {
+            (Some(hint), true) => hint.clone(),
+            _ => baseline.assignment.clone(),
+        };
+        let mut r = run_inner(&baseline.table, start, cf, cfg, oracle, None)?;
+        r.warm = baseline.warm_hint.is_some() && use_hint;
+        r
     } else {
         let (inner, profiled) = evaluate_candidate(g0, oracle, cf, cfg)?;
         stats.profiled += profiled;
         inner
     };
-    stats.inner_evals += inner0.evals;
+    stats.add_inner(&inner0);
 
     let mut best_graph = g0.clone();
     let mut best_assignment = inner0.assignment.clone();
@@ -736,6 +874,7 @@ pub fn outer_search(
                         shapes: &entry_shapes[c.parent],
                         table,
                         assignment,
+                        converged: Some(&wave[c.parent].assignment),
                     };
                     evaluate_candidate_delta(&base, &c.view, oracle, cf, cfg)
                 } else {
@@ -756,7 +895,7 @@ pub fn outer_search(
                 let (inner, profiled) = outcome?;
                 stats.evaluated += 1;
                 stats.profiled += profiled;
-                stats.inner_evals += inner.evals;
+                stats.add_inner(&inner);
                 let value = cf.eval(&inner.cost);
                 let mut cached: Option<Graph> = cands[ci].graph.take();
                 if value < best_value {
@@ -795,6 +934,9 @@ pub fn outer_search(
             objective_gain,
         })
         .collect();
+    let argmin1 = oracle.argmin_stats();
+    stats.argmin_hits = argmin1.hits - argmin0.hits;
+    stats.argmin_misses = argmin1.misses - argmin0.misses;
     stats.wall_s = t_start.elapsed().as_secs_f64();
     Ok(OuterResult {
         graph: best_graph,

@@ -12,7 +12,9 @@ use eadgo::cost::{CostFunction, CostOracle, DeltaBase};
 use eadgo::energysim::FreqId;
 use eadgo::graph::canonical::{delta_hash, graph_hash, node_hashes};
 use eadgo::graph::{Activation, DeltaView, Graph, NodeId, OpKind, PortRef};
-use eadgo::search::{inner_search, optimize, OptimizerContext, SearchConfig};
+use eadgo::search::{
+    inner_search, inner_search_incremental, optimize, OptimizerContext, SearchConfig,
+};
 use eadgo::subst::{MatchContext, RuleSet};
 use eadgo::util::prop::check;
 use eadgo::util::rng::Rng;
@@ -194,16 +196,34 @@ fn prop_delta_artifacts_match_full_rebuild() {
             }
 
             // --- cost: carry-over table == fresh full table, every state ---
+            let base_conv = inner_search(&base_table, &CostFunction::Energy, 1, base_a.clone())
+                .map_err(|e| e.to_string())?;
             let base = DeltaBase {
                 graph: &g,
                 shapes: &shapes,
                 table: &base_table,
                 assignment: &base_a,
+                converged: Some(&base_conv.assignment),
             };
-            let (dt, da, _) = oracle.delta_table_for_freqs(&base, &view, &freqs);
+            let cand = oracle.delta_table_for_freqs(&base, &view, &freqs);
+            let (dt, da) = (&cand.table, &cand.assignment);
+            // The oracle's dirty cone must be exactly the view's live
+            // sig-dirty set (minus constant-space nodes), in compacted
+            // ids — pinning the two dirty-cone definitions together.
+            let expect_dirty: Vec<NodeId> = view
+                .sig_dirty_live()
+                .filter(|&i| !view.op(i).is_constant_space())
+                .map(|i| view.compact_id(i).expect("live node compacts"))
+                .collect();
+            if cand.dirty != expect_dirty {
+                return Err(format!(
+                    "{rule}: oracle dirty cone {:?} != view sig-dirty {:?}",
+                    cand.dirty, expect_dirty
+                ));
+            }
             let (ft, _) = oracle.table_for_freqs(&full, &fshapes, &freqs);
             let fa = Assignment::default_for_with(&full, &fshapes, oracle.reg());
-            if da != fa {
+            if *da != fa {
                 return Err(format!("{rule}: carried default assignment diverged"));
             }
             let d_ids: Vec<NodeId> = dt.costed_ids().collect();
@@ -232,7 +252,7 @@ fn prop_delta_artifacts_match_full_rebuild() {
                 }
             }
             // delta_cost == full re-costing at every DVFS frequency state
-            if bits(&dt.eval(&da)) != bits(&ft.eval(&fa)) {
+            if bits(&dt.eval(da)) != bits(&ft.eval(&fa)) {
                 return Err(format!("{rule}: default-assignment cost bits differ"));
             }
             for &f in &freqs {
@@ -243,10 +263,34 @@ fn prop_delta_artifacts_match_full_rebuild() {
                 }
             }
             // ...and the inner search walks identical numbers.
-            let di = inner_search(&dt, &CostFunction::Energy, 1, da.clone());
-            let fi = inner_search(&ft, &CostFunction::Energy, 1, fa.clone());
+            let di = inner_search(dt, &CostFunction::Energy, 1, da.clone())
+                .map_err(|e| e.to_string())?;
+            let fi = inner_search(&ft, &CostFunction::Energy, 1, fa.clone())
+                .map_err(|e| e.to_string())?;
             if di.assignment != fi.assignment || bits(&di.cost) != bits(&fi.cost) {
                 return Err(format!("{rule}: inner search diverged on delta table"));
+            }
+            // Warm start: the parent's converged plan remapped across
+            // compaction, re-optimizing only the dirty cone, must land on
+            // the exact same plan and cost bits as the cold re-derivation.
+            let warm = cand.warm.as_ref().expect("converged plan supplied");
+            let wi = inner_search_incremental(
+                dt,
+                &CostFunction::Energy,
+                warm.clone(),
+                Some(&cand.dirty),
+                None,
+            )
+            .map_err(|e| e.to_string())?;
+            if wi.assignment != di.assignment || bits(&wi.cost) != bits(&di.cost) {
+                return Err(format!("{rule}: warm dirty-only inner search diverged"));
+            }
+            if wi.swept > cand.dirty.len() as u64 {
+                return Err(format!(
+                    "{rule}: warm search swept {} nodes, dirty cone is {}",
+                    wi.swept,
+                    cand.dirty.len()
+                ));
             }
         }
         Ok(())

@@ -1,0 +1,219 @@
+//! Property suite for the incremental warm-start inner search (ISSUE 5):
+//! plans produced with `SearchConfig::incremental_inner = true` (warm
+//! starts from the parent's converged plan, dirty-cone-only sweeps,
+//! per-row argmin memoization) must be **bit-identical** to the cold
+//! reference (`incremental_inner = false`) across the model zoo, every
+//! DVFS mode, and every frontier weight — while the economy counters
+//! prove the warm path actually swept only the dirty cone.
+
+use eadgo::algo::Assignment;
+use eadgo::cost::{CostFunction, CostOracle, DeltaBase};
+use eadgo::energysim::FreqId;
+use eadgo::graph::canonical::graph_hash;
+use eadgo::graph::serde::plan_to_json;
+use eadgo::graph::DeltaView;
+use eadgo::models::{self, ModelConfig};
+use eadgo::search::{
+    inner_search, inner_search_incremental, optimize, optimize_frontier, DvfsMode,
+    OptimizerContext, SearchConfig,
+};
+use eadgo::subst::{MatchContext, RuleSet};
+
+fn model_cfg() -> ModelConfig {
+    ModelConfig { batch: 1, resolution: 64, width_div: 2, classes: 10 }
+}
+
+fn search_cfg(dvfs: DvfsMode, incremental_inner: bool) -> SearchConfig {
+    SearchConfig { max_dequeues: 12, dvfs, incremental_inner, ..Default::default() }
+}
+
+/// One optimization with a fresh context; the full bit-identity witness
+/// (graph bytes via hash, plan JSON, cost bit patterns).
+fn run(
+    model: &str,
+    objective: &CostFunction,
+    dvfs: DvfsMode,
+    incremental_inner: bool,
+) -> (u64, String, u64, u64) {
+    let g = models::by_name(model, model_cfg()).unwrap_or_else(|| panic!("no model {model}"));
+    let ctx = OptimizerContext::offline_default();
+    let r = optimize(&g, &ctx, objective, &search_cfg(dvfs, incremental_inner)).unwrap();
+    let plan_json = plan_to_json(&r.graph, &r.assignment).to_string_compact();
+    (graph_hash(&r.graph), plan_json, r.cost.time_ms.to_bits(), r.cost.energy_j.to_bits())
+}
+
+#[test]
+fn incremental_inner_bit_identical_across_zoo() {
+    for model in models::zoo_names() {
+        let warm = run(model, &CostFunction::Energy, DvfsMode::Off, true);
+        let cold = run(model, &CostFunction::Energy, DvfsMode::Off, false);
+        assert_eq!(warm, cold, "{model}: incremental inner search diverged from cold reference");
+    }
+}
+
+#[test]
+fn incremental_inner_bit_identical_across_dvfs_modes() {
+    for dvfs in [DvfsMode::PerGraph, DvfsMode::PerNode] {
+        for model in ["squeezenet", "resnet"] {
+            let warm = run(model, &CostFunction::Energy, dvfs, true);
+            let cold = run(model, &CostFunction::Energy, dvfs, false);
+            assert_eq!(
+                warm,
+                cold,
+                "{model}/dvfs={}: incremental inner search diverged",
+                dvfs.describe()
+            );
+        }
+    }
+}
+
+#[test]
+fn incremental_inner_bit_identical_across_frontier_weights() {
+    // Several weights: the linear objective at each frontier probe has
+    // its own argmin memo key, and probes 2..N warm-start from the
+    // previous probe's origin plan — none of which may move a bit.
+    let run = |incremental_inner: bool| -> Vec<(String, u64, u64)> {
+        let g = models::squeezenet::build(model_cfg());
+        let ctx = OptimizerContext::offline_default();
+        let cfg = search_cfg(DvfsMode::Off, incremental_inner);
+        let r = optimize_frontier(&g, &ctx, &cfg, 4).unwrap();
+        r.frontier
+            .points()
+            .iter()
+            .map(|p| {
+                (
+                    plan_to_json(&p.graph, &p.assignment).to_string_compact(),
+                    p.cost.time_ms.to_bits(),
+                    p.cost.energy_j.to_bits(),
+                )
+            })
+            .collect()
+    };
+    assert_eq!(run(true), run(false), "frontier points diverged between inner engines");
+}
+
+#[test]
+fn mixed_objective_bit_identical() {
+    let obj = CostFunction::linear(0.5);
+    let warm = run("inception", &obj, DvfsMode::Off, true);
+    let cold = run("inception", &obj, DvfsMode::Off, false);
+    assert_eq!(warm, cold);
+}
+
+#[test]
+fn warm_starts_sweep_only_dirty_nodes() {
+    // The acceptance instrumentation: under an additive objective every
+    // evaluated candidate warm-starts from its parent's converged plan
+    // and re-derives only the delta's dirty cone.
+    let g = models::squeezenet::build(model_cfg());
+    let ctx = OptimizerContext::offline_default();
+    let res = optimize(&g, &ctx, &CostFunction::Energy, &search_cfg(DvfsMode::Off, true)).unwrap();
+    assert!(res.stats.evaluated > 0, "search evaluated no candidates");
+    assert_eq!(
+        res.stats.inner_warm as usize, res.stats.evaluated,
+        "every candidate inner search must be warm-started"
+    );
+    assert_eq!(res.stats.inner_cold, 1, "only the origin runs cold");
+    assert!(
+        res.stats.inner_swept * 2 < res.stats.inner_nodes,
+        "dirty-cone sweeps must stay far below total decisions ({} vs {})",
+        res.stats.inner_swept,
+        res.stats.inner_nodes
+    );
+    let lookups = res.stats.argmin_hits + res.stats.argmin_misses;
+    assert!(lookups > 0, "incremental mode must consult the argmin memo");
+
+    // The cold reference records no warm starts and no memo traffic, and
+    // re-derives every visible node.
+    let ctx2 = OptimizerContext::offline_default();
+    let cold =
+        optimize(&g, &ctx2, &CostFunction::Energy, &search_cfg(DvfsMode::Off, false)).unwrap();
+    assert_eq!(cold.stats.inner_warm, 0);
+    assert_eq!(cold.stats.argmin_hits + cold.stats.argmin_misses, 0);
+    assert_eq!(cold.stats.inner_swept, cold.stats.inner_nodes);
+}
+
+#[test]
+fn per_node_dvfs_candidates_warm_start() {
+    let g = models::squeezenet::build(model_cfg());
+    let ctx = OptimizerContext::offline_default();
+    let res =
+        optimize(&g, &ctx, &CostFunction::Energy, &search_cfg(DvfsMode::PerNode, true)).unwrap();
+    assert!(res.stats.evaluated > 0);
+    assert_eq!(res.stats.inner_warm as usize, res.stats.evaluated);
+    assert!(res.stats.inner_swept * 2 < res.stats.inner_nodes);
+}
+
+#[test]
+fn argmin_memo_is_exact_and_warms_across_runs() {
+    // A second optimization through the same oracle answers its argmin
+    // lookups almost entirely from the memo — and lands on the identical
+    // plan.
+    let g = models::resnet::build(model_cfg());
+    let ctx = OptimizerContext::offline_default();
+    let cfg = search_cfg(DvfsMode::Off, true);
+    let a = optimize(&g, &ctx, &CostFunction::Energy, &cfg).unwrap();
+    let b = optimize(&g, &ctx, &CostFunction::Energy, &cfg).unwrap();
+    assert_eq!(graph_hash(&a.graph), graph_hash(&b.graph));
+    assert_eq!(a.assignment, b.assignment);
+    assert_eq!(a.cost.energy_j.to_bits(), b.cost.energy_j.to_bits());
+    assert_eq!(
+        b.stats.argmin_misses, 0,
+        "second run over carried rows must be scan-free ({} misses)",
+        b.stats.argmin_misses
+    );
+    assert!(b.stats.argmin_hit_rate() > 0.99);
+}
+
+#[test]
+fn site_level_warm_inner_matches_cold_bit_for_bit() {
+    // Unit-level core property (model-zoo-independent): for every rewrite
+    // site of SqueezeNet, the candidate's warm dirty-scoped inner search
+    // equals the cold full re-derivation — with and without the memo —
+    // and sweeps at most the dirty cone.
+    let g = models::squeezenet::build(model_cfg());
+    let shapes = g.infer_shapes().unwrap();
+    let consumers = g.consumers();
+    let cx = MatchContext::with_shapes_and_consumers(&g, &shapes, &consumers);
+    let oracle = CostOracle::offline_default();
+    let mut freqs = vec![FreqId::NOMINAL];
+    freqs.extend_from_slice(oracle.dvfs_freqs());
+    let (base_table, _) = oracle.table_for_freqs(&g, &shapes, &freqs);
+    let base_a = Assignment::default_for(&g, oracle.reg());
+    let cf = CostFunction::Energy;
+    let conv = inner_search(&base_table, &cf, 1, base_a.clone()).unwrap();
+
+    let mut checked = 0usize;
+    for site in RuleSet::standard().sites(&g, &cx) {
+        let delta = site.delta(&g);
+        let Ok(view) = DeltaView::new(&g, &shapes, delta, Some(&consumers)) else { continue };
+        let base = DeltaBase {
+            graph: &g,
+            shapes: &shapes,
+            table: &base_table,
+            assignment: &base_a,
+            converged: Some(&conv.assignment),
+        };
+        let cand = oracle.delta_table_for_freqs(&base, &view, &freqs);
+        let warm = cand.warm.clone().expect("converged supplied");
+        let cold = inner_search_incremental(&cand.table, &cf, cand.assignment.clone(), None, None)
+            .unwrap();
+        for memo in [None, Some(&oracle)] {
+            let wi = inner_search_incremental(
+                &cand.table,
+                &cf,
+                warm.clone(),
+                Some(&cand.dirty),
+                memo,
+            )
+            .unwrap();
+            assert_eq!(wi.assignment, cold.assignment, "{}: warm plan diverged", site.rule_name());
+            assert_eq!(wi.cost.energy_j.to_bits(), cold.cost.energy_j.to_bits());
+            assert_eq!(wi.cost.time_ms.to_bits(), cold.cost.time_ms.to_bits());
+            assert!(wi.swept <= cand.dirty.len() as u64);
+            assert!(wi.swept <= wi.nodes);
+        }
+        checked += 1;
+    }
+    assert!(checked > 0, "squeezenet must expose rewrite sites");
+}

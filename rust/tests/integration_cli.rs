@@ -88,6 +88,49 @@ fn optimize_save_plan_then_serve() {
 }
 
 #[test]
+fn incremental_inner_ab_plans_are_byte_identical() {
+    // The CLI face of the ISSUE-5 A/B contract: --incremental-inner off
+    // must emit byte-identical plan JSON (it also prints the economy
+    // table either way).
+    let dir = tmp("inner_ab");
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |mode: &str, tag: &str| -> (String, PathBuf) {
+        let plan = dir.join(format!("plan_{tag}.json"));
+        let out = run_ok(eadgo().args([
+            "optimize",
+            "--model",
+            "simple",
+            "--max-dequeues",
+            "16",
+            "--incremental-inner",
+            mode,
+            "--save-plan",
+            plan.to_str().unwrap(),
+            "--db",
+            dir.join(format!("db_{tag}.json")).to_str().unwrap(),
+        ]));
+        (out, plan)
+    };
+    let (out_on, plan_on) = run("on", "on");
+    let (out_off, plan_off) = run("off", "off");
+    assert!(out_on.contains("Inner-search economy"), "{out_on}");
+    assert!(out_on.contains("warm starts"), "{out_on}");
+    assert!(out_off.contains("Inner-search economy"), "{out_off}");
+    let on = std::fs::read(&plan_on).unwrap();
+    let off = std::fs::read(&plan_off).unwrap();
+    assert_eq!(on, off, "plan JSON diverged between inner engines");
+
+    // Mistyped value: strict flag policy.
+    let bad = eadgo()
+        .args(["optimize", "--model", "simple", "--incremental-inner", "warp9"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("--incremental-inner expects on|off"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn profile_warm_cache_second_run() {
     let dir = tmp("profile");
     std::fs::create_dir_all(&dir).unwrap();

@@ -96,7 +96,7 @@ fn inner_search_d1_equals_exhaustive_for_linear_costs() {
     let (table, _) = ctx.table_for(&g).unwrap();
     for cf in [CostFunction::Time, CostFunction::Energy, CostFunction::linear(0.3)] {
         let start = eadgo::algo::Assignment::default_for(&g, ctx.reg());
-        let greedy = eadgo::search::inner_search(&table, &cf, 1, start.clone());
+        let greedy = eadgo::search::inner_search(&table, &cf, 1, start.clone()).unwrap();
         let exact = eadgo::search::exhaustive_search(&table, &cf, &start, 2_000_000)
             .expect("space small enough");
         let gv = cf.eval(&greedy.cost);

@@ -154,7 +154,7 @@ fn prop_inner_d1_optimal_for_additive() {
         let w = rng.f64();
         for cf in [CostFunction::Time, CostFunction::Energy, CostFunction::linear(w)] {
             let start = random_assignment(&table, &base, rng);
-            let greedy = inner_search(&table, &cf, 1, start.clone());
+            let greedy = inner_search(&table, &cf, 1, start.clone()).map_err(|e| e.to_string())?;
             let Some(exact) = exhaustive_search(&table, &cf, &base, 200_000) else {
                 return Ok(()); // space too large for ground truth; skip case
             };
@@ -177,8 +177,8 @@ fn prop_inner_d2_never_worse_than_d1() {
         let base = Assignment::default_for(&g, ctx.reg());
         for cf in [CostFunction::Power, CostFunction::Product { w: 0.5 }] {
             let start = random_assignment(&table, &base, rng);
-            let d1 = inner_search(&table, &cf, 1, start.clone());
-            let d2 = inner_search(&table, &cf, 2, start);
+            let d1 = inner_search(&table, &cf, 1, start.clone()).map_err(|e| e.to_string())?;
+            let d2 = inner_search(&table, &cf, 2, start).map_err(|e| e.to_string())?;
             if cf.eval(&d2.cost) > cf.eval(&d1.cost) + 1e-9 {
                 return Err(format!(
                     "d=2 ({}) worse than d=1 ({}) for {}",
@@ -210,7 +210,7 @@ fn prop_cost_table_swap_matches_full_eval() {
         for id in table.costed_ids() {
             for (f, slab) in table.freq_options(id) {
                 for &(algo, _) in slab.iter() {
-                    let inc = table.eval_swap(full, &a, id, algo, *f);
+                    let inc = table.eval_swap(full, &a, id, algo, *f).map_err(|e| e.to_string())?;
                     let mut a2 = a.clone();
                     a2.set(id, algo);
                     a2.set_freq(id, *f);
@@ -388,7 +388,7 @@ fn prop_inner_d1_optimal_over_joint_freq_space() {
         let w = rng.f64();
         for cf in [CostFunction::Energy, CostFunction::linear(w)] {
             let start = random_assignment(&table, &base, rng);
-            let greedy = inner_search(&table, &cf, 1, start.clone());
+            let greedy = inner_search(&table, &cf, 1, start.clone()).map_err(|e| e.to_string())?;
             let Some(exact) = exhaustive_search(&table, &cf, &base, 200_000) else {
                 return Ok(()); // space too large for ground truth; skip case
             };
