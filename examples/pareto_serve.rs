@@ -75,6 +75,7 @@ fn main() -> anyhow::Result<()> {
             max_wait_s: 0.002,
             seed: 2026,
             input_shape: vec![1, 3, 64, 64],
+            phases: Vec::new(),
         };
         let report = serve_frontier(&serve_cfg, &costs, &AdaptiveConfig::default(), &mut exec)?;
         let lat = report.latency_summary();

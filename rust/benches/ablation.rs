@@ -21,6 +21,10 @@
 //!      delta-only engine vs the full-rebuild engine, with bit-identical
 //!      plans and a deterministic drop in per-candidate option
 //!      evaluations asserted.
+//!  10. adaptive batching — deadline-aware serving over the joint
+//!      (plan, freq, batch) operating-point surface vs the fixed batch-1
+//!      loop on a bursty calm/burst/calm trace: requests/joule and p99
+//!      (ISSUE 6).
 //! Run: `cargo bench --bench ablation [-- --quick]` (or EADGO_BENCH_QUICK=1).
 //! Emits `BENCH_ablation.json` (dir override: EADGO_BENCH_OUT_DIR).
 
@@ -29,8 +33,14 @@ use eadgo::graph::canonical::graph_hash;
 use eadgo::models::{self, ModelConfig};
 use eadgo::report::tables::frontier_table;
 use eadgo::report::{describe_freqs, f3, Table};
-use eadgo::search::{optimize, optimize_frontier, DvfsMode, OptimizerContext, SearchConfig};
-use eadgo::serve::{serve_frontier, AdaptiveConfig, ServeConfig, ServeReport};
+use eadgo::search::{
+    optimize, optimize_frontier, optimize_frontier_batched, price_plan_at_batch, DvfsMode,
+    OptimizerContext, SearchConfig,
+};
+use eadgo::serve::{
+    serve_frontier, serve_operating_points, AdaptiveConfig, OperatingPoint, RatePhase,
+    ServeConfig, ServeReport,
+};
 use eadgo::subst::{rules, RuleSet};
 use eadgo::tensor::Tensor;
 use eadgo::util::json::Json;
@@ -353,6 +363,7 @@ fn main() {
             max_wait_s: 0.002,
             seed: 2026,
             input_shape: vec![1, 3, 8, 8],
+            phases: Vec::new(),
         };
         let pc: Vec<GraphCost> = plan_costs.to_vec();
         serve_frontier(&scfg, plan_costs, &AdaptiveConfig::default(), move |idx, batch: &[Tensor]| {
@@ -634,6 +645,153 @@ fn main() {
         .set("carry_rate", incr9.stats.inner_carry_rate())
         .set("argmin_hit_rate", incr9.stats.argmin_hit_rate());
     payload.set("inner_search", inner_json);
+
+    // --- 10. deadline-aware adaptive batching vs the fixed batch-1 loop ------
+    // The ISSUE-6 claim: serving from the joint (plan, freq, batch)
+    // operating-point surface with deadline-aware batch formation beats
+    // the fixed batch-1 loop on requests/joule under bursty load without
+    // giving up tail latency. A tiny model keeps per-launch overhead
+    // visible, so batching amortizes real energy on the sim provider
+    // (batch 8 is several times cheaper per request); the burst phase runs
+    // at 1.4x the fixed loop's capacity, so the fixed loop backlogs while
+    // the batched point absorbs the burst with utilization to spare.
+    let bcfg = ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 };
+    let bg = models::squeezenet::build(bcfg);
+    let c10 = ctx();
+    let bres = optimize_frontier_batched(
+        &bg,
+        &c10,
+        &SearchConfig { max_dequeues: budget / 4, ..Default::default() },
+        2,
+        &[1, 8],
+    )
+    .unwrap();
+    let points = bres.frontier.points();
+    assert!(points.iter().any(|p| p.batch > 1), "surface must keep a batched point");
+    assert!(points.iter().any(|p| p.batch == 1), "surface must keep a batch-1 point");
+    // Fixed baseline: the cheapest batch-1 point — what the pre-batch-axis
+    // serve loop would pick for an energy objective — pinned as the only
+    // operating point, so batch formation is capped at one request.
+    let fixed_idx = points
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.batch == 1)
+        .min_by(|a, b| a.1.cost.energy_j.partial_cmp(&b.1.cost.energy_j).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    // Price every point's plan for all batch sizes it can form.
+    let grid: Vec<Vec<GraphCost>> = points
+        .iter()
+        .map(|p| {
+            (1..=p.batch)
+                .map(|m| price_plan_at_batch(&c10.oracle, &p.graph, &p.assignment, m).unwrap())
+                .collect()
+        })
+        .collect();
+    let all_ops: Vec<OperatingPoint> =
+        (0..points.len()).map(|i| OperatingPoint { plan: i, batch: points[i].batch }).collect();
+    let fixed_ops = vec![OperatingPoint { plan: fixed_idx, batch: 1 }];
+    let svc_fixed_s = SPIN_S_PER_SIM_MS * grid[fixed_idx][0].time_ms;
+    let calm = RatePhase::new(0.2 / svc_fixed_s, if quick { 16 } else { 32 });
+    let burst = RatePhase::new(1.4 / svc_fixed_s, if quick { 96 } else { 192 });
+    let serve_ops = |ops: &[OperatingPoint]| -> ServeReport {
+        let scfg = ServeConfig {
+            requests: 0,
+            batch_max: 8,
+            arrival_rate_hz: 0.0,
+            max_wait_s: 8.0 * svc_fixed_s,
+            seed: 2026,
+            input_shape: vec![1, 3, 32, 32],
+            phases: vec![calm, burst, calm],
+        };
+        let gc = grid.clone();
+        serve_operating_points(&scfg, &grid, ops, &AdaptiveConfig::default(), move |plan, batch| {
+            let target = SPIN_S_PER_SIM_MS * gc[plan][batch.len() - 1].time_ms;
+            let t0 = std::time::Instant::now();
+            while t0.elapsed().as_secs_f64() < target {}
+            Ok(batch.to_vec())
+        })
+        .unwrap()
+    };
+    let fixed10 = serve_ops(&fixed_ops);
+    let adapt10 = serve_ops(&all_ops);
+    let rpj_fixed = fixed10.requests_per_joule().expect("oracle energy present");
+    let rpj_adapt = adapt10.requests_per_joule().expect("oracle energy present");
+    let p99_fixed10 = fixed10.latency_summary().p99;
+    let p99_adapt10 = adapt10.latency_summary().p99;
+    let mut t = Table::new(
+        "Ablation 10: fixed batch-1 vs deadline-aware adaptive batching (bursty trace)",
+        &["serving", "requests/J", "p99 ms", "mean batch", "switches"],
+    );
+    for (label, r, rpj, p99) in [
+        ("fixed batch-1", &fixed10, rpj_fixed, p99_fixed10),
+        ("adaptive ops", &adapt10, rpj_adapt, p99_adapt10),
+    ] {
+        t.row(vec![
+            label.to_string(),
+            f3(rpj),
+            f3(p99 * 1e3),
+            format!("{:.2}", r.mean_batch_size()),
+            r.switches.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    // Energy accounting is oracle-priced per formed batch, so the
+    // requests/joule win is deterministic: burst batches fill toward 8
+    // within the admission deadline, and the fixed loop pays batch-1
+    // energy for every request.
+    assert!(
+        adapt10.mean_batch_size() > 1.5,
+        "adaptive loop must form real batches under burst (mean {})",
+        adapt10.mean_batch_size()
+    );
+    assert!(
+        rpj_adapt > rpj_fixed * 1.05,
+        "adaptive batching must beat fixed batch-1 on requests/joule: {rpj_adapt} vs {rpj_fixed}"
+    );
+    // The p99 side compares two wallclock-measured busy-spin runs; as in
+    // section 7, downgrade the bound to a note when host preemption
+    // inflates measured busy time past the spin budget.
+    let spin_budget10 = |r: &ServeReport, ops: &[OperatingPoint]| -> f64 {
+        r.records
+            .iter()
+            .map(|x| {
+                SPIN_S_PER_SIM_MS * grid[ops[x.plan].plan][x.batch_size - 1].time_ms
+                    / x.batch_size as f64
+            })
+            .sum()
+    };
+    let quiet_host10 = fixed10.busy_s <= spin_budget10(&fixed10, &fixed_ops) * 1.3
+        && adapt10.busy_s <= spin_budget10(&adapt10, &all_ops) * 1.3;
+    if quiet_host10 {
+        assert!(
+            p99_adapt10 <= p99_fixed10 * 1.1 + 1e-6,
+            "adaptive p99 {p99_adapt10} must stay within 1.1x of fixed {p99_fixed10}"
+        );
+    } else {
+        eprintln!(
+            "NOTE: host preemption detected (busy time >130% of spin budget) — \
+             skipping the adaptive-batching p99 bound ({p99_adapt10} vs {p99_fixed10})"
+        );
+    }
+    println!(
+        "adaptive batching: {} -> {} requests/joule ({:.2}x), p99 {} vs {} ms, mean batch {:.2}\n",
+        f3(rpj_fixed),
+        f3(rpj_adapt),
+        rpj_adapt / rpj_fixed,
+        f3(p99_adapt10 * 1e3),
+        f3(p99_fixed10 * 1e3),
+        adapt10.mean_batch_size(),
+    );
+    let mut serve10_json = Json::obj();
+    serve10_json
+        .set("requests_per_joule_fixed", rpj_fixed)
+        .set("requests_per_joule_adaptive", rpj_adapt)
+        .set("p99_ms_fixed", p99_fixed10 * 1e3)
+        .set("p99_ms_adaptive", p99_adapt10 * 1e3)
+        .set("mean_batch_adaptive", adapt10.mean_batch_size())
+        .set("operating_points", points.len());
+    payload.set("serve", serve10_json);
 
     eadgo::util::bench::emit_bench_json("ablation", &payload).expect("bench payload write");
 }

@@ -40,6 +40,12 @@ pub struct RunConfig {
     pub artifacts_dir: PathBuf,
     /// Cost provider: "sim" (V100 model) or "cpu" (real measurement).
     pub provider: String,
+    /// Default dispatcher batch cap for `eadgo serve` (CLI `--batch-max`
+    /// overrides).
+    pub serve_batch_max: usize,
+    /// Default batch-fill window for `eadgo serve`, milliseconds (CLI
+    /// `--max-wait-ms` overrides).
+    pub serve_max_wait_ms: f64,
 }
 
 impl Default for RunConfig {
@@ -58,6 +64,8 @@ impl Default for RunConfig {
             db_path: PathBuf::from("profiles.json"),
             artifacts_dir: PathBuf::from("artifacts"),
             provider: "sim".into(),
+            serve_batch_max: 4,
+            serve_max_wait_ms: 2.0,
         }
     }
 }
@@ -121,6 +129,17 @@ impl RunConfig {
         }
         if let Some(s) = v.get("provider").and_then(Json::as_str) {
             cfg.provider = s.to_string();
+        }
+        if let Some(x) = v.get("serve_batch_max").and_then(Json::as_usize) {
+            anyhow::ensure!(x >= 1, "serve_batch_max must be >= 1");
+            cfg.serve_batch_max = x;
+        }
+        if let Some(x) = v.get("serve_max_wait_ms").and_then(Json::as_f64) {
+            anyhow::ensure!(
+                x.is_finite() && x >= 0.0,
+                "serve_max_wait_ms must be finite and >= 0"
+            );
+            cfg.serve_max_wait_ms = x;
         }
         if let Some(m) = v.get("model_config") {
             if let Some(x) = m.get("batch").and_then(Json::as_usize) {
@@ -247,6 +266,36 @@ mod tests {
         assert_eq!(cfg.max_dequeues, 50);
         assert_eq!(cfg.model_cfg.resolution, 16);
         assert!(cfg.cost_function().is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_keys_load_and_validate() {
+        let dir = std::env::temp_dir().join("eadgo_cfg_serve_test");
+        let path = dir.join("run.json");
+
+        let mut j = Json::obj();
+        j.set("serve_batch_max", 16usize).set("serve_max_wait_ms", 0.5);
+        json::write_file(&path, &j).unwrap();
+        let cfg = RunConfig::load(&path).unwrap();
+        assert_eq!(cfg.serve_batch_max, 16);
+        assert_eq!(cfg.serve_max_wait_ms, 0.5);
+
+        // Defaults when absent.
+        let d = RunConfig::default();
+        assert_eq!(d.serve_batch_max, 4);
+        assert_eq!(d.serve_max_wait_ms, 2.0);
+
+        // Out-of-range values are config errors, not silent clamps.
+        let mut bad = Json::obj();
+        bad.set("serve_batch_max", 0usize);
+        json::write_file(&path, &bad).unwrap();
+        assert!(RunConfig::load(&path).is_err());
+        let mut bad = Json::obj();
+        bad.set("serve_max_wait_ms", -1.0);
+        json::write_file(&path, &bad).unwrap();
+        assert!(RunConfig::load(&path).is_err());
+
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -92,6 +92,46 @@ impl Graph {
         &mut self.nodes[id.0]
     }
 
+    /// The graph re-instantiated at batch size `batch`: every
+    /// [`OpKind::Input`] leading (batch) dimension is multiplied by
+    /// `batch`, and the change propagates through shape inference to every
+    /// activation tensor. Weights and other constant-space nodes are
+    /// untouched — they are batch-invariant, which is exactly what makes
+    /// batching pay: weight traffic amortizes over the batch while
+    /// activation traffic and compute scale with it.
+    ///
+    /// Because node *signatures* embed input shapes, the rebatched graph
+    /// keys the entire cost stack (energysim work, `CostDb` entries,
+    /// oracle resolve cache, cost slabs) on batch automatically.
+    /// `rebatch(1)` returns a plain clone, so batch=1 costing is
+    /// bit-identical to the pre-batch-axis pipeline by construction.
+    pub fn rebatch(&self, batch: usize) -> Result<Graph, String> {
+        if batch == 0 {
+            return Err("batch size must be >= 1".into());
+        }
+        let mut g = self.clone();
+        if batch == 1 {
+            return Ok(g);
+        }
+        let mut scaled = 0usize;
+        for id in g.ids().collect::<Vec<_>>() {
+            if let OpKind::Input { shape } = &mut g.node_mut(id).op {
+                match shape.first_mut() {
+                    Some(n) => {
+                        *n *= batch;
+                        scaled += 1;
+                    }
+                    None => return Err(format!("input node {} has a rank-0 shape", id.0)),
+                }
+            }
+        }
+        if scaled == 0 {
+            return Err("graph has no Input nodes to rebatch".into());
+        }
+        g.validate()?;
+        Ok(g)
+    }
+
     /// Total node count (including constant-space nodes).
     pub fn len(&self) -> usize {
         self.nodes.len()
@@ -420,5 +460,60 @@ mod tests {
         let d = g.dump();
         assert!(d.contains("conv2d"));
         assert!(d.contains("outputs:"));
+    }
+
+    #[test]
+    fn rebatch_scales_activations_not_weights() {
+        let g = tiny_graph();
+        let g4 = g.rebatch(4).unwrap();
+        let shapes = g4.infer_shapes().unwrap();
+        // Input and every activation lead with the new batch dim.
+        for (id, node) in g4.nodes() {
+            match &node.op {
+                OpKind::Input { shape } => assert_eq!(shape[0], 4),
+                OpKind::Weight { shape, .. } => {
+                    // weights untouched — batch-invariant
+                    assert_eq!(shape, match &g.node(id).op {
+                        OpKind::Weight { shape, .. } => shape,
+                        _ => unreachable!(),
+                    });
+                }
+                _ => assert_eq!(shapes[id.0][0][0], 4, "node {} not batched", id.0),
+            }
+        }
+        // Node ids and count are preserved: assignments carry over as-is.
+        assert_eq!(g4.len(), g.len());
+    }
+
+    #[test]
+    fn rebatch_one_is_identity_clone() {
+        let g = tiny_graph();
+        let g1 = g.rebatch(1).unwrap();
+        assert_eq!(
+            crate::graph::canonical::graph_hash(&g),
+            crate::graph::canonical::graph_hash(&g1)
+        );
+        // Signatures (the cost-db keys) are unchanged at batch=1.
+        let s0 = g.infer_shapes().unwrap();
+        let s1 = g1.infer_shapes().unwrap();
+        assert_eq!(s0, s1);
+    }
+
+    #[test]
+    fn rebatch_changes_signatures_for_batch_gt_one() {
+        // The batch axis keys the cost stack through node signatures:
+        // a rebatched conv must present a different signature (different
+        // db row / slab key) than its batch-1 twin.
+        let g = tiny_graph();
+        let g2 = g.rebatch(2).unwrap();
+        let conv = NodeId(2);
+        let sig1 = g.node_signature(conv, &g.infer_shapes().unwrap());
+        let sig2 = g2.node_signature(conv, &g2.infer_shapes().unwrap());
+        assert_ne!(sig1, sig2);
+    }
+
+    #[test]
+    fn rebatch_zero_rejected() {
+        assert!(tiny_graph().rebatch(0).is_err());
     }
 }

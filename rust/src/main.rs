@@ -82,7 +82,7 @@ const COMMON_OPTS: &[&str] = &[
 /// instead of a silently-ignored option (or a panic downstream).
 fn validate_args(args: &Args) -> anyhow::Result<()> {
     let extra: &[&str] = match args.subcommand.as_deref() {
-        Some("optimize") => &["save-plan", "frontier", "save-frontier"],
+        Some("optimize") => &["save-plan", "frontier", "save-frontier", "batches"],
         Some("reproduce") => {
             return args
                 .require_known(&["table", "quick", "seed"])
@@ -98,6 +98,7 @@ fn validate_args(args: &Args) -> anyhow::Result<()> {
             "batch-max",
             "rate",
             "max-wait-ms",
+            "burst",
             "frontier",
             "adaptive",
         ],
@@ -120,8 +121,8 @@ USAGE: eadgo <subcommand> [--options]
             [--alpha 1.05] [--inner-distance D] [--max-dequeues N]
             [--threads T] [--dvfs off|per-graph|per-node]
             [--incremental-inner on|off] [--frontier N]
-            [--save-frontier plans.json] [--db profiles.json]
-            [--provider sim|cpu] [--config run.json]
+            [--batches 1,2,4,8] [--save-frontier plans.json]
+            [--db profiles.json] [--provider sim|cpu] [--config run.json]
   reproduce --table (1|2|3|4|5|all) [--quick] [--seed S]
   profile   --model M [--provider sim|cpu] [--db profiles.json]
   constrain --model M --time-budget MS [--probes 8] [--threads T]
@@ -129,7 +130,8 @@ USAGE: eadgo <subcommand> [--options]
   run       --model M [--artifacts DIR] [--iters N]
   serve     --model M [--plan plan.json] [--frontier plans.json]
             [--adaptive] [--optimize [OBJ]] [--requests N]
-            [--batch-max B] [--rate HZ] [--artifacts DIR] [--threads T]
+            [--batch-max B] [--rate HZ] [--max-wait-ms MS]
+            [--burst R1:N1,R2:N2,...] [--artifacts DIR] [--threads T]
   show      --model M
   zoo
 
@@ -161,6 +163,21 @@ USAGE: eadgo <subcommand> [--options]
   depth and switch the active plan across the frontier (energy-optimal
   under light load, latency-optimal under pressure, with hysteresis).
   serve --optimize --adaptive builds a 4-point frontier inline.
+
+  optimize --frontier N --batches 1,4,8 sweeps batch size jointly with
+  the plan and frequency: every plan is priced at every batch (weights
+  amortize, activations scale) and the frontier becomes a surface of
+  (plan, freq, batch) operating points over (batch latency,
+  energy/request), saved as a v3 manifest with per-plan batch. Serving
+  such a frontier with --adaptive turns on deadline-aware batching:
+  the controller picks an operating point from live queue depth and
+  arrival rate, the dispatcher targets its batch size but never holds
+  the oldest request past --max-wait-ms (admission control), and each
+  formed batch is charged the oracle's price at its actual size.
+  --burst RATE:COUNT,... replays a piecewise-rate Poisson trace (e.g.
+  calm:burst:calm) instead of the single --rate process; phases define
+  the request count, so --requests/--rate are rejected alongside it.
+  serve defaults honor config keys serve_batch_max / serve_max_wait_ms.
 ";
 
 fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
@@ -201,6 +218,10 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         !args.flag("save-frontier"),
         "--save-frontier expects a path, e.g. `--save-frontier plans.json`"
     );
+    anyhow::ensure!(
+        !args.flag("batches"),
+        "--batches expects a batch-size list, e.g. `--batches 1,2,4,8`"
+    );
     if let Some(nspec) = args.get("frontier") {
         // Refuse combinations we would otherwise silently ignore (the
         // strict-flag policy: no option is accepted and then dropped).
@@ -221,6 +242,7 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         args.get("save-frontier").is_none(),
         "--save-frontier requires --frontier N"
     );
+    anyhow::ensure!(args.get("batches").is_none(), "--batches requires --frontier N");
     println!(
         "optimizing {} ({} nodes) for {} (alpha={}, provider={}, threads={}, dvfs={})",
         cfg.model,
@@ -281,6 +303,47 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse `--batches 1,2,4,8` (strict-flag policy: every element must be
+/// an integer; range/ordering rules are enforced by the search layer).
+fn parse_batches(spec: &str) -> anyhow::Result<Vec<usize>> {
+    spec.split(',')
+        .map(|part| {
+            part.trim().parse::<usize>().map_err(|_| {
+                anyhow::anyhow!(
+                    "--batches expects a comma-separated batch-size list, e.g. `--batches 1,2,4,8`, got `{part}`"
+                )
+            })
+        })
+        .collect()
+}
+
+/// Parse `--burst RATE:COUNT,RATE:COUNT,...` into arrival phases.
+fn parse_burst(spec: &str) -> anyhow::Result<Vec<eadgo::serve::RatePhase>> {
+    spec.split(',')
+        .map(|part| {
+            let (rate, count) = part.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--burst expects RATE:COUNT phases, e.g. `--burst 100:32,2000:192,100:32`, got `{part}`"
+                )
+            })?;
+            let rate_hz: f64 = rate
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--burst phase rate `{rate}` is not a number"))?;
+            let requests: usize = count
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--burst phase count `{count}` is not an integer"))?;
+            anyhow::ensure!(
+                rate_hz.is_finite() && rate_hz > 0.0,
+                "--burst phase rate must be a positive finite req/s, got `{rate}`"
+            );
+            anyhow::ensure!(requests >= 1, "--burst phase count must be >= 1");
+            Ok(eadgo::serve::RatePhase::new(rate_hz, requests))
+        })
+        .collect()
+}
+
 /// `optimize --frontier N`: enumerate a pareto frontier instead of a
 /// single plan (the --objective flag is ignored — the sweep covers the
 /// whole energy/time weight range).
@@ -292,22 +355,40 @@ fn cmd_optimize_frontier(
     scfg: &eadgo::search::SearchConfig,
     n: usize,
 ) -> anyhow::Result<()> {
-    println!(
-        "enumerating a {n}-point pareto frontier for {} ({} nodes; alpha={}, provider={}, threads={}, dvfs={})",
-        cfg.model,
-        g0.runtime_node_count(),
-        cfg.alpha,
-        cfg.provider,
-        scfg.effective_threads(),
-        scfg.dvfs.describe()
-    );
-    let res = eadgo::search::optimize_frontier(g0, ctx, scfg, n)?;
+    let batches = match args.get("batches") {
+        Some(spec) => parse_batches(spec)?,
+        None => vec![1],
+    };
+    if batches == [1] {
+        println!(
+            "enumerating a {n}-point pareto frontier for {} ({} nodes; alpha={}, provider={}, threads={}, dvfs={})",
+            cfg.model,
+            g0.runtime_node_count(),
+            cfg.alpha,
+            cfg.provider,
+            scfg.effective_threads(),
+            scfg.dvfs.describe()
+        );
+    } else {
+        println!(
+            "enumerating a {n}-point-per-batch operating surface for {} over batches {:?} ({} nodes; alpha={}, provider={}, threads={}, dvfs={})",
+            cfg.model,
+            batches,
+            g0.runtime_node_count(),
+            cfg.alpha,
+            cfg.provider,
+            scfg.effective_threads(),
+            scfg.dvfs.describe()
+        );
+    }
+    let res = eadgo::search::optimize_frontier_batched(g0, ctx, scfg, n, &batches)?;
     print!("{}", tables::frontier_table(&res.frontier, Some(&res.original)).render());
     println!("probes:");
     for p in &res.probes {
         println!(
-            "  w_energy={:.2}  time {} ms  energy {} J/1k  search {:.2}s",
+            "  w_energy={:.2}  batch={}  time {} ms  energy {} J/1k  search {:.2}s",
             p.weight,
+            p.batch,
             f3(p.cost.time_ms),
             f3(p.cost.energy_j),
             p.wall_s
@@ -502,6 +583,7 @@ fn serve_frontier_source(
             assignment: a,
             cost,
             weight: 1.0,
+            batch: 1,
         }]))
     };
     if let Some(path) = args.get("frontier") {
@@ -600,16 +682,84 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         })
         .ok_or_else(|| anyhow::anyhow!("graph has no input"))?;
 
+    // Strict serve-knob validation: out-of-range values are CLI errors,
+    // never silent clamps. Config keys serve_batch_max / serve_max_wait_ms
+    // provide the defaults; flags override.
+    let requests = args.get_usize("requests", 64)?;
+    anyhow::ensure!(requests >= 1, "--requests must be >= 1");
+    let batch_max = args.get_usize("batch-max", cfg.serve_batch_max)?;
+    anyhow::ensure!(
+        (1..=4096).contains(&batch_max),
+        "--batch-max must be in 1..=4096, got {batch_max}"
+    );
+    let rate = args.get_f64("rate", 500.0)?;
+    anyhow::ensure!(
+        rate.is_finite() && rate > 0.0,
+        "--rate must be a positive finite req/s, got {rate}"
+    );
+    let max_wait_ms = args.get_f64("max-wait-ms", cfg.serve_max_wait_ms)?;
+    anyhow::ensure!(
+        max_wait_ms.is_finite() && max_wait_ms >= 0.0,
+        "--max-wait-ms must be finite and >= 0, got {max_wait_ms}"
+    );
+    let phases = match args.get("burst") {
+        Some(spec) => {
+            anyhow::ensure!(
+                args.get("requests").is_none(),
+                "--burst phases define the request count; drop --requests"
+            );
+            anyhow::ensure!(
+                args.get("rate").is_none(),
+                "--burst phases define the arrival rate; drop --rate"
+            );
+            parse_burst(spec)?
+        }
+        None => Vec::new(),
+    };
     let scfg = eadgo::serve::ServeConfig {
-        requests: args.get_usize("requests", 64)?,
-        batch_max: args.get_usize("batch-max", 4)?,
-        arrival_rate_hz: args.get_f64("rate", 500.0)?,
-        max_wait_s: args.get_f64("max-wait-ms", 2.0)? * 1e-3,
+        requests,
+        batch_max,
+        arrival_rate_hz: rate,
+        max_wait_s: max_wait_ms * 1e-3,
         seed: cfg.seed,
         input_shape,
+        phases,
     };
     let policy = eadgo::serve::AdaptiveConfig::default();
     let use_controller = adaptive && points.len() > 1;
+    // A batched frontier behind --adaptive serves (plan, batch) operating
+    // points with deadline-aware batch formation instead of the plain
+    // plan-switching loop.
+    let use_ops = adaptive && points.iter().any(|p| p.batch > 1);
+    let ops: Vec<eadgo::serve::OperatingPoint> = points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| eadgo::serve::OperatingPoint { plan: i, batch: p.batch })
+        .collect();
+    let grid: Vec<Vec<eadgo::cost::GraphCost>> = if use_ops {
+        println!(
+            "serving {} operating points (batches {:?}, dispatcher cap {batch_max})",
+            ops.len(),
+            ops.iter().map(|o| o.batch).collect::<Vec<_>>()
+        );
+        points
+            .iter()
+            .map(|p| {
+                (1..=p.batch.min(batch_max))
+                    .map(|m| {
+                        eadgo::search::price_plan_at_batch(
+                            &ctx.oracle,
+                            &p.graph,
+                            &p.assignment,
+                            m,
+                        )
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?
+    } else {
+        Vec::new()
+    };
 
     let manifest_path = cfg.artifacts_dir.join("manifest.json");
     let report = if manifest_path.exists() {
@@ -636,7 +786,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             }
             Ok(outs)
         };
-        if use_controller {
+        if use_ops {
+            eadgo::serve::serve_operating_points(&scfg, &grid, &ops, &policy, exec)?
+        } else if use_controller {
             eadgo::serve::serve_frontier(&scfg, &costs, &policy, exec)?
         } else {
             let p = points[0];
@@ -666,7 +818,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             }
             Ok(outs)
         };
-        if use_controller {
+        if use_ops {
+            eadgo::serve::serve_operating_points(&scfg, &grid, &ops, &policy, exec)?
+        } else if use_controller {
             eadgo::serve::serve_frontier(&scfg, &costs, &policy, exec)?
         } else {
             let p = points[0];
@@ -702,10 +856,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             eadgo::report::describe_freqs(&points[0].assignment)
         );
     }
-    if use_controller {
+    if use_controller || use_ops {
         println!(
-            "adaptive controller: {} plan switch(es), request distribution {}",
+            "adaptive controller: {} {} switch(es), request distribution {}",
             report.switches.len(),
+            if use_ops { "operating-point" } else { "plan" },
             report.plan_distribution()
         );
         for s in &report.switches {
@@ -716,6 +871,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
         if let Some(e) = report.energy_mj_per_request {
             println!("oracle-estimated energy/request served: {} mJ", f3(e));
+        }
+        if let Some(rpj) = report.requests_per_joule() {
+            println!("oracle-estimated requests/joule: {}", f3(rpj));
         }
     }
     Ok(())

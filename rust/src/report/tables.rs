@@ -441,8 +441,9 @@ pub fn table4(cfg: &ExperimentConfig) -> (Table, Table4Data) {
 /// append an `origin` reference row.
 pub fn frontier_table(f: &PlanFrontier, original: Option<&GraphCost>) -> Table {
     let mut t = Table::new(
-        "Pareto plan frontier (latency vs energy, fastest-first)",
-        &["plan", "w_energy", "time_ms", "power_w", "energy_j/1k", "freq", "role"],
+        "Pareto operating-point frontier (batch latency vs energy/request, fastest-first)",
+        &["plan", "w_energy", "batch", "time_ms", "power_w", "energy_j/1k", "e_j/req", "freq",
+          "role"],
     );
     let n = f.len();
     for (i, p) in f.points().iter().enumerate() {
@@ -458,9 +459,11 @@ pub fn frontier_table(f: &PlanFrontier, original: Option<&GraphCost>) -> Table {
         t.row(vec![
             format!("p{i}"),
             format!("{:.2}", p.weight),
+            p.batch.to_string(),
             f3(p.cost.time_ms),
             f3(p.cost.power_w()),
             f3(p.cost.energy_j),
+            f3(p.energy_per_request()),
             describe_freqs(&p.assignment),
             role.to_string(),
         ]);
@@ -469,8 +472,10 @@ pub fn frontier_table(f: &PlanFrontier, original: Option<&GraphCost>) -> Table {
         t.row(vec![
             "origin".to_string(),
             "-".to_string(),
+            "1".to_string(),
             f3(o.time_ms),
             f3(o.power_w()),
+            f3(o.energy_j),
             f3(o.energy_j),
             "nominal".to_string(),
             "unoptimized".to_string(),
@@ -641,12 +646,14 @@ mod tests {
                 assignment: a.clone(),
                 cost: GraphCost { time_ms: 1.0, energy_j: 200.0, freq: FreqId::NOMINAL },
                 weight: 0.0,
+                batch: 1,
             },
             PlanPoint {
                 graph: g,
                 assignment: a,
-                cost: GraphCost { time_ms: 2.0, energy_j: 100.0, freq: FreqId::NOMINAL },
+                cost: GraphCost { time_ms: 2.0, energy_j: 400.0, freq: FreqId::NOMINAL },
                 weight: 1.0,
+                batch: 8,
             },
         ]);
         let origin = GraphCost { time_ms: 3.0, energy_j: 400.0, freq: FreqId::NOMINAL };
@@ -654,6 +661,8 @@ mod tests {
         assert!(r.contains("latency-optimal"), "{r}");
         assert!(r.contains("energy-optimal"), "{r}");
         assert!(r.contains("origin"), "{r}");
+        // The batch column renders the operating point's batch size.
+        assert!(r.contains('8'), "{r}");
     }
 
     #[test]

@@ -134,8 +134,15 @@ impl Manifest {
 // Plan-frontier persistence
 // ---------------------------------------------------------------------------
 
-/// Current frontier-manifest format version.
+/// Frontier-manifest format version for pure batch-1 frontiers. Kept at 2
+/// so a frontier with no batch axis serializes byte-identically to the
+/// pre-batch-axis writer.
 const FRONTIER_VERSION: i64 = 2;
+
+/// Frontier-manifest version once any plan carries a batch size > 1: v3
+/// annotates every plan entry with its `batch` operating point. Loaders
+/// default a missing `batch` to 1, so v2 files remain readable forever.
+const FRONTIER_VERSION_BATCHED: i64 = 3;
 
 fn cost_to_json(c: &GraphCost) -> Json {
     let mut o = Json::obj();
@@ -155,10 +162,18 @@ fn cost_from_json(v: &Json) -> anyhow::Result<GraphCost> {
 
 /// Serialize a [`PlanFrontier`] as a versioned frontier manifest: every
 /// entry is a complete single-plan document (the `--save-plan` format)
-/// plus its probe weight and oracle cost estimate.
+/// plus its probe weight and oracle cost estimate. Frontiers whose points
+/// are all `batch = 1` emit the v2 format with no `batch` keys — byte
+/// identical to the pre-batch-axis writer; any `batch > 1` point upgrades
+/// the document to v3, where every plan entry carries its batch.
 pub fn frontier_to_json(f: &PlanFrontier) -> Json {
+    let batched = f.points().iter().any(|p| p.batch > 1);
     let mut root = Json::obj();
-    root.set("version", FRONTIER_VERSION).set("kind", "plan_frontier");
+    root.set(
+        "version",
+        if batched { FRONTIER_VERSION_BATCHED } else { FRONTIER_VERSION },
+    )
+    .set("kind", "plan_frontier");
     root.set(
         "plans",
         Json::Arr(
@@ -167,6 +182,9 @@ pub fn frontier_to_json(f: &PlanFrontier) -> Json {
                 .map(|p| {
                     let mut o = plan_to_json(&p.graph, &p.assignment);
                     o.set("weight", p.weight).set("cost", cost_to_json(&p.cost));
+                    if batched {
+                        o.set("batch", p.batch as i64);
+                    }
                     o
                 })
                 .collect(),
@@ -208,7 +226,19 @@ pub fn frontier_from_json(v: &Json, reg: &AlgorithmRegistry) -> anyhow::Result<P
             None => anyhow::bail!("frontier plan {i} missing `cost`"),
         };
         let weight = e.get("weight").and_then(Json::as_f64).unwrap_or(1.0);
-        points.push(PlanPoint { graph, assignment, cost, weight });
+        // v3 operating points name their batch; v2/legacy entries are
+        // batch-1 by definition.
+        let batch = match e.get("batch") {
+            Some(b) => {
+                let b = b
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("frontier plan {i}: `batch` not an integer"))?;
+                anyhow::ensure!(b >= 1, "frontier plan {i}: `batch` must be >= 1");
+                b
+            }
+            None => 1,
+        };
+        points.push(PlanPoint { graph, assignment, cost, weight, batch });
     }
     Ok(PlanFrontier::from_points(points))
 }
@@ -277,12 +307,14 @@ mod tests {
                 assignment: fast,
                 cost: GraphCost { time_ms: 1.0, energy_j: 250.0, freq: FreqId::NOMINAL },
                 weight: 0.0,
+                batch: 1,
             },
             PlanPoint {
                 graph: g,
                 assignment: slow,
                 cost: GraphCost { time_ms: 2.5, energy_j: 125.0, freq: FreqId(900) },
                 weight: 1.0,
+                batch: 1,
             },
         ])
     }
@@ -359,5 +391,70 @@ mod tests {
         let j = crate::util::json::parse(r#"{"version": 2, "plans": {"oops": 1}}"#).unwrap();
         let err = frontier_from_json(&j, &AlgorithmRegistry::new()).unwrap_err().to_string();
         assert!(err.contains("not an array"), "{err}");
+    }
+
+    fn batched_frontier() -> PlanFrontier {
+        use crate::models::{self, ModelConfig};
+        let cfg = ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 };
+        let reg = AlgorithmRegistry::new();
+        let g = models::simple::build_cnn(cfg);
+        let a = Assignment::default_for(&g, &reg);
+        let g8 = g.rebatch(8).unwrap();
+        PlanFrontier::from_points(vec![
+            PlanPoint {
+                graph: g,
+                assignment: a.clone(),
+                cost: GraphCost { time_ms: 1.0, energy_j: 250.0, freq: FreqId::NOMINAL },
+                weight: 0.0,
+                batch: 1,
+            },
+            PlanPoint {
+                graph: g8,
+                assignment: a,
+                cost: GraphCost { time_ms: 2.5, energy_j: 800.0, freq: FreqId::NOMINAL },
+                weight: 1.0,
+                batch: 8, // 100 mJ/request
+            },
+        ])
+    }
+
+    #[test]
+    fn batch1_frontier_serializes_as_v2_without_batch_keys() {
+        // Format stability: the batch axis must be invisible for pure
+        // batch-1 frontiers — same version, no extra keys, so pre-batch
+        // tooling (and the byte-diff CI jobs) see identical documents.
+        let j = frontier_to_json(&tiny_frontier());
+        assert_eq!(j.get("version").and_then(Json::as_usize), Some(2));
+        let plans = j.get("plans").and_then(Json::as_arr).unwrap();
+        assert!(plans.iter().all(|p| p.get("batch").is_none()));
+    }
+
+    #[test]
+    fn batched_frontier_roundtrips_as_v3_with_per_plan_batch() {
+        use crate::graph::canonical::graph_hash;
+        let f = batched_frontier();
+        assert_eq!(f.len(), 2);
+        let j = frontier_to_json(&f);
+        assert_eq!(j.get("version").and_then(Json::as_usize), Some(3));
+        let plans = j.get("plans").and_then(Json::as_arr).unwrap();
+        assert!(plans.iter().all(|p| p.get("batch").is_some()));
+        let back = frontier_from_json(&j, &AlgorithmRegistry::new()).unwrap();
+        assert_eq!(back.len(), f.len());
+        for (a, b) in f.points().iter().zip(back.points()) {
+            assert_eq!(a.batch, b.batch, "batch annotation changed");
+            assert_eq!(graph_hash(&a.graph), graph_hash(&b.graph));
+            assert_eq!(a.cost.energy_j.to_bits(), b.cost.energy_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn bad_batch_values_rejected() {
+        // Corrupt one plan's batch annotation to 0: must error, not load a
+        // divide-by-zero operating point.
+        let s = frontier_to_json(&batched_frontier()).to_string_compact();
+        assert!(s.contains("\"batch\":8"), "fixture lost its batch annotation: {s}");
+        let j = crate::util::json::parse(&s.replace("\"batch\":8", "\"batch\":0")).unwrap();
+        let err = frontier_from_json(&j, &AlgorithmRegistry::new()).unwrap_err().to_string();
+        assert!(err.contains("batch"), "{err}");
     }
 }

@@ -13,55 +13,87 @@
 //!   of [`outer_search`] per probe (the shared [`CostOracle`] makes repeat
 //!   probes nearly profile-free), and harvests every probe's best-so-far
 //!   trajectory as frontier candidates.
-//! - [`PlanFrontier`] holds the dominance-pruned result: plans sorted
-//!   fastest-first, with strictly increasing time and strictly decreasing
-//!   energy — no point dominates another, by construction.
+//! - [`optimize_frontier_batched`] adds the third axis: the same weight
+//!   sweep repeated per batch size over [`Graph::rebatch`]'d instances of
+//!   the origin, so the frontier becomes a surface of **(plan, freq,
+//!   batch) operating points**. Batch rides through node signatures (input
+//!   shapes carry the batch dim), so the cost stack — energysim work,
+//!   `CostDb` rows, resolve cache, slabs, delta carry-over — keys on batch
+//!   with no special cases, and `batches = [1]` reproduces
+//!   [`optimize_frontier`] bit for bit.
+//! - [`PlanFrontier`] holds the dominance-pruned result, ordered by batch
+//!   latency with strictly decreasing **energy per request**
+//!   (`energy_j / batch`) — no point dominates another, by construction.
 //!
-//! Downstream, `runtime::manifest` persists frontiers to versioned JSON and
-//! `serve::FrontierController` switches the active plan across the frontier
-//! at serve time as the live request rate moves (`eadgo serve --frontier
-//! plans.json --adaptive`).
+//! Downstream, `runtime::manifest` persists frontiers to versioned JSON
+//! (v3 when any point carries `batch > 1`) and `serve::FrontierController`
+//! moves across the frontier at serve time as the live request rate moves
+//! (`eadgo serve --frontier plans.json --adaptive`).
 //!
 //! [`CostOracle`]: crate::cost::CostOracle
 
 use super::outer::{evaluate_baseline, outer_search, OptimizerContext, SearchConfig};
 use crate::algo::Assignment;
-use crate::cost::{CostFunction, GraphCost};
+use crate::cost::{CostFunction, CostOracle, GraphCost};
+use crate::energysim::FreqId;
 use crate::graph::canonical::graph_hash;
 use crate::graph::Graph;
 use std::cmp::Ordering;
 
-/// One plan on a Pareto frontier: a full `(graph, assignment)` pair (the
-/// assignment carries any DVFS states) plus its estimated cost and the
-/// objective weight of the probe that discovered it.
+/// One operating point on a Pareto frontier: a full `(graph, assignment)`
+/// pair (the assignment carries any DVFS states) plus the batch size the
+/// plan was costed at, its estimated cost and the objective weight of the
+/// probe that discovered it.
 #[derive(Debug, Clone)]
 pub struct PlanPoint {
-    /// The optimized computation graph.
+    /// The optimized computation graph (instantiated at `batch`).
     pub graph: Graph,
     /// The per-node algorithm (and DVFS state) assignment.
     pub assignment: Assignment,
-    /// The cost oracle's estimate for this plan.
+    /// The cost oracle's estimate for this plan — the **full-batch** cost:
+    /// `time_ms` is the batch latency, `energy_j` the energy of one batch
+    /// (mJ per batch execution).
     pub cost: GraphCost,
     /// Weight on energy (`w` of `w·E/E₀ + (1-w)·T/T₀`) of the probe that
     /// produced the point: 0 = pure time, 1 = pure energy.
     pub weight: f64,
+    /// Batch size this operating point was searched and costed at.
+    /// Pre-batch-axis plans are `batch = 1` (their amortized values equal
+    /// the raw cost exactly: IEEE division by 1.0 is the identity).
+    pub batch: usize,
 }
 
 impl PlanPoint {
-    /// Pareto dominance over (latency, energy): `self` dominates `other`
-    /// when it is no worse on both axes and strictly better on at least
-    /// one.
+    /// Energy per request, mJ — `energy_j / batch`, the quantity the
+    /// frontier trades against batch latency.
+    pub fn energy_per_request(&self) -> f64 {
+        self.cost.energy_j / self.batch as f64
+    }
+
+    /// Amortized per-request service time, ms — `time_ms / batch`, the
+    /// reciprocal of this operating point's throughput capacity.
+    pub fn time_per_request_ms(&self) -> f64 {
+        self.cost.time_ms / self.batch as f64
+    }
+
+    /// Pareto dominance over (batch latency, energy per request): `self`
+    /// dominates `other` when it is no worse on both axes and strictly
+    /// better on at least one. At `batch = 1` on both sides this is the
+    /// pre-batch-axis (latency, energy) dominance, bit for bit.
     pub fn dominates(&self, other: &PlanPoint) -> bool {
+        let (se, oe) = (self.energy_per_request(), other.energy_per_request());
         self.cost.time_ms <= other.cost.time_ms
-            && self.cost.energy_j <= other.cost.energy_j
-            && (self.cost.time_ms < other.cost.time_ms
-                || self.cost.energy_j < other.cost.energy_j)
+            && se <= oe
+            && (self.cost.time_ms < other.cost.time_ms || se < oe)
     }
 }
 
-/// A dominance-pruned Pareto set of plans, sorted fastest-first: strictly
-/// increasing `time_ms`, strictly decreasing `energy_j`. Index 0 is the
-/// latency-optimal plan, the last index the energy-optimal plan.
+/// A dominance-pruned Pareto set of operating points, sorted fastest-first
+/// by batch latency: strictly increasing `time_ms`, strictly decreasing
+/// energy per request (`energy_j / batch`). Index 0 is the latency-optimal
+/// point, the last index the (per-request) energy-optimal point. For the
+/// all-`batch = 1` frontiers of the pre-batch-axis pipeline the amortized
+/// ordering coincides with the raw (time, energy) ordering exactly.
 #[derive(Debug, Clone, Default)]
 pub struct PlanFrontier {
     points: Vec<PlanPoint>,
@@ -79,19 +111,21 @@ impl PlanFrontier {
                 .partial_cmp(&b.cost.time_ms)
                 .unwrap_or(Ordering::Equal)
                 .then(
-                    a.cost
-                        .energy_j
-                        .partial_cmp(&b.cost.energy_j)
+                    a.energy_per_request()
+                        .partial_cmp(&b.energy_per_request())
                         .unwrap_or(Ordering::Equal),
                 )
         });
-        // After the (time asc, energy asc) stable sort, a point is on the
-        // frontier iff its energy is strictly below every kept predecessor
-        // — checking the last kept suffices because kept energies are
-        // strictly decreasing.
+        // After the (time asc, energy/request asc) stable sort, a point is
+        // on the frontier iff its per-request energy is strictly below
+        // every kept predecessor — checking the last kept suffices because
+        // kept energies are strictly decreasing.
         let mut kept: Vec<PlanPoint> = Vec::new();
         for p in points {
-            if kept.last().is_some_and(|k| p.cost.energy_j >= k.cost.energy_j) {
+            if kept
+                .last()
+                .is_some_and(|k| p.energy_per_request() >= k.energy_per_request())
+            {
                 continue;
             }
             kept.push(p);
@@ -119,7 +153,8 @@ impl PlanFrontier {
         self.points.first().expect("empty frontier")
     }
 
-    /// The cheapest plan (lowest `energy_j`). Panics on an empty frontier.
+    /// The cheapest operating point (lowest energy per request). Panics on
+    /// an empty frontier.
     pub fn energy_optimal(&self) -> &PlanPoint {
         self.points.last().expect("empty frontier")
     }
@@ -157,10 +192,12 @@ impl PlanFrontier {
 pub struct FrontierProbe {
     /// Weight on energy of the probe objective.
     pub weight: f64,
-    /// Cost of the probe's winning plan.
+    /// Cost of the probe's winning plan (full-batch cost at `batch`).
     pub cost: GraphCost,
     /// Search wallclock of the probe, seconds.
     pub wall_s: f64,
+    /// Batch size the probe searched at.
+    pub batch: usize,
 }
 
 /// Outcome of [`optimize_frontier`].
@@ -200,30 +237,98 @@ pub fn optimize_frontier(
     cfg: &SearchConfig,
     n: usize,
 ) -> anyhow::Result<FrontierResult> {
+    optimize_frontier_batched(g0, ctx, cfg, n, &[1])
+}
+
+/// Enumerate a joint **(plan, freq, batch)** operating-point frontier: the
+/// full `n`-probe weight sweep of [`optimize_frontier`] repeated at every
+/// batch size in `batches`, over [`Graph::rebatch`]'d instances of `g0`.
+///
+/// Each batch sweeps against the *same* shared [`CostOracle`]: rebatched
+/// graphs present batch-specific node signatures, so their profiles land
+/// in distinct `CostDb` rows and resolve-cache entries without colliding
+/// with (or invalidating) the batch-1 state — repeat sweeps stay warm per
+/// batch. Candidates from all batches are dominance-pruned together under
+/// the (batch latency, energy per request) order and thinned to at most
+/// `n * batches.len()` points.
+///
+/// `batches = [1]` skips rebatching entirely (the batch-1 sweep runs on
+/// `g0` itself) and is bit-identical to [`optimize_frontier`] — which is
+/// literally this function with `batches = [1]`. `original` is the origin
+/// graph's default-plan cost at `batches[0]`.
+///
+/// `batches` must be non-empty, strictly increasing, and start at >= 1.
+///
+/// [`CostOracle`]: crate::cost::CostOracle
+pub fn optimize_frontier_batched(
+    g0: &Graph,
+    ctx: &OptimizerContext,
+    cfg: &SearchConfig,
+    n: usize,
+    batches: &[usize],
+) -> anyhow::Result<FrontierResult> {
     anyhow::ensure!(n >= 1, "frontier size must be >= 1");
+    anyhow::ensure!(!batches.is_empty(), "batch sweep must name at least one batch size");
+    anyhow::ensure!(batches[0] >= 1, "batch sizes must be >= 1");
+    anyhow::ensure!(
+        batches.windows(2).all(|w| w[0] < w[1]),
+        "batch sizes must be strictly increasing"
+    );
     g0.validate().map_err(|e| anyhow::anyhow!("invalid input graph: {e}"))?;
+
+    let mut candidates: Vec<PlanPoint> = Vec::new();
+    let mut probes: Vec<FrontierProbe> = Vec::with_capacity(n * batches.len());
+    let mut original: Option<GraphCost> = None;
+    for &batch in batches {
+        let gb;
+        let g = if batch == 1 {
+            g0 // no clone, no rebatch: the batch-1 sweep is the legacy path
+        } else {
+            gb = g0.rebatch(batch).map_err(|e| anyhow::anyhow!("rebatch({batch}): {e}"))?;
+            &gb
+        };
+        let o = sweep_weights(g, ctx, cfg, n, batch, &mut candidates, &mut probes)?;
+        original.get_or_insert(o);
+    }
+    let mut frontier = PlanFrontier::from_points(candidates);
+    frontier.thin_to(n * batches.len());
+    Ok(FrontierResult {
+        frontier,
+        original: original.expect("at least one batch swept"),
+        probes,
+    })
+}
+
+/// One `n`-probe weight sweep over `g` (already instantiated at `batch`),
+/// appending candidates and probe traces; returns the origin cost.
+fn sweep_weights(
+    g: &Graph,
+    ctx: &OptimizerContext,
+    cfg: &SearchConfig,
+    n: usize,
+    batch: usize,
+    candidates: &mut Vec<PlanPoint>,
+    probes: &mut Vec<FrontierProbe>,
+) -> anyhow::Result<GraphCost> {
     if n == 1 {
-        let res = super::optimize(g0, ctx, &CostFunction::Energy, cfg)?;
-        let point = PlanPoint {
+        let res = super::optimize(g, ctx, &CostFunction::Energy, cfg)?;
+        probes.push(FrontierProbe {
+            weight: 1.0,
+            cost: res.cost,
+            wall_s: res.stats.wall_s,
+            batch,
+        });
+        candidates.push(PlanPoint {
             graph: res.graph,
             assignment: res.assignment,
             cost: res.cost,
             weight: 1.0,
-        };
-        return Ok(FrontierResult {
-            frontier: PlanFrontier::from_points(vec![point]),
-            original: res.original,
-            probes: vec![FrontierProbe {
-                weight: 1.0,
-                cost: res.cost,
-                wall_s: res.stats.wall_s,
-            }],
+            batch,
         });
+        return Ok(res.original);
     }
 
-    let h0 = graph_hash(g0);
-    let mut candidates: Vec<PlanPoint> = Vec::new();
-    let mut probes: Vec<FrontierProbe> = Vec::with_capacity(n);
+    let h0 = graph_hash(g);
     let mut original: Option<GraphCost> = None;
     // Probes 2..N warm-start their origin inner search from the previous
     // probe's origin plan (the adjacent weight's converged assignment).
@@ -236,10 +341,10 @@ pub fn optimize_frontier(
         let w = i as f64 / (n - 1) as f64;
         // Same pipeline as `optimize`: evaluate the baseline once per
         // probe (fully cached after the first), normalize, search.
-        let mut baseline = evaluate_baseline(g0, &ctx.oracle)?;
+        let mut baseline = evaluate_baseline(g, &ctx.oracle)?;
         baseline.warm_hint = prev_origin.take();
         let cf = CostFunction::linear(w).normalized(&baseline.cost);
-        let res = outer_search(g0, ctx, &cf, cfg, &baseline)?;
+        let res = outer_search(g, ctx, &cf, cfg, &baseline)?;
         original.get_or_insert(baseline.cost);
         // The probe's origin plan: only the first two trajectory entries
         // can be g0 (entry 0 is the default plan, entry 1 — when present
@@ -250,29 +355,59 @@ pub fn optimize_frontier(
             .iter()
             .take(2)
             .rev()
-            .find(|(g, _, _)| graph_hash(g) == h0)
+            .find(|(tg, _, _)| graph_hash(tg) == h0)
             .map(|(_, a, _)| a.clone());
-        probes.push(FrontierProbe { weight: w, cost: res.cost, wall_s: res.stats.wall_s });
+        probes.push(FrontierProbe { weight: w, cost: res.cost, wall_s: res.stats.wall_s, batch });
         // Harvest the probe's whole improvement trajectory — intermediate
         // plans a pure-w probe walked through are often non-dominated
         // points of their own.
-        for (g, a, c) in res.trajectory {
-            candidates.push(PlanPoint { graph: g, assignment: a, cost: c, weight: w });
+        for (tg, a, c) in res.trajectory {
+            candidates.push(PlanPoint { graph: tg, assignment: a, cost: c, weight: w, batch });
         }
         candidates.push(PlanPoint {
             graph: res.graph,
             assignment: res.assignment,
             cost: res.cost,
             weight: w,
+            batch,
         });
     }
-    let mut frontier = PlanFrontier::from_points(candidates);
-    frontier.thin_to(n);
-    Ok(FrontierResult {
-        frontier,
-        original: original.expect("at least one probe ran"),
-        probes,
-    })
+    Ok(original.expect("at least one probe ran"))
+}
+
+/// Price an existing plan at a different batch size: rebatch the plan's
+/// graph, build a cost table over exactly the DVFS states the assignment
+/// references, and evaluate. Node ids survive [`Graph::rebatch`]
+/// unchanged and algorithm applicability is batch-invariant (it depends on
+/// kernel geometry and strides, never on the leading activation dim), so
+/// the original assignment remains valid verbatim.
+///
+/// This is how the serve layer builds its per-(plan, m) cost grid: a batch
+/// formed below the operating point's target is charged the oracle's
+/// estimate for the batch it actually ran, not the target's amortized
+/// ideal. `batch = 1` reproduces the plan's stored cost bit for bit (same
+/// signatures, same cached rows).
+pub fn price_plan_at_batch(
+    oracle: &CostOracle,
+    g: &Graph,
+    a: &Assignment,
+    batch: usize,
+) -> anyhow::Result<GraphCost> {
+    let gb = g.rebatch(batch).map_err(|e| anyhow::anyhow!("rebatch({batch}): {e}"))?;
+    let shapes = gb
+        .infer_shapes()
+        .map_err(|e| anyhow::anyhow!("shape inference at batch {batch}: {e}"))?;
+    // The table needs exactly the DVFS states the assignment references
+    // (NOMINAL always, for the baseline slab).
+    let mut freqs = vec![FreqId::NOMINAL];
+    for id in gb.ids() {
+        let f = a.freq(id);
+        if !freqs.contains(&f) {
+            freqs.push(f);
+        }
+    }
+    let (table, _) = oracle.table_for_freqs(&gb, &shapes, &freqs);
+    Ok(table.eval(a))
 }
 
 #[cfg(test)]
@@ -281,12 +416,17 @@ mod tests {
     use crate::energysim::FreqId;
 
     fn point(time_ms: f64, energy_j: f64) -> PlanPoint {
+        point_at(time_ms, energy_j, 1)
+    }
+
+    fn point_at(time_ms: f64, energy_j: f64, batch: usize) -> PlanPoint {
         let reg = crate::algo::AlgorithmRegistry::new();
         PlanPoint {
             graph: Graph::new(),
             assignment: Assignment::default_for(&Graph::new(), &reg),
             cost: GraphCost { time_ms, energy_j, freq: FreqId::NOMINAL },
             weight: 0.5,
+            batch,
         }
     }
 
@@ -355,5 +495,46 @@ mod tests {
         let f = PlanFrontier::from_points(Vec::new());
         assert!(f.is_empty());
         assert_eq!(f.len(), 0);
+    }
+
+    #[test]
+    fn dominance_compares_energy_per_request() {
+        // A batch-8 point with 4x the batch energy of a batch-1 point is
+        // 2x cheaper per request: if it is also no slower, it dominates.
+        let slow_single = point_at(2.0, 100.0, 1); // 100 mJ/request
+        let batched = point_at(2.0, 400.0, 8); // 50 mJ/request
+        assert!(batched.dominates(&slow_single));
+        assert!(!slow_single.dominates(&batched));
+        // A faster batch-1 point survives against a cheaper batch-8 one:
+        // neither dominates (lat vs energy/request trade).
+        let fast_single = point_at(1.0, 120.0, 1);
+        assert!(!batched.dominates(&fast_single));
+        assert!(!fast_single.dominates(&batched));
+    }
+
+    #[test]
+    fn pruning_orders_mixed_batches_by_amortized_energy() {
+        let f = PlanFrontier::from_points(vec![
+            point_at(1.0, 120.0, 1),  // 120 mJ/request, fastest
+            point_at(4.0, 400.0, 8),  // 50 mJ/request
+            point_at(2.0, 100.0, 1),  // 100 mJ/request
+            point_at(3.0, 880.0, 8),  // 110 mJ/request — dominated by (2.0, 100/req)
+        ]);
+        let kept: Vec<(f64, usize)> =
+            f.points().iter().map(|p| (p.energy_per_request(), p.batch)).collect();
+        assert_eq!(kept, vec![(120.0, 1), (100.0, 1), (50.0, 8)]);
+        assert_eq!(f.energy_optimal().batch, 8);
+        assert_eq!(f.latency_optimal().batch, 1);
+    }
+
+    #[test]
+    fn per_request_helpers_are_identity_at_batch_one() {
+        let p = point_at(1.5, 42.0, 1);
+        // IEEE: x / 1.0 == x exactly — the batch axis is invisible at 1.
+        assert_eq!(p.energy_per_request().to_bits(), p.cost.energy_j.to_bits());
+        assert_eq!(p.time_per_request_ms().to_bits(), p.cost.time_ms.to_bits());
+        let q = point_at(3.0, 42.0, 4);
+        assert_eq!(q.energy_per_request(), 10.5);
+        assert_eq!(q.time_per_request_ms(), 0.75);
     }
 }

@@ -18,6 +18,24 @@
 //! executed is estimated by scaling a measured neighbor's service time by
 //! the cost oracle's time ratio — exactly the pair-wise relative accuracy
 //! the paper argues the cost model provides.
+//!
+//! # Operating-point mode
+//!
+//! With the batch axis ([`FrontierController::for_operating_points`]) the
+//! neighbor-stepping policy above is no longer sound: along a (batch
+//! latency, energy/request) frontier, capacity is **not** monotone in the
+//! index — a big-batch point of a slow plan can have both lower energy
+//! per request *and* higher throughput than a batch-1 point of a fast
+//! plan. Stepping "toward index 0 under load" could then step toward
+//! *lower* capacity. Operating-point mode therefore decides by explicit
+//! feasibility: under panic it jumps to the highest-capacity point; when
+//! the active point's utilization exceeds `high_util` it moves to the
+//! cheapest point (energy/request) that absorbs the estimated rate with
+//! margin; and it relaxes to a strictly cheaper point only when the queue
+//! is drained and that point's utilization stays under `low_util`. The
+//! same dwell/hysteresis machinery applies. Plan-frontier mode
+//! ([`FrontierController::new`]) is untouched — all batches are 1 there
+//! and the legacy stepping policy runs bit-identically.
 
 use crate::cost::GraphCost;
 
@@ -76,8 +94,15 @@ pub struct PlanSwitchEvent {
 /// the frontier as pressure changes; see the module docs for the policy.
 #[derive(Debug)]
 pub struct FrontierController {
-    /// Oracle cost estimates per frontier plan, fastest-first.
+    /// Oracle cost estimates per frontier point, fastest-first. In
+    /// operating-point mode these are **full-batch** costs (latency and
+    /// energy of one batch at that point's batch size).
     est: Vec<GraphCost>,
+    /// Batch size per point (all 1 in plan-frontier mode).
+    batch: Vec<usize>,
+    /// True when built via [`FrontierController::for_operating_points`]:
+    /// decisions use the feasibility policy instead of neighbor stepping.
+    ops_mode: bool,
     cfg: AdaptiveConfig,
     active: usize,
     last_switch_s: f64,
@@ -97,6 +122,8 @@ impl FrontierController {
         assert!(!plan_costs.is_empty(), "controller needs at least one plan");
         let n = plan_costs.len();
         FrontierController {
+            batch: vec![1; n],
+            ops_mode: false,
             est: plan_costs,
             cfg,
             active: n - 1,
@@ -106,6 +133,44 @@ impl FrontierController {
             svc_ewma_s: vec![None; n],
             switches: Vec::new(),
         }
+    }
+
+    /// Build a controller over (plan, batch) operating points. `op_costs`
+    /// are **full-batch** oracle estimates (latency / energy of one batch
+    /// of `batches[i]` requests at point `i`), fastest-first by batch
+    /// latency. Starts on the point with the lowest energy per request —
+    /// the right choice under no load — and decides with the feasibility
+    /// policy described in the module docs. Panics on empty or
+    /// mismatched inputs or a zero batch.
+    pub fn for_operating_points(
+        op_costs: Vec<GraphCost>,
+        batches: Vec<usize>,
+        cfg: AdaptiveConfig,
+    ) -> FrontierController {
+        assert!(!op_costs.is_empty(), "controller needs at least one operating point");
+        assert_eq!(op_costs.len(), batches.len(), "one batch size per operating point");
+        assert!(batches.iter().all(|&b| b >= 1), "batch sizes must be >= 1");
+        let n = op_costs.len();
+        let mut c = FrontierController {
+            batch: batches,
+            ops_mode: true,
+            est: op_costs,
+            cfg,
+            active: 0,
+            last_switch_s: f64::NEG_INFINITY,
+            ia_ewma_s: None,
+            last_arrival_s: None,
+            svc_ewma_s: vec![None; n],
+            switches: Vec::new(),
+        };
+        c.active = (0..n)
+            .min_by(|&a, &b| {
+                c.energy_per_request(a)
+                    .partial_cmp(&c.energy_per_request(b))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap_or(n - 1);
+        c
     }
 
     /// The currently active frontier index.
@@ -155,9 +220,23 @@ impl FrontierController {
         });
     }
 
+    /// Oracle-estimated per-request latency of point `i`, milliseconds
+    /// (full-batch latency amortized over the batch; identity at batch 1).
+    fn per_request_ms(&self, i: usize) -> f64 {
+        self.est[i].time_ms / self.batch[i] as f64
+    }
+
+    /// Oracle-estimated energy per request of point `i`, joules (identity
+    /// at batch 1).
+    fn energy_per_request(&self, i: usize) -> f64 {
+        self.est[i].energy_j / self.batch[i] as f64
+    }
+
     /// Estimated per-request service time of `plan`: measured EWMA when
     /// available, else the nearest measured plan scaled by the oracle's
-    /// time ratio (pair-wise relative accuracy), else unknown.
+    /// **per-request** time ratio (pair-wise relative accuracy; dividing
+    /// by a batch of 1 is exact, so plan-frontier mode is unchanged),
+    /// else unknown.
     fn service_s(&self, plan: usize) -> Option<f64> {
         if let Some(s) = self.svc_ewma_s[plan] {
             return Some(s);
@@ -166,11 +245,11 @@ impl FrontierController {
             .filter(|&q| self.svc_ewma_s[q].is_some())
             .min_by_key(|&q| (q.abs_diff(plan), q))?;
         let measured = self.svc_ewma_s[nearest]?;
-        let ref_ms = self.est[nearest].time_ms;
-        if ref_ms <= 0.0 || self.est[plan].time_ms <= 0.0 {
+        let ref_ms = self.per_request_ms(nearest);
+        if ref_ms <= 0.0 || self.per_request_ms(plan) <= 0.0 {
             return Some(measured);
         }
-        Some(measured * self.est[plan].time_ms / ref_ms)
+        Some(measured * self.per_request_ms(plan) / ref_ms)
     }
 
     /// Estimated utilization `ρ = rate × service` of `plan` (None until
@@ -182,11 +261,92 @@ impl FrontierController {
         self.service_s(plan).map(|s| rate_hz * s)
     }
 
+    /// The operating point with the highest estimated capacity (lowest
+    /// per-request service time), ties broken toward lower energy per
+    /// request then lower index. Ranks by measured service when any point
+    /// has been measured (then `service_s` is Some for all), else by the
+    /// oracle's per-request latency — never a mix.
+    fn max_capacity_op(&self) -> usize {
+        let rank = |i: usize| self.service_s(i).unwrap_or_else(|| self.per_request_ms(i));
+        let mut best = 0;
+        for i in 1..self.est.len() {
+            let (ri, ei) = (rank(i), self.energy_per_request(i));
+            let (rb, eb) = (rank(best), self.energy_per_request(best));
+            if ri < rb || (ri == rb && ei < eb) {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// The lowest energy-per-request operating point whose estimated
+    /// utilization at `rate_hz` stays at or below `margin` (None when no
+    /// point is feasible or no service estimate exists yet).
+    fn cheapest_feasible(&self, rate_hz: f64, margin: f64) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for i in 0..self.est.len() {
+            match self.util(rate_hz, i) {
+                Some(u) if u <= margin => {}
+                _ => continue,
+            }
+            best = match best {
+                Some(b) if self.energy_per_request(b) <= self.energy_per_request(i) => Some(b),
+                _ => Some(i),
+            };
+        }
+        best
+    }
+
+    /// Operating-point decision: explicit feasibility instead of neighbor
+    /// stepping (capacity is not monotone in the index once batch varies).
+    fn decide_ops(&mut self, now_s: f64, queue_depth: usize) -> usize {
+        let rate = self.rate_hz();
+        if queue_depth >= self.cfg.panic_queue {
+            // Overload escape hatch: jump to the highest-capacity point,
+            // dwell timer notwithstanding.
+            let target = self.max_capacity_op();
+            if target != self.active {
+                self.switch(target, now_s, queue_depth, rate);
+            }
+            return self.active;
+        }
+        let dwell_ok = now_s - self.last_switch_s >= self.cfg.min_dwell_s;
+        if !dwell_ok || rate <= 0.0 {
+            return self.active;
+        }
+        let Some(util_active) = self.util(rate, self.active) else {
+            return self.active;
+        };
+        if util_active > self.cfg.high_util {
+            // Saturating: cheapest point that absorbs the rate with
+            // margin, or the highest-capacity point if none does.
+            let target =
+                self.cheapest_feasible(rate, self.cfg.high_util).unwrap_or_else(|| self.max_capacity_op());
+            if target != self.active {
+                self.switch(target, now_s, queue_depth, rate);
+            }
+        } else if queue_depth <= 1 {
+            // Drained: relax to a strictly cheaper point only when it
+            // holds utilization under the low-water mark (hysteresis).
+            if let Some(target) = self.cheapest_feasible(rate, self.cfg.low_util) {
+                if target != self.active
+                    && self.energy_per_request(target) < self.energy_per_request(self.active)
+                {
+                    self.switch(target, now_s, queue_depth, rate);
+                }
+            }
+        }
+        self.active
+    }
+
     /// Decide which plan serves the next batch, given the virtual clock
     /// and the queue depth at the decision point. May record a switch.
     pub fn decide(&mut self, now_s: f64, queue_depth: usize) -> usize {
         if self.est.len() <= 1 {
             return self.active;
+        }
+        if self.ops_mode {
+            return self.decide_ops(now_s, queue_depth);
         }
         let rate = self.rate_hz();
         let util_active = self.util(rate, self.active);
@@ -332,5 +492,94 @@ mod tests {
         c.observe_arrival(0.0001);
         assert_eq!(c.decide(0.001, 1000), 0);
         assert!(c.switches().is_empty());
+    }
+
+    /// Three (plan, batch) operating points, fastest-first by batch
+    /// latency. Per-request (ms, J): op0 (1.0, 0.30), op1 (1.5, 0.15),
+    /// op2 (2.0, 0.10) — capacity falls with index, energy improves.
+    fn ops_frontier() -> (Vec<GraphCost>, Vec<usize>) {
+        (vec![cost(1.0, 0.3), cost(6.0, 0.6), cost(16.0, 0.8)], vec![1, 4, 8])
+    }
+
+    /// Per-request service time of operating point `i` in `ops_frontier`,
+    /// virtual seconds, matching the oracle estimates exactly.
+    fn ops_svc_s(i: usize) -> f64 {
+        1e-3 * [1.0, 1.5, 2.0][i]
+    }
+
+    #[test]
+    fn ops_starts_on_cheapest_per_request_point() {
+        let (est, batches) = ops_frontier();
+        let c = FrontierController::for_operating_points(est, batches, AdaptiveConfig::default());
+        assert_eq!(c.active(), 2, "start = lowest energy/request, not last index by luck");
+    }
+
+    #[test]
+    fn ops_panic_jumps_to_max_capacity_point() {
+        let (est, batches) = ops_frontier();
+        let mut c = FrontierController::for_operating_points(est, batches, AdaptiveConfig::default());
+        c.observe_arrival(0.0);
+        c.observe_arrival(0.001);
+        assert_eq!(c.decide(0.001, 50), 0, "deep queue jumps to the highest-capacity point");
+        assert_eq!(c.switches().len(), 1);
+        assert_eq!((c.switches()[0].from, c.switches()[0].to), (2, 0));
+    }
+
+    #[test]
+    fn ops_panic_keeps_batched_point_when_it_has_max_capacity() {
+        // Capacity is NOT monotone in the index here: the last point is a
+        // big-batch op with the *highest* capacity (0.5 ms/request). The
+        // legacy stepping policy would have fled toward index 0; the ops
+        // policy must stay put.
+        let est = vec![cost(1.0, 0.3), cost(4.0, 0.1), cost(8.0, 0.4)];
+        let batches = vec![1, 1, 16];
+        let mut c = FrontierController::for_operating_points(est, batches, AdaptiveConfig::default());
+        assert_eq!(c.active(), 2, "0.4/16 J is the cheapest per request");
+        c.observe_arrival(0.0);
+        c.observe_arrival(0.001);
+        assert_eq!(c.decide(0.001, 50), 2, "batched point is also the capacity max");
+        assert!(c.switches().is_empty());
+    }
+
+    #[test]
+    fn ops_overload_moves_to_cheapest_feasible_point() {
+        let (est, batches) = ops_frontier();
+        let mut c = FrontierController::for_operating_points(est, batches, AdaptiveConfig::default());
+        // 480 req/s: active op2 runs at util 0.96 > 0.85; op1 (0.72) and
+        // op0 (0.48) are both feasible — the cheaper op1 must win.
+        let mut t = 0.0;
+        for _ in 0..200 {
+            c.observe_arrival(t);
+            t += 1.0 / 480.0;
+            c.observe_service(c.active(), ops_svc_s(c.active()));
+            c.decide(t, 2);
+        }
+        assert_eq!(c.active(), 1, "cheapest feasible point, not a blind step to index 0");
+        assert_eq!(c.switches().len(), 1);
+    }
+
+    #[test]
+    fn ops_recovers_to_cheapest_point_with_hysteresis() {
+        let (est, batches) = ops_frontier();
+        let cfg = AdaptiveConfig::default();
+        let mut c = FrontierController::for_operating_points(est, batches, cfg.clone());
+        // Panic pushes it to the capacity point...
+        c.observe_arrival(0.0);
+        c.observe_arrival(0.0005);
+        c.decide(0.0005, 50);
+        assert_eq!(c.active(), 0);
+        // ...then quiet 50 req/s traffic relaxes it back to the cheapest
+        // point (util 0.1 < low_util), respecting the dwell timer.
+        let mut t = 0.1;
+        for _ in 0..100 {
+            c.observe_arrival(t);
+            t += 0.02;
+            c.observe_service(c.active(), ops_svc_s(c.active()));
+            c.decide(t, 0);
+        }
+        assert_eq!(c.active(), 2, "quiet traffic must return to the cheapest point");
+        for w in c.switches().windows(2) {
+            assert!(w[1].at_s - w[0].at_s >= cfg.min_dwell_s - 1e-12);
+        }
     }
 }

@@ -8,7 +8,7 @@
 //! wallclock advances that clock. Latency percentiles therefore reflect
 //! genuine compute + queueing behaviour, reproducibly.
 //!
-//! Three entry points, least to most capable:
+//! Four entry points, least to most capable:
 //! - [`serve`] — one plan, one `exec_batch` closure.
 //! - [`serve_plan`] — one plan, annotated with the shared
 //!   [`CostOracle`]'s cost estimate for it.
@@ -17,13 +17,26 @@
 //!   queue depth and switches the active plan (energy-optimal under light
 //!   load, latency-optimal under pressure, with hysteresis), recording
 //!   every switch in [`ServeReport::switches`].
+//! - [`serve_operating_points`] — a batched frontier of
+//!   ([`OperatingPoint`]) (plan, batch) pairs behind deadline-aware batch
+//!   formation: the controller picks an operating point from live queue
+//!   depth and EWMA arrival rate, the dispatcher targets that point's
+//!   batch size but never holds the oldest pending request past
+//!   [`ServeConfig::max_wait_s`] (admission control), and each formed
+//!   batch is charged the oracle's price *at its actual size*.
+//!
+//! Arrival traces are single-rate Poisson by default, or piecewise-rate
+//! (bursty) when [`ServeConfig::phases`] is set — see [`trace`].
 //!
 //! [`PlanFrontier`]: crate::search::PlanFrontier
 
 /// Load-adaptive plan selection over a Pareto frontier.
 pub mod controller;
+/// Seeded single-rate and piecewise-rate (bursty) Poisson arrival traces.
+pub mod trace;
 
 pub use controller::{AdaptiveConfig, FrontierController, PlanSwitchEvent};
+pub use trace::RatePhase;
 
 use crate::algo::Assignment;
 use crate::cost::{CostOracle, GraphCost};
@@ -48,6 +61,12 @@ pub struct ServeConfig {
     pub seed: u64,
     /// Input tensor shape per request.
     pub input_shape: Vec<usize>,
+    /// Piecewise-rate arrival phases for bursty traces. Empty = the
+    /// single-rate Poisson process (`arrival_rate_hz` × `requests`,
+    /// bit-identical to the pre-trace behavior); non-empty = the phases
+    /// define both the rates and the total request count, and
+    /// `requests`/`arrival_rate_hz` are ignored.
+    pub phases: Vec<RatePhase>,
 }
 
 impl Default for ServeConfig {
@@ -59,6 +78,39 @@ impl Default for ServeConfig {
             max_wait_s: 0.002,
             seed: 2026,
             input_shape: vec![1, 3, 32, 32],
+            phases: Vec::new(),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Total requests this config serves: the sum of phase sizes when a
+    /// bursty trace is configured, else `requests`.
+    pub fn effective_requests(&self) -> usize {
+        if self.phases.is_empty() {
+            self.requests
+        } else {
+            self.phases.iter().map(|p| p.requests).sum()
+        }
+    }
+
+    /// Draw the arrival trace for this config from `rng`. Single-rate
+    /// configs reproduce the historical inline draw bit-for-bit.
+    fn arrival_trace(&self, rng: &mut Rng) -> anyhow::Result<Vec<f64>> {
+        if self.phases.is_empty() {
+            anyhow::ensure!(self.requests > 0, "requests must be > 0");
+            anyhow::ensure!(self.arrival_rate_hz > 0.0, "arrival rate must be > 0");
+            Ok(trace::poisson_arrivals(rng, 0.0, self.arrival_rate_hz, self.requests))
+        } else {
+            for p in &self.phases {
+                anyhow::ensure!(
+                    p.rate_hz > 0.0 && p.rate_hz.is_finite(),
+                    "phase rate must be a positive finite rate, got {}",
+                    p.rate_hz
+                );
+                anyhow::ensure!(p.requests > 0, "phase request count must be > 0");
+            }
+            Ok(trace::piecewise_arrivals(rng, &self.phases))
         }
     }
 }
@@ -77,7 +129,8 @@ pub struct RequestRecord {
     /// Size of the batch that served this request.
     pub batch_size: usize,
     /// Frontier index of the plan that served this request (0 for
-    /// single-plan serving).
+    /// single-plan serving; the *operating-point* index under
+    /// [`serve_operating_points`]).
     pub plan: usize,
 }
 
@@ -132,6 +185,15 @@ impl ServeReport {
         }
     }
 
+    /// Oracle-estimated served requests per joule (the ablation's energy
+    /// efficiency metric; `None` without an energy estimate).
+    pub fn requests_per_joule(&self) -> Option<f64> {
+        match self.energy_mj_per_request {
+            Some(mj) if mj > 0.0 => Some(1000.0 / mj),
+            _ => None,
+        }
+    }
+
     /// Average formed batch size.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches > 0 {
@@ -175,26 +237,21 @@ fn run_loop<F>(
 where
     F: FnMut(usize, &[Tensor]) -> anyhow::Result<Vec<Tensor>>,
 {
-    anyhow::ensure!(cfg.requests > 0, "requests must be > 0");
     anyhow::ensure!(cfg.batch_max > 0, "batch_max must be > 0");
-    anyhow::ensure!(cfg.arrival_rate_hz > 0.0, "arrival rate must be > 0");
 
     let mut rng = Rng::seed_from(cfg.seed);
-    // Poisson arrivals: exponential inter-arrival times.
-    let mut arrivals = Vec::with_capacity(cfg.requests);
-    let mut t = 0.0f64;
-    for _ in 0..cfg.requests {
-        t += -rng.f64().max(1e-12).ln() / cfg.arrival_rate_hz;
-        arrivals.push(t);
-    }
+    // Poisson arrivals (single- or piecewise-rate), drawn before any
+    // payload so the RNG stream matches the historical inline draw.
+    let arrivals = cfg.arrival_trace(&mut rng)?;
+    let total = arrivals.len();
 
-    let mut records: Vec<RequestRecord> = Vec::with_capacity(cfg.requests);
+    let mut records: Vec<RequestRecord> = Vec::with_capacity(total);
     let mut clock = 0.0f64;
     let mut busy_s = 0.0f64;
     let mut batches = 0usize;
     let mut next = 0usize; // next unserved request index
 
-    while next < cfg.requests {
+    while next < total {
         // Advance to the first pending arrival if idle.
         clock = clock.max(arrivals[next]);
         // The controller decides on the live queue depth at this instant:
@@ -202,7 +259,7 @@ where
         let plan = match controller.as_mut() {
             Some(c) => {
                 let mut depth = 1usize;
-                while next + depth < cfg.requests && arrivals[next + depth] <= clock {
+                while next + depth < total && arrivals[next + depth] <= clock {
                     depth += 1;
                 }
                 c.decide(clock, depth)
@@ -212,7 +269,7 @@ where
         // Optional batching wait: let the window fill.
         let deadline = clock + cfg.max_wait_s;
         let mut end = next + 1;
-        while end < cfg.requests && end - next < cfg.batch_max && arrivals[end] <= deadline {
+        while end < total && end - next < cfg.batch_max && arrivals[end] <= deadline {
             end += 1;
         }
         // If we waited for later arrivals, the batch starts at the later of
@@ -358,6 +415,165 @@ where
     Ok(report)
 }
 
+/// One (plan, batch) point on a batched frontier: the frontier plan index
+/// to execute and the batch size the dispatcher targets while the point
+/// is active.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OperatingPoint {
+    /// Plan index into the price grid's outer axis (and the `exec`
+    /// closure's first argument).
+    pub plan: usize,
+    /// Target batch size at this point (>= 1; capped by
+    /// [`ServeConfig::batch_max`] at serve time).
+    pub batch: usize,
+}
+
+/// Serve a batched frontier of (plan, batch) operating points with
+/// deadline-aware batch formation and admission control.
+///
+/// `grid[p][m - 1]` is the oracle's **full-batch** cost of executing plan
+/// `p` at batch size `m` (as priced by
+/// [`price_plan_at_batch`](crate::search::price_plan_at_batch)); each
+/// plan's grid must cover every batch size its operating points can form.
+/// A [`FrontierController`] in operating-point mode picks the active
+/// point per batch from the live queue depth and EWMA arrival rate.
+///
+/// Two properties distinguish this loop from [`serve_frontier`]'s greedy
+/// batching:
+/// - **Admission control**: the batch-fill horizon is anchored at the
+///   *oldest pending request's arrival* — a request that already waited
+///   `w` seconds gets at most `max_wait_s - w` more, so backlogged
+///   batches never stall further just because a big-batch point is
+///   active.
+/// - **Honest partial-batch pricing**: a formed batch of `m` requests is
+///   charged `grid[plan][m - 1]`, not the active point's ideal amortized
+///   cost — underfilled batches earn no phantom efficiency.
+///
+/// [`RequestRecord::plan`] and the switch log index into `ops` (operating
+/// points), while `exec` receives the underlying *plan* index.
+pub fn serve_operating_points<F>(
+    cfg: &ServeConfig,
+    grid: &[Vec<GraphCost>],
+    ops: &[OperatingPoint],
+    policy: &AdaptiveConfig,
+    mut exec: F,
+) -> anyhow::Result<ServeReport>
+where
+    F: FnMut(usize, &[Tensor]) -> anyhow::Result<Vec<Tensor>>,
+{
+    anyhow::ensure!(cfg.batch_max > 0, "batch_max must be > 0");
+    anyhow::ensure!(!ops.is_empty(), "serve_operating_points needs at least one operating point");
+    for op in ops {
+        anyhow::ensure!(op.batch >= 1, "operating-point batch must be >= 1");
+        anyhow::ensure!(
+            op.plan < grid.len(),
+            "operating point references plan {} but the grid prices {} plans",
+            op.plan,
+            grid.len()
+        );
+        let have = grid[op.plan].len();
+        anyhow::ensure!(
+            op.batch.min(cfg.batch_max) <= have,
+            "plan {} is priced for batches 1..={have}, operating point targets batch {}",
+            op.plan,
+            op.batch.min(cfg.batch_max)
+        );
+    }
+    // The controller sees each point's *effective* batch (capped by the
+    // dispatcher limit) and the full-batch cost at that size, so its
+    // per-request estimates match what this loop can actually form.
+    let batches: Vec<usize> = ops.iter().map(|o| o.batch.min(cfg.batch_max)).collect();
+    let est: Vec<GraphCost> =
+        ops.iter().zip(&batches).map(|(o, &b)| grid[o.plan][b - 1]).collect();
+    let mut controller =
+        FrontierController::for_operating_points(est, batches.clone(), policy.clone());
+
+    let mut rng = Rng::seed_from(cfg.seed);
+    let arrivals = cfg.arrival_trace(&mut rng)?;
+    let total = arrivals.len();
+
+    let mut records: Vec<RequestRecord> = Vec::with_capacity(total);
+    let mut clock = 0.0f64;
+    let mut busy_s = 0.0f64;
+    let mut n_batches = 0usize;
+    let mut energy_mj = 0.0f64;
+    let mut next = 0usize;
+
+    while next < total {
+        clock = clock.max(arrivals[next]);
+        let mut depth = 1usize;
+        while next + depth < total && arrivals[next + depth] <= clock {
+            depth += 1;
+        }
+        let op = controller.decide(clock, depth);
+        let target = batches[op];
+        // Admission control: anchor the fill horizon at the oldest
+        // pending request's arrival, never extending a wait already
+        // served out (`max(.., clock)` only admits what has *already*
+        // arrived by now — it adds no further stalling).
+        let horizon = (arrivals[next] + cfg.max_wait_s).max(clock);
+        let mut end = next + 1;
+        while end < total && end - next < target && arrivals[end] <= horizon {
+            end += 1;
+        }
+        if end - next > 1 {
+            clock = clock.max(arrivals[end - 1]);
+        }
+        let batch_ids: Vec<usize> = (next..end).collect();
+        for &id in &batch_ids {
+            controller.observe_arrival(arrivals[id]);
+        }
+        let inputs: Vec<Tensor> = batch_ids
+            .iter()
+            .map(|_| Tensor::rand(&cfg.input_shape, &mut rng, -1.0, 1.0))
+            .collect();
+
+        let t0 = std::time::Instant::now();
+        let outputs = exec(ops[op].plan, &inputs)?;
+        let service = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(
+            outputs.len() == inputs.len(),
+            "exec_batch returned {} outputs for {} requests",
+            outputs.len(),
+            inputs.len()
+        );
+        busy_s += service;
+        n_batches += 1;
+        controller.observe_service(op, service / inputs.len() as f64);
+        // Honest partial-batch pricing: charge the plan at the batch size
+        // actually formed.
+        energy_mj += grid[ops[op].plan][inputs.len() - 1].energy_j;
+        let start = clock;
+        clock += service;
+        for &id in &batch_ids {
+            records.push(RequestRecord {
+                id,
+                arrival_s: arrivals[id],
+                start_s: start,
+                done_s: clock,
+                batch_size: batch_ids.len(),
+                plan: op,
+            });
+        }
+        next = end;
+    }
+
+    let first = arrivals.first().copied().unwrap_or(0.0);
+    Ok(ServeReport {
+        span_s: clock - first,
+        busy_s,
+        batches: n_batches,
+        records,
+        plan_cost: None,
+        switches: controller.into_switches(),
+        energy_mj_per_request: if energy_mj > 0.0 && total > 0 {
+            Some(energy_mj / total as f64)
+        } else {
+            None
+        },
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -376,6 +592,7 @@ mod tests {
             max_wait_s: 0.001,
             seed: 1,
             input_shape: vec![1, 3, 8, 8],
+            phases: Vec::new(),
         }
     }
 
@@ -556,5 +773,151 @@ mod tests {
         let arr_a: Vec<f64> = a.records.iter().map(|r| r.arrival_s).collect();
         let arr_b: Vec<f64> = b.records.iter().map(|r| r.arrival_s).collect();
         assert_eq!(arr_a, arr_b);
+    }
+
+    #[test]
+    fn bursty_trace_is_deterministic_and_ordered() {
+        let cfg = ServeConfig {
+            phases: vec![RatePhase::new(200.0, 16), RatePhase::new(5_000.0, 32)],
+            ..cfg(1, 4)
+        };
+        let a = serve(&cfg, fast_exec).unwrap();
+        let b = serve(&cfg, fast_exec).unwrap();
+        assert_eq!(a.records.len(), 48, "phases override `requests`");
+        assert_eq!(cfg.effective_requests(), 48);
+        let bits =
+            |r: &ServeReport| r.records.iter().map(|x| x.arrival_s.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b), "same seed must draw the same bursty trace");
+        assert!(a.records.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    }
+
+    #[test]
+    fn invalid_phases_rejected() {
+        let zero_rate = ServeConfig { phases: vec![RatePhase::new(0.0, 4)], ..cfg(8, 2) };
+        assert!(serve(&zero_rate, fast_exec).is_err());
+        let zero_reqs = ServeConfig { phases: vec![RatePhase::new(100.0, 0)], ..cfg(8, 2) };
+        assert!(serve(&zero_reqs, fast_exec).is_err());
+    }
+
+    /// Per-plan batch price grids (batch 1..=8): plan 0 fast/hungry,
+    /// plan 1 slow/frugal. Batch latency grows sublinearly, so energy per
+    /// request amortizes with batch (launch-overhead-dominated regime).
+    fn ops_grid() -> Vec<Vec<GraphCost>> {
+        let price = |t1: f64, e1: f64| -> Vec<GraphCost> {
+            (1..=8)
+                .map(|m| {
+                    let s = 0.875 + 0.125 * m as f64;
+                    GraphCost { time_ms: t1 * s, energy_j: e1 * s, freq: FreqId::NOMINAL }
+                })
+                .collect()
+        };
+        vec![price(1.0, 300.0), price(4.0, 100.0)]
+    }
+
+    #[test]
+    fn ops_light_load_parks_on_cheapest_point() {
+        let cfg = ServeConfig { arrival_rate_hz: 50.0, ..cfg(32, 8) };
+        let ops = [OperatingPoint { plan: 0, batch: 1 }, OperatingPoint { plan: 1, batch: 8 }];
+        let report =
+            serve_operating_points(&cfg, &ops_grid(), &ops, &AdaptiveConfig::default(), |plan, b| {
+                assert!(plan <= 1);
+                fast_exec(b)
+            })
+            .unwrap();
+        assert!(report.records.iter().all(|r| r.plan == 1), "{:?}", report.plan_histogram());
+        assert!(report.switches.is_empty());
+        // Honest partial-batch pricing: at 50 req/s no batch fills, so the
+        // batched point earns no amortization — every batch is charged the
+        // plan's batch-1 price (100 mJ), not the ideal 23.4 mJ/request.
+        assert_eq!(report.energy_mj_per_request, Some(100.0));
+        assert!((report.requests_per_joule().unwrap() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ops_batch_wait_is_bounded_by_max_wait() {
+        // Poisson @ 500/s with a 5 ms window and a batch-8 target: batches
+        // form, but the oldest request in every batch waits at most
+        // max_wait (plus engine wallclock, microscopic for fast_exec).
+        let cfg = ServeConfig { arrival_rate_hz: 500.0, max_wait_s: 0.005, ..cfg(64, 8) };
+        let ops = [OperatingPoint { plan: 1, batch: 8 }];
+        let report =
+            serve_operating_points(&cfg, &ops_grid(), &ops, &AdaptiveConfig::default(), |_, b| {
+                fast_exec(b)
+            })
+            .unwrap();
+        assert!(report.mean_batch_size() > 1.5, "window must batch: {}", report.mean_batch_size());
+        let mut seen_start = f64::NEG_INFINITY;
+        for r in &report.records {
+            if r.start_s != seen_start {
+                // First record of each batch = its oldest request.
+                seen_start = r.start_s;
+                assert!(
+                    r.queue_delay_s() <= cfg.max_wait_s + report.busy_s + 1e-9,
+                    "oldest request in a batch waited {}s",
+                    r.queue_delay_s()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ops_bursty_load_batches_on_capacity_point() {
+        // Calm → burst → calm. The batched point is both cheapest per
+        // request and highest-capacity here, so the controller starts and
+        // stays there; the burst fills its batches.
+        let cfg = ServeConfig {
+            phases: vec![
+                RatePhase::new(100.0, 8),
+                RatePhase::new(20_000.0, 80),
+                RatePhase::new(100.0, 8),
+            ],
+            max_wait_s: 0.002,
+            ..cfg(1, 8)
+        };
+        let grid = ops_grid();
+        let ops = [OperatingPoint { plan: 0, batch: 1 }, OperatingPoint { plan: 1, batch: 8 }];
+        let report =
+            serve_operating_points(&cfg, &grid, &ops, &AdaptiveConfig::default(), |plan, batch| {
+                // Busy-spin 50 µs per estimated sim-ms of the formed batch.
+                let per_batch = 50e-6 * grid[plan][batch.len() - 1].time_ms;
+                let t0 = std::time::Instant::now();
+                while t0.elapsed().as_secs_f64() < per_batch {}
+                Ok(batch.to_vec())
+            })
+            .unwrap();
+        assert_eq!(report.records.len(), 96);
+        assert!(report.records.iter().all(|r| r.plan == 1), "{:?}", report.plan_histogram());
+        assert!(report.mean_batch_size() > 1.2, "burst must batch: {}", report.mean_batch_size());
+    }
+
+    #[test]
+    fn ops_single_point_acts_like_fixed_plan() {
+        let ops = [OperatingPoint { plan: 0, batch: 1 }];
+        let report =
+            serve_operating_points(&cfg(20, 4), &ops_grid(), &ops, &AdaptiveConfig::default(), |plan, b| {
+                assert_eq!(plan, 0);
+                fast_exec(b)
+            })
+            .unwrap();
+        assert!(report.switches.is_empty());
+        assert_eq!(report.batches, 20, "batch-1 target disables batching");
+        assert_eq!(report.plan_histogram(), vec![20]);
+        assert_eq!(report.energy_mj_per_request, Some(300.0));
+    }
+
+    #[test]
+    fn ops_validation_rejects_bad_points() {
+        let grid = ops_grid();
+        let c = cfg(8, 4);
+        let pol = AdaptiveConfig::default();
+        assert!(serve_operating_points(&c, &grid, &[], &pol, |_, b| fast_exec(b)).is_err());
+        let bad_plan = [OperatingPoint { plan: 9, batch: 1 }];
+        assert!(serve_operating_points(&c, &grid, &bad_plan, &pol, |_, b| fast_exec(b)).is_err());
+        let bad_batch = [OperatingPoint { plan: 0, batch: 0 }];
+        assert!(serve_operating_points(&c, &grid, &bad_batch, &pol, |_, b| fast_exec(b)).is_err());
+        // Effective batch (after the batch_max cap) must be priced.
+        let too_deep = [OperatingPoint { plan: 0, batch: 9 }];
+        let wide = ServeConfig { batch_max: 16, ..c };
+        assert!(serve_operating_points(&wide, &grid, &too_deep, &pol, |_, b| fast_exec(b)).is_err());
     }
 }

@@ -1,0 +1,119 @@
+//! Seeded arrival-trace generation: single-rate and piecewise-rate
+//! (bursty) Poisson processes.
+//!
+//! The serve loop replays a precomputed arrival trace so runs are
+//! reproducible: the same seed draws the same inter-arrival sequence
+//! regardless of host timing. A trace is either a single-rate Poisson
+//! process (the pre-batch-axis behavior, bit-identical here) or a
+//! piecewise composition of [`RatePhase`]s — e.g. calm → burst → calm —
+//! which is what exposes the difference between fixed batch-1 serving and
+//! adaptive (plan, batch) operating-point selection: a fixed loop sized
+//! for the calm rate saturates during the burst, while the controller can
+//! move to a higher-capacity batched operating point.
+
+use crate::util::rng::Rng;
+
+/// One constant-rate segment of a piecewise-Poisson arrival trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RatePhase {
+    /// Mean arrival rate of the phase, requests per second. Must be > 0.
+    pub rate_hz: f64,
+    /// Number of requests drawn in this phase. Must be > 0.
+    pub requests: usize,
+}
+
+impl RatePhase {
+    /// A phase of `requests` arrivals at `rate_hz`.
+    pub fn new(rate_hz: f64, requests: usize) -> RatePhase {
+        RatePhase { rate_hz, requests }
+    }
+}
+
+/// Draw `requests` Poisson arrival times at a single constant rate,
+/// starting from `t0`. The draw sequence (`-ln(u)/rate` per arrival, with
+/// `u` clamped away from zero) is exactly the pre-batch-axis serve loop's,
+/// so single-rate traces are bit-identical to what `run_loop` historically
+/// produced from the same RNG state.
+pub fn poisson_arrivals(rng: &mut Rng, t0: f64, rate_hz: f64, requests: usize) -> Vec<f64> {
+    let mut arrivals = Vec::with_capacity(requests);
+    let mut t = t0;
+    for _ in 0..requests {
+        t += -rng.f64().max(1e-12).ln() / rate_hz;
+        arrivals.push(t);
+    }
+    arrivals
+}
+
+/// Draw a piecewise-rate Poisson trace: each phase continues from the last
+/// arrival of the previous one, so the trace is globally non-decreasing
+/// with locally exponential inter-arrivals at the phase's rate.
+pub fn piecewise_arrivals(rng: &mut Rng, phases: &[RatePhase]) -> Vec<f64> {
+    let total: usize = phases.iter().map(|p| p.requests).sum();
+    let mut arrivals = Vec::with_capacity(total);
+    let mut t0 = 0.0;
+    for phase in phases {
+        let seg = poisson_arrivals(rng, t0, phase.rate_hz, phase.requests);
+        t0 = seg.last().copied().unwrap_or(t0);
+        arrivals.extend(seg);
+    }
+    arrivals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_trace_bitwise() {
+        let phases =
+            [RatePhase::new(100.0, 8), RatePhase::new(2000.0, 32), RatePhase::new(100.0, 8)];
+        let a = piecewise_arrivals(&mut Rng::seed_from(7), &phases);
+        let b = piecewise_arrivals(&mut Rng::seed_from(7), &phases);
+        assert_eq!(a.len(), 48);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+        // A different seed draws a different trace.
+        let c = piecewise_arrivals(&mut Rng::seed_from(8), &phases);
+        assert_ne!(bits(&a), bits(&c));
+    }
+
+    #[test]
+    fn arrivals_are_nondecreasing_across_phase_joints() {
+        let phases = [RatePhase::new(50.0, 10), RatePhase::new(5000.0, 50)];
+        let a = piecewise_arrivals(&mut Rng::seed_from(3), &phases);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "trace went backwards");
+        assert!(a[0] > 0.0);
+    }
+
+    #[test]
+    fn burst_phase_is_denser_than_calm_phase() {
+        let phases = [RatePhase::new(10.0, 40), RatePhase::new(10_000.0, 40)];
+        let a = piecewise_arrivals(&mut Rng::seed_from(11), &phases);
+        let calm_span = a[39] - a[0];
+        let burst_span = a[79] - a[40];
+        assert!(
+            burst_span * 10.0 < calm_span,
+            "burst not denser: calm {calm_span}s vs burst {burst_span}s"
+        );
+    }
+
+    #[test]
+    fn single_rate_matches_legacy_draw_sequence() {
+        // The contract that keeps `ServeReport`s reproducible across the
+        // trace-module refactor: one phase == the historical inline loop.
+        let mut rng = Rng::seed_from(2026);
+        let a = poisson_arrivals(&mut rng, 0.0, 500.0, 16);
+        let mut rng = Rng::seed_from(2026);
+        let mut t = 0.0;
+        let b: Vec<f64> = (0..16)
+            .map(|_| {
+                t += -rng.f64().max(1e-12).ln() / 500.0;
+                t
+            })
+            .collect();
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

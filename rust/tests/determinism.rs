@@ -204,6 +204,56 @@ fn frontier_plans_identical_across_engines() {
 }
 
 #[test]
+fn batch1_frontier_manifests_byte_identical_across_engine_matrix() {
+    // ISSUE 6 bit-identity guard: with the batch axis present but unused
+    // (batches = [1]), every delta_eval × incremental_inner engine
+    // combination must produce byte-identical frontier manifests — still
+    // version 2 with no "batch" keys, so plan files saved before the
+    // batch axis stay reproducible byte-for-byte.
+    use eadgo::search::optimize_frontier_batched;
+    let manifest = |delta_eval: bool, incremental_inner: bool| -> String {
+        let g = models::squeezenet::build(model_cfg());
+        let ctx = OptimizerContext::offline_default();
+        let cfg = SearchConfig {
+            max_dequeues: 16,
+            delta_eval,
+            incremental_inner,
+            ..Default::default()
+        };
+        let r = optimize_frontier_batched(&g, &ctx, &cfg, 3, &[1]).unwrap();
+        eadgo::runtime::manifest::frontier_to_json(&r.frontier).to_string_compact()
+    };
+    let reference = manifest(true, true);
+    assert!(reference.contains("\"version\":2"), "batch-1 manifest must stay v2");
+    assert!(!reference.contains("\"batch\""), "batch-1 manifest must not grow batch keys");
+    for (d, i) in [(true, false), (false, true), (false, false)] {
+        assert_eq!(
+            reference,
+            manifest(d, i),
+            "engine matrix (delta_eval={d}, incremental_inner={i}) diverged at batch 1"
+        );
+    }
+}
+
+#[test]
+fn batched_frontier_points_identical_across_engines() {
+    // The batch axis itself must be engine-invariant: a (plan, freq,
+    // batch) surface serializes identically whether candidates were
+    // evaluated through RewriteSite deltas or full rebuilds.
+    use eadgo::search::optimize_frontier_batched;
+    let run = |delta_eval: bool| -> String {
+        let g = models::squeezenet::build(model_cfg());
+        let ctx = OptimizerContext::offline_default();
+        let cfg = SearchConfig { max_dequeues: 16, delta_eval, ..Default::default() };
+        let r = optimize_frontier_batched(&g, &ctx, &cfg, 2, &[1, 4]).unwrap();
+        eadgo::runtime::manifest::frontier_to_json(&r.frontier).to_string_compact()
+    };
+    let delta = run(true);
+    assert!(delta.contains("\"version\":3"), "a batched surface must serialize as v3");
+    assert_eq!(delta, run(false), "batched frontier diverged between engines");
+}
+
+#[test]
 fn search_stats_structure_is_thread_invariant() {
     // Expansion/generation/dedup counts describe the search trajectory,
     // which must not depend on the worker count — including with DVFS.

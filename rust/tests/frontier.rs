@@ -7,7 +7,8 @@ use eadgo::energysim::FreqId;
 use eadgo::graph::canonical::graph_hash;
 use eadgo::models::{self, ModelConfig};
 use eadgo::search::{
-    optimize, optimize_frontier, OptimizerContext, PlanFrontier, PlanPoint, SearchConfig,
+    optimize, optimize_frontier, optimize_frontier_batched, price_plan_at_batch, OptimizerContext,
+    PlanFrontier, PlanPoint, SearchConfig,
 };
 use eadgo::util::prop::{check, default_cases};
 
@@ -20,11 +21,16 @@ fn scfg() -> SearchConfig {
 }
 
 /// Assert the structural frontier invariant: fastest-first, strictly
-/// increasing time, strictly decreasing energy, pairwise non-dominated.
+/// increasing batch latency, strictly decreasing energy per request
+/// (identical to plain energy when every batch is 1), pairwise
+/// non-dominated.
 fn assert_frontier_invariants(f: &PlanFrontier) {
     for w in f.points().windows(2) {
         assert!(w[0].cost.time_ms < w[1].cost.time_ms, "time not strictly increasing");
-        assert!(w[0].cost.energy_j > w[1].cost.energy_j, "energy not strictly decreasing");
+        assert!(
+            w[0].energy_per_request() > w[1].energy_per_request(),
+            "energy/request not strictly decreasing"
+        );
     }
     for (i, a) in f.points().iter().enumerate() {
         for (j, b) in f.points().iter().enumerate() {
@@ -125,6 +131,96 @@ fn legacy_single_plan_file_loads_as_one_point_frontier() {
 }
 
 #[test]
+fn batched_sweep_with_unit_batches_is_byte_identical_to_plain() {
+    // `optimize_frontier_batched(.., &[1])` IS `optimize_frontier`: same
+    // points bit-for-bit, and the saved manifests match byte-for-byte
+    // (still version 2, no "batch" keys anywhere).
+    let g = models::squeezenet::build(tiny());
+    let plain = optimize_frontier(&g, &OptimizerContext::offline_default(), &scfg(), 3).unwrap();
+    let batched =
+        optimize_frontier_batched(&g, &OptimizerContext::offline_default(), &scfg(), 3, &[1])
+            .unwrap();
+    assert_eq!(plain.frontier.len(), batched.frontier.len());
+    for (a, b) in plain.frontier.points().iter().zip(batched.frontier.points()) {
+        assert_eq!(graph_hash(&a.graph), graph_hash(&b.graph));
+        assert_eq!(a.assignment.distance(&b.assignment), 0);
+        assert_eq!(a.cost.time_ms.to_bits(), b.cost.time_ms.to_bits());
+        assert_eq!(a.cost.energy_j.to_bits(), b.cost.energy_j.to_bits());
+        assert_eq!(a.weight.to_bits(), b.weight.to_bits());
+        assert_eq!(b.batch, 1);
+    }
+    let dir = std::env::temp_dir().join("eadgo_frontier_batch1_test");
+    let pa = dir.join("plain.json");
+    let pb = dir.join("batched.json");
+    eadgo::runtime::manifest::save_frontier(&pa, &plain.frontier).unwrap();
+    eadgo::runtime::manifest::save_frontier(&pb, &batched.frontier).unwrap();
+    let sa = std::fs::read_to_string(&pa).unwrap();
+    let sb = std::fs::read_to_string(&pb).unwrap();
+    assert_eq!(sa, sb, "batch-1 manifests must be byte-identical");
+    assert!(!sa.contains("\"batch\""), "batch-1 manifest must not grow batch keys");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn batched_sweep_produces_amortized_operating_points() {
+    let g = models::squeezenet::build(tiny());
+    let ctx = OptimizerContext::offline_default();
+    let res = optimize_frontier_batched(&g, &ctx, &scfg(), 2, &[1, 8]).unwrap();
+    assert_frontier_invariants(&res.frontier);
+    assert!(res.frontier.points().iter().all(|p| p.batch == 1 || p.batch == 8));
+    // Batching amortizes weight traffic and launch overhead: the
+    // energy-optimal end of the surface must be a batch-8 point, and the
+    // latency-optimal end a batch-1 point.
+    assert_eq!(res.frontier.energy_optimal().batch, 8, "batch-8 must win energy/request");
+    assert_eq!(res.frontier.latency_optimal().batch, 1, "batch-1 must win batch latency");
+    // Probes carry their batch annotation (n per batch value).
+    assert_eq!(res.probes.len(), 4);
+    assert_eq!(res.probes.iter().filter(|p| p.batch == 8).count(), 2);
+    // The manifest for a batched surface is v3 with per-plan batch.
+    let dir = std::env::temp_dir().join("eadgo_frontier_batched_test");
+    let path = dir.join("surface.json");
+    eadgo::runtime::manifest::save_frontier(&path, &res.frontier).unwrap();
+    let reg = eadgo::algo::AlgorithmRegistry::new();
+    let back = eadgo::runtime::manifest::load_frontier(&path, &reg).unwrap();
+    assert_eq!(back.len(), res.frontier.len());
+    for (a, b) in res.frontier.points().iter().zip(back.points()) {
+        assert_eq!(a.batch, b.batch, "batch lost in manifest roundtrip");
+        assert_eq!(a.cost.energy_j.to_bits(), b.cost.energy_j.to_bits());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn price_plan_at_batch_is_identity_at_one_and_amortizes_above() {
+    let g = models::squeezenet::build(tiny());
+    let ctx = OptimizerContext::offline_default();
+    let res = optimize_frontier(&g, &ctx, &scfg(), 2).unwrap();
+    for p in res.frontier.points() {
+        let c1 = price_plan_at_batch(&ctx.oracle, &p.graph, &p.assignment, 1).unwrap();
+        assert_eq!(c1.time_ms.to_bits(), p.cost.time_ms.to_bits(), "batch-1 time drifted");
+        assert_eq!(c1.energy_j.to_bits(), p.cost.energy_j.to_bits(), "batch-1 energy drifted");
+        let c8 = price_plan_at_batch(&ctx.oracle, &p.graph, &p.assignment, 8).unwrap();
+        assert!(c8.time_ms > c1.time_ms, "a batch takes longer than a single request");
+        assert!(
+            c8.energy_j / 8.0 < c1.energy_j,
+            "batch-8 energy/request {} must beat batch-1 {}",
+            c8.energy_j / 8.0,
+            c1.energy_j
+        );
+    }
+}
+
+#[test]
+fn batched_sweep_rejects_bad_batch_lists() {
+    let g = models::simple::build_cnn(tiny());
+    let ctx = OptimizerContext::offline_default();
+    assert!(optimize_frontier_batched(&g, &ctx, &scfg(), 2, &[]).is_err());
+    assert!(optimize_frontier_batched(&g, &ctx, &scfg(), 2, &[0, 1]).is_err());
+    assert!(optimize_frontier_batched(&g, &ctx, &scfg(), 2, &[1, 4, 4]).is_err());
+    assert!(optimize_frontier_batched(&g, &ctx, &scfg(), 2, &[4, 1]).is_err());
+}
+
+#[test]
 fn prop_pruning_is_sound_and_complete() {
     // For random candidate clouds: every kept point is non-dominated, and
     // every dropped point is dominated by (or cost-identical to) a kept one.
@@ -143,6 +239,7 @@ fn prop_pruning_is_sound_and_complete() {
                     freq: FreqId::NOMINAL,
                 },
                 weight: rng.f64(),
+                batch: 1,
             })
             .collect();
         let f = PlanFrontier::from_points(cloud.clone());

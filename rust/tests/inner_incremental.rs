@@ -93,6 +93,58 @@ fn incremental_inner_bit_identical_across_frontier_weights() {
 }
 
 #[test]
+fn batched_frontier_bit_identical_across_inner_engines() {
+    // The batch axis multiplies the sweep (one weight sweep per batch
+    // size, warm hints chained within each); every (plan, freq, batch)
+    // operating point must still be bit-identical between the warm
+    // incremental inner search and the cold reference — and at batches
+    // [1] the surface must be exactly the plain frontier.
+    use eadgo::search::optimize_frontier_batched;
+    let run = |incremental_inner: bool, batches: &[usize]| -> Vec<(String, usize, u64, u64)> {
+        let g = models::squeezenet::build(model_cfg());
+        let ctx = OptimizerContext::offline_default();
+        let cfg = search_cfg(DvfsMode::Off, incremental_inner);
+        let r = optimize_frontier_batched(&g, &ctx, &cfg, 2, batches).unwrap();
+        r.frontier
+            .points()
+            .iter()
+            .map(|p| {
+                (
+                    plan_to_json(&p.graph, &p.assignment).to_string_compact(),
+                    p.batch,
+                    p.cost.time_ms.to_bits(),
+                    p.cost.energy_j.to_bits(),
+                )
+            })
+            .collect()
+    };
+    assert_eq!(
+        run(true, &[1, 2, 4]),
+        run(false, &[1, 2, 4]),
+        "batched surface diverged between inner engines"
+    );
+
+    let plain = {
+        let g = models::squeezenet::build(model_cfg());
+        let ctx = OptimizerContext::offline_default();
+        let r = optimize_frontier(&g, &ctx, &search_cfg(DvfsMode::Off, true), 2).unwrap();
+        r.frontier
+            .points()
+            .iter()
+            .map(|p| {
+                (
+                    plan_to_json(&p.graph, &p.assignment).to_string_compact(),
+                    p.batch,
+                    p.cost.time_ms.to_bits(),
+                    p.cost.energy_j.to_bits(),
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(true, &[1]), plain, "batches=[1] must reproduce the plain frontier");
+}
+
+#[test]
 fn mixed_objective_bit_identical() {
     let obj = CostFunction::linear(0.5);
     let warm = run("inception", &obj, DvfsMode::Off, true);
