@@ -17,7 +17,7 @@ use eadgo::models::{self, ModelConfig};
 use eadgo::report::f3;
 use eadgo::report::tables::frontier_table;
 use eadgo::search::{optimize_frontier, OptimizerContext, SearchConfig};
-use eadgo::serve::{serve_frontier, AdaptiveConfig, ServeConfig};
+use eadgo::serve::{AdaptiveConfig, ServeConfig, ServeSession, ServiceModel};
 use eadgo::tensor::Tensor;
 
 fn main() -> anyhow::Result<()> {
@@ -76,8 +76,12 @@ fn main() -> anyhow::Result<()> {
             seed: 2026,
             input_shape: vec![1, 3, 64, 64],
             phases: Vec::new(),
+            service: ServiceModel::Wallclock,
         };
-        let report = serve_frontier(&serve_cfg, &costs, &AdaptiveConfig::default(), &mut exec)?;
+        let report = ServeSession::new(&serve_cfg)
+            .frontier_costs(&costs)
+            .adaptive(AdaptiveConfig::default())
+            .run(&mut exec)?;
         let lat = report.latency_summary();
         println!("== {label} ==");
         println!(

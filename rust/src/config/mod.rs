@@ -46,6 +46,12 @@ pub struct RunConfig {
     /// Default batch-fill window for `eadgo serve`, milliseconds (CLI
     /// `--max-wait-ms` overrides).
     pub serve_max_wait_ms: f64,
+    /// Default for the `eadgo serve` feedback loop (CLI `--feedback`
+    /// overrides): telemetry writeback, drift detection, re-search.
+    pub serve_feedback: bool,
+    /// Default drift-detection threshold (relative error) for the serve
+    /// feedback loop (CLI `--drift-threshold` overrides).
+    pub serve_drift_threshold: f64,
 }
 
 impl Default for RunConfig {
@@ -66,6 +72,8 @@ impl Default for RunConfig {
             provider: "sim".into(),
             serve_batch_max: 4,
             serve_max_wait_ms: 2.0,
+            serve_feedback: false,
+            serve_drift_threshold: 0.25,
         }
     }
 }
@@ -140,6 +148,16 @@ impl RunConfig {
                 "serve_max_wait_ms must be finite and >= 0"
             );
             cfg.serve_max_wait_ms = x;
+        }
+        if let Some(b) = v.get("serve_feedback").and_then(Json::as_bool) {
+            cfg.serve_feedback = b;
+        }
+        if let Some(x) = v.get("serve_drift_threshold").and_then(Json::as_f64) {
+            anyhow::ensure!(
+                x.is_finite() && x > 0.0,
+                "serve_drift_threshold must be finite and > 0"
+            );
+            cfg.serve_drift_threshold = x;
         }
         if let Some(m) = v.get("model_config") {
             if let Some(x) = m.get("batch").and_then(Json::as_usize) {
@@ -275,16 +293,23 @@ mod tests {
         let path = dir.join("run.json");
 
         let mut j = Json::obj();
-        j.set("serve_batch_max", 16usize).set("serve_max_wait_ms", 0.5);
+        j.set("serve_batch_max", 16usize)
+            .set("serve_max_wait_ms", 0.5)
+            .set("serve_feedback", true)
+            .set("serve_drift_threshold", 0.4);
         json::write_file(&path, &j).unwrap();
         let cfg = RunConfig::load(&path).unwrap();
         assert_eq!(cfg.serve_batch_max, 16);
         assert_eq!(cfg.serve_max_wait_ms, 0.5);
+        assert!(cfg.serve_feedback);
+        assert_eq!(cfg.serve_drift_threshold, 0.4);
 
         // Defaults when absent.
         let d = RunConfig::default();
         assert_eq!(d.serve_batch_max, 4);
         assert_eq!(d.serve_max_wait_ms, 2.0);
+        assert!(!d.serve_feedback);
+        assert_eq!(d.serve_drift_threshold, 0.25);
 
         // Out-of-range values are config errors, not silent clamps.
         let mut bad = Json::obj();
@@ -293,6 +318,10 @@ mod tests {
         assert!(RunConfig::load(&path).is_err());
         let mut bad = Json::obj();
         bad.set("serve_max_wait_ms", -1.0);
+        json::write_file(&path, &bad).unwrap();
+        assert!(RunConfig::load(&path).is_err());
+        let mut bad = Json::obj();
+        bad.set("serve_drift_threshold", 0.0);
         json::write_file(&path, &bad).unwrap();
         assert!(RunConfig::load(&path).is_err());
 

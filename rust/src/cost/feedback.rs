@@ -1,0 +1,173 @@
+//! Measured serving telemetry, overlaying the profile database.
+//!
+//! The serve loop predicts cost from [`CostDb`] rows that were profiled
+//! offline; the rows drift from reality as thermals, clocks, and load
+//! move (PolyThrottle's observation). This module is the writeback half
+//! of the feedback loop:
+//!
+//! - [`MeasuredStore`] accumulates EWMA-smoothed **observed** per-row
+//!   costs, keyed exactly like the database — `(signature, algorithm,
+//!   frequency)` — so an observation is a drop-in replacement for the
+//!   prediction it corrects.
+//! - [`CostOracle::apply_feedback`] folds a store back into the oracle:
+//!   measured rows overwrite their database predecessors (tagged with a
+//!   `measured:` provenance), and only the resolve-cache shards and
+//!   argmin-memo keys those rows invalidate are evicted — concurrent
+//!   readers keep their slab `Arc`s and never observe a torn table.
+//!
+//! The serve side attributes a whole-plan observation down to rows via
+//! [`CostOracle::observe_plan`]: a plan-level observed/predicted ratio
+//! scales every node row the plan exercised (per-node attribution under
+//! an additive cost model — the plan's cost is the sum of its rows, so a
+//! uniform row scale reproduces the observed plan cost exactly).
+//!
+//! [`CostDb`]: super::CostDb
+//! [`CostOracle::apply_feedback`]: super::CostOracle::apply_feedback
+//! [`CostOracle::observe_plan`]: super::CostOracle::observe_plan
+
+use super::NodeCost;
+use crate::algo::Algorithm;
+use crate::energysim::FreqId;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// One EWMA-smoothed observed cost row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MeasuredRow {
+    /// The smoothed observed cost (same units as the profile database:
+    /// milliseconds and watts at the row's frequency).
+    pub cost: NodeCost,
+    /// How many observations the EWMA has absorbed.
+    pub samples: u64,
+}
+
+/// Thread-safe accumulator of observed `(signature, algorithm, frequency)`
+/// costs, keyed like the [`CostDb`](super::CostDb) it overlays.
+///
+/// Observations blend into an exponentially weighted moving average with
+/// the weight given at construction (`new_value = w·obs + (1-w)·old`), so
+/// a noisy measurement nudges the row instead of replacing it. The store
+/// is internally locked: serve threads observe while a background
+/// re-search reads a snapshot.
+#[derive(Debug)]
+pub struct MeasuredStore {
+    ewma: f64,
+    rows: Mutex<BTreeMap<(String, Algorithm, FreqId), MeasuredRow>>,
+}
+
+impl MeasuredStore {
+    /// Create a store whose observations blend with EWMA weight `ewma`
+    /// (in `(0, 1]`; 1 means every observation replaces the row).
+    ///
+    /// # Panics
+    /// Panics when `ewma` is outside `(0, 1]` or not finite.
+    pub fn new(ewma: f64) -> MeasuredStore {
+        assert!(
+            ewma.is_finite() && ewma > 0.0 && ewma <= 1.0,
+            "MeasuredStore ewma must be in (0, 1], got {ewma}"
+        );
+        MeasuredStore { ewma, rows: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Record one observed cost for a row. Non-finite or non-positive
+    /// times are dropped (a zero-time "observation" is a measurement
+    /// artifact, never a real kernel).
+    pub fn observe(&self, sig: &str, algo: Algorithm, freq: FreqId, cost: NodeCost) {
+        if !(cost.time_ms.is_finite() && cost.time_ms > 0.0 && cost.power_w.is_finite()) {
+            return;
+        }
+        let mut rows = self.rows.lock().unwrap();
+        match rows.get_mut(&(sig.to_string(), algo, freq)) {
+            Some(row) => {
+                row.cost.time_ms = self.ewma * cost.time_ms + (1.0 - self.ewma) * row.cost.time_ms;
+                row.cost.power_w = self.ewma * cost.power_w + (1.0 - self.ewma) * row.cost.power_w;
+                row.samples += 1;
+            }
+            None => {
+                rows.insert((sig.to_string(), algo, freq), MeasuredRow { cost, samples: 1 });
+            }
+        }
+    }
+
+    /// The smoothed row for a key, if any observation has landed.
+    pub fn get(&self, sig: &str, algo: Algorithm, freq: FreqId) -> Option<MeasuredRow> {
+        self.rows.lock().unwrap().get(&(sig.to_string(), algo, freq)).copied()
+    }
+
+    /// Number of distinct observed rows.
+    pub fn len(&self) -> usize {
+        self.rows.lock().unwrap().len()
+    }
+
+    /// Whether no observation has landed yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// A deterministic (key-sorted) snapshot of every smoothed row —
+    /// what [`CostOracle::apply_feedback`](super::CostOracle::apply_feedback)
+    /// folds into the database.
+    pub fn snapshot(&self) -> Vec<(String, Algorithm, FreqId, MeasuredRow)> {
+        self.rows
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|((s, a, f), row)| (s.clone(), *a, *f, *row))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SIG: &str = "relu;in=1x3x8x8";
+
+    fn cost(t: f64, p: f64) -> NodeCost {
+        NodeCost { time_ms: t, power_w: p }
+    }
+
+    #[test]
+    fn observations_blend_as_ewma() {
+        let store = MeasuredStore::new(0.5);
+        let a = Algorithm::Passthrough;
+        store.observe(SIG, a, FreqId::NOMINAL, cost(1.0, 100.0));
+        store.observe(SIG, a, FreqId::NOMINAL, cost(3.0, 200.0));
+        let row = store.get(SIG, a, FreqId::NOMINAL).unwrap();
+        assert_eq!(row.samples, 2);
+        assert!((row.cost.time_ms - 2.0).abs() < 1e-12);
+        assert!((row.cost.power_w - 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn keys_are_per_algo_and_per_freq() {
+        let store = MeasuredStore::new(1.0);
+        let a = Algorithm::Passthrough;
+        store.observe(SIG, a, FreqId::NOMINAL, cost(1.0, 100.0));
+        store.observe(SIG, a, FreqId(3), cost(2.0, 80.0));
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.get(SIG, a, FreqId(3)).unwrap().cost.time_ms, 2.0);
+        assert!(store.get("other;sig", a, FreqId::NOMINAL).is_none());
+    }
+
+    #[test]
+    fn junk_observations_are_dropped() {
+        let store = MeasuredStore::new(0.5);
+        let a = Algorithm::Passthrough;
+        store.observe(SIG, a, FreqId::NOMINAL, cost(0.0, 100.0));
+        store.observe(SIG, a, FreqId::NOMINAL, cost(f64::NAN, 100.0));
+        store.observe(SIG, a, FreqId::NOMINAL, cost(1.0, f64::INFINITY));
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let store = MeasuredStore::new(1.0);
+        let a = Algorithm::Passthrough;
+        store.observe("z;sig", a, FreqId::NOMINAL, cost(1.0, 1.0));
+        store.observe("a;sig", a, FreqId::NOMINAL, cost(2.0, 2.0));
+        let snap = store.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!(snap[0].0 < snap[1].0, "snapshot must be key-sorted");
+    }
+}

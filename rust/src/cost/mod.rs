@@ -13,12 +13,16 @@
 
 /// The persisted profile database.
 pub mod db;
+/// Measured serving telemetry overlaying the database (feedback loop).
+pub mod feedback;
 /// The thread-safe cost oracle (resolve cache + interner + provider).
 pub mod oracle;
 
 pub use db::CostDb;
+pub use feedback::{MeasuredRow, MeasuredStore};
 pub use oracle::{
-    ArgminStats, CandidateTable, CostOracle, DeltaBase, SigId, SigInterner, TableBuildStats,
+    ArgminStats, CandidateTable, CostOracle, DeltaBase, FeedbackApplied, SigId, SigInterner,
+    TableBuildStats,
 };
 
 use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};

@@ -25,6 +25,7 @@
 //! - The persistent [`CostDb`] sits behind a `Mutex` and is only touched
 //!   on resolve misses (first run) — steady-state lookups never reach it.
 
+use super::feedback::MeasuredStore;
 use super::{AdditiveKey, CostDb, CostFunction, GraphCostTable, NodeCost};
 use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};
 use crate::energysim::FreqId;
@@ -100,9 +101,12 @@ const MAX_MEMO_SLABS: usize = 8;
 /// pairs in table order, inlined into a fixed array so building a key
 /// never allocates (memo hits stay allocation-free on the hot path).
 /// Pointer keying is sound because every slab of an oracle-built table is
-/// an `Arc` shared with the resolve cache, which never evicts — the
-/// pointee outlives every memo entry. Unused tail slots stay `(0, 0)`
-/// (no real row has a null allocation), and `len` disambiguates anyway.
+/// an `Arc` shared with the resolve cache; entries the cache evicts
+/// (feedback writeback is the only eviction path) are pinned in the
+/// oracle's `retired` list, so a slab's address is never reused — the
+/// pointee outlives every memo entry either way. Unused tail slots stay
+/// `(0, 0)` (no real row has a null allocation), and `len` disambiguates
+/// anyway.
 #[derive(PartialEq, Eq, Hash)]
 struct ArgminKey {
     cf: AdditiveKey,
@@ -171,6 +175,25 @@ pub struct CostOracle {
     argmin_hits: AtomicU64,
     /// Argmin memo lookups that scanned and filled an entry.
     argmin_misses: AtomicU64,
+    /// Resolve-cache slabs evicted by [`CostOracle::apply_feedback`],
+    /// pinned for the oracle's lifetime: argmin-memo keys hash slab
+    /// allocation addresses, so an evicted slab's address must never be
+    /// reused by a future slab (the ABA hazard). Pinning also keeps
+    /// tables built before the eviction fully usable — their rows simply
+    /// reflect the pre-feedback costs they were built from.
+    retired: Mutex<Vec<Arc<Vec<(Algorithm, NodeCost)>>>>,
+}
+
+/// Outcome counters of [`CostOracle::apply_feedback`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FeedbackApplied {
+    /// Measured rows written into the profile database (provenance
+    /// `measured:<provider>`).
+    pub rows: usize,
+    /// Resolve-cache entries evicted (their slabs pinned as retired).
+    pub evicted: usize,
+    /// Argmin-memo entries pruned because they referenced evicted slabs.
+    pub memo_pruned: usize,
 }
 
 /// Cost-table construction counters — instrumentation proving the search
@@ -257,6 +280,7 @@ impl CostOracle {
             argmin_shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
             argmin_hits: AtomicU64::new(0),
             argmin_misses: AtomicU64::new(0),
+            retired: Mutex::new(Vec::new()),
         }
     }
 
@@ -389,6 +413,107 @@ impl CostOracle {
     /// Persist the profile database (the paper's on-disk cache).
     pub fn save_db(&self, path: &Path) -> anyhow::Result<()> {
         self.db.lock().unwrap().save(path)
+    }
+
+    /// Attribute a whole-plan observation down to the plan's database
+    /// rows: every `(signature, algorithm, frequency)` row the plan
+    /// `(g, a)` exercises is recorded into `store` at `time_scale` times
+    /// its predicted time (power unchanged — energy scales with time
+    /// under the constant-power row model). Under the additive cost
+    /// model this is exact plan→row attribution: the plan's predicted
+    /// cost is the sum of its rows, so scaling every row by the plan's
+    /// observed/predicted time ratio reproduces the observed plan cost.
+    ///
+    /// Rows the database has never priced are skipped (there is no
+    /// prediction to scale). Returns the number of rows recorded.
+    pub fn observe_plan(
+        &self,
+        g: &Graph,
+        a: &Assignment,
+        time_scale: f64,
+        store: &MeasuredStore,
+    ) -> anyhow::Result<usize> {
+        anyhow::ensure!(
+            time_scale.is_finite() && time_scale > 0.0,
+            "observed/predicted time scale must be positive and finite, got {time_scale}"
+        );
+        let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
+        // Collect under the db lock, observe after releasing it — the
+        // store has its own lock and holding both invites ordering bugs.
+        let mut rows: Vec<(String, Algorithm, FreqId, NodeCost)> = Vec::new();
+        {
+            let db = self.db.lock().unwrap();
+            visit_costed_nodes(g, &shapes, |id, _node, _in_shapes, sig| {
+                let Some(algo) = a.get(id) else { return };
+                let freq = a.freq(id);
+                if let Some(pred) = db.get_at(sig, algo, freq) {
+                    let obs =
+                        NodeCost { time_ms: pred.time_ms * time_scale, power_w: pred.power_w };
+                    rows.push((sig.to_string(), algo, freq, obs));
+                }
+            });
+        }
+        let n = rows.len();
+        for (sig, algo, freq, cost) in rows {
+            store.observe(&sig, algo, freq, cost);
+        }
+        Ok(n)
+    }
+
+    /// Fold a [`MeasuredStore`] back into the oracle: every smoothed
+    /// observed row overwrites its database predecessor (provenance
+    /// `measured:<provider>`), and exactly the resolve-cache entries and
+    /// argmin-memo keys those rows invalidate are evicted. Subsequent
+    /// resolves re-read the corrected database rows — untouched
+    /// algorithms of an evicted signature are re-read, **not**
+    /// re-measured, so feedback never perturbs rows it has no
+    /// observation for.
+    ///
+    /// Safe under concurrent readers: table builders racing this call
+    /// keep their slab `Arc`s alive (evicted slabs are pinned in the
+    /// oracle's retired list, which also protects the argmin memo's
+    /// pointer keys from address reuse), and every map touched is
+    /// locked per-shard. A reader observes either the old or the new
+    /// rows for a signature, never a torn mixture within one slab.
+    pub fn apply_feedback(&self, store: &MeasuredStore) -> FeedbackApplied {
+        let snap = store.snapshot();
+        if snap.is_empty() {
+            return FeedbackApplied::default();
+        }
+        let provenance = format!("measured:{}", self.provider_name);
+        {
+            let mut db = self.db.lock().unwrap();
+            for (sig, algo, freq, row) in &snap {
+                db.insert_at(sig, *algo, *freq, row.cost, &provenance);
+            }
+        }
+        let mut evicted_ptrs: std::collections::HashSet<usize> = std::collections::HashSet::new();
+        let mut newly_retired = Vec::new();
+        let mut seen: std::collections::HashSet<(SigId, FreqId)> = std::collections::HashSet::new();
+        for (sig, _algo, freq, _row) in &snap {
+            let id = self.interner.intern(sig);
+            if !seen.insert((id, *freq)) {
+                continue;
+            }
+            if let Some(arc) = self.shard(id, *freq).write().unwrap().remove(&(id, *freq)) {
+                evicted_ptrs.insert(Arc::as_ptr(&arc) as *const () as usize);
+                newly_retired.push(arc);
+            }
+        }
+        let evicted = newly_retired.len();
+        let mut memo_pruned = 0usize;
+        if !evicted_ptrs.is_empty() {
+            self.retired.lock().unwrap().extend(newly_retired);
+            for shard in &self.argmin_shards {
+                let mut w = shard.write().unwrap();
+                let before = w.len();
+                w.retain(|key, _| {
+                    !key.rows[..key.len as usize].iter().any(|(_, p)| evicted_ptrs.contains(p))
+                });
+                memo_pruned += before - w.len();
+            }
+        }
+        FeedbackApplied { rows: snap.len(), evicted, memo_pruned }
     }
 
     fn shard(&self, id: SigId, freq: FreqId) -> &ResolveShard {
@@ -859,5 +984,106 @@ mod tests {
         let r2 = oracle.profile_graph(&g).unwrap();
         assert_eq!(r2.measured, 0);
         assert_eq!(r1.measured + r1.cached, r2.cached);
+    }
+
+    #[test]
+    fn feedback_overrides_rows_without_remeasuring() {
+        let oracle = CostOracle::offline_default();
+        let g = conv_graph();
+        let a = crate::algo::Assignment::default_for(&g, oracle.reg());
+        let (t0, measured) = oracle.table_for(&g).unwrap();
+        assert!(measured > 0);
+        let c0 = t0.eval(&a);
+        // Attribute a 3x-slower whole-plan observation down to rows and
+        // fold it back in.
+        let store = MeasuredStore::new(1.0);
+        let n = oracle.observe_plan(&g, &a, 3.0, &store).unwrap();
+        assert!(n > 0);
+        assert_eq!(store.len(), n, "conv_graph has no duplicate signatures");
+        let applied = oracle.apply_feedback(&store);
+        assert_eq!(applied.rows, n);
+        assert!(applied.evicted > 0);
+        // Rebuilds re-read the corrected db; nothing re-measures.
+        let before = oracle.profiled_total();
+        let (t1, m1) = oracle.table_for(&g).unwrap();
+        assert_eq!(m1, 0, "feedback must never trigger re-measurement");
+        assert_eq!(oracle.profiled_total(), before);
+        let c1 = t1.eval(&a);
+        assert!((c1.time_ms / c0.time_ms - 3.0).abs() < 1e-9, "{} vs {}", c1.time_ms, c0.time_ms);
+        assert!((c1.energy_j / c0.energy_j - 3.0).abs() < 1e-9);
+        // The serve-side estimate path sees the corrections too.
+        let cc = oracle.cached_cost(&g, &a).unwrap().unwrap();
+        assert_eq!(cc.time_ms.to_bits(), c1.time_ms.to_bits());
+        // Old tables stay valid, still answering from pre-feedback rows.
+        assert_eq!(t0.eval(&a).time_ms.to_bits(), c0.time_ms.to_bits());
+        // Observed rows are provenance-tagged in the database.
+        let j = oracle.with_db(|db| db.to_json()).to_string_compact();
+        assert!(j.contains("\"measured:"), "observed rows must carry measured provenance");
+    }
+
+    #[test]
+    fn feedback_prunes_stale_argmin_memo_entries() {
+        use crate::cost::CostFunction;
+        let oracle = CostOracle::offline_default();
+        let g = conv_graph();
+        let shapes = g.infer_shapes().unwrap();
+        let (t0, _) = oracle.table_for_with(&g, &shapes);
+        let conv = crate::graph::NodeId(2);
+        let cf = CostFunction::Time;
+        let (_, algo0, s0) = oracle.argmin_for(&t0, conv, &cf).unwrap();
+        assert!(s0 > 0);
+        // Observe the winning algorithm as catastrophically slow.
+        let mut sig = String::new();
+        for (id, node) in g.nodes() {
+            if id == conv {
+                let in_shapes: Vec<_> =
+                    node.inputs.iter().map(|p| shapes[p.node.0][p.port].clone()).collect();
+                node.op.signature_into(&in_shapes, &mut sig);
+            }
+        }
+        let store = MeasuredStore::new(1.0);
+        store.observe(&sig, algo0, FreqId::NOMINAL, NodeCost { time_ms: 1e6, power_w: 50.0 });
+        let applied = oracle.apply_feedback(&store);
+        assert_eq!(applied.evicted, 1);
+        assert!(applied.memo_pruned >= 1, "the filled memo entry references the evicted slab");
+        // A fresh table resolves a new slab (memo miss) and the corrected
+        // row dethrones the old argmin.
+        let (t1, m) = oracle.table_for_with(&g, &shapes);
+        assert_eq!(m, 0);
+        let (_, algo1, s1) = oracle.argmin_for(&t1, conv, &cf).unwrap();
+        assert!(s1 > 0, "new slab pointers must miss the pruned memo");
+        assert_ne!(algo1, algo0, "a 1e6 ms row cannot stay time-optimal");
+        // The retired pin keeps the old table's rows intact: its argmin
+        // re-scans (its entry was pruned) but still answers from the old
+        // slab, consistently with the table's own contents.
+        let (_, algo_old, _) = oracle.argmin_for(&t0, conv, &cf).unwrap();
+        assert_eq!(algo_old, algo0);
+    }
+
+    #[test]
+    fn apply_feedback_is_safe_under_concurrent_table_builds() {
+        let oracle = CostOracle::offline_default();
+        let g = conv_graph();
+        let a = crate::algo::Assignment::default_for(&g, oracle.reg());
+        oracle.table_for(&g).unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        let (t, _) = oracle.table_for(&g).unwrap();
+                        let c = t.eval(&a);
+                        assert!(c.time_ms > 0.0 && c.time_ms.is_finite());
+                    }
+                });
+            }
+            s.spawn(|| {
+                for i in 1..20u32 {
+                    let store = MeasuredStore::new(1.0);
+                    oracle.observe_plan(&g, &a, 1.0 + f64::from(i) * 0.01, &store).unwrap();
+                    oracle.apply_feedback(&store);
+                }
+            });
+        });
+        assert_eq!(oracle.table_for(&g).unwrap().1, 0, "feedback never re-measures");
     }
 }

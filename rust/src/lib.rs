@@ -69,10 +69,12 @@
 //!
 //! Pareto frontiers: [`search::optimize_frontier`] returns the whole
 //! (latency, energy) trade-off as a dominance-pruned [`search::PlanFrontier`]
-//! instead of a single plan, and [`serve::serve_frontier`] serves it
+//! instead of a single plan, and a [`serve::ServeSession`] serves it
 //! load-adaptively — energy-optimal plan under light traffic,
-//! latency-optimal under pressure (`eadgo optimize --frontier N`,
-//! `eadgo serve --frontier plans.json --adaptive`):
+//! latency-optimal under pressure — optionally closing the loop with
+//! measured-cost feedback, drift detection, and re-search hot-swaps
+//! (`eadgo optimize --frontier N`, `eadgo serve --frontier plans.json
+//! --adaptive --feedback on`):
 //! ```
 //! use eadgo::prelude::*;
 //! let g = eadgo::models::squeezenet::build(Default::default());
@@ -135,6 +137,9 @@ pub mod prelude {
         optimize, optimize_frontier, DvfsMode, OptimizeResult, OptimizerContext, PlanFrontier,
         PlanPoint, SearchConfig,
     };
-    pub use crate::serve::{AdaptiveConfig, FrontierController, ServeConfig, ServeReport};
+    pub use crate::serve::{
+        AdaptiveConfig, FeedbackConfig, FrontierController, ResearchConfig, ServeConfig,
+        ServeReport, ServeSession, ServiceModel,
+    };
     pub use crate::subst::RuleSet;
 }

@@ -101,6 +101,11 @@ fn validate_args(args: &Args) -> anyhow::Result<()> {
             "burst",
             "frontier",
             "adaptive",
+            "feedback",
+            "drift-threshold",
+            "research-interval",
+            "truth-db",
+            "save-research",
         ],
         Some("zoo") => {
             return args.require_known(&[]).map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"));
@@ -131,7 +136,10 @@ USAGE: eadgo <subcommand> [--options]
   serve     --model M [--plan plan.json] [--frontier plans.json]
             [--adaptive] [--optimize [OBJ]] [--requests N]
             [--batch-max B] [--rate HZ] [--max-wait-ms MS]
-            [--burst R1:N1,R2:N2,...] [--artifacts DIR] [--threads T]
+            [--burst R1:N1,R2:N2,...] [--feedback on|off]
+            [--drift-threshold X] [--research-interval S]
+            [--truth-db costs.json] [--save-research plans.json]
+            [--artifacts DIR] [--threads T]
   show      --model M
   zoo
 
@@ -178,6 +186,23 @@ USAGE: eadgo <subcommand> [--options]
   calm:burst:calm) instead of the single --rate process; phases define
   the request count, so --requests/--rate are rejected alongside it.
   serve defaults honor config keys serve_batch_max / serve_max_wait_ms.
+
+  serve --feedback on closes the optimize->serve loop into a
+  self-tuning server: every executed batch feeds its measured service
+  time into a drift detector against the oracle's predicted cost;
+  sustained drift writes measured rows back into the cost database
+  (provenance-tagged), re-prices the served surface against the
+  corrected costs, and hot-swaps the controller's frontier between
+  batches without dropping a request. With --optimize the re-search
+  runs the full two-level search (warm-started from the active plan)
+  instead of re-pricing, and --save-research persists the re-searched
+  surface as a noted frontier manifest. --drift-threshold X sets the
+  relative-error trip point; --research-interval S throttles
+  re-searches (virtual seconds). --truth-db costs.json serves under a
+  deterministic virtual service model priced from a separate ground
+  truth cost database — the drift-injection harness: serve plans whose
+  --db mispredicts the truth and watch the loop correct it. Config
+  keys serve_feedback / serve_drift_threshold provide the defaults.
 ";
 
 fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
@@ -716,6 +741,78 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
         None => Vec::new(),
     };
+    // Feedback-loop knobs, same strict policy. `--feedback on` turns the
+    // session into a self-tuning server; the feedback-only options are
+    // rejected (not silently ignored) without it.
+    anyhow::ensure!(!args.flag("feedback"), "--feedback expects on|off, e.g. `--feedback on`");
+    let feedback_on = match args.get("feedback") {
+        Some("on") | Some("true") | Some("1") => true,
+        Some("off") | Some("false") | Some("0") => false,
+        Some(other) => anyhow::bail!("--feedback expects on|off, got `{other}`"),
+        None => cfg.serve_feedback,
+    };
+    anyhow::ensure!(!args.flag("drift-threshold"), "--drift-threshold expects a number");
+    anyhow::ensure!(!args.flag("research-interval"), "--research-interval expects seconds");
+    anyhow::ensure!(!args.flag("truth-db"), "--truth-db expects a path");
+    anyhow::ensure!(!args.flag("save-research"), "--save-research expects a path");
+    if !feedback_on {
+        for opt in ["drift-threshold", "research-interval", "truth-db", "save-research"] {
+            anyhow::ensure!(args.get(opt).is_none(), "--{opt} requires --feedback on");
+        }
+    }
+    let drift_threshold = args.get_f64("drift-threshold", cfg.serve_drift_threshold)?;
+    anyhow::ensure!(
+        drift_threshold.is_finite() && drift_threshold > 0.0,
+        "--drift-threshold must be finite and > 0, got {drift_threshold}"
+    );
+    let research_interval = args.get_f64("research-interval", 0.5)?;
+    anyhow::ensure!(
+        research_interval.is_finite() && research_interval >= 0.0,
+        "--research-interval must be finite and >= 0 (virtual seconds), got {research_interval}"
+    );
+    let want_optimize = args.flag("optimize") || args.get("optimize").is_some();
+    anyhow::ensure!(
+        args.get("save-research").is_none() || want_optimize,
+        "--save-research saves a re-searched surface; it requires --optimize (full re-search)"
+    );
+    let fbcfg = feedback_on.then(|| eadgo::serve::FeedbackConfig {
+        drift_threshold,
+        drift_clear: drift_threshold * 0.4,
+        research_interval_s: research_interval,
+        background: false,
+        ..Default::default()
+    });
+    // --truth-db: deterministic virtual service model priced from a
+    // separate ground-truth cost database (the drift-injection harness).
+    let truth_service = match args.get("truth-db") {
+        Some(path) => {
+            let path = std::path::Path::new(path);
+            anyhow::ensure!(path.exists(), "--truth-db {}: file not found", path.display());
+            let truth = eadgo::cost::CostOracle::new(
+                eadgo::algo::AlgorithmRegistry::new(),
+                CostDb::load_or_default(path),
+                Box::new(SimV100Provider::new(cfg.seed)),
+            );
+            let per_batch_ms = points
+                .iter()
+                .map(|p| {
+                    (1..=batch_max)
+                        .map(|m| {
+                            eadgo::search::price_plan_at_batch(&truth, &p.graph, &p.assignment, m)
+                                .map(|c| c.time_ms)
+                        })
+                        .collect::<anyhow::Result<Vec<_>>>()
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            println!(
+                "virtual service model from truth db {} ({} plan(s) x batches 1..={batch_max})",
+                path.display(),
+                per_batch_ms.len()
+            );
+            Some(eadgo::serve::ServiceModel::Virtual { per_batch_ms, scale_s_per_ms: 1e-3 })
+        }
+        None => None,
+    };
     let scfg = eadgo::serve::ServeConfig {
         requests,
         batch_max,
@@ -724,6 +821,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         seed: cfg.seed,
         input_shape,
         phases,
+        service: truth_service.unwrap_or(eadgo::serve::ServiceModel::Wallclock),
     };
     let policy = eadgo::serve::AdaptiveConfig::default();
     let use_controller = adaptive && points.len() > 1;
@@ -761,22 +859,49 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         Vec::new()
     };
 
+    // Owned copies of the served points: the feedback session can hot-swap
+    // the surface mid-run, so exec/adopt share a mutable plan store rather
+    // than borrowing the loaded frontier directly.
+    let owned: Vec<PlanPoint> = points.iter().map(|&p| p.clone()).collect();
+    // --optimize upgrades drift-triggered re-search from re-pricing to the
+    // full two-level search, warm-started from the active plan.
+    let research = if feedback_on && want_optimize {
+        let mut rbatches: Vec<usize> = owned.iter().map(|p| p.batch).collect();
+        rbatches.sort_unstable();
+        rbatches.dedup();
+        Some(eadgo::serve::ResearchConfig {
+            ctx: &ctx,
+            origin: get_model(&cfg)?,
+            search: cfg.search_config(),
+            points: owned.len().max(2),
+            batches: rbatches,
+        })
+    } else {
+        None
+    };
+    // Stash of the last adopted (fully re-searched) surface, for
+    // --save-research and the post-run summary.
+    let researched: std::cell::RefCell<Option<Vec<PlanPoint>>> = std::cell::RefCell::new(None);
+
     let manifest_path = cfg.artifacts_dir.join("manifest.json");
     let report = if manifest_path.exists() {
         let mut rt = Runtime::cpu()?;
         let n = rt.load_dir(&cfg.artifacts_dir)?;
         println!("serving via PJRT-hybrid engine ({n} artifacts)");
         let engine = eadgo::engine::pjrt::PjrtEngine::new(&rt);
-        let prepared = points
+        let prepared = owned
             .iter()
             .map(|p| engine.prepare(&p.graph, &p.assignment))
             .collect::<anyhow::Result<Vec<_>>>()?;
+        let state = std::cell::RefCell::new((owned.clone(), prepared));
         let exec = |idx: usize, batch: &[Tensor]| -> anyhow::Result<Vec<Tensor>> {
-            let p = points[idx];
+            let st = state.borrow();
+            let (pts, plans) = &*st;
+            let p = &pts[idx];
             let mut outs = Vec::with_capacity(batch.len());
             for x in batch {
                 let xs = std::slice::from_ref(x);
-                let (o, _) = engine.run_prepared(&p.graph, &p.assignment, &prepared[idx], xs)?;
+                let (o, _) = engine.run_prepared(&p.graph, &p.assignment, &plans[idx], xs)?;
                 let y = o
                     .outputs
                     .into_iter()
@@ -786,25 +911,31 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             }
             Ok(outs)
         };
-        if use_ops {
-            eadgo::serve::serve_operating_points(&scfg, &grid, &ops, &policy, exec)?
-        } else if use_controller {
-            eadgo::serve::serve_frontier(&scfg, &costs, &policy, exec)?
-        } else {
-            let p = points[0];
-            eadgo::serve::serve_plan(&scfg, &ctx.oracle, &p.graph, &p.assignment, |batch| {
-                exec(0, batch)
-            })?
-        }
+        let adopt = |pts: &[PlanPoint]| -> anyhow::Result<()> {
+            let plans = pts
+                .iter()
+                .map(|p| engine.prepare(&p.graph, &p.assignment))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            *state.borrow_mut() = (pts.to_vec(), plans);
+            *researched.borrow_mut() = Some(pts.to_vec());
+            Ok(())
+        };
+        run_serve_session(
+            &scfg, &ctx.oracle, &owned, fbcfg, research, use_ops, use_controller, &costs, &grid,
+            &ops, &policy, adaptive, exec, adopt,
+        )?
     } else {
         println!("serving via reference engine (no artifacts at {})", manifest_path.display());
         let engine = eadgo::engine::ReferenceEngine::new();
-        let plans = points
+        let plans = owned
             .iter()
             .map(|p| engine.plan(&p.graph, &p.assignment))
             .collect::<anyhow::Result<Vec<_>>>()?;
+        let state = std::cell::RefCell::new((owned.clone(), plans));
         let exec = |idx: usize, batch: &[Tensor]| -> anyhow::Result<Vec<Tensor>> {
-            let p = points[idx];
+            let st = state.borrow();
+            let (pts, plans) = &*st;
+            let p = &pts[idx];
             let mut outs = Vec::with_capacity(batch.len());
             for x in batch {
                 let xs = std::slice::from_ref(x);
@@ -818,16 +949,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             }
             Ok(outs)
         };
-        if use_ops {
-            eadgo::serve::serve_operating_points(&scfg, &grid, &ops, &policy, exec)?
-        } else if use_controller {
-            eadgo::serve::serve_frontier(&scfg, &costs, &policy, exec)?
-        } else {
-            let p = points[0];
-            eadgo::serve::serve_plan(&scfg, &ctx.oracle, &p.graph, &p.assignment, |batch| {
-                exec(0, batch)
-            })?
-        }
+        let adopt = |pts: &[PlanPoint]| -> anyhow::Result<()> {
+            let plans = pts
+                .iter()
+                .map(|p| engine.plan(&p.graph, &p.assignment))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            *state.borrow_mut() = (pts.to_vec(), plans);
+            *researched.borrow_mut() = Some(pts.to_vec());
+            Ok(())
+        };
+        run_serve_session(
+            &scfg, &ctx.oracle, &owned, fbcfg, research, use_ops, use_controller, &costs, &grid,
+            &ops, &policy, adaptive, exec, adopt,
+        )?
     };
 
     let lat = report.latency_summary();
@@ -856,11 +990,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             eadgo::report::describe_freqs(&points[0].assignment)
         );
     }
-    if use_controller || use_ops {
+    if use_controller || use_ops || (feedback_on && adaptive) {
         println!(
             "adaptive controller: {} {} switch(es), request distribution {}",
             report.switches.len(),
-            if use_ops { "operating-point" } else { "plan" },
+            if use_ops || feedback_on { "operating-point" } else { "plan" },
             report.plan_distribution()
         );
         for s in &report.switches {
@@ -876,5 +1010,101 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             println!("oracle-estimated requests/joule: {}", f3(rpj));
         }
     }
+    if feedback_on {
+        println!(
+            "feedback: {} drift event(s), {} hot-swap(s), {} measured rows",
+            report.drift_events.len(),
+            report.swaps.len(),
+            report.feedback_rows
+        );
+        for d in &report.drift_events {
+            println!(
+                "  t={:.4}s  plan {}  drift {}  (rel_err {:.3}, observed/predicted {:.3})",
+                d.at_s,
+                d.plan,
+                match d.kind {
+                    eadgo::serve::DriftKind::Detected => "detected",
+                    eadgo::serve::DriftKind::Cleared => "cleared",
+                },
+                d.rel_err,
+                d.ratio
+            );
+        }
+        for s in &report.swaps {
+            println!(
+                "  t={:.4}s  hot-swap to epoch {} ({})  energy/request {} -> {} mJ",
+                s.at_s,
+                s.epoch,
+                if s.researched { "re-searched" } else { "re-priced" },
+                f3(s.energy_mj_before),
+                f3(s.energy_mj_after)
+            );
+        }
+        match (researched.borrow().as_ref(), args.get("save-research")) {
+            (Some(pts), Some(path)) => {
+                let f = PlanFrontier::from_points(pts.clone());
+                eadgo::runtime::manifest::save_frontier_noted(
+                    std::path::Path::new(path),
+                    &f,
+                    "feedback-research",
+                )?;
+                println!("re-searched frontier ({} plans) saved to {path}", f.len());
+            }
+            (None, Some(_)) => {
+                println!("no re-searched surface to save (drift never triggered a full re-search)");
+            }
+            _ => {}
+        }
+    }
     Ok(())
+}
+
+/// Compose and run the [`ServeSession`](eadgo::serve::ServeSession) for
+/// `cmd_serve`: one call site for both engines. With feedback on, the
+/// session serves the full plan points (graphs included) so the loop can
+/// write measured costs back and hot-swap the surface; otherwise the
+/// legacy-equivalent fixed/frontier/operating-point composition applies.
+#[allow(clippy::too_many_arguments)]
+fn run_serve_session<F, G>(
+    scfg: &eadgo::serve::ServeConfig,
+    oracle: &eadgo::cost::CostOracle,
+    owned: &[PlanPoint],
+    feedback: Option<eadgo::serve::FeedbackConfig>,
+    research: Option<eadgo::serve::ResearchConfig<'_>>,
+    use_ops: bool,
+    use_controller: bool,
+    costs: &[eadgo::cost::GraphCost],
+    grid: &[Vec<eadgo::cost::GraphCost>],
+    ops: &[eadgo::serve::OperatingPoint],
+    policy: &eadgo::serve::AdaptiveConfig,
+    adaptive: bool,
+    exec: F,
+    adopt: G,
+) -> anyhow::Result<eadgo::serve::ServeReport>
+where
+    F: FnMut(usize, &[Tensor]) -> anyhow::Result<Vec<Tensor>>,
+    G: FnMut(&[PlanPoint]) -> anyhow::Result<()>,
+{
+    let session = eadgo::serve::ServeSession::new(scfg);
+    match feedback {
+        Some(fb) => {
+            let mut s = session.oracle(oracle).plan_points(owned).feedback(fb);
+            if adaptive {
+                s = s.adaptive(policy.clone());
+            }
+            match research {
+                Some(rc) => s.research(rc).run_with_adopt(exec, adopt),
+                None => s.run_with_adopt(exec, adopt),
+            }
+        }
+        None => {
+            if use_ops {
+                session.operating_points(grid, ops).adaptive(policy.clone()).run(exec)
+            } else if use_controller {
+                session.frontier_costs(costs).adaptive(policy.clone()).run(exec)
+            } else {
+                session.oracle(oracle).plan(&owned[0].graph, &owned[0].assignment).run(exec)
+            }
+        }
+    }
 }

@@ -243,9 +243,27 @@ pub fn frontier_from_json(v: &Json, reg: &AlgorithmRegistry) -> anyhow::Result<P
     Ok(PlanFrontier::from_points(points))
 }
 
+/// Like [`frontier_to_json`], with a free-form `note` annotating the
+/// manifest's origin (e.g. `"feedback-research"` for surfaces re-searched
+/// by the serve feedback loop). Loaders tolerate and ignore the key, and
+/// an absent note keeps the document byte-identical to
+/// [`frontier_to_json`]'s output.
+pub fn frontier_to_json_noted(f: &PlanFrontier, note: Option<&str>) -> Json {
+    let mut root = frontier_to_json(f);
+    if let Some(n) = note {
+        root.set("note", n);
+    }
+    root
+}
+
 /// Persist a frontier to `path` (versioned JSON, see [`frontier_to_json`]).
 pub fn save_frontier(path: &Path, f: &PlanFrontier) -> anyhow::Result<()> {
     json::write_file(path, &frontier_to_json(f))
+}
+
+/// Persist a frontier with an origin note (see [`frontier_to_json_noted`]).
+pub fn save_frontier_noted(path: &Path, f: &PlanFrontier, note: &str) -> anyhow::Result<()> {
+    json::write_file(path, &frontier_to_json_noted(f, Some(note)))
 }
 
 /// Load a frontier from `path`; single-plan files load as a one-point
@@ -445,6 +463,21 @@ mod tests {
             assert_eq!(graph_hash(&a.graph), graph_hash(&b.graph));
             assert_eq!(a.cost.energy_j.to_bits(), b.cost.energy_j.to_bits());
         }
+    }
+
+    #[test]
+    fn noted_frontier_roundtrips_and_absent_note_is_byte_stable() {
+        let f = tiny_frontier();
+        // The note rides along and the loader ignores it.
+        let j = frontier_to_json_noted(&f, Some("feedback-research"));
+        assert_eq!(j.get("note").and_then(Json::as_str), Some("feedback-research"));
+        let back = frontier_from_json(&j, &AlgorithmRegistry::new()).unwrap();
+        assert_eq!(back.len(), f.len());
+        // No note => byte-identical to the plain writer (format stability).
+        assert_eq!(
+            frontier_to_json_noted(&f, None).to_string_compact(),
+            frontier_to_json(&f).to_string_compact()
+        );
     }
 
     #[test]

@@ -267,6 +267,37 @@ pub fn optimize_frontier_batched(
     n: usize,
     batches: &[usize],
 ) -> anyhow::Result<FrontierResult> {
+    optimize_frontier_batched_warm(g0, ctx, cfg, n, batches, None)
+}
+
+/// [`optimize_frontier_batched`] with an optional **warm-start hint**: an
+/// assignment for `g0` (typically the currently-served plan of a previous
+/// search over the same origin) seeded into the first probe's baseline as
+/// [`Baseline::warm_hint`]. For the additive probe objectives the sweep
+/// uses, warm starts are result-neutral by construction — the frontier is
+/// bit-identical with or without the hint; the hint only attributes the
+/// first origin inner search as warm. The dominant re-search saving comes
+/// from the shared [`CostOracle`] instead: a re-search against an oracle
+/// warmed by a previous sweep resolves (and measures) almost nothing.
+///
+/// A hint whose length does not match `g0` is ignored (the caller may be
+/// holding a plan for a *rewritten* graph; such a plan cannot seed the
+/// origin's inner search).
+///
+/// This is the feedback loop's re-optimization entry point: on sustained
+/// drift, `serve::ServeSession` re-runs the sweep here against the
+/// feedback-corrected oracle, warm-started from the live surface.
+///
+/// [`Baseline::warm_hint`]: super::outer::Baseline::warm_hint
+/// [`CostOracle`]: crate::cost::CostOracle
+pub fn optimize_frontier_batched_warm(
+    g0: &Graph,
+    ctx: &OptimizerContext,
+    cfg: &SearchConfig,
+    n: usize,
+    batches: &[usize],
+    warm: Option<&Assignment>,
+) -> anyhow::Result<FrontierResult> {
     anyhow::ensure!(n >= 1, "frontier size must be >= 1");
     anyhow::ensure!(!batches.is_empty(), "batch sweep must name at least one batch size");
     anyhow::ensure!(batches[0] >= 1, "batch sizes must be >= 1");
@@ -279,6 +310,9 @@ pub fn optimize_frontier_batched(
     let mut candidates: Vec<PlanPoint> = Vec::new();
     let mut probes: Vec<FrontierProbe> = Vec::with_capacity(n * batches.len());
     let mut original: Option<GraphCost> = None;
+    // The hint only fits the origin graph itself (node ids must line up),
+    // so it seeds the first swept batch's first probe and nothing else.
+    let mut warm = warm.filter(|a| a.len() == g0.len()).cloned();
     for &batch in batches {
         let gb;
         let g = if batch == 1 {
@@ -287,7 +321,7 @@ pub fn optimize_frontier_batched(
             gb = g0.rebatch(batch).map_err(|e| anyhow::anyhow!("rebatch({batch}): {e}"))?;
             &gb
         };
-        let o = sweep_weights(g, ctx, cfg, n, batch, &mut candidates, &mut probes)?;
+        let o = sweep_weights(g, ctx, cfg, n, batch, warm.take(), &mut candidates, &mut probes)?;
         original.get_or_insert(o);
     }
     let mut frontier = PlanFrontier::from_points(candidates);
@@ -300,13 +334,18 @@ pub fn optimize_frontier_batched(
 }
 
 /// One `n`-probe weight sweep over `g` (already instantiated at `batch`),
-/// appending candidates and probe traces; returns the origin cost.
+/// appending candidates and probe traces; returns the origin cost. `warm`
+/// seeds the first probe's origin inner search (see
+/// [`optimize_frontier_batched_warm`]); later probes chain off the
+/// previous probe's origin plan as before.
+#[allow(clippy::too_many_arguments)]
 fn sweep_weights(
     g: &Graph,
     ctx: &OptimizerContext,
     cfg: &SearchConfig,
     n: usize,
     batch: usize,
+    warm: Option<Assignment>,
     candidates: &mut Vec<PlanPoint>,
     probes: &mut Vec<FrontierProbe>,
 ) -> anyhow::Result<GraphCost> {
@@ -335,8 +374,9 @@ fn sweep_weights(
     // For the linear probe objective the separable search is
     // start-independent, so this is result-neutral by construction — it
     // attributes the origin runs as warm in the economy counters and
-    // seeds the basin for any future non-additive probe objective.
-    let mut prev_origin: Option<Assignment> = None;
+    // seeds the basin for any future non-additive probe objective. The
+    // caller's warm hint plays the same role for probe 1.
+    let mut prev_origin: Option<Assignment> = warm;
     for i in 0..n {
         let w = i as f64 / (n - 1) as f64;
         // Same pipeline as `optimize`: evaluate the baseline once per

@@ -12,8 +12,8 @@ pub mod outer;
 
 pub use constrained::{optimize_with_time_budget, refine_frequency_to_budget, ConstrainedResult};
 pub use frontier::{
-    optimize_frontier, optimize_frontier_batched, price_plan_at_batch, FrontierProbe,
-    FrontierResult, PlanFrontier, PlanPoint,
+    optimize_frontier, optimize_frontier_batched, optimize_frontier_batched_warm,
+    price_plan_at_batch, FrontierProbe, FrontierResult, PlanFrontier, PlanPoint,
 };
 pub use inner::{
     exhaustive_search, inner_search, inner_search_incremental, random_assignment, InnerResult,

@@ -374,6 +374,23 @@ impl FrontierController {
         self.active
     }
 
+    /// Carry the live load estimates of `prev` into this controller after
+    /// a feedback hot-swap, so the new surface does not restart cold: the
+    /// arrival-rate EWMA, last-arrival timestamp, dwell timer, and switch
+    /// log all carry over. Measured per-plan service EWMAs carry only when
+    /// `carry_service` is set **and** the surfaces have the same plan
+    /// count (a re-priced surface keeps its measurements; a re-searched
+    /// surface's plans are new graphs, so theirs must restart).
+    pub fn rebase_from(&mut self, prev: &FrontierController, carry_service: bool) {
+        self.ia_ewma_s = prev.ia_ewma_s;
+        self.last_arrival_s = prev.last_arrival_s;
+        self.last_switch_s = prev.last_switch_s;
+        self.switches = prev.switches.clone();
+        if carry_service && self.svc_ewma_s.len() == prev.svc_ewma_s.len() {
+            self.svc_ewma_s.clone_from(&prev.svc_ewma_s);
+        }
+    }
+
     fn switch(&mut self, to: usize, now_s: f64, queue_depth: usize, rate_hz: f64) {
         self.switches.push(PlanSwitchEvent {
             at_s: now_s,
@@ -556,6 +573,36 @@ mod tests {
         }
         assert_eq!(c.active(), 1, "cheapest feasible point, not a blind step to index 0");
         assert_eq!(c.switches().len(), 1);
+    }
+
+    #[test]
+    fn rebase_carries_load_state_and_gates_service_ewmas() {
+        let mut prev = FrontierController::new(frontier(), AdaptiveConfig::default());
+        prev.observe_arrival(0.0);
+        prev.observe_arrival(0.01);
+        prev.observe_service(2, 0.004);
+        prev.decide(0.02, 50); // records a panic switch to plan 0
+        assert_eq!(prev.switches().len(), 1);
+
+        // Same plan count + carry_service: everything carries.
+        let mut same = FrontierController::new(frontier(), AdaptiveConfig::default());
+        same.rebase_from(&prev, true);
+        assert_eq!(same.rate_hz(), prev.rate_hz());
+        assert_eq!(same.switches().len(), 1);
+        assert_eq!(same.svc_ewma_s, prev.svc_ewma_s);
+
+        // carry_service = false: rate survives, measurements restart.
+        let mut fresh = FrontierController::new(frontier(), AdaptiveConfig::default());
+        fresh.rebase_from(&prev, false);
+        assert_eq!(fresh.rate_hz(), prev.rate_hz());
+        assert!(fresh.svc_ewma_s.iter().all(Option::is_none));
+
+        // Mismatched plan count: service EWMAs restart even when asked.
+        let mut shrunk =
+            FrontierController::new(vec![cost(1.0, 1.0)], AdaptiveConfig::default());
+        shrunk.rebase_from(&prev, true);
+        assert_eq!(shrunk.rate_hz(), prev.rate_hz());
+        assert!(shrunk.svc_ewma_s.iter().all(Option::is_none));
     }
 
     #[test]

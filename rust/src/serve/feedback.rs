@@ -1,0 +1,438 @@
+//! Drift detection for the self-tuning serve loop: compare what the cost
+//! model *predicted* a batch would cost against what serving *observed*,
+//! and decide when the gap is real.
+//!
+//! This is the detection half of the feedback loop (the writeback half
+//! lives in [`crate::cost::feedback`]):
+//!
+//! - Every executed batch feeds [`DriftDetector::observe`] with the
+//!   oracle's predicted batch latency and the measured service time.
+//! - A **calibration constant** κ maps predicted milliseconds to observed
+//!   seconds. Under a virtual service model
+//!   ([`ServiceModel::Virtual`](super::ServiceModel::Virtual)) κ is the
+//!   model's exact scale; under wallclock service it is learned from the
+//!   first [`FeedbackConfig::calibration_batches`] batches and then
+//!   frozen. Warmup calibration deliberately absorbs any *uniform*
+//!   mis-scale of the database (a constant factor on every row is
+//!   indistinguishable from a slower host); only *relative* drift — some
+//!   rows wrong by a different factor than others, or drift that starts
+//!   after calibration — is observable there.
+//! - The relative error `|observed / (κ · predicted) − 1|` is EWMA-smoothed
+//!   and run through a hysteresis state machine: drift **arms** only after
+//!   [`FeedbackConfig::drift_batches`] consecutive over-threshold batches
+//!   and **clears** only once the smoothed error falls below the (lower)
+//!   [`FeedbackConfig::drift_clear`] mark, so a single noisy batch neither
+//!   raises nor silences the alarm.
+//! - Per-plan observed/predicted ratio EWMAs ([`DriftDetector::plan_scale`])
+//!   feed the telemetry writeback: the serve loop scales the active plan's
+//!   database rows by its ratio via
+//!   [`CostOracle::observe_plan`](crate::cost::CostOracle::observe_plan).
+//!
+//! State transitions are reported as typed [`DriftEvent`]s in
+//! [`ServeReport::drift_events`](super::ServeReport::drift_events); a
+//! completed re-search lands as a [`HotSwapEvent`] in
+//! [`ServeReport::swaps`](super::ServeReport::swaps).
+
+/// Tuning knobs of the serve-time feedback loop (telemetry writeback,
+/// drift detection, and background re-search).
+#[derive(Debug, Clone)]
+pub struct FeedbackConfig {
+    /// EWMA weight of the measured-row store (how fast observed rows track
+    /// new observations), in `(0, 1]`.
+    pub store_ewma: f64,
+    /// EWMA weight of the drift detector's error and per-plan ratio
+    /// estimates, in `(0, 1]`.
+    pub drift_ewma: f64,
+    /// Smoothed relative prediction error that arms drift detection
+    /// (0.25 = the model is off by 25%).
+    pub drift_threshold: f64,
+    /// Smoothed relative error below which an armed drift clears; must be
+    /// below `drift_threshold` (hysteresis gap).
+    pub drift_clear: f64,
+    /// Consecutive over-threshold batches required before drift arms
+    /// (debounce against one-off stragglers).
+    pub drift_batches: usize,
+    /// Batches used to learn the calibration constant κ under wallclock
+    /// service (ignored when the service model fixes κ exactly).
+    pub calibration_batches: usize,
+    /// Minimum virtual seconds between re-search launches while drift
+    /// stays armed.
+    pub research_interval_s: f64,
+    /// Maximum re-searches per serve run; 0 = detection and writeback
+    /// only, never re-search.
+    pub max_researches: usize,
+    /// Run re-searches on a background thread (requests keep flowing; the
+    /// corrected surface hot-swaps in when ready) instead of inline on the
+    /// serving thread (deterministic, used by tests and the CLI).
+    pub background: bool,
+}
+
+impl Default for FeedbackConfig {
+    fn default() -> Self {
+        FeedbackConfig {
+            store_ewma: 0.3,
+            drift_ewma: 0.3,
+            drift_threshold: 0.25,
+            drift_clear: 0.10,
+            drift_batches: 3,
+            calibration_batches: 8,
+            research_interval_s: 0.5,
+            max_researches: 4,
+            background: false,
+        }
+    }
+}
+
+impl FeedbackConfig {
+    /// Validate the knobs (EWMA ranges, hysteresis ordering, counters).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, w) in [("store_ewma", self.store_ewma), ("drift_ewma", self.drift_ewma)] {
+            anyhow::ensure!(
+                w.is_finite() && w > 0.0 && w <= 1.0,
+                "{name} must be in (0, 1], got {w}"
+            );
+        }
+        anyhow::ensure!(
+            self.drift_threshold.is_finite() && self.drift_threshold > 0.0,
+            "drift_threshold must be a positive finite ratio, got {}",
+            self.drift_threshold
+        );
+        anyhow::ensure!(
+            self.drift_clear.is_finite()
+                && self.drift_clear >= 0.0
+                && self.drift_clear < self.drift_threshold,
+            "drift_clear must be in [0, drift_threshold), got {} vs {}",
+            self.drift_clear,
+            self.drift_threshold
+        );
+        anyhow::ensure!(self.drift_batches >= 1, "drift_batches must be >= 1");
+        anyhow::ensure!(self.calibration_batches >= 1, "calibration_batches must be >= 1");
+        anyhow::ensure!(
+            self.research_interval_s.is_finite() && self.research_interval_s >= 0.0,
+            "research_interval_s must be finite and >= 0, got {}",
+            self.research_interval_s
+        );
+        Ok(())
+    }
+}
+
+/// What a [`DriftEvent`] reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriftKind {
+    /// Sustained predicted-vs-observed divergence armed the detector.
+    Detected,
+    /// The smoothed error fell back below the clear mark.
+    Cleared,
+}
+
+/// One drift state transition, recorded in
+/// [`ServeReport::drift_events`](super::ServeReport::drift_events).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftEvent {
+    /// Virtual time of the transition, seconds.
+    pub at_s: f64,
+    /// Plan index whose batch triggered the transition.
+    pub plan: usize,
+    /// Smoothed relative prediction error at the transition.
+    pub rel_err: f64,
+    /// Raw observed/predicted ratio of the triggering batch.
+    pub ratio: f64,
+    /// Armed or cleared.
+    pub kind: DriftKind,
+}
+
+/// One hot-swap of the serving surface (recorded in
+/// [`ServeReport::swaps`](super::ServeReport::swaps)): the controller was
+/// rebuilt over a corrected cost surface without pausing the request loop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HotSwapEvent {
+    /// Virtual time the corrected surface took effect, seconds.
+    pub at_s: f64,
+    /// Surface epoch after the swap (requests record the epoch that
+    /// served them; epoch 0 is the initial surface).
+    pub epoch: usize,
+    /// True when a full frontier re-search produced new plans; false when
+    /// the existing plans were merely re-priced against corrected rows.
+    pub researched: bool,
+    /// Energy per request (mJ) of the previously active operating point,
+    /// priced under the *corrected* surface.
+    pub energy_mj_before: f64,
+    /// Energy per request (mJ) of the corrected surface's cheapest
+    /// operating point — what the controller can now relax to.
+    pub energy_mj_after: f64,
+}
+
+/// Compares predicted vs observed per-batch cost and decides, with
+/// calibration and hysteresis, when the cost model has drifted from
+/// reality. See the module docs for the algorithm.
+#[derive(Debug)]
+pub struct DriftDetector {
+    ewma: f64,
+    threshold: f64,
+    clear: f64,
+    arm_batches: usize,
+    calibration_batches: usize,
+    /// Seconds of observed service per predicted millisecond; `None`
+    /// while warmup calibration is still accumulating.
+    kappa: Option<f64>,
+    calib_sum: f64,
+    calib_n: usize,
+    /// EWMA of `|ratio - 1|` across all observed batches.
+    err_ewma: Option<f64>,
+    /// Consecutive over-threshold batches while disarmed.
+    over_run: usize,
+    in_drift: bool,
+    /// Per-plan EWMA of the observed/predicted ratio — the writeback
+    /// scale for that plan's database rows.
+    plan_ratio: Vec<Option<f64>>,
+}
+
+impl DriftDetector {
+    /// Build a detector for `n_plans` plans. `fixed_kappa` pins the
+    /// calibration constant exactly (virtual service models know their
+    /// own scale); `None` learns it from the first
+    /// [`FeedbackConfig::calibration_batches`] observations.
+    pub fn new(cfg: &FeedbackConfig, n_plans: usize, fixed_kappa: Option<f64>) -> DriftDetector {
+        DriftDetector {
+            ewma: cfg.drift_ewma,
+            threshold: cfg.drift_threshold,
+            clear: cfg.drift_clear,
+            arm_batches: cfg.drift_batches,
+            calibration_batches: cfg.calibration_batches,
+            kappa: fixed_kappa,
+            calib_sum: 0.0,
+            calib_n: 0,
+            err_ewma: None,
+            over_run: 0,
+            in_drift: false,
+            plan_ratio: vec![None; n_plans],
+        }
+    }
+
+    /// Feed one executed batch: the serving plan, the oracle's predicted
+    /// **batch** latency (ms) and the observed service time (s). Returns a
+    /// [`DriftEvent`] when the drift state transitions. Non-finite or
+    /// non-positive inputs and unknown plan indices are ignored.
+    pub fn observe(
+        &mut self,
+        at_s: f64,
+        plan: usize,
+        predicted_ms: f64,
+        observed_s: f64,
+    ) -> Option<DriftEvent> {
+        if !(predicted_ms.is_finite() && predicted_ms > 0.0)
+            || !(observed_s.is_finite() && observed_s > 0.0)
+            || plan >= self.plan_ratio.len()
+        {
+            return None;
+        }
+        let Some(kappa) = self.kappa else {
+            // Warmup calibration: learn κ, observe nothing yet.
+            self.calib_sum += observed_s / predicted_ms;
+            self.calib_n += 1;
+            if self.calib_n >= self.calibration_batches {
+                self.kappa = Some(self.calib_sum / self.calib_n as f64);
+            }
+            return None;
+        };
+        let ratio = observed_s / (kappa * predicted_ms);
+        let slot = &mut self.plan_ratio[plan];
+        *slot = Some(match *slot {
+            Some(e) => self.ewma * ratio + (1.0 - self.ewma) * e,
+            None => ratio,
+        });
+        let rel = (ratio - 1.0).abs();
+        let err = match self.err_ewma {
+            Some(e) => self.ewma * rel + (1.0 - self.ewma) * e,
+            None => rel,
+        };
+        self.err_ewma = Some(err);
+        if self.in_drift {
+            if err < self.clear {
+                self.in_drift = false;
+                self.over_run = 0;
+                return Some(DriftEvent {
+                    at_s,
+                    plan,
+                    rel_err: err,
+                    ratio,
+                    kind: DriftKind::Cleared,
+                });
+            }
+        } else if err > self.threshold {
+            self.over_run += 1;
+            if self.over_run >= self.arm_batches {
+                self.in_drift = true;
+                self.over_run = 0;
+                return Some(DriftEvent {
+                    at_s,
+                    plan,
+                    rel_err: err,
+                    ratio,
+                    kind: DriftKind::Detected,
+                });
+            }
+        } else {
+            self.over_run = 0;
+        }
+        None
+    }
+
+    /// The EWMA observed/predicted ratio of `plan` — the scale to apply
+    /// to that plan's database rows (`None` before any post-calibration
+    /// batch served it, or for unknown indices).
+    pub fn plan_scale(&self, plan: usize) -> Option<f64> {
+        self.plan_ratio.get(plan).copied().flatten()
+    }
+
+    /// Whether drift is currently armed.
+    pub fn in_drift(&self) -> bool {
+        self.in_drift
+    }
+
+    /// The calibration constant (s of observed service per predicted ms),
+    /// `None` while warmup calibration is still accumulating.
+    pub fn kappa(&self) -> Option<f64> {
+        self.kappa
+    }
+
+    /// Reset the error state for a new `n_plans`-plan surface after a
+    /// hot-swap: ratios, smoothed error, and the armed state clear (the
+    /// corrected surface must re-earn any drift verdict), while κ — a
+    /// property of the host, not the surface — is kept.
+    pub fn rebase(&mut self, n_plans: usize) {
+        self.plan_ratio = vec![None; n_plans];
+        self.err_ewma = None;
+        self.over_run = 0;
+        self.in_drift = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> FeedbackConfig {
+        FeedbackConfig {
+            drift_ewma: 0.5,
+            drift_threshold: 0.25,
+            drift_clear: 0.10,
+            drift_batches: 3,
+            calibration_batches: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn validate_enforces_hysteresis_ordering() {
+        assert!(FeedbackConfig::default().validate().is_ok());
+        let bad = FeedbackConfig { drift_clear: 0.5, drift_threshold: 0.25, ..cfg() };
+        assert!(bad.validate().is_err(), "clear above threshold must be rejected");
+        assert!(FeedbackConfig { drift_ewma: 0.0, ..cfg() }.validate().is_err());
+        assert!(FeedbackConfig { store_ewma: 1.5, ..cfg() }.validate().is_err());
+        assert!(FeedbackConfig { drift_batches: 0, ..cfg() }.validate().is_err());
+        assert!(FeedbackConfig { research_interval_s: f64::NAN, ..cfg() }.validate().is_err());
+    }
+
+    #[test]
+    fn fixed_kappa_detects_and_clears_with_hysteresis() {
+        // κ pinned at 1e-3 s/ms: an accurate model observes exactly
+        // κ·predicted seconds.
+        let mut d = DriftDetector::new(&cfg(), 1, Some(1e-3));
+        let mut t = 0.0;
+        for _ in 0..10 {
+            t += 0.01;
+            assert_eq!(d.observe(t, 0, 1.0, 1e-3), None, "accurate batches never arm");
+        }
+        assert!(!d.in_drift());
+        // The host now runs 2x slower than predicted: rel error 1.0 per
+        // batch. The EWMA crosses 0.25 immediately, but the debounce holds
+        // the alarm until the 3rd consecutive over-threshold batch.
+        let mut events = Vec::new();
+        for i in 0..3 {
+            t += 0.01;
+            let e = d.observe(t, 0, 1.0, 2e-3);
+            if i < 2 {
+                assert_eq!(e, None, "debounce must hold batch {i}");
+            } else {
+                events.push(e.expect("third over-threshold batch arms"));
+            }
+        }
+        assert_eq!(events[0].kind, DriftKind::Detected);
+        assert!(d.in_drift());
+        assert!((d.plan_scale(0).unwrap() - 2.0).abs() < 0.2, "ratio EWMA tracks the 2x drift");
+        // Accuracy restored: the error EWMA decays; the alarm clears only
+        // below the lower clear mark, and exactly once.
+        let mut cleared = 0;
+        for _ in 0..10 {
+            t += 0.01;
+            if let Some(e) = d.observe(t, 0, 1.0, 1e-3) {
+                assert_eq!(e.kind, DriftKind::Cleared);
+                cleared += 1;
+            }
+        }
+        assert_eq!(cleared, 1, "hysteresis clears once, not repeatedly");
+        assert!(!d.in_drift());
+    }
+
+    #[test]
+    fn one_off_straggler_does_not_arm() {
+        let mut d = DriftDetector::new(&cfg(), 1, Some(1e-3));
+        for i in 0..20 {
+            let obs = if i == 10 { 5e-3 } else { 1e-3 };
+            assert_eq!(d.observe(i as f64, 0, 1.0, obs), None);
+        }
+        assert!(!d.in_drift(), "a single straggler must not arm drift");
+    }
+
+    #[test]
+    fn warmup_calibration_absorbs_uniform_scale() {
+        // No fixed κ: the first 4 batches calibrate. A host uniformly 2x
+        // slower than the database is absorbed into κ — no drift.
+        let mut d = DriftDetector::new(&cfg(), 1, None);
+        for i in 0..4 {
+            assert_eq!(d.observe(i as f64, 0, 1.0, 2e-3), None);
+            assert_eq!(d.plan_scale(0), None, "calibration batches observe nothing");
+        }
+        assert!((d.kappa().unwrap() - 2e-3).abs() < 1e-15);
+        for i in 4..10 {
+            assert_eq!(d.observe(i as f64, 0, 1.0, 2e-3), None);
+        }
+        assert!(!d.in_drift(), "uniform mis-scale is calibrated away");
+        // Drift *after* calibration is observable: service doubles again.
+        let mut armed = false;
+        for i in 10..20 {
+            if let Some(e) = d.observe(i as f64, 0, 1.0, 4e-3) {
+                assert_eq!(e.kind, DriftKind::Detected);
+                armed = true;
+            }
+        }
+        assert!(armed, "post-calibration drift must arm");
+    }
+
+    #[test]
+    fn rebase_clears_state_but_keeps_kappa() {
+        let mut d = DriftDetector::new(&cfg(), 1, Some(1e-3));
+        for i in 0..10 {
+            d.observe(i as f64, 0, 1.0, 3e-3);
+        }
+        assert!(d.in_drift());
+        d.rebase(3);
+        assert!(!d.in_drift());
+        assert_eq!(d.plan_scale(0), None);
+        assert_eq!(d.plan_scale(2), None);
+        assert_eq!(d.kappa(), Some(1e-3), "κ is a host property, kept across swaps");
+        // The new surface re-earns its own verdict.
+        assert_eq!(d.observe(100.0, 2, 1.0, 1e-3).map(|e| e.kind), None);
+    }
+
+    #[test]
+    fn junk_observations_are_ignored() {
+        let mut d = DriftDetector::new(&cfg(), 1, Some(1e-3));
+        assert_eq!(d.observe(0.0, 0, 0.0, 1e-3), None);
+        assert_eq!(d.observe(0.0, 0, f64::NAN, 1e-3), None);
+        assert_eq!(d.observe(0.0, 0, 1.0, -1.0), None);
+        assert_eq!(d.observe(0.0, 7, 1.0, 1e-3), None, "unknown plan index");
+        assert_eq!(d.plan_scale(0), None);
+    }
+}

@@ -1,29 +1,45 @@
 //! Serving coordinator: a single-node request loop with Poisson arrivals,
-//! FIFO queueing, and dynamic batching — the L3 "thin driver" that puts the
-//! optimized `(G, A)` behind a request interface (`eadgo serve`).
+//! FIFO queueing, dynamic batching, and a self-tuning feedback loop — the
+//! L3 driver that puts optimized `(G, A)` plans behind a request interface
+//! (`eadgo serve`).
 //!
 //! The loop is a discrete-event simulation driven by *real* service times:
 //! request arrivals follow a seeded Poisson process on a virtual clock,
 //! while every batch execution is a real engine call whose measured
-//! wallclock advances that clock. Latency percentiles therefore reflect
-//! genuine compute + queueing behaviour, reproducibly.
+//! wallclock advances that clock (or, under [`ServiceModel::Virtual`], a
+//! deterministic modeled service time). Latency percentiles therefore
+//! reflect genuine compute + queueing behaviour, reproducibly.
 //!
-//! Four entry points, least to most capable:
-//! - [`serve`] — one plan, one `exec_batch` closure.
-//! - [`serve_plan`] — one plan, annotated with the shared
-//!   [`CostOracle`]'s cost estimate for it.
-//! - [`serve_frontier`] — a whole Pareto [`PlanFrontier`] of plans behind
-//!   one loop: a [`FrontierController`] watches the live request rate and
-//!   queue depth and switches the active plan (energy-optimal under light
-//!   load, latency-optimal under pressure, with hysteresis), recording
-//!   every switch in [`ServeReport::switches`].
-//! - [`serve_operating_points`] — a batched frontier of
-//!   ([`OperatingPoint`]) (plan, batch) pairs behind deadline-aware batch
-//!   formation: the controller picks an operating point from live queue
-//!   depth and EWMA arrival rate, the dispatcher targets that point's
-//!   batch size but never holds the oldest pending request past
-//!   [`ServeConfig::max_wait_s`] (admission control), and each formed
-//!   batch is charged the oracle's price *at its actual size*.
+//! **The entry point is [`ServeSession`]**: one builder that composes a
+//! plan source (a fixed plan, a Pareto frontier, or explicit operating
+//! points), an adaptive policy, and — the feedback loop — serve-time
+//! telemetry writeback, drift detection, and background re-search:
+//!
+//! ```text
+//! ServeSession::new(&cfg)
+//!     .oracle(&oracle)          // cost estimates + feedback writeback
+//!     .surface(&frontier)       // or .plan(..) / .operating_points(..)
+//!     .adaptive(policy)         // load-adaptive plan selection
+//!     .feedback(fb)             // telemetry -> drift -> re-search -> swap
+//!     .run(exec)?
+//! ```
+//!
+//! With feedback enabled the session closes the optimize→serve loop:
+//! measured batch times are attributed back onto the cost-database rows
+//! the active plan exercised
+//! ([`CostOracle::observe_plan`](crate::cost::CostOracle::observe_plan)),
+//! a [`DriftDetector`] watches the predicted-vs-observed gap with
+//! hysteresis, and on sustained drift the session re-prices (or fully
+//! re-searches, via [`ResearchConfig`]) the surface against the corrected
+//! oracle and **hot-swaps** the controller's frontier without pausing the
+//! request loop. Every drift transition and swap is recorded in the
+//! [`ServeReport`].
+//!
+//! The four pre-session entry points — [`serve`], [`serve_plan`],
+//! [`serve_frontier`], [`serve_operating_points`] — remain as deprecated
+//! thin shims over [`ServeSession`]; with feedback off the session loop
+//! is behaviourally identical to them (bit-identical under
+//! [`ServiceModel::Virtual`], where no wallclock enters the simulation).
 //!
 //! Arrival traces are single-rate Poisson by default, or piecewise-rate
 //! (bursty) when [`ServeConfig::phases`] is set — see [`trace`].
@@ -32,18 +48,69 @@
 
 /// Load-adaptive plan selection over a Pareto frontier.
 pub mod controller;
+/// Drift detection for the serve-time feedback loop.
+pub mod feedback;
+/// The serve-session builder and its unified serving loop.
+pub mod session;
 /// Seeded single-rate and piecewise-rate (bursty) Poisson arrival traces.
 pub mod trace;
 
 pub use controller::{AdaptiveConfig, FrontierController, PlanSwitchEvent};
+pub use feedback::{DriftDetector, DriftEvent, DriftKind, FeedbackConfig, HotSwapEvent};
+pub use session::{ResearchConfig, ServeSession};
 pub use trace::RatePhase;
 
 use crate::algo::Assignment;
 use crate::cost::{CostOracle, GraphCost};
 use crate::graph::Graph;
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
+
+/// How a batch's service time on the virtual clock is determined.
+///
+/// The wallclock model is the historical behaviour: real engine time
+/// drives the simulation, so latency numbers reflect the host. The
+/// virtual model makes the whole serve run a deterministic function of
+/// the configuration — the byte-identity contract between [`ServeSession`]
+/// and the legacy entry points is stated (and tested) under it, and the
+/// CLI's `--truth-db` drift ablation uses it to play back a known ground
+/// truth against a mis-calibrated cost database.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum ServiceModel {
+    /// Measured engine wallclock is the service time (historical
+    /// behaviour; non-deterministic across runs).
+    #[default]
+    Wallclock,
+    /// Deterministic service: a batch of `m` requests on plan `p` takes
+    /// `per_batch_ms[p][min(m, len) - 1] * scale_s_per_ms` seconds of
+    /// virtual time regardless of engine wallclock (the engine still
+    /// runs; its wallclock is ignored). Plan indices past the table are
+    /// clamped to the last row, so plans adopted by a full re-search
+    /// reuse the nearest priced row instead of panicking.
+    Virtual {
+        /// Ground-truth batch latency per plan: `per_batch_ms[p][m - 1]`
+        /// is the whole-batch latency of plan `p` at batch size `m`, ms.
+        per_batch_ms: Vec<Vec<f64>>,
+        /// Seconds of virtual service per modeled millisecond.
+        scale_s_per_ms: f64,
+    },
+}
+
+impl ServiceModel {
+    /// Service time (seconds) of a batch of `m` requests executed on plan
+    /// `plan`, given the measured engine wallclock `wall_s`.
+    pub fn service_s(&self, plan: usize, m: usize, wall_s: f64) -> f64 {
+        match self {
+            ServiceModel::Wallclock => wall_s,
+            ServiceModel::Virtual { per_batch_ms, scale_s_per_ms } => {
+                let row = &per_batch_ms[plan.min(per_batch_ms.len() - 1)];
+                row[m.min(row.len()) - 1] * scale_s_per_ms
+            }
+        }
+    }
+}
 
 /// Serving-loop configuration.
 #[derive(Debug, Clone)]
@@ -67,6 +134,9 @@ pub struct ServeConfig {
     /// define both the rates and the total request count, and
     /// `requests`/`arrival_rate_hz` are ignored.
     pub phases: Vec<RatePhase>,
+    /// How batch service time on the virtual clock is determined
+    /// (measured engine wallclock by default).
+    pub service: ServiceModel,
 }
 
 impl Default for ServeConfig {
@@ -79,6 +149,7 @@ impl Default for ServeConfig {
             seed: 2026,
             input_shape: vec![1, 3, 32, 32],
             phases: Vec::new(),
+            service: ServiceModel::Wallclock,
         }
     }
 }
@@ -96,7 +167,7 @@ impl ServeConfig {
 
     /// Draw the arrival trace for this config from `rng`. Single-rate
     /// configs reproduce the historical inline draw bit-for-bit.
-    fn arrival_trace(&self, rng: &mut Rng) -> anyhow::Result<Vec<f64>> {
+    pub(crate) fn arrival_trace(&self, rng: &mut Rng) -> anyhow::Result<Vec<f64>> {
         if self.phases.is_empty() {
             anyhow::ensure!(self.requests > 0, "requests must be > 0");
             anyhow::ensure!(self.arrival_rate_hz > 0.0, "arrival rate must be > 0");
@@ -130,8 +201,12 @@ pub struct RequestRecord {
     pub batch_size: usize,
     /// Frontier index of the plan that served this request (0 for
     /// single-plan serving; the *operating-point* index under
-    /// [`serve_operating_points`]).
+    /// operating-point serving).
     pub plan: usize,
+    /// Surface epoch that served this request: 0 until the feedback
+    /// loop's first hot-swap, then incremented per swap (always 0 with
+    /// feedback off).
+    pub epoch: usize,
 }
 
 impl RequestRecord {
@@ -153,12 +228,13 @@ pub struct ServeReport {
     pub records: Vec<RequestRecord>,
     /// Total virtual time from first arrival to last completion.
     pub span_s: f64,
-    /// Real wallclock spent inside the engine.
+    /// Virtual time spent in service (equals real engine wallclock under
+    /// [`ServiceModel::Wallclock`]).
     pub busy_s: f64,
     /// Number of batches executed.
     pub batches: usize,
     /// The cost oracle's estimate for the served plan (per inference),
-    /// when serving went through [`serve_plan`] with a shared oracle.
+    /// when serving a single plan with a shared oracle.
     pub plan_cost: Option<GraphCost>,
     /// Plan switches taken by the [`FrontierController`] (empty for
     /// fixed-plan serving).
@@ -167,6 +243,15 @@ pub struct ServeReport {
     /// that actually served each request (`None` when no estimate is
     /// available).
     pub energy_mj_per_request: Option<f64>,
+    /// Drift state transitions observed by the feedback loop (empty with
+    /// feedback off).
+    pub drift_events: Vec<DriftEvent>,
+    /// Hot-swaps of the serving surface taken by the feedback loop
+    /// (empty with feedback off).
+    pub swaps: Vec<HotSwapEvent>,
+    /// Distinct measured cost rows accumulated by telemetry writeback
+    /// (0 with feedback off).
+    pub feedback_rows: usize,
 }
 
 impl ServeReport {
@@ -224,119 +309,110 @@ impl ServeReport {
             .collect::<Vec<_>>()
             .join(" ")
     }
-}
 
-/// The shared serving loop behind [`serve`] and [`serve_frontier`]: with
-/// no controller every batch runs plan 0 and the behaviour (and RNG
-/// stream) is bit-identical to the pre-frontier loop.
-fn run_loop<F>(
-    cfg: &ServeConfig,
-    mut controller: Option<&mut FrontierController>,
-    mut exec: F,
-) -> anyhow::Result<ServeReport>
-where
-    F: FnMut(usize, &[Tensor]) -> anyhow::Result<Vec<Tensor>>,
-{
-    anyhow::ensure!(cfg.batch_max > 0, "batch_max must be > 0");
-
-    let mut rng = Rng::seed_from(cfg.seed);
-    // Poisson arrivals (single- or piecewise-rate), drawn before any
-    // payload so the RNG stream matches the historical inline draw.
-    let arrivals = cfg.arrival_trace(&mut rng)?;
-    let total = arrivals.len();
-
-    let mut records: Vec<RequestRecord> = Vec::with_capacity(total);
-    let mut clock = 0.0f64;
-    let mut busy_s = 0.0f64;
-    let mut batches = 0usize;
-    let mut next = 0usize; // next unserved request index
-
-    while next < total {
-        // Advance to the first pending arrival if idle.
-        clock = clock.max(arrivals[next]);
-        // The controller decides on the live queue depth at this instant:
-        // every request that has arrived but not been served.
-        let plan = match controller.as_mut() {
-            Some(c) => {
-                let mut depth = 1usize;
-                while next + depth < total && arrivals[next + depth] <= clock {
-                    depth += 1;
-                }
-                c.decide(clock, depth)
-            }
-            None => 0,
+    /// Deterministic JSON rendering of the complete report (sorted keys,
+    /// shortest-round-trip floats). Under [`ServiceModel::Virtual`] two
+    /// identical configurations produce byte-identical renderings — the
+    /// byte-identity contract between [`ServeSession`] and the legacy
+    /// entry points compares these.
+    pub fn to_json(&self) -> Json {
+        let cost_json = |c: &GraphCost| {
+            let mut j = Json::obj();
+            j.set("time_ms", c.time_ms).set("energy_j", c.energy_j).set("freq", c.freq.0 as usize);
+            j
         };
-        // Optional batching wait: let the window fill.
-        let deadline = clock + cfg.max_wait_s;
-        let mut end = next + 1;
-        while end < total && end - next < cfg.batch_max && arrivals[end] <= deadline {
-            end += 1;
-        }
-        // If we waited for later arrivals, the batch starts at the later of
-        // (deadline reached, last included arrival).
-        if end - next > 1 {
-            clock = clock.max(arrivals[end - 1]);
-        }
-        let batch_ids: Vec<usize> = (next..end).collect();
-        if let Some(c) = controller.as_mut() {
-            for &id in &batch_ids {
-                c.observe_arrival(arrivals[id]);
-            }
-        }
-        let inputs: Vec<Tensor> = batch_ids
-            .iter()
-            .map(|_| Tensor::rand(&cfg.input_shape, &mut rng, -1.0, 1.0))
-            .collect();
-
-        let t0 = std::time::Instant::now();
-        let outputs = exec(plan, &inputs)?;
-        let service = t0.elapsed().as_secs_f64();
-        anyhow::ensure!(
-            outputs.len() == inputs.len(),
-            "exec_batch returned {} outputs for {} requests",
-            outputs.len(),
-            inputs.len()
-        );
-        busy_s += service;
-        batches += 1;
-        if let Some(c) = controller.as_mut() {
-            c.observe_service(plan, service / inputs.len() as f64);
-        }
-        let start = clock;
-        clock += service;
-        for &id in &batch_ids {
-            records.push(RequestRecord {
-                id,
-                arrival_s: arrivals[id],
-                start_s: start,
-                done_s: clock,
-                batch_size: batch_ids.len(),
-                plan,
-            });
-        }
-        next = end;
+        let mut j = Json::obj();
+        j.set("span_s", self.span_s)
+            .set("busy_s", self.busy_s)
+            .set("batches", self.batches)
+            .set("feedback_rows", self.feedback_rows)
+            .set(
+                "energy_mj_per_request",
+                self.energy_mj_per_request.map(Json::Num).unwrap_or(Json::Null),
+            )
+            .set("plan_cost", self.plan_cost.as_ref().map(cost_json).unwrap_or(Json::Null))
+            .set(
+                "records",
+                self.records
+                    .iter()
+                    .map(|r| {
+                        let mut o = Json::obj();
+                        o.set("id", r.id)
+                            .set("arrival_s", r.arrival_s)
+                            .set("start_s", r.start_s)
+                            .set("done_s", r.done_s)
+                            .set("batch_size", r.batch_size)
+                            .set("plan", r.plan)
+                            .set("epoch", r.epoch);
+                        o
+                    })
+                    .collect::<Vec<_>>(),
+            )
+            .set(
+                "switches",
+                self.switches
+                    .iter()
+                    .map(|s| {
+                        let mut o = Json::obj();
+                        o.set("at_s", s.at_s)
+                            .set("from", s.from)
+                            .set("to", s.to)
+                            .set("queue_depth", s.queue_depth)
+                            .set("rate_hz", s.rate_hz);
+                        o
+                    })
+                    .collect::<Vec<_>>(),
+            )
+            .set(
+                "drift_events",
+                self.drift_events
+                    .iter()
+                    .map(|e| {
+                        let mut o = Json::obj();
+                        o.set("at_s", e.at_s)
+                            .set("plan", e.plan)
+                            .set("rel_err", e.rel_err)
+                            .set("ratio", e.ratio)
+                            .set(
+                                "kind",
+                                match e.kind {
+                                    DriftKind::Detected => "detected",
+                                    DriftKind::Cleared => "cleared",
+                                },
+                            );
+                        o
+                    })
+                    .collect::<Vec<_>>(),
+            )
+            .set(
+                "swaps",
+                self.swaps
+                    .iter()
+                    .map(|s| {
+                        let mut o = Json::obj();
+                        o.set("at_s", s.at_s)
+                            .set("epoch", s.epoch)
+                            .set("researched", s.researched)
+                            .set("energy_mj_before", s.energy_mj_before)
+                            .set("energy_mj_after", s.energy_mj_after);
+                        o
+                    })
+                    .collect::<Vec<_>>(),
+            );
+        j
     }
-
-    let first = arrivals.first().copied().unwrap_or(0.0);
-    Ok(ServeReport {
-        span_s: clock - first,
-        busy_s,
-        batches,
-        records,
-        plan_cost: None,
-        switches: Vec::new(),
-        energy_mj_per_request: None,
-    })
 }
 
-/// Run the serving loop. `exec_batch` performs one real inference batch
-/// (one tensor per request) and returns one output per request; its
-/// measured wallclock is the service time on the virtual clock.
+/// Run the serving loop over a single plan. `exec_batch` performs one
+/// real inference batch (one tensor per request) and returns one output
+/// per request; its measured wallclock is the service time on the
+/// virtual clock.
+#[deprecated(since = "0.2.0", note = "use serve::ServeSession::new(cfg).run(..)")]
 pub fn serve<F>(cfg: &ServeConfig, mut exec_batch: F) -> anyhow::Result<ServeReport>
 where
     F: FnMut(&[Tensor]) -> anyhow::Result<Vec<Tensor>>,
 {
-    run_loop(cfg, None, |_, batch| exec_batch(batch))
+    ServeSession::new(cfg).run(move |_, batch| exec_batch(batch))
 }
 
 /// Serve an optimized `(graph, assignment)` plan, annotating the report
@@ -346,46 +422,23 @@ where
 /// *same* oracle the optimizer searched with (warm profile DB), so the
 /// estimate is exactly what the search minimized. Pricing uses only
 /// already-available profiles — a cold oracle yields `plan_cost: None`
-/// rather than blocking serving startup on measurements.
-///
-/// ```
-/// use eadgo::algo::Assignment;
-/// use eadgo::cost::CostOracle;
-/// use eadgo::graph::{Graph, OpKind, PortRef};
-/// use eadgo::serve::{serve_plan, ServeConfig};
-///
-/// let oracle = CostOracle::offline_default();
-/// let mut g = Graph::new();
-/// let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
-/// let r = g.add1(OpKind::Relu, &[x], "r");
-/// g.outputs = vec![PortRef::of(r)];
-/// let a = Assignment::default_for(&g, oracle.reg());
-/// oracle.table_for(&g).unwrap(); // warm profiles => estimate attached
-///
-/// let cfg = ServeConfig { requests: 8, input_shape: vec![1, 3, 8, 8], ..Default::default() };
-/// let report = serve_plan(&cfg, &oracle, &g, &a, |batch| {
-///     Ok(batch.iter().map(eadgo::tensor::ops::relu).collect())
-/// })
-/// .unwrap();
-/// assert_eq!(report.records.len(), 8);
-/// let est = report.plan_cost.expect("oracle is warm");
-/// assert_eq!(report.energy_mj_per_request, Some(est.energy_j));
-/// ```
+/// rather than blocking serving startup on measurements. See
+/// [`ServeSession`] for the builder form and a runnable example.
+#[deprecated(
+    since = "0.2.0",
+    note = "use serve::ServeSession::new(cfg).oracle(oracle).plan(g, a).run(..)"
+)]
 pub fn serve_plan<F>(
     cfg: &ServeConfig,
     oracle: &CostOracle,
     g: &Graph,
     a: &Assignment,
-    exec_batch: F,
+    mut exec_batch: F,
 ) -> anyhow::Result<ServeReport>
 where
     F: FnMut(&[Tensor]) -> anyhow::Result<Vec<Tensor>>,
 {
-    let plan_cost = oracle.cached_cost(g, a)?;
-    let mut report = serve(cfg, exec_batch)?;
-    report.plan_cost = plan_cost;
-    report.energy_mj_per_request = plan_cost.map(|c| c.energy_j);
-    Ok(report)
+    ServeSession::new(cfg).oracle(oracle).plan(g, a).run(move |_, batch| exec_batch(batch))
 }
 
 /// Serve a Pareto frontier of plans adaptively: a [`FrontierController`]
@@ -395,6 +448,10 @@ where
 /// frontier index. The report records per-request plans, every switch
 /// event, and — when every plan has a positive energy estimate — the
 /// oracle-estimated energy per request actually spent.
+#[deprecated(
+    since = "0.2.0",
+    note = "use serve::ServeSession::new(cfg).frontier_costs(costs).adaptive(policy).run(..)"
+)]
 pub fn serve_frontier<F>(
     cfg: &ServeConfig,
     plan_costs: &[GraphCost],
@@ -404,15 +461,7 @@ pub fn serve_frontier<F>(
 where
     F: FnMut(usize, &[Tensor]) -> anyhow::Result<Vec<Tensor>>,
 {
-    anyhow::ensure!(!plan_costs.is_empty(), "serve_frontier needs at least one plan");
-    let mut controller = FrontierController::new(plan_costs.to_vec(), policy.clone());
-    let mut report = run_loop(cfg, Some(&mut controller), exec)?;
-    report.switches = controller.into_switches();
-    if plan_costs.iter().all(|c| c.energy_j > 0.0) && !report.records.is_empty() {
-        let total: f64 = report.records.iter().map(|r| plan_costs[r.plan].energy_j).sum();
-        report.energy_mj_per_request = Some(total / report.records.len() as f64);
-    }
-    Ok(report)
+    ServeSession::new(cfg).frontier_costs(plan_costs).adaptive(policy.clone()).run(exec)
 }
 
 /// One (plan, batch) point on a batched frontier: the frontier plan index
@@ -451,127 +500,21 @@ pub struct OperatingPoint {
 ///
 /// [`RequestRecord::plan`] and the switch log index into `ops` (operating
 /// points), while `exec` receives the underlying *plan* index.
+#[deprecated(
+    since = "0.2.0",
+    note = "use serve::ServeSession::new(cfg).operating_points(grid, ops).adaptive(policy).run(..)"
+)]
 pub fn serve_operating_points<F>(
     cfg: &ServeConfig,
     grid: &[Vec<GraphCost>],
     ops: &[OperatingPoint],
     policy: &AdaptiveConfig,
-    mut exec: F,
+    exec: F,
 ) -> anyhow::Result<ServeReport>
 where
     F: FnMut(usize, &[Tensor]) -> anyhow::Result<Vec<Tensor>>,
 {
-    anyhow::ensure!(cfg.batch_max > 0, "batch_max must be > 0");
-    anyhow::ensure!(!ops.is_empty(), "serve_operating_points needs at least one operating point");
-    for op in ops {
-        anyhow::ensure!(op.batch >= 1, "operating-point batch must be >= 1");
-        anyhow::ensure!(
-            op.plan < grid.len(),
-            "operating point references plan {} but the grid prices {} plans",
-            op.plan,
-            grid.len()
-        );
-        let have = grid[op.plan].len();
-        anyhow::ensure!(
-            op.batch.min(cfg.batch_max) <= have,
-            "plan {} is priced for batches 1..={have}, operating point targets batch {}",
-            op.plan,
-            op.batch.min(cfg.batch_max)
-        );
-    }
-    // The controller sees each point's *effective* batch (capped by the
-    // dispatcher limit) and the full-batch cost at that size, so its
-    // per-request estimates match what this loop can actually form.
-    let batches: Vec<usize> = ops.iter().map(|o| o.batch.min(cfg.batch_max)).collect();
-    let est: Vec<GraphCost> =
-        ops.iter().zip(&batches).map(|(o, &b)| grid[o.plan][b - 1]).collect();
-    let mut controller =
-        FrontierController::for_operating_points(est, batches.clone(), policy.clone());
-
-    let mut rng = Rng::seed_from(cfg.seed);
-    let arrivals = cfg.arrival_trace(&mut rng)?;
-    let total = arrivals.len();
-
-    let mut records: Vec<RequestRecord> = Vec::with_capacity(total);
-    let mut clock = 0.0f64;
-    let mut busy_s = 0.0f64;
-    let mut n_batches = 0usize;
-    let mut energy_mj = 0.0f64;
-    let mut next = 0usize;
-
-    while next < total {
-        clock = clock.max(arrivals[next]);
-        let mut depth = 1usize;
-        while next + depth < total && arrivals[next + depth] <= clock {
-            depth += 1;
-        }
-        let op = controller.decide(clock, depth);
-        let target = batches[op];
-        // Admission control: anchor the fill horizon at the oldest
-        // pending request's arrival, never extending a wait already
-        // served out (`max(.., clock)` only admits what has *already*
-        // arrived by now — it adds no further stalling).
-        let horizon = (arrivals[next] + cfg.max_wait_s).max(clock);
-        let mut end = next + 1;
-        while end < total && end - next < target && arrivals[end] <= horizon {
-            end += 1;
-        }
-        if end - next > 1 {
-            clock = clock.max(arrivals[end - 1]);
-        }
-        let batch_ids: Vec<usize> = (next..end).collect();
-        for &id in &batch_ids {
-            controller.observe_arrival(arrivals[id]);
-        }
-        let inputs: Vec<Tensor> = batch_ids
-            .iter()
-            .map(|_| Tensor::rand(&cfg.input_shape, &mut rng, -1.0, 1.0))
-            .collect();
-
-        let t0 = std::time::Instant::now();
-        let outputs = exec(ops[op].plan, &inputs)?;
-        let service = t0.elapsed().as_secs_f64();
-        anyhow::ensure!(
-            outputs.len() == inputs.len(),
-            "exec_batch returned {} outputs for {} requests",
-            outputs.len(),
-            inputs.len()
-        );
-        busy_s += service;
-        n_batches += 1;
-        controller.observe_service(op, service / inputs.len() as f64);
-        // Honest partial-batch pricing: charge the plan at the batch size
-        // actually formed.
-        energy_mj += grid[ops[op].plan][inputs.len() - 1].energy_j;
-        let start = clock;
-        clock += service;
-        for &id in &batch_ids {
-            records.push(RequestRecord {
-                id,
-                arrival_s: arrivals[id],
-                start_s: start,
-                done_s: clock,
-                batch_size: batch_ids.len(),
-                plan: op,
-            });
-        }
-        next = end;
-    }
-
-    let first = arrivals.first().copied().unwrap_or(0.0);
-    Ok(ServeReport {
-        span_s: clock - first,
-        busy_s,
-        batches: n_batches,
-        records,
-        plan_cost: None,
-        switches: controller.into_switches(),
-        energy_mj_per_request: if energy_mj > 0.0 && total > 0 {
-            Some(energy_mj / total as f64)
-        } else {
-            None
-        },
-    })
+    ServeSession::new(cfg).operating_points(grid, ops).adaptive(policy.clone()).run(exec)
 }
 
 #[cfg(test)]
@@ -593,22 +536,30 @@ mod tests {
             seed: 1,
             input_shape: vec![1, 3, 8, 8],
             phases: Vec::new(),
+            service: ServiceModel::Wallclock,
         }
+    }
+
+    /// Plain single-plan serving through the session builder.
+    fn run_plain(c: &ServeConfig) -> anyhow::Result<ServeReport> {
+        ServeSession::new(c).run(|_, batch| fast_exec(batch))
     }
 
     #[test]
     fn serves_all_requests_in_order() {
-        let report = serve(&cfg(50, 4), fast_exec).unwrap();
+        let report = run_plain(&cfg(50, 4)).unwrap();
         assert_eq!(report.records.len(), 50);
         let ids: Vec<usize> = report.records.iter().map(|r| r.id).collect();
         assert_eq!(ids, (0..50).collect::<Vec<_>>());
-        assert!(report.records.iter().all(|r| r.plan == 0));
+        assert!(report.records.iter().all(|r| r.plan == 0 && r.epoch == 0));
         assert!(report.switches.is_empty());
+        assert!(report.drift_events.is_empty() && report.swaps.is_empty());
+        assert_eq!(report.feedback_rows, 0);
     }
 
     #[test]
     fn time_accounting_consistent() {
-        let report = serve(&cfg(40, 4), fast_exec).unwrap();
+        let report = run_plain(&cfg(40, 4)).unwrap();
         for r in &report.records {
             assert!(r.start_s >= r.arrival_s - 1e-12, "start before arrival");
             assert!(r.done_s > r.start_s, "done before start");
@@ -622,22 +573,22 @@ mod tests {
     #[test]
     fn batching_kicks_in_under_load() {
         // arrival rate far above service rate + generous window -> batches form
-        let report = serve(&cfg(64, 8), fast_exec).unwrap();
+        let report = run_plain(&cfg(64, 8)).unwrap();
         assert!(report.mean_batch_size() > 1.0, "mean batch {}", report.mean_batch_size());
         assert!(report.batches < 64);
     }
 
     #[test]
     fn batch_max_one_disables_batching() {
-        let report = serve(&cfg(30, 1), fast_exec).unwrap();
+        let report = run_plain(&cfg(30, 1)).unwrap();
         assert_eq!(report.batches, 30);
         assert!(report.records.iter().all(|r| r.batch_size == 1));
     }
 
     #[test]
     fn deterministic_arrivals() {
-        let a = serve(&cfg(20, 4), fast_exec).unwrap();
-        let b = serve(&cfg(20, 4), fast_exec).unwrap();
+        let a = run_plain(&cfg(20, 4)).unwrap();
+        let b = run_plain(&cfg(20, 4)).unwrap();
         let arr_a: Vec<f64> = a.records.iter().map(|r| r.arrival_s).collect();
         let arr_b: Vec<f64> = b.records.iter().map(|r| r.arrival_s).collect();
         assert_eq!(arr_a, arr_b);
@@ -652,9 +603,13 @@ mod tests {
         let r = g.add1(OpKind::Relu, &[x], "r");
         g.outputs = vec![PortRef::of(r)];
         let a = crate::algo::Assignment::default_for(&g, oracle.reg());
+        let c = cfg(10, 2);
+        let run = |c: &ServeConfig| {
+            ServeSession::new(c).oracle(&oracle).plan(&g, &a).run(|_, b| fast_exec(b))
+        };
 
         // Cold oracle: serving must not trigger any profiling; no estimate.
-        let cold = serve_plan(&cfg(10, 2), &oracle, &g, &a, fast_exec).unwrap();
+        let cold = run(&c).unwrap();
         assert_eq!(cold.plan_cost, None);
         assert_eq!(cold.energy_mj_per_request, None);
         assert_eq!(oracle.profiled_total(), 0);
@@ -662,7 +617,7 @@ mod tests {
         // Warm the oracle (as `serve --optimize` or a loaded DB would).
         oracle.table_for(&g).unwrap();
         let before = oracle.profiled_total();
-        let report = serve_plan(&cfg(10, 2), &oracle, &g, &a, fast_exec).unwrap();
+        let report = run(&c).unwrap();
         let est = report.plan_cost.expect("estimate attached once warm");
         assert!(est.time_ms > 0.0 && est.energy_j > 0.0);
         assert_eq!(report.energy_mj_per_request, Some(est.energy_j));
@@ -672,13 +627,15 @@ mod tests {
 
     #[test]
     fn exec_errors_propagate() {
-        let r = serve(&cfg(5, 2), |_| anyhow::bail!("backend down"));
+        let c = cfg(5, 2);
+        let r = ServeSession::new(&c).run(|_, _: &[Tensor]| anyhow::bail!("backend down"));
         assert!(r.is_err());
     }
 
     #[test]
     fn output_arity_checked() {
-        let r = serve(&cfg(5, 2), |_| Ok(vec![]));
+        let c = cfg(5, 2);
+        let r = ServeSession::new(&c).run(|_, _| Ok(vec![]));
         assert!(r.is_err());
     }
 
@@ -695,13 +652,11 @@ mod tests {
         // 50 req/s against sub-millisecond service: utilization ~0 — the
         // controller must park on the energy-optimal plan (index 2).
         let cfg = ServeConfig { arrival_rate_hz: 50.0, ..cfg(32, 4) };
-        let report = serve_frontier(
-            &cfg,
-            &frontier_costs(),
-            &AdaptiveConfig::default(),
-            |_, batch| fast_exec(batch),
-        )
-        .unwrap();
+        let report = ServeSession::new(&cfg)
+            .frontier_costs(&frontier_costs())
+            .adaptive(AdaptiveConfig::default())
+            .run(|_, batch| fast_exec(batch))
+            .unwrap();
         assert!(report.records.iter().all(|r| r.plan == 2), "{:?}", report.plan_histogram());
         assert!(report.switches.is_empty());
         assert_eq!(report.energy_mj_per_request, Some(100.0));
@@ -714,18 +669,17 @@ mod tests {
         // the queue spikes past the panic threshold within a batch or two
         // and the controller must abandon the energy plan.
         let costs = frontier_costs();
-        let report = serve_frontier(
-            &cfg(96, 4),
-            &costs,
-            &AdaptiveConfig::default(),
-            |plan, batch| {
+        let c = cfg(96, 4);
+        let report = ServeSession::new(&c)
+            .frontier_costs(&costs)
+            .adaptive(AdaptiveConfig::default())
+            .run(|plan, batch| {
                 let per_req = 100e-6 * costs[plan].time_ms;
                 let t0 = std::time::Instant::now();
                 while t0.elapsed().as_secs_f64() < per_req * batch.len() as f64 {}
                 Ok(batch.to_vec())
-            },
-        )
-        .unwrap();
+            })
+            .unwrap();
         assert!(!report.switches.is_empty(), "overload must trigger switches");
         assert_eq!(report.records.last().unwrap().plan, 0, "{:?}", report.plan_histogram());
         // Energy accounting reflects the mix of plans actually used: the
@@ -743,16 +697,15 @@ mod tests {
     #[test]
     fn single_point_frontier_acts_like_fixed_plan() {
         let costs = vec![GraphCost { time_ms: 1.0, energy_j: 42.0, freq: FreqId::NOMINAL }];
-        let report = serve_frontier(
-            &cfg(20, 4),
-            &costs,
-            &AdaptiveConfig::default(),
-            |plan, batch| {
+        let c = cfg(20, 4);
+        let report = ServeSession::new(&c)
+            .frontier_costs(&costs)
+            .adaptive(AdaptiveConfig::default())
+            .run(|plan, batch| {
                 assert_eq!(plan, 0);
                 fast_exec(batch)
-            },
-        )
-        .unwrap();
+            })
+            .unwrap();
         assert!(report.switches.is_empty());
         assert_eq!(report.energy_mj_per_request, Some(42.0));
         assert_eq!(report.plan_histogram(), vec![20]);
@@ -761,15 +714,14 @@ mod tests {
     #[test]
     fn frontier_loop_matches_plain_serve_arrivals() {
         // The generalized loop must not perturb the RNG stream: arrivals
-        // (and thus records) line up with plain `serve` under any plan mix.
-        let a = serve(&cfg(24, 4), fast_exec).unwrap();
-        let b = serve_frontier(
-            &cfg(24, 4),
-            &frontier_costs(),
-            &AdaptiveConfig::default(),
-            |_, batch| fast_exec(batch),
-        )
-        .unwrap();
+        // (and thus records) line up with plain serving under any plan mix.
+        let a = run_plain(&cfg(24, 4)).unwrap();
+        let c = cfg(24, 4);
+        let b = ServeSession::new(&c)
+            .frontier_costs(&frontier_costs())
+            .adaptive(AdaptiveConfig::default())
+            .run(|_, batch| fast_exec(batch))
+            .unwrap();
         let arr_a: Vec<f64> = a.records.iter().map(|r| r.arrival_s).collect();
         let arr_b: Vec<f64> = b.records.iter().map(|r| r.arrival_s).collect();
         assert_eq!(arr_a, arr_b);
@@ -781,8 +733,8 @@ mod tests {
             phases: vec![RatePhase::new(200.0, 16), RatePhase::new(5_000.0, 32)],
             ..cfg(1, 4)
         };
-        let a = serve(&cfg, fast_exec).unwrap();
-        let b = serve(&cfg, fast_exec).unwrap();
+        let a = run_plain(&cfg).unwrap();
+        let b = run_plain(&cfg).unwrap();
         assert_eq!(a.records.len(), 48, "phases override `requests`");
         assert_eq!(cfg.effective_requests(), 48);
         let bits =
@@ -794,9 +746,9 @@ mod tests {
     #[test]
     fn invalid_phases_rejected() {
         let zero_rate = ServeConfig { phases: vec![RatePhase::new(0.0, 4)], ..cfg(8, 2) };
-        assert!(serve(&zero_rate, fast_exec).is_err());
+        assert!(run_plain(&zero_rate).is_err());
         let zero_reqs = ServeConfig { phases: vec![RatePhase::new(100.0, 0)], ..cfg(8, 2) };
-        assert!(serve(&zero_reqs, fast_exec).is_err());
+        assert!(run_plain(&zero_reqs).is_err());
     }
 
     /// Per-plan batch price grids (batch 1..=8): plan 0 fast/hungry,
@@ -818,8 +770,10 @@ mod tests {
     fn ops_light_load_parks_on_cheapest_point() {
         let cfg = ServeConfig { arrival_rate_hz: 50.0, ..cfg(32, 8) };
         let ops = [OperatingPoint { plan: 0, batch: 1 }, OperatingPoint { plan: 1, batch: 8 }];
-        let report =
-            serve_operating_points(&cfg, &ops_grid(), &ops, &AdaptiveConfig::default(), |plan, b| {
+        let report = ServeSession::new(&cfg)
+            .operating_points(&ops_grid(), &ops)
+            .adaptive(AdaptiveConfig::default())
+            .run(|plan, b| {
                 assert!(plan <= 1);
                 fast_exec(b)
             })
@@ -840,10 +794,10 @@ mod tests {
         // max_wait (plus engine wallclock, microscopic for fast_exec).
         let cfg = ServeConfig { arrival_rate_hz: 500.0, max_wait_s: 0.005, ..cfg(64, 8) };
         let ops = [OperatingPoint { plan: 1, batch: 8 }];
-        let report =
-            serve_operating_points(&cfg, &ops_grid(), &ops, &AdaptiveConfig::default(), |_, b| {
-                fast_exec(b)
-            })
+        let report = ServeSession::new(&cfg)
+            .operating_points(&ops_grid(), &ops)
+            .adaptive(AdaptiveConfig::default())
+            .run(|_, b| fast_exec(b))
             .unwrap();
         assert!(report.mean_batch_size() > 1.5, "window must batch: {}", report.mean_batch_size());
         let mut seen_start = f64::NEG_INFINITY;
@@ -876,8 +830,10 @@ mod tests {
         };
         let grid = ops_grid();
         let ops = [OperatingPoint { plan: 0, batch: 1 }, OperatingPoint { plan: 1, batch: 8 }];
-        let report =
-            serve_operating_points(&cfg, &grid, &ops, &AdaptiveConfig::default(), |plan, batch| {
+        let report = ServeSession::new(&cfg)
+            .operating_points(&grid, &ops)
+            .adaptive(AdaptiveConfig::default())
+            .run(|plan, batch| {
                 // Busy-spin 50 µs per estimated sim-ms of the formed batch.
                 let per_batch = 50e-6 * grid[plan][batch.len() - 1].time_ms;
                 let t0 = std::time::Instant::now();
@@ -893,8 +849,11 @@ mod tests {
     #[test]
     fn ops_single_point_acts_like_fixed_plan() {
         let ops = [OperatingPoint { plan: 0, batch: 1 }];
-        let report =
-            serve_operating_points(&cfg(20, 4), &ops_grid(), &ops, &AdaptiveConfig::default(), |plan, b| {
+        let c = cfg(20, 4);
+        let report = ServeSession::new(&c)
+            .operating_points(&ops_grid(), &ops)
+            .adaptive(AdaptiveConfig::default())
+            .run(|plan, b| {
                 assert_eq!(plan, 0);
                 fast_exec(b)
             })
@@ -909,15 +868,76 @@ mod tests {
     fn ops_validation_rejects_bad_points() {
         let grid = ops_grid();
         let c = cfg(8, 4);
-        let pol = AdaptiveConfig::default();
-        assert!(serve_operating_points(&c, &grid, &[], &pol, |_, b| fast_exec(b)).is_err());
-        let bad_plan = [OperatingPoint { plan: 9, batch: 1 }];
-        assert!(serve_operating_points(&c, &grid, &bad_plan, &pol, |_, b| fast_exec(b)).is_err());
-        let bad_batch = [OperatingPoint { plan: 0, batch: 0 }];
-        assert!(serve_operating_points(&c, &grid, &bad_batch, &pol, |_, b| fast_exec(b)).is_err());
+        let run = |c: &ServeConfig, ops: &[OperatingPoint]| {
+            ServeSession::new(c)
+                .operating_points(&grid, ops)
+                .adaptive(AdaptiveConfig::default())
+                .run(|_, b| fast_exec(b))
+        };
+        assert!(run(&c, &[]).is_err());
+        assert!(run(&c, &[OperatingPoint { plan: 9, batch: 1 }]).is_err());
+        assert!(run(&c, &[OperatingPoint { plan: 0, batch: 0 }]).is_err());
         // Effective batch (after the batch_max cap) must be priced.
-        let too_deep = [OperatingPoint { plan: 0, batch: 9 }];
         let wide = ServeConfig { batch_max: 16, ..c };
-        assert!(serve_operating_points(&wide, &grid, &too_deep, &pol, |_, b| fast_exec(b)).is_err());
+        assert!(run(&wide, &[OperatingPoint { plan: 0, batch: 9 }]).is_err());
+    }
+
+    /// A deterministic virtual service model over the 3-plan frontier:
+    /// service = plan batch time × 1e-4 s/ms, so every run of the same
+    /// configuration produces a byte-identical report.
+    fn virtual_service() -> ServiceModel {
+        ServiceModel::Virtual {
+            per_batch_ms: frontier_costs()
+                .iter()
+                .map(|c| (1..=8).map(|m| c.time_ms * m as f64).collect())
+                .collect(),
+            scale_s_per_ms: 1e-4,
+        }
+    }
+
+    #[test]
+    fn virtual_service_is_fully_deterministic() {
+        let cfg = ServeConfig { service: virtual_service(), ..cfg(40, 4) };
+        let run = || {
+            ServeSession::new(&cfg)
+                .frontier_costs(&frontier_costs())
+                .adaptive(AdaptiveConfig::default())
+                .run(|_, b| fast_exec(b))
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(
+            a.to_json().to_string_compact(),
+            b.to_json().to_string_compact(),
+            "virtual service must remove all wallclock from the report"
+        );
+        assert!(a.busy_s > 0.0);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_delegate_byte_identically() {
+        // Under a virtual service model the legacy entry points and the
+        // session builder must produce byte-identical reports (the shims
+        // are thin delegates — this pins that contract).
+        let cfg = ServeConfig { service: virtual_service(), ..cfg(32, 4) };
+        let legacy =
+            serve_frontier(&cfg, &frontier_costs(), &AdaptiveConfig::default(), |_, b| {
+                fast_exec(b)
+            })
+            .unwrap();
+        let session = ServeSession::new(&cfg)
+            .frontier_costs(&frontier_costs())
+            .adaptive(AdaptiveConfig::default())
+            .run(|_, b| fast_exec(b))
+            .unwrap();
+        assert_eq!(legacy.to_json().to_string_compact(), session.to_json().to_string_compact());
+        let plain_legacy = serve(&cfg, fast_exec).unwrap();
+        let plain_session = run_plain(&cfg).unwrap();
+        assert_eq!(
+            plain_legacy.to_json().to_string_compact(),
+            plain_session.to_json().to_string_compact()
+        );
     }
 }

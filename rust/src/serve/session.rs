@@ -1,0 +1,1025 @@
+//! The serve-session builder: one entry point composing a plan source, an
+//! adaptive policy, and the self-tuning feedback loop behind a single
+//! serving loop.
+//!
+//! [`ServeSession`] replaces the four pre-0.2 entry points (`serve`,
+//! `serve_plan`, `serve_frontier`, `serve_operating_points`, kept as
+//! deprecated shims over this builder). One loop serves every mode; with
+//! feedback off it reproduces the legacy loops exactly — bit-identically
+//! under [`ServiceModel::Virtual`](super::ServiceModel::Virtual), where no
+//! wallclock enters the simulation.
+//!
+//! With [`ServeSession::feedback`] the session closes the optimize→serve
+//! loop per executed batch:
+//!
+//! 1. **Observe** — the measured service time feeds a
+//!    [`DriftDetector`](super::DriftDetector) against the oracle's
+//!    predicted batch cost; state transitions land in
+//!    [`ServeReport::drift_events`](super::ServeReport::drift_events).
+//! 2. **Write back** — the active plan's observed/predicted ratio scales
+//!    its database rows into a [`MeasuredStore`](crate::cost::MeasuredStore)
+//!    via [`CostOracle::observe_plan`](crate::cost::CostOracle::observe_plan).
+//! 3. **Re-search** — on sustained drift the measured rows are folded into
+//!    the oracle ([`CostOracle::apply_feedback`](crate::cost::CostOracle::apply_feedback))
+//!    and the surface is re-priced against the corrected costs — or fully
+//!    re-searched ([`ServeSession::research`]) with
+//!    [`optimize_frontier_batched_warm`] warm-started from the active
+//!    plan's assignment. Background mode runs this on a scoped thread while
+//!    requests keep flowing.
+//! 4. **Hot-swap** — the corrected surface replaces the controller's
+//!    frontier atomically between batches
+//!    ([`FrontierController::rebase_from`](super::FrontierController::rebase_from)
+//!    carries the live load estimates), recorded as a
+//!    [`HotSwapEvent`](super::HotSwapEvent); subsequent requests serve
+//!    under the next epoch.
+
+use super::controller::{AdaptiveConfig, FrontierController};
+use super::feedback::{DriftDetector, DriftEvent, FeedbackConfig, HotSwapEvent};
+use super::trace::RatePhase;
+use super::{OperatingPoint, RequestRecord, ServeConfig, ServeReport, ServiceModel};
+use crate::algo::Assignment;
+use crate::cost::{CostOracle, GraphCost};
+use crate::graph::Graph;
+use crate::search::{
+    optimize_frontier_batched_warm, price_plan_at_batch, OptimizerContext, PlanFrontier,
+    PlanPoint, SearchConfig,
+};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use std::sync::mpsc;
+
+/// How the feedback loop re-searches on sustained drift: a full two-level
+/// frontier search ([`optimize_frontier_batched_warm`]) against the
+/// feedback-corrected oracle, warm-started from the active plan's
+/// assignment. Without this config the loop re-*prices* the existing
+/// plans instead (same graphs, corrected rows).
+///
+/// Requires [`ServeSession::run_with_adopt`]: a full search can yield
+/// *new* graphs the executor has never seen, and the adopt callback is
+/// how it compiles them before they serve traffic.
+pub struct ResearchConfig<'a> {
+    /// Optimizer context (rules + the shared oracle) to search with. Use
+    /// the same context whose oracle the session serves so feedback
+    /// corrections are visible to the search.
+    pub ctx: &'a OptimizerContext,
+    /// The origin graph to search from (typically the model the surface
+    /// was originally optimized from).
+    pub origin: Graph,
+    /// Two-level search configuration.
+    pub search: SearchConfig,
+    /// Frontier probe count (`n` of the weight sweep).
+    pub points: usize,
+    /// Batch sizes to sweep, strictly increasing.
+    pub batches: Vec<usize>,
+}
+
+/// What a completed re-search produced.
+enum ResearchOutcome {
+    /// Existing plans re-priced against corrected rows: a new price grid,
+    /// same graphs and operating points.
+    Reprice(Vec<Vec<GraphCost>>),
+    /// A full frontier re-search: new plan points (new graphs possible).
+    Full(Vec<PlanPoint>),
+}
+
+/// Which serving mode the session resolved to (mirrors the three legacy
+/// loops; one unified loop serves all of them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    /// Single plan, no controller.
+    Fixed,
+    /// Plan frontier with neighbor-stepping adaptive control, batch via
+    /// the greedy `batch_max` window.
+    Frontier,
+    /// (plan, batch) operating points with feasibility-based control,
+    /// deadline-aware batch formation, honest partial-batch pricing.
+    Ops,
+}
+
+/// Everything `prepare` resolved for the loop to run on.
+struct SessionState<'a> {
+    cfg: ServeConfig,
+    mode: Mode,
+    oracle: Option<&'a CostOracle>,
+    policy: Option<AdaptiveConfig>,
+    controller: Option<FrontierController>,
+    /// Frontier mode: per-plan cost estimates, fastest-first.
+    costs: Vec<GraphCost>,
+    /// Ops mode: `grid[p][m - 1]` = full-batch cost of plan `p` at batch `m`.
+    grid: Vec<Vec<GraphCost>>,
+    /// Ops mode: the operating points (indices into `grid`).
+    ops: Vec<OperatingPoint>,
+    /// Ops mode: effective target batch per point (capped by `batch_max`).
+    batches: Vec<usize>,
+    /// Fixed mode: the served plan's estimate, when an oracle priced it.
+    plan_cost: Option<GraphCost>,
+    /// Full plan points (graphs + assignments), when the source carried
+    /// them — required for feedback writeback and re-search.
+    points: Vec<PlanPoint>,
+    feedback: Option<FeedbackConfig>,
+    detector: Option<DriftDetector>,
+    store: Option<crate::cost::MeasuredStore>,
+    research: Option<ResearchConfig<'a>>,
+}
+
+/// Builder for one serving run: compose a plan source, an adaptive policy,
+/// and optionally the self-tuning feedback loop, then [`run`](Self::run).
+///
+/// Exactly one plan source may be set: [`plan`](Self::plan) (fixed plan),
+/// [`frontier_costs`](Self::frontier_costs) (adaptive over bare cost
+/// estimates), [`surface`](Self::surface) / [`plan_points`](Self::plan_points)
+/// (adaptive over full plan points), or
+/// [`operating_points`](Self::operating_points) (explicit (plan, batch)
+/// grid). No source = a single anonymous plan, as the legacy `serve`.
+///
+/// ```
+/// use eadgo::algo::Assignment;
+/// use eadgo::cost::CostOracle;
+/// use eadgo::graph::{Graph, OpKind, PortRef};
+/// use eadgo::serve::{ServeConfig, ServeSession};
+///
+/// let oracle = CostOracle::offline_default();
+/// let mut g = Graph::new();
+/// let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+/// let r = g.add1(OpKind::Relu, &[x], "r");
+/// g.outputs = vec![PortRef::of(r)];
+/// let a = Assignment::default_for(&g, oracle.reg());
+/// oracle.table_for(&g).unwrap(); // warm profiles => estimate attached
+///
+/// let cfg = ServeConfig { requests: 8, input_shape: vec![1, 3, 8, 8], ..Default::default() };
+/// let report = ServeSession::new(&cfg)
+///     .oracle(&oracle)
+///     .plan(&g, &a)
+///     .run(|_, batch| Ok(batch.iter().map(eadgo::tensor::ops::relu).collect()))
+///     .unwrap();
+/// assert_eq!(report.records.len(), 8);
+/// let est = report.plan_cost.expect("oracle is warm");
+/// assert_eq!(report.energy_mj_per_request, Some(est.energy_j));
+/// ```
+pub struct ServeSession<'a> {
+    cfg: &'a ServeConfig,
+    oracle: Option<&'a CostOracle>,
+    plan: Option<(&'a Graph, &'a Assignment)>,
+    costs: Option<Vec<GraphCost>>,
+    points: Option<Vec<PlanPoint>>,
+    ops: Option<(Vec<Vec<GraphCost>>, Vec<OperatingPoint>)>,
+    policy: Option<AdaptiveConfig>,
+    feedback: Option<FeedbackConfig>,
+    research: Option<ResearchConfig<'a>>,
+    phases: Option<Vec<RatePhase>>,
+    service: Option<ServiceModel>,
+}
+
+impl<'a> ServeSession<'a> {
+    /// Start a session over `cfg`.
+    pub fn new(cfg: &'a ServeConfig) -> ServeSession<'a> {
+        ServeSession {
+            cfg,
+            oracle: None,
+            plan: None,
+            costs: None,
+            points: None,
+            ops: None,
+            policy: None,
+            feedback: None,
+            research: None,
+            phases: None,
+            service: None,
+        }
+    }
+
+    /// Share the cost oracle: prices fixed plans, builds ops grids from
+    /// plan points, and receives feedback writeback. Required for
+    /// [`feedback`](Self::feedback).
+    pub fn oracle(mut self, oracle: &'a CostOracle) -> Self {
+        self.oracle = Some(oracle);
+        self
+    }
+
+    /// Serve one fixed `(graph, assignment)` plan. With an
+    /// [`oracle`](Self::oracle) the report carries its cost estimate
+    /// (priced from already-available profiles only — a cold oracle yields
+    /// `plan_cost: None` rather than blocking startup on measurements).
+    pub fn plan(mut self, g: &'a Graph, a: &'a Assignment) -> Self {
+        self.plan = Some((g, a));
+        self
+    }
+
+    /// Serve a plan frontier adaptively from bare cost estimates,
+    /// fastest-first (as returned by
+    /// [`PlanFrontier::costs`](crate::search::PlanFrontier::costs)).
+    /// Needs [`adaptive`](Self::adaptive); incompatible with feedback
+    /// (writeback needs the plan graphs — use [`surface`](Self::surface)).
+    pub fn frontier_costs(mut self, plan_costs: &[GraphCost]) -> Self {
+        self.costs = Some(plan_costs.to_vec());
+        self
+    }
+
+    /// Serve a Pareto [`PlanFrontier`] adaptively (full plan points:
+    /// graphs, assignments, and costs). With feedback on, the points are
+    /// ops-ified — priced per batch size and served as operating points —
+    /// so the surface can be re-priced and hot-swapped.
+    pub fn surface(self, frontier: &PlanFrontier) -> Self {
+        self.plan_points(frontier.points())
+    }
+
+    /// Like [`surface`](Self::surface), from raw plan points (no
+    /// dominance pruning — crafted surfaces serve as given).
+    pub fn plan_points(mut self, points: &[PlanPoint]) -> Self {
+        self.points = Some(points.to_vec());
+        self
+    }
+
+    /// Serve explicit (plan, batch) operating points over a price grid
+    /// (`grid[p][m - 1]` = full-batch cost of plan `p` at batch `m`).
+    /// Needs [`adaptive`](Self::adaptive); incompatible with feedback
+    /// (writeback needs the plan graphs — use [`surface`](Self::surface)).
+    pub fn operating_points(mut self, grid: &[Vec<GraphCost>], ops: &[OperatingPoint]) -> Self {
+        self.ops = Some((grid.to_vec(), ops.to_vec()));
+        self
+    }
+
+    /// Adaptive policy for multi-plan sources (required by
+    /// [`frontier_costs`](Self::frontier_costs) and
+    /// [`operating_points`](Self::operating_points); defaulted when
+    /// feedback ops-ifies a surface).
+    pub fn adaptive(mut self, policy: AdaptiveConfig) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Enable the self-tuning feedback loop: telemetry writeback, drift
+    /// detection, and (over a plan-point surface) drift-triggered
+    /// re-search with hot-swap. Needs an [`oracle`](Self::oracle) and a
+    /// source carrying plan graphs ([`plan`](Self::plan),
+    /// [`surface`](Self::surface), or [`plan_points`](Self::plan_points)).
+    pub fn feedback(mut self, fb: FeedbackConfig) -> Self {
+        self.feedback = Some(fb);
+        self
+    }
+
+    /// Upgrade drift-triggered re-search from re-pricing to a full
+    /// frontier search (see [`ResearchConfig`]). Requires
+    /// [`run_with_adopt`](Self::run_with_adopt).
+    pub fn research(mut self, rc: ResearchConfig<'a>) -> Self {
+        self.research = Some(rc);
+        self
+    }
+
+    /// Override the arrival trace with piecewise-rate phases (equivalent
+    /// to setting [`ServeConfig::phases`]).
+    pub fn trace(mut self, phases: Vec<RatePhase>) -> Self {
+        self.phases = Some(phases);
+        self
+    }
+
+    /// Override the service model (equivalent to setting
+    /// [`ServeConfig::service`]).
+    pub fn service(mut self, service: ServiceModel) -> Self {
+        self.service = Some(service);
+        self
+    }
+
+    /// Run the session. `exec` executes one batch under the given plan
+    /// index (always 0 for fixed-plan serving; the *grid* plan index for
+    /// operating-point serving) and returns one output per request.
+    ///
+    /// Errors if a [`research`](Self::research) config is set — a full
+    /// re-search can produce new graphs the executor has never compiled,
+    /// so it requires [`run_with_adopt`](Self::run_with_adopt).
+    pub fn run<F>(self, exec: F) -> anyhow::Result<ServeReport>
+    where
+        F: FnMut(usize, &[Tensor]) -> anyhow::Result<Vec<Tensor>>,
+    {
+        anyhow::ensure!(
+            self.research.is_none(),
+            "a full re-search can adopt new plans the executor has never seen: use run_with_adopt"
+        );
+        self.run_with_adopt(exec, |_: &[PlanPoint]| Ok(()))
+    }
+
+    /// Run the session with an adopt callback: before a fully re-searched
+    /// surface serves traffic, `adopt` receives its plan points (in grid
+    /// order) so the executor can compile them; an adopt error aborts the
+    /// swap and the serve run. Re-pricing swaps (same graphs) do not call
+    /// `adopt`.
+    pub fn run_with_adopt<F, G>(self, mut exec: F, mut adopt: G) -> anyhow::Result<ServeReport>
+    where
+        F: FnMut(usize, &[Tensor]) -> anyhow::Result<Vec<Tensor>>,
+        G: FnMut(&[PlanPoint]) -> anyhow::Result<()>,
+    {
+        let mut st = self.prepare()?;
+        let needs_bg = st.mode == Mode::Ops
+            && st.feedback.as_ref().is_some_and(|f| f.background && f.max_researches > 0);
+        if needs_bg {
+            std::thread::scope(|scope| serve_loop(&mut st, &mut exec, &mut adopt, Some(scope)))
+        } else {
+            serve_loop(&mut st, &mut exec, &mut adopt, None)
+        }
+    }
+
+    /// Resolve the builder into a validated [`SessionState`], preserving
+    /// the legacy entry points' validation messages exactly.
+    fn prepare(self) -> anyhow::Result<SessionState<'a>> {
+        let mut cfg = self.cfg.clone();
+        if let Some(phases) = self.phases {
+            cfg.phases = phases;
+        }
+        if let Some(service) = self.service {
+            cfg.service = service;
+        }
+        anyhow::ensure!(cfg.batch_max > 0, "batch_max must be > 0");
+
+        let sources = usize::from(self.plan.is_some())
+            + usize::from(self.costs.is_some())
+            + usize::from(self.points.is_some())
+            + usize::from(self.ops.is_some());
+        anyhow::ensure!(
+            sources <= 1,
+            "ServeSession takes at most one plan source (plan / frontier_costs / \
+             surface / plan_points / operating_points), got {sources}"
+        );
+
+        let feedback_on = self.feedback.is_some();
+        if let Some(fb) = &self.feedback {
+            fb.validate()?;
+            anyhow::ensure!(
+                self.oracle.is_some(),
+                "feedback needs a cost oracle (ServeSession::oracle)"
+            );
+        }
+
+        let mut st = SessionState {
+            cfg,
+            mode: Mode::Fixed,
+            oracle: self.oracle,
+            policy: self.policy,
+            controller: None,
+            costs: Vec::new(),
+            grid: Vec::new(),
+            ops: Vec::new(),
+            batches: Vec::new(),
+            plan_cost: None,
+            points: Vec::new(),
+            feedback: self.feedback,
+            detector: None,
+            store: None,
+            research: self.research,
+        };
+
+        if let Some((grid, ops)) = self.ops {
+            validate_ops(&st.cfg, &grid, &ops)?;
+            st.batches = ops.iter().map(|o| o.batch.min(st.cfg.batch_max)).collect();
+            st.grid = grid;
+            st.ops = ops;
+            st.mode = Mode::Ops;
+        } else if let Some(points) = self.points {
+            anyhow::ensure!(!points.is_empty(), "serve_frontier needs at least one plan");
+            if feedback_on {
+                // Ops-ify: price every plan across 1..=batch_max and serve
+                // the surface as operating points, so corrected rows can
+                // re-price it and the controller can hot-swap.
+                let oracle = st.oracle.expect("feedback validated above");
+                let bmax = st.cfg.batch_max;
+                let mut grid = Vec::with_capacity(points.len());
+                for p in &points {
+                    let row: anyhow::Result<Vec<GraphCost>> = (1..=bmax)
+                        .map(|m| price_plan_at_batch(oracle, &p.graph, &p.assignment, m))
+                        .collect();
+                    grid.push(row?);
+                }
+                st.ops =
+                    (0..points.len()).map(|i| OperatingPoint { plan: i, batch: bmax }).collect();
+                st.batches = vec![bmax; points.len()];
+                st.grid = grid;
+                st.points = points;
+                st.mode = Mode::Ops;
+            } else {
+                st.costs = points.iter().map(|p| p.cost).collect();
+                st.points = points;
+                st.mode = Mode::Frontier;
+            }
+        } else if let Some(costs) = self.costs {
+            anyhow::ensure!(!costs.is_empty(), "serve_frontier needs at least one plan");
+            anyhow::ensure!(
+                !feedback_on,
+                "feedback needs the plan graphs for writeback, not bare cost estimates: \
+                 use ServeSession::surface or plan_points"
+            );
+            st.costs = costs;
+            st.mode = Mode::Frontier;
+        } else if let Some((g, a)) = self.plan {
+            st.plan_cost = match st.oracle {
+                Some(oracle) => oracle.cached_cost(g, a)?,
+                None => None,
+            };
+            if let Some(cost) = st.plan_cost {
+                st.points = vec![PlanPoint {
+                    graph: g.clone(),
+                    assignment: a.clone(),
+                    cost,
+                    weight: 1.0,
+                    batch: 1,
+                }];
+            }
+            anyhow::ensure!(
+                !feedback_on || st.plan_cost.is_some(),
+                "feedback needs a priced plan: warm the oracle (or load a cost DB) first"
+            );
+            st.mode = Mode::Fixed;
+        } else {
+            anyhow::ensure!(
+                !feedback_on,
+                "feedback needs a plan source carrying graphs (plan / surface / plan_points)"
+            );
+            st.mode = Mode::Fixed;
+        }
+
+        // Controllers for the multi-plan modes.
+        match st.mode {
+            Mode::Fixed => {}
+            Mode::Frontier => {
+                let policy = st.policy.clone().ok_or_else(|| {
+                    anyhow::anyhow!("frontier serving needs an adaptive policy (ServeSession::adaptive)")
+                })?;
+                st.controller = Some(FrontierController::new(st.costs.clone(), policy));
+            }
+            Mode::Ops => {
+                // Feedback's ops-ified surfaces default the policy; explicit
+                // operating points require it (as the legacy loop did).
+                let policy = match (st.policy.clone(), feedback_on) {
+                    (Some(p), _) => p,
+                    (None, true) => AdaptiveConfig::default(),
+                    (None, false) => anyhow::bail!(
+                        "operating-point serving needs an adaptive policy (ServeSession::adaptive)"
+                    ),
+                };
+                st.policy = Some(policy.clone());
+                let est: Vec<GraphCost> = st
+                    .ops
+                    .iter()
+                    .zip(&st.batches)
+                    .map(|(o, &b)| st.grid[o.plan][b - 1])
+                    .collect();
+                st.controller =
+                    Some(FrontierController::for_operating_points(est, st.batches.clone(), policy));
+            }
+        }
+
+        // Feedback over ops mode needs one plan point per grid plan.
+        if feedback_on && st.mode == Mode::Ops {
+            anyhow::ensure!(
+                st.points.len() == st.grid.len(),
+                "feedback over operating points needs the plan graphs for writeback: \
+                 use ServeSession::surface or plan_points"
+            );
+        }
+        if st.research.is_some() {
+            anyhow::ensure!(
+                st.feedback.is_some(),
+                "research needs feedback enabled (ServeSession::feedback)"
+            );
+            anyhow::ensure!(
+                st.mode == Mode::Ops,
+                "research needs a plan-point surface (ServeSession::surface or plan_points)"
+            );
+        }
+
+        // Virtual service models must price every plan the session can run.
+        if let ServiceModel::Virtual { per_batch_ms, scale_s_per_ms } = &st.cfg.service {
+            anyhow::ensure!(
+                scale_s_per_ms.is_finite() && *scale_s_per_ms > 0.0,
+                "virtual service scale must be positive and finite, got {scale_s_per_ms}"
+            );
+            let plans = match st.mode {
+                Mode::Fixed => 1,
+                Mode::Frontier => st.costs.len(),
+                Mode::Ops => st.grid.len(),
+            };
+            anyhow::ensure!(
+                per_batch_ms.len() >= plans,
+                "virtual service model prices {} plans but serving uses {plans}",
+                per_batch_ms.len()
+            );
+            anyhow::ensure!(
+                per_batch_ms.iter().all(|row| !row.is_empty()),
+                "virtual service rows must be non-empty"
+            );
+        }
+
+        // Arm the feedback machinery.
+        if let Some(fb) = &st.feedback {
+            let n_plans = match st.mode {
+                Mode::Fixed => 1,
+                Mode::Frontier => st.costs.len(),
+                Mode::Ops => st.grid.len(),
+            };
+            let fixed_kappa = match &st.cfg.service {
+                ServiceModel::Virtual { scale_s_per_ms, .. } => Some(*scale_s_per_ms),
+                ServiceModel::Wallclock => None,
+            };
+            st.detector = Some(DriftDetector::new(fb, n_plans, fixed_kappa));
+            st.store = Some(crate::cost::MeasuredStore::new(fb.store_ewma));
+        }
+
+        Ok(st)
+    }
+}
+
+/// The legacy operating-point validations, verbatim.
+fn validate_ops(
+    cfg: &ServeConfig,
+    grid: &[Vec<GraphCost>],
+    ops: &[OperatingPoint],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(!ops.is_empty(), "serve_operating_points needs at least one operating point");
+    for op in ops {
+        anyhow::ensure!(op.batch >= 1, "operating-point batch must be >= 1");
+        anyhow::ensure!(
+            op.plan < grid.len(),
+            "operating point references plan {} but the grid prices {} plans",
+            op.plan,
+            grid.len()
+        );
+        let have = grid[op.plan].len();
+        anyhow::ensure!(
+            op.batch.min(cfg.batch_max) <= have,
+            "plan {} is priced for batches 1..={have}, operating point targets batch {}",
+            op.plan,
+            op.batch.min(cfg.batch_max)
+        );
+    }
+    Ok(())
+}
+
+/// Build the re-search job to run (inline or on a background thread):
+/// a self-contained closure over clones + the shared `'env` references.
+fn build_research_job<'env>(
+    st: &SessionState<'env>,
+) -> Box<dyn FnOnce() -> anyhow::Result<ResearchOutcome> + Send + 'env> {
+    let oracle: &'env CostOracle = st.oracle.expect("feedback mode has an oracle");
+    match &st.research {
+        None => {
+            // Reprice: same plans, corrected rows, existing grid depths.
+            let plans: Vec<(Graph, Assignment, usize)> = st
+                .points
+                .iter()
+                .zip(&st.grid)
+                .map(|(p, row)| (p.graph.clone(), p.assignment.clone(), row.len()))
+                .collect();
+            Box::new(move || {
+                let mut grid = Vec::with_capacity(plans.len());
+                for (g, a, depth) in &plans {
+                    let row: anyhow::Result<Vec<GraphCost>> =
+                        (1..=*depth).map(|m| price_plan_at_batch(oracle, g, a, m)).collect();
+                    grid.push(row?);
+                }
+                Ok(ResearchOutcome::Reprice(grid))
+            })
+        }
+        Some(rc) => {
+            let ctx: &'env OptimizerContext = rc.ctx;
+            let origin = rc.origin.clone();
+            let search = rc.search.clone();
+            let n = rc.points;
+            let batches = rc.batches.clone();
+            // Warm-start from the currently active plan's assignment.
+            let active = st.controller.as_ref().map(|c| c.active()).unwrap_or(0);
+            let warm = st.points[st.ops[active].plan].assignment.clone();
+            Box::new(move || {
+                let res =
+                    optimize_frontier_batched_warm(&origin, ctx, &search, n, &batches, Some(&warm))?;
+                anyhow::ensure!(
+                    !res.frontier.is_empty(),
+                    "re-search produced an empty frontier"
+                );
+                Ok(ResearchOutcome::Full(res.frontier.points().to_vec()))
+            })
+        }
+    }
+}
+
+/// Install a completed re-search: rebuild the surface, rebase the
+/// controller (carrying live load estimates), bump the epoch, and record
+/// the [`HotSwapEvent`]. Runs between batches on the serving thread — the
+/// request loop never pauses for it.
+fn apply_swap<G>(
+    st: &mut SessionState<'_>,
+    outcome: ResearchOutcome,
+    clock: f64,
+    adopt: &mut G,
+    epoch: &mut usize,
+    swaps: &mut Vec<HotSwapEvent>,
+) -> anyhow::Result<()>
+where
+    G: FnMut(&[PlanPoint]) -> anyhow::Result<()>,
+{
+    let researched = matches!(outcome, ResearchOutcome::Full(_));
+    match outcome {
+        ResearchOutcome::Reprice(grid) => {
+            st.grid = grid;
+        }
+        ResearchOutcome::Full(points) => {
+            // The executor must compile the new plans before they serve.
+            adopt(&points)?;
+            let oracle = st.oracle.expect("feedback mode has an oracle");
+            let bmax = st.cfg.batch_max;
+            let mut grid = Vec::with_capacity(points.len());
+            for p in &points {
+                let row: anyhow::Result<Vec<GraphCost>> = (1..=bmax)
+                    .map(|m| price_plan_at_batch(oracle, &p.graph, &p.assignment, m))
+                    .collect();
+                grid.push(row?);
+            }
+            st.ops = (0..points.len()).map(|i| OperatingPoint { plan: i, batch: bmax }).collect();
+            st.batches = vec![bmax; points.len()];
+            st.grid = grid;
+            st.points = points;
+        }
+    }
+
+    let per_request_mj =
+        |st: &SessionState, i: usize| st.grid[st.ops[i].plan][st.batches[i] - 1].energy_j
+            / st.batches[i] as f64;
+    // The previously active point, clamped: a re-searched surface may be
+    // smaller than the one it replaces.
+    let prev_active =
+        st.controller.as_ref().map(|c| c.active()).unwrap_or(0).min(st.ops.len() - 1);
+    let energy_mj_before = per_request_mj(st, prev_active);
+    let energy_mj_after = (0..st.ops.len())
+        .map(|i| per_request_mj(st, i))
+        .fold(f64::INFINITY, f64::min);
+
+    let est: Vec<GraphCost> =
+        st.ops.iter().zip(&st.batches).map(|(o, &b)| st.grid[o.plan][b - 1]).collect();
+    let policy = st.policy.clone().unwrap_or_default();
+    let mut next = FrontierController::for_operating_points(est, st.batches.clone(), policy);
+    if let Some(prev) = st.controller.as_ref() {
+        // Re-priced surfaces keep their measured service EWMAs (same
+        // graphs); re-searched ones must re-measure.
+        next.rebase_from(prev, !researched);
+    }
+    st.controller = Some(next);
+    if let Some(det) = st.detector.as_mut() {
+        det.rebase(st.grid.len());
+    }
+    *epoch += 1;
+    swaps.push(HotSwapEvent {
+        at_s: clock,
+        epoch: *epoch,
+        researched,
+        energy_mj_before,
+        energy_mj_after,
+    });
+    Ok(())
+}
+
+/// The unified serving loop. With no controller and no feedback this is
+/// the legacy fixed-plan loop statement for statement; the frontier and
+/// operating-point behaviours differ only where the legacy loops did
+/// (batch-fill horizon and energy accounting).
+fn serve_loop<'env, 'scope, F, G>(
+    st: &mut SessionState<'env>,
+    exec: &mut F,
+    adopt: &mut G,
+    scope: Option<&'scope std::thread::Scope<'scope, 'env>>,
+) -> anyhow::Result<ServeReport>
+where
+    'env: 'scope,
+    F: FnMut(usize, &[Tensor]) -> anyhow::Result<Vec<Tensor>>,
+    G: FnMut(&[PlanPoint]) -> anyhow::Result<()>,
+{
+    let mut rng = Rng::seed_from(st.cfg.seed);
+    // Poisson arrivals (single- or piecewise-rate), drawn before any
+    // payload so the RNG stream matches the historical inline draw.
+    let arrivals = st.cfg.arrival_trace(&mut rng)?;
+    let total = arrivals.len();
+
+    let mut records: Vec<RequestRecord> = Vec::with_capacity(total);
+    let mut clock = 0.0f64;
+    let mut busy_s = 0.0f64;
+    let mut n_batches = 0usize;
+    let mut energy_mj = 0.0f64;
+    let mut next = 0usize; // next unserved request index
+    let mut epoch = 0usize;
+    let mut drift_events: Vec<DriftEvent> = Vec::new();
+    let mut swaps: Vec<HotSwapEvent> = Vec::new();
+
+    // Background re-search plumbing: at most one in flight; results are
+    // polled between batches and installed atomically from the serving
+    // thread (the hot-swap itself never races the loop).
+    let (tx, rx) = mpsc::channel::<anyhow::Result<ResearchOutcome>>();
+    let mut in_flight = false;
+    let mut researches = 0usize;
+    let mut last_research_s = f64::NEG_INFINITY;
+
+    while next < total {
+        if in_flight {
+            match rx.try_recv() {
+                Ok(result) => {
+                    in_flight = false;
+                    apply_swap(st, result?, clock, adopt, &mut epoch, &mut swaps)?;
+                }
+                Err(mpsc::TryRecvError::Empty) => {}
+                Err(mpsc::TryRecvError::Disconnected) => in_flight = false,
+            }
+        }
+
+        // Advance to the first pending arrival if idle.
+        clock = clock.max(arrivals[next]);
+        // The controller decides on the live queue depth at this instant:
+        // every request that has arrived but not been served.
+        let sel = match st.controller.as_mut() {
+            Some(c) => {
+                let mut depth = 1usize;
+                while next + depth < total && arrivals[next + depth] <= clock {
+                    depth += 1;
+                }
+                c.decide(clock, depth)
+            }
+            None => 0,
+        };
+        // Batch formation: the ops loop targets the active point's batch
+        // and anchors the fill horizon at the oldest pending request's
+        // arrival (admission control); the legacy loops fill greedily to
+        // batch_max within a window starting now.
+        let (exec_plan, target, horizon) = match st.mode {
+            Mode::Ops => (
+                st.ops[sel].plan,
+                st.batches[sel],
+                (arrivals[next] + st.cfg.max_wait_s).max(clock),
+            ),
+            _ => (sel, st.cfg.batch_max, clock + st.cfg.max_wait_s),
+        };
+        let mut end = next + 1;
+        while end < total && end - next < target && arrivals[end] <= horizon {
+            end += 1;
+        }
+        // If we waited for later arrivals, the batch starts at the later of
+        // (deadline reached, last included arrival).
+        if end - next > 1 {
+            clock = clock.max(arrivals[end - 1]);
+        }
+        let batch_ids: Vec<usize> = (next..end).collect();
+        if let Some(c) = st.controller.as_mut() {
+            for &id in &batch_ids {
+                c.observe_arrival(arrivals[id]);
+            }
+        }
+        let inputs: Vec<Tensor> = batch_ids
+            .iter()
+            .map(|_| Tensor::rand(&st.cfg.input_shape, &mut rng, -1.0, 1.0))
+            .collect();
+
+        let t0 = std::time::Instant::now();
+        let outputs = exec(exec_plan, &inputs)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(
+            outputs.len() == inputs.len(),
+            "exec_batch returned {} outputs for {} requests",
+            outputs.len(),
+            inputs.len()
+        );
+        let m = inputs.len();
+        let service = st.cfg.service.service_s(exec_plan, m, wall_s);
+        busy_s += service;
+        n_batches += 1;
+        if let Some(c) = st.controller.as_mut() {
+            c.observe_service(sel, service / m as f64);
+        }
+        if st.mode == Mode::Ops {
+            // Honest partial-batch pricing: charge the plan at the batch
+            // size actually formed.
+            energy_mj += st.grid[st.ops[sel].plan][m - 1].energy_j;
+        }
+        let start = clock;
+        clock += service;
+        for &id in &batch_ids {
+            records.push(RequestRecord {
+                id,
+                arrival_s: arrivals[id],
+                start_s: start,
+                done_s: clock,
+                batch_size: m,
+                plan: sel,
+                epoch,
+            });
+        }
+
+        // The feedback loop: observe → write back → (maybe) re-search.
+        if st.detector.is_some() {
+            let plan_idx = if st.mode == Mode::Ops { st.ops[sel].plan } else { 0 };
+            let predicted_ms = match st.mode {
+                Mode::Ops => st.grid[plan_idx][m - 1].time_ms,
+                Mode::Frontier => st.costs[sel].time_ms * m as f64,
+                Mode::Fixed => st.plan_cost.map(|c| c.time_ms * m as f64).unwrap_or(0.0),
+            };
+            let (evt, ratio, in_drift) = {
+                let det = st.detector.as_mut().expect("checked above");
+                let evt = det.observe(clock, plan_idx, predicted_ms, service);
+                (evt, det.plan_scale(plan_idx), det.in_drift())
+            };
+            if let Some(evt) = evt {
+                drift_events.push(evt);
+            }
+            if let (Some(scale), Some(oracle), Some(store)) = (ratio, st.oracle, st.store.as_ref())
+            {
+                if let Some(p) = st.points.get(plan_idx) {
+                    oracle.observe_plan(&p.graph, &p.assignment, scale, store)?;
+                }
+            }
+            let fb = st.feedback.as_ref().expect("detector implies feedback");
+            if in_drift
+                && !in_flight
+                && st.mode == Mode::Ops
+                && researches < fb.max_researches
+                && clock - last_research_s >= fb.research_interval_s
+            {
+                researches += 1;
+                last_research_s = clock;
+                let oracle = st.oracle.expect("feedback mode has an oracle");
+                let store = st.store.as_ref().expect("feedback mode has a store");
+                // Fold the measured rows into the oracle so the re-search
+                // (and all later pricing) sees corrected costs.
+                oracle.apply_feedback(store);
+                let job = build_research_job(st);
+                match scope {
+                    Some(scope) => {
+                        let tx = tx.clone();
+                        scope.spawn(move || {
+                            let _ = tx.send(job());
+                        });
+                        in_flight = true;
+                    }
+                    None => {
+                        apply_swap(st, job()?, clock, adopt, &mut epoch, &mut swaps)?;
+                    }
+                }
+            }
+        }
+
+        next = end;
+    }
+    // A still-running background re-search is abandoned: its result has no
+    // traffic left to serve (the scope joins the thread on exit).
+
+    let first = arrivals.first().copied().unwrap_or(0.0);
+    let switches =
+        st.controller.take().map(FrontierController::into_switches).unwrap_or_default();
+    let energy_mj_per_request = match st.mode {
+        Mode::Fixed => st.plan_cost.map(|c| c.energy_j),
+        Mode::Frontier => {
+            if st.costs.iter().all(|c| c.energy_j > 0.0) && !records.is_empty() {
+                let total_mj: f64 = records.iter().map(|r| st.costs[r.plan].energy_j).sum();
+                Some(total_mj / records.len() as f64)
+            } else {
+                None
+            }
+        }
+        Mode::Ops => {
+            if energy_mj > 0.0 && total > 0 {
+                Some(energy_mj / total as f64)
+            } else {
+                None
+            }
+        }
+    };
+    Ok(ServeReport {
+        span_s: clock - first,
+        busy_s,
+        batches: n_batches,
+        records,
+        plan_cost: st.plan_cost,
+        switches,
+        energy_mj_per_request,
+        drift_events,
+        swaps,
+        feedback_rows: st.store.as_ref().map(crate::cost::MeasuredStore::len).unwrap_or(0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energysim::FreqId;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            requests: 8,
+            batch_max: 2,
+            arrival_rate_hz: 10_000.0,
+            max_wait_s: 0.001,
+            seed: 1,
+            input_shape: vec![1, 3, 8, 8],
+            phases: Vec::new(),
+            service: ServiceModel::Wallclock,
+        }
+    }
+
+    fn relu_exec(_plan: usize, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        Ok(inputs.iter().map(crate::tensor::ops::relu).collect())
+    }
+
+    fn cost(time_ms: f64, energy_j: f64) -> GraphCost {
+        GraphCost { time_ms, energy_j, freq: FreqId::NOMINAL }
+    }
+
+    #[test]
+    fn rejects_conflicting_plan_sources() {
+        let c = cfg();
+        let err = ServeSession::new(&c)
+            .frontier_costs(&[cost(1.0, 1.0)])
+            .operating_points(&[vec![cost(1.0, 1.0)]], &[OperatingPoint { plan: 0, batch: 1 }])
+            .adaptive(AdaptiveConfig::default())
+            .run(relu_exec)
+            .unwrap_err();
+        assert!(err.to_string().contains("at most one plan source"), "{err}");
+    }
+
+    #[test]
+    fn multi_plan_sources_require_policy() {
+        let c = cfg();
+        let err = ServeSession::new(&c)
+            .frontier_costs(&[cost(1.0, 1.0), cost(2.0, 0.5)])
+            .run(relu_exec)
+            .unwrap_err();
+        assert!(err.to_string().contains("adaptive policy"), "{err}");
+        let err = ServeSession::new(&c)
+            .operating_points(&[vec![cost(1.0, 1.0)]], &[OperatingPoint { plan: 0, batch: 1 }])
+            .run(relu_exec)
+            .unwrap_err();
+        assert!(err.to_string().contains("adaptive policy"), "{err}");
+    }
+
+    #[test]
+    fn feedback_requires_oracle_and_graphs() {
+        let c = cfg();
+        // No oracle.
+        let err = ServeSession::new(&c)
+            .feedback(FeedbackConfig::default())
+            .run(relu_exec)
+            .unwrap_err();
+        assert!(err.to_string().contains("cost oracle"), "{err}");
+        // Oracle but no plan source carrying graphs.
+        let oracle = CostOracle::offline_default();
+        let err = ServeSession::new(&c)
+            .oracle(&oracle)
+            .feedback(FeedbackConfig::default())
+            .run(relu_exec)
+            .unwrap_err();
+        assert!(err.to_string().contains("plan source"), "{err}");
+        // Bare costs cannot host writeback.
+        let err = ServeSession::new(&c)
+            .oracle(&oracle)
+            .frontier_costs(&[cost(1.0, 1.0)])
+            .adaptive(AdaptiveConfig::default())
+            .feedback(FeedbackConfig::default())
+            .run(relu_exec)
+            .unwrap_err();
+        assert!(err.to_string().contains("bare cost estimates"), "{err}");
+    }
+
+    #[test]
+    fn research_requires_run_with_adopt_and_feedback() {
+        let c = cfg();
+        let ctx = crate::search::OptimizerContext::offline_default();
+        let rc = || ResearchConfig {
+            ctx: &ctx,
+            origin: Graph::new(),
+            search: SearchConfig::default(),
+            points: 2,
+            batches: vec![1, 2],
+        };
+        let err = ServeSession::new(&c).research(rc()).run(relu_exec).unwrap_err();
+        assert!(err.to_string().contains("run_with_adopt"), "{err}");
+        let err = ServeSession::new(&c)
+            .research(rc())
+            .run_with_adopt(relu_exec, |_| Ok(()))
+            .unwrap_err();
+        assert!(err.to_string().contains("feedback"), "{err}");
+    }
+
+    #[test]
+    fn virtual_model_must_cover_every_plan() {
+        let costs = vec![cost(1.0, 1.0), cost(2.0, 0.5)];
+        let c = ServeConfig {
+            service: ServiceModel::Virtual {
+                per_batch_ms: vec![vec![1.0]],
+                scale_s_per_ms: 1e-3,
+            },
+            ..cfg()
+        };
+        let err = ServeSession::new(&c)
+            .frontier_costs(&costs)
+            .adaptive(AdaptiveConfig::default())
+            .run(relu_exec)
+            .unwrap_err();
+        assert!(err.to_string().contains("prices 1 plans but serving uses 2"), "{err}");
+        let bad_scale = ServeConfig {
+            service: ServiceModel::Virtual { per_batch_ms: vec![vec![1.0]], scale_s_per_ms: 0.0 },
+            ..cfg()
+        };
+        let err = ServeSession::new(&bad_scale).run(relu_exec).unwrap_err();
+        assert!(err.to_string().contains("scale"), "{err}");
+    }
+}

@@ -169,9 +169,9 @@ fn graph_with_dangling_output_rejected_on_load() {
 #[test]
 fn zero_size_serving_config_rejected() {
     let bad = eadgo::serve::ServeConfig { requests: 0, ..Default::default() };
-    assert!(eadgo::serve::serve(&bad, |b| Ok(b.to_vec())).is_err());
+    assert!(eadgo::serve::ServeSession::new(&bad).run(|_, b| Ok(b.to_vec())).is_err());
     let bad2 = eadgo::serve::ServeConfig { batch_max: 0, ..Default::default() };
-    assert!(eadgo::serve::serve(&bad2, |b| Ok(b.to_vec())).is_err());
+    assert!(eadgo::serve::ServeSession::new(&bad2).run(|_, b| Ok(b.to_vec())).is_err());
 }
 
 #[test]

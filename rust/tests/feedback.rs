@@ -1,0 +1,480 @@
+//! The self-tuning serve loop end to end: feedback-off byte-identity with
+//! the legacy entry points, drift detection → telemetry writeback →
+//! hot-swap recovery against a mis-scaled cost database, full re-search
+//! through the adopt callback, and background re-search liveness.
+//!
+//! Ground truth throughout is a [`ServiceModel::Virtual`] priced off the
+//! unperturbed database, so every run is deterministic and host-speed
+//! independent. The drift scenario uses two one-op plans for exact
+//! attribution: plan B's conv rows are halved in the serving database
+//! (fake-cheap, so serving parks on it) while plan A's depthwise row is
+//! synthesized at 0.72x plan B's true cost on both axes — the corrected
+//! surface must swap to A.
+
+use eadgo::algo::{AlgorithmRegistry, Assignment};
+use eadgo::cost::{CostDb, CostOracle, GraphCost, NodeCost};
+use eadgo::energysim::FreqId;
+use eadgo::graph::{Activation, Graph, NodeId, OpKind, PortRef};
+use eadgo::profiler::{ensure_profiled, SimV100Provider};
+use eadgo::search::{price_plan_at_batch, OptimizerContext, PlanPoint, SearchConfig};
+use eadgo::serve::{
+    AdaptiveConfig, DriftKind, FeedbackConfig, OperatingPoint, RatePhase, ResearchConfig,
+    ServeConfig, ServeReport, ServeSession, ServiceModel,
+};
+use eadgo::subst::RuleSet;
+use eadgo::tensor::Tensor;
+use eadgo::util::json::Json;
+use std::cell::Cell;
+
+const BMAX: usize = 2;
+const SEED: u64 = 11;
+
+/// The single non-constant, non-input node of a one-op plan graph.
+fn costed_node(g: &Graph) -> NodeId {
+    g.nodes()
+        .find(|(_, n)| !matches!(n.op, OpKind::Input { .. }) && !n.op.is_constant_space())
+        .map(|(id, _)| id)
+        .expect("graph has one costed node")
+}
+
+/// The profiling signature of that node (input shapes resolved).
+fn only_costed_sig(g: &Graph) -> String {
+    let shapes = g.infer_shapes().unwrap();
+    let node = g.node(costed_node(g));
+    let ins: Vec<Vec<usize>> =
+        node.inputs.iter().map(|p| shapes[p.node.0][p.port].clone()).collect();
+    node.op.signature(&ins)
+}
+
+/// Copy `db` with `time_ms` of every row under signatures starting with
+/// `prefix` scaled by `scale` (power is unchanged, so energy scales too).
+fn scale_sig_times(db: &CostDb, prefix: &str, scale: f64) -> CostDb {
+    let mut j = db.to_json();
+    if let Json::Obj(root) = &mut j {
+        if let Some(Json::Obj(profiles)) = root.get_mut("profiles") {
+            for (sig, algos) in profiles.iter_mut() {
+                if !sig.starts_with(prefix) {
+                    continue;
+                }
+                if let Json::Obj(algos) = algos {
+                    for rec in algos.values_mut() {
+                        if let Json::Obj(rec) = rec {
+                            if let Some(Json::Num(t)) = rec.get_mut("time_ms") {
+                                *t *= scale;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    CostDb::from_json(&j).expect("scaled db parses")
+}
+
+/// The two-plan drift scenario: plan A (one depthwise conv) and plan B
+/// (one conv), a truth database, and a serving database whose conv rows
+/// are halved.
+struct Scenario {
+    dw_g: Graph,
+    dw_a: Assignment,
+    conv_g: Graph,
+    conv_a: Assignment,
+    truth_db: CostDb,
+    perturbed_db: CostDb,
+}
+
+fn scenario() -> Scenario {
+    let shape = vec![1usize, 3, 16, 16];
+    let conv_g = {
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: shape.clone() }, &[], "x");
+        let w = g.add1(OpKind::weight(vec![4, 3, 3, 3], 1), &[], "w");
+        let c = g.add1(
+            OpKind::Conv2d {
+                stride: (1, 1),
+                pad: (1, 1),
+                act: Activation::None,
+                has_bias: false,
+                has_residual: false,
+            },
+            &[x, w],
+            "conv",
+        );
+        g.outputs = vec![PortRef::of(c)];
+        g
+    };
+    let dw_g = {
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: shape.clone() }, &[], "x");
+        let w = g.add1(OpKind::weight(vec![3, 1, 3, 3], 1), &[], "w");
+        let d = g.add1(
+            OpKind::DwConv2d {
+                stride: (1, 1),
+                pad: (1, 1),
+                act: Activation::None,
+                has_bias: false,
+            },
+            &[x, w],
+            "dw",
+        );
+        g.outputs = vec![PortRef::of(d)];
+        g
+    };
+    let reg = AlgorithmRegistry::new();
+    let provider = SimV100Provider::new(SEED);
+    let conv_a = Assignment::default_for(&conv_g, &reg);
+    let dw_a = Assignment::default_for(&dw_g, &reg);
+    let mut truth_db = CostDb::new();
+    for m in 1..=BMAX {
+        ensure_profiled(&conv_g.rebatch(m).unwrap(), &reg, &mut truth_db, &provider).unwrap();
+        ensure_profiled(&dw_g.rebatch(m).unwrap(), &reg, &mut truth_db, &provider).unwrap();
+    }
+    // Pin plan A at exactly 0.72x plan B's true cost per batch size.
+    for m in 1..=BMAX {
+        let sig_c = only_costed_sig(&conv_g.rebatch(m).unwrap());
+        let sig_d = only_costed_sig(&dw_g.rebatch(m).unwrap());
+        let c = truth_db
+            .get(&sig_c, conv_a.get(costed_node(&conv_g)).unwrap())
+            .expect("conv profiled");
+        truth_db.insert(
+            &sig_d,
+            dw_a.get(costed_node(&dw_g)).unwrap(),
+            NodeCost { time_ms: 0.72 * c.time_ms, power_w: c.power_w },
+            "synthetic",
+        );
+    }
+    let perturbed_db = scale_sig_times(&truth_db, "conv2d;", 0.5);
+    Scenario { dw_g, dw_a, conv_g, conv_a, truth_db, perturbed_db }
+}
+
+/// Price both plans for batches `1..=BMAX` against `db` (plan 0 = A, 1 = B).
+fn grids(db: &CostDb, sc: &Scenario) -> Vec<Vec<GraphCost>> {
+    let oracle =
+        CostOracle::new(AlgorithmRegistry::new(), db.clone(), Box::new(SimV100Provider::new(SEED)));
+    [(&sc.dw_g, &sc.dw_a), (&sc.conv_g, &sc.conv_a)]
+        .iter()
+        .map(|&(g, a)| {
+            (1..=BMAX).map(|m| price_plan_at_batch(&oracle, g, a, m).unwrap()).collect()
+        })
+        .collect()
+}
+
+/// Plan points over the perturbed estimates, A first.
+fn plan_points(sc: &Scenario, pert_grid: &[Vec<GraphCost>]) -> Vec<PlanPoint> {
+    [(&sc.dw_g, &sc.dw_a), (&sc.conv_g, &sc.conv_a)]
+        .iter()
+        .enumerate()
+        .map(|(i, &(g, a))| PlanPoint {
+            graph: g.clone(),
+            assignment: a.clone(),
+            cost: pert_grid[i][0],
+            weight: 0.5,
+            batch: 1,
+        })
+        .collect()
+}
+
+/// Calm/burst/calm serving config on a virtual clock whose service times
+/// come from the *truth* grid (observed reality vs perturbed predictions).
+fn serve_cfg(truth_grid: &[Vec<GraphCost>], n: usize) -> ServeConfig {
+    let svc_b_s = truth_grid[1][0].time_ms * 1e-3;
+    ServeConfig {
+        requests: 0,
+        batch_max: BMAX,
+        arrival_rate_hz: 0.0,
+        max_wait_s: 4.0 * svc_b_s,
+        seed: 2026,
+        input_shape: vec![1, 3, 16, 16],
+        phases: vec![
+            RatePhase::new(0.2 / svc_b_s, n),
+            RatePhase::new(1.2 / svc_b_s, 2 * n),
+            RatePhase::new(0.2 / svc_b_s, n),
+        ],
+        service: ServiceModel::Virtual {
+            per_batch_ms: truth_grid
+                .iter()
+                .map(|row| row.iter().map(|c| c.time_ms).collect())
+                .collect(),
+            scale_s_per_ms: 1e-3,
+        },
+    }
+}
+
+/// Mean true energy per request, priced off the unperturbed grid (both
+/// runs map operating point `i` to plan `i`).
+fn true_mj(r: &ServeReport, truth_grid: &[Vec<GraphCost>]) -> f64 {
+    let sum: f64 = r
+        .records
+        .iter()
+        .map(|x| truth_grid[x.plan][x.batch_size - 1].energy_j / x.batch_size as f64)
+        .sum();
+    sum / r.records.len() as f64
+}
+
+fn assert_served_in_order(r: &ServeReport, total: usize) {
+    assert_eq!(r.records.len(), total, "every request must be served exactly once");
+    for (i, rec) in r.records.iter().enumerate() {
+        assert_eq!(rec.id, i, "requests served in arrival order, none dropped");
+    }
+}
+
+/// Acceptance: with feedback off, the `ServeSession` builder renders a
+/// report byte-identical to every legacy entry point, in all four modes.
+#[test]
+#[allow(deprecated)]
+fn feedback_off_session_is_byte_identical_to_legacy_entry_points() {
+    let render = |r: ServeReport| r.to_json().to_string_compact();
+    let virt1 = ServiceModel::Virtual { per_batch_ms: vec![vec![2.0, 3.5]], scale_s_per_ms: 1e-3 };
+    let cfg = ServeConfig {
+        requests: 40,
+        batch_max: 2,
+        arrival_rate_hz: 900.0,
+        max_wait_s: 0.004,
+        seed: 9,
+        input_shape: vec![1, 3, 8, 8],
+        phases: Vec::new(),
+        service: virt1,
+    };
+
+    // Plain single-plan serving.
+    assert_eq!(
+        render(ServeSession::new(&cfg).run(|_, b| Ok(b.to_vec())).unwrap()),
+        render(eadgo::serve::serve(&cfg, |b: &[Tensor]| Ok(b.to_vec())).unwrap()),
+    );
+
+    // Fixed plan with a warm oracle estimate.
+    let oracle = CostOracle::offline_default();
+    let mut g = Graph::new();
+    let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+    let r = g.add1(OpKind::Relu, &[x], "r");
+    g.outputs = vec![PortRef::of(r)];
+    let a = Assignment::default_for(&g, oracle.reg());
+    oracle.table_for(&g).unwrap();
+    let via_session = ServeSession::new(&cfg)
+        .oracle(&oracle)
+        .plan(&g, &a)
+        .run(|_, b| Ok(b.to_vec()))
+        .unwrap();
+    assert!(via_session.plan_cost.is_some(), "warm oracle must price the plan");
+    assert_eq!(
+        render(via_session),
+        render(
+            eadgo::serve::serve_plan(&cfg, &oracle, &g, &a, |b: &[Tensor]| Ok(b.to_vec()))
+                .unwrap()
+        ),
+    );
+
+    // Adaptive frontier over bare cost estimates.
+    let costs = vec![
+        GraphCost { time_ms: 2.0, energy_j: 9.0, freq: FreqId::NOMINAL },
+        GraphCost { time_ms: 5.0, energy_j: 4.0, freq: FreqId::NOMINAL },
+    ];
+    let virt2 = ServiceModel::Virtual {
+        per_batch_ms: vec![vec![2.0, 3.5], vec![5.0, 8.0]],
+        scale_s_per_ms: 1e-3,
+    };
+    let fcfg = ServeConfig { service: virt2, ..cfg };
+    let policy = AdaptiveConfig::default();
+    assert_eq!(
+        render(
+            ServeSession::new(&fcfg)
+                .frontier_costs(&costs)
+                .adaptive(policy.clone())
+                .run(|_, b| Ok(b.to_vec()))
+                .unwrap()
+        ),
+        render(
+            eadgo::serve::serve_frontier(&fcfg, &costs, &policy, |_, b: &[Tensor]| {
+                Ok(b.to_vec())
+            })
+            .unwrap()
+        ),
+    );
+
+    // Operating points over an explicit price grid.
+    let grid = vec![
+        vec![
+            GraphCost { time_ms: 2.0, energy_j: 9.0, freq: FreqId::NOMINAL },
+            GraphCost { time_ms: 3.5, energy_j: 14.0, freq: FreqId::NOMINAL },
+        ],
+        vec![
+            GraphCost { time_ms: 5.0, energy_j: 4.0, freq: FreqId::NOMINAL },
+            GraphCost { time_ms: 8.0, energy_j: 6.0, freq: FreqId::NOMINAL },
+        ],
+    ];
+    let ops = vec![OperatingPoint { plan: 0, batch: 1 }, OperatingPoint { plan: 1, batch: 2 }];
+    assert_eq!(
+        render(
+            ServeSession::new(&fcfg)
+                .operating_points(&grid, &ops)
+                .adaptive(policy.clone())
+                .run(|_, b| Ok(b.to_vec()))
+                .unwrap()
+        ),
+        render(
+            eadgo::serve::serve_operating_points(&fcfg, &grid, &ops, &policy, |_, b: &[Tensor]| {
+                Ok(b.to_vec())
+            })
+            .unwrap()
+        ),
+    );
+}
+
+/// Acceptance: against a mis-scaled database the feedback loop detects
+/// drift, writes measured rows back, re-prices the surface, hot-swaps
+/// without dropping a request, and strictly beats the no-feedback
+/// baseline on true energy per request.
+#[test]
+fn drift_detection_hot_swaps_and_strictly_improves_true_energy() {
+    let sc = scenario();
+    let truth_grid = grids(&sc.truth_db, &sc);
+    let pert_grid = grids(&sc.perturbed_db, &sc);
+    // The scenario's invariants: A truly cheaper than B, mis-scaled B
+    // looks cheaper than A.
+    for m in 1..=BMAX {
+        let (a, b, pb) = (truth_grid[0][m - 1], truth_grid[1][m - 1], pert_grid[1][m - 1]);
+        assert!(a.energy_j > 0.55 * b.energy_j && a.energy_j < 0.95 * b.energy_j);
+        assert!(a.time_ms > 0.55 * b.time_ms && a.time_ms < 0.95 * b.time_ms);
+        assert!(pb.energy_j < a.energy_j);
+    }
+    let n = 32;
+    let total = 4 * n;
+    let cfg = serve_cfg(&truth_grid, n);
+
+    // Baseline: the same surface served from the mis-scaled grid with no
+    // feedback — it parks on fake-cheap plan B and never leaves.
+    let ops: Vec<OperatingPoint> =
+        (0..pert_grid.len()).map(|i| OperatingPoint { plan: i, batch: BMAX }).collect();
+    let off = ServeSession::new(&cfg)
+        .operating_points(&pert_grid, &ops)
+        .adaptive(AdaptiveConfig::default())
+        .run(|_, b| Ok(b.to_vec()))
+        .unwrap();
+    assert_served_in_order(&off, total);
+    assert!(off.drift_events.is_empty() && off.swaps.is_empty());
+    assert_eq!(off.feedback_rows, 0);
+    assert!(off.records.iter().all(|r| r.plan == 1 && r.epoch == 0));
+
+    // Feedback on: the same plans through the self-tuning session.
+    let serving = CostOracle::new(
+        AlgorithmRegistry::new(),
+        sc.perturbed_db.clone(),
+        Box::new(SimV100Provider::new(SEED)),
+    );
+    let points = plan_points(&sc, &pert_grid);
+    let on = ServeSession::new(&cfg)
+        .oracle(&serving)
+        .plan_points(&points)
+        .feedback(FeedbackConfig { research_interval_s: 0.0, ..Default::default() })
+        .run(|_, b| Ok(b.to_vec()))
+        .unwrap();
+    assert_served_in_order(&on, total);
+
+    // Drift armed on plan B, then a re-pricing hot-swap.
+    let detected: Vec<_> =
+        on.drift_events.iter().filter(|e| e.kind == DriftKind::Detected).collect();
+    assert!(!detected.is_empty(), "mis-scaled database must arm drift detection");
+    assert_eq!(detected[0].plan, 1, "drift must be attributed to the mis-scaled plan");
+    assert!(detected[0].ratio > 1.5, "plan B truly costs ~2x its prediction");
+    assert_eq!(on.swaps.len(), 1, "one corrective hot-swap");
+    let swap = on.swaps[0];
+    assert!(!swap.researched, "without a research config the swap re-prices existing plans");
+    assert!(
+        swap.energy_mj_after < swap.energy_mj_before,
+        "the corrected surface must expose a cheaper operating point"
+    );
+    assert!(on.feedback_rows > 0, "writeback must record measured rows");
+
+    // The swap lands mid-run: earlier records on fake-cheap B at epoch 0,
+    // later ones on truly-cheap A at epoch 1, epochs nondecreasing.
+    assert_eq!(on.records.first().unwrap().plan, 1);
+    assert_eq!(on.records.first().unwrap().epoch, 0);
+    let last = on.records.last().unwrap();
+    assert_eq!(last.plan, 0, "feedback run must end on the truly cheapest plan");
+    assert_eq!(last.epoch, 1, "post-swap records carry the new surface epoch");
+    assert!(on.records.windows(2).all(|w| w[0].epoch <= w[1].epoch));
+
+    // The headline acceptance: strictly better true energy per request.
+    let (mj_off, mj_on) = (true_mj(&off, &truth_grid), true_mj(&on, &truth_grid));
+    assert!(
+        mj_on < mj_off * 0.98,
+        "feedback must strictly beat the no-feedback baseline: {mj_on} vs {mj_off} mJ/request"
+    );
+}
+
+/// A full re-search (research config set) produces new plans, hands them
+/// to the adopt callback before they serve, and hot-swaps the surface.
+#[test]
+fn full_research_hot_swap_adopts_new_plans() {
+    let sc = scenario();
+    let truth_grid = grids(&sc.truth_db, &sc);
+    let pert_grid = grids(&sc.perturbed_db, &sc);
+    let ctx = OptimizerContext::new(
+        RuleSet::standard(),
+        sc.perturbed_db.clone(),
+        Box::new(SimV100Provider::new(SEED)),
+    );
+    let points = plan_points(&sc, &pert_grid);
+    let n = 24;
+    let cfg = serve_cfg(&truth_grid, n);
+    let adopted = Cell::new(0usize);
+    let report = ServeSession::new(&cfg)
+        .oracle(&ctx.oracle)
+        .plan_points(&points)
+        .feedback(FeedbackConfig {
+            research_interval_s: 0.0,
+            max_researches: 1,
+            ..Default::default()
+        })
+        .research(ResearchConfig {
+            ctx: &ctx,
+            origin: sc.conv_g.clone(),
+            search: SearchConfig { max_dequeues: 20, ..Default::default() },
+            points: 2,
+            batches: vec![1, BMAX],
+        })
+        .run_with_adopt(
+            |_, b| Ok(b.to_vec()),
+            |pts: &[PlanPoint]| {
+                adopted.set(adopted.get() + pts.len());
+                Ok(())
+            },
+        )
+        .unwrap();
+    assert_served_in_order(&report, 4 * n);
+    assert!(adopted.get() >= 1, "adopt must see the re-searched plans before they serve");
+    assert!(report.swaps.iter().any(|s| s.researched), "a full re-search must hot-swap");
+    assert!(report.records.last().unwrap().epoch > 0, "post-swap records carry the new epoch");
+}
+
+/// Background re-search must never drop or reorder requests: traffic
+/// keeps flowing while the corrected surface is prepared off-thread.
+#[test]
+fn background_research_keeps_serving_every_request() {
+    let sc = scenario();
+    let truth_grid = grids(&sc.truth_db, &sc);
+    let pert_grid = grids(&sc.perturbed_db, &sc);
+    let serving = CostOracle::new(
+        AlgorithmRegistry::new(),
+        sc.perturbed_db.clone(),
+        Box::new(SimV100Provider::new(SEED)),
+    );
+    let points = plan_points(&sc, &pert_grid);
+    let n = 48;
+    let cfg = serve_cfg(&truth_grid, n);
+    let report = ServeSession::new(&cfg)
+        .oracle(&serving)
+        .plan_points(&points)
+        .feedback(FeedbackConfig {
+            research_interval_s: 0.0,
+            background: true,
+            ..Default::default()
+        })
+        .run(|_, b| Ok(b.to_vec()))
+        .unwrap();
+    assert_served_in_order(&report, 4 * n);
+    assert!(
+        report.drift_events.iter().any(|e| e.kind == DriftKind::Detected),
+        "drift must still arm with background re-search"
+    );
+}
