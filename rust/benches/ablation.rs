@@ -25,6 +25,10 @@
 //!      (plan, freq, batch) operating-point surface vs the fixed batch-1
 //!      loop on a bursty calm/burst/calm trace: requests/joule and p99
 //!      (ISSUE 6).
+//!  12. heterogeneous placement — GPU-only vs GPU+DLA latency-constrained
+//!      search at the same time budget on two zoo models: the mixed
+//!      placement must strictly cut energy/request (ISSUE 8), published
+//!      as `placement.energy_ratio`.
 //! Run: `cargo bench --bench ablation [-- --quick]` (or EADGO_BENCH_QUICK=1).
 //! Emits `BENCH_ablation.json` (dir override: EADGO_BENCH_OUT_DIR).
 
@@ -33,12 +37,12 @@ use eadgo::cost::{CostDb, CostFunction, CostOracle, GraphCost, NodeCost};
 use eadgo::graph::canonical::graph_hash;
 use eadgo::graph::{Activation, Graph, OpKind, PortRef};
 use eadgo::models::{self, ModelConfig};
-use eadgo::profiler::{ensure_profiled, SimV100Provider};
+use eadgo::profiler::{ensure_profiled, SimHeteroProvider, SimV100Provider};
 use eadgo::report::tables::frontier_table;
 use eadgo::report::{describe_freqs, f3, Table};
 use eadgo::search::{
-    optimize, optimize_frontier, optimize_frontier_batched, price_plan_at_batch, DvfsMode,
-    OptimizerContext, PlanPoint, SearchConfig,
+    optimize, optimize_frontier, optimize_frontier_batched, optimize_with_time_budget,
+    price_plan_at_batch, DvfsMode, OptimizerContext, PlanPoint, SearchConfig,
 };
 use eadgo::serve::{
     AdaptiveConfig, DriftKind, FeedbackConfig, OperatingPoint, RatePhase, ServeConfig,
@@ -1017,6 +1021,89 @@ fn main() {
     serve10_json.set("drift_recovery_ratio", recovery);
     payload.set("serve", serve10_json);
     payload.set("feedback", feedback_json);
+
+    // --- 12. heterogeneous placement: GPU-only vs GPU+DLA -------------------
+    // The ISSUE-8 claim: at the same latency budget, letting the
+    // constrained search place nodes on the DLA (far lower power envelope,
+    // slower compute/memory path, transfer cost at every device boundary)
+    // strictly cuts energy/request versus the best GPU-only plan. The
+    // budget is anchored at 2x the GPU's best achievable time, so the
+    // GPU-only run has headroom to downclock and the comparison is
+    // downclocking-vs-migration, not feasible-vs-infeasible.
+    let cfg12 = ModelConfig { batch: 1, resolution: 64, width_div: 4, classes: 100 };
+    let scfg12 = SearchConfig {
+        max_dequeues: budget / 4,
+        dvfs: DvfsMode::PerNode,
+        ..SearchConfig::default()
+    };
+    let mut t = Table::new(
+        "Ablation 12: GPU-only vs GPU+DLA at the same latency budget (per-node DVFS)",
+        &["model", "budget_ms", "devices", "time_ms", "energy_j/1k", "plan freq"],
+    );
+    let mut placement_json = Json::obj();
+    let mut ratios: Vec<f64> = Vec::new();
+    for name in ["squeezenet", "mobilenet"] {
+        let g12 = models::by_name(name, cfg12).unwrap();
+        // GPU-only best time anchors the budget.
+        let c_gpu = ctx();
+        let tbest = optimize(
+            &g12,
+            &c_gpu,
+            &CostFunction::Time,
+            &SearchConfig { max_dequeues: budget / 4, ..SearchConfig::default() },
+        )
+        .unwrap()
+        .cost
+        .time_ms;
+        let tb12 = 2.0 * tbest;
+        let r_gpu = optimize_with_time_budget(&g12, &c_gpu, tb12, &scfg12, 6).unwrap();
+        let c_het = OptimizerContext::new(
+            RuleSet::standard(),
+            CostDb::new(),
+            Box::new(SimHeteroProvider::new(7)),
+        );
+        let r_het = optimize_with_time_budget(&g12, &c_het, tb12, &scfg12, 6).unwrap();
+        for (devices, r) in [("gpu", &r_gpu), ("gpu+dla", &r_het)] {
+            t.row(vec![
+                name.to_string(),
+                f3(tb12),
+                devices.to_string(),
+                f3(r.result.cost.time_ms),
+                f3(r.result.cost.energy_j),
+                describe_freqs(&r.result.assignment),
+            ]);
+        }
+        assert!(r_gpu.feasible, "{name}: GPU-only search infeasible at 2x its own best time");
+        assert!(r_het.feasible, "{name}: GPU+DLA search infeasible at a budget the GPU meets");
+        assert!(
+            r_het.result.cost.time_ms <= tb12 * (1.0 + 1e-9),
+            "{name}: mixed plan exceeds the latency budget"
+        );
+        assert!(
+            r_het.result.assignment.uses_non_gpu_device(),
+            "{name}: the budgeted search must place at least one node on the DLA"
+        );
+        let (e_gpu, e_het) = (r_gpu.result.cost.energy_j, r_het.result.cost.energy_j);
+        assert!(
+            e_het < e_gpu,
+            "{name}: mixed placement must strictly beat GPU-only on energy: {e_het} vs {e_gpu}"
+        );
+        let ratio = e_het / e_gpu;
+        ratios.push(ratio);
+        placement_json
+            .set(&format!("{name}_energy_gpu"), e_gpu)
+            .set(&format!("{name}_energy_hetero"), e_het)
+            .set(&format!("{name}_energy_ratio"), ratio);
+    }
+    println!("{}", t.render());
+    let energy_ratio = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    placement_json.set("energy_ratio", energy_ratio);
+    println!(
+        "heterogeneous placement: GPU+DLA energy/request at {:.0}% of GPU-only ({:+.1}%)\n",
+        100.0 * energy_ratio,
+        100.0 * (energy_ratio - 1.0),
+    );
+    payload.set("placement", placement_json);
 
     eadgo::util::bench::emit_bench_json("ablation", &payload).expect("bench payload write");
 }

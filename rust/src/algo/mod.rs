@@ -228,6 +228,29 @@ impl Assignment {
         self.freqs[id.0] = freq;
     }
 
+    /// The device a node is placed on. Placement rides on the packed
+    /// frequency state, so the default (`NOMINAL`) is the GPU and every
+    /// pre-placement plan is all-GPU by construction.
+    pub fn device(&self, id: NodeId) -> crate::energysim::DeviceId {
+        self.freq(id).device()
+    }
+
+    /// The distinct devices runtime nodes are placed on, ascending — one
+    /// entry (`GPU`) for every pre-placement plan.
+    pub fn devices_used(&self) -> Vec<crate::energysim::DeviceId> {
+        let mut out: Vec<crate::energysim::DeviceId> =
+            self.assigned_ids().map(|id| self.device(id)).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Whether any runtime node is placed off the GPU — the gate for the
+    /// manifest v4 device keys and the serve-side provider check.
+    pub fn uses_non_gpu_device(&self) -> bool {
+        self.assigned_ids().any(|id| self.device(id) != crate::energysim::DeviceId::GPU)
+    }
+
     /// Pin every runtime node to one DVFS state (`--dvfs per-graph` plans).
     pub fn set_uniform_freq(&mut self, freq: FreqId) {
         for i in 0..self.choices.len() {
@@ -430,6 +453,30 @@ mod tests {
         let hist = a1.freq_histogram();
         assert_eq!(hist.last(), Some(&(FreqId::NOMINAL, a1.assigned_ids().count() - 1)));
         assert!(hist.contains(&(FreqId(900), 1)));
+    }
+
+    #[test]
+    fn assignment_device_axis_rides_on_freq() {
+        use crate::energysim::DeviceId;
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+        let w = g.add1(OpKind::weight(vec![4, 3, 3, 3], 1), &[], "w");
+        let c = g.add1(conv_op((1, 1)), &[x, w], "c");
+        let r = g.add1(OpKind::Relu, &[c], "r");
+        g.outputs = vec![PortRef::of(r)];
+        let reg = AlgorithmRegistry::new();
+        let a0 = Assignment::default_for(&g, &reg);
+        assert_eq!(a0.device(c), DeviceId::GPU);
+        assert_eq!(a0.devices_used(), vec![DeviceId::GPU]);
+        assert!(!a0.uses_non_gpu_device());
+
+        let mut a1 = a0.clone();
+        a1.set_freq(c, FreqId::on(DeviceId::DLA, 0));
+        assert_eq!(a1.device(c), DeviceId::DLA);
+        assert_eq!(a1.devices_used(), vec![DeviceId::GPU, DeviceId::DLA]);
+        assert!(a1.uses_non_gpu_device());
+        // Migration is a plan-identity change like any (algo, freq) move.
+        assert_eq!(a0.distance(&a1), 1);
     }
 
     #[test]

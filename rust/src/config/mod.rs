@@ -40,6 +40,12 @@ pub struct RunConfig {
     pub artifacts_dir: PathBuf,
     /// Cost provider: "sim" (V100 model) or "cpu" (real measurement).
     pub provider: String,
+    /// Device classes the search may place nodes on, in device-index
+    /// order (`["gpu"]` = classic single-device search; `["gpu", "dla"]`
+    /// adds per-node placement with transfer-aware boundaries). Parsed /
+    /// validated by [`parse_devices`]; only meaningful with the sim
+    /// provider.
+    pub devices: Vec<String>,
     /// Default dispatcher batch cap for `eadgo serve` (CLI `--batch-max`
     /// overrides).
     pub serve_batch_max: usize,
@@ -70,6 +76,7 @@ impl Default for RunConfig {
             db_path: PathBuf::from("profiles.json"),
             artifacts_dir: PathBuf::from("artifacts"),
             provider: "sim".into(),
+            devices: vec!["gpu".into()],
             serve_batch_max: 4,
             serve_max_wait_ms: 2.0,
             serve_feedback: false,
@@ -137,6 +144,22 @@ impl RunConfig {
         }
         if let Some(s) = v.get("provider").and_then(Json::as_str) {
             cfg.provider = s.to_string();
+        }
+        if let Some(d) = v.get("devices") {
+            let spec = match d {
+                Json::Str(s) => s.clone(),
+                Json::Arr(items) => items
+                    .iter()
+                    .map(|i| {
+                        i.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| anyhow::anyhow!("devices: entries must be strings"))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?
+                    .join(","),
+                _ => anyhow::bail!("devices: expected a string or an array of strings"),
+            };
+            cfg.devices = parse_devices(&spec)?;
         }
         if let Some(x) = v.get("serve_batch_max").and_then(Json::as_usize) {
             anyhow::ensure!(x >= 1, "serve_batch_max must be >= 1");
@@ -213,11 +236,66 @@ impl RunConfig {
         if let Some(p) = args.get("provider") {
             self.provider = p.to_string();
         }
+        if let Some(d) = args.get("devices") {
+            self.devices = parse_devices(d)?;
+        }
         self.model_cfg.resolution = args.get_usize("resolution", self.model_cfg.resolution)?;
         self.model_cfg.width_div = args.get_usize("width-div", self.model_cfg.width_div)?;
         self.model_cfg.batch = args.get_usize("batch", self.model_cfg.batch)?;
         Ok(())
     }
+}
+
+/// Parse a `--devices` spec: comma-separated device-class names (`gpu`,
+/// or `gpu,dla`). The GPU must come first — it is device index 0, which
+/// anchors the packed nominal states — and names must be unique. Unknown
+/// names fail with a did-you-mean against the known device classes.
+pub fn parse_devices(spec: &str) -> anyhow::Result<Vec<String>> {
+    let known = crate::energysim::DEVICE_NAMES;
+    let mut out: Vec<String> = Vec::new();
+    for raw in spec.split(',') {
+        let name = raw.trim().to_ascii_lowercase();
+        anyhow::ensure!(!name.is_empty(), "devices: empty device name in `{spec}`");
+        if crate::energysim::DeviceId::parse(&name).is_none() {
+            let mut best: Option<(&str, usize)> = None;
+            for k in known {
+                let d = edit_distance(k, &name);
+                if best.is_none_or(|(_, bd)| d < bd) {
+                    best = Some((k, d));
+                }
+            }
+            let hint = match best {
+                Some((k, d)) if d <= 2 => format!(" — did you mean `{k}`?"),
+                _ => String::new(),
+            };
+            anyhow::bail!(
+                "devices: unknown device `{name}`{hint} (known: {})",
+                known.join(", ")
+            );
+        }
+        anyhow::ensure!(!out.contains(&name), "devices: duplicate device `{name}`");
+        out.push(name);
+    }
+    anyhow::ensure!(
+        out.first().map(String::as_str) == Some("gpu"),
+        "devices: the list must start with `gpu` (device 0 anchors the nominal states)"
+    );
+    Ok(out)
+}
+
+/// Levenshtein distance (small inputs only — device-name did-you-mean).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, &cb) in b.iter().enumerate() {
+            let cost = usize::from(ca != cb);
+            cur.push((prev[j] + cost).min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
 }
 
 /// Parse an objective spec string into a cost function.
@@ -346,6 +424,56 @@ mod tests {
         assert_eq!(cfg.threads, 4);
         assert_eq!(cfg.dvfs, DvfsMode::PerGraph);
         assert_eq!(cfg.search_config().dvfs, DvfsMode::PerGraph);
+    }
+
+    #[test]
+    fn devices_parsing_and_did_you_mean() {
+        assert_eq!(parse_devices("gpu").unwrap(), vec!["gpu"]);
+        assert_eq!(parse_devices("gpu,dla").unwrap(), vec!["gpu", "dla"]);
+        assert_eq!(parse_devices(" GPU , DLA ").unwrap(), vec!["gpu", "dla"]);
+        // Unknown names get a did-you-mean against the known classes.
+        let err = parse_devices("gpu,dal").unwrap_err().to_string();
+        assert!(err.contains("unknown device `dal`"), "{err}");
+        assert!(err.contains("did you mean `dla`"), "{err}");
+        let err = parse_devices("gpu,tpu").unwrap_err().to_string();
+        assert!(err.contains("did you mean `gpu`"), "{err}");
+        // Structural constraints: gpu first, no duplicates, no empties.
+        assert!(parse_devices("dla").unwrap_err().to_string().contains("start with `gpu`"));
+        assert!(parse_devices("dla,gpu").is_err());
+        assert!(parse_devices("gpu,gpu").unwrap_err().to_string().contains("duplicate"));
+        assert!(parse_devices("gpu,,dla").is_err());
+        // Defaults and CLI override.
+        assert_eq!(RunConfig::default().devices, vec!["gpu"]);
+        let mut cfg = RunConfig::default();
+        let args = crate::util::cli::Args::parse(
+            &["optimize", "--devices", "gpu,dla"].iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+            true,
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.devices, vec!["gpu", "dla"]);
+    }
+
+    #[test]
+    fn devices_config_key_accepts_string_and_array() {
+        let dir = std::env::temp_dir().join("eadgo_cfg_devices_test");
+        let path = dir.join("run.json");
+        let mut j = Json::obj();
+        j.set("devices", "gpu,dla");
+        json::write_file(&path, &j).unwrap();
+        assert_eq!(RunConfig::load(&path).unwrap().devices, vec!["gpu", "dla"]);
+        let mut j = Json::obj();
+        j.set(
+            "devices",
+            Json::Arr(vec![Json::Str("gpu".into()), Json::Str("dla".into())]),
+        );
+        json::write_file(&path, &j).unwrap();
+        assert_eq!(RunConfig::load(&path).unwrap().devices, vec!["gpu", "dla"]);
+        // Bad entries are config errors.
+        let mut j = Json::obj();
+        j.set("devices", "gpu,npu");
+        json::write_file(&path, &j).unwrap();
+        assert!(RunConfig::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -18,9 +18,13 @@ use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
 use std::path::Path;
 
-/// The database key of an (algorithm, frequency) pair.
+/// The database key of an (algorithm, frequency) pair. Only the raw zero
+/// value (GPU at nominal) maps to the bare pre-DVFS name: other devices'
+/// nominal states are distinct measurements and keep their packed `@f`
+/// suffix (e.g. `"winograd@f4096"` = DLA nominal), so a DLA profile can
+/// never shadow a GPU one.
 fn algo_key(algo: Algorithm, freq: FreqId) -> String {
-    if freq.is_nominal() {
+    if freq.0 == 0 {
         algo.name().to_string()
     } else {
         format!("{}@f{}", algo.name(), freq.0)
@@ -136,7 +140,8 @@ impl CostDb {
                 algos
                     .iter()
                     .filter_map(|(key, e)| match parse_algo_key(key) {
-                        Some((a, f)) if f.is_nominal() => Some((a, e.cost)),
+                        // Raw zero only: GPU nominal, not other devices'.
+                        Some((a, f)) if f.0 == 0 => Some((a, e.cost)),
                         _ => None,
                     })
                     .collect()
@@ -296,6 +301,27 @@ mod tests {
         assert_eq!(back.get_at("conv2d;x", Algorithm::ConvWinograd, FreqId(900)), Some(low));
         assert_eq!(back.get("conv2d;x", Algorithm::ConvWinograd), Some(nom));
         assert!(back.contains_at("conv2d;x", Algorithm::ConvWinograd, FreqId(900)));
+    }
+
+    #[test]
+    fn device_nominal_keys_do_not_shadow_gpu_nominal() {
+        use crate::energysim::DeviceId;
+        let mut db = CostDb::new();
+        let gpu = NodeCost { time_ms: 0.5, power_w: 180.0 };
+        let dla = NodeCost { time_ms: 2.5, power_w: 12.0 };
+        db.insert("conv2d;x", Algorithm::ConvDirect, gpu, "sim-v100");
+        let dla_nom = FreqId::on(DeviceId::DLA, 0);
+        assert!(dla_nom.is_nominal(), "DLA nominal is a nominal state");
+        db.insert_at("conv2d;x", Algorithm::ConvDirect, dla_nom, dla, "sim-dla");
+        // Two distinct entries: the packed DLA state never collides with
+        // the bare GPU-nominal key, and Table-1 listings stay GPU-only.
+        assert_eq!(db.num_entries(), 2);
+        assert_eq!(db.get("conv2d;x", Algorithm::ConvDirect), Some(gpu));
+        assert_eq!(db.get_at("conv2d;x", Algorithm::ConvDirect, dla_nom), Some(dla));
+        assert_eq!(db.entries_for("conv2d;x"), vec![(Algorithm::ConvDirect, gpu)]);
+        let back = CostDb::from_json(&db.to_json()).unwrap();
+        assert_eq!(back.get_at("conv2d;x", Algorithm::ConvDirect, dla_nom), Some(dla));
+        assert_eq!(back.get("conv2d;x", Algorithm::ConvDirect), Some(gpu));
     }
 
     #[test]

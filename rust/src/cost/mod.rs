@@ -26,8 +26,8 @@ pub use oracle::{
 };
 
 use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};
-use crate::energysim::FreqId;
-use crate::graph::{Graph, NodeId};
+use crate::energysim::{FreqId, LinkModel};
+use crate::graph::{Graph, NodeId, TensorShape};
 use std::sync::Arc;
 
 /// Measured cost of one (node-signature, algorithm) pair.
@@ -278,6 +278,82 @@ struct NodeSlabIndex {
     uniform: bool,
 }
 
+/// One producer→consumer edge between two runtime-costed nodes, with the
+/// pre-computed link cost the table charges if the two ever land on
+/// different devices.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferLink {
+    /// Producing node.
+    pub src: NodeId,
+    /// Consuming node.
+    pub dst: NodeId,
+    /// Tensor size crossing the edge, bytes (f32 elements × 4).
+    pub bytes: f64,
+    /// Link latency if the edge crosses devices, milliseconds.
+    pub time_ms: f64,
+    /// Link energy if the edge crosses devices, mJ per inference (same
+    /// `ms × W` unit as [`NodeCost::energy_j`]).
+    pub energy_mj: f64,
+}
+
+/// The transfer-cost overlay of a multi-device [`GraphCostTable`]: every
+/// data edge between runtime-costed nodes, priced once at build time, plus
+/// per-node incidence lists for O(degree) swap re-evaluation. Single-device
+/// tables carry no overlay — their objective stays fully separable and the
+/// pre-placement hot paths are untouched.
+#[derive(Debug, Clone, Default)]
+pub struct TransferLinks {
+    /// All priced edges.
+    edges: Vec<TransferLink>,
+    /// `incident[node]` = indices into `edges` touching that node.
+    incident: Vec<Vec<u32>>,
+}
+
+impl TransferLinks {
+    /// Price every data edge between costed nodes of `g` under `link`.
+    /// `costed[i]` marks nodes that carry cost options (constant-space and
+    /// input nodes never execute, so edges from them move no runtime data).
+    pub fn build(
+        g: &Graph,
+        shapes: &[Vec<TensorShape>],
+        costed: &[bool],
+        link: &LinkModel,
+    ) -> TransferLinks {
+        let mut edges = Vec::new();
+        for (id, node) in g.nodes() {
+            if !costed[id.0] {
+                continue;
+            }
+            for p in &node.inputs {
+                if !costed.get(p.node.0).copied().unwrap_or(false) {
+                    continue;
+                }
+                let bytes = 4.0 * shapes[p.node.0][p.port].iter().product::<usize>() as f64;
+                let (time_ms, energy_mj) = link.transfer_cost(bytes);
+                edges.push(TransferLink { src: p.node, dst: id, bytes, time_ms, energy_mj });
+            }
+        }
+        TransferLinks::from_edges(edges, g.len())
+    }
+
+    /// Assemble from pre-priced edges over `n_nodes` nodes (the delta-table
+    /// path prices edges straight off the candidate view, without
+    /// materializing the graph).
+    pub fn from_edges(edges: Vec<TransferLink>, n_nodes: usize) -> TransferLinks {
+        let mut incident = vec![Vec::new(); n_nodes];
+        for (ei, e) in edges.iter().enumerate() {
+            incident[e.src.0].push(ei as u32);
+            incident[e.dst.0].push(ei as u32);
+        }
+        TransferLinks { edges, incident }
+    }
+
+    /// All priced edges.
+    pub fn edges(&self) -> &[TransferLink] {
+        &self.edges
+    }
+}
+
 /// Per-graph cost lookup table: for every runtime node, the cost of each
 /// applicable (algorithm, frequency) pair, resolved once from the
 /// database. This is the inner search's working set — after `build`, cost
@@ -300,6 +376,9 @@ pub struct GraphCostTable {
     /// Dense per-node (algorithm → option, frequency → slab) indices,
     /// built once at construction.
     index: Vec<NodeSlabIndex>,
+    /// Transfer-cost overlay, present only when the table's options span
+    /// more than one device ([`GraphCostTable::attach_links`]).
+    links: Option<Arc<TransferLinks>>,
 }
 
 /// Build the dense per-node indices for a slab table (one pass).
@@ -376,7 +455,49 @@ impl GraphCostTable {
     /// indices the hot-path lookups use.
     pub fn from_freq_slabs(entries: Vec<Vec<FreqSlab>>) -> GraphCostTable {
         let (freq_universe, index) = build_slab_index(&entries);
-        GraphCostTable { entries, freq_universe, index }
+        GraphCostTable { entries, freq_universe, index, links: None }
+    }
+
+    /// Attach the transfer-cost overlay: price every data edge between
+    /// costed nodes under `link`. Called by the oracle only when the
+    /// table's frequency universe spans more than one device — overlay-free
+    /// tables evaluate exactly as before the placement axis existed.
+    pub fn attach_links(&mut self, g: &Graph, shapes: &[Vec<TensorShape>], link: &LinkModel) {
+        let costed: Vec<bool> = self.entries.iter().map(|e| !e.is_empty()).collect();
+        self.links = Some(Arc::new(TransferLinks::build(g, shapes, &costed, link)));
+    }
+
+    /// Share an already-built overlay (the delta-table path: clean rows and
+    /// links both come from the parent table's build).
+    pub fn attach_links_shared(&mut self, links: Arc<TransferLinks>) {
+        self.links = Some(links);
+    }
+
+    /// Whether a transfer-cost overlay is attached (iff the table spans
+    /// devices). Gates the boundary-aware inner pass.
+    pub fn has_links(&self) -> bool {
+        self.links.is_some()
+    }
+
+    /// The transfer-cost overlay, if attached.
+    pub fn links(&self) -> Option<&Arc<TransferLinks>> {
+        self.links.as_ref()
+    }
+
+    /// Total transfer cost of `a`: the sum of link costs over edges whose
+    /// endpoints sit on different devices, `(time_ms, energy_mj)`. Zero —
+    /// with no floating-point terms added at all — when every edge stays
+    /// on one device or no overlay is attached.
+    pub fn transfer_cost(&self, a: &Assignment) -> (f64, f64) {
+        let Some(links) = &self.links else { return (0.0, 0.0) };
+        let (mut t, mut e) = (0.0, 0.0);
+        for edge in &links.edges {
+            if a.freq(edge.src).device() != a.freq(edge.dst).device() {
+                t += edge.time_ms;
+                e += edge.energy_mj;
+            }
+        }
+        (t, e)
     }
 
     /// Build from a profiled database. Errors if any (signature, algorithm)
@@ -441,7 +562,11 @@ impl GraphCostTable {
     }
 
     /// Additive cost of the graph under `a` (paper's cost model), each node
-    /// priced at its assigned (algorithm, frequency) pair.
+    /// priced at its assigned (algorithm, frequency) pair — plus, when a
+    /// transfer overlay is attached, the link cost of every edge whose
+    /// endpoints land on different devices. Device-uniform assignments
+    /// cross no boundary, so no transfer term is ever added (exact
+    /// conservation, not `+ 0.0`).
     pub fn eval(&self, a: &Assignment) -> GraphCost {
         let mut gc = GraphCost::default();
         for (i, slabs) in self.entries.iter().enumerate() {
@@ -454,6 +579,14 @@ impl GraphCostTable {
                 panic!("({chosen:?}, {}) not applicable to node {i}", a.freq(id).describe())
             });
             gc = gc.add(&cost);
+        }
+        if let Some(links) = &self.links {
+            for edge in &links.edges {
+                if a.freq(edge.src).device() != a.freq(edge.dst).device() {
+                    gc.time_ms += edge.time_ms;
+                    gc.energy_j += edge.energy_mj;
+                }
+            }
         }
         gc.freq = a.uniform_freq();
         gc
@@ -587,11 +720,34 @@ impl GraphCostTable {
         };
         let old = find(old_algo, old_freq)?;
         let new = find(new_algo, new_freq)?;
-        Ok(GraphCost {
+        let mut out = GraphCost {
             time_ms: base.time_ms - old.time_ms + new.time_ms,
             energy_j: base.energy_j - old.energy_j() + new.energy_j(),
             freq: if new_freq == old_freq { base.freq } else { FreqId::NOMINAL },
-        })
+        };
+        // Device migration changes which incident edges cross a boundary:
+        // re-price exactly those, O(degree).
+        if let Some(links) = &self.links {
+            let dev_old = old_freq.device();
+            let dev_new = new_freq.device();
+            if dev_old != dev_new {
+                for &ei in &links.incident[id.0] {
+                    let edge = &links.edges[ei as usize];
+                    let other = if edge.src == id { edge.dst } else { edge.src };
+                    let other_dev = a.freq(other).device();
+                    let was_boundary = dev_old != other_dev;
+                    let is_boundary = dev_new != other_dev;
+                    if was_boundary && !is_boundary {
+                        out.time_ms -= edge.time_ms;
+                        out.energy_j -= edge.energy_mj;
+                    } else if !was_boundary && is_boundary {
+                        out.time_ms += edge.time_ms;
+                        out.energy_j += edge.energy_mj;
+                    }
+                }
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -728,6 +884,95 @@ mod tests {
         );
         assert_eq!(CostFunction::Power.additive_key(), None);
         assert_eq!(CostFunction::Product { w: 0.5 }.additive_key(), None);
+    }
+
+    fn two_device_table_with_link() -> GraphCostTable {
+        use crate::energysim::DeviceId;
+        let dla = FreqId::on(DeviceId::DLA, 0);
+        let mk = |t_gpu: f64, p_gpu: f64, t_dla: f64, p_dla: f64| {
+            vec![
+                (
+                    FreqId::NOMINAL,
+                    Arc::new(vec![(Algorithm::Passthrough, NodeCost { time_ms: t_gpu, power_w: p_gpu })]),
+                ),
+                (
+                    dla,
+                    Arc::new(vec![(Algorithm::Passthrough, NodeCost { time_ms: t_dla, power_w: p_dla })]),
+                ),
+            ]
+        };
+        let mut t = GraphCostTable::from_freq_slabs(vec![
+            mk(1.0, 100.0, 4.0, 10.0),
+            Vec::new(),
+            mk(0.5, 80.0, 2.0, 8.0),
+        ]);
+        // One data edge 0 → 2 (node 1 is a weight-like zero-cost node).
+        let edges = vec![TransferLink {
+            src: NodeId(0),
+            dst: NodeId(2),
+            bytes: 1024.0,
+            time_ms: 0.125,
+            energy_mj: 0.75,
+        }];
+        let mut incident = vec![Vec::new(); 3];
+        incident[0].push(0);
+        incident[2].push(0);
+        t.attach_links_shared(Arc::new(TransferLinks { edges, incident }));
+        t
+    }
+
+    #[test]
+    fn transfer_charged_iff_edge_crosses_devices() {
+        use crate::energysim::DeviceId;
+        let t = two_device_table_with_link();
+        let dla = FreqId::on(DeviceId::DLA, 0);
+        let algos = vec![Some(Algorithm::Passthrough), None, Some(Algorithm::Passthrough)];
+        let both_gpu = Assignment::from_parts(algos.clone(), vec![FreqId::NOMINAL; 3]);
+        let both_dla = Assignment::from_parts(algos.clone(), vec![dla; 3]);
+        let mut split = both_gpu.clone();
+        split.set_freq(NodeId(2), dla);
+
+        // Device-uniform: bit-exact conservation (no transfer terms added).
+        let gpu_cost = t.eval(&both_gpu);
+        assert_eq!(gpu_cost.time_ms.to_bits(), (1.0f64 + 0.5).to_bits());
+        assert_eq!(gpu_cost.energy_j.to_bits(), (1.0f64 * 100.0 + 0.5 * 80.0).to_bits());
+        let dla_cost = t.eval(&both_dla);
+        assert_eq!(dla_cost.time_ms.to_bits(), (4.0f64 + 2.0).to_bits());
+        assert_eq!(t.transfer_cost(&both_gpu), (0.0, 0.0));
+        assert_eq!(t.transfer_cost(&both_dla), (0.0, 0.0));
+
+        // Split placement: exactly one boundary edge charged.
+        let split_cost = t.eval(&split);
+        assert!((split_cost.time_ms - (1.0 + 2.0 + 0.125)).abs() < 1e-12);
+        assert!((split_cost.energy_j - (100.0 + 16.0 + 0.75)).abs() < 1e-12);
+        assert_eq!(t.transfer_cost(&split), (0.125, 0.75));
+    }
+
+    #[test]
+    fn eval_swap_tracks_boundary_changes() {
+        use crate::energysim::DeviceId;
+        let t = two_device_table_with_link();
+        let dla = FreqId::on(DeviceId::DLA, 0);
+        let algos = vec![Some(Algorithm::Passthrough), None, Some(Algorithm::Passthrough)];
+        let both_gpu = Assignment::from_parts(algos.clone(), vec![FreqId::NOMINAL; 3]);
+        let base = t.eval(&both_gpu);
+
+        // GPU→DLA migration of node 2 opens the boundary…
+        let swapped = t.eval_swap(base, &both_gpu, NodeId(2), Algorithm::Passthrough, dla).unwrap();
+        let mut split = both_gpu.clone();
+        split.set_freq(NodeId(2), dla);
+        let full = t.eval(&split);
+        assert!((swapped.time_ms - full.time_ms).abs() < 1e-12);
+        assert!((swapped.energy_j - full.energy_j).abs() < 1e-12);
+
+        // …and migrating node 0 after it closes the boundary again.
+        let closed = t.eval_swap(full, &split, NodeId(0), Algorithm::Passthrough, dla).unwrap();
+        let mut both = split.clone();
+        both.set_freq(NodeId(0), dla);
+        let full_both = t.eval(&both);
+        assert!((closed.time_ms - full_both.time_ms).abs() < 1e-12);
+        assert!((closed.energy_j - full_both.energy_j).abs() < 1e-12);
+        assert!(t.has_links());
     }
 
     #[test]

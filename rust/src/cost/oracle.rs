@@ -26,9 +26,9 @@
 //!   on resolve misses (first run) — steady-state lookups never reach it.
 
 use super::feedback::MeasuredStore;
-use super::{AdditiveKey, CostDb, CostFunction, GraphCostTable, NodeCost};
+use super::{AdditiveKey, CostDb, CostFunction, GraphCostTable, NodeCost, TransferLink, TransferLinks};
 use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};
-use crate::energysim::FreqId;
+use crate::energysim::{DeviceId, FreqId, LinkModel};
 use crate::graph::{DeltaView, Graph, NodeId, OpKind, TensorShape};
 use crate::profiler::{CostProvider, ProfileReport};
 use std::collections::HashMap;
@@ -92,9 +92,11 @@ const SHARDS: usize = 16;
 type ResolveShard = RwLock<HashMap<(SigId, FreqId), Arc<Vec<(Algorithm, NodeCost)>>>>;
 
 /// Most frequency slabs a memoized row set can hold: the nominal clock
-/// plus the sim-V100's seven DVFS states fit; nodes with more slabs
-/// (exotic providers) simply scan instead of memoizing.
-const MAX_MEMO_SLABS: usize = 8;
+/// plus the sim-V100's seven DVFS states fit, as does the GPU+DLA joint
+/// state set (7 GPU + 4 DLA slabs); nodes with more slabs (exotic
+/// providers) simply scan instead of memoizing. The memo is exact either
+/// way — this only trades cache hits for scans.
+const MAX_MEMO_SLABS: usize = 16;
 
 /// Key of one per-row argmin memo entry: the additive objective's exact
 /// identity plus the node's row identity — its `(freq, slab Arc pointer)`
@@ -157,6 +159,14 @@ pub struct CostOracle {
     /// clock (the nominal/max state is canonicalized to `FreqId::NOMINAL`
     /// and therefore excluded). Empty = no DVFS support.
     dvfs_freqs: Vec<FreqId>,
+    /// Extra (non-GPU) devices the provider can measure, each with its
+    /// packed states: the device's nominal first (`FreqId::on(dev, 0)`),
+    /// then its sub-nominal DVFS states ascending. Empty for single-device
+    /// providers — everything placement-related is gated on this.
+    device_freqs: Vec<(DeviceId, Vec<FreqId>)>,
+    /// Transfer cost between the provider's devices (`None` = single
+    /// device, no transfer ever charged).
+    link_model: Option<LinkModel>,
     /// Total (signature, algorithm, frequency) tuples measured through
     /// this oracle.
     profiled: AtomicU64,
@@ -258,12 +268,32 @@ impl CostOracle {
     /// Build an oracle from registry + profile DB + measurement provider.
     pub fn new(reg: AlgorithmRegistry, db: CostDb, provider: Box<dyn CostProvider>) -> CostOracle {
         let provider_name = provider.provider_name();
-        let states = provider.freq_states();
+        // Per-device state tables: entry 0 is always the primary GPU, whose
+        // states stay device-local (raw MHz, nominal canonicalized to
+        // `FreqId::NOMINAL`) — exactly the pre-placement behavior. Extra
+        // devices pack their states with their device bits.
+        let devices = provider.device_states();
+        let states = &devices[0].1;
+        debug_assert_eq!(devices[0].0, DeviceId::GPU, "device 0 must be the GPU");
         let nominal = states.iter().map(|s| s.mhz).max().unwrap_or(0);
         let mut dvfs_freqs: Vec<FreqId> =
             states.iter().filter(|s| s.mhz < nominal).map(|s| FreqId(s.mhz)).collect();
         dvfs_freqs.sort();
         dvfs_freqs.dedup();
+        let device_freqs: Vec<(DeviceId, Vec<FreqId>)> = devices[1..]
+            .iter()
+            .map(|(dev, states)| {
+                let dev_nominal = states.iter().map(|s| s.mhz).max().unwrap_or(0);
+                let mut freqs = vec![FreqId::on(*dev, 0)];
+                let mut sub: Vec<u16> =
+                    states.iter().filter(|s| s.mhz < dev_nominal).map(|s| s.mhz).collect();
+                sub.sort_unstable();
+                sub.dedup();
+                freqs.extend(sub.into_iter().map(|mhz| FreqId::on(*dev, mhz)));
+                (*dev, freqs)
+            })
+            .collect();
+        let link_model = if device_freqs.is_empty() { None } else { provider.link_model() };
         CostOracle {
             reg,
             interner: SigInterner::default(),
@@ -272,6 +302,8 @@ impl CostOracle {
             provider,
             provider_name,
             dvfs_freqs,
+            device_freqs,
+            link_model,
             profiled: AtomicU64::new(0),
             full_tables: AtomicU64::new(0),
             delta_tables: AtomicU64::new(0),
@@ -313,6 +345,31 @@ impl CostOracle {
     /// frequency table (DVFS search then degenerates to nominal-only).
     pub fn dvfs_freqs(&self) -> &[FreqId] {
         &self.dvfs_freqs
+    }
+
+    /// Extra (non-GPU) devices available for placement search: each with
+    /// its packed states, device nominal first, then sub-nominal DVFS
+    /// states ascending. Empty for single-device providers.
+    pub fn device_freqs(&self) -> &[(DeviceId, Vec<FreqId>)] {
+        &self.device_freqs
+    }
+
+    /// Whether placement is a live axis (the provider exposes more than
+    /// one device).
+    pub fn has_extra_devices(&self) -> bool {
+        !self.device_freqs.is_empty()
+    }
+
+    /// The inter-device transfer model, when the provider spans devices.
+    pub fn link_model(&self) -> Option<&LinkModel> {
+        self.link_model.as_ref()
+    }
+
+    /// Whether `freqs` spans more than one device — the condition under
+    /// which tables get a transfer overlay and the objective stops being
+    /// separable at device boundaries.
+    fn spans_devices(freqs: &[FreqId]) -> bool {
+        freqs.len() > 1 && freqs.iter().any(|f| f.device() != freqs[0].device())
     }
 
     /// Total measurements performed through this oracle since creation.
@@ -608,7 +665,13 @@ impl CostOracle {
             }
             entries[id.0] = slabs;
         });
-        (GraphCostTable::from_freq_slabs(entries), measured)
+        let mut table = GraphCostTable::from_freq_slabs(entries);
+        if Self::spans_devices(freqs) {
+            if let Some(link) = &self.link_model {
+                table.attach_links(g, shapes, link);
+            }
+        }
+        (table, measured)
     }
 
     /// Build a **candidate** cost table and default assignment for
@@ -757,9 +820,35 @@ impl CostOracle {
         }
         self.carried_rows.fetch_add(carried, Ordering::Relaxed);
         self.resolved_rows.fetch_add(resolved, Ordering::Relaxed);
+        let mut table = GraphCostTable::from_freq_slabs(entries);
+        // Transfer overlay for multi-device candidates, priced straight off
+        // the view in compaction order — edge-for-edge what a full build on
+        // the materialized graph produces (same iteration order, same
+        // shapes), keeping the delta and full paths bit-identical.
+        if Self::spans_devices(freqs) {
+            if let Some(link) = &self.link_model {
+                let mut edges = Vec::new();
+                for (j, &i) in live.iter().enumerate() {
+                    if table.freq_options(NodeId(j)).is_empty() {
+                        continue;
+                    }
+                    for p in view.inputs(i) {
+                        let Some(src) = view.compact_id(p.node.0) else { continue };
+                        if table.freq_options(src).is_empty() {
+                            continue;
+                        }
+                        let bytes =
+                            4.0 * view.out_shapes(p.node.0)[p.port].iter().product::<usize>() as f64;
+                        let (time_ms, energy_mj) = link.transfer_cost(bytes);
+                        edges.push(TransferLink { src, dst: NodeId(j), bytes, time_ms, energy_mj });
+                    }
+                }
+                table.attach_links_shared(Arc::new(TransferLinks::from_edges(edges, live.len())));
+            }
+        }
         let freqs_default = vec![FreqId::NOMINAL; live.len()];
         CandidateTable {
-            table: GraphCostTable::from_freq_slabs(entries),
+            table,
             assignment: Assignment::from_parts(choices, freqs_default),
             warm: warm_parts.map(|(wc, wf)| Assignment::from_parts(wc, wf)),
             dirty,
@@ -973,6 +1062,80 @@ mod tests {
         let (_, _, s3) = oracle.argmin_for(&t1, conv, &CostFunction::Time).unwrap();
         assert!(s3 > 0);
         assert!(oracle.argmin_for(&t1, conv, &CostFunction::Power).is_none());
+    }
+
+    #[test]
+    fn hetero_oracle_gates_links_on_multi_device_tables() {
+        let oracle = CostOracle::new(
+            AlgorithmRegistry::new(),
+            CostDb::new(),
+            Box::new(crate::profiler::SimHeteroProvider::new(7)),
+        );
+        assert!(oracle.has_extra_devices());
+        assert!(oracle.link_model().is_some());
+        let device_freqs = oracle.device_freqs().to_vec();
+        assert_eq!(device_freqs.len(), 1);
+        let (dla, dla_freqs) = &device_freqs[0];
+        assert_eq!(*dla, DeviceId::DLA);
+        assert!(dla_freqs[0].is_nominal() && dla_freqs[0].device() == DeviceId::DLA);
+        assert!(dla_freqs[1..].iter().all(|f| f.device() == DeviceId::DLA && !f.is_nominal()));
+
+        // conv + relu chain: two costed nodes, one data edge.
+        let mut g = conv_graph();
+        let r = g.add1(OpKind::Relu, &[NodeId(2)], "r");
+        g.outputs = vec![PortRef::of(r)];
+        let shapes = g.infer_shapes().unwrap();
+
+        // Single-device tables never carry an overlay.
+        let (t_gpu, _) = oracle.table_for_with(&g, &shapes);
+        assert!(!t_gpu.has_links());
+        // Multi-device tables do, with one edge conv→relu.
+        let freqs = [FreqId::NOMINAL, dla_freqs[0]];
+        let (t_mix, m) = oracle.table_for_freqs(&g, &shapes, &freqs);
+        assert!(m > 0, "the DLA slab measures on first touch");
+        assert!(t_mix.has_links());
+        let links = t_mix.links().unwrap();
+        assert_eq!(links.edges().len(), 1);
+        assert_eq!((links.edges()[0].src, links.edges()[0].dst), (NodeId(2), r));
+
+        // All-GPU eval through the mixed table matches the GPU-only table
+        // bit-for-bit (overlay adds no terms without a boundary).
+        let a = crate::algo::Assignment::default_for(&g, oracle.reg());
+        let c_gpu = t_gpu.eval(&a);
+        let c_mix = t_mix.eval(&a);
+        assert_eq!(c_gpu.time_ms.to_bits(), c_mix.time_ms.to_bits());
+        assert_eq!(c_gpu.energy_j.to_bits(), c_mix.energy_j.to_bits());
+
+        // Splitting the chain charges exactly the edge's transfer cost.
+        let mut split = a.clone();
+        split.set_freq(r, dla_freqs[0]);
+        let c_split = t_mix.eval(&split);
+        let (t_xfer, e_xfer) = t_mix.transfer_cost(&split);
+        assert!(t_xfer > 0.0 && e_xfer > 0.0);
+        let dla_relu = t_mix.option_cost(r, Algorithm::Passthrough, dla_freqs[0]).unwrap();
+        let gpu_relu = t_mix.option_cost(r, Algorithm::Passthrough, FreqId::NOMINAL).unwrap();
+        let expect = c_gpu.time_ms - gpu_relu.time_ms + dla_relu.time_ms + t_xfer;
+        assert!((c_split.time_ms - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hetero_gpu_measurements_match_v100_oracle_bitwise() {
+        let v100 = CostOracle::offline_default();
+        let hetero = CostOracle::new(
+            AlgorithmRegistry::new(),
+            CostDb::new(),
+            Box::new(crate::profiler::SimHeteroProvider::new(7)),
+        );
+        let g = conv_graph();
+        let shapes = g.infer_shapes().unwrap();
+        let a = crate::algo::Assignment::default_for(&g, v100.reg());
+        for freqs in [vec![FreqId::NOMINAL], vec![FreqId::NOMINAL, FreqId(900)]] {
+            let (ta, _) = v100.table_for_freqs(&g, &shapes, &freqs);
+            let (tb, _) = hetero.table_for_freqs(&g, &shapes, &freqs);
+            let (ca, cb) = (ta.eval(&a), tb.eval(&a));
+            assert_eq!(ca.time_ms.to_bits(), cb.time_ms.to_bits());
+            assert_eq!(ca.energy_j.to_bits(), cb.energy_j.to_bits());
+        }
     }
 
     #[test]

@@ -64,28 +64,99 @@ pub struct FreqState {
     pub volt: f64,
 }
 
-/// A frequency choice, identified by its core clock in MHz. The reserved
-/// value `FreqId::NOMINAL` (0 MHz) means "the device's nominal (maximum)
-/// clock" — the state every pre-DVFS profile and plan implicitly ran at,
-/// so `--dvfs off` is exactly the nominal-only search.
+/// A device class in a heterogeneous accelerator mix. Device 0 is always
+/// the primary GPU — every pre-placement `FreqId` implicitly named it, so
+/// single-device plans are bit-identical to the pre-placement pipeline by
+/// construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct DeviceId(pub u8);
+
+impl DeviceId {
+    /// The primary GPU (device 0) — the pre-placement implicit device.
+    pub const GPU: DeviceId = DeviceId(0);
+    /// The low-power DLA-like accelerator (device 1).
+    pub const DLA: DeviceId = DeviceId(1);
+
+    /// Canonical device name ("gpu", "dla").
+    pub fn name(&self) -> &'static str {
+        match self.0 {
+            0 => "gpu",
+            1 => "dla",
+            _ => "unknown",
+        }
+    }
+
+    /// Parse a canonical device name. Unknown names are `None` — the CLI
+    /// layers a did-you-mean on top.
+    pub fn parse(name: &str) -> Option<DeviceId> {
+        match name {
+            "gpu" => Some(DeviceId::GPU),
+            "dla" => Some(DeviceId::DLA),
+            _ => None,
+        }
+    }
+}
+
+/// All device names the simulator knows, in `DeviceId` order.
+pub const DEVICE_NAMES: &[&str] = &["gpu", "dla"];
+
+/// Bit position of the device index inside a packed [`FreqId`].
+const DEVICE_SHIFT: u16 = 12;
+/// Mask of the device-local MHz field inside a packed [`FreqId`].
+const MHZ_MASK: u16 = (1 << DEVICE_SHIFT) - 1;
+
+/// A (device, frequency) choice packed into one `u16`: bits 12..16 carry
+/// the device index, bits 0..12 the device-local core clock in MHz. The
+/// reserved local value 0 means "that device's nominal (maximum) clock".
+///
+/// Device 0 (the GPU) packs to the raw MHz value, so every pre-placement
+/// `FreqId` — including `FreqId::NOMINAL` (0 = GPU at nominal) — keeps its
+/// exact bit pattern, profiles its exact database keys, and `--dvfs off`
+/// stays exactly the nominal-only search.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
 pub struct FreqId(pub u16);
 
 impl FreqId {
-    /// The device's nominal (maximum) clock — the pre-DVFS default.
+    /// The GPU's nominal (maximum) clock — the pre-DVFS, pre-placement
+    /// default.
     pub const NOMINAL: FreqId = FreqId(0);
 
-    /// Whether this is the nominal (maximum) clock.
-    pub fn is_nominal(&self) -> bool {
-        self.0 == 0
+    /// Pack a device and a device-local clock (MHz; 0 = that device's
+    /// nominal state). Local clocks above 4095 MHz don't fit the packed
+    /// field and are a programming error.
+    pub fn on(device: DeviceId, mhz: u16) -> FreqId {
+        debug_assert!(mhz <= MHZ_MASK, "device-local clock {mhz} MHz exceeds the packed field");
+        FreqId(((device.0 as u16) << DEVICE_SHIFT) | (mhz & MHZ_MASK))
     }
 
-    /// Human-readable label ("nominal" or "900MHz").
+    /// The device this state runs on.
+    pub fn device(&self) -> DeviceId {
+        DeviceId((self.0 >> DEVICE_SHIFT) as u8)
+    }
+
+    /// The device-local core clock in MHz (0 = that device's nominal).
+    pub fn mhz(&self) -> u16 {
+        self.0 & MHZ_MASK
+    }
+
+    /// The same state stripped of its device bits — what device-local
+    /// models ([`GpuSpec`], [`EnergyModel`]) consume.
+    pub fn local(&self) -> FreqId {
+        FreqId(self.mhz())
+    }
+
+    /// Whether this is its device's nominal (maximum) clock.
+    pub fn is_nominal(&self) -> bool {
+        self.mhz() == 0
+    }
+
+    /// Human-readable label ("nominal", "900MHz", "dla", "dla@640MHz").
     pub fn describe(&self) -> String {
-        if self.is_nominal() {
-            "nominal".to_string()
-        } else {
-            format!("{}MHz", self.0)
+        match (self.device(), self.mhz()) {
+            (DeviceId::GPU, 0) => "nominal".to_string(),
+            (DeviceId::GPU, m) => format!("{m}MHz"),
+            (d, 0) => d.name().to_string(),
+            (d, m) => format!("{}@{m}MHz", d.name()),
         }
     }
 }
@@ -154,6 +225,27 @@ impl GpuSpec {
         }
     }
 
+    /// A DLA-like fixed-function inference accelerator sharing the board:
+    /// an order of magnitude below the GPU on peak throughput and memory
+    /// path, but with a far lower power envelope — slower per node, yet
+    /// often cheaper per joule, which is exactly the placement trade the
+    /// heterogeneous search exploits (AxoNN's GPU+DLA pattern).
+    pub fn dla() -> GpuSpec {
+        GpuSpec {
+            name: "sim-dla".into(),
+            peak_flops: 2.2e12,
+            peak_bw: 60.0e9,
+            idle_power: 4.0,
+            max_power: 18.0,
+            // Fixed-function pipeline: cheaper launches, but every node
+            // goes through the same firmware dispatch path.
+            launch_overhead_s: 8.0e-6,
+            dispatch_overhead_s: 3.0e-6,
+            launch_overlap: 0.20,
+            freq_states: dla_freq_curve(),
+        }
+    }
+
     /// Nominal (maximum) core clock in MHz; 0 when the device exposes no
     /// frequency table.
     pub fn nominal_mhz(&self) -> u16 {
@@ -194,6 +286,53 @@ fn v100_freq_curve() -> Vec<FreqState> {
         .iter()
         .map(|&mhz| FreqState { mhz, volt: 0.65 + 0.40 * mhz as f64 / 1380.0 })
         .collect()
+}
+
+/// The DLA clock table (see [`GpuSpec::dla`]): four coarse states, nominal
+/// at 1280 MHz, on a shallower volt/clock curve than the GPU (the block
+/// runs near threshold voltage already).
+fn dla_freq_curve() -> Vec<FreqState> {
+    [320u16, 640, 960, 1280]
+        .iter()
+        .map(|&mhz| FreqState { mhz, volt: 0.55 + 0.25 * mhz as f64 / 1280.0 })
+        .collect()
+}
+
+/// Cost model of the interconnect a tensor crosses when adjacent nodes are
+/// placed on different devices (the AxoNN per-transition term): a fixed
+/// per-transfer handshake plus a bandwidth/energy term per byte moved.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Fixed per-transfer latency, seconds (sync + descriptor setup).
+    pub latency_s: f64,
+    /// Link bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// Data-movement energy, joules per byte (DRAM round trip + link PHY).
+    pub energy_per_byte: f64,
+    /// Fixed per-transfer energy, joules.
+    pub energy_per_transfer: f64,
+}
+
+impl LinkModel {
+    /// The shared-DRAM path between the GPU and the DLA block: tensors
+    /// round-trip through device memory rather than a dedicated fabric.
+    pub fn shared_dram() -> LinkModel {
+        LinkModel {
+            latency_s: 12.0e-6,
+            bandwidth: 16.0e9,
+            energy_per_byte: 250.0e-12,
+            energy_per_transfer: 25.0e-6,
+        }
+    }
+
+    /// Cost of moving `bytes` across the link once, in the table's units:
+    /// milliseconds and millijoules-per-inference (the same `ms × W` unit
+    /// [`SimCost::energy_j`] uses, i.e. J per 1000 inferences).
+    pub fn transfer_cost(&self, bytes: f64) -> (f64, f64) {
+        let time_ms = (self.latency_s + bytes / self.bandwidth) * 1e3;
+        let energy_mj = (self.energy_per_transfer + bytes * self.energy_per_byte) * 1e3;
+        (time_ms, energy_mj)
+    }
 }
 
 /// Per-algorithm execution character: how efficiently it drives each
@@ -336,6 +475,13 @@ impl EnergyModel {
     /// The simulated V100 with ±1.5% seed-hashed measurement noise.
     pub fn v100(seed: u64) -> EnergyModel {
         EnergyModel { spec: GpuSpec::v100(), seed, noise: 0.015 }
+    }
+
+    /// The simulated DLA block with ±1.5% seed-hashed measurement noise.
+    /// Callers pass a device-distinct seed so GPU and DLA measurements of
+    /// the same signature draw independent noise.
+    pub fn dla(seed: u64) -> EnergyModel {
+        EnergyModel { spec: GpuSpec::dla(), seed, noise: 0.015 }
     }
 
     /// Noise multiplier in [1-noise, 1+noise], deterministic per key.
@@ -616,5 +762,50 @@ mod tests {
         // CPU spec has no table: everything is nominal.
         let cpu = GpuSpec::cpu_1core();
         assert_eq!(cpu.dvfs_scale(FreqId(900)), (1.0, 1.0));
+    }
+
+    #[test]
+    fn freq_id_device_packing_roundtrips() {
+        // GPU states pack to their raw MHz value (pre-placement bit pattern).
+        assert_eq!(FreqId::on(DeviceId::GPU, 0), FreqId::NOMINAL);
+        assert_eq!(FreqId::on(DeviceId::GPU, 900), FreqId(900));
+        for (dev, mhz) in [(DeviceId::GPU, 0u16), (DeviceId::GPU, 1380), (DeviceId::DLA, 0), (DeviceId::DLA, 640)] {
+            let f = FreqId::on(dev, mhz);
+            assert_eq!(f.device(), dev);
+            assert_eq!(f.mhz(), mhz);
+            assert_eq!(f.local(), FreqId(mhz));
+            assert_eq!(f.is_nominal(), mhz == 0);
+        }
+        assert_eq!(FreqId::on(DeviceId::DLA, 0).describe(), "dla");
+        assert_eq!(FreqId::on(DeviceId::DLA, 640).describe(), "dla@640MHz");
+        assert_eq!(DeviceId::parse("gpu"), Some(DeviceId::GPU));
+        assert_eq!(DeviceId::parse("dla"), Some(DeviceId::DLA));
+        assert_eq!(DeviceId::parse("tpu"), None);
+        assert_eq!(DeviceId::DLA.name(), "dla");
+    }
+
+    #[test]
+    fn dla_slower_but_cheaper_on_energy() {
+        // The placement trade: DLA loses on latency but wins on energy for
+        // a typical conv node.
+        let gpu = EnergyModel::v100(7);
+        let dla = EnergyModel::dla(7);
+        let w = conv_work();
+        let g = gpu.ideal_cost(&w, Algorithm::ConvIm2col);
+        let d = dla.ideal_cost(&w, Algorithm::ConvIm2col);
+        assert!(d.time_ms > g.time_ms, "DLA {} ms vs GPU {} ms", d.time_ms, g.time_ms);
+        assert!(d.energy_j() < g.energy_j(), "DLA {} mJ vs GPU {} mJ", d.energy_j(), g.energy_j());
+    }
+
+    #[test]
+    fn link_model_transfer_cost_scales_with_bytes() {
+        let link = LinkModel::shared_dram();
+        let (t0, e0) = link.transfer_cost(0.0);
+        let (t1, e1) = link.transfer_cost(1.0e6);
+        // Fixed overheads are charged even for empty transfers.
+        assert!(t0 > 0.0 && e0 > 0.0);
+        assert!(t1 > t0 && e1 > e0);
+        // 1 MB at 16 GB/s ≈ 62 µs + 12 µs handshake.
+        assert!((t1 - (12.0e-6 + 1.0e6 / 16.0e9) * 1e3).abs() < 1e-9);
     }
 }

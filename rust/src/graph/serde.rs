@@ -5,6 +5,7 @@
 use super::op::{Activation, OpKind, WeightKind};
 use super::{Graph, NodeId, PortRef};
 use crate::algo::{Algorithm, Assignment};
+use crate::energysim::{DeviceId, FreqId};
 use crate::util::json::{self, Json};
 use std::path::Path;
 
@@ -234,8 +235,12 @@ pub fn graph_from_json(v: &Json) -> anyhow::Result<Graph> {
 }
 
 /// Serialize an optimized plan: graph + per-node algorithm assignment +
-/// (when any node runs off the nominal clock) per-node DVFS states. Plans
-/// without a frequency axis serialize byte-identically to pre-DVFS plans.
+/// (when any node runs off the nominal clock) per-node DVFS states +
+/// (when any node is placed off the GPU) per-node device names. Plans
+/// without a frequency axis serialize byte-identically to pre-DVFS plans,
+/// and all-GPU plans byte-identically to pre-placement plans: `freq_mhz`
+/// always carries the **device-local** clock (for the GPU that equals the
+/// raw packed value), and the `device` key only appears for mixed plans.
 pub fn plan_to_json(g: &Graph, a: &Assignment) -> Json {
     let mut root = graph_to_json(g);
     let algos: Vec<Json> = g
@@ -249,14 +254,28 @@ pub fn plan_to_json(g: &Graph, a: &Assignment) -> Json {
     if g.ids().any(|id| !a.freq(id).is_nominal()) {
         let freqs: Vec<Json> = g
             .ids()
-            .map(|id| Json::Num(a.freq(id).0 as f64))
+            .map(|id| Json::Num(a.freq(id).mhz() as f64))
             .collect();
         root.set("freq_mhz", Json::Arr(freqs));
+    }
+    if g.ids().any(|id| a.freq(id).device() != DeviceId::GPU) {
+        let devices: Vec<Json> = g
+            .ids()
+            .map(|id| match a.get(id) {
+                Some(_) => Json::Str(a.freq(id).device().name().to_string()),
+                None => Json::Null,
+            })
+            .collect();
+        root.set("device", Json::Arr(devices));
     }
     root
 }
 
-/// Load an optimized plan (graph + assignment + optional DVFS states).
+/// Load an optimized plan (graph + assignment + optional DVFS states +
+/// optional per-node device placement). Unknown device names are
+/// rejected; a `device` entry composes with the node's device-local
+/// `freq_mhz` into the packed state, so a DLA node at its nominal clock
+/// still lands on the DLA.
 pub fn plan_from_json(v: &Json, reg: &crate::algo::AlgorithmRegistry) -> anyhow::Result<(Graph, Assignment)> {
     let g = graph_from_json(v)?;
     let mut a = Assignment::default_for(&g, reg);
@@ -270,15 +289,60 @@ pub fn plan_from_json(v: &Json, reg: &crate::algo::AlgorithmRegistry) -> anyhow:
             }
         }
     }
+    let devices: Option<Vec<Option<DeviceId>>> = match v.get("device").and_then(Json::as_arr) {
+        Some(arr) => {
+            anyhow::ensure!(arr.len() == g.len(), "device length != node count");
+            Some(
+                arr.iter()
+                    .enumerate()
+                    .map(|(i, entry)| match entry.as_str() {
+                        Some(name) => DeviceId::parse(name).map(Some).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "device[{i}]: unknown device `{name}` (known: {})",
+                                crate::energysim::DEVICE_NAMES.join(", ")
+                            )
+                        }),
+                        None => Ok(None),
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            )
+        }
+        None => None,
+    };
     if let Some(arr) = v.get("freq_mhz").and_then(Json::as_arr) {
         anyhow::ensure!(arr.len() == g.len(), "freq_mhz length != node count");
         for (i, entry) in arr.iter().enumerate() {
             let mhz = entry
                 .as_usize()
                 .ok_or_else(|| anyhow::anyhow!("freq_mhz[{i}] not a number"))?;
-            anyhow::ensure!(mhz <= u16::MAX as usize, "freq_mhz[{i}] out of range");
-            if mhz > 0 && a.get(NodeId(i)).is_some() {
-                a.set_freq(NodeId(i), crate::energysim::FreqId(mhz as u16));
+            match &devices {
+                Some(devs) => {
+                    anyhow::ensure!(
+                        mhz <= 0x0FFF,
+                        "freq_mhz[{i}] out of range for a device-local clock"
+                    );
+                    let f = FreqId::on(devs[i].unwrap_or(DeviceId::GPU), mhz as u16);
+                    if f.0 != 0 && a.get(NodeId(i)).is_some() {
+                        a.set_freq(NodeId(i), f);
+                    }
+                }
+                None => {
+                    // Legacy (single-device) plans: the value IS the state.
+                    anyhow::ensure!(mhz <= u16::MAX as usize, "freq_mhz[{i}] out of range");
+                    if mhz > 0 && a.get(NodeId(i)).is_some() {
+                        a.set_freq(NodeId(i), FreqId(mhz as u16));
+                    }
+                }
+            }
+        }
+    } else if let Some(devs) = &devices {
+        // All clocks nominal, but placement may still be mixed: a non-GPU
+        // node must get its packed device state even at local mhz 0.
+        for (i, dev) in devs.iter().enumerate() {
+            if let Some(dev) = dev {
+                if *dev != DeviceId::GPU && a.get(NodeId(i)).is_some() {
+                    a.set_freq(NodeId(i), FreqId::on(*dev, 0));
+                }
             }
         }
     }
@@ -371,6 +435,60 @@ mod tests {
         assert_eq!(graph_hash(&g), graph_hash(&back_g));
         assert_eq!(back_a.freq(conv), FreqId(900));
         assert_eq!(a2.distance(&back_a), 0);
+    }
+
+    #[test]
+    fn device_plans_roundtrip_and_gpu_plans_stay_legacy() {
+        use crate::energysim::{DeviceId, FreqId};
+        let g = models::simple::build_cnn(tiny());
+        let reg = AlgorithmRegistry::new();
+        let a = Assignment::default_for(&g, &reg);
+        let conv = g
+            .nodes()
+            .find(|(_, n)| matches!(n.op, OpKind::Conv2d { .. }))
+            .unwrap()
+            .0;
+
+        // All-GPU plan: no `device` key, and a sub-nominal GPU clock
+        // serializes as the same number it always did (device-local ==
+        // packed for device 0).
+        let mut gpu = a.clone();
+        gpu.set_freq(conv, FreqId(900));
+        let j = plan_to_json(&g, &gpu);
+        assert!(j.get("device").is_none());
+        let freqs = j.get("freq_mhz").unwrap().as_arr().unwrap();
+        assert_eq!(freqs[conv.0].as_usize(), Some(900));
+
+        // DLA at its nominal clock: `device` key, NO `freq_mhz` key (the
+        // clock is nominal), and the loader still lands the node on the
+        // DLA's packed state.
+        let mut dla = a.clone();
+        dla.set_freq(conv, FreqId::on(DeviceId::DLA, 0));
+        let j2 = plan_to_json(&g, &dla);
+        assert!(j2.get("freq_mhz").is_none());
+        let devs = j2.get("device").unwrap().as_arr().unwrap();
+        assert_eq!(devs[conv.0].as_str(), Some("dla"));
+        let (back_g, back_a) = plan_from_json(&j2, &reg).unwrap();
+        assert_eq!(graph_hash(&g), graph_hash(&back_g));
+        assert_eq!(back_a.freq(conv), FreqId::on(DeviceId::DLA, 0));
+        assert_eq!(dla.distance(&back_a), 0);
+
+        // DLA at a sub-nominal clock: freq_mhz carries the device-local
+        // 640, not the packed 4736, and the pair round-trips exactly.
+        let mut dla_slow = a.clone();
+        dla_slow.set_freq(conv, FreqId::on(DeviceId::DLA, 640));
+        let j3 = plan_to_json(&g, &dla_slow);
+        let freqs3 = j3.get("freq_mhz").unwrap().as_arr().unwrap();
+        assert_eq!(freqs3[conv.0].as_usize(), Some(640));
+        let (_, back3) = plan_from_json(&j3, &reg).unwrap();
+        assert_eq!(back3.freq(conv), FreqId::on(DeviceId::DLA, 640));
+
+        // Unknown device names are rejected with the known list.
+        let mut bad = j2.clone();
+        bad.set("device", Json::Arr(vec![Json::Str("tpu".to_string()); g.len()]));
+        let err = plan_from_json(&bad, &reg).unwrap_err().to_string();
+        assert!(err.contains("unknown device `tpu`"), "{err}");
+        assert!(err.contains("gpu, dla"), "{err}");
     }
 
     #[test]

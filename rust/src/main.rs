@@ -13,7 +13,7 @@ use eadgo::algo::Assignment;
 use eadgo::config::RunConfig;
 use eadgo::cost::CostDb;
 use eadgo::models;
-use eadgo::profiler::{CpuProvider, SimV100Provider};
+use eadgo::profiler::{CpuProvider, SimHeteroProvider, SimV100Provider};
 use eadgo::report::tables::{self, ExperimentConfig};
 use eadgo::report::f3;
 use eadgo::runtime::Runtime;
@@ -72,6 +72,7 @@ const COMMON_OPTS: &[&str] = &[
     "db",
     "artifacts",
     "provider",
+    "devices",
     "resolution",
     "width-div",
     "batch",
@@ -127,11 +128,12 @@ USAGE: eadgo <subcommand> [--options]
             [--threads T] [--dvfs off|per-graph|per-node]
             [--incremental-inner on|off] [--frontier N]
             [--batches 1,2,4,8] [--save-frontier plans.json]
-            [--db profiles.json] [--provider sim|cpu] [--config run.json]
+            [--db profiles.json] [--provider sim|cpu] [--devices gpu,dla]
+            [--config run.json]
   reproduce --table (1|2|3|4|5|all) [--quick] [--seed S]
   profile   --model M [--provider sim|cpu] [--db profiles.json]
   constrain --model M --time-budget MS [--probes 8] [--threads T]
-            [--dvfs off|per-graph|per-node]
+            [--dvfs off|per-graph|per-node] [--devices gpu,dla]
   run       --model M [--artifacts DIR] [--iters N]
   serve     --model M [--plan plan.json] [--frontier plans.json]
             [--adaptive] [--optimize [OBJ]] [--requests N]
@@ -187,6 +189,20 @@ USAGE: eadgo <subcommand> [--options]
   the request count, so --requests/--rate are rejected alongside it.
   serve defaults honor config keys serve_batch_max / serve_max_wait_ms.
 
+  --devices gpu,dla (sim provider only) adds a DLA-class accelerator as
+  a per-node placement axis: the search places every node on a device
+  jointly with its algorithm and frequency, charging a transfer cost
+  (shared-DRAM link) wherever adjacent nodes land on different devices.
+  The list must start with gpu; `--devices gpu` is the default and is
+  bit-identical to omitting the flag. With --dvfs off the placement
+  search runs at each device's nominal clock; with --dvfs per-node the
+  device's own clock table joins the space. constrain with --devices
+  uses migration (e.g. pull a node back to the GPU when the budget
+  binds, or push it to the DLA when energy is the objective) as a
+  feasibility lever alongside frequency. Plans that place nodes off-GPU
+  save as v4 manifests with a per-node device array; serving one
+  requires the same --devices list, and all-GPU plans stay byte-stable.
+
   serve --feedback on closes the optimize->serve loop into a
   self-tuning server: every executed batch feeds its measured service
   time into a drift detector against the oracle's predicted cost;
@@ -216,8 +232,14 @@ fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
 
 fn build_context(cfg: &RunConfig) -> anyhow::Result<OptimizerContext> {
     let db = CostDb::load_or_default(&cfg.db_path);
+    let multi_device = cfg.devices.len() > 1;
     let provider: Box<dyn eadgo::profiler::CostProvider> = match cfg.provider.as_str() {
+        "sim" if multi_device => Box::new(SimHeteroProvider::new(cfg.seed)),
         "sim" => Box::new(SimV100Provider::new(cfg.seed)),
+        "cpu" if multi_device => anyhow::bail!(
+            "--devices {} needs the sim provider; the cpu provider measures one real device",
+            cfg.devices.join(",")
+        ),
         "cpu" => Box::new(CpuProvider::new(None)),
         other => anyhow::bail!("unknown provider `{other}` (sim|cpu)"),
     };
@@ -268,8 +290,15 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         "--save-frontier requires --frontier N"
     );
     anyhow::ensure!(args.get("batches").is_none(), "--batches requires --frontier N");
+    // Single-device runs keep the historical header byte-for-byte; the
+    // devices note only appears when placement is actually in play.
+    let dev_note = if cfg.devices.len() > 1 {
+        format!(", devices={}", cfg.devices.join("+"))
+    } else {
+        String::new()
+    };
     println!(
-        "optimizing {} ({} nodes) for {} (alpha={}, provider={}, threads={}, dvfs={})",
+        "optimizing {} ({} nodes) for {} (alpha={}, provider={}{dev_note}, threads={}, dvfs={})",
         cfg.model,
         g0.runtime_node_count(),
         objective.describe(),
@@ -297,7 +326,9 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         -100.0 * res.energy_savings(),
         -100.0 * res.time_savings(),
     );
-    if !matches!(scfg.dvfs, eadgo::search::DvfsMode::Off) {
+    if !matches!(scfg.dvfs, eadgo::search::DvfsMode::Off)
+        || res.assignment.uses_non_gpu_device()
+    {
         println!("plan frequency: {}", eadgo::report::describe_freqs(&res.assignment));
     }
     println!(
@@ -501,7 +532,9 @@ fn cmd_constrain(args: &Args) -> anyhow::Result<()> {
             f3(budget),
             f3(r.result.cost.energy_j)
         );
-        if !matches!(cfg.dvfs, eadgo::search::DvfsMode::Off) {
+        if !matches!(cfg.dvfs, eadgo::search::DvfsMode::Off)
+            || r.result.assignment.uses_non_gpu_device()
+        {
             println!("plan frequency: {}", eadgo::report::describe_freqs(&r.result.assignment));
         }
     }
@@ -686,6 +719,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let adaptive = args.flag("adaptive");
     let frontier = serve_frontier_source(args, &cfg, &ctx, &reg)?;
     anyhow::ensure!(!frontier.is_empty(), "no plan to serve");
+    // Placement guard: a mixed-device plan priced on a single-device cost
+    // grid would silently drop its transfer and DLA terms — reject it and
+    // tell the user which --devices list reproduces the plan's grid.
+    let missing = eadgo::runtime::manifest::unsupported_devices(&frontier, &cfg.devices);
+    if !missing.is_empty() {
+        let mut want = cfg.devices.clone();
+        want.extend(missing.iter().cloned());
+        anyhow::bail!(
+            "plan places nodes on device(s) [{}] the serving context does not provide — \
+             re-run with --devices {}",
+            missing.join(", "),
+            want.join(",")
+        );
+    }
     if adaptive && frontier.len() == 1 {
         println!("note: single-plan frontier — adaptive serving degenerates to fixed-plan");
     }
@@ -788,10 +835,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         Some(path) => {
             let path = std::path::Path::new(path);
             anyhow::ensure!(path.exists(), "--truth-db {}: file not found", path.display());
+            // The truth oracle must span the same device grid as the
+            // serving context, or mixed-device plans would be priced
+            // without their DLA and transfer terms.
+            let truth_provider: Box<dyn eadgo::profiler::CostProvider> =
+                if cfg.devices.len() > 1 {
+                    Box::new(SimHeteroProvider::new(cfg.seed))
+                } else {
+                    Box::new(SimV100Provider::new(cfg.seed))
+                };
             let truth = eadgo::cost::CostOracle::new(
                 eadgo::algo::AlgorithmRegistry::new(),
                 CostDb::load_or_default(path),
-                Box::new(SimV100Provider::new(cfg.seed)),
+                truth_provider,
             );
             let per_batch_ms = points
                 .iter()

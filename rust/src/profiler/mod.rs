@@ -15,7 +15,7 @@
 
 use crate::algo::{Algorithm, AlgorithmRegistry};
 use crate::cost::{CostDb, NodeCost};
-use crate::energysim::{node_work, EnergyModel, FreqId, FreqState, Work};
+use crate::energysim::{node_work, DeviceId, EnergyModel, FreqId, FreqState, LinkModel, Work};
 use crate::engine::exec::execute_node;
 use crate::engine::pjrt::PjrtEngine;
 use crate::graph::{Graph, OpKind, TensorShape};
@@ -39,6 +39,23 @@ pub trait CostProvider: Send + Sync {
     /// `FreqId::NOMINAL` measurements are meaningful.
     fn freq_states(&self) -> Vec<FreqState> {
         Vec::new()
+    }
+
+    /// The devices this provider can measure, each with its own DVFS table
+    /// (same convention as [`CostProvider::freq_states`]: ascending, last =
+    /// nominal). Default: one entry — the primary GPU with
+    /// `freq_states()` — so single-device providers are untouched by the
+    /// placement axis. Heterogeneous providers override this; `DeviceId::GPU`
+    /// must always be the first entry.
+    fn device_states(&self) -> Vec<(DeviceId, Vec<FreqState>)> {
+        vec![(DeviceId::GPU, self.freq_states())]
+    }
+
+    /// The link model charged when a tensor crosses between two of this
+    /// provider's devices. `None` (the default) means the provider exposes a
+    /// single device and no transfer is ever charged.
+    fn link_model(&self) -> Option<LinkModel> {
+        None
     }
 
     /// Measure one `(signature, algorithm)` pair at the given DVFS state.
@@ -86,6 +103,77 @@ impl CostProvider for SimV100Provider {
     ) -> NodeCost {
         let w = node_work(op, in_shapes, out_shapes);
         let c = self.model.measured_cost_at(sig, &w, algo, freq);
+        NodeCost { time_ms: c.time_ms, power_w: c.power_w }
+    }
+}
+
+/// Simulated heterogeneous board: the V100 plus a DLA-like low-power block
+/// behind a shared-DRAM link. Measurements route by the packed device bits
+/// of the requested [`FreqId`]; each device model sees only its device-local
+/// state, so GPU measurements are bit-identical to [`SimV100Provider`]'s.
+pub struct SimHeteroProvider {
+    /// Per-device analytic models, indexed by `DeviceId` order (GPU first).
+    pub models: Vec<(DeviceId, EnergyModel)>,
+    /// Transfer cost charged at device boundaries.
+    pub link: LinkModel,
+}
+
+impl SimHeteroProvider {
+    /// Build a GPU+DLA provider. The GPU model uses `seed` exactly as
+    /// [`SimV100Provider::new`] does; the DLA model derives a distinct seed
+    /// so the two devices draw independent measurement noise.
+    pub fn new(seed: u64) -> SimHeteroProvider {
+        SimHeteroProvider {
+            models: vec![
+                (DeviceId::GPU, EnergyModel::v100(seed)),
+                (DeviceId::DLA, EnergyModel::dla(seed.wrapping_add(0x0D1A))),
+            ],
+            link: LinkModel::shared_dram(),
+        }
+    }
+
+    fn model_for(&self, dev: DeviceId) -> &EnergyModel {
+        self.models
+            .iter()
+            .find(|(d, _)| *d == dev)
+            .map(|(_, m)| m)
+            .unwrap_or_else(|| panic!("no model for device `{}`", dev.name()))
+    }
+}
+
+impl CostProvider for SimHeteroProvider {
+    fn provider_name(&self) -> String {
+        let names: Vec<&str> = self.models.iter().map(|(_, m)| m.spec.name.as_str()).collect();
+        names.join("+")
+    }
+
+    fn freq_states(&self) -> Vec<FreqState> {
+        // The legacy single-device view is the GPU.
+        self.model_for(DeviceId::GPU).spec.freq_states.clone()
+    }
+
+    fn device_states(&self) -> Vec<(DeviceId, Vec<FreqState>)> {
+        self.models.iter().map(|(d, m)| (*d, m.spec.freq_states.clone())).collect()
+    }
+
+    fn link_model(&self) -> Option<LinkModel> {
+        Some(self.link)
+    }
+
+    fn measure(
+        &self,
+        sig: &str,
+        op: &OpKind,
+        in_shapes: &[TensorShape],
+        out_shapes: &[TensorShape],
+        algo: Algorithm,
+        freq: FreqId,
+    ) -> NodeCost {
+        let model = self.model_for(freq.device());
+        let w = node_work(op, in_shapes, out_shapes);
+        // Strip the device bits: each model is device-local, so its DVFS
+        // table lookups and jitter keys match a single-device provider's.
+        let c = model.measured_cost_at(sig, &w, algo, freq.local());
         NodeCost { time_ms: c.time_ms, power_w: c.power_w }
     }
 }
@@ -315,6 +403,37 @@ mod tests {
         ensure_profiled(&g, &reg, &mut db1, &SimV100Provider::new(7)).unwrap();
         ensure_profiled(&g, &reg, &mut db2, &SimV100Provider::new(7)).unwrap();
         assert_eq!(db1.to_json().to_string_compact(), db2.to_json().to_string_compact());
+    }
+
+    #[test]
+    fn hetero_provider_routes_by_device_and_matches_v100_on_gpu() {
+        let g = small_graph();
+        let shapes = g.infer_shapes().unwrap();
+        let sig = g.node_signature(crate::graph::NodeId(2), &shapes);
+        let node = g.node(crate::graph::NodeId(2));
+        let in_shapes: Vec<TensorShape> =
+            node.inputs.iter().map(|p| shapes[p.node.0][p.port].clone()).collect();
+        let out_shapes = &shapes[2];
+        let v100 = SimV100Provider::new(7);
+        let hetero = SimHeteroProvider::new(7);
+        for freq in [FreqId::NOMINAL, FreqId(900)] {
+            let a = v100.measure(&sig, &node.op, &in_shapes, out_shapes, Algorithm::ConvDirect, freq);
+            let b = hetero.measure(&sig, &node.op, &in_shapes, out_shapes, Algorithm::ConvDirect, freq);
+            assert_eq!(a.time_ms.to_bits(), b.time_ms.to_bits(), "GPU route must be bit-identical");
+            assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
+        }
+        let dla_nom = FreqId::on(DeviceId::DLA, 0);
+        let d = hetero.measure(&sig, &node.op, &in_shapes, out_shapes, Algorithm::ConvDirect, dla_nom);
+        let g_cost = hetero.measure(&sig, &node.op, &in_shapes, out_shapes, Algorithm::ConvDirect, FreqId::NOMINAL);
+        assert!(d.time_ms > g_cost.time_ms, "DLA is slower");
+        assert!(d.time_ms * d.power_w < g_cost.time_ms * g_cost.power_w, "DLA is cheaper on energy");
+        // Two devices, GPU first; link model present.
+        let devs = hetero.device_states();
+        assert_eq!(devs.len(), 2);
+        assert_eq!(devs[0].0, DeviceId::GPU);
+        assert!(hetero.link_model().is_some());
+        assert!(v100.link_model().is_none());
+        assert_eq!(v100.device_states().len(), 1);
     }
 
     #[test]

@@ -144,6 +144,14 @@ const FRONTIER_VERSION: i64 = 2;
 /// default a missing `batch` to 1, so v2 files remain readable forever.
 const FRONTIER_VERSION_BATCHED: i64 = 3;
 
+/// Frontier-manifest version once any plan places a node off the GPU: v4
+/// plan entries embed the per-node `device` array (written/parsed by
+/// [`crate::graph::serde::plan_to_json`] / `plan_from_json`, which rejects
+/// unknown device names). Loaders treat a missing `device` as all-GPU, so
+/// v2/v3 files remain readable forever; all-single-device frontiers keep
+/// emitting v2/v3 byte-identically.
+const FRONTIER_VERSION_PLACED: i64 = 4;
+
 fn cost_to_json(c: &GraphCost) -> Json {
     let mut o = Json::obj();
     o.set("time_ms", c.time_ms).set("energy_j", c.energy_j).set("freq_mhz", c.freq.0 as i64);
@@ -165,13 +173,22 @@ fn cost_from_json(v: &Json) -> anyhow::Result<GraphCost> {
 /// plus its probe weight and oracle cost estimate. Frontiers whose points
 /// are all `batch = 1` emit the v2 format with no `batch` keys — byte
 /// identical to the pre-batch-axis writer; any `batch > 1` point upgrades
-/// the document to v3, where every plan entry carries its batch.
+/// the document to v3, where every plan entry carries its batch; any plan
+/// placing a node off the GPU upgrades it to v4, where mixed entries
+/// carry per-node `device` arrays.
 pub fn frontier_to_json(f: &PlanFrontier) -> Json {
     let batched = f.points().iter().any(|p| p.batch > 1);
+    let placed = f.points().iter().any(|p| p.assignment.uses_non_gpu_device());
     let mut root = Json::obj();
     root.set(
         "version",
-        if batched { FRONTIER_VERSION_BATCHED } else { FRONTIER_VERSION },
+        if placed {
+            FRONTIER_VERSION_PLACED
+        } else if batched {
+            FRONTIER_VERSION_BATCHED
+        } else {
+            FRONTIER_VERSION
+        },
     )
     .set("kind", "plan_frontier");
     root.set(
@@ -270,6 +287,25 @@ pub fn save_frontier_noted(path: &Path, f: &PlanFrontier, note: &str) -> anyhow:
 /// frontier (see [`frontier_from_json`]).
 pub fn load_frontier(path: &Path, reg: &AlgorithmRegistry) -> anyhow::Result<PlanFrontier> {
     frontier_from_json(&json::read_file(path)?, reg)
+}
+
+/// Serve-side placement guard: every device the frontier's plans place
+/// nodes on must be provided by the serving context. Returns the device
+/// names used by some plan but missing from `provided` (empty when the
+/// frontier is servable). A mixed-device plan priced against a
+/// single-device cost grid would be silently mis-costed — callers should
+/// reject instead.
+pub fn unsupported_devices(f: &PlanFrontier, provided: &[String]) -> Vec<String> {
+    let mut missing: Vec<String> = Vec::new();
+    for p in f.points() {
+        for d in p.assignment.devices_used() {
+            let name = d.name();
+            if !provided.iter().any(|s| s == name) && !missing.iter().any(|s| s == name) {
+                missing.push(name.to_string());
+            }
+        }
+    }
+    missing
 }
 
 #[cfg(test)]
@@ -463,6 +499,58 @@ mod tests {
             assert_eq!(graph_hash(&a.graph), graph_hash(&b.graph));
             assert_eq!(a.cost.energy_j.to_bits(), b.cost.energy_j.to_bits());
         }
+    }
+
+    #[test]
+    fn placed_frontier_roundtrips_as_v4_with_device_arrays() {
+        use crate::energysim::DeviceId;
+        use crate::graph::canonical::graph_hash;
+        use crate::graph::OpKind;
+        use crate::models::{self, ModelConfig};
+        let cfg = ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 };
+        let reg = AlgorithmRegistry::new();
+        let g = models::simple::build_cnn(cfg);
+        let gpu = Assignment::default_for(&g, &reg);
+        let conv = g.nodes().find(|(_, n)| matches!(n.op, OpKind::Conv2d { .. })).unwrap().0;
+        let mut mixed = gpu.clone();
+        mixed.set_freq(conv, FreqId::on(DeviceId::DLA, 0));
+        assert!(mixed.uses_non_gpu_device());
+        let f = PlanFrontier::from_points(vec![
+            PlanPoint {
+                graph: g.clone(),
+                assignment: gpu,
+                cost: GraphCost { time_ms: 1.0, energy_j: 250.0, freq: FreqId::NOMINAL },
+                weight: 0.0,
+                batch: 1,
+            },
+            PlanPoint {
+                graph: g,
+                assignment: mixed,
+                cost: GraphCost { time_ms: 2.0, energy_j: 90.0, freq: FreqId::NOMINAL },
+                weight: 1.0,
+                batch: 1,
+            },
+        ]);
+        assert_eq!(f.len(), 2);
+        let j = frontier_to_json(&f);
+        assert_eq!(j.get("version").and_then(Json::as_usize), Some(4));
+        let plans = j.get("plans").and_then(Json::as_arr).unwrap();
+        // Only the mixed plan carries a device array; the all-GPU entry
+        // stays in the legacy shape.
+        assert!(plans[0].get("device").is_none());
+        assert!(plans[1].get("device").is_some());
+        let back = frontier_from_json(&j, &AlgorithmRegistry::new()).unwrap();
+        assert_eq!(back.len(), f.len());
+        for (a, b) in f.points().iter().zip(back.points()) {
+            assert_eq!(graph_hash(&a.graph), graph_hash(&b.graph));
+            assert_eq!(a.assignment.distance(&b.assignment), 0);
+        }
+        assert_eq!(back.points()[1].assignment.freq(conv), FreqId::on(DeviceId::DLA, 0));
+        // Single-device frontiers never pick up the new version.
+        assert_eq!(
+            frontier_to_json(&tiny_frontier()).get("version").and_then(Json::as_usize),
+            Some(2)
+        );
     }
 
     #[test]

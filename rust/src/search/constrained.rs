@@ -145,23 +145,28 @@ fn finish_constrained(
     Ok(ConstrainedResult { result, weight, trace, feasible: true })
 }
 
-/// DVFS refinement of a plan against a latency budget: keep the algorithm
-/// assignment frozen and move only frequency states — "frequency as the
-/// cheapest lever".
+/// State refinement of a plan against a latency budget: keep the
+/// algorithm assignment frozen and move only frequency/device states —
+/// "frequency as the cheapest lever", generalized to "migration as the
+/// cheapest feasibility lever" when the oracle carries extra devices.
 ///
 /// - `PerGraph`: try every uniform state and keep the lowest-energy
 ///   feasible one.
-/// - `PerNode`: two greedy phases. If the plan overshoots the budget,
-///   first *raise* clocks — each step takes the move with the best
-///   time-saved-per-energy-added ratio — until the plan fits (or no move
-///   saves time). Then *lower* clocks — each node takes the energy-minimal
-///   state whose incremental cost keeps the plan inside the budget
-///   (memory-bound nodes down-clock for free) — until a fixpoint.
+/// - Otherwise (per-node DVFS, or `--dvfs off` with extra devices): two
+///   greedy phases over the full per-node state set. If the plan
+///   overshoots the budget, first take time-saving moves — each step the
+///   one with the best time-saved-per-energy-added ratio; with extra
+///   devices this includes migrating a node off a slow device — until
+///   the plan fits (or no move saves time). Then take energy-saving
+///   moves — each node the energy-minimal state (down-clock or cross-
+///   device migration, transfer costs included via the overlay-aware
+///   `eval_swap`) whose incremental cost keeps the plan inside the
+///   budget — until a fixpoint.
 ///
-/// Returns `None` when DVFS is off, the device has no states, or no
-/// frequency moves can make the plan feasible; otherwise the refined
-/// (assignment, cost). Deterministic: nodes in id order, states in table
-/// order, strict-improvement acceptance.
+/// Returns `None` when the state set is trivial (DVFS off with no extra
+/// devices, or a stateless device) or no move can make the plan feasible;
+/// otherwise the refined (assignment, cost). Deterministic: nodes in id
+/// order, states in table order, strict-improvement acceptance.
 pub fn refine_frequency_to_budget(
     oracle: &CostOracle,
     g: &Graph,
@@ -169,14 +174,14 @@ pub fn refine_frequency_to_budget(
     time_budget_ms: f64,
     mode: DvfsMode,
 ) -> anyhow::Result<Option<(Assignment, GraphCost)>> {
-    let freqs = oracle.dvfs_freqs();
-    if mode == DvfsMode::Off || freqs.is_empty() {
+    // The same per-node state set the search itself ran over: nominal +
+    // DVFS states (mode on) + extra-device states. A single-entry set
+    // means there is nothing to move.
+    let all = super::outer::search_freqs(mode, oracle);
+    if all.len() <= 1 {
         return Ok(None);
     }
     let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
-    let mut all = Vec::with_capacity(freqs.len() + 1);
-    all.push(FreqId::NOMINAL);
-    all.extend_from_slice(freqs);
     let (table, _) = oracle.table_for_freqs(g, &shapes, &all);
 
     match mode {
@@ -194,7 +199,7 @@ pub fn refine_frequency_to_budget(
             }
             Ok(best)
         }
-        DvfsMode::PerNode => {
+        DvfsMode::PerNode | DvfsMode::Off => {
             let mut af = a.clone();
             let mut cost = table.eval(&af);
             // Phase 1 — budget binds: raise clocks, cheapest energy per
@@ -258,7 +263,6 @@ pub fn refine_frequency_to_budget(
             cost.freq = af.uniform_freq();
             Ok(Some((af, cost)))
         }
-        DvfsMode::Off => unreachable!("handled above"),
     }
 }
 

@@ -52,6 +52,18 @@
 //! Non-additive objectives (`Power`, `Product`, d≥2) keep the literal
 //! sweep of Algorithm 2 ([`inner_search`]'s general path).
 //!
+//! ## The boundary-aware (multi-device) path
+//!
+//! When the table carries a transfer overlay (`--devices gpu,dla`:
+//! adjacent nodes on different devices pay a per-edge transfer cost), the
+//! additive objective is separable everywhere *except* across device
+//! boundaries. [`inner_search_incremental`] then routes to a dedicated
+//! pass: per-row argmin initialization (the separable optimum, transfer
+//! terms ignored) followed by deterministic coordinate descent through the
+//! transfer-aware `eval_swap` until fixpoint. The pass is
+//! start-independent, preserving the delta/full and warm/cold
+//! bit-identity contracts on multi-device tables.
+//!
 //! The inner search is agnostic to how its table was built: the outer
 //! search's delta engine assembles candidate tables by carrying untouched
 //! rows over from the parent (`CostOracle::delta_table_for_freqs`), and
@@ -237,6 +249,15 @@ pub fn inner_search_incremental(
         "separable inner search requires an additive objective (got {})",
         cf.describe()
     );
+    if table.has_links() {
+        // Multi-device table: transfer terms couple adjacent nodes, so the
+        // objective is no longer separable per node and warm dirty-scoping
+        // is unsound (a clean node may want to migrate because a dirty
+        // neighbor did). Run the boundary-aware pass instead — it is
+        // start-independent, so warm/cold and delta/full engines still
+        // return bit-identical plans.
+        return boundary_aware_search(table, cf, start, memo);
+    }
     let mut a = start;
     let mut evals = 0u64;
     let mut nodes = 0u64;
@@ -273,6 +294,82 @@ pub fn inner_search_incremental(
         nodes,
         swept,
     })
+}
+
+/// The transfer-aware inner search for multi-device tables (additive
+/// objectives, `table.has_links()`).
+///
+/// Phase 1 seeds every tunable node with its **canonical per-row argmin**
+/// — the node-separable optimum, ignoring transfer terms (memoizable: the
+/// argmin is still a pure function of the row and the objective). Phase 2
+/// repairs the boundaries with deterministic coordinate descent: sweep
+/// nodes in ascending id, try every (algorithm, frequency/device) option
+/// through the transfer-aware [`GraphCostTable::eval_swap`] (O(degree)
+/// boundary adjustment), accept strict improvements, repeat to fixpoint.
+///
+/// The result is a pure function of (table, objective) — `start` only
+/// seeds non-tunable nodes — which is what keeps the delta/full and
+/// warm/cold engine contracts intact for multi-device tables: identical
+/// tables (carried rows are shared `Arc`s, overlays edge-identical) walk
+/// identical numbers. Descent over a finite lattice with strict
+/// improvement always terminates; the sweep cap is a defensive valve
+/// shared with the general path.
+fn boundary_aware_search(
+    table: &GraphCostTable,
+    cf: &CostFunction,
+    start: Assignment,
+    memo: Option<&CostOracle>,
+) -> anyhow::Result<InnerResult> {
+    let ids: Vec<NodeId> = table
+        .costed_ids()
+        .filter(|id| table.option_count(*id) > 1)
+        .collect();
+    let mut a = start;
+    let mut evals = 0u64;
+    for &id in &ids {
+        let (f, algo, scanned) = match memo {
+            Some(oracle) => oracle
+                .argmin_for(table, id, cf)
+                .expect("additive objective has an argmin key"),
+            None => table.scan_argmin(id, cf),
+        };
+        evals += scanned;
+        a.set(id, algo);
+        a.set_freq(id, f);
+    }
+    let mut cost = table.eval(&a);
+    let mut value = cf.eval(&cost);
+    let mut sweeps = 0usize;
+    loop {
+        sweeps += 1;
+        let mut changed = false;
+        for &id in &ids {
+            let cur_algo = a.get(id).unwrap();
+            let cur_f = a.freq(id);
+            for (f, slab) in table.freq_options(id) {
+                for &(algo, _) in slab.iter() {
+                    if algo == cur_algo && *f == cur_f {
+                        continue;
+                    }
+                    let cand = table.eval_swap(cost, &a, id, algo, *f)?;
+                    evals += 1;
+                    let v = cf.eval(&cand);
+                    if v < value {
+                        a.set(id, algo);
+                        a.set_freq(id, *f);
+                        cost = cand;
+                        value = v;
+                        changed = true;
+                    }
+                }
+            }
+        }
+        if !changed || sweeps > 10_000 {
+            break;
+        }
+    }
+    let n = ids.len() as u64;
+    Ok(InnerResult { assignment: a, cost, sweeps, evals, warm: false, nodes: n, swept: n })
 }
 
 /// Exhaustive (algorithm, frequency) enumeration (ground truth for tests;

@@ -426,36 +426,36 @@ fn evaluate_candidate(
     // Single shape inference per candidate — this IS the validation, and
     // the profile/table/assignment steps below all reuse it (§Perf).
     let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!("invalid candidate: {e}"))?;
-    let freqs = oracle.dvfs_freqs();
-    if cfg.dvfs == DvfsMode::Off || freqs.is_empty() {
+    let all = search_freqs(cfg.dvfs, oracle);
+    if all.len() <= 1 {
         let (table, profiled) = oracle.table_for_with(g, &shapes);
         let start = Assignment::default_for_with(g, &shapes, oracle.reg());
         let inner = run_inner(&table, start, cf, cfg, oracle, None)?;
         return Ok((inner, profiled));
     }
-    match cfg.dvfs {
-        DvfsMode::PerGraph => {
-            // One full inner search per state; NOMINAL goes first so ties
-            // resolve to the nominal clock (and the off-mode plan).
-            let base = Assignment::default_for_with(g, &shapes, oracle.reg());
-            let mut profiled = 0usize;
-            let states = std::iter::once(FreqId::NOMINAL).chain(freqs.iter().copied()).map(|f| {
-                let (table, p) = oracle.table_for_freqs(g, &shapes, &[f]);
-                profiled += p;
-                (f, table)
-            });
-            let inner = best_state_inner(states, &base, cf, cfg, oracle)?;
-            Ok((inner, profiled))
-        }
-        DvfsMode::PerNode => {
-            let all = search_freqs(cfg.dvfs, oracle);
-            let (table, profiled) = oracle.table_for_freqs(g, &shapes, &all);
-            let start = Assignment::default_for_with(g, &shapes, oracle.reg());
-            let inner = run_inner(&table, start, cf, cfg, oracle, None)?;
-            Ok((inner, profiled))
-        }
-        DvfsMode::Off => unreachable!("handled above"),
+    if cfg.dvfs == DvfsMode::PerGraph {
+        // One full inner search per state; NOMINAL goes first so ties
+        // resolve to the nominal GPU clock (and the off-mode plan). Extra
+        // devices contribute uniform-placement states, so every per-state
+        // table stays single-device (transfer-free).
+        let base = Assignment::default_for_with(g, &shapes, oracle.reg());
+        let mut profiled = 0usize;
+        let states = all.iter().map(|&f| {
+            let (table, p) = oracle.table_for_freqs(g, &shapes, &[f]);
+            profiled += p;
+            (f, table)
+        });
+        let inner = best_state_inner(states, &base, cf, cfg, oracle)?;
+        return Ok((inner, profiled));
     }
+    // Per-node joint search over the whole (algorithm, frequency, device)
+    // option space — the oracle attaches the transfer overlay when the
+    // state set spans devices, and the inner search runs its
+    // boundary-aware pass on top of the separable argmins.
+    let (table, profiled) = oracle.table_for_freqs(g, &shapes, &all);
+    let start = Assignment::default_for_with(g, &shapes, oracle.reg());
+    let inner = run_inner(&table, start, cf, cfg, oracle, None)?;
+    Ok((inner, profiled))
 }
 
 /// Evaluate one candidate **delta** against its parent's cached artifacts
@@ -474,38 +474,36 @@ fn evaluate_candidate_delta(
     cf: &CostFunction,
     cfg: &SearchConfig,
 ) -> anyhow::Result<(InnerResult, usize)> {
-    let freqs = oracle.dvfs_freqs();
-    if cfg.dvfs == DvfsMode::Off || freqs.is_empty() {
+    let all = search_freqs(cfg.dvfs, oracle);
+    if all.len() <= 1 {
         let cand = oracle.delta_table_for_freqs(base, view, &[FreqId::NOMINAL]);
         let warm = cand.warm.as_ref().map(|w| (w, &cand.dirty[..]));
         let inner = run_inner(&cand.table, cand.assignment, cf, cfg, oracle, warm)?;
         return Ok((inner, cand.measured));
     }
-    let all = search_freqs(cfg.dvfs, oracle);
-    match cfg.dvfs {
-        DvfsMode::PerGraph => {
-            // Resolve the candidate's dirty rows at every state once; the
-            // per-state tables the legacy path built are recovered by
-            // restricting the slabs (Arc clones — same rows, same order).
-            // No warm start here (drop `converged` so the remap is never
-            // built): the parent's converged plan is pinned to its own
-            // winning state, but the per-state searches answer from the
-            // argmin memo (carried restricted rows are shared Arcs), so
-            // carried nodes still never re-scan.
-            let base = DeltaBase { converged: None, ..*base };
-            let cand = oracle.delta_table_for_freqs(&base, view, &all);
-            let states = all.iter().map(|&f| (f, cand.table.restrict_to_freq(f)));
-            let inner = best_state_inner(states, &cand.assignment, cf, cfg, oracle)?;
-            Ok((inner, cand.measured))
-        }
-        DvfsMode::PerNode => {
-            let cand = oracle.delta_table_for_freqs(base, view, &all);
-            let warm = cand.warm.as_ref().map(|w| (w, &cand.dirty[..]));
-            let inner = run_inner(&cand.table, cand.assignment, cf, cfg, oracle, warm)?;
-            Ok((inner, cand.measured))
-        }
-        DvfsMode::Off => unreachable!("handled above"),
+    if cfg.dvfs == DvfsMode::PerGraph {
+        // Resolve the candidate's dirty rows at every state once; the
+        // per-state tables the legacy path built are recovered by
+        // restricting the slabs (Arc clones — same rows, same order).
+        // No warm start here (drop `converged` so the remap is never
+        // built): the parent's converged plan is pinned to its own
+        // winning state, but the per-state searches answer from the
+        // argmin memo (carried restricted rows are shared Arcs), so
+        // carried nodes still never re-scan.
+        let base = DeltaBase { converged: None, ..*base };
+        let cand = oracle.delta_table_for_freqs(&base, view, &all);
+        let states = all.iter().map(|&f| (f, cand.table.restrict_to_freq(f)));
+        let inner = best_state_inner(states, &cand.assignment, cf, cfg, oracle)?;
+        return Ok((inner, cand.measured));
     }
+    // Per-node joint (algorithm, frequency, device) search — same
+    // boundary-aware inner path as the full-rebuild twin; the delta table
+    // carries the parent's untouched rows and rebuilds the transfer
+    // overlay edge-for-edge identical to a full build.
+    let cand = oracle.delta_table_for_freqs(base, view, &all);
+    let warm = cand.warm.as_ref().map(|w| (w, &cand.dirty[..]));
+    let inner = run_inner(&cand.table, cand.assignment, cf, cfg, oracle, warm)?;
+    Ok((inner, cand.measured))
 }
 
 /// Per-graph DVFS evaluation core: one pinned inner search per frequency
@@ -596,28 +594,42 @@ fn run_inner(
 
 type EvalOutcome = anyhow::Result<(InnerResult, usize)>;
 
-/// The search's DVFS frequency set: the nominal clock, plus every device
-/// state when the frequency axis is on. One home for the list — parent
-/// carry-over tables, candidate delta evaluation, and the legacy rebuild
-/// path must all build at the same set, or the oracle's carry-over would
-/// silently fall back to per-row re-resolves.
-fn search_freqs(dvfs: DvfsMode, oracle: &CostOracle) -> Vec<FreqId> {
+/// The search's frequency/placement state set: the GPU nominal clock,
+/// plus the GPU DVFS states when the frequency axis is on, plus — when the
+/// oracle carries extra devices (`--devices gpu,dla`) — each device's
+/// packed states (nominal always; sub-nominal clocks only with DVFS on,
+/// so `--dvfs off --devices gpu,dla` searches pure placement at nominal
+/// clocks). One home for the list — parent carry-over tables, candidate
+/// delta evaluation, and the legacy rebuild path must all build at the
+/// same set, or the oracle's carry-over would silently fall back to
+/// per-row re-resolves.
+pub(crate) fn search_freqs(dvfs: DvfsMode, oracle: &CostOracle) -> Vec<FreqId> {
     let mut freqs = vec![FreqId::NOMINAL];
     if dvfs != DvfsMode::Off {
         freqs.extend_from_slice(oracle.dvfs_freqs());
     }
+    for (_, dev_freqs) in oracle.device_freqs() {
+        if dvfs == DvfsMode::Off {
+            // Device nominal only: placement without the frequency axis.
+            freqs.push(dev_freqs[0]);
+        } else {
+            freqs.extend_from_slice(dev_freqs);
+        }
+    }
     freqs
 }
 
-/// The frequency component of the candidate dedup identity: a hash of the
-/// search's DVFS mode and frequency domain. Mixing it into the visited-set
-/// key means a graph seen under one frequency search space can never be
-/// conflated with the same graph under another. It is deliberately NOT
-/// per-parent-state: candidate evaluation is frequency-context-free (each
-/// candidate re-derives its own best states from scratch), so within one
-/// run the component is constant and every graph is evaluated exactly
-/// once. In `--dvfs off` the keying is a bijection of the pre-DVFS one,
-/// so dedup decisions are bit-for-bit unchanged.
+/// The frequency/placement component of the candidate dedup identity: a
+/// hash of the search's DVFS mode and its full state set (GPU DVFS states
+/// plus any extra-device states). Mixing it into the visited-set key means
+/// a graph seen under one search space can never be conflated with the
+/// same graph under another. It is deliberately NOT per-parent-state:
+/// candidate evaluation is frequency-context-free (each candidate
+/// re-derives its own best states from scratch), so within one run the
+/// component is constant and every graph is evaluated exactly once. With
+/// a single-device oracle the folded set is exactly the pre-placement
+/// one — packed device bits are all zero — so dedup decisions are
+/// bit-for-bit unchanged.
 fn freq_domain_hash(cfg: &SearchConfig, oracle: &CostOracle) -> u64 {
     const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
     let mix = |h: u64, x: u64| (h ^ x).wrapping_mul(FNV_PRIME);
@@ -627,10 +639,10 @@ fn freq_domain_hash(cfg: &SearchConfig, oracle: &CostOracle) -> u64 {
         DvfsMode::PerNode => 2,
     };
     let mut h = mix(0xCBF2_9CE4_8422_2325, mode);
-    if cfg.dvfs != DvfsMode::Off {
-        for f in oracle.dvfs_freqs() {
-            h = mix(h, f.0 as u64);
-        }
+    // skip(1) drops the leading NOMINAL — with no extra devices this folds
+    // exactly `oracle.dvfs_freqs()` (the historical keying, unchanged).
+    for f in search_freqs(cfg.dvfs, oracle).iter().skip(1) {
+        h = mix(h, f.0 as u64);
     }
     h
 }
@@ -683,14 +695,18 @@ pub fn outer_search(
     // (sites, enqueued, objective gain) per rule, name-ordered.
     let mut rule_acc: BTreeMap<&'static str, (usize, usize, f64)> = BTreeMap::new();
 
+    // The frequency/placement state set this run searches over — shared
+    // by the origin evaluation, candidate tables, and the dedup keying.
+    let mode_freqs = search_freqs(cfg.dvfs, oracle);
     // Inner search on the origin reuses the baseline table: no second
-    // profile/table pass for g0. With DVFS enabled the origin gets the
-    // full frequency-aware evaluation instead, so the untransformed graph
-    // competes on the same (G, A, f) footing as every candidate. A
-    // frontier probe's warm hint (the previous probe's origin plan) seeds
-    // the start — result-neutral for additive objectives, but it lets the
-    // economy counters attribute the origin run correctly.
-    let inner0 = if cfg.dvfs == DvfsMode::Off || oracle.dvfs_freqs().is_empty() {
+    // profile/table pass for g0. With DVFS or extra devices enabled the
+    // origin gets the full state-aware evaluation instead, so the
+    // untransformed graph competes on the same (G, A, f, device) footing
+    // as every candidate. A frontier probe's warm hint (the previous
+    // probe's origin plan) seeds the start — result-neutral for additive
+    // objectives, but it lets the economy counters attribute the origin
+    // run correctly.
+    let inner0 = if mode_freqs.len() <= 1 {
         // The hint only applies when an incremental inner search will
         // actually run — with the inner search disabled the start IS the
         // plan, and a hint would leak the previous probe's choices into
@@ -723,9 +739,6 @@ pub fn outer_search(
 
     if cfg.enable_outer && !ctx.rules.is_empty() {
         let freq_domain = freq_domain_hash(cfg, oracle);
-        // The frequency set candidate tables are built at (and parent
-        // tables carry over across): nominal-only unless DVFS is on.
-        let mode_freqs = search_freqs(cfg.dvfs, oracle);
         // Wave 1 holds exactly the origin, whose carry-over base (table +
         // default assignment) the Baseline already built when the
         // frequency sets coincide — seed it instead of rebuilding.

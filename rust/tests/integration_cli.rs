@@ -253,7 +253,7 @@ fn optimize_frontier_then_serve_adaptive() {
         "--db",
         db.to_str().unwrap(),
     ]));
-    assert!(out.contains("Pareto plan frontier"), "{out}");
+    assert!(out.contains("Pareto operating-point frontier"), "{out}");
     assert!(out.contains("frontier ("), "{out}");
     assert!(plans.exists());
 
@@ -283,4 +283,142 @@ fn serve_adaptive_without_frontier_errors() {
     assert!(!out.status.success());
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("--adaptive needs a frontier"), "{err}");
+}
+
+#[test]
+fn devices_gpu_plans_are_byte_identical_to_flag_omitted() {
+    // `--devices gpu` must be a no-op in the strictest sense: the saved
+    // plan and frontier files are byte-for-byte what the flag-free run
+    // writes (the placement axis leaves single-device surfaces untouched).
+    let dir = tmp("devices_ab");
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |tag: &str, devices: Option<&str>| -> (PathBuf, PathBuf) {
+        let plan = dir.join(format!("plan_{tag}.json"));
+        let plans = dir.join(format!("frontier_{tag}.json"));
+        let mut args = vec![
+            "optimize".to_string(),
+            "--model".into(),
+            "simple".into(),
+            "--objective".into(),
+            "energy".into(),
+            "--max-dequeues".into(),
+            "16".into(),
+            "--frontier".into(),
+            "3".into(),
+            "--save-plan".into(),
+            plan.to_str().unwrap().into(),
+            "--save-frontier".into(),
+            plans.to_str().unwrap().into(),
+            "--db".into(),
+            dir.join(format!("db_{tag}.json")).to_str().unwrap().into(),
+        ];
+        if let Some(d) = devices {
+            args.push("--devices".into());
+            args.push(d.into());
+        }
+        run_ok(eadgo().args(&args));
+        (plan, plans)
+    };
+    let (plan_a, frontier_a) = run("bare", None);
+    let (plan_b, frontier_b) = run("gpu", Some("gpu"));
+    assert_eq!(
+        std::fs::read(&plan_a).unwrap(),
+        std::fs::read(&plan_b).unwrap(),
+        "--devices gpu changed the plan file"
+    );
+    assert_eq!(
+        std::fs::read(&frontier_a).unwrap(),
+        std::fs::read(&frontier_b).unwrap(),
+        "--devices gpu changed the frontier file"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn devices_flag_is_validated() {
+    // Unknown device name: strict, with a did-you-mean.
+    let bad = eadgo().args(["optimize", "--model", "simple", "--devices", "gpu,dal"]).output().unwrap();
+    assert!(!bad.status.success());
+    let err = String::from_utf8_lossy(&bad.stderr);
+    assert!(err.contains("unknown device `dal`"), "{err}");
+    assert!(err.contains("did you mean `dla`"), "{err}");
+
+    // The GPU anchors device index 0 and must come first.
+    let bad = eadgo().args(["optimize", "--model", "simple", "--devices", "dla,gpu"]).output().unwrap();
+    assert!(!bad.status.success());
+    let err = String::from_utf8_lossy(&bad.stderr);
+    assert!(err.contains("must start with `gpu`"), "{err}");
+
+    // Placement needs the sim provider: the cpu provider is one device.
+    let bad = eadgo()
+        .args(["optimize", "--model", "simple", "--devices", "gpu,dla", "--provider", "cpu"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    let err = String::from_utf8_lossy(&bad.stderr);
+    assert!(err.contains("needs the sim provider"), "{err}");
+}
+
+#[test]
+fn mixed_device_plan_requires_devices_at_serve_time() {
+    // optimize --devices gpu,dla produces a plan with DLA placements; the
+    // serve-side guard must reject a single-device serving context with an
+    // actionable hint, and accept the full device list.
+    let dir = tmp("devices_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let plan = dir.join("plan.json");
+    let db = dir.join("db.json");
+    let out = run_ok(eadgo().args([
+        "optimize",
+        "--model",
+        "simple",
+        "--objective",
+        "energy",
+        "--devices",
+        "gpu,dla",
+        "--max-dequeues",
+        "20",
+        "--save-plan",
+        plan.to_str().unwrap(),
+        "--db",
+        db.to_str().unwrap(),
+    ]));
+    assert!(out.contains("devices=gpu+dla"), "{out}");
+    let saved = std::fs::read_to_string(&plan).unwrap();
+    assert!(saved.contains("\"device\""), "energy search over gpu,dla placed nothing: {saved}");
+
+    let bare = eadgo()
+        .args([
+            "serve",
+            "--plan",
+            plan.to_str().unwrap(),
+            "--requests",
+            "4",
+            "--artifacts",
+            dir.join("no_artifacts").to_str().unwrap(),
+            "--db",
+            db.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(!bare.status.success(), "serving a DLA plan without --devices must fail");
+    let err = String::from_utf8_lossy(&bare.stderr);
+    assert!(err.contains("does not provide"), "{err}");
+    assert!(err.contains("--devices gpu,dla"), "hint missing: {err}");
+
+    let out = run_ok(eadgo().args([
+        "serve",
+        "--plan",
+        plan.to_str().unwrap(),
+        "--devices",
+        "gpu,dla",
+        "--requests",
+        "4",
+        "--artifacts",
+        dir.join("no_artifacts").to_str().unwrap(),
+        "--db",
+        db.to_str().unwrap(),
+    ]));
+    assert!(out.contains("served 4 requests"), "{out}");
+    std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,405 @@
+//! ISSUE 8 conformance suite: heterogeneous (GPU+DLA) placement.
+//!
+//! The placement axis adds a second device class to the search — per-node
+//! (device, frequency) states, transfer costs at device boundaries, and
+//! migration as a constrained-search feasibility lever. This suite locks
+//! the contract down from four sides:
+//!
+//! 1. **Single-device bit-identity** — plans searched over a GPU-only
+//!    state set carry no device keys and serialize exactly as before the
+//!    placement axis existed (the CLI face of this, `--devices gpu` vs
+//!    flag omitted, is byte-diffed in `integration_cli.rs`).
+//! 2. **Engine-matrix bit-identity on mixed tables** — every
+//!    `delta_eval` × `incremental_inner` combination must return the same
+//!    plan bits when the table spans devices, because the boundary-aware
+//!    inner pass is a start-independent function of (table, objective).
+//! 3. **Placement invariants** — transfer cost is zero iff no edge
+//!    crosses devices; device-uniform assignments conserve the
+//!    single-device totals exactly (no `+ 0.0` drift); `eval_swap`
+//!    agrees bitwise with full re-evaluation across device boundaries;
+//!    budget refinement never returns an infeasible plan while a feasible
+//!    uniform assignment exists.
+//! 4. **The acceptance claim** — at the same latency budget, the GPU+DLA
+//!    search strictly beats the best GPU-only plan on energy on at least
+//!    two zoo models, and the winning plan round-trips through the v4
+//!    manifest.
+
+use eadgo::algo::AlgorithmRegistry;
+use eadgo::cost::{CostDb, CostFunction, CostOracle};
+use eadgo::energysim::{DeviceId, FreqId};
+use eadgo::graph::canonical::graph_hash;
+use eadgo::graph::serde::{plan_from_json, plan_to_json};
+use eadgo::models::{self, ModelConfig};
+use eadgo::profiler::SimHeteroProvider;
+use eadgo::search::{
+    optimize, optimize_with_time_budget, refine_frequency_to_budget, DvfsMode, OptimizerContext,
+    SearchConfig,
+};
+use eadgo::subst::RuleSet;
+
+fn model_cfg() -> ModelConfig {
+    ModelConfig { batch: 1, resolution: 64, width_div: 2, classes: 10 }
+}
+
+/// A search context over the GPU+DLA provider (same seed as
+/// `OptimizerContext::offline_default`, so GPU-side measurements are
+/// bitwise the single-device ones).
+fn hetero_ctx() -> OptimizerContext {
+    OptimizerContext::new(RuleSet::standard(), CostDb::new(), Box::new(SimHeteroProvider::new(7)))
+}
+
+fn hetero_oracle() -> CostOracle {
+    CostOracle::new(AlgorithmRegistry::new(), CostDb::new(), Box::new(SimHeteroProvider::new(7)))
+}
+
+/// The DLA's nominal state — the placement-only (no DVFS) migration target.
+fn dla0() -> FreqId {
+    FreqId::on(DeviceId::DLA, 0)
+}
+
+// -------------------------------------------------------------------------
+// 1. single-device surfaces stay device-free
+// -------------------------------------------------------------------------
+
+#[test]
+fn single_device_plans_carry_no_device_keys() {
+    let g = models::squeezenet::build(model_cfg());
+    let ctx = OptimizerContext::offline_default();
+    let cfg = SearchConfig { max_dequeues: 16, ..Default::default() };
+    let r = optimize(&g, &ctx, &CostFunction::Energy, &cfg).unwrap();
+    let plan = plan_to_json(&r.graph, &r.assignment).to_string_compact();
+    assert!(!plan.contains("\"device\""), "GPU-only plan grew a device key: {plan}");
+    assert!(r.assignment.devices_used() == vec![DeviceId::GPU]);
+
+    // And the frontier manifest stays version 2.
+    let fr = eadgo::search::optimize_frontier(&g, &ctx, &cfg, 3).unwrap();
+    let manifest = eadgo::runtime::manifest::frontier_to_json(&fr.frontier).to_string_compact();
+    assert!(manifest.contains("\"version\":2"), "single-device frontier must stay v2");
+    assert!(!manifest.contains("\"device\""), "single-device frontier grew device keys");
+}
+
+// -------------------------------------------------------------------------
+// 2. engine-matrix bit-identity on multi-device tables
+// -------------------------------------------------------------------------
+
+#[test]
+fn hetero_plans_bit_identical_across_engine_matrix() {
+    // The boundary-aware inner pass ignores warm starts and dirty scoping
+    // (unsound under transfer coupling) and re-derives from the per-row
+    // argmin, so every engine combination must agree bit for bit even
+    // though the objective is non-separable at device boundaries.
+    let run = |model: &str, dvfs: DvfsMode, delta_eval: bool, incremental_inner: bool| {
+        let g = models::by_name(model, model_cfg()).unwrap();
+        let cfg = SearchConfig {
+            max_dequeues: 16,
+            dvfs,
+            delta_eval,
+            incremental_inner,
+            ..Default::default()
+        };
+        let r = optimize(&g, &hetero_ctx(), &CostFunction::Energy, &cfg).unwrap();
+        (
+            graph_hash(&r.graph),
+            plan_to_json(&r.graph, &r.assignment).to_string_compact(),
+            r.cost.time_ms.to_bits(),
+            r.cost.energy_j.to_bits(),
+        )
+    };
+    for model in ["squeezenet", "mobilenet"] {
+        for dvfs in [DvfsMode::Off, DvfsMode::PerNode] {
+            let reference = run(model, dvfs, true, true);
+            for (d, i) in [(true, false), (false, true), (false, false)] {
+                assert_eq!(
+                    reference,
+                    run(model, dvfs, d, i),
+                    "{model}/dvfs={}: engine matrix (delta_eval={d}, incremental_inner={i}) \
+                     diverged on a multi-device table",
+                    dvfs.describe()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hetero_energy_search_places_nodes_on_the_dla() {
+    // Unconstrained energy minimization over the joint state set must use
+    // the low-power device — otherwise every placement test downstream is
+    // vacuous. (--dvfs off still searches placement at nominal clocks.)
+    let g = models::squeezenet::build(model_cfg());
+    let cfg = SearchConfig { max_dequeues: 16, ..Default::default() };
+    let r = optimize(&g, &hetero_ctx(), &CostFunction::Energy, &cfg).unwrap();
+    assert!(
+        r.assignment.uses_non_gpu_device(),
+        "energy objective over GPU+DLA kept every node on the GPU"
+    );
+    // The hetero optimum can never lose to the GPU-only optimum: the GPU
+    // state set is a strict subset of the joint one.
+    let gpu = optimize(
+        &g,
+        &OptimizerContext::offline_default(),
+        &CostFunction::Energy,
+        &cfg,
+    )
+    .unwrap();
+    assert!(
+        r.cost.energy_j <= gpu.cost.energy_j,
+        "joint search lost to its GPU-only subset: {} vs {}",
+        r.cost.energy_j,
+        gpu.cost.energy_j
+    );
+}
+
+// -------------------------------------------------------------------------
+// 3. placement invariants on the cost tables
+// -------------------------------------------------------------------------
+
+/// A mixed-device cost table for the simple model plus its default
+/// (all-GPU nominal) assignment.
+fn simple_table() -> (eadgo::graph::Graph, eadgo::cost::GraphCostTable, eadgo::algo::Assignment) {
+    let oracle = hetero_oracle();
+    let g = models::by_name("simple", model_cfg()).unwrap();
+    let shapes = g.infer_shapes().unwrap();
+    oracle.profile_graph(&g).unwrap();
+    let (table, _) = oracle.table_for_freqs(&g, &shapes, &[FreqId::NOMINAL, dla0()]);
+    assert!(table.has_links(), "a GPU+DLA table must carry the transfer overlay");
+    let a = eadgo::algo::Assignment::default_for(&g, &AlgorithmRegistry::new());
+    (g, table, a)
+}
+
+#[test]
+fn transfer_cost_zero_iff_an_edge_crosses_devices() {
+    let (_g, table, a) = simple_table();
+    let edges = table.links().unwrap().edges();
+    assert!(!edges.is_empty(), "the simple model must have costed-to-costed edges");
+
+    // Device-uniform: no boundary, exact zero (both all-GPU and all-DLA).
+    assert_eq!(table.transfer_cost(&a), (0.0, 0.0), "all-GPU plan charged a transfer");
+    let mut uni = a.clone();
+    uni.set_uniform_freq(dla0());
+    assert_eq!(table.transfer_cost(&uni), (0.0, 0.0), "all-DLA plan charged a transfer");
+
+    // Migrate a growing prefix of costed nodes: for every assignment along
+    // the way, the transfer cost is zero iff no priced edge crosses
+    // devices, and strictly positive in both axes the moment one does.
+    let mut b = a.clone();
+    for id in table.costed_ids() {
+        b.set_freq(id, dla0());
+        let crossing = edges
+            .iter()
+            .any(|e| b.freq(e.src).device() != b.freq(e.dst).device());
+        let (t, e) = table.transfer_cost(&b);
+        if crossing {
+            assert!(t > 0.0 && e > 0.0, "a crossing edge must charge time and energy");
+        } else {
+            assert_eq!((t, e), (0.0, 0.0), "no crossing edge, yet a transfer was charged");
+        }
+    }
+    // The sweep ends all-DLA: uniform again, so exactly zero.
+    assert_eq!(table.transfer_cost(&b), (0.0, 0.0), "all-DLA plan still charged a transfer");
+    // And the sweep must have exercised at least one mixed step.
+    let mut first = a.clone();
+    first.set_freq(table.costed_ids().next().unwrap(), dla0());
+    assert!(table.transfer_cost(&first).0 > 0.0, "single-node migration crossed no edge");
+}
+
+#[test]
+fn device_uniform_assignments_conserve_single_device_totals() {
+    // Evaluating a device-uniform plan through the mixed table must equal
+    // the single-device table bitwise: the overlay adds no terms at all.
+    let (_g, table, a) = simple_table();
+    for f in [FreqId::NOMINAL, dla0()] {
+        let mut af = a.clone();
+        af.set_uniform_freq(f);
+        let mixed = table.eval(&af);
+        let single = table.restrict_to_freq(f);
+        assert!(!single.has_links(), "restricted single-state table must drop the overlay");
+        let alone = single.eval(&af);
+        assert_eq!(
+            (mixed.time_ms.to_bits(), mixed.energy_j.to_bits()),
+            (alone.time_ms.to_bits(), alone.energy_j.to_bits()),
+            "uniform {} plan not conserved through the mixed table",
+            f.describe()
+        );
+    }
+}
+
+#[test]
+fn mixed_eval_is_node_sum_plus_boundary_edges_exactly() {
+    let (_g, table, mut a) = simple_table();
+    // Put the first costed node on the DLA: at least one boundary.
+    let first = table.costed_ids().next().unwrap();
+    a.set_freq(first, dla0());
+    let full = table.eval(&a);
+    // Replicate eval's accumulation exactly (per-node in id order, then
+    // per-crossing-edge in edge order) so the comparison is bitwise.
+    let mut t = 0.0;
+    let mut e = 0.0;
+    for id in table.costed_ids() {
+        let c = table.option_cost(id, a.get(id).unwrap(), a.freq(id)).unwrap();
+        t += c.time_ms;
+        e += c.energy_j();
+    }
+    let mut crossed = 0usize;
+    for edge in table.links().unwrap().edges() {
+        if a.freq(edge.src).device() != a.freq(edge.dst).device() {
+            t += edge.time_ms;
+            e += edge.energy_mj;
+            crossed += 1;
+        }
+    }
+    assert!(crossed > 0, "expected a device boundary");
+    assert_eq!(
+        (full.time_ms.to_bits(), full.energy_j.to_bits()),
+        (t.to_bits(), e.to_bits()),
+        "eval != per-node sum + boundary transfer terms"
+    );
+}
+
+#[test]
+fn eval_swap_matches_full_eval_across_device_boundaries() {
+    // The O(degree) boundary adjustment in eval_swap must agree bitwise
+    // with a from-scratch eval for every single-node device move.
+    let (_g, table, a) = simple_table();
+    let base = table.eval(&a);
+    for id in table.costed_ids() {
+        for (f, slab) in table.freq_options(id) {
+            for &(algo, _) in slab.iter() {
+                let swapped = table.eval_swap(base, &a, id, algo, *f).unwrap();
+                let mut af = a.clone();
+                af.set(id, algo);
+                af.set_freq(id, *f);
+                let fresh = table.eval(&af);
+                assert_eq!(
+                    (swapped.time_ms.to_bits(), swapped.energy_j.to_bits()),
+                    (fresh.time_ms.to_bits(), fresh.energy_j.to_bits()),
+                    "eval_swap diverged moving node {} to ({}, {})",
+                    id.0,
+                    algo.name(),
+                    f.describe()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn refine_to_budget_feasible_when_a_uniform_assignment_is() {
+    // Start from an infeasible all-DLA plan with a budget the all-GPU
+    // plan meets: migration back to the GPU is always available, so the
+    // refinement must land inside the budget.
+    let oracle = hetero_oracle();
+    let g = models::by_name("simple", model_cfg()).unwrap();
+    oracle.profile_graph(&g).unwrap();
+    let shapes = g.infer_shapes().unwrap();
+    let (table, _) = oracle.table_for_freqs(&g, &shapes, &[FreqId::NOMINAL, dla0()]);
+    let reg = AlgorithmRegistry::new();
+    let mut a = eadgo::algo::Assignment::default_for(&g, &reg);
+    let gpu_time = table.eval(&a).time_ms;
+    a.set_uniform_freq(dla0());
+    let dla = table.eval(&a);
+    assert!(dla.time_ms > gpu_time, "the DLA must be the slower device");
+
+    // Budget feasible for all-GPU, infeasible where the plan starts.
+    let budget = gpu_time * 1.001;
+    let (ra, rc) = refine_frequency_to_budget(&oracle, &g, &a, budget, DvfsMode::Off)
+        .unwrap()
+        .expect("a feasible all-GPU assignment exists — refinement must not give up");
+    assert!(
+        rc.time_ms <= budget,
+        "refined plan still over budget: {} > {budget}",
+        rc.time_ms
+    );
+    let fresh = table.eval(&ra);
+    assert_eq!(rc.time_ms.to_bits(), fresh.time_ms.to_bits(), "reported cost is stale");
+
+    // With a budget even the all-DLA plan meets, refinement must keep the
+    // plan feasible AND not raise its energy (phase 2 only lowers).
+    let loose = dla.time_ms * 2.0;
+    let (_, rc2) = refine_frequency_to_budget(&oracle, &g, &a, loose, DvfsMode::Off)
+        .unwrap()
+        .expect("trivially feasible budget");
+    assert!(rc2.time_ms <= loose);
+    assert!(
+        rc2.energy_j <= dla.energy_j * (1.0 + 1e-12),
+        "refinement raised energy under a slack budget: {} vs {}",
+        rc2.energy_j,
+        dla.energy_j
+    );
+}
+
+// -------------------------------------------------------------------------
+// 4. the acceptance claim + v4 round-trip
+// -------------------------------------------------------------------------
+
+#[test]
+fn budgeted_hetero_search_beats_gpu_only_on_two_zoo_models() {
+    // The ISSUE 8 acceptance criterion: at the same latency budget the
+    // GPU+DLA search finds a mixed plan with strictly lower energy than
+    // the best GPU-only plan, on at least two zoo models.
+    for model in ["squeezenet", "mobilenet"] {
+        let g = models::by_name(model, model_cfg()).unwrap();
+        let scfg = SearchConfig { max_dequeues: 12, dvfs: DvfsMode::PerNode, ..Default::default() };
+        let gpu_ctx = OptimizerContext::offline_default();
+        let tbest = optimize(&g, &gpu_ctx, &CostFunction::Time, &scfg).unwrap().cost.time_ms;
+        let budget = 2.0 * tbest;
+        let r_gpu = optimize_with_time_budget(&g, &gpu_ctx, budget, &scfg, 4).unwrap();
+        let r_het = optimize_with_time_budget(&g, &hetero_ctx(), budget, &scfg, 4).unwrap();
+        assert!(r_gpu.feasible && r_het.feasible, "{model}: both searches must fit 2x best-time");
+        assert!(
+            r_het.result.cost.time_ms <= budget * (1.0 + 1e-9),
+            "{model}: mixed plan over budget"
+        );
+        assert!(
+            r_het.result.assignment.uses_non_gpu_device(),
+            "{model}: budgeted hetero search placed nothing on the DLA"
+        );
+        assert!(
+            r_het.result.cost.energy_j < r_gpu.result.cost.energy_j,
+            "{model}: mixed placement must strictly beat GPU-only at the same budget: {} vs {}",
+            r_het.result.cost.energy_j,
+            r_gpu.result.cost.energy_j
+        );
+    }
+}
+
+#[test]
+fn mixed_plans_roundtrip_and_gate_serving() {
+    // A searched mixed plan must survive plan JSON and the v4 frontier
+    // manifest byte-exactly, and the serve-side guard must name the DLA
+    // when the serving context lacks it.
+    let g = models::squeezenet::build(model_cfg());
+    let cfg = SearchConfig { max_dequeues: 16, ..Default::default() };
+    let r = optimize(&g, &hetero_ctx(), &CostFunction::Energy, &cfg).unwrap();
+    assert!(r.assignment.uses_non_gpu_device(), "need a mixed plan for this test");
+
+    let reg = AlgorithmRegistry::new();
+    let j = plan_to_json(&r.graph, &r.assignment);
+    assert!(j.to_string_compact().contains("\"device\""), "mixed plan must carry device keys");
+    let (g2, a2) = plan_from_json(&j, &reg).unwrap();
+    assert_eq!(graph_hash(&r.graph), graph_hash(&g2));
+    assert_eq!(r.assignment, a2, "mixed plan assignment did not round-trip");
+
+    let frontier = eadgo::search::PlanFrontier::from_points(vec![eadgo::search::PlanPoint {
+        graph: r.graph.clone(),
+        assignment: r.assignment.clone(),
+        cost: r.cost,
+        weight: 0.0,
+        batch: 1,
+    }]);
+    let mj = eadgo::runtime::manifest::frontier_to_json(&frontier);
+    assert!(mj.to_string_compact().contains("\"version\":4"), "mixed frontier must be v4");
+    let back = eadgo::runtime::manifest::frontier_from_json(&mj, &reg).unwrap();
+    assert_eq!(back.points()[0].assignment, r.assignment);
+
+    // The serving guard: a gpu-only context must name the dla as missing;
+    // the full device list clears it.
+    let missing =
+        eadgo::runtime::manifest::unsupported_devices(&frontier, &["gpu".to_string()]);
+    assert_eq!(missing, vec!["dla".to_string()]);
+    let ok = eadgo::runtime::manifest::unsupported_devices(
+        &frontier,
+        &["gpu".to_string(), "dla".to_string()],
+    );
+    assert!(ok.is_empty());
+}
