@@ -29,6 +29,11 @@
 //!      search at the same time budget on two zoo models: the mixed
 //!      placement must strictly cut energy/request (ISSUE 8), published
 //!      as `placement.energy_ratio`.
+//!  13. rewrite ablation — best plan on the origin graph (algorithms +
+//!      frequencies only, no substitutions) vs the full rule set, on a
+//!      conv model and the attention block: the rewrite space must
+//!      strictly cut energy (ISSUE 9), published as
+//!      `rewrite.cost_ratio_{conv,attention}`.
 //! Run: `cargo bench --bench ablation [-- --quick]` (or EADGO_BENCH_QUICK=1).
 //! Emits `BENCH_ablation.json` (dir override: EADGO_BENCH_OUT_DIR).
 
@@ -1104,6 +1109,59 @@ fn main() {
         100.0 * (energy_ratio - 1.0),
     );
     payload.set("placement", placement_json);
+
+    // --- 13. rewrite ablation: origin-graph search vs full rule set ---------
+    // The ISSUE-9 claim: the widened rewrite space (conv fusion family on
+    // the CNN side; matmul epilogue fusion, Merkle CSE, and split/concat
+    // algebra on the attention side) strictly cuts the energy of the best
+    // plan versus searching algorithms and frequencies on the origin graph
+    // alone. Both searches share the same provider, objective, and budget,
+    // so the ratio isolates what the substitutions themselves buy.
+    let cfg13 = ModelConfig { batch: 1, resolution: 64, width_div: 4, classes: 100 };
+    let scfg13 = SearchConfig {
+        max_dequeues: budget / 4,
+        dvfs: DvfsMode::PerNode,
+        ..SearchConfig::default()
+    };
+    let mut t = Table::new(
+        "Ablation 13: rewrite contribution (origin-graph search vs full rule set)",
+        &["model", "origin energy_j/1k", "rewritten energy_j/1k", "ratio", "nodes"],
+    );
+    let mut rewrite_json = Json::obj();
+    for (key, name) in [("conv", "squeezenet"), ("attention", "attention")] {
+        let g13 = models::by_name(name, cfg13).unwrap();
+        let c_none = OptimizerContext::new(
+            RuleSet::empty(),
+            CostDb::new(),
+            Box::new(SimV100Provider::new(7)),
+        );
+        let r_none = optimize(&g13, &c_none, &CostFunction::Energy, &scfg13).unwrap();
+        let r_full = optimize(&g13, &ctx(), &CostFunction::Energy, &scfg13).unwrap();
+        let ratio = r_full.cost.energy_j / r_none.cost.energy_j;
+        t.row(vec![
+            name.to_string(),
+            f3(r_none.cost.energy_j),
+            f3(r_full.cost.energy_j),
+            format!("{ratio:.3}"),
+            format!(
+                "{} -> {}",
+                r_none.graph.runtime_node_count(),
+                r_full.graph.runtime_node_count()
+            ),
+        ]);
+        assert!(
+            ratio < 1.0,
+            "{name}: the rewrite space must strictly cut energy: {} vs {}",
+            r_full.cost.energy_j,
+            r_none.cost.energy_j
+        );
+        rewrite_json
+            .set(&format!("energy_origin_{key}"), r_none.cost.energy_j)
+            .set(&format!("energy_rewritten_{key}"), r_full.cost.energy_j)
+            .set(&format!("cost_ratio_{key}"), ratio);
+    }
+    println!("{}", t.render());
+    payload.set("rewrite", rewrite_json);
 
     eadgo::util::bench::emit_bench_json("ablation", &payload).expect("bench payload write");
 }

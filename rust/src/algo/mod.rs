@@ -146,7 +146,7 @@ impl AlgorithmRegistry {
                 }
                 algos
             }
-            OpKind::MatMul => vec![Algorithm::GemmBlocked, Algorithm::GemmNaive],
+            OpKind::MatMul { .. } => vec![Algorithm::GemmBlocked, Algorithm::GemmNaive],
             _ => vec![Algorithm::Passthrough],
         }
     }
@@ -249,6 +249,29 @@ impl Assignment {
     /// manifest v4 device keys and the serve-side provider check.
     pub fn uses_non_gpu_device(&self) -> bool {
         self.assigned_ids().any(|id| self.device(id) != crate::energysim::DeviceId::GPU)
+    }
+
+    /// The tensor layout a node computes in. Layout rides on the packed
+    /// frequency state like the device, so the default (`NOMINAL`) is NCHW
+    /// and every pre-layout plan is all-NCHW by construction.
+    pub fn layout(&self, id: NodeId) -> crate::energysim::Layout {
+        self.freq(id).layout()
+    }
+
+    /// The distinct layouts runtime nodes compute in, ascending — one
+    /// entry (`NCHW`) for every pre-layout plan.
+    pub fn layouts_used(&self) -> Vec<crate::energysim::Layout> {
+        let mut out: Vec<crate::energysim::Layout> =
+            self.assigned_ids().map(|id| self.layout(id)).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Whether any runtime node computes in a non-default layout — the
+    /// gate for the manifest v5 layout keys.
+    pub fn uses_non_default_layout(&self) -> bool {
+        self.assigned_ids().any(|id| self.layout(id) != crate::energysim::Layout::NCHW)
     }
 
     /// Pin every runtime node to one DVFS state (`--dvfs per-graph` plans).
@@ -418,7 +441,7 @@ mod tests {
     fn cannot_assign_weight_node() {
         let mut g = Graph::new();
         let w = g.add1(OpKind::weight(vec![2, 2], 0), &[], "w");
-        let m = g.add1(OpKind::MatMul, &[w, w], "m");
+        let m = g.add1(OpKind::matmul(), &[w, w], "m");
         g.outputs = vec![PortRef::of(m)];
         let reg = AlgorithmRegistry::new();
         let mut a = Assignment::default_for(&g, &reg);
@@ -477,6 +500,32 @@ mod tests {
         assert!(a1.uses_non_gpu_device());
         // Migration is a plan-identity change like any (algo, freq) move.
         assert_eq!(a0.distance(&a1), 1);
+    }
+
+    #[test]
+    fn assignment_layout_axis_rides_on_freq() {
+        use crate::energysim::Layout;
+        let mut g = Graph::new();
+        let x = g.add1(OpKind::Input { shape: vec![1, 3, 8, 8] }, &[], "x");
+        let w = g.add1(OpKind::weight(vec![4, 3, 3, 3], 1), &[], "w");
+        let c = g.add1(conv_op((1, 1)), &[x, w], "c");
+        let r = g.add1(OpKind::Relu, &[c], "r");
+        g.outputs = vec![PortRef::of(r)];
+        let reg = AlgorithmRegistry::new();
+        let a0 = Assignment::default_for(&g, &reg);
+        assert_eq!(a0.layout(c), Layout::NCHW);
+        assert_eq!(a0.layouts_used(), vec![Layout::NCHW]);
+        assert!(!a0.uses_non_default_layout());
+
+        let mut a1 = a0.clone();
+        a1.set_freq(c, a1.freq(c).with_layout(Layout::NHWC));
+        assert_eq!(a1.layout(c), Layout::NHWC);
+        assert_eq!(a1.layouts_used(), vec![Layout::NCHW, Layout::NHWC]);
+        assert!(a1.uses_non_default_layout());
+        // A layout flip is a plan-identity change like any (algo, freq) move.
+        assert_eq!(a0.distance(&a1), 1);
+        // The device field is untouched by the layout bit.
+        assert_eq!(a1.device(c), crate::energysim::DeviceId::GPU);
     }
 
     #[test]

@@ -46,6 +46,12 @@ pub struct RunConfig {
     /// validated by [`parse_devices`]; only meaningful with the sim
     /// provider.
     pub devices: Vec<String>,
+    /// Tensor layouts the search may assign per node, in layout-index
+    /// order (`["nchw"]` = classic single-layout search; `["nchw",
+    /// "nhwc"]` adds per-node layout with transpose-aware boundaries).
+    /// Parsed / validated by [`parse_layouts`]; only meaningful with the
+    /// sim providers.
+    pub layouts: Vec<String>,
     /// Default dispatcher batch cap for `eadgo serve` (CLI `--batch-max`
     /// overrides).
     pub serve_batch_max: usize,
@@ -77,6 +83,7 @@ impl Default for RunConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             provider: "sim".into(),
             devices: vec!["gpu".into()],
+            layouts: vec!["nchw".into()],
             serve_batch_max: 4,
             serve_max_wait_ms: 2.0,
             serve_feedback: false,
@@ -94,6 +101,17 @@ impl RunConfig {
 
     /// Expand into a full [`SearchConfig`].
     pub fn search_config(&self) -> SearchConfig {
+        // `["nchw"]` is the classic single-layout search: leave the axis
+        // off (empty vec) so every search surface stays byte-identical to
+        // the pre-layout builds. Non-default layouts switch it on.
+        let layouts: Vec<crate::energysim::Layout> = if self.layouts.len() > 1 {
+            self.layouts
+                .iter()
+                .filter_map(|s| crate::energysim::Layout::parse(s))
+                .collect()
+        } else {
+            Vec::new()
+        };
         SearchConfig {
             alpha: self.alpha,
             inner_distance: self.inner_distance,
@@ -101,6 +119,7 @@ impl RunConfig {
             threads: self.threads,
             dvfs: self.dvfs,
             incremental_inner: self.incremental_inner,
+            layouts,
             ..Default::default()
         }
     }
@@ -160,6 +179,22 @@ impl RunConfig {
                 _ => anyhow::bail!("devices: expected a string or an array of strings"),
             };
             cfg.devices = parse_devices(&spec)?;
+        }
+        if let Some(d) = v.get("layouts") {
+            let spec = match d {
+                Json::Str(s) => s.clone(),
+                Json::Arr(items) => items
+                    .iter()
+                    .map(|i| {
+                        i.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| anyhow::anyhow!("layouts: entries must be strings"))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?
+                    .join(","),
+                _ => anyhow::bail!("layouts: expected a string or an array of strings"),
+            };
+            cfg.layouts = parse_layouts(&spec)?;
         }
         if let Some(x) = v.get("serve_batch_max").and_then(Json::as_usize) {
             anyhow::ensure!(x >= 1, "serve_batch_max must be >= 1");
@@ -239,6 +274,9 @@ impl RunConfig {
         if let Some(d) = args.get("devices") {
             self.devices = parse_devices(d)?;
         }
+        if let Some(l) = args.get("layouts") {
+            self.layouts = parse_layouts(l)?;
+        }
         self.model_cfg.resolution = args.get_usize("resolution", self.model_cfg.resolution)?;
         self.model_cfg.width_div = args.get_usize("width-div", self.model_cfg.width_div)?;
         self.model_cfg.batch = args.get_usize("batch", self.model_cfg.batch)?;
@@ -279,6 +317,44 @@ pub fn parse_devices(spec: &str) -> anyhow::Result<Vec<String>> {
     anyhow::ensure!(
         out.first().map(String::as_str) == Some("gpu"),
         "devices: the list must start with `gpu` (device 0 anchors the nominal states)"
+    );
+    Ok(out)
+}
+
+/// Parse a `--layouts` spec: comma-separated layout names (`nchw`, or
+/// `nchw,nhwc`). NCHW must come first — it is layout bit 0, which keeps
+/// every packed state byte-compatible with pre-layout plans — and names
+/// must be unique. Unknown names fail with a did-you-mean against the
+/// known layouts.
+pub fn parse_layouts(spec: &str) -> anyhow::Result<Vec<String>> {
+    let known = crate::energysim::LAYOUT_NAMES;
+    let mut out: Vec<String> = Vec::new();
+    for raw in spec.split(',') {
+        let name = raw.trim().to_ascii_lowercase();
+        anyhow::ensure!(!name.is_empty(), "layouts: empty layout name in `{spec}`");
+        if crate::energysim::Layout::parse(&name).is_none() {
+            let mut best: Option<(&str, usize)> = None;
+            for k in known {
+                let d = edit_distance(k, &name);
+                if best.is_none_or(|(_, bd)| d < bd) {
+                    best = Some((k, d));
+                }
+            }
+            let hint = match best {
+                Some((k, d)) if d <= 2 => format!(" — did you mean `{k}`?"),
+                _ => String::new(),
+            };
+            anyhow::bail!(
+                "layouts: unknown layout `{name}`{hint} (known: {})",
+                known.join(", ")
+            );
+        }
+        anyhow::ensure!(!out.contains(&name), "layouts: duplicate layout `{name}`");
+        out.push(name);
+    }
+    anyhow::ensure!(
+        out.first().map(String::as_str) == Some("nchw"),
+        "layouts: the list must start with `nchw` (layout 0 anchors the nominal states)"
     );
     Ok(out)
 }
@@ -451,6 +527,54 @@ mod tests {
         );
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.devices, vec!["gpu", "dla"]);
+    }
+
+    #[test]
+    fn layouts_parsing_and_search_config_wiring() {
+        use crate::energysim::Layout;
+        assert_eq!(parse_layouts("nchw").unwrap(), vec!["nchw"]);
+        assert_eq!(parse_layouts("nchw,nhwc").unwrap(), vec!["nchw", "nhwc"]);
+        assert_eq!(parse_layouts(" NCHW , NHWC ").unwrap(), vec!["nchw", "nhwc"]);
+        // Unknown names get a did-you-mean against the known layouts.
+        let err = parse_layouts("nchw,nhcw").unwrap_err().to_string();
+        assert!(err.contains("unknown layout `nhcw`"), "{err}");
+        assert!(err.contains("did you mean `nhwc`"), "{err}");
+        // Structural constraints: nchw first, no duplicates, no empties.
+        assert!(parse_layouts("nhwc").unwrap_err().to_string().contains("start with `nchw`"));
+        assert!(parse_layouts("nhwc,nchw").is_err());
+        assert!(parse_layouts("nchw,nchw").unwrap_err().to_string().contains("duplicate"));
+        assert!(parse_layouts("nchw,,nhwc").is_err());
+        // Defaults keep the axis off; the CLI override switches it on.
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.layouts, vec!["nchw"]);
+        assert!(cfg.search_config().layouts.is_empty(), "single-layout must leave the axis off");
+        let mut cfg = RunConfig::default();
+        let args = crate::util::cli::Args::parse(
+            &["optimize", "--layouts", "nchw,nhwc"].iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+            true,
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.layouts, vec!["nchw", "nhwc"]);
+        assert_eq!(cfg.search_config().layouts, vec![Layout::NCHW, Layout::NHWC]);
+        // The JSON config key accepts both spellings, like `devices`.
+        let dir = std::env::temp_dir().join("eadgo_cfg_layouts_test");
+        let path = dir.join("run.json");
+        let mut j = Json::obj();
+        j.set("layouts", "nchw,nhwc");
+        json::write_file(&path, &j).unwrap();
+        assert_eq!(RunConfig::load(&path).unwrap().layouts, vec!["nchw", "nhwc"]);
+        let mut j = Json::obj();
+        j.set(
+            "layouts",
+            Json::Arr(vec![Json::Str("nchw".into()), Json::Str("nhwc".into())]),
+        );
+        json::write_file(&path, &j).unwrap();
+        assert_eq!(RunConfig::load(&path).unwrap().layouts, vec!["nchw", "nhwc"]);
+        let mut j = Json::obj();
+        j.set("layouts", "nchw,chwn");
+        json::write_file(&path, &j).unwrap();
+        assert!(RunConfig::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

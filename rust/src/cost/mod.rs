@@ -26,7 +26,7 @@ pub use oracle::{
 };
 
 use crate::algo::{Algorithm, AlgorithmRegistry, Assignment};
-use crate::energysim::{FreqId, LinkModel};
+use crate::energysim::{FreqId, LinkModel, TransposeModel};
 use crate::graph::{Graph, NodeId, TensorShape};
 use std::sync::Arc;
 
@@ -294,6 +294,10 @@ pub struct TransferLink {
     /// Link energy if the edge crosses devices, mJ per inference (same
     /// `ms × W` unit as [`NodeCost::energy_j`]).
     pub energy_mj: f64,
+    /// Re-tiling latency if the edge crosses layouts, milliseconds.
+    pub transpose_ms: f64,
+    /// Re-tiling energy if the edge crosses layouts, mJ per inference.
+    pub transpose_mj: f64,
 }
 
 /// The transfer-cost overlay of a multi-device [`GraphCostTable`]: every
@@ -310,15 +314,19 @@ pub struct TransferLinks {
 }
 
 impl TransferLinks {
-    /// Price every data edge between costed nodes of `g` under `link`.
-    /// `costed[i]` marks nodes that carry cost options (constant-space and
-    /// input nodes never execute, so edges from them move no runtime data).
+    /// Price every data edge between costed nodes of `g`: transfer costs
+    /// under `link` (zero when `None` — layouts-only overlays never charge
+    /// a device boundary), re-tiling costs always (the transpose kernel is
+    /// device-independent). `costed[i]` marks nodes that carry cost options
+    /// (constant-space and input nodes never execute, so edges from them
+    /// move no runtime data).
     pub fn build(
         g: &Graph,
         shapes: &[Vec<TensorShape>],
         costed: &[bool],
-        link: &LinkModel,
+        link: Option<&LinkModel>,
     ) -> TransferLinks {
+        let transpose = TransposeModel::on_device();
         let mut edges = Vec::new();
         for (id, node) in g.nodes() {
             if !costed[id.0] {
@@ -329,8 +337,18 @@ impl TransferLinks {
                     continue;
                 }
                 let bytes = 4.0 * shapes[p.node.0][p.port].iter().product::<usize>() as f64;
-                let (time_ms, energy_mj) = link.transfer_cost(bytes);
-                edges.push(TransferLink { src: p.node, dst: id, bytes, time_ms, energy_mj });
+                let (time_ms, energy_mj) =
+                    link.map(|l| l.transfer_cost(bytes)).unwrap_or((0.0, 0.0));
+                let (transpose_ms, transpose_mj) = transpose.transpose_cost(bytes);
+                edges.push(TransferLink {
+                    src: p.node,
+                    dst: id,
+                    bytes,
+                    time_ms,
+                    energy_mj,
+                    transpose_ms,
+                    transpose_mj,
+                });
             }
         }
         TransferLinks::from_edges(edges, g.len())
@@ -458,11 +476,12 @@ impl GraphCostTable {
         GraphCostTable { entries, freq_universe, index, links: None }
     }
 
-    /// Attach the transfer-cost overlay: price every data edge between
-    /// costed nodes under `link`. Called by the oracle only when the
-    /// table's frequency universe spans more than one device — overlay-free
-    /// tables evaluate exactly as before the placement axis existed.
-    pub fn attach_links(&mut self, g: &Graph, shapes: &[Vec<TensorShape>], link: &LinkModel) {
+    /// Attach the boundary-cost overlay: price every data edge between
+    /// costed nodes under `link` (device transfers) and the re-tiling
+    /// kernel (layout transposes). Called by the oracle only when the
+    /// table's frequency universe spans more than one device or layout —
+    /// overlay-free tables evaluate exactly as before either axis existed.
+    pub fn attach_links(&mut self, g: &Graph, shapes: &[Vec<TensorShape>], link: Option<&LinkModel>) {
         let costed: Vec<bool> = self.entries.iter().map(|e| !e.is_empty()).collect();
         self.links = Some(Arc::new(TransferLinks::build(g, shapes, &costed, link)));
     }
@@ -495,6 +514,22 @@ impl GraphCostTable {
             if a.freq(edge.src).device() != a.freq(edge.dst).device() {
                 t += edge.time_ms;
                 e += edge.energy_mj;
+            }
+        }
+        (t, e)
+    }
+
+    /// Total re-tiling cost of `a`: the sum of transpose costs over edges
+    /// whose endpoints compute in different layouts, `(time_ms,
+    /// energy_mj)`. Zero — with no floating-point terms added at all — when
+    /// every edge stays in one layout or no overlay is attached.
+    pub fn transpose_cost(&self, a: &Assignment) -> (f64, f64) {
+        let Some(links) = &self.links else { return (0.0, 0.0) };
+        let (mut t, mut e) = (0.0, 0.0);
+        for edge in &links.edges {
+            if a.freq(edge.src).layout() != a.freq(edge.dst).layout() {
+                t += edge.transpose_ms;
+                e += edge.transpose_mj;
             }
         }
         (t, e)
@@ -563,10 +598,11 @@ impl GraphCostTable {
 
     /// Additive cost of the graph under `a` (paper's cost model), each node
     /// priced at its assigned (algorithm, frequency) pair — plus, when a
-    /// transfer overlay is attached, the link cost of every edge whose
-    /// endpoints land on different devices. Device-uniform assignments
-    /// cross no boundary, so no transfer term is ever added (exact
-    /// conservation, not `+ 0.0`).
+    /// boundary overlay is attached, the link cost of every edge whose
+    /// endpoints land on different devices and the re-tiling cost of every
+    /// edge whose endpoints compute in different layouts. Device- and
+    /// layout-uniform assignments cross no boundary, so no boundary term
+    /// is ever added (exact conservation, not `+ 0.0`).
     pub fn eval(&self, a: &Assignment) -> GraphCost {
         let mut gc = GraphCost::default();
         for (i, slabs) in self.entries.iter().enumerate() {
@@ -582,9 +618,17 @@ impl GraphCostTable {
         }
         if let Some(links) = &self.links {
             for edge in &links.edges {
-                if a.freq(edge.src).device() != a.freq(edge.dst).device() {
+                let fs = a.freq(edge.src);
+                let fd = a.freq(edge.dst);
+                if fs.device() != fd.device() {
                     gc.time_ms += edge.time_ms;
                     gc.energy_j += edge.energy_mj;
+                }
+                // Layout boundaries re-tile even on one device; both
+                // charges apply when an edge crosses device AND layout.
+                if fs.layout() != fd.layout() {
+                    gc.time_ms += edge.transpose_ms;
+                    gc.energy_j += edge.transpose_mj;
                 }
             }
         }
@@ -725,24 +769,39 @@ impl GraphCostTable {
             energy_j: base.energy_j - old.energy_j() + new.energy_j(),
             freq: if new_freq == old_freq { base.freq } else { FreqId::NOMINAL },
         };
-        // Device migration changes which incident edges cross a boundary:
-        // re-price exactly those, O(degree).
+        // Device migration and layout flips change which incident edges
+        // cross a boundary: re-price exactly those, O(degree). The two
+        // boundary kinds are independent — a swap can change either or
+        // both.
         if let Some(links) = &self.links {
-            let dev_old = old_freq.device();
-            let dev_new = new_freq.device();
-            if dev_old != dev_new {
+            let dev_changed = old_freq.device() != new_freq.device();
+            let lay_changed = old_freq.layout() != new_freq.layout();
+            if dev_changed || lay_changed {
                 for &ei in &links.incident[id.0] {
                     let edge = &links.edges[ei as usize];
                     let other = if edge.src == id { edge.dst } else { edge.src };
-                    let other_dev = a.freq(other).device();
-                    let was_boundary = dev_old != other_dev;
-                    let is_boundary = dev_new != other_dev;
-                    if was_boundary && !is_boundary {
-                        out.time_ms -= edge.time_ms;
-                        out.energy_j -= edge.energy_mj;
-                    } else if !was_boundary && is_boundary {
-                        out.time_ms += edge.time_ms;
-                        out.energy_j += edge.energy_mj;
+                    let other_freq = a.freq(other);
+                    if dev_changed {
+                        let was = old_freq.device() != other_freq.device();
+                        let is = new_freq.device() != other_freq.device();
+                        if was && !is {
+                            out.time_ms -= edge.time_ms;
+                            out.energy_j -= edge.energy_mj;
+                        } else if !was && is {
+                            out.time_ms += edge.time_ms;
+                            out.energy_j += edge.energy_mj;
+                        }
+                    }
+                    if lay_changed {
+                        let was = old_freq.layout() != other_freq.layout();
+                        let is = new_freq.layout() != other_freq.layout();
+                        if was && !is {
+                            out.time_ms -= edge.transpose_ms;
+                            out.energy_j -= edge.transpose_mj;
+                        } else if !was && is {
+                            out.time_ms += edge.transpose_ms;
+                            out.energy_j += edge.transpose_mj;
+                        }
                     }
                 }
             }
@@ -913,6 +972,8 @@ mod tests {
             bytes: 1024.0,
             time_ms: 0.125,
             energy_mj: 0.75,
+            transpose_ms: 0.03,
+            transpose_mj: 0.05,
         }];
         let mut incident = vec![Vec::new(); 3];
         incident[0].push(0);
@@ -973,6 +1034,96 @@ mod tests {
         assert!((closed.time_ms - full_both.time_ms).abs() < 1e-12);
         assert!((closed.energy_j - full_both.energy_j).abs() < 1e-12);
         assert!(t.has_links());
+    }
+
+    /// As [`two_device_table_with_link`], with every (device, clock) slab
+    /// also resolved in NHWC (same costs — this test exercises only the
+    /// boundary overlay, not the per-node layout pricing).
+    fn two_layout_table_with_link() -> GraphCostTable {
+        use crate::energysim::{DeviceId, Layout};
+        let dla = FreqId::on(DeviceId::DLA, 0);
+        let mk = |t_gpu: f64, p_gpu: f64, t_dla: f64, p_dla: f64| {
+            let gpu = Arc::new(vec![(
+                Algorithm::Passthrough,
+                NodeCost { time_ms: t_gpu, power_w: p_gpu },
+            )]);
+            let dla_slab = Arc::new(vec![(
+                Algorithm::Passthrough,
+                NodeCost { time_ms: t_dla, power_w: p_dla },
+            )]);
+            vec![
+                (FreqId::NOMINAL, gpu.clone()),
+                (dla, dla_slab.clone()),
+                (FreqId::NOMINAL.with_layout(Layout::NHWC), gpu),
+                (dla.with_layout(Layout::NHWC), dla_slab),
+            ]
+        };
+        let mut t = GraphCostTable::from_freq_slabs(vec![
+            mk(1.0, 100.0, 4.0, 10.0),
+            Vec::new(),
+            mk(0.5, 80.0, 2.0, 8.0),
+        ]);
+        let edges = vec![TransferLink {
+            src: NodeId(0),
+            dst: NodeId(2),
+            bytes: 1024.0,
+            time_ms: 0.125,
+            energy_mj: 0.75,
+            transpose_ms: 0.03,
+            transpose_mj: 0.05,
+        }];
+        let mut incident = vec![Vec::new(); 3];
+        incident[0].push(0);
+        incident[2].push(0);
+        t.attach_links_shared(Arc::new(TransferLinks { edges, incident }));
+        t
+    }
+
+    #[test]
+    fn transpose_charged_iff_edge_crosses_layouts() {
+        use crate::energysim::{DeviceId, Layout};
+        let t = two_layout_table_with_link();
+        let nhwc = FreqId::NOMINAL.with_layout(Layout::NHWC);
+        let algos = vec![Some(Algorithm::Passthrough), None, Some(Algorithm::Passthrough)];
+        let uniform = Assignment::from_parts(algos.clone(), vec![FreqId::NOMINAL; 3]);
+        let base = t.eval(&uniform);
+
+        // Layout-uniform plans charge nothing.
+        assert_eq!(t.transpose_cost(&uniform), (0.0, 0.0));
+        let all_nhwc = Assignment::from_parts(algos.clone(), vec![nhwc; 3]);
+        assert_eq!(t.transpose_cost(&all_nhwc), (0.0, 0.0));
+
+        // Flipping one endpoint opens a layout boundary on the 0→2 edge,
+        // on the same device: transpose charged, transfer not.
+        let mut mixed = uniform.clone();
+        mixed.set_freq(NodeId(2), nhwc);
+        assert_eq!(t.transpose_cost(&mixed), (0.03, 0.05));
+        assert_eq!(t.transfer_cost(&mixed), (0.0, 0.0));
+        let full = t.eval(&mixed);
+        assert!((full.time_ms - (base.time_ms + 0.03)).abs() < 1e-12);
+        assert!((full.energy_j - (base.energy_j + 0.05)).abs() < 1e-12);
+
+        // eval_swap tracks the layout boundary exactly…
+        let swapped = t.eval_swap(base, &uniform, NodeId(2), Algorithm::Passthrough, nhwc).unwrap();
+        assert!((swapped.time_ms - full.time_ms).abs() < 1e-12);
+        assert!((swapped.energy_j - full.energy_j).abs() < 1e-12);
+        // …and closing it again recovers the uniform cost.
+        let closed =
+            t.eval_swap(full, &mixed, NodeId(2), Algorithm::Passthrough, FreqId::NOMINAL).unwrap();
+        assert!((closed.time_ms - base.time_ms).abs() < 1e-12);
+        assert!((closed.energy_j - base.energy_j).abs() < 1e-12);
+
+        // Crossing device AND layout on one edge charges both overlays.
+        let dla_nhwc = FreqId::on(DeviceId::DLA, 0).with_layout(Layout::NHWC);
+        let mut both = uniform.clone();
+        both.set_freq(NodeId(2), dla_nhwc);
+        let cost_both = t.eval(&both);
+        let swap_both =
+            t.eval_swap(base, &uniform, NodeId(2), Algorithm::Passthrough, dla_nhwc).unwrap();
+        assert!((swap_both.time_ms - cost_both.time_ms).abs() < 1e-12);
+        assert!((swap_both.energy_j - cost_both.energy_j).abs() < 1e-12);
+        assert_eq!(t.transfer_cost(&both), (0.125, 0.75));
+        assert_eq!(t.transpose_cost(&both), (0.03, 0.05));
     }
 
     #[test]

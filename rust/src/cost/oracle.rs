@@ -372,6 +372,14 @@ impl CostOracle {
         freqs.len() > 1 && freqs.iter().any(|f| f.device() != freqs[0].device())
     }
 
+    /// Whether `freqs` spans more than one layout — the condition under
+    /// which tables get a re-tiling overlay (possibly with no device link
+    /// at all) and the objective stops being separable at layout
+    /// boundaries.
+    fn spans_layouts(freqs: &[FreqId]) -> bool {
+        freqs.len() > 1 && freqs.iter().any(|f| f.layout() != freqs[0].layout())
+    }
+
     /// Total measurements performed through this oracle since creation.
     pub fn profiled_total(&self) -> u64 {
         self.profiled.load(Ordering::Relaxed)
@@ -666,10 +674,13 @@ impl CostOracle {
             entries[id.0] = slabs;
         });
         let mut table = GraphCostTable::from_freq_slabs(entries);
-        if Self::spans_devices(freqs) {
-            if let Some(link) = &self.link_model {
-                table.attach_links(g, shapes, link);
-            }
+        // The overlay is needed whenever a boundary *could* open: across
+        // devices (when the provider has a link model) or across layouts
+        // (always — the re-tiling kernel is device-independent).
+        if (Self::spans_devices(freqs) && self.link_model.is_some())
+            || Self::spans_layouts(freqs)
+        {
+            table.attach_links(g, shapes, self.link_model.as_ref());
         }
         (table, measured)
     }
@@ -821,30 +832,45 @@ impl CostOracle {
         self.carried_rows.fetch_add(carried, Ordering::Relaxed);
         self.resolved_rows.fetch_add(resolved, Ordering::Relaxed);
         let mut table = GraphCostTable::from_freq_slabs(entries);
-        // Transfer overlay for multi-device candidates, priced straight off
-        // the view in compaction order — edge-for-edge what a full build on
-        // the materialized graph produces (same iteration order, same
-        // shapes), keeping the delta and full paths bit-identical.
-        if Self::spans_devices(freqs) {
-            if let Some(link) = &self.link_model {
-                let mut edges = Vec::new();
-                for (j, &i) in live.iter().enumerate() {
-                    if table.freq_options(NodeId(j)).is_empty() {
+        // Boundary overlay for multi-device / multi-layout candidates,
+        // priced straight off the view in compaction order — edge-for-edge
+        // what a full build on the materialized graph produces (same
+        // iteration order, same shapes), keeping the delta and full paths
+        // bit-identical.
+        if (Self::spans_devices(freqs) && self.link_model.is_some())
+            || Self::spans_layouts(freqs)
+        {
+            let transpose = crate::energysim::TransposeModel::on_device();
+            let mut edges = Vec::new();
+            for (j, &i) in live.iter().enumerate() {
+                if table.freq_options(NodeId(j)).is_empty() {
+                    continue;
+                }
+                for p in view.inputs(i) {
+                    let Some(src) = view.compact_id(p.node.0) else { continue };
+                    if table.freq_options(src).is_empty() {
                         continue;
                     }
-                    for p in view.inputs(i) {
-                        let Some(src) = view.compact_id(p.node.0) else { continue };
-                        if table.freq_options(src).is_empty() {
-                            continue;
-                        }
-                        let bytes =
-                            4.0 * view.out_shapes(p.node.0)[p.port].iter().product::<usize>() as f64;
-                        let (time_ms, energy_mj) = link.transfer_cost(bytes);
-                        edges.push(TransferLink { src, dst: NodeId(j), bytes, time_ms, energy_mj });
-                    }
+                    let bytes =
+                        4.0 * view.out_shapes(p.node.0)[p.port].iter().product::<usize>() as f64;
+                    let (time_ms, energy_mj) = self
+                        .link_model
+                        .as_ref()
+                        .map(|l| l.transfer_cost(bytes))
+                        .unwrap_or((0.0, 0.0));
+                    let (transpose_ms, transpose_mj) = transpose.transpose_cost(bytes);
+                    edges.push(TransferLink {
+                        src,
+                        dst: NodeId(j),
+                        bytes,
+                        time_ms,
+                        energy_mj,
+                        transpose_ms,
+                        transpose_mj,
+                    });
                 }
-                table.attach_links_shared(Arc::new(TransferLinks::from_edges(edges, live.len())));
             }
+            table.attach_links_shared(Arc::new(TransferLinks::from_edges(edges, live.len())));
         }
         let freqs_default = vec![FreqId::NOMINAL; live.len()];
         CandidateTable {

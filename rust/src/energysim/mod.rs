@@ -52,7 +52,7 @@ pub mod work;
 
 use crate::algo::Algorithm;
 use crate::graph::canonical::Fnv;
-pub use work::{node_work, Work};
+pub use work::{nhwc_bytes_factor, node_work, Work};
 
 /// A DVFS frequency state: the core clock in MHz and the voltage the board
 /// runs that clock at (the `V(f)` of the `f·V²` dynamic-power law).
@@ -100,19 +100,60 @@ impl DeviceId {
 /// All device names the simulator knows, in `DeviceId` order.
 pub const DEVICE_NAMES: &[&str] = &["gpu", "dla"];
 
+/// A tensor memory layout. Layout 0 (NCHW) is the implicit layout every
+/// pre-layout plan ran in, so all existing `FreqId` bit patterns (and
+/// therefore profiles, resolve-cache keys, and manifests) are preserved by
+/// construction when the layout axis is off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum Layout {
+    /// Channels-first (the framework default; favors the depthwise path).
+    #[default]
+    NCHW,
+    /// Channels-last (tensor-core-friendly; favors conv at aligned shapes).
+    NHWC,
+}
+
+impl Layout {
+    /// Canonical layout name ("nchw", "nhwc").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Layout::NCHW => "nchw",
+            Layout::NHWC => "nhwc",
+        }
+    }
+
+    /// Parse a canonical layout name. Unknown names are `None` — the CLI
+    /// layers a did-you-mean on top.
+    pub fn parse(name: &str) -> Option<Layout> {
+        match name {
+            "nchw" => Some(Layout::NCHW),
+            "nhwc" => Some(Layout::NHWC),
+            _ => None,
+        }
+    }
+}
+
+/// All layout names the simulator knows, in `Layout` order.
+pub const LAYOUT_NAMES: &[&str] = &["nchw", "nhwc"];
+
 /// Bit position of the device index inside a packed [`FreqId`].
 const DEVICE_SHIFT: u16 = 12;
+/// Bit position of the layout flag inside a packed [`FreqId`].
+const LAYOUT_SHIFT: u16 = 15;
+/// Mask of the device index field inside a packed [`FreqId`].
+const DEVICE_MASK: u16 = 0x7;
 /// Mask of the device-local MHz field inside a packed [`FreqId`].
 const MHZ_MASK: u16 = (1 << DEVICE_SHIFT) - 1;
 
-/// A (device, frequency) choice packed into one `u16`: bits 12..16 carry
-/// the device index, bits 0..12 the device-local core clock in MHz. The
-/// reserved local value 0 means "that device's nominal (maximum) clock".
+/// A (device, frequency, layout) choice packed into one `u16`: bit 15
+/// carries the tensor layout (0 = NCHW), bits 12..15 the device index, and
+/// bits 0..12 the device-local core clock in MHz. The reserved local value
+/// 0 means "that device's nominal (maximum) clock".
 ///
-/// Device 0 (the GPU) packs to the raw MHz value, so every pre-placement
-/// `FreqId` — including `FreqId::NOMINAL` (0 = GPU at nominal) — keeps its
-/// exact bit pattern, profiles its exact database keys, and `--dvfs off`
-/// stays exactly the nominal-only search.
+/// Device 0 (the GPU) in layout NCHW packs to the raw MHz value, so every
+/// pre-placement, pre-layout `FreqId` — including `FreqId::NOMINAL` (0 =
+/// GPU at nominal, NCHW) — keeps its exact bit pattern, profiles its exact
+/// database keys, and `--dvfs off` stays exactly the nominal-only search.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
 pub struct FreqId(pub u16);
 
@@ -122,16 +163,39 @@ impl FreqId {
     pub const NOMINAL: FreqId = FreqId(0);
 
     /// Pack a device and a device-local clock (MHz; 0 = that device's
-    /// nominal state). Local clocks above 4095 MHz don't fit the packed
-    /// field and are a programming error.
+    /// nominal state) in the default NCHW layout. Local clocks above
+    /// 4095 MHz don't fit the packed field and are a programming error, as
+    /// are device indexes above 7 (bit 15 belongs to the layout flag).
     pub fn on(device: DeviceId, mhz: u16) -> FreqId {
         debug_assert!(mhz <= MHZ_MASK, "device-local clock {mhz} MHz exceeds the packed field");
-        FreqId(((device.0 as u16) << DEVICE_SHIFT) | (mhz & MHZ_MASK))
+        debug_assert!(
+            (device.0 as u16) <= DEVICE_MASK,
+            "device index {} exceeds the packed field",
+            device.0
+        );
+        FreqId((((device.0 as u16) & DEVICE_MASK) << DEVICE_SHIFT) | (mhz & MHZ_MASK))
     }
 
     /// The device this state runs on.
     pub fn device(&self) -> DeviceId {
-        DeviceId((self.0 >> DEVICE_SHIFT) as u8)
+        DeviceId(((self.0 >> DEVICE_SHIFT) & DEVICE_MASK) as u8)
+    }
+
+    /// The tensor layout this state computes in.
+    pub fn layout(&self) -> Layout {
+        if self.0 >> LAYOUT_SHIFT == 0 {
+            Layout::NCHW
+        } else {
+            Layout::NHWC
+        }
+    }
+
+    /// The same (device, clock) state in another layout.
+    pub fn with_layout(&self, layout: Layout) -> FreqId {
+        match layout {
+            Layout::NCHW => FreqId(self.0 & !(1 << LAYOUT_SHIFT)),
+            Layout::NHWC => FreqId(self.0 | (1 << LAYOUT_SHIFT)),
+        }
     }
 
     /// The device-local core clock in MHz (0 = that device's nominal).
@@ -150,13 +214,18 @@ impl FreqId {
         self.mhz() == 0
     }
 
-    /// Human-readable label ("nominal", "900MHz", "dla", "dla@640MHz").
+    /// Human-readable label ("nominal", "900MHz", "dla", "dla@640MHz");
+    /// non-default layouts append a "+nhwc" suffix.
     pub fn describe(&self) -> String {
-        match (self.device(), self.mhz()) {
+        let base = match (self.device(), self.mhz()) {
             (DeviceId::GPU, 0) => "nominal".to_string(),
             (DeviceId::GPU, m) => format!("{m}MHz"),
             (d, 0) => d.name().to_string(),
             (d, m) => format!("{}@{m}MHz", d.name()),
+        };
+        match self.layout() {
+            Layout::NCHW => base,
+            Layout::NHWC => format!("{base}+nhwc"),
         }
     }
 }
@@ -331,6 +400,39 @@ impl LinkModel {
     pub fn transfer_cost(&self, bytes: f64) -> (f64, f64) {
         let time_ms = (self.latency_s + bytes / self.bandwidth) * 1e3;
         let energy_mj = (self.energy_per_transfer + bytes * self.energy_per_byte) * 1e3;
+        (time_ms, energy_mj)
+    }
+}
+
+/// Cost model of an implicit layout transpose: when adjacent nodes compute
+/// in different tensor layouts, the consumer re-tiles its input on the way
+/// in. A transpose is bandwidth-bound (read + write one tensor through
+/// on-chip staging), so the model is a fixed kernel launch plus a per-byte
+/// bandwidth/energy term — much cheaper than a device transfer, but charged
+/// on every layout-boundary edge, which is what keeps the search from
+/// flip-flopping layouts node-by-node.
+#[derive(Debug, Clone, Copy)]
+pub struct TransposeModel {
+    /// Fixed per-transpose latency, seconds (kernel launch + tiling setup).
+    pub latency_s: f64,
+    /// Effective re-tiling bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// Data-movement energy, joules per byte (one DRAM round trip).
+    pub energy_per_byte: f64,
+}
+
+impl TransposeModel {
+    /// The on-device NCHW↔NHWC re-tiling kernel.
+    pub fn on_device() -> TransposeModel {
+        TransposeModel { latency_s: 3.0e-6, bandwidth: 300.0e9, energy_per_byte: 80.0e-12 }
+    }
+
+    /// Cost of transposing `bytes` once, in the table's units: milliseconds
+    /// and millijoules-per-inference (same convention as
+    /// [`LinkModel::transfer_cost`]).
+    pub fn transpose_cost(&self, bytes: f64) -> (f64, f64) {
+        let time_ms = (self.latency_s + bytes / self.bandwidth) * 1e3;
+        let energy_mj = (bytes * self.energy_per_byte) * 1e3;
         (time_ms, energy_mj)
     }
 }
@@ -782,6 +884,52 @@ mod tests {
         assert_eq!(DeviceId::parse("dla"), Some(DeviceId::DLA));
         assert_eq!(DeviceId::parse("tpu"), None);
         assert_eq!(DeviceId::DLA.name(), "dla");
+    }
+
+    #[test]
+    fn freq_id_layout_packing_roundtrips() {
+        // Every pre-layout bit pattern IS an NCHW state.
+        assert_eq!(FreqId::NOMINAL.layout(), Layout::NCHW);
+        assert_eq!(FreqId(900).layout(), Layout::NCHW);
+        assert_eq!(FreqId::on(DeviceId::DLA, 640).layout(), Layout::NCHW);
+        for base in [FreqId::NOMINAL, FreqId(900), FreqId::on(DeviceId::DLA, 640)] {
+            let n = base.with_layout(Layout::NHWC);
+            assert_eq!(n.layout(), Layout::NHWC);
+            // Layout is orthogonal to the (device, clock) fields.
+            assert_eq!(n.device(), base.device());
+            assert_eq!(n.mhz(), base.mhz());
+            assert_eq!(n.local(), base.local());
+            assert_eq!(n.is_nominal(), base.is_nominal());
+            // with_layout(NCHW) strips the bit back to the original.
+            assert_eq!(n.with_layout(Layout::NCHW), base);
+            assert_eq!(base.with_layout(Layout::NCHW), base);
+        }
+        assert_eq!(FreqId::NOMINAL.with_layout(Layout::NHWC).describe(), "nominal+nhwc");
+        assert_eq!(FreqId(900).with_layout(Layout::NHWC).describe(), "900MHz+nhwc");
+        assert_eq!(
+            FreqId::on(DeviceId::DLA, 640).with_layout(Layout::NHWC).describe(),
+            "dla@640MHz+nhwc"
+        );
+        assert_eq!(Layout::parse("nchw"), Some(Layout::NCHW));
+        assert_eq!(Layout::parse("nhwc"), Some(Layout::NHWC));
+        assert_eq!(Layout::parse("nhcw"), None);
+        assert_eq!(Layout::NHWC.name(), "nhwc");
+    }
+
+    #[test]
+    fn transpose_model_cost_scales_with_bytes() {
+        let t = TransposeModel::on_device();
+        let (t0, e0) = t.transpose_cost(0.0);
+        let (t1, e1) = t.transpose_cost(1.0e6);
+        // The launch is charged even for empty transposes; energy is pure
+        // data movement.
+        assert!(t0 > 0.0 && e0 == 0.0);
+        assert!(t1 > t0 && e1 > e0);
+        // A transpose is much cheaper than a device transfer of the same
+        // tensor (on-chip re-tiling vs a shared-DRAM round trip).
+        let link = LinkModel::shared_dram();
+        let (lt, le) = link.transfer_cost(1.0e6);
+        assert!(t1 < lt && e1 < le);
     }
 
     #[test]

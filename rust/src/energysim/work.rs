@@ -79,10 +79,18 @@ pub fn node_work(op: &OpKind, in_shapes: &[TensorShape], out_shapes: &[TensorSha
             }
             Work { flops, bytes: touch }
         }
-        OpKind::MatMul => {
+        OpKind::MatMul { act, has_bias } => {
             let (m, k) = (in_shapes[0][0] as f64, in_shapes[0][1] as f64);
             let n = in_shapes[1][1] as f64;
-            Work { flops: 2.0 * m * k * n, bytes: touch }
+            let mut flops = 2.0 * m * k * n;
+            let out_elems = m * n;
+            if *has_bias {
+                flops += out_elems;
+            }
+            if !matches!(act, crate::graph::Activation::None) {
+                flops += out_elems;
+            }
+            Work { flops, bytes: touch }
         }
         OpKind::MaxPool { k, .. } | OpKind::AvgPool { k, .. } => {
             let window = (k.0 * k.1) as f64;
@@ -99,6 +107,41 @@ pub fn node_work(op: &OpKind, in_shapes: &[TensorShape], out_shapes: &[TensorSha
             Work { flops: 0.0, bytes: touch }
         }
         _ => Work { flops: 0.0, bytes: touch },
+    }
+}
+
+/// Relative memory-path cost of executing `op` in NHWC instead of NCHW —
+/// a multiplier on the node's nominal bytes. The signs mirror production
+/// measurements: channels-last feeds the tensor-core conv path without the
+/// implicit transposes cuDNN inserts for NCHW (a win when the channel dims
+/// vectorize, i.e. are multiples of 8), while the depthwise path loses its
+/// per-channel spatial locality in NHWC. GEMM tiles channels-last cleanly
+/// when its reduction/output dims align. Element-wise and data-movement ops
+/// are layout-oblivious (factor 1).
+pub fn nhwc_bytes_factor(op: &OpKind, in_shapes: &[TensorShape]) -> f64 {
+    match op {
+        OpKind::Conv2d { .. } => {
+            let w = &in_shapes[1]; // [K, C, R, S]
+            let (cout, cin) = (w[0], w[1]);
+            if cin % 8 == 0 && cout % 8 == 0 {
+                0.82
+            } else {
+                1.12
+            }
+        }
+        // Depthwise has no channel reduction to vectorize; NHWC scatters
+        // each channel's spatial window across the innermost stride.
+        OpKind::DwConv2d { .. } => 1.30,
+        OpKind::MatMul { .. } => {
+            let k = in_shapes[0][1];
+            let n = in_shapes[1][1];
+            if k % 8 == 0 && n % 8 == 0 {
+                0.90
+            } else {
+                1.05
+            }
+        }
+        _ => 1.0,
     }
 }
 
@@ -164,8 +207,47 @@ mod tests {
 
     #[test]
     fn matmul_flops() {
-        let w = node_work(&OpKind::MatMul, &[vec![4, 8], vec![8, 16]], &[vec![4, 16]]);
+        let w = node_work(&OpKind::matmul(), &[vec![4, 8], vec![8, 16]], &[vec![4, 16]]);
         assert!((w.flops - 2.0 * 4.0 * 8.0 * 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fused_matmul_adds_epilogue_flops() {
+        let base = node_work(&OpKind::matmul(), &[vec![4, 8], vec![8, 16]], &[vec![4, 16]]);
+        let fused = node_work(
+            &OpKind::MatMul { act: Activation::Relu, has_bias: true },
+            &[vec![4, 8], vec![8, 16], vec![4, 16]],
+            &[vec![4, 16]],
+        );
+        let out_elems = 4.0 * 16.0;
+        assert!((fused.flops - base.flops - 2.0 * out_elems).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nhwc_factor_signs() {
+        let conv_aligned = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (1, 1),
+            act: Activation::None,
+            has_bias: false,
+            has_residual: false,
+        };
+        // Aligned channels: NHWC wins conv.
+        assert!(nhwc_bytes_factor(&conv_aligned, &[vec![1, 64, 32, 32], vec![64, 64, 3, 3]]) < 1.0);
+        // Ragged channels: NHWC loses conv.
+        assert!(nhwc_bytes_factor(&conv_aligned, &[vec![1, 3, 32, 32], vec![23, 3, 3, 3]]) > 1.0);
+        // Depthwise always prefers NCHW.
+        let dw = OpKind::DwConv2d {
+            stride: (1, 1),
+            pad: (1, 1),
+            act: Activation::None,
+            has_bias: false,
+        };
+        assert!(nhwc_bytes_factor(&dw, &[vec![1, 64, 32, 32], vec![64, 1, 3, 3]]) > 1.0);
+        // Aligned matmul wins, ragged loses, elementwise is oblivious.
+        assert!(nhwc_bytes_factor(&OpKind::matmul(), &[vec![4, 8], vec![8, 16]]) < 1.0);
+        assert!(nhwc_bytes_factor(&OpKind::matmul(), &[vec![4, 7], vec![7, 9]]) > 1.0);
+        assert_eq!(nhwc_bytes_factor(&OpKind::Relu, &[vec![1, 8, 4, 4]]), 1.0);
     }
 
     #[test]

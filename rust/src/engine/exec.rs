@@ -81,12 +81,18 @@ pub fn execute_node(
             }
             one(y)
         }
-        OpKind::MatMul => {
-            let y = match algo {
+        OpKind::MatMul { act, has_bias } => {
+            let mut y = match algo {
                 Algorithm::GemmNaive => ops::matmul_naive(inputs[0], inputs[1]),
                 Algorithm::GemmBlocked => ops::matmul_blocked(inputs[0], inputs[1]),
                 other => anyhow::bail!("algorithm {other:?} not valid for matmul"),
             };
+            if *has_bias {
+                y = ops::add(&y, inputs[2]);
+            }
+            if *act == Activation::Relu {
+                y = ops::relu(&y);
+            }
             one(y)
         }
         OpKind::Relu => one(ops::relu(inputs[0])),
@@ -298,6 +304,24 @@ mod tests {
         };
         let y3 = execute_node(&op3, Algorithm::ConvDirect, &[&x, &wp[0]]).unwrap();
         assert_close(y1[0].data(), y3[0].data(), 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn fused_matmul_matches_unfused_chain() {
+        // fused matmul+bias+relu == relu(add(matmul(a, b), bias))
+        let mut rng = Rng::seed_from(47);
+        let a = Tensor::rand(&[3, 5], &mut rng, -1.0, 1.0);
+        let b = Tensor::rand(&[5, 4], &mut rng, -1.0, 1.0);
+        let bias = Tensor::rand(&[3, 4], &mut rng, -1.0, 1.0);
+        let plain = execute_node(&OpKind::matmul(), Algorithm::GemmBlocked, &[&a, &b]).unwrap();
+        let expect = ops::relu(&ops::add(&plain[0], &bias));
+        let fused = execute_node(
+            &OpKind::MatMul { act: Activation::Relu, has_bias: true },
+            Algorithm::GemmBlocked,
+            &[&a, &b, &bias],
+        )
+        .unwrap();
+        assert_close(expect.data(), fused[0].data(), 1e-6, 1e-6).unwrap();
     }
 
     #[test]

@@ -88,6 +88,14 @@ fn op_structural_tag(op: &OpKind, h: &mut Fnv) {
             h.write_u64(*eps as u64);
             h.write(&[*has_bias as u8]);
         }
+        // Default epilogue attrs hash nothing extra, so every pre-fusion
+        // matmul keeps its historical hash (and manifests keyed on it).
+        OpKind::MatMul { act, has_bias } => {
+            if !matches!(act, super::Activation::None) || *has_bias {
+                h.write(act.tag().as_bytes());
+                h.write(&[*has_bias as u8]);
+            }
+        }
         OpKind::Concat { axis } => h.write_usize(*axis),
         OpKind::Split { axis, sizes } => {
             h.write_usize(*axis);

@@ -118,8 +118,16 @@ pub enum OpKind {
         /// Whether a bias input follows the weight.
         has_bias: bool,
     },
-    /// Dense matrix multiply (classifier head).
-    MatMul,
+    /// Dense matrix multiply with optional fused bias/activation epilogue
+    /// (classifier heads, attention/FFN blocks). Inputs `[a, b]` + optional
+    /// bias (same shape as the output — a broadcast row bias realized as a
+    /// full constant, matching the `Add` it fuses away).
+    MatMul {
+        /// Fused epilogue activation.
+        act: Activation,
+        /// Whether a bias input follows the operands.
+        has_bias: bool,
+    },
     /// Elementwise rectified linear unit.
     Relu,
     /// Elementwise logistic sigmoid.
@@ -207,6 +215,11 @@ impl OpKind {
         OpKind::Weight { shape, seed, kind: WeightKind::Filter }
     }
 
+    /// Plain (unfused) matrix multiply — the pre-fusion default.
+    pub fn matmul() -> OpKind {
+        OpKind::MatMul { act: Activation::None, has_bias: false }
+    }
+
     /// Weight constructor with an explicit kind.
     pub fn weight_kind(shape: Vec<usize>, seed: u64, kind: WeightKind) -> OpKind {
         OpKind::Weight { shape, seed, kind }
@@ -238,7 +251,7 @@ impl OpKind {
             OpKind::Weight { .. } => "weight",
             OpKind::Conv2d { .. } => "conv2d",
             OpKind::DwConv2d { .. } => "dwconv2d",
-            OpKind::MatMul => "matmul",
+            OpKind::MatMul { .. } => "matmul",
             OpKind::Relu => "relu",
             OpKind::Sigmoid => "sigmoid",
             OpKind::Add => "add",
@@ -339,15 +352,23 @@ impl OpKind {
                 }
                 one(vec![n, c, oh, ow])
             }
-            OpKind::MatMul => {
-                if inputs.len() != 2 {
-                    return Err("MatMul expects 2 inputs".into());
+            OpKind::MatMul { has_bias, .. } => {
+                let expect = 2 + usize::from(*has_bias);
+                if inputs.len() != expect {
+                    return Err(format!("MatMul expects {expect} inputs, got {}", inputs.len()));
                 }
                 let (a, b) = (&inputs[0], &inputs[1]);
                 if a.len() != 2 || b.len() != 2 || a[1] != b[0] {
                     return Err(format!("MatMul shapes incompatible: {a:?} @ {b:?}"));
                 }
-                one(vec![a[0], b[1]])
+                let out = vec![a[0], b[1]];
+                if *has_bias && inputs[2] != out {
+                    return Err(format!(
+                        "MatMul bias must be {out:?}, got {:?}",
+                        inputs[2]
+                    ));
+                }
+                one(out)
             }
             OpKind::Relu | OpKind::Sigmoid | OpKind::Flatten | OpKind::Softmax => {
                 if inputs.len() != 1 {
@@ -535,6 +556,13 @@ impl OpKind {
                     k.0, k.1, stride.0, stride.1, pad.0, pad.1
                 ));
             }
+            // Epilogue attrs appear only when non-default, so the plain
+            // matmul keeps its historical signature byte-for-byte.
+            OpKind::MatMul { act, has_bias } => {
+                if !matches!(act, Activation::None) || *has_bias {
+                    s.push_str(&format!(";act={};b={}", act.tag(), *has_bias as u8));
+                }
+            }
             OpKind::Concat { axis } => s.push_str(&format!(";ax={axis}")),
             OpKind::Split { axis, sizes } => {
                 s.push_str(&format!(";ax={axis};sz="));
@@ -640,14 +668,33 @@ mod tests {
     #[test]
     fn matmul_and_flatten() {
         assert_eq!(
-            OpKind::MatMul.infer_shapes(&[vec![4, 8], vec![8, 3]]).unwrap(),
+            OpKind::matmul().infer_shapes(&[vec![4, 8], vec![8, 3]]).unwrap(),
             vec![vec![4, 3]]
         );
-        assert!(OpKind::MatMul.infer_shapes(&[vec![4, 8], vec![7, 3]]).is_err());
+        assert!(OpKind::matmul().infer_shapes(&[vec![4, 8], vec![7, 3]]).is_err());
         assert_eq!(
             OpKind::Flatten.infer_shapes(&[vec![2, 3, 4, 5]]).unwrap(),
             vec![vec![2, 60]]
         );
+    }
+
+    #[test]
+    fn fused_matmul_shapes_and_signature() {
+        let fused = OpKind::MatMul { act: Activation::Relu, has_bias: true };
+        assert_eq!(
+            fused
+                .infer_shapes(&[vec![4, 8], vec![8, 3], vec![4, 3]])
+                .unwrap(),
+            vec![vec![4, 3]]
+        );
+        // Bias must match the output shape.
+        assert!(fused.infer_shapes(&[vec![4, 8], vec![8, 3], vec![3]]).is_err());
+        // The plain matmul keeps its historical attribute-free signature;
+        // fused epilogues key distinct cost rows.
+        let shapes = vec![vec![4, 8], vec![8, 3]];
+        assert_eq!(OpKind::matmul().signature(&shapes), "matmul;4x8;8x3");
+        let fshapes = vec![vec![4, 8], vec![8, 3], vec![4, 3]];
+        assert!(fused.signature(&fshapes).starts_with("matmul;act=relu;b=1;"));
     }
 
     #[test]

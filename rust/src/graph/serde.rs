@@ -5,7 +5,7 @@
 use super::op::{Activation, OpKind, WeightKind};
 use super::{Graph, NodeId, PortRef};
 use crate::algo::{Algorithm, Assignment};
-use crate::energysim::{DeviceId, FreqId};
+use crate::energysim::{DeviceId, FreqId, Layout};
 use crate::util::json::{self, Json};
 use std::path::Path;
 
@@ -92,6 +92,13 @@ fn op_to_json(op: &OpKind) -> Json {
         OpKind::FoldBnBias { eps, has_bias } => {
             o.set("eps_bits", *eps as f64).set("bias", *has_bias);
         }
+        // Epilogue attrs only when non-default: plain matmuls keep their
+        // historical attribute-free JSON byte-for-byte.
+        OpKind::MatMul { act, has_bias } => {
+            if !matches!(act, Activation::None) || *has_bias {
+                o.set("act", act.tag()).set("bias", *has_bias);
+            }
+        }
         OpKind::Concat { axis } => {
             o.set("axis", *axis);
         }
@@ -132,7 +139,10 @@ fn op_from_json(v: &Json) -> anyhow::Result<OpKind> {
             act: act_from(v.get("act").and_then(Json::as_str).unwrap_or("none"))?,
             has_bias: flag("bias"),
         },
-        "matmul" => OpKind::MatMul,
+        "matmul" => OpKind::MatMul {
+            act: act_from(v.get("act").and_then(Json::as_str).unwrap_or("none"))?,
+            has_bias: flag("bias"),
+        },
         "relu" => OpKind::Relu,
         "sigmoid" => OpKind::Sigmoid,
         "add" => OpKind::Add,
@@ -241,6 +251,8 @@ pub fn graph_from_json(v: &Json) -> anyhow::Result<Graph> {
 /// and all-GPU plans byte-identically to pre-placement plans: `freq_mhz`
 /// always carries the **device-local** clock (for the GPU that equals the
 /// raw packed value), and the `device` key only appears for mixed plans.
+/// Likewise the `layout` key only appears when some node runs NHWC, so
+/// every all-NCHW plan keeps its historical bytes.
 pub fn plan_to_json(g: &Graph, a: &Assignment) -> Json {
     let mut root = graph_to_json(g);
     let algos: Vec<Json> = g
@@ -268,14 +280,25 @@ pub fn plan_to_json(g: &Graph, a: &Assignment) -> Json {
             .collect();
         root.set("device", Json::Arr(devices));
     }
+    if g.ids().any(|id| a.freq(id).layout() != Layout::NCHW) {
+        let layouts: Vec<Json> = g
+            .ids()
+            .map(|id| match a.get(id) {
+                Some(_) => Json::Str(a.freq(id).layout().name().to_string()),
+                None => Json::Null,
+            })
+            .collect();
+        root.set("layout", Json::Arr(layouts));
+    }
     root
 }
 
 /// Load an optimized plan (graph + assignment + optional DVFS states +
-/// optional per-node device placement). Unknown device names are
-/// rejected; a `device` entry composes with the node's device-local
-/// `freq_mhz` into the packed state, so a DLA node at its nominal clock
-/// still lands on the DLA.
+/// optional per-node device placement + optional per-node layouts).
+/// Unknown device names are rejected; a `device` entry composes with the
+/// node's device-local `freq_mhz` into the packed state, so a DLA node at
+/// its nominal clock still lands on the DLA. A `layout` entry folds into
+/// the same packed state via the layout bit.
 pub fn plan_from_json(v: &Json, reg: &crate::algo::AlgorithmRegistry) -> anyhow::Result<(Graph, Assignment)> {
     let g = graph_from_json(v)?;
     let mut a = Assignment::default_for(&g, reg);
@@ -342,6 +365,23 @@ pub fn plan_from_json(v: &Json, reg: &crate::algo::AlgorithmRegistry) -> anyhow:
             if let Some(dev) = dev {
                 if *dev != DeviceId::GPU && a.get(NodeId(i)).is_some() {
                     a.set_freq(NodeId(i), FreqId::on(*dev, 0));
+                }
+            }
+        }
+    }
+    if let Some(arr) = v.get("layout").and_then(Json::as_arr) {
+        anyhow::ensure!(arr.len() == g.len(), "layout length != node count");
+        for (i, entry) in arr.iter().enumerate() {
+            if let Some(name) = entry.as_str() {
+                let lay = Layout::parse(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "layout[{i}]: unknown layout `{name}` (known: {})",
+                        crate::energysim::LAYOUT_NAMES.join(", ")
+                    )
+                })?;
+                if lay != Layout::NCHW && a.get(NodeId(i)).is_some() {
+                    let f = a.freq(NodeId(i));
+                    a.set_freq(NodeId(i), f.with_layout(lay));
                 }
             }
         }
@@ -489,6 +529,56 @@ mod tests {
         let err = plan_from_json(&bad, &reg).unwrap_err().to_string();
         assert!(err.contains("unknown device `tpu`"), "{err}");
         assert!(err.contains("gpu, dla"), "{err}");
+    }
+
+    #[test]
+    fn layout_plans_roundtrip_and_nchw_plans_stay_legacy() {
+        use crate::energysim::{DeviceId, FreqId, Layout};
+        let g = models::simple::build_cnn(tiny());
+        let reg = AlgorithmRegistry::new();
+        let a = Assignment::default_for(&g, &reg);
+        let conv = g
+            .nodes()
+            .find(|(_, n)| matches!(n.op, OpKind::Conv2d { .. }))
+            .unwrap()
+            .0;
+
+        // All-NCHW plan: no `layout` key — byte-identical to a plan
+        // written before the layout axis existed.
+        let j = plan_to_json(&g, &a);
+        assert!(j.get("layout").is_none());
+
+        // NHWC at the nominal clock: layout key appears, freq_mhz does
+        // not (the clock IS nominal — the layout bit is not a clock).
+        let mut mixed = a.clone();
+        mixed.set_freq(conv, FreqId::NOMINAL.with_layout(Layout::NHWC));
+        let j2 = plan_to_json(&g, &mixed);
+        assert!(j2.get("freq_mhz").is_none());
+        assert!(j2.get("device").is_none());
+        let lays = j2.get("layout").unwrap().as_arr().unwrap();
+        assert_eq!(lays[conv.0].as_str(), Some("nhwc"));
+        let (back_g, back_a) = plan_from_json(&j2, &reg).unwrap();
+        assert_eq!(graph_hash(&g), graph_hash(&back_g));
+        assert_eq!(back_a.freq(conv).layout(), Layout::NHWC);
+        assert_eq!(mixed.distance(&back_a), 0);
+
+        // Layout composes with device + clock: a DLA node at 640 MHz in
+        // NHWC round-trips to the same packed state.
+        let mut full = a.clone();
+        full.set_freq(conv, FreqId::on(DeviceId::DLA, 640).with_layout(Layout::NHWC));
+        let j3 = plan_to_json(&g, &full);
+        let freqs3 = j3.get("freq_mhz").unwrap().as_arr().unwrap();
+        assert_eq!(freqs3[conv.0].as_usize(), Some(640));
+        let (_, back3) = plan_from_json(&j3, &reg).unwrap();
+        assert_eq!(back3.freq(conv), FreqId::on(DeviceId::DLA, 640).with_layout(Layout::NHWC));
+        assert_eq!(full.distance(&back3), 0);
+
+        // Unknown layout names are rejected with the known list.
+        let mut bad = j2.clone();
+        bad.set("layout", Json::Arr(vec![Json::Str("nhcw".to_string()); g.len()]));
+        let err = plan_from_json(&bad, &reg).unwrap_err().to_string();
+        assert!(err.contains("unknown layout `nhcw`"), "{err}");
+        assert!(err.contains("nchw, nhwc"), "{err}");
     }
 
     #[test]

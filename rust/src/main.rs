@@ -73,6 +73,7 @@ const COMMON_OPTS: &[&str] = &[
     "artifacts",
     "provider",
     "devices",
+    "layouts",
     "resolution",
     "width-div",
     "batch",
@@ -129,11 +130,12 @@ USAGE: eadgo <subcommand> [--options]
             [--incremental-inner on|off] [--frontier N]
             [--batches 1,2,4,8] [--save-frontier plans.json]
             [--db profiles.json] [--provider sim|cpu] [--devices gpu,dla]
-            [--config run.json]
+            [--layouts nchw,nhwc] [--config run.json]
   reproduce --table (1|2|3|4|5|all) [--quick] [--seed S]
   profile   --model M [--provider sim|cpu] [--db profiles.json]
   constrain --model M --time-budget MS [--probes 8] [--threads T]
             [--dvfs off|per-graph|per-node] [--devices gpu,dla]
+            [--layouts nchw,nhwc]
   run       --model M [--artifacts DIR] [--iters N]
   serve     --model M [--plan plan.json] [--frontier plans.json]
             [--adaptive] [--optimize [OBJ]] [--requests N]
@@ -203,6 +205,17 @@ USAGE: eadgo <subcommand> [--options]
   save as v4 manifests with a per-node device array; serving one
   requires the same --devices list, and all-GPU plans stay byte-stable.
 
+  --layouts nchw,nhwc (sim providers only) adds the tensor memory layout
+  as a per-node cost axis: every node may run NCHW or NHWC, the sim
+  reprices its memory path per layout (NHWC favors tensor-core-friendly
+  conv and matmul shapes, NCHW favors depthwise), and every edge whose
+  endpoints disagree is charged an implicit transpose. The search picks
+  (algorithm, frequency, device, layout) jointly. The list must start
+  with nchw; `--layouts nchw` is the default and is bit-identical to
+  omitting the flag. Plans that assign NHWC anywhere save as v5
+  manifests with a per-node layout array; single-layout plans stay
+  byte-stable.
+
   serve --feedback on closes the optimize->serve loop into a
   self-tuning server: every executed batch feeds its measured service
   time into a drift detector against the oracle's predicted cost;
@@ -239,6 +252,10 @@ fn build_context(cfg: &RunConfig) -> anyhow::Result<OptimizerContext> {
         "cpu" if multi_device => anyhow::bail!(
             "--devices {} needs the sim provider; the cpu provider measures one real device",
             cfg.devices.join(",")
+        ),
+        "cpu" if cfg.layouts.len() > 1 => anyhow::bail!(
+            "--layouts {} needs the sim provider; the cpu provider measures one real layout",
+            cfg.layouts.join(",")
         ),
         "cpu" => Box::new(CpuProvider::new(None)),
         other => anyhow::bail!("unknown provider `{other}` (sim|cpu)"),
@@ -297,8 +314,14 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     } else {
         String::new()
     };
+    // Same policy for layouts: the note appears only when the axis is on.
+    let lay_note = if cfg.layouts.len() > 1 {
+        format!(", layouts={}", cfg.layouts.join("+"))
+    } else {
+        String::new()
+    };
     println!(
-        "optimizing {} ({} nodes) for {} (alpha={}, provider={}{dev_note}, threads={}, dvfs={})",
+        "optimizing {} ({} nodes) for {} (alpha={}, provider={}{dev_note}{lay_note}, threads={}, dvfs={})",
         cfg.model,
         g0.runtime_node_count(),
         objective.describe(),
@@ -328,6 +351,7 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     );
     if !matches!(scfg.dvfs, eadgo::search::DvfsMode::Off)
         || res.assignment.uses_non_gpu_device()
+        || res.assignment.uses_non_default_layout()
     {
         println!("plan frequency: {}", eadgo::report::describe_freqs(&res.assignment));
     }
@@ -534,6 +558,7 @@ fn cmd_constrain(args: &Args) -> anyhow::Result<()> {
         );
         if !matches!(cfg.dvfs, eadgo::search::DvfsMode::Off)
             || r.result.assignment.uses_non_gpu_device()
+            || r.result.assignment.uses_non_default_layout()
         {
             println!("plan frequency: {}", eadgo::report::describe_freqs(&r.result.assignment));
         }

@@ -1,0 +1,136 @@
+//! A small transformer-style attention block — the zoo's matmul-heavy
+//! model, built to exercise the matmul-side rewrite family:
+//!
+//! * Q and K projections share **tied weights** (same seed): their cones
+//!   are byte-identical computations, so the `cse` rule can collapse one
+//!   whole projection matmul.
+//! * The FFN keeps its bias `Add`s and `Relu` as separate nodes (origin
+//!   form), so `fuse_matmul_epilogue` has real sites.
+//! * Dimensions mix tensor-core-friendly multiples of 8 (the model dim)
+//!   with ragged sizes (the FFN hidden dim, the classifier), so the NHWC
+//!   layout axis prices both sides of its matmul bytes factor.
+//! * The context passes through a two-head mix stage whose second
+//!   `Split` directly re-splits the first stage's `Concat` — the
+//!   re-split-fused-projection pattern `concat_split_elim` cancels, so
+//!   the split/concat algebra has a zoo site too.
+//!
+//! The attention itself is the gated (elementwise) simplification — score
+//! = softmax(Q + K), context = score ⊙ V — which stays inside the
+//! operator set (no transpose op) while keeping the projection/FFN
+//! structure of a real block. Tensors are rank-2 `[seq, dim]` throughout.
+
+use super::{Builder, ModelConfig};
+use crate::graph::{Graph, NodeId, OpKind, PortRef};
+
+/// Project `x` `[seq, din]` through a weight `[din, dout]`.
+fn proj(b: &mut Builder, x: NodeId, din: usize, dout: usize, seed: u64, name: &str) -> NodeId {
+    let w = b.g.add1(OpKind::weight(vec![din, dout], seed), &[], &format!("{name}_w"));
+    b.g.add1(OpKind::matmul(), &[x, w], name)
+}
+
+/// Matmul + separate bias add (full-output-shape constant) — the unfused
+/// origin idiom `fuse_matmul_epilogue` folds away.
+fn linear_bias(
+    b: &mut Builder,
+    x: NodeId,
+    seq: usize,
+    din: usize,
+    dout: usize,
+    name: &str,
+) -> NodeId {
+    let w = b.weight(&[din, dout], &format!("{name}_w"));
+    let mm = b.g.add1(OpKind::matmul(), &[x, w], name);
+    let bias = b.weight(&[seq, dout], &format!("{name}_bias"));
+    b.g.add1(OpKind::Add, &[mm, bias], &format!("{name}_add"))
+}
+
+/// Build the attention block model: tied Q/K + V projections, gated
+/// attention, biased two-layer FFN with residual, classifier head.
+pub fn build(cfg: ModelConfig) -> Graph {
+    let mut b = Builder::new(0x0B);
+    let seq = cfg.resolution; // sequence length (rank-2 model: no batch dim)
+    let dim = cfg.ch(256); // multiple of 8 at the default width divisors
+    let hid = cfg.ch(512) + 3; // deliberately ragged
+    let x = b.input(&[seq, dim]);
+
+    // Tied Q/K: one seed, two structurally identical projection cones.
+    let qk_seed = b.seed();
+    let q = proj(&mut b, x, dim, dim, qk_seed, "q");
+    let k = proj(&mut b, x, dim, dim, qk_seed, "k");
+    let v = b.seed();
+    let v = proj(&mut b, x, dim, dim, v, "v");
+
+    // Gated attention: score = softmax(q + k) over the last dim, applied
+    // elementwise to the value projection.
+    let score_pre = b.add(q, k, "score_pre");
+    let score = b.g.add1(OpKind::Softmax, &[score_pre], "score");
+    let ctx = b.g.add1(OpKind::Mul, &[score, v], "ctx");
+
+    // Two-head mixing, the fused-projection idiom stacked twice: split
+    // the context into heads, activate each, re-concat — and the second
+    // stage immediately re-splits the merged tensor to gate each head.
+    // The adjacent Concat→Split is exactly what `concat_split_elim`
+    // cancels, the way it cancels re-split fused QKV projections.
+    let half = dim / 2; // dim is a multiple of 8, so heads split evenly
+    let heads = b.g.add1(OpKind::Split { axis: 1, sizes: vec![half, half] }, &[ctx], "heads");
+    let h_a = b.g.add(OpKind::Relu, vec![PortRef { node: heads, port: 0 }], "head_a");
+    let h_b = b.g.add(OpKind::Relu, vec![PortRef { node: heads, port: 1 }], "head_b");
+    let mixed = b.g.add1(OpKind::Concat { axis: 1 }, &[h_a, h_b], "mixed");
+    let heads2 = b.g.add1(OpKind::Split { axis: 1, sizes: vec![half, half] }, &[mixed], "heads2");
+    let s_a = b.weight(&[seq, half], "head_scale_a");
+    let s_b = b.weight(&[seq, half], "head_scale_b");
+    let g_a =
+        b.g.add(OpKind::Mul, vec![PortRef { node: heads2, port: 0 }, PortRef::of(s_a)], "gated_a");
+    let g_b =
+        b.g.add(OpKind::Mul, vec![PortRef { node: heads2, port: 1 }, PortRef::of(s_b)], "gated_b");
+    let mix = b.g.add1(OpKind::Concat { axis: 1 }, &[g_a, g_b], "mixed2");
+
+    // FFN with unfused bias/relu epilogues and a residual join.
+    let h = linear_bias(&mut b, mix, seq, dim, hid, "ffn1");
+    let h = b.relu(h, "ffn1_relu");
+    let ffn = linear_bias(&mut b, h, seq, hid, dim, "ffn2");
+    let res = b.add(mix, ffn, "residual");
+
+    // Classifier head over the (ragged) class count.
+    let head = linear_bias(&mut b, res, seq, dim, cfg.classes, "head");
+    let sm = b.g.add1(OpKind::Softmax, &[head], "softmax");
+    b.finish(&[sm])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{AlgorithmRegistry, Assignment};
+    use crate::engine::ReferenceEngine;
+    use crate::subst::RuleSet;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn attention_runs_end_to_end() {
+        let cfg = ModelConfig { resolution: 16, ..Default::default() };
+        let g = build(cfg);
+        let reg = AlgorithmRegistry::new();
+        let a = Assignment::default_for(&g, &reg);
+        let eng = ReferenceEngine::new();
+        let mut rng = Rng::seed_from(3);
+        let x = Tensor::rand(&[16, 64], &mut rng, -1.0, 1.0);
+        let out = eng.run(&g, &a, &[x]).unwrap();
+        assert_eq!(out.outputs[0].shape(), &[16, 10]);
+        // each row of the softmax head sums to 1
+        let row: f32 = out.outputs[0].data()[..10].iter().sum();
+        assert!((row - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn attention_offers_matmul_family_sites() {
+        // The model must actually feed the new rules: a cse site (tied
+        // Q/K) and matmul epilogue sites (FFN bias adds).
+        let g = build(ModelConfig::default());
+        let sites = RuleSet::standard().find_sites(&g).unwrap();
+        let names: Vec<&str> = sites.iter().map(|s| s.rule_name()).collect();
+        assert!(names.contains(&"cse"), "no cse site: {names:?}");
+        assert!(names.contains(&"fuse_matmul_epilogue"), "no epilogue site: {names:?}");
+        assert!(names.contains(&"concat_split_elim"), "no concat_split site: {names:?}");
+    }
+}

@@ -7,6 +7,8 @@
 //! substitution opportunities the paper's optimizer exploits are purely
 //! topological and survive the scaling.
 
+/// Transformer-style attention block (tied Q/K, biased FFN).
+pub mod attention;
 /// Inception-v3 (branch-and-concat modules).
 pub mod inception;
 /// MobileNetV1 (depthwise-separable convolutions).
@@ -207,7 +209,7 @@ impl Builder {
         let gap = self.global_avgpool(x, "gap");
         let flat = self.g.add1(OpKind::Flatten, &[gap], "flatten");
         let w = self.weight(&[cin, classes], "fc_w");
-        let mm = self.g.add1(OpKind::MatMul, &[flat, w], "fc");
+        let mm = self.g.add1(OpKind::matmul(), &[flat, w], "fc");
         self.g.add1(OpKind::Softmax, &[mm], "softmax")
     }
 
@@ -231,13 +233,14 @@ pub fn by_name(name: &str, cfg: ModelConfig) -> Option<Graph> {
         "vgg" | "vgg16" | "vgg-16" => Some(vgg::build(cfg)),
         "simple" | "quickstart" => Some(simple::build_cnn(cfg)),
         "mlp" => Some(simple::build_mlp(cfg)),
+        "attention" | "transformer" => Some(attention::build(cfg)),
         _ => None,
     }
 }
 
 /// All zoo model names (reporting).
 pub fn zoo_names() -> &'static [&'static str] {
-    &["squeezenet", "inception", "resnet", "mobilenet", "vgg", "simple", "mlp"]
+    &["squeezenet", "inception", "resnet", "mobilenet", "vgg", "simple", "mlp", "attention"]
 }
 
 #[cfg(test)]

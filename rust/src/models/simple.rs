@@ -28,10 +28,10 @@ pub fn build_mlp(cfg: ModelConfig) -> Graph {
     let x = b.input(&[cfg.batch, 3, cfg.resolution, cfg.resolution]);
     let flat = b.g.add1(crate::graph::OpKind::Flatten, &[x], "flatten");
     let w1 = b.weight(&[features, 64], "w1");
-    let h = b.g.add1(crate::graph::OpKind::MatMul, &[flat, w1], "fc1");
+    let h = b.g.add1(crate::graph::OpKind::matmul(), &[flat, w1], "fc1");
     let r = b.relu(h, "relu1");
     let w2 = b.weight(&[64, cfg.classes], "w2");
-    let o = b.g.add1(crate::graph::OpKind::MatMul, &[r, w2], "fc2");
+    let o = b.g.add1(crate::graph::OpKind::matmul(), &[r, w2], "fc2");
     let sm = b.g.add1(crate::graph::OpKind::Softmax, &[o], "softmax");
     b.finish(&[sm])
 }

@@ -15,7 +15,10 @@
 
 use crate::algo::{Algorithm, AlgorithmRegistry};
 use crate::cost::{CostDb, NodeCost};
-use crate::energysim::{node_work, DeviceId, EnergyModel, FreqId, FreqState, LinkModel, Work};
+use crate::energysim::{
+    nhwc_bytes_factor, node_work, DeviceId, EnergyModel, FreqId, FreqState, Layout, LinkModel,
+    Work,
+};
 use crate::engine::exec::execute_node;
 use crate::engine::pjrt::PjrtEngine;
 use crate::graph::{Graph, OpKind, TensorShape};
@@ -101,8 +104,16 @@ impl CostProvider for SimV100Provider {
         algo: Algorithm,
         freq: FreqId,
     ) -> NodeCost {
-        let w = node_work(op, in_shapes, out_shapes);
-        let c = self.model.measured_cost_at(sig, &w, algo, freq);
+        let mut w = node_work(op, in_shapes, out_shapes);
+        // The layout axis reprices the memory path only; NCHW (bit clear)
+        // skips the multiply entirely so pre-layout requests stay
+        // bit-identical.
+        if freq.layout() == Layout::NHWC {
+            w.bytes *= nhwc_bytes_factor(op, in_shapes);
+        }
+        // Strip the layout bit before the model sees the state: DVFS table
+        // lookups and jitter keys are layout-independent.
+        let c = self.model.measured_cost_at(sig, &w, algo, freq.local());
         NodeCost { time_ms: c.time_ms, power_w: c.power_w }
     }
 }
@@ -170,9 +181,13 @@ impl CostProvider for SimHeteroProvider {
         freq: FreqId,
     ) -> NodeCost {
         let model = self.model_for(freq.device());
-        let w = node_work(op, in_shapes, out_shapes);
-        // Strip the device bits: each model is device-local, so its DVFS
-        // table lookups and jitter keys match a single-device provider's.
+        let mut w = node_work(op, in_shapes, out_shapes);
+        if freq.layout() == Layout::NHWC {
+            w.bytes *= nhwc_bytes_factor(op, in_shapes);
+        }
+        // Strip the device and layout bits: each model is device-local, so
+        // its DVFS table lookups and jitter keys match a single-device
+        // provider's.
         let c = model.measured_cost_at(sig, &w, algo, freq.local());
         NodeCost { time_ms: c.time_ms, power_w: c.power_w }
     }
@@ -416,7 +431,11 @@ mod tests {
         let out_shapes = &shapes[2];
         let v100 = SimV100Provider::new(7);
         let hetero = SimHeteroProvider::new(7);
-        for freq in [FreqId::NOMINAL, FreqId(900)] {
+        for freq in [
+            FreqId::NOMINAL,
+            FreqId(900),
+            FreqId::NOMINAL.with_layout(Layout::NHWC),
+        ] {
             let a = v100.measure(&sig, &node.op, &in_shapes, out_shapes, Algorithm::ConvDirect, freq);
             let b = hetero.measure(&sig, &node.op, &in_shapes, out_shapes, Algorithm::ConvDirect, freq);
             assert_eq!(a.time_ms.to_bits(), b.time_ms.to_bits(), "GPU route must be bit-identical");
@@ -434,6 +453,52 @@ mod tests {
         assert!(hetero.link_model().is_some());
         assert!(v100.link_model().is_none());
         assert_eq!(v100.device_states().len(), 1);
+    }
+
+    #[test]
+    fn nhwc_reprices_the_memory_path_per_op() {
+        let prov = SimV100Provider::new(7);
+        let nchw = FreqId::NOMINAL;
+        let nhwc = FreqId::NOMINAL.with_layout(Layout::NHWC);
+
+        // Tensor-core-aligned 1x1 conv at a memory-bound shape (low
+        // channel count, large spatial): NHWC is cheaper.
+        let conv = OpKind::Conv2d {
+            stride: (1, 1),
+            pad: (0, 0),
+            act: Activation::None,
+            has_bias: false,
+            has_residual: false,
+        };
+        let conv_in = vec![vec![1, 16, 128, 128], vec![16, 16, 1, 1]];
+        let conv_out = vec![vec![1, 16, 128, 128]];
+        let sig = conv.signature(&conv_in);
+        let a = prov.measure(&sig, &conv, &conv_in, &conv_out, Algorithm::Conv1x1Gemm, nchw);
+        let b = prov.measure(&sig, &conv, &conv_in, &conv_out, Algorithm::Conv1x1Gemm, nhwc);
+        assert!(b.time_ms < a.time_ms, "aligned conv must get cheaper in NHWC");
+
+        // Depthwise conv walks channels-last badly: NHWC is dearer.
+        let dw = OpKind::DwConv2d {
+            stride: (1, 1),
+            pad: (1, 1),
+            act: Activation::None,
+            has_bias: false,
+        };
+        let dw_in = vec![vec![1, 32, 128, 128], vec![32, 1, 3, 3]];
+        let dw_out = vec![vec![1, 32, 128, 128]];
+        let dsig = dw.signature(&dw_in);
+        let da = prov.measure(&dsig, &dw, &dw_in, &dw_out, Algorithm::DwDirect, nchw);
+        let db = prov.measure(&dsig, &dw, &dw_in, &dw_out, Algorithm::DwDirect, nhwc);
+        assert!(db.time_ms > da.time_ms, "depthwise must get dearer in NHWC");
+
+        // Layout-neutral ops are bit-identical across the layout bit.
+        let relu = OpKind::Relu;
+        let r_in = vec![vec![1, 8, 32, 32]];
+        let rsig = relu.signature(&r_in);
+        let ra = prov.measure(&rsig, &relu, &r_in, &r_in, Algorithm::Passthrough, nchw);
+        let rb = prov.measure(&rsig, &relu, &r_in, &r_in, Algorithm::Passthrough, nhwc);
+        assert_eq!(ra.time_ms.to_bits(), rb.time_ms.to_bits());
+        assert_eq!(ra.power_w.to_bits(), rb.power_w.to_bits());
     }
 
     #[test]

@@ -152,6 +152,14 @@ const FRONTIER_VERSION_BATCHED: i64 = 3;
 /// emitting v2/v3 byte-identically.
 const FRONTIER_VERSION_PLACED: i64 = 4;
 
+/// Frontier-manifest version once any plan computes a node in a
+/// non-default layout: v5 plan entries embed the per-node `layout` array
+/// (written/parsed by the same plan serde, which rejects unknown layout
+/// names). Loaders treat a missing `layout` as all-NCHW, so v2/v3/v4 files
+/// remain readable forever; all-NCHW frontiers keep emitting their
+/// historical version byte-identically.
+const FRONTIER_VERSION_LAYOUT: i64 = 5;
+
 fn cost_to_json(c: &GraphCost) -> Json {
     let mut o = Json::obj();
     o.set("time_ms", c.time_ms).set("energy_j", c.energy_j).set("freq_mhz", c.freq.0 as i64);
@@ -175,14 +183,19 @@ fn cost_from_json(v: &Json) -> anyhow::Result<GraphCost> {
 /// identical to the pre-batch-axis writer; any `batch > 1` point upgrades
 /// the document to v3, where every plan entry carries its batch; any plan
 /// placing a node off the GPU upgrades it to v4, where mixed entries
-/// carry per-node `device` arrays.
+/// carry per-node `device` arrays; any plan computing a node in a
+/// non-default layout upgrades it to v5, where layout-mixed entries carry
+/// per-node `layout` arrays.
 pub fn frontier_to_json(f: &PlanFrontier) -> Json {
     let batched = f.points().iter().any(|p| p.batch > 1);
     let placed = f.points().iter().any(|p| p.assignment.uses_non_gpu_device());
+    let laid_out = f.points().iter().any(|p| p.assignment.uses_non_default_layout());
     let mut root = Json::obj();
     root.set(
         "version",
-        if placed {
+        if laid_out {
+            FRONTIER_VERSION_LAYOUT
+        } else if placed {
             FRONTIER_VERSION_PLACED
         } else if batched {
             FRONTIER_VERSION_BATCHED
@@ -547,6 +560,58 @@ mod tests {
         }
         assert_eq!(back.points()[1].assignment.freq(conv), FreqId::on(DeviceId::DLA, 0));
         // Single-device frontiers never pick up the new version.
+        assert_eq!(
+            frontier_to_json(&tiny_frontier()).get("version").and_then(Json::as_usize),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn laid_out_frontier_roundtrips_as_v5_with_layout_arrays() {
+        use crate::energysim::Layout;
+        use crate::graph::canonical::graph_hash;
+        use crate::graph::OpKind;
+        use crate::models::{self, ModelConfig};
+        let cfg = ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 };
+        let reg = AlgorithmRegistry::new();
+        let g = models::simple::build_cnn(cfg);
+        let nchw = Assignment::default_for(&g, &reg);
+        let conv = g.nodes().find(|(_, n)| matches!(n.op, OpKind::Conv2d { .. })).unwrap().0;
+        let mut mixed = nchw.clone();
+        mixed.set_freq(conv, mixed.freq(conv).with_layout(Layout::NHWC));
+        assert!(mixed.uses_non_default_layout());
+        let f = PlanFrontier::from_points(vec![
+            PlanPoint {
+                graph: g.clone(),
+                assignment: nchw,
+                cost: GraphCost { time_ms: 1.0, energy_j: 250.0, freq: FreqId::NOMINAL },
+                weight: 0.0,
+                batch: 1,
+            },
+            PlanPoint {
+                graph: g,
+                assignment: mixed,
+                cost: GraphCost { time_ms: 1.0, energy_j: 200.0, freq: FreqId::NOMINAL },
+                weight: 1.0,
+                batch: 1,
+            },
+        ]);
+        assert_eq!(f.len(), 2);
+        let j = frontier_to_json(&f);
+        assert_eq!(j.get("version").and_then(Json::as_usize), Some(5));
+        let plans = j.get("plans").and_then(Json::as_arr).unwrap();
+        // Only the layout-mixed plan carries a layout array; the all-NCHW
+        // entry stays in the legacy shape.
+        assert!(plans[0].get("layout").is_none());
+        assert!(plans[1].get("layout").is_some());
+        let back = frontier_from_json(&j, &AlgorithmRegistry::new()).unwrap();
+        assert_eq!(back.len(), f.len());
+        for (a, b) in f.points().iter().zip(back.points()) {
+            assert_eq!(graph_hash(&a.graph), graph_hash(&b.graph));
+            assert_eq!(a.assignment.distance(&b.assignment), 0);
+        }
+        assert_eq!(back.points()[1].assignment.freq(conv).layout(), Layout::NHWC);
+        // Layout-free frontiers never pick up the new version.
         assert_eq!(
             frontier_to_json(&tiny_frontier()).get("version").and_then(Json::as_usize),
             Some(2)

@@ -129,6 +129,7 @@ fn finish_constrained(
             &extreme.assignment,
             time_budget_ms,
             cfg.dvfs,
+            &cfg.layouts,
         )? {
             adopt(a, c, &mut result, Some(&extreme.graph), time_budget_ms);
         }
@@ -139,6 +140,7 @@ fn finish_constrained(
         &result.assignment,
         time_budget_ms,
         cfg.dvfs,
+        &cfg.layouts,
     )? {
         adopt(a, c, &mut result, None, time_budget_ms);
     }
@@ -173,11 +175,12 @@ pub fn refine_frequency_to_budget(
     a: &Assignment,
     time_budget_ms: f64,
     mode: DvfsMode,
+    layouts: &[crate::energysim::Layout],
 ) -> anyhow::Result<Option<(Assignment, GraphCost)>> {
     // The same per-node state set the search itself ran over: nominal +
-    // DVFS states (mode on) + extra-device states. A single-entry set
-    // means there is nothing to move.
-    let all = super::outer::search_freqs(mode, oracle);
+    // DVFS states (mode on) + extra-device states + NHWC variants (layout
+    // axis on). A single-entry set means there is nothing to move.
+    let all = super::outer::search_freqs(mode, layouts, oracle);
     if all.len() <= 1 {
         return Ok(None);
     }
@@ -334,14 +337,14 @@ mod tests {
         slow.set_uniform_freq(FreqId(510));
         let budget = nominal.time_ms * 1.001;
         let (ra, rc) =
-            refine_frequency_to_budget(&ctx.oracle, &g, &slow, budget, DvfsMode::PerNode)
+            refine_frequency_to_budget(&ctx.oracle, &g, &slow, budget, DvfsMode::PerNode, &[])
                 .unwrap()
                 .expect("raising clocks to nominal always fits this budget");
         assert!(rc.time_ms <= budget + 1e-12, "refined {} vs budget {budget}", rc.time_ms);
         // The refined plan must have raised at least one node's clock.
         assert!(ra.freq_histogram() != slow.freq_histogram());
         // Off mode (or a DVFS-less device) refuses to refine.
-        assert!(refine_frequency_to_budget(&ctx.oracle, &g, &slow, budget, DvfsMode::Off)
+        assert!(refine_frequency_to_budget(&ctx.oracle, &g, &slow, budget, DvfsMode::Off, &[])
             .unwrap()
             .is_none());
     }

@@ -61,7 +61,7 @@
 use super::inner::{inner_search, inner_search_incremental, pinned_freq_start, InnerResult};
 use crate::algo::Assignment;
 use crate::cost::{CostFunction, CostOracle, DeltaBase, GraphCost, GraphCostTable};
-use crate::energysim::FreqId;
+use crate::energysim::{FreqId, Layout};
 use crate::graph::canonical::{delta_hash, graph_hash, node_hashes};
 use crate::graph::{DeltaView, Graph};
 use crate::subst::RuleSet;
@@ -150,6 +150,13 @@ pub struct SearchConfig {
     /// full sweep from the parent's plan (a different — typically better —
     /// local-search basin than the cold default start).
     pub incremental_inner: bool,
+    /// Tensor layouts the search may assign per node. Empty (the default)
+    /// or `[Layout::NCHW]` keeps the axis off — bit-identical to the
+    /// pre-layout search. With NHWC included, every (device, clock) state
+    /// is additionally offered in NHWC and the inner search optimizes the
+    /// layout jointly with algorithm, frequency, and device, charging the
+    /// re-tiling overlay at layout boundaries.
+    pub layouts: Vec<Layout>,
 }
 
 impl Default for SearchConfig {
@@ -164,6 +171,7 @@ impl Default for SearchConfig {
             dvfs: DvfsMode::Off,
             delta_eval: true,
             incremental_inner: true,
+            layouts: Vec::new(),
         }
     }
 }
@@ -426,7 +434,7 @@ fn evaluate_candidate(
     // Single shape inference per candidate — this IS the validation, and
     // the profile/table/assignment steps below all reuse it (§Perf).
     let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!("invalid candidate: {e}"))?;
-    let all = search_freqs(cfg.dvfs, oracle);
+    let all = search_freqs(cfg.dvfs, &cfg.layouts, oracle);
     if all.len() <= 1 {
         let (table, profiled) = oracle.table_for_with(g, &shapes);
         let start = Assignment::default_for_with(g, &shapes, oracle.reg());
@@ -474,7 +482,7 @@ fn evaluate_candidate_delta(
     cf: &CostFunction,
     cfg: &SearchConfig,
 ) -> anyhow::Result<(InnerResult, usize)> {
-    let all = search_freqs(cfg.dvfs, oracle);
+    let all = search_freqs(cfg.dvfs, &cfg.layouts, oracle);
     if all.len() <= 1 {
         let cand = oracle.delta_table_for_freqs(base, view, &[FreqId::NOMINAL]);
         let warm = cand.warm.as_ref().map(|w| (w, &cand.dirty[..]));
@@ -599,11 +607,18 @@ type EvalOutcome = anyhow::Result<(InnerResult, usize)>;
 /// oracle carries extra devices (`--devices gpu,dla`) — each device's
 /// packed states (nominal always; sub-nominal clocks only with DVFS on,
 /// so `--dvfs off --devices gpu,dla` searches pure placement at nominal
-/// clocks). One home for the list — parent carry-over tables, candidate
+/// clocks), plus — when `layouts` includes NHWC (`--layouts nchw,nhwc`) —
+/// every base state again in NHWC, appended **after** all base states so
+/// the NCHW prefix is exactly the layout-off set and ties keep resolving
+/// to NCHW. One home for the list — parent carry-over tables, candidate
 /// delta evaluation, and the legacy rebuild path must all build at the
 /// same set, or the oracle's carry-over would silently fall back to
 /// per-row re-resolves.
-pub(crate) fn search_freqs(dvfs: DvfsMode, oracle: &CostOracle) -> Vec<FreqId> {
+pub(crate) fn search_freqs(
+    dvfs: DvfsMode,
+    layouts: &[Layout],
+    oracle: &CostOracle,
+) -> Vec<FreqId> {
     let mut freqs = vec![FreqId::NOMINAL];
     if dvfs != DvfsMode::Off {
         freqs.extend_from_slice(oracle.dvfs_freqs());
@@ -615,6 +630,11 @@ pub(crate) fn search_freqs(dvfs: DvfsMode, oracle: &CostOracle) -> Vec<FreqId> {
         } else {
             freqs.extend_from_slice(dev_freqs);
         }
+    }
+    if layouts.contains(&Layout::NHWC) {
+        let nhwc: Vec<FreqId> =
+            freqs.iter().map(|f| f.with_layout(Layout::NHWC)).collect();
+        freqs.extend(nhwc);
     }
     freqs
 }
@@ -641,10 +661,24 @@ fn freq_domain_hash(cfg: &SearchConfig, oracle: &CostOracle) -> u64 {
     let mut h = mix(0xCBF2_9CE4_8422_2325, mode);
     // skip(1) drops the leading NOMINAL — with no extra devices this folds
     // exactly `oracle.dvfs_freqs()` (the historical keying, unchanged).
-    for f in search_freqs(cfg.dvfs, oracle).iter().skip(1) {
+    for f in search_freqs(cfg.dvfs, &cfg.layouts, oracle).iter().skip(1) {
         h = mix(h, f.0 as u64);
     }
     h
+}
+
+/// Candidate dedup identity: canonical hash ⊕ frequency domain, mixed
+/// with the candidate's live node count. The Merkle hash is
+/// duplication-insensitive — a `cse` product hashes identically to its
+/// parent (same computation) while implementing it with fewer nodes — so
+/// the size rides along to keep cheaper de-duplicated variants evaluable.
+/// For every other rule equal hashes imply equal compacted graphs, hence
+/// equal counts: their dedup decisions are bit-for-bit unchanged.
+fn dedup_key(h: u64, freq_domain: u64, live_nodes: usize) -> u64 {
+    let mut f = crate::graph::canonical::Fnv::default();
+    f.write_u64(h ^ freq_domain);
+    f.write_usize(live_nodes);
+    f.finish()
 }
 
 /// Run `eval(i)` for `i in 0..n`, in parallel when `workers > 1`. The
@@ -697,7 +731,7 @@ pub fn outer_search(
 
     // The frequency/placement state set this run searches over — shared
     // by the origin evaluation, candidate tables, and the dedup keying.
-    let mode_freqs = search_freqs(cfg.dvfs, oracle);
+    let mode_freqs = search_freqs(cfg.dvfs, &cfg.layouts, oracle);
     // Inner search on the origin reuses the baseline table: no second
     // profile/table pass for g0. With DVFS or extra devices enabled the
     // origin gets the full state-aware evaluation instead, so the
@@ -745,7 +779,7 @@ pub fn outer_search(
         let mut origin_base = (cfg.delta_eval && mode_freqs.len() == 1)
             .then(|| (baseline.table.clone(), baseline.assignment.clone()));
         let mut seen: HashSet<u64> = HashSet::new();
-        seen.insert(graph_hash(g0) ^ freq_domain);
+        seen.insert(dedup_key(graph_hash(g0), freq_domain, g0.len()));
         let mut queue: BinaryHeap<QueueEntry> = BinaryHeap::new();
         let mut seq = 0usize;
         queue.push(QueueEntry {
@@ -824,7 +858,7 @@ pub fn outer_search(
                     // handful of nodes), not the graph.
                     let view = DeltaView::new(g, shapes, delta, Some(&consumers))?;
                     let h = delta_hash(&view, &hashes);
-                    if !seen.insert(h ^ freq_domain) {
+                    if !seen.insert(dedup_key(h, freq_domain, view.live_count())) {
                         stats.deduped += 1;
                         continue;
                     }

@@ -167,6 +167,8 @@ impl RuleSet {
                 Box::new(rules::SplitConcatElim),
                 Box::new(rules::ConcatSplitElim),
                 Box::new(rules::FuseConvResidual),
+                Box::new(rules::FuseMatMulBiasAct),
+                Box::new(rules::Cse),
             ],
         }
     }

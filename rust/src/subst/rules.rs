@@ -75,6 +75,12 @@ pub(crate) enum SiteKind {
     SplitConcat { cat: NodeId, x: PortRef },
     /// `Split(Concat(..))` at matching sizes ⇒ identity rewiring.
     ConcatSplit { split: NodeId },
+    /// `Add(MatMul(a, b), bias)` ⇒ `MatMul(a, b, bias)` (fused epilogue).
+    MatMulBias { add: NodeId, mm: PortRef, bias: PortRef },
+    /// `MatMul(act=None) -> Relu` ⇒ `MatMul(act=Relu)`.
+    MatMulRelu { mm: PortRef, relu: NodeId },
+    /// Duplicate computation cones ⇒ every consumer reads one survivor.
+    Cse { survivor: NodeId, dupes: Vec<NodeId>, ports: usize },
 }
 
 /// The shared BN-fold edit script of `ConvBn`/`DwConvBn`: fold the BN
@@ -227,6 +233,34 @@ impl SiteKind {
                 let cat = g.node(g.node(split).inputs[0].node);
                 for (port, src) in cat.inputs.iter().enumerate() {
                     b.redirect(PortRef { node: split, port }, *src);
+                }
+            }
+            SiteKind::MatMulBias { add, mm, bias } => {
+                let mm_node = g.node(mm.node);
+                let OpKind::MatMul { act, .. } = mm_node.op else {
+                    unreachable!("MatMulBias site over a non-matmul node")
+                };
+                let mut inputs = mm_node.inputs.clone();
+                inputs.push(bias);
+                let fused = b.add(
+                    OpKind::MatMul { act, has_bias: true },
+                    inputs,
+                    &format!("{}_bias", mm_node.name),
+                );
+                b.redirect(PortRef::of(add), PortRef::of(fused));
+            }
+            SiteKind::MatMulRelu { mm, relu } => {
+                let OpKind::MatMul { has_bias, .. } = g.node(mm.node).op else {
+                    unreachable!("MatMulRelu site over a non-matmul node")
+                };
+                b.replace_op(mm.node, OpKind::MatMul { act: Activation::Relu, has_bias });
+                b.redirect(PortRef::of(relu), mm);
+            }
+            SiteKind::Cse { survivor, ref dupes, ports } => {
+                for &d in dupes {
+                    for port in 0..ports {
+                        b.redirect(PortRef { node: d, port }, PortRef { node: survivor, port });
+                    }
                 }
             }
         }
@@ -649,6 +683,121 @@ impl Rule for ConcatSplitElim {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Rule: MatMul epilogue fusion — Add(MatMul(a,b), bias) => MatMul(a,b,bias)
+// and MatMul(act=None) -> Relu => MatMul(act=Relu). The matmul-side analogue
+// of the conv epilogue family (attention/FFN blocks, classifier heads).
+// ---------------------------------------------------------------------------
+/// Fuse a constant bias `Add` and/or a following `Relu` into a `MatMul`.
+pub struct FuseMatMulBiasAct;
+
+impl Rule for FuseMatMulBiasAct {
+    fn name(&self) -> &'static str {
+        "fuse_matmul_epilogue"
+    }
+
+    fn find_sites(&self, g: &Graph, cx: &MatchContext) -> Vec<RewriteSite> {
+        let shapes = cx.shapes();
+        let mut out = Vec::new();
+        for (id, node) in g.nodes() {
+            match node.op {
+                OpKind::Relu => {
+                    let mm_port = node.inputs[0];
+                    let OpKind::MatMul { act, .. } = g.node(mm_port.node).op else { continue };
+                    if act != Activation::None || cx.fanout(mm_port) != 1 {
+                        continue;
+                    }
+                    out.push(RewriteSite {
+                        rule: self.name(),
+                        anchor: id,
+                        kind: SiteKind::MatMulRelu { mm: mm_port, relu: id },
+                    });
+                }
+                OpKind::Add => {
+                    for (mm_slot, bias_slot) in [(0usize, 1usize), (1, 0)] {
+                        let mm_port = node.inputs[mm_slot];
+                        let bias_port = node.inputs[bias_slot];
+                        let OpKind::MatMul { act, has_bias } = g.node(mm_port.node).op else {
+                            continue;
+                        };
+                        // The matmul must still have a free bias slot and no
+                        // epilogue (activation runs after the bias add), and
+                        // its output must feed only this Add.
+                        if act != Activation::None || has_bias || cx.fanout(mm_port) != 1 {
+                            continue;
+                        }
+                        // Only a constant-space operand is a bias (a runtime
+                        // operand is a genuine elementwise add), and the
+                        // MatMul bias input contract is the full output shape.
+                        if !g.node(bias_port.node).op.is_constant_space() {
+                            continue;
+                        }
+                        if shapes[bias_port.node.0][bias_port.port]
+                            != shapes[mm_port.node.0][mm_port.port]
+                        {
+                            continue;
+                        }
+                        out.push(RewriteSite {
+                            rule: self.name(),
+                            anchor: id,
+                            kind: SiteKind::MatMulBias { add: id, mm: mm_port, bias: bias_port },
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: common-subexpression elimination over the Merkle node hashes.
+// Two runtime nodes with equal hashes compute identical values on identical
+// inputs (the same invariant the outer search's dedup rests on), so every
+// consumer of a duplicate can read the lowest-numbered survivor instead;
+// the duplicate cones die by liveness. One site per duplicate group.
+// ---------------------------------------------------------------------------
+/// Redirect duplicate computations (equal Merkle hashes) through one node.
+pub struct Cse;
+
+impl Rule for Cse {
+    fn name(&self) -> &'static str {
+        "cse"
+    }
+
+    fn find_sites(&self, g: &Graph, _cx: &MatchContext) -> Vec<RewriteSite> {
+        let Some(hashes) = crate::graph::canonical::node_hashes(g) else {
+            return Vec::new();
+        };
+        let mut groups: std::collections::BTreeMap<u64, Vec<NodeId>> = Default::default();
+        for (id, node) in g.nodes() {
+            // Constant-space nodes are folded away before the request path
+            // (nothing to save), and Input nodes hash by shape alone — two
+            // same-shape graph inputs are distinct tensors, not duplicates.
+            if node.op.is_constant_space() || matches!(node.op, OpKind::Input { .. }) {
+                continue;
+            }
+            groups.entry(hashes[id.0]).or_default().push(id);
+        }
+        let mut sites: Vec<RewriteSite> = groups
+            .into_values()
+            .filter(|members| members.len() > 1)
+            .map(|members| {
+                let survivor = members[0]; // g.nodes() yields ascending ids
+                let ports = g.node(survivor).op.num_outputs();
+                RewriteSite {
+                    rule: self.name(),
+                    anchor: survivor,
+                    kind: SiteKind::Cse { survivor, dupes: members[1..].to_vec(), ports },
+                }
+            })
+            .collect();
+        sites.sort_by_key(|s| s.anchor);
+        sites
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -879,6 +1028,112 @@ mod tests {
         ng.validate().unwrap();
         let fused = ng.nodes().find_map(|(_, n)| conv_attrs(&n.op)).unwrap();
         assert!(fused.has_residual);
+    }
+
+    #[test]
+    fn fuse_matmul_bias_then_relu() {
+        // x @ w + bias, then relu: two rounds fold the whole epilogue in.
+        let mut g = Graph::new();
+        let x = input(&mut g, &[4, 16]);
+        let w = weight(&mut g, &[16, 8], 1);
+        let m = g.add1(OpKind::matmul(), &[x, w], "m");
+        let bias = weight(&mut g, &[4, 8], 2);
+        let add = g.add1(OpKind::Add, &[m, bias], "add");
+        let r = g.add1(OpKind::Relu, &[add], "r");
+        g.outputs = vec![PortRef::of(r)];
+        g.validate().unwrap();
+
+        let sites = FuseMatMulBiasAct.find_sites(&g, &MatchContext::new(&g).unwrap());
+        assert_eq!(sites.len(), 1, "only the bias add matches before it folds");
+        let mut g1 = FuseMatMulBiasAct.apply_all(&g).unwrap().into_iter().next().unwrap();
+        g1.compact();
+        g1.validate().unwrap();
+        let OpKind::MatMul { act, has_bias } =
+            g1.nodes().find_map(|(_, n)| matches!(n.op, OpKind::MatMul { .. }).then(|| n.op.clone())).unwrap()
+        else {
+            unreachable!()
+        };
+        assert!(has_bias);
+        assert_eq!(act, Activation::None);
+
+        let mut g2 = FuseMatMulBiasAct.apply_all(&g1).unwrap().into_iter().next().unwrap();
+        g2.compact();
+        g2.validate().unwrap();
+        assert_eq!(g2.runtime_node_count(), 2); // input + fully fused matmul
+        let OpKind::MatMul { act, has_bias } =
+            g2.nodes().find_map(|(_, n)| matches!(n.op, OpKind::MatMul { .. }).then(|| n.op.clone())).unwrap()
+        else {
+            unreachable!()
+        };
+        assert!(has_bias);
+        assert_eq!(act, Activation::Relu);
+    }
+
+    #[test]
+    fn fuse_matmul_bias_guards() {
+        // A runtime (non-constant) operand is a real elementwise add, and a
+        // shared matmul output must not fuse either.
+        let mut g = Graph::new();
+        let x = input(&mut g, &[4, 16]);
+        let w = weight(&mut g, &[16, 8], 1);
+        let m = g.add1(OpKind::matmul(), &[x, w], "m");
+        let y = g.add1(OpKind::Input { shape: vec![4, 8] }, &[], "y");
+        let add = g.add1(OpKind::Add, &[m, y], "add");
+        g.outputs = vec![PortRef::of(add)];
+        assert!(FuseMatMulBiasAct.apply_all(&g).unwrap().is_empty());
+
+        let mut g = Graph::new();
+        let x = input(&mut g, &[4, 16]);
+        let w = weight(&mut g, &[16, 8], 1);
+        let m = g.add1(OpKind::matmul(), &[x, w], "m");
+        let bias = weight(&mut g, &[4, 8], 2);
+        let add = g.add1(OpKind::Add, &[m, bias], "add");
+        let s = g.add1(OpKind::Sigmoid, &[m], "s"); // second consumer
+        g.outputs = vec![PortRef::of(add), PortRef::of(s)];
+        assert!(FuseMatMulBiasAct.apply_all(&g).unwrap().is_empty());
+    }
+
+    #[test]
+    fn cse_merges_duplicate_cones_and_preserves_hash() {
+        use crate::graph::canonical::graph_hash;
+        // Two matmuls over tied weights (same seed, same shape) are the
+        // same computation: consumers should read one survivor.
+        let mut g = Graph::new();
+        let x = input(&mut g, &[4, 16]);
+        let w1 = weight(&mut g, &[16, 8], 7);
+        let w2 = weight(&mut g, &[16, 8], 7); // tied: identical constant
+        let m1 = g.add1(OpKind::matmul(), &[x, w1], "m1");
+        let m2 = g.add1(OpKind::matmul(), &[x, w2], "m2");
+        let add = g.add1(OpKind::Add, &[m1, m2], "add");
+        g.outputs = vec![PortRef::of(add)];
+        g.validate().unwrap();
+
+        let sites = Cse.find_sites(&g, &MatchContext::new(&g).unwrap());
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0].anchor(), m1);
+        let before = graph_hash(&g);
+        let mut ng = Cse.apply_all(&g).unwrap().into_iter().next().unwrap();
+        ng.compact();
+        ng.validate().unwrap();
+        // Duplicate cone (m2, w2) is dead; the add reads m1 twice.
+        assert_eq!(ng.runtime_node_count(), 3); // input + matmul + add
+        assert_eq!(graph_hash(&ng), before, "CSE must preserve the Merkle output hash");
+    }
+
+    #[test]
+    fn cse_skips_inputs_and_distinct_weights() {
+        // Same-shape graph inputs are distinct tensors; distinct seeds are
+        // distinct constants — neither may merge.
+        let mut g = Graph::new();
+        let a = input(&mut g, &[4, 16]);
+        let b2 = g.add1(OpKind::Input { shape: vec![4, 16] }, &[], "b");
+        let w1 = weight(&mut g, &[16, 8], 1);
+        let w2 = weight(&mut g, &[16, 8], 2);
+        let m1 = g.add1(OpKind::matmul(), &[a, w1], "m1");
+        let m2 = g.add1(OpKind::matmul(), &[b2, w2], "m2");
+        let add = g.add1(OpKind::Add, &[m1, m2], "add");
+        g.outputs = vec![PortRef::of(add)];
+        assert!(Cse.apply_all(&g).unwrap().is_empty());
     }
 
     #[test]

@@ -27,9 +27,18 @@ fn all_zoo_models_execute() {
     let mut rng = Rng::seed_from(1);
     for name in models::zoo_names() {
         let g = models::by_name(name, tiny()).unwrap();
-        let x = Tensor::rand(&[1, 3, 32, 32], &mut rng, -1.0, 1.0);
+        // Feed the model's own declared input shape (the CNNs are rank-4
+        // [N,C,H,W]; the attention block is rank-2 [seq, dim]).
+        let in_shape = g
+            .nodes()
+            .find_map(|(_, n)| match &n.op {
+                eadgo::graph::OpKind::Input { shape } => Some(shape.clone()),
+                _ => None,
+            })
+            .unwrap_or_else(|| panic!("{name} has no input node"));
+        let x = Tensor::rand(&in_shape, &mut rng, -1.0, 1.0);
         let out = run_model(&g, &x);
-        assert_eq!(out.shape(), &[1, 10], "{name}");
+        assert_eq!(*out.shape().last().unwrap(), 10, "{name}: {:?}", out.shape());
         assert!(out.all_finite(), "{name} produced non-finite output");
     }
 }
@@ -61,6 +70,26 @@ fn substitution_neighbors_preserve_semantics_squeezenet() {
         let out = run_model(&ng, &x);
         assert_close(base.data(), out.data(), 1e-3, 1e-3)
             .unwrap_or_else(|e| panic!("rule {rule} broke squeezenet: {e}"));
+    }
+}
+
+#[test]
+fn substitution_neighbors_preserve_semantics_attention() {
+    // The matmul-side rule family (cse, fuse_matmul_epilogue) on its home
+    // model: every neighbor computes the same function.
+    let g = models::attention::build(tiny());
+    let mut rng = Rng::seed_from(7);
+    let x = Tensor::rand(&[32, 32], &mut rng, -1.0, 1.0);
+    let base = run_model(&g, &x);
+    let rs = RuleSet::standard();
+    let neighbors = rs.neighbors(&g).unwrap();
+    let rules: Vec<&str> = neighbors.iter().map(|(_, r)| *r).collect();
+    assert!(rules.contains(&"cse"), "no cse neighbor: {rules:?}");
+    assert!(rules.contains(&"fuse_matmul_epilogue"), "no epilogue neighbor: {rules:?}");
+    for (ng, rule) in neighbors {
+        let out = run_model(&ng, &x);
+        assert_close(base.data(), out.data(), 1e-3, 1e-3)
+            .unwrap_or_else(|e| panic!("rule {rule} broke attention: {e}"));
     }
 }
 

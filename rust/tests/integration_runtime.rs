@@ -33,7 +33,7 @@ fn signature_contract() {
 
     assert_eq!(OpKind::Relu.signature(&[vec![1, 8, 32, 32]]), "relu;1x8x32x32");
     assert_eq!(
-        OpKind::MatMul.signature(&[vec![1, 16], vec![16, 10]]),
+        OpKind::matmul().signature(&[vec![1, 16], vec![16, 10]]),
         "matmul;1x16;16x10"
     );
     let pool = OpKind::MaxPool { k: (2, 2), stride: (2, 2), pad: (0, 0) };

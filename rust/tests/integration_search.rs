@@ -244,6 +244,7 @@ fn dvfs_saves_energy_at_alpha_band_latency() {
         &off.assignment,
         budget,
         DvfsMode::PerNode,
+        &[],
     )
     .unwrap()
     .expect("device has DVFS states");

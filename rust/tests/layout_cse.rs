@@ -1,0 +1,421 @@
+//! ISSUE 9 conformance suite: the layout axis + the matmul-side rewrites.
+//!
+//! PR 9 adds per-node tensor layout (NCHW/NHWC) as a cost axis riding the
+//! packed frequency state, and widens the rewrite space with
+//! `fuse_matmul_epilogue` and the Merkle-powered `cse` rule. This suite
+//! locks the contract down from four sides, mirroring `tests/placement.rs`:
+//!
+//! 1. **Single-layout bit-identity** — plans searched with the layout axis
+//!    off carry no layout keys, serialize exactly as before the axis
+//!    existed (frontier stays v2), and the delta_eval × incremental_inner
+//!    engine matrix still agrees bit for bit (the CLI face, `--layouts
+//!    nchw` vs flag omitted, is byte-diffed in CI).
+//! 2. **Engine-matrix bit-identity on layout-spanning tables** — every
+//!    `delta_eval` × `incremental_inner` combination must return the same
+//!    plan bits when the table spans layouts, because the boundary-aware
+//!    inner pass re-derives from the per-row argmin.
+//! 3. **Layout + CSE invariants** — transpose cost is zero iff an edge
+//!    crosses layouts; layout-uniform assignments conserve single-layout
+//!    totals exactly; every `cse` product of every zoo model keeps the
+//!    original output Merkle hash and never prices higher through the
+//!    cost table (it computes the same function with fewer nodes).
+//! 4. **The acceptance claim** — with `--layouts nchw,nhwc` on the
+//!    attention and squeezenet models, the joint search strictly beats
+//!    the best single-layout plan on energy at the same latency budget,
+//!    and the winning plan round-trips through the v5 manifest.
+
+use eadgo::algo::{AlgorithmRegistry, Assignment};
+use eadgo::cost::{CostDb, CostFunction, CostOracle};
+use eadgo::energysim::{FreqId, Layout};
+use eadgo::graph::canonical::graph_hash;
+use eadgo::graph::serde::{plan_from_json, plan_to_json};
+use eadgo::models::{self, ModelConfig};
+use eadgo::profiler::SimV100Provider;
+use eadgo::search::{
+    optimize, optimize_with_time_budget, DvfsMode, OptimizerContext, SearchConfig,
+};
+use eadgo::subst::RuleSet;
+
+fn model_cfg() -> ModelConfig {
+    ModelConfig { batch: 1, resolution: 64, width_div: 2, classes: 10 }
+}
+
+fn oracle() -> CostOracle {
+    CostOracle::new(AlgorithmRegistry::new(), CostDb::new(), Box::new(SimV100Provider::new(7)))
+}
+
+/// The NHWC twin of the nominal GPU state.
+fn nhwc0() -> FreqId {
+    FreqId::NOMINAL.with_layout(Layout::NHWC)
+}
+
+fn both_layouts() -> Vec<Layout> {
+    vec![Layout::NCHW, Layout::NHWC]
+}
+
+// -------------------------------------------------------------------------
+// 1. single-layout surfaces stay layout-free
+// -------------------------------------------------------------------------
+
+#[test]
+fn single_layout_plans_carry_no_layout_keys() {
+    // Both an old model and the new attention model: with the axis off
+    // (the default), nothing about PR 9 may leak into the plan bytes.
+    for model in ["squeezenet", "attention"] {
+        let g = models::by_name(model, model_cfg()).unwrap();
+        let ctx = OptimizerContext::offline_default();
+        let cfg = SearchConfig { max_dequeues: 16, ..Default::default() };
+        let r = optimize(&g, &ctx, &CostFunction::Energy, &cfg).unwrap();
+        let plan = plan_to_json(&r.graph, &r.assignment).to_string_compact();
+        assert!(!plan.contains("\"layout\""), "{model}: layout-off plan grew a layout key");
+        assert_eq!(r.assignment.layouts_used(), vec![Layout::NCHW]);
+        assert!(!r.assignment.uses_non_default_layout());
+
+        let fr = eadgo::search::optimize_frontier(&g, &ctx, &cfg, 3).unwrap();
+        let manifest = eadgo::runtime::manifest::frontier_to_json(&fr.frontier).to_string_compact();
+        assert!(manifest.contains("\"version\":2"), "{model}: single-layout frontier must stay v2");
+        assert!(!manifest.contains("\"layout\""), "{model}: single-layout frontier grew layout keys");
+    }
+}
+
+#[test]
+fn layout_off_engine_matrix_bit_identical() {
+    // The ISSUE 9 regression guard: with the layout axis off, the
+    // delta_eval × incremental_inner matrix must still agree bit for bit —
+    // the widened rule set (cse, fuse_matmul_epilogue) and the
+    // size-mixing candidate dedup ride inside the existing engines
+    // without perturbing any of them.
+    let run = |model: &str, dvfs: DvfsMode, delta_eval: bool, incremental_inner: bool| {
+        let g = models::by_name(model, model_cfg()).unwrap();
+        let cfg = SearchConfig {
+            max_dequeues: 16,
+            dvfs,
+            delta_eval,
+            incremental_inner,
+            ..Default::default()
+        };
+        let r = optimize(&g, &OptimizerContext::offline_default(), &CostFunction::Energy, &cfg)
+            .unwrap();
+        (
+            graph_hash(&r.graph),
+            plan_to_json(&r.graph, &r.assignment).to_string_compact(),
+            r.cost.time_ms.to_bits(),
+            r.cost.energy_j.to_bits(),
+        )
+    };
+    for model in ["squeezenet", "attention"] {
+        for dvfs in [DvfsMode::Off, DvfsMode::PerNode] {
+            let reference = run(model, dvfs, true, true);
+            for (d, i) in [(true, false), (false, true), (false, false)] {
+                assert_eq!(
+                    reference,
+                    run(model, dvfs, d, i),
+                    "{model}/dvfs={}: engine matrix (delta_eval={d}, incremental_inner={i}) \
+                     diverged with the layout axis off",
+                    dvfs.describe()
+                );
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// 2. engine-matrix bit-identity on layout-spanning tables
+// -------------------------------------------------------------------------
+
+#[test]
+fn layout_on_engine_matrix_bit_identical() {
+    // With `--layouts nchw,nhwc` the table spans layouts and carries the
+    // re-tiling overlay; the boundary-aware inner pass is a
+    // start-independent function of (table, objective), so every engine
+    // combination must agree bit for bit.
+    let run = |model: &str, dvfs: DvfsMode, delta_eval: bool, incremental_inner: bool| {
+        let g = models::by_name(model, model_cfg()).unwrap();
+        let cfg = SearchConfig {
+            max_dequeues: 16,
+            dvfs,
+            delta_eval,
+            incremental_inner,
+            layouts: both_layouts(),
+            ..Default::default()
+        };
+        let r = optimize(&g, &OptimizerContext::offline_default(), &CostFunction::Energy, &cfg)
+            .unwrap();
+        (
+            graph_hash(&r.graph),
+            plan_to_json(&r.graph, &r.assignment).to_string_compact(),
+            r.cost.time_ms.to_bits(),
+            r.cost.energy_j.to_bits(),
+        )
+    };
+    for model in ["squeezenet", "attention"] {
+        for dvfs in [DvfsMode::Off, DvfsMode::PerNode] {
+            let reference = run(model, dvfs, true, true);
+            for (d, i) in [(true, false), (false, true), (false, false)] {
+                assert_eq!(
+                    reference,
+                    run(model, dvfs, d, i),
+                    "{model}/dvfs={}: engine matrix (delta_eval={d}, incremental_inner={i}) \
+                     diverged on a layout-spanning table",
+                    dvfs.describe()
+                );
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// 3. layout + cse invariants on the cost tables
+// -------------------------------------------------------------------------
+
+/// A layout-spanning cost table for the simple model plus its default
+/// (all-NCHW nominal) assignment.
+fn simple_layout_table() -> (eadgo::graph::Graph, eadgo::cost::GraphCostTable, Assignment) {
+    let oracle = oracle();
+    let g = models::by_name("simple", model_cfg()).unwrap();
+    let shapes = g.infer_shapes().unwrap();
+    oracle.profile_graph(&g).unwrap();
+    let (table, _) = oracle.table_for_freqs(&g, &shapes, &[FreqId::NOMINAL, nhwc0()]);
+    assert!(table.has_links(), "a layout-spanning table must carry the re-tiling overlay");
+    let a = Assignment::default_for(&g, &AlgorithmRegistry::new());
+    (g, table, a)
+}
+
+#[test]
+fn transpose_cost_zero_iff_an_edge_crosses_layouts() {
+    let (_g, table, a) = simple_layout_table();
+    let edges = table.links().unwrap().edges();
+    assert!(!edges.is_empty(), "the simple model must have costed-to-costed edges");
+
+    // Layout-uniform: no boundary, exact zero (both all-NCHW and all-NHWC).
+    assert_eq!(table.transpose_cost(&a), (0.0, 0.0), "all-NCHW plan charged a re-tile");
+    let mut uni = a.clone();
+    uni.set_uniform_freq(nhwc0());
+    assert_eq!(table.transpose_cost(&uni), (0.0, 0.0), "all-NHWC plan charged a re-tile");
+    // A single-device table never charges transfers, whatever the layouts.
+    assert_eq!(table.transfer_cost(&uni), (0.0, 0.0), "layout axis charged a device transfer");
+
+    // Flip a growing prefix of costed nodes to NHWC: at each step the
+    // transpose cost is zero iff no priced edge crosses layouts, and
+    // strictly positive in both axes the moment one does.
+    let mut b = a.clone();
+    for id in table.costed_ids() {
+        b.set_freq(id, nhwc0());
+        let crossing = edges
+            .iter()
+            .any(|e| b.freq(e.src).layout() != b.freq(e.dst).layout());
+        let (t, e) = table.transpose_cost(&b);
+        if crossing {
+            assert!(t > 0.0 && e > 0.0, "a layout-crossing edge must charge time and energy");
+        } else {
+            assert_eq!((t, e), (0.0, 0.0), "no crossing edge, yet a re-tile was charged");
+        }
+    }
+    // The sweep ends all-NHWC: uniform again, so exactly zero.
+    assert_eq!(table.transpose_cost(&b), (0.0, 0.0), "all-NHWC plan still charged a re-tile");
+    // And the very first flip must have crossed at least one edge.
+    let mut first = a.clone();
+    first.set_freq(table.costed_ids().next().unwrap(), nhwc0());
+    assert!(table.transpose_cost(&first).0 > 0.0, "single-node flip crossed no edge");
+}
+
+#[test]
+fn layout_uniform_assignments_conserve_single_layout_totals() {
+    // Evaluating a layout-uniform plan through the spanning table must
+    // equal the single-state table bitwise: the overlay adds no terms.
+    let (_g, table, a) = simple_layout_table();
+    for f in [FreqId::NOMINAL, nhwc0()] {
+        let mut af = a.clone();
+        af.set_uniform_freq(f);
+        let mixed = table.eval(&af);
+        let single = table.restrict_to_freq(f);
+        assert!(!single.has_links(), "restricted single-state table must drop the overlay");
+        let alone = single.eval(&af);
+        assert_eq!(
+            (mixed.time_ms.to_bits(), mixed.energy_j.to_bits()),
+            (alone.time_ms.to_bits(), alone.energy_j.to_bits()),
+            "uniform {} plan not conserved through the layout-spanning table",
+            f.describe()
+        );
+    }
+}
+
+#[test]
+fn eval_swap_matches_full_eval_across_layout_boundaries() {
+    // The O(degree) boundary adjustment in eval_swap must agree bitwise
+    // with a from-scratch eval for every single-node layout flip.
+    let (_g, table, a) = simple_layout_table();
+    let base = table.eval(&a);
+    for id in table.costed_ids() {
+        for (f, slab) in table.freq_options(id) {
+            for &(algo, _) in slab.iter() {
+                let swapped = table.eval_swap(base, &a, id, algo, *f).unwrap();
+                let mut af = a.clone();
+                af.set(id, algo);
+                af.set_freq(id, *f);
+                let fresh = table.eval(&af);
+                assert_eq!(
+                    (swapped.time_ms.to_bits(), swapped.energy_j.to_bits()),
+                    (fresh.time_ms.to_bits(), fresh.energy_j.to_bits()),
+                    "eval_swap diverged flipping node {} to ({}, {})",
+                    id.0,
+                    algo.name(),
+                    f.describe()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cse_products_preserve_output_hash_and_never_price_higher() {
+    // The cse soundness property, on every zoo model: a cse product
+    // computes the same function (equal output Merkle hash — the same
+    // invariant the search dedup trusts) with fewer nodes, so its
+    // cost-table eval can only match or undercut the original.
+    let reg = AlgorithmRegistry::new();
+    let rs = RuleSet::standard();
+    let cfg = ModelConfig::default();
+    let mut cse_products = 0usize;
+    for name in models::zoo_names() {
+        let g = models::by_name(name, cfg).unwrap();
+        let h0 = graph_hash(&g);
+        let oracle = oracle();
+        oracle.profile_graph(&g).unwrap();
+        let shapes = g.infer_shapes().unwrap();
+        let (table, _) = oracle.table_for_freqs(&g, &shapes, &[FreqId::NOMINAL]);
+        let base = table.eval(&Assignment::default_for(&g, &reg));
+        for (ng, rule) in rs.neighbors(&g).unwrap() {
+            if rule != "cse" {
+                continue;
+            }
+            cse_products += 1;
+            assert_eq!(
+                graph_hash(&ng),
+                h0,
+                "{name}: cse product changed the output Merkle hash"
+            );
+            assert!(
+                ng.runtime_node_count() < g.runtime_node_count(),
+                "{name}: cse product removed no nodes"
+            );
+            oracle.profile_graph(&ng).unwrap();
+            let nshapes = ng.infer_shapes().unwrap();
+            let (ntable, _) = oracle.table_for_freqs(&ng, &nshapes, &[FreqId::NOMINAL]);
+            let nc = ntable.eval(&Assignment::default_for(&ng, &reg));
+            assert!(
+                nc.time_ms.is_finite() && nc.energy_j.is_finite(),
+                "{name}: cse product priced non-finite"
+            );
+            assert!(
+                nc.time_ms < base.time_ms && nc.energy_j < base.energy_j,
+                "{name}: cse product must price strictly lower (dropped a costed node): \
+                 {} vs {} ms, {} vs {} J",
+                nc.time_ms,
+                base.time_ms,
+                nc.energy_j,
+                base.energy_j
+            );
+        }
+    }
+    // The property must not be vacuous: the attention model's tied Q/K
+    // guarantees at least one cse product in the zoo.
+    assert!(cse_products >= 1, "no cse product anywhere in the zoo");
+}
+
+// -------------------------------------------------------------------------
+// 4. the acceptance claim + v5 round-trip
+// -------------------------------------------------------------------------
+
+#[test]
+fn budgeted_layout_search_beats_single_layout_on_attention_and_squeezenet() {
+    // The ISSUE 9 acceptance criterion: at the same latency budget the
+    // joint (algo, freq, layout) search finds a plan strictly cheaper in
+    // energy than the best single-layout plan — where "best single-layout"
+    // is the better of the NCHW-only search and its all-NHWC twin.
+    for model in ["attention", "squeezenet"] {
+        let g = models::by_name(model, model_cfg()).unwrap();
+        let nchw_cfg =
+            SearchConfig { max_dequeues: 12, dvfs: DvfsMode::PerNode, ..Default::default() };
+        let joint_cfg = SearchConfig { layouts: both_layouts(), ..nchw_cfg.clone() };
+        let ctx = OptimizerContext::offline_default;
+        let tbest = optimize(&g, &ctx(), &CostFunction::Time, &nchw_cfg).unwrap().cost.time_ms;
+        let budget = 2.0 * tbest;
+        let r_nchw = optimize_with_time_budget(&g, &ctx(), budget, &nchw_cfg, 4).unwrap();
+        let r_joint = optimize_with_time_budget(&g, &ctx(), budget, &joint_cfg, 4).unwrap();
+        assert!(r_nchw.feasible && r_joint.feasible, "{model}: both searches must fit 2x best-time");
+        assert!(
+            r_joint.result.cost.time_ms <= budget * (1.0 + 1e-9),
+            "{model}: layout-mixed plan over budget"
+        );
+        assert!(
+            r_joint.result.assignment.uses_non_default_layout(),
+            "{model}: budgeted joint search kept every node in NCHW"
+        );
+
+        // Best single-layout competitor: the NCHW winner, and — when it
+        // still fits the budget — the same plan flipped uniformly to NHWC
+        // (priced through a table spanning both twins of every state).
+        let mut best_single = r_nchw.result.cost.energy_j;
+        let gn = &r_nchw.result.graph;
+        let oracle = oracle();
+        oracle.profile_graph(gn).unwrap();
+        let shapes = gn.infer_shapes().unwrap();
+        let mut states = vec![FreqId::NOMINAL];
+        states.extend_from_slice(oracle.dvfs_freqs());
+        let nhwc_states: Vec<FreqId> =
+            states.iter().map(|f| f.with_layout(Layout::NHWC)).collect();
+        states.extend(nhwc_states);
+        let (table, _) = oracle.table_for_freqs(gn, &shapes, &states);
+        let mut a_nhwc = r_nchw.result.assignment.clone();
+        for id in table.costed_ids() {
+            a_nhwc.set_freq(id, a_nhwc.freq(id).with_layout(Layout::NHWC));
+        }
+        let c_nhwc = table.eval(&a_nhwc);
+        if c_nhwc.time_ms <= budget {
+            best_single = best_single.min(c_nhwc.energy_j);
+        }
+        assert!(
+            r_joint.result.cost.energy_j < best_single,
+            "{model}: layout mixing must strictly beat the best single-layout plan \
+             at the same budget: {} vs {}",
+            r_joint.result.cost.energy_j,
+            best_single
+        );
+    }
+}
+
+#[test]
+fn layout_mixed_plans_roundtrip_as_v5() {
+    // A searched layout-mixed plan must survive plan JSON and the v5
+    // frontier manifest byte-exactly.
+    let g = models::attention::build(model_cfg());
+    let cfg = SearchConfig {
+        max_dequeues: 16,
+        dvfs: DvfsMode::PerNode,
+        layouts: both_layouts(),
+        ..Default::default()
+    };
+    let r = optimize(&g, &OptimizerContext::offline_default(), &CostFunction::Energy, &cfg)
+        .unwrap();
+    assert!(r.assignment.uses_non_default_layout(), "need a layout-mixed plan for this test");
+
+    let reg = AlgorithmRegistry::new();
+    let j = plan_to_json(&r.graph, &r.assignment);
+    assert!(j.to_string_compact().contains("\"layout\""), "mixed plan must carry layout keys");
+    let (g2, a2) = plan_from_json(&j, &reg).unwrap();
+    assert_eq!(graph_hash(&r.graph), graph_hash(&g2));
+    assert_eq!(r.assignment, a2, "layout-mixed assignment did not round-trip");
+
+    let frontier = eadgo::search::PlanFrontier::from_points(vec![eadgo::search::PlanPoint {
+        graph: r.graph.clone(),
+        assignment: r.assignment.clone(),
+        cost: r.cost,
+        weight: 0.0,
+        batch: 1,
+    }]);
+    let mj = eadgo::runtime::manifest::frontier_to_json(&frontier);
+    assert!(mj.to_string_compact().contains("\"version\":5"), "layout-mixed frontier must be v5");
+    let back = eadgo::runtime::manifest::frontier_from_json(&mj, &reg).unwrap();
+    assert_eq!(back.points()[0].assignment, r.assignment);
+}

@@ -302,7 +302,7 @@ fn refine_to_budget_feasible_when_a_uniform_assignment_is() {
 
     // Budget feasible for all-GPU, infeasible where the plan starts.
     let budget = gpu_time * 1.001;
-    let (ra, rc) = refine_frequency_to_budget(&oracle, &g, &a, budget, DvfsMode::Off)
+    let (ra, rc) = refine_frequency_to_budget(&oracle, &g, &a, budget, DvfsMode::Off, &[])
         .unwrap()
         .expect("a feasible all-GPU assignment exists — refinement must not give up");
     assert!(
@@ -316,7 +316,7 @@ fn refine_to_budget_feasible_when_a_uniform_assignment_is() {
     // With a budget even the all-DLA plan meets, refinement must keep the
     // plan feasible AND not raise its energy (phase 2 only lowers).
     let loose = dla.time_ms * 2.0;
-    let (_, rc2) = refine_frequency_to_budget(&oracle, &g, &a, loose, DvfsMode::Off)
+    let (_, rc2) = refine_frequency_to_budget(&oracle, &g, &a, loose, DvfsMode::Off, &[])
         .unwrap()
         .expect("trivially feasible budget");
     assert!(rc2.time_ms <= loose);

@@ -1,0 +1,73 @@
+//! Rule coverage: every registered rule must find at least one site
+//! somewhere in the model zoo — on an origin graph or within a short,
+//! documented enabling chain of standard rewrites. This is the CI
+//! rule-coverage job's target; it catches rules going silently dead
+//! after opset or model changes (a rule that matches nothing is worse
+//! than missing, because it still pays its scan on every expansion).
+
+use std::collections::BTreeSet;
+
+use eadgo::graph::Graph;
+use eadgo::models::{self, ModelConfig};
+use eadgo::subst::RuleSet;
+
+/// Apply the first site of `rule`, compacted; `None` when it matches
+/// nowhere.
+fn apply_first(rs: &RuleSet, g: &Graph, rule: &str) -> Option<Graph> {
+    let site = rs.find_sites(g).unwrap().into_iter().find(|s| s.rule_name() == rule)?;
+    let mut out = g.apply_delta(&site.delta(g));
+    out.compact();
+    Some(out)
+}
+
+fn collect(rs: &RuleSet, g: &Graph, seen: &mut BTreeSet<&'static str>) {
+    for s in rs.find_sites(g).unwrap() {
+        seen.insert(s.rule_name());
+    }
+}
+
+#[test]
+fn every_registered_rule_finds_a_site_in_the_zoo() {
+    let rs = RuleSet::standard();
+    let all: BTreeSet<&'static str> = rs.names().into_iter().collect();
+    let cfg = ModelConfig::default();
+    let mut seen: BTreeSet<&'static str> = BTreeSet::new();
+
+    // Origin graphs cover most of the catalog directly.
+    for name in models::zoo_names() {
+        collect(&rs, &models::by_name(name, cfg).unwrap(), &mut seen);
+    }
+
+    // Enabling chains for rules that only match rewrite products.
+    // MobileNet's depthwise convs meet their ReLUs once the BatchNorm
+    // between them folds away:
+    if !seen.contains("fuse_dwconv_relu") {
+        let g = models::by_name("mobilenet", cfg).unwrap();
+        let p = apply_first(&rs, &g, "fuse_dwconv_bn")
+            .expect("mobilenet must offer a dwconv+bn fold");
+        collect(&rs, &p, &mut seen);
+    }
+    // Split→Concat cancellation needs the Split that merge_parallel_convs
+    // introduces: fuse the fire-module ReLUs into their convs, enlarge
+    // the 1x1 expand convs to padded 3x3, merge the now-identical
+    // parallel pair — the merged conv's Split then feeds the fire
+    // Concat directly, in port order.
+    if !seen.contains("split_concat_elim") {
+        let mut g = models::squeezenet::build(cfg);
+        while let Some(p) = apply_first(&rs, &g, "fuse_conv_relu") {
+            g = p;
+        }
+        while let Some(p) = apply_first(&rs, &g, "enlarge_conv_kernel") {
+            g = p;
+        }
+        let p = apply_first(&rs, &g, "merge_parallel_convs")
+            .expect("enlarged squeezenet must offer a parallel-conv merge");
+        collect(&rs, &p, &mut seen);
+    }
+
+    let dead: Vec<&str> = all.difference(&seen).copied().collect();
+    assert!(dead.is_empty(), "rules with no site anywhere in the zoo: {dead:?}");
+    // And the registry really is the full 12-rule catalog — a rule
+    // dropped from RuleSet::standard() must not pass silently.
+    assert_eq!(all.len(), 12, "unexpected rule count: {all:?}");
+}
