@@ -34,11 +34,17 @@
 //!      conv model and the attention block: the rewrite space must
 //!      strictly cut energy (ISSUE 9), published as
 //!      `rewrite.cost_ratio_{conv,attention}`.
+//!  14. fault tolerance — a seeded `DeviceLost{dla}` against a mixed
+//!      GPU+DLA surface: zero dropped admitted requests, one contingency
+//!      hot-swap, deterministic virtual-clock replay (ISSUE 10), published
+//!      as `serve.availability_under_faults` and
+//!      `serve.degraded_energy_ratio`.
 //! Run: `cargo bench --bench ablation [-- --quick]` (or EADGO_BENCH_QUICK=1).
 //! Emits `BENCH_ablation.json` (dir override: EADGO_BENCH_OUT_DIR).
 
 use eadgo::algo::{AlgorithmRegistry, Assignment};
 use eadgo::cost::{CostDb, CostFunction, CostOracle, GraphCost, NodeCost};
+use eadgo::energysim::{DeviceId, FreqId};
 use eadgo::graph::canonical::graph_hash;
 use eadgo::graph::{Activation, Graph, OpKind, PortRef};
 use eadgo::models::{self, ModelConfig};
@@ -47,11 +53,12 @@ use eadgo::report::tables::frontier_table;
 use eadgo::report::{describe_freqs, f3, Table};
 use eadgo::search::{
     optimize, optimize_frontier, optimize_frontier_batched, optimize_with_time_budget,
-    price_plan_at_batch, DvfsMode, OptimizerContext, PlanPoint, SearchConfig,
+    price_plan_at_batch, synthesize_contingency, DvfsMode, OptimizerContext, PlanPoint,
+    SearchConfig,
 };
 use eadgo::serve::{
-    AdaptiveConfig, DriftKind, FeedbackConfig, OperatingPoint, RatePhase, ServeConfig,
-    ServeReport, ServeSession, ServiceModel,
+    AdaptiveConfig, DriftKind, FaultEvent, FaultKind, FaultPlan, FeedbackConfig, OperatingPoint,
+    RatePhase, ServeConfig, ServeReport, ServeSession, ServiceModel,
 };
 use eadgo::subst::{rules, RuleSet};
 use eadgo::tensor::Tensor;
@@ -1024,8 +1031,8 @@ fn main() {
         .set("energy_mj_no_feedback", mj_off)
         .set("energy_mj_feedback", mj_on);
     serve10_json.set("drift_recovery_ratio", recovery);
-    payload.set("serve", serve10_json);
     payload.set("feedback", feedback_json);
+    // serve10_json is published after section 14 adds the fault metrics.
 
     // --- 12. heterogeneous placement: GPU-only vs GPU+DLA -------------------
     // The ISSUE-8 claim: at the same latency budget, letting the
@@ -1162,6 +1169,143 @@ fn main() {
     }
     println!("{}", t.render());
     payload.set("rewrite", rewrite_json);
+
+    // --- 14. fault tolerance: device loss with a contingency hot-swap --------
+    // The ISSUE-10 claim: a seeded DeviceLost{dla} fault against a mixed
+    // GPU+DLA surface drops nothing — every admitted request is served,
+    // exactly one contingency hot-swap fires, and post-fault energy/request
+    // stays within 5% of the best GPU-only plan. The service model is
+    // virtual, so both published metrics are deterministic replays.
+    let cfg14 = ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 };
+    let g14 = models::by_name("simple", cfg14).unwrap();
+    let hetero14 = || {
+        CostOracle::new(
+            AlgorithmRegistry::new(),
+            CostDb::new(),
+            Box::new(SimHeteroProvider::new(7)),
+        )
+    };
+    let oracle14 = hetero14();
+    let a_gpu14 = Assignment::default_for(&g14, &AlgorithmRegistry::new());
+    let mut a_dla14 = a_gpu14.clone();
+    let first14 = a_dla14.assigned_ids().next().expect("model has costed nodes");
+    a_dla14.set_freq(first14, FreqId::on(DeviceId::DLA, 0));
+    let (a_fb14, c_fb14) = synthesize_contingency(&oracle14, &g14, &a_dla14, DvfsMode::Off)
+        .unwrap()
+        .expect("a DLA-placed plan must synthesize a GPU fallback");
+    let bmax14 = 2usize;
+    let price14 = |a: &Assignment| -> Vec<GraphCost> {
+        (1..=bmax14).map(|m| price_plan_at_batch(&oracle14, &g14, a, m).unwrap()).collect()
+    };
+    // rows14[0] = GPU plan, [1] = mixed plan, [2] = the contingency.
+    let rows14 = vec![price14(&a_gpu14), price14(&a_dla14), price14(&a_fb14)];
+    let point14 = |a: &Assignment, cost: GraphCost| PlanPoint {
+        graph: g14.clone(),
+        assignment: a.clone(),
+        cost,
+        weight: 1.0,
+        batch: 1,
+    };
+    let points14 = vec![point14(&a_gpu14, rows14[0][0]), point14(&a_dla14, rows14[1][0])];
+    let conts14 = vec![None, Some(point14(&a_fb14, c_fb14))];
+    let n14 = if quick { 48 } else { 96 };
+    let scfg14 = ServeConfig {
+        requests: n14,
+        batch_max: bmax14,
+        arrival_rate_hz: 2_000.0,
+        max_wait_s: 0.001,
+        seed: 2026,
+        input_shape: vec![1, 3, 32, 32],
+        phases: Vec::new(),
+        service: ServiceModel::Virtual {
+            per_batch_ms: rows14[..2]
+                .iter()
+                .map(|row| row.iter().map(|c| c.time_ms).collect())
+                .collect(),
+            scale_s_per_ms: 1e-4,
+        },
+    };
+    let run14 = |at_s: f64| -> ServeReport {
+        let oracle = hetero14();
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                at_s,
+                kind: FaultKind::DeviceLost { device: DeviceId::DLA },
+            }],
+            ..FaultPlan::default()
+        };
+        ServeSession::new(&scfg14)
+            .oracle(&oracle)
+            .plan_points(&points14)
+            .faults(plan)
+            .contingencies(conts14.clone())
+            .run_with_adopt(|_, b| Ok(b.to_vec()), |_| Ok(()))
+            .expect("fault-tolerant serving must not fail")
+    };
+    // Calibrate the fault timestamp to land mid-run (the far-future event
+    // never fires but keeps both runs in the same ops-ified serving mode).
+    let calib14 = run14(1e9);
+    assert_eq!(calib14.records.len(), n14);
+    let t_mid14 = calib14.records[n14 / 2].done_s;
+    let faulted14 = run14(t_mid14);
+    assert_eq!(faulted14.records.len(), n14, "device loss must not drop admitted requests");
+    assert!(faulted14.sheds.is_empty(), "device loss must not shed requests");
+    assert_eq!(faulted14.degrades.len(), 1, "exactly one contingency hot-swap");
+    assert_eq!(faulted14.degrades[0].contingencies_used, 1);
+    let availability14 = faulted14.availability();
+    assert_eq!(availability14, 1.0);
+    // True energy/request before vs after the loss. Post-loss plan 0 is the
+    // GPU survivor (rows14[0]), plan 1 the activated contingency (rows14[2]).
+    let per_req14 = |row: &[GraphCost], m: usize| row[m - 1].energy_j / m as f64;
+    let mean_mj14 = |epoch: usize, map: &dyn Fn(usize) -> usize| -> f64 {
+        let (mut sum, mut n) = (0.0f64, 0usize);
+        for r in faulted14.records.iter().filter(|r| r.epoch == epoch) {
+            sum += per_req14(&rows14[map(r.plan)], r.batch_size);
+            n += 1;
+        }
+        sum / n.max(1) as f64
+    };
+    let mj_pre14 = mean_mj14(0, &|p| p);
+    let mj_post14 = mean_mj14(1, &|p| if p == 0 { 0 } else { 2 });
+    let degraded_ratio14 = mj_post14 / mj_pre14;
+    let best_post14: f64 = {
+        let post: Vec<_> = faulted14.records.iter().filter(|r| r.epoch == 1).collect();
+        post.iter()
+            .map(|r| {
+                per_req14(&rows14[0], r.batch_size).min(per_req14(&rows14[2], r.batch_size))
+            })
+            .sum::<f64>()
+            / post.len().max(1) as f64
+    };
+    assert!(
+        mj_post14 <= best_post14 * 1.05,
+        "post-fault energy/request {mj_post14} must be within 5% of the best \
+         GPU-only plan's {best_post14}"
+    );
+    let mut t = Table::new(
+        "Ablation 14: device-loss fault tolerance (mixed GPU+DLA surface)",
+        &["phase", "requests", "energy mJ/req", "sheds", "hot-swaps"],
+    );
+    for (label, epoch, mj) in [("pre-fault", 0usize, mj_pre14), ("post-fault", 1, mj_post14)] {
+        t.row(vec![
+            label.to_string(),
+            faulted14.records.iter().filter(|r| r.epoch == epoch).count().to_string(),
+            f3(mj),
+            faulted14.sheds.len().to_string(),
+            faulted14.degrades.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "fault tolerance: availability {availability14:.3} under DeviceLost{{dla}}, \
+         degraded energy/request at {:.0}% of pre-fault ({:+.1}%)\n",
+        100.0 * degraded_ratio14,
+        100.0 * (degraded_ratio14 - 1.0),
+    );
+    serve10_json
+        .set("availability_under_faults", availability14)
+        .set("degraded_energy_ratio", degraded_ratio14);
+    payload.set("serve", serve10_json);
 
     eadgo::util::bench::emit_bench_json("ablation", &payload).expect("bench payload write");
 }

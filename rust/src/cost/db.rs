@@ -204,12 +204,34 @@ impl CostDb {
         CostDb::from_json(&json::read_file(path)?)
     }
 
-    /// Load if present, else empty (the first-run-is-slow behaviour).
+    /// Load if present, else empty (the first-run-is-slow behaviour). A
+    /// present-but-corrupt file also yields an empty db — silently losing
+    /// every profile would masquerade as a cold cache, so the parse error
+    /// is reported on stderr (once, with the path) before falling back.
     pub fn load_or_default(path: &Path) -> CostDb {
-        if path.exists() {
-            CostDb::load(path).unwrap_or_default()
-        } else {
-            CostDb::new()
+        let (db, warning) = CostDb::load_or_default_noted(path);
+        if let Some(w) = warning {
+            eprintln!("warning: {w}");
+        }
+        db
+    }
+
+    /// Testable core of [`CostDb::load_or_default`]: the db plus the
+    /// warning line a corrupt file earns (`None` for a missing or healthy
+    /// file), instead of printing it.
+    pub fn load_or_default_noted(path: &Path) -> (CostDb, Option<String>) {
+        if !path.exists() {
+            return (CostDb::new(), None);
+        }
+        match CostDb::load(path) {
+            Ok(db) => (db, None),
+            Err(e) => (
+                CostDb::new(),
+                Some(format!(
+                    "ignoring corrupt profile db {}: {e} (starting with an empty db)",
+                    path.display()
+                )),
+            ),
         }
     }
 }
@@ -230,6 +252,39 @@ mod tests {
         assert_eq!(db.misses(), 1);
         assert_eq!(db.num_signatures(), 1);
         assert_eq!(db.num_entries(), 1);
+    }
+
+    #[test]
+    fn corrupt_profile_db_warns_instead_of_silently_resetting() {
+        let dir = std::env::temp_dir().join("eadgo_costdb_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // Missing file: cold cache, no warning.
+        let missing = dir.join("absent.json");
+        let (db, warn) = CostDb::load_or_default_noted(&missing);
+        assert_eq!(db.num_entries(), 0);
+        assert!(warn.is_none());
+
+        // Healthy file: loads, no warning.
+        let good = dir.join("good.json");
+        let mut src = CostDb::new();
+        src.insert("conv2d;x", Algorithm::ConvDirect, NodeCost { time_ms: 0.5, power_w: 100.0 }, "sim");
+        src.save(&good).unwrap();
+        let (db, warn) = CostDb::load_or_default_noted(&good);
+        assert_eq!(db.num_entries(), 1);
+        assert!(warn.is_none());
+
+        // Corrupt file: empty db, and the warning names the path and the
+        // parse error so the reset is never mistaken for a cold cache.
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, "{\"profiles\": 42}").unwrap();
+        let (db, warn) = CostDb::load_or_default_noted(&bad);
+        assert_eq!(db.num_entries(), 0);
+        let warn = warn.expect("corrupt db must produce a warning");
+        assert!(warn.contains("bad.json"), "{warn}");
+        assert!(warn.contains("profiles"), "{warn}");
+
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

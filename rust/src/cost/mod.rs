@@ -684,10 +684,20 @@ impl GraphCostTable {
     /// Nodes without a slab at `freq` end up empty, exactly like a table
     /// built at `&[freq]` directly.
     pub fn restrict_to_freq(&self, freq: FreqId) -> GraphCostTable {
+        self.restrict_states(|f| f == freq)
+    }
+
+    /// A copy of the table keeping only the frequency slabs `keep` admits
+    /// (cheap: slabs are `Arc`-shared, so this clones pointers, not
+    /// options). The fault path uses this to mask a lost device or
+    /// thermally-capped clock states out of the search space; nodes whose
+    /// every slab is rejected end up empty, exactly like a table built
+    /// without those states.
+    pub fn restrict_states(&self, mut keep: impl FnMut(FreqId) -> bool) -> GraphCostTable {
         GraphCostTable::from_freq_slabs(
             self.entries
                 .iter()
-                .map(|slabs| slabs.iter().filter(|(f, _)| *f == freq).cloned().collect())
+                .map(|slabs| slabs.iter().filter(|(f, _)| keep(*f)).cloned().collect())
                 .collect(),
         )
     }
@@ -1007,6 +1017,28 @@ mod tests {
         assert!((split_cost.time_ms - (1.0 + 2.0 + 0.125)).abs() < 1e-12);
         assert!((split_cost.energy_j - (100.0 + 16.0 + 0.75)).abs() < 1e-12);
         assert_eq!(t.transfer_cost(&split), (0.125, 0.75));
+    }
+
+    #[test]
+    fn restrict_states_masks_a_device_out_of_the_table() {
+        use crate::energysim::DeviceId;
+        let t = two_device_table_with_link();
+        let gpu_only = t.restrict_states(|f| f.device() == DeviceId::GPU);
+        // The DLA slabs are gone, the GPU slabs untouched.
+        assert_eq!(gpu_only.option_count(NodeId(0)), 1);
+        assert_eq!(gpu_only.option_count(NodeId(2)), 1);
+        let algos = vec![Some(Algorithm::Passthrough), None, Some(Algorithm::Passthrough)];
+        let both_gpu = Assignment::from_parts(algos, vec![FreqId::NOMINAL; 3]);
+        let full = t.eval(&both_gpu);
+        let masked = gpu_only.eval(&both_gpu);
+        assert_eq!(full.time_ms.to_bits(), masked.time_ms.to_bits());
+        assert_eq!(full.energy_j.to_bits(), masked.energy_j.to_bits());
+        // The single-frequency view stays the predicate's special case.
+        let a = t.restrict_to_freq(FreqId::NOMINAL);
+        let b = t.restrict_states(|f| f == FreqId::NOMINAL);
+        for id in [NodeId(0), NodeId(1), NodeId(2)] {
+            assert_eq!(a.option_count(id), b.option_count(id));
+        }
     }
 
     #[test]

@@ -326,6 +326,49 @@ impl GpuSpec {
         f.is_nominal() || f.0 >= self.nominal_mhz()
     }
 
+    /// The canonical spec of an addressable device class (`None` for
+    /// device indexes the simulator does not model). This is the mapping
+    /// the fault-injection layer uses to resolve power caps and nominal
+    /// clocks; it must stay consistent with `SimHeteroProvider`.
+    pub fn for_device(d: DeviceId) -> Option<GpuSpec> {
+        match d {
+            DeviceId::GPU => Some(GpuSpec::v100()),
+            DeviceId::DLA => Some(GpuSpec::dla()),
+            _ => None,
+        }
+    }
+
+    /// The DVFS states still reachable under a thermal clock cap of
+    /// `max_mhz` (ascending, possibly empty when the cap sits below the
+    /// whole table).
+    pub fn capped_states(&self, max_mhz: u16) -> Vec<FreqState> {
+        self.freq_states.iter().filter(|s| s.mhz <= max_mhz).copied().collect()
+    }
+
+    /// The highest core clock whose modeled full-draw board power fits a
+    /// `watts` budget: `P(f) = P_idle + (P_max − P_idle) · s · (V/V_nom)²`
+    /// evaluated per table state. Returns `None` when the budget covers
+    /// the nominal state (the cap is a no-op); a budget below even the
+    /// lowest state clamps to the lowest state — the board throttles, it
+    /// does not power off.
+    pub fn max_mhz_under_power(&self, watts: f64) -> Option<u16> {
+        let nom = self.freq_states.last()?;
+        let power_at = |s: &FreqState| {
+            let clock = s.mhz as f64 / nom.mhz as f64;
+            let v = s.volt / nom.volt;
+            self.idle_power + (self.max_power - self.idle_power) * clock * v * v
+        };
+        if watts >= power_at(nom) {
+            return None;
+        }
+        self.freq_states
+            .iter()
+            .rev()
+            .find(|s| power_at(s) <= watts)
+            .or(self.freq_states.first())
+            .map(|s| s.mhz)
+    }
+
     /// Clock and dynamic-power scale factors of a frequency state:
     /// `(s, s·(V(f)/V_nom)²)`. Nominal (and unknown) states scale by 1.
     pub fn dvfs_scale(&self, f: FreqId) -> (f64, f64) {
@@ -943,6 +986,35 @@ mod tests {
         let d = dla.ideal_cost(&w, Algorithm::ConvIm2col);
         assert!(d.time_ms > g.time_ms, "DLA {} ms vs GPU {} ms", d.time_ms, g.time_ms);
         assert!(d.energy_j() < g.energy_j(), "DLA {} mJ vs GPU {} mJ", d.energy_j(), g.energy_j());
+    }
+
+    #[test]
+    fn capped_states_filter_the_clock_table() {
+        let spec = GpuSpec::v100();
+        let capped = spec.capped_states(1000);
+        assert_eq!(capped.iter().map(|s| s.mhz).collect::<Vec<_>>(), vec![510, 705, 900]);
+        assert!(spec.capped_states(100).is_empty(), "cap below the table masks everything");
+        assert_eq!(spec.capped_states(4095).len(), spec.freq_states.len());
+    }
+
+    #[test]
+    fn power_cap_maps_monotonically_to_clocks() {
+        let spec = GpuSpec::v100();
+        assert_eq!(spec.max_mhz_under_power(300.0), None, "TDP budget is a no-op");
+        assert_eq!(spec.max_mhz_under_power(1.0), Some(510), "starvation clamps to the floor");
+        let mut prev = 0u16;
+        for w in [80.0, 120.0, 160.0, 200.0, 250.0] {
+            let cap = spec.max_mhz_under_power(w).expect("sub-TDP budget must cap");
+            assert!(cap >= prev, "cap must grow with the budget: {cap} at {w} W after {prev}");
+            assert!(cap < spec.nominal_mhz());
+            prev = cap;
+        }
+        // A device with no frequency table cannot be capped.
+        assert_eq!(GpuSpec::cpu_1core().max_mhz_under_power(1.0), None);
+        // The canonical device map stays consistent with the providers.
+        assert_eq!(GpuSpec::for_device(DeviceId::GPU).unwrap().name, "sim-v100");
+        assert_eq!(GpuSpec::for_device(DeviceId::DLA).unwrap().name, "sim-dla");
+        assert!(GpuSpec::for_device(DeviceId(5)).is_none());
     }
 
     #[test]

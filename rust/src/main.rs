@@ -108,6 +108,7 @@ fn validate_args(args: &Args) -> anyhow::Result<()> {
             "research-interval",
             "truth-db",
             "save-research",
+            "fault-plan",
         ],
         Some("zoo") => {
             return args.require_known(&[]).map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"));
@@ -143,6 +144,7 @@ USAGE: eadgo <subcommand> [--options]
             [--burst R1:N1,R2:N2,...] [--feedback on|off]
             [--drift-threshold X] [--research-interval S]
             [--truth-db costs.json] [--save-research plans.json]
+            [--fault-plan faults.json]
             [--artifacts DIR] [--threads T]
   show      --model M
   zoo
@@ -232,6 +234,22 @@ USAGE: eadgo <subcommand> [--options]
   truth cost database — the drift-injection harness: serve plans whose
   --db mispredicts the truth and watch the loop correct it. Config
   keys serve_feedback / serve_drift_threshold provide the defaults.
+
+  serve --fault-plan faults.json replays a deterministic, seeded fault
+  script against the session (the fault-injection harness, mirroring
+  --truth-db): timestamped device_lost / thermal_cap / power_cap /
+  transient_error events. Device loss masks every state on the lost
+  device and hot-swaps to surviving plans — or to the manifest's
+  contingency plans (synthesized by optimize --frontier --devices at
+  --save-frontier time, persisted as a v6 manifest) — without dropping
+  an admitted request. Thermal and power caps clamp the device clock
+  and re-price the surface against the capped cost table. Transient
+  errors retry with deterministic exponential backoff and shed
+  deadline-blown requests; every fault, degradation, and shed lands as
+  a typed event in the report. Fault serving prices the surface like
+  --feedback on does (it needs the oracle and the plan graphs), and a
+  run without --fault-plan is byte-identical to not having the
+  harness at all.
 ";
 
 fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
@@ -475,8 +493,43 @@ fn cmd_optimize_frontier(
         );
     }
     if let Some(path) = args.get("save-frontier") {
-        eadgo::runtime::manifest::save_frontier(std::path::Path::new(path), &res.frontier)?;
-        println!("frontier ({} plans) saved to {path}", res.frontier.len());
+        // Plans that place nodes on an accelerator get a device-loss
+        // contingency synthesized alongside them: an all-GPU fallback the
+        // serve loop can hot-swap to if the accelerator drops off. All-GPU
+        // frontiers synthesize nothing and the manifest bytes are
+        // unchanged (v2–v5 as before; any contingency upgrades to v6).
+        let conts = res
+            .frontier
+            .points()
+            .iter()
+            .map(|p| {
+                Ok(eadgo::search::synthesize_contingency(
+                    &ctx.oracle,
+                    &p.graph,
+                    &p.assignment,
+                    scfg.dvfs,
+                )?
+                .map(|(assignment, cost)| eadgo::runtime::manifest::ContingencyPlan {
+                    graph: p.graph.clone(),
+                    assignment,
+                    cost,
+                }))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let n_conts = conts.iter().filter(|c| c.is_some()).count();
+        eadgo::runtime::manifest::save_frontier_with_contingencies(
+            std::path::Path::new(path),
+            &res.frontier,
+            &conts,
+        )?;
+        if n_conts > 0 {
+            println!(
+                "frontier ({} plans, {n_conts} device-loss contingency plan(s)) saved to {path}",
+                res.frontier.len()
+            );
+        } else {
+            println!("frontier ({} plans) saved to {path}", res.frontier.len());
+        }
     }
     ctx.oracle.save_db(&cfg.db_path)?;
     println!(
@@ -640,13 +693,16 @@ fn cmd_show(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Resolve what `serve` should put behind the request loop: a frontier of
-/// one or more plans (single-plan sources load as a one-point frontier).
+/// one or more plans (single-plan sources load as a one-point frontier),
+/// plus each plan's device-loss contingency when the source carries them
+/// (v6 frontier manifests; all-`None` otherwise), index-aligned with the
+/// frontier's points.
 fn serve_frontier_source(
     args: &Args,
     cfg: &RunConfig,
     ctx: &OptimizerContext,
     reg: &eadgo::algo::AlgorithmRegistry,
-) -> anyhow::Result<PlanFrontier> {
+) -> anyhow::Result<(PlanFrontier, Vec<Option<eadgo::runtime::manifest::ContingencyPlan>>)> {
     // The strict-flag policy again: a mis-shaped flag must error, not be
     // silently reinterpreted.
     anyhow::ensure!(
@@ -659,15 +715,18 @@ fn serve_frontier_source(
     );
     let adaptive = args.flag("adaptive");
     let want_optimize = args.flag("optimize") || args.get("optimize").is_some();
-    let single = |g: eadgo::graph::Graph, a: Assignment| -> anyhow::Result<PlanFrontier> {
+    let single = |g: eadgo::graph::Graph,
+                  a: Assignment|
+     -> anyhow::Result<(PlanFrontier, Vec<Option<eadgo::runtime::manifest::ContingencyPlan>>)> {
         let cost = ctx.oracle.cached_cost(&g, &a)?.unwrap_or_default();
-        Ok(PlanFrontier::from_points(vec![PlanPoint {
+        let f = PlanFrontier::from_points(vec![PlanPoint {
             graph: g,
             assignment: a,
             cost,
             weight: 1.0,
             batch: 1,
-        }]))
+        }]);
+        Ok((f, Vec::new()))
     };
     if let Some(path) = args.get("frontier") {
         // Refuse plan sources we would otherwise silently ignore.
@@ -676,9 +735,18 @@ fn serve_frontier_source(
             "--frontier and --plan are mutually exclusive plan sources"
         );
         anyhow::ensure!(!want_optimize, "--frontier serves saved plans; drop --optimize");
-        let f = eadgo::runtime::manifest::load_frontier(std::path::Path::new(path), reg)?;
-        println!("loaded {}-point frontier from {path}", f.len());
-        return Ok(f);
+        let (f, conts) =
+            eadgo::runtime::manifest::load_frontier_full(std::path::Path::new(path), reg)?;
+        let n_conts = conts.iter().filter(|c| c.is_some()).count();
+        if n_conts > 0 {
+            println!(
+                "loaded {}-point frontier from {path} ({n_conts} device-loss contingency plan(s))",
+                f.len()
+            );
+        } else {
+            println!("loaded {}-point frontier from {path}", f.len());
+        }
+        return Ok((f, conts));
     }
     if let Some(path) = args.get("plan") {
         anyhow::ensure!(
@@ -703,7 +771,7 @@ fn serve_frontier_source(
             );
             let res = eadgo::search::optimize_frontier(&g0, ctx, &cfg.search_config(), 4)?;
             print!("{}", tables::frontier_table(&res.frontier, Some(&res.original)).render());
-            return Ok(res.frontier);
+            return Ok((res.frontier, Vec::new()));
         }
         // `--optimize` uses the configured --objective; `--optimize OBJ`
         // names the objective inline.
@@ -742,8 +810,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // re-profiling between optimize and serve.
     let ctx = build_context(&cfg)?;
     let adaptive = args.flag("adaptive");
-    let frontier = serve_frontier_source(args, &cfg, &ctx, &reg)?;
+    let (frontier, frontier_conts) = serve_frontier_source(args, &cfg, &ctx, &reg)?;
     anyhow::ensure!(!frontier.is_empty(), "no plan to serve");
+    // --fault-plan: deterministic seeded fault injection (the robustness
+    // mirror of --truth-db). Strict-flag policy as everywhere else.
+    anyhow::ensure!(
+        !args.flag("fault-plan"),
+        "--fault-plan expects a path, e.g. `--fault-plan faults.json`"
+    );
+    let fault_plan = match args.get("fault-plan") {
+        Some(path) => Some(eadgo::serve::FaultPlan::load(std::path::Path::new(path))?),
+        None => None,
+    };
     // Placement guard: a mixed-device plan priced on a single-device cost
     // grid would silently drop its transfer and DLA terms — reject it and
     // tell the user which --devices list reproduces the plan's grid.
@@ -769,6 +847,35 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         vec![frontier.energy_optimal()]
     };
     let costs: Vec<eadgo::cost::GraphCost> = points.iter().map(|p| p.cost).collect();
+    // Contingencies ride along only under a fault plan, re-aligned with
+    // whichever points are actually served (all of them when adaptive,
+    // just the energy-optimal plan otherwise — the frontier's last point).
+    let cont_points: Option<Vec<Option<PlanPoint>>> = fault_plan.as_ref().map(|_| {
+        let to_point = |c: &eadgo::runtime::manifest::ContingencyPlan| PlanPoint {
+            graph: c.graph.clone(),
+            assignment: c.assignment.clone(),
+            cost: c.cost,
+            weight: 1.0,
+            batch: 1,
+        };
+        if adaptive {
+            (0..frontier.len())
+                .map(|i| frontier_conts.get(i).and_then(Option::as_ref).map(to_point))
+                .collect()
+        } else {
+            let last = frontier.len() - 1;
+            vec![frontier_conts.get(last).and_then(Option::as_ref).map(to_point)]
+        }
+    });
+    if let Some(fp) = &fault_plan {
+        println!(
+            "fault plan: {} event(s), max {} retries, backoff {} ms ({} contingency plan(s) armed)",
+            fp.events.len(),
+            fp.max_retries,
+            fp.backoff_ms,
+            cont_points.iter().flatten().flatten().count()
+        );
+    }
 
     let g0 = &points[0].graph;
     let shapes = g0.infer_shapes().map_err(|e| anyhow::anyhow!(e))?;
@@ -1003,7 +1110,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         };
         run_serve_session(
             &scfg, &ctx.oracle, &owned, fbcfg, research, use_ops, use_controller, &costs, &grid,
-            &ops, &policy, adaptive, exec, adopt,
+            &ops, &policy, adaptive, fault_plan.clone(), cont_points.clone(), exec, adopt,
         )?
     } else {
         println!("serving via reference engine (no artifacts at {})", manifest_path.display());
@@ -1041,7 +1148,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         };
         run_serve_session(
             &scfg, &ctx.oracle, &owned, fbcfg, research, use_ops, use_controller, &costs, &grid,
-            &ops, &policy, adaptive, exec, adopt,
+            &ops, &policy, adaptive, fault_plan, cont_points, exec, adopt,
         )?
     };
 
@@ -1137,13 +1244,49 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             _ => {}
         }
     }
+    if args.get("fault-plan").is_some() {
+        println!(
+            "faults: {} injected, {} degradation(s), {} request(s) shed, availability {:.4}",
+            report.faults.len(),
+            report.degrades.len(),
+            report.sheds.len(),
+            report.availability()
+        );
+        for f in &report.faults {
+            println!("  t={:.4}s  fault {}", f.at_s, f.to_json().to_string_compact());
+        }
+        for d in &report.degrades {
+            println!(
+                "  t={:.4}s  degrade {} (epoch {}, plans {} -> {}, {} contingency hot-swap(s)){}",
+                d.at_s,
+                d.cause.describe(),
+                d.epoch,
+                d.points_before,
+                d.points_after,
+                d.contingencies_used,
+                if d.detail.is_empty() { String::new() } else { format!(": {}", d.detail) }
+            );
+        }
+        for s in &report.sheds {
+            println!(
+                "  t={:.4}s  shed request {} after {} retries (waited {} ms)",
+                s.at_s,
+                s.id,
+                s.retries,
+                f3(s.waited_s * 1e3)
+            );
+        }
+    }
     Ok(())
 }
 
 /// Compose and run the [`ServeSession`](eadgo::serve::ServeSession) for
 /// `cmd_serve`: one call site for both engines. With feedback on, the
 /// session serves the full plan points (graphs included) so the loop can
-/// write measured costs back and hot-swap the surface; otherwise the
+/// write measured costs back and hot-swap the surface; a fault plan
+/// forces the same composition (the fault path needs the oracle and
+/// graphs to mask and re-price the surface, and `run_with_adopt` so a
+/// device-loss contingency can be handed to the executor); otherwise the
 /// legacy-equivalent fixed/frontier/operating-point composition applies.
 #[allow(clippy::too_many_arguments)]
 fn run_serve_session<F, G>(
@@ -1159,6 +1302,8 @@ fn run_serve_session<F, G>(
     ops: &[eadgo::serve::OperatingPoint],
     policy: &eadgo::serve::AdaptiveConfig,
     adaptive: bool,
+    faults: Option<eadgo::serve::FaultPlan>,
+    contingencies: Option<Vec<Option<PlanPoint>>>,
     exec: F,
     adopt: G,
 ) -> anyhow::Result<eadgo::serve::ServeReport>
@@ -1167,18 +1312,34 @@ where
     G: FnMut(&[PlanPoint]) -> anyhow::Result<()>,
 {
     let session = eadgo::serve::ServeSession::new(scfg);
-    match feedback {
-        Some(fb) => {
+    match (feedback, faults) {
+        (Some(fb), faults) => {
             let mut s = session.oracle(oracle).plan_points(owned).feedback(fb);
             if adaptive {
                 s = s.adaptive(policy.clone());
+            }
+            if let Some(fp) = faults {
+                s = s.faults(fp);
+            }
+            if let Some(conts) = contingencies {
+                s = s.contingencies(conts);
             }
             match research {
                 Some(rc) => s.research(rc).run_with_adopt(exec, adopt),
                 None => s.run_with_adopt(exec, adopt),
             }
         }
-        None => {
+        (None, Some(fp)) => {
+            // Every serve mode routes through the fault-tolerant plan-point
+            // composition under a fault plan: priced like feedback's
+            // ops-ified surface, hot-swappable through `adopt`.
+            let mut s = session.oracle(oracle).plan_points(owned).adaptive(policy.clone()).faults(fp);
+            if let Some(conts) = contingencies {
+                s = s.contingencies(conts);
+            }
+            s.run_with_adopt(exec, adopt)
+        }
+        (None, None) => {
             if use_ops {
                 session.operating_points(grid, ops).adaptive(policy.clone()).run(exec)
             } else if use_controller {

@@ -160,6 +160,42 @@ const FRONTIER_VERSION_PLACED: i64 = 4;
 /// historical version byte-identically.
 const FRONTIER_VERSION_LAYOUT: i64 = 5;
 
+/// Frontier-manifest version once any plan carries a device-loss
+/// contingency: v6 plan entries may embed a `contingency` object — a
+/// complete single-plan document (graph + assignment + cost) the serve
+/// loop hot-swaps to when a device the primary plan depends on is lost.
+/// Loaders treat a missing `contingency` as "no fallback", so v2–v5 files
+/// remain readable forever; contingency-free frontiers keep emitting
+/// their historical version byte-identically.
+const FRONTIER_VERSION_CONTINGENCY: i64 = 6;
+
+/// Each frontier version's new plan-entry key, for version-gated parsing:
+/// a key appearing in a manifest whose declared version predates it is a
+/// corrupt or hand-doctored file, rejected rather than silently honored.
+const VERSIONED_PLAN_KEYS: [(&str, i64); 4] = [
+    ("batch", FRONTIER_VERSION_BATCHED),
+    ("device", FRONTIER_VERSION_PLACED),
+    ("layout", FRONTIER_VERSION_LAYOUT),
+    ("contingency", FRONTIER_VERSION_CONTINGENCY),
+];
+
+/// A device-loss fallback attached to one frontier plan: a complete
+/// alternative (graph, assignment) that avoids some device the primary
+/// plan depends on, priced so the serve loop can slot it straight into
+/// its grid. Synthesized at `--save-frontier` time (see
+/// [`crate::search::synthesize_contingency`]) and persisted in v6
+/// frontier manifests.
+#[derive(Debug, Clone)]
+pub struct ContingencyPlan {
+    /// The fallback computation graph.
+    pub graph: Graph,
+    /// The fallback assignment (never touches the device it is a
+    /// contingency for).
+    pub assignment: Assignment,
+    /// Oracle cost estimate of the fallback plan.
+    pub cost: GraphCost,
+}
+
 fn cost_to_json(c: &GraphCost) -> Json {
     let mut o = Json::obj();
     o.set("time_ms", c.time_ms).set("energy_j", c.energy_j).set("freq_mhz", c.freq.0 as i64);
@@ -187,13 +223,26 @@ fn cost_from_json(v: &Json) -> anyhow::Result<GraphCost> {
 /// non-default layout upgrades it to v5, where layout-mixed entries carry
 /// per-node `layout` arrays.
 pub fn frontier_to_json(f: &PlanFrontier) -> Json {
+    frontier_to_json_full(f, &[])
+}
+
+/// Like [`frontier_to_json`], with per-plan device-loss contingencies.
+/// `contingencies` aligns by index with `f.points()` (shorter slices are
+/// padded with `None`). Any present contingency upgrades the document to
+/// v6; an all-`None` (or empty) slice emits byte-identically to
+/// [`frontier_to_json`], so contingency-free callers never see a format
+/// change.
+pub fn frontier_to_json_full(f: &PlanFrontier, contingencies: &[Option<ContingencyPlan>]) -> Json {
     let batched = f.points().iter().any(|p| p.batch > 1);
     let placed = f.points().iter().any(|p| p.assignment.uses_non_gpu_device());
     let laid_out = f.points().iter().any(|p| p.assignment.uses_non_default_layout());
+    let has_contingency = contingencies.iter().any(Option::is_some);
     let mut root = Json::obj();
     root.set(
         "version",
-        if laid_out {
+        if has_contingency {
+            FRONTIER_VERSION_CONTINGENCY
+        } else if laid_out {
             FRONTIER_VERSION_LAYOUT
         } else if placed {
             FRONTIER_VERSION_PLACED
@@ -209,11 +258,17 @@ pub fn frontier_to_json(f: &PlanFrontier) -> Json {
         Json::Arr(
             f.points()
                 .iter()
-                .map(|p| {
+                .enumerate()
+                .map(|(i, p)| {
                     let mut o = plan_to_json(&p.graph, &p.assignment);
                     o.set("weight", p.weight).set("cost", cost_to_json(&p.cost));
                     if batched {
                         o.set("batch", p.batch as i64);
+                    }
+                    if let Some(c) = contingencies.get(i).and_then(Option::as_ref) {
+                        let mut co = plan_to_json(&c.graph, &c.assignment);
+                        co.set("cost", cost_to_json(&c.cost));
+                        o.set("contingency", co);
                     }
                     o
                 })
@@ -227,6 +282,18 @@ pub fn frontier_to_json(f: &PlanFrontier) -> Json {
 /// single-plan document, which loads as a one-point frontier (with a zero
 /// cost estimate when the file carries none).
 pub fn frontier_from_json(v: &Json, reg: &AlgorithmRegistry) -> anyhow::Result<PlanFrontier> {
+    frontier_from_json_full(v, reg).map(|(f, _)| f)
+}
+
+/// Like [`frontier_from_json`], also surfacing each plan's device-loss
+/// contingency (v6 manifests; `None` per plan for older files). The
+/// returned contingency vector aligns by index with the returned
+/// frontier's `points()` — surviving the same dominance prune and
+/// fastest-first sort the points themselves go through.
+pub fn frontier_from_json_full(
+    v: &Json,
+    reg: &AlgorithmRegistry,
+) -> anyhow::Result<(PlanFrontier, Vec<Option<ContingencyPlan>>)> {
     let (entries, legacy): (Vec<&Json>, bool) = match v.get("plans") {
         Some(plans) => {
             // A present-but-malformed `plans` is a broken v2 manifest —
@@ -240,8 +307,22 @@ pub fn frontier_from_json(v: &Json, reg: &AlgorithmRegistry) -> anyhow::Result<P
         // Legacy single-plan file: the document itself is the one entry.
         None => (vec![v], true),
     };
+    // Versioned manifests must not smuggle in keys their declared version
+    // predates: a v2 file with `layout` arrays (or a v5 file with
+    // `contingency` plans) is corrupt or doctored, and honoring the key
+    // would silently change what the historical format means.
+    let version = if legacy { None } else { v.get("version").and_then(Json::as_i64) };
     let mut points = Vec::with_capacity(entries.len());
+    let mut conts: Vec<Option<ContingencyPlan>> = Vec::with_capacity(entries.len());
     for (i, e) in entries.into_iter().enumerate() {
+        if let Some(ver) = version {
+            for (key, min) in VERSIONED_PLAN_KEYS {
+                anyhow::ensure!(
+                    ver >= min || e.get(key).is_none(),
+                    "frontier plan {i}: `{key}` requires manifest version {min}+ (file declares version {ver})"
+                );
+            }
+        }
         let (graph, assignment): (Graph, Assignment) =
             plan_from_json(e, reg).map_err(|err| anyhow::anyhow!("frontier plan {i}: {err}"))?;
         let cost = match e.get("cost") {
@@ -268,9 +349,49 @@ pub fn frontier_from_json(v: &Json, reg: &AlgorithmRegistry) -> anyhow::Result<P
             }
             None => 1,
         };
+        let contingency = match e.get("contingency") {
+            Some(c) => {
+                let (cg, ca): (Graph, Assignment) = plan_from_json(c, reg)
+                    .map_err(|err| anyhow::anyhow!("frontier plan {i} contingency: {err}"))?;
+                let cc = match c.get("cost") {
+                    Some(cc) => cost_from_json(cc)
+                        .map_err(|err| anyhow::anyhow!("frontier plan {i} contingency: {err}"))?,
+                    None => anyhow::bail!("frontier plan {i} contingency missing `cost`"),
+                };
+                Some(ContingencyPlan { graph: cg, assignment: ca, cost: cc })
+            }
+            None => None,
+        };
         points.push(PlanPoint { graph, assignment, cost, weight, batch });
+        conts.push(contingency);
     }
-    Ok(PlanFrontier::from_points(points))
+    // `from_points` dominance-prunes and re-sorts; re-align contingencies
+    // with the survivors by their (cost, weight, batch) identity. Ties
+    // consume file-order-first, matching the prune's earliest-kept rule.
+    let keys: Vec<(u64, u64, u64, usize)> = points
+        .iter()
+        .map(|p| {
+            (p.cost.time_ms.to_bits(), p.cost.energy_j.to_bits(), p.weight.to_bits(), p.batch)
+        })
+        .collect();
+    let frontier = PlanFrontier::from_points(points);
+    let mut used = vec![false; keys.len()];
+    let aligned: Vec<Option<ContingencyPlan>> = frontier
+        .points()
+        .iter()
+        .map(|p| {
+            let key =
+                (p.cost.time_ms.to_bits(), p.cost.energy_j.to_bits(), p.weight.to_bits(), p.batch);
+            keys.iter()
+                .enumerate()
+                .find(|(j, k)| !used[*j] && **k == key)
+                .and_then(|(j, _)| {
+                    used[j] = true;
+                    conts[j].take()
+                })
+        })
+        .collect();
+    Ok((frontier, aligned))
 }
 
 /// Like [`frontier_to_json`], with a free-form `note` annotating the
@@ -296,10 +417,30 @@ pub fn save_frontier_noted(path: &Path, f: &PlanFrontier, note: &str) -> anyhow:
     json::write_file(path, &frontier_to_json_noted(f, Some(note)))
 }
 
+/// Persist a frontier with per-plan device-loss contingencies (see
+/// [`frontier_to_json_full`]). An all-`None` slice writes the same bytes
+/// as [`save_frontier`].
+pub fn save_frontier_with_contingencies(
+    path: &Path,
+    f: &PlanFrontier,
+    contingencies: &[Option<ContingencyPlan>],
+) -> anyhow::Result<()> {
+    json::write_file(path, &frontier_to_json_full(f, contingencies))
+}
+
 /// Load a frontier from `path`; single-plan files load as a one-point
 /// frontier (see [`frontier_from_json`]).
 pub fn load_frontier(path: &Path, reg: &AlgorithmRegistry) -> anyhow::Result<PlanFrontier> {
     frontier_from_json(&json::read_file(path)?, reg)
+}
+
+/// Load a frontier plus its per-plan device-loss contingencies (see
+/// [`frontier_from_json_full`]).
+pub fn load_frontier_full(
+    path: &Path,
+    reg: &AlgorithmRegistry,
+) -> anyhow::Result<(PlanFrontier, Vec<Option<ContingencyPlan>>)> {
+    frontier_from_json_full(&json::read_file(path)?, reg)
 }
 
 /// Serve-side placement guard: every device the frontier's plans place
@@ -631,6 +772,68 @@ mod tests {
             frontier_to_json_noted(&f, None).to_string_compact(),
             frontier_to_json(&f).to_string_compact()
         );
+    }
+
+    #[test]
+    fn contingent_frontier_roundtrips_as_v6() {
+        use crate::graph::canonical::graph_hash;
+        let f = tiny_frontier();
+        // Fallback for the slow plan: the fast plan's (graph, assignment)
+        // repriced — any complete plan document works as a contingency.
+        let fallback = ContingencyPlan {
+            graph: f.points()[0].graph.clone(),
+            assignment: f.points()[0].assignment.clone(),
+            cost: GraphCost { time_ms: 1.5, energy_j: 300.0, freq: FreqId::NOMINAL },
+        };
+        let conts = vec![None, Some(fallback.clone())];
+        let j = frontier_to_json_full(&f, &conts);
+        assert_eq!(j.get("version").and_then(Json::as_usize), Some(6));
+        let plans = j.get("plans").and_then(Json::as_arr).unwrap();
+        assert!(plans[0].get("contingency").is_none());
+        assert!(plans[1].get("contingency").is_some());
+        let (back, back_conts) = frontier_from_json_full(&j, &AlgorithmRegistry::new()).unwrap();
+        assert_eq!(back.len(), f.len());
+        assert_eq!(back_conts.len(), back.len());
+        assert!(back_conts[0].is_none());
+        let bc = back_conts[1].as_ref().expect("slow plan's contingency survived the round-trip");
+        assert_eq!(graph_hash(&bc.graph), graph_hash(&fallback.graph));
+        assert_eq!(bc.assignment.distance(&fallback.assignment), 0);
+        assert_eq!(bc.cost.energy_j.to_bits(), fallback.cost.energy_j.to_bits());
+        // The plain loader still works on v6 files, just without fallbacks.
+        assert_eq!(frontier_from_json(&j, &AlgorithmRegistry::new()).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn contingency_free_full_writer_is_byte_stable() {
+        // Format stability: all-None contingencies must be invisible —
+        // same version, same bytes — so fault-unaware pipelines and the
+        // byte-diff CI jobs never see a format change.
+        let f = tiny_frontier();
+        assert_eq!(
+            frontier_to_json_full(&f, &[None, None]).to_string_compact(),
+            frontier_to_json(&f).to_string_compact()
+        );
+        assert_eq!(
+            frontier_to_json_full(&f, &[]).to_string_compact(),
+            frontier_to_json(&f).to_string_compact()
+        );
+    }
+
+    #[test]
+    fn contingency_on_pre_v6_file_rejected() {
+        // Downgrade a v6 document's version stamp while keeping its
+        // contingency entries: corrupt, must be a typed load error.
+        let f = tiny_frontier();
+        let fallback = ContingencyPlan {
+            graph: f.points()[0].graph.clone(),
+            assignment: f.points()[0].assignment.clone(),
+            cost: GraphCost { time_ms: 1.5, energy_j: 300.0, freq: FreqId::NOMINAL },
+        };
+        let s = frontier_to_json_full(&f, &[None, Some(fallback)]).to_string_compact();
+        assert!(s.contains("\"version\":6"), "fixture lost its version stamp: {s}");
+        let j = crate::util::json::parse(&s.replace("\"version\":6", "\"version\":5")).unwrap();
+        let err = frontier_from_json(&j, &AlgorithmRegistry::new()).unwrap_err().to_string();
+        assert!(err.contains("contingency") && err.contains("version"), "{err}");
     }
 
     #[test]

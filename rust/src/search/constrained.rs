@@ -21,7 +21,7 @@ use super::outer::{DvfsMode, OptimizerContext, SearchConfig};
 use super::{optimize, OptimizeResult};
 use crate::algo::Assignment;
 use crate::cost::{CostFunction, CostOracle, GraphCost};
-use crate::energysim::FreqId;
+use crate::energysim::{DeviceId, FreqId};
 use crate::graph::Graph;
 
 /// Result of a constrained search: the chosen weight and the per-step trace.
@@ -181,16 +181,31 @@ pub fn refine_frequency_to_budget(
     // DVFS states (mode on) + extra-device states + NHWC variants (layout
     // axis on). A single-entry set means there is nothing to move.
     let all = super::outer::search_freqs(mode, layouts, oracle);
+    refine_states_to_budget(oracle, g, a, time_budget_ms, mode, &all)
+}
+
+/// [`refine_frequency_to_budget`] over an *explicit* candidate state set
+/// instead of the search's full one — the fault-tolerance path restricts
+/// the set to states that survive a device loss or clock cap (contingency
+/// synthesis, capped re-pricing). Semantics are otherwise identical.
+pub fn refine_states_to_budget(
+    oracle: &CostOracle,
+    g: &Graph,
+    a: &Assignment,
+    time_budget_ms: f64,
+    mode: DvfsMode,
+    all: &[FreqId],
+) -> anyhow::Result<Option<(Assignment, GraphCost)>> {
     if all.len() <= 1 {
         return Ok(None);
     }
     let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
-    let (table, _) = oracle.table_for_freqs(g, &shapes, &all);
+    let (table, _) = oracle.table_for_freqs(g, &shapes, all);
 
     match mode {
         DvfsMode::PerGraph => {
             let mut best: Option<(Assignment, GraphCost)> = None;
-            for &f in &all {
+            for &f in all {
                 let mut af = a.clone();
                 af.set_uniform_freq(f);
                 let c = table.eval(&af);
@@ -267,6 +282,63 @@ pub fn refine_frequency_to_budget(
             Ok(Some((af, cost)))
         }
     }
+}
+
+/// Synthesize a single-device (GPU-only) contingency fallback for a
+/// placed plan: every node pinned to a non-GPU device migrates back to
+/// the GPU, then an unbounded-budget state refinement (phase 2 of
+/// [`refine_states_to_budget`] — per-node energy minimization over the
+/// GPU state set) picks its clocks. Used at `--save-frontier` time so a
+/// `DeviceLost` fault at serve time can hot-swap to a plan that avoids
+/// the dead device.
+///
+/// Returns `None` when the plan never leaves the GPU (it is its own
+/// contingency); otherwise the migrated (assignment, cost), always
+/// GPU-only.
+pub fn synthesize_contingency(
+    oracle: &CostOracle,
+    g: &Graph,
+    a: &Assignment,
+    mode: DvfsMode,
+) -> anyhow::Result<Option<(Assignment, GraphCost)>> {
+    if !a.uses_non_gpu_device() {
+        return Ok(None);
+    }
+    // Migrate: clear every non-GPU pin back to the GPU nominal state. The
+    // layout axis is dropped with the device — a layout negotiated for an
+    // accelerator has no meaning on the fallback device.
+    let mut ga = a.clone();
+    let ids: Vec<_> = ga.assigned_ids().collect();
+    for id in ids {
+        if ga.freq(id).device() != DeviceId::GPU {
+            ga.set_freq(id, FreqId::NOMINAL);
+        }
+    }
+    // The GPU-only state set, plus whatever GPU states the plan already
+    // uses (so the migrated assignment is always evaluable).
+    let mut states: Vec<FreqId> = super::outer::search_freqs(mode, &[], oracle)
+        .into_iter()
+        .filter(|f| f.device() == DeviceId::GPU)
+        .collect();
+    for id in ga.assigned_ids() {
+        let f = ga.freq(id);
+        if !states.contains(&f) {
+            states.push(f);
+        }
+    }
+    let shapes = g.infer_shapes().map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
+    let (table, _) = oracle.table_for_freqs(g, &shapes, &states);
+    let mut cost = table.eval(&ga);
+    cost.freq = ga.uniform_freq();
+    // Unbounded budget: phase 1 never fires, phase 2 minimizes energy.
+    if let Some((ra, rc)) =
+        refine_states_to_budget(oracle, g, &ga, f64::INFINITY, mode, &states)?
+    {
+        if rc.energy_j < cost.energy_j {
+            return Ok(Some((ra, rc)));
+        }
+    }
+    Ok(Some((ga, cost)))
 }
 
 #[cfg(test)]
@@ -347,6 +419,36 @@ mod tests {
         assert!(refine_frequency_to_budget(&ctx.oracle, &g, &slow, budget, DvfsMode::Off, &[])
             .unwrap()
             .is_none());
+    }
+
+    #[test]
+    fn contingency_migrates_off_the_accelerator() {
+        use crate::cost::{AlgorithmRegistry, CostDb};
+        let oracle = CostOracle::new(
+            AlgorithmRegistry::new(),
+            CostDb::new(),
+            Box::new(crate::profiler::SimHeteroProvider::new(7)),
+        );
+        let g = graph();
+        let mut a = Assignment::default_for(&g, oracle.reg());
+        // A GPU-only plan is its own contingency.
+        assert!(synthesize_contingency(&oracle, &g, &a, DvfsMode::PerNode).unwrap().is_none());
+        // Pin one node onto the DLA at its nominal state.
+        let dla_nominal = oracle
+            .device_freqs()
+            .iter()
+            .find(|(d, _)| *d == DeviceId::DLA)
+            .expect("hetero provider exposes the DLA")
+            .1[0];
+        let id = a.assigned_ids().next().expect("graph has assignable nodes");
+        a.set_freq(id, dla_nominal);
+        assert!(a.uses_non_gpu_device());
+        let (ca, cc) = synthesize_contingency(&oracle, &g, &a, DvfsMode::PerNode)
+            .unwrap()
+            .expect("a placed plan gets a contingency");
+        assert!(!ca.uses_non_gpu_device(), "contingency must be single-device");
+        assert!(cc.time_ms.is_finite() && cc.time_ms > 0.0);
+        assert!(cc.energy_j.is_finite() && cc.energy_j > 0.0);
     }
 
     #[test]

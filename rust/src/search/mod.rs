@@ -10,7 +10,10 @@ pub mod inner;
 /// Outer search: α-relaxed backtracking over equivalent graphs (Algorithm 1).
 pub mod outer;
 
-pub use constrained::{optimize_with_time_budget, refine_frequency_to_budget, ConstrainedResult};
+pub use constrained::{
+    optimize_with_time_budget, refine_frequency_to_budget, refine_states_to_budget,
+    synthesize_contingency, ConstrainedResult,
+};
 pub use frontier::{
     optimize_frontier, optimize_frontier_batched, optimize_frontier_batched_warm,
     price_plan_at_batch, FrontierProbe, FrontierResult, PlanFrontier, PlanPoint,

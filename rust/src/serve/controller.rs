@@ -391,6 +391,22 @@ impl FrontierController {
         }
     }
 
+    /// [`rebase_from`](Self::rebase_from) for a surface that *shrank or
+    /// reshuffled* under a fault: `map[new]` names the previous index whose
+    /// measured service EWMA the new point `new` inherits (`None` for a
+    /// freshly activated contingency plan, which must re-measure). Load
+    /// estimates and the switch log carry over as in `rebase_from`.
+    pub fn rebase_from_masked(&mut self, prev: &FrontierController, map: &[Option<usize>]) {
+        self.rebase_from(prev, false);
+        for (new, old) in map.iter().enumerate().take(self.svc_ewma_s.len()) {
+            if let Some(old) = old {
+                if let Some(e) = prev.svc_ewma_s.get(*old) {
+                    self.svc_ewma_s[new] = *e;
+                }
+            }
+        }
+    }
+
     fn switch(&mut self, to: usize, now_s: f64, queue_depth: usize, rate_hz: f64) {
         self.switches.push(PlanSwitchEvent {
             at_s: now_s,
@@ -603,6 +619,26 @@ mod tests {
         shrunk.rebase_from(&prev, true);
         assert_eq!(shrunk.rate_hz(), prev.rate_hz());
         assert!(shrunk.svc_ewma_s.iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn masked_rebase_maps_surviving_service_ewmas() {
+        let mut prev = FrontierController::new(frontier(), AdaptiveConfig::default());
+        prev.observe_arrival(0.0);
+        prev.observe_arrival(0.01);
+        prev.observe_service(0, 0.001);
+        prev.observe_service(2, 0.004);
+
+        // A device loss dropped plan 1 and replaced plan 2 with a
+        // contingency: the new surface is [old 0, fresh contingency].
+        let mut next = FrontierController::new(
+            vec![cost(1.0, 300.0), cost(4.0, 100.0)],
+            AdaptiveConfig::default(),
+        );
+        next.rebase_from_masked(&prev, &[Some(0), None]);
+        assert_eq!(next.rate_hz(), prev.rate_hz(), "load estimates carry over");
+        assert_eq!(next.svc_ewma_s[0], prev.svc_ewma_s[0], "survivor keeps its measurement");
+        assert_eq!(next.svc_ewma_s[1], None, "contingency plan re-measures");
     }
 
     #[test]

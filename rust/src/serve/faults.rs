@@ -1,0 +1,647 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a typed, timestamped script of hardware misbehavior —
+//! device loss, thermal/power clock caps, transient execution errors —
+//! loaded from JSON (`eadgo serve --fault-plan faults.json`, mirroring the
+//! `--truth-db` drift-injection harness) and applied on the serve loop's
+//! **virtual clock**. Replays are bitwise reproducible: the only randomness
+//! is a dedicated fault RNG seeded from the serve seed, drawn only while a
+//! transient-error window is active, so a fault-free run never touches it
+//! and stays byte-identical to a run without a plan.
+//!
+//! The session reacts to activated events with typed records that land in
+//! [`ServeReport`](super::ServeReport) next to the drift/swap events:
+//!
+//! - [`FaultEvent`] — an injected event became active.
+//! - [`DegradeEvent`] — the serving surface degraded (lost-device points
+//!   masked, a contingency plan activated, clock-capped re-pricing, or a
+//!   background re-search that died without poisoning the session).
+//! - [`ShedEvent`] — a request was shed because transient-error retries
+//!   would have blown its deadline budget.
+//!
+//! The event JSON arrays are emitted only when non-empty, so fault-free
+//! reports serialize byte-identically to the pre-fault format.
+
+use crate::energysim::{DeviceId, FreqId, GpuSpec};
+use crate::util::json::{self, Json};
+use std::path::Path;
+
+/// One kind of injected hardware fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The device drops off the bus: every plan state placed on it becomes
+    /// unservable and the session must fail over to surviving plans or a
+    /// manifest contingency plan.
+    DeviceLost {
+        /// The device that disappears.
+        device: DeviceId,
+    },
+    /// Thermal throttling clamps the device's core clock: states above
+    /// `max_mhz` become unreachable and the surface re-prices against the
+    /// capped clock table.
+    ThermalCap {
+        /// The throttled device.
+        device: DeviceId,
+        /// Highest core clock still reachable, MHz.
+        max_mhz: u16,
+    },
+    /// A board power cap: resolved against the device's modeled power curve
+    /// ([`GpuSpec::max_mhz_under_power`]) to the highest clock whose draw
+    /// fits the budget, then applied exactly like a thermal cap.
+    PowerCap {
+        /// The capped device.
+        device: DeviceId,
+        /// Board power budget, watts.
+        watts: f64,
+    },
+    /// A window of transient execution errors: each batch executed while
+    /// the window is active fails independently with probability `rate`
+    /// (drawn from the dedicated fault RNG), triggering bounded retry with
+    /// exponential backoff and deadline-aware shedding.
+    TransientError {
+        /// Per-attempt failure probability in [0, 1].
+        rate: f64,
+        /// Window length from the event timestamp, virtual seconds.
+        duration_s: f64,
+    },
+}
+
+impl FaultKind {
+    /// Canonical kind tag used in JSON (`device_lost`, `thermal_cap`,
+    /// `power_cap`, `transient_error`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FaultKind::DeviceLost { .. } => "device_lost",
+            FaultKind::ThermalCap { .. } => "thermal_cap",
+            FaultKind::PowerCap { .. } => "power_cap",
+            FaultKind::TransientError { .. } => "transient_error",
+        }
+    }
+}
+
+/// One timestamped fault injection, recorded in
+/// [`ServeReport::faults`](super::ServeReport::faults) when it activates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual time the fault activates, seconds.
+    pub at_s: f64,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    /// JSON form (report serialization; deterministic field set per kind).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("at_s", self.at_s).set("kind", self.kind.tag());
+        match self.kind {
+            FaultKind::DeviceLost { device } => {
+                o.set("device", device.name());
+            }
+            FaultKind::ThermalCap { device, max_mhz } => {
+                o.set("device", device.name()).set("max_mhz", max_mhz as f64);
+            }
+            FaultKind::PowerCap { device, watts } => {
+                o.set("device", device.name()).set("watts", watts);
+            }
+            FaultKind::TransientError { rate, duration_s } => {
+                o.set("rate", rate).set("duration_s", duration_s);
+            }
+        }
+        o
+    }
+}
+
+/// Why the serving surface degraded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DegradeCause {
+    /// A [`FaultKind::DeviceLost`] masked plans and (possibly) activated a
+    /// manifest contingency plan.
+    DeviceLost(DeviceId),
+    /// A thermal or power cap clamped the device to this clock and the
+    /// surface was re-priced against the capped table.
+    ClockCap(DeviceId, u16),
+    /// A background re-search panicked or failed; the session kept serving
+    /// on the current surface instead of propagating the error.
+    ResearchFailed,
+}
+
+impl DegradeCause {
+    /// Canonical string form used in JSON and log lines.
+    pub fn describe(&self) -> String {
+        match self {
+            DegradeCause::DeviceLost(d) => format!("device_lost:{}", d.name()),
+            DegradeCause::ClockCap(d, mhz) => format!("clock_cap:{}@{mhz}MHz", d.name()),
+            DegradeCause::ResearchFailed => "research_failed".to_string(),
+        }
+    }
+}
+
+/// One graceful-degradation action taken by the session, recorded in
+/// [`ServeReport::degrades`](super::ServeReport::degrades).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradeEvent {
+    /// Virtual time of the action, seconds.
+    pub at_s: f64,
+    /// Surface epoch after the action (device loss and clock caps bump the
+    /// epoch like a feedback hot-swap; a failed re-search does not).
+    pub epoch: usize,
+    /// What triggered the degradation.
+    pub cause: DegradeCause,
+    /// Serving points before the action.
+    pub points_before: usize,
+    /// Serving points after the action.
+    pub points_after: usize,
+    /// Manifest contingency plans activated by the action.
+    pub contingencies_used: usize,
+    /// Free-form diagnostic (the error text of a failed re-search; empty
+    /// otherwise).
+    pub detail: String,
+}
+
+impl DegradeEvent {
+    /// JSON form (report serialization).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("at_s", self.at_s)
+            .set("epoch", self.epoch as f64)
+            .set("cause", self.cause.describe().as_str())
+            .set("points_before", self.points_before as f64)
+            .set("points_after", self.points_after as f64)
+            .set("contingencies_used", self.contingencies_used as f64);
+        if !self.detail.is_empty() {
+            o.set("detail", self.detail.as_str());
+        }
+        o
+    }
+}
+
+/// One admitted request shed because transient-error retries would have
+/// blown its deadline budget, recorded in
+/// [`ServeReport::sheds`](super::ServeReport::sheds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShedEvent {
+    /// Virtual time of the shed decision, seconds.
+    pub at_s: f64,
+    /// Request id (arrival order, same id space as request records).
+    pub id: usize,
+    /// Execution attempts made before shedding.
+    pub retries: usize,
+    /// Seconds the request had waited since arrival.
+    pub waited_s: f64,
+}
+
+impl ShedEvent {
+    /// JSON form (report serialization).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("at_s", self.at_s)
+            .set("id", self.id as f64)
+            .set("retries", self.retries as f64)
+            .set("waited_s", self.waited_s);
+        o
+    }
+}
+
+/// A typed, validated fault-injection script: timestamped events plus the
+/// retry policy for transient errors. Load from JSON with
+/// [`FaultPlan::load`]; the serve loop consumes it through [`FaultState`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Events sorted by activation time (stable on ties: file order).
+    pub events: Vec<FaultEvent>,
+    /// Maximum retry attempts per batch under a transient-error window
+    /// before the batch's requests are shed.
+    pub max_retries: usize,
+    /// Exponential-backoff base: attempt `k` waits `backoff_ms · 2^k`
+    /// milliseconds of virtual time before re-executing.
+    pub backoff_ms: f64,
+    /// Deadline budget for retries, seconds past the oldest admitted
+    /// request's arrival: a retry whose backoff would end later than this
+    /// sheds the batch instead (infinite = shed only on retry exhaustion).
+    pub retry_budget_s: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            events: Vec::new(),
+            max_retries: 3,
+            backoff_ms: 2.0,
+            retry_budget_s: f64::INFINITY,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Backoff before retry attempt `attempt` (0-based), virtual seconds.
+    pub fn backoff_s(&self, attempt: usize) -> f64 {
+        self.backoff_ms * 2f64.powi(attempt.min(32) as i32) / 1e3
+    }
+
+    /// Whether any event names this device as lost.
+    pub fn loses_device(&self) -> bool {
+        self.events.iter().any(|e| matches!(e.kind, FaultKind::DeviceLost { .. }))
+    }
+
+    /// Parse and validate a plan from its JSON form:
+    ///
+    /// ```json
+    /// {"max_retries": 3, "backoff_ms": 2.0,
+    ///  "events": [
+    ///    {"at_s": 0.5, "kind": "device_lost", "device": "dla"},
+    ///    {"at_s": 1.0, "kind": "thermal_cap", "device": "gpu", "max_mhz": 900},
+    ///    {"at_s": 1.5, "kind": "power_cap", "device": "gpu", "watts": 120.0},
+    ///    {"at_s": 2.0, "kind": "transient_error", "rate": 0.25, "duration_s": 1.0}]}
+    /// ```
+    ///
+    /// Every malformed field is a typed error naming the offending event;
+    /// events are sorted by `at_s` (stable, so same-time events keep file
+    /// order).
+    pub fn from_json(v: &Json) -> anyhow::Result<FaultPlan> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("fault plan: expected a JSON object at top level"))?;
+        let mut plan = FaultPlan::default();
+        if let Some(mr) = obj.get("max_retries") {
+            let n = mr
+                .as_i64()
+                .filter(|&n| (0..=16).contains(&n))
+                .ok_or_else(|| anyhow::anyhow!("fault plan: max_retries must be an integer in 0..=16"))?;
+            plan.max_retries = n as usize;
+        }
+        if let Some(bo) = obj.get("backoff_ms") {
+            let b = bo
+                .as_f64()
+                .filter(|b| b.is_finite() && *b >= 0.0)
+                .ok_or_else(|| anyhow::anyhow!("fault plan: backoff_ms must be finite and >= 0"))?;
+            plan.backoff_ms = b;
+        }
+        if let Some(rb) = obj.get("retry_budget_s") {
+            let b = rb
+                .as_f64()
+                .filter(|b| *b > 0.0)
+                .ok_or_else(|| anyhow::anyhow!("fault plan: retry_budget_s must be > 0"))?;
+            plan.retry_budget_s = b;
+        }
+        let events = match obj.get("events") {
+            Some(e) => e
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("fault plan: \"events\" must be an array"))?,
+            None => &[] as &[Json],
+        };
+        for (i, e) in events.iter().enumerate() {
+            plan.events
+                .push(event_from_json(e).map_err(|err| anyhow::anyhow!("fault plan event {i}: {err}"))?);
+        }
+        plan.events.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap_or(std::cmp::Ordering::Equal));
+        Ok(plan)
+    }
+
+    /// Read and parse a plan file.
+    pub fn load(path: &Path) -> anyhow::Result<FaultPlan> {
+        let v = json::read_file(path)
+            .map_err(|e| anyhow::anyhow!("fault plan {}: {e}", path.display()))?;
+        FaultPlan::from_json(&v)
+            .map_err(|e| anyhow::anyhow!("fault plan {}: {e}", path.display()))
+    }
+}
+
+/// Parse one fault event (see [`FaultPlan::from_json`] for the format).
+fn event_from_json(v: &Json) -> anyhow::Result<FaultEvent> {
+    let at_s = v.req_f64("at_s")?;
+    anyhow::ensure!(at_s.is_finite() && at_s >= 0.0, "at_s must be finite and >= 0, got {at_s}");
+    let kind = v.req_str("kind")?;
+    let device = || -> anyhow::Result<DeviceId> {
+        let name = v.req_str("device")?;
+        DeviceId::parse(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown device \"{name}\" (known: {})",
+                crate::energysim::DEVICE_NAMES.join(", ")
+            )
+        })
+    };
+    let kind = match kind {
+        "device_lost" => FaultKind::DeviceLost { device: device()? },
+        "thermal_cap" => {
+            let mhz = v.req_f64("max_mhz")?;
+            anyhow::ensure!(
+                mhz.is_finite() && mhz >= 1.0 && mhz <= 4095.0,
+                "max_mhz must be in 1..=4095, got {mhz}"
+            );
+            FaultKind::ThermalCap { device: device()?, max_mhz: mhz as u16 }
+        }
+        "power_cap" => {
+            let watts = v.req_f64("watts")?;
+            anyhow::ensure!(watts.is_finite() && watts > 0.0, "watts must be finite and > 0, got {watts}");
+            FaultKind::PowerCap { device: device()?, watts }
+        }
+        "transient_error" => {
+            let rate = v.req_f64("rate")?;
+            anyhow::ensure!((0.0..=1.0).contains(&rate), "rate must be in [0, 1], got {rate}");
+            let duration_s = v.req_f64("duration_s")?;
+            anyhow::ensure!(
+                duration_s.is_finite() && duration_s > 0.0,
+                "duration_s must be finite and > 0, got {duration_s}"
+            );
+            FaultKind::TransientError { rate, duration_s }
+        }
+        other => anyhow::bail!(
+            "unknown fault kind \"{other}\" (known: device_lost, thermal_cap, power_cap, transient_error)"
+        ),
+    };
+    Ok(FaultEvent { at_s, kind })
+}
+
+/// Live fault tracker the serve loop advances on its virtual clock: which
+/// devices are lost, which are clock-capped (thermal and power caps both
+/// resolve to a max clock; the tightest wins), and whether a
+/// transient-error window is active.
+#[derive(Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    next: usize,
+    lost: Vec<DeviceId>,
+    /// Effective clock cap per device (tightest of all applied caps), MHz.
+    caps: Vec<(DeviceId, u16)>,
+    /// Transient windows as (start_s, end_s, rate).
+    windows: Vec<(f64, f64, f64)>,
+}
+
+impl FaultState {
+    /// Track `plan` from time zero with no fault active.
+    pub fn new(plan: FaultPlan) -> FaultState {
+        FaultState { plan, next: 0, lost: Vec::new(), caps: Vec::new(), windows: Vec::new() }
+    }
+
+    /// The retry policy of the underlying plan.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Activate every event due at or before `clock`, in timestamp order,
+    /// and return them (for the report's fault log). Power caps are
+    /// resolved to clock caps against the device's modeled power curve
+    /// here, so downstream only ever sees a max-MHz constraint.
+    pub fn advance(&mut self, clock: f64) -> Vec<FaultEvent> {
+        let mut fired = Vec::new();
+        while let Some(e) = self.plan.events.get(self.next) {
+            if e.at_s > clock {
+                break;
+            }
+            let e = *e;
+            self.next += 1;
+            match e.kind {
+                FaultKind::DeviceLost { device } => {
+                    if !self.lost.contains(&device) {
+                        self.lost.push(device);
+                    }
+                }
+                FaultKind::ThermalCap { device, max_mhz } => self.tighten_cap(device, max_mhz),
+                FaultKind::PowerCap { device, watts } => {
+                    if let Some(spec) = GpuSpec::for_device(device) {
+                        if let Some(mhz) = spec.max_mhz_under_power(watts) {
+                            self.tighten_cap(device, mhz);
+                        }
+                    }
+                }
+                FaultKind::TransientError { rate, duration_s } => {
+                    self.windows.push((e.at_s, e.at_s + duration_s, rate));
+                }
+            }
+            fired.push(e);
+        }
+        fired
+    }
+
+    fn tighten_cap(&mut self, device: DeviceId, max_mhz: u16) {
+        match self.caps.iter_mut().find(|(d, _)| *d == device) {
+            Some((_, cap)) => *cap = (*cap).min(max_mhz),
+            None => self.caps.push((device, max_mhz)),
+        }
+    }
+
+    /// Whether `device` has been lost.
+    pub fn is_lost(&self, device: DeviceId) -> bool {
+        self.lost.contains(&device)
+    }
+
+    /// Whether any device has been lost.
+    pub fn any_lost(&self) -> bool {
+        !self.lost.is_empty()
+    }
+
+    /// The effective clock cap on `device`, MHz (`None` = uncapped).
+    pub fn cap_mhz(&self, device: DeviceId) -> Option<u16> {
+        self.caps.iter().find(|(d, _)| *d == device).map(|&(_, c)| c)
+    }
+
+    /// The transient-error failure probability at `clock`: the maximum
+    /// rate over all windows containing it, 0 outside every window.
+    pub fn transient_rate(&self, clock: f64) -> f64 {
+        self.windows
+            .iter()
+            .filter(|(s, e, _)| *s <= clock && clock < *e)
+            .map(|&(_, _, r)| r)
+            .fold(0.0, f64::max)
+    }
+
+    /// Whether a packed frequency state survives the current fault set:
+    /// its device is not lost and its effective clock fits any cap.
+    pub fn allows(&self, f: FreqId) -> bool {
+        let d = f.device();
+        if self.is_lost(d) {
+            return false;
+        }
+        match self.cap_mhz(d) {
+            None => true,
+            Some(cap) => {
+                let mhz = match f.mhz() {
+                    0 => GpuSpec::for_device(d).map(|s| s.nominal_mhz()).unwrap_or(0),
+                    m => m,
+                };
+                mhz <= cap
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> anyhow::Result<FaultPlan> {
+        FaultPlan::from_json(&json::parse(s).expect("test JSON parses"))
+    }
+
+    #[test]
+    fn parses_every_kind_and_sorts_by_time() {
+        let p = parse(
+            r#"{"max_retries": 2, "backoff_ms": 4.0, "events": [
+                {"at_s": 2.0, "kind": "transient_error", "rate": 0.25, "duration_s": 1.0},
+                {"at_s": 0.5, "kind": "device_lost", "device": "dla"},
+                {"at_s": 1.0, "kind": "thermal_cap", "device": "gpu", "max_mhz": 900},
+                {"at_s": 1.5, "kind": "power_cap", "device": "gpu", "watts": 120.0}]}"#,
+        )
+        .expect("valid plan");
+        assert_eq!(p.max_retries, 2);
+        assert_eq!(p.backoff_ms, 4.0);
+        let times: Vec<f64> = p.events.iter().map(|e| e.at_s).collect();
+        assert_eq!(times, vec![0.5, 1.0, 1.5, 2.0], "events sort by at_s");
+        assert!(p.loses_device());
+        assert_eq!(p.events[0].kind, FaultKind::DeviceLost { device: DeviceId::DLA });
+    }
+
+    #[test]
+    fn empty_plan_defaults() {
+        let p = parse("{}").expect("empty plan is valid");
+        assert!(p.events.is_empty());
+        assert_eq!(p.max_retries, 3);
+        assert!(p.retry_budget_s.is_infinite());
+        assert!(!p.loses_device());
+    }
+
+    #[test]
+    fn malformed_events_are_typed_errors() {
+        for (js, needle) in [
+            (r#"{"events": [{"at_s": -1.0, "kind": "device_lost", "device": "dla"}]}"#, "at_s"),
+            (r#"{"events": [{"at_s": 0.0, "kind": "device_lost", "device": "tpu"}]}"#, "unknown device"),
+            (r#"{"events": [{"at_s": 0.0, "kind": "meteor_strike"}]}"#, "unknown fault kind"),
+            (
+                r#"{"events": [{"at_s": 0.0, "kind": "transient_error", "rate": 1.5, "duration_s": 1.0}]}"#,
+                "rate",
+            ),
+            (
+                r#"{"events": [{"at_s": 0.0, "kind": "transient_error", "rate": 0.5, "duration_s": 0.0}]}"#,
+                "duration_s",
+            ),
+            (r#"{"events": [{"at_s": 0.0, "kind": "thermal_cap", "device": "gpu", "max_mhz": 0}]}"#, "max_mhz"),
+            (r#"{"events": [{"at_s": 0.0, "kind": "power_cap", "device": "gpu", "watts": -5}]}"#, "watts"),
+            (r#"{"max_retries": 99}"#, "max_retries"),
+            (r#"{"backoff_ms": -1}"#, "backoff_ms"),
+            (r#"[1, 2]"#, "object"),
+        ] {
+            let err = parse(js).expect_err(js).to_string();
+            assert!(err.contains(needle), "error for {js} must mention {needle}, got: {err}");
+        }
+    }
+
+    #[test]
+    fn state_advances_in_order_and_tracks_loss_and_caps() {
+        let p = parse(
+            r#"{"events": [
+                {"at_s": 0.5, "kind": "device_lost", "device": "dla"},
+                {"at_s": 1.0, "kind": "thermal_cap", "device": "gpu", "max_mhz": 1100},
+                {"at_s": 2.0, "kind": "thermal_cap", "device": "gpu", "max_mhz": 900}]}"#,
+        )
+        .unwrap();
+        let mut st = FaultState::new(p);
+        assert!(st.advance(0.4).is_empty());
+        assert!(!st.is_lost(DeviceId::DLA));
+
+        let fired = st.advance(1.2);
+        assert_eq!(fired.len(), 2, "both due events fire, in order");
+        assert_eq!(fired[0].at_s, 0.5);
+        assert!(st.is_lost(DeviceId::DLA));
+        assert!(!st.is_lost(DeviceId::GPU));
+        assert_eq!(st.cap_mhz(DeviceId::GPU), Some(1100));
+
+        st.advance(5.0);
+        assert_eq!(st.cap_mhz(DeviceId::GPU), Some(900), "tightest cap wins");
+        assert!(st.advance(100.0).is_empty(), "events fire once");
+    }
+
+    #[test]
+    fn allows_masks_lost_devices_and_capped_clocks() {
+        let p = parse(
+            r#"{"events": [
+                {"at_s": 0.0, "kind": "device_lost", "device": "dla"},
+                {"at_s": 0.0, "kind": "thermal_cap", "device": "gpu", "max_mhz": 1000}]}"#,
+        )
+        .unwrap();
+        let mut st = FaultState::new(p);
+        st.advance(0.0);
+        assert!(!st.allows(FreqId::on(DeviceId::DLA, 0)), "lost device masks every state");
+        assert!(!st.allows(FreqId::on(DeviceId::DLA, 640)));
+        assert!(st.allows(FreqId::on(DeviceId::GPU, 900)), "below the cap");
+        assert!(!st.allows(FreqId::on(DeviceId::GPU, 1095)), "above the cap");
+        assert!(
+            !st.allows(FreqId::NOMINAL),
+            "GPU nominal means 1380 MHz, which exceeds a 1000 MHz cap"
+        );
+    }
+
+    #[test]
+    fn transient_windows_bound_the_rate() {
+        let p = parse(
+            r#"{"events": [
+                {"at_s": 1.0, "kind": "transient_error", "rate": 0.25, "duration_s": 1.0},
+                {"at_s": 1.5, "kind": "transient_error", "rate": 0.5, "duration_s": 0.2}]}"#,
+        )
+        .unwrap();
+        let mut st = FaultState::new(p);
+        st.advance(10.0);
+        assert_eq!(st.transient_rate(0.5), 0.0, "before the window");
+        assert_eq!(st.transient_rate(1.2), 0.25);
+        assert_eq!(st.transient_rate(1.6), 0.5, "overlap takes the max rate");
+        assert_eq!(st.transient_rate(1.9), 0.25);
+        assert_eq!(st.transient_rate(2.5), 0.0, "after the window");
+    }
+
+    #[test]
+    fn power_cap_resolves_to_a_clock_cap() {
+        // 120 W on a 300 W-TDP V100 must cap well below nominal but above
+        // the lowest state; the exact clock comes from the power model.
+        let p = parse(
+            r#"{"events": [{"at_s": 0.0, "kind": "power_cap", "device": "gpu", "watts": 120.0}]}"#,
+        )
+        .unwrap();
+        let mut st = FaultState::new(p);
+        st.advance(0.0);
+        let cap = st.cap_mhz(DeviceId::GPU).expect("a 120 W cap must clamp the clock");
+        assert!(cap < 1380, "cap {cap} must be below nominal");
+        assert!(cap >= 510, "cap {cap} cannot fall below the lowest state");
+        // A generous cap above TDP changes nothing.
+        let p2 = parse(
+            r#"{"events": [{"at_s": 0.0, "kind": "power_cap", "device": "gpu", "watts": 400.0}]}"#,
+        )
+        .unwrap();
+        let mut st2 = FaultState::new(p2);
+        st2.advance(0.0);
+        assert_eq!(st2.cap_mhz(DeviceId::GPU), None, "a cap above TDP is a no-op");
+    }
+
+    #[test]
+    fn backoff_doubles_deterministically() {
+        let p = FaultPlan { backoff_ms: 2.0, ..FaultPlan::default() };
+        assert_eq!(p.backoff_s(0), 0.002);
+        assert_eq!(p.backoff_s(1), 0.004);
+        assert_eq!(p.backoff_s(2), 0.008);
+    }
+
+    #[test]
+    fn event_json_roundtrips_through_report_form() {
+        let e = FaultEvent {
+            at_s: 0.5,
+            kind: FaultKind::ThermalCap { device: DeviceId::GPU, max_mhz: 900 },
+        };
+        let j = e.to_json();
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("thermal_cap"));
+        assert_eq!(j.get("device").and_then(Json::as_str), Some("gpu"));
+        assert_eq!(j.get("max_mhz").and_then(Json::as_f64), Some(900.0));
+        let d = DegradeEvent {
+            at_s: 1.0,
+            epoch: 1,
+            cause: DegradeCause::DeviceLost(DeviceId::DLA),
+            points_before: 4,
+            points_after: 3,
+            contingencies_used: 1,
+            detail: String::new(),
+        };
+        let dj = d.to_json();
+        assert_eq!(dj.get("cause").and_then(Json::as_str), Some("device_lost:dla"));
+        assert!(dj.get("detail").is_none(), "empty detail is omitted");
+        let s = ShedEvent { at_s: 2.0, id: 7, retries: 3, waited_s: 0.4 };
+        assert_eq!(s.to_json().get("id").and_then(Json::as_f64), Some(7.0));
+    }
+}

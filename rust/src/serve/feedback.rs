@@ -65,6 +65,11 @@ pub struct FeedbackConfig {
     /// corrected surface hot-swaps in when ready) instead of inline on the
     /// serving thread (deterministic, used by tests and the CLI).
     pub background: bool,
+    /// Chaos hook: make every re-search job panic instead of searching.
+    /// Exercises the serve loop's research-failure containment (the panic
+    /// must surface as a `DegradeEvent`, never poison the session); only
+    /// ever set by tests.
+    pub inject_research_panic: bool,
 }
 
 impl Default for FeedbackConfig {
@@ -79,6 +84,7 @@ impl Default for FeedbackConfig {
             research_interval_s: 0.5,
             max_researches: 4,
             background: false,
+            inject_research_panic: false,
         }
     }
 }
@@ -185,6 +191,10 @@ pub struct DriftDetector {
     /// Per-plan EWMA of the observed/predicted ratio — the writeback
     /// scale for that plan's database rows.
     plan_ratio: Vec<Option<f64>>,
+    /// Batches still to ignore after a fault epoch
+    /// ([`DriftDetector::suppress_for`]): fault-induced slowdowns must not
+    /// arm drift.
+    suppress_left: usize,
 }
 
 impl DriftDetector {
@@ -206,7 +216,16 @@ impl DriftDetector {
             over_run: 0,
             in_drift: false,
             plan_ratio: vec![None; n_plans],
+            suppress_left: 0,
         }
+    }
+
+    /// Ignore the next `batches` observations entirely (no calibration, no
+    /// ratio update, no arming). Called when a fault degrades the surface:
+    /// the slowdown is a known hardware event, not cost-model drift, and
+    /// must not arm the detector or pollute the writeback ratios.
+    pub fn suppress_for(&mut self, batches: usize) {
+        self.suppress_left = self.suppress_left.max(batches);
     }
 
     /// Feed one executed batch: the serving plan, the oracle's predicted
@@ -224,6 +243,10 @@ impl DriftDetector {
             || !(observed_s.is_finite() && observed_s > 0.0)
             || plan >= self.plan_ratio.len()
         {
+            return None;
+        }
+        if self.suppress_left > 0 {
+            self.suppress_left -= 1;
             return None;
         }
         let Some(kappa) = self.kappa else {
@@ -424,6 +447,25 @@ mod tests {
         assert_eq!(d.kappa(), Some(1e-3), "κ is a host property, kept across swaps");
         // The new surface re-earns its own verdict.
         assert_eq!(d.observe(100.0, 2, 1.0, 1e-3).map(|e| e.kind), None);
+    }
+
+    #[test]
+    fn suppressed_batches_never_arm_or_calibrate() {
+        let mut d = DriftDetector::new(&cfg(), 1, Some(1e-3));
+        // A fault epoch: the next 5 batches run 3x slow for a known
+        // hardware reason. Suppression swallows them without arming or
+        // touching the ratio EWMAs.
+        d.suppress_for(5);
+        for i in 0..5 {
+            assert_eq!(d.observe(i as f64, 0, 1.0, 3e-3), None);
+        }
+        assert!(!d.in_drift(), "suppressed slowdown must not arm drift");
+        assert_eq!(d.plan_scale(0), None, "suppressed batches must not pollute writeback");
+        // Observation resumes once the window is spent.
+        for i in 5..15 {
+            d.observe(i as f64, 0, 1.0, 3e-3);
+        }
+        assert!(d.in_drift(), "post-suppression drift must still arm");
     }
 
     #[test]

@@ -48,6 +48,8 @@
 
 /// Load-adaptive plan selection over a Pareto frontier.
 pub mod controller;
+/// Deterministic fault injection: typed fault plans and degradation events.
+pub mod faults;
 /// Drift detection for the serve-time feedback loop.
 pub mod feedback;
 /// The serve-session builder and its unified serving loop.
@@ -56,6 +58,7 @@ pub mod session;
 pub mod trace;
 
 pub use controller::{AdaptiveConfig, FrontierController, PlanSwitchEvent};
+pub use faults::{DegradeCause, DegradeEvent, FaultEvent, FaultKind, FaultPlan, ShedEvent};
 pub use feedback::{DriftDetector, DriftEvent, DriftKind, FeedbackConfig, HotSwapEvent};
 pub use session::{ResearchConfig, ServeSession};
 pub use trace::RatePhase;
@@ -252,6 +255,17 @@ pub struct ServeReport {
     /// Distinct measured cost rows accumulated by telemetry writeback
     /// (0 with feedback off).
     pub feedback_rows: usize,
+    /// Injected faults that activated during the run (empty without a
+    /// fault plan; serialized only when non-empty, so fault-free reports
+    /// stay byte-identical to the pre-fault format).
+    pub faults: Vec<FaultEvent>,
+    /// Graceful-degradation actions taken by the session (device-loss
+    /// masking, contingency activation, clock-cap re-pricing, survived
+    /// re-search failures). Serialized only when non-empty.
+    pub degrades: Vec<DegradeEvent>,
+    /// Admitted requests shed because transient-error retries would have
+    /// blown their deadline budget. Serialized only when non-empty.
+    pub sheds: Vec<ShedEvent>,
 }
 
 impl ServeReport {
@@ -399,7 +413,30 @@ impl ServeReport {
                     })
                     .collect::<Vec<_>>(),
             );
+        // Fault-era arrays appear only when something happened: a run with
+        // no fault plan (and no surviving-failure degrades) serializes
+        // byte-identically to the pre-fault report format.
+        if !self.faults.is_empty() {
+            j.set("faults", self.faults.iter().map(FaultEvent::to_json).collect::<Vec<_>>());
+        }
+        if !self.degrades.is_empty() {
+            j.set("degrades", self.degrades.iter().map(DegradeEvent::to_json).collect::<Vec<_>>());
+        }
+        if !self.sheds.is_empty() {
+            j.set("sheds", self.sheds.iter().map(ShedEvent::to_json).collect::<Vec<_>>());
+        }
         j
+    }
+
+    /// Fraction of admitted requests actually served: `served / (served +
+    /// shed)`. 1.0 for a run that shed nothing (including every fault-free
+    /// run); this is the bench payload's `serve.availability_under_faults`.
+    pub fn availability(&self) -> f64 {
+        let total = self.records.len() + self.sheds.len();
+        if total == 0 {
+            return 1.0;
+        }
+        self.records.len() as f64 / total as f64
     }
 }
 
@@ -913,6 +950,27 @@ mod tests {
             "virtual service must remove all wallclock from the report"
         );
         assert!(a.busy_s > 0.0);
+    }
+
+    #[test]
+    fn fault_arrays_serialize_only_when_non_empty() {
+        let cfg = ServeConfig { service: virtual_service(), ..cfg(16, 4) };
+        let mut report = run_plain(&cfg).unwrap();
+        let clean = report.to_json().to_string_compact();
+        assert!(!clean.contains("\"faults\""), "fault-free reports carry no fault keys");
+        assert!(!clean.contains("\"degrades\"") && !clean.contains("\"sheds\""));
+        assert_eq!(report.availability(), 1.0);
+
+        report.faults.push(faults::FaultEvent {
+            at_s: 0.1,
+            kind: faults::FaultKind::DeviceLost { device: crate::energysim::DeviceId::DLA },
+        });
+        report.sheds.push(faults::ShedEvent { at_s: 0.2, id: 3, retries: 3, waited_s: 0.05 });
+        let dirty = report.to_json().to_string_compact();
+        assert!(dirty.contains("\"faults\"") && dirty.contains("\"sheds\""));
+        assert!(dirty.contains("\"device_lost\""));
+        let served = report.records.len() as f64;
+        assert!((report.availability() - served / (served + 1.0)).abs() < 1e-12);
     }
 
     #[test]

@@ -34,11 +34,15 @@
 //!    under the next epoch.
 
 use super::controller::{AdaptiveConfig, FrontierController};
+use super::faults::{
+    DegradeCause, DegradeEvent, FaultEvent, FaultKind, FaultPlan, FaultState, ShedEvent,
+};
 use super::feedback::{DriftDetector, DriftEvent, FeedbackConfig, HotSwapEvent};
 use super::trace::RatePhase;
 use super::{OperatingPoint, RequestRecord, ServeConfig, ServeReport, ServiceModel};
 use crate::algo::Assignment;
 use crate::cost::{CostOracle, GraphCost};
+use crate::energysim::{DeviceId, FreqId, GpuSpec};
 use crate::graph::Graph;
 use crate::search::{
     optimize_frontier_batched_warm, price_plan_at_batch, OptimizerContext, PlanFrontier,
@@ -120,6 +124,11 @@ struct SessionState<'a> {
     detector: Option<DriftDetector>,
     store: Option<crate::cost::MeasuredStore>,
     research: Option<ResearchConfig<'a>>,
+    /// Seeded fault-injection plan, consumed by the loop's [`FaultState`].
+    faults: Option<FaultPlan>,
+    /// Per-plan device-loss fallbacks, aligned with `points` (`None` =
+    /// the plan has no contingency and is dropped if its device dies).
+    contingencies: Vec<Option<PlanPoint>>,
 }
 
 /// Builder for one serving run: compose a plan source, an adaptive policy,
@@ -168,6 +177,8 @@ pub struct ServeSession<'a> {
     research: Option<ResearchConfig<'a>>,
     phases: Option<Vec<RatePhase>>,
     service: Option<ServiceModel>,
+    faults: Option<FaultPlan>,
+    contingencies: Option<Vec<Option<PlanPoint>>>,
 }
 
 impl<'a> ServeSession<'a> {
@@ -185,6 +196,8 @@ impl<'a> ServeSession<'a> {
             research: None,
             phases: None,
             service: None,
+            faults: None,
+            contingencies: None,
         }
     }
 
@@ -280,6 +293,27 @@ impl<'a> ServeSession<'a> {
         self
     }
 
+    /// Inject a deterministic fault plan: timestamped device-loss,
+    /// clock-cap, and transient-error events applied on the virtual clock
+    /// (see [`FaultPlan`]). Device-loss and clock-cap events need a
+    /// plan-point surface plus an [`oracle`](Self::oracle) to re-price it;
+    /// plans with device-loss events additionally require
+    /// [`run_with_adopt`](Self::run_with_adopt), since a contingency swap
+    /// can activate plans the executor has never compiled.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Per-plan contingency fallbacks, aligned with the surface's plan
+    /// points: on `DeviceLost`, a plan using the lost device is replaced
+    /// by its contingency (synthesized at `--save-frontier` time and
+    /// persisted in v6 manifests) instead of being dropped outright.
+    pub fn contingencies(mut self, plans: Vec<Option<PlanPoint>>) -> Self {
+        self.contingencies = Some(plans);
+        self
+    }
+
     /// Run the session. `exec` executes one batch under the given plan
     /// index (always 0 for fixed-plan serving; the *grid* plan index for
     /// operating-point serving) and returns one output per request.
@@ -294,6 +328,11 @@ impl<'a> ServeSession<'a> {
         anyhow::ensure!(
             self.research.is_none(),
             "a full re-search can adopt new plans the executor has never seen: use run_with_adopt"
+        );
+        anyhow::ensure!(
+            !self.faults.as_ref().map_or(false, FaultPlan::loses_device),
+            "a device-loss fault plan can activate contingency plans the executor has never \
+             seen: use run_with_adopt"
         );
         self.run_with_adopt(exec, |_: &[PlanPoint]| Ok(()))
     }
@@ -348,6 +387,12 @@ impl<'a> ServeSession<'a> {
                 "feedback needs a cost oracle (ServeSession::oracle)"
             );
         }
+        // Device-loss and clock-cap events degrade the *surface*: they
+        // need plan points to mask and an oracle to re-price them, so a
+        // plan-point source ops-ifies even without feedback.
+        let structural_faults = self.faults.as_ref().map_or(false, |f| {
+            f.events.iter().any(|e| !matches!(e.kind, FaultKind::TransientError { .. }))
+        });
 
         let mut st = SessionState {
             cfg,
@@ -365,6 +410,8 @@ impl<'a> ServeSession<'a> {
             detector: None,
             store: None,
             research: self.research,
+            faults: self.faults,
+            contingencies: Vec::new(),
         };
 
         if let Some((grid, ops)) = self.ops {
@@ -375,11 +422,17 @@ impl<'a> ServeSession<'a> {
             st.mode = Mode::Ops;
         } else if let Some(points) = self.points {
             anyhow::ensure!(!points.is_empty(), "serve_frontier needs at least one plan");
-            if feedback_on {
+            if feedback_on || structural_faults {
                 // Ops-ify: price every plan across 1..=batch_max and serve
                 // the surface as operating points, so corrected rows can
                 // re-price it and the controller can hot-swap.
-                let oracle = st.oracle.expect("feedback validated above");
+                let oracle = match st.oracle {
+                    Some(o) => o,
+                    None => anyhow::bail!(
+                        "fault plans with device-loss or clock-cap events need a cost \
+                         oracle (ServeSession::oracle) to re-price the surface"
+                    ),
+                };
                 let bmax = st.cfg.batch_max;
                 let mut grid = Vec::with_capacity(points.len());
                 for p in &points {
@@ -435,6 +488,31 @@ impl<'a> ServeSession<'a> {
             st.mode = Mode::Fixed;
         }
 
+        // Fault-tolerance wiring: contingencies align 1:1 with the plan
+        // points, and structural faults need an ops-ified surface to mask
+        // and re-price.
+        if let Some(conts) = self.contingencies {
+            anyhow::ensure!(
+                !st.points.is_empty() && st.mode != Mode::Fixed,
+                "contingency plans need a plan-point surface (ServeSession::surface or \
+                 plan_points)"
+            );
+            anyhow::ensure!(
+                conts.len() == st.points.len(),
+                "got {} contingency slots for a {}-plan surface",
+                conts.len(),
+                st.points.len()
+            );
+            st.contingencies = conts;
+        }
+        if structural_faults {
+            anyhow::ensure!(
+                st.mode == Mode::Ops && st.points.len() == st.grid.len(),
+                "fault plans with device-loss or clock-cap events need a plan-point surface \
+                 (ServeSession::surface or plan_points)"
+            );
+        }
+
         // Controllers for the multi-plan modes.
         match st.mode {
             Mode::Fixed => {}
@@ -445,9 +523,10 @@ impl<'a> ServeSession<'a> {
                 st.controller = Some(FrontierController::new(st.costs.clone(), policy));
             }
             Mode::Ops => {
-                // Feedback's ops-ified surfaces default the policy; explicit
-                // operating points require it (as the legacy loop did).
-                let policy = match (st.policy.clone(), feedback_on) {
+                // Feedback's (and structural faults') ops-ified surfaces
+                // default the policy; explicit operating points require it
+                // (as the legacy loop did).
+                let policy = match (st.policy.clone(), feedback_on || structural_faults) {
                     (Some(p), _) => p,
                     (None, true) => AdaptiveConfig::default(),
                     (None, false) => anyhow::bail!(
@@ -558,6 +637,10 @@ fn build_research_job<'env>(
     st: &SessionState<'env>,
 ) -> Box<dyn FnOnce() -> anyhow::Result<ResearchOutcome> + Send + 'env> {
     let oracle: &'env CostOracle = st.oracle.expect("feedback mode has an oracle");
+    if st.feedback.as_ref().is_some_and(|f| f.inject_research_panic) {
+        // Chaos hook: exercises the serve loop's panic containment.
+        return Box::new(|| panic!("injected research panic (FeedbackConfig::inject_research_panic)"));
+    }
     match &st.research {
         None => {
             // Reprice: same plans, corrected rows, existing grid depths.
@@ -674,6 +757,209 @@ where
     Ok(())
 }
 
+/// Salt of the dedicated transient-error RNG stream: fault draws must not
+/// perturb the arrival/payload stream, so they come from their own
+/// deterministic generator seeded off the session seed.
+const FAULT_RNG_SALT: u64 = 0xFA17_5EED_0000_0001;
+
+/// Whether any node of `p`'s assignment runs on `d` (nodes left at the
+/// nominal state count as GPU).
+fn uses_device(p: &PlanPoint, d: DeviceId) -> bool {
+    p.assignment.assigned_ids().any(|id| p.assignment.freq(id).device() == d)
+}
+
+/// Clamp every per-node frequency the current fault set disallows to the
+/// fastest surviving state on the same device (layout preserved). Lost
+/// devices are not remapped here — device loss replaces whole plans via
+/// contingencies instead.
+fn capped_assignment(fs: &FaultState, a: &Assignment) -> Assignment {
+    let mut out = a.clone();
+    let ids: Vec<_> = out.assigned_ids().collect();
+    for id in ids {
+        let f = out.freq(id);
+        let d = f.device();
+        if fs.allows(f) || fs.is_lost(d) {
+            continue;
+        }
+        let (Some(cap), Some(spec)) = (fs.cap_mhz(d), GpuSpec::for_device(d)) else {
+            continue;
+        };
+        // The fastest state under the cap; a cap below the whole table
+        // clamps to the slowest state (best effort beats a dead clock).
+        let states = spec.capped_states(cap);
+        let mhz = states.last().or(spec.freq_states.first()).map(|s| s.mhz);
+        if let Some(mhz) = mhz {
+            out.set_freq(id, FreqId::on(d, mhz).with_layout(f.layout()));
+        }
+    }
+    out
+}
+
+/// Re-price an ops-ified surface row by row against the oracle (each plan
+/// across the given batch depth).
+fn reprice_grid(
+    oracle: &CostOracle,
+    points: &[PlanPoint],
+    depths: &[usize],
+) -> anyhow::Result<Vec<Vec<GraphCost>>> {
+    let mut grid = Vec::with_capacity(points.len());
+    for (p, &depth) in points.iter().zip(depths) {
+        let row: anyhow::Result<Vec<GraphCost>> =
+            (1..=depth).map(|m| price_plan_at_batch(oracle, &p.graph, &p.assignment, m)).collect();
+        grid.push(row?);
+    }
+    Ok(grid)
+}
+
+/// Rebuild the controller over the current (degraded) grid, carrying live
+/// load state from the previous one: `map` carries surviving service
+/// EWMAs by index (device loss); `None` restarts all measurements (clock
+/// caps make them stale). Also rebases the drift detector and suppresses
+/// it for one debounce window — the fault-induced slowdown is a known
+/// hardware event, not cost-model drift.
+fn rebuild_degraded_controller(st: &mut SessionState<'_>, map: Option<&[Option<usize>]>) {
+    let est: Vec<GraphCost> =
+        st.ops.iter().zip(&st.batches).map(|(o, &b)| st.grid[o.plan][b - 1]).collect();
+    let policy = st.policy.clone().unwrap_or_default();
+    let mut next = FrontierController::for_operating_points(est, st.batches.clone(), policy);
+    if let Some(prev) = st.controller.as_ref() {
+        match map {
+            Some(map) => next.rebase_from_masked(prev, map),
+            None => next.rebase_from(prev, false),
+        }
+    }
+    st.controller = Some(next);
+    if let Some(det) = st.detector.as_mut() {
+        det.rebase(st.grid.len());
+        let batches = st.feedback.as_ref().map(|f| f.drift_batches).unwrap_or(0);
+        det.suppress_for(batches);
+    }
+}
+
+/// Degrade the surface on `DeviceLost`: plans that use the lost device
+/// are replaced by their contingency (or dropped when none avoids it),
+/// the executor adopts the new surface before it serves traffic, the grid
+/// is re-priced, and the controller rebases with surviving measurements.
+/// Errors only when *nothing* survives — admitted requests are never
+/// dropped by the swap itself.
+#[allow(clippy::too_many_arguments)]
+fn apply_device_loss<G>(
+    st: &mut SessionState<'_>,
+    fs: &FaultState,
+    lost: DeviceId,
+    clock: f64,
+    adopt: &mut G,
+    epoch: &mut usize,
+    degrades: &mut Vec<DegradeEvent>,
+    svc_scale: &mut Vec<f64>,
+) -> anyhow::Result<()>
+where
+    G: FnMut(&[PlanPoint]) -> anyhow::Result<()>,
+{
+    let oracle = st.oracle.expect("structural faults validated an oracle");
+    let n_before = st.points.len();
+    let mut new_points: Vec<PlanPoint> = Vec::new();
+    let mut new_conts: Vec<Option<PlanPoint>> = Vec::new();
+    // map[new] = Some(old index) for survivors (their measurements carry).
+    let mut map: Vec<Option<usize>> = Vec::new();
+    let mut used = 0usize;
+    for (i, p) in st.points.iter().enumerate() {
+        if !uses_device(p, lost) {
+            new_points.push(p.clone());
+            new_conts.push(st.contingencies.get(i).cloned().flatten());
+            map.push(Some(i));
+        } else if let Some(c) = st.contingencies.get(i).cloned().flatten() {
+            if !uses_device(&c, lost) {
+                new_points.push(c);
+                new_conts.push(None);
+                map.push(None);
+                used += 1;
+            }
+        }
+    }
+    anyhow::ensure!(
+        !new_points.is_empty(),
+        "device '{}' lost: every plan uses it and no contingency avoids it",
+        lost.name()
+    );
+    // The executor compiles the degraded surface before it serves traffic
+    // (a contingency graph may never have been compiled).
+    adopt(&new_points)?;
+    for p in &mut new_points {
+        p.assignment = capped_assignment(fs, &p.assignment);
+    }
+    let bmax = st.cfg.batch_max;
+    let grid = reprice_grid(oracle, &new_points, &vec![bmax; new_points.len()])?;
+    st.ops = (0..new_points.len()).map(|i| OperatingPoint { plan: i, batch: bmax }).collect();
+    st.batches = vec![bmax; new_points.len()];
+    st.grid = grid;
+    let carried: Vec<f64> = map
+        .iter()
+        .map(|m| m.and_then(|i| svc_scale.get(i).copied()).unwrap_or(1.0))
+        .collect();
+    *svc_scale = carried;
+    st.points = new_points;
+    st.contingencies = new_conts;
+    rebuild_degraded_controller(st, Some(&map));
+    *epoch += 1;
+    degrades.push(DegradeEvent {
+        at_s: clock,
+        epoch: *epoch,
+        cause: DegradeCause::DeviceLost(lost),
+        points_before: n_before,
+        points_after: st.points.len(),
+        contingencies_used: used,
+        detail: format!("{} of {n_before} plans survived", st.points.len()),
+    });
+    Ok(())
+}
+
+/// Degrade the surface under a clock cap: clamp every plan's disallowed
+/// states, re-price the grid, rebuild the controller (measured service
+/// EWMAs are stale under new clocks), and record the `DegradeEvent`. The
+/// capped/uncapped predicted-time ratio at each plan's target batch folds
+/// into `svc_scale`, so the modeled slowdown reaches the service clock
+/// deterministically.
+#[allow(clippy::too_many_arguments)]
+fn apply_clock_cap(
+    st: &mut SessionState<'_>,
+    fs: &FaultState,
+    device: DeviceId,
+    cap_mhz: u16,
+    clock: f64,
+    epoch: &mut usize,
+    degrades: &mut Vec<DegradeEvent>,
+    svc_scale: &mut [f64],
+) -> anyhow::Result<()> {
+    let oracle = st.oracle.expect("structural faults validated an oracle");
+    for p in st.points.iter_mut() {
+        p.assignment = capped_assignment(fs, &p.assignment);
+    }
+    let depths: Vec<usize> = st.grid.iter().map(Vec::len).collect();
+    let grid = reprice_grid(oracle, &st.points, &depths)?;
+    for i in 0..grid.len().min(svc_scale.len()) {
+        let b = st.batches.get(i).copied().unwrap_or(1).clamp(1, depths[i]);
+        let old = st.grid[i][b - 1].time_ms;
+        let new = grid[i][b - 1].time_ms;
+        if old > 0.0 && new.is_finite() && new > 0.0 {
+            svc_scale[i] *= new / old;
+        }
+    }
+    st.grid = grid;
+    rebuild_degraded_controller(st, None);
+    *epoch += 1;
+    degrades.push(DegradeEvent {
+        at_s: clock,
+        epoch: *epoch,
+        cause: DegradeCause::ClockCap(device, cap_mhz),
+        points_before: st.points.len(),
+        points_after: st.points.len(),
+        contingencies_used: 0,
+        detail: String::new(),
+    });
+    Ok(())
+}
+
 /// The unified serving loop. With no controller and no feedback this is
 /// the legacy fixed-plan loop statement for statement; the frontier and
 /// operating-point behaviours differ only where the legacy loops did
@@ -705,6 +991,24 @@ where
     let mut drift_events: Vec<DriftEvent> = Vec::new();
     let mut swaps: Vec<HotSwapEvent> = Vec::new();
 
+    // Fault machinery: the plan's event cursor, a dedicated RNG for
+    // transient-error draws (drawn only inside active windows, so
+    // fault-free runs replay the exact historical payload stream), and the
+    // typed event logs for the report.
+    let mut fstate = st.faults.take().map(FaultState::new);
+    let mut frng = Rng::seed_from(st.cfg.seed ^ FAULT_RNG_SALT);
+    let mut faults: Vec<FaultEvent> = Vec::new();
+    let mut degrades: Vec<DegradeEvent> = Vec::new();
+    let mut sheds: Vec<ShedEvent> = Vec::new();
+    // Per-plan service-time multiplier under clock caps: the capped /
+    // uncapped predicted-time ratio at the plan's target batch, folded
+    // into every service observation so virtual replays slow down too.
+    let mut svc_scale: Vec<f64> = match st.mode {
+        Mode::Ops => vec![1.0; st.grid.len()],
+        Mode::Frontier => vec![1.0; st.costs.len()],
+        Mode::Fixed => vec![1.0],
+    };
+
     // Background re-search plumbing: at most one in flight; results are
     // polled between batches and installed atomically from the serving
     // thread (the hot-swap itself never races the loop).
@@ -718,7 +1022,23 @@ where
             match rx.try_recv() {
                 Ok(result) => {
                     in_flight = false;
-                    apply_swap(st, result?, clock, adopt, &mut epoch, &mut swaps)?;
+                    match result {
+                        Ok(outcome) => {
+                            apply_swap(st, outcome, clock, adopt, &mut epoch, &mut swaps)?;
+                        }
+                        // A failed (or panicked) background re-search must
+                        // not poison the session: log the degradation and
+                        // keep serving on the current surface.
+                        Err(e) => degrades.push(DegradeEvent {
+                            at_s: clock,
+                            epoch,
+                            cause: DegradeCause::ResearchFailed,
+                            points_before: st.grid.len(),
+                            points_after: st.grid.len(),
+                            contingencies_used: 0,
+                            detail: e.to_string(),
+                        }),
+                    }
                 }
                 Err(mpsc::TryRecvError::Empty) => {}
                 Err(mpsc::TryRecvError::Disconnected) => in_flight = false,
@@ -727,6 +1047,30 @@ where
 
         // Advance to the first pending arrival if idle.
         clock = clock.max(arrivals[next]);
+        // Activate every fault due by now, in timestamp order. Structural
+        // faults (device loss, clock caps) degrade the surface *between*
+        // batches: admitted requests are never dropped by the swap itself.
+        if let Some(fs) = fstate.as_mut() {
+            for evt in fs.advance(clock) {
+                faults.push(evt);
+                match evt.kind {
+                    FaultKind::DeviceLost { device } => apply_device_loss(
+                        st, fs, device, clock, adopt, &mut epoch, &mut degrades, &mut svc_scale,
+                    )?,
+                    FaultKind::ThermalCap { device, .. } | FaultKind::PowerCap { device, .. } => {
+                        // A power cap above the device's nominal draw
+                        // resolves to no clock cap at all.
+                        if let Some(cap) = fs.cap_mhz(device) {
+                            apply_clock_cap(
+                                st, fs, device, cap, clock, &mut epoch, &mut degrades,
+                                &mut svc_scale,
+                            )?;
+                        }
+                    }
+                    FaultKind::TransientError { .. } => {}
+                }
+            }
+        }
         // The controller decides on the live queue depth at this instant:
         // every request that has arrived but not been served.
         let sel = match st.controller.as_mut() {
@@ -771,26 +1115,68 @@ where
             .map(|_| Tensor::rand(&st.cfg.input_shape, &mut rng, -1.0, 1.0))
             .collect();
 
-        let t0 = std::time::Instant::now();
-        let outputs = exec(exec_plan, &inputs)?;
-        let wall_s = t0.elapsed().as_secs_f64();
-        anyhow::ensure!(
-            outputs.len() == inputs.len(),
-            "exec_batch returned {} outputs for {} requests",
-            outputs.len(),
-            inputs.len()
-        );
+        // Execute, retrying under an active transient-error window with
+        // deterministic exponential backoff. Every attempt burns service
+        // time and energy; when retries exhaust — or waiting out the next
+        // backoff would blow the retry budget — the whole batch is shed.
         let m = inputs.len();
-        let service = st.cfg.service.service_s(exec_plan, m, wall_s);
-        busy_s += service;
-        n_batches += 1;
+        let mut retries = 0usize;
+        let mut shed = false;
+        let service = loop {
+            let t0 = std::time::Instant::now();
+            let outputs = exec(exec_plan, &inputs)?;
+            let wall_s = t0.elapsed().as_secs_f64();
+            anyhow::ensure!(
+                outputs.len() == inputs.len(),
+                "exec_batch returned {} outputs for {} requests",
+                outputs.len(),
+                inputs.len()
+            );
+            let service = st.cfg.service.service_s(exec_plan, m, wall_s) * svc_scale[exec_plan];
+            busy_s += service;
+            n_batches += 1;
+            if st.mode == Mode::Ops {
+                // Honest partial-batch pricing: charge the plan at the
+                // batch size actually formed (a failed attempt burns the
+                // same energy as a successful one).
+                energy_mj += st.grid[st.ops[sel].plan][m - 1].energy_j;
+            }
+            let rate = fstate.as_ref().map_or(0.0, |fs| fs.transient_rate(clock));
+            if !(rate > 0.0 && frng.f64() < rate) {
+                break service;
+            }
+            // The attempt failed: its service time passed, nothing was
+            // delivered.
+            clock += service;
+            let fp = fstate.as_ref().expect("an active window implies a fault plan").plan();
+            if retries >= fp.max_retries {
+                shed = true;
+                break service;
+            }
+            let backoff = fp.backoff_s(retries);
+            if clock + backoff > arrivals[next] + fp.retry_budget_s {
+                // Deadline-aware shedding: the oldest admitted request's
+                // retry budget cannot absorb another backoff.
+                shed = true;
+                break service;
+            }
+            clock += backoff;
+            retries += 1;
+        };
+        if shed {
+            for &id in &batch_ids {
+                sheds.push(ShedEvent {
+                    at_s: clock,
+                    id,
+                    retries,
+                    waited_s: clock - arrivals[id],
+                });
+            }
+            next = end;
+            continue;
+        }
         if let Some(c) = st.controller.as_mut() {
             c.observe_service(sel, service / m as f64);
-        }
-        if st.mode == Mode::Ops {
-            // Honest partial-batch pricing: charge the plan at the batch
-            // size actually formed.
-            energy_mj += st.grid[st.ops[sel].plan][m - 1].energy_j;
         }
         let start = clock;
         clock += service;
@@ -847,7 +1233,20 @@ where
                     Some(scope) => {
                         let tx = tx.clone();
                         scope.spawn(move || {
-                            let _ = tx.send(job());
+                            // A panic inside the research job must not
+                            // poison the session: surface it as an error
+                            // and let the receive site degrade gracefully.
+                            let out =
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(job))
+                                    .unwrap_or_else(|p| {
+                                        let msg = p
+                                            .downcast_ref::<&str>()
+                                            .map(|s| s.to_string())
+                                            .or_else(|| p.downcast_ref::<String>().cloned())
+                                            .unwrap_or_else(|| "non-string panic payload".into());
+                                        Err(anyhow::anyhow!("re-search panicked: {msg}"))
+                                    });
+                            let _ = tx.send(out);
                         });
                         in_flight = true;
                     }
@@ -895,6 +1294,9 @@ where
         drift_events,
         swaps,
         feedback_rows: st.store.as_ref().map(crate::cost::MeasuredStore::len).unwrap_or(0),
+        faults,
+        degrades,
+        sheds,
     })
 }
 

@@ -174,6 +174,174 @@ fn zero_size_serving_config_rejected() {
     assert!(eadgo::serve::ServeSession::new(&bad2).run(|_, b| Ok(b.to_vec())).is_err());
 }
 
+// ---------------------------------------------------------------------------
+// Hostile frontier manifests (v3/v4/v5/v6): every doctored file must be a
+// typed load error, never a panic or a silently-defaulted plan.
+// ---------------------------------------------------------------------------
+
+fn frontier_fixture() -> eadgo::search::PlanFrontier {
+    use eadgo::cost::GraphCost;
+    use eadgo::energysim::FreqId;
+    let cfg = ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 };
+    let reg = AlgorithmRegistry::new();
+    let g = models::simple::build_cnn(cfg);
+    let fast = Assignment::default_for(&g, &reg);
+    let mut slow = fast.clone();
+    slow.set_uniform_freq(FreqId(900));
+    eadgo::search::PlanFrontier::from_points(vec![
+        eadgo::search::PlanPoint {
+            graph: g.clone(),
+            assignment: fast,
+            cost: GraphCost { time_ms: 1.0, energy_j: 250.0, freq: FreqId::NOMINAL },
+            weight: 0.0,
+            batch: 1,
+        },
+        eadgo::search::PlanPoint {
+            graph: g,
+            assignment: slow,
+            cost: GraphCost { time_ms: 2.5, energy_j: 125.0, freq: FreqId(900) },
+            weight: 1.0,
+            batch: 1,
+        },
+    ])
+}
+
+fn load_frontier_str(s: &str) -> anyhow::Result<eadgo::search::PlanFrontier> {
+    let j = eadgo::util::json::parse(s).map_err(|e| anyhow::anyhow!("{e}"))?;
+    eadgo::runtime::manifest::frontier_from_json(&j, &AlgorithmRegistry::new())
+}
+
+#[test]
+fn hostile_manifest_batch_below_one_rejected() {
+    use eadgo::cost::GraphCost;
+    use eadgo::energysim::FreqId;
+    let cfg = ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 };
+    let reg = AlgorithmRegistry::new();
+    let g = models::simple::build_cnn(cfg);
+    let a = Assignment::default_for(&g, &reg);
+    let g8 = g.rebatch(8).unwrap();
+    let f = eadgo::search::PlanFrontier::from_points(vec![
+        eadgo::search::PlanPoint {
+            graph: g,
+            assignment: a.clone(),
+            cost: GraphCost { time_ms: 1.0, energy_j: 250.0, freq: FreqId::NOMINAL },
+            weight: 0.0,
+            batch: 1,
+        },
+        eadgo::search::PlanPoint {
+            graph: g8,
+            assignment: a,
+            cost: GraphCost { time_ms: 2.5, energy_j: 800.0, freq: FreqId::NOMINAL },
+            weight: 1.0,
+            batch: 8,
+        },
+    ]);
+    let s = eadgo::runtime::manifest::frontier_to_json(&f).to_string_compact();
+    assert!(s.contains("\"batch\":8"), "fixture lost its batch annotation: {s}");
+    let err = load_frontier_str(&s.replace("\"batch\":8", "\"batch\":0")).unwrap_err().to_string();
+    assert!(err.contains("batch"), "{err}");
+}
+
+#[test]
+fn hostile_manifest_unknown_device_rejected() {
+    use eadgo::energysim::{DeviceId, FreqId};
+    use eadgo::graph::OpKind;
+    let cfg = ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 };
+    let reg = AlgorithmRegistry::new();
+    let g = models::simple::build_cnn(cfg);
+    let mut mixed = Assignment::default_for(&g, &reg);
+    let conv = g.nodes().find(|(_, n)| matches!(n.op, OpKind::Conv2d { .. })).unwrap().0;
+    mixed.set_freq(conv, FreqId::on(DeviceId::DLA, 0));
+    let f = eadgo::search::PlanFrontier::from_points(vec![eadgo::search::PlanPoint {
+        graph: g,
+        assignment: mixed,
+        cost: eadgo::cost::GraphCost {
+            time_ms: 1.0,
+            energy_j: 90.0,
+            freq: FreqId::NOMINAL,
+        },
+        weight: 1.0,
+        batch: 1,
+    }]);
+    let s = eadgo::runtime::manifest::frontier_to_json(&f).to_string_compact();
+    assert!(s.contains("\"dla\""), "fixture lost its device array: {s}");
+    let err = load_frontier_str(&s.replace("\"dla\"", "\"npu\"")).unwrap_err().to_string();
+    assert!(err.contains("device") || err.contains("npu"), "{err}");
+}
+
+#[test]
+fn hostile_manifest_layout_on_v2_rejected() {
+    use eadgo::energysim::Layout;
+    use eadgo::graph::OpKind;
+    // A genuine layout-mixed (v5) manifest whose version stamp is rolled
+    // back to 2: the layout array is now a key the declared format cannot
+    // carry — typed error, not a silently-honored layout.
+    let cfg = ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 };
+    let reg = AlgorithmRegistry::new();
+    let g = models::simple::build_cnn(cfg);
+    let mut mixed = Assignment::default_for(&g, &reg);
+    let conv = g.nodes().find(|(_, n)| matches!(n.op, OpKind::Conv2d { .. })).unwrap().0;
+    mixed.set_freq(conv, mixed.freq(conv).with_layout(Layout::NHWC));
+    let f = eadgo::search::PlanFrontier::from_points(vec![eadgo::search::PlanPoint {
+        graph: g,
+        assignment: mixed,
+        cost: eadgo::cost::GraphCost {
+            time_ms: 1.0,
+            energy_j: 200.0,
+            freq: eadgo::energysim::FreqId::NOMINAL,
+        },
+        weight: 1.0,
+        batch: 1,
+    }]);
+    let s = eadgo::runtime::manifest::frontier_to_json(&f).to_string_compact();
+    assert!(s.contains("\"version\":5"), "fixture is not a v5 manifest: {s}");
+    let err = load_frontier_str(&s.replace("\"version\":5", "\"version\":2"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("layout") && err.contains("version"), "{err}");
+}
+
+#[test]
+fn hostile_manifest_contingency_on_v5_rejected() {
+    let f = frontier_fixture();
+    let fallback = eadgo::runtime::manifest::ContingencyPlan {
+        graph: f.points()[0].graph.clone(),
+        assignment: f.points()[0].assignment.clone(),
+        cost: f.points()[0].cost,
+    };
+    let s = eadgo::runtime::manifest::frontier_to_json_full(&f, &[None, Some(fallback)])
+        .to_string_compact();
+    assert!(s.contains("\"version\":6"), "fixture is not a v6 manifest: {s}");
+    let err = load_frontier_str(&s.replace("\"version\":6", "\"version\":5"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("contingency") && err.contains("version"), "{err}");
+}
+
+#[test]
+fn hostile_fault_plans_rejected() {
+    use eadgo::serve::FaultPlan;
+    for (bad, why) in [
+        (r#"{"events": "nope"}"#, "events not an array"),
+        (r#"{"events": [{"kind": "device_lost", "device": "gpu"}]}"#, "missing at_s"),
+        (r#"{"events": [{"at_s": 1.0, "kind": "meteor_strike"}]}"#, "unknown kind"),
+        (r#"{"events": [{"at_s": 1.0, "kind": "device_lost", "device": "npu"}]}"#, "unknown device"),
+        (
+            r#"{"events": [{"at_s": 1.0, "kind": "thermal_cap", "device": "gpu"}]}"#,
+            "missing max_mhz",
+        ),
+        (
+            r#"{"events": [{"at_s": 1.0, "kind": "transient_error", "rate": 1.5, "duration_s": 1.0}]}"#,
+            "rate out of range",
+        ),
+        (r#"{"events": [], "max_retries": 99}"#, "max_retries out of range"),
+        (r#"{"events": [], "retry_budget_s": 0.0}"#, "retry_budget_s not positive"),
+    ] {
+        let j = eadgo::util::json::parse(bad).unwrap();
+        assert!(FaultPlan::from_json(&j).is_err(), "accepted ({why}): {bad}");
+    }
+}
+
 #[test]
 fn cost_table_missing_profile_is_error() {
     // GraphCostTable::build against an empty DB must name the gap.

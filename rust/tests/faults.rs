@@ -1,0 +1,471 @@
+//! ISSUE 10 acceptance suite: fault-tolerant serving.
+//!
+//! Drives [`ServeSession`] with deterministic, seeded fault plans against a
+//! mixed GPU+DLA surface (the `SimHeteroProvider` world of the placement
+//! suite) and locks down the robustness contract from five sides:
+//!
+//! 1. **Device-loss contingency** — a seeded `DeviceLost{dla}` plan against
+//!    a two-plan GPU+DLA surface: zero panics, zero dropped admitted
+//!    requests, exactly one contingency hot-swap through the adopt
+//!    callback, and post-fault true energy/request within 5% of the best
+//!    GPU-only plan on the same surface.
+//! 2. **Bitwise replay** — the same seed plus the same fault plan (thermal
+//!    cap + transient-error window + device loss) renders byte-identical
+//!    `ServeReport` JSON across runs, including retry and shed decisions.
+//! 3. **Research-panic liveness** — an injected background re-search panic
+//!    surfaces as a `ResearchFailed` degrade while every request is served.
+//! 4. **No drift misfire** — a thermal-cap slowdown re-prices the surface
+//!    and scales the service clock coherently, so the drift detector never
+//!    arms on a known hardware event.
+//! 5. **Byte-invisibility** — an eventless fault plan changes nothing: the
+//!    report is byte-identical to a run without one.
+//!
+//! Everything runs under [`ServiceModel::Virtual`], so reports are a
+//! deterministic function of (config, fault plan) and host-speed free.
+
+use eadgo::algo::{AlgorithmRegistry, Assignment};
+use eadgo::cost::{CostDb, CostOracle, GraphCost};
+use eadgo::energysim::{DeviceId, FreqId};
+use eadgo::models::{self, ModelConfig};
+use eadgo::profiler::SimHeteroProvider;
+use eadgo::search::{price_plan_at_batch, synthesize_contingency, DvfsMode, PlanPoint};
+use eadgo::serve::{
+    AdaptiveConfig, DegradeCause, DriftKind, FaultEvent, FaultKind, FaultPlan, FeedbackConfig,
+    ServeConfig, ServeReport, ServeSession, ServiceModel,
+};
+use eadgo::util::json;
+use std::cell::RefCell;
+
+const BMAX: usize = 2;
+const TOTAL: usize = 64;
+
+fn hetero_oracle() -> CostOracle {
+    CostOracle::new(AlgorithmRegistry::new(), CostDb::new(), Box::new(SimHeteroProvider::new(7)))
+}
+
+fn model() -> eadgo::graph::Graph {
+    models::by_name("simple", ModelConfig { batch: 1, resolution: 32, width_div: 8, classes: 10 })
+        .expect("simple model builds")
+}
+
+/// The mixed GPU+DLA serving surface: plan 0 all-GPU, plan 1 with one node
+/// placed on the DLA, plus the synthesized GPU-only contingency for plan 1
+/// and true per-batch cost rows for all three assignments.
+struct Surface {
+    points: Vec<PlanPoint>,
+    conts: Vec<Option<PlanPoint>>,
+    /// `rows[0]` = GPU plan, `rows[1]` = mixed plan, `rows[2]` = the
+    /// contingency, each priced for batches `1..=BMAX`.
+    rows: Vec<Vec<GraphCost>>,
+}
+
+fn surface() -> Surface {
+    let g = model();
+    let oracle = hetero_oracle();
+    let a_gpu = Assignment::default_for(&g, &AlgorithmRegistry::new());
+    let mut a_mixed = a_gpu.clone();
+    let first = a_mixed.assigned_ids().next().expect("the model has costed nodes");
+    a_mixed.set_freq(first, FreqId::on(DeviceId::DLA, 0));
+    assert!(a_mixed.uses_non_gpu_device());
+
+    let (a_fb, c_fb) = synthesize_contingency(&oracle, &g, &a_mixed, DvfsMode::Off)
+        .expect("contingency synthesis prices")
+        .expect("a DLA-placed plan must synthesize a GPU fallback");
+    assert!(!a_fb.uses_non_gpu_device(), "the contingency must avoid the DLA");
+
+    let price = |a: &Assignment| -> Vec<GraphCost> {
+        (1..=BMAX).map(|m| price_plan_at_batch(&oracle, &g, a, m).unwrap()).collect()
+    };
+    let rows = vec![price(&a_gpu), price(&a_mixed), price(&a_fb)];
+    let point = |a: &Assignment, cost: GraphCost| PlanPoint {
+        graph: g.clone(),
+        assignment: a.clone(),
+        cost,
+        weight: 1.0,
+        batch: 1,
+    };
+    let points = vec![point(&a_gpu, rows[0][0]), point(&a_mixed, rows[1][0])];
+    let conts = vec![None, Some(point(&a_fb, c_fb))];
+    Surface { points, conts, rows }
+}
+
+/// Virtual-clock serve config over the given per-plan cost rows.
+fn serve_cfg(rows: &[Vec<GraphCost>], requests: usize) -> ServeConfig {
+    ServeConfig {
+        requests,
+        batch_max: BMAX,
+        arrival_rate_hz: 2_000.0,
+        max_wait_s: 0.001,
+        seed: 2026,
+        input_shape: vec![1, 3, 32, 32],
+        phases: Vec::new(),
+        service: ServiceModel::Virtual {
+            per_batch_ms: rows
+                .iter()
+                .map(|row| row.iter().map(|c| c.time_ms).collect())
+                .collect(),
+            scale_s_per_ms: 1e-4,
+        },
+    }
+}
+
+fn assert_all_served_in_order(r: &ServeReport, total: usize) {
+    assert_eq!(r.records.len(), total, "every admitted request must be served");
+    for (i, rec) in r.records.iter().enumerate() {
+        assert_eq!(rec.id, i, "requests served in arrival order, none dropped");
+    }
+}
+
+// -------------------------------------------------------------------------
+// 1. the acceptance scenario: DeviceLost{dla} with a contingency
+// -------------------------------------------------------------------------
+
+#[test]
+fn device_loss_hot_swaps_to_contingency_without_dropping_requests() {
+    let s = surface();
+    let cfg = serve_cfg(&s.rows[..2], TOTAL);
+    let run = |plan: FaultPlan, adopted: &RefCell<Vec<usize>>| -> ServeReport {
+        let oracle = hetero_oracle();
+        ServeSession::new(&cfg)
+            .oracle(&oracle)
+            .plan_points(&s.points)
+            .faults(plan)
+            .contingencies(s.conts.clone())
+            .run_with_adopt(
+                |p, b| {
+                    assert!(p < 2, "exec saw out-of-surface plan {p}");
+                    Ok(b.to_vec())
+                },
+                |pts| {
+                    assert!(
+                        pts.iter().all(|p| !p.assignment.uses_non_gpu_device()),
+                        "the degraded surface must avoid the lost device"
+                    );
+                    adopted.borrow_mut().push(pts.len());
+                    Ok(())
+                },
+            )
+            .expect("fault-tolerant serving must not fail")
+    };
+
+    // Calibrate the fault timestamp to land mid-run: same surface, same
+    // ops-ified mode (the far-future event never fires but still shapes
+    // validation), so the two runs agree on the clock until the fault.
+    let lost_at = |at_s: f64| FaultPlan {
+        events: vec![FaultEvent { at_s, kind: FaultKind::DeviceLost { device: DeviceId::DLA } }],
+        ..FaultPlan::default()
+    };
+    let calm = RefCell::new(Vec::new());
+    let calib = run(lost_at(1e9), &calm);
+    assert_all_served_in_order(&calib, TOTAL);
+    assert!(calib.faults.is_empty() && calib.degrades.is_empty());
+    assert!(calm.borrow().is_empty(), "no fault fired, so nothing to adopt");
+    let t_mid = calib.records[TOTAL / 2].done_s;
+
+    let adopted = RefCell::new(Vec::new());
+    let report = run(lost_at(t_mid), &adopted);
+
+    // Zero panics (we got here), zero dropped admitted requests.
+    assert_all_served_in_order(&report, TOTAL);
+    assert!(report.sheds.is_empty(), "device loss must not shed requests");
+    assert_eq!(report.availability(), 1.0);
+
+    // Exactly one fault fired and exactly one contingency hot-swap: the
+    // executor adopted one degraded 2-point surface (GPU survivor + the
+    // activated contingency).
+    assert_eq!(report.faults.len(), 1);
+    assert_eq!(report.faults[0].kind, FaultKind::DeviceLost { device: DeviceId::DLA });
+    assert_eq!(*adopted.borrow(), vec![2], "one adopt of the 2-point degraded surface");
+    assert_eq!(report.degrades.len(), 1, "exactly one degradation: {:?}", report.degrades);
+    let d = &report.degrades[0];
+    assert_eq!(d.cause, DegradeCause::DeviceLost(DeviceId::DLA));
+    assert!(d.at_s >= t_mid, "the fault activates at its timestamp, not before");
+    assert_eq!((d.points_before, d.points_after), (2, 2));
+    assert_eq!(d.contingencies_used, 1, "the mixed plan must fail over to its contingency");
+    assert_eq!(d.epoch, 1, "device loss bumps the surface epoch like a hot-swap");
+
+    // Requests straddle the swap: epoch 0 before, epoch 1 after, monotone.
+    assert!(report.records.windows(2).all(|w| w[0].epoch <= w[1].epoch));
+    assert_eq!(report.records.first().unwrap().epoch, 0);
+    assert_eq!(report.records.last().unwrap().epoch, 1);
+    let post: Vec<_> = report.records.iter().filter(|r| r.epoch == 1).collect();
+    assert!(!post.is_empty(), "the fault must land mid-run");
+
+    // The acceptance bound: post-fault true energy/request within 5% of
+    // the best GPU-only plan on the same surface at the same batch sizes.
+    // Post-loss plan 0 is the GPU survivor (rows[0]), plan 1 the activated
+    // contingency (rows[2]).
+    let per_req = |row: &[GraphCost], m: usize| row[m - 1].energy_j / m as f64;
+    let actual: f64 = post
+        .iter()
+        .map(|r| per_req(&s.rows[if r.plan == 0 { 0 } else { 2 }], r.batch_size))
+        .sum::<f64>()
+        / post.len() as f64;
+    let best: f64 = post
+        .iter()
+        .map(|r| per_req(&s.rows[0], r.batch_size).min(per_req(&s.rows[2], r.batch_size)))
+        .sum::<f64>()
+        / post.len() as f64;
+    assert!(
+        actual <= best * 1.05,
+        "post-fault energy/request {actual} mJ must be within 5% of the best \
+         GPU-only plan's {best} mJ"
+    );
+}
+
+// -------------------------------------------------------------------------
+// 2. bitwise replay determinism
+// -------------------------------------------------------------------------
+
+#[test]
+fn fault_runs_replay_bitwise_identically() {
+    // Thermal cap, then a hard transient-error window (rate 1.0: every
+    // attempt inside it fails) with a retry budget tight enough to shed,
+    // then device loss. Same seed + same plan must render byte-identical
+    // reports — including retry counts, shed decisions, and event order.
+    let s = surface();
+    let cfg = serve_cfg(&s.rows[..2], TOTAL);
+    let plan_json = r#"{"max_retries": 2, "backoff_ms": 1.0, "retry_budget_s": 0.003,
+        "events": [
+            {"at_s": 0.002, "kind": "thermal_cap", "device": "gpu", "max_mhz": 900},
+            {"at_s": 0.008, "kind": "transient_error", "rate": 1.0, "duration_s": 0.008},
+            {"at_s": 0.02, "kind": "device_lost", "device": "dla"}]}"#;
+    let run = || -> ServeReport {
+        let oracle = hetero_oracle();
+        let plan = FaultPlan::from_json(&json::parse(plan_json).unwrap()).unwrap();
+        ServeSession::new(&cfg)
+            .oracle(&oracle)
+            .plan_points(&s.points)
+            .faults(plan)
+            .contingencies(s.conts.clone())
+            .run_with_adopt(|_, b| Ok(b.to_vec()), |_| Ok(()))
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(
+        a.to_json().to_string_compact(),
+        b.to_json().to_string_compact(),
+        "same seed + same fault plan must replay bitwise"
+    );
+
+    // The run must actually exercise the machinery it claims to replay.
+    assert_eq!(a.faults.len(), 3, "all three events fire: {:?}", a.faults);
+    assert!(!a.sheds.is_empty(), "the rate-1.0 window with a tight budget must shed");
+    assert!(a.sheds.iter().all(|e| e.retries <= 2), "retries bounded by max_retries");
+    assert!(a.availability() < 1.0);
+    assert!(
+        a.degrades.iter().any(|d| matches!(d.cause, DegradeCause::ClockCap(DeviceId::GPU, _))),
+        "the thermal cap must re-price the surface"
+    );
+    assert!(
+        a.degrades.iter().any(|d| d.cause == DegradeCause::DeviceLost(DeviceId::DLA)),
+        "the device loss must degrade the surface"
+    );
+
+    // Every admitted request is accounted for exactly once: served or shed.
+    let mut ids: Vec<usize> =
+        a.records.iter().map(|r| r.id).chain(a.sheds.iter().map(|e| e.id)).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..TOTAL).collect::<Vec<_>>(), "served + shed must cover every request");
+}
+
+// -------------------------------------------------------------------------
+// 3. background-research panic containment
+// -------------------------------------------------------------------------
+
+#[test]
+fn panicked_background_research_degrades_but_keeps_serving() {
+    // A single-plan surface whose virtual service runs 3x the predicted
+    // cost: drift arms, a background re-search launches — and panics (the
+    // chaos hook). The session must contain the panic as a ResearchFailed
+    // degrade and keep serving every request on the current surface.
+    let g = model();
+    let oracle = hetero_oracle();
+    let a = Assignment::default_for(&g, &AlgorithmRegistry::new());
+    let row: Vec<GraphCost> =
+        (1..=BMAX).map(|m| price_plan_at_batch(&oracle, &g, &a, m).unwrap()).collect();
+    let points = vec![PlanPoint {
+        graph: g.clone(),
+        assignment: a.clone(),
+        cost: row[0],
+        weight: 1.0,
+        batch: 1,
+    }];
+    let cfg = ServeConfig {
+        service: ServiceModel::Virtual {
+            per_batch_ms: vec![row.iter().map(|c| c.time_ms * 3.0).collect()],
+            scale_s_per_ms: 1e-4,
+        },
+        ..serve_cfg(&[row.clone()], 96)
+    };
+    let report = ServeSession::new(&cfg)
+        .oracle(&oracle)
+        .plan_points(&points)
+        .feedback(FeedbackConfig {
+            research_interval_s: 0.0,
+            max_researches: 1,
+            background: true,
+            inject_research_panic: true,
+            ..Default::default()
+        })
+        .run(|_, b| Ok(b.to_vec()))
+        .expect("a panicked re-search must never poison the session");
+
+    assert_all_served_in_order(&report, 96);
+    assert_eq!(report.availability(), 1.0);
+    assert!(
+        report.drift_events.iter().any(|e| e.kind == DriftKind::Detected),
+        "the 3x mis-prediction must arm drift (else the re-search never launched)"
+    );
+    let failed: Vec<_> =
+        report.degrades.iter().filter(|d| d.cause == DegradeCause::ResearchFailed).collect();
+    assert_eq!(failed.len(), 1, "the panic surfaces as exactly one degrade: {:?}", report.degrades);
+    assert!(failed[0].detail.contains("panic"), "detail names the panic: {}", failed[0].detail);
+    assert!(report.swaps.is_empty(), "a failed re-search must not swap the surface");
+}
+
+// -------------------------------------------------------------------------
+// 4. drift must not misfire on fault-induced slowdowns
+// -------------------------------------------------------------------------
+
+#[test]
+fn drift_detector_does_not_misfire_on_fault_slowdowns() {
+    // A mid-run thermal cap slows real service down — but the session
+    // re-prices the surface against the capped clocks and scales the
+    // service model by the same ratio, and the detector is debounced
+    // through the swap. Observed stays consistent with predicted, so the
+    // known hardware event must never read as cost-model drift.
+    let s = surface();
+    let cfg = serve_cfg(&s.rows[..2], TOTAL);
+    let oracle = hetero_oracle();
+    let plan = FaultPlan::from_json(
+        &json::parse(
+            r#"{"events": [{"at_s": 0.005, "kind": "thermal_cap", "device": "gpu", "max_mhz": 900}]}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let report = ServeSession::new(&cfg)
+        .oracle(&oracle)
+        .plan_points(&s.points)
+        .feedback(FeedbackConfig { max_researches: 0, ..Default::default() })
+        .faults(plan)
+        .run(|_, b| Ok(b.to_vec()))
+        .unwrap();
+
+    assert_all_served_in_order(&report, TOTAL);
+    assert_eq!(report.faults.len(), 1);
+    assert_eq!(report.degrades.len(), 1);
+    assert!(
+        matches!(report.degrades[0].cause, DegradeCause::ClockCap(DeviceId::GPU, _)),
+        "{:?}",
+        report.degrades[0].cause
+    );
+    assert_eq!(report.degrades[0].epoch, 1, "a clock cap bumps the epoch");
+    assert!(
+        report.drift_events.is_empty(),
+        "a fault-induced slowdown must not arm drift: {:?}",
+        report.drift_events
+    );
+    assert!(report.swaps.is_empty() && report.sheds.is_empty());
+}
+
+// -------------------------------------------------------------------------
+// 5. fault-free byte-identity
+// -------------------------------------------------------------------------
+
+#[test]
+fn an_eventless_fault_plan_is_byte_invisible() {
+    // The harness promise: attaching a fault plan that injects nothing
+    // changes nothing — same RNG streams, same records, same JSON bytes.
+    let s = surface();
+    let cfg = serve_cfg(&s.rows[..2], 48);
+    let run = |faults: Option<FaultPlan>| -> ServeReport {
+        let session =
+            ServeSession::new(&cfg).plan_points(&s.points).adaptive(AdaptiveConfig::default());
+        let session = match faults {
+            Some(f) => session.faults(f),
+            None => session,
+        };
+        session.run(|_, b| Ok(b.to_vec())).unwrap()
+    };
+    let base = run(None);
+    let with_plan = run(Some(FaultPlan::default()));
+    let render = |r: &ServeReport| r.to_json().to_string_compact();
+    assert_eq!(render(&base), render(&with_plan), "an eventless plan must be byte-invisible");
+    assert!(!render(&base).contains("\"faults\""), "fault-free reports carry no fault keys");
+
+    // A rate-0 transient window logs its activation but perturbs nothing:
+    // the per-request timeline is bit-identical (the fault RNG is only
+    // drawn at positive rates).
+    let zero = run(Some(
+        FaultPlan::from_json(
+            &json::parse(
+                r#"{"events": [{"at_s": 0.0, "kind": "transient_error", "rate": 0.0, "duration_s": 1e9}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap(),
+    ));
+    assert_eq!(zero.faults.len(), 1, "the window activation is logged");
+    assert!(zero.sheds.is_empty() && zero.degrades.is_empty());
+    let bits = |r: &ServeReport| {
+        r.records
+            .iter()
+            .map(|x| {
+                (x.arrival_s.to_bits(), x.start_s.to_bits(), x.done_s.to_bits(), x.plan, x.epoch)
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(bits(&base), bits(&zero), "a zero-rate window must not perturb the timeline");
+}
+
+// -------------------------------------------------------------------------
+// 6. builder guards
+// -------------------------------------------------------------------------
+
+#[test]
+fn device_loss_plans_demand_adopt_oracle_and_aligned_contingencies() {
+    let s = surface();
+    let cfg = serve_cfg(&s.rows[..2], 8);
+    let lost = FaultPlan {
+        events: vec![FaultEvent {
+            at_s: 0.0,
+            kind: FaultKind::DeviceLost { device: DeviceId::DLA },
+        }],
+        ..FaultPlan::default()
+    };
+
+    // run() cannot host a contingency swap: the executor may be handed
+    // plans it never compiled.
+    let err = ServeSession::new(&cfg)
+        .plan_points(&s.points)
+        .faults(lost.clone())
+        .run(|_, b| Ok(b.to_vec()))
+        .unwrap_err();
+    assert!(err.to_string().contains("run_with_adopt"), "{err}");
+
+    // Structural faults need an oracle to re-price the degraded surface.
+    let err = ServeSession::new(&cfg)
+        .plan_points(&s.points)
+        .faults(lost)
+        .run_with_adopt(|_, b| Ok(b.to_vec()), |_| Ok(()))
+        .unwrap_err();
+    assert!(err.to_string().contains("oracle"), "{err}");
+
+    // Contingency slots must align 1:1 with the surface's plan points.
+    let err = ServeSession::new(&cfg)
+        .plan_points(&s.points)
+        .contingencies(vec![None])
+        .run(|_, b| Ok(b.to_vec()))
+        .unwrap_err();
+    assert!(err.to_string().contains("contingency slots"), "{err}");
+
+    // And they need a plan-point surface at all.
+    let err = ServeSession::new(&cfg)
+        .contingencies(vec![None])
+        .run(|_, b| Ok(b.to_vec()))
+        .unwrap_err();
+    assert!(err.to_string().contains("plan-point surface"), "{err}");
+}
